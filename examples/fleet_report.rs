@@ -1,0 +1,42 @@
+//! Fleet characterization report: Fig 1 (demand growth) + Fig 4
+//! (operator time breakdown) + the §3.1 roofline-accuracy ledger, in
+//! one run — what the paper's telemetry agent dashboards show.
+//!
+//! ```bash
+//! cargo run --release --example fleet_report
+//! ```
+
+use dcinfer::fleet::{demand_series, simulate_fleet, FleetConfig};
+use dcinfer::models::representative_zoo;
+use dcinfer::perfmodel::DeviceSpec;
+use dcinfer::report;
+
+fn main() {
+    // Fig 1
+    println!("=== Fig 1: server demand for DL inference ===");
+    let services = dcinfer::fleet::demand::default_services();
+    let series = demand_series(&services, 9);
+    for p in &series {
+        let bar = "#".repeat((p.total / 4.0) as usize);
+        println!("Q{} {:>7.1} {}", p.quarter, p.total, bar);
+    }
+    println!("growth: {:.1}x over 8 quarters\n", series[8].total / series[0].total);
+
+    // Fig 4
+    println!("=== Fig 4: operator time breakdown (simulated fleet) ===");
+    let zoo = representative_zoo();
+    let dev = DeviceSpec::xeon_fp32();
+    let agent = simulate_fleet(&zoo, &dev, &FleetConfig { requests: 4000, ..Default::default() });
+    report::print_breakdown(&agent.breakdown());
+
+    // §3.1 roofline ledger
+    println!("\n=== §3.1: roofline accuracy ledger (measured/predicted) ===");
+    for (bucket, ineff) in agent.inefficiency_by_bucket() {
+        let flag = if ineff > 2.0 { "  <- optimization target" } else { "" };
+        println!("  {bucket:<12} {ineff:.2}x{flag}");
+    }
+    println!("\nestimated recoverable fleet time by bucket:");
+    for bucket in ["FC", "Embedding", "Conv", "TensorManip", "Elementwise"] {
+        println!("  {bucket:<12} {:.1}%", agent.optimization_benefit(bucket) * 100.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! §3.2.2 recipe walkthrough on real weights: load the recsys artifact
+//! weights, quantize the FC stack with each technique, and profile the
+//! per-layer error — showing how the recipe decides what to quantize
+//! (selective quantization) and at what granularity.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quant_recipe
+//! ```
+
+use anyhow::Result;
+use dcinfer::quant::qparams::{quantize_per_channel, quantize_per_tensor};
+use dcinfer::quant::{profile_error, Calibrator};
+use dcinfer::runtime::read_weights_file;
+use dcinfer::util::rng::Pcg32;
+
+fn main() -> Result<()> {
+    let weights = read_weights_file(std::path::Path::new("artifacts/recsys.weights.bin"))?;
+    let mut rng = Pcg32::seeded(11);
+
+    println!("{:<12} {:>8} {:>14} {:>14} {:>10}", "layer", "shape", "per-tensor dB", "per-channel dB", "decision");
+    for nt in weights.iter().filter(|t| t.name.contains("_w")) {
+        let w = nt.tensor.as_f32()?;
+        let (n, k) = (nt.tensor.shape[0], nt.tensor.shape[1]);
+
+        // random calibration activations
+        let m = 64usize;
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let ref_out = matmul(&x, &w, m, n, k);
+
+        // per-tensor (naive)
+        let (q_pt, s_pt) = quantize_per_tensor(&w, 8);
+        let w_pt: Vec<f32> = q_pt.iter().map(|&q| q as f32 * s_pt).collect();
+        let out_pt = matmul(&x, &w_pt, m, n, k);
+
+        // per-channel (technique 1)
+        let (q_pc, s_pc) = quantize_per_channel(&w, n, k, 8);
+        let mut w_pc = vec![0f32; n * k];
+        for j in 0..n {
+            for kk in 0..k {
+                w_pc[j * k + kk] = q_pc[j * k + kk] as f32 * s_pc[j];
+            }
+        }
+        let out_pc = matmul(&x, &w_pc, m, n, k);
+
+        let r_pt = profile_error(&nt.name, &ref_out, &out_pt, 30.0);
+        let r_pc = profile_error(&nt.name, &ref_out, &out_pc, 30.0);
+        println!(
+            "{:<12} {:>8} {:>14.1} {:>14.1} {:>10}",
+            nt.name,
+            format!("{n}x{k}"),
+            r_pt.sqnr_db,
+            r_pc.sqnr_db,
+            if r_pc.quantize { "int8" } else { "fp32 (skip)" }
+        );
+        assert!(r_pc.sqnr_db >= r_pt.sqnr_db - 0.5, "per-channel regressed");
+    }
+
+    // technique 4+5: activation calibration with net-aware narrowing
+    println!("\nactivation calibration (techniques 4+5):");
+    let mut cal = Calibrator::default();
+    let acts: Vec<f32> = (0..200_000).map(|_| rng.normal_f32(0.5, 1.0).max(0.0)).collect();
+    cal.observe(&acts);
+    cal.observe(&[37.0]); // a stray outlier
+    let naive = cal.minmax_qparams(8);
+    let l2 = cal.l2_optimal_qparams(8, 64);
+    let net = cal.net_aware("relu").l2_optimal_qparams(8, 64);
+    println!("  min/max scale:            {:.5}", naive.scale);
+    println!("  L2-optimal scale:         {:.5}", l2.scale);
+    println!("  net-aware(relu) L2 scale: {:.5}", net.scale);
+    assert!(l2.scale <= naive.scale);
+    println!("\nquant_recipe OK");
+    Ok(())
+}
+
+fn matmul(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0f32;
+            for kk in 0..k {
+                s += x[i * k + kk] * w[j * k + kk];
+            }
+            out[i * n + j] = s;
+        }
+    }
+    out
+}

@@ -1,0 +1,52 @@
+//! Quickstart: load one AOT artifact and run a single inference.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the Fig-2 recommendation model (batch 1), uploads its weights
+//! to the device once, builds one synthetic request (dense features +
+//! sparse embedding ids) and prints the predicted event probability.
+
+use anyhow::Result;
+use dcinfer::runtime::{Engine, HostTensor, Manifest};
+use dcinfer::util::rng::Pcg32;
+
+fn main() -> Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let manifest = Manifest::load(dir)?;
+    let engine = Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+
+    let model = engine.load(&manifest, "recsys_fp32_b1")?;
+    println!(
+        "loaded {} ({} weight tensors, compile+upload {:.0} ms)",
+        model.meta.name,
+        model.meta.weight_params.len(),
+        model.load_ms
+    );
+
+    // Build one request: dense features ~ N(0,1), zipf-skewed sparse ids.
+    let mut rng = Pcg32::seeded(42);
+    let dense_meta = &model.meta.inputs[0];
+    let idx_meta = &model.meta.inputs[1];
+    let mut dense = vec![0f32; dense_meta.elem_count()];
+    rng.fill_normal(&mut dense, 0.0, 1.0);
+    let rows = manifest.models.get("recsys").get("rows_per_table").as_usize().unwrap();
+    let idx: Vec<i32> =
+        (0..idx_meta.elem_count()).map(|_| rng.zipf(rows as u32, 1.05) as i32).collect();
+
+    let inputs = vec![
+        HostTensor::from_f32(&dense_meta.shape, &dense),
+        HostTensor::from_i32(&idx_meta.shape, &idx),
+    ];
+
+    let t0 = std::time::Instant::now();
+    let out = model.run(&engine, &inputs)?;
+    let dt = t0.elapsed();
+    let prob = out[0].as_f32()?;
+    println!("event probability: {:.4}  ({} us)", prob[0], dt.as_micros());
+    assert!(prob[0] > 0.0 && prob[0] < 1.0, "sigmoid output out of range");
+    println!("quickstart OK");
+    Ok(())
+}

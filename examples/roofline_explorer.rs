@@ -1,0 +1,81 @@
+//! Fig-3 explorer: sweep on-chip memory capacity and bandwidth for any
+//! zoo model on the hypothetical 100 TOP/s accelerator, and show where
+//! each layer's operands were placed by the greedy allocator.
+//!
+//! ```bash
+//! cargo run --release --example roofline_explorer [model-substring]
+//! ```
+
+use dcinfer::models::representative_zoo;
+use dcinfer::perfmodel::roofline::fig3_capacities;
+use dcinfer::perfmodel::{roofline_curve, roofline_model, DeviceSpec};
+
+fn main() {
+    let filter = std::env::args().nth(1).unwrap_or_else(|| "resnext101_32x4d".to_string());
+    let zoo = representative_zoo();
+    let model = zoo
+        .iter()
+        .map(|e| &e.desc)
+        .find(|m| m.name.contains(&filter))
+        .unwrap_or_else(|| panic!("no zoo model matches '{filter}'"));
+
+    println!("model: {} ({} layers, {:.1}M params, {:.1} GFLOPs)", model.name,
+        model.layers.len(), model.unique_params() as f64 / 1e6, model.flops() as f64 / 1e9);
+
+    println!("\nFig-3 sweep (achieved TOP/s):");
+    println!("{:<10} {:>12} {:>12}", "cap MB", "1 TB/s", "10 TB/s");
+    let caps = fig3_capacities();
+    let c1 = roofline_curve(model, &caps, 1.0);
+    let c10 = roofline_curve(model, &caps, 10.0);
+    for ((mb, a), (_, b)) in c1.iter().zip(&c10) {
+        println!("{:<10} {:>12.2} {:>12.2}", mb, a, b);
+    }
+
+    // placement detail at one interesting configuration
+    let dev = DeviceSpec::fig3(8.0, 1.0);
+    let r = roofline_model(model, &dev);
+    println!(
+        "\nplacements at 8 MB / 1 TB/s: {:.1}% of time DRAM-bound",
+        r.dram_bound_frac * 100.0
+    );
+    let onchip_w = r.placements.iter().filter(|p| p.weights_onchip).count();
+    let onchip_a = r.placements.iter().filter(|p| p.acts_onchip).count();
+    println!(
+        "{} / {} layers keep weights on-chip, {} keep activations on-chip",
+        onchip_w,
+        model.layers.len(),
+        onchip_a
+    );
+    let slowest = model
+        .layers
+        .iter()
+        .zip(&r.placements)
+        .max_by(|(a, pa), (b, pb)| {
+            let ta = layer_time(a, pa, &dev);
+            let tb = layer_time(b, pb, &dev);
+            ta.partial_cmp(&tb).unwrap()
+        })
+        .unwrap();
+    println!("slowest layer: {} ({:?})", slowest.0.name, slowest.1);
+}
+
+fn layer_time(
+    l: &dcinfer::models::Layer,
+    p: &dcinfer::perfmodel::LayerPlacement,
+    dev: &DeviceSpec,
+) -> f64 {
+    let w = l.weight_traffic_elems as f64 * dev.weight_bytes_per_elem;
+    let a = (l.act_in_elems + l.act_out_elems) as f64 * dev.act_bytes_per_elem;
+    let (mut off, mut on) = (0.0, 0.0);
+    if p.weights_onchip {
+        on += w
+    } else {
+        off += w
+    }
+    if p.acts_onchip {
+        on += a
+    } else {
+        off += a
+    }
+    (l.flops as f64 / dev.peak_ops).max(off / dev.dram_bw).max(on / dev.onchip_bw)
+}

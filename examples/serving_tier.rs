@@ -1,0 +1,71 @@
+//! E2E driver: the dis-aggregated inference tier serving the Fig-2
+//! recommendation model (a real ~2.9M-parameter model compiled from JAX
+//! through PJRT) under a synthetic production-like load, reporting
+//! latency and throughput. This is the experiment recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serving_tier
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+use dcinfer::coordinator::{InferRequest, InferenceTier, TierConfig};
+use dcinfer::util::rng::Pcg32;
+
+fn main() -> Result<()> {
+    let requests: u64 = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let offered_qps: f64 = std::env::args().nth(2).and_then(|v| v.parse().ok()).unwrap_or(4000.0);
+
+    println!("starting inference tier (2 executors, recsys_fp32 b1/b4/b16/b64)...");
+    let tier = InferenceTier::start(TierConfig { executors: 2, ..Default::default() })?;
+    println!(
+        "model: dense_dim={} n_tables={} pool={} rows/table={}",
+        tier.dense_dim, tier.n_tables, tier.pool_size, tier.rows_per_table
+    );
+
+    // Load phases: a steady phase and a 4x burst phase, like a traffic
+    // spike — the dynamic batcher should absorb the burst by forming
+    // larger batches rather than blowing the deadline.
+    let mut rng = Pcg32::seeded(7);
+    let mut receivers = Vec::with_capacity(requests as usize);
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let burst = (i / (requests / 4).max(1)) % 2 == 1;
+        let qps = if burst { offered_qps * 4.0 } else { offered_qps };
+        let mut dense = vec![0f32; tier.dense_dim];
+        rng.fill_normal(&mut dense, 0.0, 1.0);
+        let indices: Vec<i32> = (0..tier.n_tables * tier.pool_size)
+            .map(|_| rng.zipf(tier.rows_per_table as u32, 1.05) as i32)
+            .collect();
+        receivers.push(tier.submit(InferRequest {
+            id: i,
+            dense,
+            indices,
+            arrival: Instant::now(),
+            deadline_ms: 100.0,
+        })?);
+        std::thread::sleep(std::time::Duration::from_secs_f64(1.0 / qps));
+    }
+
+    let mut probs_ok = 0u64;
+    for rx in receivers {
+        let resp = rx.recv()?;
+        if resp.prob > 0.0 && resp.prob < 1.0 {
+            probs_ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n=== E2E serving results ===");
+    let snap = tier.metrics.snapshot();
+    snap.print();
+    println!("end-to-end: {requests} requests in {wall:.2}s ({:.0} req/s)", requests as f64 / wall);
+    println!("sane predictions: {probs_ok}/{requests}");
+    assert_eq!(probs_ok, requests, "some predictions out of (0,1)");
+    assert!(snap.mean_batch > 1.5, "batching never engaged");
+    tier.shutdown();
+    println!("serving_tier OK");
+    Ok(())
+}

@@ -1,0 +1,322 @@
+"""AOT driver: lower the L2 graphs (with their L1 Pallas kernels) to HLO
+*text* artifacts plus a weights binary and a JSON manifest for the Rust
+runtime.
+
+HLO text — NOT ``lowered.compile().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the published `xla` crate)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Artifacts (see DESIGN.md per-experiment index):
+  recsys_fp32_b{1,4,16,64}   Fig-2 model, fp32 FC path, batch variants
+  recsys_int8_b16            Fig-2 model, int8 Pallas FC path (§3.2)
+  gru_step_b{1,8}            seq2seq decode step (§2.1.3)
+  kernel_qgemm               bare i8-acc32 GEMM (runtime microbench)
+  kernel_sls                 bare SparseLengthsSum (embedding bench)
+
+Weights binary format (little-endian):
+  magic "DCIW" | u32 version | u32 n_tensors
+  per tensor: u32 name_len | name | u8 dtype(0=f32,1=i8,2=i32) |
+              u32 ndim | u64 dims... | raw data
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import qgemm_i8acc32, sparse_lengths_sum
+
+DTYPE_CODE = {"float32": 0, "int8": 1, "int32": 2}
+DTYPE_NAME = {"float32": "f32", "int8": "i8", "int32": "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants is load-bearing: the default elides big
+    # constants as `constant({...})`, which the XLA 0.5.1 text parser
+    # silently reads back as zeros — int8 weight tables baked into the
+    # quantized artifacts would vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def write_weights(path: str, tensors):
+    with open(path, "wb") as f:
+        f.write(b"DCIW")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", DTYPE_CODE[str(arr.dtype)]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def spec(arr_or_shape, dtype=None):
+    if isinstance(arr_or_shape, np.ndarray):
+        return jax.ShapeDtypeStruct(arr_or_shape.shape, arr_or_shape.dtype)
+    return jax.ShapeDtypeStruct(tuple(arr_or_shape), dtype)
+
+
+def tensor_meta(name, shape, dtype):
+    return {"name": name, "dtype": DTYPE_NAME[str(np.dtype(dtype))],
+            "shape": list(shape)}
+
+
+def lower_artifact(out_dir, name, fn, arg_specs):
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name}: {len(text) / 1e6:.2f} MB HLO text")
+    return f"{name}.hlo.txt"
+
+
+def build_recsys(out_dir, manifest, batches=(1, 4, 16, 64)):
+    cfg = M.RecsysConfig()
+    weights = M.init_recsys_weights(cfg)
+    wpath = os.path.join(out_dir, "recsys.weights.bin")
+    write_weights(wpath, weights)
+    manifest["models"]["recsys"] = {
+        "dense_dim": cfg.dense_dim, "emb_dim": cfg.emb_dim,
+        "n_tables": cfg.n_tables, "rows_per_table": cfg.rows_per_table,
+        "pool": cfg.pool, "bottom_mlp": list(cfg.bottom_mlp),
+        "top_mlp": list(cfg.top_mlp), "param_count": cfg.param_count(),
+        "weights": "recsys.weights.bin",
+    }
+    n_w = len(weights)
+
+    def fwd(*args):
+        ws, dense, idx = list(args[:n_w]), args[n_w], args[n_w + 1]
+        return (M.recsys_forward(cfg, ws, dense, idx),)
+
+    w_specs = [spec(a) for _, a in weights]
+    for b in batches:
+        dense_s = spec((b, cfg.dense_dim), np.float32)
+        idx_s = spec((b, cfg.n_tables, cfg.pool), np.int32)
+        hlo = lower_artifact(out_dir, f"recsys_fp32_b{b}", fwd,
+                             w_specs + [dense_s, idx_s])
+        manifest["artifacts"][f"recsys_fp32_b{b}"] = {
+            "hlo": hlo, "model": "recsys", "weights": "recsys.weights.bin",
+            "weight_params": [tensor_meta(n, a.shape, a.dtype) for n, a in weights],
+            "inputs": [
+                tensor_meta("dense", (b, cfg.dense_dim), np.float32),
+                tensor_meta("indices", (b, cfg.n_tables, cfg.pool), np.int32),
+            ],
+            "outputs": [tensor_meta("prob", (b, 1), np.float32)],
+            "batch": b,
+        }
+        ws_jnp = [jnp.asarray(a) for _, a in weights]
+        manifest["artifacts"][f"recsys_fp32_b{b}"]["_fn"] = (
+            lambda dense, idx, ws=ws_jnp: fwd(*ws, dense, idx))
+        manifest["artifacts"][f"recsys_fp32_b{b}"]["_index_hi"] = cfg.rows_per_table
+
+    # -- int8 FC-path variant (weights baked as HLO constants) --------------
+    b = 16
+    rng = np.random.default_rng(7)
+    it = iter(weights)
+    tables_np = [next(it)[1] for _ in range(cfg.n_tables)]
+    bot, top = [], []
+    d = cfg.dense_dim
+    # calibration: run fp32 bottom/top MLPs on synthetic calib data to get
+    # activation ranges (paper: "calibration inputs from the training data")
+    calib_dense = rng.standard_normal((256, cfg.dense_dim)).astype(np.float32)
+    x = calib_dense
+    for i, h in enumerate(cfg.bottom_mlp):
+        w = dict(weights)[f"bot_w{i}"]; bb = dict(weights)[f"bot_b{i}"]
+        p = M.quantize_fc_weights(w, bb, float(x.min()), float(x.max()), relu=True)
+        bot.append(p)
+        x = np.maximum(x @ w.T + bb, 0.0)
+    pooled_dim = cfg.n_tables * cfg.emb_dim
+    zmin, zmax = -3.0, 3.0  # pooled embeddings ~ N(0,1) after pool scaling
+    z_lo = min(zmin, float(x.min())); z_hi = max(zmax, float(x.max()))
+    z = np.concatenate([rng.standard_normal((256, pooled_dim)).astype(np.float32), x], axis=1)
+    d = cfg.interaction_dim
+    for i, h in enumerate(cfg.top_mlp):
+        w = dict(weights)[f"top_w{i}"]; bb = dict(weights)[f"top_b{i}"]
+        relu = i < len(cfg.top_mlp) - 1
+        p = M.quantize_fc_weights(w, bb, float(z.min()), float(z.max()), relu=relu)
+        top.append(p)
+        z = np.maximum(z @ w.T + bb, 0.0) if relu else z @ w.T + bb
+
+    def fwd_int8(*args):
+        ws, dense, idx = list(args[:cfg.n_tables]), args[cfg.n_tables], args[cfg.n_tables + 1]
+        return (M.recsys_forward_int8(cfg, ws, bot, top, dense, idx),)
+
+    t_specs = [spec(t) for t in tables_np]
+    hlo = lower_artifact(out_dir, f"recsys_int8_b{b}", fwd_int8,
+                         t_specs + [spec((b, cfg.dense_dim), np.float32),
+                                    spec((b, cfg.n_tables, cfg.pool), np.int32)])
+    manifest["artifacts"][f"recsys_int8_b{b}"] = {
+        "hlo": hlo, "model": "recsys", "weights": "recsys.weights.bin",
+        "weight_params": [tensor_meta(f"emb_{t}", tables_np[t].shape, np.float32)
+                          for t in range(cfg.n_tables)],
+        "inputs": [
+            tensor_meta("dense", (b, cfg.dense_dim), np.float32),
+            tensor_meta("indices", (b, cfg.n_tables, cfg.pool), np.int32),
+        ],
+        "outputs": [tensor_meta("prob", (b, 1), np.float32)],
+        "batch": b,
+    }
+    t_jnp = [jnp.asarray(t) for t in tables_np]
+    manifest["artifacts"][f"recsys_int8_b{b}"]["_fn"] = (
+        lambda dense, idx: fwd_int8(*t_jnp, dense, idx))
+    manifest["artifacts"][f"recsys_int8_b{b}"]["_index_hi"] = cfg.rows_per_table
+
+
+def build_gru(out_dir, manifest, batches=(1, 8)):
+    cfg = M.GruConfig()
+    weights = M.init_gru_weights(cfg)
+    wpath = os.path.join(out_dir, "gru.weights.bin")
+    write_weights(wpath, weights)
+    manifest["models"]["gru"] = {
+        "hidden": cfg.hidden, "vocab": cfg.vocab, "weights": "gru.weights.bin",
+        "param_count": int(sum(a.size for _, a in weights)),
+    }
+    n_w = len(weights)
+
+    def step(*args):
+        ws, x, h = list(args[:n_w]), args[n_w], args[n_w + 1]
+        return M.gru_step(cfg, ws, x, h)
+
+    w_specs = [spec(a) for _, a in weights]
+    for b in batches:
+        x_s = spec((b, cfg.hidden), np.float32)
+        h_s = spec((b, cfg.hidden), np.float32)
+        hlo = lower_artifact(out_dir, f"gru_step_b{b}", step, w_specs + [x_s, h_s])
+        manifest["artifacts"][f"gru_step_b{b}"] = {
+            "hlo": hlo, "model": "gru", "weights": "gru.weights.bin",
+            "weight_params": [tensor_meta(n, a.shape, a.dtype) for n, a in weights],
+            "inputs": [tensor_meta("x", (b, cfg.hidden), np.float32),
+                       tensor_meta("h", (b, cfg.hidden), np.float32)],
+            "outputs": [tensor_meta("logits", (b, cfg.vocab), np.float32),
+                        tensor_meta("h_new", (b, cfg.hidden), np.float32)],
+            "batch": b,
+        }
+        ws_jnp = [jnp.asarray(a) for _, a in weights]
+        manifest["artifacts"][f"gru_step_b{b}"]["_fn"] = (
+            lambda x, h, ws=ws_jnp: step(*ws, x, h))
+
+
+def build_kernel_artifacts(out_dir, manifest):
+    # bare i8-acc32 GEMM: M=64, K=512, N=256 (a Fig-5 "tall-skinny" shape)
+    Mm, K, N = 64, 512, 256
+    rng = np.random.default_rng(3)
+    w_q = rng.integers(-127, 128, (N, K)).astype(np.int8)
+    w_scale = np.full((N,), 0.01, np.float32)
+
+    def qg(xq):
+        return (qgemm_i8acc32(xq, jnp.asarray(w_q), 0.05, 3,
+                              jnp.asarray(w_scale), relu=True,
+                              block_m=64, block_n=128, block_k=128),)
+
+    hlo = lower_artifact(out_dir, "kernel_qgemm", qg,
+                         [spec((Mm, K), np.int8)])
+    manifest["artifacts"]["kernel_qgemm"] = {
+        "hlo": hlo, "model": None, "weights": None, "weight_params": [],
+        "inputs": [tensor_meta("x_q", (Mm, K), np.int8)],
+        "outputs": [tensor_meta("out", (Mm, N), np.float32)],
+        "batch": Mm,
+    }
+    manifest["artifacts"]["kernel_qgemm"]["_fn"] = qg
+
+    # bare SLS: rows=100k, dim=64, batch=16, pool=32
+    rows, dim, b, pool = 100_000, 64, 16, 32
+    table = (rng.standard_normal((rows, dim)) / np.sqrt(pool)).astype(np.float32)
+    write_weights(os.path.join(out_dir, "sls.weights.bin"), [("table", table)])
+
+    def sls(tbl, idx):
+        return (sparse_lengths_sum(tbl, idx),)
+
+    hlo = lower_artifact(out_dir, "kernel_sls", sls,
+                         [spec(table), spec((b, pool), np.int32)])
+    manifest["artifacts"]["kernel_sls"] = {
+        "hlo": hlo, "model": None, "weights": "sls.weights.bin",
+        "weight_params": [tensor_meta("table", table.shape, np.float32)],
+        "inputs": [tensor_meta("indices", (b, pool), np.int32)],
+        "outputs": [tensor_meta("pooled", (b, dim), np.float32)],
+        "batch": b,
+    }
+    tbl = jnp.asarray(table)
+    manifest["artifacts"]["kernel_sls"]["_fn"] = lambda idx: sls(tbl, idx)
+    manifest["artifacts"]["kernel_sls"]["_index_hi"] = rows
+
+
+def build_goldens(out_dir, manifest):
+    """For every artifact, evaluate the jitted function in JAX on
+    deterministic inputs and store (inputs, outputs) in a DCIW file.
+    The Rust integration tests replay the inputs through the PJRT
+    runtime and assert allclose — the cross-language correctness seal."""
+    import jax.random  # noqa: F401  (deterministic path only uses numpy)
+
+    goldens = []
+    rng = np.random.default_rng(2024)
+    for name, art in manifest["artifacts"].items():
+        fn = art.pop("_fn", None)
+        if fn is None:
+            continue
+        inputs = []
+        for im in art["inputs"]:
+            shape = tuple(im["shape"])
+            if im["dtype"] == "f32":
+                inputs.append(rng.standard_normal(shape).astype(np.float32))
+            elif im["dtype"] == "i32":
+                hi = art.get("_index_hi", 100)
+                inputs.append(rng.integers(0, hi, shape).astype(np.int32))
+            else:
+                inputs.append(rng.integers(-127, 128, shape).astype(np.int8))
+        outs = fn(*inputs)
+        for i, x in enumerate(inputs):
+            goldens.append((f"{name}/in{i}", x))
+        for i, y in enumerate(outs):
+            goldens.append((f"{name}/out{i}", np.asarray(y)))
+    for art in manifest["artifacts"].values():
+        art.pop("_fn", None)
+        art.pop("_index_hi", None)
+    write_weights(os.path.join(out_dir, "goldens.bin"), goldens)
+    print(f"wrote {len(goldens)} golden tensors")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path inside the artifacts dir (Makefile stamp)")
+    ap.add_argument("--fast", action="store_true",
+                    help="only build the smallest artifacts (CI smoke)")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "models": {}, "artifacts": {}}
+    print("building artifacts ->", out_dir)
+    if args.fast:
+        build_recsys(out_dir, manifest, batches=(1, 16))
+    else:
+        build_recsys(out_dir, manifest)
+        build_gru(out_dir, manifest)
+        build_kernel_artifacts(out_dir, manifest)
+    build_goldens(out_dir, manifest)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Makefile stamp file
+    with open(args.out, "w") as f:
+        f.write("; see manifest.json — all artifacts in this directory\n")
+    print("wrote manifest with", len(manifest["artifacts"]), "artifacts")
+
+
+if __name__ == "__main__":
+    main()

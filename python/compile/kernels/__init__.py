@@ -1,0 +1,20 @@
+"""L1 Pallas kernels for dcinfer (build-time only; lowered into model HLO).
+
+Kernels (each with a pure-jnp oracle in :mod:`ref`):
+
+- :func:`quant_gemm.qgemm_i8acc32` — int8 GEMM, int32 accumulate, fused
+  requantization output pipeline (FBGEMM i8-acc32, Fig 6a).
+- :func:`outlier_gemm.qgemm_i8acc16` — outlier-aware int8 GEMM with
+  16-bit accumulation + periodic 32-bit spills (FBGEMM i8-acc16, Fig 6b).
+- :func:`fp16_gemm.fp16_gemm` — fp16-storage GEMM (Fig 6a).
+- :func:`embedding_sls.sparse_lengths_sum` — pooled embedding lookup
+  (SparseLengthsSum, §2.1.1).
+- :func:`depthwise.depthwise_conv3x3` — depth-wise convolution (§2.1.2).
+"""
+
+from . import ref  # noqa: F401
+from .depthwise import depthwise_conv3x3  # noqa: F401
+from .embedding_sls import sparse_lengths_sum  # noqa: F401
+from .fp16_gemm import fp16_gemm  # noqa: F401
+from .outlier_gemm import qgemm_i8acc16  # noqa: F401
+from .quant_gemm import qgemm_i8acc32  # noqa: F401

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: 3x3 depth-wise convolution (paper §2.1.2).
+
+ShuffleNet/ResNeXt-3D style depth-wise convolution: one filter per
+channel, ~2% of model FLOPs but bandwidth-bound (ops/activation as low
+as 4-6, Table 1) — the paper's canonical example of an op that a
+matrix-engine-only accelerator handles badly and a vector engine must
+own.
+
+TPU adaptation: grid over (batch, channel); each step holds one padded
+[Hp, Wp] input plane and the [3, 3] filter in VMEM and computes the
+whole output plane with 9 shifted multiply-adds on the VPU — no im2col,
+no MXU. The wrapper pre-pads in HBM so the kernel body is pure
+vector work.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dw_kernel(x_ref, w_ref, out_ref, *, stride: int):
+    ho, wo = out_ref.shape[2], out_ref.shape[3]
+    acc = jnp.zeros((ho, wo), jnp.float32)
+    for kh in range(3):
+        for kw in range(3):
+            patch = x_ref[0, 0, kh:kh + ho * stride:stride, kw:kw + wo * stride:stride]
+            acc = acc + patch * w_ref[0, kh, kw]
+    out_ref[0, 0, :, :] = acc
+
+
+def depthwise_conv3x3(x, w, stride: int = 1):
+    """x: [B, C, H, W] fp32; w: [C, 3, 3]; SAME padding; returns [B, C, Ho, Wo]."""
+    B, C, H, W = x.shape
+    pad = 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    Hp, Wp = H + 2 * pad, W + 2 * pad
+    Ho = (H + 2 * pad - 3) // stride + 1
+    Wo = (W + 2 * pad - 3) // stride + 1
+
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, stride=stride),
+        grid=(B, C),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hp, Wp), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 3, 3), lambda b, c: (c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Ho, Wo), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C, Ho, Wo), jnp.float32),
+        interpret=True,
+    )(xp, w)

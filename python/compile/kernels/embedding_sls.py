@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: SparseLengthsSum embedding pooling (paper §2.1.1).
+
+The dominant recommendation-model operator: a large number of mostly
+random row gathers from a huge table, each reading an entire embedding
+row, summed per bag. Arithmetic intensity ~1-2 (Table 1) — purely
+bandwidth bound.
+
+TPU adaptation: the table stays in HBM (memory_space=ANY); each grid
+step owns one bag, keeps a [1, dim] fp32 accumulator in VMEM, and
+streams `pool` rows HBM->VMEM with dynamic-slice loads. This is the
+BlockSpec expression of the paper's access pattern: random row granules
+of tens-to-hundreds of bytes, no temporal locality, perfect spatial
+locality within a row.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sls_kernel(idx_ref, table_ref, out_ref, *, pool: int, weighted: bool,
+                wgt_ref=None):
+    dim = out_ref.shape[1]
+
+    def body(p, acc):
+        row_id = idx_ref[0, p]
+        row = table_ref[pl.dslice(row_id, 1), pl.dslice(0, dim)]
+        row = row.astype(jnp.float32)
+        return acc + row[0]
+
+    acc = jax.lax.fori_loop(0, pool, body, jnp.zeros((dim,), jnp.float32))
+    out_ref[0, :] = acc
+
+
+def _sls_weighted_kernel(idx_ref, wgt_ref, table_ref, out_ref, *, pool: int):
+    dim = out_ref.shape[1]
+
+    def body(p, acc):
+        row_id = idx_ref[0, p]
+        w = wgt_ref[0, p]
+        row = table_ref[pl.dslice(row_id, 1), pl.dslice(0, dim)]
+        return acc + w * row[0].astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, pool, body, jnp.zeros((dim,), jnp.float32))
+    out_ref[0, :] = acc
+
+
+def sparse_lengths_sum(table, indices, weights=None):
+    """Pooled embedding lookup.
+
+    table:   [rows, dim] fp32
+    indices: [batch, pool] int32
+    weights: optional [batch, pool] fp32 (SparseLengthsWeightedSum)
+    returns  [batch, dim] fp32
+    """
+    batch, pool = indices.shape
+    rows, dim = table.shape
+    if weights is None:
+        kern = functools.partial(_sls_kernel, pool=pool, weighted=False)
+        in_specs = [
+            pl.BlockSpec((1, pool), lambda b: (b, 0)),
+            pl.BlockSpec(block_shape=None),  # whole table, stays in HBM
+        ]
+        args = (indices.astype(jnp.int32), table)
+    else:
+        kern = functools.partial(_sls_weighted_kernel, pool=pool)
+        in_specs = [
+            pl.BlockSpec((1, pool), lambda b: (b, 0)),
+            pl.BlockSpec((1, pool), lambda b: (b, 0)),
+            pl.BlockSpec(block_shape=None),
+        ]
+        args = (indices.astype(jnp.int32), weights.astype(jnp.float32), table)
+
+    return pl.pallas_call(
+        kern,
+        grid=(batch,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, dim), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, dim), jnp.float32),
+        interpret=True,
+    )(*args)

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fp16-storage GEMM (paper §3.2.1 fp16 path).
+
+Weights live in HBM as fp16 — halving weight traffic, which is the whole
+win for bandwidth-bound FCs with small batch (Fig 6a) — and are widened
+to fp32 inside the VMEM tile before hitting the MXU. Accumulation stays
+fp32. Bias add and ReLU are fused in the output pipeline.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fp16_kernel(x_ref, w_ref, bias_ref, out_ref, acc_ref, *, relu: bool, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xb = x_ref[...]
+    wb = w_ref[...].astype(jnp.float32)  # widen fp16 -> fp32 in VMEM
+    acc_ref[...] += jax.lax.dot_general(
+        xb, wb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _output_pipeline():
+        out = acc_ref[...] + bias_ref[...][None, :]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        out_ref[...] = out
+
+
+def fp16_gemm(x, w_fp16, bias=None, relu=False,
+              block_m: int = 128, block_n: int = 128, block_k: int = 128):
+    """out = X @ W^T (+bias, ReLU) with X:[M,K] f32 and W:[N,K] f16 storage."""
+    M, K = x.shape
+    N, K2 = w_fp16.shape
+    assert K == K2
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+
+    grid = (M // bm, N // bn, n_k)
+    out, _ = pl.pallas_call(
+        functools.partial(_fp16_kernel, relu=relu, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.float32),
+            jax.ShapeDtypeStruct((M, N), jnp.float32),
+        ],
+        interpret=True,
+    )(x.astype(jnp.float32), w_fp16.astype(jnp.float16), bias)
+    return out

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: outlier-aware i8-acc16 GEMM (paper §3.2.1).
+
+The paper's trick: 8-bit multiplies with 16-bit accumulation double the
+multiply throughput on AVX2, but a 16-bit accumulator saturates. So the
+weight matrix is split W = W_main + W_outlier with W_main representable
+in 7 bits (|w| <= 63) and W_outlier a very sparse residual; X @ W_main^T
+runs on the fast 16-bit pipeline with periodic spills to 32-bit, while
+X @ W_outlier^T runs on the exact 32-bit path.
+
+TPU adaptation: the K-grid tile *is* the spill block — each K-step's
+partial product is saturated to the int16 range before being added into
+the VMEM-resident int32 accumulator, faithfully modelling the
+vpmaddsw/vpaddsw pipeline. The outlier matmul shares the same tile so
+both paths stream the activation block from VMEM exactly once.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import split_outliers
+
+
+def _outlier_kernel(x_ref, wm_ref, wo_ref, rowsum_ref, scale_ref, bias_ref,
+                    out_ref, acc_ref, *, x_zp: int, relu: bool, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xb = x_ref[...].astype(jnp.int32)
+    # main path: int16 accumulation within the spill block, saturate, spill
+    part16 = jax.lax.dot_general(
+        xb, wm_ref[...].astype(jnp.int32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+    part16 = jnp.clip(part16, -32768, 32767)
+    # outlier path: exact 32-bit accumulation of the sparse residual
+    part32 = jax.lax.dot_general(
+        xb, wo_ref[...].astype(jnp.int32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+    acc_ref[...] += part16 + part32
+
+    @pl.when(k == n_k - 1)
+    def _output_pipeline():
+        acc = acc_ref[...] - x_zp * rowsum_ref[...][None, :]
+        out = acc.astype(jnp.float32) * scale_ref[...][None, :]
+        out = out + bias_ref[...][None, :]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        out_ref[...] = out
+
+
+def qgemm_i8acc16(x_q, w_q, x_scale, x_zp, w_scale, bias=None, relu=False,
+                  spill_block: int = 64, block_m: int = 128, block_n: int = 128,
+                  main_bits: int = 7):
+    """Outlier-aware quantized GEMM; spill_block is the K tile (§3.2.1)."""
+    M, K = x_q.shape
+    N, K2 = w_q.shape
+    assert K == K2
+    bm, bn = min(block_m, M), min(block_n, N)
+    bk = min(spill_block, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+
+    w_main, w_out = split_outliers(w_q, main_bits)
+    w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (N,))
+    scale = jnp.asarray(x_scale, jnp.float32) * w_scale
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    w_rowsum = jnp.sum(w_q.astype(jnp.int32), axis=1)
+
+    grid = (M // bm, N // bn, n_k)
+    out, _ = pl.pallas_call(
+        functools.partial(_outlier_kernel, x_zp=int(x_zp), relu=relu, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.float32),
+            jax.ShapeDtypeStruct((M, N), jnp.int32),
+        ],
+        interpret=True,
+    )(x_q, w_main, w_out, w_rowsum, scale, bias)
+    return out

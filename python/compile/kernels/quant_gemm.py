@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: int8 GEMM with int32 accumulation (i8-acc32, §3.2.1).
+
+TPU adaptation of FBGEMM's i8-acc32 path (see DESIGN.md
+§Hardware-Adaptation): the (M, N, K) iteration space is tiled into
+VMEM-resident blocks via BlockSpec; the MXU-native int32 accumulator
+lives in a scratch-like second output; the requantization "output
+pipeline" (zero-point correction via pre-packed row offsets, per-channel
+rescale, bias add, fused ReLU) runs in the same kernel at the last
+K-step — the Pallas analog of FBGEMM's fused `outProcess`.
+
+The weight-side row offsets (`w_rowsum`) are computed at pack time by
+the caller, exactly as FBGEMM folds them into `PackBMatrix`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qgemm_kernel(x_ref, w_ref, rowsum_ref, scale_ref, bias_ref,
+                  out_ref, acc_ref, *, x_zp: int, relu: bool, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xb = x_ref[...].astype(jnp.int32)          # [bm, bk]
+    wb = w_ref[...].astype(jnp.int32)          # [bn, bk]
+    acc_ref[...] += jax.lax.dot_general(
+        xb, wb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _output_pipeline():
+        acc = acc_ref[...] - x_zp * rowsum_ref[...][None, :]
+        out = acc.astype(jnp.float32) * scale_ref[...][None, :]
+        out = out + bias_ref[...][None, :]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        out_ref[...] = out
+
+
+def qgemm_i8acc32(x_q, w_q, x_scale, x_zp, w_scale, bias=None, relu=False,
+                  block_m: int = 128, block_n: int = 128, block_k: int = 128):
+    """out = requant((X_q - x_zp) @ W_q^T) with X_q:[M,K] i8, W_q:[N,K] i8.
+
+    ``w_scale`` may be a scalar (per-tensor) or a [N] vector
+    (per-output-feature, paper §3.2.2 technique 1). Shapes must tile
+    evenly into the block sizes (the AOT wrapper pads).
+    """
+    M, K = x_q.shape
+    N, K2 = w_q.shape
+    assert K == K2, (K, K2)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+
+    w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (N,))
+    scale = jnp.asarray(x_scale, jnp.float32) * w_scale
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    w_rowsum = jnp.sum(w_q.astype(jnp.int32), axis=1)  # pack-time row offsets
+
+    grid = (M // bm, N // bn, n_k)
+    out, _ = pl.pallas_call(
+        functools.partial(_qgemm_kernel, x_zp=int(x_zp), relu=relu, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.float32),
+            jax.ShapeDtypeStruct((M, N), jnp.int32),  # int32 accumulator
+        ],
+        interpret=True,
+    )(x_q, w_q, w_rowsum, scale, bias)
+    return out

@@ -1,0 +1,183 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has an exact (or tolerance-bounded)
+reference here. pytest + hypothesis sweep shapes/dtypes and assert
+allclose between the kernel (interpret=True) and these functions.
+
+The numerics follow the paper (§3.2): int8 affine quantization with
+float32 requantization, 16-bit accumulation with periodic 32-bit spills
+for the outlier-aware path, and fp16-storage GEMM where only the weight
+traffic is halved (compute stays fp32).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers (shared by kernels, model and tests)
+# ---------------------------------------------------------------------------
+
+def choose_qparams(x_min: float, x_max: float, bits: int = 8, symmetric: bool = False):
+    """Affine quantization parameters for the range [x_min, x_max].
+
+    Returns (scale, zero_point). Symmetric quantization forces
+    zero_point = 0 and a range symmetric around zero (paper §3.2.1 notes
+    symmetric quantization increases outlier sparsity).
+    """
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    x_min, x_max = float(min(x_min, 0.0)), float(max(x_max, 0.0))
+    if symmetric:
+        amax = max(abs(x_min), abs(x_max))
+        scale = amax / qmax if amax > 0 else 1.0
+        return scale, 0
+    scale = (x_max - x_min) / (qmax - qmin)
+    if scale == 0.0:
+        scale = 1.0
+    zero_point = int(round(qmin - x_min / scale))
+    zero_point = max(qmin, min(qmax, zero_point))
+    return scale, zero_point
+
+
+def quantize(x, scale, zero_point, bits: int = 8):
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = jnp.round(x / scale) + zero_point
+    return jnp.clip(q, qmin, qmax).astype(jnp.int8 if bits <= 8 else jnp.int32)
+
+
+def dequantize(q, scale, zero_point):
+    return (q.astype(jnp.float32) - zero_point) * scale
+
+
+# ---------------------------------------------------------------------------
+# Reference GEMMs
+# ---------------------------------------------------------------------------
+
+def ref_qgemm_i8acc32(x_q, w_q, x_scale, x_zp, w_scale, bias=None, relu=False):
+    """int8 x int8 -> int32 accumulate -> float32 requantized output.
+
+    Follows the Caffe2 FC convention from the paper: out = X @ W^T with
+    X: [M, K] int8 (asymmetric, zero point x_zp) and W: [N, K] int8
+    (symmetric per-tensor or per-channel: w_scale scalar or [N]).
+    The activation-side zero point is folded via
+    (X - x_zp) @ W^T = X @ W^T - x_zp * rowsum(W).
+    """
+    acc = jnp.matmul(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32).T,
+        preferred_element_type=jnp.int32,
+    )
+    w_rowsum = jnp.sum(w_q.astype(jnp.int32), axis=1)  # [N]
+    acc = acc - x_zp * w_rowsum[None, :]
+    w_scale = jnp.asarray(w_scale, jnp.float32)
+    scale = x_scale * w_scale  # scalar or [N]
+    out = acc.astype(jnp.float32) * (scale[None, :] if scale.ndim == 1 else scale)
+    if bias is not None:
+        out = out + bias[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def split_outliers(w_q, main_bits: int = 7):
+    """Split an int8 weight matrix into a 7-bit main part and a sparse
+    residual of outliers (paper §3.2.1): W = W_main + W_outlier where
+    W_main is representable in `main_bits` bits."""
+    lo, hi = -(2 ** (main_bits - 1)), 2 ** (main_bits - 1) - 1
+    w_main = jnp.clip(w_q, lo, hi)
+    w_out = (w_q.astype(jnp.int32) - w_main.astype(jnp.int32)).astype(jnp.int8)
+    return w_main, w_out
+
+
+def ref_qgemm_i8acc16(x_q, w_q, x_scale, x_zp, w_scale, spill_block: int = 64,
+                      bias=None, relu=False, main_bits: int = 7):
+    """Outlier-aware i8-acc16 GEMM (paper §3.2.1).
+
+    X @ W_main^T accumulates in int16 within K-blocks of `spill_block`
+    (periodically spilled into an int32 accumulator — exactly what the
+    AVX2 vpmaddsw pipeline does), while X @ W_outlier^T uses the dense
+    int32 path. Saturation behaviour of int16 within a block is modelled
+    faithfully: a block partial sum is clipped to the int16 range before
+    the spill, which is why the main path must be 7-bit to stay exact.
+    """
+    w_main, w_out = split_outliers(w_q, main_bits)
+    M, K = x_q.shape
+    acc32 = jnp.zeros((M, w_q.shape[0]), jnp.int32)
+    for k0 in range(0, K, spill_block):
+        xb = x_q[:, k0:k0 + spill_block].astype(jnp.int32)
+        wb = w_main[:, k0:k0 + spill_block].astype(jnp.int32)
+        part = jnp.matmul(xb, wb.T)
+        part = jnp.clip(part, -32768, 32767)  # int16 accumulator saturation
+        acc32 = acc32 + part
+    acc32 = acc32 + jnp.matmul(x_q.astype(jnp.int32), w_out.astype(jnp.int32).T)
+    w_rowsum = jnp.sum(w_q.astype(jnp.int32), axis=1)
+    acc32 = acc32 - x_zp * w_rowsum[None, :]
+    w_scale = jnp.asarray(w_scale, jnp.float32)
+    scale = x_scale * w_scale
+    out = acc32.astype(jnp.float32) * (scale[None, :] if scale.ndim == 1 else scale)
+    if bias is not None:
+        out = out + bias[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def ref_fp16_gemm(x, w_fp16, bias=None, relu=False):
+    """fp16-storage GEMM: weights stored as fp16 (halving weight traffic),
+    compute in fp32 after widening — the paper's fp16 FBGEMM path."""
+    out = jnp.matmul(x, w_fp16.astype(jnp.float32).T)
+    if bias is not None:
+        out = out + bias[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SparseLengthsSum (embedding lookup, §2.1.1)
+# ---------------------------------------------------------------------------
+
+def ref_sls(table, indices, weights=None):
+    """SparseLengthsSum with a fixed pooling factor.
+
+    table:   [rows, dim] float32 embedding table
+    indices: [batch, pool] int32 row ids
+    weights: optional [batch, pool] per-lookup weights
+    returns  [batch, dim]: (weighted) sum over the pool of gathered rows.
+    """
+    gathered = table[indices]  # [batch, pool, dim]
+    if weights is not None:
+        gathered = gathered * weights[..., None]
+    return jnp.sum(gathered, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Depth-wise convolution (§2.1.2, ShuffleNet / ResNeXt-3D)
+# ---------------------------------------------------------------------------
+
+def ref_depthwise_conv(x, w, stride: int = 1):
+    """3x3 depth-wise convolution, NCHW, SAME padding.
+
+    x: [B, C, H, W] float32;  w: [C, 3, 3] one filter per channel.
+    """
+    B, C, H, W = x.shape
+    pad = 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    Ho = (H + 2 * pad - 3) // stride + 1
+    Wo = (W + 2 * pad - 3) // stride + 1
+    out = jnp.zeros((B, C, Ho, Wo), jnp.float32)
+    for kh in range(3):
+        for kw in range(3):
+            patch = xp[:, :, kh:kh + Ho * stride:stride, kw:kw + Wo * stride:stride]
+            out = out + patch * w[None, :, kh, kw, None, None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# numpy-side helper for tests
+# ---------------------------------------------------------------------------
+
+def np_quantize_tensor(x: np.ndarray, bits: int = 8, symmetric: bool = False):
+    scale, zp = choose_qparams(float(x.min()), float(x.max()), bits, symmetric)
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = np.clip(np.round(x / scale) + zp, qmin, qmax).astype(np.int8)
+    return q, scale, zp

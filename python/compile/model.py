@@ -1,0 +1,278 @@
+"""L2: JAX compute graphs for the dcinfer model zoo (build-time only).
+
+The centerpiece is the Fig-2 recommendation model: dense features pass
+through a bottom MLP, sparse features through SparseLengthsSum embedding
+pooling (the L1 Pallas kernel), the results are concatenated and passed
+through a top MLP to an event-probability head. FC layers exist in an
+fp32 path and an int8 path (the L1 quantized-GEMM Pallas kernels), per
+the paper's reduced-precision serving recipe (§3.2).
+
+Also here: a GRU seq2seq decode step (§2.1.3 language models) and a tiny
+CNN used by the quantization-recipe experiments (§3.2.2).
+
+Everything is written as pure functions of (weights..., inputs...) so
+`aot.py` can lower them with weights as leading HLO parameters — the
+Rust runtime uploads weights once as device-resident buffers and streams
+only activations per request.
+"""
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import qgemm_i8acc32, sparse_lengths_sum
+from .kernels.ref import choose_qparams
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RecsysConfig:
+    """DLRM-style recommendation model (Fig 2)."""
+    dense_dim: int = 32
+    emb_dim: int = 32
+    n_tables: int = 8
+    rows_per_table: int = 10_000
+    pool: int = 32                      # lookups per bag (>10 per the paper)
+    bottom_mlp: Sequence[int] = (128, 64, 32)
+    top_mlp: Sequence[int] = (256, 128, 1)
+
+    @property
+    def interaction_dim(self) -> int:
+        return self.n_tables * self.emb_dim + self.bottom_mlp[-1]
+
+    def param_count(self) -> int:
+        n = self.n_tables * self.rows_per_table * self.emb_dim
+        d = self.dense_dim
+        for h in self.bottom_mlp:
+            n += d * h + h
+            d = h
+        d = self.interaction_dim
+        for h in self.top_mlp:
+            n += d * h + h
+            d = h
+        return n
+
+
+@dataclass
+class GruConfig:
+    """Single GRU decode step (seq2seq, §2.1.3)."""
+    hidden: int = 256
+    vocab: int = 8192
+
+
+# ---------------------------------------------------------------------------
+# Weight init (numpy, deterministic) — the "trained" model the tier serves
+# ---------------------------------------------------------------------------
+
+def _glorot(rng, fan_in, fan_out):
+    lim = math.sqrt(6.0 / (fan_in + fan_out))
+    return rng.uniform(-lim, lim, (fan_out, fan_in)).astype(np.float32)
+
+
+def init_recsys_weights(cfg: RecsysConfig, seed: int = 0):
+    """Returns an ordered list of (name, np.ndarray). Order defines the
+    HLO parameter order (weights first, then inputs)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for t in range(cfg.n_tables):
+        # scaled-down embeddings so pooled sums stay O(1)
+        tbl = (rng.standard_normal((cfg.rows_per_table, cfg.emb_dim)) /
+               math.sqrt(cfg.pool)).astype(np.float32)
+        out.append((f"emb_{t}", tbl))
+    d = cfg.dense_dim
+    for i, h in enumerate(cfg.bottom_mlp):
+        out.append((f"bot_w{i}", _glorot(rng, d, h)))
+        out.append((f"bot_b{i}", np.zeros((h,), np.float32)))
+        d = h
+    d = cfg.interaction_dim
+    for i, h in enumerate(cfg.top_mlp):
+        out.append((f"top_w{i}", _glorot(rng, d, h)))
+        out.append((f"top_b{i}", np.zeros((h,), np.float32)))
+        d = h
+    return out
+
+
+def init_gru_weights(cfg: GruConfig, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    H = cfg.hidden
+    out = []
+    for gate in ("z", "r", "h"):
+        out.append((f"W{gate}", _glorot(rng, H, H)))
+        out.append((f"U{gate}", _glorot(rng, H, H)))
+        out.append((f"b{gate}", np.zeros((H,), np.float32)))
+    out.append(("Wout", _glorot(rng, H, cfg.vocab)))
+    out.append(("bout", np.zeros((cfg.vocab,), np.float32)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def fc(x, w, b, relu=True):
+    """Caffe2-convention FC: out = X @ W^T + b (w: [N, K])."""
+    y = jnp.matmul(x, w.T) + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def mlp(x, ws, bs, last_relu=False):
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        x = fc(x, w, b, relu=(i < len(ws) - 1) or last_relu)
+    return x
+
+
+def recsys_forward(cfg: RecsysConfig, weights: List[jnp.ndarray],
+                   dense, indices):
+    """Fig-2 forward. weights follow init_recsys_weights order.
+
+    dense:   [B, dense_dim] fp32
+    indices: [B, n_tables, pool] int32
+    returns  [B, 1] event probability
+    """
+    it = iter(weights)
+    tables = [next(it) for _ in range(cfg.n_tables)]
+    bot_ws, bot_bs = [], []
+    for _ in cfg.bottom_mlp:
+        bot_ws.append(next(it)); bot_bs.append(next(it))
+    top_ws, top_bs = [], []
+    for _ in cfg.top_mlp:
+        top_ws.append(next(it)); top_bs.append(next(it))
+
+    x = mlp(dense, bot_ws, bot_bs, last_relu=True)          # [B, bottom[-1]]
+    pooled = [sparse_lengths_sum(tables[t], indices[:, t, :])
+              for t in range(cfg.n_tables)]                  # n_tables x [B, D]
+    z = jnp.concatenate(pooled + [x], axis=1)                # [B, interaction]
+    y = mlp(z, top_ws, top_bs)                               # [B, 1]
+    return jax.nn.sigmoid(y)
+
+
+# -- int8 FC path (paper §3.2): weights pre-quantized per-channel; ----------
+# -- activation qparams calibrated offline and baked statically. ------------
+
+@dataclass
+class QuantFcParams:
+    """Static quantization metadata for one FC layer."""
+    w_q: np.ndarray          # [N, K] int8 (symmetric per-channel)
+    w_scale: np.ndarray      # [N] fp32
+    bias: np.ndarray         # [N] fp32
+    x_scale: float           # activation scale (calibrated)
+    x_zp: int                # activation zero point
+    relu: bool = True
+
+
+def quantize_fc_weights(w: np.ndarray, b: np.ndarray, x_min: float,
+                        x_max: float, relu=True) -> QuantFcParams:
+    """Per-output-channel symmetric weight quantization (§3.2.2 tech. 1)."""
+    amax = np.maximum(np.abs(w).max(axis=1), 1e-8)
+    w_scale = (amax / 127.0).astype(np.float32)
+    w_q = np.clip(np.round(w / w_scale[:, None]), -128, 127).astype(np.int8)
+    x_scale, x_zp = choose_qparams(x_min, x_max, bits=8, symmetric=False)
+    return QuantFcParams(w_q, w_scale, b.astype(np.float32),
+                         float(x_scale), int(x_zp), relu)
+
+
+def quant_fc(x, p: QuantFcParams, block_m=None, block_n=None, block_k=None):
+    """Quantize activations with static qparams, run the Pallas i8-acc32
+    kernel with its fused requantization pipeline."""
+    xq = jnp.clip(jnp.round(x / p.x_scale) + p.x_zp, -128, 127).astype(jnp.int8)
+    M, K = x.shape
+    N = p.w_q.shape[0]
+    kw = {}
+    kw["block_m"] = block_m or _pick_block(M)
+    kw["block_n"] = block_n or _pick_block(N)
+    kw["block_k"] = block_k or _pick_block(K)
+    return qgemm_i8acc32(xq, jnp.asarray(p.w_q), p.x_scale, p.x_zp,
+                         jnp.asarray(p.w_scale), bias=jnp.asarray(p.bias),
+                         relu=p.relu, **kw)
+
+
+def _pick_block(n: int, cap: int = 128) -> int:
+    """Largest divisor of n that is <= cap (keeps BlockSpec tiling exact)."""
+    for b in range(min(cap, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def recsys_forward_int8(cfg: RecsysConfig, tables, qfcs_bottom, qfcs_top,
+                        dense, indices):
+    """Fig-2 forward with the int8 FC path (embeddings stay fp32: they are
+    bandwidth-bound lookups, not multiplies — §3.2's bottleneck-driven
+    choice of numerics)."""
+    x = dense
+    for p in qfcs_bottom:
+        x = quant_fc(x, p)
+    pooled = [sparse_lengths_sum(tables[t], indices[:, t, :])
+              for t in range(cfg.n_tables)]
+    z = jnp.concatenate(pooled + [x], axis=1)
+    for p in qfcs_top[:-1]:
+        z = quant_fc(z, p)
+    # last layer kept fp32 (selective quantization, §3.2.2 technique 3)
+    last = qfcs_top[-1]
+    w = last.w_q.astype(np.float32) * last.w_scale[:, None]
+    y = jnp.matmul(z, jnp.asarray(w).T) + jnp.asarray(last.bias)[None, :]
+    return jax.nn.sigmoid(y)
+
+
+def gru_step(cfg: GruConfig, weights: List[jnp.ndarray], x, h):
+    """One GRU decode step + output projection (beam-search inner loop).
+
+    x, h: [B, H]; returns (logits [B, vocab], h' [B, H]).
+    """
+    (Wz, Uz, bz, Wr, Ur, br, Wh, Uh, bh, Wout, bout) = weights
+    z = jax.nn.sigmoid(x @ Wz.T + h @ Uz.T + bz)
+    r = jax.nn.sigmoid(x @ Wr.T + h @ Ur.T + br)
+    hh = jnp.tanh(x @ Wh.T + (r * h) @ Uh.T + bh)
+    h_new = (1.0 - z) * h + z * hh
+    logits = h_new @ Wout.T + bout
+    return logits, h_new
+
+
+# ---------------------------------------------------------------------------
+# Tiny CNN for the §3.2.2 quantization-recipe experiments (python-side only)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TinyCnnConfig:
+    in_hw: int = 16
+    c1: int = 8
+    c2: int = 16
+    classes: int = 4
+
+
+def init_tiny_cnn(cfg: TinyCnnConfig, seed: int = 2):
+    rng = np.random.default_rng(seed)
+    flat = cfg.c2 * (cfg.in_hw // 4) * (cfg.in_hw // 4)
+    return {
+        "conv1": (rng.standard_normal((cfg.c1, 1, 3, 3)) * 0.3).astype(np.float32),
+        "b1": np.zeros((cfg.c1,), np.float32),
+        "conv2": (rng.standard_normal((cfg.c2, cfg.c1, 3, 3)) * 0.2).astype(np.float32),
+        "b2": np.zeros((cfg.c2,), np.float32),
+        "fc_w": _glorot(rng, flat, cfg.classes),
+        "fc_b": np.zeros((cfg.classes,), np.float32),
+    }
+
+
+def tiny_cnn_forward(params, x, fake_quant=None):
+    """x: [B, 1, H, W]. `fake_quant` is an optional callable applied to
+    weights/activations to simulate int8 (quantization-aware evaluation)."""
+    fq = fake_quant if fake_quant is not None else (lambda t, kind: t)
+    w1 = fq(params["conv1"], "w")
+    h = jax.lax.conv_general_dilated(
+        x, w1, (2, 2), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    h = jnp.maximum(h + params["b1"][None, :, None, None], 0.0)
+    h = fq(h, "a")
+    w2 = fq(params["conv2"], "w")
+    h = jax.lax.conv_general_dilated(
+        h, w2, (2, 2), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    h = jnp.maximum(h + params["b2"][None, :, None, None], 0.0)
+    h = fq(h, "a")
+    h = h.reshape(h.shape[0], -1)
+    return h @ fq(params["fc_w"], "w").T + params["fc_b"]

@@ -1,0 +1,169 @@
+"""§3.2.2 quantization recipe: the five accuracy techniques, in JAX.
+
+1. Fine-grain quantization — per-channel (per output feature) qparams.
+2. Quantization-aware training — fake-quant in the training loop.
+3. Selective quantization — per-layer error profiling, fall back to fp32
+   where the introduced error is too high.
+4. Outlier-aware quantization — clip the range to an L2-optimal interval
+   instead of [min, max]; calibrate activations on training data.
+5. Net-aware quantization — narrow ranges using the consumer op (e.g. a
+   following ReLU means the range is [0, max]).
+
+These are build-time tools: the chosen qparams are baked into the int8
+artifacts that the Rust tier serves. The Rust `quant` module mirrors the
+same logic for the fleet-side error profiler.
+"""
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.ref import choose_qparams
+
+
+# ---------------------------------------------------------------------------
+# Observers / calibration
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TensorStats:
+    """Running min/max + histogram observer (the paper collects activation
+    distributions with calibration inputs from training data)."""
+    min: float = float("inf")
+    max: float = float("-inf")
+    bins: int = 2048
+    hist: Optional[np.ndarray] = None
+    hist_lo: float = 0.0
+    hist_hi: float = 0.0
+
+    def observe(self, x: np.ndarray):
+        x = np.asarray(x, np.float32)
+        self.min = min(self.min, float(x.min()))
+        self.max = max(self.max, float(x.max()))
+        # (re)build histogram over the widened range, re-binning the
+        # accumulated counts at their old bin centers so earlier batches
+        # keep their weight
+        lo, hi = self.min, self.max
+        if self.hist is None or lo < self.hist_lo or hi > self.hist_hi:
+            old = None
+            if self.hist is not None:
+                centers = np.linspace(self.hist_lo, self.hist_hi, self.bins)
+                old = (centers, self.hist.copy())
+            self.hist_lo, self.hist_hi = lo, hi
+            self.hist = np.zeros(self.bins, np.float64)
+            if old is not None:
+                h, _ = np.histogram(old[0], bins=self.bins,
+                                    range=(self.hist_lo, self.hist_hi),
+                                    weights=old[1])
+                self.hist += h
+        h, _ = np.histogram(x, bins=self.bins, range=(self.hist_lo, self.hist_hi))
+        self.hist += h
+
+
+def minmax_qparams(st: TensorStats, bits=8, symmetric=False):
+    return choose_qparams(st.min, st.max, bits, symmetric)
+
+
+def l2_optimal_qparams(st: TensorStats, bits=8, n_grid: int = 64):
+    """Technique 4: choose a clip range minimizing the L2 quantization
+    error w.r.t. the observed distribution (ignoring outliers), rather
+    than covering [min, max]."""
+    assert st.hist is not None, "observe() some data first"
+    centers = np.linspace(st.hist_lo, st.hist_hi, st.bins)
+    weights = st.hist
+    best, best_err = None, float("inf")
+    amax = max(abs(st.hist_lo), abs(st.hist_hi), 1e-12)
+    for frac in np.linspace(1.0 / n_grid, 1.0, n_grid):
+        clip = frac * amax
+        lo, hi = max(st.hist_lo, -clip), min(st.hist_hi, clip)
+        if hi <= lo:
+            continue
+        scale, zp = choose_qparams(lo, hi, bits)
+        q = np.clip(np.round(centers / scale) + zp,
+                    -(2 ** (bits - 1)), 2 ** (bits - 1) - 1)
+        deq = (q - zp) * scale
+        err = float(np.sum(weights * (centers - deq) ** 2))
+        if err < best_err:
+            best_err, best = err, (scale, zp)
+    return best
+
+
+def net_aware_narrow(st: TensorStats, consumer: str) -> TensorStats:
+    """Technique 5: narrow the observed range using the consumer op."""
+    out = TensorStats(min=st.min, max=st.max, bins=st.bins,
+                      hist=None if st.hist is None else st.hist.copy(),
+                      hist_lo=st.hist_lo, hist_hi=st.hist_hi)
+    if consumer == "relu":
+        out.min = max(0.0, out.min)
+    elif consumer == "sigmoid":
+        # input to sigmoid saturates outside ~[-8, 8]
+        out.min, out.max = max(out.min, -8.0), min(out.max, 8.0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization (QAT + post-training evaluation)
+# ---------------------------------------------------------------------------
+
+def fake_quant_tensor(x, scale, zp, bits=8):
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x / scale) + zp, qmin, qmax)
+    return (q - zp) * scale
+
+
+def fake_quant_per_channel(w, bits=8, axis=0):
+    """Technique 1 on weights: symmetric per-output-channel."""
+    qmax = 2 ** (bits - 1) - 1
+    red = tuple(i for i in range(w.ndim) if i != axis)
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=red, keepdims=True), 1e-8)
+    scale = amax / qmax
+    return jnp.clip(jnp.round(w / scale), -qmax - 1, qmax) * scale
+
+
+def fake_quant_per_tensor(w, bits=8):
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    scale = amax / qmax
+    return jnp.clip(jnp.round(w / scale), -qmax - 1, qmax) * scale
+
+
+def straight_through(fq: Callable, x):
+    """QAT (technique 2): identity gradient through the quantizer."""
+    return x + jax.lax.stop_gradient(fq(x) - x)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer error profiling + selective quantization (technique 3)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LayerErrorReport:
+    name: str
+    sqnr_db: float          # signal-to-quantization-noise ratio
+    l2_rel: float           # relative L2 error
+    quantize: bool          # recipe decision
+
+
+def sqnr_db(ref: np.ndarray, test: np.ndarray) -> float:
+    noise = np.sum((ref - test) ** 2)
+    sig = np.sum(ref ** 2)
+    if noise == 0:
+        return float("inf")
+    return float(10.0 * np.log10(max(sig, 1e-30) / noise))
+
+
+def profile_layer_error(name: str, ref_out: np.ndarray, q_out: np.ndarray,
+                        sqnr_threshold_db: float = 20.0) -> LayerErrorReport:
+    """The paper: "systematically profile errors introduced by quantization
+    per layer and skip quantization when the error is too high"."""
+    s = sqnr_db(ref_out, q_out)
+    l2 = float(np.linalg.norm(ref_out - q_out) /
+               max(np.linalg.norm(ref_out), 1e-30))
+    return LayerErrorReport(name, s, l2, quantize=s >= sqnr_threshold_db)
+
+
+def selective_quantization(reports: List[LayerErrorReport]) -> Dict[str, bool]:
+    return {r.name: r.quantize for r in reports}

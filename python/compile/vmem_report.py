@@ -1,0 +1,112 @@
+"""L1 structural performance report: VMEM footprint + MXU utilization
+estimates for every Pallas kernel configuration (the real-TPU
+performance proxy — interpret=True gives CPU-numpy timings only, which
+are not a TPU signal; see DESIGN.md §Hardware-Adaptation).
+
+Usage: python -m compile.vmem_report
+
+Model: per grid step, VMEM must hold every BlockSpec block (double-
+buffered for the HBM->VMEM pipeline). MXU utilization is estimated as
+the fraction of the 128x128 systolic array covered by the (m, n) tile
+with the K dimension streamed.
+"""
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024  # v4-lite class core
+MXU = 128
+
+
+@dataclass
+class KernelConfig:
+    name: str
+    blocks: list  # (label, shape, dtype_bytes), resident per grid step
+    mxu_tile: tuple | None  # (m, n) fed to the MXU per step, or None (VPU)
+
+    def vmem_bytes(self, double_buffer=True):
+        total = sum(b * _prod(s) for _, s, b in self.blocks)
+        return total * (2 if double_buffer else 1)
+
+    def vmem_frac(self):
+        return self.vmem_bytes() / VMEM_BYTES
+
+    def mxu_utilization(self):
+        if self.mxu_tile is None:
+            return 0.0
+        m, n = self.mxu_tile
+        return min(m, MXU) * min(n, MXU) / (MXU * MXU)
+
+
+def _prod(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+def default_configs():
+    """The shipped kernel configurations (matching aot.py)."""
+    return [
+        KernelConfig(
+            "qgemm_i8acc32 (64x256x512, bm64 bn128 bk128)",
+            blocks=[
+                ("x", (64, 128), 1), ("w", (128, 128), 1),
+                ("rowsum/scale/bias", (3 * 128,), 4),
+                ("out", (64, 128), 4), ("acc", (64, 128), 4),
+            ],
+            mxu_tile=(64, 128),
+        ),
+        KernelConfig(
+            "qgemm_i8acc32 (prod 256x1024x1024, bm128 bn128 bk256)",
+            blocks=[
+                ("x", (128, 256), 1), ("w", (128, 256), 1),
+                ("rowsum/scale/bias", (3 * 128,), 4),
+                ("out", (128, 128), 4), ("acc", (128, 128), 4),
+            ],
+            mxu_tile=(128, 128),
+        ),
+        KernelConfig(
+            "outlier qgemm_i8acc16 (bm128 bn128 bk64)",
+            blocks=[
+                ("x", (128, 64), 1), ("w_main", (128, 64), 1), ("w_out", (128, 64), 1),
+                ("rowsum/scale/bias", (3 * 128,), 4),
+                ("out", (128, 128), 4), ("acc", (128, 128), 4),
+            ],
+            mxu_tile=(128, 128),
+        ),
+        KernelConfig(
+            "fp16_gemm (bm128 bn128 bk128)",
+            blocks=[
+                ("x", (128, 128), 4), ("w", (128, 128), 2), ("bias", (128,), 4),
+                ("out", (128, 128), 4), ("acc", (128, 128), 4),
+            ],
+            mxu_tile=(128, 128),
+        ),
+        KernelConfig(
+            "sparse_lengths_sum (dim 64, pool 32)",
+            blocks=[("indices", (1, 32), 4), ("acc_row", (1, 64), 4)],
+            mxu_tile=None,  # gather+reduce on the VPU; table stays in HBM
+        ),
+        KernelConfig(
+            "depthwise_conv3x3 (112x112 plane)",
+            blocks=[("x_plane", (1, 1, 114, 114), 4), ("w", (1, 3, 3), 4),
+                    ("out", (1, 1, 112, 112), 4)],
+            mxu_tile=None,  # 9 shifted FMAs on the VPU
+        ),
+    ]
+
+
+def report(configs=None):
+    configs = configs or default_configs()
+    rows = []
+    print(f"{'kernel':<52} {'VMEM (dbl-buf)':>16} {'of 16MB':>8} {'MXU util':>9}")
+    for c in configs:
+        vb = c.vmem_bytes()
+        rows.append((c.name, vb, c.vmem_frac(), c.mxu_utilization()))
+        print(f"{c.name:<52} {vb / 1024:>13.0f} KB {c.vmem_frac():>7.1%} "
+              f"{c.mxu_utilization():>8.0%}")
+    return rows
+
+
+if __name__ == "__main__":
+    report()

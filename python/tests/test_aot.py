@@ -1,0 +1,108 @@
+"""AOT pipeline smoke tests: manifest + weights binary + HLO text format.
+
+These run against the already-built artifacts/ when present (make
+artifacts); the weights-binary round-trip tests are self-contained.
+"""
+
+import json
+import os
+import struct
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def read_weights(path):
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == b"DCIW"
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(n):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            (dcode,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim))
+            dtype = {0: np.float32, 1: np.int8, 2: np.int32}[dcode]
+            count = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(count * np.dtype(dtype).itemsize), dtype)
+            out.append((name, data.reshape(dims)))
+    return out
+
+
+def test_weights_binary_roundtrip():
+    rng = np.random.default_rng(0)
+    tensors = [
+        ("a", rng.standard_normal((3, 4)).astype(np.float32)),
+        ("b", rng.integers(-128, 128, (5,)).astype(np.int8)),
+        ("c", rng.integers(0, 100, (2, 2, 2)).astype(np.int32)),
+    ]
+    with tempfile.NamedTemporaryFile(suffix=".bin") as f:
+        aot.write_weights(f.name, tensors)
+        back = read_weights(f.name)
+    assert [n for n, _ in back] == ["a", "b", "c"]
+    for (n0, a0), (n1, a1) in zip(tensors, back):
+        np.testing.assert_array_equal(a0, a1)
+        assert a0.dtype == a1.dtype
+
+
+def test_recsys_weights_order_matches_manifest_contract():
+    cfg = M.RecsysConfig(dense_dim=4, emb_dim=4, n_tables=2, rows_per_table=10,
+                         pool=2, bottom_mlp=(4,), top_mlp=(4, 1))
+    ws = M.init_recsys_weights(cfg)
+    names = [n for n, _ in ws]
+    assert names[:2] == ["emb_0", "emb_1"]
+    assert names[2:4] == ["bot_w0", "bot_b0"]
+    assert names[-2:] == ["top_w1", "top_b1"]
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first")
+
+
+@needs_artifacts
+def test_manifest_structure():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert "recsys" in man["models"]
+    for name, art in man["artifacts"].items():
+        assert os.path.exists(os.path.join(ARTIFACTS, art["hlo"])), name
+        if art["weights"]:
+            assert os.path.exists(os.path.join(ARTIFACTS, art["weights"])), name
+        assert art["inputs"] and art["outputs"]
+
+
+@needs_artifacts
+def test_hlo_text_is_parseable_hlo():
+    """HLO text (not proto) interchange: the file must contain an
+    HloModule header and an ENTRY computation — what
+    HloModuleProto::from_text_file expects."""
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    for name, art in man["artifacts"].items():
+        with open(os.path.join(ARTIFACTS, art["hlo"])) as f:
+            head = f.read(4096)
+        assert head.startswith("HloModule"), name
+        with open(os.path.join(ARTIFACTS, art["hlo"])) as f:
+            assert "ENTRY" in f.read(), name
+
+
+@needs_artifacts
+def test_manifest_weight_params_match_weights_file():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    art = man["artifacts"]["recsys_fp32_b16"]
+    tensors = read_weights(os.path.join(ARTIFACTS, art["weights"]))
+    by_name = {n: a for n, a in tensors}
+    for wp in art["weight_params"]:
+        assert wp["name"] in by_name
+        assert list(by_name[wp["name"]].shape) == wp["shape"]

@@ -1,0 +1,164 @@
+"""L2 model tests: Fig-2 recsys forward (fp32 + int8 paths), GRU step."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return M.RecsysConfig(dense_dim=8, emb_dim=8, n_tables=3,
+                          rows_per_table=100, pool=4,
+                          bottom_mlp=(16, 8), top_mlp=(16, 1))
+
+
+@pytest.fixture(scope="module")
+def small_weights(small_cfg):
+    return M.init_recsys_weights(small_cfg, seed=0)
+
+
+def _inputs(cfg, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal((batch, cfg.dense_dim)).astype(np.float32)
+    idx = rng.integers(0, cfg.rows_per_table,
+                       (batch, cfg.n_tables, cfg.pool)).astype(np.int32)
+    return jnp.asarray(dense), jnp.asarray(idx)
+
+
+def test_param_count_matches_weights(small_cfg, small_weights):
+    total = sum(a.size for _, a in small_weights)
+    assert total == small_cfg.param_count()
+
+
+def test_default_config_is_several_million_params():
+    cfg = M.RecsysConfig()
+    assert 2_000_000 < cfg.param_count() < 4_000_000
+
+
+@pytest.mark.parametrize("batch", [1, 3, 16])
+def test_recsys_forward_shape_and_range(small_cfg, small_weights, batch):
+    ws = [jnp.asarray(a) for _, a in small_weights]
+    dense, idx = _inputs(small_cfg, batch)
+    out = M.recsys_forward(small_cfg, ws, dense, idx)
+    assert out.shape == (batch, 1)
+    o = np.asarray(out)
+    assert np.all((o > 0.0) & (o < 1.0))  # sigmoid event probability
+
+
+def test_recsys_forward_deterministic(small_cfg, small_weights):
+    ws = [jnp.asarray(a) for _, a in small_weights]
+    dense, idx = _inputs(small_cfg, 4)
+    a = np.asarray(M.recsys_forward(small_cfg, ws, dense, idx))
+    b = np.asarray(M.recsys_forward(small_cfg, ws, dense, idx))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_recsys_batch_consistency(small_cfg, small_weights):
+    """Row i of a batched forward equals a batch-1 forward of row i."""
+    ws = [jnp.asarray(a) for _, a in small_weights]
+    dense, idx = _inputs(small_cfg, 5)
+    full = np.asarray(M.recsys_forward(small_cfg, ws, dense, idx))
+    for i in [0, 2, 4]:
+        one = np.asarray(M.recsys_forward(small_cfg, ws,
+                                          dense[i:i + 1], idx[i:i + 1]))
+        np.testing.assert_allclose(one, full[i:i + 1], rtol=1e-5, atol=1e-6)
+
+
+def test_recsys_embedding_sensitivity(small_cfg, small_weights):
+    """Different sparse ids must change the prediction (embeddings are live)."""
+    ws = [jnp.asarray(a) for _, a in small_weights]
+    dense, idx = _inputs(small_cfg, 2)
+    base = np.asarray(M.recsys_forward(small_cfg, ws, dense, idx))
+    idx2 = (np.asarray(idx) + 17) % small_cfg.rows_per_table
+    alt = np.asarray(M.recsys_forward(small_cfg, ws, dense, jnp.asarray(idx2)))
+    assert not np.allclose(base, alt)
+
+
+# ---------------------------------------------------------------------------
+# int8 FC path
+# ---------------------------------------------------------------------------
+
+def _quantize_mlps(cfg, weights, calib, seed=1):
+    rng = np.random.default_rng(seed)
+    wd = dict(weights)
+    bot, top = [], []
+    x = calib
+    for i in range(len(cfg.bottom_mlp)):
+        w, b = wd[f"bot_w{i}"], wd[f"bot_b{i}"]
+        bot.append(M.quantize_fc_weights(w, b, float(x.min()), float(x.max())))
+        x = np.maximum(x @ w.T + b, 0.0)
+    z = np.concatenate(
+        [rng.standard_normal((calib.shape[0], cfg.n_tables * cfg.emb_dim)).astype(np.float32), x],
+        axis=1)
+    for i in range(len(cfg.top_mlp)):
+        w, b = wd[f"top_w{i}"], wd[f"top_b{i}"]
+        relu = i < len(cfg.top_mlp) - 1
+        top.append(M.quantize_fc_weights(w, b, float(z.min()), float(z.max()), relu=relu))
+        z = np.maximum(z @ w.T + b, 0.0) if relu else z @ w.T + b
+    return bot, top
+
+
+def test_recsys_int8_close_to_fp32(small_cfg, small_weights):
+    """§3.2.2: the quantized model's predictions track fp32 closely."""
+    cfg = small_cfg
+    ws = [jnp.asarray(a) for _, a in small_weights]
+    rng = np.random.default_rng(3)
+    calib = rng.standard_normal((128, cfg.dense_dim)).astype(np.float32)
+    bot, top = _quantize_mlps(cfg, small_weights, calib)
+    tables = ws[:cfg.n_tables]
+    dense, idx = _inputs(cfg, 8)
+    fp = np.asarray(M.recsys_forward(cfg, ws, dense, idx))
+    q = np.asarray(M.recsys_forward_int8(cfg, tables, bot, top, dense, idx))
+    assert q.shape == fp.shape
+    assert np.max(np.abs(q - fp)) < 0.05, np.max(np.abs(q - fp))
+
+
+def test_quant_fc_matches_dequant_reference():
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((16, 32)).astype(np.float32)
+    b = rng.standard_normal((16,)).astype(np.float32)
+    x = rng.uniform(-2, 2, (4, 32)).astype(np.float32)
+    p = M.quantize_fc_weights(w, b, -2.0, 2.0, relu=False)
+    got = np.asarray(M.quant_fc(jnp.asarray(x), p))
+    # reference: dequantized math
+    xq = np.clip(np.round(x / p.x_scale) + p.x_zp, -128, 127)
+    xdq = (xq - p.x_zp) * p.x_scale
+    wdq = p.w_q.astype(np.float32) * p.w_scale[:, None]
+    want = xdq @ wdq.T + b
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pick_block_divides():
+    for n in [1, 7, 16, 100, 288, 1000]:
+        b = M._pick_block(n)
+        assert n % b == 0 and 1 <= b <= 128
+
+
+# ---------------------------------------------------------------------------
+# GRU step
+# ---------------------------------------------------------------------------
+
+def test_gru_step_shapes_and_gating():
+    cfg = M.GruConfig(hidden=32, vocab=64)
+    ws = [jnp.asarray(a) for _, a in M.init_gru_weights(cfg)]
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((2, 32)).astype(np.float32))
+    h = jnp.asarray(rng.standard_normal((2, 32)).astype(np.float32))
+    logits, h2 = M.gru_step(cfg, ws, x, h)
+    assert logits.shape == (2, 64) and h2.shape == (2, 32)
+    # hidden state stays bounded (GRU is a convex mix of h and tanh)
+    assert float(jnp.max(jnp.abs(h2))) <= float(jnp.max(jnp.abs(h))) + 1.0
+
+
+def test_gru_step_fixed_point_is_stable():
+    """Repeated steps with the same input keep the state bounded."""
+    cfg = M.GruConfig(hidden=16, vocab=32)
+    ws = [jnp.asarray(a) for _, a in M.init_gru_weights(cfg)]
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((1, 16)).astype(np.float32))
+    h = jnp.zeros((1, 16), jnp.float32)
+    for _ in range(20):
+        _, h = M.gru_step(cfg, ws, x, h)
+    assert float(jnp.max(jnp.abs(h))) < 2.0

@@ -1,0 +1,151 @@
+"""Unit + property tests for the §3.2.2 quantization toolkit."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+from compile.kernels.ref import choose_qparams, dequantize, quantize
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# qparams
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(lo=st.floats(-100, 0), hi=st.floats(0.01, 100), bits=st.sampled_from([4, 6, 8]))
+def test_choose_qparams_roundtrip_error_bound(lo, hi, bits):
+    """Dequant(quant(x)) error is bounded by scale/2 inside the range."""
+    scale, zp = choose_qparams(lo, hi, bits)
+    xs = np.linspace(lo, hi, 101).astype(np.float32)
+    q = quantize(jnp.asarray(xs), scale, zp, bits)
+    deq = np.asarray(dequantize(q, scale, zp))
+    assert np.max(np.abs(deq - xs)) <= scale * 0.5001 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(amax=st.floats(0.01, 50))
+def test_symmetric_qparams_zero_point_is_zero(amax):
+    scale, zp = choose_qparams(-amax, amax, 8, symmetric=True)
+    assert zp == 0
+    assert scale == pytest.approx(amax / 127.0)
+
+
+def test_qparams_degenerate_range():
+    scale, zp = choose_qparams(0.0, 0.0, 8)
+    assert scale > 0  # never a zero scale
+
+
+# ---------------------------------------------------------------------------
+# observers / calibration
+# ---------------------------------------------------------------------------
+
+def test_tensor_stats_tracks_running_minmax():
+    st_ = Q.TensorStats()
+    st_.observe(np.array([1.0, 2.0]))
+    st_.observe(np.array([-5.0, 0.5]))
+    assert st_.min == -5.0 and st_.max == 2.0
+    assert st_.hist is not None and st_.hist.sum() >= 2
+
+
+def test_l2_optimal_beats_minmax_on_heavy_tails():
+    """Technique 4: with rare extreme outliers and a large bulk mass, the
+    L2-optimal clip range narrows well below min/max and cuts the bulk
+    quantization error. (L2 punishes clipping quadratically, so the win
+    only appears when bulk_count * scale^2 dominates outlier_count *
+    clip_dist^2 — exactly the data-center weight/activation regime the
+    paper describes.)"""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(4_000_000).astype(np.float32)
+    x[:3] = 100.0  # extreme outliers stretch the min/max range
+    st_ = Q.TensorStats()
+    st_.observe(x)
+    s_mm, zp_mm = Q.minmax_qparams(st_)
+    s_l2, zp_l2 = Q.l2_optimal_qparams(st_)
+    assert s_l2 < s_mm * 0.5  # range was genuinely narrowed
+    bulk = x[np.abs(x) < 5]
+    errs = {}
+    for (s, zp), label in [((s_mm, zp_mm), "minmax"), ((s_l2, zp_l2), "l2")]:
+        q = np.clip(np.round(bulk / s) + zp, -128, 127)
+        errs[label] = np.mean((bulk - (q - zp) * s) ** 2)
+    assert errs["l2"] < errs["minmax"] * 0.25, errs
+
+
+def test_net_aware_narrowing_relu():
+    """Technique 5: a ReLU consumer clips the quantization range at 0."""
+    st_ = Q.TensorStats()
+    st_.observe(np.array([-4.0, 3.0]))
+    narrowed = Q.net_aware_narrow(st_, "relu")
+    assert narrowed.min == 0.0 and narrowed.max == 3.0
+    s_raw, _ = Q.minmax_qparams(st_)
+    s_net, _ = Q.minmax_qparams(narrowed)
+    assert s_net < s_raw  # finer resolution over the live range
+
+
+def test_net_aware_narrowing_sigmoid():
+    st_ = Q.TensorStats()
+    st_.observe(np.array([-50.0, 50.0]))
+    narrowed = Q.net_aware_narrow(st_, "sigmoid")
+    assert narrowed.min == -8.0 and narrowed.max == 8.0
+
+
+# ---------------------------------------------------------------------------
+# fake quant
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_per_channel_no_worse_than_per_tensor(seed):
+    """Technique 1: per-channel error <= per-tensor error when channel
+    scales differ (each channel gets its own optimal scale)."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((16, 32)).astype(np.float32)
+    w *= np.logspace(-2, 0, 16)[:, None].astype(np.float32)  # diverse scales
+    pc = np.asarray(Q.fake_quant_per_channel(jnp.asarray(w)))
+    pt = np.asarray(Q.fake_quant_per_tensor(jnp.asarray(w)))
+    err_pc = np.linalg.norm(pc - w)
+    err_pt = np.linalg.norm(pt - w)
+    assert err_pc <= err_pt * 1.0001
+
+
+def test_fake_quant_idempotent():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((8, 8)).astype(np.float32))
+    once = Q.fake_quant_per_tensor(w)
+    twice = Q.fake_quant_per_tensor(once)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+
+def test_straight_through_preserves_value():
+    import jax
+    w = jnp.asarray(np.array([0.11, -0.52, 0.73], np.float32))
+    val = Q.straight_through(Q.fake_quant_per_tensor, w)
+    np.testing.assert_allclose(np.asarray(val),
+                               np.asarray(Q.fake_quant_per_tensor(w)), atol=1e-7)
+    # identity gradient
+    g = jax.grad(lambda t: jnp.sum(Q.straight_through(Q.fake_quant_per_tensor, t)))(w)
+    np.testing.assert_allclose(np.asarray(g), np.ones(3), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# error profiling / selective quantization
+# ---------------------------------------------------------------------------
+
+def test_sqnr_infinite_for_exact():
+    x = np.ones(10, np.float32)
+    assert Q.sqnr_db(x, x) == float("inf")
+
+
+def test_profile_layer_error_decision():
+    rng = np.random.default_rng(2)
+    ref_out = rng.standard_normal(1000).astype(np.float32)
+    good = ref_out + 1e-4 * rng.standard_normal(1000).astype(np.float32)
+    bad = ref_out + 0.5 * rng.standard_normal(1000).astype(np.float32)
+    r_good = Q.profile_layer_error("fc1", ref_out, good)
+    r_bad = Q.profile_layer_error("fc2", ref_out, bad)
+    assert r_good.quantize and not r_bad.quantize
+    sel = Q.selective_quantization([r_good, r_bad])
+    assert sel == {"fc1": True, "fc2": False}

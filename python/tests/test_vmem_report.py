@@ -1,0 +1,33 @@
+"""L1 perf-structure checks: every shipped kernel config fits VMEM with
+double buffering, and the GEMM kernels feed the MXU at full tile width.
+"""
+
+from compile.vmem_report import default_configs, report, VMEM_BYTES
+
+
+def test_all_kernels_fit_vmem_double_buffered():
+    for c in default_configs():
+        assert c.vmem_bytes(double_buffer=True) < VMEM_BYTES, c.name
+
+
+def test_gemm_kernels_use_full_mxu_tiles():
+    gemms = [c for c in default_configs() if c.mxu_tile is not None]
+    assert gemms, "no GEMM configs"
+    # production-shape GEMMs should cover the full 128x128 array
+    full = [c for c in gemms if c.mxu_utilization() == 1.0]
+    assert len(full) >= 2, [c.name for c in gemms]
+
+
+def test_bandwidth_kernels_stay_off_mxu():
+    names = {c.name: c for c in default_configs()}
+    sls = next(c for n, c in names.items() if "sparse_lengths" in n)
+    dw = next(c for n, c in names.items() if "depthwise" in n)
+    assert sls.mxu_utilization() == 0.0
+    assert dw.mxu_utilization() == 0.0
+
+
+def test_report_prints(capsys):
+    rows = report()
+    out = capsys.readouterr().out
+    assert "MXU util" in out
+    assert len(rows) == len(default_configs())

@@ -1,0 +1,33 @@
+//! Ablation (DESIGN.md): on-chip memory allocation policy for the Fig-3
+//! roofline — the paper's greedy-by-value vs naive weights-first /
+//! activations-first pinning.
+
+use dcinfer::models::representative_zoo;
+use dcinfer::perfmodel::{roofline_model_with_policy, AllocPolicy, DeviceSpec};
+use dcinfer::util::bench::Table;
+
+fn main() {
+    println!("== ablation: on-chip allocation policy (8 MB, 1 TB/s) ==\n");
+    let dev = DeviceSpec::fig3(8.0, 1.0);
+    let mut table = Table::new(&["model", "greedy TOP/s", "weights-first", "acts-first"]);
+    let mut greedy_wins = 0usize;
+    let mut comparisons = 0usize;
+    for e in representative_zoo() {
+        let g = roofline_model_with_policy(&e.desc, &dev, AllocPolicy::GreedyValue);
+        let w = roofline_model_with_policy(&e.desc, &dev, AllocPolicy::WeightsFirst);
+        let a = roofline_model_with_policy(&e.desc, &dev, AllocPolicy::ActivationsFirst);
+        table.row(&[
+            e.desc.name.clone(),
+            format!("{:.2}", g.achieved_ops / 1e12),
+            format!("{:.2}", w.achieved_ops / 1e12),
+            format!("{:.2}", a.achieved_ops / 1e12),
+        ]);
+        comparisons += 1;
+        if g.achieved_ops >= w.achieved_ops * 0.999 && g.achieved_ops >= a.achieved_ops * 0.999 {
+            greedy_wins += 1;
+        }
+    }
+    table.print();
+    println!("\ngreedy >= both baselines on {greedy_wins}/{comparisons} models");
+    assert!(greedy_wins * 3 >= comparisons * 2, "greedy should win on most models");
+}

@@ -1,0 +1,73 @@
+//! Ablation (DESIGN.md): batching policy — no batching (b1 only) vs
+//! fixed single variant vs the adaptive multi-variant batcher, at the
+//! same offered load. Requires `make artifacts`.
+
+use std::time::Instant;
+
+use dcinfer::coordinator::{InferRequest, InferenceTier, TierConfig};
+use dcinfer::util::bench::Table;
+use dcinfer::util::rng::Pcg32;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("skipping ablation_batching: run `make artifacts` first");
+        return;
+    }
+    println!("== ablation: batching policy at 4000 offered qps ==\n");
+    let mut table =
+        Table::new(&["policy", "achieved qps", "mean batch", "p50 us", "p99 us"]);
+
+    // policy is expressed through max_wait: 0us ~ no batching (flush
+    // immediately), 2ms adaptive, 10ms aggressive batching
+    for (name, wait_us) in [("no-batch (0us)", 1.0), ("adaptive (2ms)", 2_000.0), ("aggressive (10ms)", 10_000.0)] {
+        let tier = InferenceTier::start(TierConfig {
+            executors: 2,
+            max_wait_us: wait_us,
+            ..Default::default()
+        })
+        .expect("tier");
+        // warm variants
+        let mut rng = Pcg32::seeded(3);
+        for burst in [1usize, 4, 16, 64] {
+            let rxs: Vec<_> =
+                (0..burst).map(|i| tier.submit(req(&tier, &mut rng, i as u64)).unwrap()).collect();
+            for rx in rxs {
+                let _ = rx.recv();
+            }
+        }
+        let n = 1200u64;
+        let gap = std::time::Duration::from_secs_f64(1.0 / 4000.0);
+        let t0 = Instant::now();
+        let receivers: Vec<_> = (0..n)
+            .map(|i| {
+                let rx = tier.submit(req(&tier, &mut rng, i)).unwrap();
+                std::thread::sleep(gap);
+                rx
+            })
+            .collect();
+        for rx in receivers {
+            let _ = rx.recv();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = tier.metrics.snapshot();
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}", n as f64 / wall),
+            format!("{:.1}", snap.mean_batch),
+            format!("{:.0}", snap.total_p50_us),
+            format!("{:.0}", snap.total_p99_us),
+        ]);
+        tier.shutdown();
+    }
+    table.print();
+    println!("\n(batching should raise throughput; aggressive waits trade p50 for batch size)");
+}
+
+fn req(tier: &InferenceTier, rng: &mut Pcg32, id: u64) -> InferRequest {
+    let mut dense = vec![0f32; tier.dense_dim];
+    rng.fill_normal(&mut dense, 0.0, 1.0);
+    let indices: Vec<i32> = (0..tier.n_tables * tier.pool_size)
+        .map(|_| rng.zipf(tier.rows_per_table as u32, 1.05) as i32)
+        .collect();
+    InferRequest { id, dense, indices, arrival: Instant::now(), deadline_ms: 100.0 }
+}

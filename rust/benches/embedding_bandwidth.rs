@@ -1,0 +1,52 @@
+//! Embedding-lookup bandwidth bench (§2.1.1): SparseLengthsSum over a
+//! large table, fp32 vs int8 row-wise quantized — the dominant
+//! recommendation operator is pure memory bandwidth, and int8 rows cut
+//! the traffic ~4x.
+
+use dcinfer::embedding::{EmbeddingTable, QuantizedTable};
+use dcinfer::util::bench::{bench_cfg, keep, Table};
+use dcinfer::util::rng::Pcg32;
+
+fn main() {
+    println!("== embedding bandwidth: SparseLengthsSum fp32 vs int8 rows ==\n");
+    let mut rng = Pcg32::seeded(3);
+    let mut table = Table::new(&[
+        "rows", "dim", "bags", "pool", "fp32 GB/s", "int8 GB/s", "fp32 Mlookups/s",
+        "int8 Mlookups/s", "speedup",
+    ]);
+
+    for &(rows, dim, bags, pool) in
+        &[(1_000_000usize, 64usize, 64usize, 32usize), (1_000_000, 128, 64, 32), (4_000_000, 64, 64, 40), (1_000_000, 64, 256, 32)]
+    {
+        let t = EmbeddingTable::random(rows, dim, 42);
+        let q = QuantizedTable::from_f32(&t);
+        let batch = t.synth_batch(bags, pool, 1.05, &mut rng);
+        let mut out = vec![0f32; bags * dim];
+
+        let m_f = bench_cfg("fp32", 200, 8, &mut || {
+            t.sparse_lengths_sum(&batch, &mut out);
+            keep(out[0]);
+        });
+        let m_q = bench_cfg("int8", 200, 8, &mut || {
+            q.sparse_lengths_sum(&batch, &mut out);
+            keep(out[0]);
+        });
+
+        let lookups = (bags * pool) as f64;
+        let bytes_f = lookups * (dim * 4) as f64;
+        let bytes_q = lookups * q.row_bytes() as f64;
+        table.row(&[
+            rows.to_string(),
+            dim.to_string(),
+            bags.to_string(),
+            pool.to_string(),
+            format!("{:.2}", m_f.gbps(bytes_f)),
+            format!("{:.2}", m_q.gbps(bytes_q)),
+            format!("{:.1}", lookups / m_f.median_ns * 1e3),
+            format!("{:.1}", lookups / m_q.median_ns * 1e3),
+            format!("{:.2}", m_f.median_ns / m_q.median_ns),
+        ]);
+    }
+    table.print();
+    println!("\n(speedup ~4x would be the pure-bandwidth bound for int8 rows)");
+}

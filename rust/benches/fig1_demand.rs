@@ -1,0 +1,26 @@
+//! Fig 1 regeneration: server demand for DL inference over time, by
+//! service class.
+
+use dcinfer::fleet::{demand_series, demand::default_services};
+
+fn main() {
+    println!("== Fig 1: server demand for DL inference across data centers ==\n");
+    let services = default_services();
+    let series = demand_series(&services, 9);
+    println!("{:<8} {:>14} {:>14} {:>14} {:>10}", "quarter", "recommend", "cv", "language", "total");
+    for p in &series {
+        println!(
+            "{:<8} {:>14.1} {:>14.1} {:>14.1} {:>10.1}",
+            format!("Q{}", p.quarter),
+            p.per_service[0],
+            p.per_service[1],
+            p.per_service[2],
+            p.total
+        );
+    }
+    let growth = series[8].total / series[0].total;
+    println!("\ntotal growth over 8 quarters: {growth:.2}x");
+    assert!((2.2..4.5).contains(&growth), "Fig-1 growth shape");
+    assert!(series.iter().all(|p| p.per_service[0] / p.total > 0.5));
+    println!("paper-shape checks passed (≈3x growth, recommendation-dominated)");
+}

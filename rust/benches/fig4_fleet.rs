@@ -1,0 +1,36 @@
+//! Fig 4 regeneration: operator time breakdown over the simulated
+//! fleet, plus the §3.1 roofline-accuracy ledger and the throughput of
+//! the telemetry pipeline itself.
+
+use dcinfer::fleet::{simulate_fleet, FleetConfig};
+use dcinfer::models::representative_zoo;
+use dcinfer::perfmodel::DeviceSpec;
+use dcinfer::report;
+use dcinfer::util::bench::bench;
+
+fn main() {
+    println!("== Fig 4: time spent in Caffe2-bucket operators (simulated fleet) ==\n");
+    let zoo = representative_zoo();
+    let dev = DeviceSpec::xeon_fp32();
+    let agent = simulate_fleet(&zoo, &dev, &FleetConfig { requests: 4000, ..Default::default() });
+    let b = agent.breakdown();
+    report::print_breakdown(&b);
+
+    // paper-shape assertions
+    let fc = b.share("FC");
+    assert!(fc >= b.buckets.values().map(|v| v.1).fold(0.0, f64::max) - 1e-12, "FC dominates");
+    assert!(b.share("Embedding") > 0.05, "embeddings visible");
+    let manip = b.share("TensorManip") + b.share("Elementwise");
+    assert!(manip > 0.05, "tensor manipulation visible: {manip}");
+    println!("\npaper-shape checks passed (FC > all; embeddings + tensor manip significant)");
+
+    println!("\nroofline ledger:");
+    for (bucket, ineff) in agent.inefficiency_by_bucket() {
+        println!("  {bucket:<12} {ineff:.2}x");
+    }
+
+    let m = bench("simulate 200 requests", || {
+        let _ = simulate_fleet(&zoo, &dev, &FleetConfig { requests: 200, ..Default::default() });
+    });
+    dcinfer::util::bench::report(&m);
+}

@@ -1,0 +1,43 @@
+//! Table 1 regeneration: the characterization engine over the zoo, with
+//! paper-band assertions per row family.
+
+use dcinfer::models::{representative_zoo, Category};
+use dcinfer::perfmodel::characterize_zoo;
+use dcinfer::perfmodel::characterize::recsys_subrows;
+use dcinfer::report;
+
+fn main() {
+    println!("== Table 1: resource requirements of representative workloads ==\n");
+    let models: Vec<_> = representative_zoo().into_iter().map(|e| e.desc).collect();
+    let rows = characterize_zoo(&models);
+    report::print_table1(&rows);
+
+    // recsys FC/embedding split rows (the paper's first two rows)
+    println!("\nrecommendation sub-rows:");
+    let rec = models.iter().find(|m| m.name == "recsys_prod_b64").unwrap();
+    let (fc, emb) = recsys_subrows(rec);
+    println!(
+        "  FCs:        {} params, intensity {:.0}",
+        report::fmt_count(fc.params),
+        fc.intensity_w_avg
+    );
+    println!(
+        "  Embeddings: {} params, intensity {:.1}",
+        report::fmt_count(emb.params),
+        emb.intensity_w_avg
+    );
+
+    // Table-1 band checks
+    assert!((1e6..1e7).contains(&(fc.params as f64)), "FC params 1-10M");
+    assert!(emb.params > 10_000_000_000, "embeddings >10B");
+    assert!((20.0..200.0).contains(&fc.intensity_w_avg), "FC intensity 20-200");
+    assert!((0.9..2.0).contains(&emb.intensity_w_avg), "embedding intensity 1-2");
+    for r in &rows {
+        if r.category == Category::Language {
+            assert!((2.0..80.0).contains(&r.intensity_w_avg), "{}: {}", r.model, r.intensity_w_avg);
+        }
+    }
+    let r50 = rows.iter().find(|r| r.model == "resnet50").unwrap();
+    assert!((250.0..360.0).contains(&r50.intensity_w_avg));
+    println!("\npaper-band checks passed");
+}

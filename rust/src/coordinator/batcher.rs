@@ -1,0 +1,201 @@
+//! Deadline-aware dynamic batcher (§4: dis-aggregation "can also allow
+//! to pool requests from many front-end servers, increasing the batch
+//! size and hence compute efficiency").
+//!
+//! The AOT artifacts come in fixed batch variants (b1/b4/b16/b64); the
+//! batcher accumulates requests until either the largest variant fills
+//! or the oldest request's slack forces a flush, then picks the
+//! smallest variant that covers the batch (padding the tail — padded
+//! rows are computed and discarded, which is still far cheaper than
+//! running singles, exactly the paper's batching-efficiency argument).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::request::InferRequest;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// available artifact batch sizes, ascending (e.g. [1, 4, 16, 64])
+    pub variants: Vec<usize>,
+    /// flush when the oldest request has waited this long (us)
+    pub max_wait_us: f64,
+    /// reserve this much of the deadline for execution + return (us)
+    pub exec_reserve_us: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { variants: vec![1, 4, 16, 64], max_wait_us: 2_000.0, exec_reserve_us: 10_000.0 }
+    }
+}
+
+impl BatchPolicy {
+    /// Smallest variant covering `n` requests (or the largest variant).
+    pub fn variant_for(&self, n: usize) -> usize {
+        for &v in &self.variants {
+            if v >= n {
+                return v;
+            }
+        }
+        *self.variants.last().unwrap()
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.variants.last().unwrap()
+    }
+}
+
+/// A batch the tier will execute.
+#[derive(Debug)]
+pub struct FormedBatch {
+    pub requests: Vec<InferRequest>,
+    /// the artifact batch size chosen (>= requests.len())
+    pub variant: usize,
+}
+
+impl FormedBatch {
+    pub fn fill(&self) -> f64 {
+        self.requests.len() as f64 / self.variant as f64
+    }
+}
+
+/// Accumulates requests and decides when to flush.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    pub policy: BatchPolicy,
+    queue: VecDeque<InferRequest>,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> DynamicBatcher {
+        DynamicBatcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: InferRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should we flush now? True when the max variant fills, the oldest
+    /// request hit max_wait, or a deadline is at risk.
+    pub fn should_flush(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch() {
+            return true;
+        }
+        match self.queue.front() {
+            None => false,
+            Some(oldest) => {
+                let waited = now.duration_since(oldest.arrival).as_secs_f64() * 1e6;
+                if waited >= self.policy.max_wait_us {
+                    return true;
+                }
+                let budget = oldest.deadline_ms * 1e3;
+                waited + self.policy.exec_reserve_us >= budget
+            }
+        }
+    }
+
+    /// Form a batch of at most max_batch requests.
+    pub fn form(&mut self) -> Option<FormedBatch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let take = self.queue.len().min(self.policy.max_batch());
+        let requests: Vec<InferRequest> = self.queue.drain(..take).collect();
+        let variant = self.policy.variant_for(requests.len());
+        Some(FormedBatch { requests, variant })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn req(id: u64, deadline_ms: f64) -> InferRequest {
+        InferRequest {
+            id,
+            dense: vec![0.0; 4],
+            indices: vec![0; 8],
+            arrival: Instant::now(),
+            deadline_ms,
+        }
+    }
+
+    #[test]
+    fn variant_selection_rounds_up() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.variant_for(1), 1);
+        assert_eq!(p.variant_for(2), 4);
+        assert_eq!(p.variant_for(4), 4);
+        assert_eq!(p.variant_for(5), 16);
+        assert_eq!(p.variant_for(17), 64);
+        assert_eq!(p.variant_for(1000), 64);
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            variants: vec![1, 2],
+            max_wait_us: 1e9,
+            exec_reserve_us: 0.0,
+        });
+        b.push(req(1, 1e9));
+        assert!(!b.should_flush(Instant::now()));
+        b.push(req(2, 1e9));
+        assert!(b.should_flush(Instant::now()));
+        let f = b.form().unwrap();
+        assert_eq!(f.requests.len(), 2);
+        assert_eq!(f.variant, 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_max_wait() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            variants: vec![1, 64],
+            max_wait_us: 100.0,
+            exec_reserve_us: 0.0,
+        });
+        b.push(req(1, 1e9));
+        assert!(!b.should_flush(Instant::now()));
+        std::thread::sleep(Duration::from_micros(300));
+        assert!(b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn flushes_when_deadline_at_risk() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            variants: vec![1, 64],
+            max_wait_us: 1e9,
+            exec_reserve_us: 9_500.0,
+        });
+        b.push(req(1, 10.0)); // 10 ms deadline, 9.5 ms reserved
+        std::thread::sleep(Duration::from_micros(700));
+        assert!(b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn forms_fifo_batches() {
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        for i in 0..70 {
+            b.push(req(i, 100.0));
+        }
+        let f1 = b.form().unwrap();
+        assert_eq!(f1.requests.len(), 64);
+        assert_eq!(f1.requests[0].id, 0);
+        let f2 = b.form().unwrap();
+        assert_eq!(f2.requests.len(), 6);
+        assert_eq!(f2.variant, 16);
+        assert!((f2.fill() - 6.0 / 16.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,96 @@
+//! §4 "Service Dis-aggregation": the bandwidth a dis-aggregated
+//! inference tier needs at its boundary.
+//!
+//! "A hypothetical accelerator with 100 TOP/s compute throughput would
+//! require a few GB/s PCIe and/or network bandwidth for the DL models
+//! listed in Table 1" — this module computes exactly that: for a model
+//! and an accelerator, the request rate the accelerator sustains and
+//! the resulting ingress/egress bytes.
+
+use crate::models::{ModelDesc, OpClass};
+use crate::perfmodel::{roofline_model, DeviceSpec};
+
+/// Tier-boundary traffic report for one model on one device.
+#[derive(Debug, Clone)]
+pub struct DisaggReport {
+    pub model: String,
+    /// sustained inferences/s at the device roofline
+    pub inferences_per_s: f64,
+    /// request ingress (activations/ids in), bytes/s
+    pub ingress_bytes_s: f64,
+    /// response egress, bytes/s
+    pub egress_bytes_s: f64,
+}
+
+impl DisaggReport {
+    pub fn total_gbps(&self) -> f64 {
+        (self.ingress_bytes_s + self.egress_bytes_s) / 1e9
+    }
+}
+
+/// Per-inference wire sizes: the model input (first layer activations
+/// or embedding ids) in, the final output out.
+fn wire_bytes(m: &ModelDesc) -> (f64, f64) {
+    let mut ingress = 0f64;
+    // inputs: first dense activation + all embedding index lists
+    if let Some(first) = m.layers.first() {
+        ingress += first.act_in_elems as f64 * 4.0;
+    }
+    for l in &m.layers {
+        if l.class == OpClass::Embedding {
+            ingress += l.act_in_elems as f64 * 4.0; // the ids
+        }
+    }
+    let egress = m.layers.last().map(|l| l.act_out_elems as f64 * 4.0).unwrap_or(0.0);
+    (ingress, egress)
+}
+
+/// Compute the report for `model` on `dev`.
+pub fn disagg_bandwidth(model: &ModelDesc, dev: &DeviceSpec) -> DisaggReport {
+    let r = roofline_model(model, dev);
+    let per_inf_s = r.total_time_s;
+    let rate = 1.0 / per_inf_s.max(1e-30);
+    let (ing, egr) = wire_bytes(model);
+    DisaggReport {
+        model: model.name.clone(),
+        inferences_per_s: rate,
+        ingress_bytes_s: ing * rate,
+        egress_bytes_s: egr * rate,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{recsys, resnet50, RecsysScale};
+
+    #[test]
+    fn cv_tier_needs_a_few_gbps_at_most() {
+        // the paper: a 100 TOP/s accelerator needs "a few GB/s" for the
+        // Table-1 models (unless decompression happens off-tier)
+        let dev = DeviceSpec::fig3(32.0, 10.0);
+        let r = disagg_bandwidth(&resnet50(1), &dev);
+        assert!(r.total_gbps() > 0.1, "{}", r.total_gbps());
+        assert!(r.total_gbps() < 20.0, "{}", r.total_gbps());
+    }
+
+    #[test]
+    fn recsys_wire_traffic_is_ids_dominated() {
+        let dev = DeviceSpec::fig3(32.0, 10.0);
+        let m = recsys(RecsysScale::Production, 16);
+        let r = disagg_bandwidth(&m, &dev);
+        // egress is 16 probabilities; ingress carries 48*40*16 ids
+        assert!(r.ingress_bytes_s > 100.0 * r.egress_bytes_s);
+    }
+
+    #[test]
+    fn faster_device_needs_more_bandwidth() {
+        let slow = DeviceSpec::fig3(8.0, 1.0);
+        let fast = DeviceSpec::fig3(64.0, 10.0);
+        let m = resnet50(1);
+        let a = disagg_bandwidth(&m, &slow);
+        let b = disagg_bandwidth(&m, &fast);
+        assert!(b.inferences_per_s >= a.inferences_per_s);
+        assert!(b.total_gbps() >= a.total_gbps());
+    }
+}

@@ -1,0 +1,136 @@
+//! Tier-level serving metrics: latency percentiles, throughput, batch
+//! fill — the numbers the E2E serving experiment reports.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Samples;
+
+/// Shared metrics sink (one per tier).
+#[derive(Debug)]
+pub struct TierMetrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    queue_us: Samples,
+    exec_us: Samples,
+    total_us: Samples,
+    batch_sizes: Samples,
+    fill: Samples,
+    served: u64,
+    deadline_misses: u64,
+    batches: u64,
+}
+
+/// A snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub served: u64,
+    pub batches: u64,
+    pub deadline_misses: u64,
+    pub qps: f64,
+    pub queue_p50_us: f64,
+    pub queue_p99_us: f64,
+    pub exec_p50_us: f64,
+    pub exec_p99_us: f64,
+    pub total_p50_us: f64,
+    pub total_p99_us: f64,
+    pub mean_batch: f64,
+    pub mean_fill: f64,
+}
+
+impl Default for TierMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TierMetrics {
+    pub fn new() -> TierMetrics {
+        TierMetrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
+    }
+
+    /// Record one served request.
+    pub fn record_request(&self, queue_us: f64, exec_us: f64, deadline_ms: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue_us.push(queue_us);
+        g.exec_us.push(exec_us);
+        g.total_us.push(queue_us + exec_us);
+        g.served += 1;
+        if queue_us + exec_us > deadline_ms * 1e3 {
+            g.deadline_misses += 1;
+        }
+    }
+
+    /// Record one executed batch.
+    pub fn record_batch(&self, requests: usize, variant: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_sizes.push(requests as f64);
+        g.fill.push(requests as f64 / variant as f64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut g = self.inner.lock().unwrap();
+        let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            served: g.served,
+            batches: g.batches,
+            deadline_misses: g.deadline_misses,
+            qps: g.served as f64 / elapsed,
+            queue_p50_us: g.queue_us.p50(),
+            queue_p99_us: g.queue_us.p99(),
+            exec_p50_us: g.exec_us.p50(),
+            exec_p99_us: g.exec_us.p99(),
+            total_p50_us: g.total_us.p50(),
+            total_p99_us: g.total_us.p99(),
+            mean_batch: g.batch_sizes.mean(),
+            mean_fill: g.fill.mean(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn print(&self) {
+        println!(
+            "served {} requests in {} batches (mean batch {:.1}, fill {:.0}%), {} deadline misses",
+            self.served,
+            self.batches,
+            self.mean_batch,
+            self.mean_fill * 100.0,
+            self.deadline_misses
+        );
+        println!(
+            "latency us: queue p50/p99 {:.0}/{:.0}  exec p50/p99 {:.0}/{:.0}  total p50/p99 {:.0}/{:.0}",
+            self.queue_p50_us,
+            self.queue_p99_us,
+            self.exec_p50_us,
+            self.exec_p99_us,
+            self.total_p50_us,
+            self.total_p99_us
+        );
+        println!("throughput: {:.0} req/s", self.qps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = TierMetrics::new();
+        m.record_request(100.0, 500.0, 50.0);
+        m.record_request(200.0, 500.0, 0.0001); // deadline miss
+        m.record_batch(2, 4);
+        let s = m.snapshot();
+        assert_eq!(s.served, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.deadline_misses, 1);
+        assert!((s.mean_fill - 0.5).abs() < 1e-12);
+        assert!(s.total_p99_us >= s.total_p50_us);
+    }
+}

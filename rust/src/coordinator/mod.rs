@@ -1,0 +1,27 @@
+//! L3 coordinator: the serving tier (§3, §4).
+//!
+//! The paper's serving story — dis-aggregated inference tiers pooling
+//! requests from many front-end servers to raise batch sizes and
+//! compute efficiency (§4 "Service Dis-aggregation") under 10s-of-ms
+//! latency constraints (Table 1) — implemented as:
+//!
+//! - [`router`]: front-end request routing to model queues.
+//! - [`batcher`]: deadline-aware dynamic batching that picks the AOT
+//!   batch variant (b1/b4/b16/b64) for each formed batch.
+//! - [`tier`]: the inference tier: batcher threads + the PJRT executor
+//!   pool, with end-to-end latency metrics.
+//! - [`disagg`]: the §4 bandwidth model for the tier boundary.
+
+pub mod batcher;
+pub mod disagg;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod tier;
+
+pub use batcher::{BatchPolicy, DynamicBatcher, FormedBatch};
+pub use disagg::{disagg_bandwidth, DisaggReport};
+pub use metrics::TierMetrics;
+pub use request::{InferRequest, InferResponse};
+pub use router::Router;
+pub use tier::{InferenceTier, TierConfig};

@@ -1,0 +1,64 @@
+//! Request/response types crossing the tier boundary.
+
+use std::time::Instant;
+
+/// One recommendation inference request (a single user/candidate row of
+/// the Fig-2 model): dense features + per-table pooled sparse ids.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub id: u64,
+    /// dense features, length = dense_dim
+    pub dense: Vec<f32>,
+    /// sparse ids, length = n_tables * pool (row-major [table][pool])
+    pub indices: Vec<i32>,
+    pub arrival: Instant,
+    /// latency budget (Table 1: 10s of ms)
+    pub deadline_ms: f64,
+}
+
+impl InferRequest {
+    /// Serialized size crossing the network to a dis-aggregated tier
+    /// (§4): dense f32s + sparse i32 ids + a small header.
+    pub fn wire_bytes(&self) -> usize {
+        self.dense.len() * 4 + self.indices.len() * 4 + 16
+    }
+}
+
+/// The tier's answer.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    /// predicted event probability
+    pub prob: f32,
+    /// time spent queued before batch formation (us)
+    pub queue_us: f64,
+    /// device execution time of the carrying batch (us)
+    pub exec_us: f64,
+    /// size of the batch this request rode in
+    pub batch_size: usize,
+    /// which artifact variant executed it
+    pub variant: String,
+}
+
+impl InferResponse {
+    pub fn total_us(&self) -> f64 {
+        self.queue_us + self.exec_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_counts_payload() {
+        let r = InferRequest {
+            id: 1,
+            dense: vec![0.0; 32],
+            indices: vec![0; 8 * 32],
+            arrival: Instant::now(),
+            deadline_ms: 50.0,
+        };
+        assert_eq!(r.wire_bytes(), 32 * 4 + 256 * 4 + 16);
+    }
+}

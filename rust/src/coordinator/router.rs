@@ -1,0 +1,97 @@
+//! Front-end router: assigns incoming requests to model queues and
+//! executors. Supports round-robin and least-outstanding-work policies
+//! (the pooling half of §4's dis-aggregation story).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Executor selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+/// Tracks per-executor outstanding work and picks targets.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    next: AtomicUsize,
+    outstanding: Vec<AtomicUsize>,
+}
+
+impl Router {
+    pub fn new(n_executors: usize, policy: RoutePolicy) -> Router {
+        Router {
+            policy,
+            next: AtomicUsize::new(0),
+            outstanding: (0..n_executors).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Pick an executor for a batch and mark the work outstanding.
+    pub fn dispatch(&self, work_units: usize) -> usize {
+        let id = match self.policy {
+            RoutePolicy::RoundRobin => self.next.fetch_add(1, Ordering::Relaxed) % self.n(),
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_load = usize::MAX;
+                for (i, o) in self.outstanding.iter().enumerate() {
+                    let l = o.load(Ordering::Relaxed);
+                    if l < best_load {
+                        best_load = l;
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.outstanding[id].fetch_add(work_units, Ordering::Relaxed);
+        id
+    }
+
+    /// Mark work complete.
+    pub fn complete(&self, executor: usize, work_units: usize) {
+        self.outstanding[executor].fetch_sub(work_units, Ordering::Relaxed);
+    }
+
+    pub fn load(&self, executor: usize) -> usize {
+        self.outstanding[executor].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let r = Router::new(3, RoutePolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| r.dispatch(1)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let r = Router::new(2, RoutePolicy::LeastLoaded);
+        let a = r.dispatch(10); // exec a now loaded 10
+        let b = r.dispatch(1); // must go to the other
+        assert_ne!(a, b);
+        // completing a's work steers traffic back
+        r.complete(a, 10);
+        let c = r.dispatch(1);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn load_accounting() {
+        let r = Router::new(1, RoutePolicy::RoundRobin);
+        r.dispatch(5);
+        assert_eq!(r.load(0), 5);
+        r.complete(0, 5);
+        assert_eq!(r.load(0), 0);
+    }
+}

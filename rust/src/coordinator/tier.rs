@@ -1,0 +1,278 @@
+//! The inference tier: front-end submission channel -> dynamic batcher
+//! -> executor pool (PJRT device threads) -> response delivery, with
+//! end-to-end metrics. Python never appears on this path.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{ExecutorPool, HostTensor, Manifest};
+
+use super::batcher::{BatchPolicy, DynamicBatcher, FormedBatch};
+use super::metrics::TierMetrics;
+use super::request::{InferRequest, InferResponse};
+use super::router::{RoutePolicy, Router};
+
+/// Tier configuration.
+#[derive(Debug, Clone)]
+pub struct TierConfig {
+    pub artifacts_dir: PathBuf,
+    /// artifact family, e.g. "recsys_fp32" (variants: `<prefix>_b<N>`)
+    pub model_prefix: String,
+    pub executors: usize,
+    pub max_wait_us: f64,
+    pub route: RoutePolicy,
+}
+
+impl Default for TierConfig {
+    fn default() -> Self {
+        TierConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model_prefix: "recsys_fp32".to_string(),
+            executors: 2,
+            max_wait_us: 2_000.0,
+            route: RoutePolicy::LeastLoaded,
+        }
+    }
+}
+
+struct Submission {
+    req: InferRequest,
+    resp: Sender<InferResponse>,
+}
+
+/// A running tier.
+pub struct InferenceTier {
+    tx: Sender<Submission>,
+    pub metrics: Arc<TierMetrics>,
+    pub dense_dim: usize,
+    pub n_tables: usize,
+    pub pool_size: usize,
+    pub rows_per_table: usize,
+    shutdown: Arc<AtomicBool>,
+    batcher_handle: Option<JoinHandle<()>>,
+    executor_pool: Option<Arc<ExecutorPool>>,
+}
+
+impl InferenceTier {
+    /// Load artifacts, spawn executors + the batcher loop.
+    pub fn start(cfg: TierConfig) -> Result<InferenceTier> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        // discover batch variants of the model family
+        let mut variants: Vec<(usize, String)> = manifest
+            .artifacts
+            .values()
+            .filter(|a| a.name.starts_with(&cfg.model_prefix))
+            .map(|a| (a.batch, a.name.clone()))
+            .collect();
+        variants.sort();
+        anyhow::ensure!(!variants.is_empty(), "no artifacts match prefix {}", cfg.model_prefix);
+
+        let model_cfg = &manifest.models.get("recsys");
+        let dense_dim = model_cfg.get("dense_dim").as_usize().context("dense_dim")?;
+        let n_tables = model_cfg.get("n_tables").as_usize().context("n_tables")?;
+        let pool_size = model_cfg.get("pool").as_usize().context("pool")?;
+        let rows_per_table =
+            model_cfg.get("rows_per_table").as_usize().context("rows_per_table")?;
+
+        let artifact_names: Vec<String> = variants.iter().map(|(_, n)| n.clone()).collect();
+        let pool =
+            Arc::new(ExecutorPool::new(cfg.executors, cfg.artifacts_dir.clone(), artifact_names)?);
+        let router = Arc::new(Router::new(cfg.executors, cfg.route));
+        let metrics = Arc::new(TierMetrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let (tx, rx) = channel::<Submission>();
+        let policy = BatchPolicy {
+            variants: variants.iter().map(|(b, _)| *b).collect(),
+            max_wait_us: cfg.max_wait_us,
+            exec_reserve_us: 10_000.0,
+        };
+        let batcher_handle = {
+            let pool = pool.clone();
+            let router = router.clone();
+            let metrics = metrics.clone();
+            let shutdown = shutdown.clone();
+            let variant_names: Vec<(usize, String)> = variants.clone();
+            std::thread::Builder::new()
+                .name("tier-batcher".into())
+                .spawn(move || {
+                    batcher_main(
+                        rx,
+                        policy,
+                        variant_names,
+                        pool,
+                        router,
+                        metrics,
+                        shutdown,
+                        dense_dim,
+                        n_tables,
+                        pool_size,
+                    )
+                })
+                .context("spawning batcher")?
+        };
+
+        Ok(InferenceTier {
+            tx,
+            metrics,
+            dense_dim,
+            n_tables,
+            pool_size,
+            rows_per_table,
+            shutdown,
+            batcher_handle: Some(batcher_handle),
+            executor_pool: Some(pool),
+        })
+    }
+
+    /// Submit a request; returns the response channel.
+    pub fn submit(&self, req: InferRequest) -> Result<Receiver<InferResponse>> {
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .send(Submission { req, resp: resp_tx })
+            .map_err(|_| anyhow::anyhow!("tier is shut down"))?;
+        Ok(resp_rx)
+    }
+
+    /// Stop the batcher and executors (drains the queue first).
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(pool) = self.executor_pool.take() {
+            if let Ok(pool) = Arc::try_unwrap(pool) {
+                pool.shutdown();
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn batcher_main(
+    rx: Receiver<Submission>,
+    policy: BatchPolicy,
+    variants: Vec<(usize, String)>,
+    pool: Arc<ExecutorPool>,
+    router: Arc<Router>,
+    metrics: Arc<TierMetrics>,
+    shutdown: Arc<AtomicBool>,
+    dense_dim: usize,
+    n_tables: usize,
+    pool_size: usize,
+) {
+    let mut batcher = DynamicBatcher::new(policy);
+    let mut pending: Vec<Sender<InferResponse>> = Vec::new();
+    loop {
+        // pull submissions for up to 200us
+        match rx.recv_timeout(Duration::from_micros(200)) {
+            Ok(sub) => {
+                batcher.push(sub.req);
+                pending.push(sub.resp);
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                if batcher.is_empty() {
+                    break;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+        }
+        let draining = shutdown.load(Ordering::SeqCst);
+        while batcher.should_flush(Instant::now()) || (draining && !batcher.is_empty()) {
+            let Some(batch) = batcher.form() else { break };
+            let n = batch.requests.len();
+            let responders: Vec<Sender<InferResponse>> = pending.drain(..n).collect();
+            dispatch_batch(
+                batch, responders, &variants, &pool, &router, &metrics, dense_dim, n_tables,
+                pool_size,
+            );
+        }
+        if draining && batcher.is_empty() && pending.is_empty() {
+            // drain any last submissions without blocking
+            match rx.try_recv() {
+                Ok(sub) => {
+                    batcher.push(sub.req);
+                    pending.push(sub.resp);
+                }
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dispatch_batch(
+    batch: FormedBatch,
+    responders: Vec<Sender<InferResponse>>,
+    variants: &[(usize, String)],
+    pool: &Arc<ExecutorPool>,
+    router: &Arc<Router>,
+    metrics: &Arc<TierMetrics>,
+    dense_dim: usize,
+    n_tables: usize,
+    pool_size: usize,
+) {
+    let variant = batch.variant;
+    let name = variants
+        .iter()
+        .find(|(b, _)| *b == variant)
+        .map(|(_, n)| n.clone())
+        .expect("variant has an artifact");
+    let n = batch.requests.len();
+    metrics.record_batch(n, variant);
+
+    // assemble padded inputs: [variant, dense_dim] + [variant, T, P]
+    let mut dense = vec![0f32; variant * dense_dim];
+    let mut indices = vec![0i32; variant * n_tables * pool_size];
+    for (i, req) in batch.requests.iter().enumerate() {
+        dense[i * dense_dim..(i + 1) * dense_dim].copy_from_slice(&req.dense);
+        let stride = n_tables * pool_size;
+        indices[i * stride..(i + 1) * stride].copy_from_slice(&req.indices);
+    }
+    // pad rows repeat request 0 (already zero-filled is fine too: ids 0)
+    let inputs = vec![
+        HostTensor::from_f32(&[variant, dense_dim], &dense),
+        HostTensor::from_i32(&[variant, n_tables, pool_size], &indices),
+    ];
+
+    let exec_id = router.dispatch(variant);
+    let executor = pool.executors()[exec_id].clone();
+    let router = router.clone();
+    let metrics = metrics.clone();
+    let formed_at = Instant::now();
+    // completion runs off the batcher thread so batching keeps flowing
+    std::thread::spawn(move || {
+        let result = executor.run(&name, inputs);
+        router.complete(exec_id, variant);
+        match result {
+            Ok(resp) => {
+                let probs = resp.outputs[0].as_f32().unwrap_or_default();
+                for (i, (req, tx)) in
+                    batch.requests.iter().zip(responders.into_iter()).enumerate()
+                {
+                    let queue_us =
+                        formed_at.duration_since(req.arrival).as_secs_f64() * 1e6;
+                    metrics.record_request(queue_us, resp.exec_us, req.deadline_ms);
+                    let _ = tx.send(InferResponse {
+                        id: req.id,
+                        prob: probs.get(i).copied().unwrap_or(f32::NAN),
+                        queue_us,
+                        exec_us: resp.exec_us,
+                        batch_size: n,
+                        variant: name.clone(),
+                    });
+                }
+            }
+            Err(e) => {
+                eprintln!("batch execution failed: {e:#}");
+                // responders drop -> submitters see a closed channel
+            }
+        }
+    });
+}

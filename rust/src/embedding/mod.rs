@@ -1,0 +1,60 @@
+//! SparseLengthsSum substrate (§2.1.1): the CPU implementation of the
+//! pooled embedding lookup that dominates recommendation inference,
+//! plus the int8 row-wise quantized variant (per-entry quantization,
+//! §3.2.2 technique 1) used when bandwidth is the bottleneck.
+//!
+//! The access pattern is the paper's: mostly random rows, full row read
+//! per access, no temporal locality — performance is pure memory
+//! bandwidth, which the bench `embedding_bandwidth` measures.
+
+pub mod quantized;
+pub mod table;
+
+pub use quantized::QuantizedTable;
+pub use table::EmbeddingTable;
+
+/// A batch of pooled lookups: `indices[bag]` are the rows summed into
+/// output bag `bag` (variable pooling — the "lengths" of
+/// SparseLengthsSum).
+#[derive(Debug, Clone)]
+pub struct LookupBatch {
+    pub indices: Vec<u32>,
+    pub lengths: Vec<u32>,
+}
+
+impl LookupBatch {
+    /// Fixed pooling factor constructor.
+    pub fn fixed(indices: Vec<u32>, pool: usize) -> LookupBatch {
+        assert_eq!(indices.len() % pool, 0);
+        let bags = indices.len() / pool;
+        LookupBatch { indices, lengths: vec![pool as u32; bags] }
+    }
+
+    pub fn bags(&self) -> usize {
+        self.lengths.len()
+    }
+
+    /// Total bytes of table data a lookup streams (the bandwidth cost).
+    pub fn bytes_touched(&self, row_bytes: usize) -> usize {
+        self.indices.len() * row_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_pooling() {
+        let b = LookupBatch::fixed(vec![1, 2, 3, 4, 5, 6], 3);
+        assert_eq!(b.bags(), 2);
+        assert_eq!(b.lengths, vec![3, 3]);
+        assert_eq!(b.bytes_touched(256), 6 * 256);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_fixed_pool_panics() {
+        LookupBatch::fixed(vec![1, 2, 3], 2);
+    }
+}

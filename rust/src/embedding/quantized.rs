@@ -1,0 +1,136 @@
+//! int8 row-wise quantized embedding table: per-entry (per-row)
+//! scale/bias appended to each row — §3.2.2's "per-entry quantization
+//! in embedding tables" — cutting table bandwidth ~4x, which is the
+//! whole cost of the dominant operator.
+
+use super::{table::EmbeddingTable, LookupBatch};
+
+/// `[rows x dim]` int8 table; each row stores (scale, bias) fp32 pairs.
+#[derive(Debug, Clone)]
+pub struct QuantizedTable {
+    pub rows: usize,
+    pub dim: usize,
+    data: Vec<i8>,
+    scale_bias: Vec<(f32, f32)>,
+}
+
+impl QuantizedTable {
+    /// Row-wise asymmetric quantization of an fp32 table.
+    pub fn from_f32(t: &EmbeddingTable) -> QuantizedTable {
+        let mut data = vec![0i8; t.rows * t.dim];
+        let mut scale_bias = Vec::with_capacity(t.rows);
+        for r in 0..t.rows {
+            let row = t.row(r);
+            let lo = row.iter().fold(f32::INFINITY, |a, &v| a.min(v));
+            let hi = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let scale = ((hi - lo) / 255.0).max(1e-12);
+            let bias = lo;
+            for (d, &v) in data[r * t.dim..(r + 1) * t.dim].iter_mut().zip(row) {
+                *d = (((v - bias) / scale).round() - 128.0).clamp(-128.0, 127.0) as i8;
+            }
+            scale_bias.push((scale, bias));
+        }
+        QuantizedTable { rows: t.rows, dim: t.dim, data, scale_bias }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[i8], f32, f32) {
+        let (s, b) = self.scale_bias[r];
+        (&self.data[r * self.dim..(r + 1) * self.dim], s, b)
+    }
+
+    /// Bytes per row including the scale/bias entry.
+    pub fn row_bytes(&self) -> usize {
+        self.dim + 8
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.rows * self.row_bytes()
+    }
+
+    /// SparseLengthsSum with on-the-fly dequantization.
+    pub fn sparse_lengths_sum(&self, batch: &LookupBatch, out: &mut [f32]) {
+        assert_eq!(out.len(), batch.bags() * self.dim);
+        out.fill(0.0);
+        let mut cursor = 0usize;
+        // second accumulator breaks the FMA dependency chain across the
+        // pooled rows (two independent streams per bag)
+        let mut alt = vec![0f32; self.dim];
+        for (bag, &len) in batch.lengths.iter().enumerate() {
+            let dst = &mut out[bag * self.dim..(bag + 1) * self.dim];
+            alt.fill(0.0);
+            let mut i = 0u32;
+            while i + 1 < len {
+                let (row0, s0, b0) = self.row(batch.indices[cursor] as usize);
+                let (row1, s1, b1) = self.row(batch.indices[cursor + 1] as usize);
+                cursor += 2;
+                // fold the +128 offset into a per-row constant so the
+                // inner loop is a single widen+FMA per element
+                // (vectorizes to vpmovsxbd + vcvtdq2ps + vfmadd)
+                let off0 = 128.0 * s0 + b0;
+                let off1 = 128.0 * s1 + b1;
+                for (((d, a), &q0), &q1) in
+                    dst.iter_mut().zip(alt.iter_mut()).zip(row0).zip(row1)
+                {
+                    *d += q0 as f32 * s0 + off0;
+                    *a += q1 as f32 * s1 + off1;
+                }
+                i += 2;
+            }
+            if i < len {
+                let (row, scale, bias) = self.row(batch.indices[cursor] as usize);
+                cursor += 1;
+                let off = 128.0 * scale + bias;
+                for (d, &q) in dst.iter_mut().zip(row) {
+                    *d += q as f32 * scale + off;
+                }
+            }
+            for (d, a) in dst.iter_mut().zip(&alt) {
+                *d += a;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn quantized_sls_close_to_fp32() {
+        let t = EmbeddingTable::random(500, 32, 7);
+        let q = QuantizedTable::from_f32(&t);
+        let mut rng = Pcg32::seeded(9);
+        let batch = t.synth_batch(8, 16, 1.05, &mut rng);
+        let mut out_f = vec![0f32; 8 * 32];
+        let mut out_q = vec![0f32; 8 * 32];
+        t.sparse_lengths_sum(&batch, &mut out_f);
+        q.sparse_lengths_sum(&batch, &mut out_q);
+        for (a, b) in out_f.iter().zip(&out_q) {
+            // 8-bit row-wise: error per row ~ scale/2, summed over pool
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_saving_close_to_4x() {
+        let t = EmbeddingTable::random(1000, 64, 8);
+        let q = QuantizedTable::from_f32(&t);
+        let ratio = t.bytes() as f64 / q.bytes() as f64;
+        assert!(ratio > 3.0, "{ratio}"); // 256B -> 72B per row
+    }
+
+    #[test]
+    fn roundtrip_extremes_preserved() {
+        // a row spanning [-1, 1] must keep its endpoints within a step
+        let data = vec![-1.0f32, -0.5, 0.0, 0.5, 1.0, 0.1, -0.1, 0.9];
+        let t = EmbeddingTable::new(1, 8, data.clone());
+        let q = QuantizedTable::from_f32(&t);
+        let (row, scale, bias) = q.row(0);
+        for (i, &orig) in data.iter().enumerate() {
+            let deq = (row[i] as i32 + 128) as f32 * scale + bias;
+            assert!((deq - orig).abs() <= scale, "{orig} vs {deq}");
+        }
+    }
+}

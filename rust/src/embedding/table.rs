@@ -1,0 +1,138 @@
+//! fp32 embedding table with SparseLengthsSum / WeightedSum kernels.
+
+use crate::util::rng::Pcg32;
+
+use super::LookupBatch;
+
+/// A dense `[rows x dim]` fp32 embedding table.
+#[derive(Debug, Clone)]
+pub struct EmbeddingTable {
+    pub rows: usize,
+    pub dim: usize,
+    data: Vec<f32>,
+}
+
+impl EmbeddingTable {
+    pub fn new(rows: usize, dim: usize, data: Vec<f32>) -> EmbeddingTable {
+        assert_eq!(data.len(), rows * dim);
+        EmbeddingTable { rows, dim, data }
+    }
+
+    /// Deterministic random table (N(0, 1/sqrt(dim))).
+    pub fn random(rows: usize, dim: usize, seed: u64) -> EmbeddingTable {
+        let mut rng = Pcg32::seeded(seed);
+        let std = 1.0 / (dim as f32).sqrt();
+        let data = (0..rows * dim).map(|_| rng.normal_f32(0.0, std)).collect();
+        EmbeddingTable { rows, dim, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// SparseLengthsSum: pooled sums into `out` ([bags x dim]).
+    pub fn sparse_lengths_sum(&self, batch: &LookupBatch, out: &mut [f32]) {
+        assert_eq!(out.len(), batch.bags() * self.dim);
+        out.fill(0.0);
+        let mut cursor = 0usize;
+        for (bag, &len) in batch.lengths.iter().enumerate() {
+            let dst = &mut out[bag * self.dim..(bag + 1) * self.dim];
+            for _ in 0..len {
+                let r = batch.indices[cursor] as usize;
+                cursor += 1;
+                let src = self.row(r);
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+        }
+    }
+
+    /// SparseLengthsWeightedSum.
+    pub fn sparse_lengths_weighted_sum(
+        &self,
+        batch: &LookupBatch,
+        weights: &[f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(weights.len(), batch.indices.len());
+        assert_eq!(out.len(), batch.bags() * self.dim);
+        out.fill(0.0);
+        let mut cursor = 0usize;
+        for (bag, &len) in batch.lengths.iter().enumerate() {
+            let dst = &mut out[bag * self.dim..(bag + 1) * self.dim];
+            for _ in 0..len {
+                let r = batch.indices[cursor] as usize;
+                let w = weights[cursor];
+                cursor += 1;
+                let src = self.row(r);
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += w * s;
+                }
+            }
+        }
+    }
+
+    /// Generate a zipf-skewed lookup batch (the production id
+    /// distribution: hot head, long random tail — low temporal locality
+    /// overall, §2.2).
+    pub fn synth_batch(&self, bags: usize, pool: usize, skew: f64, rng: &mut Pcg32) -> LookupBatch {
+        let indices =
+            (0..bags * pool).map(|_| rng.zipf(self.rows as u32, skew)).collect::<Vec<_>>();
+        LookupBatch::fixed(indices, pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_table() -> EmbeddingTable {
+        // rows: [0,0], [1,1], [2,2], [3,3]
+        let data = (0..4).flat_map(|r| vec![r as f32; 2]).collect();
+        EmbeddingTable::new(4, 2, data)
+    }
+
+    #[test]
+    fn sls_sums_rows() {
+        let t = small_table();
+        let batch = LookupBatch::fixed(vec![1, 2, 3, 3], 2);
+        let mut out = vec![0f32; 2 * 2];
+        t.sparse_lengths_sum(&batch, &mut out);
+        assert_eq!(out, vec![3.0, 3.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn weighted_sum() {
+        let t = small_table();
+        let batch = LookupBatch::fixed(vec![1, 2], 2);
+        let mut out = vec![0f32; 2];
+        t.sparse_lengths_weighted_sum(&batch, &[2.0, -1.0], &mut out);
+        assert_eq!(out, vec![0.0, 0.0]); // 2*1 - 1*2
+    }
+
+    #[test]
+    fn variable_lengths() {
+        let t = small_table();
+        let batch = LookupBatch { indices: vec![0, 1, 2, 3], lengths: vec![1, 3] };
+        let mut out = vec![0f32; 4];
+        t.sparse_lengths_sum(&batch, &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn synth_batch_is_skewed_and_in_range() {
+        let t = EmbeddingTable::random(10_000, 8, 1);
+        let mut rng = Pcg32::seeded(5);
+        let b = t.synth_batch(16, 32, 1.1, &mut rng);
+        assert_eq!(b.bags(), 16);
+        assert!(b.indices.iter().all(|&i| (i as usize) < t.rows));
+        let head = b.indices.iter().filter(|&&i| i < 100).count();
+        assert!(head > b.indices.len() / 10); // hot head
+    }
+}

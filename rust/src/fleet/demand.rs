@@ -1,0 +1,79 @@
+//! Fig-1 demand forecaster: server demand for DL inference across data
+//! centers over time, by service class.
+//!
+//! The paper's figure shows roughly 3x growth over ~2 years, dominated
+//! by recommendation services with CV/NMT growing underneath. We model
+//! each service class with a compound growth rate and regenerate the
+//! stacked series.
+
+/// One inference service class with a demand growth model.
+#[derive(Debug, Clone)]
+pub struct ServiceClass {
+    pub name: &'static str,
+    /// relative server demand at t=0 (arbitrary units)
+    pub base: f64,
+    /// compound quarterly growth rate
+    pub quarterly_growth: f64,
+}
+
+/// One point of the Fig-1 series.
+#[derive(Debug, Clone)]
+pub struct DemandPoint {
+    pub quarter: usize,
+    /// per-service demand, same order as the input classes
+    pub per_service: Vec<f64>,
+    pub total: f64,
+}
+
+/// The paper-era service mix.
+pub fn default_services() -> Vec<ServiceClass> {
+    vec![
+        ServiceClass { name: "ranking+recommendation", base: 55.0, quarterly_growth: 0.18 },
+        ServiceClass { name: "cv-understanding", base: 25.0, quarterly_growth: 0.12 },
+        ServiceClass { name: "language", base: 20.0, quarterly_growth: 0.10 },
+    ]
+}
+
+/// Generate `quarters` of demand.
+pub fn demand_series(services: &[ServiceClass], quarters: usize) -> Vec<DemandPoint> {
+    (0..quarters)
+        .map(|q| {
+            let per: Vec<f64> = services
+                .iter()
+                .map(|s| s.base * (1.0 + s.quarterly_growth).powi(q as i32))
+                .collect();
+            DemandPoint { quarter: q, total: per.iter().sum(), per_service: per }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demand_grows_monotonically() {
+        let s = demand_series(&default_services(), 8);
+        for w in s.windows(2) {
+            assert!(w[1].total > w[0].total);
+        }
+    }
+
+    #[test]
+    fn roughly_3x_over_two_years() {
+        // Fig 1's shape: total server demand roughly triples over ~8
+        // quarters
+        let s = demand_series(&default_services(), 9);
+        let ratio = s[8].total / s[0].total;
+        assert!((2.2..4.5).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn recommendation_dominates_throughout() {
+        let s = demand_series(&default_services(), 8);
+        for p in &s {
+            assert!(p.per_service[0] > p.per_service[1] + p.per_service[2] - p.total * 0.5);
+            assert!(p.per_service[0] / p.total > 0.5);
+        }
+    }
+}

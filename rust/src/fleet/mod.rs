@@ -1,0 +1,16 @@
+//! Fleet simulation (§3.1, Figs 1 & 4): a synthetic data-center
+//! inference mix over the model zoo, instrumented with the observer
+//! pattern, aggregated by a telemetry agent.
+//!
+//! Substitution (DESIGN.md): the paper measures its production fleet;
+//! we run the same pipeline — per-op observers -> telemetry agent ->
+//! bucket aggregation — over a synthetic request mix whose weights are
+//! calibrated so the op-time breakdown lands near Fig 4's.
+
+pub mod demand;
+pub mod sim;
+pub mod telemetry;
+
+pub use demand::{demand_series, DemandPoint, ServiceClass};
+pub use sim::{simulate_fleet, FleetConfig};
+pub use telemetry::{TelemetryAgent, TimeBreakdown};

@@ -1,0 +1,129 @@
+//! Telemetry agent: collects per-op observations host-wide, maintains
+//! the roofline-accuracy ledger, and aggregates Fig-4's time breakdown.
+
+use std::collections::BTreeMap;
+
+use crate::observers::OpRecord;
+use crate::util::stats::Running;
+
+/// Fig-4 output: share of total operator time per bucket.
+#[derive(Debug, Clone)]
+pub struct TimeBreakdown {
+    /// bucket -> (total us, share of total)
+    pub buckets: BTreeMap<&'static str, (f64, f64)>,
+    pub total_us: f64,
+}
+
+impl TimeBreakdown {
+    pub fn share(&self, bucket: &str) -> f64 {
+        self.buckets.get(bucket).map(|&(_, s)| s).unwrap_or(0.0)
+    }
+}
+
+/// Host-side collector (the paper's per-host telemetry agent).
+#[derive(Debug, Default)]
+pub struct TelemetryAgent {
+    records: Vec<OpRecord>,
+    /// per-bucket roofline accuracy (measured/predicted)
+    inefficiency: BTreeMap<&'static str, Running>,
+}
+
+impl TelemetryAgent {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn ingest(&mut self, rec: OpRecord) {
+        self.inefficiency.entry(rec.bucket).or_insert_with(Running::new).push(rec.inefficiency());
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Fig 4: operator-time breakdown by bucket.
+    pub fn breakdown(&self) -> TimeBreakdown {
+        let mut buckets: BTreeMap<&'static str, (f64, f64)> = BTreeMap::new();
+        let mut total = 0f64;
+        for r in &self.records {
+            buckets.entry(r.bucket).or_insert((0.0, 0.0)).0 += r.wall_us;
+            total += r.wall_us;
+        }
+        for v in buckets.values_mut() {
+            v.1 = v.0 / total.max(1e-12);
+        }
+        TimeBreakdown { buckets, total_us: total }
+    }
+
+    /// §3.1: per-bucket measured/predicted ratio — flags where the
+    /// roofline model is inaccurate or the implementation inefficient.
+    pub fn inefficiency_by_bucket(&self) -> BTreeMap<&'static str, f64> {
+        self.inefficiency.iter().map(|(k, v)| (*k, v.mean)).collect()
+    }
+
+    /// Estimated benefit of optimizing one bucket to its roofline:
+    /// fraction of total time recovered (the paper's optimization-
+    /// priority signal).
+    pub fn optimization_benefit(&self, bucket: &str) -> f64 {
+        let total: f64 = self.records.iter().map(|r| r.wall_us).sum();
+        let recoverable: f64 = self
+            .records
+            .iter()
+            .filter(|r| r.bucket == bucket)
+            .map(|r| (r.wall_us - r.predicted_us).max(0.0))
+            .sum();
+        recoverable / total.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(bucket: &'static str, wall: f64, pred: f64) -> OpRecord {
+        OpRecord {
+            model: "m".into(),
+            op_name: "op".into(),
+            bucket,
+            wall_us: wall,
+            flops: 100,
+            bytes: 100,
+            predicted_us: pred,
+        }
+    }
+
+    #[test]
+    fn breakdown_shares_sum_to_one() {
+        let mut t = TelemetryAgent::new();
+        t.ingest(rec("FC", 60.0, 50.0));
+        t.ingest(rec("Embedding", 30.0, 30.0));
+        t.ingest(rec("TensorManip", 10.0, 5.0));
+        let b = t.breakdown();
+        let sum: f64 = b.buckets.values().map(|&(_, s)| s).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!((b.share("FC") - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inefficiency_tracked_per_bucket() {
+        let mut t = TelemetryAgent::new();
+        t.ingest(rec("FC", 100.0, 50.0)); // 2x over roofline
+        t.ingest(rec("FC", 50.0, 50.0)); // at roofline
+        let ineff = t.inefficiency_by_bucket();
+        assert!((ineff["FC"] - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn optimization_benefit_counts_recoverable_time() {
+        let mut t = TelemetryAgent::new();
+        t.ingest(rec("FC", 100.0, 40.0)); // 60 recoverable
+        t.ingest(rec("Conv", 100.0, 100.0)); // 0 recoverable
+        assert!((t.optimization_benefit("FC") - 0.3).abs() < 1e-12);
+        assert_eq!(t.optimization_benefit("Conv"), 0.0);
+    }
+}

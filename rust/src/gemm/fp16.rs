@@ -1,0 +1,140 @@
+//! fp16-storage GEMM (Fig 6a): B is stored as IEEE binary16, halving
+//! weight traffic; compute stays fp32 (the x86 `vcvtph2ps` model).
+//!
+//! Subnormal f16 values are flushed to zero *at pack time* so the
+//! branchless widen in the inner loop is exact for every stored value.
+
+use crate::util::f16::f32_to_f16;
+
+use super::fp32::{MR, NR};
+use super::pipeline::OutputPipeline;
+
+/// B packed as f16 panels.
+#[derive(Debug, Clone)]
+pub struct PackedBF16 {
+    pub n: usize,
+    pub k: usize,
+    data: Vec<u16>,
+}
+
+/// Branchless f16->f32 for pack-sanitized values (no subnormals, no
+/// inf/nan): rebias the exponent, shift the mantissa.
+#[inline(always)]
+fn widen_fast(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let em = (h & 0x7fff) as u32;
+    // zero must stay zero: (em + bias) << 13 would fabricate an exponent
+    let nonzero = (em != 0) as u32;
+    let bits = (em << 13) + ((112 << 23) * nonzero);
+    f32::from_bits(bits | sign)
+}
+
+impl PackedBF16 {
+    pub fn pack(b: &[f32], n: usize, k: usize) -> PackedBF16 {
+        assert_eq!(b.len(), n * k);
+        let n_panels = n.div_ceil(NR);
+        let mut data = vec![0u16; n_panels * k * NR];
+        for p in 0..n_panels {
+            for kk in 0..k {
+                for r in 0..NR {
+                    let col = p * NR + r;
+                    if col < n {
+                        let mut h = f32_to_f16(b[col * k + kk]);
+                        if h & 0x7c00 == 0 {
+                            h &= 0x8000; // flush subnormals to (signed) zero
+                        }
+                        data[(p * k + kk) * NR + r] = h;
+                    }
+                }
+            }
+        }
+        PackedBF16 { n, k, data }
+    }
+
+    #[inline]
+    fn panel(&self, p: usize) -> &[u16] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+
+    /// Bytes of weight storage (half of fp32 — the Fig-6a saving).
+    pub fn weight_bytes(&self) -> usize {
+        self.data.len() * 2
+    }
+}
+
+/// C = pipeline(A * B^T) with fp16-stored B.
+pub fn gemm_f16(a: &[f32], m: usize, b: &PackedBF16, pipe: &OutputPipeline, c: &mut [f32]) {
+    let (n, k) = (b.n, b.k);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(c.len(), m * n);
+    let n_panels = n.div_ceil(NR);
+    let mut wide = [0f32; NR];
+    for m0 in (0..m).step_by(MR) {
+        let mb = MR.min(m - m0);
+        for p in 0..n_panels {
+            let panel = b.panel(p);
+            let mut acc = [[0f32; NR]; MR];
+            for kk in 0..k {
+                let prow = &panel[kk * NR..kk * NR + NR];
+                for r in 0..NR {
+                    wide[r] = widen_fast(prow[r]);
+                }
+                for im in 0..mb {
+                    let av = a[(m0 + im) * k + kk];
+                    let accr = &mut acc[im];
+                    for r in 0..NR {
+                        accr[r] += av * wide[r];
+                    }
+                }
+            }
+            let n0 = p * NR;
+            let nb = NR.min(n - n0);
+            for im in 0..mb {
+                for r in 0..nb {
+                    c[(m0 + im) * n + n0 + r] = pipe.apply_f32(acc[im][r], n0 + r);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::f16::f16_to_f32;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn widen_fast_matches_full_conversion_for_normals() {
+        for &x in &[0.0f32, 1.0, -1.5, 0.37, 1000.0, -65504.0, 6.1e-5] {
+            let h = f32_to_f16(x);
+            if h & 0x7c00 != 0 || h & 0x7fff == 0 {
+                assert_eq!(widen_fast(h), f16_to_f32(h), "{x}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_f32_gemm_within_f16_precision() {
+        let mut rng = Pcg32::seeded(3);
+        let (m, n, k) = (5, 33, 47);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let packed = PackedBF16::pack(&b, n, k);
+        let pipe = OutputPipeline::identity(n, false);
+        let mut c = vec![0f32; m * n];
+        gemm_f16(&a, m, &packed, &pipe, &mut c);
+        let want = super::super::fp32::gemm_ref(&a, m, &b, n, k, false);
+        for (x, y) in c.iter().zip(&want) {
+            // f16 weights: rel error ~2^-11 per product, accumulated over k
+            assert!((x - y).abs() < 0.02 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn storage_is_half_of_f32() {
+        let b = vec![0f32; 32 * 64];
+        let p = PackedBF16::pack(&b, 32, 64);
+        assert_eq!(p.weight_bytes(), 32 * 64 * 2);
+    }
+}

@@ -1,0 +1,223 @@
+//! i8-acc16 GEMM with outlier-aware quantization (Fig 6b, §3.2.1).
+//!
+//! The main path multiplies int8 activations against the 7-bit W_main
+//! in *16-bit lanes* — twice the lanes of the i32 path, which is where
+//! the ~2x compute-bound speedup comes from on AVX2 (`vpmaddubsw`) —
+//! saturating within a spill block, then widening into the 32-bit
+//! accumulator. The sparse outlier residual runs on the exact i32 path
+//! and typically costs <1% of the time.
+
+use super::fp32::MR;
+use super::outlier::{split_outliers, OutlierCsr};
+use super::pipeline::OutputPipeline;
+
+/// acc16 panel width: 32 i16 lanes fill one 512-bit register, which is
+/// exactly where the path's 2x-lanes-over-i32 advantage lives.
+pub const NR16: usize = 32;
+
+/// How many K steps accumulate in int16 before spilling to int32.
+/// 7-bit weights x 8-bit activations: |product| <= 127*64 = 8128, so 4
+/// products (32512) fit int16 even in the adversarial worst case — the
+/// acc16 path stays bit-exact and the outlier split alone carries the
+/// accuracy story, exactly as §3.2.1 intends.
+pub const SPILL: usize = 4;
+
+/// B packed for the acc16 path: 7-bit main panels + outlier CSR.
+#[derive(Debug, Clone)]
+pub struct PackedBI8Acc16 {
+    pub n: usize,
+    pub k: usize,
+    main: Vec<i8>,
+    pub outliers: OutlierCsr,
+    pub rowsum: Vec<i32>,
+}
+
+impl PackedBI8Acc16 {
+    pub fn pack(b: &[i8], n: usize, k: usize) -> PackedBI8Acc16 {
+        Self::pack_bits(b, n, k, 7)
+    }
+
+    /// Pack with a configurable main-path bit width (the ablation knob:
+    /// fewer bits -> denser outliers -> slower outlier pass).
+    pub fn pack_bits(b: &[i8], n: usize, k: usize, main_bits: u32) -> PackedBI8Acc16 {
+        assert_eq!(b.len(), n * k);
+        let (main_rowmajor, outliers) = split_outliers(b, n, k, main_bits);
+        let n_panels = n.div_ceil(NR16);
+        let mut main = vec![0i8; n_panels * k * NR16];
+        for p in 0..n_panels {
+            for kk in 0..k {
+                for r in 0..NR16 {
+                    let col = p * NR16 + r;
+                    if col < n {
+                        main[(p * k + kk) * NR16 + r] = main_rowmajor[col * k + kk];
+                    }
+                }
+            }
+        }
+        let mut rowsum = vec![0i32; n];
+        for (j, rs) in rowsum.iter_mut().enumerate() {
+            *rs = b[j * k..(j + 1) * k].iter().map(|&v| v as i32).sum();
+        }
+        PackedBI8Acc16 { n, k, main, outliers, rowsum }
+    }
+
+    #[inline]
+    fn panel(&self, p: usize) -> &[i8] {
+        &self.main[p * self.k * NR16..(p + 1) * self.k * NR16]
+    }
+}
+
+/// C = pipeline(A_q * B_q^T) on the 16-bit-accumulation path.
+pub fn gemm_i8_acc16(
+    a: &[i8],
+    m: usize,
+    b: &PackedBI8Acc16,
+    pipe: &OutputPipeline,
+    c: &mut [f32],
+) {
+    let (n, k) = (b.n, b.k);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(c.len(), m * n);
+    let n_panels = n.div_ceil(NR16);
+    // dense main path with int16 accumulation + spills
+    let mut acc32 = vec![0i32; m * n];
+    for m0 in (0..m).step_by(MR) {
+        let mb = MR.min(m - m0);
+        for p in 0..n_panels {
+            let panel = b.panel(p);
+            let mut acc = [[0i32; NR16]; MR];
+            let mut k0 = 0;
+            while k0 < k {
+                let kb = SPILL.min(k - k0);
+                let mut acc16 = [[0i16; NR16]; MR];
+                // k-steps in pairs — the vpmaddubsw model: two 8-bit
+                // products summed into one 16-bit lane (exact: 7-bit
+                // weights keep |a0*b0 + a1*b1| <= 2*127*64 < 2^15)
+                let mut kk = k0;
+                while kk + 1 < k0 + kb {
+                    let prow0 = &panel[kk * NR16..kk * NR16 + NR16];
+                    let prow1 = &panel[(kk + 1) * NR16..(kk + 1) * NR16 + NR16];
+                    for im in 0..mb {
+                        let av0 = a[(m0 + im) * k + kk] as i16;
+                        let av1 = a[(m0 + im) * k + kk + 1] as i16;
+                        let accr = &mut acc16[im];
+                        for r in 0..NR16 {
+                            // saturating 16-bit accumulate (vpaddsw)
+                            accr[r] = accr[r]
+                                .saturating_add(av0 * prow0[r] as i16 + av1 * prow1[r] as i16);
+                        }
+                    }
+                    kk += 2;
+                }
+                if kk < k0 + kb {
+                    let prow = &panel[kk * NR16..kk * NR16 + NR16];
+                    for im in 0..mb {
+                        let av = a[(m0 + im) * k + kk] as i16;
+                        let accr = &mut acc16[im];
+                        for r in 0..NR16 {
+                            accr[r] = accr[r].saturating_add(av * prow[r] as i16);
+                        }
+                    }
+                }
+                // spill: widen the block's partial sums into i32
+                for im in 0..mb {
+                    for r in 0..NR16 {
+                        acc[im][r] += acc16[im][r] as i32;
+                    }
+                }
+                k0 += kb;
+            }
+            let n0 = p * NR16;
+            let nb = NR16.min(n - n0);
+            for im in 0..mb {
+                for r in 0..nb {
+                    acc32[(m0 + im) * n + n0 + r] = acc[im][r];
+                }
+            }
+        }
+    }
+    // sparse outlier pass (exact i32)
+    b.outliers.spmm_acc(a, m, &mut acc32);
+    // fused output pipeline
+    for i in 0..m {
+        for j in 0..n {
+            c[i * n + j] = pipe.apply_i32(acc32[i * n + j], j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::i8acc32::gemm_i8_ref;
+    use crate::util::rng::Pcg32;
+
+    fn rand_i8(rng: &mut Pcg32, len: usize, amp: i32) -> Vec<i8> {
+        (0..len).map(|_| (rng.below((2 * amp + 1) as u32) as i32 - amp) as i8).collect()
+    }
+
+    #[test]
+    fn matches_acc32_reference_with_small_weights() {
+        // weights within 7 bits and short spill blocks: bit-exact
+        let mut rng = Pcg32::seeded(11);
+        for &(m, n, k) in &[(1, 16, 32), (4, 32, 64), (5, 40, 100)] {
+            let a = rand_i8(&mut rng, m * k, 127);
+            let b = rand_i8(&mut rng, n * k, 20);
+            let packed = PackedBI8Acc16::pack(&b, n, k);
+            assert_eq!(packed.outliers.nnz(), 0);
+            let pipe = OutputPipeline::per_tensor(n, 0, 1.0, packed.rowsum.clone(), false);
+            let mut c = vec![0f32; m * n];
+            gemm_i8_acc16(&a, m, &packed, &pipe, &mut c);
+            let want = gemm_i8_ref(&a, m, &b, n, k);
+            for (x, y) in c.iter().zip(&want) {
+                assert_eq!(*x, *y as f32, "({m},{n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn outliers_restore_exactness_for_full_range_weights() {
+        let mut rng = Pcg32::seeded(12);
+        let (m, n, k) = (4, 24, 96);
+        let a = rand_i8(&mut rng, m * k, 50);
+        let b = rand_i8(&mut rng, n * k, 127); // full int8 range: outliers exist
+        let packed = PackedBI8Acc16::pack(&b, n, k);
+        assert!(packed.outliers.nnz() > 0);
+        let pipe = OutputPipeline::per_tensor(n, 0, 1.0, packed.rowsum.clone(), false);
+        let mut c = vec![0f32; m * n];
+        gemm_i8_acc16(&a, m, &packed, &pipe, &mut c);
+        let want = gemm_i8_ref(&a, m, &b, n, k);
+        for (x, y) in c.iter().zip(&want) {
+            assert_eq!(*x, *y as f32);
+        }
+    }
+
+    #[test]
+    fn zero_point_path_matches_acc32() {
+        let mut rng = Pcg32::seeded(13);
+        let (m, n, k) = (3, 16, 48);
+        let a = rand_i8(&mut rng, m * k, 127);
+        let b = rand_i8(&mut rng, n * k, 127);
+        let p16 = PackedBI8Acc16::pack(&b, n, k);
+        let p32 = crate::gemm::PackedBI8::pack(&b, n, k);
+        let pipe = OutputPipeline::per_tensor(n, 5, 0.01, p16.rowsum.clone(), true);
+        let mut c16 = vec![0f32; m * n];
+        let mut c32 = vec![0f32; m * n];
+        gemm_i8_acc16(&a, m, &p16, &pipe, &mut c16);
+        crate::gemm::i8acc32::gemm_i8_acc32(&a, m, &p32, &pipe, &mut c32);
+        for (x, y) in c16.iter().zip(&c32) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn lower_main_bits_mean_denser_outliers() {
+        let mut rng = Pcg32::seeded(14);
+        let (n, k) = (32, 64);
+        let b = rand_i8(&mut rng, n * k, 127);
+        let d7 = PackedBI8Acc16::pack_bits(&b, n, k, 7).outliers.density();
+        let d6 = PackedBI8Acc16::pack_bits(&b, n, k, 6).outliers.density();
+        let d4 = PackedBI8Acc16::pack_bits(&b, n, k, 4).outliers.density();
+        assert!(d7 < d6 && d6 < d4, "{d7} {d6} {d4}");
+    }
+}

@@ -1,0 +1,79 @@
+//! FBGEMM-rs: the reduced-precision linear-algebra library of §3.2,
+//! in pure Rust.
+//!
+//! Four GEMM paths, all computing `C = A[MxK] * B^T[NxK]` in the Caffe2
+//! FC convention with a fused "output pipeline" (requantization, bias,
+//! ReLU — the paper's `outProcess`):
+//!
+//! - [`fp32`]: packed fp32 baseline (stands in for MKL).
+//! - [`fp16`]: fp16 *storage* for B, fp32 compute — halves weight
+//!   traffic, the Fig-6a bandwidth-bound win.
+//! - [`i8acc32`]: int8 multiplies, int32 accumulation (Fig 6a): 4x less
+//!   weight traffic.
+//! - [`i8acc16`]: int8 multiplies, int16 accumulation with periodic
+//!   32-bit spills + the sparse outlier matrix (Fig 6b): ~2x the
+//!   multiply throughput where compute-bound.
+//!
+//! B matrices are packed once ([`PackedB`] etc.) and reused across many
+//! multiplications — the pre-packed-B interface the paper argues the
+//! BLAS standard lacks for tall-skinny DL shapes.
+
+pub mod fp16;
+pub mod fp32;
+pub mod i8acc16;
+pub mod i8acc32;
+pub mod outlier;
+pub mod pipeline;
+
+pub use fp16::PackedBF16;
+pub use fp32::PackedBF32;
+pub use i8acc16::PackedBI8Acc16;
+pub use i8acc32::PackedBI8;
+pub use outlier::{split_outliers, OutlierCsr};
+pub use pipeline::OutputPipeline;
+
+/// Arithmetic intensity of an (M, N, K) GEMM as Fig 6 defines it:
+/// `2MNK / (NK + MK)` — output traffic excluded.
+pub fn fig6_intensity(m: usize, n: usize, k: usize) -> f64 {
+    2.0 * m as f64 * n as f64 * k as f64 / ((n * k) as f64 + (m * k) as f64)
+}
+
+/// The matrix shapes Fig 6 sweeps (from the FBGEMM evaluation set:
+/// small-batch FCs from recommendation/NMT plus square compute-bound
+/// shapes).
+pub fn fig6_shapes() -> Vec<(usize, usize, usize)> {
+    vec![
+        (1, 128, 512),
+        (1, 1024, 1024),
+        (8, 256, 512),
+        (16, 256, 512),
+        (16, 1024, 1024),
+        (64, 512, 512),
+        (64, 800, 320),
+        (128, 512, 512),
+        (256, 512, 512),
+        (256, 1024, 1024),
+        (512, 512, 512),
+        (1024, 1024, 1024),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intensity_matches_fig6_definition() {
+        // M=1: 2NK/(NK+K) ~ 2 for large N
+        assert!((fig6_intensity(1, 1024, 1024) - 2.0).abs() < 0.01);
+        // square: 2n^3/(2n^2) = n
+        assert!((fig6_intensity(512, 512, 512) - 512.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shapes_span_both_regimes() {
+        let shapes = fig6_shapes();
+        assert!(shapes.iter().any(|&(m, n, k)| fig6_intensity(m, n, k) < 5.0));
+        assert!(shapes.iter().any(|&(m, n, k)| fig6_intensity(m, n, k) > 400.0));
+    }
+}

@@ -1,0 +1,91 @@
+//! The fused "output pipeline" (paper §3.2.3 / gemmlowp's terminology):
+//! everything that happens to the int32/fp32 accumulator on its way to
+//! the output buffer — zero-point correction, per-channel rescale, bias
+//! add, ReLU — fused so the accumulator never round-trips to memory.
+
+/// Output transformation applied per (row, col) accumulator.
+#[derive(Debug, Clone)]
+pub struct OutputPipeline {
+    /// activation zero point (asymmetric quantization)
+    pub x_zp: i32,
+    /// per-output-channel combined scale: x_scale * w_scale[n]
+    pub scale: Vec<f32>,
+    /// pack-time row offsets: sum_k B[n, k] (zero-point correction)
+    pub b_rowsum: Vec<i32>,
+    /// per-output-channel bias
+    pub bias: Vec<f32>,
+    pub relu: bool,
+}
+
+impl OutputPipeline {
+    /// Per-tensor-scale convenience constructor.
+    pub fn per_tensor(n: usize, x_zp: i32, scale: f32, b_rowsum: Vec<i32>, relu: bool) -> Self {
+        OutputPipeline { x_zp, scale: vec![scale; n], b_rowsum, bias: vec![0.0; n], relu }
+    }
+
+    /// Identity pipeline for fp paths (no quantization).
+    pub fn identity(n: usize, relu: bool) -> Self {
+        OutputPipeline {
+            x_zp: 0,
+            scale: vec![1.0; n],
+            b_rowsum: vec![0; n],
+            bias: vec![0.0; n],
+            relu,
+        }
+    }
+
+    /// Apply to one int32 accumulator at output channel `n`.
+    #[inline(always)]
+    pub fn apply_i32(&self, acc: i32, n: usize) -> f32 {
+        let corrected = acc - self.x_zp * self.b_rowsum[n];
+        let mut v = corrected as f32 * self.scale[n] + self.bias[n];
+        if self.relu && v < 0.0 {
+            v = 0.0;
+        }
+        v
+    }
+
+    /// Apply to one fp32 accumulator at output channel `n`.
+    #[inline(always)]
+    pub fn apply_f32(&self, acc: f32, n: usize) -> f32 {
+        let mut v = acc * self.scale[n] + self.bias[n];
+        if self.relu && v < 0.0 {
+            v = 0.0;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_point_correction() {
+        // acc = sum(x_q * w), true = sum((x_q - zp) * w) = acc - zp*rowsum
+        let p = OutputPipeline::per_tensor(1, 3, 0.5, vec![10], false);
+        // acc 100 -> (100 - 30) * 0.5 = 35
+        assert_eq!(p.apply_i32(100, 0), 35.0);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let p = OutputPipeline::per_tensor(1, 0, 1.0, vec![0], true);
+        assert_eq!(p.apply_i32(-5, 0), 0.0);
+        assert_eq!(p.apply_i32(5, 0), 5.0);
+    }
+
+    #[test]
+    fn per_channel_scale_and_bias() {
+        let p = OutputPipeline {
+            x_zp: 0,
+            scale: vec![1.0, 2.0],
+            b_rowsum: vec![0, 0],
+            bias: vec![0.5, -0.5],
+            relu: false,
+        };
+        assert_eq!(p.apply_i32(3, 0), 3.5);
+        assert_eq!(p.apply_i32(3, 1), 5.5);
+        assert_eq!(p.apply_f32(1.5, 1), 2.5);
+    }
+}

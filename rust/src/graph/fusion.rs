@@ -1,0 +1,127 @@
+//! Roofline-based fusion-speedup estimation and top-k ranking (§3.3).
+//!
+//! "We compute performance projected by the roofline model before and
+//! after fusion, and use the difference to estimate speedup potential."
+
+use crate::perfmodel::DeviceSpec;
+
+use super::miner::MinedSubgraph;
+
+/// A ranked fusion opportunity.
+#[derive(Debug, Clone)]
+pub struct FusionOpportunity {
+    pub signature: String,
+    pub frequency: f64,
+    /// unfused time per occurrence (s, roofline)
+    pub t_unfused: f64,
+    /// fused time per occurrence (s, roofline)
+    pub t_fused: f64,
+    /// fleet-weighted absolute saving (s)
+    pub weighted_saving: f64,
+}
+
+impl FusionOpportunity {
+    pub fn speedup(&self) -> f64 {
+        self.t_unfused / self.t_fused.max(1e-30)
+    }
+}
+
+/// Roofline time of one occurrence, unfused vs fused.
+///
+/// Unfused: every node pays its own memory traffic (intermediates hit
+/// memory twice: producer write + consumer read). Fused: intermediates
+/// never leave registers/cache; only the boundary tensors move.
+pub fn fusion_speedup(s: &MinedSubgraph, dev: &DeviceSpec) -> (f64, f64) {
+    let t_compute = s.avg_flops / dev.peak_ops;
+    // unfused traffic: boundary + intermediates counted twice
+    let unfused_bytes = s.avg_bytes_in + s.avg_bytes_out + 2.0 * s.avg_intermediate_bytes;
+    let fused_bytes = s.avg_bytes_in + s.avg_bytes_out;
+    let t_unfused = t_compute.max(unfused_bytes / dev.dram_bw);
+    let t_fused = t_compute.max(fused_bytes / dev.dram_bw);
+    (t_unfused, t_fused)
+}
+
+/// Rank mined subgraphs by fleet-weighted saving; return the top-k.
+pub fn rank_opportunities(
+    mined: &[MinedSubgraph],
+    dev: &DeviceSpec,
+    top_k: usize,
+) -> Vec<FusionOpportunity> {
+    let mut out: Vec<FusionOpportunity> = mined
+        .iter()
+        .map(|s| {
+            let (t_unfused, t_fused) = fusion_speedup(s, dev);
+            FusionOpportunity {
+                signature: s.signature.clone(),
+                frequency: s.frequency,
+                t_unfused,
+                t_fused,
+                weighted_saving: s.frequency * (t_unfused - t_fused),
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| b.weighted_saving.partial_cmp(&a.weighted_saving).unwrap());
+    out.truncate(top_k);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::netdef::Net;
+    use crate::graph::miner::mine_frequent_subgraphs;
+    use crate::models::{representative_zoo, OpClass};
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::xeon_fp32()
+    }
+
+    #[test]
+    fn fusing_memory_bound_chains_wins() {
+        let s = MinedSubgraph {
+            signature: "Conv>Elementwise".into(),
+            ops: vec![OpClass::Conv, OpClass::Elementwise],
+            frequency: 100.0,
+            avg_flops: 1e6, // light compute
+            avg_bytes_in: 1e6,
+            avg_bytes_out: 1e6,
+            avg_intermediate_bytes: 1e6, // heavy intermediate traffic
+        };
+        let (t_u, t_f) = fusion_speedup(&s, &dev());
+        assert!(t_u > t_f);
+        // saving = 2MB/bw
+        assert!((t_u - t_f - 2e6 / dev().dram_bw).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_bound_chains_gain_nothing() {
+        let s = MinedSubgraph {
+            signature: "Conv>Conv".into(),
+            ops: vec![OpClass::Conv, OpClass::Conv],
+            frequency: 1.0,
+            avg_flops: 1e12, // dominated by compute
+            avg_bytes_in: 1e3,
+            avg_bytes_out: 1e3,
+            avg_intermediate_bytes: 1e3,
+        };
+        let (t_u, t_f) = fusion_speedup(&s, &dev());
+        assert_eq!(t_u, t_f);
+    }
+
+    #[test]
+    fn top_k_ranking_over_the_zoo() {
+        let nets: Vec<(Net, f64)> = representative_zoo()
+            .into_iter()
+            .map(|e| (Net::from_model(&e.desc, 4), e.fleet_weight * 1000.0))
+            .collect();
+        let mined = mine_frequent_subgraphs(&nets, 3, 1.0);
+        let top = rank_opportunities(&mined, &dev(), 5);
+        assert_eq!(top.len(), 5);
+        // orderered by weighted saving
+        for w in top.windows(2) {
+            assert!(w[0].weighted_saving >= w[1].weighted_saving);
+        }
+        // every top opportunity is a genuine speedup
+        assert!(top.iter().all(|o| o.speedup() > 1.0));
+    }
+}

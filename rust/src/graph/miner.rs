@@ -1,0 +1,176 @@
+//! Frequent-subgraph mining over fleet-logged nets (§3.3).
+//!
+//! The paper: "we log the complete graphs annotated with operator
+//! dependencies, frequency, and input/output tensor shapes. We then run
+//! a frequent subgraph mining algorithm on the nets captured."
+//!
+//! Our nets are chains (from_model), so connected subgraphs are chain
+//! segments; the miner enumerates segments up to `max_len`, counts
+//! execution-weighted frequency by canonical op signature, and keeps
+//! those above a support threshold. Non-data-parallel ops (the paper's
+//! filter rule) break segments.
+
+use std::collections::HashMap;
+
+use crate::models::OpClass;
+
+use super::netdef::Net;
+
+/// A mined candidate: an op-class signature with aggregate stats.
+#[derive(Debug, Clone)]
+pub struct MinedSubgraph {
+    pub signature: String,
+    pub ops: Vec<OpClass>,
+    /// execution-weighted occurrence count
+    pub frequency: f64,
+    /// average flops / bytes over occurrences (for the roofline ranking)
+    pub avg_flops: f64,
+    pub avg_bytes_in: f64,
+    pub avg_bytes_out: f64,
+    /// average bytes of intermediate tensors a fused kernel would elide
+    pub avg_intermediate_bytes: f64,
+}
+
+/// Ops that are data-parallel and therefore fusable (paper's filter:
+/// "we rule out subgraphs with operators that are not data parallel").
+pub fn is_fusable(op: OpClass) -> bool {
+    !matches!(op, OpClass::Softmax)
+}
+
+/// Mine chain segments of length 2..=max_len across `nets`, each net
+/// weighted by its execution frequency.
+pub fn mine_frequent_subgraphs(
+    nets: &[(Net, f64)],
+    max_len: usize,
+    min_support: f64,
+) -> Vec<MinedSubgraph> {
+    struct Agg {
+        ops: Vec<OpClass>,
+        freq: f64,
+        flops: f64,
+        bytes_in: f64,
+        bytes_out: f64,
+        intermediate: f64,
+        count: f64,
+    }
+    let mut table: HashMap<String, Agg> = HashMap::new();
+
+    for (net, weight) in nets {
+        let n = net.nodes.len();
+        for start in 0..n {
+            // grow the segment while nodes chain linearly and stay fusable
+            let mut chain = vec![start];
+            for len in 2..=max_len {
+                let next = start + len - 1;
+                if next >= n {
+                    break;
+                }
+                // must be a pure chain link
+                if net.nodes[next].inputs != vec![next - 1] {
+                    break;
+                }
+                if !is_fusable(net.nodes[next].op) || !is_fusable(net.nodes[start].op) {
+                    break;
+                }
+                chain.push(next);
+                let sig = net.chain_signature(&chain);
+                let flops: u64 = chain.iter().map(|&i| net.nodes[i].flops).sum();
+                // fused traffic: first node's input + last node's output;
+                // everything between is elided
+                let bytes_in = net.nodes[chain[0]].bytes_in
+                    + chain[1..].iter().map(|&i| {
+                        // weights of downstream nodes still stream in
+                        net.nodes[i].bytes_in.saturating_sub(net.nodes[i - 1].bytes_out)
+                    }).sum::<u64>();
+                let bytes_out = net.nodes[*chain.last().unwrap()].bytes_out;
+                let intermediate: u64 =
+                    chain[..chain.len() - 1].iter().map(|&i| net.nodes[i].bytes_out).sum();
+                let e = table.entry(sig).or_insert_with(|| Agg {
+                    ops: chain.iter().map(|&i| net.nodes[i].op).collect(),
+                    freq: 0.0,
+                    flops: 0.0,
+                    bytes_in: 0.0,
+                    bytes_out: 0.0,
+                    intermediate: 0.0,
+                    count: 0.0,
+                });
+                e.freq += weight;
+                e.flops += flops as f64 * weight;
+                e.bytes_in += bytes_in as f64 * weight;
+                e.bytes_out += bytes_out as f64 * weight;
+                e.intermediate += intermediate as f64 * weight;
+                e.count += weight;
+            }
+        }
+    }
+
+    let mut out: Vec<MinedSubgraph> = table
+        .into_iter()
+        .filter(|(_, a)| a.freq >= min_support)
+        .map(|(signature, a)| MinedSubgraph {
+            signature,
+            ops: a.ops,
+            frequency: a.freq,
+            avg_flops: a.flops / a.count,
+            avg_bytes_in: a.bytes_in / a.count,
+            avg_bytes_out: a.bytes_out / a.count,
+            avg_intermediate_bytes: a.intermediate / a.count,
+        })
+        .collect();
+    out.sort_by(|a, b| b.frequency.partial_cmp(&a.frequency).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::netdef::Net;
+    use crate::models::{recsys, resnet50, RecsysScale};
+
+    #[test]
+    fn mines_common_conv_relu_patterns() {
+        let nets = vec![(Net::from_model(&resnet50(1), 1), 1.0)];
+        let mined = mine_frequent_subgraphs(&nets, 2, 2.0);
+        assert!(!mined.is_empty());
+        // Conv>Elementwise is the most frequent 2-chain in a ResNet
+        let top_convs: Vec<_> =
+            mined.iter().filter(|s| s.signature == "Conv>Elementwise").collect();
+        assert_eq!(top_convs.len(), 1);
+        assert!(top_convs[0].frequency > 30.0);
+    }
+
+    #[test]
+    fn frequency_is_execution_weighted() {
+        let net = Net::from_model(&resnet50(1), 1);
+        let once = mine_frequent_subgraphs(&[(net.clone(), 1.0)], 2, 0.5);
+        let tenx = mine_frequent_subgraphs(&[(net, 10.0)], 2, 0.5);
+        let f1 = once.iter().find(|s| s.signature == "Conv>Elementwise").unwrap().frequency;
+        let f10 = tenx.iter().find(|s| s.signature == "Conv>Elementwise").unwrap().frequency;
+        assert!((f10 / f1 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn softmax_breaks_segments() {
+        let nets = vec![(Net::from_model(&recsys(RecsysScale::Servable, 16), 1), 1.0)];
+        let mined = mine_frequent_subgraphs(&nets, 3, 0.5);
+        assert!(mined.iter().all(|s| !s.signature.contains("Softmax")));
+    }
+
+    #[test]
+    fn support_threshold_filters() {
+        let nets = vec![(Net::from_model(&resnet50(1), 1), 1.0)];
+        let all = mine_frequent_subgraphs(&nets, 3, 0.0);
+        let some = mine_frequent_subgraphs(&nets, 3, 10.0);
+        assert!(some.len() < all.len());
+        assert!(some.iter().all(|s| s.frequency >= 10.0));
+    }
+
+    #[test]
+    fn intermediate_bytes_positive_for_chains() {
+        let nets = vec![(Net::from_model(&resnet50(1), 4), 1.0)];
+        let mined = mine_frequent_subgraphs(&nets, 2, 1.0);
+        for s in &mined {
+            assert!(s.avg_intermediate_bytes > 0.0, "{}", s.signature);
+        }
+    }
+}

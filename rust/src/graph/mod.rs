@@ -1,0 +1,17 @@
+//! Whole-graph optimization (§3.3): a Caffe2-style NetDef IR, the
+//! frequent-subgraph miner over fleet-captured nets, and the
+//! roofline-based fusion-speedup estimator that ranks mined subgraphs.
+//!
+//! Pipeline (exactly the paper's): log complete op graphs annotated with
+//! shapes and frequency -> mine frequently-executed connected subgraphs
+//! -> filter by fusability rules (data-parallel ops only) -> score by
+//! roofline speedup (intermediate tensors stop hitting memory) ->
+//! return the top-k opportunities.
+
+pub mod fusion;
+pub mod miner;
+pub mod netdef;
+
+pub use fusion::{fusion_speedup, rank_opportunities, FusionOpportunity};
+pub use miner::{mine_frequent_subgraphs, MinedSubgraph};
+pub use netdef::{Net, Node};

@@ -1,0 +1,92 @@
+//! Caffe2-style NetDef IR: ops + tensor edges, annotated with shapes.
+//!
+//! The fleet simulator logs these (one per served net), the miner walks
+//! them, and the fusion estimator uses the per-node byte/flop counts.
+
+use crate::models::{ModelDesc, OpClass};
+
+/// One operator instance in a net.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: OpClass,
+    pub name: String,
+    pub flops: u64,
+    /// bytes read (weights + inputs)
+    pub bytes_in: u64,
+    /// bytes written (outputs)
+    pub bytes_out: u64,
+    /// indices of producer nodes
+    pub inputs: Vec<usize>,
+}
+
+/// A logged net: nodes in topological order.
+#[derive(Debug, Clone)]
+pub struct Net {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl Net {
+    /// Build a linear net from a model descriptor (layer i feeds i+1).
+    /// Element bytes reflect the serving dtype.
+    pub fn from_model(m: &ModelDesc, elem_bytes: u64) -> Net {
+        let nodes = m
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| Node {
+                op: l.class,
+                name: l.name.clone(),
+                flops: l.flops,
+                bytes_in: (l.weight_traffic_elems + l.act_in_elems) * elem_bytes,
+                bytes_out: l.act_out_elems * elem_bytes,
+                inputs: if i == 0 { vec![] } else { vec![i - 1] },
+            })
+            .collect();
+        Net { name: m.name.clone(), nodes }
+    }
+
+    /// Successors of each node.
+    pub fn successors(&self) -> Vec<Vec<usize>> {
+        let mut succ = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &p in &n.inputs {
+                succ[p].push(i);
+            }
+        }
+        succ
+    }
+
+    /// The op-class sequence of a node chain (canonical label for
+    /// frequency counting).
+    pub fn chain_signature(&self, chain: &[usize]) -> String {
+        chain.iter().map(|&i| self.nodes[i].op.bucket()).collect::<Vec<_>>().join(">")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::resnet50;
+
+    #[test]
+    fn from_model_is_topological_chain() {
+        let net = Net::from_model(&resnet50(1), 4);
+        assert_eq!(net.nodes.len(), resnet50(1).layers.len());
+        for (i, n) in net.nodes.iter().enumerate() {
+            if i > 0 {
+                assert_eq!(n.inputs, vec![i - 1]);
+            }
+        }
+        let succ = net.successors();
+        assert_eq!(succ[0], vec![1]);
+        assert!(succ.last().unwrap().is_empty());
+    }
+
+    #[test]
+    fn signatures_bucket_ops() {
+        let net = Net::from_model(&resnet50(1), 4);
+        let sig = net.chain_signature(&[0, 1]);
+        assert_eq!(sig, "Conv>Pool");
+    }
+}

@@ -1,0 +1,30 @@
+//! # dcinfer — data-center DL inference characterization, optimization & serving
+//!
+//! A reproduction of *"Deep Learning Inference in Facebook Data Centers:
+//! Characterization, Performance Optimizations and Hardware Implications"*
+//! (Park, Naumov, et al., 2018).
+//!
+//! The crate is organized as the paper's system is: a serving tier
+//! ([`coordinator`]) running AOT-compiled model artifacts through a PJRT
+//! [`runtime`], instrumented by the paper's fleet-wide profiling machinery
+//! ([`observers`], [`fleet`]), characterized by an analytical performance
+//! model ([`perfmodel`], Table 1 / Fig 3), and optimized by a
+//! reduced-precision linear-algebra library ([`gemm`], FBGEMM-rs, Fig 6)
+//! with the paper's quantization recipe ([`quant`], §3.2.2) and whole-graph
+//! fusion mining ([`graph`], §3.3).
+//!
+//! Python/JAX/Pallas appear only at build time (`python/compile`), producing
+//! `artifacts/*.hlo.txt`; the request path is pure Rust.
+
+pub mod coordinator;
+pub mod embedding;
+pub mod fleet;
+pub mod gemm;
+pub mod graph;
+pub mod models;
+pub mod observers;
+pub mod perfmodel;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod util;

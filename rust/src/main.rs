@@ -1,0 +1,291 @@
+//! dcinfer CLI: regenerate every table/figure of the paper and run the
+//! serving tier.
+//!
+//! ```text
+//! dcinfer characterize          Table 1
+//! dcinfer demand                Fig 1
+//! dcinfer roofline [--model M]  Fig 3
+//! dcinfer fleet [--requests N]  Fig 4
+//! dcinfer shapes                Fig 5
+//! dcinfer mine [--top K]        §3.3 fusion opportunities
+//! dcinfer disagg                §4 tier bandwidth
+//! dcinfer serve [--requests N] [--executors E] [--qps Q]
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use dcinfer::coordinator::{disagg_bandwidth, InferRequest, InferenceTier, TierConfig};
+use dcinfer::fleet::{demand_series, simulate_fleet, FleetConfig};
+use dcinfer::graph::{mine_frequent_subgraphs, rank_opportunities, Net};
+use dcinfer::models::{representative_zoo, ModelDesc};
+use dcinfer::perfmodel::roofline::fig3_capacities;
+use dcinfer::perfmodel::{characterize_zoo, roofline_curve, shape_survey, DeviceSpec};
+use dcinfer::report;
+use dcinfer::util::rng::Pcg32;
+
+fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            out.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn zoo_models() -> Vec<ModelDesc> {
+    representative_zoo().into_iter().map(|e| e.desc).collect()
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+
+    match cmd {
+        "characterize" => cmd_characterize(),
+        "demand" => cmd_demand(),
+        "roofline" => cmd_roofline(&flags),
+        "fleet" => cmd_fleet(&flags),
+        "shapes" => cmd_shapes(),
+        "mine" => cmd_mine(&flags),
+        "disagg" => cmd_disagg(),
+        "codesign" => cmd_codesign(),
+        "serve" => cmd_serve(&flags),
+        _ => {
+            println!("dcinfer — data-center DL inference characterization & serving");
+            println!("subcommands: characterize demand roofline fleet shapes mine disagg codesign serve");
+            Ok(())
+        }
+    }
+}
+
+/// Table 1.
+fn cmd_characterize() -> Result<()> {
+    println!("== Table 1: resource requirements of representative DL inference workloads ==\n");
+    let rows = characterize_zoo(&zoo_models());
+    report::print_table1(&rows);
+    Ok(())
+}
+
+/// Fig 1.
+fn cmd_demand() -> Result<()> {
+    println!("== Fig 1: server demand for DL inference across data centers ==\n");
+    let services = dcinfer::fleet::demand::default_services();
+    let series = demand_series(&services, 9);
+    print!("{:<8}", "quarter");
+    for s in &services {
+        print!("{:>24}", s.name);
+    }
+    println!("{:>10}", "total");
+    for p in &series {
+        print!("{:<8}", format!("Q{}", p.quarter));
+        for v in &p.per_service {
+            print!("{v:>24.1}");
+        }
+        println!("{:>10.1}", p.total);
+    }
+    println!("\ngrowth over 8 quarters: {:.1}x", series[8].total / series[0].total);
+    Ok(())
+}
+
+/// Fig 3.
+fn cmd_roofline(flags: &BTreeMap<String, String>) -> Result<()> {
+    println!("== Fig 3: roofline on a hypothetical 100 TOP/s, 100 GB/s DRAM accelerator ==");
+    println!("(int8 parameters; on-chip capacity sweep at 1 and 10 TB/s on-chip BW)\n");
+    let filter = flags.get("model").cloned().unwrap_or_default();
+    let caps = fig3_capacities();
+    for m in zoo_models() {
+        if !filter.is_empty() && !m.name.contains(&filter) {
+            continue;
+        }
+        let c1 = roofline_curve(&m, &caps, 1.0);
+        let c10 = roofline_curve(&m, &caps, 10.0);
+        report::print_roofline_curves(&m.name, &c1, &c10);
+        println!();
+    }
+    Ok(())
+}
+
+/// Fig 4.
+fn cmd_fleet(flags: &BTreeMap<String, String>) -> Result<()> {
+    println!("== Fig 4: time spent in operators across the (simulated) fleet ==\n");
+    let requests = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let zoo = representative_zoo();
+    let dev = DeviceSpec::xeon_fp32();
+    let agent = simulate_fleet(&zoo, &dev, &FleetConfig { requests, ..Default::default() });
+    report::print_breakdown(&agent.breakdown());
+    println!("\nroofline inefficiency (measured/predicted) by bucket:");
+    for (bucket, ineff) in agent.inefficiency_by_bucket() {
+        println!("  {bucket:<12} {ineff:.2}x");
+    }
+    println!("\noptimization benefit (fraction of fleet time recoverable):");
+    for bucket in ["FC", "Embedding", "TensorManip", "Conv"] {
+        println!("  {bucket:<12} {:.1}%", agent.optimization_benefit(bucket) * 100.0);
+    }
+    Ok(())
+}
+
+/// Fig 5.
+fn cmd_shapes() -> Result<()> {
+    println!("== Fig 5: activation/weight matrix shapes across the zoo ==\n");
+    let pts = shape_survey(&zoo_models());
+    println!(
+        "{:<28} {:<14} {:>9} {:>7} {:>7} {:>5} {:>10}",
+        "model", "class", "M", "N", "K", "G", "intensity"
+    );
+    for p in pts.iter().take(60) {
+        println!(
+            "{:<28} {:<14} {:>9} {:>7} {:>7} {:>5} {:>10.1}",
+            p.model,
+            format!("{:?}", p.class),
+            p.m,
+            p.n,
+            p.k,
+            p.groups,
+            p.intensity()
+        );
+    }
+    let narrow = pts.iter().filter(|p| p.is_matrix_vector_like()).count();
+    println!(
+        "\n{} shapes total; {} ({:.0}%) are matrix-vector-like (M or N < 32)",
+        pts.len(),
+        narrow,
+        narrow as f64 / pts.len() as f64 * 100.0
+    );
+    Ok(())
+}
+
+/// §3.3 fusion mining.
+fn cmd_mine(flags: &BTreeMap<String, String>) -> Result<()> {
+    println!("== §3.3: frequent-subgraph mining + roofline fusion ranking ==\n");
+    let top_k = flags.get("top").and_then(|v| v.parse().ok()).unwrap_or(10);
+    let zoo = representative_zoo();
+    let nets: Vec<(Net, f64)> =
+        zoo.iter().map(|e| (Net::from_model(&e.desc, 4), e.fleet_weight * 1000.0)).collect();
+    let mined = mine_frequent_subgraphs(&nets, 3, 1.0);
+    println!("{} candidate subgraphs mined", mined.len());
+    let dev = DeviceSpec::xeon_fp32();
+    let top = rank_opportunities(&mined, &dev, top_k);
+    println!("\ntop-{top_k} opportunities (by fleet-weighted saving):");
+    println!("{:<40} {:>10} {:>9} {:>14}", "subgraph", "freq", "speedup", "saving (ms)");
+    for o in &top {
+        println!(
+            "{:<40} {:>10.0} {:>8.2}x {:>14.3}",
+            o.signature,
+            o.frequency,
+            o.speedup(),
+            o.weighted_saving * 1e3
+        );
+    }
+    Ok(())
+}
+
+/// §4 disaggregation bandwidth.
+fn cmd_disagg() -> Result<()> {
+    println!("== §4: dis-aggregated tier bandwidth (100 TOP/s device) ==\n");
+    let dev = DeviceSpec::fig3(32.0, 10.0);
+    println!("{:<28} {:>14} {:>14} {:>12}", "model", "inf/s", "ingress GB/s", "total GB/s");
+    for m in zoo_models() {
+        let r = disagg_bandwidth(&m, &dev);
+        println!(
+            "{:<28} {:>14.0} {:>14.3} {:>12.3}",
+            r.model,
+            r.inferences_per_s,
+            r.ingress_bytes_s / 1e9,
+            r.total_gbps()
+        );
+    }
+    Ok(())
+}
+
+/// §4 co-design directions: design grid x zoo (see bench codesign_sweep).
+fn cmd_codesign() -> Result<()> {
+    println!("== §4: accelerator design-space sweep (geomean TOP/s per category) ==\n");
+    let zoo = representative_zoo();
+    let designs = [
+        ("compute-heavy", 200e12, 100e9, 16.0),
+        ("balanced", 100e12, 100e9, 32.0),
+        ("bandwidth-heavy", 50e12, 400e9, 16.0),
+        ("capacity-heavy", 100e12, 100e9, 128.0),
+    ];
+    println!("{:<18} {:>12} {:>12} {:>12}", "design", "recsys", "cv", "nmt");
+    for (name, ops, bw, mb) in designs {
+        let dev = dcinfer::perfmodel::DeviceSpec {
+            name,
+            peak_ops: ops,
+            dram_bw: bw,
+            onchip_capacity: mb * 1e6,
+            onchip_bw: 10e12,
+            weight_bytes_per_elem: 1.0,
+            act_bytes_per_elem: 1.0,
+        };
+        let mut sums = std::collections::BTreeMap::new();
+        for e in &zoo {
+            let r = dcinfer::perfmodel::roofline_model(&e.desc, &dev);
+            let key = format!("{:?}", e.desc.category);
+            let ent = sums.entry(key).or_insert((0.0f64, 0usize));
+            ent.0 += (r.achieved_ops / 1e12).ln();
+            ent.1 += 1;
+        }
+        let g = |k: &str| {
+            let (s, n) = sums[k];
+            (s / n as f64).exp()
+        };
+        println!(
+            "{:<18} {:>12.2} {:>12.2} {:>12.2}",
+            name,
+            g("Recommendation"),
+            g("ComputerVision"),
+            g("Language")
+        );
+    }
+    println!("\n(recommendation/NMT want bandwidth; CV wants capacity — no single winner)");
+    Ok(())
+}
+
+/// Run the serving tier under synthetic load.
+fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
+    let n: u64 = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(500);
+    let executors = flags.get("executors").and_then(|v| v.parse().ok()).unwrap_or(2);
+    let qps: f64 = flags.get("qps").and_then(|v| v.parse().ok()).unwrap_or(2000.0);
+    println!("== serving tier: {n} requests @ {qps} offered qps, {executors} executors ==\n");
+
+    let tier = InferenceTier::start(TierConfig { executors, ..Default::default() })?;
+    let mut rng = Pcg32::seeded(42);
+    let gap = std::time::Duration::from_secs_f64(1.0 / qps);
+    let mut receivers = Vec::with_capacity(n as usize);
+    let t0 = Instant::now();
+    for i in 0..n {
+        let mut dense = vec![0f32; tier.dense_dim];
+        rng.fill_normal(&mut dense, 0.0, 1.0);
+        let indices: Vec<i32> = (0..tier.n_tables * tier.pool_size)
+            .map(|_| rng.zipf(tier.rows_per_table as u32, 1.05) as i32)
+            .collect();
+        receivers.push(tier.submit(InferRequest {
+            id: i,
+            dense,
+            indices,
+            arrival: Instant::now(),
+            deadline_ms: 100.0,
+        })?);
+        std::thread::sleep(gap);
+    }
+    for rx in receivers {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = tier.metrics.snapshot();
+    snap.print();
+    println!("wall time {wall:.2}s, achieved {:.0} req/s end-to-end", n as f64 / wall);
+    tier.shutdown();
+    Ok(())
+}

@@ -1,0 +1,381 @@
+//! Computer-vision model descriptors (§2.1.2).
+//!
+//! - [`resnet50`]: the classification baseline (25M params, ~8 GFLOPs).
+//! - [`resnext101`]: ResNeXt-101-32xNd — group convolutions with G=32 and
+//!   bottleneck width d; d=4 gives 43M params / 8B MACs, d=48 gives 829M
+//!   params / 153B MACs (paper numbers).
+//! - [`faster_rcnn_shuffle`]: the Rosetta text detector — ShuffleNet
+//!   trunk at 800x600 input plus a proposal-batched detection head.
+//! - [`resnext3d_101`]: video model with the channel/spatiotemporal
+//!   factorization (97.1% of FLOPs in 1x1x1 convolutions).
+
+use super::{
+    conv2d, conv3d, elementwise, fc, pool, softmax, tensor_manip, Category, LatencyClass, Layer,
+    ModelDesc,
+};
+
+/// Bottleneck residual block (ResNet / ResNeXt): 1x1 down, 3x3 (grouped),
+/// 1x1 up, (+ projection on the first block of a stage).
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(
+    layers: &mut Vec<Layer>,
+    prefix: &str,
+    b: u64,
+    ci: u64,
+    h: u64,
+    w: u64,
+    inner: u64,
+    co: u64,
+    stride: u64,
+    groups: u64,
+) -> (u64, u64) {
+    let (l1, _) = conv2d(&format!("{prefix}.conv1_1x1"), b, ci, h, w, inner, 1, 1, 1, 1);
+    layers.push(l1);
+    layers.push(elementwise(&format!("{prefix}.relu1"), b * inner * h * w));
+    let (l2, (h2, w2)) =
+        conv2d(&format!("{prefix}.conv2_3x3"), b, inner, h, w, inner, 3, 3, stride, groups);
+    layers.push(l2);
+    layers.push(elementwise(&format!("{prefix}.relu2"), b * inner * h2 * w2));
+    let (l3, _) = conv2d(&format!("{prefix}.conv3_1x1"), b, inner, h2, w2, co, 1, 1, 1, 1);
+    layers.push(l3);
+    if stride != 1 || ci != co {
+        let (proj, _) =
+            conv2d(&format!("{prefix}.proj_1x1"), b, ci, h, w, co, 1, 1, stride, 1);
+        layers.push(proj);
+    }
+    layers.push(elementwise(&format!("{prefix}.add_relu"), b * co * h2 * w2));
+    (h2, w2)
+}
+
+fn resnet_like(
+    name: &str,
+    b: u64,
+    blocks: [u64; 4],
+    inner_base: u64,
+    groups: u64,
+) -> ModelDesc {
+    let mut layers = Vec::new();
+    let (stem, (mut h, mut w)) = conv2d("stem.conv7x7", b, 3, 224, 224, 64, 7, 7, 2, 1);
+    layers.push(stem);
+    layers.push(pool("stem.maxpool", b * 64 * h * w, b * 64 * (h / 2) * (w / 2)));
+    h /= 2;
+    w /= 2;
+
+    let mut ci = 64u64;
+    for (s, &n_blocks) in blocks.iter().enumerate() {
+        let inner = inner_base << s;
+        let co = 256u64 << s;
+        for blk in 0..n_blocks {
+            let stride = if s > 0 && blk == 0 { 2 } else { 1 };
+            let (h2, w2) = bottleneck(
+                &mut layers,
+                &format!("stage{}.block{}", s + 1, blk),
+                b,
+                ci,
+                h,
+                w,
+                inner,
+                co,
+                stride,
+                groups,
+            );
+            h = h2;
+            w = w2;
+            ci = co;
+        }
+    }
+    layers.push(pool("head.avgpool", b * ci * h * w, b * ci));
+    layers.push(fc("head.fc1000", b, 1000, ci));
+    layers.push(softmax("head.softmax", b * 1000));
+    ModelDesc {
+        name: name.to_string(),
+        category: Category::ComputerVision,
+        batch: b,
+        layers,
+        latency: LatencyClass::Relaxed,
+    }
+}
+
+/// ResNet-50 at 224x224 (per-image descriptor; Table-1 row 3).
+pub fn resnet50(batch: u64) -> ModelDesc {
+    resnet_like("resnet50", batch, [3, 4, 6, 3], 64, 1)
+}
+
+/// ResNeXt-101-32xNd: `d` is the bottleneck width per group (4 or 48).
+pub fn resnext101(batch: u64, d: u64) -> ModelDesc {
+    let name = format!("resnext101_32x{d}d");
+    resnet_like(&name, batch, [3, 4, 23, 3], 32 * d, 32)
+}
+
+/// ShuffleNet unit (g=4): 1x1 group conv -> channel shuffle -> 3x3
+/// depth-wise -> 1x1 group conv (+ residual / concat on stride 2).
+fn shuffle_unit(
+    layers: &mut Vec<Layer>,
+    prefix: &str,
+    b: u64,
+    ci: u64,
+    h: u64,
+    w: u64,
+    co: u64,
+    stride: u64,
+    g: u64,
+) -> (u64, u64) {
+    let mid = co / 4;
+    let (l1, _) = conv2d(&format!("{prefix}.gconv1_1x1"), b, ci, h, w, mid, 1, 1, 1, g);
+    layers.push(l1);
+    layers.push(tensor_manip(&format!("{prefix}.shuffle"), b * mid * h * w));
+    let (l2, (h2, w2)) =
+        conv2d(&format!("{prefix}.dwconv3x3"), b, mid, h, w, mid, 3, 3, stride, mid);
+    layers.push(l2);
+    // on stride-2 units the output concatenates with an avg-pooled shortcut
+    let co_conv = if stride == 2 { co - ci } else { co };
+    let (l3, _) = conv2d(&format!("{prefix}.gconv2_1x1"), b, mid, h2, w2, co_conv, 1, 1, 1, g);
+    layers.push(l3);
+    if stride == 2 {
+        layers.push(pool(&format!("{prefix}.shortcut_pool"), b * ci * h * w, b * ci * h2 * w2));
+        layers.push(tensor_manip(&format!("{prefix}.concat"), b * co * h2 * w2));
+    } else {
+        layers.push(elementwise(&format!("{prefix}.add"), b * co * h2 * w2));
+    }
+    layers.push(elementwise(&format!("{prefix}.relu"), b * co * h2 * w2));
+    (h2, w2)
+}
+
+/// Faster-RCNN-Shuffle (Rosetta text detection): ShuffleNet-1x (g=4)
+/// trunk on a 3x800x600 input + RPN + a proposal-batched head
+/// ([25-100 proposals] x [544 or 1088 ch] x [7x7 or 14x14], §2.1.2).
+pub fn faster_rcnn_shuffle(proposals: u64) -> ModelDesc {
+    let b = 1u64;
+    let g = 4u64;
+    // ShuffleNet g=4 stage widths
+    let (s2, s3, s4) = (272u64, 544, 1088);
+    let mut layers = Vec::new();
+    let (stem, (mut h, mut w)) = conv2d("stem.conv3x3", b, 3, 800, 600, 24, 3, 3, 2, 1);
+    layers.push(stem);
+    layers.push(pool("stem.maxpool", b * 24 * h * w, b * 24 * (h / 2) * (w / 2)));
+    h /= 2;
+    w /= 2;
+    let mut ci = 24u64;
+    for (si, (width, n_units)) in [(s2, 4u64), (s3, 8), (s4, 4)].iter().enumerate() {
+        for u in 0..*n_units {
+            let stride = if u == 0 { 2 } else { 1 };
+            let (h2, w2) = shuffle_unit(
+                &mut layers,
+                &format!("stage{}.unit{}", si + 2, u),
+                b,
+                ci,
+                h,
+                w,
+                *width,
+                stride,
+                g,
+            );
+            h = h2;
+            w = w2;
+            ci = *width;
+        }
+    }
+    // RPN over the s4 feature map
+    let (rpn, _) = conv2d("rpn.conv3x3", b, ci, h, w, 256, 3, 3, 1, 1);
+    layers.push(rpn);
+    let (rpn_cls, _) = conv2d("rpn.cls_1x1", b, 256, h, w, 15, 1, 1, 1, 1);
+    layers.push(rpn_cls);
+    let (rpn_box, _) = conv2d("rpn.box_1x1", b, 256, h, w, 60, 1, 1, 1, 1);
+    layers.push(rpn_box);
+    // RoI-align crops proposals from the stage-3 (544-channel) map:
+    // activations [proposals x 544 x 14 x 14] (paper: 25-100 proposals x
+    // [544 or 1088 ch] x [7,14]^2)
+    layers.push(tensor_manip("roi.align", proposals * s3 * 14 * 14));
+
+    // detection head batched over proposals: final shuffle-style stage
+    // (544 -> 1088, 14x14 -> 7x7), then cls/box FCs
+    let pb = proposals;
+    let (hd1, _) = conv2d("head.gconv1_1x1", pb, s3, 14, 14, s3 / 4, 1, 1, 1, g);
+    layers.push(hd1);
+    let (hd2, _) = conv2d("head.dwconv3x3", pb, s3 / 4, 14, 14, s3 / 4, 3, 3, 2, s3 / 4);
+    layers.push(hd2);
+    let (hd3, _) = conv2d("head.gconv2_1x1", pb, s3 / 4, 7, 7, s4, 1, 1, 1, g);
+    layers.push(hd3);
+    layers.push(pool("head.avgpool", pb * s4 * 7 * 7, pb * s4));
+    layers.push(fc("head.cls_fc", pb, 2, s4));
+    layers.push(fc("head.box_fc", pb, 8, s4));
+    layers.push(softmax("head.softmax", pb * 2));
+
+    ModelDesc {
+        name: "faster_rcnn_shuffle".to_string(),
+        category: Category::ComputerVision,
+        batch: 1,
+        layers,
+        latency: LatencyClass::Relaxed,
+    }
+}
+
+/// ResNeXt3D-101: clip input (F frames at 112x112 spatial, trading
+/// spatial resolution for clip length per the paper), with every
+/// bottleneck factorized into 1x1x1 convs + a 3x3x3 *depth-wise*
+/// spatiotemporal conv. 97%+ of FLOPs land in the 1x1x1 convolutions.
+pub fn resnext3d_101(frames: u64) -> ModelDesc {
+    let b = 1u64;
+    // the paper trades spatial resolution for clip length: 112x112 crops
+    // with longer clips beat 224x224 with fewer frames
+    let (mut f, mut h, mut w) = (frames, 112u64, 112u64);
+    let mut layers = Vec::new();
+    let (stem, (f2, h2, w2)) =
+        conv3d("stem.conv1x7x7", b, 3, f, h, w, 64, 1, 7, 7, 1, 2, 1);
+    layers.push(stem);
+    f = f2;
+    h = h2 / 2; // stem pool
+    w = w2 / 2;
+    layers.push(pool("stem.pool", b * 64 * f2 * h2 * w2, b * 64 * f * h * w));
+
+    let blocks = [3u64, 4, 23, 3];
+    let mut ci = 64u64;
+    for (s, &n_blocks) in blocks.iter().enumerate() {
+        let inner = 64u64 << s; // channel-separated widths (21M params)
+        let co = 256u64 << s;
+        for blk in 0..n_blocks {
+            let stride = if s > 0 && blk == 0 { 2 } else { 1 };
+            let stride_t = if s > 0 && blk == 0 && f > 1 { 2 } else { 1 };
+            let p = format!("stage{}.block{}", s + 1, blk);
+            let (l1, _) = conv3d(&format!("{p}.conv1_1x1x1"), b, ci, f, h, w, inner, 1, 1, 1, 1, 1, 1);
+            layers.push(l1);
+            let (l2, (f2, h2, w2)) = conv3d(
+                &format!("{p}.dwconv3x3x3"),
+                b,
+                inner,
+                f,
+                h,
+                w,
+                inner,
+                3,
+                3,
+                3,
+                stride_t,
+                stride,
+                inner,
+            );
+            layers.push(l2);
+            let (l3, _) =
+                conv3d(&format!("{p}.conv3_1x1x1"), b, inner, f2, h2, w2, co, 1, 1, 1, 1, 1, 1);
+            layers.push(l3);
+            if stride != 1 || ci != co {
+                let (proj, _) =
+                    conv3d(&format!("{p}.proj"), b, ci, f, h, w, co, 1, 1, 1, stride_t, stride, 1);
+                layers.push(proj);
+            }
+            layers.push(elementwise(&format!("{p}.add_relu"), b * co * f2 * h2 * w2));
+            f = f2;
+            h = h2;
+            w = w2;
+            ci = co;
+        }
+    }
+    layers.push(pool("head.avgpool", b * ci * f * h * w, b * ci));
+    layers.push(fc("head.fc", b, 400, ci));
+    layers.push(softmax("head.softmax", b * 400));
+    ModelDesc {
+        name: "resnext3d_101".to_string(),
+        category: Category::ComputerVision,
+        batch: 1,
+        layers,
+        latency: LatencyClass::Relaxed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::OpClass;
+
+    #[test]
+    fn resnet50_param_and_flop_counts_match_paper() {
+        let m = resnet50(1);
+        // 25.5M params, ~4.1 GMACs = 8.2 GFLOPs at 224x224
+        let p = m.params() as f64;
+        assert!((24e6..27e6).contains(&p), "params {p}");
+        let f = m.flops() as f64;
+        assert!((7e9..9e9).contains(&f), "flops {f}");
+    }
+
+    #[test]
+    fn resnext101_32x4d_matches_paper() {
+        let m = resnext101(1, 4);
+        // paper: 43M params, 8B multiply-adds (=16B ops)
+        let p = m.params() as f64;
+        assert!((40e6..48e6).contains(&p), "params {p}");
+        let macs = m.flops() as f64 / 2.0;
+        assert!((7e9..9.5e9).contains(&macs), "macs {macs}");
+    }
+
+    #[test]
+    fn resnext101_32x48d_matches_paper() {
+        let m = resnext101(1, 48);
+        // paper: 829M params, 153B multiply-adds
+        let p = m.params() as f64;
+        assert!((780e6..880e6).contains(&p), "params {p}");
+        let macs = m.flops() as f64 / 2.0;
+        assert!((130e9..175e9).contains(&macs), "macs {macs}");
+    }
+
+    #[test]
+    fn rcnn_shuffle_params_match_paper() {
+        let m = faster_rcnn_shuffle(50);
+        // paper: 6M params
+        let p = m.params() as f64;
+        assert!((3e6..8e6).contains(&p), "params {p}");
+        // detection input 9.5x larger than classification
+        let input = m.layers[0].act_in_elems as f64;
+        assert!((input / (3.0 * 224.0 * 224.0) - 9.56).abs() < 0.3);
+    }
+
+    #[test]
+    fn rcnn_head_shapes_are_proposal_batched() {
+        let m = faster_rcnn_shuffle(100);
+        let head = m.layers.iter().find(|l| l.name == "head.gconv1_1x1").unwrap();
+        let g = head.gemm.unwrap();
+        assert_eq!(g.m, 100 * 14 * 14);
+        assert_eq!(g.groups, 4);
+    }
+
+    #[test]
+    fn resnext3d_params_match_paper() {
+        let m = resnext3d_101(32);
+        // paper: 21M params
+        let p = m.params() as f64;
+        assert!((17e6..26e6).contains(&p), "params {p}");
+    }
+
+    #[test]
+    fn resnext3d_flops_dominated_by_1x1x1() {
+        let m = resnext3d_101(32);
+        let total = m.flops() as f64;
+        let pointwise: u64 = m
+            .layers
+            .iter()
+            .filter(|l| l.name.contains("1x1x1") || l.name.contains("proj"))
+            .map(|l| l.flops)
+            .sum();
+        // paper: 97.1% of FLOPs in 1x1x1 convolutions
+        assert!(pointwise as f64 / total > 0.88, "{}", pointwise as f64 / total); // paper: 97.1% within the residual blocks; our share includes the stem
+        let dw: u64 = m
+            .layers
+            .iter()
+            .filter(|l| l.class == OpClass::DepthwiseConv)
+            .map(|l| l.flops)
+            .sum();
+        assert!((dw as f64 / total) < 0.05);
+    }
+
+    #[test]
+    fn max_live_activations_scale_with_input() {
+        // Table 1: ResNet-50 ~2M, ResNeXt3D ~58M live activations
+        let r50 = resnet50(1).max_live_activations() as f64;
+        assert!((1e6..4e6).contains(&r50), "{r50}");
+        // our live-set proxy is per-layer (in + out), a lower bound on
+        // the paper's whole-graph 58M live set
+        let v = resnext3d_101(32).max_live_activations() as f64;
+        assert!((8e6..80e6).contains(&v), "{v}");
+        let det = faster_rcnn_shuffle(50).max_live_activations() as f64;
+        assert!((8e6..16e6).contains(&det), "{det}"); // paper: 13.2M
+    }
+}

@@ -1,0 +1,446 @@
+//! Model zoo: layer-graph descriptors of every Table-1 model.
+//!
+//! Table 1, Fig 3 (roofline), Fig 4 (fleet op shares) and Fig 5 (matrix
+//! shapes) depend only on per-layer *shapes* — all public in the papers
+//! the models come from — so the zoo describes each model as an ordered
+//! list of [`Layer`]s carrying op class, FLOPs, weight/activation
+//! element counts and (when GEMM-lowerable) the (M, N, K, G) shape.
+//!
+//! Builders:
+//! - [`recsys`]       — Fig-2 recommendation model (embeddings + MLPs)
+//! - [`resnet50`]     — classification baseline (§2.1.2)
+//! - [`resnext101`]   — ResNeXt-101-32x4d / 32x48d group-conv models
+//! - [`faster_rcnn_shuffle`] — Rosetta text detection (ShuffleNet trunk)
+//! - [`resnext3d_101`] — video model, depth-wise spatiotemporal factorization
+//! - [`seq2seq_gru`]  — NMT encoder/decoder (§2.1.3)
+
+pub mod cv;
+pub mod nmt;
+pub mod rec;
+pub mod zoo;
+
+pub use cv::{faster_rcnn_shuffle, resnet50, resnext101, resnext3d_101};
+pub use nmt::{seq2seq_default, seq2seq_gru, seq2seq_lstm};
+pub use rec::{recsys, RecsysScale};
+pub use zoo::{representative_zoo, zoo_entry, ZooEntry};
+
+/// Operator class, following the Caffe2 buckets of Fig 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// Fully connected (Caffe2 `FC`): the paper's top CPU consumer.
+    Fc,
+    /// Dense convolution (lowered to GEMM via im2col shapes).
+    Conv,
+    /// Group convolution (G independent narrow GEMMs).
+    GroupConv,
+    /// Depth-wise convolution (bandwidth bound, §2.1.2).
+    DepthwiseConv,
+    /// Embedding lookup (`SparseLengthsSum`).
+    Embedding,
+    /// Recurrent cell matmuls (GRU/LSTM gates).
+    Recurrent,
+    /// Elementwise / activation ops.
+    Elementwise,
+    /// Concat/split/slice/transpose ("Tensor Manipulation" in Fig 4).
+    TensorManip,
+    /// Pooling.
+    Pool,
+    /// Softmax / normalization.
+    Softmax,
+}
+
+impl OpClass {
+    /// Fig-4 bucket name.
+    pub fn bucket(self) -> &'static str {
+        match self {
+            OpClass::Fc => "FC",
+            OpClass::Conv | OpClass::GroupConv | OpClass::DepthwiseConv => "Conv",
+            OpClass::Embedding => "Embedding",
+            OpClass::Recurrent => "Recurrent",
+            OpClass::Elementwise => "Elementwise",
+            OpClass::TensorManip => "TensorManip",
+            OpClass::Pool => "Pool",
+            OpClass::Softmax => "Softmax",
+        }
+    }
+}
+
+/// GEMM lowering of a layer: `[M x K] * [K x N]` per group (Fig 5 axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub groups: u64,
+}
+
+/// One layer of a model descriptor.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub class: OpClass,
+    /// multiply-add counted as 2 ops
+    pub flops: u64,
+    /// total parameter storage (capacity)
+    pub weight_elems: u64,
+    /// weight elements actually read per evaluation (= weight_elems for
+    /// dense layers; only the touched rows for embedding lookups)
+    pub weight_traffic_elems: u64,
+    pub act_in_elems: u64,
+    pub act_out_elems: u64,
+    pub gemm: Option<GemmShape>,
+}
+
+impl Layer {
+    /// Ops per weight element read (≈ 2M for a GEMM) — Table 1 col 6.
+    pub fn ops_per_weight(&self) -> f64 {
+        if self.weight_traffic_elems == 0 {
+            f64::INFINITY
+        } else {
+            self.flops as f64 / self.weight_traffic_elems as f64
+        }
+    }
+
+    /// Ops per element of total traffic (weights + activations) — col 7.
+    pub fn ops_per_elem(&self) -> f64 {
+        let traffic = self.weight_traffic_elems + self.act_in_elems + self.act_out_elems;
+        if traffic == 0 {
+            f64::INFINITY
+        } else {
+            self.flops as f64 / traffic as f64
+        }
+    }
+}
+
+/// Inference latency constraint class (Table 1 last column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LatencyClass {
+    /// "10s of ms" — ranking/recommendation and interactive NMT.
+    TensMs,
+    /// No strict constraint (offline CV understanding).
+    Relaxed,
+}
+
+/// Workload category (Table 1 col 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    Recommendation,
+    ComputerVision,
+    Language,
+}
+
+/// A model descriptor: ordered layers plus serving metadata.
+#[derive(Debug, Clone)]
+pub struct ModelDesc {
+    pub name: String,
+    pub category: Category,
+    pub batch: u64,
+    pub layers: Vec<Layer>,
+    pub latency: LatencyClass,
+}
+
+impl ModelDesc {
+    pub fn params(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_elems).sum()
+    }
+
+    /// Unique parameter count: weights shared across unrolled decode
+    /// steps (`...stepNN...` layers) are counted once.
+    pub fn unique_params(&self) -> u64 {
+        let mut seen = std::collections::HashSet::new();
+        let mut total = 0u64;
+        for l in &self.layers {
+            let canon: String = l
+                .name
+                .split('.')
+                .filter(|p| !p.starts_with("step"))
+                .collect::<Vec<_>>()
+                .join(".");
+            if seen.insert(canon) {
+                total += l.weight_elems;
+            }
+        }
+        total
+    }
+
+    pub fn flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.flops).sum()
+    }
+
+    /// Max live activations: the peak of (input + output) elements over
+    /// layers — the Table-1 "Max. Live Activations" proxy.
+    pub fn max_live_activations(&self) -> u64 {
+        self.layers.iter().map(|l| l.act_in_elems + l.act_out_elems).max().unwrap_or(0)
+    }
+
+    /// Model-level arithmetic intensity counting only weight traffic.
+    pub fn intensity_weights(&self) -> f64 {
+        let w: u64 = self.layers.iter().map(|l| l.weight_traffic_elems).sum();
+        if w == 0 {
+            f64::INFINITY
+        } else {
+            self.flops() as f64 / w as f64
+        }
+    }
+
+    /// Min per-layer ops/weight over layers that have weights.
+    pub fn min_ops_per_weight(&self) -> f64 {
+        self.layers
+            .iter()
+            .filter(|l| l.weight_traffic_elems > 0)
+            .map(|l| l.ops_per_weight())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Model-level intensity counting weights + activations.
+    pub fn intensity_full(&self) -> f64 {
+        let t: u64 = self
+            .layers
+            .iter()
+            .map(|l| l.weight_traffic_elems + l.act_in_elems + l.act_out_elems)
+            .sum();
+        if t == 0 {
+            f64::INFINITY
+        } else {
+            self.flops() as f64 / t as f64
+        }
+    }
+
+    /// Min per-layer full intensity.
+    pub fn min_intensity_full(&self) -> f64 {
+        self.layers
+            .iter()
+            .filter(|l| l.weight_traffic_elems > 0)
+            .map(|l| l.ops_per_elem())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// All GEMM shapes in the model (Fig 5 scatter points).
+    pub fn gemm_shapes(&self) -> Vec<(OpClass, GemmShape)> {
+        self.layers.iter().filter_map(|l| l.gemm.map(|g| (l.class, g))).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layer constructors shared by the builders
+// ---------------------------------------------------------------------------
+
+/// 2D convolution descriptor (NCHW, SAME-style integer output size).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    name: &str,
+    b: u64,
+    ci: u64,
+    h: u64,
+    w: u64,
+    co: u64,
+    kh: u64,
+    kw: u64,
+    stride: u64,
+    groups: u64,
+) -> (Layer, (u64, u64)) {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let m = b * ho * wo;
+    let n_per_g = co / groups;
+    let k_per_g = (ci / groups) * kh * kw;
+    let flops = 2 * m * n_per_g * k_per_g * groups;
+    let class = if groups == 1 {
+        OpClass::Conv
+    } else if groups == ci && ci == co {
+        OpClass::DepthwiseConv
+    } else {
+        OpClass::GroupConv
+    };
+    let layer = Layer {
+        name: name.to_string(),
+        class,
+        flops,
+        weight_elems: co * (ci / groups) * kh * kw,
+        weight_traffic_elems: co * (ci / groups) * kh * kw,
+        act_in_elems: b * ci * h * w,
+        act_out_elems: b * co * ho * wo,
+        gemm: Some(GemmShape { m, n: n_per_g, k: k_per_g, groups }),
+    };
+    (layer, (ho, wo))
+}
+
+/// 3D convolution (video): F frames in/out follow the stride on t.
+#[allow(clippy::too_many_arguments)]
+pub fn conv3d(
+    name: &str,
+    b: u64,
+    ci: u64,
+    f: u64,
+    h: u64,
+    w: u64,
+    co: u64,
+    kt: u64,
+    kh: u64,
+    kw: u64,
+    stride_t: u64,
+    stride_s: u64,
+    groups: u64,
+) -> (Layer, (u64, u64, u64)) {
+    let fo = f.div_ceil(stride_t);
+    let ho = h.div_ceil(stride_s);
+    let wo = w.div_ceil(stride_s);
+    let m = b * fo * ho * wo;
+    let n_per_g = co / groups;
+    let k_per_g = (ci / groups) * kt * kh * kw;
+    let flops = 2 * m * n_per_g * k_per_g * groups;
+    let class = if groups == 1 {
+        OpClass::Conv
+    } else if groups == ci && ci == co {
+        OpClass::DepthwiseConv
+    } else {
+        OpClass::GroupConv
+    };
+    let layer = Layer {
+        name: name.to_string(),
+        class,
+        flops,
+        weight_elems: co * (ci / groups) * kt * kh * kw,
+        weight_traffic_elems: co * (ci / groups) * kt * kh * kw,
+        act_in_elems: b * ci * f * h * w,
+        act_out_elems: b * co * fo * ho * wo,
+        gemm: Some(GemmShape { m, n: n_per_g, k: k_per_g, groups }),
+    };
+    (layer, (fo, ho, wo))
+}
+
+/// Fully connected: out = X[MxK] * W^T[KxN] (Caffe2 convention).
+pub fn fc(name: &str, m: u64, n: u64, k: u64) -> Layer {
+    Layer {
+        name: name.to_string(),
+        class: OpClass::Fc,
+        flops: 2 * m * n * k,
+        weight_elems: n * k + n,
+        weight_traffic_elems: n * k + n,
+        act_in_elems: m * k,
+        act_out_elems: m * n,
+        gemm: Some(GemmShape { m, n, k, groups: 1 }),
+    }
+}
+
+/// SparseLengthsSum over a table of `rows x dim`, `pool` lookups per bag.
+pub fn embedding(name: &str, batch: u64, rows: u64, dim: u64, pool: u64) -> Layer {
+    Layer {
+        name: name.to_string(),
+        class: OpClass::Embedding,
+        // pooling adds dim flops per gathered row
+        flops: batch * pool * dim,
+        weight_elems: rows * dim,
+        // only the gathered rows are read: the paper's intensity ~1-2
+        weight_traffic_elems: batch * pool * dim,
+        act_in_elems: batch * pool, // the indices
+        act_out_elems: batch * dim,
+        gemm: None,
+    }
+}
+
+/// Elementwise op over `elems` elements (ReLU, add, sigmoid...).
+pub fn elementwise(name: &str, elems: u64) -> Layer {
+    Layer {
+        name: name.to_string(),
+        class: OpClass::Elementwise,
+        flops: elems,
+        weight_elems: 0,
+        weight_traffic_elems: 0,
+        act_in_elems: elems,
+        act_out_elems: elems,
+        gemm: None,
+    }
+}
+
+/// Tensor manipulation (concat/split/transpose): pure data movement.
+pub fn tensor_manip(name: &str, elems: u64) -> Layer {
+    Layer {
+        name: name.to_string(),
+        class: OpClass::TensorManip,
+        flops: 0,
+        weight_elems: 0,
+        weight_traffic_elems: 0,
+        act_in_elems: elems,
+        act_out_elems: elems,
+        gemm: None,
+    }
+}
+
+/// Pooling over spatial dims.
+pub fn pool(name: &str, in_elems: u64, out_elems: u64) -> Layer {
+    Layer {
+        name: name.to_string(),
+        class: OpClass::Pool,
+        flops: in_elems,
+        weight_elems: 0,
+        weight_traffic_elems: 0,
+        act_in_elems: in_elems,
+        act_out_elems: out_elems,
+        gemm: None,
+    }
+}
+
+/// Softmax over `elems`.
+pub fn softmax(name: &str, elems: u64) -> Layer {
+    Layer {
+        name: name.to_string(),
+        class: OpClass::Softmax,
+        flops: 5 * elems, // exp + sum + div
+        weight_elems: 0,
+        weight_traffic_elems: 0,
+        act_in_elems: elems,
+        act_out_elems: elems,
+        gemm: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv2d_shapes_and_flops() {
+        // 3x224x224 -> 64 channels, 7x7 stride 2: the ResNet stem
+        let (l, (ho, wo)) = conv2d("stem", 1, 3, 224, 224, 64, 7, 7, 2, 1);
+        assert_eq!((ho, wo), (112, 112));
+        assert_eq!(l.weight_elems, 64 * 3 * 49);
+        assert_eq!(l.flops, 2 * 112 * 112 * 64 * 3 * 49);
+        assert_eq!(l.class, OpClass::Conv);
+        let g = l.gemm.unwrap();
+        assert_eq!((g.m, g.n, g.k, g.groups), (112 * 112, 64, 147, 1));
+    }
+
+    #[test]
+    fn depthwise_classification() {
+        let (l, _) = conv2d("dw", 1, 64, 56, 56, 64, 3, 3, 1, 64);
+        assert_eq!(l.class, OpClass::DepthwiseConv);
+        assert_eq!(l.weight_elems, 64 * 9);
+        let g = l.gemm.unwrap();
+        assert_eq!(g.n, 1);
+        assert_eq!(g.k, 9);
+    }
+
+    #[test]
+    fn group_conv_classification() {
+        let (l, _) = conv2d("g", 1, 256, 56, 56, 256, 1, 1, 1, 32);
+        assert_eq!(l.class, OpClass::GroupConv);
+        let g = l.gemm.unwrap();
+        assert_eq!(g.n, 8); // 256/32 output channels per group
+    }
+
+    #[test]
+    fn fc_intensity_is_2m() {
+        let l = fc("fc", 10, 64, 512);
+        // ops per weight ~ 2*M (bias makes it slightly lower)
+        assert!((l.ops_per_weight() - 2.0 * 10.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn embedding_low_intensity() {
+        let l = embedding("emb", 16, 10_000_000, 64, 32);
+        // Table 1: embeddings are intensity 1-2 over *touched* rows
+        assert!(l.ops_per_weight() >= 0.9 && l.ops_per_weight() <= 2.0);
+        assert_eq!(l.act_out_elems, 16 * 64);
+    }
+}

@@ -1,0 +1,217 @@
+//! Neural machine translation descriptor (§2.1.3): seq2seq with GRU
+//! encoder/decoder. Table-1 row: 100M-1B params, batch 1-8 tokens,
+//! arithmetic intensity 2-20, 10s-of-ms latency budget.
+//!
+//! Inference decodes autoregressively with beam search, so the decoder
+//! GRU runs `out_len * beam`-row GEMMs — the canonical small-batch,
+//! bandwidth-bound workload of §2.2.
+
+use super::{elementwise, embedding, fc, softmax, Category, LatencyClass, Layer, ModelDesc};
+
+/// One GRU cell step as three gate GEMMs (W and U fused per gate pair).
+fn gru_cell(layers: &mut Vec<Layer>, prefix: &str, rows: u64, hidden: u64) {
+    // 3 gates x (W x + U h): lower as [rows, 2H] x [2H, 3H]
+    let mut l = fc(&format!("{prefix}.gates"), rows, 3 * hidden, 2 * hidden);
+    l.class = super::OpClass::Recurrent;
+    layers.push(l);
+    layers.push(elementwise(&format!("{prefix}.gate_act"), rows * 3 * hidden));
+    layers.push(elementwise(&format!("{prefix}.blend"), rows * hidden));
+}
+
+/// One LSTM cell step: four gates (i, f, g, o) + cell blend — the
+/// paper's other recurrent option ("GRU [12] or LSTM [29] cells").
+/// 33% more gate parameters than GRU at the same hidden size.
+fn lstm_cell(layers: &mut Vec<Layer>, prefix: &str, rows: u64, hidden: u64) {
+    let mut l = fc(&format!("{prefix}.gates"), rows, 4 * hidden, 2 * hidden);
+    l.class = super::OpClass::Recurrent;
+    layers.push(l);
+    layers.push(elementwise(&format!("{prefix}.gate_act"), rows * 4 * hidden));
+    layers.push(elementwise(&format!("{prefix}.cell_blend"), rows * 2 * hidden));
+}
+
+/// seq2seq GRU NMT model.
+///
+/// * `batch`    — sentences decoded together (1-8 in Table 1)
+/// * `in_len`   — source sentence length
+/// * `out_len`  — decoded length
+/// * `beam`     — beam width (decoder effective rows = batch*beam)
+pub fn seq2seq_gru(
+    batch: u64,
+    in_len: u64,
+    out_len: u64,
+    beam: u64,
+    hidden: u64,
+    layers_per_dir: u64,
+    vocab: u64,
+) -> ModelDesc {
+    let mut layers = Vec::new();
+    // source token embedding (lookup table, pool=1)
+    layers.push(embedding("enc.embed", batch * in_len, vocab, hidden, 1));
+    // encoder: bidirectional-ish stack, processes the whole source; the
+    // GEMM batches over all source positions.
+    for l in 0..layers_per_dir {
+        gru_cell(&mut layers, &format!("enc.layer{l}"), batch * in_len, hidden);
+    }
+    // decoder: one step at a time (autoregressive), beam-expanded rows
+    let dec_rows = batch * beam;
+    for step in 0..out_len {
+        layers.push(embedding(&format!("dec.step{step}.embed"), dec_rows, vocab, hidden, 1));
+        for l in 0..layers_per_dir {
+            gru_cell(&mut layers, &format!("dec.step{step}.layer{l}"), dec_rows, hidden);
+        }
+        // attention over source states
+        let mut att = fc(&format!("dec.step{step}.attn_score"), dec_rows, in_len, hidden);
+        att.class = super::OpClass::Recurrent;
+        layers.push(att);
+        layers.push(softmax(&format!("dec.step{step}.attn_softmax"), dec_rows * in_len));
+        layers.push(elementwise(&format!("dec.step{step}.attn_mix"), dec_rows * hidden * 2));
+        // output projection to vocab
+        layers.push(fc(&format!("dec.step{step}.proj_vocab"), dec_rows, vocab, hidden));
+        layers.push(softmax(&format!("dec.step{step}.softmax"), dec_rows * vocab));
+    }
+    ModelDesc {
+        name: format!("seq2seq_gru_b{batch}"),
+        category: Category::Language,
+        batch,
+        layers,
+        latency: LatencyClass::TensMs,
+    }
+}
+
+/// The Table-1 configuration: hidden 1024, 4 layers, 32k vocab.
+pub fn seq2seq_default(batch: u64) -> ModelDesc {
+    seq2seq_gru(batch, 20, 20, 4, 1024, 4, 32_768)
+}
+
+/// LSTM variant of the Table-1 seq2seq model (same topology, 4-gate
+/// cells). Used by the characterization tests to confirm the Table-1
+/// bands are cell-agnostic.
+pub fn seq2seq_lstm(batch: u64, in_len: u64, out_len: u64, beam: u64, hidden: u64,
+                    layers_per_dir: u64, vocab: u64) -> ModelDesc {
+    let mut layers = Vec::new();
+    layers.push(embedding("enc.embed", batch * in_len, vocab, hidden, 1));
+    for l in 0..layers_per_dir {
+        lstm_cell(&mut layers, &format!("enc.layer{l}"), batch * in_len, hidden);
+    }
+    let dec_rows = batch * beam;
+    for step in 0..out_len {
+        layers.push(embedding(&format!("dec.step{step}.embed"), dec_rows, vocab, hidden, 1));
+        for l in 0..layers_per_dir {
+            lstm_cell(&mut layers, &format!("dec.step{step}.layer{l}"), dec_rows, hidden);
+        }
+        layers.push(fc(&format!("dec.step{step}.proj_vocab"), dec_rows, vocab, hidden));
+        layers.push(softmax(&format!("dec.step{step}.softmax"), dec_rows * vocab));
+    }
+    ModelDesc {
+        name: format!("seq2seq_lstm_b{batch}"),
+        category: Category::Language,
+        batch,
+        layers,
+        latency: LatencyClass::TensMs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::OpClass;
+
+    /// Unique parameter count (weights shared across decode steps are
+    /// counted once here).
+    fn unique_params(m: &ModelDesc) -> u64 {
+        // encoder + one decoder step's recurrent/fc weights + embeddings
+        let mut seen = std::collections::HashSet::new();
+        let mut total = 0u64;
+        for l in &m.layers {
+            // strip the stepNN. component to dedupe shared weights
+            let canon = l
+                .name
+                .split('.')
+                .filter(|p| !p.starts_with("step"))
+                .collect::<Vec<_>>()
+                .join(".");
+            if seen.insert(canon) {
+                total += l.weight_elems;
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn params_in_table1_range() {
+        let m = seq2seq_default(1);
+        let p = unique_params(&m);
+        // Table 1: 100M-1B params
+        assert!((90_000_000..1_000_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn decoder_gemms_are_tall_skinny() {
+        // batch 1, beam 4: decoder GEMM rows = 4 — the Fig-5 triangle zone
+        let m = seq2seq_default(1);
+        let dec_gates: Vec<_> = m
+            .layers
+            .iter()
+            .filter(|l| l.name.contains("dec.") && l.name.contains("gates"))
+            .collect();
+        assert!(!dec_gates.is_empty());
+        for l in dec_gates {
+            assert_eq!(l.gemm.unwrap().m, 4);
+        }
+    }
+
+    #[test]
+    fn recurrent_intensity_in_table1_band() {
+        // Table 1: seq2seq intensity 2-20. The band is set by the
+        // *decoder* (1-8 effective rows); the encoder batches over all
+        // source positions and is naturally denser.
+        let m = seq2seq_default(2);
+        let dec: Vec<_> = m
+            .layers
+            .iter()
+            .filter(|l| l.class == OpClass::Recurrent && l.name.starts_with("dec."))
+            .collect();
+        assert!(!dec.is_empty());
+        for l in dec {
+            let i = l.ops_per_weight();
+            assert!((2.0..=20.0).contains(&i), "{} intensity {i}", l.name);
+        }
+    }
+
+    #[test]
+    fn lstm_has_more_gate_params_than_gru() {
+        let gru = seq2seq_gru(1, 20, 20, 4, 1024, 4, 32_768);
+        let lstm = seq2seq_lstm(1, 20, 20, 4, 1024, 4, 32_768);
+        let gates = |m: &ModelDesc| -> u64 {
+            m.layers
+                .iter()
+                .filter(|l| l.class == OpClass::Recurrent && l.name.starts_with("enc."))
+                .map(|l| l.weight_elems)
+                .sum()
+        };
+        // 4 gates vs 3: exactly 4/3 the recurrent parameters
+        let (g, l) = (gates(&gru) as f64, gates(&lstm) as f64);
+        assert!((l / g - 4.0 / 3.0).abs() < 0.01, "{l} / {g}");
+    }
+
+    #[test]
+    fn lstm_decoder_stays_in_table1_intensity_band() {
+        let m = seq2seq_lstm(2, 20, 20, 4, 1024, 4, 32_768);
+        for l in m
+            .layers
+            .iter()
+            .filter(|l| l.class == OpClass::Recurrent && l.name.starts_with("dec."))
+        {
+            let i = l.ops_per_weight();
+            assert!((2.0..=20.0).contains(&i), "{} intensity {i}", l.name);
+        }
+    }
+
+    #[test]
+    fn decode_steps_scale_layers() {
+        let short = seq2seq_gru(1, 10, 5, 4, 256, 2, 1000);
+        let long = seq2seq_gru(1, 10, 20, 4, 256, 2, 1000);
+        assert!(long.layers.len() > short.layers.len());
+        assert!(long.flops() > 3 * short.flops() / 2);
+    }
+}

@@ -1,0 +1,160 @@
+//! Recommendation model descriptor (Fig 2, §2.1.1).
+//!
+//! Two scales:
+//! - [`RecsysScale::Production`]: Table-1 characteristics — FCs with
+//!   1-10M params, embedding tables totalling >10B params, batch 1-100,
+//!   pooling >10 lookups per bag. Used by the characterization engine.
+//! - [`RecsysScale::Servable`]: the scaled-down model the AOT artifacts
+//!   actually serve (matches `python/compile/model.py::RecsysConfig`).
+
+use super::{embedding, fc, softmax, tensor_manip, Category, LatencyClass, ModelDesc};
+
+/// Which instantiation of the Fig-2 architecture to describe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecsysScale {
+    /// Data-center scale: 48 tables x 7M rows x 32 dims (~10.7B params),
+    /// bottom MLP 256->256->128->64, top MLP ->512->256->1.
+    Production,
+    /// The servable artifact scale (8 tables x 10k rows x 32 dims).
+    Servable,
+}
+
+/// Build the Fig-2 model descriptor at the given batch size.
+pub fn recsys(scale: RecsysScale, batch: u64) -> ModelDesc {
+    let (n_tables, rows, dim, pool, dense_dim, bottom, top): (
+        u64,
+        u64,
+        u64,
+        u64,
+        u64,
+        Vec<u64>,
+        Vec<u64>,
+    ) = match scale {
+        RecsysScale::Production => {
+            (48, 7_000_000, 32, 40, 256, vec![512, 256, 64], vec![1024, 512, 1])
+        }
+        RecsysScale::Servable => (8, 10_000, 32, 32, 32, vec![128, 64, 32], vec![256, 128, 1]),
+    };
+
+    let mut layers = Vec::new();
+    // bottom MLP over dense features
+    let mut k = dense_dim;
+    for (i, &n) in bottom.iter().enumerate() {
+        layers.push(fc(&format!("bottom.fc{i}"), batch, n, k));
+        k = n;
+    }
+    // embedding lookups (SparseLengthsSum per table)
+    for t in 0..n_tables {
+        layers.push(embedding(&format!("emb.table{t}"), batch, rows, dim, pool));
+    }
+    // feature interaction: concat pooled embeddings + dense projection
+    let interaction = n_tables * dim + k;
+    layers.push(tensor_manip("interact.concat", batch * interaction));
+    // top MLP to the event-probability head
+    let mut k = interaction;
+    for (i, &n) in top.iter().enumerate() {
+        layers.push(fc(&format!("top.fc{i}"), batch, n, k));
+        k = n;
+    }
+    layers.push(softmax("head.sigmoid", batch));
+
+    ModelDesc {
+        name: match scale {
+            RecsysScale::Production => format!("recsys_prod_b{batch}"),
+            RecsysScale::Servable => format!("recsys_servable_b{batch}"),
+        },
+        category: Category::Recommendation,
+        batch,
+        layers,
+        latency: LatencyClass::TensMs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::OpClass;
+
+    #[test]
+    fn production_embeddings_exceed_10b_params() {
+        let m = recsys(RecsysScale::Production, 16);
+        let emb: u64 = m
+            .layers
+            .iter()
+            .filter(|l| l.class == OpClass::Embedding)
+            .map(|l| l.weight_elems)
+            .sum();
+        assert!(emb > 10_000_000_000, "emb params {emb}"); // Table 1: >10B
+    }
+
+    #[test]
+    fn production_fc_params_in_table1_range() {
+        let m = recsys(RecsysScale::Production, 16);
+        let fc_params: u64 = m
+            .layers
+            .iter()
+            .filter(|l| l.class == OpClass::Fc)
+            .map(|l| l.weight_elems)
+            .sum();
+        // Table 1: FCs 1-10M params
+        assert!((1_000_000..10_000_000).contains(&fc_params), "{fc_params}");
+    }
+
+    #[test]
+    fn fc_intensity_tracks_batch() {
+        // Table 1: FC arithmetic intensity 20-200 for batch 10-100
+        for (batch, lo, hi) in [(10u64, 15.0, 25.0), (100, 150.0, 210.0)] {
+            let m = recsys(RecsysScale::Production, batch);
+            let fc_layers: Vec<_> =
+                m.layers.iter().filter(|l| l.class == OpClass::Fc).collect();
+            for l in fc_layers {
+                let i = l.ops_per_weight();
+                assert!(i >= lo && i <= hi, "batch {batch}: intensity {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_intensity_is_1_to_2() {
+        let m = recsys(RecsysScale::Production, 16);
+        for l in m.layers.iter().filter(|l| l.class == OpClass::Embedding) {
+            let i = l.ops_per_weight();
+            assert!((0.9..=2.0).contains(&i), "intensity {i}");
+        }
+    }
+
+    #[test]
+    fn servable_matches_python_config() {
+        // must agree with python/compile/model.py::RecsysConfig defaults
+        let m = recsys(RecsysScale::Servable, 16);
+        let emb_layers: Vec<_> =
+            m.layers.iter().filter(|l| l.class == OpClass::Embedding).collect();
+        assert_eq!(emb_layers.len(), 8);
+        assert_eq!(emb_layers[0].weight_elems, 10_000 * 32);
+        // param_count matches RecsysConfig.param_count() = 2,891,617..ish
+        let p = m.params();
+        assert!((2_500_000..3_500_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn dominated_by_embedding_traffic() {
+        // §2.1.1: "the overall model's execution tends to be memory
+        // bandwidth bound and dominated by the embedding lookups" — at
+        // serving batch sizes the pooled-row traffic outgrows the
+        // (batch-independent) FC weight traffic
+        let m = recsys(RecsysScale::Production, 64);
+        let emb_traffic: u64 = m
+            .layers
+            .iter()
+            .filter(|l| l.class == OpClass::Embedding)
+            .map(|l| l.weight_traffic_elems)
+            .sum();
+        let fc_traffic: u64 = m
+            .layers
+            .iter()
+            .filter(|l| l.class == OpClass::Fc)
+            .map(|l| l.weight_traffic_elems)
+            .sum();
+        assert!(emb_traffic > fc_traffic, "emb {emb_traffic} fc {fc_traffic}");
+    }
+}

@@ -1,0 +1,78 @@
+//! The representative zoo: the exact model set of Table 1, with the
+//! typical batch sizes the paper reports, used by the characterization
+//! engine, the roofline study (Fig 3) and the fleet simulator (Fig 4).
+
+use super::cv::{faster_rcnn_shuffle, resnet50, resnext101, resnext3d_101};
+use super::nmt::seq2seq_default;
+use super::rec::{recsys, RecsysScale};
+use super::ModelDesc;
+
+/// A zoo entry: the model descriptor plus its fleet-mix weight (the
+/// relative share of inference demand it receives in the simulator;
+/// calibrated so the Fig-4 op-time breakdown lands near the paper's).
+#[derive(Debug, Clone)]
+pub struct ZooEntry {
+    pub desc: ModelDesc,
+    pub fleet_weight: f64,
+}
+
+/// Build the full Table-1 zoo.
+pub fn representative_zoo() -> Vec<ZooEntry> {
+    vec![
+        // Recommendation dominates data-center inference demand (Fig 1):
+        // ads + feed ranking at several batch sizes.
+        ZooEntry { desc: recsys(RecsysScale::Production, 1), fleet_weight: 0.10 },
+        ZooEntry { desc: recsys(RecsysScale::Production, 16), fleet_weight: 0.25 },
+        ZooEntry { desc: recsys(RecsysScale::Production, 64), fleet_weight: 0.25 },
+        // CV content understanding
+        ZooEntry { desc: resnet50(1), fleet_weight: 0.08 },
+        ZooEntry { desc: resnext101(1, 4), fleet_weight: 0.07 },
+        ZooEntry { desc: resnext101(1, 48), fleet_weight: 0.02 },
+        ZooEntry { desc: faster_rcnn_shuffle(50), fleet_weight: 0.06 },
+        ZooEntry { desc: resnext3d_101(16), fleet_weight: 0.04 },
+        // NMT
+        ZooEntry { desc: seq2seq_default(1), fleet_weight: 0.08 },
+        ZooEntry { desc: seq2seq_default(8), fleet_weight: 0.05 },
+    ]
+}
+
+/// Find a zoo entry by model name prefix.
+pub fn zoo_entry(name: &str) -> Option<ZooEntry> {
+    representative_zoo().into_iter().find(|e| e.desc.name.starts_with(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Category;
+
+    #[test]
+    fn zoo_covers_all_categories() {
+        let zoo = representative_zoo();
+        for cat in [Category::Recommendation, Category::ComputerVision, Category::Language] {
+            assert!(zoo.iter().any(|e| e.desc.category == cat), "{cat:?} missing");
+        }
+        assert!(zoo.len() >= 8);
+    }
+
+    #[test]
+    fn fleet_weights_sum_to_one() {
+        let total: f64 = representative_zoo().iter().map(|e| e.fleet_weight).sum();
+        assert!((total - 1.0).abs() < 1e-9, "{total}");
+    }
+
+    #[test]
+    fn lookup_by_prefix() {
+        assert!(zoo_entry("resnet50").is_some());
+        assert!(zoo_entry("seq2seq").is_some());
+        assert!(zoo_entry("nope").is_none());
+    }
+
+    #[test]
+    fn every_model_has_layers_and_flops() {
+        for e in representative_zoo() {
+            assert!(!e.desc.layers.is_empty(), "{}", e.desc.name);
+            assert!(e.desc.flops() > 0, "{}", e.desc.name);
+        }
+    }
+}

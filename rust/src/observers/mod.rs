@@ -1,0 +1,146 @@
+//! Fleet-wide DL inference profiling (§3.1): the observer software
+//! design pattern applied to individual operators, the per-op cost
+//! inference functions, and the analytical roofline prediction each
+//! observation is compared against.
+//!
+//! "We have implemented the observer software design pattern that can
+//! be applied to individual operators and are executed at the start and
+//! end of the operator... a telemetry agent running on each host
+//! collects and compares this information with given predictions."
+
+use std::time::Instant;
+
+use crate::models::Layer;
+use crate::perfmodel::DeviceSpec;
+
+/// One completed operator observation.
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    pub model: String,
+    pub op_name: String,
+    pub bucket: &'static str,
+    pub wall_us: f64,
+    pub flops: u64,
+    pub bytes: u64,
+    /// analytical roofline prediction for the host device (us)
+    pub predicted_us: f64,
+}
+
+impl OpRecord {
+    /// Attained compute throughput (Gop/s).
+    pub fn attained_gops(&self) -> f64 {
+        self.flops as f64 / (self.wall_us * 1e3)
+    }
+
+    /// Attained bandwidth (GB/s).
+    pub fn attained_gbps(&self) -> f64 {
+        self.bytes as f64 / (self.wall_us * 1e3)
+    }
+
+    /// measured / predicted: ~1 means the roofline is accurate; >>1
+    /// flags an inefficiency worth optimizing (§3.1's priority signal).
+    pub fn inefficiency(&self) -> f64 {
+        self.wall_us / self.predicted_us.max(1e-9)
+    }
+}
+
+/// Cost-inference function (the Caffe2 operator cost inference): the
+/// analytical flops/bytes of one layer at a serving dtype.
+pub fn cost_inference(l: &Layer, elem_bytes: u64) -> (u64, u64) {
+    let bytes = (l.weight_traffic_elems + l.act_in_elems + l.act_out_elems) * elem_bytes;
+    (l.flops, bytes)
+}
+
+/// Roofline prediction in microseconds.
+pub fn predict_us(flops: u64, bytes: u64, dev: &DeviceSpec) -> f64 {
+    let t_c = flops as f64 / dev.peak_ops;
+    let t_m = bytes as f64 / dev.dram_bw;
+    t_c.max(t_m) * 1e6
+}
+
+/// RAII observer: times an operator execution and produces an
+/// [`OpRecord`] on drop-by-finish.
+pub struct OpObserver<'a> {
+    model: &'a str,
+    layer: &'a Layer,
+    dev: &'a DeviceSpec,
+    elem_bytes: u64,
+    start: Instant,
+}
+
+impl<'a> OpObserver<'a> {
+    pub fn start(model: &'a str, layer: &'a Layer, dev: &'a DeviceSpec, elem_bytes: u64) -> Self {
+        OpObserver { model, layer, dev, elem_bytes, start: Instant::now() }
+    }
+
+    pub fn finish(self) -> OpRecord {
+        let wall_us = self.start.elapsed().as_secs_f64() * 1e6;
+        self.record(wall_us)
+    }
+
+    /// For the fleet *simulator*: record with a synthetic wall time.
+    pub fn record(&self, wall_us: f64) -> OpRecord {
+        let (flops, bytes) = cost_inference(self.layer, self.elem_bytes);
+        OpRecord {
+            model: self.model.to_string(),
+            op_name: self.layer.name.clone(),
+            bucket: self.layer.class.bucket(),
+            wall_us,
+            flops,
+            bytes,
+            predicted_us: predict_us(flops, bytes, self.dev),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::fc;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::xeon_fp32()
+    }
+
+    #[test]
+    fn cost_inference_counts_traffic() {
+        let l = fc("fc", 4, 16, 32);
+        let (flops, bytes) = cost_inference(&l, 4);
+        assert_eq!(flops, 2 * 4 * 16 * 32);
+        assert_eq!(bytes, ((16 * 32 + 16) + 4 * 32 + 4 * 16) * 4);
+    }
+
+    #[test]
+    fn prediction_is_roofline_max() {
+        let d = dev();
+        // compute bound case
+        let t1 = predict_us(10_000_000_000, 8, &d);
+        assert!((t1 - 10e9 / d.peak_ops * 1e6).abs() < 1e-9);
+        // memory bound case
+        let t2 = predict_us(8, 10_000_000_000, &d);
+        assert!((t2 - 10e9 / d.dram_bw * 1e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn observer_times_execution() {
+        let l = fc("fc", 4, 16, 32);
+        let d = dev();
+        let obs = OpObserver::start("m", &l, &d, 4);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let rec = obs.finish();
+        assert!(rec.wall_us >= 1500.0, "{}", rec.wall_us);
+        assert_eq!(rec.bucket, "FC");
+        assert!(rec.inefficiency() > 1.0); // slept way over prediction
+    }
+
+    #[test]
+    fn synthetic_record_uses_given_time() {
+        let l = fc("fc", 4, 16, 32);
+        let d = dev();
+        let obs = OpObserver::start("m", &l, &d, 4);
+        let rec = obs.record(123.0);
+        assert_eq!(rec.wall_us, 123.0);
+        assert!(rec.attained_gops() > 0.0);
+        assert!(rec.attained_gbps() > 0.0);
+    }
+}

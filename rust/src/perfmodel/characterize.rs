@@ -1,0 +1,132 @@
+//! Table-1 characterization engine: compute the paper's resource-
+//! requirement columns from the model descriptors.
+
+use crate::models::{Category, LatencyClass, ModelDesc, OpClass};
+
+/// One Table-1 row.
+#[derive(Debug, Clone)]
+pub struct CharacterizationRow {
+    pub model: String,
+    pub category: Category,
+    pub batch: u64,
+    pub params: u64,
+    pub max_live_acts: u64,
+    pub intensity_w_avg: f64,
+    pub intensity_w_min: f64,
+    pub intensity_full_avg: f64,
+    pub intensity_full_min: f64,
+    pub latency: LatencyClass,
+}
+
+/// Characterize one model.
+///
+/// Table-1 convention: for CV models the per-layer *min* intensity is
+/// taken over the convolutional trunk (the paper reports min 100 for
+/// ResNet-50, which excludes the 1000-way classifier FC whose batch-1
+/// ops/weight is ~2 — the trunk is what the min column is about).
+pub fn characterize(m: &ModelDesc) -> CharacterizationRow {
+    let trunk_only = m.category == Category::ComputerVision;
+    let min_w = m
+        .layers
+        .iter()
+        .filter(|l| l.weight_traffic_elems > 0 && !(trunk_only && l.class == OpClass::Fc))
+        .map(|l| l.ops_per_weight())
+        .fold(f64::INFINITY, f64::min);
+    let min_full = m
+        .layers
+        .iter()
+        .filter(|l| l.weight_traffic_elems > 0 && !(trunk_only && l.class == OpClass::Fc))
+        .map(|l| l.ops_per_elem())
+        .fold(f64::INFINITY, f64::min);
+    // Average intensities count the *weighted* layers (convs/FCs/
+    // embeddings); elementwise and data-movement ops are assumed fused
+    // into their producers, matching how Table 1 reaches e.g. avg 164
+    // ops/element for ResNet-50.
+    let flops: u64 = m.layers.iter().filter(|l| l.weight_traffic_elems > 0).map(|l| l.flops).sum();
+    let w_traffic: u64 = m.layers.iter().map(|l| l.weight_traffic_elems).sum();
+    // each activation tensor is counted once (a layer's input is its
+    // producer's output), plus the model input
+    let full_traffic: u64 = m
+        .layers
+        .iter()
+        .filter(|l| l.weight_traffic_elems > 0)
+        .map(|l| l.weight_traffic_elems + l.act_out_elems)
+        .sum::<u64>()
+        + m.layers.first().map(|l| l.act_in_elems).unwrap_or(0);
+    CharacterizationRow {
+        model: m.name.clone(),
+        category: m.category,
+        batch: m.batch,
+        params: m.unique_params(),
+        max_live_acts: m.max_live_activations(),
+        intensity_w_avg: flops as f64 / w_traffic.max(1) as f64,
+        intensity_w_min: min_w,
+        intensity_full_avg: flops as f64 / full_traffic.max(1) as f64,
+        intensity_full_min: min_full,
+        latency: m.latency,
+    }
+}
+
+/// Characterize a set of models (Table 1 regeneration).
+pub fn characterize_zoo(models: &[ModelDesc]) -> Vec<CharacterizationRow> {
+    models.iter().map(characterize).collect()
+}
+
+/// Split a recsys model row into the paper's FC / embedding sub-rows.
+pub fn recsys_subrows(m: &ModelDesc) -> (CharacterizationRow, CharacterizationRow) {
+    let fc_layers: Vec<_> =
+        m.layers.iter().filter(|l| l.class == OpClass::Fc).cloned().collect();
+    let emb_layers: Vec<_> =
+        m.layers.iter().filter(|l| l.class == OpClass::Embedding).cloned().collect();
+    let sub = |name: &str, layers: Vec<crate::models::Layer>| ModelDesc {
+        name: format!("{}/{}", m.name, name),
+        category: m.category,
+        batch: m.batch,
+        layers,
+        latency: m.latency,
+    };
+    (characterize(&sub("fc", fc_layers)), characterize(&sub("embedding", emb_layers)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{recsys, representative_zoo, resnet50, RecsysScale};
+
+    #[test]
+    fn resnet50_row_matches_table1() {
+        let row = characterize(&resnet50(1));
+        // Table 1: 25M params, 2M acts, avg 303 / min 100 ops per weight,
+        // avg 164 / min 25 ops per element
+        assert!((24e6..27e6).contains(&(row.params as f64)));
+        assert!((1e6..4e6).contains(&(row.max_live_acts as f64)));
+        assert!((250.0..360.0).contains(&row.intensity_w_avg), "{}", row.intensity_w_avg);
+        assert!((50.0..150.0).contains(&row.intensity_w_min), "{}", row.intensity_w_min);
+        assert!((120.0..240.0).contains(&row.intensity_full_avg), "{}", row.intensity_full_avg); // paper: 164 (activation-accounting convention differs slightly)
+        assert!(row.intensity_full_min < 80.0, "{}", row.intensity_full_min); // paper: 25 — well below the avg either way
+    }
+
+    #[test]
+    fn recsys_subrows_match_table1_bands() {
+        let m = recsys(RecsysScale::Production, 64);
+        let (fc, emb) = recsys_subrows(&m);
+        // FC: 1-10M params, intensity 20-200 band at batch 64
+        assert!((1e6..10e6).contains(&(fc.params as f64)));
+        assert!((20.0..200.0).contains(&fc.intensity_w_avg), "{}", fc.intensity_w_avg);
+        // Embeddings: >10B params, intensity 1-2
+        assert!(emb.params > 10_000_000_000);
+        assert!((0.9..2.0).contains(&emb.intensity_w_avg), "{}", emb.intensity_w_avg);
+    }
+
+    #[test]
+    fn zoo_characterization_is_complete() {
+        let zoo = representative_zoo();
+        let models: Vec<_> = zoo.into_iter().map(|e| e.desc).collect();
+        let rows = characterize_zoo(&models);
+        assert_eq!(rows.len(), models.len());
+        for r in &rows {
+            assert!(r.params > 0, "{}", r.model);
+            assert!(r.intensity_w_avg.is_finite(), "{}", r.model);
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Device specifications for the roofline studies.
+
+/// A (possibly hypothetical) inference device.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// peak compute throughput, ops/s (int8 ops for the Fig-3 device)
+    pub peak_ops: f64,
+    /// off-chip (DRAM) bandwidth, bytes/s
+    pub dram_bw: f64,
+    /// on-chip memory capacity, bytes
+    pub onchip_capacity: f64,
+    /// on-chip memory bandwidth, bytes/s
+    pub onchip_bw: f64,
+    /// bytes per model parameter (Fig 3 assumes int8 storage)
+    pub weight_bytes_per_elem: f64,
+    /// bytes per activation element
+    pub act_bytes_per_elem: f64,
+}
+
+impl DeviceSpec {
+    /// The Fig-3 hypothetical accelerator: 100 TOP/s, 100 GB/s DRAM,
+    /// parameters stored as int8. Capacity/on-chip bandwidth are the
+    /// figure's sweep axes.
+    pub fn fig3(onchip_capacity_mb: f64, onchip_tb_s: f64) -> DeviceSpec {
+        DeviceSpec {
+            name: "hypothetical-100TOPs",
+            peak_ops: 100e12,
+            dram_bw: 100e9,
+            onchip_capacity: onchip_capacity_mb * 1e6,
+            onchip_bw: onchip_tb_s * 1e12,
+            weight_bytes_per_elem: 1.0, // int8
+            act_bytes_per_elem: 1.0,    // int8 activations
+        }
+    }
+
+    /// A server CPU in the spirit of the paper's Xeon testbed
+    /// (per-socket peak fp32 FLOPs and measured STREAM-ish bandwidth).
+    pub fn xeon_fp32() -> DeviceSpec {
+        DeviceSpec {
+            name: "xeon-fp32",
+            peak_ops: 1.0e12,
+            dram_bw: 60e9,
+            onchip_capacity: 35e6, // LLC
+            onchip_bw: 400e9,
+            weight_bytes_per_elem: 4.0,
+            act_bytes_per_elem: 4.0,
+        }
+    }
+
+    /// Compute-to-bandwidth "ridge point" in ops/byte for off-chip.
+    pub fn ridge(&self) -> f64 {
+        self.peak_ops / self.dram_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_device_numbers() {
+        let d = DeviceSpec::fig3(10.0, 1.0);
+        assert_eq!(d.peak_ops, 100e12);
+        assert_eq!(d.dram_bw, 100e9);
+        assert_eq!(d.onchip_capacity, 10e6);
+        assert_eq!(d.onchip_bw, 1e12);
+        // ridge: 1000 ops/byte — why embeddings (intensity 1-2) are
+        // hopeless off-chip and the paper wants big on-chip memories
+        assert_eq!(d.ridge(), 1000.0);
+    }
+}

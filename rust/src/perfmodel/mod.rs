@@ -1,0 +1,13 @@
+//! Analytical performance models: per-layer rooflines, the hypothetical
+//! accelerator of Fig 3 with its greedy on-chip memory allocator, the
+//! Table-1 characterization engine, and the Fig-5 matrix-shape survey.
+
+pub mod characterize;
+pub mod device;
+pub mod roofline;
+pub mod shapes;
+
+pub use characterize::{characterize, characterize_zoo, CharacterizationRow};
+pub use device::DeviceSpec;
+pub use roofline::{roofline_curve, roofline_model, roofline_model_with_policy, AllocPolicy, LayerPlacement, RooflineResult};
+pub use shapes::{shape_survey, ShapePoint};

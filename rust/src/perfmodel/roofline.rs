@@ -1,0 +1,274 @@
+//! Per-layer roofline model with greedy on-chip memory allocation
+//! (Fig 3; the paper's footnote-3 methodology, after Williams et al.
+//! [72]).
+//!
+//! Each layer reads its weights and activations from either on-chip or
+//! off-chip memory. A simple greedy allocator assigns the on-chip
+//! capacity to the tensors with the highest traffic-per-byte (so a
+//! weight tensor reused across the batch, or a small hot activation,
+//! wins over a huge cold embedding table). Layer time is then
+//!
+//! ```text
+//! t = max(flops / peak_ops,
+//!         offchip_bytes / dram_bw,
+//!         onchip_bytes / onchip_bw)
+//! ```
+//!
+//! and the model's achieved performance is `total_flops / sum(t)`.
+
+use crate::models::ModelDesc;
+
+use super::device::DeviceSpec;
+
+/// Where a layer's operand set was placed by the allocator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerPlacement {
+    pub weights_onchip: bool,
+    pub acts_onchip: bool,
+}
+
+/// Result of evaluating one model on one device configuration.
+#[derive(Debug, Clone)]
+pub struct RooflineResult {
+    pub model: String,
+    pub achieved_ops: f64,
+    pub total_time_s: f64,
+    pub placements: Vec<LayerPlacement>,
+    /// fraction of layer time spent bandwidth-bound (off-chip)
+    pub dram_bound_frac: f64,
+}
+
+struct Candidate {
+    layer: usize,
+    is_weight: bool,
+    bytes: f64,
+    traffic: f64,
+}
+
+/// On-chip allocation policy (the DESIGN.md ablation knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// greedy by traffic-saved per byte (the paper's footnote-3 greedy)
+    GreedyValue,
+    /// weights first (model-pinning, Brainwave-style), layer order
+    WeightsFirst,
+    /// activations first, layer order
+    ActivationsFirst,
+}
+
+/// Evaluate `model` on `dev`, greedily allocating on-chip capacity.
+pub fn roofline_model(model: &ModelDesc, dev: &DeviceSpec) -> RooflineResult {
+    roofline_model_with_policy(model, dev, AllocPolicy::GreedyValue)
+}
+
+/// Evaluate with an explicit allocation policy.
+pub fn roofline_model_with_policy(
+    model: &ModelDesc,
+    dev: &DeviceSpec,
+    policy: AllocPolicy,
+) -> RooflineResult {
+    // Build allocation candidates: per layer, the weight set and the
+    // activation set (in + out).
+    let mut cands = Vec::new();
+    for (i, l) in model.layers.iter().enumerate() {
+        if l.weight_elems > 0 {
+            cands.push(Candidate {
+                layer: i,
+                is_weight: true,
+                // capacity cost: the whole resident tensor
+                bytes: l.weight_elems as f64 * dev.weight_bytes_per_elem,
+                // traffic avoided per evaluation
+                traffic: l.weight_traffic_elems as f64 * dev.weight_bytes_per_elem,
+            });
+        }
+        let act_elems = l.act_in_elems + l.act_out_elems;
+        if act_elems > 0 {
+            cands.push(Candidate {
+                layer: i,
+                is_weight: false,
+                bytes: act_elems as f64 * dev.act_bytes_per_elem,
+                traffic: act_elems as f64 * dev.act_bytes_per_elem,
+            });
+        }
+    }
+    match policy {
+        // Greedy: best traffic-saved per byte of capacity first.
+        AllocPolicy::GreedyValue => cands.sort_by(|a, b| {
+            let va = a.traffic / a.bytes;
+            let vb = b.traffic / b.bytes;
+            vb.partial_cmp(&va).unwrap().then_with(|| a.bytes.partial_cmp(&b.bytes).unwrap())
+        }),
+        // Pin weights in layer order, then activations.
+        AllocPolicy::WeightsFirst => {
+            cands.sort_by_key(|c| (!c.is_weight, c.layer));
+        }
+        // Pin activations in layer order, then weights.
+        AllocPolicy::ActivationsFirst => {
+            cands.sort_by_key(|c| (c.is_weight, c.layer));
+        }
+    }
+
+    let mut placements =
+        vec![LayerPlacement { weights_onchip: false, acts_onchip: false }; model.layers.len()];
+    let mut remaining = dev.onchip_capacity;
+    for c in &cands {
+        if c.bytes <= remaining {
+            remaining -= c.bytes;
+            if c.is_weight {
+                placements[c.layer].weights_onchip = true;
+            } else {
+                placements[c.layer].acts_onchip = true;
+            }
+        }
+    }
+
+    // Per-layer roofline.
+    let mut total_time = 0.0;
+    let mut dram_time = 0.0;
+    for (l, p) in model.layers.iter().zip(&placements) {
+        let w_bytes = l.weight_traffic_elems as f64 * dev.weight_bytes_per_elem;
+        let a_bytes = (l.act_in_elems + l.act_out_elems) as f64 * dev.act_bytes_per_elem;
+        let (mut off, mut on) = (0.0, 0.0);
+        if p.weights_onchip {
+            on += w_bytes;
+        } else {
+            off += w_bytes;
+        }
+        if p.acts_onchip {
+            on += a_bytes;
+        } else {
+            off += a_bytes;
+        }
+        let t_compute = l.flops as f64 / dev.peak_ops;
+        let t_off = off / dev.dram_bw;
+        let t_on = on / dev.onchip_bw;
+        let t = t_compute.max(t_off).max(t_on);
+        total_time += t;
+        if t_off >= t_compute && t_off >= t_on {
+            dram_time += t;
+        }
+    }
+
+    RooflineResult {
+        model: model.name.clone(),
+        achieved_ops: model.flops() as f64 / total_time.max(1e-30),
+        total_time_s: total_time,
+        placements,
+        dram_bound_frac: dram_time / total_time.max(1e-30),
+    }
+}
+
+/// The Fig-3 sweep: achieved TOP/s vs on-chip capacity for one on-chip
+/// bandwidth. Returns (capacity_MB, achieved_TOPs) points.
+pub fn roofline_curve(
+    model: &ModelDesc,
+    capacities_mb: &[f64],
+    onchip_tb_s: f64,
+) -> Vec<(f64, f64)> {
+    capacities_mb
+        .iter()
+        .map(|&mb| {
+            let dev = DeviceSpec::fig3(mb, onchip_tb_s);
+            let r = roofline_model(model, &dev);
+            (mb, r.achieved_ops / 1e12)
+        })
+        .collect()
+}
+
+/// Standard Fig-3 capacity sweep (x axis).
+pub fn fig3_capacities() -> Vec<f64> {
+    vec![0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 60.0, 128.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{recsys, resnet50, resnext101, RecsysScale};
+
+    #[test]
+    fn more_onchip_capacity_never_hurts() {
+        let m = resnet50(1);
+        let mut last = 0.0;
+        for (_, tops) in roofline_curve(&m, &fig3_capacities(), 1.0) {
+            assert!(tops >= last - 1e-9, "performance regressed: {tops} < {last}");
+            last = tops;
+        }
+    }
+
+    #[test]
+    fn higher_onchip_bw_never_hurts() {
+        let m = resnext101(1, 4);
+        let c1 = roofline_curve(&m, &fig3_capacities(), 1.0);
+        let c10 = roofline_curve(&m, &fig3_capacities(), 10.0);
+        for ((_, a), (_, b)) in c1.iter().zip(&c10) {
+            assert!(b >= a);
+        }
+    }
+
+    #[test]
+    fn perf_bounded_by_peak() {
+        let m = resnet50(1);
+        for (_, tops) in roofline_curve(&m, &fig3_capacities(), 10.0) {
+            assert!(tops <= 100.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_capacity_is_dram_bound() {
+        // With no on-chip memory everything streams from DRAM at
+        // 100 GB/s; a conv model achieves at most
+        // dram_bw * avg_intensity ops/s, far below peak.
+        let m = resnet50(1);
+        let dev = DeviceSpec::fig3(0.0, 1.0);
+        let r = roofline_model(&m, &dev);
+        assert!(r.achieved_ops < 60e12);
+        assert!(r.dram_bound_frac > 0.5);
+    }
+
+    #[test]
+    fn recommendation_needs_capacity_not_just_bandwidth() {
+        // Production recsys embeddings (>10 GB) can never fit on-chip:
+        // even at 128 MB the model stays DRAM-bound (the paper's point
+        // that recommendation needs memory *capacity and bandwidth*).
+        let m = recsys(RecsysScale::Production, 16);
+        let dev = DeviceSpec::fig3(128.0, 10.0);
+        let r = roofline_model(&m, &dev);
+        assert!(r.dram_bound_frac > 0.4, "{}", r.dram_bound_frac);
+        // and its achieved TOP/s is a small fraction of the 100 TOP/s peak
+        assert!(r.achieved_ops < 15e12, "{}", r.achieved_ops);
+    }
+
+    #[test]
+    fn greedy_allocator_respects_capacity() {
+        let m = resnet50(1);
+        let dev = DeviceSpec::fig3(4.0, 1.0);
+        let r = roofline_model(&m, &dev);
+        let used: f64 = m
+            .layers
+            .iter()
+            .zip(&r.placements)
+            .map(|(l, p)| {
+                let mut b = 0.0;
+                if p.weights_onchip {
+                    b += l.weight_elems as f64 * dev.weight_bytes_per_elem;
+                }
+                if p.acts_onchip {
+                    b += (l.act_in_elems + l.act_out_elems) as f64 * dev.act_bytes_per_elem;
+                }
+                b
+            })
+            .sum();
+        assert!(used <= dev.onchip_capacity + 1.0, "used {used}");
+        assert!(used > 0.0);
+    }
+
+    #[test]
+    fn models_with_everything_onchip_hit_compute_roof() {
+        // ResNet-50 int8 is 25 MB of weights; at 60 MB capacity and
+        // 10 TB/s it should be compute bound near 100 TOP/s.
+        let m = resnet50(1);
+        let dev = DeviceSpec::fig3(60.0, 10.0);
+        let r = roofline_model(&m, &dev);
+        assert!(r.achieved_ops > 50e12, "{}", r.achieved_ops);
+    }
+}

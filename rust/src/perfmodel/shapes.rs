@@ -1,0 +1,119 @@
+//! Fig-5 survey: the (M, N, K) GEMM shapes that actually occur across
+//! the zoo, bucketed by op class (FC triangles, group/depth-wise conv
+//! crosses, other convs circles). The paper's point: data-center GEMMs
+//! are tall-and-skinny, not square — BLAS3 degrades toward BLAS2.
+
+use crate::models::{GemmShape, ModelDesc, OpClass};
+
+/// One scatter point of Fig 5.
+#[derive(Debug, Clone)]
+pub struct ShapePoint {
+    pub model: String,
+    pub layer: String,
+    pub class: OpClass,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub groups: u64,
+}
+
+impl ShapePoint {
+    /// Arithmetic intensity of the GEMM: 2MNK / (MK + KN + MN).
+    pub fn intensity(&self) -> f64 {
+        let (m, n, k) = (self.m as f64, self.n as f64, self.k as f64);
+        2.0 * m * n * k / (m * k + k * n + m * n)
+    }
+
+    /// Tall-skinny measure: max dim / min dim.
+    pub fn aspect(&self) -> f64 {
+        let dims = [self.m, self.n, self.k];
+        let max = *dims.iter().max().unwrap() as f64;
+        let min = *dims.iter().min().unwrap() as f64;
+        max / min.max(1.0)
+    }
+
+    /// The paper's "narrow GEMM ~ BLAS2" criterion: output feature dim
+    /// or batch/spatial dim small (< 32).
+    pub fn is_matrix_vector_like(&self) -> bool {
+        self.m < 32 || self.n < 32
+    }
+}
+
+/// Collect every GEMM shape in a set of models.
+pub fn shape_survey(models: &[ModelDesc]) -> Vec<ShapePoint> {
+    let mut out = Vec::new();
+    for m in models {
+        for l in &m.layers {
+            if let Some(GemmShape { m: gm, n, k, groups }) = l.gemm {
+                out.push(ShapePoint {
+                    model: m.name.clone(),
+                    layer: l.name.clone(),
+                    class: l.class,
+                    m: gm,
+                    n,
+                    k,
+                    groups,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{recsys, representative_zoo, RecsysScale};
+
+    fn zoo_models() -> Vec<ModelDesc> {
+        representative_zoo().into_iter().map(|e| e.desc).collect()
+    }
+
+    #[test]
+    fn survey_is_nonempty_and_covers_classes() {
+        let pts = shape_survey(&zoo_models());
+        assert!(pts.len() > 100);
+        for class in [OpClass::Fc, OpClass::Conv, OpClass::GroupConv, OpClass::DepthwiseConv] {
+            assert!(pts.iter().any(|p| p.class == class), "{class:?} missing");
+        }
+    }
+
+    #[test]
+    fn fc_and_groupconv_shapes_are_narrow() {
+        // the paper: FCs (small batch) and group/depth-wise convs (few
+        // output channels per group) degrade toward matrix-vector
+        let pts = shape_survey(&[recsys(RecsysScale::Production, 10)]);
+        let fc: Vec<_> = pts.iter().filter(|p| p.class == OpClass::Fc).collect();
+        assert!(!fc.is_empty());
+        assert!(fc.iter().all(|p| p.is_matrix_vector_like()));
+
+        let dw: Vec<_> = shape_survey(&zoo_models())
+            .into_iter()
+            .filter(|p| p.class == OpClass::DepthwiseConv)
+            .collect();
+        assert!(dw.iter().all(|p| p.n < 32 && p.k < 32));
+    }
+
+    #[test]
+    fn most_zoo_shapes_are_not_square() {
+        let pts = shape_survey(&zoo_models());
+        let skinny = pts.iter().filter(|p| p.aspect() > 4.0).count();
+        // the Fig-5 story: the bulk of shapes are far from square
+        assert!(skinny * 2 > pts.len(), "{skinny}/{}", pts.len());
+    }
+
+    #[test]
+    fn intensity_formula() {
+        let p = ShapePoint {
+            model: "m".into(),
+            layer: "l".into(),
+            class: OpClass::Fc,
+            m: 10,
+            n: 10,
+            k: 10,
+            groups: 1,
+        };
+        // 2*1000 / 300
+        assert!((p.intensity() - 2000.0 / 300.0).abs() < 1e-12);
+    }
+}

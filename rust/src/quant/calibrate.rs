@@ -1,0 +1,181 @@
+//! Activation calibration (§3.2.2 techniques 4 & 5): histogram
+//! observers over calibration inputs, L2-optimal clip-range search, and
+//! net-aware range narrowing from the consumer op.
+
+use crate::util::stats::Histogram;
+
+use super::qparams::QParams;
+
+/// Running observer over activation values.
+#[derive(Debug, Clone)]
+pub struct Calibrator {
+    pub min: f32,
+    pub max: f32,
+    hist: Option<Histogram>,
+    bins: usize,
+}
+
+impl Default for Calibrator {
+    fn default() -> Self {
+        Self::new(2048)
+    }
+}
+
+impl Calibrator {
+    pub fn new(bins: usize) -> Calibrator {
+        Calibrator { min: f32::INFINITY, max: f32::NEG_INFINITY, hist: None, bins }
+    }
+
+    /// Observe a batch of activation values.
+    pub fn observe(&mut self, xs: &[f32]) {
+        if xs.is_empty() {
+            return;
+        }
+        let (mut lo, mut hi) = (self.min, self.max);
+        for &x in xs {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        // (re)build the histogram when the range widens, re-binning the
+        // accumulated counts at their bin centers so earlier batches
+        // keep their weight in the L2 search
+        if self.hist.is_none() || lo < self.min || hi > self.max {
+            self.min = lo.min(self.min);
+            self.max = hi.max(self.max);
+            let span = (self.max - self.min).max(1e-12);
+            let mut fresh = Histogram::new(
+                self.min as f64 - 1e-9,
+                self.min as f64 + span as f64 + 1e-9,
+                self.bins,
+            );
+            if let Some(old) = &self.hist {
+                for (i, &cnt) in old.counts.iter().enumerate() {
+                    if cnt > 0 {
+                        let c = old.bin_center(i);
+                        let f = (c - fresh.lo) / (fresh.hi - fresh.lo);
+                        let idx =
+                            ((f * fresh.counts.len() as f64) as usize).min(fresh.counts.len() - 1);
+                        fresh.counts[idx] += cnt;
+                    }
+                }
+            }
+            self.hist = Some(fresh);
+        }
+        let h = self.hist.as_mut().unwrap();
+        for &x in xs {
+            h.push(x as f64);
+        }
+    }
+
+    /// min/max qparams (the naive baseline).
+    pub fn minmax_qparams(&self, bits: u32) -> QParams {
+        QParams::from_range(self.min, self.max, bits, false)
+    }
+
+    /// Technique 4: clip range minimizing the L2 quantization error over
+    /// the observed distribution (outliers get clipped when the bulk
+    /// mass dominates).
+    pub fn l2_optimal_qparams(&self, bits: u32, n_grid: usize) -> QParams {
+        let Some(h) = &self.hist else {
+            return QParams::from_range(0.0, 1.0, bits, false);
+        };
+        let amax = self.min.abs().max(self.max.abs()).max(1e-12);
+        let mut best = self.minmax_qparams(bits);
+        let mut best_err = f64::INFINITY;
+        for g in 1..=n_grid {
+            let clip = amax * g as f32 / n_grid as f32;
+            let lo = self.min.max(-clip);
+            let hi = self.max.min(clip);
+            if hi <= lo {
+                continue;
+            }
+            let qp = QParams::from_range(lo, hi, bits, false);
+            let mut err = 0f64;
+            for (i, &cnt) in h.counts.iter().enumerate() {
+                if cnt == 0 {
+                    continue;
+                }
+                let c = h.bin_center(i) as f32;
+                let d = (qp.fake_quant(c) - c) as f64;
+                err += cnt as f64 * d * d;
+            }
+            if err < best_err {
+                best_err = err;
+                best = qp;
+            }
+        }
+        best
+    }
+
+    /// Technique 5: narrow the range using knowledge of the consumer op.
+    pub fn net_aware(&self, consumer: &str) -> Calibrator {
+        let mut out = self.clone();
+        match consumer {
+            "relu" => out.min = out.min.max(0.0),
+            "sigmoid" | "tanh" => {
+                out.min = out.min.max(-8.0);
+                out.max = out.max.min(8.0);
+            }
+            _ => {}
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn tracks_minmax() {
+        let mut c = Calibrator::default();
+        c.observe(&[1.0, -2.0]);
+        c.observe(&[0.5, 3.0]);
+        assert_eq!(c.min, -2.0);
+        assert_eq!(c.max, 3.0);
+    }
+
+    #[test]
+    fn l2_narrows_range_under_extreme_outliers() {
+        let mut rng = Pcg32::seeded(31);
+        let mut c = Calibrator::default();
+        // a large Gaussian bulk: the L2 criterion only clips when the
+        // bulk's resolution gain outweighs the outliers' clip error
+        let bulk: Vec<f32> = (0..3_000_000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        c.observe(&bulk);
+        c.observe(&[100.0, 100.0]); // two extreme outliers
+        let mm = c.minmax_qparams(8);
+        let l2 = c.l2_optimal_qparams(8, 64);
+        assert!(l2.scale < mm.scale * 0.5, "l2 {} mm {}", l2.scale, mm.scale);
+    }
+
+    #[test]
+    fn l2_keeps_full_range_without_outliers() {
+        let mut rng = Pcg32::seeded(32);
+        let mut c = Calibrator::default();
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        c.observe(&xs);
+        let mm = c.minmax_qparams(8);
+        let l2 = c.l2_optimal_qparams(8, 64);
+        // uniform distribution: clipping only hurts
+        assert!(l2.scale > mm.scale * 0.8, "l2 {} mm {}", l2.scale, mm.scale);
+    }
+
+    #[test]
+    fn net_aware_relu_narrowing() {
+        let mut c = Calibrator::default();
+        c.observe(&[-4.0, 3.0]);
+        let n = c.net_aware("relu");
+        assert_eq!(n.min, 0.0);
+        assert!(n.minmax_qparams(8).scale < c.minmax_qparams(8).scale);
+    }
+
+    #[test]
+    fn net_aware_sigmoid_clamps_to_8() {
+        let mut c = Calibrator::default();
+        c.observe(&[-50.0, 50.0]);
+        let n = c.net_aware("sigmoid");
+        assert_eq!((n.min, n.max), (-8.0, 8.0));
+    }
+}

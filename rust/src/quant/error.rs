@@ -1,0 +1,95 @@
+//! Per-layer quantization error profiling (§3.2.2 technique 3):
+//! "systematically profile errors introduced by quantization per layer
+//! and skip quantization when the error is too high."
+
+/// Signal-to-quantization-noise ratio in dB.
+pub fn sqnr_db(reference: &[f32], test: &[f32]) -> f64 {
+    assert_eq!(reference.len(), test.len());
+    let mut sig = 0f64;
+    let mut noise = 0f64;
+    for (&r, &t) in reference.iter().zip(test) {
+        sig += (r as f64) * (r as f64);
+        let d = (r - t) as f64;
+        noise += d * d;
+    }
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig.max(1e-30) / noise).log10()
+}
+
+/// Per-layer report + the selective-quantization decision.
+#[derive(Debug, Clone)]
+pub struct ErrorReport {
+    pub layer: String,
+    pub sqnr_db: f64,
+    pub l2_rel: f64,
+    pub quantize: bool,
+}
+
+/// Profile one layer's quantized output against its fp32 output.
+pub fn profile_error(layer: &str, reference: &[f32], test: &[f32], threshold_db: f64) -> ErrorReport {
+    let s = sqnr_db(reference, test);
+    let (mut num, mut den) = (0f64, 0f64);
+    for (&r, &t) in reference.iter().zip(test) {
+        num += ((r - t) as f64).powi(2);
+        den += (r as f64).powi(2);
+    }
+    ErrorReport {
+        layer: layer.to_string(),
+        sqnr_db: s,
+        l2_rel: (num / den.max(1e-30)).sqrt(),
+        quantize: s >= threshold_db,
+    }
+}
+
+/// Selective quantization: layers sorted worst-first so a fallback
+/// budget (e.g. "keep the 2 most sensitive layers fp32") peels from the
+/// front.
+pub fn rank_by_sensitivity(mut reports: Vec<ErrorReport>) -> Vec<ErrorReport> {
+    reports.sort_by(|a, b| a.sqnr_db.partial_cmp(&b.sqnr_db).unwrap());
+    reports
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_is_infinite() {
+        let x = [1.0f32, -2.0, 3.0];
+        assert_eq!(sqnr_db(&x, &x), f64::INFINITY);
+    }
+
+    #[test]
+    fn known_sqnr() {
+        // signal power 1, noise power 0.01 -> 20 dB
+        let r = [1.0f32; 100];
+        let t = [1.1f32; 100];
+        let s = sqnr_db(&r, &t);
+        assert!((s - 20.0).abs() < 0.1, "{s}");
+    }
+
+    #[test]
+    fn decision_threshold() {
+        let r: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        let good: Vec<f32> = r.iter().map(|v| v + 1e-4).collect();
+        let bad: Vec<f32> = r.iter().map(|v| v + 0.3).collect();
+        assert!(profile_error("good", &r, &good, 20.0).quantize);
+        assert!(!profile_error("bad", &r, &bad, 20.0).quantize);
+    }
+
+    #[test]
+    fn ranking_is_worst_first() {
+        let r: Vec<f32> = (0..50).map(|i| i as f32 * 0.1).collect();
+        let mk = |eps: f32| -> Vec<f32> { r.iter().map(|v| v + eps).collect() };
+        let reports = vec![
+            profile_error("a", &r, &mk(0.001), 20.0),
+            profile_error("b", &r, &mk(0.5), 20.0),
+            profile_error("c", &r, &mk(0.01), 20.0),
+        ];
+        let ranked = rank_by_sensitivity(reports);
+        assert_eq!(ranked[0].layer, "b");
+        assert_eq!(ranked[2].layer, "a");
+    }
+}

@@ -1,0 +1,15 @@
+//! Quantization toolkit (§3.2.2): qparams selection, calibration
+//! observers, the five accuracy techniques, and the per-layer error
+//! profiler behind selective quantization.
+//!
+//! This mirrors `python/compile/quantize.py` (which bakes qparams into
+//! the AOT artifacts); the Rust side powers the fleet error profiler,
+//! the ablation benches and the CLI `quantize` report.
+
+pub mod calibrate;
+pub mod error;
+pub mod qparams;
+
+pub use calibrate::Calibrator;
+pub use error::{profile_error, sqnr_db, ErrorReport};
+pub use qparams::{QParams, QuantGranularity};

@@ -1,0 +1,180 @@
+//! Affine quantization parameters and per-tensor / per-channel /
+//! per-group granularities (§3.2.2 technique 1).
+
+/// Quantization granularity (finer granularity -> better accuracy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantGranularity {
+    PerTensor,
+    /// one scale per output feature / channel
+    PerChannel,
+    /// one scale per group of channels (group convolutions)
+    PerGroup(usize),
+}
+
+/// scale/zero-point pair for an affine mapping q = round(x/scale) + zp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i32,
+    pub bits: u32,
+}
+
+impl QParams {
+    pub fn qmin(&self) -> i32 {
+        -(1 << (self.bits - 1))
+    }
+
+    pub fn qmax(&self) -> i32 {
+        (1 << (self.bits - 1)) - 1
+    }
+
+    /// Choose qparams covering [lo, hi] (always includes 0 so that zero
+    /// is exactly representable — required for zero padding semantics).
+    pub fn from_range(lo: f32, hi: f32, bits: u32, symmetric: bool) -> QParams {
+        let lo = lo.min(0.0);
+        let hi = hi.max(0.0);
+        let (qmin, qmax) = (-(1i64 << (bits - 1)) as f32, ((1i64 << (bits - 1)) - 1) as f32);
+        if symmetric {
+            let amax = lo.abs().max(hi.abs());
+            let scale = if amax > 0.0 { amax / qmax } else { 1.0 };
+            return QParams { scale, zero_point: 0, bits };
+        }
+        let mut scale = (hi - lo) / (qmax - qmin);
+        if scale == 0.0 {
+            scale = 1.0;
+        }
+        let zp = (qmin - lo / scale).round().clamp(qmin, qmax) as i32;
+        QParams { scale, zero_point: zp, bits }
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i32 {
+        let q = (x / self.scale).round() as i32 + self.zero_point;
+        q.clamp(self.qmin(), self.qmax())
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i32) -> f32 {
+        (q - self.zero_point) as f32 * self.scale
+    }
+
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i8> {
+        assert!(self.bits <= 8);
+        xs.iter().map(|&x| self.quantize(x) as i8).collect()
+    }
+
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+}
+
+/// Per-output-channel symmetric weight quantization of a `[N x K]`
+/// matrix: returns (q, per-channel scales).
+pub fn quantize_per_channel(w: &[f32], n: usize, k: usize, bits: u32) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), n * k);
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let mut q = vec![0i8; n * k];
+    let mut scales = vec![0f32; n];
+    for j in 0..n {
+        let row = &w[j * k..(j + 1) * k];
+        let amax = row.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-12);
+        let s = amax / qmax;
+        scales[j] = s;
+        for kk in 0..k {
+            q[j * k + kk] = ((row[kk] / s).round().clamp(-qmax - 1.0, qmax)) as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// Per-tensor symmetric weight quantization.
+pub fn quantize_per_tensor(w: &[f32], bits: u32) -> (Vec<i8>, f32) {
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let amax = w.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-12);
+    let s = amax / qmax;
+    (w.iter().map(|&v| ((v / s).round().clamp(-qmax - 1.0, qmax)) as i8).collect(), s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let qp = QParams::from_range(-3.0, 5.0, 8, false);
+        let mut x = -3.0f32;
+        while x <= 5.0 {
+            let err = (qp.fake_quant(x) - x).abs();
+            assert!(err <= qp.scale * 0.5001, "{x}: {err} vs {}", qp.scale);
+            x += 0.01;
+        }
+    }
+
+    #[test]
+    fn symmetric_has_zero_zp() {
+        let qp = QParams::from_range(-2.0, 1.0, 8, true);
+        assert_eq!(qp.zero_point, 0);
+        assert!((qp.scale - 2.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn zero_is_exactly_representable() {
+        for (lo, hi) in [(0.5f32, 4.0), (-7.0, -0.1), (-1.0, 1.0)] {
+            let qp = QParams::from_range(lo, hi, 8, false);
+            assert_eq!(qp.fake_quant(0.0), 0.0, "({lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let qp = QParams::from_range(-1.0, 1.0, 8, true);
+        assert_eq!(qp.quantize(100.0), 127);
+        assert_eq!(qp.quantize(-100.0), -128);
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_diverse_scales() {
+        let mut rng = Pcg32::seeded(21);
+        let (n, k) = (8, 64);
+        let mut w = vec![0f32; n * k];
+        for j in 0..n {
+            let scale = 10f32.powi(j as i32 % 3 - 2); // 0.01..1
+            for kk in 0..k {
+                w[j * k + kk] = rng.normal_f32(0.0, scale);
+            }
+        }
+        let (q_pc, s_pc) = quantize_per_channel(&w, n, k, 8);
+        let (q_pt, s_pt) = quantize_per_tensor(&w, 8);
+        let err = |deq: &dyn Fn(usize, usize) -> f32| -> f64 {
+            let mut e = 0f64;
+            for j in 0..n {
+                for kk in 0..k {
+                    let d = deq(j, kk) - w[j * k + kk];
+                    e += (d * d) as f64;
+                }
+            }
+            e
+        };
+        let e_pc = err(&|j, kk| q_pc[j * k + kk] as f32 * s_pc[j]);
+        let e_pt = err(&|j, kk| q_pt[j * k + kk] as f32 * s_pt);
+        assert!(e_pc < e_pt * 0.5, "pc {e_pc} pt {e_pt}");
+    }
+
+    #[test]
+    fn lower_bits_larger_error() {
+        let mut rng = Pcg32::seeded(22);
+        let w: Vec<f32> = (0..512).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut last = 0.0f64;
+        for bits in [8u32, 6, 4, 2] {
+            let (q, s) = quantize_per_tensor(&w, bits);
+            let e: f64 = w
+                .iter()
+                .zip(&q)
+                .map(|(&x, &qv)| ((qv as f32 * s - x) as f64).powi(2))
+                .sum();
+            assert!(e >= last, "bits {bits}: {e} < {last}");
+            last = e;
+        }
+    }
+}

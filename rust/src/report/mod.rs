@@ -1,0 +1,78 @@
+//! Report renderers: print the paper's tables and figure series in a
+//! uniform textual form, shared by the CLI and the benches.
+
+use crate::fleet::TimeBreakdown;
+use crate::perfmodel::CharacterizationRow;
+use crate::util::bench::Table;
+
+/// Human format for parameter counts.
+pub fn fmt_count(n: u64) -> String {
+    let nf = n as f64;
+    if nf >= 1e9 {
+        format!("{:.1}B", nf / 1e9)
+    } else if nf >= 1e6 {
+        format!("{:.1}M", nf / 1e6)
+    } else if nf >= 1e3 {
+        format!("{:.1}K", nf / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Table 1 renderer.
+pub fn print_table1(rows: &[CharacterizationRow]) {
+    let mut t = Table::new(&[
+        "Model",
+        "Batch",
+        "Params",
+        "MaxLiveActs",
+        "Ops/weight (avg/min)",
+        "Ops/elem (avg/min)",
+        "Latency",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.model.clone(),
+            r.batch.to_string(),
+            fmt_count(r.params),
+            fmt_count(r.max_live_acts),
+            format!("{:.0} / {:.0}", r.intensity_w_avg, r.intensity_w_min),
+            format!("{:.0} / {:.0}", r.intensity_full_avg, r.intensity_full_min),
+            format!("{:?}", r.latency),
+        ]);
+    }
+    t.print();
+}
+
+/// Fig 4 renderer: per-bucket time shares plus a text bar.
+pub fn print_breakdown(b: &TimeBreakdown) {
+    let mut entries: Vec<_> = b.buckets.iter().collect();
+    entries.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap());
+    println!("operator time breakdown (total {:.1} s simulated):", b.total_us / 1e6);
+    for (bucket, (us, share)) in entries {
+        let bar = "#".repeat((share * 60.0).round() as usize);
+        println!("  {bucket:<12} {:>5.1}%  {bar}  ({:.2} s)", share * 100.0, us / 1e6);
+    }
+}
+
+/// Fig 3 renderer: capacity sweep curves per model.
+pub fn print_roofline_curves(model: &str, c1: &[(f64, f64)], c10: &[(f64, f64)]) {
+    println!("{model}:");
+    println!("  {:<10} {:>14} {:>14}", "cap (MB)", "1 TB/s (TOP/s)", "10 TB/s (TOP/s)");
+    for ((mb, a), (_, b)) in c1.iter().zip(c10) {
+        println!("  {mb:<10} {a:>14.2} {b:>14.2}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_count_units() {
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(25_000_000), "25.0M");
+        assert_eq!(fmt_count(12_000_000_000), "12.0B");
+        assert_eq!(fmt_count(1_500), "1.5K");
+    }
+}

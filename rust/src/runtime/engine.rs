@@ -1,0 +1,155 @@
+//! Engine: owns a PJRT client, compiles HLO-text artifacts, keeps model
+//! weights resident on device, and executes with per-request activations.
+//!
+//! Not `Send` (PJRT handles are raw pointers) — see [`super::executor`]
+//! for the threaded wrapper the coordinator uses.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::tensor::{DType, HostTensor};
+use super::weights::read_weights_file;
+
+/// PJRT client wrapper.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+/// A compiled artifact with device-resident weights.
+pub struct LoadedModel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    /// compile + weight-upload time, for the registry's metrics
+    pub load_ms: f64,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact and upload its weights.
+    pub fn load(&self, manifest: &Manifest, name: &str) -> Result<LoadedModel> {
+        let meta = manifest.artifact(name)?.clone();
+        let t0 = Instant::now();
+        let hlo_path = manifest.hlo_path(&meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+
+        // Upload weights once; they stay device-resident across requests.
+        let mut weight_bufs = Vec::new();
+        if let Some(wpath) = manifest.weights_path(&meta) {
+            let tensors = read_weights_file(&wpath)?;
+            let by_name: HashMap<&str, &HostTensor> =
+                tensors.iter().map(|t| (t.name.as_str(), &t.tensor)).collect();
+            for wp in &meta.weight_params {
+                let t = by_name
+                    .get(wp.name.as_str())
+                    .with_context(|| format!("weight {} missing from {}", wp.name, wpath.display()))?;
+                if t.shape != wp.shape {
+                    bail!("weight {} shape {:?} != manifest {:?}", wp.name, t.shape, wp.shape);
+                }
+                weight_bufs.push(self.upload(t)?);
+            }
+        } else if !meta.weight_params.is_empty() {
+            bail!("artifact {name} declares weight params but no weights file");
+        }
+        Ok(LoadedModel { meta, exe, weight_bufs, load_ms: t0.elapsed().as_secs_f64() * 1e3 })
+    }
+
+    /// Host -> device transfer.
+    ///
+    /// Uses the *typed* `buffer_from_host_buffer` — the raw-bytes variant
+    /// in xla 0.1.6 passes the `ElementType` discriminant where PJRT
+    /// expects a `PrimitiveType` (off by one: F32 arrives as F16).
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let buf = match t.dtype {
+            DType::F32 => {
+                let v = t.as_f32()?;
+                self.client.buffer_from_host_buffer(&v, &t.shape, None)?
+            }
+            DType::I32 => {
+                let v = t.as_i32()?;
+                self.client.buffer_from_host_buffer(&v, &t.shape, None)?
+            }
+            DType::I8 => {
+                let v = t.as_i8()?;
+                self.client.buffer_from_host_buffer(&v, &t.shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+}
+
+impl LoadedModel {
+    /// Validate inputs against the manifest contract.
+    pub fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (got, want)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if got.dtype != want.dtype {
+                bail!("{} input {i} ({}): dtype {:?} != {:?}", self.meta.name, want.name, got.dtype, want.dtype);
+            }
+            if got.shape != want.shape {
+                bail!("{} input {i} ({}): shape {:?} != {:?}", self.meta.name, want.name, got.shape, want.shape);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with device-resident weights + per-request activations.
+    pub fn run(&self, engine: &Engine, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_inputs(inputs)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        let uploaded: Vec<xla::PjRtBuffer> =
+            inputs.iter().map(|t| engine.upload(t)).collect::<Result<Vec<_>>>()?;
+        args.extend(uploaded.iter());
+
+        let result = self.exe.execute_b(&args)?;
+        // return_tuple=True at lowering time: a single tuple output
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, meta) in parts.into_iter().zip(&self.meta.outputs) {
+            out.push(literal_to_host(&lit, meta.dtype, &meta.shape)?);
+        }
+        Ok(out)
+    }
+}
+
+fn literal_to_host(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<HostTensor> {
+    let data = match dtype {
+        DType::F32 => {
+            let v: Vec<f32> = lit.to_vec()?;
+            v.iter().flat_map(|x| x.to_le_bytes()).collect()
+        }
+        DType::I32 => {
+            let v: Vec<i32> = lit.to_vec()?;
+            v.iter().flat_map(|x| x.to_le_bytes()).collect()
+        }
+        DType::I8 => {
+            let v: Vec<i8> = lit.to_vec()?;
+            v.iter().map(|&x| x as u8).collect()
+        }
+    };
+    Ok(HostTensor { dtype, shape: shape.to_vec(), data })
+}

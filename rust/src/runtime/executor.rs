@@ -1,0 +1,199 @@
+//! Threaded executor: one OS thread per (virtual) device owning the
+//! non-`Send` PJRT objects; the coordinator talks to it over channels.
+//!
+//! This mirrors the disaggregated-tier shape of §4: each executor is an
+//! inference device; [`ExecutorPool`] is the tier. Requests carry only
+//! host tensors, so no unsafe `Send` is needed.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::engine::{Engine, LoadedModel};
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+/// A unit of device work.
+struct ExecRequest {
+    model: String,
+    inputs: Vec<HostTensor>,
+    resp: Sender<Result<ExecResponse>>,
+}
+
+/// Result of one execution.
+#[derive(Debug)]
+pub struct ExecResponse {
+    pub outputs: Vec<HostTensor>,
+    /// device-side wall time (upload + execute + download)
+    pub exec_us: f64,
+}
+
+enum Msg {
+    Exec(ExecRequest),
+    Shutdown,
+}
+
+/// Handle to a single executor thread.
+#[derive(Clone)]
+pub struct Executor {
+    tx: Sender<Msg>,
+    pub id: usize,
+}
+
+impl Executor {
+    /// Spawn an executor thread that loads `artifact_names` from the
+    /// manifest directory before accepting work.
+    pub fn spawn(
+        id: usize,
+        artifacts_dir: PathBuf,
+        artifact_names: Vec<String>,
+    ) -> Result<(Executor, JoinHandle<()>)> {
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name(format!("executor-{id}"))
+            .spawn(move || executor_main(rx, ready_tx, &artifacts_dir, &artifact_names))
+            .context("spawning executor thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor {id} died during startup"))??;
+        Ok((Executor { tx, id }, handle))
+    }
+
+    /// Synchronous execute (blocks until the device thread responds).
+    pub fn run(&self, model: &str, inputs: Vec<HostTensor>) -> Result<ExecResponse> {
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .send(Msg::Exec(ExecRequest { model: model.to_string(), inputs, resp: resp_tx }))
+            .map_err(|_| anyhow!("executor {} is gone", self.id))?;
+        resp_rx.recv().map_err(|_| anyhow!("executor {} dropped the request", self.id))?
+    }
+
+    /// Fire-and-collect-later execute.
+    pub fn run_async(&self, model: &str, inputs: Vec<HostTensor>) -> Result<Receiver<Result<ExecResponse>>> {
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .send(Msg::Exec(ExecRequest { model: model.to_string(), inputs, resp: resp_tx }))
+            .map_err(|_| anyhow!("executor {} is gone", self.id))?;
+        Ok(resp_rx)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+fn executor_main(
+    rx: Receiver<Msg>,
+    ready: Sender<Result<()>>,
+    artifacts_dir: &std::path::Path,
+    artifact_names: &[String],
+) {
+    let setup = (|| -> Result<(Engine, HashMap<String, LoadedModel>)> {
+        let engine = Engine::cpu()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        let mut models = HashMap::new();
+        for name in artifact_names {
+            let model = engine.load(&manifest, name)?;
+            // warm the executable: the first execution pays one-time
+            // JIT finalization / buffer allocation that would otherwise
+            // land in a request's p99
+            let zeros: Vec<HostTensor> = model
+                .meta
+                .inputs
+                .iter()
+                .map(|t| HostTensor {
+                    dtype: t.dtype,
+                    shape: t.shape.clone(),
+                    data: vec![0u8; t.byte_len()],
+                })
+                .collect();
+            let _ = model.run(&engine, &zeros)?;
+            models.insert(name.clone(), model);
+        }
+        Ok((engine, models))
+    })();
+
+    let (engine, models) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Exec(req) => {
+                let t0 = Instant::now();
+                let result = match models.get(&req.model) {
+                    None => Err(anyhow!("model {} not loaded on this executor", req.model)),
+                    Some(m) => m.run(&engine, &req.inputs).map(|outputs| ExecResponse {
+                        outputs,
+                        exec_us: t0.elapsed().as_secs_f64() * 1e6,
+                    }),
+                };
+                let _ = req.resp.send(result);
+            }
+        }
+    }
+}
+
+/// A pool of executor threads (the inference tier).
+pub struct ExecutorPool {
+    executors: Vec<Executor>,
+    handles: Vec<JoinHandle<()>>,
+    next: Arc<Mutex<usize>>,
+}
+
+impl ExecutorPool {
+    /// Spawn `n` executors, each loading the same artifact set.
+    pub fn new(n: usize, artifacts_dir: PathBuf, artifact_names: Vec<String>) -> Result<ExecutorPool> {
+        let mut executors = Vec::new();
+        let mut handles = Vec::new();
+        for id in 0..n {
+            let (e, h) = Executor::spawn(id, artifacts_dir.clone(), artifact_names.clone())?;
+            executors.push(e);
+            handles.push(h);
+        }
+        Ok(ExecutorPool { executors, handles, next: Arc::new(Mutex::new(0)) })
+    }
+
+    pub fn len(&self) -> usize {
+        self.executors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.executors.is_empty()
+    }
+
+    /// Round-robin executor selection.
+    pub fn pick(&self) -> &Executor {
+        let mut n = self.next.lock().unwrap();
+        let e = &self.executors[*n % self.executors.len()];
+        *n = n.wrapping_add(1);
+        e
+    }
+
+    pub fn executors(&self) -> &[Executor] {
+        &self.executors
+    }
+
+    pub fn shutdown(self) {
+        for e in &self.executors {
+            e.shutdown();
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}

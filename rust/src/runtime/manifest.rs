@@ -1,0 +1,182 @@
+//! Artifact manifest (artifacts/manifest.json) parsing.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::DType;
+
+/// Shape+dtype of one HLO parameter or output.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    fn from_json(j: &Json) -> Result<TensorMeta> {
+        let name = j.get("name").as_str().unwrap_or("").to_string();
+        let dtype = DType::from_manifest(j.get("dtype").as_str().context("dtype")?)?;
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .context("shape")?
+            .iter()
+            .map(|d| d.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorMeta { name, dtype, shape })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elem_count() * self.dtype.size()
+    }
+}
+
+/// One AOT artifact: an HLO module plus its parameter contract.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub hlo: String,
+    pub model: Option<String>,
+    pub weights: Option<String>,
+    pub weight_params: Vec<TensorMeta>,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub batch: usize,
+}
+
+/// The parsed manifest, rooted at the artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub models: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        if root.get("version").as_usize() != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let mut artifacts = BTreeMap::new();
+        let arts = root.get("artifacts").as_obj().context("artifacts object")?;
+        for (name, a) in arts {
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                hlo: a.get("hlo").as_str().context("hlo path")?.to_string(),
+                model: a.get("model").as_str().map(|s| s.to_string()),
+                weights: a.get("weights").as_str().map(|s| s.to_string()),
+                weight_params: a
+                    .get("weight_params")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorMeta::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                inputs: a
+                    .get("inputs")
+                    .as_arr()
+                    .context("inputs")?
+                    .iter()
+                    .map(TensorMeta::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .get("outputs")
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(TensorMeta::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                batch: a.get("batch").as_usize().unwrap_or(1),
+            };
+            artifacts.insert(name.clone(), meta);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, models: root.get("models").clone() })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.hlo)
+    }
+
+    pub fn weights_path(&self, a: &ArtifactMeta) -> Option<PathBuf> {
+        a.weights.as_ref().map(|w| self.dir.join(w))
+    }
+
+    /// Names of artifacts for a given model, e.g. all recsys batch variants.
+    pub fn artifacts_for_model(&self, model: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.values().filter(|a| a.model.as_deref() == Some(model)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {"recsys": {"dense_dim": 32}},
+      "artifacts": {
+        "m_b2": {
+          "hlo": "m_b2.hlo.txt", "model": "recsys", "weights": "m.weights.bin",
+          "weight_params": [{"name": "w", "dtype": "f32", "shape": [4, 4]}],
+          "inputs": [{"name": "x", "dtype": "f32", "shape": [2, 4]},
+                     {"name": "idx", "dtype": "i32", "shape": [2, 3]}],
+          "outputs": [{"name": "y", "dtype": "f32", "shape": [2, 1]}],
+          "batch": 2
+        },
+        "k": {
+          "hlo": "k.hlo.txt", "model": null, "weights": null,
+          "weight_params": [],
+          "inputs": [{"name": "x", "dtype": "i8", "shape": [8]}],
+          "outputs": [{"name": "y", "dtype": "f32", "shape": [8]}],
+          "batch": 8
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.artifact("m_b2").unwrap();
+        assert_eq!(a.batch, 2);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.weight_params[0].byte_len(), 64);
+        assert_eq!(m.hlo_path(a), PathBuf::from("/tmp/a/m_b2.hlo.txt"));
+        assert!(m.weights_path(m.artifact("k").unwrap()).is_none());
+        assert_eq!(m.artifacts_for_model("recsys").len(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        assert!(Manifest::parse(Path::new("."), r#"{"version": 2, "artifacts": {}}"#).is_err());
+    }
+}

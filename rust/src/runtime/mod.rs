@@ -1,0 +1,35 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! on the request path with weights resident on device.
+//!
+//! Python/JAX runs once at build time (`make artifacts`); this module is
+//! the only place the serving tier touches XLA. The flow mirrors
+//! /opt/xla-example/load_hlo:
+//!
+//! ```text
+//! PjRtClient::cpu()
+//!   -> HloModuleProto::from_text_file(artifacts/<name>.hlo.txt)
+//!   -> XlaComputation::from_proto -> client.compile
+//!   -> upload weights once (buffer_from_host_raw_bytes)
+//!   -> per request: upload activations, execute_b, download tuple
+//! ```
+//!
+//! HLO *text* is the interchange format — jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+//!
+//! PJRT objects hold raw pointers and are not `Send`, so [`executor`]
+//! wraps the engine in a dedicated thread per (virtual) device and the
+//! coordinator talks to it over channels — the same shape as one
+//! executor process per accelerator in a disaggregated tier (§4).
+
+pub mod engine;
+pub mod executor;
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+pub use engine::{Engine, LoadedModel};
+pub use executor::{Executor, ExecutorPool};
+pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
+pub use tensor::{DType, HostTensor};
+pub use weights::read_weights_file;

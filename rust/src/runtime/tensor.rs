@@ -1,0 +1,143 @@
+//! Host-side tensors exchanged with the PJRT runtime.
+
+use anyhow::{bail, Result};
+
+/// Element types used by the artifacts (matches the AOT manifest codes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+
+    pub fn from_manifest(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i8" => DType::I8,
+            "i32" => DType::I32,
+            other => bail!("unknown dtype in manifest: {other}"),
+        })
+    }
+
+    pub fn to_xla(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I8 => xla::ElementType::S8,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// A host tensor: dtype + shape + raw little-endian bytes.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn from_f32(shape: &[usize], vals: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: DType::F32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], vals: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: DType::I32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i8(shape: &[usize], vals: &[i8]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        HostTensor {
+            dtype: DType::I8,
+            shape: shape.to_vec(),
+            data: vals.iter().map(|&v| v as u8).collect(),
+        }
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elem_count() * self.dtype.size()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not F32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not I32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i8(&self) -> Result<Vec<i8>> {
+        if self.dtype != DType::I8 {
+            bail!("tensor is {:?}, not I8", self.dtype);
+        }
+        Ok(self.data.iter().map(|&b| b as i8).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = HostTensor::from_f32(&[2, 2], &[1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.byte_len(), 16);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, -2.5, 3.25, 0.0]);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = HostTensor::from_i32(&[3], &[-1, 0, i32::MAX]);
+        assert_eq!(t.as_i32().unwrap(), vec![-1, 0, i32::MAX]);
+    }
+
+    #[test]
+    fn i8_roundtrip() {
+        let t = HostTensor::from_i8(&[4], &[-128, -1, 0, 127]);
+        assert_eq!(t.as_i8().unwrap(), vec![-128, -1, 0, 127]);
+        assert_eq!(t.byte_len(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::from_f32(&[3], &[1.0]);
+    }
+}

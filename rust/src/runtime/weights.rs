@@ -1,0 +1,135 @@
+//! Reader for the DCIW weights binary written by `python/compile/aot.py`.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "DCIW" | u32 version | u32 n_tensors
+//! per tensor: u32 name_len | name | u8 dtype(0=f32,1=i8,2=i32) |
+//!             u32 ndim | u64 dims... | raw data
+//! ```
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::{DType, HostTensor};
+
+/// A named weight tensor.
+#[derive(Debug, Clone)]
+pub struct NamedTensor {
+    pub name: String,
+    pub tensor: HostTensor,
+}
+
+/// Read every tensor in a DCIW file, preserving order (the order defines
+/// the leading HLO parameters).
+pub fn read_weights_file(path: &Path) -> Result<Vec<NamedTensor>> {
+    let data = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    read_weights_bytes(&data)
+}
+
+pub fn read_weights_bytes(data: &[u8]) -> Result<Vec<NamedTensor>> {
+    let mut cur = std::io::Cursor::new(data);
+    let mut magic = [0u8; 4];
+    cur.read_exact(&mut magic)?;
+    if &magic != b"DCIW" {
+        bail!("bad magic: {:?}", magic);
+    }
+    let version = read_u32(&mut cur)?;
+    if version != 1 {
+        bail!("unsupported weights version {version}");
+    }
+    let n = read_u32(&mut cur)? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut cur)? as usize;
+        let mut name = vec![0u8; name_len];
+        cur.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf8")?;
+        let mut dcode = [0u8; 1];
+        cur.read_exact(&mut dcode)?;
+        let dtype = match dcode[0] {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::I32,
+            other => bail!("unknown dtype code {other} for {name}"),
+        };
+        let ndim = read_u32(&mut cur)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            cur.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let count: usize = shape.iter().product::<usize>().max(1);
+        let nbytes = count * dtype.size();
+        let mut raw = vec![0u8; nbytes];
+        cur.read_exact(&mut raw)
+            .with_context(|| format!("truncated data for tensor {name}"))?;
+        out.push(NamedTensor { name, tensor: HostTensor { dtype, shape, data: raw } });
+    }
+    Ok(out)
+}
+
+fn read_u32(cur: &mut std::io::Cursor<&[u8]>) -> Result<u32> {
+    let mut b = [0u8; 4];
+    cur.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tensor(out: &mut Vec<u8>, name: &str, dcode: u8, dims: &[u64], data: &[u8]) {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.push(dcode);
+        out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+        for d in dims {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out.extend_from_slice(data);
+    }
+
+    fn header(n: u32) -> Vec<u8> {
+        let mut v = b"DCIW".to_vec();
+        v.extend_from_slice(&1u32.to_le_bytes());
+        v.extend_from_slice(&n.to_le_bytes());
+        v
+    }
+
+    #[test]
+    fn roundtrip_two_tensors() {
+        let mut buf = header(2);
+        let f: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        write_tensor(&mut buf, "w", 0, &[2, 2], &f);
+        write_tensor(&mut buf, "idx", 2, &[2], &[7, 0, 0, 0, 9, 0, 0, 0]);
+        let ts = read_weights_bytes(&buf).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "w");
+        assert_eq!(ts[0].tensor.shape, vec![2, 2]);
+        assert_eq!(ts[0].tensor.as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ts[1].tensor.as_i32().unwrap(), vec![7, 9]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(read_weights_bytes(b"NOPE").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut buf = header(1);
+        write_tensor(&mut buf, "w", 0, &[4], &[0u8; 8]); // needs 16 bytes
+        assert!(read_weights_bytes(&buf).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut v = b"DCIW".to_vec();
+        v.extend_from_slice(&9u32.to_le_bytes());
+        v.extend_from_slice(&0u32.to_le_bytes());
+        assert!(read_weights_bytes(&v).is_err());
+    }
+}

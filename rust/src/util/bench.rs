@@ -1,0 +1,175 @@
+//! Measurement harness used by `rust/benches/*` (criterion is
+//! unavailable offline). Provides warmup + timed iterations, outlier-
+//! robust medians, and Gop/s / GB/s reporting helpers so every bench
+//! prints the same rows/series the paper's tables and figures report.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use super::stats::{fmt_ns, Samples};
+
+/// One measurement result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p05_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Measurement {
+    /// Throughput in Gop/s given the op count per iteration.
+    pub fn gops(&self, ops_per_iter: f64) -> f64 {
+        ops_per_iter / self.median_ns
+    }
+
+    /// Bandwidth in GB/s given bytes touched per iteration.
+    pub fn gbps(&self, bytes_per_iter: f64) -> f64 {
+        bytes_per_iter / self.median_ns
+    }
+}
+
+/// Run `f` with warmup, then sample wall time until `budget_ms` of
+/// measurement is spent (at least `min_samples` samples).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    bench_cfg(name, 100, 10, &mut f)
+}
+
+/// Configurable variant: `budget_ms` of total measurement time,
+/// `min_samples` timed samples minimum.
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    budget_ms: u64,
+    min_samples: usize,
+    f: &mut F,
+) -> Measurement {
+    // warmup + calibration: find iters-per-sample so one sample >= ~1ms
+    f();
+    let t0 = Instant::now();
+    f();
+    let once_ns = t0.elapsed().as_nanos().max(1) as f64;
+    let iters_per_sample = ((1_000_000.0 / once_ns).ceil() as u64).clamp(1, 1_000_000);
+
+    let mut samples = Samples::new();
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let start = Instant::now();
+    while samples.len() < min_samples || start.elapsed() < budget {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    let mean = samples.mean();
+    Measurement {
+        name: name.to_string(),
+        iters: samples.len() as u64 * iters_per_sample,
+        median_ns: samples.p50(),
+        mean_ns: mean,
+        p05_ns: samples.percentile(5.0),
+        p95_ns: samples.percentile(95.0),
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn keep<T>(v: T) -> T {
+    black_box(v)
+}
+
+/// Table printer: fixed-width columns, paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>().trim_end()
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Report a measurement line in a uniform format.
+pub fn report(m: &Measurement) {
+    println!(
+        "{:<44} {:>12}/iter  (p05 {}, p95 {}, n={})",
+        m.name,
+        fmt_ns(m.median_ns),
+        fmt_ns(m.p05_ns),
+        fmt_ns(m.p95_ns),
+        m.iters,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let m = bench_cfg("spin", 20, 5, &mut || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(keep(i));
+            }
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.iters >= 5);
+        assert!(m.p05_ns <= m.p95_ns);
+    }
+
+    #[test]
+    fn gops_math() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 1,
+            median_ns: 1e3,
+            mean_ns: 1e3,
+            p05_ns: 1e3,
+            p95_ns: 1e3,
+        };
+        // 2e6 ops in 1us = 2000 Gop/s
+        assert!((m.gops(2e6) - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,135 @@
+//! IEEE-754 binary16 conversion (the `half` crate is unavailable offline).
+//!
+//! Used by the fp16-storage GEMM path (`gemm::fp16`): weights are stored
+//! as u16 half floats — halving weight memory traffic, the entire win in
+//! the paper's bandwidth-bound regime (Fig 6a) — and widened to f32 for
+//! compute, mirroring x86 `vcvtph2ps`.
+
+/// Convert an f32 to IEEE binary16 (round-to-nearest-even).
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | m | ((mant >> 13) as u16);
+    }
+    // rebias: f32 exp-127 + 15
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e16 <= 0 {
+        // subnormal or zero
+        if e16 < -10 {
+            return sign; // underflow to zero
+        }
+        let m = mant | 0x0080_0000; // implicit bit
+        let shift = (14 - e16) as u32;
+        let half = 1u32 << (shift - 1);
+        let mut v = m >> shift;
+        // round to nearest even
+        if (m & (half * 2 - 1)) > half || ((m & (half * 2 - 1)) == half && (v & 1) == 1) {
+            v += 1;
+        }
+        return sign | v as u16;
+    }
+    let mut v = ((e16 as u32) << 10) | (mant >> 13);
+    // round to nearest even on the 13 dropped bits
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (v & 1) == 1) {
+        v += 1; // may carry into exponent — that is correct behaviour
+    }
+    sign | v as u16
+}
+
+/// Convert IEEE binary16 bits to f32.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 - 10;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((e + 10) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize a slice to f16 storage.
+pub fn to_f16_vec(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_f16(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(f16_to_f32(f32_to_f16(x)), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn relative_error_within_half_ulp() {
+        // f16 has 11 bits of significand: rel err <= 2^-11
+        let mut x = 1e-3f32;
+        while x < 6e4 {
+            let r = f16_to_f32(f32_to_f16(x));
+            assert!(((r - x) / x).abs() <= 1.0 / 2048.0 + 1e-7, "{x} -> {r}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(f32_to_f16(0.0), 0);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(-f32::INFINITY), 0xfc00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f32_to_f16(1e30), 0x7c00); // overflow to inf
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0x7bff), 65504.0); // f16::MAX
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        let tiny = 5.96e-8f32; // smallest positive f16 subnormal
+        let h = f32_to_f16(tiny);
+        assert!(h > 0 && h < 0x400);
+        let back = f16_to_f32(h);
+        assert!((back - tiny).abs() / tiny < 0.5);
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16(1.0), 0x3c00);
+        assert_eq!(f32_to_f16(2.0), 0x4000);
+        assert_eq!(f32_to_f16(-1.5), 0xbe00);
+        assert_eq!(f32_to_f16(0.5), 0x3800);
+        assert_eq!(f32_to_f16(65504.0), 0x7bff);
+    }
+}

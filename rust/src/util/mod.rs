@@ -1,0 +1,14 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The build environment is fully offline (see DESIGN.md substitutions):
+//! no serde / rand / criterion / half crates are available, so this
+//! module provides the minimal equivalents — a JSON parser for the
+//! artifact manifest, a PCG32 PRNG for workload synthesis, an IEEE-754
+//! half-precision converter for the fp16 GEMM path, streaming statistics
+//! for latency tracking, and a measurement harness used by `benches/`.
+
+pub mod bench;
+pub mod f16;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,228 @@
+//! PCG32 pseudo-random number generator (O'Neill 2014).
+//!
+//! Deterministic, seedable, and good enough for workload synthesis,
+//! quantization experiments and property tests. Replaces the `rand`
+//! crate, which is unavailable offline.
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor with the default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u32() as f64) / (u32::MAX as f64 + 1.0)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (n as u64);
+        let mut l = m as u32;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (n as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        // avoid log(0)
+        let u1 = (self.next_u32() as f64 + 1.0) / (u32::MAX as f64 + 2.0);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal f32 with given mean/std.
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = 1.0 - self.uniform();
+        -u.ln() / lambda
+    }
+
+    /// Poisson-ish arrival count for a window (Knuth, small means).
+    pub fn poisson(&mut self, mean: f64) -> u32 {
+        if mean > 30.0 {
+            // normal approximation for large means
+            let v = self.normal() * mean.sqrt() + mean;
+            return v.max(0.0).round() as u32;
+        }
+        let l = (-mean).exp();
+        let mut k = 0u32;
+        let mut p = 1.0;
+        loop {
+            p *= self.uniform();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Zipf-distributed value in [0, n) with exponent s (embedding-id skew).
+    /// Uses rejection-inversion (Hörmann); fine for the simulator scale.
+    pub fn zipf(&mut self, n: u32, s: f64) -> u32 {
+        // simple inverse-CDF on a truncated harmonic approximation
+        debug_assert!(n > 0);
+        if s <= 0.0 {
+            return self.below(n);
+        }
+        let u = self.uniform();
+        // H(x) ~ (x^(1-s) - 1)/(1-s) for s != 1, ln(x) for s == 1
+        let nf = n as f64;
+        let x = if (s - 1.0).abs() < 1e-9 {
+            nf.powf(u)
+        } else {
+            let h_n = (nf.powf(1.0 - s) - 1.0) / (1.0 - s);
+            ((u * h_n * (1.0 - s)) + 1.0).powf(1.0 / (1.0 - s))
+        };
+        (x.floor() as u32).min(n - 1)
+    }
+
+    /// Fill a slice with standard-normal f32 values scaled by `std`.
+    pub fn fill_normal(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32(mean, std);
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn weighted_choice(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut t = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if t < *w {
+                return i;
+            }
+            t -= w;
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg32::seeded(42);
+        let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Pcg32::seeded(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::seeded(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut rng = Pcg32::seeded(13);
+        let n = 10_000u32;
+        let mut head = 0usize;
+        let total = 10_000;
+        for _ in 0..total {
+            if rng.zipf(n, 1.1) < n / 100 {
+                head += 1;
+            }
+        }
+        // with skew, the top 1% of ids gets far more than 1% of traffic
+        assert!(head > total / 10, "head {head}");
+    }
+
+    #[test]
+    fn poisson_mean_tracks() {
+        let mut rng = Pcg32::seeded(17);
+        let n = 5000;
+        let m: f64 = (0..n).map(|_| rng.poisson(4.0) as f64).sum::<f64>() / n as f64;
+        assert!((m - 4.0).abs() < 0.2, "mean {m}");
+    }
+
+    #[test]
+    fn weighted_choice_respects_weights() {
+        let mut rng = Pcg32::seeded(19);
+        let w = [1.0, 9.0];
+        let picks = (0..10_000).filter(|_| rng.weighted_choice(&w) == 1).count();
+        assert!(picks > 8_500 && picks < 9_500, "{picks}");
+    }
+}

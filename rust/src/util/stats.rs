@@ -1,0 +1,257 @@
+//! Streaming statistics: latency percentiles, histograms, running
+//! min/max/mean — used by the coordinator's metrics, the fleet telemetry
+//! agent (§3.1) and the bench harness.
+
+/// Reservoir of raw samples with percentile queries. For the sample
+/// counts in this repo (<= millions) keeping raw values is simplest and
+/// exact.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    vals: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.vals.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        self.vals.iter().sum::<f64>() / self.vals.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.vals.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.vals.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.vals.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.vals.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    /// Exact percentile (nearest-rank with linear interpolation).
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let p = p.clamp(0.0, 100.0) / 100.0;
+        let idx = p * (self.vals.len() - 1) as f64;
+        let lo = idx.floor() as usize;
+        let hi = idx.ceil() as usize;
+        if lo == hi {
+            self.vals[lo]
+        } else {
+            let f = idx - lo as f64;
+            self.vals[lo] * (1.0 - f) + self.vals[hi] * f
+        }
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Running scalar statistics without sample storage (Welford).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Running {
+    pub n: u64,
+    pub mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        let d = v - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (v - self.mean);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Merge another accumulator (parallel reduction).
+    pub fn merge(&mut self, o: &Running) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *o;
+            return;
+        }
+        let n = self.n + o.n;
+        let d = o.mean - self.mean;
+        let mean = self.mean + d * o.n as f64 / n as f64;
+        let m2 = self.m2 + o.m2 + d * d * self.n as f64 * o.n as f64 / n as f64;
+        *self = Running { n, mean, m2, min: self.min.min(o.min), max: self.max.max(o.max) };
+    }
+}
+
+/// Fixed-range histogram (used by the quantization calibrator).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub under: u64,
+    pub over: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], under: 0, over: 0 }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if v < self.lo {
+            self.under += 1;
+        } else if v >= self.hi {
+            self.over += 1;
+        } else {
+            let f = (v - self.lo) / (self.hi - self.lo);
+            let n = self.counts.len();
+            let idx = ((f * n as f64) as usize).min(n - 1);
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.under + self.over
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+}
+
+/// Pretty-print nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{:.0} ns", ns)
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = Samples::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(v);
+        }
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert!((s.percentile(25.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn running_matches_samples() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64) * 0.7 - 3.0).collect();
+        let mut r = Running::new();
+        let mut s = Samples::new();
+        for &x in &xs {
+            r.push(x);
+            s.push(x);
+        }
+        assert!((r.mean - s.mean()).abs() < 1e-9);
+        assert!((r.std() - s.std()).abs() < 1e-9);
+        assert_eq!(r.min, s.min());
+        assert_eq!(r.max, s.max());
+    }
+
+    #[test]
+    fn running_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..57).map(|i| (i as f64).sin()).collect();
+        let mut all = Running::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut a = Running::new();
+        let mut b = Running::new();
+        for &x in &xs[..20] {
+            a.push(x);
+        }
+        for &x in &xs[20..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean - all.mean).abs() < 1e-12);
+        assert!((a.var() - all.var()).abs() < 1e-12);
+        assert_eq!(a.n, all.n);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        h.push(-1.0);
+        h.push(99.0);
+        assert!(h.counts.iter().all(|&c| c == 1));
+        assert_eq!(h.under, 1);
+        assert_eq!(h.over, 1);
+        assert_eq!(h.total(), 12);
+        assert!((h.bin_center(0) - 0.5).abs() < 1e-9);
+    }
+}

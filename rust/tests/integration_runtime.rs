@@ -1,0 +1,163 @@
+//! Cross-language correctness seal: replay the JAX-evaluated golden
+//! inputs through the Rust PJRT runtime and assert the outputs match.
+//!
+//! Requires `make artifacts` (skips cleanly otherwise).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use dcinfer::runtime::{read_weights_file, Engine, HostTensor, Manifest};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn goldens(dir: &Path) -> HashMap<String, HostTensor> {
+    read_weights_file(&dir.join("goldens.bin"))
+        .expect("goldens.bin")
+        .into_iter()
+        .map(|t| (t.name, t.tensor))
+        .collect()
+}
+
+fn assert_close(name: &str, got: &HostTensor, want: &HostTensor, tol: f32) {
+    assert_eq!(got.shape, want.shape, "{name} shape");
+    assert_eq!(got.dtype, want.dtype, "{name} dtype");
+    let g = got.as_f32().unwrap();
+    let w = want.as_f32().unwrap();
+    let mut max_err = 0f32;
+    for (a, b) in g.iter().zip(&w) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err <= tol, "{name}: max abs err {max_err} > {tol}");
+}
+
+/// Run one artifact against its goldens.
+fn check_artifact(engine: &Engine, manifest: &Manifest, g: &HashMap<String, HostTensor>, name: &str, tol: f32) {
+    let model = engine.load(manifest, name).expect("load");
+    let n_in = model.meta.inputs.len();
+    let inputs: Vec<HostTensor> =
+        (0..n_in).map(|i| g[&format!("{name}/in{i}")].clone()).collect();
+    let outs = model.run(engine, &inputs).expect("run");
+    assert_eq!(outs.len(), model.meta.outputs.len());
+    for (i, out) in outs.iter().enumerate() {
+        assert_close(&format!("{name}/out{i}"), out, &g[&format!("{name}/out{i}")], tol);
+    }
+}
+
+#[test]
+fn recsys_fp32_matches_jax_goldens() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let g = goldens(&dir);
+    for b in [1usize, 4, 16, 64] {
+        let name = format!("recsys_fp32_b{b}");
+        if manifest.artifacts.contains_key(&name) {
+            check_artifact(&engine, &manifest, &g, &name, 2e-5);
+        }
+    }
+}
+
+#[test]
+fn recsys_int8_matches_jax_goldens() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    if !manifest.artifacts.contains_key("recsys_int8_b16") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let g = goldens(&dir);
+    check_artifact(&engine, &manifest, &g, "recsys_int8_b16", 2e-5);
+}
+
+#[test]
+fn gru_step_matches_jax_goldens() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    if !manifest.artifacts.contains_key("gru_step_b1") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let g = goldens(&dir);
+    check_artifact(&engine, &manifest, &g, "gru_step_b1", 5e-5);
+    check_artifact(&engine, &manifest, &g, "gru_step_b8", 5e-5);
+}
+
+#[test]
+fn kernel_artifacts_match_jax_goldens() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    if !manifest.artifacts.contains_key("kernel_qgemm") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let g = goldens(&dir);
+    check_artifact(&engine, &manifest, &g, "kernel_qgemm", 1e-4);
+    check_artifact(&engine, &manifest, &g, "kernel_sls", 2e-5);
+}
+
+#[test]
+fn rejects_malformed_inputs() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let model = engine.load(&manifest, "recsys_fp32_b1").unwrap();
+    // wrong arity
+    assert!(model.run(&engine, &[]).is_err());
+    // wrong shape
+    let bad = vec![
+        HostTensor::from_f32(&[1, 3], &[0.0, 0.0, 0.0]),
+        HostTensor::from_i32(&[1, 8, 32], &vec![0; 256]),
+    ];
+    assert!(model.run(&engine, &bad).is_err());
+    // wrong dtype
+    let meta0 = model.meta.inputs[0].clone();
+    let bad2 = vec![
+        HostTensor::from_i32(&meta0.shape, &vec![0; meta0.elem_count()]),
+        HostTensor::from_i32(&model.meta.inputs[1].shape, &vec![0; model.meta.inputs[1].elem_count()]),
+    ];
+    assert!(model.run(&engine, &bad2).is_err());
+}
+
+#[test]
+fn executor_pool_round_trip() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let pool = dcinfer::runtime::ExecutorPool::new(
+        2,
+        dir.clone(),
+        vec!["recsys_fp32_b1".to_string()],
+    )
+    .unwrap();
+    let g = goldens(&dir);
+    let inputs = vec![
+        g["recsys_fp32_b1/in0"].clone(),
+        g["recsys_fp32_b1/in1"].clone(),
+    ];
+    // exercise both executors
+    let mut outs = Vec::new();
+    for _ in 0..4 {
+        let resp = pool.pick().run("recsys_fp32_b1", inputs.clone()).unwrap();
+        outs.push(resp.outputs[0].clone());
+    }
+    for o in &outs {
+        assert_close("pool/out0", o, &g["recsys_fp32_b1/out0"], 2e-5);
+    }
+    // unknown model errors, pool survives
+    assert!(pool.pick().run("nope", inputs).is_err());
+    pool.shutdown();
+}

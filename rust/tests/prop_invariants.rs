@@ -1,0 +1,221 @@
+//! Property-based tests (hand-rolled sweeps — proptest is unavailable
+//! offline): randomized inputs over many seeds asserting invariants of
+//! the coordinator, GEMM kernels, quantizer and roofline allocator.
+
+use dcinfer::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use dcinfer::coordinator::request::InferRequest;
+use dcinfer::gemm::{
+    i8acc16::gemm_i8_acc16, i8acc32::{gemm_i8_acc32, gemm_i8_ref}, split_outliers,
+    OutputPipeline, PackedBI8, PackedBI8Acc16,
+};
+use dcinfer::models::representative_zoo;
+use dcinfer::perfmodel::{roofline_model_with_policy, AllocPolicy, DeviceSpec};
+use dcinfer::quant::qparams::QParams;
+use dcinfer::util::f16::{f16_to_f32, f32_to_f16};
+use dcinfer::util::rng::Pcg32;
+
+const CASES: u64 = 60;
+
+// ---------------------------------------------------------------------------
+// GEMM invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_i8acc32_exact_for_random_shapes() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(seed);
+        let m = 1 + rng.below(12) as usize;
+        let n = 1 + rng.below(70) as usize;
+        let k = 1 + rng.below(200) as usize;
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let packed = PackedBI8::pack(&b, n, k);
+        let pipe = OutputPipeline::per_tensor(n, 0, 1.0, packed.rowsum.clone(), false);
+        let mut c = vec![0f32; m * n];
+        gemm_i8_acc32(&a, m, &packed, &pipe, &mut c);
+        let want = gemm_i8_ref(&a, m, &b, n, k);
+        for (x, y) in c.iter().zip(&want) {
+            assert_eq!(*x, *y as f32, "seed {seed} ({m},{n},{k})");
+        }
+    }
+}
+
+#[test]
+fn prop_acc16_equals_acc32_for_any_weights() {
+    // the outlier split must make the 16-bit path exact for the *full*
+    // int8 weight range, for any shape
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(1000 + seed);
+        let m = 1 + rng.below(8) as usize;
+        let n = 1 + rng.below(48) as usize;
+        let k = 1 + rng.below(160) as usize;
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let p16 = PackedBI8Acc16::pack(&b, n, k);
+        let p32 = PackedBI8::pack(&b, n, k);
+        let pipe = OutputPipeline::per_tensor(n, 3, 0.01, p32.rowsum.clone(), true);
+        let mut c16 = vec![0f32; m * n];
+        let mut c32 = vec![0f32; m * n];
+        gemm_i8_acc16(&a, m, &p16, &pipe, &mut c16);
+        gemm_i8_acc32(&a, m, &p32, &pipe, &mut c32);
+        assert_eq!(c16, c32, "seed {seed} ({m},{n},{k})");
+    }
+}
+
+#[test]
+fn prop_outlier_split_reconstructs_for_all_bit_widths() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(2000 + seed);
+        let n = 1 + rng.below(20) as usize;
+        let k = 1 + rng.below(60) as usize;
+        let bits = 2 + rng.below(7); // 2..=8
+        let b: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let (main, out) = split_outliers(&b, n, k, bits);
+        let hi = (1i32 << (bits - 1)) - 1;
+        let lo = -(1i32 << (bits - 1));
+        let mut recon = vec![0i32; n * k];
+        for (i, &m) in main.iter().enumerate() {
+            assert!((lo..=hi).contains(&(m as i32)), "main out of range");
+            recon[i] = m as i32;
+        }
+        for j in 0..n {
+            for e in out.row_ptr[j] as usize..out.row_ptr[j + 1] as usize {
+                recon[j * k + out.col_idx[e] as usize] += out.values[e] as i32;
+            }
+        }
+        for (r, &orig) in recon.iter().zip(&b) {
+            assert_eq!(*r, orig as i32, "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantizer invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qparams_roundtrip_bounded_and_zero_exact() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(3000 + seed);
+        let lo = rng.uniform_range(-100.0, 0.0);
+        let hi = rng.uniform_range(0.01, 100.0);
+        let bits = 2 + rng.below(7);
+        let qp = QParams::from_range(lo, hi, bits, rng.below(2) == 0);
+        // zero exactly representable
+        assert_eq!(qp.fake_quant(0.0), 0.0, "seed {seed}");
+        // in-range roundtrip bounded by scale/2 (+ asymmetric-zp slack)
+        for _ in 0..20 {
+            let x = rng.uniform_range(lo, hi);
+            let err = (qp.fake_quant(x) - x).abs();
+            assert!(err <= qp.scale * 1.01, "seed {seed}: x={x} err={err} scale={}", qp.scale);
+        }
+        // monotone: q(x) non-decreasing
+        let (a, b) = (rng.uniform_range(lo, hi), rng.uniform_range(lo, hi));
+        let (a, b) = if a <= b { (a, b) } else { (b, a) };
+        assert!(qp.quantize(a) <= qp.quantize(b), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_f16_roundtrip_monotone_and_bounded() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(4000 + seed);
+        let x = rng.uniform_range(-60000.0, 60000.0);
+        let r = f16_to_f32(f32_to_f16(x));
+        if x.abs() > 1e-3 {
+            assert!(((r - x) / x).abs() <= 1.0 / 1024.0, "seed {seed}: {x} -> {r}");
+        }
+        // monotonicity on a random pair
+        let y = rng.uniform_range(-60000.0, 60000.0);
+        let (a, b) = if x <= y { (x, y) } else { (y, x) };
+        assert!(
+            f16_to_f32(f32_to_f16(a)) <= f16_to_f32(f32_to_f16(b)),
+            "seed {seed}: monotonicity {a} {b}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batcher invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_preserves_fifo_and_loses_nothing() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(5000 + seed);
+        let variants = match rng.below(3) {
+            0 => vec![1, 4, 16],
+            1 => vec![1, 2, 8, 32],
+            _ => vec![1, 4, 16, 64],
+        };
+        let policy =
+            BatchPolicy { variants, max_wait_us: 1e9, exec_reserve_us: 0.0 };
+        let mut b = DynamicBatcher::new(policy);
+        let n = 1 + rng.below(200) as u64;
+        for id in 0..n {
+            b.push(InferRequest {
+                id,
+                dense: vec![],
+                indices: vec![],
+                arrival: std::time::Instant::now(),
+                deadline_ms: 1e9,
+            });
+        }
+        let mut seen = Vec::new();
+        while let Some(f) = b.form() {
+            assert!(f.variant >= f.requests.len(), "seed {seed}: variant too small");
+            assert!(
+                f.requests.len() <= f.variant,
+                "seed {seed}: overfull batch"
+            );
+            seen.extend(f.requests.iter().map(|r| r.id));
+        }
+        // every request exactly once, in order
+        assert_eq!(seen, (0..n).collect::<Vec<_>>(), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Roofline allocator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allocator_never_exceeds_capacity_any_policy() {
+    let zoo = representative_zoo();
+    for seed in 0..20u64 {
+        let mut rng = Pcg32::seeded(6000 + seed);
+        let cap_mb = rng.uniform_range(0.0, 200.0) as f64;
+        let bw = [1.0, 10.0][rng.below(2) as usize];
+        let dev = DeviceSpec::fig3(cap_mb, bw);
+        let e = &zoo[rng.below(zoo.len() as u32) as usize];
+        for policy in
+            [AllocPolicy::GreedyValue, AllocPolicy::WeightsFirst, AllocPolicy::ActivationsFirst]
+        {
+            let r = roofline_model_with_policy(&e.desc, &dev, policy);
+            let used: f64 = e
+                .desc
+                .layers
+                .iter()
+                .zip(&r.placements)
+                .map(|(l, p)| {
+                    let mut bytes = 0.0;
+                    if p.weights_onchip {
+                        bytes += l.weight_elems as f64 * dev.weight_bytes_per_elem;
+                    }
+                    if p.acts_onchip {
+                        bytes += (l.act_in_elems + l.act_out_elems) as f64
+                            * dev.act_bytes_per_elem;
+                    }
+                    bytes
+                })
+                .sum();
+            assert!(
+                used <= dev.onchip_capacity + 1.0,
+                "seed {seed} {policy:?}: used {used} > cap {}",
+                dev.onchip_capacity
+            );
+            assert!(r.achieved_ops <= dev.peak_ops * 1.0001, "seed {seed}: above peak");
+            assert!(r.total_time_s >= 0.0 && r.achieved_ops.is_finite());
+        }
+    }
+}
