@@ -32,7 +32,7 @@ fn main() -> Result<()> {
     let idx_meta = &model.meta.inputs[1];
     let mut dense = vec![0f32; dense_meta.elem_count()];
     rng.fill_normal(&mut dense, 0.0, 1.0);
-    let rows = manifest.models.get("recsys").get("rows_per_table").as_usize().unwrap();
+    let rows = manifest.model_config("recsys")?.get("rows_per_table").as_usize().unwrap();
     let idx: Vec<i32> =
         (0..idx_meta.elem_count()).map(|_| rng.zipf(rows as u32, 1.05) as i32).collect();
 

@@ -1,71 +1,84 @@
-//! E2E driver: the dis-aggregated inference tier serving the Fig-2
-//! recommendation model (a real ~2.9M-parameter model compiled from JAX
-//! through PJRT) under a synthetic production-like load, reporting
-//! latency and throughput. This is the experiment recorded in
-//! EXPERIMENTS.md §E2E.
+//! E2E driver: one dis-aggregated serving frontend running *mixed*
+//! model traffic — recommendation, CV and NMT requests (§2's three
+//! workload families) batched per model on a shared executor pool —
+//! under a synthetic production-like load, reporting per-model latency
+//! and throughput. This is the experiment recorded in EXPERIMENTS.md
+//! §E2E.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serving_tier
 //! ```
 
+use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
-use dcinfer::coordinator::{InferRequest, InferenceTier, TierConfig};
+use dcinfer::coordinator::{FrontendConfig, ModelService, ServingFrontend};
+use dcinfer::models::{CvService, NmtService, RecSysService};
+use dcinfer::runtime::Manifest;
 use dcinfer::util::rng::Pcg32;
 
 fn main() -> Result<()> {
     let requests: u64 = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(2000);
     let offered_qps: f64 = std::env::args().nth(2).and_then(|v| v.parse().ok()).unwrap_or(4000.0);
 
-    println!("starting inference tier (2 executors, recsys_fp32 b1/b4/b16/b64)...");
-    let tier = InferenceTier::start(TierConfig { executors: 2, ..Default::default() })?;
-    println!(
-        "model: dense_dim={} n_tables={} pool={} rows/table={}",
-        tier.dense_dim, tier.n_tables, tier.pool_size, tier.rows_per_table
-    );
+    // register every family whose artifacts are present
+    let manifest = Manifest::load(Path::new("artifacts"))?;
+    let mut services: Vec<Arc<dyn ModelService>> = Vec::new();
+    if !manifest.variants_for_prefix(RecSysService::PREFIX).is_empty() {
+        services.push(Arc::new(RecSysService::from_manifest(&manifest)?));
+    }
+    if !manifest.variants_for_prefix(NmtService::PREFIX).is_empty() {
+        services.push(Arc::new(NmtService::from_manifest(&manifest)?));
+    }
+    if !manifest.variants_for_prefix(CvService::PREFIX).is_empty() {
+        services.push(Arc::new(CvService::from_manifest(&manifest)?));
+    }
+
+    let frontend =
+        ServingFrontend::start(FrontendConfig { executors: 2, ..Default::default() }, services)?;
+    println!("serving frontend up (2 executors), models: {:?}", frontend.models());
+    let lanes: Vec<Arc<dyn ModelService>> =
+        frontend.models().iter().map(|m| frontend.service(m).unwrap().clone()).collect();
 
     // Load phases: a steady phase and a 4x burst phase, like a traffic
-    // spike — the dynamic batcher should absorb the burst by forming
-    // larger batches rather than blowing the deadline.
+    // spike — the per-model batchers should absorb the burst by forming
+    // larger batches rather than blowing the deadline. Traffic is
+    // interleaved across families so every lane sees the burst.
     let mut rng = Pcg32::seeded(7);
     let mut receivers = Vec::with_capacity(requests as usize);
     let t0 = Instant::now();
     for i in 0..requests {
         let burst = (i / (requests / 4).max(1)) % 2 == 1;
         let qps = if burst { offered_qps * 4.0 } else { offered_qps };
-        let mut dense = vec![0f32; tier.dense_dim];
-        rng.fill_normal(&mut dense, 0.0, 1.0);
-        let indices: Vec<i32> = (0..tier.n_tables * tier.pool_size)
-            .map(|_| rng.zipf(tier.rows_per_table as u32, 1.05) as i32)
-            .collect();
-        receivers.push(tier.submit(InferRequest {
-            id: i,
-            dense,
-            indices,
-            arrival: Instant::now(),
-            deadline_ms: 100.0,
-        })?);
+        let mut req = lanes[i as usize % lanes.len()].synth_request(i, &mut rng, 0.0);
+        req.arrival = Instant::now();
+        receivers.push(frontend.submit(req)?);
         std::thread::sleep(std::time::Duration::from_secs_f64(1.0 / qps));
     }
 
-    let mut probs_ok = 0u64;
+    let mut ok = 0u64;
     for rx in receivers {
-        let resp = rx.recv()?;
-        if resp.prob > 0.0 && resp.prob < 1.0 {
-            probs_ok += 1;
+        if rx.recv()?.is_ok() {
+            ok += 1;
         }
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    println!("\n=== E2E serving results ===");
-    let snap = tier.metrics.snapshot();
-    snap.print();
-    println!("end-to-end: {requests} requests in {wall:.2}s ({:.0} req/s)", requests as f64 / wall);
-    println!("sane predictions: {probs_ok}/{requests}");
-    assert_eq!(probs_ok, requests, "some predictions out of (0,1)");
-    assert!(snap.mean_batch > 1.5, "batching never engaged");
-    tier.shutdown();
+    println!("\n=== E2E mixed-model serving results ===");
+    let mut served_total = 0u64;
+    for (model, snap) in frontend.snapshot_all() {
+        println!("\n--- {model} ---");
+        snap.print();
+        served_total += snap.served;
+        assert!(snap.failed == 0, "{model}: {} failed requests", snap.failed);
+    }
+    println!("\nend-to-end: {requests} requests in {wall:.2}s ({:.0} req/s)", requests as f64 / wall);
+    println!("successful responses: {ok}/{requests}");
+    assert_eq!(ok, requests, "some requests failed");
+    assert_eq!(served_total, requests, "per-model served counts don't sum");
+    frontend.shutdown();
     println!("serving_tier OK");
     Ok(())
 }

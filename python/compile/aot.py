@@ -10,7 +10,8 @@ rejects; the text parser reassigns ids and round-trips cleanly.
 Artifacts (see DESIGN.md per-experiment index):
   recsys_fp32_b{1,4,16,64}   Fig-2 model, fp32 FC path, batch variants
   recsys_int8_b16            Fig-2 model, int8 Pallas FC path (§3.2)
-  gru_step_b{1,8}            seq2seq decode step (§2.1.3)
+  gru_step_b{1,8}            seq2seq decode step (§2.1.3, NmtService)
+  cv_tiny_b{1,8}             CNN classifier (§2.1.2, CvService)
   kernel_qgemm               bare i8-acc32 GEMM (runtime microbench)
   kernel_sls                 bare SparseLengthsSum (embedding bench)
 
@@ -211,6 +212,43 @@ def build_gru(out_dir, manifest, batches=(1, 8)):
             lambda x, h, ws=ws_jnp: step(*ws, x, h))
 
 
+def build_cv(out_dir, manifest, batches=(1, 8)):
+    """CNN classifier artifacts (§2.1.2) so the serving frontend's
+    CvService has a real model family: image [B, 1, H, W] -> logits."""
+    cfg = M.TinyCnnConfig()
+    params = M.init_tiny_cnn(cfg)
+    names = ["conv1", "b1", "conv2", "b2", "fc_w", "fc_b"]
+    weights = [(n, params[n]) for n in names]
+    wpath = os.path.join(out_dir, "cv.weights.bin")
+    write_weights(wpath, weights)
+    manifest["models"]["cv"] = {
+        "in_hw": cfg.in_hw, "channels": 1, "classes": cfg.classes,
+        "param_count": int(sum(a.size for _, a in weights)),
+        "weights": "cv.weights.bin",
+    }
+    n_w = len(weights)
+
+    def fwd(*args):
+        ws, x = args[:n_w], args[n_w]
+        return (M.tiny_cnn_forward(dict(zip(names, ws)), x),)
+
+    w_specs = [spec(a) for _, a in weights]
+    for b in batches:
+        x_s = spec((b, 1, cfg.in_hw, cfg.in_hw), np.float32)
+        hlo = lower_artifact(out_dir, f"cv_tiny_b{b}", fwd, w_specs + [x_s])
+        manifest["artifacts"][f"cv_tiny_b{b}"] = {
+            "hlo": hlo, "model": "cv", "weights": "cv.weights.bin",
+            "weight_params": [tensor_meta(n, a.shape, a.dtype) for n, a in weights],
+            "inputs": [tensor_meta("image", (b, 1, cfg.in_hw, cfg.in_hw),
+                                   np.float32)],
+            "outputs": [tensor_meta("logits", (b, cfg.classes), np.float32)],
+            "batch": b,
+        }
+        ws_jnp = [jnp.asarray(a) for _, a in weights]
+        manifest["artifacts"][f"cv_tiny_b{b}"]["_fn"] = (
+            lambda x, ws=ws_jnp: fwd(*ws, x))
+
+
 def build_kernel_artifacts(out_dir, manifest):
     # bare i8-acc32 GEMM: M=64, K=512, N=256 (a Fig-5 "tall-skinny" shape)
     Mm, K, N = 64, 512, 256
@@ -307,6 +345,7 @@ def main():
     else:
         build_recsys(out_dir, manifest)
         build_gru(out_dir, manifest)
+        build_cv(out_dir, manifest)
         build_kernel_artifacts(out_dir, manifest)
     build_goldens(out_dir, manifest)
 

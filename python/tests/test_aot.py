@@ -63,6 +63,18 @@ def test_recsys_weights_order_matches_manifest_contract():
     assert names[-2:] == ["top_w1", "top_b1"]
 
 
+def test_cv_weights_cover_tiny_cnn_params():
+    # build_cv serializes exactly the tiny-CNN parameter set, in a fixed
+    # order (the HLO parameter contract the Rust runtime uploads against)
+    cfg = M.TinyCnnConfig()
+    params = M.init_tiny_cnn(cfg)
+    names = ["conv1", "b1", "conv2", "b2", "fc_w", "fc_b"]
+    assert set(names) == set(params.keys())
+    logits = M.tiny_cnn_forward(params, np.zeros((2, 1, cfg.in_hw, cfg.in_hw),
+                                                 np.float32))
+    assert logits.shape == (2, cfg.classes)
+
+
 needs_artifacts = pytest.mark.skipif(
     not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
     reason="run `make artifacts` first")

@@ -2,17 +2,23 @@
 //! fixed single variant vs the adaptive multi-variant batcher, at the
 //! same offered load. Requires `make artifacts`.
 
+use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
-use dcinfer::coordinator::{InferRequest, InferenceTier, TierConfig};
+use dcinfer::coordinator::{FrontendConfig, ServingFrontend};
+use dcinfer::models::RecSysService;
+use dcinfer::runtime::Manifest;
 use dcinfer::util::bench::Table;
 use dcinfer::util::rng::Pcg32;
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
+    if !Path::new("artifacts/manifest.json").exists() {
         println!("skipping ablation_batching: run `make artifacts` first");
         return;
     }
+    let manifest = Manifest::load(Path::new("artifacts")).expect("manifest");
+    let service = RecSysService::from_manifest(&manifest).expect("recsys config");
     println!("== ablation: batching policy at 4000 offered qps ==\n");
     let mut table =
         Table::new(&["policy", "achieved qps", "mean batch", "p50 us", "p99 us"]);
@@ -20,17 +26,17 @@ fn main() {
     // policy is expressed through max_wait: 0us ~ no batching (flush
     // immediately), 2ms adaptive, 10ms aggressive batching
     for (name, wait_us) in [("no-batch (0us)", 1.0), ("adaptive (2ms)", 2_000.0), ("aggressive (10ms)", 10_000.0)] {
-        let tier = InferenceTier::start(TierConfig {
-            executors: 2,
-            max_wait_us: wait_us,
-            ..Default::default()
-        })
-        .expect("tier");
+        let frontend = ServingFrontend::start(
+            FrontendConfig { executors: 2, max_wait_us: wait_us, ..Default::default() },
+            vec![Arc::new(service.clone())],
+        )
+        .expect("frontend");
         // warm variants
         let mut rng = Pcg32::seeded(3);
         for burst in [1usize, 4, 16, 64] {
-            let rxs: Vec<_> =
-                (0..burst).map(|i| tier.submit(req(&tier, &mut rng, i as u64)).unwrap()).collect();
+            let rxs: Vec<_> = (0..burst)
+                .map(|i| frontend.submit(service.synth_request(i as u64, &mut rng, 100.0)).unwrap())
+                .collect();
             for rx in rxs {
                 let _ = rx.recv();
             }
@@ -40,7 +46,7 @@ fn main() {
         let t0 = Instant::now();
         let receivers: Vec<_> = (0..n)
             .map(|i| {
-                let rx = tier.submit(req(&tier, &mut rng, i)).unwrap();
+                let rx = frontend.submit(service.synth_request(i, &mut rng, 100.0)).unwrap();
                 std::thread::sleep(gap);
                 rx
             })
@@ -49,7 +55,7 @@ fn main() {
             let _ = rx.recv();
         }
         let wall = t0.elapsed().as_secs_f64();
-        let snap = tier.metrics.snapshot();
+        let snap = frontend.metrics(RecSysService::MODEL_ID).unwrap().snapshot();
         table.row(&[
             name.to_string(),
             format!("{:.0}", n as f64 / wall),
@@ -57,17 +63,8 @@ fn main() {
             format!("{:.0}", snap.total_p50_us),
             format!("{:.0}", snap.total_p99_us),
         ]);
-        tier.shutdown();
+        frontend.shutdown();
     }
     table.print();
     println!("\n(batching should raise throughput; aggressive waits trade p50 for batch size)");
-}
-
-fn req(tier: &InferenceTier, rng: &mut Pcg32, id: u64) -> InferRequest {
-    let mut dense = vec![0f32; tier.dense_dim];
-    rng.fill_normal(&mut dense, 0.0, 1.0);
-    let indices: Vec<i32> = (0..tier.n_tables * tier.pool_size)
-        .map(|_| rng.zipf(tier.rows_per_table as u32, 1.05) as i32)
-        .collect();
-    InferRequest { id, dense, indices, arrival: Instant::now(), deadline_ms: 100.0 }
 }

@@ -1,37 +1,47 @@
-//! End-to-end serving bench: the inference tier (dynamic batcher + PJRT
-//! executor pool) under increasing offered load — the latency/throughput
-//! table the E2E experiment records in EXPERIMENTS.md.
+//! End-to-end serving bench: the serving frontend (per-model dynamic
+//! batcher + PJRT executor pool) under increasing offered load — the
+//! latency/throughput table the E2E experiment records in
+//! EXPERIMENTS.md.
 //!
 //! Requires `make artifacts` (prints a skip message otherwise).
 
+use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
-use dcinfer::coordinator::{InferRequest, InferenceTier, TierConfig};
+use dcinfer::coordinator::{FrontendConfig, ServingFrontend};
+use dcinfer::models::RecSysService;
+use dcinfer::runtime::Manifest;
 use dcinfer::util::bench::Table;
 use dcinfer::util::rng::Pcg32;
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
+    if !Path::new("artifacts/manifest.json").exists() {
         println!("skipping e2e_serving: run `make artifacts` first");
         return;
     }
-    println!("== E2E serving: offered load sweep (recsys_fp32, 2 executors) ==\n");
+    let manifest = Manifest::load(Path::new("artifacts")).expect("manifest");
+    let service = RecSysService::from_manifest(&manifest).expect("recsys config");
+    println!("== E2E serving: offered load sweep ({}, 2 executors) ==\n", RecSysService::PREFIX);
     let mut table = Table::new(&[
         "offered qps", "achieved qps", "mean batch", "p50 us", "p99 us", "misses",
     ]);
     for &qps in &[500.0f64, 2000.0, 8000.0] {
-        let tier = InferenceTier::start(TierConfig { executors: 2, ..Default::default() })
-            .expect("tier start");
+        let frontend = ServingFrontend::start(
+            FrontendConfig { executors: 2, ..Default::default() },
+            vec![Arc::new(service.clone())],
+        )
+        .expect("frontend start");
         // warm every batch variant so p99 excludes first-call compilation
-        warmup(&tier);
+        warmup(&frontend, &service);
         let mut rng = Pcg32::seeded(17);
         let n = (qps * 0.75).max(200.0) as u64;
         let gap = std::time::Duration::from_secs_f64(1.0 / qps);
         let t0 = Instant::now();
         let receivers: Vec<_> = (0..n)
             .map(|i| {
-                let req = synth_request(&tier, &mut rng, i);
-                let rx = tier.submit(req).unwrap();
+                let req = service.synth_request(i, &mut rng, 100.0);
+                let rx = frontend.submit(req).unwrap();
                 std::thread::sleep(gap);
                 rx
             })
@@ -40,7 +50,7 @@ fn main() {
             let _ = rx.recv();
         }
         let wall = t0.elapsed().as_secs_f64();
-        let snap = tier.metrics.snapshot();
+        let snap = frontend.metrics(RecSysService::MODEL_ID).unwrap().snapshot();
         table.row(&[
             format!("{qps:.0}"),
             format!("{:.0}", n as f64 / wall),
@@ -49,27 +59,19 @@ fn main() {
             format!("{:.0}", snap.total_p99_us),
             snap.deadline_misses.to_string(),
         ]);
-        tier.shutdown();
+        frontend.shutdown();
     }
     table.print();
     println!("\n(batches grow with offered load — the §4 dis-aggregation efficiency story)");
 }
 
-fn synth_request(tier: &InferenceTier, rng: &mut Pcg32, id: u64) -> InferRequest {
-    let mut dense = vec![0f32; tier.dense_dim];
-    rng.fill_normal(&mut dense, 0.0, 1.0);
-    let indices: Vec<i32> = (0..tier.n_tables * tier.pool_size)
-        .map(|_| rng.zipf(tier.rows_per_table as u32, 1.05) as i32)
-        .collect();
-    InferRequest { id, dense, indices, arrival: Instant::now(), deadline_ms: 100.0 }
-}
-
-fn warmup(tier: &InferenceTier) {
+fn warmup(frontend: &ServingFrontend, service: &RecSysService) {
     let mut rng = Pcg32::seeded(1);
     // bursts sized to hit each variant
     for burst in [1usize, 4, 16, 64, 64] {
-        let rxs: Vec<_> =
-            (0..burst).map(|i| tier.submit(synth_request(tier, &mut rng, i as u64)).unwrap()).collect();
+        let rxs: Vec<_> = (0..burst)
+            .map(|i| frontend.submit(service.synth_request(i as u64, &mut rng, 100.0)).unwrap())
+            .collect();
         for rx in rxs {
             let _ = rx.recv();
         }

@@ -25,7 +25,8 @@ fn main() {
     let mut rng = Pcg32::seeded(23);
     let dense_meta = &fp32.meta.inputs[0];
     let idx_meta = &fp32.meta.inputs[1];
-    let rows = manifest.models.get("recsys").get("rows_per_table").as_usize().unwrap() as u32;
+    let rows =
+        manifest.model_config("recsys").unwrap().get("rows_per_table").as_usize().unwrap() as u32;
     let mut dense = vec![0f32; dense_meta.elem_count()];
     rng.fill_normal(&mut dense, 0.0, 1.0);
     let idx: Vec<i32> =

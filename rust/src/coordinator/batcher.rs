@@ -122,13 +122,7 @@ mod tests {
     use std::time::Duration;
 
     fn req(id: u64, deadline_ms: f64) -> InferRequest {
-        InferRequest {
-            id,
-            dense: vec![0.0; 4],
-            indices: vec![0; 8],
-            arrival: Instant::now(),
-            deadline_ms,
-        }
+        InferRequest::new("m", id, vec![], deadline_ms)
     }
 
     #[test]

@@ -1,0 +1,423 @@
+//! The serving frontend: a model-generic inference tier.
+//!
+//! One frontend serves many model families concurrently (§2's three
+//! workload classes on one dis-aggregated tier): each registered
+//! [`ModelService`] gets its own submission lane and deadline-aware
+//! [`DynamicBatcher`] thread, all lanes share one PJRT [`ExecutorPool`]
+//! and [`Router`]. Requests are dispatched by their `model` field;
+//! batch failures are delivered to every submitter as an error
+//! response; shutdown drains queues and waits for in-flight batches
+//! before tearing down the pool.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{ExecutorPool, Manifest};
+
+use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::metrics::{MetricsSnapshot, ServeMetrics};
+use super::request::{InferError, InferRequest, InferResponse};
+use super::router::{RoutePolicy, Router};
+use super::service::ModelService;
+
+/// Frontend configuration (model-agnostic knobs only — everything
+/// model-specific lives in the registered services).
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    pub artifacts_dir: PathBuf,
+    pub executors: usize,
+    /// flush a lane when its oldest request has waited this long (us)
+    pub max_wait_us: f64,
+    pub route: RoutePolicy,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            executors: 2,
+            max_wait_us: 2_000.0,
+            route: RoutePolicy::LeastLoaded,
+        }
+    }
+}
+
+impl FrontendConfig {
+    /// Reject configurations the frontend cannot run with.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.executors > 0, "executors must be >= 1");
+        anyhow::ensure!(self.max_wait_us >= 0.0, "max_wait_us must be non-negative");
+        Ok(())
+    }
+}
+
+struct Submission {
+    req: InferRequest,
+    resp: Sender<InferResponse>,
+}
+
+/// Counts batches handed to completion threads, so shutdown can wait
+/// for them instead of racing the executor-pool teardown.
+#[derive(Default)]
+struct InFlight {
+    count: Mutex<usize>,
+    idle: Condvar,
+}
+
+impl InFlight {
+    fn begin(&self) {
+        *self.count.lock().unwrap() += 1;
+    }
+
+    fn end(&self) {
+        let mut g = self.count.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.idle.notify_all();
+        }
+    }
+
+    /// Wait until no batches are in flight (or the timeout expires).
+    fn wait_idle(&self, timeout: Duration) -> bool {
+        let g = self.count.lock().unwrap();
+        let (g, res) = self.idle.wait_timeout_while(g, timeout, |n| *n > 0).unwrap();
+        drop(g);
+        !res.timed_out()
+    }
+}
+
+/// One registered model: its submission channel, batcher thread and
+/// per-model metrics. Dropping `tx` is the shutdown signal: the lane
+/// thread drains its queue and exits once the channel disconnects.
+struct Lane {
+    tx: Sender<Submission>,
+    metrics: Arc<ServeMetrics>,
+    service: Arc<dyn ModelService>,
+    handle: JoinHandle<()>,
+}
+
+/// A running multi-model serving frontend.
+pub struct ServingFrontend {
+    lanes: BTreeMap<String, Lane>,
+    inflight: Arc<InFlight>,
+    executor_pool: Option<Arc<ExecutorPool>>,
+}
+
+impl ServingFrontend {
+    /// Load every service's artifact family, spawn the shared executor
+    /// pool and one batcher lane per model.
+    pub fn start(
+        cfg: FrontendConfig,
+        services: Vec<Arc<dyn ModelService>>,
+    ) -> Result<ServingFrontend> {
+        cfg.validate()?;
+        anyhow::ensure!(!services.is_empty(), "no model services registered");
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+
+        // per-service batch variants, discovered by artifact prefix
+        let mut lane_variants: Vec<(Arc<dyn ModelService>, Vec<(usize, String)>)> = Vec::new();
+        let mut artifact_names: Vec<String> = Vec::new();
+        for svc in services {
+            let variants = manifest.variants_for_prefix(svc.artifact_prefix());
+            anyhow::ensure!(
+                !variants.is_empty(),
+                "no artifacts match prefix {} (model {})",
+                svc.artifact_prefix(),
+                svc.model_id()
+            );
+            anyhow::ensure!(
+                !lane_variants.iter().any(|(s, _)| s.model_id() == svc.model_id()),
+                "duplicate service for model {}",
+                svc.model_id()
+            );
+            artifact_names.extend(variants.iter().map(|(_, n)| n.clone()));
+            lane_variants.push((svc, variants));
+        }
+        artifact_names.sort();
+        artifact_names.dedup();
+
+        // every executor loads the union of all families, so any lane
+        // can dispatch to any device (the pooling half of §4)
+        let pool =
+            Arc::new(ExecutorPool::new(cfg.executors, cfg.artifacts_dir.clone(), artifact_names)?);
+        let router = Arc::new(Router::new(cfg.executors, cfg.route)?);
+        let inflight = Arc::new(InFlight::default());
+
+        let mut lanes = BTreeMap::new();
+        for (svc, variants) in lane_variants {
+            let metrics = Arc::new(ServeMetrics::new());
+            let (tx, rx) = channel::<Submission>();
+            let policy = BatchPolicy {
+                variants: variants.iter().map(|(b, _)| *b).collect(),
+                max_wait_us: cfg.max_wait_us,
+                exec_reserve_us: 10_000.0,
+            };
+            let handle = {
+                let lane = LaneWorker {
+                    service: svc.clone(),
+                    variants,
+                    pool: pool.clone(),
+                    router: router.clone(),
+                    metrics: metrics.clone(),
+                    inflight: inflight.clone(),
+                };
+                std::thread::Builder::new()
+                    .name(format!("lane-{}", svc.model_id()))
+                    .spawn(move || lane.run(rx, policy))
+                    .context("spawning lane batcher")?
+            };
+            lanes
+                .insert(svc.model_id().to_string(), Lane { tx, metrics, service: svc, handle });
+        }
+
+        Ok(ServingFrontend { lanes, inflight, executor_pool: Some(pool) })
+    }
+
+    /// Registered model ids, in routing-table order.
+    pub fn models(&self) -> Vec<String> {
+        self.lanes.keys().cloned().collect()
+    }
+
+    /// The service registered for `model`.
+    pub fn service(&self, model: &str) -> Option<&Arc<dyn ModelService>> {
+        self.lanes.get(model).map(|l| &l.service)
+    }
+
+    /// Per-model metrics sink.
+    pub fn metrics(&self, model: &str) -> Option<Arc<ServeMetrics>> {
+        self.lanes.get(model).map(|l| l.metrics.clone())
+    }
+
+    /// Snapshot every lane's metrics.
+    pub fn snapshot_all(&self) -> Vec<(String, MetricsSnapshot)> {
+        self.lanes.iter().map(|(m, l)| (m.clone(), l.metrics.snapshot())).collect()
+    }
+
+    /// Route a request to its model's lane; returns the response
+    /// channel. Unknown models and malformed inputs fail synchronously.
+    pub fn submit(&self, mut req: InferRequest) -> Result<Receiver<InferResponse>> {
+        let lane = self
+            .lanes
+            .get(&req.model)
+            .ok_or_else(|| anyhow::anyhow!(InferError::UnknownModel(req.model.clone())))?;
+        lane.service.validate(&req)?;
+        if req.deadline_ms <= 0.0 {
+            req.deadline_ms = lane.service.deadline_class().default_deadline_ms();
+        }
+        let (resp_tx, resp_rx) = channel();
+        lane.tx
+            .send(Submission { req, resp: resp_tx })
+            .map_err(|_| anyhow::anyhow!(InferError::Shutdown))?;
+        Ok(resp_rx)
+    }
+
+    /// Stop every lane (draining queued requests), wait for in-flight
+    /// batches, then tear down the executor pool.
+    pub fn shutdown(mut self) {
+        // disconnect every lane first (drop tx), then join: lanes drain
+        // their queues concurrently instead of one after another
+        let mut handles = Vec::new();
+        for (_, lane) in std::mem::take(&mut self.lanes) {
+            let Lane { tx, handle, .. } = lane;
+            drop(tx);
+            handles.push(handle);
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        // completion threads still hold executor handles; wait for them
+        // so pool.shutdown() doesn't yank devices under running batches
+        if !self.inflight.wait_idle(Duration::from_secs(30)) {
+            eprintln!("frontend shutdown: in-flight batches did not drain in 30s");
+        }
+        if let Some(pool) = self.executor_pool.take() {
+            match Arc::try_unwrap(pool) {
+                Ok(pool) => pool.shutdown(),
+                Err(_) => eprintln!("frontend shutdown: executor pool still referenced, leaking"),
+            }
+        }
+    }
+}
+
+/// Everything one lane's batcher thread needs.
+struct LaneWorker {
+    service: Arc<dyn ModelService>,
+    variants: Vec<(usize, String)>,
+    pool: Arc<ExecutorPool>,
+    router: Arc<Router>,
+    metrics: Arc<ServeMetrics>,
+    inflight: Arc<InFlight>,
+}
+
+impl LaneWorker {
+    fn run(&self, rx: Receiver<Submission>, policy: BatchPolicy) {
+        let mut batcher = DynamicBatcher::new(policy);
+        let mut pending: Vec<Sender<InferResponse>> = Vec::new();
+        let mut disconnected = false;
+        loop {
+            // pull submissions for up to 200us
+            match rx.recv_timeout(Duration::from_micros(200)) {
+                Ok(sub) => {
+                    batcher.push(sub.req);
+                    pending.push(sub.resp);
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    if batcher.is_empty() {
+                        break;
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            }
+            // a disconnected channel (frontend dropped its Sender) is
+            // the shutdown signal: flush everything that's queued
+            while batcher.should_flush(Instant::now()) || (disconnected && !batcher.is_empty()) {
+                let Some(batch) = batcher.form() else { break };
+                let responders: Vec<Sender<InferResponse>> =
+                    pending.drain(..batch.requests.len()).collect();
+                self.dispatch(batch.requests, batch.variant, responders);
+            }
+        }
+    }
+
+    /// Assemble, route and execute one formed batch; completion runs
+    /// off the batcher thread so batching keeps flowing.
+    fn dispatch(
+        &self,
+        requests: Vec<InferRequest>,
+        variant: usize,
+        responders: Vec<Sender<InferResponse>>,
+    ) {
+        let name = self
+            .variants
+            .iter()
+            .find(|(b, _)| *b == variant)
+            .map(|(_, n)| n.clone())
+            .expect("variant has an artifact");
+        let n = requests.len();
+        self.metrics.record_batch(n, variant);
+
+        let inputs = match self.service.assemble(&requests, variant) {
+            Ok(inputs) => inputs,
+            Err(e) => {
+                let err = InferError::BadRequest(format!("{e:#}"));
+                self.fail_batch(&requests, responders, &name, err);
+                return;
+            }
+        };
+
+        let exec_id = self.router.dispatch(variant);
+        let executor = self.pool.executors()[exec_id].clone();
+        let service = self.service.clone();
+        let router = self.router.clone();
+        let metrics = self.metrics.clone();
+        let inflight = self.inflight.clone();
+        inflight.begin();
+        let formed_at = Instant::now();
+        std::thread::spawn(move || {
+            let result = executor.run(&name, inputs);
+            router.complete(exec_id, variant);
+            let outcome = result.and_then(|resp| {
+                service.scatter(&resp.outputs, n).map(|rows| (rows, resp.exec_us))
+            });
+            match outcome {
+                Ok((rows, exec_us)) => {
+                    for ((req, row), tx) in
+                        requests.iter().zip(rows.into_iter()).zip(responders.into_iter())
+                    {
+                        let queue_us = formed_at.duration_since(req.arrival).as_secs_f64() * 1e6;
+                        metrics.record_request(queue_us, exec_us, req.deadline_ms);
+                        let _ = tx.send(InferResponse {
+                            id: req.id,
+                            model: req.model.clone(),
+                            outcome: Ok(row),
+                            queue_us,
+                            exec_us,
+                            batch_size: n,
+                            variant: name.clone(),
+                        });
+                    }
+                }
+                Err(e) => {
+                    let err = InferError::ExecFailed(format!("{e:#}"));
+                    metrics.record_failures(n);
+                    for (req, tx) in requests.iter().zip(responders.into_iter()) {
+                        let queue_us = formed_at.duration_since(req.arrival).as_secs_f64() * 1e6;
+                        let _ = tx.send(InferResponse {
+                            id: req.id,
+                            model: req.model.clone(),
+                            outcome: Err(err.clone()),
+                            queue_us,
+                            exec_us: 0.0,
+                            batch_size: n,
+                            variant: name.clone(),
+                        });
+                    }
+                }
+            }
+            inflight.end();
+        });
+    }
+
+    /// Deliver the same error to every submitter in a batch that never
+    /// reached a device.
+    fn fail_batch(
+        &self,
+        requests: &[InferRequest],
+        responders: Vec<Sender<InferResponse>>,
+        variant_name: &str,
+        err: InferError,
+    ) {
+        self.metrics.record_failures(requests.len());
+        for (req, tx) in requests.iter().zip(responders.into_iter()) {
+            let _ = tx.send(InferResponse {
+                id: req.id,
+                model: req.model.clone(),
+                outcome: Err(err.clone()),
+                queue_us: 0.0,
+                exec_us: 0.0,
+                batch_size: requests.len(),
+                variant: variant_name.to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_rejects_zero_executors() {
+        let cfg = FrontendConfig { executors: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        assert!(FrontendConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn config_validation_rejects_negative_wait() {
+        let cfg = FrontendConfig { max_wait_us: -1.0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn inflight_waits_for_zero() {
+        let f = Arc::new(InFlight::default());
+        assert!(f.wait_idle(Duration::from_millis(1)), "idle counter starts at 0");
+        f.begin();
+        assert!(!f.wait_idle(Duration::from_millis(5)), "one batch in flight");
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            f2.end();
+        });
+        assert!(f.wait_idle(Duration::from_secs(5)));
+        h.join().unwrap();
+    }
+}

@@ -1,14 +1,16 @@
-//! Tier-level serving metrics: latency percentiles, throughput, batch
-//! fill — the numbers the E2E serving experiment reports.
+//! Per-model serving metrics: latency percentiles, throughput, batch
+//! fill and failures — the numbers the E2E serving experiment reports.
+//! The [`crate::coordinator::ServingFrontend`] keeps one sink per
+//! registered model, so heterogeneous families are tracked separately.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::stats::Samples;
 
-/// Shared metrics sink (one per tier).
+/// Shared metrics sink (one per model lane).
 #[derive(Debug)]
-pub struct TierMetrics {
+pub struct ServeMetrics {
     inner: Mutex<Inner>,
     started: Instant,
 }
@@ -21,6 +23,7 @@ struct Inner {
     batch_sizes: Samples,
     fill: Samples,
     served: u64,
+    failed: u64,
     deadline_misses: u64,
     batches: u64,
 }
@@ -29,6 +32,7 @@ struct Inner {
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub served: u64,
+    pub failed: u64,
     pub batches: u64,
     pub deadline_misses: u64,
     pub qps: f64,
@@ -42,15 +46,15 @@ pub struct MetricsSnapshot {
     pub mean_fill: f64,
 }
 
-impl Default for TierMetrics {
+impl Default for ServeMetrics {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl TierMetrics {
-    pub fn new() -> TierMetrics {
-        TierMetrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
     }
 
     /// Record one served request.
@@ -63,6 +67,11 @@ impl TierMetrics {
         if queue_us + exec_us > deadline_ms * 1e3 {
             g.deadline_misses += 1;
         }
+    }
+
+    /// Record `n` requests that received an error response.
+    pub fn record_failures(&self, n: usize) {
+        self.inner.lock().unwrap().failed += n as u64;
     }
 
     /// Record one executed batch.
@@ -78,6 +87,7 @@ impl TierMetrics {
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
         MetricsSnapshot {
             served: g.served,
+            failed: g.failed,
             batches: g.batches,
             deadline_misses: g.deadline_misses,
             qps: g.served as f64 / elapsed,
@@ -96,12 +106,13 @@ impl TierMetrics {
 impl MetricsSnapshot {
     pub fn print(&self) {
         println!(
-            "served {} requests in {} batches (mean batch {:.1}, fill {:.0}%), {} deadline misses",
+            "served {} requests in {} batches (mean batch {:.1}, fill {:.0}%), {} deadline misses, {} failed",
             self.served,
             self.batches,
             self.mean_batch,
             self.mean_fill * 100.0,
-            self.deadline_misses
+            self.deadline_misses,
+            self.failed
         );
         println!(
             "latency us: queue p50/p99 {:.0}/{:.0}  exec p50/p99 {:.0}/{:.0}  total p50/p99 {:.0}/{:.0}",
@@ -122,7 +133,7 @@ mod tests {
 
     #[test]
     fn records_and_snapshots() {
-        let m = TierMetrics::new();
+        let m = ServeMetrics::new();
         m.record_request(100.0, 500.0, 50.0);
         m.record_request(200.0, 500.0, 0.0001); // deadline miss
         m.record_batch(2, 4);
@@ -130,7 +141,19 @@ mod tests {
         assert_eq!(s.served, 2);
         assert_eq!(s.batches, 1);
         assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.failed, 0);
         assert!((s.mean_fill - 0.5).abs() < 1e-12);
         assert!(s.total_p99_us >= s.total_p50_us);
+    }
+
+    #[test]
+    fn failures_counted_separately_from_served() {
+        let m = ServeMetrics::new();
+        m.record_batch(3, 4);
+        m.record_failures(3);
+        let s = m.snapshot();
+        assert_eq!(s.served, 0);
+        assert_eq!(s.failed, 3);
+        assert_eq!(s.batches, 1);
     }
 }

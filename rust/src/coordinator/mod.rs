@@ -1,27 +1,39 @@
-//! L3 coordinator: the serving tier (§3, §4).
+//! L3 coordinator: the model-generic serving frontend (§3, §4).
 //!
 //! The paper's serving story — dis-aggregated inference tiers pooling
 //! requests from many front-end servers to raise batch sizes and
 //! compute efficiency (§4 "Service Dis-aggregation") under 10s-of-ms
-//! latency constraints (Table 1) — implemented as:
+//! latency constraints (Table 1) — serving *heterogeneous* model
+//! families (recommendation, CV, NMT — §2) from one shared tier:
 //!
-//! - [`router`]: front-end request routing to model queues.
+//! - [`service`]: the [`ModelService`] contract. A model family teaches
+//!   the tier how to serve it: artifact prefix, deadline class, and how
+//!   to assemble/scatter padded batch tensors. The tier never learns a
+//!   tensor layout; implementations live in [`crate::models::serving`].
+//! - [`frontend`]: the [`ServingFrontend`]: one submission lane +
+//!   deadline-aware batcher per registered model, a shared PJRT
+//!   executor pool, per-model metrics, and error responses on failure.
+//! - [`router`]: executor selection (round-robin / least-loaded).
 //! - [`batcher`]: deadline-aware dynamic batching that picks the AOT
 //!   batch variant (b1/b4/b16/b64) for each formed batch.
-//! - [`tier`]: the inference tier: batcher threads + the PJRT executor
-//!   pool, with end-to-end latency metrics.
 //! - [`disagg`]: the §4 bandwidth model for the tier boundary.
+//!
+//! Requests carry a `model` routing key and per-request input tensors;
+//! responses carry per-request output slices or an [`InferError`], so
+//! submitters observe batch failures instead of a closed channel.
 
 pub mod batcher;
 pub mod disagg;
+pub mod frontend;
 pub mod metrics;
 pub mod request;
 pub mod router;
-pub mod tier;
+pub mod service;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, FormedBatch};
 pub use disagg::{disagg_bandwidth, DisaggReport};
-pub use metrics::TierMetrics;
-pub use request::{InferRequest, InferResponse};
-pub use router::Router;
-pub use tier::{InferenceTier, TierConfig};
+pub use frontend::{FrontendConfig, ServingFrontend};
+pub use metrics::{MetricsSnapshot, ServeMetrics};
+pub use request::{InferError, InferRequest, InferResponse};
+pub use router::{RoutePolicy, Router};
+pub use service::{scatter_rows, stack_rows, DeadlineClass, ModelService};

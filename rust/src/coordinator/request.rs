@@ -1,35 +1,77 @@
-//! Request/response types crossing the tier boundary.
+//! Request/response types crossing the serving-frontend boundary.
+//!
+//! Requests are model-generic: a routing key plus per-request input
+//! tensors (no batch dimension — the owning [`super::service::ModelService`]
+//! stacks them into padded batch tensors). Responses carry either the
+//! request's slice of the batch outputs or an [`InferError`], so a failed
+//! batch is reported to every submitter instead of silently dropping the
+//! response channel.
 
 use std::time::Instant;
 
-/// One recommendation inference request (a single user/candidate row of
-/// the Fig-2 model): dense features + per-table pooled sparse ids.
+use crate::runtime::HostTensor;
+
+/// One inference request: a model routing key plus that model's
+/// per-request input tensors (leading batch dimension omitted).
 #[derive(Debug, Clone)]
 pub struct InferRequest {
     pub id: u64,
-    /// dense features, length = dense_dim
-    pub dense: Vec<f32>,
-    /// sparse ids, length = n_tables * pool (row-major [table][pool])
-    pub indices: Vec<i32>,
+    /// routing key, matches a registered service's `model_id()`
+    pub model: String,
+    /// per-request inputs in the model's manifest order
+    pub inputs: Vec<HostTensor>,
     pub arrival: Instant,
-    /// latency budget (Table 1: 10s of ms)
+    /// latency budget (Table 1: 10s of ms for interactive models)
     pub deadline_ms: f64,
 }
 
 impl InferRequest {
+    pub fn new(model: &str, id: u64, inputs: Vec<HostTensor>, deadline_ms: f64) -> InferRequest {
+        InferRequest { id, model: model.to_string(), inputs, arrival: Instant::now(), deadline_ms }
+    }
+
     /// Serialized size crossing the network to a dis-aggregated tier
-    /// (§4): dense f32s + sparse i32 ids + a small header.
+    /// (§4): raw tensor payloads + a small header.
     pub fn wire_bytes(&self) -> usize {
-        self.dense.len() * 4 + self.indices.len() * 4 + 16
+        self.inputs.iter().map(|t| t.byte_len()).sum::<usize>() + self.model.len() + 16
     }
 }
 
-/// The tier's answer.
+/// Why a request failed (delivered through [`InferResponse::outcome`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InferError {
+    /// No registered service matches the request's `model` field.
+    UnknownModel(String),
+    /// The request's inputs don't match the model's contract.
+    BadRequest(String),
+    /// The carrying batch failed on the device.
+    ExecFailed(String),
+    /// The frontend shut down before the request executed.
+    Shutdown,
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::UnknownModel(m) => write!(f, "no service registered for model {m:?}"),
+            InferError::BadRequest(e) => write!(f, "bad request: {e}"),
+            InferError::ExecFailed(e) => write!(f, "batch execution failed: {e}"),
+            InferError::Shutdown => write!(f, "frontend shut down before execution"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+/// The frontend's answer.
 #[derive(Debug, Clone)]
 pub struct InferResponse {
     pub id: u64,
-    /// predicted event probability
-    pub prob: f32,
+    /// which model served (or rejected) the request
+    pub model: String,
+    /// this request's slice of the batch outputs (no batch dimension),
+    /// or the failure every submitter in the batch observed
+    pub outcome: Result<Vec<HostTensor>, InferError>,
     /// time spent queued before batch formation (us)
     pub queue_us: f64,
     /// device execution time of the carrying batch (us)
@@ -44,6 +86,16 @@ impl InferResponse {
     pub fn total_us(&self) -> f64 {
         self.queue_us + self.exec_us
     }
+
+    pub fn is_ok(&self) -> bool {
+        self.outcome.is_ok()
+    }
+
+    /// First element of the first output as f32 — the single-scalar
+    /// convenience for heads like the recommendation event probability.
+    pub fn scalar_f32(&self) -> Option<f32> {
+        self.outcome.as_ref().ok()?.first()?.as_f32().ok()?.first().copied()
+    }
 }
 
 #[cfg(test)]
@@ -52,13 +104,46 @@ mod tests {
 
     #[test]
     fn wire_bytes_counts_payload() {
-        let r = InferRequest {
-            id: 1,
-            dense: vec![0.0; 32],
-            indices: vec![0; 8 * 32],
-            arrival: Instant::now(),
-            deadline_ms: 50.0,
+        let r = InferRequest::new(
+            "m",
+            1,
+            vec![
+                HostTensor::from_f32(&[32], &[0.0; 32]),
+                HostTensor::from_i32(&[8, 32], &[0; 256]),
+            ],
+            50.0,
+        );
+        assert_eq!(r.wire_bytes(), 32 * 4 + 256 * 4 + 1 + 16);
+    }
+
+    #[test]
+    fn scalar_f32_reads_first_output() {
+        let resp = InferResponse {
+            id: 7,
+            model: "m".into(),
+            outcome: Ok(vec![HostTensor::from_f32(&[1], &[0.25])]),
+            queue_us: 10.0,
+            exec_us: 90.0,
+            batch_size: 4,
+            variant: "m_b4".into(),
         };
-        assert_eq!(r.wire_bytes(), 32 * 4 + 256 * 4 + 16);
+        assert_eq!(resp.scalar_f32(), Some(0.25));
+        assert!((resp.total_us() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_outcome_has_no_scalar() {
+        let resp = InferResponse {
+            id: 7,
+            model: "m".into(),
+            outcome: Err(InferError::ExecFailed("device gone".into())),
+            queue_us: 0.0,
+            exec_us: 0.0,
+            batch_size: 0,
+            variant: String::new(),
+        };
+        assert!(!resp.is_ok());
+        assert_eq!(resp.scalar_f32(), None);
+        assert!(resp.outcome.unwrap_err().to_string().contains("device gone"));
     }
 }

@@ -20,12 +20,16 @@ pub struct Router {
 }
 
 impl Router {
-    pub fn new(n_executors: usize, policy: RoutePolicy) -> Router {
-        Router {
+    /// Build a router over `n_executors` targets. Zero executors is a
+    /// configuration error (dispatch would have nowhere to route and
+    /// `% 0` would panic), so it is rejected here instead.
+    pub fn new(n_executors: usize, policy: RoutePolicy) -> anyhow::Result<Router> {
+        anyhow::ensure!(n_executors > 0, "router needs at least one executor");
+        Ok(Router {
             policy,
             next: AtomicUsize::new(0),
             outstanding: (0..n_executors).map(|_| AtomicUsize::new(0)).collect(),
-        }
+        })
     }
 
     pub fn n(&self) -> usize {
@@ -34,6 +38,7 @@ impl Router {
 
     /// Pick an executor for a batch and mark the work outstanding.
     pub fn dispatch(&self, work_units: usize) -> usize {
+        debug_assert!(!self.outstanding.is_empty(), "Router::new rejects zero executors");
         let id = match self.policy {
             RoutePolicy::RoundRobin => self.next.fetch_add(1, Ordering::Relaxed) % self.n(),
             RoutePolicy::LeastLoaded => {
@@ -69,14 +74,20 @@ mod tests {
 
     #[test]
     fn round_robin_cycles() {
-        let r = Router::new(3, RoutePolicy::RoundRobin);
+        let r = Router::new(3, RoutePolicy::RoundRobin).unwrap();
         let picks: Vec<usize> = (0..6).map(|_| r.dispatch(1)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
     #[test]
+    fn zero_executors_rejected() {
+        assert!(Router::new(0, RoutePolicy::RoundRobin).is_err());
+        assert!(Router::new(0, RoutePolicy::LeastLoaded).is_err());
+    }
+
+    #[test]
     fn least_loaded_balances() {
-        let r = Router::new(2, RoutePolicy::LeastLoaded);
+        let r = Router::new(2, RoutePolicy::LeastLoaded).unwrap();
         let a = r.dispatch(10); // exec a now loaded 10
         let b = r.dispatch(1); // must go to the other
         assert_ne!(a, b);
@@ -88,7 +99,7 @@ mod tests {
 
     #[test]
     fn load_accounting() {
-        let r = Router::new(1, RoutePolicy::RoundRobin);
+        let r = Router::new(1, RoutePolicy::RoundRobin).unwrap();
         r.dispatch(5);
         assert_eq!(r.load(0), 5);
         r.complete(0, 5);

@@ -1,0 +1,214 @@
+//! The model-service contract: how a model family teaches the serving
+//! frontend to batch it.
+//!
+//! The frontend owns queues, batching, routing and metrics — everything
+//! model-agnostic. A [`ModelService`] supplies the model-specific half:
+//! which AOT artifact family to load, how to assemble per-request input
+//! tensors into one padded batch, and how to scatter batch outputs back
+//! into per-request slices. The dependency points from model to tier:
+//! new workloads plug in by implementing this trait, the frontend never
+//! learns a tensor layout.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::runtime::HostTensor;
+use crate::util::rng::Pcg32;
+
+use super::request::InferRequest;
+
+/// Latency constraint class (Table 1 last column), used to pick a
+/// default deadline for requests that don't carry one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlineClass {
+    /// "10s of ms" — ranking/recommendation and interactive NMT.
+    Interactive,
+    /// No strict constraint (offline CV understanding).
+    Relaxed,
+}
+
+impl DeadlineClass {
+    pub fn default_deadline_ms(self) -> f64 {
+        match self {
+            DeadlineClass::Interactive => 100.0,
+            DeadlineClass::Relaxed => 10_000.0,
+        }
+    }
+}
+
+/// What a model family must teach the frontend to be servable.
+///
+/// Implementations hold whatever per-model config they need (pulled
+/// from the manifest's `models` section at construction time) and are
+/// shared across the frontend's threads, so they must be `Send + Sync`.
+pub trait ModelService: Send + Sync {
+    /// Routing key: requests with `req.model == model_id()` land here.
+    fn model_id(&self) -> &str;
+
+    /// AOT artifact family, e.g. batch variants named `<prefix>_b<N>`.
+    fn artifact_prefix(&self) -> &str;
+
+    /// Latency constraint class of this family.
+    fn deadline_class(&self) -> DeadlineClass;
+
+    /// Cheap input check run at submit time, so callers get shape
+    /// errors synchronously instead of inside a formed batch.
+    fn validate(&self, req: &InferRequest) -> Result<()>;
+
+    /// Synthesize one production-like request (drivers, benches and
+    /// load tests share this instead of each re-deriving the family's
+    /// wire format). `deadline_ms <= 0` means "use the class default".
+    fn synth_request(&self, id: u64, rng: &mut Pcg32, deadline_ms: f64) -> InferRequest;
+
+    /// Stack per-request inputs into padded `[variant, ...]` batch
+    /// tensors in the artifact's parameter order.
+    ///
+    /// The default row-stacks every input position with zero padding,
+    /// which is correct for all current families; override for models
+    /// with non-row layouts (e.g. ragged sequence batching).
+    fn assemble(&self, requests: &[InferRequest], variant: usize) -> Result<Vec<HostTensor>> {
+        stack_rows(requests, variant)
+    }
+
+    /// Split `[variant, ...]` batch outputs into per-request slices
+    /// (batch dimension dropped), one `Vec<HostTensor>` per request.
+    fn scatter(&self, outputs: &[HostTensor], n_requests: usize) -> Result<Vec<Vec<HostTensor>>> {
+        scatter_rows(outputs, n_requests)
+    }
+}
+
+/// Row-stack per-request tensors into `[variant, ...]` batch tensors,
+/// zero-padding the tail rows (padded rows are computed and discarded —
+/// still far cheaper than running singles, the paper's batching
+/// argument).
+pub fn stack_rows(requests: &[InferRequest], variant: usize) -> Result<Vec<HostTensor>> {
+    ensure!(!requests.is_empty(), "empty batch");
+    ensure!(requests.len() <= variant, "batch {} overflows variant {}", requests.len(), variant);
+    let first = &requests[0];
+    let mut out = Vec::with_capacity(first.inputs.len());
+    for j in 0..first.inputs.len() {
+        let proto = &first.inputs[j];
+        let row_bytes = proto.byte_len();
+        let mut shape = Vec::with_capacity(proto.shape.len() + 1);
+        shape.push(variant);
+        shape.extend_from_slice(&proto.shape);
+        let mut data = vec![0u8; variant * row_bytes];
+        for (i, req) in requests.iter().enumerate() {
+            let Some(t) = req.inputs.get(j) else {
+                bail!("request {} has {} inputs, expected {}", req.id, req.inputs.len(), first.inputs.len());
+            };
+            if t.dtype != proto.dtype || t.shape != proto.shape {
+                bail!(
+                    "request {} input {j}: {:?}{:?} != batch {:?}{:?}",
+                    req.id,
+                    t.dtype,
+                    t.shape,
+                    proto.dtype,
+                    proto.shape
+                );
+            }
+            data[i * row_bytes..(i + 1) * row_bytes].copy_from_slice(&t.data);
+        }
+        out.push(HostTensor { dtype: proto.dtype, shape, data });
+    }
+    Ok(out)
+}
+
+/// Slice `[variant, ...]` batch outputs into the first `n_requests`
+/// per-request rows, dropping the batch dimension.
+pub fn scatter_rows(outputs: &[HostTensor], n_requests: usize) -> Result<Vec<Vec<HostTensor>>> {
+    let mut per_req: Vec<Vec<HostTensor>> = (0..n_requests).map(|_| Vec::new()).collect();
+    for t in outputs {
+        ensure!(!t.shape.is_empty(), "batch output is a scalar, cannot scatter");
+        let rows = t.shape[0];
+        ensure!(
+            rows >= n_requests,
+            "batch output has {rows} rows, need {n_requests}"
+        );
+        let row_shape: Vec<usize> = t.shape[1..].to_vec();
+        let row_bytes = row_shape.iter().product::<usize>() * t.dtype.size();
+        for (i, slot) in per_req.iter_mut().enumerate() {
+            slot.push(HostTensor {
+                dtype: t.dtype,
+                shape: row_shape.clone(),
+                data: t.data[i * row_bytes..(i + 1) * row_bytes].to_vec(),
+            });
+        }
+    }
+    Ok(per_req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::DType;
+
+    fn req(id: u64, dense: &[f32], idx: &[i32]) -> InferRequest {
+        InferRequest::new(
+            "m",
+            id,
+            vec![
+                HostTensor::from_f32(&[2], dense),
+                HostTensor::from_i32(&[1, 2], idx),
+            ],
+            100.0,
+        )
+    }
+
+    #[test]
+    fn stack_pads_to_variant() {
+        let reqs = vec![req(0, &[1.0, 2.0], &[3, 4]), req(1, &[5.0, 6.0], &[7, 8])];
+        let batch = stack_rows(&reqs, 4).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].shape, vec![4, 2]);
+        assert_eq!(batch[0].as_f32().unwrap(), vec![1.0, 2.0, 5.0, 6.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(batch[1].shape, vec![4, 1, 2]);
+        assert_eq!(batch[1].as_i32().unwrap(), vec![3, 4, 7, 8, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn stack_then_scatter_round_trips() {
+        let reqs: Vec<_> = (0..3)
+            .map(|i| req(i, &[i as f32, -(i as f32)], &[i as i32, 2 * i as i32]))
+            .collect();
+        let batch = stack_rows(&reqs, 4).unwrap();
+        let rows = scatter_rows(&batch, reqs.len()).unwrap();
+        assert_eq!(rows.len(), 3);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row[0].shape, vec![2]);
+            assert_eq!(row[0].data, reqs[i].inputs[0].data);
+            assert_eq!(row[1].shape, vec![1, 2]);
+            assert_eq!(row[1].data, reqs[i].inputs[1].data);
+        }
+    }
+
+    #[test]
+    fn stack_rejects_shape_mismatch() {
+        let a = req(0, &[1.0, 2.0], &[3, 4]);
+        let mut b = req(1, &[5.0, 6.0], &[7, 8]);
+        b.inputs[0] = HostTensor::from_f32(&[3], &[0.0; 3]);
+        assert!(stack_rows(&[a, b], 4).is_err());
+    }
+
+    #[test]
+    fn stack_rejects_overfull_batch() {
+        let reqs = vec![req(0, &[1.0, 2.0], &[3, 4]), req(1, &[5.0, 6.0], &[7, 8])];
+        assert!(stack_rows(&reqs, 1).is_err());
+    }
+
+    #[test]
+    fn scatter_rejects_short_outputs() {
+        let out = vec![HostTensor::from_f32(&[2, 1], &[0.1, 0.2])];
+        assert!(scatter_rows(&out, 3).is_err());
+        let rows = scatter_rows(&out, 2).unwrap();
+        assert_eq!(rows[1][0].dtype, DType::F32);
+        assert_eq!(rows[1][0].as_f32().unwrap(), vec![0.2]);
+    }
+
+    #[test]
+    fn deadline_classes_order() {
+        assert!(
+            DeadlineClass::Interactive.default_deadline_ms()
+                < DeadlineClass::Relaxed.default_deadline_ms()
+        );
+    }
+}

@@ -4,8 +4,12 @@
 //! Characterization, Performance Optimizations and Hardware Implications"*
 //! (Park, Naumov, et al., 2018).
 //!
-//! The crate is organized as the paper's system is: a serving tier
-//! ([`coordinator`]) running AOT-compiled model artifacts through a PJRT
+//! The crate is organized as the paper's system is: a model-generic
+//! serving frontend ([`coordinator`]) — a [`coordinator::ServingFrontend`]
+//! that dispatches heterogeneous request streams to per-model dynamic
+//! batchers, where each family (recommendation, CV, NMT) plugs in via the
+//! [`coordinator::ModelService`] trait ([`models::serving`]) — running
+//! AOT-compiled model artifacts through a PJRT
 //! [`runtime`], instrumented by the paper's fleet-wide profiling machinery
 //! ([`observers`], [`fleet`]), characterized by an analytical performance
 //! model ([`perfmodel`], Table 1 / Fig 3), and optimized by a

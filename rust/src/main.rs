@@ -9,15 +9,18 @@
 //! dcinfer shapes                Fig 5
 //! dcinfer mine [--top K]        §3.3 fusion opportunities
 //! dcinfer disagg                §4 tier bandwidth
-//! dcinfer serve [--requests N] [--executors E] [--qps Q]
+//! dcinfer serve [--requests N] [--executors E] [--qps Q] [--models recsys,nmt,cv]
 //! ```
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use dcinfer::coordinator::{disagg_bandwidth, InferRequest, InferenceTier, TierConfig};
+use dcinfer::coordinator::{disagg_bandwidth, FrontendConfig, ModelService, ServingFrontend};
+use dcinfer::models::{CvService, NmtService, RecSysService};
+use dcinfer::runtime::Manifest;
 use dcinfer::fleet::{demand_series, simulate_fleet, FleetConfig};
 use dcinfer::graph::{mine_frequent_subgraphs, rank_opportunities, Net};
 use dcinfer::models::{representative_zoo, ModelDesc};
@@ -252,40 +255,54 @@ fn cmd_codesign() -> Result<()> {
     Ok(())
 }
 
-/// Run the serving tier under synthetic load.
+/// Run the serving frontend under synthetic (optionally mixed-model) load.
 fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let n: u64 = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(500);
     let executors = flags.get("executors").and_then(|v| v.parse().ok()).unwrap_or(2);
     let qps: f64 = flags.get("qps").and_then(|v| v.parse().ok()).unwrap_or(2000.0);
-    println!("== serving tier: {n} requests @ {qps} offered qps, {executors} executors ==\n");
+    let models = flags.get("models").cloned().unwrap_or_else(|| "recsys".to_string());
+    println!("== serving frontend: {n} requests @ {qps} offered qps, {executors} executors, models [{models}] ==\n");
 
-    let tier = InferenceTier::start(TierConfig { executors, ..Default::default() })?;
+    // build one service per requested family; each knows its artifact
+    // prefix and how to synthesize production-like requests
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let mut services: Vec<Arc<dyn ModelService>> = Vec::new();
+    for name in models.split(',').filter(|s| !s.is_empty()) {
+        let svc: Arc<dyn ModelService> = match name {
+            "recsys" => Arc::new(RecSysService::from_manifest(&manifest)?),
+            "cv" => Arc::new(CvService::from_manifest(&manifest)?),
+            "nmt" => Arc::new(NmtService::from_manifest(&manifest)?),
+            other => anyhow::bail!("unknown model {other} (expected recsys, cv, nmt)"),
+        };
+        services.push(svc);
+    }
+
+    let frontend =
+        ServingFrontend::start(FrontendConfig { executors, ..Default::default() }, services)?;
+    let lanes: Vec<Arc<dyn ModelService>> =
+        frontend.models().iter().map(|m| frontend.service(m).unwrap().clone()).collect();
     let mut rng = Pcg32::seeded(42);
     let gap = std::time::Duration::from_secs_f64(1.0 / qps);
     let mut receivers = Vec::with_capacity(n as usize);
     let t0 = Instant::now();
     for i in 0..n {
-        let mut dense = vec![0f32; tier.dense_dim];
-        rng.fill_normal(&mut dense, 0.0, 1.0);
-        let indices: Vec<i32> = (0..tier.n_tables * tier.pool_size)
-            .map(|_| rng.zipf(tier.rows_per_table as u32, 1.05) as i32)
-            .collect();
-        receivers.push(tier.submit(InferRequest {
-            id: i,
-            dense,
-            indices,
-            arrival: Instant::now(),
-            deadline_ms: 100.0,
-        })?);
+        let mut req = lanes[i as usize % lanes.len()].synth_request(i, &mut rng, 0.0);
+        req.arrival = Instant::now();
+        receivers.push(frontend.submit(req)?);
         std::thread::sleep(gap);
     }
+    let mut failed = 0u64;
     for rx in receivers {
-        let _ = rx.recv();
+        if !rx.recv()?.is_ok() {
+            failed += 1;
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let snap = tier.metrics.snapshot();
-    snap.print();
-    println!("wall time {wall:.2}s, achieved {:.0} req/s end-to-end", n as f64 / wall);
-    tier.shutdown();
+    for (model, snap) in frontend.snapshot_all() {
+        println!("\n--- {model} ---");
+        snap.print();
+    }
+    println!("\nwall time {wall:.2}s, achieved {:.0} req/s end-to-end, {failed} failed", n as f64 / wall);
+    frontend.shutdown();
     Ok(())
 }

@@ -13,15 +13,20 @@
 //! - [`faster_rcnn_shuffle`] — Rosetta text detection (ShuffleNet trunk)
 //! - [`resnext3d_101`] — video model, depth-wise spatiotemporal factorization
 //! - [`seq2seq_gru`]  — NMT encoder/decoder (§2.1.3)
+//!
+//! [`serving`] holds the [`crate::coordinator::ModelService`] impls that
+//! make the servable members of each family runnable on the frontend.
 
 pub mod cv;
 pub mod nmt;
 pub mod rec;
+pub mod serving;
 pub mod zoo;
 
 pub use cv::{faster_rcnn_shuffle, resnet50, resnext101, resnext3d_101};
 pub use nmt::{seq2seq_default, seq2seq_gru, seq2seq_lstm};
 pub use rec::{recsys, RecsysScale};
+pub use serving::{CvService, NmtService, RecSysService};
 pub use zoo::{representative_zoo, zoo_entry, ZooEntry};
 
 /// Operator class, following the Caffe2 buckets of Fig 4.

@@ -1,0 +1,378 @@
+//! [`ModelService`] implementations: how each paper model family (§2)
+//! plugs into the [`crate::coordinator::ServingFrontend`].
+//!
+//! Each service pulls its dimensions from the artifact manifest's
+//! `models` section at construction time and provides typed request
+//! constructors plus a synthetic-load generator, so examples, benches
+//! and tests share one definition of each family's wire format:
+//!
+//! - [`RecSysService`] — Fig-2 recommendation (dense features + pooled
+//!   sparse ids -> event probability), `recsys_fp32_b*` artifacts.
+//! - [`CvService`]     — image classification (§2.1.2), `cv_tiny_b*`.
+//! - [`NmtService`]    — seq2seq GRU decode step (§2.1.3), `gru_step_b*`.
+//!
+//! All three use the default row-stack/scatter batch layout; a family
+//! with ragged inputs would override `assemble`/`scatter`.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::request::InferRequest;
+use crate::coordinator::service::{DeadlineClass, ModelService};
+use crate::runtime::{DType, HostTensor, Manifest};
+use crate::util::rng::Pcg32;
+
+fn check_input(
+    req: &InferRequest,
+    j: usize,
+    dtype: DType,
+    shape: &[usize],
+) -> Result<()> {
+    let t = req.inputs.get(j).with_context(|| format!("request {} missing input {j}", req.id))?;
+    ensure!(
+        t.dtype == dtype && t.shape == shape,
+        "request {} input {j}: got {:?}{:?}, want {:?}{:?}",
+        req.id,
+        t.dtype,
+        t.shape,
+        dtype,
+        shape
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Recommendation (Fig 2, §2.1.1)
+// ---------------------------------------------------------------------------
+
+/// Serves the Fig-2 recommendation model: per-request dense features
+/// `[dense_dim]` f32 and pooled sparse ids `[n_tables, pool]` i32.
+#[derive(Debug, Clone)]
+pub struct RecSysService {
+    pub dense_dim: usize,
+    pub n_tables: usize,
+    pub pool: usize,
+    pub rows_per_table: usize,
+}
+
+impl RecSysService {
+    pub const MODEL_ID: &str = "recsys";
+    pub const PREFIX: &str = "recsys_fp32";
+
+    pub fn from_manifest(manifest: &Manifest) -> Result<RecSysService> {
+        let cfg = manifest.model_config(Self::MODEL_ID)?;
+        Ok(RecSysService {
+            dense_dim: cfg.get("dense_dim").as_usize().context("dense_dim")?,
+            n_tables: cfg.get("n_tables").as_usize().context("n_tables")?,
+            pool: cfg.get("pool").as_usize().context("pool")?,
+            rows_per_table: cfg.get("rows_per_table").as_usize().context("rows_per_table")?,
+        })
+    }
+
+    /// Build a request from raw feature vectors.
+    pub fn request(
+        &self,
+        id: u64,
+        dense: Vec<f32>,
+        indices: Vec<i32>,
+        deadline_ms: f64,
+    ) -> Result<InferRequest> {
+        ensure!(dense.len() == self.dense_dim, "dense len {} != {}", dense.len(), self.dense_dim);
+        ensure!(
+            indices.len() == self.n_tables * self.pool,
+            "indices len {} != {}",
+            indices.len(),
+            self.n_tables * self.pool
+        );
+        Ok(InferRequest::new(
+            Self::MODEL_ID,
+            id,
+            vec![
+                HostTensor::from_f32(&[self.dense_dim], &dense),
+                HostTensor::from_i32(&[self.n_tables, self.pool], &indices),
+            ],
+            deadline_ms,
+        ))
+    }
+
+    /// Synthetic production-like request: N(0,1) dense features and
+    /// Zipf-skewed embedding ids (the paper's skewed-access regime).
+    pub fn synth_request(&self, id: u64, rng: &mut Pcg32, deadline_ms: f64) -> InferRequest {
+        let mut dense = vec![0f32; self.dense_dim];
+        rng.fill_normal(&mut dense, 0.0, 1.0);
+        let indices: Vec<i32> = (0..self.n_tables * self.pool)
+            .map(|_| rng.zipf(self.rows_per_table as u32, 1.05) as i32)
+            .collect();
+        self.request(id, dense, indices, deadline_ms).expect("synth dims match config")
+    }
+}
+
+impl ModelService for RecSysService {
+    fn model_id(&self) -> &str {
+        Self::MODEL_ID
+    }
+
+    fn artifact_prefix(&self) -> &str {
+        Self::PREFIX
+    }
+
+    fn deadline_class(&self) -> DeadlineClass {
+        DeadlineClass::Interactive
+    }
+
+    fn validate(&self, req: &InferRequest) -> Result<()> {
+        ensure!(req.inputs.len() == 2, "expected 2 inputs, got {}", req.inputs.len());
+        check_input(req, 0, DType::F32, &[self.dense_dim])?;
+        check_input(req, 1, DType::I32, &[self.n_tables, self.pool])
+    }
+
+    fn synth_request(&self, id: u64, rng: &mut Pcg32, deadline_ms: f64) -> InferRequest {
+        RecSysService::synth_request(self, id, rng, deadline_ms)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Computer vision (§2.1.2)
+// ---------------------------------------------------------------------------
+
+/// Serves the CV classifier artifacts: per-request image
+/// `[channels, in_hw, in_hw]` f32 -> class logits `[classes]`.
+#[derive(Debug, Clone)]
+pub struct CvService {
+    pub in_hw: usize,
+    pub channels: usize,
+    pub classes: usize,
+}
+
+impl CvService {
+    pub const MODEL_ID: &str = "cv";
+    pub const PREFIX: &str = "cv_tiny";
+
+    pub fn from_manifest(manifest: &Manifest) -> Result<CvService> {
+        let cfg = manifest.model_config(Self::MODEL_ID)?;
+        Ok(CvService {
+            in_hw: cfg.get("in_hw").as_usize().context("in_hw")?,
+            channels: cfg.get("channels").as_usize().context("channels")?,
+            classes: cfg.get("classes").as_usize().context("classes")?,
+        })
+    }
+
+    fn image_shape(&self) -> [usize; 3] {
+        [self.channels, self.in_hw, self.in_hw]
+    }
+
+    pub fn request(&self, id: u64, image: Vec<f32>, deadline_ms: f64) -> Result<InferRequest> {
+        let want = self.channels * self.in_hw * self.in_hw;
+        ensure!(image.len() == want, "image len {} != {}", image.len(), want);
+        Ok(InferRequest::new(
+            Self::MODEL_ID,
+            id,
+            vec![HostTensor::from_f32(&self.image_shape(), &image)],
+            deadline_ms,
+        ))
+    }
+
+    pub fn synth_request(&self, id: u64, rng: &mut Pcg32, deadline_ms: f64) -> InferRequest {
+        let mut image = vec![0f32; self.channels * self.in_hw * self.in_hw];
+        rng.fill_normal(&mut image, 0.0, 1.0);
+        self.request(id, image, deadline_ms).expect("synth dims match config")
+    }
+}
+
+impl ModelService for CvService {
+    fn model_id(&self) -> &str {
+        Self::MODEL_ID
+    }
+
+    fn artifact_prefix(&self) -> &str {
+        Self::PREFIX
+    }
+
+    fn deadline_class(&self) -> DeadlineClass {
+        DeadlineClass::Relaxed
+    }
+
+    fn validate(&self, req: &InferRequest) -> Result<()> {
+        ensure!(req.inputs.len() == 1, "expected 1 input, got {}", req.inputs.len());
+        check_input(req, 0, DType::F32, &self.image_shape())
+    }
+
+    fn synth_request(&self, id: u64, rng: &mut Pcg32, deadline_ms: f64) -> InferRequest {
+        CvService::synth_request(self, id, rng, deadline_ms)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NMT decode step (§2.1.3)
+// ---------------------------------------------------------------------------
+
+/// Serves the seq2seq GRU decode-step artifacts: per-request embedded
+/// token `x [hidden]` and decoder state `h [hidden]` -> vocab logits
+/// `[vocab]` and new state `[hidden]` (the beam-search inner loop).
+#[derive(Debug, Clone)]
+pub struct NmtService {
+    pub hidden: usize,
+    pub vocab: usize,
+}
+
+impl NmtService {
+    pub const MODEL_ID: &str = "nmt";
+    /// Manifest `models` key of the decode-step artifacts.
+    pub const CONFIG_KEY: &str = "gru";
+    pub const PREFIX: &str = "gru_step";
+
+    pub fn from_manifest(manifest: &Manifest) -> Result<NmtService> {
+        let cfg = manifest.model_config(Self::CONFIG_KEY)?;
+        Ok(NmtService {
+            hidden: cfg.get("hidden").as_usize().context("hidden")?,
+            vocab: cfg.get("vocab").as_usize().context("vocab")?,
+        })
+    }
+
+    pub fn request(&self, id: u64, x: Vec<f32>, h: Vec<f32>, deadline_ms: f64) -> Result<InferRequest> {
+        ensure!(x.len() == self.hidden, "x len {} != {}", x.len(), self.hidden);
+        ensure!(h.len() == self.hidden, "h len {} != {}", h.len(), self.hidden);
+        Ok(InferRequest::new(
+            Self::MODEL_ID,
+            id,
+            vec![
+                HostTensor::from_f32(&[self.hidden], &x),
+                HostTensor::from_f32(&[self.hidden], &h),
+            ],
+            deadline_ms,
+        ))
+    }
+
+    pub fn synth_request(&self, id: u64, rng: &mut Pcg32, deadline_ms: f64) -> InferRequest {
+        let mut x = vec![0f32; self.hidden];
+        let mut h = vec![0f32; self.hidden];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        rng.fill_normal(&mut h, 0.0, 0.5);
+        self.request(id, x, h, deadline_ms).expect("synth dims match config")
+    }
+}
+
+impl ModelService for NmtService {
+    fn model_id(&self) -> &str {
+        Self::MODEL_ID
+    }
+
+    fn artifact_prefix(&self) -> &str {
+        Self::PREFIX
+    }
+
+    fn deadline_class(&self) -> DeadlineClass {
+        DeadlineClass::Interactive
+    }
+
+    fn validate(&self, req: &InferRequest) -> Result<()> {
+        ensure!(req.inputs.len() == 2, "expected 2 inputs, got {}", req.inputs.len());
+        check_input(req, 0, DType::F32, &[self.hidden])?;
+        check_input(req, 1, DType::F32, &[self.hidden])
+    }
+
+    fn synth_request(&self, id: u64, rng: &mut Pcg32, deadline_ms: f64) -> InferRequest {
+        NmtService::synth_request(self, id, rng, deadline_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::{scatter_rows, stack_rows};
+    use std::path::Path;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "recsys": {"dense_dim": 4, "n_tables": 2, "pool": 3, "rows_per_table": 100},
+        "gru": {"hidden": 8, "vocab": 16},
+        "cv": {"in_hw": 4, "channels": 1, "classes": 3}
+      },
+      "artifacts": {}
+    }"#;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(Path::new("."), SAMPLE).unwrap()
+    }
+
+    #[test]
+    fn recsys_assemble_scatter_round_trip() {
+        let svc = RecSysService::from_manifest(&manifest()).unwrap();
+        assert_eq!(svc.model_id(), "recsys");
+        let mut rng = Pcg32::seeded(1);
+        let reqs: Vec<_> = (0..3).map(|i| svc.synth_request(i, &mut rng, 100.0)).collect();
+        for r in &reqs {
+            svc.validate(r).unwrap();
+        }
+        let batch = svc.assemble(&reqs, 4).unwrap();
+        assert_eq!(batch[0].shape, vec![4, 4]); // [variant, dense_dim]
+        assert_eq!(batch[1].shape, vec![4, 2, 3]); // [variant, n_tables, pool]
+        // padded tail row is zeros (id 0 lookups — harmless, discarded)
+        let idx = batch[1].as_i32().unwrap();
+        assert!(idx[3 * 6..].iter().all(|&v| v == 0));
+        // round trip: each request's rows come back out
+        let rows = scatter_rows(&batch, reqs.len()).unwrap();
+        for (r, row) in reqs.iter().zip(&rows) {
+            assert_eq!(row[0].data, r.inputs[0].data);
+            assert_eq!(row[1].data, r.inputs[1].data);
+        }
+    }
+
+    #[test]
+    fn recsys_validate_rejects_wrong_shapes() {
+        let svc = RecSysService::from_manifest(&manifest()).unwrap();
+        assert!(svc.request(0, vec![0.0; 3], vec![0; 6], 100.0).is_err());
+        assert!(svc.request(0, vec![0.0; 4], vec![0; 5], 100.0).is_err());
+        let ok = svc.request(0, vec![0.0; 4], vec![0; 6], 100.0).unwrap();
+        svc.validate(&ok).unwrap();
+        // a foreign request shape fails validation
+        let bad = InferRequest::new("recsys", 1, vec![HostTensor::from_f32(&[4], &[0.0; 4])], 1.0);
+        assert!(svc.validate(&bad).is_err());
+    }
+
+    #[test]
+    fn nmt_assemble_pads_both_state_tensors() {
+        let svc = NmtService::from_manifest(&manifest()).unwrap();
+        assert_eq!(svc.artifact_prefix(), "gru_step");
+        let mut rng = Pcg32::seeded(2);
+        let reqs: Vec<_> = (0..2).map(|i| svc.synth_request(i, &mut rng, 50.0)).collect();
+        let batch = svc.assemble(&reqs, 8).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].shape, vec![8, 8]);
+        assert_eq!(batch[1].shape, vec![8, 8]);
+        // decode-step outputs scatter to [vocab] and [hidden] per request
+        let outs = vec![
+            HostTensor::from_f32(&[8, 16], &[0.5; 8 * 16]),
+            HostTensor::from_f32(&[8, 8], &[0.25; 64]),
+        ];
+        let rows = svc.scatter(&outs, 2).unwrap();
+        assert_eq!(rows[0][0].shape, vec![16]);
+        assert_eq!(rows[0][1].shape, vec![8]);
+    }
+
+    #[test]
+    fn cv_round_trip_and_deadline_class() {
+        let svc = CvService::from_manifest(&manifest()).unwrap();
+        assert_eq!(svc.deadline_class(), DeadlineClass::Relaxed);
+        let mut rng = Pcg32::seeded(3);
+        let reqs: Vec<_> = (0..2).map(|i| svc.synth_request(i, &mut rng, 0.0)).collect();
+        svc.validate(&reqs[0]).unwrap();
+        let batch = stack_rows(&reqs, 2).unwrap();
+        assert_eq!(batch[0].shape, vec![2, 1, 4, 4]);
+        let logits = vec![HostTensor::from_f32(&[2, 3], &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0])];
+        let rows = svc.scatter(&logits, 2).unwrap();
+        assert_eq!(rows[1][0].as_f32().unwrap(), vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn missing_model_config_errors() {
+        let m = Manifest::parse(
+            Path::new("."),
+            r#"{"version": 1, "models": {}, "artifacts": {}}"#,
+        )
+        .unwrap();
+        assert!(RecSysService::from_manifest(&m).is_err());
+        assert!(CvService::from_manifest(&m).is_err());
+        assert!(NmtService::from_manifest(&m).is_err());
+    }
+}

@@ -124,9 +124,32 @@ impl Manifest {
         a.weights.as_ref().map(|w| self.dir.join(w))
     }
 
-    /// Names of artifacts for a given model, e.g. all recsys batch variants.
+    /// Names of artifacts for a given model family, e.g. all of one
+    /// model's batch variants.
     pub fn artifacts_for_model(&self, model: &str) -> Vec<&ArtifactMeta> {
         self.artifacts.values().filter(|a| a.model.as_deref() == Some(model)).collect()
+    }
+
+    /// Batch variants of an artifact family (`<prefix>_b<N>` naming),
+    /// as `(batch, artifact_name)` sorted ascending by batch size.
+    pub fn variants_for_prefix(&self, prefix: &str) -> Vec<(usize, String)> {
+        let mut v: Vec<(usize, String)> = self
+            .artifacts
+            .values()
+            .filter(|a| a.name.starts_with(prefix))
+            .map(|a| (a.batch, a.name.clone()))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Per-model config block from the manifest's `models` section.
+    pub fn model_config(&self, model: &str) -> Result<&Json> {
+        let cfg = self.models.get(model);
+        if cfg.is_null() {
+            bail!("model {model} not in manifest models section");
+        }
+        Ok(cfg)
     }
 }
 
@@ -136,15 +159,23 @@ mod tests {
 
     const SAMPLE: &str = r#"{
       "version": 1,
-      "models": {"recsys": {"dense_dim": 32}},
+      "models": {"toy": {"dense_dim": 32}},
       "artifacts": {
         "m_b2": {
-          "hlo": "m_b2.hlo.txt", "model": "recsys", "weights": "m.weights.bin",
+          "hlo": "m_b2.hlo.txt", "model": "toy", "weights": "m.weights.bin",
           "weight_params": [{"name": "w", "dtype": "f32", "shape": [4, 4]}],
           "inputs": [{"name": "x", "dtype": "f32", "shape": [2, 4]},
                      {"name": "idx", "dtype": "i32", "shape": [2, 3]}],
           "outputs": [{"name": "y", "dtype": "f32", "shape": [2, 1]}],
           "batch": 2
+        },
+        "m_b8": {
+          "hlo": "m_b8.hlo.txt", "model": "toy", "weights": "m.weights.bin",
+          "weight_params": [{"name": "w", "dtype": "f32", "shape": [4, 4]}],
+          "inputs": [{"name": "x", "dtype": "f32", "shape": [8, 4]},
+                     {"name": "idx", "dtype": "i32", "shape": [8, 3]}],
+          "outputs": [{"name": "y", "dtype": "f32", "shape": [8, 1]}],
+          "batch": 8
         },
         "k": {
           "hlo": "k.hlo.txt", "model": null, "weights": null,
@@ -159,14 +190,29 @@ mod tests {
     #[test]
     fn parses_sample() {
         let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
-        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts.len(), 3);
         let a = m.artifact("m_b2").unwrap();
         assert_eq!(a.batch, 2);
         assert_eq!(a.inputs[1].dtype, DType::I32);
         assert_eq!(a.weight_params[0].byte_len(), 64);
         assert_eq!(m.hlo_path(a), PathBuf::from("/tmp/a/m_b2.hlo.txt"));
         assert!(m.weights_path(m.artifact("k").unwrap()).is_none());
-        assert_eq!(m.artifacts_for_model("recsys").len(), 1);
+        assert_eq!(m.artifacts_for_model("toy").len(), 2);
+    }
+
+    #[test]
+    fn prefix_variants_sorted_by_batch() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        let v = m.variants_for_prefix("m_b");
+        assert_eq!(v, vec![(2, "m_b2".to_string()), (8, "m_b8".to_string())]);
+        assert!(m.variants_for_prefix("absent").is_empty());
+    }
+
+    #[test]
+    fn model_config_lookup() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert_eq!(m.model_config("toy").unwrap().get("dense_dim").as_usize(), Some(32));
+        assert!(m.model_config("absent").is_err());
     }
 
     #[test]

@@ -1,15 +1,20 @@
-//! End-to-end serving integration: the full tier (router -> dynamic
-//! batcher -> PJRT executors) serving the Fig-2 recommendation model.
+//! End-to-end serving integration: the full frontend (router ->
+//! per-model dynamic batchers -> PJRT executors) serving the model
+//! families through the `ModelService` API — including mixed recsys +
+//! NMT + CV traffic against one frontend.
 //!
 //! Requires `make artifacts` (skips cleanly otherwise).
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
-use dcinfer::coordinator::{InferRequest, InferenceTier, TierConfig};
+use dcinfer::coordinator::{FrontendConfig, ModelService, ServingFrontend};
+use dcinfer::models::{CvService, NmtService, RecSysService};
+use dcinfer::runtime::Manifest;
 use dcinfer::util::rng::Pcg32;
 
-// The tier tests saturate the CPU (PJRT executors + batcher threads);
+// The serving tests saturate the CPU (PJRT executors + batcher threads);
 // run them serially so timing-sensitive batching behaviour is stable.
 static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
@@ -18,60 +23,63 @@ fn artifacts_dir() -> Option<PathBuf> {
     dir.join("manifest.json").exists().then_some(dir)
 }
 
-fn make_request(tier: &InferenceTier, rng: &mut Pcg32, id: u64) -> InferRequest {
-    let mut dense = vec![0f32; tier.dense_dim];
-    rng.fill_normal(&mut dense, 0.0, 1.0);
-    let indices: Vec<i32> = (0..tier.n_tables * tier.pool_size)
-        .map(|_| rng.zipf(tier.rows_per_table as u32, 1.05) as i32)
-        .collect();
-    InferRequest { id, dense, indices, arrival: Instant::now(), deadline_ms: 200.0 }
+fn start_recsys(dir: &Path, executors: usize, max_wait_us: f64) -> (ServingFrontend, RecSysService) {
+    let manifest = Manifest::load(dir).unwrap();
+    let service = RecSysService::from_manifest(&manifest).unwrap();
+    let frontend = ServingFrontend::start(
+        FrontendConfig {
+            artifacts_dir: dir.to_path_buf(),
+            executors,
+            max_wait_us,
+            ..Default::default()
+        },
+        vec![Arc::new(service.clone())],
+    )
+    .unwrap();
+    (frontend, service)
 }
 
 #[test]
-fn tier_serves_batched_requests() {
+fn frontend_serves_batched_requests() {
     let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
     let Some(dir) = artifacts_dir() else {
         eprintln!("skipping: run `make artifacts`");
         return;
     };
-    let tier = InferenceTier::start(TierConfig {
-        artifacts_dir: dir,
-        executors: 2,
-        max_wait_us: 1_000.0,
-        ..Default::default()
-    })
-    .unwrap();
+    let (frontend, service) = start_recsys(&dir, 2, 1_000.0);
     let mut rng = Pcg32::seeded(100);
 
     // burst of 40 requests -> should form multi-request batches.
     // Pre-generate so the submit loop is pure channel sends (request
     // synthesis is slow in debug builds and would serialize the burst).
-    let reqs: Vec<_> = (0..40).map(|i| make_request(&tier, &mut rng, i)).collect();
+    let reqs: Vec<_> = (0..40).map(|i| service.synth_request(i, &mut rng, 200.0)).collect();
     let receivers: Vec<_> = reqs
         .into_iter()
         .map(|mut r| {
             r.arrival = Instant::now(); // stamp at submit, not generation
-            tier.submit(r).unwrap()
+            frontend.submit(r).unwrap()
         })
         .collect();
 
     let mut max_batch = 0usize;
     for rx in receivers {
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
-        assert!(resp.prob > 0.0 && resp.prob < 1.0, "prob {}", resp.prob);
+        let prob = resp.scalar_f32().expect("successful recsys response");
+        assert!(prob > 0.0 && prob < 1.0, "prob {prob}");
         max_batch = max_batch.max(resp.batch_size);
     }
-    let snap = tier.metrics.snapshot();
+    let snap = frontend.metrics(RecSysService::MODEL_ID).unwrap().snapshot();
     assert_eq!(snap.served, 40);
+    assert_eq!(snap.failed, 0);
     if !cfg!(debug_assertions) {
         assert!(max_batch > 1, "burst never batched (max batch {max_batch})");
         assert!(snap.batches < 40, "{} batches for 40 requests", snap.batches);
     }
-    tier.shutdown();
+    frontend.shutdown();
 }
 
 #[test]
-fn tier_responses_match_single_request_path() {
+fn frontend_responses_match_single_request_path() {
     let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
     let Some(dir) = artifacts_dir() else {
         return;
@@ -79,68 +87,57 @@ fn tier_responses_match_single_request_path() {
     // serve the same request twice: once alone, once inside a burst —
     // the prediction must be identical (batching is semantically
     // transparent).
-    let tier = InferenceTier::start(TierConfig {
-        artifacts_dir: dir,
-        executors: 1,
-        max_wait_us: 500.0,
-        ..Default::default()
-    })
-    .unwrap();
+    let (frontend, service) = start_recsys(&dir, 1, 500.0);
     let mut rng = Pcg32::seeded(200);
-    let probe = make_request(&tier, &mut rng, 999);
+    let probe = service.synth_request(999, &mut rng, 200.0);
 
-    let solo = tier.submit(probe.clone()).unwrap().recv().unwrap();
+    let solo = frontend.submit(probe.clone()).unwrap().recv().unwrap();
+    let solo_prob = solo.scalar_f32().expect("solo response ok");
 
-    let extra: Vec<_> = (0..15).map(|i| make_request(&tier, &mut rng, i)).collect();
+    let extra: Vec<_> = (0..15).map(|i| service.synth_request(i, &mut rng, 200.0)).collect();
     let mut probe2 = probe.clone();
     probe2.arrival = Instant::now();
-    let mut receivers = vec![tier.submit(probe2).unwrap()];
+    let mut receivers = vec![frontend.submit(probe2).unwrap()];
     for mut r in extra {
         r.arrival = Instant::now();
-        receivers.push(tier.submit(r).unwrap());
+        receivers.push(frontend.submit(r).unwrap());
     }
     let burst = receivers.remove(0).recv().unwrap();
+    let burst_prob = burst.scalar_f32().expect("batched response ok");
     assert!(
-        (solo.prob - burst.prob).abs() < 1e-5,
-        "solo {} vs batched {}",
-        solo.prob,
-        burst.prob
+        (solo_prob - burst_prob).abs() < 1e-5,
+        "solo {solo_prob} vs batched {burst_prob}"
     );
     for rx in receivers {
         rx.recv().unwrap();
     }
-    tier.shutdown();
+    frontend.shutdown();
 }
 
 #[test]
-fn tier_sustains_offered_load() {
+fn frontend_sustains_offered_load() {
     let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
     let Some(dir) = artifacts_dir() else {
         return;
     };
-    let tier = InferenceTier::start(TierConfig {
-        artifacts_dir: dir,
-        executors: 2,
-        max_wait_us: 2_000.0,
-        ..Default::default()
-    })
-    .unwrap();
+    let (frontend, service) = start_recsys(&dir, 2, 2_000.0);
     let mut rng = Pcg32::seeded(300);
     let n = 200u64;
-    let reqs: Vec<_> = (0..n).map(|i| make_request(&tier, &mut rng, i)).collect();
+    let reqs: Vec<_> = (0..n).map(|i| service.synth_request(i, &mut rng, 200.0)).collect();
     let t0 = Instant::now();
     let receivers: Vec<_> = reqs
         .into_iter()
         .map(|mut r| {
             r.arrival = Instant::now();
-            tier.submit(r).unwrap()
+            frontend.submit(r).unwrap()
         })
         .collect();
     for rx in receivers {
-        rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert!(resp.is_ok());
     }
     let elapsed = t0.elapsed().as_secs_f64();
-    let snap = tier.metrics.snapshot();
+    let snap = frontend.metrics(RecSysService::MODEL_ID).unwrap().snapshot();
     assert_eq!(snap.served, n);
     // debug builds share cores with other (slow, unoptimized) test
     // binaries, which can starve the batcher thread — keep the strict
@@ -152,5 +149,121 @@ fn tier_sustains_offered_load() {
         // sanity: sustained > 50 req/s on CPU
         assert!(n as f64 / elapsed > 50.0, "qps {}", n as f64 / elapsed);
     }
-    tier.shutdown();
+    frontend.shutdown();
+}
+
+#[test]
+fn mixed_model_traffic_served_with_separate_metrics() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    // register every family whose artifacts exist (CV artifacts only
+    // appear in manifests rebuilt after the multi-model redesign)
+    let recsys = RecSysService::from_manifest(&manifest).unwrap();
+    let nmt = NmtService::from_manifest(&manifest).unwrap();
+    let mut services: Vec<Arc<dyn ModelService>> =
+        vec![Arc::new(recsys.clone()), Arc::new(nmt.clone())];
+    let cv = if manifest.variants_for_prefix(CvService::PREFIX).is_empty() {
+        None
+    } else {
+        let s = CvService::from_manifest(&manifest).unwrap();
+        services.push(Arc::new(s.clone()));
+        Some(s)
+    };
+    let n_models = services.len() as u64;
+
+    let frontend = ServingFrontend::start(
+        FrontendConfig {
+            artifacts_dir: dir.clone(),
+            executors: 2,
+            max_wait_us: 1_000.0,
+            ..Default::default()
+        },
+        services,
+    )
+    .unwrap();
+    assert!(frontend.models().contains(&"recsys".to_string()));
+    assert!(frontend.models().contains(&"nmt".to_string()));
+
+    // interleaved mixed traffic: round-robin across families
+    let mut rng = Pcg32::seeded(400);
+    let per_model = 20u64;
+    let mut reqs = Vec::new();
+    for i in 0..per_model {
+        reqs.push(recsys.synth_request(3 * i, &mut rng, 200.0));
+        reqs.push(nmt.synth_request(3 * i + 1, &mut rng, 200.0));
+        if let Some(cv) = &cv {
+            reqs.push(cv.synth_request(3 * i + 2, &mut rng, 0.0));
+        }
+    }
+    let receivers: Vec<_> = reqs
+        .into_iter()
+        .map(|mut r| {
+            r.arrival = Instant::now();
+            frontend.submit(r).unwrap()
+        })
+        .collect();
+    for rx in receivers {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        let outputs = resp.outcome.as_ref().expect("mixed-traffic response ok");
+        match resp.model.as_str() {
+            "recsys" => {
+                let prob = resp.scalar_f32().unwrap();
+                assert!(prob > 0.0 && prob < 1.0, "prob {prob}");
+            }
+            "nmt" => {
+                // decode step returns [vocab] logits and [hidden] state
+                assert_eq!(outputs.len(), 2);
+                assert_eq!(outputs[0].elem_count(), nmt.vocab);
+                assert_eq!(outputs[1].elem_count(), nmt.hidden);
+            }
+            "cv" => {
+                let s = cv.as_ref().unwrap();
+                assert_eq!(outputs[0].elem_count(), s.classes);
+            }
+            other => panic!("unexpected model {other}"),
+        }
+    }
+
+    // per-model metrics are tracked separately and account for exactly
+    // that family's traffic
+    let mut total = 0u64;
+    for (model, snap) in frontend.snapshot_all() {
+        assert_eq!(snap.served, per_model, "{model} served {}", snap.served);
+        assert_eq!(snap.failed, 0, "{model} had failures");
+        assert!(snap.batches > 0, "{model} formed no batches");
+        assert!(snap.mean_batch >= 1.0);
+        total += snap.served;
+    }
+    assert_eq!(total, per_model * n_models);
+    frontend.shutdown();
+}
+
+#[test]
+fn unknown_model_and_bad_inputs_rejected_at_submit() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let (frontend, service) = start_recsys(&dir, 1, 500.0);
+    let mut rng = Pcg32::seeded(500);
+
+    // unknown routing key -> synchronous error
+    let mut req = service.synth_request(1, &mut rng, 100.0);
+    req.model = "no_such_model".to_string();
+    let err = frontend.submit(req).unwrap_err();
+    assert!(err.to_string().contains("no_such_model"), "{err:#}");
+
+    // malformed inputs -> synchronous error (never reaches a batch)
+    let mut bad = service.synth_request(2, &mut rng, 100.0);
+    bad.inputs.pop();
+    assert!(frontend.submit(bad).is_err());
+
+    // the lane still works afterwards
+    let resp =
+        frontend.submit(service.synth_request(3, &mut rng, 200.0)).unwrap().recv().unwrap();
+    assert!(resp.is_ok());
+    frontend.shutdown();
 }

@@ -153,13 +153,7 @@ fn prop_batcher_preserves_fifo_and_loses_nothing() {
         let mut b = DynamicBatcher::new(policy);
         let n = 1 + rng.below(200) as u64;
         for id in 0..n {
-            b.push(InferRequest {
-                id,
-                dense: vec![],
-                indices: vec![],
-                arrival: std::time::Instant::now(),
-                deadline_ms: 1e9,
-            });
+            b.push(InferRequest::new("m", id, vec![], 1e9));
         }
         let mut seen = Vec::new();
         while let Some(f) = b.form() {
