@@ -1,35 +1,51 @@
-//! Quickstart: load one AOT artifact and run a single inference.
+//! Quickstart: load one AOT artifact through an execution backend and
+//! run a single inference.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
+//! # pure-Rust build (native FBGEMM-path backend only):
+//! cargo run --release --no-default-features --example quickstart
 //! ```
 //!
-//! Loads the Fig-2 recommendation model (batch 1), uploads its weights
-//! to the device once, builds one synthetic request (dense features +
-//! sparse embedding ids) and prints the predicted event probability.
+//! The runtime is backend-pluggable (`ExecBackend`): the default build
+//! executes artifacts on the XLA/PJRT engine; `--no-default-features`
+//! (or `BackendSpec::Native { .. }`) interprets the manifest's
+//! per-artifact op program with the pure-Rust fp16/int8 GEMM kernels.
+//! Each manifest artifact carries a `precision` field describing the
+//! numerics it *contains* (`recsys_fp32_b1` below is `fp32`); the
+//! native backend can additionally *execute* an fp32 artifact at
+//! `fp16`, `i8acc32` or `i8acc16` by re-quantizing at load time — try
+//! `BackendSpec::Native { precision: Precision::I8Acc16 }`.
+//!
+//! Loads the Fig-2 recommendation model (batch 1), builds one synthetic
+//! request (dense features + sparse embedding ids) and prints the
+//! predicted event probability.
 
 use anyhow::Result;
-use dcinfer::runtime::{Engine, HostTensor, Manifest};
+use dcinfer::runtime::{make_backend, BackendSpec, HostTensor, Manifest};
 use dcinfer::util::rng::Pcg32;
 
 fn main() -> Result<()> {
     let dir = std::path::Path::new("artifacts");
     let manifest = Manifest::load(dir)?;
-    let engine = Engine::cpu()?;
-    println!("platform: {}", engine.platform());
+    let spec = BackendSpec::default();
+    let backend = make_backend(&spec)?;
+    println!("backend: {} on {}", backend.label(), backend.platform());
 
-    let model = engine.load(&manifest, "recsys_fp32_b1")?;
+    let name = "recsys_fp32_b1";
+    let model = backend.load(&manifest, name)?;
     println!(
-        "loaded {} ({} weight tensors, compile+upload {:.0} ms)",
-        model.meta.name,
-        model.meta.weight_params.len(),
-        model.load_ms
+        "loaded {} (manifest precision {}, {} weight tensors, load {:.0} ms)",
+        model.meta().name,
+        model.meta().precision,
+        model.meta().weight_params.len(),
+        model.load_ms()
     );
 
     // Build one request: dense features ~ N(0,1), zipf-skewed sparse ids.
     let mut rng = Pcg32::seeded(42);
-    let dense_meta = &model.meta.inputs[0];
-    let idx_meta = &model.meta.inputs[1];
+    let dense_meta = &model.meta().inputs[0];
+    let idx_meta = &model.meta().inputs[1];
     let mut dense = vec![0f32; dense_meta.elem_count()];
     rng.fill_normal(&mut dense, 0.0, 1.0);
     let rows = manifest.model_config("recsys")?.get("rows_per_table").as_usize().unwrap();
@@ -42,7 +58,7 @@ fn main() -> Result<()> {
     ];
 
     let t0 = std::time::Instant::now();
-    let out = model.run(&engine, &inputs)?;
+    let out = model.run(&inputs)?;
     let dt = t0.elapsed();
     let prob = out[0].as_f32()?;
     println!("event probability: {:.4}  ({} us)", prob[0], dt.as_micros());

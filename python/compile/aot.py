@@ -76,6 +76,88 @@ def tensor_meta(name, shape, dtype):
             "shape": list(shape)}
 
 
+# -- native-backend op programs ---------------------------------------------
+# The Rust runtime's NativeBackend (runtime/native.rs) interprets a small
+# per-artifact op program instead of the HLO, dispatching FCs to the
+# packed fp16/int8 GEMM kernels. Each builder below mirrors the JAX
+# forward in compile/model.py op for op; the weight names reference the
+# DCIW weights file.
+
+def _same_pad(size, k, stride):
+    """Explicit [lo, hi] padding matching XLA/TF "SAME" for one dim."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return [total // 2, total - total // 2]
+
+
+def recsys_program(cfg):
+    """Op program mirroring M.recsys_forward."""
+    prog = []
+    src = "dense"
+    for i in range(len(cfg.bottom_mlp)):
+        prog.append({"op": "fc", "out": f"bot{i}", "in": src,
+                     "w": f"bot_w{i}", "b": f"bot_b{i}", "act": "relu"})
+        src = f"bot{i}"
+    pooled = []
+    for t in range(cfg.n_tables):
+        prog.append({"op": "embed_pool", "out": f"pool{t}",
+                     "indices": "indices", "table": f"emb_{t}", "slice": t})
+        pooled.append(f"pool{t}")
+    prog.append({"op": "concat", "out": "z0", "in": pooled + [src]})
+    src = "z0"
+    for i in range(len(cfg.top_mlp)):
+        last = i == len(cfg.top_mlp) - 1
+        prog.append({"op": "fc", "out": f"top{i}", "in": src,
+                     "w": f"top_w{i}", "b": f"top_b{i}",
+                     "act": "none" if last else "relu"})
+        src = f"top{i}"
+    prog.append({"op": "unary", "fn": "sigmoid", "out": "prob", "in": src})
+    return prog
+
+
+def gru_program():
+    """Op program mirroring M.gru_step (decode step + projection)."""
+    prog = []
+    for g in ("z", "r"):
+        prog += [
+            {"op": "fc", "out": f"x{g}", "in": "x", "w": f"W{g}", "act": "none"},
+            {"op": "fc", "out": f"h{g}", "in": "h", "w": f"U{g}",
+             "b": f"b{g}", "act": "none"},
+            {"op": "binary", "fn": "add", "out": f"s{g}",
+             "a": f"x{g}", "b": f"h{g}"},
+            {"op": "unary", "fn": "sigmoid", "out": g, "in": f"s{g}"},
+        ]
+    prog += [
+        {"op": "fc", "out": "xh", "in": "x", "w": "Wh", "act": "none"},
+        {"op": "binary", "fn": "mul", "out": "rh", "a": "r", "b": "h"},
+        {"op": "fc", "out": "uh", "in": "rh", "w": "Uh", "b": "bh",
+         "act": "none"},
+        {"op": "binary", "fn": "add", "out": "sh", "a": "xh", "b": "uh"},
+        {"op": "unary", "fn": "tanh", "out": "hh", "in": "sh"},
+        {"op": "unary", "fn": "one_minus", "out": "omz", "in": "z"},
+        {"op": "binary", "fn": "mul", "out": "keep", "a": "omz", "b": "h"},
+        {"op": "binary", "fn": "mul", "out": "upd", "a": "z", "b": "hh"},
+        {"op": "binary", "fn": "add", "out": "h_new", "a": "keep", "b": "upd"},
+        {"op": "fc", "out": "logits", "in": "h_new", "w": "Wout", "b": "bout",
+         "act": "none"},
+    ]
+    return prog
+
+
+def cv_program(cfg):
+    """Op program mirroring M.tiny_cnn_forward (im2col conv path)."""
+    h1 = -(-cfg.in_hw // 2)
+    return [
+        {"op": "conv2d", "out": "c1", "in": "image", "w": "conv1", "b": "b1",
+         "act": "relu", "stride": 2, "pad": _same_pad(cfg.in_hw, 3, 2)},
+        {"op": "conv2d", "out": "c2", "in": "c1", "w": "conv2", "b": "b2",
+         "act": "relu", "stride": 2, "pad": _same_pad(h1, 3, 2)},
+        {"op": "flatten", "out": "flat", "in": "c2"},
+        {"op": "fc", "out": "logits", "in": "flat", "w": "fc_w", "b": "fc_b",
+         "act": "none"},
+    ]
+
+
 def lower_artifact(out_dir, name, fn, arg_specs):
     lowered = jax.jit(fn).lower(*arg_specs)
     text = to_hlo_text(lowered)
@@ -119,6 +201,8 @@ def build_recsys(out_dir, manifest, batches=(1, 4, 16, 64)):
             ],
             "outputs": [tensor_meta("prob", (b, 1), np.float32)],
             "batch": b,
+            "precision": "fp32",
+            "program": recsys_program(cfg),
         }
         ws_jnp = [jnp.asarray(a) for _, a in weights]
         manifest["artifacts"][f"recsys_fp32_b{b}"]["_fn"] = (
@@ -171,6 +255,7 @@ def build_recsys(out_dir, manifest, batches=(1, 4, 16, 64)):
         ],
         "outputs": [tensor_meta("prob", (b, 1), np.float32)],
         "batch": b,
+        "precision": "int8",
     }
     t_jnp = [jnp.asarray(t) for t in tables_np]
     manifest["artifacts"][f"recsys_int8_b{b}"]["_fn"] = (
@@ -206,6 +291,8 @@ def build_gru(out_dir, manifest, batches=(1, 8)):
             "outputs": [tensor_meta("logits", (b, cfg.vocab), np.float32),
                         tensor_meta("h_new", (b, cfg.hidden), np.float32)],
             "batch": b,
+            "precision": "fp32",
+            "program": gru_program(),
         }
         ws_jnp = [jnp.asarray(a) for _, a in weights]
         manifest["artifacts"][f"gru_step_b{b}"]["_fn"] = (
@@ -243,6 +330,8 @@ def build_cv(out_dir, manifest, batches=(1, 8)):
                                    np.float32)],
             "outputs": [tensor_meta("logits", (b, cfg.classes), np.float32)],
             "batch": b,
+            "precision": "fp32",
+            "program": cv_program(cfg),
         }
         ws_jnp = [jnp.asarray(a) for _, a in weights]
         manifest["artifacts"][f"cv_tiny_b{b}"]["_fn"] = (
@@ -268,6 +357,7 @@ def build_kernel_artifacts(out_dir, manifest):
         "inputs": [tensor_meta("x_q", (Mm, K), np.int8)],
         "outputs": [tensor_meta("out", (Mm, N), np.float32)],
         "batch": Mm,
+        "precision": "int8",
     }
     manifest["artifacts"]["kernel_qgemm"]["_fn"] = qg
 
@@ -287,6 +377,9 @@ def build_kernel_artifacts(out_dir, manifest):
         "inputs": [tensor_meta("indices", (b, pool), np.int32)],
         "outputs": [tensor_meta("pooled", (b, dim), np.float32)],
         "batch": b,
+        "precision": "fp32",
+        "program": [{"op": "embed_pool", "out": "pooled",
+                     "indices": "indices", "table": "table"}],
     }
     tbl = jnp.asarray(table)
     manifest["artifacts"]["kernel_sls"]["_fn"] = lambda idx: sls(tbl, idx)

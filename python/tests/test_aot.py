@@ -75,6 +75,68 @@ def test_cv_weights_cover_tiny_cnn_params():
     assert logits.shape == (2, cfg.classes)
 
 
+KNOWN_OPS = {"fc", "conv2d", "embed_pool", "concat", "unary", "binary",
+             "flatten"}
+
+
+def _check_program(prog, weight_names, input_names, output_names):
+    """Structural contract of a native-backend op program: every op is
+    known, every weight reference exists in the DCIW file, every data
+    edge references an input or an earlier op's output, and every
+    manifest output is produced."""
+    defined = set(input_names)
+    for op in prog:
+        assert op["op"] in KNOWN_OPS, op
+        if "w" in op:
+            assert op["w"] in weight_names, op
+        if "table" in op:
+            assert op["table"] in weight_names, op
+        if op["op"] in ("fc", "conv2d") and "b" in op:
+            assert op["b"] in weight_names, op
+        srcs = []
+        if "in" in op:
+            srcs += op["in"] if isinstance(op["in"], list) else [op["in"]]
+        if "indices" in op:
+            srcs.append(op["indices"])
+        if op["op"] == "binary":
+            srcs += [op["a"], op["b"]]
+        for s in srcs:
+            assert s in defined, (op, s)
+        defined.add(op["out"])
+    for out in output_names:
+        assert out in defined, out
+
+
+def test_recsys_program_contract():
+    cfg = M.RecsysConfig(dense_dim=4, emb_dim=4, n_tables=2, rows_per_table=10,
+                         pool=2, bottom_mlp=(4,), top_mlp=(4, 1))
+    names = {n for n, _ in M.init_recsys_weights(cfg)}
+    _check_program(aot.recsys_program(cfg), names,
+                   ["dense", "indices"], ["prob"])
+
+
+def test_gru_program_contract():
+    names = {n for n, _ in M.init_gru_weights(M.GruConfig())}
+    _check_program(aot.gru_program(), names, ["x", "h"],
+                   ["logits", "h_new"])
+
+
+def test_cv_program_contract():
+    cfg = M.TinyCnnConfig()
+    names = set(M.init_tiny_cnn(cfg).keys())
+    _check_program(aot.cv_program(cfg), names, ["image"], ["logits"])
+
+
+def test_same_pad_matches_xla_same():
+    # stride-2 3x3 on 16 -> out 8, one pad element on the high side
+    assert aot._same_pad(16, 3, 2) == [0, 1]
+    assert aot._same_pad(8, 3, 2) == [0, 1]
+    # stride-1 3x3 pads symmetrically
+    assert aot._same_pad(8, 3, 1) == [1, 1]
+    # kernel 1 never pads
+    assert aot._same_pad(7, 1, 2) == [0, 0]
+
+
 needs_artifacts = pytest.mark.skipif(
     not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
     reason="run `make artifacts` first")

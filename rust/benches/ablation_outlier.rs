@@ -1,48 +1,68 @@
 //! Ablation (DESIGN.md): the outlier threshold of the i8-acc16 path.
 //! Fewer main-path bits -> denser outlier matrix -> slower sparse pass;
 //! the paper's 7-bit choice keeps density ~0.1% for trained weights.
+//!
+//! Shapes come from `gemm::fig6_shapes()` (compute-bound subset — the
+//! regime where the acc16 path matters) and the GEMMs dispatch through
+//! `runtime::FcLayer` — the serving backend's kernel-dispatch unit — so
+//! the ablation measures the path production traffic takes.
 
-use dcinfer::gemm::i8acc16::{gemm_i8_acc16, PackedBI8Acc16};
-use dcinfer::gemm::OutputPipeline;
+use dcinfer::gemm::{fig6_intensity, fig6_shapes, i8acc16::PackedBI8Acc16};
+use dcinfer::quant::QParams;
+use dcinfer::runtime::FcLayer;
 use dcinfer::util::bench::{bench_cfg, keep, Table};
 use dcinfer::util::rng::Pcg32;
 
 fn main() {
     println!("== ablation: outlier-aware quantization main-path bit width ==\n");
     let mut rng = Pcg32::seeded(5);
-    let (m, n, k) = (64usize, 512usize, 512usize);
-    // Gaussian weights quantized symmetric (as trained weights would be)
-    let b_q: Vec<i8> =
-        (0..n * k).map(|_| rng.normal_f32(0.0, 24.0).round().clamp(-127.0, 127.0) as i8).collect();
-    let a_q: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
-    let mut c = vec![0f32; m * n];
+    // the two compute-bound Fig-6 shapes bracketing the serving regime
+    let shapes: Vec<(usize, usize, usize)> = fig6_shapes()
+        .into_iter()
+        .filter(|&(m, n, k)| fig6_intensity(m, n, k) >= 60.0 && n == 512 && k == 512)
+        .take(2)
+        .collect();
+    assert!(!shapes.is_empty(), "fig6_shapes lost its compute-bound 512x512 entries");
 
-    let mut table =
-        Table::new(&["main bits", "outlier density", "GEMM time (us)", "vs 7-bit"]);
-    let mut t7 = 0f64;
-    for bits in [8u32, 7, 6, 5, 4] {
-        let packed = PackedBI8Acc16::pack_bits(&b_q, n, k, bits);
-        let pipe = OutputPipeline::per_tensor(n, 0, 1e-4, packed.rowsum.clone(), true);
-        let meas = bench_cfg("acc16", 150, 8, &mut || {
-            gemm_i8_acc16(&a_q, m, &packed, &pipe, &mut c);
-            keep(c[0]);
-        });
-        if bits == 7 {
-            t7 = meas.median_ns;
+    for (m, n, k) in shapes {
+        println!("-- shape M={m} N={n} K={k} (intensity {:.0}) --", fig6_intensity(m, n, k));
+        // Gaussian weights quantized symmetric (as trained weights would
+        // be); activations span the full int8 range exactly (scale 1).
+        let b_q: Vec<i8> = (0..n * k)
+            .map(|_| rng.normal_f32(0.0, 24.0).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        let a_f: Vec<f32> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as f32).collect();
+        let x_qp = QParams::from_range(-127.0, 127.0, 8, true);
+        let mut c = vec![0f32; m * n];
+
+        let mut table =
+            Table::new(&["main bits", "outlier density", "GEMM time (us)", "vs 7-bit"]);
+        let mut t7 = 0f64;
+        for bits in [8u32, 7, 6, 5, 4] {
+            let layer =
+                FcLayer::i8acc16_from_quantized(&b_q, n, k, bits, x_qp, 1e-4, None, true);
+            let meas = bench_cfg("acc16", 150, 8, &mut || {
+                layer.forward(&a_f, m, &mut c);
+                keep(c[0]);
+            });
+            if bits == 7 {
+                t7 = meas.median_ns;
+            }
+            table.row(&[
+                bits.to_string(),
+                format!("{:.4}%", layer.outlier_density().unwrap() * 100.0),
+                format!("{:.1}", meas.median_ns / 1e3),
+                if t7 > 0.0 { format!("{:.2}x", meas.median_ns / t7) } else { "-".into() },
+            ]);
         }
-        table.row(&[
-            bits.to_string(),
-            format!("{:.4}%", packed.outliers.density() * 100.0),
-            format!("{:.1}", meas.median_ns / 1e3),
-            if t7 > 0.0 { format!("{:.2}x", meas.median_ns / t7) } else { "-".into() },
-        ]);
-    }
-    table.print();
+        table.print();
 
-    // density must rise monotonically as bits shrink
-    let d7 = PackedBI8Acc16::pack_bits(&b_q, n, k, 7).outliers.density();
-    let d4 = PackedBI8Acc16::pack_bits(&b_q, n, k, 4).outliers.density();
-    assert!(d4 > d7 * 5.0, "density d4 {d4} vs d7 {d7}");
-    assert!(d7 < 0.02, "7-bit outliers stay sparse: {d7}");
-    println!("\n(7-bit main path keeps outliers <2% for Gaussian weights — the paper's design point)");
+        // density must rise monotonically as bits shrink
+        let d7 = PackedBI8Acc16::pack_bits(&b_q, n, k, 7).outliers.density();
+        let d4 = PackedBI8Acc16::pack_bits(&b_q, n, k, 4).outliers.density();
+        assert!(d4 > d7 * 5.0, "density d4 {d4} vs d7 {d7}");
+        assert!(d7 < 0.02, "7-bit outliers stay sparse: {d7}");
+        println!();
+    }
+    println!("(7-bit main path keeps outliers <2% for Gaussian weights — the paper's design point)");
 }

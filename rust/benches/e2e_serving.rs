@@ -1,7 +1,9 @@
 //! End-to-end serving bench: the serving frontend (per-model dynamic
-//! batcher + PJRT executor pool) under increasing offered load — the
+//! batcher + executor pool) under increasing offered load — the
 //! latency/throughput table the E2E experiment records in
-//! EXPERIMENTS.md.
+//! EXPERIMENTS.md — followed by a backend/precision parity sweep that
+//! serves the same load through every available `BackendSpec` and
+//! emits `BENCH_backend_parity.json` with per-precision p50/p99.
 //!
 //! Requires `make artifacts` (prints a skip message otherwise).
 
@@ -11,7 +13,7 @@ use std::time::Instant;
 
 use dcinfer::coordinator::{FrontendConfig, ServingFrontend};
 use dcinfer::models::RecSysService;
-use dcinfer::runtime::Manifest;
+use dcinfer::runtime::{BackendSpec, Manifest, Precision};
 use dcinfer::util::bench::Table;
 use dcinfer::util::rng::Pcg32;
 
@@ -63,6 +65,8 @@ fn main() {
     }
     table.print();
     println!("\n(batches grow with offered load — the §4 dis-aggregation efficiency story)");
+
+    backend_parity_sweep(&manifest, &service);
 }
 
 fn warmup(frontend: &ServingFrontend, service: &RecSysService) {
@@ -76,4 +80,81 @@ fn warmup(frontend: &ServingFrontend, service: &RecSysService) {
             let _ = rx.recv();
         }
     }
+}
+
+/// Serve an identical load through every available backend/precision
+/// and record per-config latency — the one-binary A/B the `ExecBackend`
+/// redesign exists for. Emits `BENCH_backend_parity.json`.
+fn backend_parity_sweep(manifest: &Manifest, service: &RecSysService) {
+    let mut specs: Vec<BackendSpec> = Vec::new();
+    #[cfg(feature = "pjrt")]
+    specs.push(BackendSpec::Pjrt);
+    let native_ok = manifest
+        .variants_for_prefix(RecSysService::PREFIX)
+        .first()
+        .map(|(_, name)| manifest.artifact(name).map(|a| a.has_native_program()).unwrap_or(false))
+        .unwrap_or(false);
+    if native_ok {
+        for p in Precision::all() {
+            specs.push(BackendSpec::Native { precision: p });
+        }
+    } else {
+        println!("\n(artifacts carry no native op program; rebuild with `make artifacts` to sweep native precisions)");
+    }
+
+    println!("\n== backend/precision parity: same load, every execution path ==\n");
+    let mut table = Table::new(&["backend", "served", "p50 us", "p99 us", "exec p50 us"]);
+    let mut json_rows = Vec::new();
+    for spec in specs {
+        let frontend = ServingFrontend::start(
+            FrontendConfig { executors: 1, backend: spec, ..Default::default() },
+            vec![Arc::new(service.clone())],
+        )
+        .expect("frontend start");
+        warmup(&frontend, service);
+        let mut rng = Pcg32::seeded(29);
+        let n = 300u64;
+        let receivers: Vec<_> = (0..n)
+            .map(|i| {
+                let mut req = service.synth_request(i, &mut rng, 100.0);
+                req.arrival = Instant::now();
+                frontend.submit(req).unwrap()
+            })
+            .collect();
+        for rx in receivers {
+            let resp = rx.recv().expect("response");
+            assert!(resp.is_ok(), "{} failed: {:?}", spec.label(), resp.outcome);
+            assert_eq!(resp.backend, spec.label(), "response attribution");
+        }
+        let snap = frontend.metrics(RecSysService::MODEL_ID).unwrap().snapshot();
+        assert!(
+            snap.by_backend.iter().any(|(l, _, _)| l == &spec.label()),
+            "metrics never attributed batches to {}",
+            spec.label()
+        );
+        table.row(&[
+            spec.label(),
+            snap.served.to_string(),
+            format!("{:.0}", snap.total_p50_us),
+            format!("{:.0}", snap.total_p99_us),
+            format!("{:.0}", snap.exec_p50_us),
+        ]);
+        json_rows.push(format!(
+            "    {{\"backend\": \"{}\", \"served\": {}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"exec_p50_us\": {:.1}}}",
+            spec.label(),
+            snap.served,
+            snap.total_p50_us,
+            snap.total_p99_us,
+            snap.exec_p50_us
+        ));
+        frontend.shutdown();
+    }
+    table.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"backend_parity\",\n  \"requests_per_config\": 300,\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_backend_parity.json", &json).expect("write BENCH_backend_parity.json");
+    println!("\nwrote BENCH_backend_parity.json ({} configs)", json_rows.len());
 }

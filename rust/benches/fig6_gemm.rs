@@ -3,21 +3,29 @@
 //! with outliers (Fig 6b), compared against the packed fp32 baseline
 //! (the MKL stand-in).
 //!
+//! GEMMs dispatch through `runtime::FcLayer` — the same packed-kernel
+//! dispatch unit the native serving backend executes — so a kernel
+//! regression here is a serving regression. The int8 columns therefore
+//! include the per-call activation quantization the serving path pays.
+//!
+//! `-- --smoke` runs one quick iteration per cell (CI kernel smoke).
+//!
 //! The paper's shape to reproduce: in the low-intensity (bandwidth-
 //! bound) regime fp16 approaches 2x and i8-acc32 approaches 4x over
 //! fp32 (traffic ratios); in the high-intensity (compute-bound) regime
 //! i8-acc16 sustains ~2x.
 
-use dcinfer::gemm::{
-    fig6_intensity, fig6_shapes, fp16::gemm_f16, fp32::gemm_f32, i8acc16::gemm_i8_acc16,
-    i8acc32::gemm_i8_acc32, OutputPipeline, PackedBF16, PackedBF32, PackedBI8, PackedBI8Acc16,
-};
+use dcinfer::gemm::{fig6_intensity, fig6_shapes};
+use dcinfer::quant::QParams;
+use dcinfer::runtime::{FcLayer, Precision};
 use dcinfer::util::bench::{bench_cfg, keep, Table};
 use dcinfer::util::rng::Pcg32;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (budget, min_samples) = if smoke { (1, 1) } else { (120, 8) };
     println!("== Fig 6: reduced-precision GEMM vs fp32 baseline ==");
-    println!("(single thread; B pre-packed; output pipeline fused)\n");
+    println!("(single thread; B pre-packed via FcLayer, output pipeline fused)\n");
     let mut rng = Pcg32::seeded(1);
     let mut table = Table::new(&[
         "M", "N", "K", "intensity", "fp32 Gop/s", "fp16 Gop/s", "i8acc32 Gop/s",
@@ -27,55 +35,54 @@ fn main() {
     for (m, n, k) in fig6_shapes() {
         let a_f: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let b_f: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 0.1)).collect();
-        let a_q: Vec<i8> = a_f.iter().map(|&v| (v * 40.0).clamp(-127.0, 127.0) as i8).collect();
-        let b_q: Vec<i8> = b_f.iter().map(|&v| (v * 400.0).clamp(-127.0, 127.0) as i8).collect();
+        let x_qp = act_qparams(&a_f);
 
-        let p32 = PackedBF32::pack(&b_f, n, k);
-        let p16 = PackedBF16::pack(&b_f, n, k);
-        let pi8 = PackedBI8::pack(&b_q, n, k);
-        let pa16 = PackedBI8Acc16::pack(&b_q, n, k);
-        let pipe_f = OutputPipeline::identity(n, true);
-        let pipe_q = OutputPipeline::per_tensor(n, 3, 1e-4, pi8.rowsum.clone(), true);
-        let pipe_q16 = OutputPipeline::per_tensor(n, 3, 1e-4, pa16.rowsum.clone(), true);
+        let layers: Vec<FcLayer> = Precision::all()
+            .iter()
+            .map(|&p| FcLayer::from_f32(p, &b_f, n, k, None, true, x_qp))
+            .collect();
         let mut c = vec![0f32; m * n];
 
         let ops = 2.0 * m as f64 * n as f64 * k as f64;
-        let budget = 120;
-        let t_f32 = bench_cfg("fp32", budget, 8, &mut || {
-            gemm_f32(&a_f, m, &p32, &pipe_f, &mut c);
-            keep(c[0]);
-        });
-        let t_f16 = bench_cfg("fp16", budget, 8, &mut || {
-            gemm_f16(&a_f, m, &p16, &pipe_f, &mut c);
-            keep(c[0]);
-        });
-        let t_i32 = bench_cfg("i8acc32", budget, 8, &mut || {
-            gemm_i8_acc32(&a_q, m, &pi8, &pipe_q, &mut c);
-            keep(c[0]);
-        });
-        let t_i16 = bench_cfg("i8acc16", budget, 8, &mut || {
-            gemm_i8_acc16(&a_q, m, &pa16, &pipe_q16, &mut c);
-            keep(c[0]);
-        });
+        let t: Vec<_> = layers
+            .iter()
+            .map(|l| {
+                bench_cfg(l.precision().as_str(), budget, min_samples, &mut || {
+                    l.forward(&a_f, m, &mut c);
+                    keep(c[0]);
+                })
+            })
+            .collect();
 
         table.row(&[
             m.to_string(),
             n.to_string(),
             k.to_string(),
             format!("{:.1}", fig6_intensity(m, n, k)),
-            format!("{:.2}", t_f32.gops(ops)),
-            format!("{:.2}", t_f16.gops(ops)),
-            format!("{:.2}", t_i32.gops(ops)),
-            format!("{:.2}", t_i16.gops(ops)),
-            format!("{:.2}", t_f32.median_ns / t_f16.median_ns),
-            format!("{:.2}", t_f32.median_ns / t_i32.median_ns),
-            format!("{:.2}", t_f32.median_ns / t_i16.median_ns),
+            format!("{:.2}", t[0].gops(ops)),
+            format!("{:.2}", t[1].gops(ops)),
+            format!("{:.2}", t[2].gops(ops)),
+            format!("{:.2}", t[3].gops(ops)),
+            format!("{:.2}", t[0].median_ns / t[1].median_ns),
+            format!("{:.2}", t[0].median_ns / t[2].median_ns),
+            format!("{:.2}", t[0].median_ns / t[3].median_ns),
         ]);
     }
     table.print();
     println!("\n(x columns are speedup over the fp32 baseline; >1 means faster)");
 
+    if smoke {
+        println!("\nsmoke mode: skipping the cold-weights (DRAM-streaming) table");
+        return;
+    }
     cold_weights_table(&mut rng);
+}
+
+/// Asymmetric 8-bit activation qparams over the sample's actual range
+/// (what calibration would produce for this input distribution).
+fn act_qparams(a: &[f32]) -> QParams {
+    let (lo, hi) = a.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+    QParams::from_range(lo, hi, 8, false)
 }
 
 /// The production serving regime of Fig 6a's low-intensity end: each
@@ -93,35 +100,28 @@ fn cold_weights_table(rng: &mut Pcg32) {
     for &(m, n, k) in &[(1usize, 1024usize, 1024usize), (4, 1024, 1024), (16, 1024, 1024)] {
         let copies = 96; // 96 x 4 MB fp32 panels >> LLC
         let a_f: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        let a_q: Vec<i8> = a_f.iter().map(|&v| (v * 40.0).clamp(-127.0, 127.0) as i8).collect();
         let b_f: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 0.1)).collect();
-        let b_q: Vec<i8> = b_f.iter().map(|&v| (v * 400.0).clamp(-127.0, 127.0) as i8).collect();
-        let p32: Vec<PackedBF32> = (0..copies).map(|_| PackedBF32::pack(&b_f, n, k)).collect();
-        let p16: Vec<PackedBF16> = (0..copies).map(|_| PackedBF16::pack(&b_f, n, k)).collect();
-        let pi8: Vec<PackedBI8> = (0..copies).map(|_| PackedBI8::pack(&b_q, n, k)).collect();
-        let pipe_f = OutputPipeline::identity(n, true);
-        let pipe_q = OutputPipeline::per_tensor(n, 3, 1e-4, pi8[0].rowsum.clone(), true);
+        let x_qp = act_qparams(&a_f);
+        let mk = |p: Precision| -> Vec<FcLayer> {
+            (0..copies).map(|_| FcLayer::from_f32(p, &b_f, n, k, None, true, x_qp)).collect()
+        };
+        let l32 = mk(Precision::Fp32);
+        let l16 = mk(Precision::Fp16);
+        let li8 = mk(Precision::I8Acc32);
         let mut c = vec![0f32; m * n];
         let ops = 2.0 * m as f64 * n as f64 * k as f64;
 
-        let mut i = 0usize;
-        let t_f32 = bench_cfg("fp32-cold", 400, 8, &mut || {
-            gemm_f32(&a_f, m, &p32[i % copies], &pipe_f, &mut c);
-            i += 1;
-            keep(c[0]);
-        });
-        let mut i = 0usize;
-        let t_f16 = bench_cfg("fp16-cold", 400, 8, &mut || {
-            gemm_f16(&a_f, m, &p16[i % copies], &pipe_f, &mut c);
-            i += 1;
-            keep(c[0]);
-        });
-        let mut i = 0usize;
-        let t_i8 = bench_cfg("i8-cold", 400, 8, &mut || {
-            gemm_i8_acc32(&a_q, m, &pi8[i % copies], &pipe_q, &mut c);
-            i += 1;
-            keep(c[0]);
-        });
+        let mut run = |name: &str, layers: &[FcLayer]| {
+            let mut i = 0usize;
+            bench_cfg(name, 400, 8, &mut || {
+                layers[i % copies].forward(&a_f, m, &mut c);
+                i += 1;
+                keep(c[0]);
+            })
+        };
+        let t_f32 = run("fp32-cold", &l32);
+        let t_f16 = run("fp16-cold", &l16);
+        let t_i8 = run("i8-cold", &li8);
         if m == 1 {
             m1_speedups = Some((
                 t_f32.median_ns / t_f16.median_ns,

@@ -3,11 +3,14 @@
 //! One frontend serves many model families concurrently (§2's three
 //! workload classes on one dis-aggregated tier): each registered
 //! [`ModelService`] gets its own submission lane and deadline-aware
-//! [`DynamicBatcher`] thread, all lanes share one PJRT [`ExecutorPool`]
-//! and [`Router`]. Requests are dispatched by their `model` field;
-//! batch failures are delivered to every submitter as an error
-//! response; shutdown drains queues and waits for in-flight batches
-//! before tearing down the pool.
+//! [`DynamicBatcher`] thread. Lanes resolve to an execution backend
+//! ([`BackendSpec`]: PJRT, or the native FBGEMM path at a chosen
+//! precision) and all lanes on the same backend share one
+//! [`ExecutorPool`] and [`Router`] — which is what lets one binary A/B
+//! fp32 vs int8 serving on live mixed-model traffic. Requests are
+//! dispatched by their `model` field; batch failures are delivered to
+//! every submitter as an error response; shutdown drains queues and
+//! waits for in-flight batches before tearing down the pools.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -18,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{ExecutorPool, Manifest};
+use crate::runtime::{BackendSpec, ExecutorPool, Manifest};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::metrics::{MetricsSnapshot, ServeMetrics};
@@ -31,10 +34,15 @@ use super::service::ModelService;
 #[derive(Debug, Clone)]
 pub struct FrontendConfig {
     pub artifacts_dir: PathBuf,
+    /// executors spawned per distinct backend spec
     pub executors: usize,
     /// flush a lane when its oldest request has waited this long (us)
     pub max_wait_us: f64,
     pub route: RoutePolicy,
+    /// default execution backend for every registered service
+    pub backend: BackendSpec,
+    /// per-model backend overrides: `(model_id, spec)` — the A/B knob
+    pub model_backends: Vec<(String, BackendSpec)>,
 }
 
 impl Default for FrontendConfig {
@@ -44,6 +52,8 @@ impl Default for FrontendConfig {
             executors: 2,
             max_wait_us: 2_000.0,
             route: RoutePolicy::LeastLoaded,
+            backend: BackendSpec::default(),
+            model_backends: Vec::new(),
         }
     }
 }
@@ -53,7 +63,22 @@ impl FrontendConfig {
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.executors > 0, "executors must be >= 1");
         anyhow::ensure!(self.max_wait_us >= 0.0, "max_wait_us must be non-negative");
+        for (i, (model, _)) in self.model_backends.iter().enumerate() {
+            anyhow::ensure!(
+                !self.model_backends[..i].iter().any(|(m, _)| m == model),
+                "duplicate backend override for model {model}"
+            );
+        }
         Ok(())
+    }
+
+    /// The backend a given model resolves to.
+    pub fn backend_for(&self, model: &str) -> BackendSpec {
+        self.model_backends
+            .iter()
+            .find(|(m, _)| m == model)
+            .map(|(_, s)| *s)
+            .unwrap_or(self.backend)
     }
 }
 
@@ -99,6 +124,7 @@ struct Lane {
     tx: Sender<Submission>,
     metrics: Arc<ServeMetrics>,
     service: Arc<dyn ModelService>,
+    backend: BackendSpec,
     handle: JoinHandle<()>,
 }
 
@@ -106,12 +132,12 @@ struct Lane {
 pub struct ServingFrontend {
     lanes: BTreeMap<String, Lane>,
     inflight: Arc<InFlight>,
-    executor_pool: Option<Arc<ExecutorPool>>,
+    executor_pools: Vec<Arc<ExecutorPool>>,
 }
 
 impl ServingFrontend {
-    /// Load every service's artifact family, spawn the shared executor
-    /// pool and one batcher lane per model.
+    /// Load every service's artifact family, spawn one shared executor
+    /// pool per distinct backend spec and one batcher lane per model.
     pub fn start(
         cfg: FrontendConfig,
         services: Vec<Arc<dyn ModelService>>,
@@ -121,8 +147,8 @@ impl ServingFrontend {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
 
         // per-service batch variants, discovered by artifact prefix
-        let mut lane_variants: Vec<(Arc<dyn ModelService>, Vec<(usize, String)>)> = Vec::new();
-        let mut artifact_names: Vec<String> = Vec::new();
+        let mut lane_variants: Vec<(Arc<dyn ModelService>, Vec<(usize, String)>, BackendSpec)> =
+            Vec::new();
         for svc in services {
             let variants = manifest.variants_for_prefix(svc.artifact_prefix());
             anyhow::ensure!(
@@ -132,25 +158,55 @@ impl ServingFrontend {
                 svc.model_id()
             );
             anyhow::ensure!(
-                !lane_variants.iter().any(|(s, _)| s.model_id() == svc.model_id()),
+                !lane_variants.iter().any(|(s, _, _)| s.model_id() == svc.model_id()),
                 "duplicate service for model {}",
                 svc.model_id()
             );
-            artifact_names.extend(variants.iter().map(|(_, n)| n.clone()));
-            lane_variants.push((svc, variants));
+            let spec = cfg.backend_for(svc.model_id());
+            lane_variants.push((svc, variants, spec));
         }
-        artifact_names.sort();
-        artifact_names.dedup();
+        // a typo'd override would otherwise silently no-op and the A/B
+        // experiment would serve both arms on the default backend
+        for (model, _) in &cfg.model_backends {
+            anyhow::ensure!(
+                lane_variants.iter().any(|(s, _, _)| s.model_id() == model.as_str()),
+                "backend override names unregistered model {model}"
+            );
+        }
 
-        // every executor loads the union of all families, so any lane
-        // can dispatch to any device (the pooling half of §4)
-        let pool =
-            Arc::new(ExecutorPool::new(cfg.executors, cfg.artifacts_dir.clone(), artifact_names)?);
-        let router = Arc::new(Router::new(cfg.executors, cfg.route)?);
+        // group lanes by backend spec: every executor in a group loads
+        // the union of its lanes' families, so any of the group's lanes
+        // can dispatch to any of its devices (the pooling half of §4)
+        let mut groups: Vec<(BackendSpec, Vec<String>)> = Vec::new();
+        for (_, variants, spec) in &lane_variants {
+            let names: Vec<String> = variants.iter().map(|(_, n)| n.clone()).collect();
+            match groups.iter_mut().find(|(s, _)| s == spec) {
+                Some((_, all)) => all.extend(names),
+                None => groups.push((*spec, names)),
+            }
+        }
+        let mut pools: Vec<(BackendSpec, Arc<ExecutorPool>, Arc<Router>)> = Vec::new();
+        for (spec, mut names) in groups {
+            names.sort();
+            names.dedup();
+            let pool = Arc::new(ExecutorPool::new(
+                cfg.executors,
+                spec,
+                cfg.artifacts_dir.clone(),
+                names,
+            )?);
+            let router = Arc::new(Router::new(cfg.executors, cfg.route)?);
+            pools.push((spec, pool, router));
+        }
+
         let inflight = Arc::new(InFlight::default());
-
         let mut lanes = BTreeMap::new();
-        for (svc, variants) in lane_variants {
+        for (svc, variants, spec) in lane_variants {
+            let (pool, router) = pools
+                .iter()
+                .find(|(s, _, _)| *s == spec)
+                .map(|(_, p, r)| (p.clone(), r.clone()))
+                .expect("every lane spec has a pool");
             let metrics = Arc::new(ServeMetrics::new());
             let (tx, rx) = channel::<Submission>();
             let policy = BatchPolicy {
@@ -162,8 +218,9 @@ impl ServingFrontend {
                 let lane = LaneWorker {
                     service: svc.clone(),
                     variants,
-                    pool: pool.clone(),
-                    router: router.clone(),
+                    backend_label: spec.label(),
+                    pool,
+                    router,
                     metrics: metrics.clone(),
                     inflight: inflight.clone(),
                 };
@@ -172,11 +229,17 @@ impl ServingFrontend {
                     .spawn(move || lane.run(rx, policy))
                     .context("spawning lane batcher")?
             };
-            lanes
-                .insert(svc.model_id().to_string(), Lane { tx, metrics, service: svc, handle });
+            lanes.insert(
+                svc.model_id().to_string(),
+                Lane { tx, metrics, service: svc, backend: spec, handle },
+            );
         }
 
-        Ok(ServingFrontend { lanes, inflight, executor_pool: Some(pool) })
+        Ok(ServingFrontend {
+            lanes,
+            inflight,
+            executor_pools: pools.into_iter().map(|(_, p, _)| p).collect(),
+        })
     }
 
     /// Registered model ids, in routing-table order.
@@ -187,6 +250,11 @@ impl ServingFrontend {
     /// The service registered for `model`.
     pub fn service(&self, model: &str) -> Option<&Arc<dyn ModelService>> {
         self.lanes.get(model).map(|l| &l.service)
+    }
+
+    /// The backend spec serving `model`.
+    pub fn backend(&self, model: &str) -> Option<BackendSpec> {
+        self.lanes.get(model).map(|l| l.backend)
     }
 
     /// Per-model metrics sink.
@@ -218,7 +286,7 @@ impl ServingFrontend {
     }
 
     /// Stop every lane (draining queued requests), wait for in-flight
-    /// batches, then tear down the executor pool.
+    /// batches, then tear down the executor pools.
     pub fn shutdown(mut self) {
         // disconnect every lane first (drop tx), then join: lanes drain
         // their queues concurrently instead of one after another
@@ -236,7 +304,7 @@ impl ServingFrontend {
         if !self.inflight.wait_idle(Duration::from_secs(30)) {
             eprintln!("frontend shutdown: in-flight batches did not drain in 30s");
         }
-        if let Some(pool) = self.executor_pool.take() {
+        for pool in std::mem::take(&mut self.executor_pools) {
             match Arc::try_unwrap(pool) {
                 Ok(pool) => pool.shutdown(),
                 Err(_) => eprintln!("frontend shutdown: executor pool still referenced, leaking"),
@@ -249,6 +317,7 @@ impl ServingFrontend {
 struct LaneWorker {
     service: Arc<dyn ModelService>,
     variants: Vec<(usize, String)>,
+    backend_label: String,
     pool: Arc<ExecutorPool>,
     router: Arc<Router>,
     metrics: Arc<ServeMetrics>,
@@ -318,16 +387,20 @@ impl LaneWorker {
         let router = self.router.clone();
         let metrics = self.metrics.clone();
         let inflight = self.inflight.clone();
+        let fallback_label = self.backend_label.clone();
         inflight.begin();
         let formed_at = Instant::now();
         std::thread::spawn(move || {
             let result = executor.run(&name, inputs);
             router.complete(exec_id, variant);
             let outcome = result.and_then(|resp| {
-                service.scatter(&resp.outputs, n).map(|rows| (rows, resp.exec_us))
+                service
+                    .scatter(&resp.outputs, n)
+                    .map(|rows| (rows, resp.exec_us, resp.backend))
             });
             match outcome {
-                Ok((rows, exec_us)) => {
+                Ok((rows, exec_us, backend)) => {
+                    metrics.record_backend(&backend, n);
                     for ((req, row), tx) in
                         requests.iter().zip(rows.into_iter()).zip(responders.into_iter())
                     {
@@ -341,6 +414,7 @@ impl LaneWorker {
                             exec_us,
                             batch_size: n,
                             variant: name.clone(),
+                            backend: backend.clone(),
                         });
                     }
                 }
@@ -357,6 +431,7 @@ impl LaneWorker {
                             exec_us: 0.0,
                             batch_size: n,
                             variant: name.clone(),
+                            backend: fallback_label.clone(),
                         });
                     }
                 }
@@ -384,6 +459,7 @@ impl LaneWorker {
                 exec_us: 0.0,
                 batch_size: requests.len(),
                 variant: variant_name.to_string(),
+                backend: self.backend_label.clone(),
             });
         }
     }
@@ -392,6 +468,7 @@ impl LaneWorker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::Precision;
 
     #[test]
     fn config_validation_rejects_zero_executors() {
@@ -404,6 +481,25 @@ mod tests {
     fn config_validation_rejects_negative_wait() {
         let cfg = FrontendConfig { max_wait_us: -1.0, ..Default::default() };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn config_validation_rejects_duplicate_overrides() {
+        let spec = BackendSpec::Native { precision: Precision::Fp32 };
+        let cfg = FrontendConfig {
+            model_backends: vec![("m".into(), spec), ("m".into(), spec)],
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn backend_overrides_resolve_per_model() {
+        let int8 = BackendSpec::Native { precision: Precision::I8Acc16 };
+        let cfg =
+            FrontendConfig { model_backends: vec![("recsys".into(), int8)], ..Default::default() };
+        assert_eq!(cfg.backend_for("recsys"), int8);
+        assert_eq!(cfg.backend_for("cv"), cfg.backend);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! The [`crate::coordinator::ServingFrontend`] keeps one sink per
 //! registered model, so heterogeneous families are tracked separately.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -26,6 +27,8 @@ struct Inner {
     failed: u64,
     deadline_misses: u64,
     batches: u64,
+    /// `backend/precision` label -> (batches, requests) served by it
+    by_backend: BTreeMap<String, (u64, u64)>,
 }
 
 /// A snapshot for reporting.
@@ -44,6 +47,9 @@ pub struct MetricsSnapshot {
     pub total_p99_us: f64,
     pub mean_batch: f64,
     pub mean_fill: f64,
+    /// which backend/precision executed the traffic:
+    /// `(label, batches, requests)` per label seen
+    pub by_backend: Vec<(String, u64, u64)>,
 }
 
 impl Default for ServeMetrics {
@@ -74,6 +80,16 @@ impl ServeMetrics {
         self.inner.lock().unwrap().failed += n as u64;
     }
 
+    /// Attribute one successfully executed batch of `requests` requests
+    /// to the backend/precision that served it (§3.2's A/B story: the
+    /// snapshot shows exactly which numeric path carried the traffic).
+    pub fn record_backend(&self, label: &str, requests: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.by_backend.entry(label.to_string()).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += requests as u64;
+    }
+
     /// Record one executed batch.
     pub fn record_batch(&self, requests: usize, variant: usize) {
         let mut g = self.inner.lock().unwrap();
@@ -99,6 +115,11 @@ impl ServeMetrics {
             total_p99_us: g.total_us.p99(),
             mean_batch: g.batch_sizes.mean(),
             mean_fill: g.fill.mean(),
+            by_backend: g
+                .by_backend
+                .iter()
+                .map(|(k, &(b, r))| (k.clone(), b, r))
+                .collect(),
         }
     }
 }
@@ -124,6 +145,9 @@ impl MetricsSnapshot {
             self.total_p99_us
         );
         println!("throughput: {:.0} req/s", self.qps);
+        for (label, batches, requests) in &self.by_backend {
+            println!("backend {label}: {batches} batches / {requests} requests");
+        }
     }
 }
 
@@ -144,6 +168,22 @@ mod tests {
         assert_eq!(s.failed, 0);
         assert!((s.mean_fill - 0.5).abs() < 1e-12);
         assert!(s.total_p99_us >= s.total_p50_us);
+    }
+
+    #[test]
+    fn backend_attribution_accumulates() {
+        let m = ServeMetrics::new();
+        m.record_backend("native/i8acc16", 4);
+        m.record_backend("native/i8acc16", 2);
+        m.record_backend("pjrt/fp32", 1);
+        let s = m.snapshot();
+        assert_eq!(
+            s.by_backend,
+            vec![
+                ("native/i8acc16".to_string(), 2, 6),
+                ("pjrt/fp32".to_string(), 1, 1),
+            ]
+        );
     }
 
     #[test]

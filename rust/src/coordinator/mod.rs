@@ -11,8 +11,11 @@
 //!   to assemble/scatter padded batch tensors. The tier never learns a
 //!   tensor layout; implementations live in [`crate::models::serving`].
 //! - [`frontend`]: the [`ServingFrontend`]: one submission lane +
-//!   deadline-aware batcher per registered model, a shared PJRT
-//!   executor pool, per-model metrics, and error responses on failure.
+//!   deadline-aware batcher per registered model, executor pools shared
+//!   per execution backend ([`crate::runtime::BackendSpec`]: PJRT or
+//!   the native FBGEMM path at fp32/fp16/i8acc32/i8acc16, selectable
+//!   per model — the one-binary A/B knob), per-model metrics with
+//!   backend/precision attribution, and error responses on failure.
 //! - [`router`]: executor selection (round-robin / least-loaded).
 //! - [`batcher`]: deadline-aware dynamic batching that picks the AOT
 //!   batch variant (b1/b4/b16/b64) for each formed batch.

@@ -80,6 +80,8 @@ pub struct InferResponse {
     pub batch_size: usize,
     /// which artifact variant executed it
     pub variant: String,
+    /// which backend/precision executed it (e.g. `"native/i8acc16"`)
+    pub backend: String,
 }
 
 impl InferResponse {
@@ -126,6 +128,7 @@ mod tests {
             exec_us: 90.0,
             batch_size: 4,
             variant: "m_b4".into(),
+            backend: "native/fp32".into(),
         };
         assert_eq!(resp.scalar_f32(), Some(0.25));
         assert!((resp.total_us() - 100.0).abs() < 1e-12);
@@ -141,6 +144,7 @@ mod tests {
             exec_us: 0.0,
             batch_size: 0,
             variant: String::new(),
+            backend: String::new(),
         };
         assert!(!resp.is_ok());
         assert_eq!(resp.scalar_f32(), None);

@@ -9,8 +9,10 @@
 //! that dispatches heterogeneous request streams to per-model dynamic
 //! batchers, where each family (recommendation, CV, NMT) plugs in via the
 //! [`coordinator::ModelService`] trait ([`models::serving`]) — running
-//! AOT-compiled model artifacts through a PJRT
-//! [`runtime`], instrumented by the paper's fleet-wide profiling machinery
+//! AOT-compiled model artifacts through a backend-pluggable [`runtime`]
+//! (XLA/PJRT, or the pure-Rust FBGEMM-path interpreter at
+//! fp32/fp16/i8acc32/i8acc16 — [`runtime::ExecBackend`]),
+//! instrumented by the paper's fleet-wide profiling machinery
 //! ([`observers`], [`fleet`]), characterized by an analytical performance
 //! model ([`perfmodel`], Table 1 / Fig 3), and optimized by a
 //! reduced-precision linear-algebra library ([`gemm`], FBGEMM-rs, Fig 6)
@@ -18,7 +20,9 @@
 //! fusion mining ([`graph`], §3.3).
 //!
 //! Python/JAX/Pallas appear only at build time (`python/compile`), producing
-//! `artifacts/*.hlo.txt`; the request path is pure Rust.
+//! `artifacts/*.hlo.txt` plus per-artifact op programs; the request path is
+//! pure Rust, and `cargo build --no-default-features` drops the XLA
+//! dependency entirely (native backend only).
 
 pub mod coordinator;
 pub mod embedding;

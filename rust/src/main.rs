@@ -10,6 +10,7 @@
 //! dcinfer mine [--top K]        §3.3 fusion opportunities
 //! dcinfer disagg                §4 tier bandwidth
 //! dcinfer serve [--requests N] [--executors E] [--qps Q] [--models recsys,nmt,cv]
+//!               [--backend pjrt|native] [--precision fp32|fp16|i8acc32|i8acc16]
 //! ```
 
 use std::collections::BTreeMap;
@@ -261,7 +262,18 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let executors = flags.get("executors").and_then(|v| v.parse().ok()).unwrap_or(2);
     let qps: f64 = flags.get("qps").and_then(|v| v.parse().ok()).unwrap_or(2000.0);
     let models = flags.get("models").cloned().unwrap_or_else(|| "recsys".to_string());
-    println!("== serving frontend: {n} requests @ {qps} offered qps, {executors} executors, models [{models}] ==\n");
+    // `--precision` alone implies the native backend (pjrt is fp32-only)
+    let backend = match (flags.get("backend"), flags.get("precision")) {
+        (None, None) => dcinfer::runtime::BackendSpec::default(),
+        (b, p) => dcinfer::runtime::BackendSpec::from_cli(
+            b.map(|s| s.as_str()).unwrap_or("native"),
+            p.map(|s| s.as_str()).unwrap_or(""),
+        )?,
+    };
+    println!(
+        "== serving frontend: {n} requests @ {qps} offered qps, {executors} executors, models [{models}], backend {} ==\n",
+        backend.label()
+    );
 
     // build one service per requested family; each knows its artifact
     // prefix and how to synthesize production-like requests
@@ -277,8 +289,10 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
         services.push(svc);
     }
 
-    let frontend =
-        ServingFrontend::start(FrontendConfig { executors, ..Default::default() }, services)?;
+    let frontend = ServingFrontend::start(
+        FrontendConfig { executors, backend, ..Default::default() },
+        services,
+    )?;
     let lanes: Vec<Arc<dyn ModelService>> =
         frontend.models().iter().map(|m| frontend.service(m).unwrap().clone()).collect();
     let mut rng = Pcg32::seeded(42);

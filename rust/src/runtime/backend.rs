@@ -1,0 +1,280 @@
+//! The execution-backend contract: how the serving tier runs an AOT
+//! artifact without knowing *what* runs it.
+//!
+//! An [`ExecBackend`] loads a manifest artifact into a
+//! [`LoadedArtifact`] and executes it with host tensors. Two
+//! implementations ship:
+//!
+//! - [`PjrtBackend`] (cargo feature `pjrt`, default-on): wraps the XLA
+//!   [`super::engine::Engine`] — compiles HLO text, keeps weights
+//!   device-resident.
+//! - [`super::native::NativeBackend`]: a pure-Rust interpreter over the
+//!   manifest's per-artifact op program, dispatching FCs to the
+//!   [`crate::gemm`] packed-B kernels (fp32/fp16/i8acc32/i8acc16) and
+//!   pooled lookups to [`crate::embedding`] — the FBGEMM path of §3.2
+//!   brought into the serving tier.
+//!
+//! Backends are **not** `Send` (PJRT handles are raw pointers); what
+//! crosses threads is a [`BackendSpec`], and each executor thread
+//! constructs its own backend from it via [`make_backend`]. This is the
+//! same one-process-per-accelerator shape as §4's dis-aggregated tier.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::precision::Precision;
+use super::tensor::HostTensor;
+
+/// What a backend must do to serve artifacts.
+pub trait ExecBackend {
+    /// Short backend id: `"pjrt"` or `"native"`.
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform string (e.g. the PJRT platform name).
+    fn platform(&self) -> String;
+
+    /// The execution precision this backend instance runs at.
+    fn precision(&self) -> Precision;
+
+    /// Every precision this backend can be constructed with.
+    fn supported_precisions(&self) -> Vec<Precision>;
+
+    /// Load one artifact (compile / pack weights) for execution.
+    fn load(&self, manifest: &Manifest, artifact: &str) -> Result<Box<dyn LoadedArtifact>>;
+
+    /// `backend/precision` label used for metrics attribution.
+    fn label(&self) -> String {
+        format!("{}/{}", self.name(), self.precision())
+    }
+}
+
+/// A loaded artifact ready to execute.
+pub trait LoadedArtifact {
+    fn meta(&self) -> &ArtifactMeta;
+
+    /// Execute with per-request activations; outputs follow the
+    /// manifest's output metas.
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Load (compile/pack/calibrate) wall time, for registry metrics.
+    fn load_ms(&self) -> f64;
+}
+
+/// Validate host inputs against an artifact's manifest contract —
+/// shared by every backend so error messages are uniform.
+pub fn check_inputs(meta: &ArtifactMeta, inputs: &[HostTensor]) -> Result<()> {
+    if inputs.len() != meta.inputs.len() {
+        bail!("{}: expected {} inputs, got {}", meta.name, meta.inputs.len(), inputs.len());
+    }
+    for (i, (got, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+        if got.dtype != want.dtype {
+            bail!("{} input {i} ({}): dtype {:?} != {:?}", meta.name, want.name, got.dtype, want.dtype);
+        }
+        if got.shape != want.shape {
+            bail!("{} input {i} ({}): shape {:?} != {:?}", meta.name, want.name, got.shape, want.shape);
+        }
+    }
+    Ok(())
+}
+
+/// A `Send + Clone` description of which backend an executor thread
+/// should construct — the value that crosses the thread boundary in
+/// place of the non-`Send` backend itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendSpec {
+    /// The XLA/PJRT engine (fp32 artifacts as lowered).
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+    /// The pure-Rust FBGEMM-path interpreter at a chosen precision.
+    Native { precision: Precision },
+}
+
+impl Default for BackendSpec {
+    #[cfg(feature = "pjrt")]
+    fn default() -> Self {
+        BackendSpec::Pjrt
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn default() -> Self {
+        BackendSpec::Native { precision: Precision::Fp32 }
+    }
+}
+
+impl BackendSpec {
+    /// `backend/precision` label (matches [`ExecBackend::label`]).
+    pub fn label(&self) -> String {
+        match self {
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt => format!("pjrt/{}", Precision::Fp32),
+            BackendSpec::Native { precision } => format!("native/{precision}"),
+        }
+    }
+
+    /// Parse a CLI `--backend`/`--precision` pair.
+    pub fn from_cli(backend: &str, precision: &str) -> Result<BackendSpec> {
+        let precision =
+            if precision.is_empty() { Precision::Fp32 } else { Precision::from_manifest(precision)? };
+        match backend {
+            "native" => Ok(BackendSpec::Native { precision }),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => {
+                if precision != Precision::Fp32 {
+                    bail!("pjrt backend executes artifacts as lowered (fp32 only)");
+                }
+                Ok(BackendSpec::Pjrt)
+            }
+            other => {
+                #[cfg(feature = "pjrt")]
+                let hint = "expected native or pjrt";
+                #[cfg(not(feature = "pjrt"))]
+                let hint = "expected native; pjrt is compiled out";
+                bail!("unknown backend {other} ({hint})")
+            }
+        }
+    }
+}
+
+/// Construct the backend a spec describes. Called on the executor
+/// thread that will own the (non-`Send`) result.
+pub fn make_backend(spec: &BackendSpec) -> Result<Box<dyn ExecBackend>> {
+    match spec {
+        #[cfg(feature = "pjrt")]
+        BackendSpec::Pjrt => Ok(Box::new(PjrtBackend::cpu()?)),
+        BackendSpec::Native { precision } => {
+            Ok(Box::new(super::native::NativeBackend::new(*precision)))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (feature `pjrt`)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::PjrtBackend;
+
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use std::rc::Rc;
+
+    use anyhow::Result;
+
+    use crate::runtime::engine::{Engine, LoadedModel};
+    use crate::runtime::manifest::{ArtifactMeta, Manifest};
+    use crate::runtime::precision::Precision;
+    use crate::runtime::tensor::HostTensor;
+
+    use super::{ExecBackend, LoadedArtifact};
+
+    /// [`ExecBackend`] over the XLA PJRT [`Engine`]. Artifacts execute
+    /// exactly as lowered (fp32 graphs stay fp32; the baked-int8
+    /// artifacts run their baked kernels).
+    pub struct PjrtBackend {
+        engine: Rc<Engine>,
+    }
+
+    impl PjrtBackend {
+        pub fn cpu() -> Result<PjrtBackend> {
+            Ok(PjrtBackend { engine: Rc::new(Engine::cpu()?) })
+        }
+    }
+
+    impl ExecBackend for PjrtBackend {
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+
+        fn platform(&self) -> String {
+            self.engine.platform()
+        }
+
+        fn precision(&self) -> Precision {
+            Precision::Fp32
+        }
+
+        fn supported_precisions(&self) -> Vec<Precision> {
+            vec![Precision::Fp32]
+        }
+
+        fn load(&self, manifest: &Manifest, artifact: &str) -> Result<Box<dyn LoadedArtifact>> {
+            let model = self.engine.load(manifest, artifact)?;
+            Ok(Box::new(PjrtArtifact { engine: self.engine.clone(), model }))
+        }
+    }
+
+    struct PjrtArtifact {
+        engine: Rc<Engine>,
+        model: LoadedModel,
+    }
+
+    impl LoadedArtifact for PjrtArtifact {
+        fn meta(&self) -> &ArtifactMeta {
+            &self.model.meta
+        }
+
+        fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            self.model.run(&self.engine, inputs)
+        }
+
+        fn load_ms(&self) -> f64 {
+            self.model.load_ms
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::DType;
+    use crate::runtime::TensorMeta;
+
+    fn meta() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "m".into(),
+            hlo: "m.hlo.txt".into(),
+            model: None,
+            weights: None,
+            weight_params: vec![],
+            inputs: vec![TensorMeta { name: "x".into(), dtype: DType::F32, shape: vec![2, 3] }],
+            outputs: vec![],
+            batch: 2,
+            precision: Precision::Fp32,
+            program: crate::util::json::Json::Null,
+        }
+    }
+
+    #[test]
+    fn check_inputs_enforces_contract() {
+        let m = meta();
+        let ok = vec![HostTensor::from_f32(&[2, 3], &[0.0; 6])];
+        assert!(check_inputs(&m, &ok).is_ok());
+        assert!(check_inputs(&m, &[]).is_err(), "arity");
+        let bad_shape = vec![HostTensor::from_f32(&[3, 2], &[0.0; 6])];
+        assert!(check_inputs(&m, &bad_shape).is_err());
+        let bad_dtype = vec![HostTensor::from_i32(&[2, 3], &[0; 6])];
+        assert!(check_inputs(&m, &bad_dtype).is_err());
+    }
+
+    #[test]
+    fn spec_labels() {
+        let s = BackendSpec::Native { precision: Precision::I8Acc16 };
+        assert_eq!(s.label(), "native/i8acc16");
+        assert_eq!(BackendSpec::from_cli("native", "fp16").unwrap().label(), "native/fp16");
+        assert!(BackendSpec::from_cli("nope", "").is_err());
+    }
+
+    #[test]
+    #[cfg(feature = "pjrt")]
+    fn pjrt_spec_is_fp32_only() {
+        assert_eq!(BackendSpec::default(), BackendSpec::Pjrt);
+        assert_eq!(BackendSpec::Pjrt.label(), "pjrt/fp32");
+        assert!(BackendSpec::from_cli("pjrt", "i8acc32").is_err());
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn default_spec_is_native_without_pjrt() {
+        assert_eq!(BackendSpec::default(), BackendSpec::Native { precision: Precision::Fp32 });
+    }
+}

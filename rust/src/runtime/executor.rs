@@ -1,20 +1,23 @@
-//! Threaded executor: one OS thread per (virtual) device owning the
-//! non-`Send` PJRT objects; the coordinator talks to it over channels.
+//! Threaded executor: one OS thread per (virtual) device owning a
+//! non-`Send` [`ExecBackend`]; the coordinator talks to it over
+//! channels.
 //!
 //! This mirrors the disaggregated-tier shape of §4: each executor is an
-//! inference device; [`ExecutorPool`] is the tier. Requests carry only
-//! host tensors, so no unsafe `Send` is needed.
+//! inference device; [`ExecutorPool`] is the tier. The backend itself
+//! is constructed *on* the executor thread from a `Send`
+//! [`BackendSpec`], so no unsafe `Send` is needed; requests carry only
+//! host tensors.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::engine::{Engine, LoadedModel};
+use super::backend::{make_backend, BackendSpec, ExecBackend, LoadedArtifact};
 use super::manifest::Manifest;
 use super::tensor::HostTensor;
 
@@ -31,6 +34,9 @@ pub struct ExecResponse {
     pub outputs: Vec<HostTensor>,
     /// device-side wall time (upload + execute + download)
     pub exec_us: f64,
+    /// `backend/precision` label of the serving executor (metrics
+    /// attribution, e.g. `"native/i8acc16"`)
+    pub backend: String,
 }
 
 enum Msg {
@@ -43,26 +49,30 @@ enum Msg {
 pub struct Executor {
     tx: Sender<Msg>,
     pub id: usize,
+    /// `backend/precision` label of the backend this executor runs.
+    pub backend: String,
 }
 
 impl Executor {
-    /// Spawn an executor thread that loads `artifact_names` from the
-    /// manifest directory before accepting work.
+    /// Spawn an executor thread that constructs the backend `spec`
+    /// describes and loads `artifact_names` from the manifest directory
+    /// before accepting work.
     pub fn spawn(
         id: usize,
+        spec: BackendSpec,
         artifacts_dir: PathBuf,
         artifact_names: Vec<String>,
     ) -> Result<(Executor, JoinHandle<()>)> {
         let (tx, rx) = channel::<Msg>();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let (ready_tx, ready_rx) = channel::<Result<String>>();
         let handle = std::thread::Builder::new()
             .name(format!("executor-{id}"))
-            .spawn(move || executor_main(rx, ready_tx, &artifacts_dir, &artifact_names))
+            .spawn(move || executor_main(rx, ready_tx, &spec, &artifacts_dir, &artifact_names))
             .context("spawning executor thread")?;
-        ready_rx
+        let backend = ready_rx
             .recv()
             .map_err(|_| anyhow!("executor {id} died during startup"))??;
-        Ok((Executor { tx, id }, handle))
+        Ok((Executor { tx, id, backend }, handle))
     }
 
     /// Synchronous execute (blocks until the device thread responds).
@@ -90,21 +100,23 @@ impl Executor {
 
 fn executor_main(
     rx: Receiver<Msg>,
-    ready: Sender<Result<()>>,
+    ready: Sender<Result<String>>,
+    spec: &BackendSpec,
     artifacts_dir: &std::path::Path,
     artifact_names: &[String],
 ) {
-    let setup = (|| -> Result<(Engine, HashMap<String, LoadedModel>)> {
-        let engine = Engine::cpu()?;
+    let setup = (|| -> Result<(Box<dyn ExecBackend>, HashMap<String, Box<dyn LoadedArtifact>>)> {
+        let backend = make_backend(spec)?;
         let manifest = Manifest::load(artifacts_dir)?;
-        let mut models = HashMap::new();
+        let mut models: HashMap<String, Box<dyn LoadedArtifact>> = HashMap::new();
         for name in artifact_names {
-            let model = engine.load(&manifest, name)?;
-            // warm the executable: the first execution pays one-time
-            // JIT finalization / buffer allocation that would otherwise
-            // land in a request's p99
+            let model = backend.load(&manifest, name)?;
+            // warm the artifact: the first execution pays one-time JIT
+            // finalization / buffer allocation (PJRT) or page-in of the
+            // packed panels (native) that would otherwise land in a
+            // request's p99
             let zeros: Vec<HostTensor> = model
-                .meta
+                .meta()
                 .inputs
                 .iter()
                 .map(|t| HostTensor {
@@ -113,15 +125,15 @@ fn executor_main(
                     data: vec![0u8; t.byte_len()],
                 })
                 .collect();
-            let _ = model.run(&engine, &zeros)?;
+            let _ = model.run(&zeros)?;
             models.insert(name.clone(), model);
         }
-        Ok((engine, models))
+        Ok((backend, models))
     })();
 
-    let (engine, models) = match setup {
+    let (backend, models) = match setup {
         Ok(v) => {
-            let _ = ready.send(Ok(()));
+            let _ = ready.send(Ok(v.0.label()));
             v
         }
         Err(e) => {
@@ -129,6 +141,7 @@ fn executor_main(
             return;
         }
     };
+    let label = backend.label();
 
     while let Ok(msg) = rx.recv() {
         match msg {
@@ -137,9 +150,10 @@ fn executor_main(
                 let t0 = Instant::now();
                 let result = match models.get(&req.model) {
                     None => Err(anyhow!("model {} not loaded on this executor", req.model)),
-                    Some(m) => m.run(&engine, &req.inputs).map(|outputs| ExecResponse {
+                    Some(m) => m.run(&req.inputs).map(|outputs| ExecResponse {
                         outputs,
                         exec_us: t0.elapsed().as_secs_f64() * 1e6,
+                        backend: label.clone(),
                     }),
                 };
                 let _ = req.resp.send(result);
@@ -152,20 +166,28 @@ fn executor_main(
 pub struct ExecutorPool {
     executors: Vec<Executor>,
     handles: Vec<JoinHandle<()>>,
-    next: Arc<Mutex<usize>>,
+    spec: BackendSpec,
+    /// lock-free round-robin cursor (this sits on the hot dispatch path)
+    next: AtomicUsize,
 }
 
 impl ExecutorPool {
-    /// Spawn `n` executors, each loading the same artifact set.
-    pub fn new(n: usize, artifacts_dir: PathBuf, artifact_names: Vec<String>) -> Result<ExecutorPool> {
+    /// Spawn `n` executors of the backend `spec` describes, each
+    /// loading the same artifact set.
+    pub fn new(
+        n: usize,
+        spec: BackendSpec,
+        artifacts_dir: PathBuf,
+        artifact_names: Vec<String>,
+    ) -> Result<ExecutorPool> {
         let mut executors = Vec::new();
         let mut handles = Vec::new();
         for id in 0..n {
-            let (e, h) = Executor::spawn(id, artifacts_dir.clone(), artifact_names.clone())?;
+            let (e, h) = Executor::spawn(id, spec, artifacts_dir.clone(), artifact_names.clone())?;
             executors.push(e);
             handles.push(h);
         }
-        Ok(ExecutorPool { executors, handles, next: Arc::new(Mutex::new(0)) })
+        Ok(ExecutorPool { executors, handles, spec, next: AtomicUsize::new(0) })
     }
 
     pub fn len(&self) -> usize {
@@ -176,12 +198,15 @@ impl ExecutorPool {
         self.executors.is_empty()
     }
 
-    /// Round-robin executor selection.
+    /// The backend spec every executor in this pool runs.
+    pub fn spec(&self) -> BackendSpec {
+        self.spec
+    }
+
+    /// Round-robin executor selection (atomic fetch-add, no lock).
     pub fn pick(&self) -> &Executor {
-        let mut n = self.next.lock().unwrap();
-        let e = &self.executors[*n % self.executors.len()];
-        *n = n.wrapping_add(1);
-        e
+        let n = self.next.fetch_add(1, Ordering::Relaxed);
+        &self.executors[n % self.executors.len()]
     }
 
     pub fn executors(&self) -> &[Executor] {

@@ -1,4 +1,18 @@
 //! Artifact manifest (artifacts/manifest.json) parsing.
+//!
+//! Per-artifact fields beyond the parameter contract:
+//!
+//! - `precision` (optional, default `"fp32"`): the numeric variant the
+//!   artifact *contains* — e.g. `recsys_int8_b16` bakes int8 weights
+//!   into its HLO. Parsed into [`Precision`]. This is distinct from a
+//!   backend's *execution* precision: the native backend re-quantizes
+//!   fp32 weight files to any [`Precision`] at load time, so one fp32
+//!   artifact family serves all four paths.
+//! - `program` (optional): the small op program
+//!   (`fc`/`conv2d`/`embed_pool`/`concat`/`unary`/`binary`/`flatten`)
+//!   the AOT compiler emits for [`super::native::NativeBackend`]. Kept
+//!   as raw [`Json`]; the native backend parses and packs it. Artifacts
+//!   without a program are PJRT-only.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -7,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+use super::precision::Precision;
 use super::tensor::DType;
 
 /// Shape+dtype of one HLO parameter or output.
@@ -51,6 +66,17 @@ pub struct ArtifactMeta {
     pub inputs: Vec<TensorMeta>,
     pub outputs: Vec<TensorMeta>,
     pub batch: usize,
+    /// Numeric variant the artifact contains (`fp32` when unspecified).
+    pub precision: Precision,
+    /// Native-backend op program (`Json::Null` when absent).
+    pub program: Json,
+}
+
+impl ArtifactMeta {
+    /// Whether the pure-Rust backend can execute this artifact.
+    pub fn has_native_program(&self) -> bool {
+        !self.program.is_null()
+    }
 }
 
 /// The parsed manifest, rooted at the artifacts directory.
@@ -104,6 +130,12 @@ impl Manifest {
                     .map(TensorMeta::from_json)
                     .collect::<Result<Vec<_>>>()?,
                 batch: a.get("batch").as_usize().unwrap_or(1),
+                precision: match a.get("precision").as_str() {
+                    Some(s) => Precision::from_manifest(s)
+                        .with_context(|| format!("artifact {name}"))?,
+                    None => Precision::Fp32,
+                },
+                program: a.get("program").clone(),
             };
             artifacts.insert(name.clone(), meta);
         }
@@ -224,5 +256,47 @@ mod tests {
     #[test]
     fn rejects_wrong_version() {
         assert!(Manifest::parse(Path::new("."), r#"{"version": 2, "artifacts": {}}"#).is_err());
+    }
+
+    #[test]
+    fn precision_defaults_to_fp32_and_parses_variants() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        let a = m.artifact("m_b2").unwrap();
+        assert_eq!(a.precision, crate::runtime::Precision::Fp32);
+        assert!(!a.has_native_program());
+
+        let src = r#"{
+          "version": 1, "models": {},
+          "artifacts": {
+            "q": {
+              "hlo": "q.hlo.txt", "model": null, "weights": null,
+              "weight_params": [], "precision": "int8",
+              "program": [{"op": "fc", "out": "y", "in": "x", "w": "w"}],
+              "inputs": [{"name": "x", "dtype": "f32", "shape": [1, 2]}],
+              "outputs": [{"name": "y", "dtype": "f32", "shape": [1, 1]}],
+              "batch": 1
+            }
+          }
+        }"#;
+        let m = Manifest::parse(Path::new("."), src).unwrap();
+        let a = m.artifact("q").unwrap();
+        assert_eq!(a.precision, crate::runtime::Precision::I8Acc32);
+        assert!(a.has_native_program());
+        assert_eq!(a.program.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn rejects_unknown_precision() {
+        let src = r#"{
+          "version": 1, "models": {},
+          "artifacts": {
+            "q": {
+              "hlo": "q.hlo.txt", "model": null, "weights": null,
+              "weight_params": [], "precision": "fp8",
+              "inputs": [], "outputs": [], "batch": 1
+            }
+          }
+        }"#;
+        assert!(Manifest::parse(Path::new("."), src).is_err());
     }
 }

@@ -1,35 +1,56 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
-//! on the request path with weights resident on device.
+//! Serving runtime: load AOT-compiled artifacts and execute them on the
+//! request path through a pluggable [`ExecBackend`].
 //!
-//! Python/JAX runs once at build time (`make artifacts`); this module is
-//! the only place the serving tier touches XLA. The flow mirrors
-//! /opt/xla-example/load_hlo:
+//! Two backends ship:
 //!
-//! ```text
-//! PjRtClient::cpu()
-//!   -> HloModuleProto::from_text_file(artifacts/<name>.hlo.txt)
-//!   -> XlaComputation::from_proto -> client.compile
-//!   -> upload weights once (buffer_from_host_raw_bytes)
-//!   -> per request: upload activations, execute_b, download tuple
-//! ```
+//! - **PJRT** (cargo feature `pjrt`, default-on): Python/JAX runs once
+//!   at build time (`make artifacts`); [`engine`] compiles the HLO-text
+//!   artifacts and keeps weights device-resident. The flow mirrors
+//!   /opt/xla-example/load_hlo:
 //!
-//! HLO *text* is the interchange format — jax >= 0.5 emits protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids.
+//!   ```text
+//!   PjRtClient::cpu()
+//!     -> HloModuleProto::from_text_file(artifacts/<name>.hlo.txt)
+//!     -> XlaComputation::from_proto -> client.compile
+//!     -> upload weights once (buffer_from_host_raw_bytes)
+//!     -> per request: upload activations, execute_b, download tuple
+//!   ```
 //!
-//! PJRT objects hold raw pointers and are not `Send`, so [`executor`]
-//! wraps the engine in a dedicated thread per (virtual) device and the
-//! coordinator talks to it over channels — the same shape as one
+//!   HLO *text* is the interchange format — jax >= 0.5 emits protos
+//!   with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//!   text parser reassigns ids.
+//!
+//! - **Native** ([`native`], always available): a pure-Rust interpreter
+//!   over the manifest's per-artifact op program, dispatching FCs to the
+//!   [`crate::gemm`] reduced-precision kernels and pooled lookups to
+//!   [`crate::embedding`] — §3.2's FBGEMM path in the serving tier, at
+//!   any [`Precision`]. `cargo build --no-default-features` yields a
+//!   pure-Rust binary with only this backend.
+//!
+//! Backends hold raw pointers (PJRT) and are not `Send`, so
+//! [`executor`] wraps each one in a dedicated thread per (virtual)
+//! device — constructed in-thread from a `Send` [`BackendSpec`] — and
+//! the coordinator talks to it over channels, the same shape as one
 //! executor process per accelerator in a disaggregated tier (§4).
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod executor;
 pub mod manifest;
+pub mod native;
+pub mod precision;
 pub mod tensor;
 pub mod weights;
 
+pub use backend::{check_inputs, make_backend, BackendSpec, ExecBackend, LoadedArtifact};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, LoadedModel};
 pub use executor::{Executor, ExecutorPool};
 pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
+pub use native::{FcLayer, NativeBackend};
+pub use precision::Precision;
 pub use tensor::{DType, HostTensor};
-pub use weights::read_weights_file;
+pub use weights::{read_weights_file, write_weights_file, NamedTensor};

@@ -1,0 +1,1247 @@
+//! Pure-Rust execution backend: interprets the small per-artifact op
+//! program the AOT compiler emits into the manifest (`"program"` field),
+//! dispatching FC/conv layers to the [`crate::gemm`] packed-B kernels
+//! with the fused [`OutputPipeline`] and pooled sparse lookups to
+//! [`crate::embedding`] — §3.2's FBGEMM path brought into the serving
+//! tier, at any of the four [`Precision`] variants.
+//!
+//! The op set covers the serving families (FC/MLP chains, embedding
+//! pooling, im2col conv, elementwise/concat glue):
+//!
+//! ```text
+//! fc         out = act(in @ W^T + b)       gemm::{fp32,fp16,i8acc32,i8acc16}
+//! conv2d     im2col + fc on patches        same kernels
+//! embed_pool SparseLengthsSum per table    embedding::{table,quantized}
+//! concat / flatten / unary / binary        elementwise glue
+//! ```
+//!
+//! At int8 precisions, weights are re-quantized per-channel at load time
+//! ([`crate::quant::qparams`]) and activation qparams come from a
+//! calibration pass over synthetic inputs run through the fp32 program
+//! ([`crate::quant::calibrate`], §3.2.2 techniques 1 & 4); embedding
+//! tables switch to the row-wise-quantized
+//! [`crate::embedding::QuantizedTable`].
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::embedding::{EmbeddingTable, LookupBatch, QuantizedTable};
+use crate::gemm::{
+    fp16::gemm_f16, fp32::gemm_f32, i8acc16::gemm_i8_acc16, i8acc32::gemm_i8_acc32,
+    OutputPipeline, PackedBF16, PackedBF32, PackedBI8, PackedBI8Acc16,
+};
+use crate::quant::qparams::quantize_per_channel;
+use crate::quant::{Calibrator, QParams};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+use super::backend::{check_inputs, ExecBackend, LoadedArtifact};
+use super::manifest::{ArtifactMeta, Manifest};
+use super::precision::Precision;
+use super::tensor::{DType, HostTensor};
+use super::weights::{read_weights_file, NamedTensor};
+
+/// How many synthetic batches the int8 calibration pass observes.
+const CALIBRATION_BATCHES: usize = 2;
+/// Grid resolution of the L2-optimal clip search (§3.2.2 technique 4).
+const CALIBRATION_GRID: usize = 32;
+
+// ---------------------------------------------------------------------------
+// FcLayer: the packed-B kernel dispatch the whole backend (and the
+// benches) route GEMMs through
+// ---------------------------------------------------------------------------
+
+/// One packed fully-connected layer at a fixed precision: weight
+/// packing, activation quantization and the fused output pipeline in a
+/// single dispatchable unit. This is the layer the interpreter executes
+/// and the kernel benches drive, so both exercise the same path.
+pub struct FcLayer {
+    pub n: usize,
+    pub k: usize,
+    precision: Precision,
+    pipe: OutputPipeline,
+    kernel: FcKernel,
+}
+
+enum FcKernel {
+    F32(PackedBF32),
+    F16(PackedBF16),
+    I8 { packed: PackedBI8, x_qp: QParams },
+    I8Acc16 { packed: PackedBI8Acc16, x_qp: QParams },
+}
+
+impl FcLayer {
+    /// Pack fp32 weights `w` (`[n x k]`, Caffe2 FC convention) for
+    /// execution at `precision`. `x_qp` is the calibrated activation
+    /// quantization (ignored by the fp paths). `relu` is fused into the
+    /// output pipeline.
+    pub fn from_f32(
+        precision: Precision,
+        w: &[f32],
+        n: usize,
+        k: usize,
+        bias: Option<&[f32]>,
+        relu: bool,
+        x_qp: QParams,
+    ) -> FcLayer {
+        assert_eq!(w.len(), n * k);
+        let bias_v = bias.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; n]);
+        if let Some(b) = bias {
+            assert_eq!(b.len(), n);
+        }
+        let (pipe, kernel) = match precision {
+            Precision::Fp32 => {
+                let mut pipe = OutputPipeline::identity(n, relu);
+                pipe.bias = bias_v;
+                (pipe, FcKernel::F32(PackedBF32::pack(w, n, k)))
+            }
+            Precision::Fp16 => {
+                let mut pipe = OutputPipeline::identity(n, relu);
+                pipe.bias = bias_v;
+                (pipe, FcKernel::F16(PackedBF16::pack(w, n, k)))
+            }
+            Precision::I8Acc32 => {
+                let (wq, wscale) = quantize_per_channel(w, n, k, 8);
+                let packed = PackedBI8::pack(&wq, n, k);
+                let pipe = OutputPipeline {
+                    x_zp: x_qp.zero_point,
+                    scale: wscale.iter().map(|s| s * x_qp.scale).collect(),
+                    b_rowsum: packed.rowsum.clone(),
+                    bias: bias_v,
+                    relu,
+                };
+                (pipe, FcKernel::I8 { packed, x_qp })
+            }
+            Precision::I8Acc16 => {
+                let (wq, wscale) = quantize_per_channel(w, n, k, 8);
+                let packed = PackedBI8Acc16::pack(&wq, n, k);
+                let pipe = OutputPipeline {
+                    x_zp: x_qp.zero_point,
+                    scale: wscale.iter().map(|s| s * x_qp.scale).collect(),
+                    b_rowsum: packed.rowsum.clone(),
+                    bias: bias_v,
+                    relu,
+                };
+                (pipe, FcKernel::I8Acc16 { packed, x_qp })
+            }
+        };
+        FcLayer { n, k, precision, pipe, kernel }
+    }
+
+    /// Build an acc16 layer from already-quantized int8 weights with a
+    /// configurable main-path bit width — the outlier-threshold ablation
+    /// knob (§3.2.1), exposed so the ablation bench drives the same
+    /// dispatch path serving does.
+    #[allow(clippy::too_many_arguments)]
+    pub fn i8acc16_from_quantized(
+        w_q: &[i8],
+        n: usize,
+        k: usize,
+        main_bits: u32,
+        x_qp: QParams,
+        w_scale: f32,
+        bias: Option<&[f32]>,
+        relu: bool,
+    ) -> FcLayer {
+        assert_eq!(w_q.len(), n * k);
+        let bias_v = bias.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; n]);
+        let packed = PackedBI8Acc16::pack_bits(w_q, n, k, main_bits);
+        let pipe = OutputPipeline {
+            x_zp: x_qp.zero_point,
+            scale: vec![w_scale * x_qp.scale; n],
+            b_rowsum: packed.rowsum.clone(),
+            bias: bias_v,
+            relu,
+        };
+        FcLayer { n, k, precision: Precision::I8Acc16, pipe, kernel: FcKernel::I8Acc16 { packed, x_qp } }
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Outlier density of the acc16 sparse residual (None on other paths).
+    pub fn outlier_density(&self) -> Option<f64> {
+        match &self.kernel {
+            FcKernel::I8Acc16 { packed, .. } => Some(packed.outliers.density()),
+            _ => None,
+        }
+    }
+
+    /// `out[M x N] = pipeline(x[M x K] * W^T)`; int8 paths quantize the
+    /// fp32 activations with the layer's calibrated qparams first.
+    pub fn forward(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), m * self.k);
+        assert_eq!(out.len(), m * self.n);
+        match &self.kernel {
+            FcKernel::F32(p) => gemm_f32(x, m, p, &self.pipe, out),
+            FcKernel::F16(p) => gemm_f16(x, m, p, &self.pipe, out),
+            FcKernel::I8 { packed, x_qp } => {
+                let xq = x_qp.quantize_slice(x);
+                gemm_i8_acc32(&xq, m, packed, &self.pipe, out);
+            }
+            FcKernel::I8Acc16 { packed, x_qp } => {
+                let xq = x_qp.quantize_slice(x);
+                gemm_i8_acc16(&xq, m, packed, &self.pipe, out);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Program spec (parsed JSON) and compiled form
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Activation {
+    Identity,
+    Relu,
+    Sigmoid,
+    Tanh,
+}
+
+impl Activation {
+    fn parse(s: &str) -> Result<Activation> {
+        Ok(match s {
+            "none" => Activation::Identity,
+            "relu" => Activation::Relu,
+            "sigmoid" => Activation::Sigmoid,
+            "tanh" => Activation::Tanh,
+            other => bail!("unknown activation {other}"),
+        })
+    }
+
+    fn relu(self) -> bool {
+        self == Activation::Relu
+    }
+
+    fn post(self) -> Option<UnaryFn> {
+        match self {
+            Activation::Sigmoid => Some(UnaryFn::Sigmoid),
+            Activation::Tanh => Some(UnaryFn::Tanh),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum UnaryFn {
+    Relu,
+    Sigmoid,
+    Tanh,
+    OneMinus,
+}
+
+impl UnaryFn {
+    fn parse(s: &str) -> Result<UnaryFn> {
+        Ok(match s {
+            "relu" => UnaryFn::Relu,
+            "sigmoid" => UnaryFn::Sigmoid,
+            "tanh" => UnaryFn::Tanh,
+            "one_minus" => UnaryFn::OneMinus,
+            other => bail!("unknown unary fn {other}"),
+        })
+    }
+
+    fn apply(self, xs: &mut [f32]) {
+        match self {
+            UnaryFn::Relu => xs.iter_mut().for_each(|v| *v = v.max(0.0)),
+            UnaryFn::Sigmoid => xs.iter_mut().for_each(|v| *v = 1.0 / (1.0 + (-*v).exp())),
+            UnaryFn::Tanh => xs.iter_mut().for_each(|v| *v = v.tanh()),
+            UnaryFn::OneMinus => xs.iter_mut().for_each(|v| *v = 1.0 - *v),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BinaryFn {
+    Add,
+    Mul,
+}
+
+impl BinaryFn {
+    fn parse(s: &str) -> Result<BinaryFn> {
+        Ok(match s {
+            "add" => BinaryFn::Add,
+            "mul" => BinaryFn::Mul,
+            other => bail!("unknown binary fn {other}"),
+        })
+    }
+}
+
+/// One parsed program op (the manifest's JSON form).
+#[derive(Debug, Clone)]
+enum OpSpec {
+    Fc { out: String, input: String, w: String, b: Option<String>, act: Activation },
+    Conv2d {
+        out: String,
+        input: String,
+        w: String,
+        b: Option<String>,
+        act: Activation,
+        stride: usize,
+        pad: (usize, usize),
+    },
+    EmbedPool { out: String, indices: String, table: String, slice: Option<usize> },
+    Concat { out: String, inputs: Vec<String> },
+    Unary { out: String, input: String, f: UnaryFn },
+    Binary { out: String, a: String, b: String, f: BinaryFn },
+    Flatten { out: String, input: String },
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key).as_str().with_context(|| format!("program op missing field {key:?}"))?.to_string())
+}
+
+fn opt_str(j: &Json, key: &str) -> Option<String> {
+    j.get(key).as_str().map(|s| s.to_string())
+}
+
+impl OpSpec {
+    fn parse(j: &Json) -> Result<OpSpec> {
+        let op = j.get("op").as_str().context("program op missing \"op\"")?;
+        let out = req_str(j, "out")?;
+        Ok(match op {
+            "fc" => OpSpec::Fc {
+                out,
+                input: req_str(j, "in")?,
+                w: req_str(j, "w")?,
+                b: opt_str(j, "b"),
+                act: Activation::parse(j.get("act").as_str().unwrap_or("none"))?,
+            },
+            "conv2d" => {
+                let pad = j.get("pad").as_arr().context("conv2d pad")?;
+                ensure!(pad.len() == 2, "conv2d pad must be [lo, hi]");
+                OpSpec::Conv2d {
+                    out,
+                    input: req_str(j, "in")?,
+                    w: req_str(j, "w")?,
+                    b: opt_str(j, "b"),
+                    act: Activation::parse(j.get("act").as_str().unwrap_or("none"))?,
+                    stride: j.get("stride").as_usize().context("conv2d stride")?,
+                    pad: (
+                        pad[0].as_usize().context("pad lo")?,
+                        pad[1].as_usize().context("pad hi")?,
+                    ),
+                }
+            }
+            "embed_pool" => OpSpec::EmbedPool {
+                out,
+                indices: req_str(j, "indices")?,
+                table: req_str(j, "table")?,
+                slice: j.get("slice").as_usize(),
+            },
+            "concat" => OpSpec::Concat {
+                out,
+                inputs: j
+                    .get("in")
+                    .as_arr()
+                    .context("concat in")?
+                    .iter()
+                    .map(|v| v.as_str().context("concat input name").map(|s| s.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+            },
+            "unary" => OpSpec::Unary {
+                out,
+                input: req_str(j, "in")?,
+                f: UnaryFn::parse(j.get("fn").as_str().context("unary fn")?)?,
+            },
+            "binary" => OpSpec::Binary {
+                out,
+                a: req_str(j, "a")?,
+                b: req_str(j, "b")?,
+                f: BinaryFn::parse(j.get("fn").as_str().context("binary fn")?)?,
+            },
+            "flatten" => OpSpec::Flatten { out, input: req_str(j, "in")? },
+            other => bail!("unknown program op {other:?}"),
+        })
+    }
+}
+
+fn parse_program(j: &Json) -> Result<Vec<OpSpec>> {
+    let arr = j
+        .as_arr()
+        .context("artifact has no native op program (rebuild artifacts with the current aot.py)")?;
+    ensure!(!arr.is_empty(), "empty native op program");
+    arr.iter().map(OpSpec::parse).collect()
+}
+
+/// Embedding table at the backend's precision.
+enum PoolTable {
+    F32(EmbeddingTable),
+    Q(QuantizedTable),
+}
+
+impl PoolTable {
+    fn dims(&self) -> (usize, usize) {
+        match self {
+            PoolTable::F32(t) => (t.rows, t.dim),
+            PoolTable::Q(t) => (t.rows, t.dim),
+        }
+    }
+
+    fn pool(&self, batch: &LookupBatch, out: &mut [f32]) {
+        match self {
+            PoolTable::F32(t) => t.sparse_lengths_sum(batch, out),
+            PoolTable::Q(t) => t.sparse_lengths_sum(batch, out),
+        }
+    }
+}
+
+/// Compiled op: spec plus packed weights at the target precision.
+enum CompiledOp {
+    Fc { out: String, input: String, layer: FcLayer, post: Option<UnaryFn> },
+    Conv2d {
+        out: String,
+        input: String,
+        layer: FcLayer,
+        post: Option<UnaryFn>,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: (usize, usize),
+    },
+    EmbedPool { out: String, indices: String, table: usize, slice: Option<usize> },
+    Concat { out: String, inputs: Vec<String> },
+    Unary { out: String, input: String, f: UnaryFn },
+    Binary { out: String, a: String, b: String, f: BinaryFn },
+    Flatten { out: String, input: String },
+}
+
+struct CompiledProgram {
+    ops: Vec<CompiledOp>,
+    tables: Vec<PoolTable>,
+}
+
+/// A named f32 buffer flowing between ops.
+struct Reg {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+fn weight<'a>(
+    weights: &'a HashMap<String, &HostTensor>,
+    name: &str,
+) -> Result<&'a HostTensor> {
+    weights.get(name).copied().with_context(|| format!("weight {name} missing from weights file"))
+}
+
+impl CompiledProgram {
+    /// Pack every layer of `spec` at `precision`. `act_qparams` maps op
+    /// index -> calibrated activation qparams (required for int8).
+    fn build(
+        spec: &[OpSpec],
+        weights: &HashMap<String, &HostTensor>,
+        precision: Precision,
+        act_qparams: Option<&HashMap<usize, QParams>>,
+    ) -> Result<CompiledProgram> {
+        let int8 = matches!(precision, Precision::I8Acc32 | Precision::I8Acc16);
+        let qp_for = |i: usize| -> QParams {
+            act_qparams
+                .and_then(|m| m.get(&i).copied())
+                // pre-calibration fp32 builds never read this
+                .unwrap_or_else(|| QParams::from_range(-1.0, 1.0, 8, false))
+        };
+        let mut ops = Vec::with_capacity(spec.len());
+        let mut tables: Vec<PoolTable> = Vec::new();
+        let mut table_idx: HashMap<String, usize> = HashMap::new();
+        for (i, op) in spec.iter().enumerate() {
+            if int8 {
+                ensure!(
+                    !matches!(op, OpSpec::Fc { .. } | OpSpec::Conv2d { .. })
+                        || act_qparams.map(|m| m.contains_key(&i)).unwrap_or(false),
+                    "op {i} has no calibrated activation qparams"
+                );
+            }
+            ops.push(match op {
+                OpSpec::Fc { out, input, w, b, act } => {
+                    let wt = weight(weights, w)?;
+                    ensure!(wt.shape.len() == 2, "fc weight {w} must be 2-D, got {:?}", wt.shape);
+                    let (n, k) = (wt.shape[0], wt.shape[1]);
+                    let wdata = wt.as_f32()?;
+                    let bias = match b {
+                        Some(bn) => Some(weight(weights, bn)?.as_f32()?),
+                        None => None,
+                    };
+                    let layer = FcLayer::from_f32(
+                        precision,
+                        &wdata,
+                        n,
+                        k,
+                        bias.as_deref(),
+                        act.relu(),
+                        qp_for(i),
+                    );
+                    CompiledOp::Fc { out: out.clone(), input: input.clone(), layer, post: act.post() }
+                }
+                OpSpec::Conv2d { out, input, w, b, act, stride, pad } => {
+                    let wt = weight(weights, w)?;
+                    ensure!(
+                        wt.shape.len() == 4,
+                        "conv2d weight {w} must be [co, ci, kh, kw], got {:?}",
+                        wt.shape
+                    );
+                    let (co, kh, kw) = (wt.shape[0], wt.shape[2], wt.shape[3]);
+                    let k = wt.shape[1] * kh * kw;
+                    let wdata = wt.as_f32()?;
+                    let bias = match b {
+                        Some(bn) => Some(weight(weights, bn)?.as_f32()?),
+                        None => None,
+                    };
+                    let layer = FcLayer::from_f32(
+                        precision,
+                        &wdata,
+                        co,
+                        k,
+                        bias.as_deref(),
+                        act.relu(),
+                        qp_for(i),
+                    );
+                    CompiledOp::Conv2d {
+                        out: out.clone(),
+                        input: input.clone(),
+                        layer,
+                        post: act.post(),
+                        kh,
+                        kw,
+                        stride: *stride,
+                        pad: *pad,
+                    }
+                }
+                OpSpec::EmbedPool { out, indices, table, slice } => {
+                    let idx = match table_idx.get(table).copied() {
+                        Some(i) => i,
+                        None => {
+                            let wt = weight(weights, table)?;
+                            ensure!(
+                                wt.shape.len() == 2,
+                                "embedding table {table} must be 2-D, got {:?}",
+                                wt.shape
+                            );
+                            let t = EmbeddingTable::new(wt.shape[0], wt.shape[1], wt.as_f32()?);
+                            tables.push(if int8 {
+                                PoolTable::Q(QuantizedTable::from_f32(&t))
+                            } else {
+                                PoolTable::F32(t)
+                            });
+                            table_idx.insert(table.clone(), tables.len() - 1);
+                            tables.len() - 1
+                        }
+                    };
+                    CompiledOp::EmbedPool {
+                        out: out.clone(),
+                        indices: indices.clone(),
+                        table: idx,
+                        slice: *slice,
+                    }
+                }
+                OpSpec::Concat { out, inputs } => {
+                    CompiledOp::Concat { out: out.clone(), inputs: inputs.clone() }
+                }
+                OpSpec::Unary { out, input, f } => {
+                    CompiledOp::Unary { out: out.clone(), input: input.clone(), f: *f }
+                }
+                OpSpec::Binary { out, a, b, f } => CompiledOp::Binary {
+                    out: out.clone(),
+                    a: a.clone(),
+                    b: b.clone(),
+                    f: *f,
+                },
+                OpSpec::Flatten { out, input } => {
+                    CompiledOp::Flatten { out: out.clone(), input: input.clone() }
+                }
+            });
+        }
+        Ok(CompiledProgram { ops, tables })
+    }
+
+    /// Interpret the program. `observers` (calibration mode) record the
+    /// fp32 input distribution of every fc/conv op by op index.
+    fn execute(
+        &self,
+        meta: &ArtifactMeta,
+        inputs: &[HostTensor],
+        mut observers: Option<&mut HashMap<usize, Calibrator>>,
+    ) -> Result<HashMap<String, Reg>> {
+        check_inputs(meta, inputs)?;
+        let mut regs: HashMap<String, Reg> = HashMap::new();
+        let mut int_regs: HashMap<String, (Vec<usize>, Vec<i32>)> = HashMap::new();
+        for (t, m) in inputs.iter().zip(&meta.inputs) {
+            match t.dtype {
+                DType::F32 => {
+                    regs.insert(m.name.clone(), Reg { shape: t.shape.clone(), data: t.as_f32()? });
+                }
+                DType::I32 => {
+                    int_regs.insert(m.name.clone(), (t.shape.clone(), t.as_i32()?));
+                }
+                DType::I8 => bail!("native backend: i8 inputs unsupported ({})", m.name),
+            }
+        }
+
+        for (i, op) in self.ops.iter().enumerate() {
+            match op {
+                CompiledOp::Fc { out, input, layer, post } => {
+                    let (m, mut data) = {
+                        let x = reg(&regs, input)?;
+                        ensure!(!x.shape.is_empty(), "fc input {input} is scalar");
+                        let m = x.shape[0];
+                        let k: usize = x.shape[1..].iter().product();
+                        ensure!(
+                            k == layer.k,
+                            "fc {out}: input {input} has {k} features, weight wants {}",
+                            layer.k
+                        );
+                        if let Some(obs) = observers.as_deref_mut() {
+                            obs.entry(i).or_insert_with(Calibrator::default).observe(&x.data);
+                        }
+                        let mut o = vec![0f32; m * layer.n];
+                        layer.forward(&x.data, m, &mut o);
+                        (m, o)
+                    };
+                    if let Some(f) = post {
+                        f.apply(&mut data);
+                    }
+                    regs.insert(out.clone(), Reg { shape: vec![m, layer.n], data });
+                }
+                CompiledOp::Conv2d { out, input, layer, post, kh, kw, stride, pad } => {
+                    let mut r = conv2d(
+                        &regs, input, out, layer, *kh, *kw, *stride, *pad, i,
+                        observers.as_deref_mut(),
+                    )?;
+                    if let Some(f) = post {
+                        f.apply(&mut r.data);
+                    }
+                    regs.insert(out.clone(), r);
+                }
+                CompiledOp::EmbedPool { out, indices, table, slice } => {
+                    let (shape, idx) = int_regs
+                        .get(indices)
+                        .with_context(|| format!("embed_pool: no i32 input named {indices}"))?;
+                    let (flat, pool, bags) = match slice {
+                        Some(t) => {
+                            ensure!(
+                                shape.len() == 3 && *t < shape[1],
+                                "embed_pool slice {t} out of {indices} shape {shape:?}"
+                            );
+                            let (b, nt, p) = (shape[0], shape[1], shape[2]);
+                            let mut v = Vec::with_capacity(b * p);
+                            for bi in 0..b {
+                                let base = (bi * nt + t) * p;
+                                v.extend_from_slice(&idx[base..base + p]);
+                            }
+                            (v, p, b)
+                        }
+                        None => {
+                            ensure!(shape.len() == 2, "embed_pool: {indices} must be [B, pool]");
+                            (idx.clone(), shape[1], shape[0])
+                        }
+                    };
+                    let (rows, dim) = self.tables[*table].dims();
+                    for &v in &flat {
+                        ensure!(
+                            v >= 0 && (v as usize) < rows,
+                            "embedding index {v} out of range 0..{rows}"
+                        );
+                    }
+                    let batch =
+                        LookupBatch::fixed(flat.iter().map(|&v| v as u32).collect(), pool);
+                    let mut data = vec![0f32; bags * dim];
+                    self.tables[*table].pool(&batch, &mut data);
+                    regs.insert(out.clone(), Reg { shape: vec![bags, dim], data });
+                }
+                CompiledOp::Concat { out, inputs } => {
+                    let r = {
+                        let parts: Vec<&Reg> =
+                            inputs.iter().map(|n| reg(&regs, n)).collect::<Result<Vec<_>>>()?;
+                        ensure!(!parts.is_empty(), "concat with no inputs");
+                        let b = parts[0].shape[0];
+                        for (p, n) in parts.iter().zip(inputs) {
+                            ensure!(
+                                p.shape.len() == 2 && p.shape[0] == b,
+                                "concat input {n} shape {:?} (want [{b}, _])",
+                                p.shape
+                            );
+                        }
+                        let total: usize = parts.iter().map(|p| p.shape[1]).sum();
+                        let mut data = vec![0f32; b * total];
+                        for bi in 0..b {
+                            let mut off = 0usize;
+                            for p in &parts {
+                                let d = p.shape[1];
+                                data[bi * total + off..bi * total + off + d]
+                                    .copy_from_slice(&p.data[bi * d..(bi + 1) * d]);
+                                off += d;
+                            }
+                        }
+                        Reg { shape: vec![b, total], data }
+                    };
+                    regs.insert(out.clone(), r);
+                }
+                CompiledOp::Unary { out, input, f } => {
+                    let r = {
+                        let x = reg(&regs, input)?;
+                        let mut data = x.data.clone();
+                        f.apply(&mut data);
+                        Reg { shape: x.shape.clone(), data }
+                    };
+                    regs.insert(out.clone(), r);
+                }
+                CompiledOp::Binary { out, a, b, f } => {
+                    let r = {
+                        let ra = reg(&regs, a)?;
+                        let rb = reg(&regs, b)?;
+                        ensure!(
+                            ra.shape == rb.shape,
+                            "binary {out}: {a} {:?} vs {b} {:?}",
+                            ra.shape,
+                            rb.shape
+                        );
+                        let data = match f {
+                            BinaryFn::Add => {
+                                ra.data.iter().zip(&rb.data).map(|(x, y)| x + y).collect()
+                            }
+                            BinaryFn::Mul => {
+                                ra.data.iter().zip(&rb.data).map(|(x, y)| x * y).collect()
+                            }
+                        };
+                        Reg { shape: ra.shape.clone(), data }
+                    };
+                    regs.insert(out.clone(), r);
+                }
+                CompiledOp::Flatten { out, input } => {
+                    let r = {
+                        let x = reg(&regs, input)?;
+                        ensure!(!x.shape.is_empty(), "flatten of scalar {input}");
+                        let rest: usize = x.shape[1..].iter().product();
+                        Reg { shape: vec![x.shape[0], rest], data: x.data.clone() }
+                    };
+                    regs.insert(out.clone(), r);
+                }
+            }
+        }
+        Ok(regs)
+    }
+}
+
+fn reg<'a>(regs: &'a HashMap<String, Reg>, name: &str) -> Result<&'a Reg> {
+    regs.get(name).with_context(|| format!("program references undefined tensor {name:?}"))
+}
+
+/// im2col + packed GEMM. SAME-style padding is explicit `(lo, hi)`,
+/// applied to both spatial dims (square kernels).
+#[allow(clippy::too_many_arguments)]
+fn conv2d(
+    regs: &HashMap<String, Reg>,
+    input: &str,
+    out_name: &str,
+    layer: &FcLayer,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: (usize, usize),
+    op_idx: usize,
+    observers: Option<&mut HashMap<usize, Calibrator>>,
+) -> Result<Reg> {
+    let x = reg(regs, input)?;
+    ensure!(x.shape.len() == 4, "conv2d {out_name}: input {input} must be [B,C,H,W]");
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    ensure!(
+        layer.k == c * kh * kw,
+        "conv2d {out_name}: weight K {} != C*kh*kw {}",
+        layer.k,
+        c * kh * kw
+    );
+    let (plo, phi) = pad;
+    ensure!(h + plo + phi >= kh && w + plo + phi >= kw, "conv2d {out_name}: kernel exceeds input");
+    let ho = (h + plo + phi - kh) / stride + 1;
+    let wo = (w + plo + phi - kw) / stride + 1;
+    if let Some(obs) = observers {
+        obs.entry(op_idx).or_insert_with(Calibrator::default).observe(&x.data);
+    }
+
+    let rows = b * ho * wo;
+    let mut col = vec![0f32; rows * layer.k];
+    for bi in 0..b {
+        for y in 0..ho {
+            for xx in 0..wo {
+                let row = ((bi * ho + y) * wo + xx) * layer.k;
+                let mut off = 0usize;
+                for ci in 0..c {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (y * stride + ky) as isize - plo as isize;
+                            let ix = (xx * stride + kx) as isize - plo as isize;
+                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                col[row + off] = x.data
+                                    [((bi * c + ci) * h + iy as usize) * w + ix as usize];
+                            }
+                            off += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let n = layer.n;
+    let mut gemm_out = vec![0f32; rows * n];
+    layer.forward(&col, rows, &mut gemm_out);
+    // [B*ho*wo, co] -> NCHW
+    let mut data = vec![0f32; b * n * ho * wo];
+    for bi in 0..b {
+        for y in 0..ho {
+            for xx in 0..wo {
+                let src = ((bi * ho + y) * wo + xx) * n;
+                for co in 0..n {
+                    data[((bi * n + co) * ho + y) * wo + xx] = gemm_out[src + co];
+                }
+            }
+        }
+    }
+    Ok(Reg { shape: vec![b, n, ho, wo], data })
+}
+
+// ---------------------------------------------------------------------------
+// Calibration (§3.2.2 techniques 1 & 4)
+// ---------------------------------------------------------------------------
+
+/// Deterministic synthetic calibration inputs matching the artifact's
+/// input metas; i32 inputs draw below the smallest table they feed.
+fn synth_calibration_inputs(
+    meta: &ArtifactMeta,
+    index_bounds: &HashMap<String, usize>,
+    seed: u64,
+) -> Vec<HostTensor> {
+    let mut rng = Pcg32::seeded(seed);
+    meta.inputs
+        .iter()
+        .map(|im| match im.dtype {
+            DType::I32 => {
+                let hi = *index_bounds.get(&im.name).unwrap_or(&1);
+                let vals: Vec<i32> =
+                    (0..im.elem_count()).map(|_| rng.below(hi.max(1) as u32) as i32).collect();
+                HostTensor::from_i32(&im.shape, &vals)
+            }
+            _ => {
+                let mut vals = vec![0f32; im.elem_count()];
+                rng.fill_normal(&mut vals, 0.0, 1.0);
+                HostTensor::from_f32(&im.shape, &vals)
+            }
+        })
+        .collect()
+}
+
+/// Observe every fc/conv input through the fp32 program and pick
+/// L2-optimal activation qparams per layer.
+fn calibrate(
+    fp32: &CompiledProgram,
+    meta: &ArtifactMeta,
+    index_bounds: &HashMap<String, usize>,
+) -> Result<HashMap<usize, QParams>> {
+    let mut observers: HashMap<usize, Calibrator> = HashMap::new();
+    for b in 0..CALIBRATION_BATCHES {
+        let inputs = synth_calibration_inputs(meta, index_bounds, 0x5eed + b as u64);
+        fp32.execute(meta, &inputs, Some(&mut observers))?;
+    }
+    Ok(observers
+        .into_iter()
+        .map(|(i, cal)| (i, cal.l2_optimal_qparams(8, CALIBRATION_GRID)))
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Backend + artifact
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust [`ExecBackend`] over the manifest op programs.
+pub struct NativeBackend {
+    precision: Precision,
+}
+
+impl NativeBackend {
+    pub fn new(precision: Precision) -> NativeBackend {
+        NativeBackend { precision }
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn platform(&self) -> String {
+        "native-cpu (fbgemm-rs)".to_string()
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn supported_precisions(&self) -> Vec<Precision> {
+        Precision::all().to_vec()
+    }
+
+    fn load(&self, manifest: &Manifest, artifact: &str) -> Result<Box<dyn LoadedArtifact>> {
+        let meta = manifest.artifact(artifact)?.clone();
+        let wpath = manifest.weights_path(&meta);
+        let named: Vec<NamedTensor> = match &wpath {
+            Some(p) => read_weights_file(p)?,
+            None => Vec::new(),
+        };
+        Ok(Box::new(build_artifact(meta, &named, self.precision)?))
+    }
+}
+
+/// Compile one artifact's program at `precision` (weights already in
+/// memory). Split out of [`NativeBackend::load`] so tests can build
+/// artifacts without a manifest directory.
+///
+/// Calibration is deterministic, so every executor in a pool derives
+/// identical qparams; each still packs/calibrates independently (same
+/// per-thread-construction shape as the PJRT engine). Acceptable as
+/// one-time startup cost at today's pool sizes — share the compiled
+/// program via `Arc` if load time ever dominates.
+pub(crate) fn build_artifact(
+    meta: ArtifactMeta,
+    named: &[NamedTensor],
+    precision: Precision,
+) -> Result<NativeArtifact> {
+    let t0 = Instant::now();
+    let spec = parse_program(&meta.program)
+        .with_context(|| format!("artifact {}: native program", meta.name))?;
+    let weights: HashMap<String, &HostTensor> =
+        named.iter().map(|t| (t.name.clone(), &t.tensor)).collect();
+
+    // smallest table each i32 input feeds, for calibration index synthesis
+    let mut index_bounds: HashMap<String, usize> = HashMap::new();
+    for op in &spec {
+        if let OpSpec::EmbedPool { indices, table, .. } = op {
+            let rows = weight(&weights, table)?.shape[0];
+            let e = index_bounds.entry(indices.clone()).or_insert(rows);
+            *e = (*e).min(rows);
+        }
+    }
+
+    let program = match precision {
+        Precision::Fp32 | Precision::Fp16 => {
+            CompiledProgram::build(&spec, &weights, precision, None)?
+        }
+        Precision::I8Acc32 | Precision::I8Acc16 => {
+            let fp32 = CompiledProgram::build(&spec, &weights, Precision::Fp32, None)?;
+            let qparams = calibrate(&fp32, &meta, &index_bounds)?;
+            CompiledProgram::build(&spec, &weights, precision, Some(&qparams))?
+        }
+    };
+    Ok(NativeArtifact { meta, program, load_ms: t0.elapsed().as_secs_f64() * 1e3 })
+}
+
+/// A compiled-and-packed native artifact.
+pub struct NativeArtifact {
+    meta: ArtifactMeta,
+    program: CompiledProgram,
+    load_ms: f64,
+}
+
+impl LoadedArtifact for NativeArtifact {
+    fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let regs = self.program.execute(&self.meta, inputs, None)?;
+        let mut outs = Vec::with_capacity(self.meta.outputs.len());
+        for om in &self.meta.outputs {
+            ensure!(om.dtype == DType::F32, "native backend: output {} must be f32", om.name);
+            let r = regs
+                .get(&om.name)
+                .with_context(|| format!("program never produced output {:?}", om.name))?;
+            ensure!(
+                r.shape == om.shape,
+                "output {}: program shape {:?} != manifest {:?}",
+                om.name,
+                r.shape,
+                om.shape
+            );
+            outs.push(HostTensor::from_f32(&r.shape, &r.data));
+        }
+        Ok(outs)
+    }
+
+    fn load_ms(&self) -> f64 {
+        self.load_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::error::sqnr_db;
+    use crate::runtime::manifest::TensorMeta;
+
+    fn named(name: &str, shape: &[usize], data: Vec<f32>) -> NamedTensor {
+        NamedTensor { name: name.to_string(), tensor: HostTensor::from_f32(shape, &data) }
+    }
+
+    fn meta_with(
+        inputs: Vec<TensorMeta>,
+        outputs: Vec<TensorMeta>,
+        batch: usize,
+        program: &str,
+    ) -> ArtifactMeta {
+        ArtifactMeta {
+            name: "t".into(),
+            hlo: "t.hlo.txt".into(),
+            model: None,
+            weights: Some("t.weights.bin".into()),
+            weight_params: vec![],
+            inputs,
+            outputs,
+            batch,
+            precision: Precision::Fp32,
+            program: Json::parse(program).unwrap(),
+        }
+    }
+
+    fn tm(name: &str, dtype: DType, shape: &[usize]) -> TensorMeta {
+        TensorMeta { name: name.into(), dtype, shape: shape.to_vec() }
+    }
+
+    #[test]
+    fn fc_chain_matches_hand_math() {
+        // y = sigmoid(relu(x @ W0^T + b0) @ W1^T)
+        let w0 = vec![1.0, 0.0, 0.0, -1.0]; // [2x2] identity-ish
+        let b0 = vec![0.5, 0.5];
+        let w1 = vec![1.0, 1.0]; // [1x2]
+        let prog = r#"[
+            {"op": "fc", "out": "h", "in": "x", "w": "w0", "b": "b0", "act": "relu"},
+            {"op": "fc", "out": "l", "in": "h", "w": "w1", "act": "none"},
+            {"op": "unary", "fn": "sigmoid", "out": "y", "in": "l"}
+        ]"#;
+        let meta = meta_with(
+            vec![tm("x", DType::F32, &[1, 2])],
+            vec![tm("y", DType::F32, &[1, 1])],
+            1,
+            prog,
+        );
+        let ws = vec![
+            named("w0", &[2, 2], w0),
+            named("b0", &[2], b0),
+            named("w1", &[1, 2], w1),
+        ];
+        let art = build_artifact(meta, &ws, Precision::Fp32).unwrap();
+        let out = art.run(&[HostTensor::from_f32(&[1, 2], &[2.0, 3.0])]).unwrap();
+        // h = relu([2 + .5, -3 + .5]) = [2.5, 0]; l = 2.5; y = sigmoid(2.5)
+        let want = 1.0 / (1.0 + (-2.5f32).exp());
+        let got = out[0].as_f32().unwrap()[0];
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn gru_style_elementwise_ops() {
+        // h_new = (1 - z) * h + z * hh with z, h, hh as inputs
+        let prog = r#"[
+            {"op": "unary", "fn": "one_minus", "out": "omz", "in": "z"},
+            {"op": "binary", "fn": "mul", "out": "a", "a": "omz", "b": "h"},
+            {"op": "binary", "fn": "mul", "out": "b2", "a": "z", "b": "hh"},
+            {"op": "binary", "fn": "add", "out": "h_new", "a": "a", "b": "b2"}
+        ]"#;
+        let meta = meta_with(
+            vec![
+                tm("z", DType::F32, &[1, 2]),
+                tm("h", DType::F32, &[1, 2]),
+                tm("hh", DType::F32, &[1, 2]),
+            ],
+            vec![tm("h_new", DType::F32, &[1, 2])],
+            1,
+            prog,
+        );
+        let art = build_artifact(meta, &[], Precision::Fp32).unwrap();
+        let out = art
+            .run(&[
+                HostTensor::from_f32(&[1, 2], &[0.25, 1.0]),
+                HostTensor::from_f32(&[1, 2], &[4.0, 4.0]),
+                HostTensor::from_f32(&[1, 2], &[8.0, 8.0]),
+            ])
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![5.0, 8.0]);
+    }
+
+    #[test]
+    fn embed_pool_slices_and_sums() {
+        // 2 tables of 4 rows x 2 dims; indices [B=1, T=2, P=2]
+        let t0: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        let t1: Vec<f32> = (0..8).map(|v| (10 + v) as f32).collect();
+        let prog = r#"[
+            {"op": "embed_pool", "out": "p0", "indices": "idx", "table": "e0", "slice": 0},
+            {"op": "embed_pool", "out": "p1", "indices": "idx", "table": "e1", "slice": 1},
+            {"op": "concat", "out": "z", "in": ["p0", "p1"]}
+        ]"#;
+        let meta = meta_with(
+            vec![tm("idx", DType::I32, &[1, 2, 2])],
+            vec![tm("z", DType::F32, &[1, 4])],
+            1,
+            prog,
+        );
+        let ws = vec![named("e0", &[4, 2], t0), named("e1", &[4, 2], t1)];
+        let art = build_artifact(meta, &ws, Precision::Fp32).unwrap();
+        // table 0 pools rows {0, 1} -> [0+2, 1+3]; table 1 rows {2, 3} -> [14+16, 15+17]
+        let out = art.run(&[HostTensor::from_i32(&[1, 2, 2], &[0, 1, 2, 3])]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![2.0, 4.0, 30.0, 32.0]);
+    }
+
+    #[test]
+    fn embed_pool_rejects_out_of_range_index() {
+        let prog = r#"[{"op": "embed_pool", "out": "p", "indices": "idx", "table": "e0"}]"#;
+        let meta = meta_with(
+            vec![tm("idx", DType::I32, &[1, 2])],
+            vec![tm("p", DType::F32, &[1, 2])],
+            1,
+            prog,
+        );
+        let ws = vec![named("e0", &[4, 2], vec![0.0; 8])];
+        let art = build_artifact(meta, &ws, Precision::Fp32).unwrap();
+        assert!(art.run(&[HostTensor::from_i32(&[1, 2], &[0, 4])]).is_err());
+        assert!(art.run(&[HostTensor::from_i32(&[1, 2], &[-1, 0])]).is_err());
+    }
+
+    #[test]
+    fn conv2d_matches_naive_reference() {
+        let mut rng = Pcg32::seeded(3);
+        let (b, c, h, w, co, k, stride) = (2usize, 3usize, 6usize, 6usize, 4usize, 3usize, 2usize);
+        // SAME for stride 2, k 3, h 6: ho=3, total pad = (3-1)*2+3-6 = 1 -> (0,1)
+        let (plo, phi) = (0usize, 1usize);
+        let ho = (h + plo + phi - k) / stride + 1;
+        let x: Vec<f32> = (0..b * c * h * w).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let wt: Vec<f32> = (0..co * c * k * k).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let bias: Vec<f32> = (0..co).map(|i| i as f32 * 0.1).collect();
+
+        let prog = format!(
+            r#"[{{"op": "conv2d", "out": "y", "in": "x", "w": "cw", "b": "cb",
+                 "act": "relu", "stride": {stride}, "pad": [{plo}, {phi}]}}]"#
+        );
+        let meta = meta_with(
+            vec![tm("x", DType::F32, &[b, c, h, w])],
+            vec![tm("y", DType::F32, &[b, co, ho, ho])],
+            b,
+            &prog,
+        );
+        let ws = vec![named("cw", &[co, c, k, k], wt.clone()), named("cb", &[co], bias.clone())];
+        let art = build_artifact(meta, &ws, Precision::Fp32).unwrap();
+        let got = art.run(&[HostTensor::from_f32(&[b, c, h, w], &x)]).unwrap()[0]
+            .as_f32()
+            .unwrap();
+
+        // naive reference
+        for bi in 0..b {
+            for o in 0..co {
+                for y in 0..ho {
+                    for xx in 0..ho {
+                        let mut acc = bias[o];
+                        for ci in 0..c {
+                            for ky in 0..k {
+                                for kx in 0..k {
+                                    let iy = (y * stride + ky) as isize - plo as isize;
+                                    let ix = (xx * stride + kx) as isize - plo as isize;
+                                    if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w
+                                    {
+                                        acc += x[((bi * c + ci) * h + iy as usize) * w
+                                            + ix as usize]
+                                            * wt[((o * c + ci) * k + ky) * k + kx];
+                                    }
+                                }
+                            }
+                        }
+                        let want = acc.max(0.0);
+                        let gotv = got[((bi * co + o) * ho + y) * ho + xx];
+                        assert!((gotv - want).abs() < 1e-4, "{gotv} vs {want}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_ops() {
+        assert!(parse_program(&Json::parse(r#"[{"op": "nope", "out": "x"}]"#).unwrap()).is_err());
+        assert!(parse_program(&Json::parse("[]").unwrap()).is_err());
+        assert!(parse_program(&Json::Null).is_err());
+    }
+
+    fn tiny_mlp_artifact(precision: Precision) -> (NativeArtifact, Vec<HostTensor>) {
+        let mut rng = Pcg32::seeded(7);
+        let (din, dh, dout) = (8usize, 16usize, 4usize);
+        let w0: Vec<f32> = (0..dh * din).map(|_| rng.normal_f32(0.0, 0.4)).collect();
+        let b0: Vec<f32> = (0..dh).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let w1: Vec<f32> = (0..dout * dh).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let prog = r#"[
+            {"op": "fc", "out": "h", "in": "x", "w": "w0", "b": "b0", "act": "relu"},
+            {"op": "fc", "out": "y", "in": "h", "w": "w1", "act": "none"}
+        ]"#;
+        let meta = meta_with(
+            vec![tm("x", DType::F32, &[4, din])],
+            vec![tm("y", DType::F32, &[4, dout])],
+            4,
+            prog,
+        );
+        let ws = vec![
+            named("w0", &[dh, din], w0),
+            named("b0", &[dh], b0),
+            named("w1", &[dout, dh], w1),
+        ];
+        let art = build_artifact(meta, &ws, precision).unwrap();
+        let mut x = vec![0f32; 4 * din];
+        let mut rng = Pcg32::seeded(99);
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        (art, vec![HostTensor::from_f32(&[4, din], &x)])
+    }
+
+    #[test]
+    fn reduced_precisions_track_fp32_within_bounds() {
+        let (ref_art, inputs) = tiny_mlp_artifact(Precision::Fp32);
+        let reference = ref_art.run(&inputs).unwrap()[0].as_f32().unwrap();
+        for p in [Precision::Fp16, Precision::I8Acc32, Precision::I8Acc16] {
+            let (art, _) = tiny_mlp_artifact(p);
+            let got = art.run(&inputs).unwrap()[0].as_f32().unwrap();
+            let db = sqnr_db(&reference, &got);
+            assert!(db >= p.min_sqnr_db(), "{p}: sqnr {db:.1} dB < {}", p.min_sqnr_db());
+        }
+    }
+
+    #[test]
+    fn fc_layer_precisions_agree_on_random_gemm() {
+        let mut rng = Pcg32::seeded(21);
+        let (m, n, k) = (8usize, 32usize, 64usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let w: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 0.2)).collect();
+        let (lo, hi) = a.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+        let x_qp = QParams::from_range(lo, hi, 8, false);
+        let mut reference = vec![0f32; m * n];
+        FcLayer::from_f32(Precision::Fp32, &w, n, k, None, false, x_qp)
+            .forward(&a, m, &mut reference);
+        for p in [Precision::Fp16, Precision::I8Acc32, Precision::I8Acc16] {
+            let layer = FcLayer::from_f32(p, &w, n, k, None, false, x_qp);
+            assert_eq!(layer.precision(), p);
+            let mut c = vec![0f32; m * n];
+            layer.forward(&a, m, &mut c);
+            let db = sqnr_db(&reference, &c);
+            assert!(db >= p.min_sqnr_db(), "{p}: sqnr {db:.1} dB");
+        }
+    }
+
+    #[test]
+    fn acc16_ablation_constructor_gets_denser_outliers_at_fewer_bits() {
+        let mut rng = Pcg32::seeded(31);
+        let (n, k) = (32usize, 64usize);
+        let wq: Vec<i8> =
+            (0..n * k).map(|_| rng.normal_f32(0.0, 24.0).round().clamp(-127.0, 127.0) as i8).collect();
+        let qp = QParams::from_range(-1.0, 1.0, 8, false);
+        let d7 = FcLayer::i8acc16_from_quantized(&wq, n, k, 7, qp, 0.01, None, false)
+            .outlier_density()
+            .unwrap();
+        let d4 = FcLayer::i8acc16_from_quantized(&wq, n, k, 4, qp, 0.01, None, false)
+            .outlier_density()
+            .unwrap();
+        assert!(d4 > d7, "d4 {d4} d7 {d7}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Execution precision variants (§3.2): the numeric contract a backend
+//! serves an artifact at, and the per-precision accuracy bound the
+//! parity tests hold every backend to.
+//!
+//! The manifest's `precision` field records what an artifact *contains*
+//! (`recsys_int8_b16` bakes int8 weights into the HLO); a
+//! [`super::backend::ExecBackend`] additionally has an *execution*
+//! precision — the native backend re-quantizes fp32 weight files to any
+//! of these at load time.
+
+use anyhow::{bail, Result};
+
+/// Numeric path an artifact executes on (Fig 6's four GEMM paths).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// fp32 storage + compute (the MKL-stand-in baseline).
+    Fp32,
+    /// fp16 weight storage, fp32 compute (Fig 6a bandwidth win).
+    Fp16,
+    /// int8 multiplies, int32 accumulation (Fig 6a).
+    I8Acc32,
+    /// int8 multiplies, int16 accumulation + sparse outlier split
+    /// (Fig 6b / §3.2.1).
+    I8Acc16,
+}
+
+impl Precision {
+    /// Every execution precision, lowest-error first.
+    pub fn all() -> [Precision; 4] {
+        [Precision::Fp32, Precision::Fp16, Precision::I8Acc32, Precision::I8Acc16]
+    }
+
+    /// Manifest/CLI spelling. `int8` is accepted as an alias for the
+    /// acc32 path (what the AOT int8 artifacts contain).
+    pub fn from_manifest(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "fp32" => Precision::Fp32,
+            "fp16" => Precision::Fp16,
+            "int8" | "i8acc32" => Precision::I8Acc32,
+            "i8acc16" => Precision::I8Acc16,
+            other => bail!("unknown precision in manifest: {other}"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp16 => "fp16",
+            Precision::I8Acc32 => "i8acc32",
+            Precision::I8Acc16 => "i8acc16",
+        }
+    }
+
+    /// Weight-storage bytes per fp32 element (the Fig-6 traffic ratios).
+    pub fn weight_bytes_per_elem(self) -> f64 {
+        match self {
+            Precision::Fp32 => 4.0,
+            Precision::Fp16 => 2.0,
+            Precision::I8Acc32 | Precision::I8Acc16 => 1.0,
+        }
+    }
+
+    /// Minimum end-to-end SQNR (vs the fp32 reference) a backend must
+    /// sustain at this precision — the [`crate::quant::error`] tolerance
+    /// model the parity tests assert. The int8 bound is the §3.2.2
+    /// technique-3 acceptability threshold (20 dB ≈ 10% relative noise,
+    /// the "skip quantization when the error is too high" cutoff); fp16
+    /// and fp32 bounds follow from their mantissa widths with slack for
+    /// accumulation-order differences.
+    pub fn min_sqnr_db(self) -> f64 {
+        match self {
+            Precision::Fp32 => 80.0,
+            Precision::Fp16 => 40.0,
+            Precision::I8Acc32 | Precision::I8Acc16 => 20.0,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_roundtrip() {
+        for p in Precision::all() {
+            assert_eq!(Precision::from_manifest(p.as_str()).unwrap(), p);
+        }
+        assert_eq!(Precision::from_manifest("int8").unwrap(), Precision::I8Acc32);
+        assert!(Precision::from_manifest("fp64").is_err());
+    }
+
+    #[test]
+    fn bounds_loosen_with_narrower_types() {
+        assert!(Precision::Fp32.min_sqnr_db() > Precision::Fp16.min_sqnr_db());
+        assert!(Precision::Fp16.min_sqnr_db() > Precision::I8Acc32.min_sqnr_db());
+    }
+
+    #[test]
+    fn traffic_ratios_match_fig6() {
+        assert_eq!(Precision::Fp32.weight_bytes_per_elem(), 4.0);
+        assert_eq!(Precision::Fp16.weight_bytes_per_elem(), 2.0);
+        assert_eq!(Precision::I8Acc16.weight_bytes_per_elem(), 1.0);
+    }
+}

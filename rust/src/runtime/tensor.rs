@@ -27,6 +27,7 @@ impl DType {
         })
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_xla(self) -> xla::ElementType {
         match self {
             DType::F32 => xla::ElementType::F32,

@@ -77,6 +77,36 @@ fn read_u32(cur: &mut std::io::Cursor<&[u8]>) -> Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+/// Serialize tensors to the DCIW format (the Rust mirror of
+/// `aot.write_weights`). Used by tests and tools that synthesize
+/// native-backend artifact directories without the Python toolchain.
+pub fn write_weights_bytes(tensors: &[NamedTensor]) -> Vec<u8> {
+    let mut out = b"DCIW".to_vec();
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        out.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+        out.extend_from_slice(t.name.as_bytes());
+        out.push(match t.tensor.dtype {
+            DType::F32 => 0,
+            DType::I8 => 1,
+            DType::I32 => 2,
+        });
+        out.extend_from_slice(&(t.tensor.shape.len() as u32).to_le_bytes());
+        for &d in &t.tensor.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&t.tensor.data);
+    }
+    out
+}
+
+/// Write a DCIW weights file.
+pub fn write_weights_file(path: &Path, tensors: &[NamedTensor]) -> Result<()> {
+    std::fs::write(path, write_weights_bytes(tensors))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,6 +153,24 @@ mod tests {
         let mut buf = header(1);
         write_tensor(&mut buf, "w", 0, &[4], &[0u8; 8]); // needs 16 bytes
         assert!(read_weights_bytes(&buf).is_err());
+    }
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let tensors = vec![
+            NamedTensor { name: "w".into(), tensor: HostTensor::from_f32(&[2, 3], &[0.5; 6]) },
+            NamedTensor { name: "q".into(), tensor: HostTensor::from_i8(&[4], &[-1, 0, 1, 127]) },
+            NamedTensor { name: "idx".into(), tensor: HostTensor::from_i32(&[2], &[7, -9]) },
+        ];
+        let bytes = write_weights_bytes(&tensors);
+        let back = read_weights_bytes(&bytes).unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in tensors.iter().zip(&back) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.tensor.dtype, b.tensor.dtype);
+            assert_eq!(a.tensor.shape, b.tensor.shape);
+            assert_eq!(a.tensor.data, b.tensor.data);
+        }
     }
 
     #[test]

@@ -1,0 +1,417 @@
+//! Backend parity seals: identical requests served through the
+//! execution backends must agree within the per-precision tolerance
+//! bound of the quant error model (`Precision::min_sqnr_db`, §3.2.2
+//! technique 3).
+//!
+//! The native backend needs no HLO/PJRT and no `make artifacts`: these
+//! tests synthesize a manifest + DCIW weights fixture (a recsys-lite
+//! and a cv-lite family with native op programs) in a temp dir, so the
+//! whole file runs in CI under `--no-default-features` too. The
+//! PJRT-vs-native cross-check at the end additionally requires real
+//! artifacts and the `pjrt` feature (skips cleanly otherwise).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dcinfer::coordinator::{stack_rows, FrontendConfig, InferRequest, ServingFrontend};
+use dcinfer::models::{CvService, RecSysService};
+use dcinfer::quant::error::sqnr_db;
+use dcinfer::runtime::{
+    write_weights_file, BackendSpec, ExecBackend, HostTensor, LoadedArtifact, Manifest,
+    NamedTensor, NativeBackend, Precision,
+};
+use dcinfer::util::rng::Pcg32;
+
+// ---------------------------------------------------------------------------
+// Fixture: a native-servable artifacts dir built from pure Rust
+// ---------------------------------------------------------------------------
+
+fn tensor(rng: &mut Pcg32, name: &str, shape: &[usize], std: f32) -> NamedTensor {
+    let count: usize = shape.iter().product();
+    let mut data = vec![0f32; count];
+    rng.fill_normal(&mut data, 0.0, std);
+    NamedTensor { name: name.to_string(), tensor: HostTensor::from_f32(shape, &data) }
+}
+
+const RECSYS_PROG: &str = r#"[
+  {"op": "fc", "out": "bot0", "in": "dense", "w": "bot_w0", "b": "bot_b0", "act": "relu"},
+  {"op": "fc", "out": "bot1", "in": "bot0", "w": "bot_w1", "b": "bot_b1", "act": "relu"},
+  {"op": "embed_pool", "out": "p0", "indices": "indices", "table": "emb_0", "slice": 0},
+  {"op": "embed_pool", "out": "p1", "indices": "indices", "table": "emb_1", "slice": 1},
+  {"op": "concat", "out": "z", "in": ["p0", "p1", "bot1"]},
+  {"op": "fc", "out": "top0", "in": "z", "w": "top_w0", "b": "top_b0", "act": "relu"},
+  {"op": "fc", "out": "top1", "in": "top0", "w": "top_w1", "b": "top_b1", "act": "none"},
+  {"op": "unary", "fn": "sigmoid", "out": "prob", "in": "top1"}
+]"#;
+
+const CV_PROG: &str = r#"[
+  {"op": "conv2d", "out": "c1", "in": "image", "w": "conv1", "b": "b1", "act": "relu", "stride": 2, "pad": [0, 1]},
+  {"op": "conv2d", "out": "c2", "in": "c1", "w": "conv2", "b": "b2", "act": "relu", "stride": 2, "pad": [0, 1]},
+  {"op": "flatten", "out": "f", "in": "c2"},
+  {"op": "fc", "out": "logits", "in": "f", "w": "fc_w", "b": "fc_b", "act": "none"}
+]"#;
+
+/// Build a temp artifacts dir with recsys-lite (dense 8, 2 tables of
+/// 64x8, pool 4) and cv-lite (1x8x8 -> 4 classes) native artifacts.
+fn fixture_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("dcinfer_parity_{tag}_{}", std::process::id()));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut rng = Pcg32::seeded(1234);
+    let recsys = vec![
+        tensor(&mut rng, "emb_0", &[64, 8], 0.5),
+        tensor(&mut rng, "emb_1", &[64, 8], 0.5),
+        tensor(&mut rng, "bot_w0", &[16, 8], 0.3),
+        tensor(&mut rng, "bot_b0", &[16], 0.1),
+        tensor(&mut rng, "bot_w1", &[8, 16], 0.3),
+        tensor(&mut rng, "bot_b1", &[8], 0.1),
+        tensor(&mut rng, "top_w0", &[16, 24], 0.2),
+        tensor(&mut rng, "top_b0", &[16], 0.1),
+        tensor(&mut rng, "top_w1", &[1, 16], 0.2),
+        tensor(&mut rng, "top_b1", &[1], 0.1),
+    ];
+    write_weights_file(&dir.join("recsys.weights.bin"), &recsys).unwrap();
+    let cv = vec![
+        tensor(&mut rng, "conv1", &[4, 1, 3, 3], 0.3),
+        tensor(&mut rng, "b1", &[4], 0.1),
+        tensor(&mut rng, "conv2", &[8, 4, 3, 3], 0.2),
+        tensor(&mut rng, "b2", &[8], 0.1),
+        tensor(&mut rng, "fc_w", &[4, 32], 0.2),
+        tensor(&mut rng, "fc_b", &[4], 0.1),
+    ];
+    write_weights_file(&dir.join("cv.weights.bin"), &cv).unwrap();
+
+    let mut artifacts = Vec::new();
+    for b in [1usize, 4] {
+        artifacts.push(format!(
+            r#""recsys_fp32_b{b}": {{
+              "hlo": "recsys_b{b}.hlo.txt", "model": "recsys",
+              "weights": "recsys.weights.bin", "weight_params": [],
+              "precision": "fp32", "program": {RECSYS_PROG},
+              "inputs": [
+                {{"name": "dense", "dtype": "f32", "shape": [{b}, 8]}},
+                {{"name": "indices", "dtype": "i32", "shape": [{b}, 2, 4]}}
+              ],
+              "outputs": [{{"name": "prob", "dtype": "f32", "shape": [{b}, 1]}}],
+              "batch": {b}
+            }}"#
+        ));
+    }
+    for b in [1usize, 2] {
+        artifacts.push(format!(
+            r#""cv_tiny_b{b}": {{
+              "hlo": "cv_b{b}.hlo.txt", "model": "cv",
+              "weights": "cv.weights.bin", "weight_params": [],
+              "precision": "fp32", "program": {CV_PROG},
+              "inputs": [{{"name": "image", "dtype": "f32", "shape": [{b}, 1, 8, 8]}}],
+              "outputs": [{{"name": "logits", "dtype": "f32", "shape": [{b}, 4]}}],
+              "batch": {b}
+            }}"#
+        ));
+    }
+    let manifest = format!(
+        r#"{{
+          "version": 1,
+          "models": {{
+            "recsys": {{"dense_dim": 8, "emb_dim": 8, "n_tables": 2, "pool": 4, "rows_per_table": 64}},
+            "cv": {{"in_hw": 8, "channels": 1, "classes": 4}}
+          }},
+          "artifacts": {{ {} }}
+        }}"#,
+        artifacts.join(",\n")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+fn run_single(art: &dyn LoadedArtifact, req: &InferRequest) -> Vec<f32> {
+    let inputs = stack_rows(std::slice::from_ref(req), 1).unwrap();
+    art.run(&inputs).unwrap().iter().flat_map(|t| t.as_f32().unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Native backend: every precision against the fp32 reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_precisions_agree_within_quant_error_bounds() {
+    let dir = fixture_dir("prec");
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rng = Pcg32::seeded(5);
+    let mut dense = vec![0f32; 4 * 8];
+    rng.fill_normal(&mut dense, 0.0, 1.0);
+    let idx: Vec<i32> = (0..4 * 2 * 4).map(|_| rng.below(64) as i32).collect();
+    let inputs = vec![
+        HostTensor::from_f32(&[4, 8], &dense),
+        HostTensor::from_i32(&[4, 2, 4], &idx),
+    ];
+
+    let reference = NativeBackend::new(Precision::Fp32)
+        .load(&manifest, "recsys_fp32_b4")
+        .unwrap()
+        .run(&inputs)
+        .unwrap()[0]
+        .as_f32()
+        .unwrap();
+    for p in &reference {
+        assert!(*p > 0.0 && *p < 1.0, "prob {p} outside (0,1)");
+    }
+
+    for p in [Precision::Fp16, Precision::I8Acc32, Precision::I8Acc16] {
+        let backend = NativeBackend::new(p);
+        assert_eq!(backend.precision(), p);
+        assert_eq!(backend.label(), format!("native/{p}"));
+        let got = backend
+            .load(&manifest, "recsys_fp32_b4")
+            .unwrap()
+            .run(&inputs)
+            .unwrap()[0]
+            .as_f32()
+            .unwrap();
+        let db = sqnr_db(&reference, &got);
+        assert!(
+            db >= p.min_sqnr_db(),
+            "{p}: sqnr {db:.1} dB below the {:.0} dB bound",
+            p.min_sqnr_db()
+        );
+    }
+}
+
+#[test]
+fn native_cv_precisions_agree_on_conv_path() {
+    let dir = fixture_dir("cvprec");
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rng = Pcg32::seeded(9);
+    let mut image = vec![0f32; 2 * 64];
+    rng.fill_normal(&mut image, 0.0, 1.0);
+    let inputs = vec![HostTensor::from_f32(&[2, 1, 8, 8], &image)];
+
+    let reference = NativeBackend::new(Precision::Fp32)
+        .load(&manifest, "cv_tiny_b2")
+        .unwrap()
+        .run(&inputs)
+        .unwrap()[0]
+        .as_f32()
+        .unwrap();
+    for p in [Precision::Fp16, Precision::I8Acc32, Precision::I8Acc16] {
+        let got = NativeBackend::new(p)
+            .load(&manifest, "cv_tiny_b2")
+            .unwrap()
+            .run(&inputs)
+            .unwrap()[0]
+            .as_f32()
+            .unwrap();
+        let db = sqnr_db(&reference, &got);
+        assert!(db >= p.min_sqnr_db(), "{p}: conv sqnr {db:.1} dB");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: mixed recsys+CV traffic on NativeBackend at i8acc16
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_traffic_on_native_i8acc16_passes_tolerance_with_attribution() {
+    let dir = fixture_dir("mixed");
+    let manifest = Manifest::load(&dir).unwrap();
+    let recsys = RecSysService::from_manifest(&manifest).unwrap();
+    let cv = CvService::from_manifest(&manifest).unwrap();
+    let spec = BackendSpec::Native { precision: Precision::I8Acc16 };
+    let frontend = ServingFrontend::start(
+        FrontendConfig {
+            artifacts_dir: dir.clone(),
+            executors: 2,
+            max_wait_us: 1_000.0,
+            backend: spec,
+            ..Default::default()
+        },
+        vec![Arc::new(recsys.clone()), Arc::new(cv.clone())],
+    )
+    .unwrap();
+    assert_eq!(frontend.backend("recsys"), Some(spec));
+    assert_eq!(frontend.backend("cv"), Some(spec));
+
+    // fp32 reference artifacts (the tolerance model's baseline)
+    let fp32 = NativeBackend::new(Precision::Fp32);
+    let ref_rec = fp32.load(&manifest, "recsys_fp32_b1").unwrap();
+    let ref_cv = fp32.load(&manifest, "cv_tiny_b1").unwrap();
+
+    let per_model = 20u64;
+    let mut rng = Pcg32::seeded(77);
+    let mut pending = Vec::new();
+    for i in 0..per_model {
+        let mut req = recsys.synth_request(2 * i, &mut rng, 200.0);
+        let reference = run_single(ref_rec.as_ref(), &req);
+        req.arrival = Instant::now();
+        pending.push(("recsys", frontend.submit(req).unwrap(), reference));
+        let mut req = cv.synth_request(2 * i + 1, &mut rng, 0.0);
+        let reference = run_single(ref_cv.as_ref(), &req);
+        req.arrival = Instant::now();
+        pending.push(("cv", frontend.submit(req).unwrap(), reference));
+    }
+
+    // collect; compare aggregate per model (the statistically meaningful
+    // object for an SQNR bound)
+    let mut refs: std::collections::BTreeMap<&str, Vec<f32>> = Default::default();
+    let mut gots: std::collections::BTreeMap<&str, Vec<f32>> = Default::default();
+    for (model, rx, reference) in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let rows = resp.outcome.as_ref().expect("mixed i8acc16 response ok");
+        assert_eq!(resp.backend, "native/i8acc16", "response attribution");
+        refs.entry(model).or_default().extend(reference);
+        gots.entry(model)
+            .or_default()
+            .extend(rows.iter().flat_map(|t| t.as_f32().unwrap()));
+    }
+    for (model, reference) in &refs {
+        let db = sqnr_db(reference, &gots[model]);
+        assert!(
+            db >= Precision::I8Acc16.min_sqnr_db(),
+            "{model}: i8acc16 sqnr {db:.1} dB below bound"
+        );
+    }
+
+    // per-model metrics attribute every batch to the int8 native path
+    let mut total = 0u64;
+    for (model, snap) in frontend.snapshot_all() {
+        assert_eq!(snap.served, per_model, "{model} served {}", snap.served);
+        assert_eq!(snap.failed, 0, "{model} had failures");
+        assert!(
+            snap.by_backend
+                .iter()
+                .any(|(l, _, reqs)| l == "native/i8acc16" && *reqs == per_model),
+            "{model} attribution: {:?}",
+            snap.by_backend
+        );
+        total += snap.served;
+    }
+    assert_eq!(total, 2 * per_model);
+    frontend.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Per-model backend overrides: fp32 and int8 lanes in one frontend
+// ---------------------------------------------------------------------------
+
+#[test]
+fn per_model_backend_overrides_split_pools() {
+    let dir = fixture_dir("override");
+    let manifest = Manifest::load(&dir).unwrap();
+    let recsys = RecSysService::from_manifest(&manifest).unwrap();
+    let cv = CvService::from_manifest(&manifest).unwrap();
+    let fp32 = BackendSpec::Native { precision: Precision::Fp32 };
+    let int8 = BackendSpec::Native { precision: Precision::I8Acc32 };
+    let frontend = ServingFrontend::start(
+        FrontendConfig {
+            artifacts_dir: dir.clone(),
+            executors: 1,
+            max_wait_us: 500.0,
+            backend: fp32,
+            model_backends: vec![("cv".to_string(), int8)],
+            ..Default::default()
+        },
+        vec![Arc::new(recsys.clone()), Arc::new(cv.clone())],
+    )
+    .unwrap();
+    assert_eq!(frontend.backend("recsys"), Some(fp32));
+    assert_eq!(frontend.backend("cv"), Some(int8));
+
+    let mut rng = Pcg32::seeded(11);
+    let mut rec_rx = Vec::new();
+    let mut cv_rx = Vec::new();
+    for i in 0..6 {
+        let mut r = recsys.synth_request(i, &mut rng, 200.0);
+        r.arrival = Instant::now();
+        rec_rx.push(frontend.submit(r).unwrap());
+        let mut r = cv.synth_request(100 + i, &mut rng, 0.0);
+        r.arrival = Instant::now();
+        cv_rx.push(frontend.submit(r).unwrap());
+    }
+    for rx in rec_rx {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(resp.is_ok());
+        assert_eq!(resp.backend, "native/fp32");
+    }
+    for rx in cv_rx {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(resp.is_ok());
+        assert_eq!(resp.backend, "native/i8acc32");
+    }
+    let rec_snap = frontend.metrics("recsys").unwrap().snapshot();
+    assert!(rec_snap.by_backend.iter().all(|(l, _, _)| l == "native/fp32"));
+    let cv_snap = frontend.metrics("cv").unwrap().snapshot();
+    assert!(cv_snap.by_backend.iter().all(|(l, _, _)| l == "native/i8acc32"));
+    frontend.shutdown();
+
+    // an override naming an unregistered model is a config error, not a
+    // silent no-op
+    let bad = ServingFrontend::start(
+        FrontendConfig {
+            artifacts_dir: dir.clone(),
+            backend: fp32,
+            model_backends: vec![("no_such_model".to_string(), int8)],
+            ..Default::default()
+        },
+        vec![Arc::new(recsys.clone())],
+    );
+    assert!(bad.is_err(), "typo'd backend override must be rejected");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// PJRT vs native on real artifacts (feature + `make artifacts` gated)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+#[test]
+fn pjrt_and_native_agree_on_real_artifacts() {
+    use dcinfer::runtime::PjrtBackend;
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let name = "recsys_fp32_b16";
+    let Ok(meta) = manifest.artifact(name) else { return };
+    if !meta.has_native_program() {
+        eprintln!("skipping: artifacts predate native op programs (rerun `make artifacts`)");
+        return;
+    }
+    let rows = manifest.model_config("recsys").unwrap().get("rows_per_table").as_usize().unwrap();
+
+    let mut rng = Pcg32::seeded(41);
+    let dense_meta = &meta.inputs[0];
+    let idx_meta = &meta.inputs[1];
+    let mut dense = vec![0f32; dense_meta.elem_count()];
+    rng.fill_normal(&mut dense, 0.0, 1.0);
+    let idx: Vec<i32> =
+        (0..idx_meta.elem_count()).map(|_| rng.below(rows as u32) as i32).collect();
+    let inputs = vec![
+        HostTensor::from_f32(&dense_meta.shape, &dense),
+        HostTensor::from_i32(&idx_meta.shape, &idx),
+    ];
+
+    let pjrt = PjrtBackend::cpu().unwrap();
+    let reference = pjrt.load(&manifest, name).unwrap().run(&inputs).unwrap()[0]
+        .as_f32()
+        .unwrap();
+    for p in Precision::all() {
+        let got = NativeBackend::new(p)
+            .load(&manifest, name)
+            .unwrap()
+            .run(&inputs)
+            .unwrap()[0]
+            .as_f32()
+            .unwrap();
+        let db = sqnr_db(&reference, &got);
+        assert!(db >= p.min_sqnr_db(), "native/{p} vs pjrt: sqnr {db:.1} dB");
+    }
+}

@@ -1,7 +1,11 @@
 //! Cross-language correctness seal: replay the JAX-evaluated golden
 //! inputs through the Rust PJRT runtime and assert the outputs match.
 //!
-//! Requires `make artifacts` (skips cleanly otherwise).
+//! Requires `make artifacts` (skips cleanly otherwise) and the `pjrt`
+//! feature (the whole file drives the XLA engine; the native backend's
+//! equivalent seal is `tests/backend_parity.rs`).
+
+#![cfg(feature = "pjrt")]
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -139,10 +143,12 @@ fn executor_pool_round_trip() {
     };
     let pool = dcinfer::runtime::ExecutorPool::new(
         2,
+        dcinfer::runtime::BackendSpec::Pjrt,
         dir.clone(),
         vec!["recsys_fp32_b1".to_string()],
     )
     .unwrap();
+    assert_eq!(pool.pick().backend, "pjrt/fp32");
     let g = goldens(&dir);
     let inputs = vec![
         g["recsys_fp32_b1/in0"].clone(),
