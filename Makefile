@@ -1,0 +1,23 @@
+# Build-time entry points. The serving path is pure Rust (see rust/);
+# Python/JAX runs only here, AOT-compiling the model artifacts.
+
+ARTIFACTS := rust/artifacts
+
+.PHONY: artifacts artifacts-fast test clean
+
+# Lower every model family to HLO text + weights + manifest. The Rust
+# runtime and benches load these from rust/artifacts (the crate's CWD
+# under `cargo run`/`cargo test`).
+artifacts:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS)/model.hlo.txt
+
+# CI smoke: only the smallest recsys artifacts.
+artifacts-fast:
+	cd python && python -m compile.aot --fast --out ../$(ARTIFACTS)/model.hlo.txt
+
+test:
+	cd python && python -m pytest tests/ -q
+	cd rust && cargo build --release && cargo test -q
+
+clean:
+	rm -rf $(ARTIFACTS)

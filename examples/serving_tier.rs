@@ -2,8 +2,11 @@
 //! model traffic — recommendation, CV and NMT requests (§2's three
 //! workload families) batched per model on a shared executor pool —
 //! under a synthetic production-like load, reporting per-model latency
-//! and throughput. This is the experiment recorded in EXPERIMENTS.md
-//! §E2E.
+//! and throughput plus the sparse tier's per-table cache hit rates.
+//! The frontend runs the native FBGEMM-path backend with a sharded
+//! sparse tier (`FrontendConfig::sparse_tier`), so the recsys lane's
+//! embedding tables live on in-process shard servers behind a hot-row
+//! cache instead of being copied into every executor (§4).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serving_tier
@@ -15,8 +18,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 use dcinfer::coordinator::{FrontendConfig, ModelService, ServingFrontend};
+use dcinfer::embedding::SparseTierConfig;
 use dcinfer::models::{CvService, NmtService, RecSysService};
-use dcinfer::runtime::Manifest;
+use dcinfer::runtime::{BackendSpec, Manifest, Precision};
 use dcinfer::util::rng::Pcg32;
 
 fn main() -> Result<()> {
@@ -36,9 +40,24 @@ fn main() -> Result<()> {
         services.push(Arc::new(CvService::from_manifest(&manifest)?));
     }
 
-    let frontend =
-        ServingFrontend::start(FrontendConfig { executors: 2, ..Default::default() }, services)?;
-    println!("serving frontend up (2 executors), models: {:?}", frontend.models());
+    let frontend = ServingFrontend::start(
+        FrontendConfig {
+            executors: 2,
+            backend: BackendSpec::Native { precision: Precision::Fp32 },
+            sparse_tier: Some(SparseTierConfig {
+                shards: 4,
+                replication: 1,
+                cache_capacity_rows: 8192,
+                admit_after: 2,
+            }),
+            ..Default::default()
+        },
+        services,
+    )?;
+    println!(
+        "serving frontend up (2 executors, native backend, sparse tier on), models: {:?}",
+        frontend.models()
+    );
     let lanes: Vec<Arc<dyn ModelService>> =
         frontend.models().iter().map(|m| frontend.service(m).unwrap().clone()).collect();
 
@@ -76,6 +95,32 @@ fn main() -> Result<()> {
     }
     println!("\nend-to-end: {requests} requests in {wall:.2}s ({:.0} req/s)", requests as f64 / wall);
     println!("successful responses: {ok}/{requests}");
+
+    // cache hit rate alongside latency: the sparse tier's whole point
+    let tier = frontend.sparse_tier().expect("sparse tier configured above");
+    let s = tier.snapshot();
+    println!(
+        "\nsparse tier: {} shards, {} lookups over {} indices, {:.2} MB boundary traffic",
+        s.shards,
+        s.lookups,
+        s.indices,
+        s.boundary_bytes() as f64 / 1e6
+    );
+    for t in &s.tables {
+        println!(
+            "  {}: hit rate {:.1}% ({} evictions, {} rows fetched for admission)",
+            t.key,
+            t.hit_rate() * 100.0,
+            t.evictions,
+            t.insertions
+        );
+    }
+    // only the recsys family has embedding tables; with a partial
+    // artifact set (no recsys) the tier is legitimately idle
+    if frontend.models().iter().any(|m| m == "recsys") {
+        assert!(s.lookups > 0, "recsys traffic must flow through the sparse tier");
+    }
+
     assert_eq!(ok, requests, "some requests failed");
     assert_eq!(served_total, requests, "per-model served counts don't sum");
     frontend.shutdown();

@@ -76,6 +76,19 @@ def tensor_meta(name, shape, dtype):
             "shape": list(shape)}
 
 
+# Default shard count recorded in the manifest's sparse-tier metadata.
+SPARSE_SHARD_DEFAULT = 4
+
+
+def shard_row_ranges(rows, n):
+    """Row-range shard plan for one embedding table: the even ceil-split
+    the Rust sparse tier uses (embedding/shard.rs ShardPlan::even).
+    Returns [[lo, hi], ...] tiling 0..rows contiguously; trailing ranges
+    may be empty when rows < n."""
+    per = -(-rows // n)
+    return [[min(i * per, rows), min((i + 1) * per, rows)] for i in range(n)]
+
+
 # -- native-backend op programs ---------------------------------------------
 # The Rust runtime's NativeBackend (runtime/native.rs) interprets a small
 # per-artifact op program instead of the HLO, dispatching FCs to the
@@ -179,6 +192,16 @@ def build_recsys(out_dir, manifest, batches=(1, 4, 16, 64)):
         "pool": cfg.pool, "bottom_mlp": list(cfg.bottom_mlp),
         "top_mlp": list(cfg.top_mlp), "param_count": cfg.param_count(),
         "weights": "recsys.weights.bin",
+        # per-table row-range shard plan for the dis-aggregated sparse
+        # tier (rust embedding/shard.rs; validated by ShardPlan::from_json)
+        "sparse_shards": {
+            "default_count": SPARSE_SHARD_DEFAULT,
+            "tables": {
+                f"emb_{t}": shard_row_ranges(cfg.rows_per_table,
+                                             SPARSE_SHARD_DEFAULT)
+                for t in range(cfg.n_tables)
+            },
+        },
     }
     n_w = len(weights)
 

@@ -127,6 +127,38 @@ def test_cv_program_contract():
     _check_program(aot.cv_program(cfg), names, ["image"], ["logits"])
 
 
+def test_shard_row_ranges_tile_contiguously():
+    # the contract ShardPlan::from_json (rust) validates: contiguous
+    # coverage of 0..rows, ceil-split sizing
+    assert aot.shard_row_ranges(1000, 4) == [[0, 250], [250, 500],
+                                             [500, 750], [750, 1000]]
+    assert aot.shard_row_ranges(10, 3) == [[0, 4], [4, 8], [8, 10]]
+    # more shards than rows: trailing ranges empty but still tiling
+    assert aot.shard_row_ranges(2, 4) == [[0, 1], [1, 2], [2, 2], [2, 2]]
+    for rows, n in [(1, 1), (7, 2), (100, 8), (12345, 6)]:
+        ranges = aot.shard_row_ranges(rows, n)
+        assert len(ranges) == n
+        assert ranges[0][0] == 0 and ranges[-1][1] == rows
+        for (lo, hi), (lo2, _) in zip(ranges, ranges[1:]):
+            assert lo <= hi == lo2
+
+
+def test_recsys_model_config_carries_sparse_shard_plan():
+    with tempfile.TemporaryDirectory() as d:
+        man = {"version": 1, "models": {}, "artifacts": {}}
+        aot.build_recsys(d, man, batches=(1,))
+        shards = man["models"]["recsys"]["sparse_shards"]
+        assert shards["default_count"] == aot.SPARSE_SHARD_DEFAULT
+        cfg = M.RecsysConfig()
+        assert set(shards["tables"]) == {f"emb_{t}" for t in range(cfg.n_tables)}
+        for ranges in shards["tables"].values():
+            assert ranges == aot.shard_row_ranges(cfg.rows_per_table,
+                                                  aot.SPARSE_SHARD_DEFAULT)
+            assert ranges[-1][1] == cfg.rows_per_table
+        # the metadata must survive JSON round-tripping with the manifest
+        json.loads(json.dumps(man["models"]["recsys"]))
+
+
 def test_same_pad_matches_xla_same():
     # stride-2 3x3 on 16 -> out 8, one pad element on the high side
     assert aot._same_pad(16, 3, 2) == [0, 1]

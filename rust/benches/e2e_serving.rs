@@ -1,9 +1,9 @@
 //! End-to-end serving bench: the serving frontend (per-model dynamic
-//! batcher + executor pool) under increasing offered load — the
-//! latency/throughput table the E2E experiment records in
-//! EXPERIMENTS.md — followed by a backend/precision parity sweep that
-//! serves the same load through every available `BackendSpec` and
-//! emits `BENCH_backend_parity.json` with per-precision p50/p99.
+//! batcher + executor pool) under increasing offered load — the §4
+//! latency/throughput story — followed by a backend/precision parity
+//! sweep that serves the same load through every available
+//! `BackendSpec` and emits `BENCH_backend_parity.json` with
+//! per-precision p50/p99.
 //!
 //! Requires `make artifacts` (prints a skip message otherwise).
 

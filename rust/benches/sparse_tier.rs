@@ -1,0 +1,201 @@
+//! Sparse-tier bench (§2.1.1 + §4): pooled embedding lookups through
+//! the monolithic local table vs the sharded tier vs the sharded tier
+//! with its hot-row cache, at fp32 and int8 row-quantized precision.
+//!
+//! Reports per-lookup p50/p99 latency, the bytes that actually cross
+//! the tier boundary (index lists in, pooled partial sums out, plus
+//! cache-admission row fetches), and per-table cache hit rates — the
+//! measured counterpart of the analytic `coordinator::disagg` model:
+//! §4 argues a dis-aggregated sparse tier needs only a few GB/s at its
+//! boundary because pooling happens tier-side, and this bench checks
+//! that claim against a running implementation. Emits
+//! `BENCH_sparse_tier.json`. Needs no artifacts; `-- --smoke` runs a
+//! tiny configuration (CI regression check for the shard path).
+
+use std::time::Instant;
+
+use dcinfer::embedding::{EmbeddingShardService, EmbeddingTable, LookupBatch, SparseTierConfig};
+use dcinfer::util::bench::{keep, Table};
+use dcinfer::util::rng::Pcg32;
+use dcinfer::util::stats::Samples;
+
+struct TierResult {
+    name: String,
+    p50_us: f64,
+    p99_us: f64,
+    /// boundary bytes per tick (one pooled lookup per table)
+    bytes_per_tick: f64,
+    hit_rate: f64,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (rows, dim, n_tables, bags, pool, iters, n_batches) = if smoke {
+        (20_000usize, 32usize, 2usize, 16usize, 16usize, 2usize, 4usize)
+    } else {
+        (1_000_000, 64, 4, 64, 32, 20, 32)
+    };
+    println!("== sparse tier: monolithic vs sharded vs sharded + hot-row cache ==");
+    println!("({n_tables} tables of {rows} x {dim} fp32, {bags} bags x pool {pool}, zipf 1.05)\n");
+
+    let tables: Vec<EmbeddingTable> =
+        (0..n_tables).map(|t| EmbeddingTable::random(rows, dim, 100 + t as u64)).collect();
+    let mut rng = Pcg32::seeded(7);
+    // pre-generate the request stream: one LookupBatch per table per tick
+    let stream: Vec<Vec<LookupBatch>> = (0..n_batches)
+        .map(|_| tables.iter().map(|t| t.synth_batch(bags, pool, 1.05, &mut rng)).collect())
+        .collect();
+    let indices_per_tick = (n_tables * bags * pool) as f64;
+
+    let mut results: Vec<TierResult> = Vec::new();
+
+    // -- monolithic: local tables, no tier boundary at all ------------------
+    {
+        let mut out = vec![0f32; bags * dim];
+        let mut lat = Samples::new();
+        for _ in 0..iters {
+            for tick in &stream {
+                for (t, b) in tables.iter().zip(tick) {
+                    let t0 = Instant::now();
+                    t.sparse_lengths_sum(b, &mut out);
+                    keep(out[0]);
+                    lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                }
+            }
+        }
+        results.push(TierResult {
+            name: "monolithic".to_string(),
+            p50_us: lat.p50(),
+            p99_us: lat.p99(),
+            bytes_per_tick: 0.0,
+            hit_rate: 0.0,
+        });
+    }
+
+    // -- sharded configurations --------------------------------------------
+    let cache_rows = if smoke { 2_048 } else { 65_536 };
+    let configs = [
+        ("sharded", 0usize, false),
+        ("sharded+cache", cache_rows, false),
+        ("sharded+cache int8", cache_rows, true),
+    ];
+    for (name, cache, quantized) in configs {
+        results.push(run_tier(name, cache, quantized, &tables, &stream, iters));
+    }
+
+    let mut table = Table::new(&[
+        "config", "p50 us/lookup", "p99 us/lookup", "boundary KB/tick", "cache hit rate",
+    ]);
+    let mut json_rows = Vec::new();
+    for r in &results {
+        table.row(&[
+            r.name.clone(),
+            format!("{:.1}", r.p50_us),
+            format!("{:.1}", r.p99_us),
+            format!("{:.1}", r.bytes_per_tick / 1e3),
+            format!("{:.1}%", r.hit_rate * 100.0),
+        ]);
+        json_rows.push(format!(
+            "    {{\"config\": \"{}\", \"p50_us\": {:.2}, \"p99_us\": {:.2}, \
+             \"boundary_bytes_per_tick\": {:.0}, \"cache_hit_rate\": {:.4}}}",
+            r.name, r.p50_us, r.p99_us, r.bytes_per_tick, r.hit_rate
+        ));
+    }
+    table.print();
+
+    // §4 context: what would cross the boundary if rows (not pooled
+    // partials) were shipped, and the implied boundary bandwidth
+    let naive_bytes = indices_per_tick * (dim * 4) as f64;
+    println!("\nnaive remote-row fetch would move {:.1} KB/tick", naive_bytes / 1e3);
+    for r in results.iter().skip(1) {
+        let tick_us = r.p50_us * n_tables as f64;
+        let gbps = r.bytes_per_tick / (tick_us * 1e3).max(1e-9);
+        println!(
+            "{}: {:.2} GB/s at the measured rate ({:.1}x less traffic than remote rows)",
+            r.name,
+            gbps,
+            naive_bytes / r.bytes_per_tick.max(1.0)
+        );
+    }
+    println!("(the paper's §4 claim: a few GB/s suffices at the sparse-tier boundary)");
+
+    let json = format!(
+        "{{\n  \"bench\": \"sparse_tier\",\n  \"rows\": {rows}, \"dim\": {dim}, \
+         \"n_tables\": {n_tables}, \"bags\": {bags}, \"pool\": {pool},\n  \"configs\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_sparse_tier.json", &json).expect("write BENCH_sparse_tier.json");
+    println!("\nwrote BENCH_sparse_tier.json ({} configs)", results.len());
+}
+
+/// Drive one tier configuration over the stream and measure.
+fn run_tier(
+    name: &str,
+    cache_rows: usize,
+    quantized: bool,
+    tables: &[EmbeddingTable],
+    stream: &[Vec<LookupBatch>],
+    iters: usize,
+) -> TierResult {
+    let svc = EmbeddingShardService::start(SparseTierConfig {
+        shards: 4,
+        replication: 1,
+        cache_capacity_rows: cache_rows,
+        admit_after: 2,
+    })
+    .expect("tier start");
+    let ids: Vec<usize> = tables
+        .iter()
+        .enumerate()
+        .map(|(t, table)| {
+            svc.register_table(&format!("bench/emb_{t}"), table, quantized).expect("register")
+        })
+        .collect();
+    let (bags, dim) = (stream[0][0].bags(), tables[0].dim);
+    let mut out = vec![0f32; bags * dim];
+
+    // warm pass (not timed): fills the admission filter and cache
+    for tick in stream {
+        for (&id, b) in ids.iter().zip(tick) {
+            svc.lookup(id, b, &mut out).expect("lookup");
+        }
+    }
+
+    let s0 = svc.snapshot();
+    let mut lat = Samples::new();
+    for _ in 0..iters {
+        for tick in stream {
+            for (&id, b) in ids.iter().zip(tick) {
+                let t0 = Instant::now();
+                svc.lookup(id, b, &mut out).expect("lookup");
+                keep(out[0]);
+                lat.push(t0.elapsed().as_secs_f64() * 1e6);
+            }
+        }
+    }
+    let s1 = svc.snapshot();
+
+    let ticks = (iters * stream.len()) as f64;
+    let bytes = (s1.boundary_bytes() - s0.boundary_bytes()) as f64 / ticks;
+    let hits: u64 = s1.tables.iter().map(|t| t.hits).sum::<u64>()
+        - s0.tables.iter().map(|t| t.hits).sum::<u64>();
+    let probes: u64 = s1.tables.iter().map(|t| t.hits + t.misses).sum::<u64>()
+        - s0.tables.iter().map(|t| t.hits + t.misses).sum::<u64>();
+    let hit_rate = if probes == 0 { 0.0 } else { hits as f64 / probes as f64 };
+    if cache_rows > 0 {
+        println!("{name}: per-table hit rates over the measured window:");
+        for (t, (d1, d0)) in s1.tables.iter().zip(&s0.tables).enumerate() {
+            let h = d1.hits - d0.hits;
+            let m = d1.misses - d0.misses;
+            let rate = if h + m == 0 { 0.0 } else { h as f64 / (h + m) as f64 };
+            println!("  emb_{t}: {:.1}% ({} rows cached tier-wide)", rate * 100.0, s1.cached_rows);
+        }
+    }
+    TierResult {
+        name: name.to_string(),
+        p50_us: lat.p50(),
+        p99_us: lat.p99(),
+        bytes_per_tick: bytes,
+        hit_rate,
+    }
+}

@@ -8,6 +8,18 @@
 //! smallest variant that covers the batch (padding the tail — padded
 //! rows are computed and discarded, which is still far cheaper than
 //! running singles, exactly the paper's batching-efficiency argument).
+//!
+//! ```
+//! use dcinfer::coordinator::{BatchPolicy, DynamicBatcher, InferRequest};
+//!
+//! let mut b = DynamicBatcher::new(BatchPolicy::default());
+//! for id in 0..6 {
+//!     b.push(InferRequest::new("m", id, vec![], 100.0));
+//! }
+//! let formed = b.form().unwrap();
+//! assert_eq!(formed.requests.len(), 6);
+//! assert_eq!(formed.variant, 16); // smallest variant covering 6
+//! ```
 
 use std::collections::VecDeque;
 use std::time::Instant;

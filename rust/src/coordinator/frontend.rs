@@ -10,7 +10,33 @@
 //! fp32 vs int8 serving on live mixed-model traffic. Requests are
 //! dispatched by their `model` field; batch failures are delivered to
 //! every submitter as an error response; shutdown drains queues and
-//! waits for in-flight batches before tearing down the pools.
+//! waits for in-flight batches before tearing down the pools. With
+//! [`FrontendConfig::sparse_tier`] set, native lanes share one
+//! dis-aggregated [`EmbeddingShardService`] for their embedding tables.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use dcinfer::coordinator::{FrontendConfig, ServingFrontend};
+//! use dcinfer::embedding::SparseTierConfig;
+//! use dcinfer::models::RecSysService;
+//! use dcinfer::runtime::{BackendSpec, Manifest, Precision};
+//!
+//! let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+//! let recsys = RecSysService::from_manifest(&manifest)?;
+//! let frontend = ServingFrontend::start(
+//!     FrontendConfig {
+//!         backend: BackendSpec::Native { precision: Precision::Fp32 },
+//!         sparse_tier: Some(SparseTierConfig::default()),
+//!         ..Default::default()
+//!     },
+//!     vec![Arc::new(recsys.clone())],
+//! )?;
+//! let mut rng = dcinfer::util::rng::Pcg32::seeded(1);
+//! let rx = frontend.submit(recsys.synth_request(0, &mut rng, 0.0))?;
+//! println!("p = {:?}", rx.recv()?.scalar_f32());
+//! frontend.shutdown();
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -21,6 +47,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::embedding::shard::{EmbeddingShardService, SparseTierConfig};
 use crate::runtime::{BackendSpec, ExecutorPool, Manifest};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
@@ -43,6 +70,12 @@ pub struct FrontendConfig {
     pub backend: BackendSpec,
     /// per-model backend overrides: `(model_id, spec)` — the A/B knob
     pub model_backends: Vec<(String, BackendSpec)>,
+    /// dis-aggregated sparse tier (§4): when set, native-backend lanes
+    /// shard their embedding tables across one shared
+    /// [`EmbeddingShardService`] with a hot-row cache instead of
+    /// holding per-executor copies (PJRT lanes execute HLO with tables
+    /// baked in and are unaffected)
+    pub sparse_tier: Option<SparseTierConfig>,
 }
 
 impl Default for FrontendConfig {
@@ -54,6 +87,7 @@ impl Default for FrontendConfig {
             route: RoutePolicy::LeastLoaded,
             backend: BackendSpec::default(),
             model_backends: Vec::new(),
+            sparse_tier: None,
         }
     }
 }
@@ -68,6 +102,9 @@ impl FrontendConfig {
                 !self.model_backends[..i].iter().any(|(m, _)| m == model),
                 "duplicate backend override for model {model}"
             );
+        }
+        if let Some(st) = &self.sparse_tier {
+            st.validate()?;
         }
         Ok(())
     }
@@ -133,6 +170,7 @@ pub struct ServingFrontend {
     lanes: BTreeMap<String, Lane>,
     inflight: Arc<InFlight>,
     executor_pools: Vec<Arc<ExecutorPool>>,
+    sparse: Option<Arc<EmbeddingShardService>>,
 }
 
 impl ServingFrontend {
@@ -185,15 +223,37 @@ impl ServingFrontend {
                 None => groups.push((*spec, names)),
             }
         }
+        // one shared sparse tier for every native lane (§4: the sparse
+        // half of the model is dis-aggregated once, not per executor).
+        // Only the native backend routes embed_pool through the tier, so
+        // a config with no native lane would spawn a tier nothing uses
+        // and report all-zero stats — warn and skip instead.
+        let sparse = match &cfg.sparse_tier {
+            Some(st) => {
+                let any_native = lane_variants.iter().any(|(_, _, spec)| spec.is_native());
+                if any_native {
+                    Some(EmbeddingShardService::start(st.clone())?)
+                } else {
+                    eprintln!(
+                        "warning: sparse_tier configured but no lane runs the native backend \
+                         (PJRT executes HLO with tables baked in); skipping the sparse tier"
+                    );
+                    None
+                }
+            }
+            None => None,
+        };
+
         let mut pools: Vec<(BackendSpec, Arc<ExecutorPool>, Arc<Router>)> = Vec::new();
         for (spec, mut names) in groups {
             names.sort();
             names.dedup();
-            let pool = Arc::new(ExecutorPool::new(
+            let pool = Arc::new(ExecutorPool::with_sparse(
                 cfg.executors,
                 spec,
                 cfg.artifacts_dir.clone(),
                 names,
+                sparse.clone(),
             )?);
             let router = Arc::new(Router::new(cfg.executors, cfg.route)?);
             pools.push((spec, pool, router));
@@ -207,7 +267,7 @@ impl ServingFrontend {
                 .find(|(s, _, _)| *s == spec)
                 .map(|(_, p, r)| (p.clone(), r.clone()))
                 .expect("every lane spec has a pool");
-            let metrics = Arc::new(ServeMetrics::new());
+            let metrics = Arc::new(ServeMetrics::with_sparse(sparse.clone()));
             let (tx, rx) = channel::<Submission>();
             let policy = BatchPolicy {
                 variants: variants.iter().map(|(b, _)| *b).collect(),
@@ -239,7 +299,13 @@ impl ServingFrontend {
             lanes,
             inflight,
             executor_pools: pools.into_iter().map(|(_, p, _)| p).collect(),
+            sparse,
         })
+    }
+
+    /// The shared sparse tier, when one is configured.
+    pub fn sparse_tier(&self) -> Option<&Arc<EmbeddingShardService>> {
+        self.sparse.as_ref()
     }
 
     /// Registered model ids, in routing-table order.
@@ -491,6 +557,20 @@ mod tests {
             ..Default::default()
         };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_sparse_tier() {
+        let cfg = FrontendConfig {
+            sparse_tier: Some(SparseTierConfig { shards: 4, replication: 3, ..Default::default() }),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        let ok = FrontendConfig {
+            sparse_tier: Some(SparseTierConfig::default()),
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]

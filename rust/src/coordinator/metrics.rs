@@ -4,16 +4,20 @@
 //! registered model, so heterogeneous families are tracked separately.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::embedding::shard::{EmbeddingShardService, SparseTierSnapshot};
 use crate::util::stats::Samples;
 
-/// Shared metrics sink (one per model lane).
+/// Shared metrics sink (one per model lane). When the frontend runs a
+/// sparse tier, every lane's sink also carries a handle to it so
+/// snapshots include the tier-wide per-table cache counters.
 #[derive(Debug)]
 pub struct ServeMetrics {
     inner: Mutex<Inner>,
     started: Instant,
+    sparse: Option<Arc<EmbeddingShardService>>,
 }
 
 #[derive(Debug, Default)]
@@ -50,6 +54,9 @@ pub struct MetricsSnapshot {
     /// which backend/precision executed the traffic:
     /// `(label, batches, requests)` per label seen
     pub by_backend: Vec<(String, u64, u64)>,
+    /// sparse-tier counters (hit/miss/eviction per table, boundary
+    /// bytes) — shared across lanes, `None` without a sparse tier
+    pub sparse: Option<SparseTierSnapshot>,
 }
 
 impl Default for ServeMetrics {
@@ -60,7 +67,12 @@ impl Default for ServeMetrics {
 
 impl ServeMetrics {
     pub fn new() -> ServeMetrics {
-        ServeMetrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
+        Self::with_sparse(None)
+    }
+
+    /// A sink that also snapshots the given sparse tier's counters.
+    pub fn with_sparse(sparse: Option<Arc<EmbeddingShardService>>) -> ServeMetrics {
+        ServeMetrics { inner: Mutex::new(Inner::default()), started: Instant::now(), sparse }
     }
 
     /// Record one served request.
@@ -120,6 +132,7 @@ impl ServeMetrics {
                 .iter()
                 .map(|(k, &(b, r))| (k.clone(), b, r))
                 .collect(),
+            sparse: self.sparse.as_ref().map(|t| t.snapshot()),
         }
     }
 }
@@ -148,6 +161,8 @@ impl MetricsSnapshot {
         for (label, batches, requests) in &self.by_backend {
             println!("backend {label}: {batches} batches / {requests} requests");
         }
+        // `sparse` is tier-global (shared by every lane), so it is not
+        // printed here — print it once per frontend, see `dcinfer serve`
     }
 }
 

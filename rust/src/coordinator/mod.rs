@@ -20,6 +20,11 @@
 //! - [`batcher`]: deadline-aware dynamic batching that picks the AOT
 //!   batch variant (b1/b4/b16/b64) for each formed batch.
 //! - [`disagg`]: the §4 bandwidth model for the tier boundary.
+//! - sparse tier: with [`FrontendConfig::sparse_tier`] set, native
+//!   lanes dis-aggregate their embedding tables across one shared
+//!   [`crate::embedding::EmbeddingShardService`] (row-wise shards + a
+//!   hot-row cache); [`MetricsSnapshot::sparse`] carries its per-table
+//!   hit/miss/eviction counters and boundary-byte totals.
 //!
 //! Requests carry a `model` routing key and per-request input tensors;
 //! responses carry per-request output slices or an [`InferError`], so

@@ -8,6 +8,25 @@
 //! into per-request slices. The dependency points from model to tier:
 //! new workloads plug in by implementing this trait, the frontend never
 //! learns a tensor layout.
+//!
+//! The default batch layout is row stacking with zero padding:
+//!
+//! ```
+//! use dcinfer::coordinator::{scatter_rows, stack_rows, InferRequest};
+//! use dcinfer::runtime::HostTensor;
+//!
+//! let reqs: Vec<InferRequest> = (0..2)
+//!     .map(|id| {
+//!         let t = HostTensor::from_f32(&[2], &[id as f32, -(id as f32)]);
+//!         InferRequest::new("m", id, vec![t], 100.0)
+//!     })
+//!     .collect();
+//! let batch = stack_rows(&reqs, 4)?; // padded to the b4 variant
+//! assert_eq!(batch[0].shape, vec![4, 2]);
+//! let rows = scatter_rows(&batch, reqs.len())?;
+//! assert_eq!(rows[1][0].data, reqs[1].inputs[0].data);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 use anyhow::{bail, ensure, Result};
 

@@ -1,0 +1,291 @@
+//! Bounded hot-row cache for the sharded sparse tier (§2.2, and the
+//! caching result of Gupta et al. / Hsia et al.: the production id
+//! distribution has a hot zipf head, so a cache holding a small
+//! fraction of the rows absorbs a large fraction of the lookups).
+//!
+//! Design:
+//!
+//! - **CLOCK eviction** over a fixed number of row slots — one bit of
+//!   recency per slot, no linked lists on the hot path.
+//! - **Frequency-gated admission** (TinyLFU-style): a small array of
+//!   saturating 8-bit counters, indexed by key hash, counts misses; a
+//!   row is only fetched-and-inserted once it has missed
+//!   `admit_after` times. This is what keeps cache fills from
+//!   re-inflating the tier-boundary traffic the cache exists to cut:
+//!   zipf-tail rows miss once and are never fetched as full rows.
+//! - Rows are cached **dequantized** (fp32), so a hit costs no
+//!   arithmetic beyond the pooled accumulation and the int8 and fp32
+//!   shard paths share one cache.
+//!
+//! Counters are per registered table (hits / misses / insertions /
+//! evictions) and are surfaced through the tier snapshot into
+//! [`crate::coordinator::ServeMetrics`].
+
+use std::collections::HashMap;
+
+/// Per-table cache counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl CacheCounters {
+    /// Hit fraction over all probes (0.0 when the table was never probed).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+/// Outcome of one cache probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// The row was cached; its values were appended to the sink.
+    Hit,
+    /// Not cached. `admit` asks the caller to fetch the full row from
+    /// its shard and [`HotRowCache::insert`] it.
+    Miss { admit: bool },
+}
+
+struct Slot {
+    key: u64,
+    referenced: bool,
+    data: Vec<f32>,
+}
+
+/// Bounded dequantized-row cache shared by every table of a sparse
+/// tier. Not internally synchronized — the owning tier wraps it in a
+/// `Mutex`.
+pub struct HotRowCache {
+    capacity: usize,
+    admit_after: u8,
+    map: HashMap<u64, usize>,
+    slots: Vec<Slot>,
+    hand: usize,
+    freq: Vec<u8>,
+    freq_misses: u64,
+    tables: Vec<CacheCounters>,
+}
+
+fn key_of(table: u32, row: u32) -> u64 {
+    ((table as u64) << 32) | row as u64
+}
+
+/// splitmix64 finalizer — cheap, well-mixed hash for the counter filter.
+fn mix(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+impl HotRowCache {
+    /// `capacity_rows == 0` disables caching (every probe misses with
+    /// `admit: false`). `admit_after` is the miss count that triggers a
+    /// row fetch; 0 and 1 both mean "admit on first miss".
+    pub fn new(capacity_rows: usize, admit_after: u8) -> HotRowCache {
+        let freq_len = (capacity_rows * 4).next_power_of_two().max(1024);
+        HotRowCache {
+            capacity: capacity_rows,
+            admit_after: admit_after.max(1),
+            map: HashMap::new(),
+            slots: Vec::new(),
+            hand: 0,
+            freq: vec![0u8; if capacity_rows == 0 { 0 } else { freq_len }],
+            freq_misses: 0,
+            tables: Vec::new(),
+        }
+    }
+
+    /// Register one table; returns its cache table id (dense, in
+    /// registration order).
+    pub fn register_table(&mut self) -> u32 {
+        self.tables.push(CacheCounters::default());
+        (self.tables.len() - 1) as u32
+    }
+
+    /// Probe `(table, row)`. On a hit the cached row is appended to
+    /// `sink` (a flat `dim`-strided buffer) and the slot's recency bit
+    /// is set. Callers accumulate from `sink` after releasing the
+    /// cache lock, keeping the critical section to a memcpy so
+    /// concurrent executors don't serialize on the arithmetic.
+    pub fn lookup_collect(&mut self, table: u32, row: u32, sink: &mut Vec<f32>) -> CacheOutcome {
+        let counters = &mut self.tables[table as usize];
+        if self.capacity == 0 {
+            counters.misses += 1;
+            return CacheOutcome::Miss { admit: false };
+        }
+        let key = key_of(table, row);
+        if let Some(&slot) = self.map.get(&key) {
+            counters.hits += 1;
+            let s = &mut self.slots[slot];
+            s.referenced = true;
+            sink.extend_from_slice(&s.data);
+            return CacheOutcome::Hit;
+        }
+        counters.misses += 1;
+        // bump the admission filter; age it by halving once enough
+        // misses have flowed through (keeps the filter tracking the
+        // *recent* hot set, not all of history)
+        let idx = (mix(key) as usize) & (self.freq.len() - 1);
+        if self.freq[idx] < u8::MAX {
+            self.freq[idx] += 1;
+        }
+        let admit = self.freq[idx] >= self.admit_after;
+        self.freq_misses += 1;
+        if self.freq_misses >= self.freq.len() as u64 * 8 {
+            for f in &mut self.freq {
+                *f >>= 1;
+            }
+            self.freq_misses = 0;
+        }
+        CacheOutcome::Miss { admit }
+    }
+
+    /// Insert a fetched row, evicting via CLOCK if full. No-op when the
+    /// cache is disabled or the row is already present (a concurrent
+    /// caller may have inserted it first).
+    pub fn insert(&mut self, table: u32, row: u32, data: &[f32]) {
+        if self.capacity == 0 {
+            return;
+        }
+        let key = key_of(table, row);
+        if self.map.contains_key(&key) {
+            return;
+        }
+        if self.slots.len() < self.capacity {
+            // new rows start cold: they must earn their recency bit with
+            // a hit before they can displace a proven-hot row
+            self.slots.push(Slot { key, referenced: false, data: data.to_vec() });
+            self.map.insert(key, self.slots.len() - 1);
+            self.tables[table as usize].insertions += 1;
+            return;
+        }
+        // CLOCK: sweep until a slot with a clear recency bit turns up
+        loop {
+            let s = &mut self.slots[self.hand];
+            if s.referenced {
+                s.referenced = false;
+                self.hand = (self.hand + 1) % self.capacity;
+                continue;
+            }
+            let old_key = s.key;
+            s.key = key;
+            s.referenced = false;
+            s.data.clear();
+            s.data.extend_from_slice(data);
+            let slot = self.hand;
+            self.hand = (self.hand + 1) % self.capacity;
+            self.map.remove(&old_key);
+            self.map.insert(key, slot);
+            self.tables[(old_key >> 32) as usize].evictions += 1;
+            self.tables[table as usize].insertions += 1;
+            return;
+        }
+    }
+
+    /// Rows currently cached.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Per-table counters, indexed by cache table id.
+    pub fn counters(&self) -> &[CacheCounters] {
+        &self.tables
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: f32, dim: usize) -> Vec<f32> {
+        vec![v; dim]
+    }
+
+    #[test]
+    fn hit_collects_and_counts() {
+        let mut c = HotRowCache::new(8, 1);
+        let t = c.register_table();
+        let mut sink = Vec::new();
+        assert_eq!(c.lookup_collect(t, 3, &mut sink), CacheOutcome::Miss { admit: true });
+        c.insert(t, 3, &row(1.5, 2));
+        assert_eq!(c.lookup_collect(t, 3, &mut sink), CacheOutcome::Hit);
+        assert_eq!(sink, vec![1.5, 1.5]);
+        let s = c.counters()[t as usize];
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 1, 1));
+    }
+
+    #[test]
+    fn zero_capacity_disables_admission() {
+        let mut c = HotRowCache::new(0, 1);
+        let t = c.register_table();
+        let mut sink = Vec::new();
+        for r in 0..10 {
+            assert_eq!(c.lookup_collect(t, r, &mut sink), CacheOutcome::Miss { admit: false });
+        }
+        c.insert(t, 0, &[1.0]);
+        assert!(c.is_empty());
+        assert!(sink.is_empty());
+        assert_eq!(c.counters()[t as usize].misses, 10);
+    }
+
+    #[test]
+    fn admission_waits_for_repeat_misses() {
+        let mut c = HotRowCache::new(8, 3);
+        let t = c.register_table();
+        let mut sink = Vec::new();
+        assert_eq!(c.lookup_collect(t, 7, &mut sink), CacheOutcome::Miss { admit: false });
+        assert_eq!(c.lookup_collect(t, 7, &mut sink), CacheOutcome::Miss { admit: false });
+        assert_eq!(c.lookup_collect(t, 7, &mut sink), CacheOutcome::Miss { admit: true });
+    }
+
+    #[test]
+    fn clock_evicts_cold_rows_first() {
+        let mut c = HotRowCache::new(2, 1);
+        let t = c.register_table();
+        let mut sink = Vec::new();
+        c.insert(t, 0, &[0.0]);
+        c.insert(t, 1, &[1.0]);
+        // touch row 0 so its recency bit survives the first sweep
+        let _ = c.lookup_collect(t, 0, &mut sink);
+        c.insert(t, 2, &[2.0]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.lookup_collect(t, 0, &mut sink), CacheOutcome::Hit);
+        let s = c.counters()[t as usize];
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.insertions, 3);
+    }
+
+    #[test]
+    fn double_insert_is_idempotent() {
+        let mut c = HotRowCache::new(4, 1);
+        let t = c.register_table();
+        c.insert(t, 5, &[1.0]);
+        c.insert(t, 5, &[9.0]);
+        assert_eq!(c.len(), 1);
+        let mut sink = Vec::new();
+        assert_eq!(c.lookup_collect(t, 5, &mut sink), CacheOutcome::Hit);
+        assert_eq!(sink, vec![1.0]);
+    }
+
+    #[test]
+    fn tables_are_isolated() {
+        let mut c = HotRowCache::new(8, 1);
+        let a = c.register_table();
+        let b = c.register_table();
+        c.insert(a, 1, &[1.0]);
+        let mut sink = Vec::new();
+        assert_eq!(c.lookup_collect(b, 1, &mut sink), CacheOutcome::Miss { admit: true });
+        assert_eq!(c.lookup_collect(a, 1, &mut sink), CacheOutcome::Hit);
+    }
+}

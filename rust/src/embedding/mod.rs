@@ -6,11 +6,21 @@
 //! The access pattern is the paper's: mostly random rows, full row read
 //! per access, no temporal locality — performance is pure memory
 //! bandwidth, which the bench `embedding_bandwidth` measures.
+//!
+//! Beyond the local kernels, [`shard`] provides the dis-aggregated
+//! sparse tier of §4 — tables partitioned row-wise across in-process
+//! shard servers behind a [`cache::HotRowCache`] — which the serving
+//! stack uses when [`crate::coordinator::FrontendConfig::sparse_tier`]
+//! is set (the `sparse_tier` bench measures the boundary traffic).
 
+pub mod cache;
 pub mod quantized;
+pub mod shard;
 pub mod table;
 
+pub use cache::HotRowCache;
 pub use quantized::QuantizedTable;
+pub use shard::{EmbeddingShardService, ShardPlan, SparseTierConfig, SparseTierSnapshot};
 pub use table::EmbeddingTable;
 
 /// A batch of pooled lookups: `indices[bag]` are the rows summed into

@@ -1,0 +1,820 @@
+//! Dis-aggregated sparse tier (§2.1.1, §4): row-wise sharded embedding
+//! tables behind a pooled-lookup client with a hot-row cache.
+//!
+//! The paper's capacity argument: production embedding tables are too
+//! large to replicate per worker, so the sparse half of a
+//! recommendation model lives on its own tier, and what crosses the
+//! boundary is *pooled partial sums*, not rows — at production pooling
+//! factors a small fraction of the traffic of shipping rows
+//! ([`crate::coordinator::disagg`] models the same boundary
+//! analytically; the `sparse_tier` bench measures this implementation
+//! against it).
+//!
+//! Pieces:
+//!
+//! - [`ShardPlan`]: contiguous row ranges per shard (the same even
+//!   split the AOT compiler records in the manifest's per-table
+//!   `sparse_shards` metadata).
+//! - [`EmbeddingShardService`]: N in-process shard servers (one thread
+//!   each, the [`crate::runtime::Executor`] shape), each owning its row
+//!   slice at fp32 or int8 row-wise quantized precision, plus the
+//!   routing client. Tables register once and are shared by every
+//!   executor of a [`crate::coordinator::ServingFrontend`].
+//! - [`super::cache::HotRowCache`]: a bounded dequantized-row cache in
+//!   front of the shards with frequency-gated admission, absorbing the
+//!   zipf head of the id distribution.
+//!
+//! **Numerics contract — placement invariance.** Every accumulation on
+//! the sharded path (cache hits, per-shard partials, the final reduce)
+//! runs in f64 and rounds to f32 exactly once per output element, so
+//! for embedding rows of comparable magnitude (the trained-table case:
+//! the f64 mantissa's 29 extra bits dominate any reordering error of a
+//! bag's worth of same-scale f32 values) the result does not depend on
+//! shard count, replication, or cache state — resharding a tier does
+//! not change model outputs. Pathological inputs mixing ~1e8 and ~1e-3
+//! magnitudes in one bag can still flip the last ulp between
+//! orderings; the guarantee is about realistic tables, not adversarial
+//! ones. The monolithic reference for this contract is
+//! [`super::EmbeddingTable::sparse_lengths_sum_exact`], and the
+//! `sparse_tier` integration tests (deterministic seeds, N(0,1/√dim)
+//! tables) hold every (shards, replication, cache) configuration to
+//! bit-exact agreement with it in fp32.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+use super::cache::{CacheOutcome, HotRowCache};
+use super::quantized::QuantizedTable;
+use super::table::EmbeddingTable;
+use super::LookupBatch;
+
+/// Sparse-tier knobs (carried by
+/// [`crate::coordinator::FrontendConfig::sparse_tier`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SparseTierConfig {
+    /// total in-process shard servers
+    pub shards: usize,
+    /// shards holding a copy of each row range (must divide `shards`)
+    pub replication: usize,
+    /// hot-row cache size in rows across all tables (0 disables)
+    pub cache_capacity_rows: usize,
+    /// misses before a row is fetched and cached (admission filter)
+    pub admit_after: u8,
+}
+
+impl Default for SparseTierConfig {
+    fn default() -> Self {
+        SparseTierConfig { shards: 4, replication: 1, cache_capacity_rows: 4096, admit_after: 2 }
+    }
+}
+
+impl SparseTierConfig {
+    /// Reject configurations the tier cannot run with.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.shards >= 1, "sparse tier needs at least one shard");
+        ensure!(self.replication >= 1, "replication must be >= 1");
+        ensure!(
+            self.shards % self.replication == 0,
+            "shards ({}) must be a multiple of replication ({})",
+            self.shards,
+            self.replication
+        );
+        Ok(())
+    }
+
+    /// Distinct row ranges (shards / replication).
+    pub fn ranges(&self) -> usize {
+        self.shards / self.replication
+    }
+}
+
+/// Contiguous row ranges `[lo, hi)` covering a table — the unit of
+/// placement. [`ShardPlan::even`] is the split both this tier and the
+/// AOT compiler's manifest metadata use; [`ShardPlan::from_json`]
+/// parses (and validates) that metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub rows: usize,
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Even ceil-split of `rows` into `n_ranges` contiguous ranges
+    /// (trailing ranges may be empty when `rows < n_ranges`).
+    pub fn even(rows: usize, n_ranges: usize) -> ShardPlan {
+        assert!(n_ranges >= 1, "need at least one range");
+        let per = rows.div_ceil(n_ranges);
+        let ranges = (0..n_ranges)
+            .map(|i| ((i * per).min(rows), ((i + 1) * per).min(rows)))
+            .collect();
+        ShardPlan { rows, ranges }
+    }
+
+    /// The range index owning `row`.
+    pub fn range_of(&self, row: usize) -> usize {
+        debug_assert!(row < self.rows);
+        self.ranges.partition_point(|&(_, hi)| hi <= row)
+    }
+
+    /// Parse manifest shard metadata (`[[lo, hi], ...]`), validating
+    /// that the ranges tile `0..rows` contiguously.
+    pub fn from_json(j: &Json, rows: usize) -> Result<ShardPlan> {
+        let arr = j.as_arr().context("shard ranges must be a JSON array")?;
+        ensure!(!arr.is_empty(), "shard range list is empty");
+        let mut ranges = Vec::with_capacity(arr.len());
+        let mut expect = 0usize;
+        for r in arr {
+            let pair = r.as_arr().context("each shard range must be [lo, hi]")?;
+            ensure!(pair.len() == 2, "each shard range must be [lo, hi]");
+            let lo = pair[0].as_usize().context("range lo")?;
+            let hi = pair[1].as_usize().context("range hi")?;
+            ensure!(lo == expect && hi >= lo, "shard ranges must tile 0..rows contiguously");
+            expect = hi;
+            ranges.push((lo, hi));
+        }
+        ensure!(expect == rows, "shard ranges cover {expect} rows, table has {rows}");
+        Ok(ShardPlan { rows, ranges })
+    }
+}
+
+/// One shard's slice of a table, at the precision it was registered at.
+enum LocalTable {
+    F32 { lo: u32, table: EmbeddingTable },
+    Quant { lo: u32, table: QuantizedTable },
+}
+
+impl LocalTable {
+    fn dims(&self) -> (usize, usize, usize) {
+        match self {
+            LocalTable::F32 { lo, table } => (*lo as usize, table.rows, table.dim),
+            LocalTable::Quant { lo, table } => (*lo as usize, table.rows, table.dim),
+        }
+    }
+}
+
+enum ShardMsg {
+    Register {
+        table: usize,
+        lo: u32,
+        dim: usize,
+        data: Vec<f32>,
+        quantized: bool,
+        resp: Sender<()>,
+    },
+    Pool {
+        table: usize,
+        indices: Vec<u32>,
+        lengths: Vec<u32>,
+        resp: Sender<Result<Vec<f64>>>,
+    },
+    Fetch {
+        table: usize,
+        rows: Vec<u32>,
+        resp: Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+struct TableEntry {
+    key: String,
+    quantized: bool,
+    rows: usize,
+    dim: usize,
+    rows_per_range: usize,
+}
+
+#[derive(Default)]
+struct Registry {
+    by_key: HashMap<(String, bool), usize>,
+    tables: Vec<TableEntry>,
+}
+
+#[derive(Default)]
+struct TierCounters {
+    lookups: AtomicU64,
+    indices: AtomicU64,
+    ingress_bytes: AtomicU64,
+    egress_bytes: AtomicU64,
+    row_fetch_bytes: AtomicU64,
+}
+
+/// Per-table tier statistics (cache counters plus identity).
+#[derive(Debug, Clone)]
+pub struct TableTierStats {
+    pub key: String,
+    pub quantized: bool,
+    pub rows: usize,
+    pub dim: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl TableTierStats {
+    /// Cache hit fraction over all probes of this table.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+/// A point-in-time view of the tier (surfaced through
+/// [`crate::coordinator::MetricsSnapshot::sparse`]).
+#[derive(Debug, Clone)]
+pub struct SparseTierSnapshot {
+    pub shards: usize,
+    pub replication: usize,
+    pub cache_capacity_rows: usize,
+    /// rows currently resident in the hot-row cache
+    pub cached_rows: usize,
+    pub lookups: u64,
+    /// total embedding indices routed (cache hits + shard traffic)
+    pub indices: u64,
+    /// bytes of index lists sent to shards
+    pub ingress_bytes: u64,
+    /// bytes of pooled partial sums returned by shards
+    pub egress_bytes: u64,
+    /// bytes of full rows fetched for cache admission
+    pub row_fetch_bytes: u64,
+    pub tables: Vec<TableTierStats>,
+}
+
+impl SparseTierSnapshot {
+    /// Total bytes that crossed the tier boundary.
+    pub fn boundary_bytes(&self) -> u64 {
+        self.ingress_bytes + self.egress_bytes + self.row_fetch_bytes
+    }
+
+    /// Cache hit fraction across every table.
+    pub fn hit_rate(&self) -> f64 {
+        let hits: u64 = self.tables.iter().map(|t| t.hits).sum();
+        let total: u64 = self.tables.iter().map(|t| t.hits + t.misses).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        hits as f64 / total as f64
+    }
+}
+
+/// The dis-aggregated sparse tier: shard servers + routing client +
+/// hot-row cache. Shared (`Arc`) by every executor of a frontend; all
+/// methods take `&self`.
+pub struct EmbeddingShardService {
+    cfg: SparseTierConfig,
+    n_ranges: usize,
+    shards: Vec<Mutex<Sender<ShardMsg>>>,
+    handles: Vec<JoinHandle<()>>,
+    registry: Mutex<Registry>,
+    cache: Mutex<HotRowCache>,
+    counters: TierCounters,
+    replica_rr: AtomicUsize,
+}
+
+impl std::fmt::Debug for EmbeddingShardService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EmbeddingShardService")
+            .field("shards", &self.cfg.shards)
+            .field("replication", &self.cfg.replication)
+            .field("cache_capacity_rows", &self.cfg.cache_capacity_rows)
+            .finish_non_exhaustive()
+    }
+}
+
+impl EmbeddingShardService {
+    /// Spawn the shard server threads and return the shared handle.
+    pub fn start(cfg: SparseTierConfig) -> Result<Arc<EmbeddingShardService>> {
+        cfg.validate()?;
+        let n_ranges = cfg.ranges();
+        let mut shards = Vec::with_capacity(cfg.shards);
+        let mut handles = Vec::with_capacity(cfg.shards);
+        for id in 0..cfg.shards {
+            let (tx, rx) = channel::<ShardMsg>();
+            let handle = std::thread::Builder::new()
+                .name(format!("emb-shard-{id}"))
+                .spawn(move || shard_main(rx))
+                .context("spawning embedding shard thread")?;
+            shards.push(Mutex::new(tx));
+            handles.push(handle);
+        }
+        let cache = Mutex::new(HotRowCache::new(cfg.cache_capacity_rows, cfg.admit_after));
+        Ok(Arc::new(EmbeddingShardService {
+            n_ranges,
+            cfg,
+            shards,
+            handles,
+            registry: Mutex::new(Registry::default()),
+            cache,
+            counters: TierCounters::default(),
+            replica_rr: AtomicUsize::new(0),
+        }))
+    }
+
+    pub fn config(&self) -> &SparseTierConfig {
+        &self.cfg
+    }
+
+    fn send(&self, shard: usize, msg: ShardMsg) -> Result<()> {
+        self.shards[shard]
+            .lock()
+            .unwrap()
+            .send(msg)
+            .map_err(|_| anyhow!("embedding shard {shard} is gone"))
+    }
+
+    fn pick_replica(&self, range: usize) -> usize {
+        let k = self.replica_rr.fetch_add(1, Ordering::Relaxed) % self.cfg.replication;
+        range + k * self.n_ranges
+    }
+
+    /// Partition `table` row-wise across the shards (each range sliced
+    /// to `replication` shards; int8 slices are row-quantized shard-side
+    /// in parallel). Registration is idempotent per `(key, quantized)`:
+    /// concurrent executors loading the same artifact share one copy.
+    /// Blocks until every shard has acknowledged its slice.
+    pub fn register_table(
+        &self,
+        key: &str,
+        table: &EmbeddingTable,
+        quantized: bool,
+    ) -> Result<usize> {
+        ensure!(table.rows > 0 && table.dim > 0, "cannot shard empty table {key}");
+        ensure!(table.rows <= u32::MAX as usize, "table {key} too large for u32 row ids");
+        let mut reg = self.registry.lock().unwrap();
+        if let Some(&id) = reg.by_key.get(&(key.to_string(), quantized)) {
+            return Ok(id);
+        }
+        let id = reg.tables.len();
+        let plan = ShardPlan::even(table.rows, self.n_ranges);
+        let (ack_tx, ack_rx) = channel();
+        let mut sent = 0usize;
+        for (g, &(lo, hi)) in plan.ranges.iter().enumerate() {
+            let mut data = Vec::with_capacity((hi - lo) * table.dim);
+            for r in lo..hi {
+                data.extend_from_slice(table.row(r));
+            }
+            for k in 0..self.cfg.replication {
+                self.send(
+                    g + k * self.n_ranges,
+                    ShardMsg::Register {
+                        table: id,
+                        lo: lo as u32,
+                        dim: table.dim,
+                        data: data.clone(),
+                        quantized,
+                        resp: ack_tx.clone(),
+                    },
+                )?;
+                sent += 1;
+            }
+        }
+        drop(ack_tx);
+        for _ in 0..sent {
+            ack_rx
+                .recv()
+                .map_err(|_| anyhow!("embedding shard died while registering {key}"))?;
+        }
+        let cache_id = self.cache.lock().unwrap().register_table();
+        debug_assert_eq!(cache_id as usize, id);
+        reg.tables.push(TableEntry {
+            key: key.to_string(),
+            quantized,
+            rows: table.rows,
+            dim: table.dim,
+            rows_per_range: table.rows.div_ceil(self.n_ranges),
+        });
+        reg.by_key.insert((key.to_string(), quantized), id);
+        Ok(id)
+    }
+
+    /// `(rows, dim)` of a registered table.
+    pub fn table_dims(&self, id: usize) -> Option<(usize, usize)> {
+        let reg = self.registry.lock().unwrap();
+        reg.tables.get(id).map(|t| (t.rows, t.dim))
+    }
+
+    /// SparseLengthsSum through the tier: cache hits accumulate
+    /// client-side, misses are split per row range and pooled on the
+    /// owning shards in parallel, partials reduce into `out`
+    /// (`[bags x dim]`). All accumulation is f64 with one final
+    /// rounding — see the module docs' placement-invariance contract.
+    pub fn lookup(&self, id: usize, batch: &LookupBatch, out: &mut [f32]) -> Result<()> {
+        let (rows, dim, rows_per_range) = {
+            let reg = self.registry.lock().unwrap();
+            let t = reg
+                .tables
+                .get(id)
+                .with_context(|| format!("sparse tier: unknown table id {id}"))?;
+            (t.rows, t.dim, t.rows_per_range)
+        };
+        let bags = batch.bags();
+        ensure!(out.len() == bags * dim, "output len {} != bags {bags} x dim {dim}", out.len());
+        let total: usize = batch.lengths.iter().map(|&l| l as usize).sum();
+        ensure!(
+            batch.indices.len() == total,
+            "indices len {} != sum of lengths {total}",
+            batch.indices.len()
+        );
+        for &ix in &batch.indices {
+            ensure!((ix as usize) < rows, "embedding index {ix} out of range 0..{rows}");
+        }
+        self.counters.lookups.fetch_add(1, Ordering::Relaxed);
+        self.counters.indices.fetch_add(total as u64, Ordering::Relaxed);
+
+        let mut acc = vec![0f64; bags * dim];
+        let mut sub_idx: Vec<Vec<u32>> = vec![Vec::new(); self.n_ranges];
+        let mut sub_len: Vec<Vec<u32>> = vec![vec![0u32; bags]; self.n_ranges];
+        let mut admit: Vec<u32> = Vec::new();
+        // hit rows collected under the cache lock (one memcpy each),
+        // accumulated after release so concurrent executors only
+        // serialize on the probe, not the arithmetic
+        let mut hit_bags: Vec<u32> = Vec::new();
+        let mut hit_rows: Vec<f32> = Vec::new();
+        {
+            let mut cache = self.cache.lock().unwrap();
+            let mut cursor = 0usize;
+            for (bag, &len) in batch.lengths.iter().enumerate() {
+                for _ in 0..len {
+                    let r = batch.indices[cursor];
+                    cursor += 1;
+                    match cache.lookup_collect(id as u32, r, &mut hit_rows) {
+                        CacheOutcome::Hit => hit_bags.push(bag as u32),
+                        CacheOutcome::Miss { admit: promote } => {
+                            if promote {
+                                admit.push(r);
+                            }
+                            let g = (r as usize / rows_per_range).min(self.n_ranges - 1);
+                            sub_idx[g].push(r);
+                            sub_len[g][bag] += 1;
+                        }
+                    }
+                }
+            }
+        }
+        for (i, &bag) in hit_bags.iter().enumerate() {
+            let dst = &mut acc[bag as usize * dim..(bag as usize + 1) * dim];
+            for (a, v) in dst.iter_mut().zip(&hit_rows[i * dim..(i + 1) * dim]) {
+                *a += *v as f64;
+            }
+        }
+
+        // fan out: every non-empty range goes to one replica; all sends
+        // happen before any receive so the shards pool in parallel
+        let mut pending: Vec<(usize, Receiver<Result<Vec<f64>>>)> = Vec::new();
+        for (g, indices) in sub_idx.into_iter().enumerate() {
+            if indices.is_empty() {
+                continue;
+            }
+            let shard = self.pick_replica(g);
+            let lengths = std::mem::take(&mut sub_len[g]);
+            self.counters
+                .ingress_bytes
+                .fetch_add((indices.len() * 4 + lengths.len() * 4) as u64, Ordering::Relaxed);
+            let (tx, rx) = channel();
+            self.send(shard, ShardMsg::Pool { table: id, indices, lengths, resp: tx })?;
+            pending.push((shard, rx));
+        }
+        for (shard, rx) in pending {
+            let partial = rx
+                .recv()
+                .map_err(|_| anyhow!("embedding shard {shard} dropped a pooled lookup"))??;
+            ensure!(
+                partial.len() == acc.len(),
+                "shard {shard} returned {} partial elements, want {}",
+                partial.len(),
+                acc.len()
+            );
+            self.counters.egress_bytes.fetch_add((partial.len() * 8) as u64, Ordering::Relaxed);
+            for (a, p) in acc.iter_mut().zip(&partial) {
+                *a += *p;
+            }
+        }
+
+        // admission: fetch the rows the frequency filter promoted and
+        // install them (this is the only row-granularity traffic)
+        if !admit.is_empty() {
+            admit.sort_unstable();
+            admit.dedup();
+            let mut per_range: Vec<Vec<u32>> = vec![Vec::new(); self.n_ranges];
+            for &r in &admit {
+                per_range[(r as usize / rows_per_range).min(self.n_ranges - 1)].push(r);
+            }
+            let mut fetches: Vec<(Vec<u32>, Receiver<Result<Vec<f32>>>)> = Vec::new();
+            for (g, wanted) in per_range.into_iter().enumerate() {
+                if wanted.is_empty() {
+                    continue;
+                }
+                let shard = self.pick_replica(g);
+                let (tx, rx) = channel();
+                self.send(shard, ShardMsg::Fetch { table: id, rows: wanted.clone(), resp: tx })?;
+                fetches.push((wanted, rx));
+            }
+            let mut cache = self.cache.lock().unwrap();
+            for (wanted, rx) in fetches {
+                let data =
+                    rx.recv().map_err(|_| anyhow!("embedding shard dropped a row fetch"))??;
+                ensure!(data.len() == wanted.len() * dim, "row fetch returned a short payload");
+                self.counters
+                    .row_fetch_bytes
+                    .fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
+                for (i, &r) in wanted.iter().enumerate() {
+                    cache.insert(id as u32, r, &data[i * dim..(i + 1) * dim]);
+                }
+            }
+        }
+
+        for (o, a) in out.iter_mut().zip(&acc) {
+            *o = *a as f32;
+        }
+        Ok(())
+    }
+
+    /// Point-in-time counters (per-table cache stats + boundary bytes).
+    pub fn snapshot(&self) -> SparseTierSnapshot {
+        let reg = self.registry.lock().unwrap();
+        let cache = self.cache.lock().unwrap();
+        let counters = cache.counters();
+        let tables = reg
+            .tables
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let c = counters.get(i).copied().unwrap_or_default();
+                TableTierStats {
+                    key: t.key.clone(),
+                    quantized: t.quantized,
+                    rows: t.rows,
+                    dim: t.dim,
+                    hits: c.hits,
+                    misses: c.misses,
+                    insertions: c.insertions,
+                    evictions: c.evictions,
+                }
+            })
+            .collect();
+        SparseTierSnapshot {
+            shards: self.cfg.shards,
+            replication: self.cfg.replication,
+            cache_capacity_rows: self.cfg.cache_capacity_rows,
+            cached_rows: cache.len(),
+            lookups: self.counters.lookups.load(Ordering::Relaxed),
+            indices: self.counters.indices.load(Ordering::Relaxed),
+            ingress_bytes: self.counters.ingress_bytes.load(Ordering::Relaxed),
+            egress_bytes: self.counters.egress_bytes.load(Ordering::Relaxed),
+            row_fetch_bytes: self.counters.row_fetch_bytes.load(Ordering::Relaxed),
+            tables,
+        }
+    }
+}
+
+impl Drop for EmbeddingShardService {
+    fn drop(&mut self) {
+        for s in &self.shards {
+            if let Ok(tx) = s.lock() {
+                let _ = tx.send(ShardMsg::Shutdown);
+            }
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard server thread
+// ---------------------------------------------------------------------------
+
+fn shard_main(rx: Receiver<ShardMsg>) {
+    let mut tables: Vec<Option<LocalTable>> = Vec::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Register { table, lo, dim, data, quantized, resp } => {
+                let rows = data.len() / dim;
+                let t = EmbeddingTable::new(rows, dim, data);
+                let local = if quantized {
+                    LocalTable::Quant { lo, table: QuantizedTable::from_f32(&t) }
+                } else {
+                    LocalTable::F32 { lo, table: t }
+                };
+                if tables.len() <= table {
+                    tables.resize_with(table + 1, || None);
+                }
+                tables[table] = Some(local);
+                let _ = resp.send(());
+            }
+            ShardMsg::Pool { table, indices, lengths, resp } => {
+                let _ = resp.send(shard_pool(&tables, table, &indices, &lengths));
+            }
+            ShardMsg::Fetch { table, rows, resp } => {
+                let _ = resp.send(shard_fetch(&tables, table, &rows));
+            }
+            ShardMsg::Shutdown => break,
+        }
+    }
+}
+
+fn local_table(tables: &[Option<LocalTable>], id: usize) -> Result<&LocalTable> {
+    tables
+        .get(id)
+        .and_then(|t| t.as_ref())
+        .with_context(|| format!("shard holds no slice of table {id}"))
+}
+
+/// Pooled partial sums over this shard's slice, f64-accumulated.
+/// Indices are global row ids; `lengths` has one entry per bag.
+fn shard_pool(
+    tables: &[Option<LocalTable>],
+    id: usize,
+    indices: &[u32],
+    lengths: &[u32],
+) -> Result<Vec<f64>> {
+    let t = local_table(tables, id)?;
+    let (lo, rows, dim) = t.dims();
+    let mut partial = vec![0f64; lengths.len() * dim];
+    let mut cursor = 0usize;
+    for (bag, &len) in lengths.iter().enumerate() {
+        let dst = &mut partial[bag * dim..(bag + 1) * dim];
+        for _ in 0..len {
+            let g = indices[cursor] as usize;
+            cursor += 1;
+            ensure!(
+                g >= lo && g - lo < rows,
+                "row {g} is not on this shard (slice {lo}..{})",
+                lo + rows
+            );
+            match t {
+                LocalTable::F32 { table, .. } => {
+                    for (d, v) in dst.iter_mut().zip(table.row(g - lo)) {
+                        *d += *v as f64;
+                    }
+                }
+                LocalTable::Quant { table, .. } => {
+                    let (qrow, scale, bias) = table.row(g - lo);
+                    let off = 128.0 * scale + bias;
+                    for (d, &q) in dst.iter_mut().zip(qrow) {
+                        *d += (q as f32 * scale + off) as f64;
+                    }
+                }
+            }
+        }
+    }
+    ensure!(
+        cursor == indices.len(),
+        "sub-batch lengths cover {cursor} of {} indices",
+        indices.len()
+    );
+    Ok(partial)
+}
+
+/// Full (dequantized) rows for cache admission, in request order.
+fn shard_fetch(tables: &[Option<LocalTable>], id: usize, wanted: &[u32]) -> Result<Vec<f32>> {
+    let t = local_table(tables, id)?;
+    let (lo, rows, dim) = t.dims();
+    let mut out = Vec::with_capacity(wanted.len() * dim);
+    for &gr in wanted {
+        let g = gr as usize;
+        ensure!(
+            g >= lo && g - lo < rows,
+            "row {g} is not on this shard (slice {lo}..{})",
+            lo + rows
+        );
+        match t {
+            LocalTable::F32 { table, .. } => out.extend_from_slice(table.row(g - lo)),
+            LocalTable::Quant { table, .. } => {
+                let (qrow, scale, bias) = table.row(g - lo);
+                let off = 128.0 * scale + bias;
+                out.extend(qrow.iter().map(|&q| q as f32 * scale + off));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn plan_even_split_tiles_rows() {
+        let p = ShardPlan::even(1000, 4);
+        assert_eq!(p.ranges, vec![(0, 250), (250, 500), (500, 750), (750, 1000)]);
+        assert_eq!(p.range_of(0), 0);
+        assert_eq!(p.range_of(249), 0);
+        assert_eq!(p.range_of(250), 1);
+        assert_eq!(p.range_of(999), 3);
+
+        // uneven: ceil split, last range short
+        let p = ShardPlan::even(10, 3);
+        assert_eq!(p.ranges, vec![(0, 4), (4, 8), (8, 10)]);
+
+        // more ranges than rows: trailing ranges empty
+        let p = ShardPlan::even(2, 4);
+        assert_eq!(p.ranges, vec![(0, 1), (1, 2), (2, 2), (2, 2)]);
+        assert_eq!(p.range_of(1), 1);
+    }
+
+    #[test]
+    fn plan_json_roundtrip_and_validation() {
+        let j = Json::parse("[[0, 4], [4, 8], [8, 10]]").unwrap();
+        let p = ShardPlan::from_json(&j, 10).unwrap();
+        assert_eq!(p, ShardPlan::even(10, 3));
+        // gap
+        assert!(ShardPlan::from_json(&Json::parse("[[0, 4], [5, 10]]").unwrap(), 10).is_err());
+        // short coverage
+        assert!(ShardPlan::from_json(&Json::parse("[[0, 4]]").unwrap(), 10).is_err());
+        assert!(ShardPlan::from_json(&Json::parse("[]").unwrap(), 0).is_err());
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(SparseTierConfig::default().validate().is_ok());
+        assert!(SparseTierConfig { shards: 0, ..Default::default() }.validate().is_err());
+        let bad = SparseTierConfig { shards: 4, replication: 3, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let ok = SparseTierConfig { shards: 6, replication: 3, ..Default::default() };
+        assert!(ok.validate().is_ok());
+        assert_eq!(ok.ranges(), 2);
+    }
+
+    fn tier(shards: usize, replication: usize, cache: usize) -> Arc<EmbeddingShardService> {
+        EmbeddingShardService::start(SparseTierConfig {
+            shards,
+            replication,
+            cache_capacity_rows: cache,
+            admit_after: 1,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn sharded_lookup_matches_exact_reference() {
+        let table = EmbeddingTable::random(100, 8, 3);
+        let mut rng = Pcg32::seeded(4);
+        let batch = table.synth_batch(6, 5, 1.1, &mut rng);
+        let mut want = vec![0f32; 6 * 8];
+        table.sparse_lengths_sum_exact(&batch, &mut want);
+
+        let svc = tier(3, 1, 0);
+        let id = svc.register_table("t/emb", &table, false).unwrap();
+        assert_eq!(svc.table_dims(id), Some((100, 8)));
+        let mut got = vec![0f32; 6 * 8];
+        svc.lookup(id, &batch, &mut got).unwrap();
+        assert_eq!(got, want);
+        let snap = svc.snapshot();
+        assert_eq!(snap.lookups, 1);
+        assert_eq!(snap.indices, 30);
+        assert!(snap.ingress_bytes > 0 && snap.egress_bytes > 0);
+    }
+
+    #[test]
+    fn replication_does_not_change_results() {
+        let table = EmbeddingTable::random(64, 4, 9);
+        let mut rng = Pcg32::seeded(10);
+        let batch = table.synth_batch(4, 8, 1.05, &mut rng);
+        let mut want = vec![0f32; 4 * 4];
+        table.sparse_lengths_sum_exact(&batch, &mut want);
+        let svc = tier(6, 3, 16);
+        let id = svc.register_table("t/emb", &table, false).unwrap();
+        for _ in 0..4 {
+            let mut got = vec![0f32; 4 * 4];
+            svc.lookup(id, &batch, &mut got).unwrap();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn registration_dedups_by_key_and_precision() {
+        let table = EmbeddingTable::random(32, 4, 1);
+        let svc = tier(2, 1, 0);
+        let a = svc.register_table("m/emb_0", &table, false).unwrap();
+        let b = svc.register_table("m/emb_0", &table, false).unwrap();
+        let q = svc.register_table("m/emb_0", &table, true).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, q);
+        assert_eq!(svc.snapshot().tables.len(), 2);
+    }
+
+    #[test]
+    fn lookup_rejects_bad_inputs() {
+        let table = EmbeddingTable::random(16, 2, 2);
+        let svc = tier(2, 1, 0);
+        let id = svc.register_table("t", &table, false).unwrap();
+        let batch = LookupBatch::fixed(vec![0, 99], 2);
+        let mut out = vec![0f32; 2];
+        assert!(svc.lookup(id, &batch, &mut out).is_err(), "out-of-range index");
+        let ok = LookupBatch::fixed(vec![0, 1], 2);
+        assert!(svc.lookup(id, &ok, &mut [0f32; 1]).is_err(), "short output");
+        assert!(svc.lookup(7, &ok, &mut out).is_err(), "unknown table");
+    }
+}

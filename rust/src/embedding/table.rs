@@ -53,6 +53,35 @@ impl EmbeddingTable {
         }
     }
 
+    /// SparseLengthsSum with f64 accumulation and a single final
+    /// rounding per output element. This is the numerical contract of
+    /// the sharded sparse tier ([`crate::embedding::shard`]): with 29
+    /// bits of accumulator headroom over f32, the rounded result is
+    /// independent of summation order whenever a bag's rows have
+    /// comparable magnitude (true of trained embedding tables) — so a
+    /// lookup answered by any shard/cache placement matches this
+    /// monolithic reference bit-for-bit; see the shard module docs for
+    /// the precondition's limits.
+    pub fn sparse_lengths_sum_exact(&self, batch: &LookupBatch, out: &mut [f32]) {
+        assert_eq!(out.len(), batch.bags() * self.dim);
+        let mut acc = vec![0f64; self.dim];
+        let mut cursor = 0usize;
+        for (bag, &len) in batch.lengths.iter().enumerate() {
+            acc.fill(0.0);
+            for _ in 0..len {
+                let r = batch.indices[cursor] as usize;
+                cursor += 1;
+                for (a, s) in acc.iter_mut().zip(self.row(r)) {
+                    *a += *s as f64;
+                }
+            }
+            let dst = &mut out[bag * self.dim..(bag + 1) * self.dim];
+            for (d, a) in dst.iter_mut().zip(&acc) {
+                *d = *a as f32;
+            }
+        }
+    }
+
     /// SparseLengthsWeightedSum.
     pub fn sparse_lengths_weighted_sum(
         &self,
@@ -104,6 +133,26 @@ mod tests {
         let batch = LookupBatch::fixed(vec![1, 2, 3, 3], 2);
         let mut out = vec![0f32; 2 * 2];
         t.sparse_lengths_sum(&batch, &mut out);
+        assert_eq!(out, vec![3.0, 3.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn exact_kernel_tracks_f32_kernel() {
+        let t = EmbeddingTable::random(300, 16, 11);
+        let mut rng = Pcg32::seeded(12);
+        let batch = t.synth_batch(8, 24, 1.05, &mut rng);
+        let mut a = vec![0f32; 8 * 16];
+        let mut b = vec![0f32; 8 * 16];
+        t.sparse_lengths_sum(&batch, &mut a);
+        t.sparse_lengths_sum_exact(&batch, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+        // integer-valued rows sum exactly on both paths
+        let t = small_table();
+        let batch = LookupBatch::fixed(vec![1, 2, 3, 3], 2);
+        let mut out = vec![0f32; 4];
+        t.sparse_lengths_sum_exact(&batch, &mut out);
         assert_eq!(out, vec![3.0, 3.0, 6.0, 6.0]);
     }
 

@@ -19,7 +19,7 @@ pub struct PackedBI8 {
     pub n: usize,
     pub k: usize,
     data: Vec<i8>,
-    /// per output channel: sum_k b[n][k] (for zero-point correction)
+    /// per output channel: `sum_k b[n][k]` (for zero-point correction)
     pub rowsum: Vec<i32>,
 }
 

@@ -22,7 +22,7 @@ impl OutlierCsr {
         self.nnz() as f64 / (self.n * self.k) as f64
     }
 
-    /// y[m][n] += sum_k a[m][k] * outlier[n][k] (dense x sparse^T).
+    /// `y[m][n] += sum_k a[m][k] * outlier[n][k]` (dense x sparse^T).
     pub fn spmm_acc(&self, a: &[i8], m: usize, acc: &mut [i32]) {
         assert_eq!(a.len(), m * self.k);
         assert_eq!(acc.len(), m * self.n);

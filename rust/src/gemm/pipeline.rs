@@ -8,7 +8,7 @@
 pub struct OutputPipeline {
     /// activation zero point (asymmetric quantization)
     pub x_zp: i32,
-    /// per-output-channel combined scale: x_scale * w_scale[n]
+    /// per-output-channel combined scale: `x_scale * w_scale[n]`
     pub scale: Vec<f32>,
     /// pack-time row offsets: sum_k B[n, k] (zero-point correction)
     pub b_rowsum: Vec<i32>,

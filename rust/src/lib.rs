@@ -23,6 +23,37 @@
 //! `artifacts/*.hlo.txt` plus per-artifact op programs; the request path is
 //! pure Rust, and `cargo build --no-default-features` drops the XLA
 //! dependency entirely (native backend only).
+//!
+//! The sparse half of a recommendation model can be dis-aggregated onto a
+//! sharded embedding tier with a hot-row cache ([`embedding::shard`], §4),
+//! shared by every executor of a frontend via
+//! [`coordinator::FrontendConfig::sparse_tier`]:
+//!
+//! ```
+//! use dcinfer::embedding::{EmbeddingShardService, EmbeddingTable, LookupBatch, SparseTierConfig};
+//!
+//! let table = EmbeddingTable::random(1000, 16, 42);
+//! let tier = EmbeddingShardService::start(SparseTierConfig {
+//!     shards: 4,
+//!     replication: 2,
+//!     cache_capacity_rows: 256,
+//!     ..Default::default()
+//! })?;
+//! let id = tier.register_table("demo/emb_0", &table, false)?;
+//! let batch = LookupBatch::fixed(vec![1, 2, 3, 4], 2);
+//! let mut pooled = vec![0f32; batch.bags() * table.dim];
+//! tier.lookup(id, &batch, &mut pooled)?;
+//!
+//! // bit-exact vs the monolithic f64-accumulated reference
+//! let mut reference = vec![0f32; pooled.len()];
+//! table.sparse_lengths_sum_exact(&batch, &mut reference);
+//! assert_eq!(pooled, reference);
+//! assert_eq!(tier.snapshot().lookups, 1);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! See `README.md` for the quickstart and `DESIGN.md` for the paper→code
+//! substitution map and layering.
 
 pub mod coordinator;
 pub mod embedding;

@@ -11,7 +11,12 @@
 //! dcinfer disagg                §4 tier bandwidth
 //! dcinfer serve [--requests N] [--executors E] [--qps Q] [--models recsys,nmt,cv]
 //!               [--backend pjrt|native] [--precision fp32|fp16|i8acc32|i8acc16]
+//!               [--sparse-shards N] [--sparse-cache ROWS] [--sparse-replication R]
 //! ```
+//!
+//! `--sparse-shards` dis-aggregates the embedding tables of native-backend
+//! lanes across an in-process sharded sparse tier with a hot-row cache
+//! (§4); per-table hit rates print with the serving metrics.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -270,10 +275,45 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             p.map(|s| s.as_str()).unwrap_or(""),
         )?,
     };
+    // `--sparse-shards` turns on the dis-aggregated sparse tier (§4);
+    // malformed values are errors, not silent fallbacks — a typo here
+    // would otherwise change which code path gets measured
+    let sparse_usize = |key: &str, dflt: usize| -> Result<usize> {
+        match flags.get(key) {
+            None => Ok(dflt),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("invalid --{key} value {v:?}")),
+        }
+    };
+    let sparse_tier = match flags.get("sparse-shards") {
+        None => {
+            for key in ["sparse-cache", "sparse-replication"] {
+                anyhow::ensure!(
+                    !flags.contains_key(key),
+                    "--{key} requires --sparse-shards"
+                );
+            }
+            None
+        }
+        Some(_) => {
+            let default = dcinfer::embedding::SparseTierConfig::default();
+            Some(dcinfer::embedding::SparseTierConfig {
+                shards: sparse_usize("sparse-shards", 0)?,
+                replication: sparse_usize("sparse-replication", default.replication)?,
+                cache_capacity_rows: sparse_usize("sparse-cache", default.cache_capacity_rows)?,
+                ..default
+            })
+        }
+    };
     println!(
         "== serving frontend: {n} requests @ {qps} offered qps, {executors} executors, models [{models}], backend {} ==\n",
         backend.label()
     );
+    if let Some(st) = &sparse_tier {
+        println!(
+            "sparse tier: {} shards, replication {}, hot-row cache {} rows\n",
+            st.shards, st.replication, st.cache_capacity_rows
+        );
+    }
 
     // build one service per requested family; each knows its artifact
     // prefix and how to synthesize production-like requests
@@ -290,7 +330,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     }
 
     let frontend = ServingFrontend::start(
-        FrontendConfig { executors, backend, ..Default::default() },
+        FrontendConfig { executors, backend, sparse_tier, ..Default::default() },
         services,
     )?;
     let lanes: Vec<Arc<dyn ModelService>> =
@@ -315,6 +355,29 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     for (model, snap) in frontend.snapshot_all() {
         println!("\n--- {model} ---");
         snap.print();
+    }
+    if let Some(tier) = frontend.sparse_tier() {
+        let s = tier.snapshot();
+        println!(
+            "\n--- sparse tier ({} shards x{}, cache {} rows) ---",
+            s.shards, s.replication, s.cache_capacity_rows
+        );
+        println!(
+            "{} lookups over {} indices, {:.2} MB across the tier boundary (hit rate {:.1}%)",
+            s.lookups,
+            s.indices,
+            s.boundary_bytes() as f64 / 1e6,
+            s.hit_rate() * 100.0
+        );
+        for t in &s.tables {
+            println!(
+                "  {}: {:.1}% hit rate, {} insertions, {} evictions",
+                t.key,
+                t.hit_rate() * 100.0,
+                t.insertions,
+                t.evictions
+            );
+        }
     }
     println!("\nwall time {wall:.2}s, achieved {:.0} req/s end-to-end, {failed} failed", n as f64 / wall);
     frontend.shutdown();

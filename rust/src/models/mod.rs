@@ -314,7 +314,7 @@ pub fn conv3d(
     (layer, (fo, ho, wo))
 }
 
-/// Fully connected: out = X[MxK] * W^T[KxN] (Caffe2 convention).
+/// Fully connected: `out = X[MxK] * W^T[KxN]` (Caffe2 convention).
 pub fn fc(name: &str, m: u64, n: u64, k: u64) -> Layer {
     Layer {
         name: name.to_string(),

@@ -16,10 +16,26 @@
 //!
 //! Backends are **not** `Send` (PJRT handles are raw pointers); what
 //! crosses threads is a [`BackendSpec`], and each executor thread
-//! constructs its own backend from it via [`make_backend`]. This is the
-//! same one-process-per-accelerator shape as §4's dis-aggregated tier.
+//! constructs its own backend from it via [`make_backend`] (or
+//! [`make_backend_with_sparse`] to share a dis-aggregated embedding
+//! tier). This is the same one-process-per-accelerator shape as §4's
+//! dis-aggregated tier.
+//!
+//! ```no_run
+//! use dcinfer::runtime::{make_backend, BackendSpec, Manifest};
+//!
+//! let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+//! let backend = make_backend(&BackendSpec::default())?;
+//! let model = backend.load(&manifest, "recsys_fp32_b1")?;
+//! println!("{} loaded in {:.0} ms", model.meta().name, model.load_ms());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
+
+use crate::embedding::shard::EmbeddingShardService;
 
 use super::manifest::{ArtifactMeta, Manifest};
 use super::precision::Precision;
@@ -102,6 +118,16 @@ impl Default for BackendSpec {
 }
 
 impl BackendSpec {
+    /// Whether this spec resolves to the native interpreter — the only
+    /// backend that routes embedding lookups through a sparse tier.
+    pub fn is_native(&self) -> bool {
+        match self {
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt => false,
+            BackendSpec::Native { .. } => true,
+        }
+    }
+
     /// `backend/precision` label (matches [`ExecBackend::label`]).
     pub fn label(&self) -> String {
         match self {
@@ -138,12 +164,26 @@ impl BackendSpec {
 /// Construct the backend a spec describes. Called on the executor
 /// thread that will own the (non-`Send`) result.
 pub fn make_backend(spec: &BackendSpec) -> Result<Box<dyn ExecBackend>> {
+    make_backend_with_sparse(spec, None)
+}
+
+/// [`make_backend`], optionally attaching the shared sparse tier. The
+/// native backend routes its `embed_pool` ops through the tier; the
+/// PJRT backend executes HLO with tables baked in and ignores it.
+pub fn make_backend_with_sparse(
+    spec: &BackendSpec,
+    sparse: Option<Arc<EmbeddingShardService>>,
+) -> Result<Box<dyn ExecBackend>> {
     match spec {
         #[cfg(feature = "pjrt")]
-        BackendSpec::Pjrt => Ok(Box::new(PjrtBackend::cpu()?)),
-        BackendSpec::Native { precision } => {
-            Ok(Box::new(super::native::NativeBackend::new(*precision)))
+        BackendSpec::Pjrt => {
+            let _ = sparse;
+            Ok(Box::new(PjrtBackend::cpu()?))
         }
+        BackendSpec::Native { precision } => Ok(Box::new(match sparse {
+            Some(tier) => super::native::NativeBackend::with_sparse_tier(*precision, tier),
+            None => super::native::NativeBackend::new(*precision),
+        })),
     }
 }
 
@@ -259,6 +299,7 @@ mod tests {
     #[test]
     fn spec_labels() {
         let s = BackendSpec::Native { precision: Precision::I8Acc16 };
+        assert!(s.is_native());
         assert_eq!(s.label(), "native/i8acc16");
         assert_eq!(BackendSpec::from_cli("native", "fp16").unwrap().label(), "native/fp16");
         assert!(BackendSpec::from_cli("nope", "").is_err());
@@ -269,6 +310,7 @@ mod tests {
     fn pjrt_spec_is_fp32_only() {
         assert_eq!(BackendSpec::default(), BackendSpec::Pjrt);
         assert_eq!(BackendSpec::Pjrt.label(), "pjrt/fp32");
+        assert!(!BackendSpec::Pjrt.is_native());
         assert!(BackendSpec::from_cli("pjrt", "i8acc32").is_err());
     }
 

@@ -12,12 +12,15 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::backend::{make_backend, BackendSpec, ExecBackend, LoadedArtifact};
+use crate::embedding::shard::EmbeddingShardService;
+
+use super::backend::{make_backend_with_sparse, BackendSpec, ExecBackend, LoadedArtifact};
 use super::manifest::Manifest;
 use super::tensor::HostTensor;
 
@@ -63,11 +66,26 @@ impl Executor {
         artifacts_dir: PathBuf,
         artifact_names: Vec<String>,
     ) -> Result<(Executor, JoinHandle<()>)> {
+        Self::spawn_with_sparse(id, spec, artifacts_dir, artifact_names, None)
+    }
+
+    /// [`Executor::spawn`] with a shared sparse tier: native backends
+    /// fetch pooled embedding lookups through it instead of holding
+    /// per-executor table copies.
+    pub fn spawn_with_sparse(
+        id: usize,
+        spec: BackendSpec,
+        artifacts_dir: PathBuf,
+        artifact_names: Vec<String>,
+        sparse: Option<Arc<EmbeddingShardService>>,
+    ) -> Result<(Executor, JoinHandle<()>)> {
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<String>>();
         let handle = std::thread::Builder::new()
             .name(format!("executor-{id}"))
-            .spawn(move || executor_main(rx, ready_tx, &spec, &artifacts_dir, &artifact_names))
+            .spawn(move || {
+                executor_main(rx, ready_tx, &spec, &artifacts_dir, &artifact_names, sparse)
+            })
             .context("spawning executor thread")?;
         let backend = ready_rx
             .recv()
@@ -104,9 +122,10 @@ fn executor_main(
     spec: &BackendSpec,
     artifacts_dir: &std::path::Path,
     artifact_names: &[String],
+    sparse: Option<Arc<EmbeddingShardService>>,
 ) {
     let setup = (|| -> Result<(Box<dyn ExecBackend>, HashMap<String, Box<dyn LoadedArtifact>>)> {
-        let backend = make_backend(spec)?;
+        let backend = make_backend_with_sparse(spec, sparse)?;
         let manifest = Manifest::load(artifacts_dir)?;
         let mut models: HashMap<String, Box<dyn LoadedArtifact>> = HashMap::new();
         for name in artifact_names {
@@ -180,10 +199,30 @@ impl ExecutorPool {
         artifacts_dir: PathBuf,
         artifact_names: Vec<String>,
     ) -> Result<ExecutorPool> {
+        Self::with_sparse(n, spec, artifacts_dir, artifact_names, None)
+    }
+
+    /// [`ExecutorPool::new`] with a shared sparse tier (see
+    /// [`Executor::spawn_with_sparse`]). Every executor shares the one
+    /// tier, so N executors hold one sharded copy of the embedding
+    /// tables instead of N monolithic ones.
+    pub fn with_sparse(
+        n: usize,
+        spec: BackendSpec,
+        artifacts_dir: PathBuf,
+        artifact_names: Vec<String>,
+        sparse: Option<Arc<EmbeddingShardService>>,
+    ) -> Result<ExecutorPool> {
         let mut executors = Vec::new();
         let mut handles = Vec::new();
         for id in 0..n {
-            let (e, h) = Executor::spawn(id, spec, artifacts_dir.clone(), artifact_names.clone())?;
+            let (e, h) = Executor::spawn_with_sparse(
+                id,
+                spec,
+                artifacts_dir.clone(),
+                artifact_names.clone(),
+                sparse.clone(),
+            )?;
             executors.push(e);
             handles.push(h);
         }

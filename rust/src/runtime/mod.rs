@@ -43,7 +43,9 @@ pub mod precision;
 pub mod tensor;
 pub mod weights;
 
-pub use backend::{check_inputs, make_backend, BackendSpec, ExecBackend, LoadedArtifact};
+pub use backend::{
+    check_inputs, make_backend, make_backend_with_sparse, BackendSpec, ExecBackend, LoadedArtifact,
+};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 #[cfg(feature = "pjrt")]

@@ -23,10 +23,12 @@
 //! [`crate::embedding::QuantizedTable`].
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::embedding::shard::{EmbeddingShardService, ShardPlan};
 use crate::embedding::{EmbeddingTable, LookupBatch, QuantizedTable};
 use crate::gemm::{
     fp16::gemm_f16, fp32::gemm_f32, i8acc16::gemm_i8_acc16, i8acc32::gemm_i8_acc32,
@@ -368,10 +370,12 @@ fn parse_program(j: &Json) -> Result<Vec<OpSpec>> {
     arr.iter().map(OpSpec::parse).collect()
 }
 
-/// Embedding table at the backend's precision.
+/// Embedding table at the backend's precision: local (per-executor
+/// copy) or shared through the dis-aggregated sparse tier.
 enum PoolTable {
     F32(EmbeddingTable),
     Q(QuantizedTable),
+    Shared { tier: Arc<EmbeddingShardService>, id: usize, rows: usize, dim: usize },
 }
 
 impl PoolTable {
@@ -379,13 +383,21 @@ impl PoolTable {
         match self {
             PoolTable::F32(t) => (t.rows, t.dim),
             PoolTable::Q(t) => (t.rows, t.dim),
+            PoolTable::Shared { rows, dim, .. } => (*rows, *dim),
         }
     }
 
-    fn pool(&self, batch: &LookupBatch, out: &mut [f32]) {
+    fn pool(&self, batch: &LookupBatch, out: &mut [f32]) -> Result<()> {
         match self {
-            PoolTable::F32(t) => t.sparse_lengths_sum(batch, out),
-            PoolTable::Q(t) => t.sparse_lengths_sum(batch, out),
+            PoolTable::F32(t) => {
+                t.sparse_lengths_sum(batch, out);
+                Ok(())
+            }
+            PoolTable::Q(t) => {
+                t.sparse_lengths_sum(batch, out);
+                Ok(())
+            }
+            PoolTable::Shared { tier, id, .. } => tier.lookup(*id, batch, out),
         }
     }
 }
@@ -431,11 +443,17 @@ fn weight<'a>(
 impl CompiledProgram {
     /// Pack every layer of `spec` at `precision`. `act_qparams` maps op
     /// index -> calibrated activation qparams (required for int8).
+    /// With `sparse` set, embedding tables are registered into (and
+    /// fetched through) the shared sparse tier instead of being copied
+    /// into this executor; `scope` namespaces their keys so same-named
+    /// tables of different model families don't collide.
     fn build(
         spec: &[OpSpec],
         weights: &HashMap<String, &HostTensor>,
         precision: Precision,
         act_qparams: Option<&HashMap<usize, QParams>>,
+        sparse: Option<&Arc<EmbeddingShardService>>,
+        scope: &str,
     ) -> Result<CompiledProgram> {
         let int8 = matches!(precision, Precision::I8Acc32 | Precision::I8Acc16);
         let qp_for = |i: usize| -> QParams {
@@ -521,10 +539,19 @@ impl CompiledProgram {
                                 wt.shape
                             );
                             let t = EmbeddingTable::new(wt.shape[0], wt.shape[1], wt.as_f32()?);
-                            tables.push(if int8 {
-                                PoolTable::Q(QuantizedTable::from_f32(&t))
-                            } else {
-                                PoolTable::F32(t)
+                            tables.push(match sparse {
+                                Some(tier) => {
+                                    let key = format!("{scope}/{table}");
+                                    let id = tier.register_table(&key, &t, int8)?;
+                                    PoolTable::Shared {
+                                        tier: tier.clone(),
+                                        id,
+                                        rows: t.rows,
+                                        dim: t.dim,
+                                    }
+                                }
+                                None if int8 => PoolTable::Q(QuantizedTable::from_f32(&t)),
+                                None => PoolTable::F32(t),
                             });
                             table_idx.insert(table.clone(), tables.len() - 1);
                             tables.len() - 1
@@ -648,7 +675,7 @@ impl CompiledProgram {
                     let batch =
                         LookupBatch::fixed(flat.iter().map(|&v| v as u32).collect(), pool);
                     let mut data = vec![0f32; bags * dim];
-                    self.tables[*table].pool(&batch, &mut data);
+                    self.tables[*table].pool(&batch, &mut data)?;
                     regs.insert(out.clone(), Reg { shape: vec![bags, dim], data });
                 }
                 CompiledOp::Concat { out, inputs } => {
@@ -855,13 +882,29 @@ fn calibrate(
 // ---------------------------------------------------------------------------
 
 /// Pure-Rust [`ExecBackend`] over the manifest op programs.
+///
+/// With a sparse tier attached ([`NativeBackend::with_sparse_tier`]),
+/// `embed_pool` ops fetch pooled sums through the shared
+/// [`EmbeddingShardService`] (registering each table on first load)
+/// instead of holding a per-executor copy of every table — the §4
+/// dis-aggregation of the sparse half of the model.
 pub struct NativeBackend {
     precision: Precision,
+    sparse: Option<Arc<EmbeddingShardService>>,
 }
 
 impl NativeBackend {
     pub fn new(precision: Precision) -> NativeBackend {
-        NativeBackend { precision }
+        NativeBackend { precision, sparse: None }
+    }
+
+    /// A backend whose pooled embedding lookups go through the shared
+    /// sparse tier (int8 precisions register row-quantized slices).
+    pub fn with_sparse_tier(
+        precision: Precision,
+        tier: Arc<EmbeddingShardService>,
+    ) -> NativeBackend {
+        NativeBackend { precision, sparse: Some(tier) }
     }
 }
 
@@ -889,8 +932,49 @@ impl ExecBackend for NativeBackend {
             Some(p) => read_weights_file(p)?,
             None => Vec::new(),
         };
-        Ok(Box::new(build_artifact(meta, &named, self.precision)?))
+        // Before any table enters the shared tier, hold the compiler's
+        // per-table shard metadata to the actual table shapes: drift
+        // between manifest and weights fails the load, not a lookup.
+        if self.sparse.is_some() {
+            if let Some(model) = &meta.model {
+                validate_sparse_shard_meta(manifest, model, &named)
+                    .with_context(|| format!("artifact {artifact}: sparse_shards metadata"))?;
+            }
+        }
+        Ok(Box::new(build_artifact(meta, &named, self.precision, self.sparse.clone())?))
     }
+}
+
+/// Validate the manifest's optional per-table `sparse_shards` row-range
+/// metadata (emitted by `python/compile/aot.py`) against the weights
+/// file: every listed table that exists must have ranges tiling exactly
+/// `0..rows` ([`ShardPlan::from_json`]). Absent metadata is fine —
+/// older manifests predate it.
+fn validate_sparse_shard_meta(
+    manifest: &Manifest,
+    model: &str,
+    named: &[NamedTensor],
+) -> Result<()> {
+    let Ok(cfg) = manifest.model_config(model) else {
+        return Ok(()); // kernel artifacts have no model config
+    };
+    let shards = cfg.get("sparse_shards");
+    if shards.is_null() {
+        return Ok(());
+    }
+    let tables = shards.get("tables").as_obj().context("sparse_shards.tables must be an object")?;
+    for (tname, ranges) in tables {
+        let Some(t) = named.iter().find(|n| &n.name == tname) else {
+            continue; // int8 variants carry a weight subset
+        };
+        ensure!(
+            t.tensor.shape.len() == 2,
+            "sparse_shards lists {tname}, which is not a 2-D table"
+        );
+        ShardPlan::from_json(ranges, t.tensor.shape[0])
+            .with_context(|| format!("table {tname}"))?;
+    }
+    Ok(())
 }
 
 /// Compile one artifact's program at `precision` (weights already in
@@ -906,12 +990,16 @@ pub(crate) fn build_artifact(
     meta: ArtifactMeta,
     named: &[NamedTensor],
     precision: Precision,
+    sparse: Option<Arc<EmbeddingShardService>>,
 ) -> Result<NativeArtifact> {
     let t0 = Instant::now();
     let spec = parse_program(&meta.program)
         .with_context(|| format!("artifact {}: native program", meta.name))?;
     let weights: HashMap<String, &HostTensor> =
         named.iter().map(|t| (t.name.clone(), &t.tensor)).collect();
+    // table keys are scoped by the weights file: batch variants of one
+    // family share tier tables, distinct families never collide
+    let scope = meta.weights.clone().unwrap_or_else(|| meta.name.clone());
 
     // smallest table each i32 input feeds, for calibration index synthesis
     let mut index_bounds: HashMap<String, usize> = HashMap::new();
@@ -925,12 +1013,21 @@ pub(crate) fn build_artifact(
 
     let program = match precision {
         Precision::Fp32 | Precision::Fp16 => {
-            CompiledProgram::build(&spec, &weights, precision, None)?
+            CompiledProgram::build(&spec, &weights, precision, None, sparse.as_ref(), &scope)?
         }
         Precision::I8Acc32 | Precision::I8Acc16 => {
-            let fp32 = CompiledProgram::build(&spec, &weights, Precision::Fp32, None)?;
+            // calibration runs on local fp32 tables: it must not pollute
+            // the tier's cache or register throwaway fp32 copies
+            let fp32 = CompiledProgram::build(&spec, &weights, Precision::Fp32, None, None, &scope)?;
             let qparams = calibrate(&fp32, &meta, &index_bounds)?;
-            CompiledProgram::build(&spec, &weights, precision, Some(&qparams))?
+            CompiledProgram::build(
+                &spec,
+                &weights,
+                precision,
+                Some(&qparams),
+                sparse.as_ref(),
+                &scope,
+            )?
         }
     };
     Ok(NativeArtifact { meta, program, load_ms: t0.elapsed().as_secs_f64() * 1e3 })
@@ -1029,7 +1126,7 @@ mod tests {
             named("b0", &[2], b0),
             named("w1", &[1, 2], w1),
         ];
-        let art = build_artifact(meta, &ws, Precision::Fp32).unwrap();
+        let art = build_artifact(meta, &ws, Precision::Fp32, None).unwrap();
         let out = art.run(&[HostTensor::from_f32(&[1, 2], &[2.0, 3.0])]).unwrap();
         // h = relu([2 + .5, -3 + .5]) = [2.5, 0]; l = 2.5; y = sigmoid(2.5)
         let want = 1.0 / (1.0 + (-2.5f32).exp());
@@ -1056,7 +1153,7 @@ mod tests {
             1,
             prog,
         );
-        let art = build_artifact(meta, &[], Precision::Fp32).unwrap();
+        let art = build_artifact(meta, &[], Precision::Fp32, None).unwrap();
         let out = art
             .run(&[
                 HostTensor::from_f32(&[1, 2], &[0.25, 1.0]),
@@ -1084,7 +1181,7 @@ mod tests {
             prog,
         );
         let ws = vec![named("e0", &[4, 2], t0), named("e1", &[4, 2], t1)];
-        let art = build_artifact(meta, &ws, Precision::Fp32).unwrap();
+        let art = build_artifact(meta, &ws, Precision::Fp32, None).unwrap();
         // table 0 pools rows {0, 1} -> [0+2, 1+3]; table 1 rows {2, 3} -> [14+16, 15+17]
         let out = art.run(&[HostTensor::from_i32(&[1, 2, 2], &[0, 1, 2, 3])]).unwrap();
         assert_eq!(out[0].as_f32().unwrap(), vec![2.0, 4.0, 30.0, 32.0]);
@@ -1100,7 +1197,7 @@ mod tests {
             prog,
         );
         let ws = vec![named("e0", &[4, 2], vec![0.0; 8])];
-        let art = build_artifact(meta, &ws, Precision::Fp32).unwrap();
+        let art = build_artifact(meta, &ws, Precision::Fp32, None).unwrap();
         assert!(art.run(&[HostTensor::from_i32(&[1, 2], &[0, 4])]).is_err());
         assert!(art.run(&[HostTensor::from_i32(&[1, 2], &[-1, 0])]).is_err());
     }
@@ -1127,7 +1224,7 @@ mod tests {
             &prog,
         );
         let ws = vec![named("cw", &[co, c, k, k], wt.clone()), named("cb", &[co], bias.clone())];
-        let art = build_artifact(meta, &ws, Precision::Fp32).unwrap();
+        let art = build_artifact(meta, &ws, Precision::Fp32, None).unwrap();
         let got = art.run(&[HostTensor::from_f32(&[b, c, h, w], &x)]).unwrap()[0]
             .as_f32()
             .unwrap();
@@ -1189,7 +1286,7 @@ mod tests {
             named("b0", &[dh], b0),
             named("w1", &[dout, dh], w1),
         ];
-        let art = build_artifact(meta, &ws, precision).unwrap();
+        let art = build_artifact(meta, &ws, precision, None).unwrap();
         let mut x = vec![0f32; 4 * din];
         let mut rng = Pcg32::seeded(99);
         rng.fill_normal(&mut x, 0.0, 1.0);

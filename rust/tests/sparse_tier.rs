@@ -1,0 +1,448 @@
+//! Sparse-tier seals: the sharded + cached embedding path must be a
+//! drop-in replacement for the monolithic table.
+//!
+//! The tier's numerics contract (embedding/shard.rs module docs) is
+//! placement invariance — every accumulation runs in f64 and rounds to
+//! f32 once, so results cannot depend on shard count, replication or
+//! cache state. The fp32 property tests therefore demand *bit-exact*
+//! agreement with the monolithic f64-accumulated reference
+//! (`EmbeddingTable::sparse_lengths_sum_exact`) across random
+//! configurations, including empty bags and bags that span every
+//! shard; int8 is held to the `Precision::min_sqnr_db` tolerance model
+//! against the fp32 reference. The serving-stack tests run the tier
+//! under a `ServingFrontend` with a self-synthesized artifacts fixture
+//! (no `make artifacts` needed, runs under `--no-default-features`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dcinfer::coordinator::{FrontendConfig, ServingFrontend};
+use dcinfer::embedding::{EmbeddingShardService, EmbeddingTable, LookupBatch, SparseTierConfig};
+use dcinfer::models::RecSysService;
+use dcinfer::quant::error::sqnr_db;
+use dcinfer::runtime::{
+    write_weights_file, BackendSpec, ExecBackend, HostTensor, Manifest, NamedTensor,
+    NativeBackend, Precision,
+};
+use dcinfer::util::rng::Pcg32;
+
+const CASES: u64 = 30;
+
+/// Random batch with empty bags and uniform-random (cross-shard) ids.
+fn random_batch(rng: &mut Pcg32, rows: usize, bags: usize, max_pool: usize) -> LookupBatch {
+    let mut indices = Vec::new();
+    let mut lengths = Vec::with_capacity(bags);
+    for _ in 0..bags {
+        // ~1 in 4 bags is empty — the paper's variable pooling extreme
+        let len = if rng.below(4) == 0 { 0 } else { 1 + rng.below(max_pool as u32) };
+        lengths.push(len);
+        for _ in 0..len {
+            indices.push(rng.below(rows as u32));
+        }
+    }
+    LookupBatch { indices, lengths }
+}
+
+// ---------------------------------------------------------------------------
+// Property: fp32 sharded+cached == monolithic exact reference, bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fp32_sharded_cached_matches_monolithic_bit_exactly() {
+    // shard counts >= 3 per the acceptance bar, plus 1 (degenerate) and
+    // replicated layouts; cache both disabled and enabled
+    let configs = [(1usize, 1usize, 0usize), (3, 1, 0), (3, 1, 64), (4, 2, 128), (6, 3, 32)];
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(900 + seed);
+        let rows = 20 + rng.below(400) as usize;
+        let dim = 1 + rng.below(48) as usize;
+        let bags = 1 + rng.below(8) as usize;
+        let table = EmbeddingTable::random(rows, dim, seed);
+        let batch = random_batch(&mut rng, rows, bags, 12);
+        let mut want = vec![0f32; bags * dim];
+        table.sparse_lengths_sum_exact(&batch, &mut want);
+        // the exact reference itself must track the f32 kernel closely
+        let mut f32_kernel = vec![0f32; bags * dim];
+        table.sparse_lengths_sum(&batch, &mut f32_kernel);
+        for (a, b) in want.iter().zip(&f32_kernel) {
+            assert!((a - b).abs() < 1e-3, "seed {seed}: exact {a} vs f32 {b}");
+        }
+
+        for (shards, replication, cache) in configs {
+            let svc = EmbeddingShardService::start(SparseTierConfig {
+                shards,
+                replication,
+                cache_capacity_rows: cache,
+                admit_after: 1,
+            })
+            .unwrap();
+            let id = svc.register_table("prop/emb", &table, false).unwrap();
+            // two passes: the second runs against a warm cache, and must
+            // still be bit-identical to the cold pass and the reference
+            for pass in 0..2 {
+                let mut got = vec![0f32; bags * dim];
+                svc.lookup(id, &batch, &mut got).unwrap();
+                assert_eq!(
+                    got, want,
+                    "seed {seed} shards {shards} repl {replication} cache {cache} pass {pass}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_int8_sharded_within_quant_tolerance_and_placement_invariant() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(7000 + seed);
+        let rows = 100 + rng.below(400) as usize;
+        let dim = 8 + rng.below(32) as usize;
+        let bags = 1 + rng.below(6) as usize;
+        let table = EmbeddingTable::random(rows, dim, 50 + seed);
+        let batch = random_batch(&mut rng, rows, bags, 16);
+        let mut reference = vec![0f32; bags * dim];
+        table.sparse_lengths_sum_exact(&batch, &mut reference);
+
+        // int8 through one shard = the quantization-only baseline
+        let mono = EmbeddingShardService::start(SparseTierConfig {
+            shards: 1,
+            replication: 1,
+            cache_capacity_rows: 0,
+            admit_after: 1,
+        })
+        .unwrap();
+        let id = mono.register_table("q/emb", &table, true).unwrap();
+        let mut base = vec![0f32; bags * dim];
+        mono.lookup(id, &batch, &mut base).unwrap();
+        let db = sqnr_db(&reference, &base);
+        assert!(
+            db >= Precision::I8Acc32.min_sqnr_db(),
+            "seed {seed}: int8 sqnr {db:.1} dB below bound"
+        );
+
+        // sharded + cached int8 must equal the one-shard int8 bitwise:
+        // row-wise quantization is per-row, so placement cannot move it
+        let svc = EmbeddingShardService::start(SparseTierConfig {
+            shards: 4,
+            replication: 2,
+            cache_capacity_rows: 64,
+            admit_after: 1,
+        })
+        .unwrap();
+        let id = svc.register_table("q/emb", &table, true).unwrap();
+        for _ in 0..2 {
+            let mut got = vec![0f32; bags * dim];
+            svc.lookup(id, &batch, &mut got).unwrap();
+            assert_eq!(got, base, "seed {seed}: int8 sharding changed the result");
+        }
+    }
+}
+
+#[test]
+fn cross_shard_and_empty_bags_explicit() {
+    // 10 rows over 3 ranges: [0,4) [4,8) [8,10); bag 1 touches all three
+    let data: Vec<f32> = (0..10).flat_map(|r| vec![r as f32; 2]).collect();
+    let table = EmbeddingTable::new(10, 2, data);
+    let batch = LookupBatch { indices: vec![0, 5, 9, 1, 8], lengths: vec![0, 3, 0, 2] };
+    let mut want = vec![0f32; 4 * 2];
+    table.sparse_lengths_sum_exact(&batch, &mut want);
+    assert_eq!(want, vec![0.0, 0.0, 14.0, 14.0, 0.0, 0.0, 9.0, 9.0]);
+
+    let svc = EmbeddingShardService::start(SparseTierConfig {
+        shards: 3,
+        replication: 1,
+        cache_capacity_rows: 4,
+        admit_after: 1,
+    })
+    .unwrap();
+    let id = svc.register_table("x/emb", &table, false).unwrap();
+    for _ in 0..3 {
+        let mut got = vec![0f32; 4 * 2];
+        svc.lookup(id, &batch, &mut got).unwrap();
+        assert_eq!(got, want);
+    }
+    // an all-empty batch is legal and yields zeros
+    let empty = LookupBatch { indices: vec![], lengths: vec![0, 0] };
+    let mut got = vec![1f32; 2 * 2];
+    svc.lookup(id, &empty, &mut got).unwrap();
+    assert_eq!(got, vec![0.0; 4]);
+}
+
+#[test]
+fn cache_counters_are_consistent_and_zipf_traffic_hits() {
+    let rows = 10_000usize;
+    let table = EmbeddingTable::random(rows, 16, 21);
+    let svc = EmbeddingShardService::start(SparseTierConfig {
+        shards: 4,
+        replication: 1,
+        cache_capacity_rows: 1024,
+        admit_after: 2,
+    })
+    .unwrap();
+    let id = svc.register_table("zipf/emb", &table, false).unwrap();
+    let mut rng = Pcg32::seeded(33);
+    let mut out = vec![0f32; 8 * 16];
+    let mut total_indices = 0u64;
+    for _ in 0..80 {
+        let batch = table.synth_batch(8, 32, 1.2, &mut rng);
+        total_indices += batch.indices.len() as u64;
+        svc.lookup(id, &batch, &mut out).unwrap();
+    }
+    let s = svc.snapshot();
+    assert_eq!(s.tables.len(), 1);
+    let t = &s.tables[0];
+    assert_eq!(t.hits + t.misses, total_indices, "every index probes the cache exactly once");
+    assert!(t.insertions <= t.misses, "insertions come from misses");
+    assert!(t.evictions <= t.insertions, "evictions come from insertions");
+    assert!(s.cached_rows <= 1024, "cache respects its bound");
+    assert!(t.hit_rate() > 0.1, "zipf-1.2 head should hit: rate {}", t.hit_rate());
+    assert!(s.indices == total_indices);
+    assert!(s.ingress_bytes > 0 && s.egress_bytes > 0 && s.row_fetch_bytes > 0);
+    // the cache must save boundary traffic vs an uncached tier
+    let cold = EmbeddingShardService::start(SparseTierConfig {
+        shards: 4,
+        replication: 1,
+        cache_capacity_rows: 0,
+        admit_after: 2,
+    })
+    .unwrap();
+    let id2 = cold.register_table("zipf/emb", &table, false).unwrap();
+    let mut rng = Pcg32::seeded(33);
+    for _ in 0..80 {
+        let batch = table.synth_batch(8, 32, 1.2, &mut rng);
+        cold.lookup(id2, &batch, &mut out).unwrap();
+    }
+    assert!(
+        svc.snapshot().ingress_bytes < cold.snapshot().ingress_bytes,
+        "cache hits must shrink the index traffic to the shards"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Serving-stack fixture (native artifacts synthesized in a temp dir)
+// ---------------------------------------------------------------------------
+
+const RECSYS_PROG: &str = r#"[
+  {"op": "fc", "out": "bot0", "in": "dense", "w": "bot_w0", "b": "bot_b0", "act": "relu"},
+  {"op": "embed_pool", "out": "p0", "indices": "indices", "table": "emb_0", "slice": 0},
+  {"op": "embed_pool", "out": "p1", "indices": "indices", "table": "emb_1", "slice": 1},
+  {"op": "concat", "out": "z", "in": ["p0", "p1", "bot0"]},
+  {"op": "fc", "out": "top0", "in": "z", "w": "top_w0", "b": "top_b0", "act": "none"},
+  {"op": "unary", "fn": "sigmoid", "out": "prob", "in": "top0"}
+]"#;
+
+fn tensor(rng: &mut Pcg32, name: &str, shape: &[usize], std: f32) -> NamedTensor {
+    let count: usize = shape.iter().product();
+    let mut data = vec![0f32; count];
+    rng.fill_normal(&mut data, 0.0, std);
+    NamedTensor { name: name.to_string(), tensor: HostTensor::from_f32(shape, &data) }
+}
+
+/// The compiler-emitted shard metadata contract for the 64-row tables.
+const GOOD_SHARDS: &str =
+    r#"{"default_count": 2, "tables": {"emb_0": [[0, 32], [32, 64]], "emb_1": [[0, 32], [32, 64]]}}"#;
+/// Drifted metadata: emb_1's ranges cover 60 of 64 rows.
+const BAD_SHARDS: &str =
+    r#"{"default_count": 2, "tables": {"emb_0": [[0, 32], [32, 64]], "emb_1": [[0, 32], [32, 60]]}}"#;
+
+/// Recsys-lite fixture: dense 8, 2 tables of 64x8, pool 4, b1/b4.
+fn fixture_dir(tag: &str) -> PathBuf {
+    fixture_dir_with_shards(tag, GOOD_SHARDS)
+}
+
+fn fixture_dir_with_shards(tag: &str, shards_meta: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("dcinfer_sparse_{tag}_{}", std::process::id()));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Pcg32::seeded(4321);
+    let weights = vec![
+        tensor(&mut rng, "emb_0", &[64, 8], 0.5),
+        tensor(&mut rng, "emb_1", &[64, 8], 0.5),
+        tensor(&mut rng, "bot_w0", &[8, 8], 0.3),
+        tensor(&mut rng, "bot_b0", &[8], 0.1),
+        tensor(&mut rng, "top_w0", &[1, 24], 0.2),
+        tensor(&mut rng, "top_b0", &[1], 0.1),
+    ];
+    write_weights_file(&dir.join("recsys.weights.bin"), &weights).unwrap();
+    let mut artifacts = Vec::new();
+    for b in [1usize, 4] {
+        artifacts.push(format!(
+            r#""recsys_fp32_b{b}": {{
+              "hlo": "recsys_b{b}.hlo.txt", "model": "recsys",
+              "weights": "recsys.weights.bin", "weight_params": [],
+              "precision": "fp32", "program": {RECSYS_PROG},
+              "inputs": [
+                {{"name": "dense", "dtype": "f32", "shape": [{b}, 8]}},
+                {{"name": "indices", "dtype": "i32", "shape": [{b}, 2, 4]}}
+              ],
+              "outputs": [{{"name": "prob", "dtype": "f32", "shape": [{b}, 1]}}],
+              "batch": {b}
+            }}"#
+        ));
+    }
+    let manifest = format!(
+        r#"{{
+          "version": 1,
+          "models": {{
+            "recsys": {{"dense_dim": 8, "emb_dim": 8, "n_tables": 2, "pool": 4,
+                        "rows_per_table": 64, "sparse_shards": {shards_meta}}}
+          }},
+          "artifacts": {{ {} }}
+        }}"#,
+        artifacts.join(",\n")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+#[test]
+fn native_backend_embed_pool_fetches_through_the_tier() {
+    let dir = fixture_dir("backend");
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rng = Pcg32::seeded(8);
+    let mut dense = vec![0f32; 4 * 8];
+    rng.fill_normal(&mut dense, 0.0, 1.0);
+    let idx: Vec<i32> = (0..4 * 2 * 4).map(|_| rng.below(64) as i32).collect();
+    let inputs = vec![
+        HostTensor::from_f32(&[4, 8], &dense),
+        HostTensor::from_i32(&[4, 2, 4], &idx),
+    ];
+
+    let local = NativeBackend::new(Precision::Fp32)
+        .load(&manifest, "recsys_fp32_b4")
+        .unwrap()
+        .run(&inputs)
+        .unwrap()[0]
+        .as_f32()
+        .unwrap();
+
+    let tier = EmbeddingShardService::start(SparseTierConfig {
+        shards: 3,
+        replication: 1,
+        cache_capacity_rows: 32,
+        admit_after: 1,
+    })
+    .unwrap();
+    let sharded = NativeBackend::with_sparse_tier(Precision::Fp32, tier.clone())
+        .load(&manifest, "recsys_fp32_b4")
+        .unwrap();
+    for _ in 0..2 {
+        let got = sharded.run(&inputs).unwrap()[0].as_f32().unwrap();
+        for (a, b) in local.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-5, "local {a} vs sharded {b}");
+        }
+    }
+    let s = tier.snapshot();
+    assert!(s.lookups >= 4, "two runs x two tables route through the tier: {}", s.lookups);
+    assert_eq!(s.tables.len(), 2);
+    assert!(s.tables.iter().all(|t| t.key.starts_with("recsys.weights.bin/emb_")));
+    assert!(s.tables.iter().all(|t| !t.quantized));
+
+    // int8 execution registers row-quantized slices and stays in tolerance
+    let int8 = NativeBackend::with_sparse_tier(Precision::I8Acc32, tier.clone())
+        .load(&manifest, "recsys_fp32_b4")
+        .unwrap();
+    let got = int8.run(&inputs).unwrap()[0].as_f32().unwrap();
+    let db = sqnr_db(&local, &got);
+    assert!(db >= Precision::I8Acc32.min_sqnr_db(), "int8-over-tier sqnr {db:.1} dB");
+    assert_eq!(tier.snapshot().tables.len(), 4, "int8 tables registered separately");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn drifted_sparse_shard_metadata_fails_the_sharded_load_only() {
+    let dir = fixture_dir_with_shards("drift", BAD_SHARDS);
+    let manifest = Manifest::load(&dir).unwrap();
+    // local path ignores the tier metadata entirely
+    assert!(NativeBackend::new(Precision::Fp32).load(&manifest, "recsys_fp32_b1").is_ok());
+    // sharded path validates it against the weights file before
+    // registering anything into the shared tier
+    let tier = EmbeddingShardService::start(SparseTierConfig::default()).unwrap();
+    let err = NativeBackend::with_sparse_tier(Precision::Fp32, tier.clone())
+        .load(&manifest, "recsys_fp32_b1")
+        .expect_err("drifted sparse_shards metadata must fail the load");
+    assert!(format!("{err:#}").contains("emb_1"), "{err:#}");
+    assert!(tier.snapshot().tables.is_empty(), "nothing registered on failure");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn frontend_serves_through_sparse_tier_with_metrics() {
+    let dir = fixture_dir("frontend");
+    let manifest = Manifest::load(&dir).unwrap();
+    let service = RecSysService::from_manifest(&manifest).unwrap();
+    let frontend = ServingFrontend::start(
+        FrontendConfig {
+            artifacts_dir: dir.clone(),
+            executors: 2,
+            max_wait_us: 500.0,
+            backend: BackendSpec::Native { precision: Precision::Fp32 },
+            sparse_tier: Some(SparseTierConfig {
+                shards: 3,
+                replication: 1,
+                cache_capacity_rows: 64,
+                admit_after: 1,
+            }),
+            ..Default::default()
+        },
+        vec![Arc::new(service.clone())],
+    )
+    .unwrap();
+
+    let mut rng = Pcg32::seeded(55);
+    let mut pending = Vec::new();
+    for i in 0..30 {
+        let mut req = service.synth_request(i, &mut rng, 200.0);
+        req.arrival = Instant::now();
+        pending.push(frontend.submit(req).unwrap());
+    }
+    for rx in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(resp.is_ok(), "sparse-tier response failed: {:?}", resp.outcome.err());
+        assert_eq!(resp.backend, "native/fp32");
+    }
+
+    // both executors share one tier: exactly one fp32 copy of each table
+    let tier = frontend.sparse_tier().expect("tier configured").clone();
+    let s = tier.snapshot();
+    assert_eq!(s.tables.len(), 2, "2 executors x 2 variants share 2 tier tables: {:?}", s.tables);
+    assert!(s.lookups > 0 && s.indices > 0);
+
+    // the per-lane metrics snapshot carries the tier counters
+    let snap = frontend.metrics(RecSysService::MODEL_ID).unwrap().snapshot();
+    assert_eq!(snap.served, 30);
+    assert_eq!(snap.failed, 0);
+    let sparse = snap.sparse.expect("snapshot carries sparse tier stats");
+    assert_eq!(sparse.shards, 3);
+    let probed: u64 = sparse.tables.iter().map(|t| t.hits + t.misses).sum();
+    assert!(probed > 0, "cache counters must reflect served traffic");
+
+    frontend.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn frontend_without_sparse_tier_reports_none() {
+    let dir = fixture_dir("notier");
+    let manifest = Manifest::load(&dir).unwrap();
+    let service = RecSysService::from_manifest(&manifest).unwrap();
+    let frontend = ServingFrontend::start(
+        FrontendConfig {
+            artifacts_dir: dir.clone(),
+            executors: 1,
+            backend: BackendSpec::Native { precision: Precision::Fp32 },
+            ..Default::default()
+        },
+        vec![Arc::new(service.clone())],
+    )
+    .unwrap();
+    assert!(frontend.sparse_tier().is_none());
+    let snap = frontend.metrics(RecSysService::MODEL_ID).unwrap().snapshot();
+    assert!(snap.sparse.is_none());
+    frontend.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
