@@ -3,17 +3,28 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts artifacts-fast test clean
+.PHONY: artifacts artifacts-fast perf test clean
 
-# Lower every model family to HLO text + weights + manifest. The Rust
-# runtime and benches load these from rust/artifacts (the crate's CWD
-# under `cargo run`/`cargo test`).
+# Lower every model family to HLO text + weights + manifest, then
+# refresh the perf-trajectory artifacts (BENCH_*.json at the repo
+# root). The Rust runtime and benches load these from rust/artifacts
+# (the crate's CWD under `cargo run`/`cargo test`).
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)/model.hlo.txt
+	$(MAKE) perf
 
 # CI smoke: only the smallest recsys artifacts.
 artifacts-fast:
 	cd python && python -m compile.aot --fast --out ../$(ARTIFACTS)/model.hlo.txt
+
+# Perf trajectory: runs the three perf benches and writes
+# BENCH_fig6_gemm.json / BENCH_alloc.json / BENCH_backend_parity.json
+# to the repo root. Works without `make artifacts` (the benches fall
+# back to a self-synthesized fixture).
+perf:
+	cd rust && cargo bench --bench fig6_gemm
+	cd rust && cargo bench --bench ablation_alloc
+	cd rust && cargo bench --bench e2e_serving
 
 test:
 	cd python && python -m pytest tests/ -q

@@ -15,7 +15,7 @@
 //! numerics it *contains* (`recsys_fp32_b1` below is `fp32`); the
 //! native backend can additionally *execute* an fp32 artifact at
 //! `fp16`, `i8acc32` or `i8acc16` by re-quantizing at load time — try
-//! `BackendSpec::Native { precision: Precision::I8Acc16 }`.
+//! `BackendSpec::native(Precision::I8Acc16)`.
 //!
 //! Loads the Fig-2 recommendation model (batch 1), builds one synthetic
 //! request (dense features + sparse embedding ids) and prints the

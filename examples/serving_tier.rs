@@ -43,7 +43,7 @@ fn main() -> Result<()> {
     let frontend = ServingFrontend::start(
         FrontendConfig {
             executors: 2,
-            backend: BackendSpec::Native { precision: Precision::Fp32 },
+            backend: BackendSpec::native(Precision::Fp32),
             sparse_tier: Some(SparseTierConfig {
                 shards: 4,
                 replication: 1,

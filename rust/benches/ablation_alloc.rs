@@ -1,13 +1,182 @@
-//! Ablation (DESIGN.md): on-chip memory allocation policy for the Fig-3
-//! roofline — the paper's greedy-by-value vs naive weights-first /
-//! activations-first pinning.
+//! Ablation: per-batch heap allocation on the native serving path.
+//!
+//! The pre-arena interpreter rebuilt a `HashMap<String, Reg>` of
+//! freshly allocated/cloned tensors on every batch. The planned
+//! register arena resolves names to dense slots at `build()` time and
+//! reuses one set of preallocated buffers per executor. This bench
+//! seals the difference with a counting global allocator:
+//!
+//! - `fresh`  — `NativeArtifact::execute_fresh`: allocate the arena per
+//!   batch (the pre-PR allocation behavior, buffer-for-buffer).
+//! - `steady` — `NativeArtifact::execute_steady`: the persistent-arena
+//!   hot path. **Must be zero allocations/batch** (asserted).
+//! - `run`    — the full `LoadedArtifact::run`, i.e. steady execution
+//!   plus output-tensor materialization at the API boundary.
+//!
+//! Runs on the self-synthesized artifacts fixture (no `make
+//! artifacts`). Emits `BENCH_alloc.json` at the repo root. `-- --smoke`
+//! runs a tiny iteration count for CI (the zero-alloc assert still
+//! holds). A second section keeps the DESIGN.md on-chip allocation
+//! policy ablation for the Fig-3 roofline.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use dcinfer::models::representative_zoo;
 use dcinfer::perfmodel::{roofline_model_with_policy, AllocPolicy, DeviceSpec};
-use dcinfer::util::bench::Table;
+use dcinfer::runtime::{
+    synthetic_artifacts_dir, HostTensor, LoadedArtifact, Manifest, NativeBackend, Precision,
+};
+use dcinfer::util::bench::{bench_cfg, keep, write_bench_json, Table};
+use dcinfer::util::rng::Pcg32;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: delegates to `System`, only adding relaxed counters.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// (allocations, bytes) per iteration of `f`.
+fn count<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64) {
+    let a0 = ALLOCS.load(Ordering::SeqCst);
+    let b0 = BYTES.load(Ordering::SeqCst);
+    for _ in 0..iters {
+        f();
+    }
+    let da = ALLOCS.load(Ordering::SeqCst) - a0;
+    let db = BYTES.load(Ordering::SeqCst) - b0;
+    (da as f64 / iters as f64, db as f64 / iters as f64)
+}
 
 fn main() {
-    println!("== ablation: on-chip allocation policy (8 MB, 1 TB/s) ==\n");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 10 } else { 200 };
+    let (budget, min_samples) = if smoke { (1, 1) } else { (80, 8) };
+
+    println!("== ablation: per-batch heap allocation, fresh-arena vs planned-arena ==\n");
+    let dir = synthetic_artifacts_dir("alloc").expect("fixture");
+    let manifest = Manifest::load(&dir).expect("manifest");
+
+    let mut rng = Pcg32::seeded(11);
+    let mut dense = vec![0f32; 4 * 8];
+    rng.fill_normal(&mut dense, 0.0, 1.0);
+    let idx: Vec<i32> = (0..4 * 2 * 4).map(|_| rng.below(64) as i32).collect();
+    let inputs = vec![
+        HostTensor::from_f32(&[4, 8], &dense),
+        HostTensor::from_i32(&[4, 2, 4], &idx),
+    ];
+
+    let mut table = Table::new(&[
+        "precision", "mode", "allocs/batch", "KB/batch", "p50 us",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for precision in [Precision::Fp32, Precision::I8Acc16] {
+        let art = NativeBackend::new(precision)
+            .load_native(&manifest, "recsys_fp32_b4")
+            .expect("load recsys_fp32_b4");
+        // warm: high-water capacities (thread-local quant scratch,
+        // lookup batches) are reached on the first batches
+        for _ in 0..10 {
+            art.execute_steady(&inputs).expect("warmup");
+        }
+
+        let (fresh_allocs, fresh_bytes) =
+            count(iters, || art.execute_fresh(&inputs).expect("fresh"));
+        let (steady_allocs, steady_bytes) =
+            count(iters, || art.execute_steady(&inputs).expect("steady"));
+        let (run_allocs, run_bytes) = count(iters, || {
+            keep(art.run(&inputs).expect("run"));
+        });
+
+        let t_fresh = bench_cfg("fresh", budget, min_samples, &mut || {
+            art.execute_fresh(&inputs).expect("fresh");
+        });
+        let t_steady = bench_cfg("steady", budget, min_samples, &mut || {
+            art.execute_steady(&inputs).expect("steady");
+        });
+        let t_run = bench_cfg("run", budget, min_samples, &mut || {
+            keep(art.run(&inputs).expect("run"));
+        });
+
+        for (mode, allocs, bytes, t) in [
+            ("fresh", fresh_allocs, fresh_bytes, &t_fresh),
+            ("steady", steady_allocs, steady_bytes, &t_steady),
+            ("run", run_allocs, run_bytes, &t_run),
+        ] {
+            table.row(&[
+                precision.as_str().to_string(),
+                mode.to_string(),
+                format!("{allocs:.1}"),
+                format!("{:.2}", bytes / 1024.0),
+                format!("{:.1}", t.median_ns / 1e3),
+            ]);
+            json_rows.push(format!(
+                "    {{\"precision\": \"{}\", \"mode\": \"{mode}\", \"allocs_per_batch\": {allocs:.2}, \"bytes_per_batch\": {bytes:.0}, \"p50_us\": {:.2}}}",
+                precision.as_str(),
+                t.median_ns / 1e3
+            ));
+        }
+
+        // the acceptance gate: steady-state execution allocates nothing
+        assert!(
+            steady_allocs == 0.0 && steady_bytes == 0.0,
+            "{precision}: steady-state execute allocated {steady_allocs:.1} times \
+             ({steady_bytes:.0} B) per batch — the arena hot path must be allocation-free"
+        );
+        assert!(
+            fresh_allocs >= 1.0,
+            "{precision}: fresh-arena baseline reported no allocations — counter broken?"
+        );
+    }
+    table.print();
+    println!("\n(steady = planned-arena hot path; fresh = pre-arena allocate-per-batch baseline;");
+    println!(" run adds the output-tensor materialization of the public API)");
+    println!("zero-allocation guard passed for the steady-state arena path");
+
+    let json = format!(
+        "{{\n  \"bench\": \"ablation_alloc\",\n  \"artifact\": \"recsys_fp32_b4\",\n  \"iters\": {iters},\n  \"smoke\": {smoke},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    let path = write_bench_json("BENCH_alloc.json", &json);
+    println!("wrote {}", path.display());
+
+    let _ = std::fs::remove_dir_all(&dir);
+
+    onchip_policy_table();
+}
+
+/// The original DESIGN.md ablation: on-chip memory allocation policy
+/// for the Fig-3 roofline — the paper's greedy-by-value vs naive
+/// weights-first / activations-first pinning.
+fn onchip_policy_table() {
+    println!("\n== ablation: on-chip allocation policy (8 MB, 1 TB/s) ==\n");
     let dev = DeviceSpec::fig3(8.0, 1.0);
     let mut table = Table::new(&["model", "greedy TOP/s", "weights-first", "acts-first"]);
     let mut greedy_wins = 0usize;

@@ -2,27 +2,31 @@
 //! batcher + executor pool) under increasing offered load — the §4
 //! latency/throughput story — followed by a backend/precision parity
 //! sweep that serves the same load through every available
-//! `BackendSpec` and emits `BENCH_backend_parity.json` with
-//! per-precision p50/p99.
+//! `BackendSpec` (including an intra-op-threaded native config) and
+//! emits `BENCH_backend_parity.json` (repo root) with per-config
+//! p50/p99.
 //!
-//! Requires `make artifacts` (prints a skip message otherwise).
+//! Prefers real artifacts (`make artifacts`); falls back to the
+//! self-synthesized recsys-lite fixture so the bench runs everywhere.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
 use dcinfer::coordinator::{FrontendConfig, ServingFrontend};
 use dcinfer::models::RecSysService;
-use dcinfer::runtime::{BackendSpec, Manifest, Precision};
-use dcinfer::util::bench::Table;
+use dcinfer::runtime::{synthetic_artifacts_dir, BackendSpec, Manifest, Precision};
+use dcinfer::util::bench::{write_bench_json, Table};
 use dcinfer::util::rng::Pcg32;
 
 fn main() {
-    if !Path::new("artifacts/manifest.json").exists() {
-        println!("skipping e2e_serving: run `make artifacts` first");
-        return;
-    }
-    let manifest = Manifest::load(Path::new("artifacts")).expect("manifest");
+    let (dir, fixture): (PathBuf, bool) = if Path::new("artifacts/manifest.json").exists() {
+        (PathBuf::from("artifacts"), false)
+    } else {
+        println!("(no real artifacts; using the self-synthesized recsys-lite fixture)");
+        (synthetic_artifacts_dir("e2e").expect("fixture"), true)
+    };
+    let manifest = Manifest::load(&dir).expect("manifest");
     let service = RecSysService::from_manifest(&manifest).expect("recsys config");
     println!("== E2E serving: offered load sweep ({}, 2 executors) ==\n", RecSysService::PREFIX);
     let mut table = Table::new(&[
@@ -30,7 +34,7 @@ fn main() {
     ]);
     for &qps in &[500.0f64, 2000.0, 8000.0] {
         let frontend = ServingFrontend::start(
-            FrontendConfig { executors: 2, ..Default::default() },
+            FrontendConfig { artifacts_dir: dir.clone(), executors: 2, ..Default::default() },
             vec![Arc::new(service.clone())],
         )
         .expect("frontend start");
@@ -66,7 +70,10 @@ fn main() {
     table.print();
     println!("\n(batches grow with offered load — the §4 dis-aggregation efficiency story)");
 
-    backend_parity_sweep(&manifest, &service);
+    backend_parity_sweep(&dir, &manifest, &service);
+    if fixture {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 fn warmup(frontend: &ServingFrontend, service: &RecSysService) {
@@ -83,9 +90,11 @@ fn warmup(frontend: &ServingFrontend, service: &RecSysService) {
 }
 
 /// Serve an identical load through every available backend/precision
-/// and record per-config latency — the one-binary A/B the `ExecBackend`
-/// redesign exists for. Emits `BENCH_backend_parity.json`.
-fn backend_parity_sweep(manifest: &Manifest, service: &RecSysService) {
+/// (plus the intra-op-threaded native fp32 config — the cores-per-op
+/// vs executors trade at batch 1) and record per-config latency — the
+/// one-binary A/B the `ExecBackend` redesign exists for. Emits
+/// `BENCH_backend_parity.json`.
+fn backend_parity_sweep(dir: &Path, manifest: &Manifest, service: &RecSysService) {
     let mut specs: Vec<BackendSpec> = Vec::new();
     #[cfg(feature = "pjrt")]
     specs.push(BackendSpec::Pjrt);
@@ -96,18 +105,35 @@ fn backend_parity_sweep(manifest: &Manifest, service: &RecSysService) {
         .unwrap_or(false);
     if native_ok {
         for p in Precision::all() {
-            specs.push(BackendSpec::Native { precision: p });
+            specs.push(BackendSpec::native(p));
         }
+        // one executor, all cores per GEMM: the intra-op latency lever
+        specs.push(BackendSpec::native_threaded(Precision::Fp32, 0));
     } else {
         println!("\n(artifacts carry no native op program; rebuild with `make artifacts` to sweep native precisions)");
     }
 
     println!("\n== backend/precision parity: same load, every execution path ==\n");
-    let mut table = Table::new(&["backend", "served", "p50 us", "p99 us", "exec p50 us"]);
+    let mut table =
+        Table::new(&["backend", "threads", "served", "p50 us", "p99 us", "exec p50 us"]);
     let mut json_rows = Vec::new();
     for spec in specs {
+        // resolve the 0 = all-cores sentinel so the recorded JSON says
+        // what actually ran
+        let threads = match spec {
+            BackendSpec::Native { threads, .. } => {
+                dcinfer::gemm::GemmCtx::threaded(threads).threads
+            }
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt => 1,
+        };
         let frontend = ServingFrontend::start(
-            FrontendConfig { executors: 1, backend: spec, ..Default::default() },
+            FrontendConfig {
+                artifacts_dir: dir.to_path_buf(),
+                executors: 1,
+                backend: spec,
+                ..Default::default()
+            },
             vec![Arc::new(service.clone())],
         )
         .expect("frontend start");
@@ -134,13 +160,14 @@ fn backend_parity_sweep(manifest: &Manifest, service: &RecSysService) {
         );
         table.row(&[
             spec.label(),
+            threads.to_string(),
             snap.served.to_string(),
             format!("{:.0}", snap.total_p50_us),
             format!("{:.0}", snap.total_p99_us),
             format!("{:.0}", snap.exec_p50_us),
         ]);
         json_rows.push(format!(
-            "    {{\"backend\": \"{}\", \"served\": {}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"exec_p50_us\": {:.1}}}",
+            "    {{\"backend\": \"{}\", \"threads\": {threads}, \"served\": {}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"exec_p50_us\": {:.1}}}",
             spec.label(),
             snap.served,
             snap.total_p50_us,
@@ -155,6 +182,6 @@ fn backend_parity_sweep(manifest: &Manifest, service: &RecSysService) {
         "{{\n  \"bench\": \"backend_parity\",\n  \"requests_per_config\": 300,\n  \"rows\": [\n{}\n  ]\n}}\n",
         json_rows.join(",\n")
     );
-    std::fs::write("BENCH_backend_parity.json", &json).expect("write BENCH_backend_parity.json");
-    println!("\nwrote BENCH_backend_parity.json ({} configs)", json_rows.len());
+    let path = write_bench_json("BENCH_backend_parity.json", &json);
+    println!("\nwrote {} ({} configs)", path.display(), json_rows.len());
 }

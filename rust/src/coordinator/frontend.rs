@@ -25,7 +25,7 @@
 //! let recsys = RecSysService::from_manifest(&manifest)?;
 //! let frontend = ServingFrontend::start(
 //!     FrontendConfig {
-//!         backend: BackendSpec::Native { precision: Precision::Fp32 },
+//!         backend: BackendSpec::native(Precision::Fp32),
 //!         sparse_tier: Some(SparseTierConfig::default()),
 //!         ..Default::default()
 //!     },
@@ -551,7 +551,7 @@ mod tests {
 
     #[test]
     fn config_validation_rejects_duplicate_overrides() {
-        let spec = BackendSpec::Native { precision: Precision::Fp32 };
+        let spec = BackendSpec::native(Precision::Fp32);
         let cfg = FrontendConfig {
             model_backends: vec![("m".into(), spec), ("m".into(), spec)],
             ..Default::default()
@@ -575,7 +575,7 @@ mod tests {
 
     #[test]
     fn backend_overrides_resolve_per_model() {
-        let int8 = BackendSpec::Native { precision: Precision::I8Acc16 };
+        let int8 = BackendSpec::native(Precision::I8Acc16);
         let cfg =
             FrontendConfig { model_backends: vec![("recsys".into(), int8)], ..Default::default() };
         assert_eq!(cfg.backend_for("recsys"), int8);

@@ -3,7 +3,16 @@
 //! in embedding tables" — cutting table bandwidth ~4x, which is the
 //! whole cost of the dominant operator.
 
+use std::cell::RefCell;
+
 use super::{table::EmbeddingTable, LookupBatch};
+
+thread_local! {
+    /// Reused alternate accumulator (see `sparse_lengths_sum`): sized
+    /// to the widest table seen on this thread, so steady-state pooled
+    /// lookups allocate nothing.
+    static ALT_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
 
 /// `[rows x dim]` int8 table; each row stores (scale, bias) fp32 pairs.
 #[derive(Debug, Clone)]
@@ -54,41 +63,48 @@ impl QuantizedTable {
         out.fill(0.0);
         let mut cursor = 0usize;
         // second accumulator breaks the FMA dependency chain across the
-        // pooled rows (two independent streams per bag)
-        let mut alt = vec![0f32; self.dim];
-        for (bag, &len) in batch.lengths.iter().enumerate() {
-            let dst = &mut out[bag * self.dim..(bag + 1) * self.dim];
-            alt.fill(0.0);
-            let mut i = 0u32;
-            while i + 1 < len {
-                let (row0, s0, b0) = self.row(batch.indices[cursor] as usize);
-                let (row1, s1, b1) = self.row(batch.indices[cursor + 1] as usize);
-                cursor += 2;
-                // fold the +128 offset into a per-row constant so the
-                // inner loop is a single widen+FMA per element
-                // (vectorizes to vpmovsxbd + vcvtdq2ps + vfmadd)
-                let off0 = 128.0 * s0 + b0;
-                let off1 = 128.0 * s1 + b1;
-                for (((d, a), &q0), &q1) in
-                    dst.iter_mut().zip(alt.iter_mut()).zip(row0).zip(row1)
-                {
-                    *d += q0 as f32 * s0 + off0;
-                    *a += q1 as f32 * s1 + off1;
+        // pooled rows (two independent streams per bag); thread-local so
+        // the serving hot path stays allocation-free once warm
+        ALT_SCRATCH.with(|scratch| {
+            let mut alt = scratch.borrow_mut();
+            if alt.len() < self.dim {
+                alt.resize(self.dim, 0.0);
+            }
+            let alt = &mut alt[..self.dim];
+            for (bag, &len) in batch.lengths.iter().enumerate() {
+                let dst = &mut out[bag * self.dim..(bag + 1) * self.dim];
+                alt.fill(0.0);
+                let mut i = 0u32;
+                while i + 1 < len {
+                    let (row0, s0, b0) = self.row(batch.indices[cursor] as usize);
+                    let (row1, s1, b1) = self.row(batch.indices[cursor + 1] as usize);
+                    cursor += 2;
+                    // fold the +128 offset into a per-row constant so the
+                    // inner loop is a single widen+FMA per element
+                    // (vectorizes to vpmovsxbd + vcvtdq2ps + vfmadd)
+                    let off0 = 128.0 * s0 + b0;
+                    let off1 = 128.0 * s1 + b1;
+                    for (((d, a), &q0), &q1) in
+                        dst.iter_mut().zip(alt.iter_mut()).zip(row0).zip(row1)
+                    {
+                        *d += q0 as f32 * s0 + off0;
+                        *a += q1 as f32 * s1 + off1;
+                    }
+                    i += 2;
                 }
-                i += 2;
-            }
-            if i < len {
-                let (row, scale, bias) = self.row(batch.indices[cursor] as usize);
-                cursor += 1;
-                let off = 128.0 * scale + bias;
-                for (d, &q) in dst.iter_mut().zip(row) {
-                    *d += q as f32 * scale + off;
+                if i < len {
+                    let (row, scale, bias) = self.row(batch.indices[cursor] as usize);
+                    cursor += 1;
+                    let off = 128.0 * scale + bias;
+                    for (d, &q) in dst.iter_mut().zip(row) {
+                        *d += q as f32 * scale + off;
+                    }
+                }
+                for (d, a) in dst.iter_mut().zip(alt.iter()) {
+                    *d += a;
                 }
             }
-            for (d, a) in dst.iter_mut().zip(&alt) {
-                *d += a;
-            }
-        }
+        })
     }
 }
 

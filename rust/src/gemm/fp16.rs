@@ -3,10 +3,19 @@
 //!
 //! Subnormal f16 values are flushed to zero *at pack time* so the
 //! branchless widen in the inner loop is exact for every stored value.
+//!
+//! Shares the blocking/dispatch core of [`super::kernel`] with the
+//! fp32 path: MC/NC blocked, MR x NR register-tiled, portable + AVX2
+//! variants, per-element accumulation strictly k-ascending (bit-exact
+//! across ISA/threads against a widened-weights fp32 reference).
 
 use crate::util::f16::f32_to_f16;
 
-use super::fp32::{MR, NR};
+use super::fp32::NR;
+use super::kernel::{
+    mc_rows, nc_panels, partition, sanitize_isa, GemmCtx, Isa, Partition, SharedMut, MR,
+};
+use super::parallel;
 use super::pipeline::OutputPipeline;
 
 /// B packed as f16 panels.
@@ -62,39 +71,170 @@ impl PackedBF16 {
     }
 }
 
-/// C = pipeline(A * B^T) with fp16-stored B.
+/// MR x NR micro-kernel: widen one panel row, broadcast-FMA per A row.
+///
+/// # Safety
+/// As [`super::fp32`]'s micro-kernel: `a` holds rows `r0..r0+MB` of
+/// stride `k`, `panel` is `k * NR` long, `c` valid for the addressed
+/// rows/cols.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_f16<const MB: usize>(
+    a: &[f32],
+    k: usize,
+    r0: usize,
+    panel: &[u16],
+    pipe: &OutputPipeline,
+    c: *mut f32,
+    n: usize,
+    n0: usize,
+    nb: usize,
+) {
+    let mut acc = [[0f32; NR]; MB];
+    let base = a.as_ptr().add(r0 * k);
+    for (kk, prow) in panel.chunks_exact(NR).enumerate() {
+        let mut wide = [0f32; NR];
+        for (w, &h) in wide.iter_mut().zip(prow.iter()) {
+            *w = widen_fast(h);
+        }
+        for im in 0..MB {
+            let av = *base.add(im * k + kk);
+            let accr = &mut acc[im];
+            for (ar, &wv) in accr.iter_mut().zip(wide.iter()) {
+                *ar += av * wv;
+            }
+        }
+    }
+    for (im, accr) in acc.iter().enumerate() {
+        let crow = c.add((r0 + im) * n + n0);
+        for r in 0..nb {
+            *crow.add(r) = pipe.apply_f32(accr[r], n0 + r);
+        }
+    }
+}
+
+/// MC/NC-blocked sweep (see [`super::kernel`] docs).
+///
+/// # Safety
+/// See [`micro_f16`]; `p0..p1` must be within the pack.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn blocks_f16(
+    a: &[f32],
+    m0: usize,
+    m1: usize,
+    b: &PackedBF16,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    let (n, k) = (b.n, b.k);
+    let mc = mc_rows(k, 4);
+    let ncp = nc_panels(k, NR, 2);
+    let mut pb = p0;
+    while pb < p1 {
+        let pe = (pb + ncp).min(p1);
+        let mut rb = m0;
+        while rb < m1 {
+            let re = (rb + mc).min(m1);
+            for p in pb..pe {
+                let panel = b.panel(p);
+                let n0 = p * NR;
+                let nb = NR.min(n - n0);
+                let mut r = rb;
+                while r < re {
+                    match re - r {
+                        1 => micro_f16::<1>(a, k, r, panel, pipe, c, n, n0, nb),
+                        2 => micro_f16::<2>(a, k, r, panel, pipe, c, n, n0, nb),
+                        3 => micro_f16::<3>(a, k, r, panel, pipe, c, n, n0, nb),
+                        _ => micro_f16::<4>(a, k, r, panel, pipe, c, n, n0, nb),
+                    }
+                    r += MR;
+                }
+            }
+            rb = re;
+        }
+        pb = pe;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn blocks_f16_avx2(
+    a: &[f32],
+    m0: usize,
+    m1: usize,
+    b: &PackedBF16,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    blocks_f16(a, m0, m1, b, p0, p1, pipe, c)
+}
+
+/// ISA-dispatched range execution.
+///
+/// # Safety
+/// `c` must be valid for writes over the addressed ranges; concurrent
+/// callers must cover disjoint ranges.
+#[allow(clippy::too_many_arguments)]
+unsafe fn run_f16(
+    isa: Isa,
+    a: &[f32],
+    m0: usize,
+    m1: usize,
+    b: &PackedBF16,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => blocks_f16_avx2(a, m0, m1, b, p0, p1, pipe, c),
+        _ => blocks_f16(a, m0, m1, b, p0, p1, pipe, c),
+    }
+}
+
+/// C = pipeline(A * B^T) with fp16-stored B (auto ISA, serial).
 pub fn gemm_f16(a: &[f32], m: usize, b: &PackedBF16, pipe: &OutputPipeline, c: &mut [f32]) {
+    gemm_f16_ctx(&GemmCtx::auto(), a, m, b, pipe, c)
+}
+
+/// [`gemm_f16`] under an explicit ISA/threading context.
+pub fn gemm_f16_ctx(
+    ctx: &GemmCtx,
+    a: &[f32],
+    m: usize,
+    b: &PackedBF16,
+    pipe: &OutputPipeline,
+    c: &mut [f32],
+) {
     let (n, k) = (b.n, b.k);
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
     let n_panels = n.div_ceil(NR);
-    let mut wide = [0f32; NR];
-    for m0 in (0..m).step_by(MR) {
-        let mb = MR.min(m - m0);
-        for p in 0..n_panels {
-            let panel = b.panel(p);
-            let mut acc = [[0f32; NR]; MR];
-            for kk in 0..k {
-                let prow = &panel[kk * NR..kk * NR + NR];
-                for r in 0..NR {
-                    wide[r] = widen_fast(prow[r]);
-                }
-                for im in 0..mb {
-                    let av = a[(m0 + im) * k + kk];
-                    let accr = &mut acc[im];
-                    for r in 0..NR {
-                        accr[r] += av * wide[r];
-                    }
-                }
+    let cp = SharedMut(c.as_mut_ptr());
+    let isa = sanitize_isa(ctx.isa);
+    match partition(ctx, m, n, k, n_panels) {
+        Partition::Serial => unsafe { run_f16(isa, a, 0, m, b, 0, n_panels, pipe, cp.0) },
+        Partition::Rows { chunks, rows_per } => parallel::run(chunks, &|i| {
+            let (r0, r1) = (i * rows_per, ((i + 1) * rows_per).min(m));
+            if r0 < r1 {
+                // SAFETY: chunks write disjoint row ranges of c
+                unsafe { run_f16(isa, a, r0, r1, b, 0, n_panels, pipe, cp.0) }
             }
-            let n0 = p * NR;
-            let nb = NR.min(n - n0);
-            for im in 0..mb {
-                for r in 0..nb {
-                    c[(m0 + im) * n + n0 + r] = pipe.apply_f32(acc[im][r], n0 + r);
-                }
+        }),
+        Partition::Panels { chunks, panels_per } => parallel::run(chunks, &|i| {
+            let (p0, p1) = (i * panels_per, ((i + 1) * panels_per).min(n_panels));
+            if p0 < p1 {
+                // SAFETY: chunks write disjoint column ranges of c
+                unsafe { run_f16(isa, a, 0, m, b, p0, p1, pipe, cp.0) }
             }
-        }
+        }),
     }
 }
 
@@ -129,6 +269,24 @@ mod tests {
             // f16 weights: rel error ~2^-11 per product, accumulated over k
             assert!((x - y).abs() < 0.02 * (1.0 + y.abs()), "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn scalar_simd_and_threaded_agree_bitwise() {
+        let mut rng = Pcg32::seeded(45);
+        let (m, n, k) = (9, 50, 77);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let packed = PackedBF16::pack(&b, n, k);
+        let pipe = OutputPipeline::identity(n, false);
+        let mut c0 = vec![0f32; m * n];
+        gemm_f16_ctx(&GemmCtx::scalar(), &a, m, &packed, &pipe, &mut c0);
+        let mut c1 = vec![0f32; m * n];
+        gemm_f16_ctx(&GemmCtx::auto(), &a, m, &packed, &pipe, &mut c1);
+        assert_eq!(c0, c1);
+        let mut c2 = vec![0f32; m * n];
+        gemm_f16_ctx(&GemmCtx::threaded(2), &a, m, &packed, &pipe, &mut c2);
+        assert_eq!(c0, c2);
     }
 
     #[test]

@@ -1,17 +1,27 @@
-//! Packed fp32 GEMM — the MKL-stand-in baseline of Fig 6.
+//! Packed fp32 GEMM — the MKL-stand-in baseline of Fig 6, built on the
+//! shared blocking/dispatch core ([`super::kernel`]).
 //!
 //! B (the weight matrix, `[N x K]` in the Caffe2 FC convention) is
 //! packed once into K-major panels of [`NR`] output channels so the
 //! inner loop is a unit-stride, auto-vectorizable FMA over the panel.
 //! The pre-packing amortizes across every inference that reuses the
 //! weights — the interface change the paper argues DL needs from BLAS.
+//!
+//! Execution walks MC x NC blocks of (rows x panels) with an MR x NR
+//! register-tiled micro-kernel monomorphized per row count, compiled
+//! both portable and under AVX2+FMA and selected at runtime. Per
+//! output element the accumulation is one strictly k-ascending chain,
+//! so every (ISA, thread-count) variant is bit-exact with the naive
+//! reference.
 
+use super::kernel::{
+    mc_rows, nc_panels, partition, sanitize_isa, GemmCtx, Isa, Partition, SharedMut, MR,
+};
+use super::parallel;
 use super::pipeline::OutputPipeline;
 
 /// Panel width (output channels per panel). 16 f32 lanes = 2 AVX2 regs.
 pub const NR: usize = 16;
-/// Row block (M) per micro-kernel invocation.
-pub const MR: usize = 4;
 
 /// B packed for the fp32 path.
 #[derive(Debug, Clone)]
@@ -47,35 +57,169 @@ impl PackedBF32 {
     }
 }
 
-/// C[M x N] = pipeline(A[M x K] * B^T), A row-major.
+/// MR x NR register-tiled micro-kernel over one packed panel, row count
+/// monomorphized so the accumulator tile never spills.
+///
+/// # Safety
+/// `a` must hold rows `r0..r0+MB` of stride `k`, `panel` must be
+/// exactly `k * NR` long, and `c` must be valid for writes at rows
+/// `r0..r0+MB` x cols `n0..n0+nb` with row stride `n`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_f32<const MB: usize>(
+    a: &[f32],
+    k: usize,
+    r0: usize,
+    panel: &[f32],
+    pipe: &OutputPipeline,
+    c: *mut f32,
+    n: usize,
+    n0: usize,
+    nb: usize,
+) {
+    let mut acc = [[0f32; NR]; MB];
+    let base = a.as_ptr().add(r0 * k);
+    for (kk, prow) in panel.chunks_exact(NR).enumerate() {
+        let prow = &*(prow.as_ptr() as *const [f32; NR]);
+        for im in 0..MB {
+            let av = *base.add(im * k + kk);
+            let accr = &mut acc[im];
+            for (ar, &pv) in accr.iter_mut().zip(prow.iter()) {
+                *ar += av * pv;
+            }
+        }
+    }
+    for (im, accr) in acc.iter().enumerate() {
+        let crow = c.add((r0 + im) * n + n0);
+        for r in 0..nb {
+            *crow.add(r) = pipe.apply_f32(accr[r], n0 + r);
+        }
+    }
+}
+
+/// MC/NC-blocked sweep of rows `m0..m1` x panels `p0..p1`.
+///
+/// # Safety
+/// See [`micro_f32`]; additionally `p0..p1` must be within the pack.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn blocks_f32(
+    a: &[f32],
+    m0: usize,
+    m1: usize,
+    b: &PackedBF32,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    let (n, k) = (b.n, b.k);
+    let mc = mc_rows(k, 4);
+    let ncp = nc_panels(k, NR, 4);
+    let mut pb = p0;
+    while pb < p1 {
+        let pe = (pb + ncp).min(p1);
+        let mut rb = m0;
+        while rb < m1 {
+            let re = (rb + mc).min(m1);
+            for p in pb..pe {
+                let panel = b.panel(p);
+                let n0 = p * NR;
+                let nb = NR.min(n - n0);
+                let mut r = rb;
+                while r < re {
+                    match re - r {
+                        1 => micro_f32::<1>(a, k, r, panel, pipe, c, n, n0, nb),
+                        2 => micro_f32::<2>(a, k, r, panel, pipe, c, n, n0, nb),
+                        3 => micro_f32::<3>(a, k, r, panel, pipe, c, n, n0, nb),
+                        _ => micro_f32::<4>(a, k, r, panel, pipe, c, n, n0, nb),
+                    }
+                    r += MR;
+                }
+            }
+            rb = re;
+        }
+        pb = pe;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn blocks_f32_avx2(
+    a: &[f32],
+    m0: usize,
+    m1: usize,
+    b: &PackedBF32,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    blocks_f32(a, m0, m1, b, p0, p1, pipe, c)
+}
+
+/// ISA-dispatched range execution (rows `m0..m1`, panels `p0..p1`).
+///
+/// # Safety
+/// `c` must be valid for writes over the addressed row/column ranges;
+/// concurrent callers must cover disjoint ranges.
+#[allow(clippy::too_many_arguments)]
+unsafe fn run_f32(
+    isa: Isa,
+    a: &[f32],
+    m0: usize,
+    m1: usize,
+    b: &PackedBF32,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => blocks_f32_avx2(a, m0, m1, b, p0, p1, pipe, c),
+        _ => blocks_f32(a, m0, m1, b, p0, p1, pipe, c),
+    }
+}
+
+/// C[M x N] = pipeline(A[M x K] * B^T), A row-major (auto-detected ISA,
+/// serial).
 pub fn gemm_f32(a: &[f32], m: usize, b: &PackedBF32, pipe: &OutputPipeline, c: &mut [f32]) {
+    gemm_f32_ctx(&GemmCtx::auto(), a, m, b, pipe, c)
+}
+
+/// [`gemm_f32`] under an explicit ISA/threading context.
+pub fn gemm_f32_ctx(
+    ctx: &GemmCtx,
+    a: &[f32],
+    m: usize,
+    b: &PackedBF32,
+    pipe: &OutputPipeline,
+    c: &mut [f32],
+) {
     let (n, k) = (b.n, b.k);
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
     let n_panels = n.div_ceil(NR);
-    for m0 in (0..m).step_by(MR) {
-        let mb = MR.min(m - m0);
-        for p in 0..n_panels {
-            let panel = b.panel(p);
-            let mut acc = [[0f32; NR]; MR];
-            for kk in 0..k {
-                let prow = &panel[kk * NR..kk * NR + NR];
-                for im in 0..mb {
-                    let av = a[(m0 + im) * k + kk];
-                    let accr = &mut acc[im];
-                    for r in 0..NR {
-                        accr[r] += av * prow[r];
-                    }
-                }
+    let cp = SharedMut(c.as_mut_ptr());
+    let isa = sanitize_isa(ctx.isa);
+    match partition(ctx, m, n, k, n_panels) {
+        Partition::Serial => unsafe { run_f32(isa, a, 0, m, b, 0, n_panels, pipe, cp.0) },
+        Partition::Rows { chunks, rows_per } => parallel::run(chunks, &|i| {
+            let (r0, r1) = (i * rows_per, ((i + 1) * rows_per).min(m));
+            if r0 < r1 {
+                // SAFETY: chunks write disjoint row ranges of c
+                unsafe { run_f32(isa, a, r0, r1, b, 0, n_panels, pipe, cp.0) }
             }
-            let n0 = p * NR;
-            let nb = NR.min(n - n0);
-            for im in 0..mb {
-                for r in 0..nb {
-                    c[(m0 + im) * n + n0 + r] = pipe.apply_f32(acc[im][r], n0 + r);
-                }
+        }),
+        Partition::Panels { chunks, panels_per } => parallel::run(chunks, &|i| {
+            let (p0, p1) = (i * panels_per, ((i + 1) * panels_per).min(n_panels));
+            if p0 < p1 {
+                // SAFETY: chunks write disjoint column ranges of c
+                unsafe { run_f32(isa, a, 0, m, b, p0, p1, pipe, cp.0) }
             }
-        }
+        }),
     }
 }
 
@@ -114,10 +258,27 @@ mod tests {
             let mut c = vec![0f32; m * n];
             gemm_f32(&a, m, &packed, &pipe, &mut c);
             let want = gemm_ref(&a, m, &b, n, k, false);
-            for (x, y) in c.iter().zip(&want) {
-                assert!((x - y).abs() <= 1e-4 * (1.0 + y.abs()), "{x} vs {y} ({m},{n},{k})");
-            }
+            // same k-ascending accumulation order: bit-exact
+            assert_eq!(c, want, "({m},{n},{k})");
         }
+    }
+
+    #[test]
+    fn scalar_simd_and_threaded_agree_bitwise() {
+        let mut rng = Pcg32::seeded(44);
+        let (m, n, k) = (13, 37, 129);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, n * k);
+        let packed = PackedBF32::pack(&b, n, k);
+        let pipe = OutputPipeline::identity(n, true);
+        let mut c_scalar = vec![0f32; m * n];
+        gemm_f32_ctx(&GemmCtx::scalar(), &a, m, &packed, &pipe, &mut c_scalar);
+        let mut c_auto = vec![0f32; m * n];
+        gemm_f32_ctx(&GemmCtx::auto(), &a, m, &packed, &pipe, &mut c_auto);
+        assert_eq!(c_scalar, c_auto);
+        let mut c_mt = vec![0f32; m * n];
+        gemm_f32_ctx(&GemmCtx::threaded(3), &a, m, &packed, &pipe, &mut c_mt);
+        assert_eq!(c_scalar, c_mt);
     }
 
     #[test]

@@ -4,11 +4,21 @@
 //! in *16-bit lanes* — twice the lanes of the i32 path, which is where
 //! the ~2x compute-bound speedup comes from on AVX2 (`vpmaddubsw`) —
 //! saturating within a spill block, then widening into the 32-bit
-//! accumulator. The sparse outlier residual runs on the exact i32 path
-//! and typically costs <1% of the time.
+//! accumulator. The sparse outlier residual is fused at the register
+//! tile (exact i32, `OutlierCsr::acc_tile`) so the kernel needs no
+//! `m x n` scratch accumulator and typically costs <1% of the time.
+//!
+//! Built on the shared blocking/dispatch core ([`super::kernel`]);
+//! integer math, so every (ISA, thread-count, blocking) variant is
+//! exactly equal to the naive reference with outliers enabled.
 
-use super::fp32::MR;
+use std::sync::Arc;
+
+use super::kernel::{
+    mc_rows, nc_panels, partition, sanitize_isa, GemmCtx, Isa, Partition, SharedMut, MR,
+};
 use super::outlier::{split_outliers, OutlierCsr};
+use super::parallel;
 use super::pipeline::OutputPipeline;
 
 /// acc16 panel width: 32 i16 lanes fill one 512-bit register, which is
@@ -29,7 +39,8 @@ pub struct PackedBI8Acc16 {
     pub k: usize,
     main: Vec<i8>,
     pub outliers: OutlierCsr,
-    pub rowsum: Vec<i32>,
+    /// pack-time row sums, shared with every pipeline over this pack
+    pub rowsum: Arc<[i32]>,
 }
 
 impl PackedBI8Acc16 {
@@ -58,7 +69,7 @@ impl PackedBI8Acc16 {
         for (j, rs) in rowsum.iter_mut().enumerate() {
             *rs = b[j * k..(j + 1) * k].iter().map(|&v| v as i32).sum();
         }
-        PackedBI8Acc16 { n, k, main, outliers, rowsum }
+        PackedBI8Acc16 { n, k, main, outliers, rowsum: rowsum.into() }
     }
 
     #[inline]
@@ -67,8 +78,183 @@ impl PackedBI8Acc16 {
     }
 }
 
-/// C = pipeline(A_q * B_q^T) on the 16-bit-accumulation path.
+/// MR x NR16 micro-kernel: paired 16-bit multiply-accumulate (the
+/// `vpmaddubsw` model) with saturating SPILL-block accumulation, 32-bit
+/// spills, and the fused outlier residual.
+///
+/// # Safety
+/// `a` must hold rows `r0..r0+MB` of stride `k`, `panel` must be
+/// `k * NR16` long, `c` valid for the addressed rows/cols (stride `n`),
+/// `n0 + nb <= out.n`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_acc16<const MB: usize>(
+    a: &[i8],
+    k: usize,
+    r0: usize,
+    panel: &[i8],
+    outliers: &OutlierCsr,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+    n: usize,
+    n0: usize,
+    nb: usize,
+) {
+    let mut acc = [[0i32; NR16]; MB];
+    let base = a.as_ptr().add(r0 * k);
+    let mut k0 = 0usize;
+    while k0 < k {
+        let kb = SPILL.min(k - k0);
+        let mut acc16 = [[0i16; NR16]; MB];
+        // k-steps in pairs — the vpmaddubsw model: two 8-bit products
+        // summed into one 16-bit lane (exact: 7-bit weights keep
+        // |a0*b0 + a1*b1| <= 2*127*64 < 2^15)
+        let mut kk = k0;
+        while kk + 1 < k0 + kb {
+            let prow0 = &*(panel.as_ptr().add(kk * NR16) as *const [i8; NR16]);
+            let prow1 = &*(panel.as_ptr().add((kk + 1) * NR16) as *const [i8; NR16]);
+            for im in 0..MB {
+                let av0 = *base.add(im * k + kk) as i16;
+                let av1 = *base.add(im * k + kk + 1) as i16;
+                let accr = &mut acc16[im];
+                for (r, ar) in accr.iter_mut().enumerate() {
+                    // saturating 16-bit accumulate (vpaddsw)
+                    *ar = ar.saturating_add(av0 * prow0[r] as i16 + av1 * prow1[r] as i16);
+                }
+            }
+            kk += 2;
+        }
+        if kk < k0 + kb {
+            let prow = &*(panel.as_ptr().add(kk * NR16) as *const [i8; NR16]);
+            for im in 0..MB {
+                let av = *base.add(im * k + kk) as i16;
+                let accr = &mut acc16[im];
+                for (r, ar) in accr.iter_mut().enumerate() {
+                    *ar = ar.saturating_add(av * prow[r] as i16);
+                }
+            }
+        }
+        // spill: widen the block's partial sums into i32
+        for im in 0..MB {
+            let accr = &mut acc[im];
+            for (ar, &a16) in accr.iter_mut().zip(acc16[im].iter()) {
+                *ar += a16 as i32;
+            }
+        }
+        k0 += kb;
+    }
+    // sparse outlier residual, fused per tile (exact i32)
+    outliers.acc_tile::<MB, NR16>(a, r0, n0, nb, &mut acc);
+    // fused output pipeline
+    for (im, accr) in acc.iter().enumerate() {
+        let crow = c.add((r0 + im) * n + n0);
+        for r in 0..nb {
+            *crow.add(r) = pipe.apply_i32(accr[r], n0 + r);
+        }
+    }
+}
+
+/// MC/NC-blocked sweep (see [`super::kernel`] docs).
+///
+/// # Safety
+/// See [`micro_acc16`]; `p0..p1` must be within the pack.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn blocks_acc16(
+    a: &[i8],
+    m0: usize,
+    m1: usize,
+    b: &PackedBI8Acc16,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    let (n, k) = (b.n, b.k);
+    let mc = mc_rows(k, 1);
+    let ncp = nc_panels(k, NR16, 1);
+    let mut pb = p0;
+    while pb < p1 {
+        let pe = (pb + ncp).min(p1);
+        let mut rb = m0;
+        while rb < m1 {
+            let re = (rb + mc).min(m1);
+            for p in pb..pe {
+                let panel = b.panel(p);
+                let n0 = p * NR16;
+                let nb = NR16.min(n - n0);
+                let mut r = rb;
+                while r < re {
+                    match re - r {
+                        1 => micro_acc16::<1>(a, k, r, panel, &b.outliers, pipe, c, n, n0, nb),
+                        2 => micro_acc16::<2>(a, k, r, panel, &b.outliers, pipe, c, n, n0, nb),
+                        3 => micro_acc16::<3>(a, k, r, panel, &b.outliers, pipe, c, n, n0, nb),
+                        _ => micro_acc16::<4>(a, k, r, panel, &b.outliers, pipe, c, n, n0, nb),
+                    }
+                    r += MR;
+                }
+            }
+            rb = re;
+        }
+        pb = pe;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn blocks_acc16_avx2(
+    a: &[i8],
+    m0: usize,
+    m1: usize,
+    b: &PackedBI8Acc16,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    blocks_acc16(a, m0, m1, b, p0, p1, pipe, c)
+}
+
+/// ISA-dispatched range execution.
+///
+/// # Safety
+/// `c` must be valid for writes over the addressed ranges; concurrent
+/// callers must cover disjoint ranges.
+#[allow(clippy::too_many_arguments)]
+unsafe fn run_acc16(
+    isa: Isa,
+    a: &[i8],
+    m0: usize,
+    m1: usize,
+    b: &PackedBI8Acc16,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => blocks_acc16_avx2(a, m0, m1, b, p0, p1, pipe, c),
+        _ => blocks_acc16(a, m0, m1, b, p0, p1, pipe, c),
+    }
+}
+
+/// C = pipeline(A_q * B_q^T) on the 16-bit-accumulation path (auto ISA,
+/// serial).
 pub fn gemm_i8_acc16(
+    a: &[i8],
+    m: usize,
+    b: &PackedBI8Acc16,
+    pipe: &OutputPipeline,
+    c: &mut [f32],
+) {
+    gemm_i8_acc16_ctx(&GemmCtx::auto(), a, m, b, pipe, c)
+}
+
+/// [`gemm_i8_acc16`] under an explicit ISA/threading context.
+pub fn gemm_i8_acc16_ctx(
+    ctx: &GemmCtx,
     a: &[i8],
     m: usize,
     b: &PackedBI8Acc16,
@@ -79,70 +265,24 @@ pub fn gemm_i8_acc16(
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
     let n_panels = n.div_ceil(NR16);
-    // dense main path with int16 accumulation + spills
-    let mut acc32 = vec![0i32; m * n];
-    for m0 in (0..m).step_by(MR) {
-        let mb = MR.min(m - m0);
-        for p in 0..n_panels {
-            let panel = b.panel(p);
-            let mut acc = [[0i32; NR16]; MR];
-            let mut k0 = 0;
-            while k0 < k {
-                let kb = SPILL.min(k - k0);
-                let mut acc16 = [[0i16; NR16]; MR];
-                // k-steps in pairs — the vpmaddubsw model: two 8-bit
-                // products summed into one 16-bit lane (exact: 7-bit
-                // weights keep |a0*b0 + a1*b1| <= 2*127*64 < 2^15)
-                let mut kk = k0;
-                while kk + 1 < k0 + kb {
-                    let prow0 = &panel[kk * NR16..kk * NR16 + NR16];
-                    let prow1 = &panel[(kk + 1) * NR16..(kk + 1) * NR16 + NR16];
-                    for im in 0..mb {
-                        let av0 = a[(m0 + im) * k + kk] as i16;
-                        let av1 = a[(m0 + im) * k + kk + 1] as i16;
-                        let accr = &mut acc16[im];
-                        for r in 0..NR16 {
-                            // saturating 16-bit accumulate (vpaddsw)
-                            accr[r] = accr[r]
-                                .saturating_add(av0 * prow0[r] as i16 + av1 * prow1[r] as i16);
-                        }
-                    }
-                    kk += 2;
-                }
-                if kk < k0 + kb {
-                    let prow = &panel[kk * NR16..kk * NR16 + NR16];
-                    for im in 0..mb {
-                        let av = a[(m0 + im) * k + kk] as i16;
-                        let accr = &mut acc16[im];
-                        for r in 0..NR16 {
-                            accr[r] = accr[r].saturating_add(av * prow[r] as i16);
-                        }
-                    }
-                }
-                // spill: widen the block's partial sums into i32
-                for im in 0..mb {
-                    for r in 0..NR16 {
-                        acc[im][r] += acc16[im][r] as i32;
-                    }
-                }
-                k0 += kb;
+    let cp = SharedMut(c.as_mut_ptr());
+    let isa = sanitize_isa(ctx.isa);
+    match partition(ctx, m, n, k, n_panels) {
+        Partition::Serial => unsafe { run_acc16(isa, a, 0, m, b, 0, n_panels, pipe, cp.0) },
+        Partition::Rows { chunks, rows_per } => parallel::run(chunks, &|i| {
+            let (r0, r1) = (i * rows_per, ((i + 1) * rows_per).min(m));
+            if r0 < r1 {
+                // SAFETY: chunks write disjoint row ranges of c
+                unsafe { run_acc16(isa, a, r0, r1, b, 0, n_panels, pipe, cp.0) }
             }
-            let n0 = p * NR16;
-            let nb = NR16.min(n - n0);
-            for im in 0..mb {
-                for r in 0..nb {
-                    acc32[(m0 + im) * n + n0 + r] = acc[im][r];
-                }
+        }),
+        Partition::Panels { chunks, panels_per } => parallel::run(chunks, &|i| {
+            let (p0, p1) = (i * panels_per, ((i + 1) * panels_per).min(n_panels));
+            if p0 < p1 {
+                // SAFETY: chunks write disjoint column ranges of c
+                unsafe { run_acc16(isa, a, 0, m, b, p0, p1, pipe, cp.0) }
             }
-        }
-    }
-    // sparse outlier pass (exact i32)
-    b.outliers.spmm_acc(a, m, &mut acc32);
-    // fused output pipeline
-    for i in 0..m {
-        for j in 0..n {
-            c[i * n + j] = pipe.apply_i32(acc32[i * n + j], j);
-        }
+        }),
     }
 }
 
@@ -190,6 +330,25 @@ mod tests {
         for (x, y) in c.iter().zip(&want) {
             assert_eq!(*x, *y as f32);
         }
+    }
+
+    #[test]
+    fn scalar_simd_and_threaded_agree_exactly_with_outliers() {
+        let mut rng = Pcg32::seeded(47);
+        let (m, n, k) = (7, 70, 90);
+        let a = rand_i8(&mut rng, m * k, 127);
+        let b = rand_i8(&mut rng, n * k, 127);
+        let packed = PackedBI8Acc16::pack(&b, n, k);
+        assert!(packed.outliers.nnz() > 0);
+        let pipe = OutputPipeline::per_tensor(n, 3, 0.01, packed.rowsum.clone(), true);
+        let mut c0 = vec![0f32; m * n];
+        gemm_i8_acc16_ctx(&GemmCtx::scalar(), &a, m, &packed, &pipe, &mut c0);
+        let mut c1 = vec![0f32; m * n];
+        gemm_i8_acc16_ctx(&GemmCtx::auto(), &a, m, &packed, &pipe, &mut c1);
+        assert_eq!(c0, c1);
+        let mut c2 = vec![0f32; m * n];
+        gemm_i8_acc16_ctx(&GemmCtx::threaded(3), &a, m, &packed, &pipe, &mut c2);
+        assert_eq!(c0, c2);
     }
 
     #[test]

@@ -5,8 +5,17 @@
 //! A carries asymmetric quantization (zero point folded via the
 //! pack-time B row sums in the [`OutputPipeline`]); B is symmetric
 //! (per-tensor or per-channel scale), matching §3.2.2 technique 1.
+//!
+//! Built on the shared blocking/dispatch core ([`super::kernel`]).
+//! Integer accumulation is associative, so every (ISA, thread-count,
+//! blocking) variant is exactly equal to the naive integer reference.
 
-use super::fp32::MR;
+use std::sync::Arc;
+
+use super::kernel::{
+    mc_rows, nc_panels, partition, sanitize_isa, GemmCtx, Isa, Partition, SharedMut, MR,
+};
+use super::parallel;
 use super::pipeline::OutputPipeline;
 
 /// int8-path panel width: 16 output channels keeps the MRx NR8 i32
@@ -19,8 +28,9 @@ pub struct PackedBI8 {
     pub n: usize,
     pub k: usize,
     data: Vec<i8>,
-    /// per output channel: `sum_k b[n][k]` (for zero-point correction)
-    pub rowsum: Vec<i32>,
+    /// per output channel: `sum_k b[n][k]` (for zero-point correction),
+    /// shared with every pipeline built over this pack
+    pub rowsum: Arc<[i32]>,
 }
 
 impl PackedBI8 {
@@ -42,7 +52,7 @@ impl PackedBI8 {
                 }
             }
         }
-        PackedBI8 { n, k, data, rowsum }
+        PackedBI8 { n, k, data, rowsum: rowsum.into() }
     }
 
     #[inline]
@@ -56,35 +66,166 @@ impl PackedBI8 {
     }
 }
 
-/// C = pipeline(A_q * B_q^T), A_q row-major int8 (asymmetric).
+/// MR x NR8 register-tiled int8 micro-kernel (i32 accumulators).
+///
+/// # Safety
+/// `a` must hold rows `r0..r0+MB` of stride `k`, `panel` must be
+/// `k * NR8` long, `c` valid for the addressed rows/cols (stride `n`).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_i8<const MB: usize>(
+    a: &[i8],
+    k: usize,
+    r0: usize,
+    panel: &[i8],
+    pipe: &OutputPipeline,
+    c: *mut f32,
+    n: usize,
+    n0: usize,
+    nb: usize,
+) {
+    let mut acc = [[0i32; NR8]; MB];
+    let base = a.as_ptr().add(r0 * k);
+    for (kk, prow) in panel.chunks_exact(NR8).enumerate() {
+        let prow = &*(prow.as_ptr() as *const [i8; NR8]);
+        for im in 0..MB {
+            let av = *base.add(im * k + kk) as i32;
+            let accr = &mut acc[im];
+            for (ar, &pv) in accr.iter_mut().zip(prow.iter()) {
+                *ar += av * pv as i32;
+            }
+        }
+    }
+    for (im, accr) in acc.iter().enumerate() {
+        let crow = c.add((r0 + im) * n + n0);
+        for r in 0..nb {
+            *crow.add(r) = pipe.apply_i32(accr[r], n0 + r);
+        }
+    }
+}
+
+/// MC/NC-blocked sweep (see [`super::kernel`] docs).
+///
+/// # Safety
+/// See [`micro_i8`]; `p0..p1` must be within the pack.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn blocks_i8(
+    a: &[i8],
+    m0: usize,
+    m1: usize,
+    b: &PackedBI8,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    let (n, k) = (b.n, b.k);
+    let mc = mc_rows(k, 1);
+    let ncp = nc_panels(k, NR8, 1);
+    let mut pb = p0;
+    while pb < p1 {
+        let pe = (pb + ncp).min(p1);
+        let mut rb = m0;
+        while rb < m1 {
+            let re = (rb + mc).min(m1);
+            for p in pb..pe {
+                let panel = b.panel(p);
+                let n0 = p * NR8;
+                let nb = NR8.min(n - n0);
+                let mut r = rb;
+                while r < re {
+                    match re - r {
+                        1 => micro_i8::<1>(a, k, r, panel, pipe, c, n, n0, nb),
+                        2 => micro_i8::<2>(a, k, r, panel, pipe, c, n, n0, nb),
+                        3 => micro_i8::<3>(a, k, r, panel, pipe, c, n, n0, nb),
+                        _ => micro_i8::<4>(a, k, r, panel, pipe, c, n, n0, nb),
+                    }
+                    r += MR;
+                }
+            }
+            rb = re;
+        }
+        pb = pe;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn blocks_i8_avx2(
+    a: &[i8],
+    m0: usize,
+    m1: usize,
+    b: &PackedBI8,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    blocks_i8(a, m0, m1, b, p0, p1, pipe, c)
+}
+
+/// ISA-dispatched range execution.
+///
+/// # Safety
+/// `c` must be valid for writes over the addressed ranges; concurrent
+/// callers must cover disjoint ranges.
+#[allow(clippy::too_many_arguments)]
+unsafe fn run_i8(
+    isa: Isa,
+    a: &[i8],
+    m0: usize,
+    m1: usize,
+    b: &PackedBI8,
+    p0: usize,
+    p1: usize,
+    pipe: &OutputPipeline,
+    c: *mut f32,
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => blocks_i8_avx2(a, m0, m1, b, p0, p1, pipe, c),
+        _ => blocks_i8(a, m0, m1, b, p0, p1, pipe, c),
+    }
+}
+
+/// C = pipeline(A_q * B_q^T), A_q row-major int8 (auto ISA, serial).
 pub fn gemm_i8_acc32(a: &[i8], m: usize, b: &PackedBI8, pipe: &OutputPipeline, c: &mut [f32]) {
+    gemm_i8_acc32_ctx(&GemmCtx::auto(), a, m, b, pipe, c)
+}
+
+/// [`gemm_i8_acc32`] under an explicit ISA/threading context.
+pub fn gemm_i8_acc32_ctx(
+    ctx: &GemmCtx,
+    a: &[i8],
+    m: usize,
+    b: &PackedBI8,
+    pipe: &OutputPipeline,
+    c: &mut [f32],
+) {
     let (n, k) = (b.n, b.k);
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
     let n_panels = n.div_ceil(NR8);
-    for m0 in (0..m).step_by(MR) {
-        let mb = MR.min(m - m0);
-        for p in 0..n_panels {
-            let panel = b.panel(p);
-            let mut acc = [[0i32; NR8]; MR];
-            for kk in 0..k {
-                let prow = &panel[kk * NR8..kk * NR8 + NR8];
-                for im in 0..mb {
-                    let av = a[(m0 + im) * k + kk] as i32;
-                    let accr = &mut acc[im];
-                    for r in 0..NR8 {
-                        accr[r] += av * prow[r] as i32;
-                    }
-                }
+    let cp = SharedMut(c.as_mut_ptr());
+    let isa = sanitize_isa(ctx.isa);
+    match partition(ctx, m, n, k, n_panels) {
+        Partition::Serial => unsafe { run_i8(isa, a, 0, m, b, 0, n_panels, pipe, cp.0) },
+        Partition::Rows { chunks, rows_per } => parallel::run(chunks, &|i| {
+            let (r0, r1) = (i * rows_per, ((i + 1) * rows_per).min(m));
+            if r0 < r1 {
+                // SAFETY: chunks write disjoint row ranges of c
+                unsafe { run_i8(isa, a, r0, r1, b, 0, n_panels, pipe, cp.0) }
             }
-            let n0 = p * NR8;
-            let nb = NR8.min(n - n0);
-            for im in 0..mb {
-                for r in 0..nb {
-                    c[(m0 + im) * n + n0 + r] = pipe.apply_i32(acc[im][r], n0 + r);
-                }
+        }),
+        Partition::Panels { chunks, panels_per } => parallel::run(chunks, &|i| {
+            let (p0, p1) = (i * panels_per, ((i + 1) * panels_per).min(n_panels));
+            if p0 < p1 {
+                // SAFETY: chunks write disjoint column ranges of c
+                unsafe { run_i8(isa, a, 0, m, b, p0, p1, pipe, cp.0) }
             }
-        }
+        }),
     }
 }
 
@@ -130,6 +271,24 @@ mod tests {
     }
 
     #[test]
+    fn scalar_simd_and_threaded_agree_exactly() {
+        let mut rng = Pcg32::seeded(46);
+        let (m, n, k) = (11, 53, 130);
+        let a = rand_i8(&mut rng, m * k);
+        let b = rand_i8(&mut rng, n * k);
+        let packed = PackedBI8::pack(&b, n, k);
+        let pipe = OutputPipeline::per_tensor(n, 5, 0.01, packed.rowsum.clone(), true);
+        let mut c0 = vec![0f32; m * n];
+        gemm_i8_acc32_ctx(&GemmCtx::scalar(), &a, m, &packed, &pipe, &mut c0);
+        let mut c1 = vec![0f32; m * n];
+        gemm_i8_acc32_ctx(&GemmCtx::auto(), &a, m, &packed, &pipe, &mut c1);
+        assert_eq!(c0, c1);
+        let mut c2 = vec![0f32; m * n];
+        gemm_i8_acc32_ctx(&GemmCtx::threaded(3), &a, m, &packed, &pipe, &mut c2);
+        assert_eq!(c0, c2);
+    }
+
+    #[test]
     fn zero_point_correction_matches_dequant() {
         // quantize x = (x_q - zp) * sx against real-valued math
         let mut rng = Pcg32::seeded(6);
@@ -158,6 +317,6 @@ mod tests {
     fn rowsum_computed_at_pack_time() {
         let b: Vec<i8> = vec![1, 2, 3, -4, 5, -6]; // n=2, k=3
         let p = PackedBI8::pack(&b, 2, 3);
-        assert_eq!(p.rowsum, vec![6, -5]);
+        assert_eq!(&p.rowsum[..], &[6, -5]);
     }
 }

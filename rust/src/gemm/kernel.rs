@@ -1,0 +1,252 @@
+//! The shared blocking/dispatch core every GEMM path builds on (§3.2's
+//! "cache blocking + register tiling + vectorization" triad).
+//!
+//! Three layers, applied identically to all four precisions:
+//!
+//! 1. **Loop blocking** (MC/NC): the packed-B panels (K-major, NR-wide,
+//!    produced once at pack time) are swept in groups of
+//!    `nc_panels` panels (~256 KB of packed B) against row blocks of
+//!    `mc_rows` rows of A (~128 KB), so both operands stay L2-resident
+//!    across the micro-kernel sweep. KC is *not* spilled for the fp
+//!    paths: the register tile accumulates the full K extent so every
+//!    output element is one strictly k-ascending float chain — the
+//!    property that keeps scalar, SIMD and threaded execution bit-exact
+//!    against the naive reference. The integer paths chunk K freely
+//!    (i8acc16 spills every [`super::i8acc16::SPILL`] steps by
+//!    construction); integer addition is associative, so blocking cannot
+//!    change their results.
+//! 2. **Register tiling** (MR x NR): micro-kernels are monomorphized
+//!    over the row count (`MB in 1..=MR`) so the accumulator tile is a
+//!    true register file — no dynamically-indexed spill to the stack —
+//!    and the lane loop is a fixed-width, bounds-check-free iterator
+//!    chain the compiler turns into packed FMAs.
+//! 3. **ISA dispatch** ([`Isa`]): the same micro-kernel body is compiled
+//!    twice, once portable and once under
+//!    `#[target_feature(enable = "avx2,fma")]`, selected at runtime via
+//!    `is_x86_feature_detected!`. Lane-wise accumulation order is
+//!    identical in both, so the variants are bit-exact with each other.
+//!
+//! Intra-op parallelism lives in [`super::parallel`]: a [`GemmCtx`]
+//! carries a `threads` knob and `partition` splits the M extent (or
+//! the panel extent for M=1 tall-skinny FC shapes) into disjoint chunks.
+
+use std::sync::OnceLock;
+
+/// Row block (M) per micro-kernel invocation — shared by every path.
+pub const MR: usize = 4;
+
+/// Below this many multiply-accumulates a GEMM is not worth fanning out
+/// to the worker pool (thread wake-up would dominate).
+pub(crate) const PAR_MIN_OPS: f64 = 1.0e6;
+
+/// Instruction-set variant a kernel executes with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable Rust (whatever the baseline target features allow).
+    Scalar,
+    /// AVX2 + FMA codegen, runtime-detected (x86-64 only).
+    Avx2,
+}
+
+impl Isa {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Whether this host can execute the AVX2+FMA kernel variants at all
+/// (independent of the `DCINFER_GEMM_ISA` override).
+#[inline]
+fn host_has_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        return std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma");
+    }
+    #[allow(unreachable_code)]
+    false
+}
+
+/// Clamp a requested ISA to what the host can actually run. `GemmCtx`
+/// fields are public, so a caller may ask for [`Isa::Avx2`] on a CPU
+/// without it; executing a `#[target_feature]` function there would be
+/// undefined behavior, so every dispatch sanitizes first.
+#[inline]
+pub(crate) fn sanitize_isa(isa: Isa) -> Isa {
+    match isa {
+        Isa::Avx2 if !host_has_avx2() => Isa::Scalar,
+        other => other,
+    }
+}
+
+/// Detect the best ISA once per process. `DCINFER_GEMM_ISA=scalar`
+/// forces the portable path (parity debugging / A-B benching).
+pub fn detect_isa() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        if std::env::var("DCINFER_GEMM_ISA").map(|v| v == "scalar").unwrap_or(false) {
+            return Isa::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                return Isa::Avx2;
+            }
+        }
+        Isa::Scalar
+    })
+}
+
+/// Per-call execution context: which ISA variant to run and how many
+/// threads an individual GEMM may fan out across (intra-op parallelism;
+/// `1` = serial, the executor pool provides inter-op concurrency).
+#[derive(Debug, Clone, Copy)]
+pub struct GemmCtx {
+    pub isa: Isa,
+    pub threads: usize,
+}
+
+impl Default for GemmCtx {
+    fn default() -> Self {
+        GemmCtx::auto()
+    }
+}
+
+impl GemmCtx {
+    /// Best detected ISA, serial execution.
+    pub fn auto() -> GemmCtx {
+        GemmCtx { isa: detect_isa(), threads: 1 }
+    }
+
+    /// Portable-Rust kernels, serial (the parity baseline).
+    pub fn scalar() -> GemmCtx {
+        GemmCtx { isa: Isa::Scalar, threads: 1 }
+    }
+
+    /// Best detected ISA with `threads` intra-op workers; `0` resolves
+    /// to the machine's available parallelism.
+    pub fn threaded(threads: usize) -> GemmCtx {
+        let t = if threads == 0 { super::parallel::max_threads() } else { threads };
+        GemmCtx { isa: detect_isa(), threads: t.max(1) }
+    }
+}
+
+/// Rows of A per L2 block: `MC * K * elem ~ 128 KB`, MR-aligned.
+#[inline]
+pub(crate) fn mc_rows(k: usize, elem: usize) -> usize {
+    let rows = (128 * 1024) / (k.max(1) * elem).max(1);
+    rows.clamp(MR, 256).next_multiple_of(MR)
+}
+
+/// Packed-B panels per L2 block: `NC_panels * K * NR * elem ~ 256 KB`.
+#[inline]
+pub(crate) fn nc_panels(k: usize, nr: usize, elem: usize) -> usize {
+    ((256 * 1024) / (k.max(1) * nr * elem).max(1)).max(1)
+}
+
+/// How a GEMM splits across the worker pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Partition {
+    Serial,
+    /// `chunks` row ranges of `rows_per` rows each (MR-aligned).
+    Rows { chunks: usize, rows_per: usize },
+    /// `chunks` panel ranges of `panels_per` packed-B panels each.
+    Panels { chunks: usize, panels_per: usize },
+}
+
+/// Pick a work split: M-partition when there are enough MR row groups
+/// to feed every thread, otherwise N-partition over panels (the M=1
+/// tall-skinny FC case), otherwise serial.
+pub(crate) fn partition(ctx: &GemmCtx, m: usize, n: usize, k: usize, n_panels: usize) -> Partition {
+    let ops = m as f64 * n as f64 * k as f64;
+    if ctx.threads <= 1 || ops < PAR_MIN_OPS || (m <= MR && n_panels < 2) {
+        return Partition::Serial;
+    }
+    let row_groups = m.div_ceil(MR);
+    if row_groups >= ctx.threads {
+        let chunks = ctx.threads;
+        let rows_per = m.div_ceil(chunks).next_multiple_of(MR);
+        let chunks = m.div_ceil(rows_per);
+        if chunks < 2 {
+            return Partition::Serial;
+        }
+        Partition::Rows { chunks, rows_per }
+    } else {
+        let chunks = ctx.threads.min(n_panels);
+        if chunks < 2 {
+            return Partition::Serial;
+        }
+        let panels_per = n_panels.div_ceil(chunks);
+        let chunks = n_panels.div_ceil(panels_per);
+        if chunks < 2 {
+            return Partition::Serial;
+        }
+        Partition::Panels { chunks, panels_per }
+    }
+}
+
+/// `*mut T` that may cross the worker-pool boundary. Safety contract:
+/// every chunk of a partitioned GEMM writes a disjoint region (distinct
+/// rows or distinct panel column ranges) and the caller joins all
+/// workers before the buffer is read.
+#[derive(Clone, Copy)]
+pub(crate) struct SharedMut<T>(pub *mut T);
+
+unsafe impl<T> Send for SharedMut<T> {}
+unsafe impl<T> Sync for SharedMut<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detection_is_stable_and_env_overridable() {
+        // same answer twice (OnceLock) and a member of the enum
+        let a = detect_isa();
+        let b = detect_isa();
+        assert_eq!(a, b);
+        assert!(matches!(a, Isa::Scalar | Isa::Avx2));
+        assert_eq!(Isa::Scalar.as_str(), "scalar");
+    }
+
+    #[test]
+    fn blocking_constants_are_sane() {
+        for k in [1usize, 7, 64, 512, 1024, 4096] {
+            let mc = mc_rows(k, 4);
+            assert!(mc >= MR && mc % MR == 0, "mc {mc} for k {k}");
+            assert!(nc_panels(k, 16, 4) >= 1);
+        }
+    }
+
+    #[test]
+    fn partition_covers_all_rows_and_panels() {
+        let ctx = GemmCtx { isa: Isa::Scalar, threads: 4 };
+        match partition(&ctx, 1000, 512, 512, 32) {
+            Partition::Rows { chunks, rows_per } => {
+                assert!(chunks >= 2 && chunks <= 4);
+                assert!(rows_per % MR == 0);
+                assert!(chunks * rows_per >= 1000);
+                // last chunk non-empty
+                assert!((chunks - 1) * rows_per < 1000);
+            }
+            p => panic!("expected row partition, got {p:?}"),
+        }
+        match partition(&ctx, 1, 2048, 1024, 128) {
+            Partition::Panels { chunks, panels_per } => {
+                assert!(chunks >= 2 && chunks <= 4);
+                assert!(chunks * panels_per >= 128);
+                assert!((chunks - 1) * panels_per < 128);
+            }
+            p => panic!("expected panel partition, got {p:?}"),
+        }
+        // tiny work stays serial
+        assert_eq!(partition(&ctx, 4, 16, 16, 1), Partition::Serial);
+        let serial = GemmCtx::scalar();
+        assert_eq!(partition(&serial, 1000, 512, 512, 32), Partition::Serial);
+    }
+}

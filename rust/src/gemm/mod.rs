@@ -17,18 +17,28 @@
 //! B matrices are packed once ([`PackedB`] etc.) and reused across many
 //! multiplications — the pre-packed-B interface the paper argues the
 //! BLAS standard lacks for tall-skinny DL shapes.
+//!
+//! All four paths execute through the shared blocking/dispatch core
+//! ([`kernel`]): MC/NC cache blocking over the packed panels, MR x NR
+//! register-tiled micro-kernels compiled portable *and* under AVX2+FMA
+//! (runtime-detected), and optional intra-op parallelism from the
+//! persistent worker pool ([`parallel`]) via the `*_ctx` kernel entry
+//! points and their [`GemmCtx`] (ISA + thread count).
 
 pub mod fp16;
 pub mod fp32;
 pub mod i8acc16;
 pub mod i8acc32;
+pub mod kernel;
 pub mod outlier;
+pub mod parallel;
 pub mod pipeline;
 
 pub use fp16::PackedBF16;
 pub use fp32::PackedBF32;
 pub use i8acc16::PackedBI8Acc16;
 pub use i8acc32::PackedBI8;
+pub use kernel::{detect_isa, GemmCtx, Isa};
 pub use outlier::{split_outliers, OutlierCsr};
 pub use pipeline::OutputPipeline;
 

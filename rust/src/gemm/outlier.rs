@@ -42,6 +42,39 @@ impl OutlierCsr {
             }
         }
     }
+
+    /// Accumulate the residual into one MB x nb register tile:
+    /// `acc[im][jj] += sum_e a[r0+im][col(e)] * v(e)` for output
+    /// columns `n0..n0+nb` — the fused per-tile form the blocked acc16
+    /// kernel runs so the residual never needs an `m x n` scratch
+    /// buffer.
+    ///
+    /// # Safety
+    /// `a` must hold rows `r0..r0+MB` of stride `k == self.k`, and
+    /// `n0 + nb <= self.n`, `nb <= TILE_N`.
+    #[inline(always)]
+    pub(crate) unsafe fn acc_tile<const MB: usize, const TILE_N: usize>(
+        &self,
+        a: &[i8],
+        r0: usize,
+        n0: usize,
+        nb: usize,
+        acc: &mut [[i32; TILE_N]; MB],
+    ) {
+        let base = a.as_ptr().add(r0 * self.k);
+        for jj in 0..nb {
+            let j = n0 + jj;
+            let lo = *self.row_ptr.get_unchecked(j) as usize;
+            let hi = *self.row_ptr.get_unchecked(j + 1) as usize;
+            for e in lo..hi {
+                let col = *self.col_idx.get_unchecked(e) as usize;
+                let v = *self.values.get_unchecked(e) as i32;
+                for (im, accr) in acc.iter_mut().enumerate() {
+                    accr[jj] += *base.add(im * self.k + col) as i32 * v;
+                }
+            }
+        }
+    }
 }
 
 /// Split an int8 weight matrix into (main 7-bit part, sparse residual).
@@ -125,6 +158,25 @@ mod tests {
                     want += a[i * k + kk] as i32 * res;
                 }
                 assert_eq!(acc[i * n + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn acc_tile_matches_spmm() {
+        let mut rng = Pcg32::seeded(10);
+        let (m, n, k) = (2usize, 8usize, 32usize);
+        let b: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let (_, out) = split_outliers(&b, n, k, 7);
+        let mut want = vec![0i32; m * n];
+        out.spmm_acc(&a, m, &mut want);
+        let mut tile = [[0i32; 8]; 2];
+        // SAFETY: a holds rows 0..2 of stride k; n0 + nb == n
+        unsafe { out.acc_tile::<2, 8>(&a, 0, 0, n, &mut tile) };
+        for im in 0..m {
+            for j in 0..n {
+                assert_eq!(tile[im][j], want[im * n + j]);
             }
         }
     }

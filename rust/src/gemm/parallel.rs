@@ -1,0 +1,222 @@
+//! Intra-op parallelism: a small persistent worker pool that partitions
+//! one GEMM across cores (§3.1's "intra-op parallelism is required to
+//! meet latency SLAs at small batch").
+//!
+//! The pool is process-global and lazy: workers spawn on first use and
+//! then park on their queues, so steady-state dispatch is one channel
+//! send per helper (no thread creation on the request path). Tasks are
+//! claimed with an atomic cursor — the caller participates, so a GEMM
+//! never deadlocks even if every worker is busy with another
+//! executor's fan-out; it just degrades toward serial execution.
+//!
+//! Safety model: [`run`] erases the caller's `&(dyn Fn(usize) + Sync)`
+//! to a raw pointer that workers dereference. The caller blocks until
+//! every claimed task has *completed* (not merely been claimed), so the
+//! closure and everything it borrows strictly outlives all worker
+//! accesses. Completion is tracked under a mutex, which also provides
+//! the happens-before edge that makes worker writes (e.g. into the
+//! output matrix) visible to the caller.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One fanned-out parallel section.
+struct Job {
+    /// Type-erased `&(dyn Fn(usize) + Sync)` owned by the caller's
+    /// stack frame; valid until `finished == total` (see module docs).
+    task: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    total: usize,
+    finished: Mutex<usize>,
+    all_done: Condvar,
+    /// set when any claimed task panicked; re-raised by the caller
+    panicked: AtomicBool,
+}
+
+// SAFETY: `task` points at a `Sync` closure and is only dereferenced
+// while the submitting caller blocks in `Job::wait` (see module docs).
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and run tasks until the cursor runs past `total`.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                return;
+            }
+            // SAFETY: dereference only while holding an unfinished
+            // claim (i < total): the submitting caller blocks in
+            // `wait` until `finished == total`, which cannot happen
+            // before this claim completes, so the pointee is alive. A
+            // stale job drained late (after the caller returned) exits
+            // above without ever touching the pointer.
+            let f = unsafe { &*self.task };
+            // a panicking task must still count as finished, or the
+            // caller would wait forever; the panic is recorded and
+            // re-raised on the submitting thread instead of killing a
+            // pool worker
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            let mut fin = self.finished.lock().unwrap();
+            *fin += 1;
+            if *fin == self.total {
+                self.all_done.notify_all();
+            }
+        }
+    }
+
+    fn wait(&self) {
+        let mut fin = self.finished.lock().unwrap();
+        while *fin < self.total {
+            fin = self.all_done.wait(fin).unwrap();
+        }
+        drop(fin);
+        if self.panicked.load(Ordering::Relaxed) {
+            panic!("a gemm worker task panicked (re-raised on the submitting thread)");
+        }
+    }
+}
+
+struct Pool {
+    senders: Mutex<Vec<Sender<Arc<Job>>>>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool { senders: Mutex::new(Vec::new()) })
+}
+
+/// Upper bound on useful intra-op threads (the machine's parallelism).
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Number of persistent workers currently alive (diagnostics/tests).
+pub fn worker_count() -> usize {
+    pool().senders.lock().unwrap().len()
+}
+
+fn ensure_workers(n: usize) {
+    let mut senders = pool().senders.lock().unwrap();
+    while senders.len() < n {
+        let (tx, rx) = channel::<Arc<Job>>();
+        let id = senders.len();
+        std::thread::Builder::new()
+            .name(format!("gemm-worker-{id}"))
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    job.work();
+                }
+            })
+            .expect("spawning gemm worker thread");
+        senders.push(tx);
+    }
+}
+
+/// Run `task(i)` for every `i in 0..tasks`, fanning out across up to
+/// `tasks - 1` persistent workers while the caller runs tasks too.
+/// Returns after ALL tasks have completed. Serial when `tasks <= 1`.
+pub fn run(tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+    if tasks == 0 {
+        return;
+    }
+    let helpers = (tasks - 1).min(max_threads().saturating_sub(1));
+    if helpers == 0 {
+        for i in 0..tasks {
+            task(i);
+        }
+        return;
+    }
+    ensure_workers(helpers);
+    let job = Arc::new(Job {
+        task: task as *const (dyn Fn(usize) + Sync),
+        next: AtomicUsize::new(0),
+        total: tasks,
+        finished: Mutex::new(0),
+        all_done: Condvar::new(),
+        panicked: AtomicBool::new(false),
+    });
+    {
+        let senders = pool().senders.lock().unwrap();
+        for tx in senders.iter().take(helpers) {
+            // a dead worker just means one less helper; the atomic
+            // cursor lets the remaining claimants drain its share
+            let _ = tx.send(job.clone());
+        }
+    }
+    job.work();
+    job.wait();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let n = 97usize;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        run(n, &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn writes_are_visible_after_run_returns() {
+        let mut out = vec![0u64; 64];
+        {
+            let ptr = crate::gemm::kernel::SharedMut(out.as_mut_ptr());
+            run(64, &|i| {
+                // SAFETY: each task writes a distinct index
+                unsafe { *ptr.0.add(i) = (i * i) as u64 };
+            });
+        }
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_without_deadlock_or_dead_workers() {
+        let res = std::panic::catch_unwind(|| {
+            run(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(res.is_err(), "panic must reach the submitting thread");
+        // the pool keeps serving afterwards
+        let count = AtomicU64::new(0);
+        run(4, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn serial_and_reentrant_edge_cases() {
+        run(0, &|_| panic!("no tasks to run"));
+        let count = AtomicU64::new(0);
+        run(1, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+        // nested sections must not deadlock (caller participates)
+        let total = AtomicU64::new(0);
+        run(4, &|_| {
+            run(3, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 12);
+    }
+}

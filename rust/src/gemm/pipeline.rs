@@ -2,6 +2,12 @@
 //! everything that happens to the int32/fp32 accumulator on its way to
 //! the output buffer — zero-point correction, per-channel rescale, bias
 //! add, ReLU — fused so the accumulator never round-trips to memory.
+//!
+//! The pack-time B row sums are shared (`Arc<[i32]>`) rather than
+//! cloned: every `FcLayer` built over a pack reuses the pack's buffer,
+//! so loading an N-layer model no longer duplicates per-layer metadata.
+
+use std::sync::Arc;
 
 /// Output transformation applied per (row, col) accumulator.
 #[derive(Debug, Clone)]
@@ -10,8 +16,9 @@ pub struct OutputPipeline {
     pub x_zp: i32,
     /// per-output-channel combined scale: `x_scale * w_scale[n]`
     pub scale: Vec<f32>,
-    /// pack-time row offsets: sum_k B[n, k] (zero-point correction)
-    pub b_rowsum: Vec<i32>,
+    /// pack-time row offsets: sum_k B[n, k] (zero-point correction),
+    /// shared with the pack that computed them
+    pub b_rowsum: Arc<[i32]>,
     /// per-output-channel bias
     pub bias: Vec<f32>,
     pub relu: bool,
@@ -19,8 +26,20 @@ pub struct OutputPipeline {
 
 impl OutputPipeline {
     /// Per-tensor-scale convenience constructor.
-    pub fn per_tensor(n: usize, x_zp: i32, scale: f32, b_rowsum: Vec<i32>, relu: bool) -> Self {
-        OutputPipeline { x_zp, scale: vec![scale; n], b_rowsum, bias: vec![0.0; n], relu }
+    pub fn per_tensor(
+        n: usize,
+        x_zp: i32,
+        scale: f32,
+        b_rowsum: impl Into<Arc<[i32]>>,
+        relu: bool,
+    ) -> Self {
+        OutputPipeline {
+            x_zp,
+            scale: vec![scale; n],
+            b_rowsum: b_rowsum.into(),
+            bias: vec![0.0; n],
+            relu,
+        }
     }
 
     /// Identity pipeline for fp paths (no quantization).
@@ -28,7 +47,7 @@ impl OutputPipeline {
         OutputPipeline {
             x_zp: 0,
             scale: vec![1.0; n],
-            b_rowsum: vec![0; n],
+            b_rowsum: vec![0; n].into(),
             bias: vec![0.0; n],
             relu,
         }
@@ -80,12 +99,19 @@ mod tests {
         let p = OutputPipeline {
             x_zp: 0,
             scale: vec![1.0, 2.0],
-            b_rowsum: vec![0, 0],
+            b_rowsum: vec![0, 0].into(),
             bias: vec![0.5, -0.5],
             relu: false,
         };
         assert_eq!(p.apply_i32(3, 0), 3.5);
         assert_eq!(p.apply_i32(3, 1), 5.5);
         assert_eq!(p.apply_f32(1.5, 1), 2.5);
+    }
+
+    #[test]
+    fn rowsum_is_shared_not_cloned() {
+        let rs: Arc<[i32]> = vec![1, 2, 3].into();
+        let p = OutputPipeline::per_tensor(3, 0, 1.0, rs.clone(), false);
+        assert!(Arc::ptr_eq(&p.b_rowsum, &rs));
     }
 }

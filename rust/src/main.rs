@@ -11,12 +11,18 @@
 //! dcinfer disagg                §4 tier bandwidth
 //! dcinfer serve [--requests N] [--executors E] [--qps Q] [--models recsys,nmt,cv]
 //!               [--backend pjrt|native] [--precision fp32|fp16|i8acc32|i8acc16]
+//!               [--threads T]
 //!               [--sparse-shards N] [--sparse-cache ROWS] [--sparse-replication R]
 //! ```
 //!
 //! `--sparse-shards` dis-aggregates the embedding tables of native-backend
 //! lanes across an in-process sharded sparse tier with a hot-row cache
 //! (§4); per-table hit rates print with the serving metrics.
+//!
+//! `--threads` sets intra-op GEMM workers per FC/conv on the native
+//! backend (0 = all cores): the §3.1 cores-per-op vs executors trade —
+//! more `--executors` maximizes throughput, more `--threads` cuts
+//! per-batch latency at small batch.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -268,13 +274,19 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let qps: f64 = flags.get("qps").and_then(|v| v.parse().ok()).unwrap_or(2000.0);
     let models = flags.get("models").cloned().unwrap_or_else(|| "recsys".to_string());
     // `--precision` alone implies the native backend (pjrt is fp32-only)
-    let backend = match (flags.get("backend"), flags.get("precision")) {
+    let mut backend = match (flags.get("backend"), flags.get("precision")) {
         (None, None) => dcinfer::runtime::BackendSpec::default(),
         (b, p) => dcinfer::runtime::BackendSpec::from_cli(
             b.map(|s| s.as_str()).unwrap_or("native"),
             p.map(|s| s.as_str()).unwrap_or(""),
         )?,
     };
+    // `--threads` fans each GEMM out across an intra-op worker pool
+    if let Some(t) = flags.get("threads") {
+        let t: usize =
+            t.parse().map_err(|_| anyhow::anyhow!("invalid --threads value {t:?}"))?;
+        backend = backend.with_threads(t)?;
+    }
     // `--sparse-shards` turns on the dis-aggregated sparse tier (§4);
     // malformed values are errors, not silent fallbacks — a typo here
     // would otherwise change which code path gets measured

@@ -63,6 +63,15 @@ impl QParams {
         xs.iter().map(|&x| self.quantize(x) as i8).collect()
     }
 
+    /// [`Self::quantize_slice`] into a reusable buffer: clear + refill,
+    /// so a warm buffer costs zero heap allocations (the serving hot
+    /// path quantizes activations per batch).
+    pub fn quantize_into(&self, xs: &[f32], out: &mut Vec<i8>) {
+        assert!(self.bits <= 8);
+        out.clear();
+        out.extend(xs.iter().map(|&x| self.quantize(x) as i8));
+    }
+
     pub fn fake_quant(&self, x: f32) -> f32 {
         self.dequantize(self.quantize(x))
     }

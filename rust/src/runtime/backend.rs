@@ -101,8 +101,12 @@ pub enum BackendSpec {
     /// The XLA/PJRT engine (fp32 artifacts as lowered).
     #[cfg(feature = "pjrt")]
     Pjrt,
-    /// The pure-Rust FBGEMM-path interpreter at a chosen precision.
-    Native { precision: Precision },
+    /// The pure-Rust FBGEMM-path interpreter at a chosen precision,
+    /// with `threads` intra-op GEMM workers per FC/conv (1 = serial;
+    /// 0 = all available cores). More executors at threads=1 maximizes
+    /// throughput; fewer executors with threads>1 cuts per-batch
+    /// latency — the §3.1 cores-per-op vs concurrency trade.
+    Native { precision: Precision, threads: usize },
 }
 
 impl Default for BackendSpec {
@@ -113,11 +117,41 @@ impl Default for BackendSpec {
 
     #[cfg(not(feature = "pjrt"))]
     fn default() -> Self {
-        BackendSpec::Native { precision: Precision::Fp32 }
+        BackendSpec::native(Precision::Fp32)
     }
 }
 
 impl BackendSpec {
+    /// Native backend at `precision`, serial GEMMs (the common form).
+    pub fn native(precision: Precision) -> BackendSpec {
+        BackendSpec::Native { precision, threads: 1 }
+    }
+
+    /// Native backend with `threads` intra-op GEMM workers per op
+    /// (0 = all available cores).
+    pub fn native_threaded(precision: Precision, threads: usize) -> BackendSpec {
+        BackendSpec::Native { precision, threads }
+    }
+
+    /// Set the intra-op GEMM thread count (native backend only).
+    pub fn with_threads(self, threads: usize) -> Result<BackendSpec> {
+        match self {
+            BackendSpec::Native { precision, .. } => {
+                Ok(BackendSpec::Native { precision, threads })
+            }
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt => {
+                // 1 is the no-op default; 0 (all cores) and >=2 are
+                // real requests that pjrt cannot honor
+                if threads == 1 {
+                    Ok(self)
+                } else {
+                    bail!("--threads applies to the native backend (pjrt threads are XLA's)")
+                }
+            }
+        }
+    }
+
     /// Whether this spec resolves to the native interpreter — the only
     /// backend that routes embedding lookups through a sparse tier.
     pub fn is_native(&self) -> bool {
@@ -133,7 +167,7 @@ impl BackendSpec {
         match self {
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt => format!("pjrt/{}", Precision::Fp32),
-            BackendSpec::Native { precision } => format!("native/{precision}"),
+            BackendSpec::Native { precision, .. } => format!("native/{precision}"),
         }
     }
 
@@ -142,7 +176,7 @@ impl BackendSpec {
         let precision =
             if precision.is_empty() { Precision::Fp32 } else { Precision::from_manifest(precision)? };
         match backend {
-            "native" => Ok(BackendSpec::Native { precision }),
+            "native" => Ok(BackendSpec::native(precision)),
             #[cfg(feature = "pjrt")]
             "pjrt" => {
                 if precision != Precision::Fp32 {
@@ -180,10 +214,13 @@ pub fn make_backend_with_sparse(
             let _ = sparse;
             Ok(Box::new(PjrtBackend::cpu()?))
         }
-        BackendSpec::Native { precision } => Ok(Box::new(match sparse {
-            Some(tier) => super::native::NativeBackend::with_sparse_tier(*precision, tier),
-            None => super::native::NativeBackend::new(*precision),
-        })),
+        BackendSpec::Native { precision, threads } => Ok(Box::new(
+            match sparse {
+                Some(tier) => super::native::NativeBackend::with_sparse_tier(*precision, tier),
+                None => super::native::NativeBackend::new(*precision),
+            }
+            .with_threads(*threads),
+        )),
     }
 }
 
@@ -298,11 +335,21 @@ mod tests {
 
     #[test]
     fn spec_labels() {
-        let s = BackendSpec::Native { precision: Precision::I8Acc16 };
+        let s = BackendSpec::native(Precision::I8Acc16);
         assert!(s.is_native());
         assert_eq!(s.label(), "native/i8acc16");
         assert_eq!(BackendSpec::from_cli("native", "fp16").unwrap().label(), "native/fp16");
         assert!(BackendSpec::from_cli("nope", "").is_err());
+    }
+
+    #[test]
+    fn threads_knob_round_trips() {
+        let s = BackendSpec::native(Precision::Fp32).with_threads(4).unwrap();
+        assert_eq!(s, BackendSpec::native_threaded(Precision::Fp32, 4));
+        // the label (metrics attribution) is independent of threads
+        assert_eq!(s.label(), "native/fp32");
+        // distinct thread counts are distinct pool keys
+        assert_ne!(s, BackendSpec::native(Precision::Fp32));
     }
 
     #[test]
@@ -317,6 +364,6 @@ mod tests {
     #[test]
     #[cfg(not(feature = "pjrt"))]
     fn default_spec_is_native_without_pjrt() {
-        assert_eq!(BackendSpec::default(), BackendSpec::Native { precision: Precision::Fp32 });
+        assert_eq!(BackendSpec::default(), BackendSpec::native(Precision::Fp32));
     }
 }

@@ -1,0 +1,157 @@
+//! Self-synthesized artifacts fixture: a tiny recsys-lite + cv-lite
+//! manifest with native op programs and DCIW weights, written from pure
+//! Rust — no Python/JAX, no `make artifacts`, no PJRT.
+//!
+//! The backend-parity tests and the perf benches (`ablation_alloc`,
+//! `e2e_serving` when real artifacts are absent) share this fixture so
+//! they exercise the same load path (`Manifest::load` ->
+//! `NativeBackend::load`) as production artifacts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Pcg32;
+
+use super::tensor::HostTensor;
+use super::weights::{write_weights_file, NamedTensor};
+
+fn tensor(rng: &mut Pcg32, name: &str, shape: &[usize], std: f32) -> NamedTensor {
+    let count: usize = shape.iter().product();
+    let mut data = vec![0f32; count];
+    rng.fill_normal(&mut data, 0.0, std);
+    NamedTensor { name: name.to_string(), tensor: HostTensor::from_f32(shape, &data) }
+}
+
+const RECSYS_PROG: &str = r#"[
+  {"op": "fc", "out": "bot0", "in": "dense", "w": "bot_w0", "b": "bot_b0", "act": "relu"},
+  {"op": "fc", "out": "bot1", "in": "bot0", "w": "bot_w1", "b": "bot_b1", "act": "relu"},
+  {"op": "embed_pool", "out": "p0", "indices": "indices", "table": "emb_0", "slice": 0},
+  {"op": "embed_pool", "out": "p1", "indices": "indices", "table": "emb_1", "slice": 1},
+  {"op": "concat", "out": "z", "in": ["p0", "p1", "bot1"]},
+  {"op": "fc", "out": "top0", "in": "z", "w": "top_w0", "b": "top_b0", "act": "relu"},
+  {"op": "fc", "out": "top1", "in": "top0", "w": "top_w1", "b": "top_b1", "act": "none"},
+  {"op": "unary", "fn": "sigmoid", "out": "prob", "in": "top1"}
+]"#;
+
+const CV_PROG: &str = r#"[
+  {"op": "conv2d", "out": "c1", "in": "image", "w": "conv1", "b": "b1", "act": "relu", "stride": 2, "pad": [0, 1]},
+  {"op": "conv2d", "out": "c2", "in": "c1", "w": "conv2", "b": "b2", "act": "relu", "stride": 2, "pad": [0, 1]},
+  {"op": "flatten", "out": "f", "in": "c2"},
+  {"op": "fc", "out": "logits", "in": "f", "w": "fc_w", "b": "fc_b", "act": "none"}
+]"#;
+
+/// Write the fixture into `dir`: recsys-lite (dense 8, 2 tables of
+/// 64x8, pool 4; batch variants 1 and 4) and cv-lite (1x8x8 -> 4
+/// classes; batch variants 1 and 2), with model configs the
+/// `RecSysService`/`CvService` constructors understand.
+pub fn write_synthetic_artifacts(dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating fixture dir {}", dir.display()))?;
+
+    let mut rng = Pcg32::seeded(1234);
+    let recsys = vec![
+        tensor(&mut rng, "emb_0", &[64, 8], 0.5),
+        tensor(&mut rng, "emb_1", &[64, 8], 0.5),
+        tensor(&mut rng, "bot_w0", &[16, 8], 0.3),
+        tensor(&mut rng, "bot_b0", &[16], 0.1),
+        tensor(&mut rng, "bot_w1", &[8, 16], 0.3),
+        tensor(&mut rng, "bot_b1", &[8], 0.1),
+        tensor(&mut rng, "top_w0", &[16, 24], 0.2),
+        tensor(&mut rng, "top_b0", &[16], 0.1),
+        tensor(&mut rng, "top_w1", &[1, 16], 0.2),
+        tensor(&mut rng, "top_b1", &[1], 0.1),
+    ];
+    write_weights_file(&dir.join("recsys.weights.bin"), &recsys)?;
+    let cv = vec![
+        tensor(&mut rng, "conv1", &[4, 1, 3, 3], 0.3),
+        tensor(&mut rng, "b1", &[4], 0.1),
+        tensor(&mut rng, "conv2", &[8, 4, 3, 3], 0.2),
+        tensor(&mut rng, "b2", &[8], 0.1),
+        tensor(&mut rng, "fc_w", &[4, 32], 0.2),
+        tensor(&mut rng, "fc_b", &[4], 0.1),
+    ];
+    write_weights_file(&dir.join("cv.weights.bin"), &cv)?;
+
+    let mut artifacts = Vec::new();
+    for b in [1usize, 4] {
+        artifacts.push(format!(
+            r#""recsys_fp32_b{b}": {{
+              "hlo": "recsys_b{b}.hlo.txt", "model": "recsys",
+              "weights": "recsys.weights.bin", "weight_params": [],
+              "precision": "fp32", "program": {RECSYS_PROG},
+              "inputs": [
+                {{"name": "dense", "dtype": "f32", "shape": [{b}, 8]}},
+                {{"name": "indices", "dtype": "i32", "shape": [{b}, 2, 4]}}
+              ],
+              "outputs": [{{"name": "prob", "dtype": "f32", "shape": [{b}, 1]}}],
+              "batch": {b}
+            }}"#
+        ));
+    }
+    for b in [1usize, 2] {
+        artifacts.push(format!(
+            r#""cv_tiny_b{b}": {{
+              "hlo": "cv_b{b}.hlo.txt", "model": "cv",
+              "weights": "cv.weights.bin", "weight_params": [],
+              "precision": "fp32", "program": {CV_PROG},
+              "inputs": [{{"name": "image", "dtype": "f32", "shape": [{b}, 1, 8, 8]}}],
+              "outputs": [{{"name": "logits", "dtype": "f32", "shape": [{b}, 4]}}],
+              "batch": {b}
+            }}"#
+        ));
+    }
+    let manifest = format!(
+        r#"{{
+          "version": 1,
+          "models": {{
+            "recsys": {{"dense_dim": 8, "emb_dim": 8, "n_tables": 2, "pool": 4, "rows_per_table": 64}},
+            "cv": {{"in_hw": 8, "channels": 1, "classes": 4}}
+          }},
+          "artifacts": {{ {} }}
+        }}"#,
+        artifacts.join(",\n")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest)
+        .with_context(|| format!("writing manifest to {}", dir.display()))?;
+    Ok(())
+}
+
+/// Write the fixture into a fresh process-scoped temp dir and return
+/// its path (callers clean up with `remove_dir_all` when done).
+pub fn synthetic_artifacts_dir(tag: &str) -> Result<PathBuf> {
+    let dir = std::env::temp_dir().join(format!("dcinfer_fixture_{tag}_{}", std::process::id()));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir)
+            .with_context(|| format!("clearing stale fixture dir {}", dir.display()))?;
+    }
+    write_synthetic_artifacts(&dir)?;
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::{ExecBackend, LoadedArtifact as _};
+    use crate::runtime::{Manifest, NativeBackend, Precision};
+
+    #[test]
+    fn fixture_loads_and_runs_on_the_native_backend() {
+        let dir = synthetic_artifacts_dir("selftest").unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let art = NativeBackend::new(Precision::Fp32).load(&manifest, "recsys_fp32_b1").unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let mut dense = vec![0f32; 8];
+        rng.fill_normal(&mut dense, 0.0, 1.0);
+        let idx: Vec<i32> = (0..8).map(|_| rng.below(64) as i32).collect();
+        let out = art
+            .run(&[
+                HostTensor::from_f32(&[1, 8], &dense),
+                HostTensor::from_i32(&[1, 2, 4], &idx),
+            ])
+            .unwrap();
+        let p = out[0].as_f32().unwrap()[0];
+        assert!(p > 0.0 && p < 1.0, "prob {p}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -37,6 +37,7 @@ pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod executor;
+pub mod fixture;
 pub mod manifest;
 pub mod native;
 pub mod precision;
@@ -51,8 +52,9 @@ pub use backend::PjrtBackend;
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, LoadedModel};
 pub use executor::{Executor, ExecutorPool};
+pub use fixture::{synthetic_artifacts_dir, write_synthetic_artifacts};
 pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
-pub use native::{FcLayer, NativeBackend};
+pub use native::{FcLayer, NativeArtifact, NativeBackend};
 pub use precision::Precision;
 pub use tensor::{DType, HostTensor};
 pub use weights::{read_weights_file, write_weights_file, NamedTensor};

@@ -15,6 +15,19 @@
 //! concat / flatten / unary / binary        elementwise glue
 //! ```
 //!
+//! **Execution arena.** Artifact input shapes are fixed, so every
+//! intermediate shape is known at `build()` time. The compiler resolves
+//! register names to dense slot indices, precomputes every buffer size
+//! (including conv im2col scratch), turns `flatten` into a zero-cost
+//! alias and applies `unary` in place when its input is dead — and each
+//! loaded artifact keeps one reusable [`ExecArena`] of those buffers.
+//! Steady-state execution performs **zero heap allocations**: inputs
+//! are decoded into arena slots, ops run `take -> compute -> put back`
+//! on preallocated buffers, and int8 activation quantization uses a
+//! thread-local high-water scratch. (`ablation_alloc` measures this —
+//! see [`NativeArtifact::execute_steady`] vs
+//! [`NativeArtifact::execute_fresh`].)
+//!
 //! At int8 precisions, weights are re-quantized per-channel at load time
 //! ([`crate::quant::qparams`]) and activation qparams come from a
 //! calibration pass over synthetic inputs run through the fp32 program
@@ -22,8 +35,10 @@
 //! tables switch to the row-wise-quantized
 //! [`crate::embedding::QuantizedTable`].
 
+use std::cell::RefCell;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::mem;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
@@ -31,8 +46,9 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::embedding::shard::{EmbeddingShardService, ShardPlan};
 use crate::embedding::{EmbeddingTable, LookupBatch, QuantizedTable};
 use crate::gemm::{
-    fp16::gemm_f16, fp32::gemm_f32, i8acc16::gemm_i8_acc16, i8acc32::gemm_i8_acc32,
-    OutputPipeline, PackedBF16, PackedBF32, PackedBI8, PackedBI8Acc16,
+    fp16::gemm_f16_ctx, fp32::gemm_f32_ctx, i8acc16::gemm_i8_acc16_ctx,
+    i8acc32::gemm_i8_acc32_ctx, GemmCtx, OutputPipeline, PackedBF16, PackedBF32, PackedBI8,
+    PackedBI8Acc16,
 };
 use crate::quant::qparams::quantize_per_channel;
 use crate::quant::{Calibrator, QParams};
@@ -55,6 +71,13 @@ const CALIBRATION_GRID: usize = 32;
 // benches) route GEMMs through
 // ---------------------------------------------------------------------------
 
+thread_local! {
+    /// Reused int8 activation-quantization buffer: after the first
+    /// batch on a thread it sits at its high-water capacity, so the
+    /// serving hot path quantizes without allocating.
+    static QUANT_SCRATCH: RefCell<Vec<i8>> = const { RefCell::new(Vec::new()) };
+}
+
 /// One packed fully-connected layer at a fixed precision: weight
 /// packing, activation quantization and the fused output pipeline in a
 /// single dispatchable unit. This is the layer the interpreter executes
@@ -65,6 +88,7 @@ pub struct FcLayer {
     precision: Precision,
     pipe: OutputPipeline,
     kernel: FcKernel,
+    ctx: GemmCtx,
 }
 
 enum FcKernel {
@@ -129,7 +153,7 @@ impl FcLayer {
                 (pipe, FcKernel::I8Acc16 { packed, x_qp })
             }
         };
-        FcLayer { n, k, precision, pipe, kernel }
+        FcLayer { n, k, precision, pipe, kernel, ctx: GemmCtx::auto() }
     }
 
     /// Build an acc16 layer from already-quantized int8 weights with a
@@ -157,11 +181,35 @@ impl FcLayer {
             bias: bias_v,
             relu,
         };
-        FcLayer { n, k, precision: Precision::I8Acc16, pipe, kernel: FcKernel::I8Acc16 { packed, x_qp } }
+        FcLayer {
+            n,
+            k,
+            precision: Precision::I8Acc16,
+            pipe,
+            kernel: FcKernel::I8Acc16 { packed, x_qp },
+            ctx: GemmCtx::auto(),
+        }
     }
 
     pub fn precision(&self) -> Precision {
         self.precision
+    }
+
+    /// Kernel execution context (ISA variant + intra-op threads).
+    pub fn gemm_ctx(&self) -> GemmCtx {
+        self.ctx
+    }
+
+    /// Override the kernel execution context — the benches use this to
+    /// A/B scalar vs SIMD vs threaded on the same packed layer.
+    pub fn set_gemm_ctx(&mut self, ctx: GemmCtx) {
+        self.ctx = ctx;
+    }
+
+    /// Builder form of [`FcLayer::set_gemm_ctx`].
+    pub fn with_gemm_ctx(mut self, ctx: GemmCtx) -> FcLayer {
+        self.ctx = ctx;
+        self
     }
 
     /// Outlier density of the acc16 sparse residual (None on other paths).
@@ -173,21 +221,24 @@ impl FcLayer {
     }
 
     /// `out[M x N] = pipeline(x[M x K] * W^T)`; int8 paths quantize the
-    /// fp32 activations with the layer's calibrated qparams first.
+    /// fp32 activations with the layer's calibrated qparams first (into
+    /// a reused thread-local scratch — no steady-state allocation).
     pub fn forward(&self, x: &[f32], m: usize, out: &mut [f32]) {
         assert_eq!(x.len(), m * self.k);
         assert_eq!(out.len(), m * self.n);
         match &self.kernel {
-            FcKernel::F32(p) => gemm_f32(x, m, p, &self.pipe, out),
-            FcKernel::F16(p) => gemm_f16(x, m, p, &self.pipe, out),
-            FcKernel::I8 { packed, x_qp } => {
-                let xq = x_qp.quantize_slice(x);
-                gemm_i8_acc32(&xq, m, packed, &self.pipe, out);
-            }
-            FcKernel::I8Acc16 { packed, x_qp } => {
-                let xq = x_qp.quantize_slice(x);
-                gemm_i8_acc16(&xq, m, packed, &self.pipe, out);
-            }
+            FcKernel::F32(p) => gemm_f32_ctx(&self.ctx, x, m, p, &self.pipe, out),
+            FcKernel::F16(p) => gemm_f16_ctx(&self.ctx, x, m, p, &self.pipe, out),
+            FcKernel::I8 { packed, x_qp } => QUANT_SCRATCH.with(|buf| {
+                let mut xq = buf.borrow_mut();
+                x_qp.quantize_into(x, &mut xq);
+                gemm_i8_acc32_ctx(&self.ctx, &xq, m, packed, &self.pipe, out);
+            }),
+            FcKernel::I8Acc16 { packed, x_qp } => QUANT_SCRATCH.with(|buf| {
+                let mut xq = buf.borrow_mut();
+                x_qp.quantize_into(x, &mut xq);
+                gemm_i8_acc16_ctx(&self.ctx, &xq, m, packed, &self.pipe, out);
+            }),
         }
     }
 }
@@ -402,35 +453,113 @@ impl PoolTable {
     }
 }
 
-/// Compiled op: spec plus packed weights at the target precision.
+// ---------------------------------------------------------------------------
+// Execution plan: registers resolved to dense, statically-sized slots
+// ---------------------------------------------------------------------------
+
+/// One planned f32 register. `parent` makes the slot a view of another
+/// (flatten aliases, in-place unary); buffer ownership follows the
+/// parent chain to the canonical slot.
+struct Slot {
+    len: usize,
+    parent: Option<usize>,
+}
+
+/// Where each artifact input lands in the arena.
+enum InputDst {
+    F32(usize),
+    I32(usize),
+}
+
+/// Build-time resolution of register names to dense arena slots, with
+/// every buffer size precomputed from the artifact's fixed shapes.
+struct Plan {
+    slots: Vec<Slot>,
+    /// i32 index inputs (no op produces integers)
+    int_lens: Vec<usize>,
+    input_dst: Vec<InputDst>,
+    /// canonical f32 slot backing each artifact output
+    output_src: Vec<usize>,
+    /// (bags, pool) per embed op, in op order — sizes the reusable
+    /// lookup batches
+    lookup_dims: Vec<(usize, usize)>,
+}
+
+impl Plan {
+    fn canon(&self, mut s: usize) -> usize {
+        while let Some(p) = self.slots[s].parent {
+            s = p;
+        }
+        s
+    }
+}
+
+/// im2col geometry, fixed at build time.
+struct ConvGeom {
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    plo: usize,
+    ho: usize,
+    wo: usize,
+    rows: usize,
+}
+
+/// Compiled op: packed weights + canonical arena slot indices.
 enum CompiledOp {
-    Fc { out: String, input: String, layer: FcLayer, post: Option<UnaryFn> },
-    Conv2d {
-        out: String,
-        input: String,
+    Fc {
+        out: usize,
+        input: usize,
+        m: usize,
         layer: FcLayer,
         post: Option<UnaryFn>,
-        kh: usize,
-        kw: usize,
-        stride: usize,
-        pad: (usize, usize),
+        spec_idx: usize,
     },
-    EmbedPool { out: String, indices: String, table: usize, slice: Option<usize> },
-    Concat { out: String, inputs: Vec<String> },
-    Unary { out: String, input: String, f: UnaryFn },
-    Binary { out: String, a: String, b: String, f: BinaryFn },
-    Flatten { out: String, input: String },
+    Conv2d {
+        out: usize,
+        input: usize,
+        layer: FcLayer,
+        post: Option<UnaryFn>,
+        geom: ConvGeom,
+        col: usize,
+        gbuf: usize,
+        spec_idx: usize,
+    },
+    EmbedPool {
+        out: usize,
+        indices: usize,
+        table: usize,
+        slice: Option<usize>,
+        /// tables dimension of the index tensor (1 when unsliced)
+        nt: usize,
+        bags: usize,
+        pool: usize,
+        rows: usize,
+        lb: usize,
+    },
+    Concat { out: usize, inputs: Vec<usize>, b: usize, widths: Vec<usize> },
+    Unary { out: usize, input: usize, f: UnaryFn, in_place: bool },
+    Binary { out: usize, a: usize, b: usize, f: BinaryFn },
+    // flatten compiles away entirely: its output is an alias slot
+}
+
+/// The reusable per-artifact execution state: one preallocated buffer
+/// per canonical slot plus per-embed-op lookup batches. All sizes are
+/// fixed at build time, so steady-state execution never allocates.
+pub struct ExecArena {
+    bufs: Vec<Vec<f32>>,
+    int_bufs: Vec<Vec<i32>>,
+    lookups: Vec<LookupBatch>,
 }
 
 struct CompiledProgram {
     ops: Vec<CompiledOp>,
     tables: Vec<PoolTable>,
-}
-
-/// A named f32 buffer flowing between ops.
-struct Reg {
-    shape: Vec<usize>,
-    data: Vec<f32>,
+    plan: Plan,
 }
 
 fn weight<'a>(
@@ -440,31 +569,75 @@ fn weight<'a>(
     weights.get(name).copied().with_context(|| format!("weight {name} missing from weights file"))
 }
 
+fn push_slot(slots: &mut Vec<Slot>, shape: &[usize], parent: Option<usize>) -> usize {
+    slots.push(Slot { len: shape.iter().product(), parent });
+    slots.len() - 1
+}
+
 impl CompiledProgram {
-    /// Pack every layer of `spec` at `precision`. `act_qparams` maps op
-    /// index -> calibrated activation qparams (required for int8).
-    /// With `sparse` set, embedding tables are registered into (and
-    /// fetched through) the shared sparse tier instead of being copied
-    /// into this executor; `scope` namespaces their keys so same-named
-    /// tables of different model families don't collide.
+    /// Pack every layer of `spec` at `precision` and plan the register
+    /// arena from the artifact's fixed input shapes. `act_qparams` maps
+    /// spec-op index -> calibrated activation qparams (required for
+    /// int8). With `sparse` set, embedding tables are registered into
+    /// (and fetched through) the shared sparse tier instead of being
+    /// copied into this executor; `scope` namespaces their keys so
+    /// same-named tables of different model families don't collide.
+    /// `threads` is the intra-op fan-out every packed layer runs with.
+    #[allow(clippy::too_many_arguments)]
     fn build(
         spec: &[OpSpec],
+        meta: &ArtifactMeta,
         weights: &HashMap<String, &HostTensor>,
         precision: Precision,
         act_qparams: Option<&HashMap<usize, QParams>>,
         sparse: Option<&Arc<EmbeddingShardService>>,
         scope: &str,
+        threads: usize,
     ) -> Result<CompiledProgram> {
         let int8 = matches!(precision, Precision::I8Acc32 | Precision::I8Acc16);
+        let gemm_ctx = GemmCtx::threaded(threads); // 0 = all available cores
         let qp_for = |i: usize| -> QParams {
             act_qparams
                 .and_then(|m| m.get(&i).copied())
                 // pre-calibration fp32 builds never read this
                 .unwrap_or_else(|| QParams::from_range(-1.0, 1.0, 8, false))
         };
-        let mut ops = Vec::with_capacity(spec.len());
+
+        // --- register slots seeded from the artifact inputs ---------
+        let mut slots: Vec<Slot> = Vec::new();
+        let mut shapes: Vec<Vec<usize>> = Vec::new(); // per slot, build-time only
+        let mut int_lens: Vec<usize> = Vec::new();
+        let mut int_shapes: Vec<Vec<usize>> = Vec::new();
+        let mut f32_of: HashMap<String, usize> = HashMap::new();
+        let mut i32_of: HashMap<String, usize> = HashMap::new();
+        let mut input_dst = Vec::with_capacity(meta.inputs.len());
+        for im in &meta.inputs {
+            match im.dtype {
+                DType::F32 => {
+                    let s = push_slot(&mut slots, &im.shape, None);
+                    shapes.push(im.shape.clone());
+                    f32_of.insert(im.name.clone(), s);
+                    input_dst.push(InputDst::F32(s));
+                }
+                DType::I32 => {
+                    int_lens.push(im.shape.iter().product());
+                    int_shapes.push(im.shape.clone());
+                    i32_of.insert(im.name.clone(), int_lens.len() - 1);
+                    input_dst.push(InputDst::I32(int_lens.len() - 1));
+                }
+                DType::I8 => bail!("native backend: i8 inputs unsupported ({})", im.name),
+            }
+        }
+        let fslot = |map: &HashMap<String, usize>, name: &str| -> Result<usize> {
+            map.get(name)
+                .copied()
+                .with_context(|| format!("program references undefined tensor {name:?}"))
+        };
+
+        let mut ops: Vec<CompiledOp> = Vec::new();
         let mut tables: Vec<PoolTable> = Vec::new();
         let mut table_idx: HashMap<String, usize> = HashMap::new();
+        let mut lookup_dims: Vec<(usize, usize)> = Vec::new();
         for (i, op) in spec.iter().enumerate() {
             if int8 {
                 ensure!(
@@ -473,11 +646,19 @@ impl CompiledProgram {
                     "op {i} has no calibrated activation qparams"
                 );
             }
-            ops.push(match op {
+            match op {
                 OpSpec::Fc { out, input, w, b, act } => {
                     let wt = weight(weights, w)?;
                     ensure!(wt.shape.len() == 2, "fc weight {w} must be 2-D, got {:?}", wt.shape);
                     let (n, k) = (wt.shape[0], wt.shape[1]);
+                    let x = fslot(&f32_of, input)?;
+                    ensure!(!shapes[x].is_empty(), "fc input {input} is scalar");
+                    let m = shapes[x][0];
+                    let feat: usize = shapes[x][1..].iter().product();
+                    ensure!(
+                        feat == k,
+                        "fc {out}: input {input} has {feat} features, weight wants {k}"
+                    );
                     let wdata = wt.as_f32()?;
                     let bias = match b {
                         Some(bn) => Some(weight(weights, bn)?.as_f32()?),
@@ -491,8 +672,19 @@ impl CompiledProgram {
                         bias.as_deref(),
                         act.relu(),
                         qp_for(i),
-                    );
-                    CompiledOp::Fc { out: out.clone(), input: input.clone(), layer, post: act.post() }
+                    )
+                    .with_gemm_ctx(gemm_ctx);
+                    let o = push_slot(&mut slots, &[m, n], None);
+                    shapes.push(vec![m, n]);
+                    f32_of.insert(out.clone(), o);
+                    ops.push(CompiledOp::Fc {
+                        out: o,
+                        input: x,
+                        m,
+                        layer,
+                        post: act.post(),
+                        spec_idx: i,
+                    });
                 }
                 OpSpec::Conv2d { out, input, w, b, act, stride, pad } => {
                     let wt = weight(weights, w)?;
@@ -503,6 +695,26 @@ impl CompiledProgram {
                     );
                     let (co, kh, kw) = (wt.shape[0], wt.shape[2], wt.shape[3]);
                     let k = wt.shape[1] * kh * kw;
+                    let x = fslot(&f32_of, input)?;
+                    ensure!(
+                        shapes[x].len() == 4,
+                        "conv2d {out}: input {input} must be [B,C,H,W]"
+                    );
+                    let (bsz, c, h, wdim) =
+                        (shapes[x][0], shapes[x][1], shapes[x][2], shapes[x][3]);
+                    ensure!(
+                        k == c * kh * kw,
+                        "conv2d {out}: weight K {k} != C*kh*kw {}",
+                        c * kh * kw
+                    );
+                    let (plo, phi) = *pad;
+                    ensure!(
+                        h + plo + phi >= kh && wdim + plo + phi >= kw,
+                        "conv2d {out}: kernel exceeds input"
+                    );
+                    let ho = (h + plo + phi - kh) / stride + 1;
+                    let wo = (wdim + plo + phi - kw) / stride + 1;
+                    let rows = bsz * ho * wo;
                     let wdata = wt.as_f32()?;
                     let bias = match b {
                         Some(bn) => Some(weight(weights, bn)?.as_f32()?),
@@ -516,21 +728,42 @@ impl CompiledProgram {
                         bias.as_deref(),
                         act.relu(),
                         qp_for(i),
-                    );
-                    CompiledOp::Conv2d {
-                        out: out.clone(),
-                        input: input.clone(),
+                    )
+                    .with_gemm_ctx(gemm_ctx);
+                    // im2col + gemm scratch slots (anonymous, preallocated)
+                    let col = push_slot(&mut slots, &[rows, k], None);
+                    shapes.push(vec![rows, k]);
+                    let gbuf = push_slot(&mut slots, &[rows, co], None);
+                    shapes.push(vec![rows, co]);
+                    let o = push_slot(&mut slots, &[bsz, co, ho, wo], None);
+                    shapes.push(vec![bsz, co, ho, wo]);
+                    f32_of.insert(out.clone(), o);
+                    ops.push(CompiledOp::Conv2d {
+                        out: o,
+                        input: x,
                         layer,
                         post: act.post(),
-                        kh,
-                        kw,
-                        stride: *stride,
-                        pad: *pad,
-                    }
+                        geom: ConvGeom {
+                            b: bsz,
+                            c,
+                            h,
+                            w: wdim,
+                            kh,
+                            kw,
+                            stride: *stride,
+                            plo,
+                            ho,
+                            wo,
+                            rows,
+                        },
+                        col,
+                        gbuf,
+                        spec_idx: i,
+                    });
                 }
                 OpSpec::EmbedPool { out, indices, table, slice } => {
                     let idx = match table_idx.get(table).copied() {
-                        Some(i) => i,
+                        Some(t) => t,
                         None => {
                             let wt = weight(weights, table)?;
                             ensure!(
@@ -557,252 +790,378 @@ impl CompiledProgram {
                             tables.len() - 1
                         }
                     };
-                    CompiledOp::EmbedPool {
-                        out: out.clone(),
-                        indices: indices.clone(),
+                    let islot = fslot(&i32_of, indices)
+                        .with_context(|| format!("embed_pool: no i32 input named {indices}"))?;
+                    let ishape = &int_shapes[islot];
+                    let (nt, bags, pool) = match slice {
+                        Some(t) => {
+                            ensure!(
+                                ishape.len() == 3 && *t < ishape[1],
+                                "embed_pool slice {t} out of {indices} shape {ishape:?}"
+                            );
+                            (ishape[1], ishape[0], ishape[2])
+                        }
+                        None => {
+                            ensure!(ishape.len() == 2, "embed_pool: {indices} must be [B, pool]");
+                            (1, ishape[0], ishape[1])
+                        }
+                    };
+                    let (rows, dim) = tables[idx].dims();
+                    let o = push_slot(&mut slots, &[bags, dim], None);
+                    shapes.push(vec![bags, dim]);
+                    f32_of.insert(out.clone(), o);
+                    lookup_dims.push((bags, pool));
+                    ops.push(CompiledOp::EmbedPool {
+                        out: o,
+                        indices: islot,
                         table: idx,
                         slice: *slice,
-                    }
+                        nt,
+                        bags,
+                        pool,
+                        rows,
+                        lb: lookup_dims.len() - 1,
+                    });
                 }
                 OpSpec::Concat { out, inputs } => {
-                    CompiledOp::Concat { out: out.clone(), inputs: inputs.clone() }
+                    ensure!(!inputs.is_empty(), "concat with no inputs");
+                    let parts = inputs
+                        .iter()
+                        .map(|nm| fslot(&f32_of, nm))
+                        .collect::<Result<Vec<_>>>()?;
+                    let b = shapes[parts[0]][0];
+                    let mut widths = Vec::with_capacity(parts.len());
+                    for (s, nm) in parts.iter().zip(inputs) {
+                        ensure!(
+                            shapes[*s].len() == 2 && shapes[*s][0] == b,
+                            "concat input {nm} shape {:?} (want [{b}, _])",
+                            shapes[*s]
+                        );
+                        widths.push(shapes[*s][1]);
+                    }
+                    let total: usize = widths.iter().sum();
+                    let o = push_slot(&mut slots, &[b, total], None);
+                    shapes.push(vec![b, total]);
+                    f32_of.insert(out.clone(), o);
+                    ops.push(CompiledOp::Concat { out: o, inputs: parts, b, widths });
                 }
                 OpSpec::Unary { out, input, f } => {
-                    CompiledOp::Unary { out: out.clone(), input: input.clone(), f: *f }
+                    let x = fslot(&f32_of, input)?;
+                    let o = push_slot(&mut slots, &shapes[x].clone(), None);
+                    shapes.push(shapes[x].clone());
+                    f32_of.insert(out.clone(), o);
+                    ops.push(CompiledOp::Unary { out: o, input: x, f: *f, in_place: false });
                 }
-                OpSpec::Binary { out, a, b, f } => CompiledOp::Binary {
-                    out: out.clone(),
-                    a: a.clone(),
-                    b: b.clone(),
-                    f: *f,
-                },
+                OpSpec::Binary { out, a, b, f } => {
+                    let sa = fslot(&f32_of, a)?;
+                    let sb = fslot(&f32_of, b)?;
+                    ensure!(
+                        shapes[sa] == shapes[sb],
+                        "binary {out}: {a} {:?} vs {b} {:?}",
+                        shapes[sa],
+                        shapes[sb]
+                    );
+                    let o = push_slot(&mut slots, &shapes[sa].clone(), None);
+                    shapes.push(shapes[sa].clone());
+                    f32_of.insert(out.clone(), o);
+                    ops.push(CompiledOp::Binary { out: o, a: sa, b: sb, f: *f });
+                }
                 OpSpec::Flatten { out, input } => {
-                    CompiledOp::Flatten { out: out.clone(), input: input.clone() }
+                    let x = fslot(&f32_of, input)?;
+                    ensure!(!shapes[x].is_empty(), "flatten of scalar {input}");
+                    let rest: usize = shapes[x][1..].iter().product();
+                    // pure view: aliases the input's buffer, zero runtime cost
+                    let o = push_slot(&mut slots, &[shapes[x][0], rest], Some(x));
+                    shapes.push(vec![shapes[x][0], rest]);
+                    f32_of.insert(out.clone(), o);
                 }
-            });
+            }
         }
-        Ok(CompiledProgram { ops, tables })
+
+        // --- artifact outputs: resolve + validate shape statically ---
+        let mut output_src = Vec::with_capacity(meta.outputs.len());
+        for om in &meta.outputs {
+            ensure!(om.dtype == DType::F32, "native backend: output {} must be f32", om.name);
+            let s = *f32_of
+                .get(&om.name)
+                .with_context(|| format!("program never produced output {:?}", om.name))?;
+            ensure!(
+                shapes[s] == om.shape,
+                "output {}: program shape {:?} != manifest {:?}",
+                om.name,
+                shapes[s],
+                om.shape
+            );
+            output_src.push(s);
+        }
+
+        let mut plan = Plan { slots, int_lens, input_dst, output_src, lookup_dims };
+
+        // --- in-place unary analysis: last reader wins the buffer ----
+        // last spec-order position each canonical slot is read at;
+        // artifact outputs are "read" at the very end.
+        let mut last_read: Vec<usize> = vec![0; plan.slots.len()];
+        for (oi, op) in ops.iter().enumerate() {
+            let mut mark = |s: usize, lr: &mut Vec<usize>| {
+                let c = plan.canon(s);
+                lr[c] = lr[c].max(oi + 1); // 1-based so 0 means "never read"
+            };
+            match op {
+                CompiledOp::Fc { input, .. } => mark(*input, &mut last_read),
+                CompiledOp::Conv2d { input, .. } => mark(*input, &mut last_read),
+                CompiledOp::EmbedPool { .. } => {}
+                CompiledOp::Concat { inputs, .. } => {
+                    for s in inputs {
+                        mark(*s, &mut last_read);
+                    }
+                }
+                CompiledOp::Unary { input, .. } => mark(*input, &mut last_read),
+                CompiledOp::Binary { a, b, .. } => {
+                    mark(*a, &mut last_read);
+                    mark(*b, &mut last_read);
+                }
+            }
+        }
+        for s in &plan.output_src {
+            last_read[plan.canon(*s)] = usize::MAX;
+        }
+        for (oi, op) in ops.iter_mut().enumerate() {
+            if let CompiledOp::Unary { out, input, in_place, .. } = op {
+                let cin = plan.canon(*input);
+                let cout = plan.canon(*out);
+                if last_read[cin] == oi + 1 && cin != cout {
+                    // this unary is the input's final reader: mutate in
+                    // place and make the output a view of the input
+                    plan.slots[cout].parent = Some(cin);
+                    last_read[cin] = last_read[cout];
+                    *in_place = true;
+                }
+            }
+        }
+
+        // --- canonicalize every op reference for execution ------------
+        for op in ops.iter_mut() {
+            match op {
+                CompiledOp::Fc { out, input, .. } => {
+                    *out = plan.canon(*out);
+                    *input = plan.canon(*input);
+                }
+                CompiledOp::Conv2d { out, input, col, gbuf, .. } => {
+                    *out = plan.canon(*out);
+                    *input = plan.canon(*input);
+                    *col = plan.canon(*col);
+                    *gbuf = plan.canon(*gbuf);
+                }
+                CompiledOp::EmbedPool { out, .. } => *out = plan.canon(*out),
+                CompiledOp::Concat { out, inputs, .. } => {
+                    *out = plan.canon(*out);
+                    for s in inputs.iter_mut() {
+                        *s = plan.canon(*s);
+                    }
+                }
+                CompiledOp::Unary { out, input, .. } => {
+                    *out = plan.canon(*out);
+                    *input = plan.canon(*input);
+                }
+                CompiledOp::Binary { out, a, b, .. } => {
+                    *out = plan.canon(*out);
+                    *a = plan.canon(*a);
+                    *b = plan.canon(*b);
+                }
+            }
+        }
+        let canon_out: Vec<usize> = plan.output_src.iter().map(|s| plan.canon(*s)).collect();
+        plan.output_src = canon_out;
+
+        Ok(CompiledProgram { ops, tables, plan })
     }
 
-    /// Interpret the program. `observers` (calibration mode) record the
-    /// fp32 input distribution of every fc/conv op by op index.
-    fn execute(
+    /// Allocate a fresh arena sized by the plan (all buffers at their
+    /// final capacity; done once per executor at load time).
+    fn new_arena(&self) -> ExecArena {
+        let bufs = self
+            .plan
+            .slots
+            .iter()
+            .map(|s| if s.parent.is_none() { vec![0f32; s.len] } else { Vec::new() })
+            .collect();
+        let int_bufs = self.plan.int_lens.iter().map(|&l| vec![0i32; l]).collect();
+        let lookups = self
+            .plan
+            .lookup_dims
+            .iter()
+            .map(|&(bags, pool)| LookupBatch {
+                indices: Vec::with_capacity(bags * pool),
+                lengths: vec![pool as u32; bags],
+            })
+            .collect();
+        ExecArena { bufs, int_bufs, lookups }
+    }
+
+    /// Interpret the program into `arena` (zero heap allocations once
+    /// the arena is warm). `observers` (calibration mode) record the
+    /// fp32 input distribution of every fc/conv op by spec index.
+    fn execute_in(
         &self,
         meta: &ArtifactMeta,
         inputs: &[HostTensor],
+        arena: &mut ExecArena,
         mut observers: Option<&mut HashMap<usize, Calibrator>>,
-    ) -> Result<HashMap<String, Reg>> {
+    ) -> Result<()> {
         check_inputs(meta, inputs)?;
-        let mut regs: HashMap<String, Reg> = HashMap::new();
-        let mut int_regs: HashMap<String, (Vec<usize>, Vec<i32>)> = HashMap::new();
-        for (t, m) in inputs.iter().zip(&meta.inputs) {
-            match t.dtype {
-                DType::F32 => {
-                    regs.insert(m.name.clone(), Reg { shape: t.shape.clone(), data: t.as_f32()? });
-                }
-                DType::I32 => {
-                    int_regs.insert(m.name.clone(), (t.shape.clone(), t.as_i32()?));
-                }
-                DType::I8 => bail!("native backend: i8 inputs unsupported ({})", m.name),
+        for (t, dst) in inputs.iter().zip(&self.plan.input_dst) {
+            match *dst {
+                InputDst::F32(s) => t.copy_f32_into(&mut arena.bufs[s])?,
+                InputDst::I32(s) => t.copy_i32_into(&mut arena.int_bufs[s])?,
             }
         }
 
-        for (i, op) in self.ops.iter().enumerate() {
+        for op in &self.ops {
             match op {
-                CompiledOp::Fc { out, input, layer, post } => {
-                    let (m, mut data) = {
-                        let x = reg(&regs, input)?;
-                        ensure!(!x.shape.is_empty(), "fc input {input} is scalar");
-                        let m = x.shape[0];
-                        let k: usize = x.shape[1..].iter().product();
-                        ensure!(
-                            k == layer.k,
-                            "fc {out}: input {input} has {k} features, weight wants {}",
-                            layer.k
-                        );
+                CompiledOp::Fc { out, input, m, layer, post, spec_idx } => {
+                    debug_assert_ne!(out, input);
+                    let mut o = mem::take(&mut arena.bufs[*out]);
+                    {
+                        let x = &arena.bufs[*input];
                         if let Some(obs) = observers.as_deref_mut() {
-                            obs.entry(i).or_insert_with(Calibrator::default).observe(&x.data);
+                            obs.entry(*spec_idx).or_insert_with(Calibrator::default).observe(x);
                         }
-                        let mut o = vec![0f32; m * layer.n];
-                        layer.forward(&x.data, m, &mut o);
-                        (m, o)
-                    };
-                    if let Some(f) = post {
-                        f.apply(&mut data);
+                        layer.forward(x, *m, &mut o);
                     }
-                    regs.insert(out.clone(), Reg { shape: vec![m, layer.n], data });
-                }
-                CompiledOp::Conv2d { out, input, layer, post, kh, kw, stride, pad } => {
-                    let mut r = conv2d(
-                        &regs, input, out, layer, *kh, *kw, *stride, *pad, i,
-                        observers.as_deref_mut(),
-                    )?;
                     if let Some(f) = post {
-                        f.apply(&mut r.data);
+                        f.apply(&mut o);
                     }
-                    regs.insert(out.clone(), r);
+                    arena.bufs[*out] = o;
                 }
-                CompiledOp::EmbedPool { out, indices, table, slice } => {
-                    let (shape, idx) = int_regs
-                        .get(indices)
-                        .with_context(|| format!("embed_pool: no i32 input named {indices}"))?;
-                    let (flat, pool, bags) = match slice {
-                        Some(t) => {
-                            ensure!(
-                                shape.len() == 3 && *t < shape[1],
-                                "embed_pool slice {t} out of {indices} shape {shape:?}"
-                            );
-                            let (b, nt, p) = (shape[0], shape[1], shape[2]);
-                            let mut v = Vec::with_capacity(b * p);
-                            for bi in 0..b {
-                                let base = (bi * nt + t) * p;
-                                v.extend_from_slice(&idx[base..base + p]);
+                CompiledOp::Conv2d { out, input, layer, post, geom, col, gbuf, spec_idx } => {
+                    let mut colb = mem::take(&mut arena.bufs[*col]);
+                    let mut gb = mem::take(&mut arena.bufs[*gbuf]);
+                    let mut o = mem::take(&mut arena.bufs[*out]);
+                    {
+                        let x = &arena.bufs[*input];
+                        if let Some(obs) = observers.as_deref_mut() {
+                            obs.entry(*spec_idx).or_insert_with(Calibrator::default).observe(x);
+                        }
+                        // padding positions of the col buffer are never
+                        // written: they were zeroed at arena build and
+                        // the written set is geometry-fixed per batch
+                        im2col(x, geom, layer.k, &mut colb);
+                        layer.forward(&colb, geom.rows, &mut gb);
+                        if let Some(f) = post {
+                            f.apply(&mut gb);
+                        }
+                        nchw_scatter(&gb, geom, layer.n, &mut o);
+                    }
+                    arena.bufs[*col] = colb;
+                    arena.bufs[*gbuf] = gb;
+                    arena.bufs[*out] = o;
+                }
+                CompiledOp::EmbedPool { out, indices, table, slice, nt, bags, pool, rows, lb } => {
+                    // fill + validate the reusable lookup batch before
+                    // touching the output buffer, so failed batches
+                    // leave the arena intact
+                    {
+                        let idx = &arena.int_bufs[*indices];
+                        let lbatch = &mut arena.lookups[*lb];
+                        lbatch.indices.clear();
+                        match slice {
+                            Some(t) => {
+                                for bi in 0..*bags {
+                                    let base = (bi * nt + t) * pool;
+                                    for &v in &idx[base..base + pool] {
+                                        ensure!(
+                                            v >= 0 && (v as usize) < *rows,
+                                            "embedding index {v} out of range 0..{rows}"
+                                        );
+                                        lbatch.indices.push(v as u32);
+                                    }
+                                }
                             }
-                            (v, p, b)
+                            None => {
+                                for &v in idx.iter() {
+                                    ensure!(
+                                        v >= 0 && (v as usize) < *rows,
+                                        "embedding index {v} out of range 0..{rows}"
+                                    );
+                                    lbatch.indices.push(v as u32);
+                                }
+                            }
                         }
-                        None => {
-                            ensure!(shape.len() == 2, "embed_pool: {indices} must be [B, pool]");
-                            (idx.clone(), shape[1], shape[0])
-                        }
-                    };
-                    let (rows, dim) = self.tables[*table].dims();
-                    for &v in &flat {
-                        ensure!(
-                            v >= 0 && (v as usize) < rows,
-                            "embedding index {v} out of range 0..{rows}"
-                        );
                     }
-                    let batch =
-                        LookupBatch::fixed(flat.iter().map(|&v| v as u32).collect(), pool);
-                    let mut data = vec![0f32; bags * dim];
-                    self.tables[*table].pool(&batch, &mut data)?;
-                    regs.insert(out.clone(), Reg { shape: vec![bags, dim], data });
+                    let mut o = mem::take(&mut arena.bufs[*out]);
+                    let res = self.tables[*table].pool(&arena.lookups[*lb], &mut o);
+                    arena.bufs[*out] = o;
+                    res?;
                 }
-                CompiledOp::Concat { out, inputs } => {
-                    let r = {
-                        let parts: Vec<&Reg> =
-                            inputs.iter().map(|n| reg(&regs, n)).collect::<Result<Vec<_>>>()?;
-                        ensure!(!parts.is_empty(), "concat with no inputs");
-                        let b = parts[0].shape[0];
-                        for (p, n) in parts.iter().zip(inputs) {
-                            ensure!(
-                                p.shape.len() == 2 && p.shape[0] == b,
-                                "concat input {n} shape {:?} (want [{b}, _])",
-                                p.shape
-                            );
-                        }
-                        let total: usize = parts.iter().map(|p| p.shape[1]).sum();
-                        let mut data = vec![0f32; b * total];
-                        for bi in 0..b {
+                CompiledOp::Concat { out, inputs, b, widths } => {
+                    let mut o = mem::take(&mut arena.bufs[*out]);
+                    {
+                        let total: usize = widths.iter().sum();
+                        for bi in 0..*b {
                             let mut off = 0usize;
-                            for p in &parts {
-                                let d = p.shape[1];
-                                data[bi * total + off..bi * total + off + d]
-                                    .copy_from_slice(&p.data[bi * d..(bi + 1) * d]);
-                                off += d;
+                            for (s, w) in inputs.iter().zip(widths) {
+                                let src = &arena.bufs[*s];
+                                o[bi * total + off..bi * total + off + w]
+                                    .copy_from_slice(&src[bi * w..(bi + 1) * w]);
+                                off += w;
                             }
                         }
-                        Reg { shape: vec![b, total], data }
-                    };
-                    regs.insert(out.clone(), r);
+                    }
+                    arena.bufs[*out] = o;
                 }
-                CompiledOp::Unary { out, input, f } => {
-                    let r = {
-                        let x = reg(&regs, input)?;
-                        let mut data = x.data.clone();
-                        f.apply(&mut data);
-                        Reg { shape: x.shape.clone(), data }
-                    };
-                    regs.insert(out.clone(), r);
+                CompiledOp::Unary { out, input, f, in_place } => {
+                    if *in_place {
+                        // out aliases input's buffer (final reader)
+                        f.apply(&mut arena.bufs[*out]);
+                    } else {
+                        let mut o = mem::take(&mut arena.bufs[*out]);
+                        o.copy_from_slice(&arena.bufs[*input]);
+                        f.apply(&mut o);
+                        arena.bufs[*out] = o;
+                    }
                 }
                 CompiledOp::Binary { out, a, b, f } => {
-                    let r = {
-                        let ra = reg(&regs, a)?;
-                        let rb = reg(&regs, b)?;
-                        ensure!(
-                            ra.shape == rb.shape,
-                            "binary {out}: {a} {:?} vs {b} {:?}",
-                            ra.shape,
-                            rb.shape
-                        );
-                        let data = match f {
+                    let mut o = mem::take(&mut arena.bufs[*out]);
+                    {
+                        let xa = &arena.bufs[*a];
+                        let xb = &arena.bufs[*b];
+                        match f {
                             BinaryFn::Add => {
-                                ra.data.iter().zip(&rb.data).map(|(x, y)| x + y).collect()
+                                for ((dst, x), y) in o.iter_mut().zip(xa.iter()).zip(xb.iter()) {
+                                    *dst = x + y;
+                                }
                             }
                             BinaryFn::Mul => {
-                                ra.data.iter().zip(&rb.data).map(|(x, y)| x * y).collect()
+                                for ((dst, x), y) in o.iter_mut().zip(xa.iter()).zip(xb.iter()) {
+                                    *dst = x * y;
+                                }
                             }
-                        };
-                        Reg { shape: ra.shape.clone(), data }
-                    };
-                    regs.insert(out.clone(), r);
-                }
-                CompiledOp::Flatten { out, input } => {
-                    let r = {
-                        let x = reg(&regs, input)?;
-                        ensure!(!x.shape.is_empty(), "flatten of scalar {input}");
-                        let rest: usize = x.shape[1..].iter().product();
-                        Reg { shape: vec![x.shape[0], rest], data: x.data.clone() }
-                    };
-                    regs.insert(out.clone(), r);
+                        }
+                    }
+                    arena.bufs[*out] = o;
                 }
             }
         }
-        Ok(regs)
+        Ok(())
     }
 }
 
-fn reg<'a>(regs: &'a HashMap<String, Reg>, name: &str) -> Result<&'a Reg> {
-    regs.get(name).with_context(|| format!("program references undefined tensor {name:?}"))
-}
-
-/// im2col + packed GEMM. SAME-style padding is explicit `(lo, hi)`,
-/// applied to both spatial dims (square kernels).
-#[allow(clippy::too_many_arguments)]
-fn conv2d(
-    regs: &HashMap<String, Reg>,
-    input: &str,
-    out_name: &str,
-    layer: &FcLayer,
-    kh: usize,
-    kw: usize,
-    stride: usize,
-    pad: (usize, usize),
-    op_idx: usize,
-    observers: Option<&mut HashMap<usize, Calibrator>>,
-) -> Result<Reg> {
-    let x = reg(regs, input)?;
-    ensure!(x.shape.len() == 4, "conv2d {out_name}: input {input} must be [B,C,H,W]");
-    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    ensure!(
-        layer.k == c * kh * kw,
-        "conv2d {out_name}: weight K {} != C*kh*kw {}",
-        layer.k,
-        c * kh * kw
-    );
-    let (plo, phi) = pad;
-    ensure!(h + plo + phi >= kh && w + plo + phi >= kw, "conv2d {out_name}: kernel exceeds input");
-    let ho = (h + plo + phi - kh) / stride + 1;
-    let wo = (w + plo + phi - kw) / stride + 1;
-    if let Some(obs) = observers {
-        obs.entry(op_idx).or_insert_with(Calibrator::default).observe(&x.data);
-    }
-
-    let rows = b * ho * wo;
-    let mut col = vec![0f32; rows * layer.k];
-    for bi in 0..b {
-        for y in 0..ho {
-            for xx in 0..wo {
-                let row = ((bi * ho + y) * wo + xx) * layer.k;
+/// im2col into the preallocated scratch (padding stays zero — see the
+/// call site).
+fn im2col(x: &[f32], g: &ConvGeom, k_per_row: usize, col: &mut [f32]) {
+    for bi in 0..g.b {
+        for y in 0..g.ho {
+            for xx in 0..g.wo {
+                let row = ((bi * g.ho + y) * g.wo + xx) * k_per_row;
                 let mut off = 0usize;
-                for ci in 0..c {
-                    for ky in 0..kh {
-                        for kx in 0..kw {
-                            let iy = (y * stride + ky) as isize - plo as isize;
-                            let ix = (xx * stride + kx) as isize - plo as isize;
-                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                                col[row + off] = x.data
-                                    [((bi * c + ci) * h + iy as usize) * w + ix as usize];
+                for ci in 0..g.c {
+                    for ky in 0..g.kh {
+                        for kx in 0..g.kw {
+                            let iy = (y * g.stride + ky) as isize - g.plo as isize;
+                            let ix = (xx * g.stride + kx) as isize - g.plo as isize;
+                            if iy >= 0 && (iy as usize) < g.h && ix >= 0 && (ix as usize) < g.w {
+                                col[row + off] = x
+                                    [((bi * g.c + ci) * g.h + iy as usize) * g.w + ix as usize];
                             }
                             off += 1;
                         }
@@ -811,22 +1170,20 @@ fn conv2d(
             }
         }
     }
-    let n = layer.n;
-    let mut gemm_out = vec![0f32; rows * n];
-    layer.forward(&col, rows, &mut gemm_out);
-    // [B*ho*wo, co] -> NCHW
-    let mut data = vec![0f32; b * n * ho * wo];
-    for bi in 0..b {
-        for y in 0..ho {
-            for xx in 0..wo {
-                let src = ((bi * ho + y) * wo + xx) * n;
+}
+
+/// `[B*ho*wo, co]` GEMM output back to NCHW.
+fn nchw_scatter(gemm_out: &[f32], g: &ConvGeom, n: usize, out: &mut [f32]) {
+    for bi in 0..g.b {
+        for y in 0..g.ho {
+            for xx in 0..g.wo {
+                let src = ((bi * g.ho + y) * g.wo + xx) * n;
                 for co in 0..n {
-                    data[((bi * n + co) * ho + y) * wo + xx] = gemm_out[src + co];
+                    out[((bi * n + co) * g.ho + y) * g.wo + xx] = gemm_out[src + co];
                 }
             }
         }
     }
-    Ok(Reg { shape: vec![b, n, ho, wo], data })
 }
 
 // ---------------------------------------------------------------------------
@@ -867,9 +1224,10 @@ fn calibrate(
     index_bounds: &HashMap<String, usize>,
 ) -> Result<HashMap<usize, QParams>> {
     let mut observers: HashMap<usize, Calibrator> = HashMap::new();
+    let mut arena = fp32.new_arena();
     for b in 0..CALIBRATION_BATCHES {
         let inputs = synth_calibration_inputs(meta, index_bounds, 0x5eed + b as u64);
-        fp32.execute(meta, &inputs, Some(&mut observers))?;
+        fp32.execute_in(meta, &inputs, &mut arena, Some(&mut observers))?;
     }
     Ok(observers
         .into_iter()
@@ -887,15 +1245,17 @@ fn calibrate(
 /// `embed_pool` ops fetch pooled sums through the shared
 /// [`EmbeddingShardService`] (registering each table on first load)
 /// instead of holding a per-executor copy of every table — the §4
-/// dis-aggregation of the sparse half of the model.
+/// dis-aggregation of the sparse half of the model. `with_threads`
+/// sets the intra-op GEMM fan-out (cores per op vs executors).
 pub struct NativeBackend {
     precision: Precision,
+    threads: usize,
     sparse: Option<Arc<EmbeddingShardService>>,
 }
 
 impl NativeBackend {
     pub fn new(precision: Precision) -> NativeBackend {
-        NativeBackend { precision, sparse: None }
+        NativeBackend { precision, threads: 1, sparse: None }
     }
 
     /// A backend whose pooled embedding lookups go through the shared
@@ -904,28 +1264,19 @@ impl NativeBackend {
         precision: Precision,
         tier: Arc<EmbeddingShardService>,
     ) -> NativeBackend {
-        NativeBackend { precision, sparse: Some(tier) }
-    }
-}
-
-impl ExecBackend for NativeBackend {
-    fn name(&self) -> &'static str {
-        "native"
+        NativeBackend { precision, threads: 1, sparse: Some(tier) }
     }
 
-    fn platform(&self) -> String {
-        "native-cpu (fbgemm-rs)".to_string()
+    /// Intra-op GEMM threads per FC/conv (0 = all available cores).
+    pub fn with_threads(mut self, threads: usize) -> NativeBackend {
+        self.threads = threads;
+        self
     }
 
-    fn precision(&self) -> Precision {
-        self.precision
-    }
-
-    fn supported_precisions(&self) -> Vec<Precision> {
-        Precision::all().to_vec()
-    }
-
-    fn load(&self, manifest: &Manifest, artifact: &str) -> Result<Box<dyn LoadedArtifact>> {
+    /// [`ExecBackend::load`] returning the concrete artifact type, so
+    /// callers (the allocation-ablation bench) can reach the
+    /// arena-level execute entry points.
+    pub fn load_native(&self, manifest: &Manifest, artifact: &str) -> Result<NativeArtifact> {
         let meta = manifest.artifact(artifact)?.clone();
         let wpath = manifest.weights_path(&meta);
         let named: Vec<NamedTensor> = match &wpath {
@@ -941,7 +1292,29 @@ impl ExecBackend for NativeBackend {
                     .with_context(|| format!("artifact {artifact}: sparse_shards metadata"))?;
             }
         }
-        Ok(Box::new(build_artifact(meta, &named, self.precision, self.sparse.clone())?))
+        build_artifact(meta, &named, self.precision, self.sparse.clone(), self.threads)
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn platform(&self) -> String {
+        format!("native-cpu (fbgemm-rs, {})", crate::gemm::detect_isa().as_str())
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn supported_precisions(&self) -> Vec<Precision> {
+        Precision::all().to_vec()
+    }
+
+    fn load(&self, manifest: &Manifest, artifact: &str) -> Result<Box<dyn LoadedArtifact>> {
+        Ok(Box::new(self.load_native(manifest, artifact)?))
     }
 }
 
@@ -978,8 +1351,10 @@ fn validate_sparse_shard_meta(
 }
 
 /// Compile one artifact's program at `precision` (weights already in
-/// memory). Split out of [`NativeBackend::load`] so tests can build
-/// artifacts without a manifest directory.
+/// memory), planning the register arena and packing every layer with
+/// `threads` intra-op GEMM workers. Split out of
+/// [`NativeBackend::load`] so tests can build artifacts without a
+/// manifest directory.
 ///
 /// Calibration is deterministic, so every executor in a pool derives
 /// identical qparams; each still packs/calibrates independently (same
@@ -991,6 +1366,7 @@ pub(crate) fn build_artifact(
     named: &[NamedTensor],
     precision: Precision,
     sparse: Option<Arc<EmbeddingShardService>>,
+    threads: usize,
 ) -> Result<NativeArtifact> {
     let t0 = Instant::now();
     let spec = parse_program(&meta.program)
@@ -1012,32 +1388,83 @@ pub(crate) fn build_artifact(
     }
 
     let program = match precision {
-        Precision::Fp32 | Precision::Fp16 => {
-            CompiledProgram::build(&spec, &weights, precision, None, sparse.as_ref(), &scope)?
-        }
+        Precision::Fp32 | Precision::Fp16 => CompiledProgram::build(
+            &spec,
+            &meta,
+            &weights,
+            precision,
+            None,
+            sparse.as_ref(),
+            &scope,
+            threads,
+        )?,
         Precision::I8Acc32 | Precision::I8Acc16 => {
             // calibration runs on local fp32 tables: it must not pollute
             // the tier's cache or register throwaway fp32 copies
-            let fp32 = CompiledProgram::build(&spec, &weights, Precision::Fp32, None, None, &scope)?;
+            let fp32 = CompiledProgram::build(
+                &spec,
+                &meta,
+                &weights,
+                Precision::Fp32,
+                None,
+                None,
+                &scope,
+                threads,
+            )?;
             let qparams = calibrate(&fp32, &meta, &index_bounds)?;
             CompiledProgram::build(
                 &spec,
+                &meta,
                 &weights,
                 precision,
                 Some(&qparams),
                 sparse.as_ref(),
                 &scope,
+                threads,
             )?
         }
     };
-    Ok(NativeArtifact { meta, program, load_ms: t0.elapsed().as_secs_f64() * 1e3 })
+    let arena = Mutex::new(program.new_arena());
+    Ok(NativeArtifact { meta, program, arena, load_ms: t0.elapsed().as_secs_f64() * 1e3 })
 }
 
-/// A compiled-and-packed native artifact.
+/// A compiled-and-packed native artifact with its persistent execution
+/// arena (one per loaded artifact; executors own artifacts, so the
+/// mutex is uncontended on the serving path).
 pub struct NativeArtifact {
     meta: ArtifactMeta,
     program: CompiledProgram,
+    arena: Mutex<ExecArena>,
     load_ms: f64,
+}
+
+impl NativeArtifact {
+    /// A panicking batch must not permanently disable the artifact:
+    /// recover the arena from a poisoned lock (buffer sizes are
+    /// plan-fixed, so the state stays structurally valid; a batch that
+    /// panicked mid-op surfaces again per-request, not as a poisoned
+    /// `unwrap` forever).
+    fn lock_arena(&self) -> std::sync::MutexGuard<'_, ExecArena> {
+        self.arena.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Execute into the persistent arena without materializing output
+    /// tensors: the zero-steady-state-allocation hot path that
+    /// [`LoadedArtifact::run`] wraps. `ablation_alloc` measures this
+    /// entry point with a counting allocator.
+    pub fn execute_steady(&self, inputs: &[HostTensor]) -> Result<()> {
+        let mut arena = self.lock_arena();
+        self.program.execute_in(&self.meta, inputs, &mut arena, None)
+    }
+
+    /// Execute with a freshly allocated arena, discarded afterwards —
+    /// the pre-arena allocate-per-batch behavior, kept as the ablation
+    /// baseline (`ablation_alloc` compares it against
+    /// [`NativeArtifact::execute_steady`]).
+    pub fn execute_fresh(&self, inputs: &[HostTensor]) -> Result<()> {
+        let mut arena = self.program.new_arena();
+        self.program.execute_in(&self.meta, inputs, &mut arena, None)
+    }
 }
 
 impl LoadedArtifact for NativeArtifact {
@@ -1046,21 +1473,11 @@ impl LoadedArtifact for NativeArtifact {
     }
 
     fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let regs = self.program.execute(&self.meta, inputs, None)?;
+        let mut arena = self.lock_arena();
+        self.program.execute_in(&self.meta, inputs, &mut arena, None)?;
         let mut outs = Vec::with_capacity(self.meta.outputs.len());
-        for om in &self.meta.outputs {
-            ensure!(om.dtype == DType::F32, "native backend: output {} must be f32", om.name);
-            let r = regs
-                .get(&om.name)
-                .with_context(|| format!("program never produced output {:?}", om.name))?;
-            ensure!(
-                r.shape == om.shape,
-                "output {}: program shape {:?} != manifest {:?}",
-                om.name,
-                r.shape,
-                om.shape
-            );
-            outs.push(HostTensor::from_f32(&r.shape, &r.data));
+        for (om, src) in self.meta.outputs.iter().zip(&self.program.plan.output_src) {
+            outs.push(HostTensor::from_f32(&om.shape, &arena.bufs[*src]));
         }
         Ok(outs)
     }
@@ -1126,7 +1543,7 @@ mod tests {
             named("b0", &[2], b0),
             named("w1", &[1, 2], w1),
         ];
-        let art = build_artifact(meta, &ws, Precision::Fp32, None).unwrap();
+        let art = build_artifact(meta, &ws, Precision::Fp32, None, 1).unwrap();
         let out = art.run(&[HostTensor::from_f32(&[1, 2], &[2.0, 3.0])]).unwrap();
         // h = relu([2 + .5, -3 + .5]) = [2.5, 0]; l = 2.5; y = sigmoid(2.5)
         let want = 1.0 / (1.0 + (-2.5f32).exp());
@@ -1153,7 +1570,7 @@ mod tests {
             1,
             prog,
         );
-        let art = build_artifact(meta, &[], Precision::Fp32, None).unwrap();
+        let art = build_artifact(meta, &[], Precision::Fp32, None, 1).unwrap();
         let out = art
             .run(&[
                 HostTensor::from_f32(&[1, 2], &[0.25, 1.0]),
@@ -1181,7 +1598,7 @@ mod tests {
             prog,
         );
         let ws = vec![named("e0", &[4, 2], t0), named("e1", &[4, 2], t1)];
-        let art = build_artifact(meta, &ws, Precision::Fp32, None).unwrap();
+        let art = build_artifact(meta, &ws, Precision::Fp32, None, 1).unwrap();
         // table 0 pools rows {0, 1} -> [0+2, 1+3]; table 1 rows {2, 3} -> [14+16, 15+17]
         let out = art.run(&[HostTensor::from_i32(&[1, 2, 2], &[0, 1, 2, 3])]).unwrap();
         assert_eq!(out[0].as_f32().unwrap(), vec![2.0, 4.0, 30.0, 32.0]);
@@ -1197,9 +1614,12 @@ mod tests {
             prog,
         );
         let ws = vec![named("e0", &[4, 2], vec![0.0; 8])];
-        let art = build_artifact(meta, &ws, Precision::Fp32, None).unwrap();
+        let art = build_artifact(meta, &ws, Precision::Fp32, None, 1).unwrap();
         assert!(art.run(&[HostTensor::from_i32(&[1, 2], &[0, 4])]).is_err());
         assert!(art.run(&[HostTensor::from_i32(&[1, 2], &[-1, 0])]).is_err());
+        // a failed batch must not poison the arena for the next one
+        let ok = art.run(&[HostTensor::from_i32(&[1, 2], &[0, 1])]).unwrap();
+        assert_eq!(ok[0].as_f32().unwrap(), vec![0.0, 0.0]);
     }
 
     #[test]
@@ -1224,7 +1644,7 @@ mod tests {
             &prog,
         );
         let ws = vec![named("cw", &[co, c, k, k], wt.clone()), named("cb", &[co], bias.clone())];
-        let art = build_artifact(meta, &ws, Precision::Fp32, None).unwrap();
+        let art = build_artifact(meta, &ws, Precision::Fp32, None, 1).unwrap();
         let got = art.run(&[HostTensor::from_f32(&[b, c, h, w], &x)]).unwrap()[0]
             .as_f32()
             .unwrap();
@@ -1286,7 +1706,7 @@ mod tests {
             named("b0", &[dh], b0),
             named("w1", &[dout, dh], w1),
         ];
-        let art = build_artifact(meta, &ws, precision, None).unwrap();
+        let art = build_artifact(meta, &ws, precision, None, 1).unwrap();
         let mut x = vec![0f32; 4 * din];
         let mut rng = Pcg32::seeded(99);
         rng.fill_normal(&mut x, 0.0, 1.0);
@@ -1302,6 +1722,97 @@ mod tests {
             let got = art.run(&inputs).unwrap()[0].as_f32().unwrap();
             let db = sqnr_db(&reference, &got);
             assert!(db >= p.min_sqnr_db(), "{p}: sqnr {db:.1} dB < {}", p.min_sqnr_db());
+        }
+    }
+
+    #[test]
+    fn arena_reuse_is_stateless_across_batches() {
+        let (art, inputs) = tiny_mlp_artifact(Precision::Fp32);
+        let first = art.run(&inputs).unwrap()[0].as_f32().unwrap();
+        // interleave a different batch, then re-run the original: the
+        // reused arena must not leak state between batches
+        let mut rng = Pcg32::seeded(1234);
+        let mut other = vec![0f32; 4 * 8];
+        rng.fill_normal(&mut other, 0.0, 2.0);
+        let _ = art.run(&[HostTensor::from_f32(&[4, 8], &other)]).unwrap();
+        let again = art.run(&inputs).unwrap()[0].as_f32().unwrap();
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn steady_and_fresh_execute_paths_agree_with_run() {
+        let (art, inputs) = tiny_mlp_artifact(Precision::Fp32);
+        let want = art.run(&inputs).unwrap()[0].as_f32().unwrap();
+        art.execute_steady(&inputs).unwrap();
+        art.execute_fresh(&inputs).unwrap();
+        let got = art.run(&inputs).unwrap()[0].as_f32().unwrap();
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn threaded_build_matches_serial_bitwise() {
+        let (serial, inputs) = tiny_mlp_artifact(Precision::Fp32);
+        let want = serial.run(&inputs).unwrap()[0].as_f32().unwrap();
+        // rebuild the same artifact with intra-op threads
+        let mut rng = Pcg32::seeded(7);
+        let (din, dh, dout) = (8usize, 16usize, 4usize);
+        let w0: Vec<f32> = (0..dh * din).map(|_| rng.normal_f32(0.0, 0.4)).collect();
+        let b0: Vec<f32> = (0..dh).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let w1: Vec<f32> = (0..dout * dh).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let prog = r#"[
+            {"op": "fc", "out": "h", "in": "x", "w": "w0", "b": "b0", "act": "relu"},
+            {"op": "fc", "out": "y", "in": "h", "w": "w1", "act": "none"}
+        ]"#;
+        let meta = meta_with(
+            vec![tm("x", DType::F32, &[4, din])],
+            vec![tm("y", DType::F32, &[4, dout])],
+            4,
+            prog,
+        );
+        let ws = vec![
+            named("w0", &[dh, din], w0),
+            named("b0", &[dh], b0),
+            named("w1", &[dout, dh], w1),
+        ];
+        let art = build_artifact(meta, &ws, Precision::Fp32, None, 3).unwrap();
+        let got = art.run(&inputs).unwrap()[0].as_f32().unwrap();
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn flatten_aliases_and_inplace_unary_share_buffers() {
+        // y = sigmoid(flatten(x) @ W^T): flatten is a view; sigmoid's
+        // input (the fc result) dies at the unary, so the output
+        // aliases it. Correctness over two batches seals both.
+        let w: Vec<f32> = (0..2 * 6).map(|v| (v as f32) * 0.1 - 0.5).collect();
+        let prog = r#"[
+            {"op": "flatten", "out": "f", "in": "x"},
+            {"op": "fc", "out": "l", "in": "f", "w": "w", "act": "none"},
+            {"op": "unary", "fn": "sigmoid", "out": "y", "in": "l"}
+        ]"#;
+        let meta = meta_with(
+            vec![tm("x", DType::F32, &[1, 2, 3])],
+            vec![tm("y", DType::F32, &[1, 2])],
+            1,
+            prog,
+        );
+        let ws = vec![named("w", &[2, 6], w.clone())];
+        let art = build_artifact(meta, &ws, Precision::Fp32, None, 1).unwrap();
+        for seed in [5u64, 6] {
+            let mut rng = Pcg32::seeded(seed);
+            let mut x = vec![0f32; 6];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let got = art.run(&[HostTensor::from_f32(&[1, 2, 3], &x)]).unwrap()[0]
+                .as_f32()
+                .unwrap();
+            for (j, g) in got.iter().enumerate() {
+                let mut s = 0f32;
+                for kk in 0..6 {
+                    s += x[kk] * w[j * 6 + kk];
+                }
+                let want = 1.0 / (1.0 + (-s).exp());
+                assert!((g - want).abs() < 1e-5, "seed {seed} col {j}: {g} vs {want}");
+            }
         }
     }
 

@@ -92,6 +92,32 @@ impl HostTensor {
             .collect())
     }
 
+    /// Decode into a reusable buffer (clear + refill): zero heap
+    /// allocations once the buffer is at capacity — the form the
+    /// native backend's execution arena uses on the request path.
+    pub fn copy_f32_into(&self, out: &mut Vec<f32>) -> Result<()> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not F32", self.dtype);
+        }
+        out.clear();
+        out.extend(
+            self.data.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        Ok(())
+    }
+
+    /// i32 variant of [`Self::copy_f32_into`].
+    pub fn copy_i32_into(&self, out: &mut Vec<i32>) -> Result<()> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not I32", self.dtype);
+        }
+        out.clear();
+        out.extend(
+            self.data.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        Ok(())
+    }
+
     pub fn as_i32(&self) -> Result<Vec<i32>> {
         if self.dtype != DType::I32 {
             bail!("tensor is {:?}, not I32", self.dtype);

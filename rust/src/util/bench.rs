@@ -123,6 +123,34 @@ impl Table {
     }
 }
 
+/// Where the perf-trajectory artifacts (`BENCH_*.json`) live: the repo
+/// root, found by walking up from the CWD to the first directory
+/// holding `ROADMAP.md` (benches run from `rust/`). Falls back to the
+/// CWD outside a checkout.
+pub fn bench_artifact_dir() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+    for _ in 0..4 {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => break,
+        }
+    }
+    std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."))
+}
+
+/// Write one `BENCH_<name>.json` perf artifact to the repo root and
+/// return the path it landed at.
+pub fn write_bench_json(filename: &str, json: &str) -> std::path::PathBuf {
+    let path = bench_artifact_dir().join(filename);
+    if let Err(e) = std::fs::write(&path, json) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    }
+    path
+}
+
 /// Report a measurement line in a uniform format.
 pub fn report(m: &Measurement) {
     println!(

@@ -18,115 +18,17 @@ use dcinfer::coordinator::{stack_rows, FrontendConfig, InferRequest, ServingFron
 use dcinfer::models::{CvService, RecSysService};
 use dcinfer::quant::error::sqnr_db;
 use dcinfer::runtime::{
-    write_weights_file, BackendSpec, ExecBackend, HostTensor, LoadedArtifact, Manifest,
-    NamedTensor, NativeBackend, Precision,
+    synthetic_artifacts_dir, BackendSpec, ExecBackend, HostTensor, LoadedArtifact, Manifest,
+    NativeBackend, Precision,
 };
 use dcinfer::util::rng::Pcg32;
 
 // ---------------------------------------------------------------------------
-// Fixture: a native-servable artifacts dir built from pure Rust
+// Fixture: the crate's self-synthesized artifacts dir (pure Rust)
 // ---------------------------------------------------------------------------
 
-fn tensor(rng: &mut Pcg32, name: &str, shape: &[usize], std: f32) -> NamedTensor {
-    let count: usize = shape.iter().product();
-    let mut data = vec![0f32; count];
-    rng.fill_normal(&mut data, 0.0, std);
-    NamedTensor { name: name.to_string(), tensor: HostTensor::from_f32(shape, &data) }
-}
-
-const RECSYS_PROG: &str = r#"[
-  {"op": "fc", "out": "bot0", "in": "dense", "w": "bot_w0", "b": "bot_b0", "act": "relu"},
-  {"op": "fc", "out": "bot1", "in": "bot0", "w": "bot_w1", "b": "bot_b1", "act": "relu"},
-  {"op": "embed_pool", "out": "p0", "indices": "indices", "table": "emb_0", "slice": 0},
-  {"op": "embed_pool", "out": "p1", "indices": "indices", "table": "emb_1", "slice": 1},
-  {"op": "concat", "out": "z", "in": ["p0", "p1", "bot1"]},
-  {"op": "fc", "out": "top0", "in": "z", "w": "top_w0", "b": "top_b0", "act": "relu"},
-  {"op": "fc", "out": "top1", "in": "top0", "w": "top_w1", "b": "top_b1", "act": "none"},
-  {"op": "unary", "fn": "sigmoid", "out": "prob", "in": "top1"}
-]"#;
-
-const CV_PROG: &str = r#"[
-  {"op": "conv2d", "out": "c1", "in": "image", "w": "conv1", "b": "b1", "act": "relu", "stride": 2, "pad": [0, 1]},
-  {"op": "conv2d", "out": "c2", "in": "c1", "w": "conv2", "b": "b2", "act": "relu", "stride": 2, "pad": [0, 1]},
-  {"op": "flatten", "out": "f", "in": "c2"},
-  {"op": "fc", "out": "logits", "in": "f", "w": "fc_w", "b": "fc_b", "act": "none"}
-]"#;
-
-/// Build a temp artifacts dir with recsys-lite (dense 8, 2 tables of
-/// 64x8, pool 4) and cv-lite (1x8x8 -> 4 classes) native artifacts.
 fn fixture_dir(tag: &str) -> PathBuf {
-    let dir =
-        std::env::temp_dir().join(format!("dcinfer_parity_{tag}_{}", std::process::id()));
-    if dir.exists() {
-        std::fs::remove_dir_all(&dir).unwrap();
-    }
-    std::fs::create_dir_all(&dir).unwrap();
-
-    let mut rng = Pcg32::seeded(1234);
-    let recsys = vec![
-        tensor(&mut rng, "emb_0", &[64, 8], 0.5),
-        tensor(&mut rng, "emb_1", &[64, 8], 0.5),
-        tensor(&mut rng, "bot_w0", &[16, 8], 0.3),
-        tensor(&mut rng, "bot_b0", &[16], 0.1),
-        tensor(&mut rng, "bot_w1", &[8, 16], 0.3),
-        tensor(&mut rng, "bot_b1", &[8], 0.1),
-        tensor(&mut rng, "top_w0", &[16, 24], 0.2),
-        tensor(&mut rng, "top_b0", &[16], 0.1),
-        tensor(&mut rng, "top_w1", &[1, 16], 0.2),
-        tensor(&mut rng, "top_b1", &[1], 0.1),
-    ];
-    write_weights_file(&dir.join("recsys.weights.bin"), &recsys).unwrap();
-    let cv = vec![
-        tensor(&mut rng, "conv1", &[4, 1, 3, 3], 0.3),
-        tensor(&mut rng, "b1", &[4], 0.1),
-        tensor(&mut rng, "conv2", &[8, 4, 3, 3], 0.2),
-        tensor(&mut rng, "b2", &[8], 0.1),
-        tensor(&mut rng, "fc_w", &[4, 32], 0.2),
-        tensor(&mut rng, "fc_b", &[4], 0.1),
-    ];
-    write_weights_file(&dir.join("cv.weights.bin"), &cv).unwrap();
-
-    let mut artifacts = Vec::new();
-    for b in [1usize, 4] {
-        artifacts.push(format!(
-            r#""recsys_fp32_b{b}": {{
-              "hlo": "recsys_b{b}.hlo.txt", "model": "recsys",
-              "weights": "recsys.weights.bin", "weight_params": [],
-              "precision": "fp32", "program": {RECSYS_PROG},
-              "inputs": [
-                {{"name": "dense", "dtype": "f32", "shape": [{b}, 8]}},
-                {{"name": "indices", "dtype": "i32", "shape": [{b}, 2, 4]}}
-              ],
-              "outputs": [{{"name": "prob", "dtype": "f32", "shape": [{b}, 1]}}],
-              "batch": {b}
-            }}"#
-        ));
-    }
-    for b in [1usize, 2] {
-        artifacts.push(format!(
-            r#""cv_tiny_b{b}": {{
-              "hlo": "cv_b{b}.hlo.txt", "model": "cv",
-              "weights": "cv.weights.bin", "weight_params": [],
-              "precision": "fp32", "program": {CV_PROG},
-              "inputs": [{{"name": "image", "dtype": "f32", "shape": [{b}, 1, 8, 8]}}],
-              "outputs": [{{"name": "logits", "dtype": "f32", "shape": [{b}, 4]}}],
-              "batch": {b}
-            }}"#
-        ));
-    }
-    let manifest = format!(
-        r#"{{
-          "version": 1,
-          "models": {{
-            "recsys": {{"dense_dim": 8, "emb_dim": 8, "n_tables": 2, "pool": 4, "rows_per_table": 64}},
-            "cv": {{"in_hw": 8, "channels": 1, "classes": 4}}
-          }},
-          "artifacts": {{ {} }}
-        }}"#,
-        artifacts.join(",\n")
-    );
-    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
-    dir
+    synthetic_artifacts_dir(tag).expect("writing synthetic artifacts fixture")
 }
 
 fn run_single(art: &dyn LoadedArtifact, req: &InferRequest) -> Vec<f32> {
@@ -221,7 +123,7 @@ fn mixed_traffic_on_native_i8acc16_passes_tolerance_with_attribution() {
     let manifest = Manifest::load(&dir).unwrap();
     let recsys = RecSysService::from_manifest(&manifest).unwrap();
     let cv = CvService::from_manifest(&manifest).unwrap();
-    let spec = BackendSpec::Native { precision: Precision::I8Acc16 };
+    let spec = BackendSpec::native(Precision::I8Acc16);
     let frontend = ServingFrontend::start(
         FrontendConfig {
             artifacts_dir: dir.clone(),
@@ -305,8 +207,8 @@ fn per_model_backend_overrides_split_pools() {
     let manifest = Manifest::load(&dir).unwrap();
     let recsys = RecSysService::from_manifest(&manifest).unwrap();
     let cv = CvService::from_manifest(&manifest).unwrap();
-    let fp32 = BackendSpec::Native { precision: Precision::Fp32 };
-    let int8 = BackendSpec::Native { precision: Precision::I8Acc32 };
+    let fp32 = BackendSpec::native(Precision::Fp32);
+    let int8 = BackendSpec::native(Precision::I8Acc32);
     let frontend = ServingFrontend::start(
         FrontendConfig {
             artifacts_dir: dir.clone(),

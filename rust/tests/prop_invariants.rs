@@ -5,8 +5,13 @@
 use dcinfer::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use dcinfer::coordinator::request::InferRequest;
 use dcinfer::gemm::{
-    i8acc16::gemm_i8_acc16, i8acc32::{gemm_i8_acc32, gemm_i8_ref}, split_outliers,
-    OutputPipeline, PackedBI8, PackedBI8Acc16,
+    detect_isa,
+    fp16::gemm_f16_ctx,
+    fp32::{gemm_f32_ctx, gemm_ref},
+    i8acc16::{gemm_i8_acc16, gemm_i8_acc16_ctx},
+    i8acc32::{gemm_i8_acc32, gemm_i8_acc32_ctx, gemm_i8_ref},
+    split_outliers, GemmCtx, Isa, OutputPipeline, PackedBF16, PackedBF32, PackedBI8,
+    PackedBI8Acc16,
 };
 use dcinfer::models::representative_zoo;
 use dcinfer::perfmodel::{roofline_model_with_policy, AllocPolicy, DeviceSpec};
@@ -85,6 +90,156 @@ fn prop_outlier_split_reconstructs_for_all_bit_widths() {
         }
         for (r, &orig) in recon.iter().zip(&b) {
             assert_eq!(*r, orig as i32, "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked/SIMD/threaded kernel parity (the dispatch-core seal)
+// ---------------------------------------------------------------------------
+
+/// Shapes deliberately off every tile boundary, with the degenerate
+/// M=1 / N=1 / K=1 and exact-multiple cases forced periodically, plus
+/// shapes big enough (>= the kernel's ~1e6-op parallel threshold) that
+/// the threaded contexts genuinely fan out: case 0 takes the panel
+/// (N) partition at M=1, case 4 the MR-aligned row partition.
+fn odd_shape(rng: &mut Pcg32, seed: u64) -> (usize, usize, usize) {
+    match seed % 6 {
+        0 => (1, 1024, 1024), // M=1 tall-skinny, panel-partitioned when threaded
+        1 => (1 + rng.below(12) as usize, 1 + rng.below(90) as usize, 1), // K=1
+        2 => (1 + rng.below(12) as usize, 1, 1 + rng.below(160) as usize), // N=1
+        3 => (8, 32, 64), // exact tile multiples
+        4 => (
+            // row-partitioned when threaded, off-tile in every dim
+            37 + rng.below(20) as usize,
+            190 + rng.below(30) as usize,
+            150 + rng.below(30) as usize,
+        ),
+        _ => (
+            1 + rng.below(20) as usize,
+            1 + rng.below(90) as usize,
+            1 + rng.below(160) as usize,
+        ),
+    }
+}
+
+/// Every (ISA, thread-count) execution context worth distinguishing on
+/// this host.
+fn parity_ctxs() -> Vec<GemmCtx> {
+    vec![
+        GemmCtx::scalar(),
+        GemmCtx { isa: Isa::Scalar, threads: 2 },
+        GemmCtx::auto(),
+        GemmCtx { isa: detect_isa(), threads: 3 },
+    ]
+}
+
+#[test]
+fn prop_fp32_blocked_simd_threaded_bit_exact_vs_naive() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(7000 + seed);
+        let (m, n, k) = odd_shape(&mut rng, seed);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let relu = seed % 2 == 0;
+        let packed = PackedBF32::pack(&b, n, k);
+        let pipe = OutputPipeline::identity(n, relu);
+        // identical k-ascending per-element accumulation: bit-exact
+        let want = gemm_ref(&a, m, &b, n, k, relu);
+        for ctx in parity_ctxs() {
+            let mut c = vec![0f32; m * n];
+            gemm_f32_ctx(&ctx, &a, m, &packed, &pipe, &mut c);
+            assert_eq!(c, want, "seed {seed} ({m},{n},{k}) ctx {ctx:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_fp16_blocked_simd_threaded_bit_exact_vs_widened_naive() {
+    use dcinfer::util::f16::{f16_to_f32, f32_to_f16};
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(8000 + seed);
+        let (m, n, k) = odd_shape(&mut rng, seed);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let packed = PackedBF16::pack(&b, n, k);
+        let pipe = OutputPipeline::identity(n, false);
+        // reference: the pack-time f16 storage rule (round + flush
+        // subnormals) applied to B, then the naive fp32 GEMM
+        let b_wide: Vec<f32> = b
+            .iter()
+            .map(|&w| {
+                let mut h = f32_to_f16(w);
+                if h & 0x7c00 == 0 {
+                    h &= 0x8000;
+                }
+                f16_to_f32(h)
+            })
+            .collect();
+        let want = gemm_ref(&a, m, &b_wide, n, k, false);
+        for ctx in parity_ctxs() {
+            let mut c = vec![0f32; m * n];
+            gemm_f16_ctx(&ctx, &a, m, &packed, &pipe, &mut c);
+            assert_eq!(c, want, "seed {seed} ({m},{n},{k}) ctx {ctx:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_i8acc32_blocked_simd_threaded_exact_vs_naive() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(9000 + seed);
+        let (m, n, k) = odd_shape(&mut rng, seed);
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let packed = PackedBI8::pack(&b, n, k);
+        // non-trivial zero point + scale: every ctx must still agree
+        // exactly, because the pipeline math is identical per element
+        let pipe = OutputPipeline::per_tensor(n, 7, 0.02, packed.rowsum.clone(), seed % 2 == 1);
+        let exact_pipe = OutputPipeline::per_tensor(n, 0, 1.0, packed.rowsum.clone(), false);
+        let want = gemm_i8_ref(&a, m, &b, n, k);
+        let mut c_first: Option<Vec<f32>> = None;
+        for ctx in parity_ctxs() {
+            let mut c = vec![0f32; m * n];
+            gemm_i8_acc32_ctx(&ctx, &a, m, &packed, &exact_pipe, &mut c);
+            for (x, y) in c.iter().zip(&want) {
+                assert_eq!(*x, *y as f32, "seed {seed} ({m},{n},{k}) ctx {ctx:?}");
+            }
+            gemm_i8_acc32_ctx(&ctx, &a, m, &packed, &pipe, &mut c);
+            match &c_first {
+                None => c_first = Some(c),
+                Some(first) => assert_eq!(&c, first, "seed {seed} ctx {ctx:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_i8acc16_blocked_simd_threaded_exact_with_outliers() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(10_000 + seed);
+        let (m, n, k) = odd_shape(&mut rng, seed);
+        // outlier-populated weights: full int8 range on the small
+        // shapes (adversarial ~50% density), trained-like Gaussians on
+        // the parallel-sized ones (~10% — keeps the naive CSR
+        // reference affordable); exactness must hold for both
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = if m * n * k >= 1_000_000 {
+            (0..n * k)
+                .map(|_| rng.normal_f32(0.0, 40.0).round().clamp(-127.0, 127.0) as i8)
+                .collect()
+        } else {
+            (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+        };
+        let packed = PackedBI8Acc16::pack(&b, n, k);
+        let pipe = OutputPipeline::per_tensor(n, 0, 1.0, packed.rowsum.clone(), false);
+        let want = gemm_i8_ref(&a, m, &b, n, k);
+        for ctx in parity_ctxs() {
+            let mut c = vec![0f32; m * n];
+            gemm_i8_acc16_ctx(&ctx, &a, m, &packed, &pipe, &mut c);
+            for (x, y) in c.iter().zip(&want) {
+                assert_eq!(*x, *y as f32, "seed {seed} ({m},{n},{k}) ctx {ctx:?}");
+            }
         }
     }
 }

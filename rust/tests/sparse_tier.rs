@@ -380,7 +380,7 @@ fn frontend_serves_through_sparse_tier_with_metrics() {
             artifacts_dir: dir.clone(),
             executors: 2,
             max_wait_us: 500.0,
-            backend: BackendSpec::Native { precision: Precision::Fp32 },
+            backend: BackendSpec::native(Precision::Fp32),
             sparse_tier: Some(SparseTierConfig {
                 shards: 3,
                 replication: 1,
@@ -434,7 +434,7 @@ fn frontend_without_sparse_tier_reports_none() {
         FrontendConfig {
             artifacts_dir: dir.clone(),
             executors: 1,
-            backend: BackendSpec::Native { precision: Precision::Fp32 },
+            backend: BackendSpec::native(Precision::Fp32),
             ..Default::default()
         },
         vec![Arc::new(service.clone())],
