@@ -17,14 +17,15 @@ artifacts:
 artifacts-fast:
 	cd python && python -m compile.aot --fast --out ../$(ARTIFACTS)/model.hlo.txt
 
-# Perf trajectory: runs the three perf benches and writes
-# BENCH_fig6_gemm.json / BENCH_alloc.json / BENCH_backend_parity.json
-# to the repo root. Works without `make artifacts` (the benches fall
-# back to a self-synthesized fixture).
+# Perf trajectory: runs the perf benches and writes
+# BENCH_fig6_gemm.json / BENCH_alloc.json / BENCH_backend_parity.json /
+# BENCH_wire.json to the repo root. Works without `make artifacts`
+# (the benches fall back to a self-synthesized fixture).
 perf:
 	cd rust && cargo bench --bench fig6_gemm
 	cd rust && cargo bench --bench ablation_alloc
 	cd rust && cargo bench --bench e2e_serving
+	cd rust && cargo bench --bench e2e_wire
 
 test:
 	cd python && python -m pytest tests/ -q

@@ -6,7 +6,9 @@
 //! The frontend runs the native FBGEMM-path backend with a sharded
 //! sparse tier (`FrontendConfig::sparse_tier`), so the recsys lane's
 //! embedding tables live on in-process shard servers behind a hot-row
-//! cache instead of being copied into every executor (§4).
+//! cache instead of being copied into every executor (§4). A final
+//! section round-trips the same frontend through the network serving
+//! plane (wire-protocol TCP server + pipelined client over loopback).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serving_tier
@@ -17,11 +19,14 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
-use dcinfer::coordinator::{FrontendConfig, ModelService, ServingFrontend};
+use dcinfer::coordinator::{
+    DcClient, FrontendConfig, ModelService, ServerConfig, ServingFrontend, ServingServer,
+};
 use dcinfer::embedding::SparseTierConfig;
 use dcinfer::models::{CvService, NmtService, RecSysService};
 use dcinfer::runtime::{BackendSpec, Manifest, Precision};
 use dcinfer::util::rng::Pcg32;
+use dcinfer::util::stats::Samples;
 
 fn main() -> Result<()> {
     let requests: u64 = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(2000);
@@ -40,9 +45,12 @@ fn main() -> Result<()> {
         services.push(Arc::new(CvService::from_manifest(&manifest)?));
     }
 
-    let frontend = ServingFrontend::start(
+    let frontend = Arc::new(ServingFrontend::start(
         FrontendConfig {
             executors: 2,
+            // the burst phases are meant to be absorbed by batching,
+            // not shed at the door — run the lanes unbounded
+            max_queue_depth: usize::MAX,
             backend: BackendSpec::native(Precision::Fp32),
             sparse_tier: Some(SparseTierConfig {
                 shards: 4,
@@ -53,7 +61,7 @@ fn main() -> Result<()> {
             ..Default::default()
         },
         services,
-    )?;
+    )?);
     println!(
         "serving frontend up (2 executors, native backend, sparse tier on), models: {:?}",
         frontend.models()
@@ -123,6 +131,38 @@ fn main() -> Result<()> {
 
     assert_eq!(ok, requests, "some requests failed");
     assert_eq!(served_total, requests, "per-model served counts don't sum");
+
+    // --- the same frontend behind the network serving plane ----------
+    // a wire-protocol TCP server on an ephemeral loopback port, driven
+    // by the pipelined client — the path `dcinfer loadgen` exercises
+    let server = ServingServer::bind(frontend.clone(), "127.0.0.1:0", ServerConfig::default())?;
+    let client = DcClient::connect(server.local_addr())?;
+    let mut rtt_ms = Samples::new();
+    let net_requests = 60u64;
+    let receivers: Vec<_> = (0..net_requests)
+        .map(|i| {
+            let req = lanes[i as usize % lanes.len()].synth_request(i, &mut rng, 0.0);
+            client.submit(&req)
+        })
+        .collect::<Result<_, _>>()?;
+    let mut net_ok = 0u64;
+    for rx in receivers {
+        let cr = rx.recv()?;
+        if cr.resp.is_ok() {
+            net_ok += 1;
+            rtt_ms.push(cr.rtt_us / 1e3);
+        }
+    }
+    println!(
+        "\nnetwork plane: {net_ok}/{net_requests} served over {}, rtt p50 {:.2} ms / p99 {:.2} ms",
+        server.local_addr(),
+        rtt_ms.p50(),
+        rtt_ms.p99()
+    );
+    assert_eq!(net_ok, net_requests, "network round trips failed");
+    client.close();
+    server.shutdown();
+
     frontend.shutdown();
     println!("serving_tier OK");
     Ok(())

@@ -34,7 +34,13 @@ fn main() {
     ]);
     for &qps in &[500.0f64, 2000.0, 8000.0] {
         let frontend = ServingFrontend::start(
-            FrontendConfig { artifacts_dir: dir.clone(), executors: 2, ..Default::default() },
+            // unbounded depth: this sweep measures queueing, not shedding
+            FrontendConfig {
+                artifacts_dir: dir.clone(),
+                executors: 2,
+                max_queue_depth: usize::MAX,
+                ..Default::default()
+            },
             vec![Arc::new(service.clone())],
         )
         .expect("frontend start");

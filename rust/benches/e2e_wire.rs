@@ -1,0 +1,245 @@
+//! Network serving-plane bench: `ServingServer` + `DcClient` over
+//! loopback under open-loop Poisson load at increasing offered QPS,
+//! then a back-to-back overload burst that must shed (§2.3 load
+//! shedding) rather than time out. Reports client-observed p50/p99/p999
+//! latency, goodput (answered within deadline) and the shed rate, and
+//! emits `BENCH_wire.json` at the repo root.
+//!
+//! Prefers real artifacts with native op programs (`make artifacts`);
+//! falls back to the self-synthesized fixture so it runs everywhere
+//! (both feature configurations). `-- --smoke` runs a tiny
+//! CI-friendly sweep.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dcinfer::coordinator::{
+    ClientResponse, DcClient, FrontendConfig, ModelService, ServerConfig, ServingFrontend,
+    ServingServer,
+};
+use dcinfer::models::{CvService, NmtService, RecSysService};
+use dcinfer::runtime::{synthetic_artifacts_dir, BackendSpec, Manifest, Precision};
+use dcinfer::util::bench::{write_bench_json, Table};
+use dcinfer::util::rng::Pcg32;
+use dcinfer::util::stats::Samples;
+
+/// Depth bound low enough that the overload burst demonstrably sheds.
+const MAX_QUEUE_DEPTH: usize = 64;
+
+struct RunStats {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    errs: u64,
+    good: u64,
+    rtt_ms: Samples,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    let (dir, fixture): (PathBuf, bool) = if artifacts_native_ok() {
+        (PathBuf::from("artifacts"), false)
+    } else {
+        println!("(no native-program artifacts; using the self-synthesized fixture)");
+        (synthetic_artifacts_dir("e2e_wire").expect("fixture"), true)
+    };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    // the paper's traffic shape: recommendation dominates (§2); only
+    // families whose artifacts exist join the mix
+    let candidates: Vec<(&str, f64, Option<Arc<dyn ModelService>>)> = vec![
+        (
+            RecSysService::PREFIX,
+            8.0,
+            RecSysService::from_manifest(&manifest).ok().map(|s| Arc::new(s) as _),
+        ),
+        (
+            CvService::PREFIX,
+            1.0,
+            CvService::from_manifest(&manifest).ok().map(|s| Arc::new(s) as _),
+        ),
+        (
+            NmtService::PREFIX,
+            1.0,
+            NmtService::from_manifest(&manifest).ok().map(|s| Arc::new(s) as _),
+        ),
+    ];
+    let mut services: Vec<Arc<dyn ModelService>> = Vec::new();
+    let mut mix: Vec<(Arc<dyn ModelService>, f64)> = Vec::new();
+    for (prefix, weight, svc) in candidates {
+        let Some(svc) = svc else { continue };
+        if manifest.variants_for_prefix(prefix).is_empty() {
+            continue;
+        }
+        services.push(svc.clone());
+        mix.push((svc, weight));
+    }
+    assert!(!services.is_empty(), "no servable families in {}", dir.display());
+
+    let frontend = Arc::new(
+        ServingFrontend::start(
+            FrontendConfig {
+                artifacts_dir: dir.clone(),
+                executors: 2,
+                backend: BackendSpec::native(Precision::Fp32),
+                max_queue_depth: MAX_QUEUE_DEPTH,
+                ..Default::default()
+            },
+            services,
+        )
+        .expect("frontend start"),
+    );
+    let server = ServingServer::bind(frontend.clone(), "127.0.0.1:0", ServerConfig::default())
+        .expect("server bind");
+    let addr = server.local_addr();
+    println!(
+        "== E2E wire plane: loopback {addr}, 2 executors, depth bound {MAX_QUEUE_DEPTH} ==\n"
+    );
+
+    let sweep: &[f64] = if smoke { &[400.0] } else { &[500.0, 2000.0, 8000.0] };
+    let mut table = Table::new(&[
+        "offered qps", "sent", "ok", "shed", "err", "goodput", "p50 ms", "p99 ms", "p999 ms",
+    ]);
+    let mut json_rows = Vec::new();
+    for &qps in sweep {
+        let n = if smoke { 200 } else { (qps * 0.75).max(400.0) as u64 };
+        let stats = run_load(addr, &mix, qps, n, 17);
+        push_row(&mut table, &mut json_rows, &format!("{qps:.0}"), qps, stats);
+    }
+
+    // the overload point: a back-to-back burst (no pacing) against the
+    // depth bound — it must shed, not stall or drop connections
+    let burst = if smoke { 800 } else { 3000 };
+    let stats = run_load(addr, &mix, f64::INFINITY, burst, 29);
+    assert!(
+        stats.shed > 0,
+        "a {burst}-request burst against depth bound {MAX_QUEUE_DEPTH} must shed"
+    );
+    assert!(stats.ok > 0, "overload must still serve admitted requests");
+    assert_eq!(stats.errs, 0, "overload produced hard errors, not sheds");
+    push_row(&mut table, &mut json_rows, "burst", 0.0, stats);
+
+    table.print();
+    println!("\n(admitted traffic keeps its latency; the excess is shed at the door — §2.3)");
+
+    let json = format!(
+        "{{\n  \"bench\": \"wire\",\n  \"max_queue_depth\": {MAX_QUEUE_DEPTH},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    let path = write_bench_json("BENCH_wire.json", &json);
+    println!("\nwrote {} ({} rows)", path.display(), json_rows.len());
+
+    server.shutdown();
+    frontend.shutdown();
+    if fixture {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Real artifacts exist and their recsys family carries a native op
+/// program (this bench drives the native backend only).
+fn artifacts_native_ok() -> bool {
+    if !Path::new("artifacts/manifest.json").exists() {
+        return false;
+    }
+    let Ok(manifest) = Manifest::load(Path::new("artifacts")) else {
+        return false;
+    };
+    manifest
+        .variants_for_prefix(RecSysService::PREFIX)
+        .first()
+        .map(|(_, name)| {
+            manifest.artifact(name).map(|a| a.has_native_program()).unwrap_or(false)
+        })
+        .unwrap_or(false)
+}
+
+/// Open-loop run: Poisson arrivals at `qps` (infinite = back-to-back
+/// burst), weighted model mix, deadlines at each family's class
+/// default; collects client-observed outcomes.
+fn run_load(
+    addr: std::net::SocketAddr,
+    mix: &[(Arc<dyn ModelService>, f64)],
+    qps: f64,
+    n: u64,
+    seed: u64,
+) -> RunStats {
+    let client = DcClient::connect(addr).expect("connect");
+    let weights: Vec<f64> = mix.iter().map(|(_, w)| *w).collect();
+    let mut rng = Pcg32::seeded(seed);
+    let mut pending: Vec<std::sync::mpsc::Receiver<ClientResponse>> =
+        Vec::with_capacity(n as usize);
+    let t0 = Instant::now();
+    let mut next_at = 0.0f64;
+    for i in 0..n {
+        if qps.is_finite() {
+            next_at += rng.exponential(qps);
+            let now = t0.elapsed().as_secs_f64();
+            if next_at > now {
+                std::thread::sleep(Duration::from_secs_f64(next_at - now));
+            }
+        }
+        let svc = &mix[rng.weighted_choice(&weights)].0;
+        let deadline = svc.deadline_class().default_deadline_ms();
+        let req = svc.synth_request(i, &mut rng, deadline);
+        match client.submit(&req) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => panic!("send failed: {e:#}"),
+        }
+    }
+    let mut stats =
+        RunStats { sent: n, ok: 0, shed: 0, errs: 0, good: 0, rtt_ms: Samples::new() };
+    for rx in pending {
+        match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(cr) => {
+                if cr.shed() {
+                    stats.shed += 1;
+                } else if cr.resp.is_ok() {
+                    stats.ok += 1;
+                    stats.rtt_ms.push(cr.rtt_us / 1e3);
+                    if cr.good() {
+                        stats.good += 1;
+                    }
+                } else {
+                    stats.errs += 1;
+                }
+            }
+            Err(_) => stats.errs += 1,
+        }
+    }
+    client.close();
+    stats
+}
+
+fn push_row(
+    table: &mut Table,
+    json_rows: &mut Vec<String>,
+    label: &str,
+    qps: f64,
+    mut s: RunStats,
+) {
+    let goodput = s.good as f64 / s.sent.max(1) as f64;
+    table.row(&[
+        label.to_string(),
+        s.sent.to_string(),
+        s.ok.to_string(),
+        s.shed.to_string(),
+        s.errs.to_string(),
+        format!("{:.1}%", goodput * 100.0),
+        format!("{:.2}", s.rtt_ms.p50()),
+        format!("{:.2}", s.rtt_ms.p99()),
+        format!("{:.2}", s.rtt_ms.p999()),
+    ]);
+    json_rows.push(format!(
+        "    {{\"offered_qps\": {qps:.0}, \"sent\": {}, \"ok\": {}, \"shed\": {}, \"errors\": {}, \"goodput\": {goodput:.4}, \"shed_rate\": {:.4}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"p999_ms\": {:.3}}}",
+        s.sent,
+        s.ok,
+        s.shed,
+        s.errs,
+        s.shed as f64 / s.sent.max(1) as f64,
+        s.rtt_ms.p50(),
+        s.rtt_ms.p99(),
+        s.rtt_ms.p999()
+    ));
+}

@@ -1,0 +1,219 @@
+//! `DcClient`: the caller side of the serving plane — a pipelined
+//! [`super::wire`] client for [`super::server::ServingServer`].
+//!
+//! One TCP connection carries any number of in-flight requests:
+//! [`DcClient::submit`] assigns a connection-unique correlation id,
+//! writes the frame and returns immediately with a receiver, and a
+//! background reader thread demultiplexes response frames back to their
+//! receivers as they arrive — responses return in whatever order the
+//! server's batches complete, which is what makes open-loop load
+//! generation (and §4-style request pooling from many callers)
+//! possible over a handful of sockets.
+//!
+//! Every receiver resolves exactly once: with the server's response
+//! (served, or a typed [`InferError`] such as an admission-control
+//! shed), or with [`InferError::Shutdown`] if the connection dies
+//! first — a waiting caller never hangs.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write as _};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::request::{InferError, InferRequest, InferResponse};
+use super::wire::{self, FrameKind};
+
+/// A response as the client observed it: the server's answer plus the
+/// client-side round-trip time (submit to frame arrival — queueing,
+/// execution and both network legs).
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    /// round-trip latency observed at the client (us)
+    pub rtt_us: f64,
+    /// the deadline the request carried (ms), for goodput accounting
+    pub deadline_ms: f64,
+    pub resp: InferResponse,
+}
+
+impl ClientResponse {
+    /// Served successfully *within its deadline* — the goodput
+    /// criterion (a late success is throughput, not goodput). A request
+    /// submitted with `deadline_ms <= 0` ("use the server's class
+    /// default") carries no client-side deadline to judge against, so
+    /// only success is assessed; pass an explicit deadline when
+    /// measuring goodput, as `dcinfer loadgen` does.
+    pub fn good(&self) -> bool {
+        self.resp.is_ok() && (self.deadline_ms <= 0.0 || self.rtt_us <= self.deadline_ms * 1e3)
+    }
+
+    /// Shed by admission control rather than failed.
+    pub fn shed(&self) -> bool {
+        matches!(self.resp.outcome, Err(InferError::Overloaded(_)))
+    }
+}
+
+struct PendingEntry {
+    sent: Instant,
+    user_id: u64,
+    model: String,
+    deadline_ms: f64,
+    tx: Sender<ClientResponse>,
+}
+
+/// A pipelined connection to a serving server.
+pub struct DcClient {
+    stream: TcpStream,
+    writer: Mutex<BufWriter<TcpStream>>,
+    pending: Arc<Mutex<HashMap<u64, PendingEntry>>>,
+    next_corr: AtomicU64,
+    reader: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl DcClient {
+    /// Connect to a [`super::server::ServingServer`] at `addr`.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<DcClient> {
+        let stream = TcpStream::connect(addr).context("connecting to serving server")?;
+        let _ = stream.set_nodelay(true);
+        let pending: Arc<Mutex<HashMap<u64, PendingEntry>>> = Arc::new(Mutex::new(HashMap::new()));
+        let reader = {
+            let read_half = stream.try_clone().context("cloning connection for reads")?;
+            let pending = pending.clone();
+            std::thread::Builder::new()
+                .name("dcclient-read".into())
+                .spawn(move || reader_loop(read_half, pending))
+                .context("spawning client reader")?
+        };
+        let write_half = stream.try_clone().context("cloning connection for writes")?;
+        Ok(DcClient {
+            stream,
+            writer: Mutex::new(BufWriter::new(write_half)),
+            pending,
+            next_corr: AtomicU64::new(1),
+            reader: Mutex::new(Some(reader)),
+        })
+    }
+
+    /// Send one request without waiting: the returned receiver resolves
+    /// when the response frame arrives (or the connection dies). Any
+    /// number of submissions may be in flight at once.
+    pub fn submit(&self, req: &InferRequest) -> Result<Receiver<ClientResponse>> {
+        let corr = self.next_corr.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.pending.lock().unwrap().insert(
+            corr,
+            PendingEntry {
+                sent: Instant::now(),
+                user_id: req.id,
+                model: req.model.clone(),
+                deadline_ms: req.deadline_ms,
+                tx,
+            },
+        );
+        let payload = wire::encode_request(req);
+        let sent = {
+            let mut w = self.writer.lock().unwrap();
+            wire::write_frame(&mut *w, FrameKind::Request, corr, &payload)
+                .and_then(|_| w.flush())
+        };
+        if let Err(e) = sent {
+            self.pending.lock().unwrap().remove(&corr);
+            return Err(anyhow::Error::new(e).context("sending request frame"));
+        }
+        Ok(rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn call(&self, req: &InferRequest) -> Result<ClientResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().context("connection closed before the response arrived")
+    }
+
+    /// Requests currently awaiting a response.
+    pub fn in_flight(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    /// Graceful close: half-close the write side (the server observes
+    /// EOF and drains), wait for every in-flight response, then join
+    /// the reader. Idempotent.
+    pub fn close(&self) {
+        let _ = self.stream.shutdown(Shutdown::Write);
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for DcClient {
+    fn drop(&mut self) {
+        // full shutdown (not graceful): an abandoned client should not
+        // keep a reader thread waiting on a silent server
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn reader_loop(stream: TcpStream, pending: Arc<Mutex<HashMap<u64, PendingEntry>>>) {
+    let mut r = BufReader::new(stream);
+    loop {
+        match wire::read_frame(&mut r, wire::DEFAULT_MAX_FRAME) {
+            Ok(Some(f)) if f.kind == FrameKind::Response => {
+                match wire::decode_response(&f.payload) {
+                    Ok(resp) => {
+                        // unmatched corr: a response we stopped waiting
+                        // for (submit failed after insert) — drop it
+                        if let Some(p) = pending.lock().unwrap().remove(&f.corr) {
+                            let _ = p.tx.send(ClientResponse {
+                                rtt_us: p.sent.elapsed().as_secs_f64() * 1e6,
+                                deadline_ms: p.deadline_ms,
+                                resp,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("dcclient: undecodable response, closing: {e}");
+                        break;
+                    }
+                }
+            }
+            Ok(Some(_)) => {
+                eprintln!("dcclient: unexpected frame kind from server, closing");
+                break;
+            }
+            Ok(None) => break, // server closed cleanly
+            Err(e) => {
+                eprintln!("dcclient: connection read failed: {e}");
+                break;
+            }
+        }
+    }
+    // the connection is gone: resolve every waiter with Shutdown so
+    // nobody blocks forever on a dead socket
+    let orphans: Vec<PendingEntry> =
+        pending.lock().unwrap().drain().map(|(_, p)| p).collect();
+    for p in orphans {
+        let PendingEntry { sent, user_id, model, deadline_ms, tx } = p;
+        let _ = tx.send(ClientResponse {
+            rtt_us: sent.elapsed().as_secs_f64() * 1e6,
+            deadline_ms,
+            resp: InferResponse {
+                id: user_id,
+                model,
+                outcome: Err(InferError::Shutdown),
+                queue_us: 0.0,
+                exec_us: 0.0,
+                batch_size: 0,
+                variant: String::new(),
+                backend: String::new(),
+            },
+        });
+    }
+}

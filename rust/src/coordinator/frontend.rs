@@ -14,6 +14,15 @@
 //! [`FrontendConfig::sparse_tier`] set, native lanes share one
 //! dis-aggregated [`EmbeddingShardService`] for their embedding tables.
 //!
+//! Every submission passes the [`AdmissionPolicy`] first (§2.3 load
+//! shedding): a request whose lane is at its queue-depth bound, or
+//! whose deadline is already below the execution reserve, is answered
+//! immediately with [`InferError::Overloaded`] instead of queueing
+//! traffic that can no longer meet its SLA — counted as `shed` in
+//! [`MetricsSnapshot`]. The network plane
+//! ([`super::server::ServingServer`] / [`super::client::DcClient`])
+//! feeds this same path through [`ServingFrontend::submit_with`].
+//!
 //! ```no_run
 //! use std::sync::Arc;
 //! use dcinfer::coordinator::{FrontendConfig, ServingFrontend};
@@ -76,6 +85,15 @@ pub struct FrontendConfig {
     /// holding per-executor copies (PJRT lanes execute HLO with tables
     /// baked in and are unaffected)
     pub sparse_tier: Option<SparseTierConfig>,
+    /// admission control (§2.3 load shedding): shed a request with
+    /// [`InferError::Overloaded`] when its lane already holds this many
+    /// requests (queued or in flight). `usize::MAX` disables the bound.
+    pub max_queue_depth: usize,
+    /// reserve this much of every deadline for execution + return (us);
+    /// shared by the batcher's flush policy and by admission control
+    /// (a request whose whole deadline is below the reserve can never
+    /// finish in time and is shed immediately)
+    pub exec_reserve_us: f64,
 }
 
 impl Default for FrontendConfig {
@@ -88,6 +106,8 @@ impl Default for FrontendConfig {
             backend: BackendSpec::default(),
             model_backends: Vec::new(),
             sparse_tier: None,
+            max_queue_depth: 4096,
+            exec_reserve_us: 10_000.0,
         }
     }
 }
@@ -97,6 +117,8 @@ impl FrontendConfig {
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.executors > 0, "executors must be >= 1");
         anyhow::ensure!(self.max_wait_us >= 0.0, "max_wait_us must be non-negative");
+        anyhow::ensure!(self.max_queue_depth > 0, "max_queue_depth must be >= 1");
+        anyhow::ensure!(self.exec_reserve_us >= 0.0, "exec_reserve_us must be non-negative");
         for (i, (model, _)) in self.model_backends.iter().enumerate() {
             anyhow::ensure!(
                 !self.model_backends[..i].iter().any(|(m, _)| m == model),
@@ -116,6 +138,49 @@ impl FrontendConfig {
             .find(|(m, _)| m == model)
             .map(|(_, s)| *s)
             .unwrap_or(self.backend)
+    }
+}
+
+/// The §2.3 load-shedding rule, applied synchronously at submit time:
+/// answering `Overloaded` in microseconds keeps the lane's queued
+/// traffic inside its latency budget instead of letting every request
+/// time out together.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    /// shed when the lane already holds this many requests
+    pub max_queue_depth: usize,
+    /// shed when the whole deadline is below the execution reserve
+    pub exec_reserve_us: f64,
+}
+
+impl AdmissionPolicy {
+    /// The deadline half of the rule: a request whose whole budget is
+    /// below the execution reserve can never answer in time.
+    pub fn deadline_feasible(&self, deadline_ms: f64) -> Result<(), InferError> {
+        if deadline_ms * 1e3 < self.exec_reserve_us {
+            return Err(InferError::Overloaded(format!(
+                "deadline {deadline_ms} ms is infeasible: {:.1} ms reserved for execution",
+                self.exec_reserve_us / 1e3
+            )));
+        }
+        Ok(())
+    }
+
+    /// Shed message for a lane observed at `depth` against the bound.
+    fn overloaded(&self, depth: usize) -> InferError {
+        InferError::Overloaded(format!("queue depth {depth} at bound {}", self.max_queue_depth))
+    }
+
+    /// Admit or shed one request given its lane's current depth. (The
+    /// frontend's submission path enforces the depth half atomically
+    /// via [`ServeMetrics::depth_try_inc`]; this form is the policy in
+    /// isolation.)
+    pub fn admit(&self, deadline_ms: f64, depth: usize) -> Result<(), InferError> {
+        self.deadline_feasible(deadline_ms)?;
+        if depth >= self.max_queue_depth {
+            return Err(self.overloaded(depth));
+        }
+        Ok(())
     }
 }
 
@@ -155,22 +220,28 @@ impl InFlight {
 }
 
 /// One registered model: its submission channel, batcher thread and
-/// per-model metrics. Dropping `tx` is the shutdown signal: the lane
-/// thread drains its queue and exits once the channel disconnects.
+/// per-model metrics. Taking `tx` (dropping the sender) is the shutdown
+/// signal: the lane thread drains its queue and exits once the channel
+/// disconnects. Both fields sit behind mutexes so [`ServingFrontend::shutdown`]
+/// works through a shared reference (a network server holds the
+/// frontend in an `Arc`).
 struct Lane {
-    tx: Sender<Submission>,
+    tx: Mutex<Option<Sender<Submission>>>,
     metrics: Arc<ServeMetrics>,
     service: Arc<dyn ModelService>,
     backend: BackendSpec,
-    handle: JoinHandle<()>,
+    handle: Mutex<Option<JoinHandle<()>>>,
 }
 
 /// A running multi-model serving frontend.
 pub struct ServingFrontend {
     lanes: BTreeMap<String, Lane>,
+    admission: AdmissionPolicy,
     inflight: Arc<InFlight>,
-    executor_pools: Vec<Arc<ExecutorPool>>,
+    executor_pools: Mutex<Vec<Arc<ExecutorPool>>>,
     sparse: Option<Arc<EmbeddingShardService>>,
+    /// set once the drain in [`Self::shutdown`] has completed
+    drained: Mutex<bool>,
 }
 
 impl ServingFrontend {
@@ -272,7 +343,7 @@ impl ServingFrontend {
             let policy = BatchPolicy {
                 variants: variants.iter().map(|(b, _)| *b).collect(),
                 max_wait_us: cfg.max_wait_us,
-                exec_reserve_us: 10_000.0,
+                exec_reserve_us: cfg.exec_reserve_us,
             };
             let handle = {
                 let lane = LaneWorker {
@@ -291,15 +362,26 @@ impl ServingFrontend {
             };
             lanes.insert(
                 svc.model_id().to_string(),
-                Lane { tx, metrics, service: svc, backend: spec, handle },
+                Lane {
+                    tx: Mutex::new(Some(tx)),
+                    metrics,
+                    service: svc,
+                    backend: spec,
+                    handle: Mutex::new(Some(handle)),
+                },
             );
         }
 
         Ok(ServingFrontend {
             lanes,
+            admission: AdmissionPolicy {
+                max_queue_depth: cfg.max_queue_depth,
+                exec_reserve_us: cfg.exec_reserve_us,
+            },
             inflight,
-            executor_pools: pools.into_iter().map(|(_, p, _)| p).collect(),
+            executor_pools: Mutex::new(pools.into_iter().map(|(_, p, _)| p).collect()),
             sparse,
+            drained: Mutex::new(false),
         })
     }
 
@@ -333,34 +415,83 @@ impl ServingFrontend {
         self.lanes.iter().map(|(m, l)| (m.clone(), l.metrics.snapshot())).collect()
     }
 
+    /// The admission policy every submission is checked against.
+    pub fn admission(&self) -> AdmissionPolicy {
+        self.admission
+    }
+
     /// Route a request to its model's lane; returns the response
-    /// channel. Unknown models and malformed inputs fail synchronously.
-    pub fn submit(&self, mut req: InferRequest) -> Result<Receiver<InferResponse>> {
-        let lane = self
-            .lanes
-            .get(&req.model)
-            .ok_or_else(|| anyhow::anyhow!(InferError::UnknownModel(req.model.clone())))?;
-        lane.service.validate(&req)?;
-        if req.deadline_ms <= 0.0 {
-            req.deadline_ms = lane.service.deadline_class().default_deadline_ms();
-        }
+    /// channel. Unknown models and malformed inputs fail synchronously,
+    /// and admission control sheds with [`InferError::Overloaded`]
+    /// (downcast the error to tell sheds from hard failures).
+    pub fn submit(&self, req: InferRequest) -> Result<Receiver<InferResponse>> {
         let (resp_tx, resp_rx) = channel();
-        lane.tx
-            .send(Submission { req, resp: resp_tx })
-            .map_err(|_| anyhow::anyhow!(InferError::Shutdown))?;
+        self.submit_with(req, resp_tx).map_err(anyhow::Error::new)?;
         Ok(resp_rx)
     }
 
+    /// [`Self::submit`] with a caller-supplied response channel: many
+    /// requests may share one sender (the network server funnels every
+    /// response of a connection into a single writer this way), and the
+    /// error is typed so transports can answer sheds on the wire.
+    pub fn submit_with(
+        &self,
+        mut req: InferRequest,
+        resp: Sender<InferResponse>,
+    ) -> Result<(), InferError> {
+        let lane = self
+            .lanes
+            .get(&req.model)
+            .ok_or_else(|| InferError::UnknownModel(req.model.clone()))?;
+        lane.service
+            .validate(&req)
+            .map_err(|e| InferError::BadRequest(format!("{e:#}")))?;
+        if req.deadline_ms <= 0.0 {
+            req.deadline_ms = lane.service.deadline_class().default_deadline_ms();
+        }
+        if let Err(e) = self.admission.deadline_feasible(req.deadline_ms) {
+            lane.metrics.record_shed(1);
+            return Err(e);
+        }
+        // atomic inc-then-check: the depth bound stays exact even when
+        // many connection readers submit into one lane concurrently
+        if let Err(depth) = lane.metrics.depth_try_inc(self.admission.max_queue_depth) {
+            lane.metrics.record_shed(1);
+            return Err(self.admission.overloaded(depth));
+        }
+        let tx = match lane.tx.lock().unwrap().as_ref() {
+            Some(tx) => tx.clone(),
+            None => {
+                lane.metrics.depth_dec();
+                return Err(InferError::Shutdown);
+            }
+        };
+        if tx.send(Submission { req, resp }).is_err() {
+            lane.metrics.depth_dec();
+            return Err(InferError::Shutdown);
+        }
+        Ok(())
+    }
+
     /// Stop every lane (draining queued requests), wait for in-flight
-    /// batches, then tear down the executor pools.
-    pub fn shutdown(mut self) {
+    /// batches, then tear down the executor pools. Idempotent and
+    /// callable through a shared reference (e.g. from an
+    /// `Arc<ServingFrontend>` a network server holds): the first caller
+    /// drains, concurrent callers block until the drain completes, and
+    /// later calls return immediately.
+    pub fn shutdown(&self) {
+        let mut done = self.drained.lock().unwrap();
+        if *done {
+            return;
+        }
         // disconnect every lane first (drop tx), then join: lanes drain
         // their queues concurrently instead of one after another
         let mut handles = Vec::new();
-        for (_, lane) in std::mem::take(&mut self.lanes) {
-            let Lane { tx, handle, .. } = lane;
-            drop(tx);
-            handles.push(handle);
+        for lane in self.lanes.values() {
+            drop(lane.tx.lock().unwrap().take());
+            if let Some(h) = lane.handle.lock().unwrap().take() {
+                handles.push(h);
+            }
         }
         for h in handles {
             let _ = h.join();
@@ -370,12 +501,19 @@ impl ServingFrontend {
         if !self.inflight.wait_idle(Duration::from_secs(30)) {
             eprintln!("frontend shutdown: in-flight batches did not drain in 30s");
         }
-        for pool in std::mem::take(&mut self.executor_pools) {
+        for pool in std::mem::take(&mut *self.executor_pools.lock().unwrap()) {
             match Arc::try_unwrap(pool) {
                 Ok(pool) => pool.shutdown(),
                 Err(_) => eprintln!("frontend shutdown: executor pool still referenced, leaking"),
             }
         }
+        *done = true;
+    }
+}
+
+impl Drop for ServingFrontend {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -472,6 +610,9 @@ impl LaneWorker {
                     {
                         let queue_us = formed_at.duration_since(req.arrival).as_secs_f64() * 1e6;
                         metrics.record_request(queue_us, exec_us, req.deadline_ms);
+                        // dec before the send: once a caller holds the
+                        // response, the gauge no longer counts it
+                        metrics.depth_dec();
                         let _ = tx.send(InferResponse {
                             id: req.id,
                             model: req.model.clone(),
@@ -489,6 +630,7 @@ impl LaneWorker {
                     metrics.record_failures(n);
                     for (req, tx) in requests.iter().zip(responders.into_iter()) {
                         let queue_us = formed_at.duration_since(req.arrival).as_secs_f64() * 1e6;
+                        metrics.depth_dec();
                         let _ = tx.send(InferResponse {
                             id: req.id,
                             model: req.model.clone(),
@@ -517,6 +659,7 @@ impl LaneWorker {
     ) {
         self.metrics.record_failures(requests.len());
         for (req, tx) in requests.iter().zip(responders.into_iter()) {
+            self.metrics.depth_dec();
             let _ = tx.send(InferResponse {
                 id: req.id,
                 model: req.model.clone(),
@@ -547,6 +690,33 @@ mod tests {
     fn config_validation_rejects_negative_wait() {
         let cfg = FrontendConfig { max_wait_us: -1.0, ..Default::default() };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_admission_knobs() {
+        let cfg = FrontendConfig { max_queue_depth: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = FrontendConfig { exec_reserve_us: -1.0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn admission_sheds_on_depth_and_infeasible_deadline() {
+        let p = AdmissionPolicy { max_queue_depth: 4, exec_reserve_us: 10_000.0 };
+        assert!(p.admit(100.0, 0).is_ok());
+        assert!(p.admit(100.0, 3).is_ok());
+        // at the bound: shed
+        let e = p.admit(100.0, 4).unwrap_err();
+        assert!(matches!(e, InferError::Overloaded(_)), "{e}");
+        // a 5 ms deadline cannot fit a 10 ms execution reserve
+        let e = p.admit(5.0, 0).unwrap_err();
+        assert!(matches!(e, InferError::Overloaded(_)), "{e}");
+        assert!(e.to_string().contains("infeasible"), "{e}");
+        // exactly at the reserve is admitted
+        assert!(p.admit(10.0, 0).is_ok());
+        // unbounded depth never sheds on depth
+        let open = AdmissionPolicy { max_queue_depth: usize::MAX, exec_reserve_us: 0.0 };
+        assert!(open.admit(0.001, usize::MAX - 1).is_ok());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! registered model, so heterogeneous families are tracked separately.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -16,6 +17,9 @@ use crate::util::stats::Samples;
 #[derive(Debug)]
 pub struct ServeMetrics {
     inner: Mutex<Inner>,
+    /// requests queued or in flight right now (admission-control gauge:
+    /// incremented at submit, decremented when the response is sent)
+    depth: AtomicU64,
     started: Instant,
     sparse: Option<Arc<EmbeddingShardService>>,
 }
@@ -29,6 +33,7 @@ struct Inner {
     fill: Samples,
     served: u64,
     failed: u64,
+    shed: u64,
     deadline_misses: u64,
     batches: u64,
     /// `backend/precision` label -> (batches, requests) served by it
@@ -40,6 +45,10 @@ struct Inner {
 pub struct MetricsSnapshot {
     pub served: u64,
     pub failed: u64,
+    /// requests rejected by admission control (`InferError::Overloaded`)
+    pub shed: u64,
+    /// requests queued or in flight at snapshot time
+    pub queue_depth: u64,
     pub batches: u64,
     pub deadline_misses: u64,
     pub qps: f64,
@@ -72,7 +81,12 @@ impl ServeMetrics {
 
     /// A sink that also snapshots the given sparse tier's counters.
     pub fn with_sparse(sparse: Option<Arc<EmbeddingShardService>>) -> ServeMetrics {
-        ServeMetrics { inner: Mutex::new(Inner::default()), started: Instant::now(), sparse }
+        ServeMetrics {
+            inner: Mutex::new(Inner::default()),
+            depth: AtomicU64::new(0),
+            started: Instant::now(),
+            sparse,
+        }
     }
 
     /// Record one served request.
@@ -90,6 +104,41 @@ impl ServeMetrics {
     /// Record `n` requests that received an error response.
     pub fn record_failures(&self, n: usize) {
         self.inner.lock().unwrap().failed += n as u64;
+    }
+
+    /// Record `n` requests shed by admission control (§2.3: rejected at
+    /// the door so queued traffic keeps meeting its deadlines).
+    pub fn record_shed(&self, n: usize) {
+        self.inner.lock().unwrap().shed += n as u64;
+    }
+
+    /// One request entered the lane (queued or in flight).
+    pub fn depth_inc(&self) {
+        self.depth.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Atomically enter the lane unless it already holds `bound`
+    /// requests; on refusal the gauge is restored and the observed
+    /// depth returned. Inc-then-check keeps the bound exact under
+    /// concurrent submitters (a read-check-inc would let a burst of
+    /// racers all pass at `bound - 1`).
+    pub fn depth_try_inc(&self, bound: usize) -> Result<(), usize> {
+        let prev = self.depth.fetch_add(1, Ordering::SeqCst) as usize;
+        if prev >= bound {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            return Err(prev);
+        }
+        Ok(())
+    }
+
+    /// One request left the lane (its response was sent).
+    pub fn depth_dec(&self) {
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Requests queued or in flight right now — the admission gauge.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst) as usize
     }
 
     /// Attribute one successfully executed batch of `requests` requests
@@ -116,6 +165,8 @@ impl ServeMetrics {
         MetricsSnapshot {
             served: g.served,
             failed: g.failed,
+            shed: g.shed,
+            queue_depth: self.depth.load(Ordering::SeqCst),
             batches: g.batches,
             deadline_misses: g.deadline_misses,
             qps: g.served as f64 / elapsed,
@@ -140,13 +191,14 @@ impl ServeMetrics {
 impl MetricsSnapshot {
     pub fn print(&self) {
         println!(
-            "served {} requests in {} batches (mean batch {:.1}, fill {:.0}%), {} deadline misses, {} failed",
+            "served {} requests in {} batches (mean batch {:.1}, fill {:.0}%), {} deadline misses, {} failed, {} shed",
             self.served,
             self.batches,
             self.mean_batch,
             self.mean_fill * 100.0,
             self.deadline_misses,
-            self.failed
+            self.failed,
+            self.shed
         );
         println!(
             "latency us: queue p50/p99 {:.0}/{:.0}  exec p50/p99 {:.0}/{:.0}  total p50/p99 {:.0}/{:.0}",
@@ -157,7 +209,7 @@ impl MetricsSnapshot {
             self.total_p50_us,
             self.total_p99_us
         );
-        println!("throughput: {:.0} req/s", self.qps);
+        println!("throughput: {:.0} req/s (queue depth now {})", self.qps, self.queue_depth);
         for (label, batches, requests) in &self.by_backend {
             println!("backend {label}: {batches} batches / {requests} requests");
         }
@@ -210,5 +262,34 @@ mod tests {
         assert_eq!(s.served, 0);
         assert_eq!(s.failed, 3);
         assert_eq!(s.batches, 1);
+        assert_eq!(s.shed, 0);
+    }
+
+    #[test]
+    fn depth_try_inc_enforces_the_bound_exactly() {
+        let m = ServeMetrics::new();
+        assert!(m.depth_try_inc(2).is_ok());
+        assert!(m.depth_try_inc(2).is_ok());
+        // at the bound: refused and the gauge restored
+        assert_eq!(m.depth_try_inc(2), Err(2));
+        assert_eq!(m.queue_depth(), 2);
+        m.depth_dec();
+        assert!(m.depth_try_inc(2).is_ok());
+    }
+
+    #[test]
+    fn shed_and_depth_tracked() {
+        let m = ServeMetrics::new();
+        m.depth_inc();
+        m.depth_inc();
+        m.record_shed(1);
+        let s = m.snapshot();
+        assert_eq!(s.queue_depth, 2);
+        assert_eq!(s.shed, 1);
+        m.depth_dec();
+        assert_eq!(m.queue_depth(), 1);
+        // sheds never enter the lane, so served/failed stay untouched
+        assert_eq!(s.served, 0);
+        assert_eq!(s.failed, 0);
     }
 }

@@ -19,6 +19,19 @@
 //! - [`router`]: executor selection (round-robin / least-loaded).
 //! - [`batcher`]: deadline-aware dynamic batching that picks the AOT
 //!   batch variant (b1/b4/b16/b64) for each formed batch.
+//! - [`wire`]: the serving plane's versioned, length-prefixed binary
+//!   frame format — requests/responses with full tensor payloads,
+//!   correlation ids and typed decode errors (malformed frames are
+//!   rejected, never panicked on).
+//! - [`server`]: [`ServingServer`] — the tier's TCP ingress: per
+//!   connection a reader thread feeds decoded frames through admission
+//!   control ([`frontend::AdmissionPolicy`], §2.3 load shedding:
+//!   `InferError::Overloaded` instead of queueing doomed work) into
+//!   `submit_with`, a writer thread streams responses back out of
+//!   order by correlation id, and shutdown drains in-flight responses.
+//! - [`client`]: [`DcClient`] — the pipelined caller side, demuxing
+//!   responses to per-request receivers; the open-loop load generator
+//!   (`dcinfer loadgen`) and any upstream ranking tier drive this.
 //! - [`disagg`]: the §4 bandwidth model for the tier boundary.
 //! - sparse tier: with [`FrontendConfig::sparse_tier`] set, native
 //!   lanes dis-aggregate their embedding tables across one shared
@@ -31,17 +44,23 @@
 //! submitters observe batch failures instead of a closed channel.
 
 pub mod batcher;
+pub mod client;
 pub mod disagg;
 pub mod frontend;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod server;
 pub mod service;
+pub mod wire;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, FormedBatch};
+pub use client::{ClientResponse, DcClient};
 pub use disagg::{disagg_bandwidth, DisaggReport};
-pub use frontend::{FrontendConfig, ServingFrontend};
+pub use frontend::{AdmissionPolicy, FrontendConfig, ServingFrontend};
 pub use metrics::{MetricsSnapshot, ServeMetrics};
 pub use request::{InferError, InferRequest, InferResponse};
 pub use router::{RoutePolicy, Router};
+pub use server::{ServerConfig, ServingServer};
 pub use service::{scatter_rows, stack_rows, DeadlineClass, ModelService};
+pub use wire::{FrameKind, WireError};

@@ -46,6 +46,10 @@ pub enum InferError {
     BadRequest(String),
     /// The carrying batch failed on the device.
     ExecFailed(String),
+    /// Admission control shed the request instead of queueing it (§2.3
+    /// load shedding: the lane is at its queue-depth bound, or the
+    /// deadline is already infeasible given the execution reserve).
+    Overloaded(String),
     /// The frontend shut down before the request executed.
     Shutdown,
 }
@@ -56,6 +60,7 @@ impl std::fmt::Display for InferError {
             InferError::UnknownModel(m) => write!(f, "no service registered for model {m:?}"),
             InferError::BadRequest(e) => write!(f, "bad request: {e}"),
             InferError::ExecFailed(e) => write!(f, "batch execution failed: {e}"),
+            InferError::Overloaded(e) => write!(f, "overloaded, request shed: {e}"),
             InferError::Shutdown => write!(f, "frontend shut down before execution"),
         }
     }
@@ -149,5 +154,12 @@ mod tests {
         assert!(!resp.is_ok());
         assert_eq!(resp.scalar_f32(), None);
         assert!(resp.outcome.unwrap_err().to_string().contains("device gone"));
+    }
+
+    #[test]
+    fn overloaded_names_the_shed_reason() {
+        let e = InferError::Overloaded("queue depth 64 at bound 64".into());
+        assert!(e.to_string().contains("shed"));
+        assert!(e.to_string().contains("bound 64"));
     }
 }

@@ -1,0 +1,338 @@
+//! The network ingress of the serving tier: a [`ServingServer`] wraps a
+//! [`ServingFrontend`] behind a `TcpListener` speaking the
+//! [`super::wire`] frame protocol (§2.3/§5: the tier is a datacenter
+//! *service* — ranking/feed frontends submit over the network and every
+//! scale-out story builds on this seam).
+//!
+//! Std-only threading model, no async runtime:
+//!
+//! - one accept thread (non-blocking listener polled against the stop
+//!   flag);
+//! - per connection, a **reader** thread that decodes request frames
+//!   and feeds [`ServingFrontend::submit_with`] — admission control
+//!   answers [`InferError::Overloaded`] sheds immediately — and a
+//!   **writer** thread that streams responses back *out of submission
+//!   order* as batches complete, matched by the frame's correlation id;
+//! - every response of a connection (completions, sheds, synchronous
+//!   rejections) funnels through one channel into the writer, so the
+//!   channel's disconnect doubles as the drain barrier: the writer
+//!   exits only after the last in-flight response is on the wire.
+//!
+//! Malformed frames never panic the server: an undecodable payload in
+//! an intact frame is answered with a `BadRequest` response on the same
+//! correlation id, and a broken frame stream (bad magic/version,
+//! oversized length) closes that connection only.
+//!
+//! [`ServingServer::shutdown`] is a graceful drain: stop accepting,
+//! half-close every connection's read side (clients observe EOF), let
+//! in-flight responses flush, join the connection threads. The frontend
+//! itself is left running — its owner decides when to
+//! [`ServingFrontend::shutdown`].
+
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Write as _};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::frontend::ServingFrontend;
+use super::request::{InferError, InferResponse};
+use super::wire::{self, FrameKind, WireError};
+
+/// Transport knobs (the serving policy itself — batching, admission —
+/// lives in [`super::frontend::FrontendConfig`]).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// reject request frames whose declared payload exceeds this
+    pub max_frame_bytes: u32,
+    /// accept-loop poll interval while idle
+    pub poll: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_frame_bytes: wire::DEFAULT_MAX_FRAME, poll: Duration::from_millis(20) }
+    }
+}
+
+struct ConnHandles {
+    stream: TcpStream,
+    reader: JoinHandle<()>,
+    writer: JoinHandle<()>,
+}
+
+/// A running TCP ingress over a shared [`ServingFrontend`].
+pub struct ServingServer {
+    frontend: Arc<ServingFrontend>,
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+    conns: Arc<Mutex<Vec<ConnHandles>>>,
+    accepted: Arc<AtomicU64>,
+}
+
+impl ServingServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections against `frontend`.
+    pub fn bind(
+        frontend: Arc<ServingFrontend>,
+        addr: impl ToSocketAddrs,
+        cfg: ServerConfig,
+    ) -> Result<ServingServer> {
+        let listener = TcpListener::bind(addr).context("binding serving listener")?;
+        listener.set_nonblocking(true).context("setting listener non-blocking")?;
+        let local = listener.local_addr().context("resolving listener address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<ConnHandles>>> = Arc::new(Mutex::new(Vec::new()));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let accept = {
+            let (stop, conns, accepted) = (stop.clone(), conns.clone(), accepted.clone());
+            let frontend = frontend.clone();
+            std::thread::Builder::new()
+                .name("dcserve-accept".into())
+                .spawn(move || accept_loop(listener, frontend, stop, conns, accepted, cfg))
+                .context("spawning accept loop")?
+        };
+        Ok(ServingServer {
+            frontend,
+            local,
+            stop,
+            accept: Mutex::new(Some(accept)),
+            conns,
+            accepted,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the ephemeral port picked).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Connections accepted since bind.
+    pub fn connections_accepted(&self) -> u64 {
+        self.accepted.load(Ordering::SeqCst)
+    }
+
+    /// The frontend this server submits into.
+    pub fn frontend(&self) -> &Arc<ServingFrontend> {
+        &self.frontend
+    }
+
+    /// Graceful drain: stop accepting, half-close every connection's
+    /// read side so clients observe EOF, let in-flight responses flush
+    /// and join the connection threads. Idempotent; leaves the frontend
+    /// running (shut it down separately once metrics are harvested).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in &conns {
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        for c in conns {
+            let _ = c.reader.join();
+            let _ = c.writer.join();
+        }
+    }
+}
+
+impl Drop for ServingServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    frontend: Arc<ServingFrontend>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<ConnHandles>>>,
+    accepted: Arc<AtomicU64>,
+    cfg: ServerConfig,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                accepted.fetch_add(1, Ordering::SeqCst);
+                match spawn_conn(stream, &frontend, cfg.max_frame_bytes) {
+                    Ok(conn) => {
+                        let mut g = conns.lock().unwrap();
+                        // reap finished connections so a long-lived
+                        // server doesn't accumulate handles
+                        g.retain(|c| !(c.reader.is_finished() && c.writer.is_finished()));
+                        g.push(conn);
+                    }
+                    Err(e) => eprintln!("serving server: connection setup failed: {e:#}"),
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => std::thread::sleep(cfg.poll),
+            Err(e) => {
+                eprintln!("serving server: accept failed: {e}");
+                std::thread::sleep(cfg.poll);
+            }
+        }
+    }
+}
+
+fn spawn_conn(
+    stream: TcpStream,
+    frontend: &Arc<ServingFrontend>,
+    max_frame: u32,
+) -> Result<ConnHandles> {
+    // a listener in non-blocking mode can hand out non-blocking streams
+    // on some platforms; the connection threads want blocking i/o
+    stream.set_nonblocking(false).context("setting connection blocking")?;
+    // latency over throughput: response frames are small, don't let
+    // Nagle hold them hostage
+    let _ = stream.set_nodelay(true);
+    let read_half = stream.try_clone().context("cloning connection for reads")?;
+    let write_half = stream.try_clone().context("cloning connection for writes")?;
+    let (done_tx, done_rx) = channel::<InferResponse>();
+    // corr -> the client's original request id (responses travel with
+    // the corr in `id` until the writer restores the user id)
+    let ids: Arc<Mutex<HashMap<u64, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    let reader = {
+        let (frontend, ids) = (frontend.clone(), ids.clone());
+        std::thread::Builder::new()
+            .name("dcserve-read".into())
+            .spawn(move || conn_reader(read_half, frontend, done_tx, ids, max_frame))
+            .context("spawning connection reader")?
+    };
+    let writer = std::thread::Builder::new()
+        .name("dcserve-write".into())
+        .spawn(move || conn_writer(write_half, done_rx, ids))
+        .context("spawning connection writer")?;
+    Ok(ConnHandles { stream, reader, writer })
+}
+
+/// An immediately-synthesized response (admission shed, unknown model,
+/// undecodable payload): same shape as a served one so the client's
+/// demux never special-cases.
+fn synth_response(corr: u64, model: &str, err: InferError) -> InferResponse {
+    InferResponse {
+        id: corr,
+        model: model.to_string(),
+        outcome: Err(err),
+        queue_us: 0.0,
+        exec_us: 0.0,
+        batch_size: 0,
+        variant: String::new(),
+        backend: String::new(),
+    }
+}
+
+fn conn_reader(
+    stream: TcpStream,
+    frontend: Arc<ServingFrontend>,
+    done: Sender<InferResponse>,
+    ids: Arc<Mutex<HashMap<u64, u64>>>,
+    max_frame: u32,
+) {
+    let mut r = BufReader::new(stream);
+    loop {
+        let frame = match wire::read_frame(&mut r, max_frame) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // peer closed cleanly
+            Err(WireError::Io(e)) => {
+                eprintln!("serving server: connection read failed: {e}");
+                break;
+            }
+            Err(e) => {
+                // the frame stream itself is broken (bad magic/version,
+                // oversized length): no way to resync, close this
+                // connection — never the server
+                eprintln!("serving server: closing connection on protocol error: {e}");
+                break;
+            }
+        };
+        if frame.kind != FrameKind::Request {
+            eprintln!("serving server: unexpected frame kind from client, closing");
+            break;
+        }
+        let corr = frame.corr;
+        match wire::decode_request(&frame.payload) {
+            Ok(mut req) => {
+                let user_id = req.id;
+                {
+                    let mut g = ids.lock().unwrap();
+                    if g.contains_key(&corr) {
+                        // a reused in-flight corr would make two
+                        // responses ambiguous; protocol error
+                        eprintln!(
+                            "serving server: correlation id {corr} reused in flight, closing"
+                        );
+                        break;
+                    }
+                    g.insert(corr, user_id);
+                }
+                // req.arrival was stamped by decode_request — that is
+                // the queueing-delay reference point for this request
+                req.id = corr;
+                let model = req.model.clone();
+                if let Err(e) = frontend.submit_with(req, done.clone()) {
+                    // shed / rejected synchronously: answer on the same
+                    // response path, out-of-order with everything else
+                    let _ = done.send(synth_response(corr, &model, e));
+                }
+            }
+            Err(e) => {
+                // framing was intact but the payload was not: report it
+                // to the caller and keep serving the connection
+                let mut g = ids.lock().unwrap();
+                if g.contains_key(&corr) {
+                    eprintln!("serving server: correlation id {corr} reused in flight, closing");
+                    break;
+                }
+                g.insert(corr, 0);
+                drop(g);
+                let err = InferError::BadRequest(format!("undecodable request: {e}"));
+                let _ = done.send(synth_response(corr, "", err));
+            }
+        }
+    }
+    // dropping `done` here lets the writer exit once every in-flight
+    // response has drained — the no-lost-responses guarantee
+}
+
+fn conn_writer(
+    stream: TcpStream,
+    done: Receiver<InferResponse>,
+    ids: Arc<Mutex<HashMap<u64, u64>>>,
+) {
+    // the registry holds another clone of this socket, so dropping the
+    // BufWriter alone would leave the connection half-alive; close it
+    // explicitly once the response stream ends
+    let closer = stream.try_clone().ok();
+    let mut w = BufWriter::new(stream);
+    'stream: while let Ok(first) = done.recv() {
+        let mut next = Some(first);
+        // drain everything already queued before paying for a flush
+        while let Some(mut resp) = next.take() {
+            let corr = resp.id;
+            resp.id = ids.lock().unwrap().remove(&corr).unwrap_or(0);
+            let payload = wire::encode_response(&resp);
+            if wire::write_frame(&mut w, FrameKind::Response, corr, &payload).is_err() {
+                break 'stream; // client gone; lane sends just no-op now
+            }
+            match done.try_recv() {
+                Ok(r) => next = Some(r),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {}
+            }
+        }
+        if w.flush().is_err() {
+            break 'stream;
+        }
+    }
+    let _ = w.flush();
+    drop(w);
+    if let Some(s) = closer {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}

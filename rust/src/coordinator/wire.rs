@@ -1,0 +1,611 @@
+//! The serving plane's wire format: versioned, length-prefixed binary
+//! frames carrying [`InferRequest`]/[`InferResponse`] between a
+//! [`super::client::DcClient`] and a [`super::server::ServingServer`]
+//! (§2.3/§5: requests arrive over the network from ranking/feed
+//! frontends and must be answered within an SLA).
+//!
+//! Every frame is a fixed 20-byte header followed by a payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "DCWF"
+//! 4       1     version (1)
+//! 5       1     kind: 1 = request, 2 = response
+//! 6       2     reserved (0)
+//! 8       4     payload length (u32 LE)
+//! 12      8     correlation id (u64 LE)
+//! ```
+//!
+//! The correlation id is chosen by the client, must be unique among a
+//! connection's in-flight requests, and is echoed verbatim on the
+//! response frame — responses may return in any order (the executor
+//! pool completes batches out of submission order), so the client
+//! demultiplexes by it. All integers and floats are little-endian.
+//!
+//! Request payload: `id u64 · deadline_ms f64 · model str16 ·
+//! n_inputs u16 · tensor*`. Response payload: `id u64 · model str16 ·
+//! variant str16 · backend str16 · queue_us f64 · exec_us f64 ·
+//! batch_size u32 · tag u8` then, for `tag 0` (ok), `n_outputs u16 ·
+//! tensor*`, or for `tag 1` (error), `code u8 · message str16`. A
+//! `str16` is a u16 byte length plus UTF-8 bytes; a tensor is
+//! `dtype u8 · ndim u8 · dim u32 * ndim · data_len u32 · data`
+//! covering every [`DType`] the artifacts use (f32, i8, i32).
+//!
+//! Decoding is total: malformed, truncated and oversized frames come
+//! back as a typed [`WireError`], never a panic, and a frame's declared
+//! length is checked against a caller-supplied bound before any
+//! allocation happens.
+//!
+//! ```
+//! use dcinfer::coordinator::wire;
+//! use dcinfer::coordinator::InferRequest;
+//! use dcinfer::runtime::HostTensor;
+//!
+//! let req = InferRequest::new("recsys", 7, vec![HostTensor::from_f32(&[2], &[0.5, -0.5])], 50.0);
+//! let mut framed = Vec::new();
+//! wire::write_frame(&mut framed, wire::FrameKind::Request, 99, &wire::encode_request(&req))?;
+//! let frame = wire::read_frame(&mut framed.as_slice(), wire::DEFAULT_MAX_FRAME)?.unwrap();
+//! assert_eq!(frame.corr, 99);
+//! let back = wire::decode_request(&frame.payload)?;
+//! assert_eq!(back.id, 7);
+//! assert_eq!(back.inputs[0].data, req.inputs[0].data);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use std::io::{self, Read, Write};
+use std::time::Instant;
+
+use crate::runtime::{DType, HostTensor};
+
+use super::request::{InferError, InferRequest, InferResponse};
+
+/// First four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"DCWF";
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Fixed frame-header size in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Default bound on a frame's payload length (64 MiB) — far above any
+/// real request, low enough that a corrupt length field cannot ask the
+/// receiver to allocate the universe.
+pub const DEFAULT_MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+/// What a frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    Request,
+    Response,
+}
+
+impl FrameKind {
+    fn code(self) -> u8 {
+        match self {
+            FrameKind::Request => 1,
+            FrameKind::Response => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<FrameKind, WireError> {
+        match c {
+            1 => Ok(FrameKind::Request),
+            2 => Ok(FrameKind::Response),
+            other => Err(WireError::BadFrameKind(other)),
+        }
+    }
+}
+
+/// Why a frame or payload was rejected. Every decode path returns one
+/// of these; none panics.
+#[derive(Debug)]
+pub enum WireError {
+    /// The first four bytes are not [`MAGIC`] — not our protocol.
+    BadMagic([u8; 4]),
+    /// A version this build does not speak.
+    BadVersion(u8),
+    /// An unknown frame-kind code.
+    BadFrameKind(u8),
+    /// The buffer or stream ended before the structure did.
+    Truncated { need: usize, have: usize },
+    /// The header declares a payload above the receiver's bound.
+    Oversized { len: u32, max: u32 },
+    /// Framing was intact but the payload contents were not.
+    BadPayload(String),
+    /// The underlying transport failed.
+    Io(io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            WireError::BadFrameKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} bytes exceeds the {max}-byte bound")
+            }
+            WireError::BadPayload(e) => write!(f, "bad frame payload: {e}"),
+            WireError::Io(e) => write!(f, "wire i/o failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// One decoded frame: kind, correlation id and raw payload bytes.
+#[derive(Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub corr: u64,
+    pub payload: Vec<u8>,
+}
+
+fn encode_header(kind: FrameKind, corr: u64, len: u32) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(&MAGIC);
+    h[4] = VERSION;
+    h[5] = kind.code();
+    h[8..12].copy_from_slice(&len.to_le_bytes());
+    h[12..20].copy_from_slice(&corr.to_le_bytes());
+    h
+}
+
+/// Validate a header against the magic/version/kind and the receiver's
+/// frame bound; returns `(kind, corr, payload_len)`.
+pub fn parse_header(
+    h: &[u8; HEADER_LEN],
+    max_frame: u32,
+) -> Result<(FrameKind, u64, u32), WireError> {
+    if h[0..4] != MAGIC {
+        return Err(WireError::BadMagic([h[0], h[1], h[2], h[3]]));
+    }
+    if h[4] != VERSION {
+        return Err(WireError::BadVersion(h[4]));
+    }
+    let kind = FrameKind::from_code(h[5])?;
+    let len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    if len > max_frame {
+        return Err(WireError::Oversized { len, max: max_frame });
+    }
+    let corr = u64::from_le_bytes(h[12..20].try_into().expect("8-byte slice"));
+    Ok((kind, corr, len))
+}
+
+/// Write one frame (header + payload).
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: FrameKind,
+    corr: u64,
+    payload: &[u8],
+) -> io::Result<()> {
+    if payload.len() > u32::MAX as usize {
+        return Err(io::Error::new(io::ErrorKind::InvalidInput, "frame payload exceeds u32"));
+    }
+    w.write_all(&encode_header(kind, corr, payload.len() as u32))?;
+    w.write_all(payload)
+}
+
+/// Read one frame from a stream. `Ok(None)` is a clean close (EOF
+/// before the first header byte); EOF anywhere else is
+/// [`WireError::Truncated`]. The payload is only allocated after its
+/// declared length passes the `max_frame` bound.
+pub fn read_frame(r: &mut impl Read, max_frame: u32) -> Result<Option<Frame>, WireError> {
+    let mut h = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut h[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(WireError::Truncated { need: HEADER_LEN, have: got });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let (kind, corr, len) = parse_header(&h, max_frame)?;
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            WireError::Truncated { need: len as usize, have: 0 }
+        } else {
+            WireError::Io(e)
+        }
+    })?;
+    Ok(Some(Frame { kind, corr, payload }))
+}
+
+// ---------------------------------------------------------------------------
+// payload primitives
+// ---------------------------------------------------------------------------
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let have = self.buf.len() - self.pos;
+        if have < n {
+            return Err(WireError::Truncated { need: n, have });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2-byte slice")))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str16(&mut self) -> Result<String, WireError> {
+        let n = self.u16()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| WireError::BadPayload("string is not utf-8".into()))
+    }
+
+    /// The payload must be consumed exactly: trailing bytes mean the
+    /// sender and receiver disagree about the format.
+    fn done(&self) -> Result<(), WireError> {
+        let left = self.buf.len() - self.pos;
+        if left != 0 {
+            return Err(WireError::BadPayload(format!("{left} trailing bytes")));
+        }
+        Ok(())
+    }
+}
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::I8 => 1,
+        DType::I32 => 2,
+    }
+}
+
+fn dtype_from(c: u8) -> Result<DType, WireError> {
+    match c {
+        0 => Ok(DType::F32),
+        1 => Ok(DType::I8),
+        2 => Ok(DType::I32),
+        other => Err(WireError::BadPayload(format!("unknown dtype code {other}"))),
+    }
+}
+
+fn put_str16(out: &mut Vec<u8>, s: &str) {
+    // clamp to the u16 length field on a char boundary (error messages
+    // are the only strings that could plausibly come near the limit)
+    let mut n = s.len().min(u16::MAX as usize);
+    while !s.is_char_boundary(n) {
+        n -= 1;
+    }
+    out.extend_from_slice(&(n as u16).to_le_bytes());
+    out.extend_from_slice(&s.as_bytes()[..n]);
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &HostTensor) {
+    debug_assert!(t.shape.len() <= u8::MAX as usize, "tensor rank exceeds the wire format");
+    out.push(dtype_code(t.dtype));
+    out.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    out.extend_from_slice(&(t.data.len() as u32).to_le_bytes());
+    out.extend_from_slice(&t.data);
+}
+
+fn take_tensor(c: &mut Cur) -> Result<HostTensor, WireError> {
+    let dtype = dtype_from(c.u8()?)?;
+    let ndim = c.u8()? as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    let mut elems: usize = 1;
+    for _ in 0..ndim {
+        let d = c.u32()? as usize;
+        elems = elems
+            .checked_mul(d)
+            .ok_or_else(|| WireError::BadPayload("tensor shape overflows".into()))?;
+        shape.push(d);
+    }
+    let want = elems
+        .checked_mul(dtype.size())
+        .ok_or_else(|| WireError::BadPayload("tensor byte length overflows".into()))?;
+    let data_len = c.u32()? as usize;
+    if data_len != want {
+        return Err(WireError::BadPayload(format!(
+            "tensor {dtype:?}{shape:?} carries {data_len} bytes, expected {want}"
+        )));
+    }
+    // bounds-checked before allocation: the bytes must actually be here
+    let data = c.take(data_len)?.to_vec();
+    Ok(HostTensor { dtype, shape, data })
+}
+
+// ---------------------------------------------------------------------------
+// request / response codecs
+// ---------------------------------------------------------------------------
+
+/// Encode a request payload (frame it with [`write_frame`]).
+pub fn encode_request(req: &InferRequest) -> Vec<u8> {
+    let mut out = Vec::with_capacity(req.wire_bytes() + 64);
+    out.extend_from_slice(&req.id.to_le_bytes());
+    out.extend_from_slice(&req.deadline_ms.to_bits().to_le_bytes());
+    put_str16(&mut out, &req.model);
+    out.extend_from_slice(&(req.inputs.len() as u16).to_le_bytes());
+    for t in &req.inputs {
+        put_tensor(&mut out, t);
+    }
+    out
+}
+
+/// Decode a request payload. The arrival instant is stamped at decode
+/// time — queueing delay is measured from when the server saw the
+/// request, not from when the client built it.
+pub fn decode_request(payload: &[u8]) -> Result<InferRequest, WireError> {
+    let mut c = Cur { buf: payload, pos: 0 };
+    let id = c.u64()?;
+    let deadline_ms = c.f64()?;
+    if !deadline_ms.is_finite() {
+        return Err(WireError::BadPayload("non-finite deadline".into()));
+    }
+    let model = c.str16()?;
+    let n = c.u16()? as usize;
+    let mut inputs = Vec::with_capacity(n.min(64));
+    for _ in 0..n {
+        inputs.push(take_tensor(&mut c)?);
+    }
+    c.done()?;
+    Ok(InferRequest { id, model, inputs, arrival: Instant::now(), deadline_ms })
+}
+
+fn error_parts(e: &InferError) -> (u8, &str) {
+    match e {
+        InferError::UnknownModel(m) => (1, m),
+        InferError::BadRequest(s) => (2, s),
+        InferError::ExecFailed(s) => (3, s),
+        InferError::Shutdown => (4, ""),
+        InferError::Overloaded(s) => (5, s),
+    }
+}
+
+fn error_from(code: u8, msg: String) -> Result<InferError, WireError> {
+    Ok(match code {
+        1 => InferError::UnknownModel(msg),
+        2 => InferError::BadRequest(msg),
+        3 => InferError::ExecFailed(msg),
+        4 => InferError::Shutdown,
+        5 => InferError::Overloaded(msg),
+        other => return Err(WireError::BadPayload(format!("unknown error code {other}"))),
+    })
+}
+
+/// Encode a response payload (frame it with [`write_frame`]).
+pub fn encode_response(resp: &InferResponse) -> Vec<u8> {
+    let body: usize =
+        resp.outcome.as_ref().map(|ts| ts.iter().map(|t| t.data.len() + 32).sum()).unwrap_or(64);
+    let mut out = Vec::with_capacity(body + resp.model.len() + resp.variant.len() + 96);
+    out.extend_from_slice(&resp.id.to_le_bytes());
+    put_str16(&mut out, &resp.model);
+    put_str16(&mut out, &resp.variant);
+    put_str16(&mut out, &resp.backend);
+    out.extend_from_slice(&resp.queue_us.to_bits().to_le_bytes());
+    out.extend_from_slice(&resp.exec_us.to_bits().to_le_bytes());
+    out.extend_from_slice(&(resp.batch_size as u32).to_le_bytes());
+    match &resp.outcome {
+        Ok(outputs) => {
+            out.push(0);
+            out.extend_from_slice(&(outputs.len() as u16).to_le_bytes());
+            for t in outputs {
+                put_tensor(&mut out, t);
+            }
+        }
+        Err(e) => {
+            out.push(1);
+            let (code, msg) = error_parts(e);
+            out.push(code);
+            put_str16(&mut out, msg);
+        }
+    }
+    out
+}
+
+/// Decode a response payload.
+pub fn decode_response(payload: &[u8]) -> Result<InferResponse, WireError> {
+    let mut c = Cur { buf: payload, pos: 0 };
+    let id = c.u64()?;
+    let model = c.str16()?;
+    let variant = c.str16()?;
+    let backend = c.str16()?;
+    let queue_us = c.f64()?;
+    let exec_us = c.f64()?;
+    let batch_size = c.u32()? as usize;
+    let outcome = match c.u8()? {
+        0 => {
+            let n = c.u16()? as usize;
+            let mut outputs = Vec::with_capacity(n.min(64));
+            for _ in 0..n {
+                outputs.push(take_tensor(&mut c)?);
+            }
+            Ok(outputs)
+        }
+        1 => {
+            let code = c.u8()?;
+            let msg = c.str16()?;
+            Err(error_from(code, msg)?)
+        }
+        other => return Err(WireError::BadPayload(format!("unknown outcome tag {other}"))),
+    };
+    c.done()?;
+    Ok(InferResponse { id, model, outcome, queue_us, exec_us, batch_size, variant, backend })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp_ok() -> InferResponse {
+        InferResponse {
+            id: 3,
+            model: "recsys".into(),
+            outcome: Ok(vec![HostTensor::from_f32(&[1], &[0.5])]),
+            queue_us: 120.0,
+            exec_us: 480.0,
+            batch_size: 16,
+            variant: "recsys_fp32_b16".into(),
+            backend: "native/fp32".into(),
+        }
+    }
+
+    #[test]
+    fn header_round_trips() {
+        let h = encode_header(FrameKind::Response, u64::MAX, 77);
+        let (kind, corr, len) = parse_header(&h, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(kind, FrameKind::Response);
+        assert_eq!(corr, u64::MAX);
+        assert_eq!(len, 77);
+    }
+
+    #[test]
+    fn request_payload_round_trips() {
+        let req = InferRequest::new(
+            "m",
+            42,
+            vec![
+                HostTensor::from_f32(&[2, 3], &[1.0, -2.0, 3.5, 0.0, -0.25, 9.0]),
+                HostTensor::from_i32(&[4], &[-1, 0, 1, i32::MAX]),
+                HostTensor::from_i8(&[1, 2], &[-128, 127]),
+            ],
+            33.5,
+        );
+        let back = decode_request(&encode_request(&req)).unwrap();
+        assert_eq!(back.id, 42);
+        assert_eq!(back.model, "m");
+        assert_eq!(back.deadline_ms, 33.5);
+        assert_eq!(back.inputs.len(), 3);
+        for (a, b) in req.inputs.iter().zip(&back.inputs) {
+            assert_eq!(a.dtype, b.dtype);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn response_payload_round_trips() {
+        let r = resp_ok();
+        let back = decode_response(&encode_response(&r)).unwrap();
+        assert_eq!(back.id, 3);
+        assert_eq!(back.variant, r.variant);
+        assert_eq!(back.backend, r.backend);
+        assert_eq!(back.batch_size, 16);
+        assert_eq!(back.outcome.unwrap()[0].data, r.outcome.unwrap()[0].data);
+    }
+
+    #[test]
+    fn error_outcomes_round_trip() {
+        for err in [
+            InferError::UnknownModel("x".into()),
+            InferError::BadRequest("bad shape".into()),
+            InferError::ExecFailed("device gone".into()),
+            InferError::Shutdown,
+            InferError::Overloaded("queue depth 9 at bound 8".into()),
+        ] {
+            let mut r = resp_ok();
+            r.outcome = Err(err.clone());
+            let back = decode_response(&encode_response(&r)).unwrap();
+            assert_eq!(back.outcome.unwrap_err(), err);
+        }
+    }
+
+    #[test]
+    fn truncated_payload_is_typed_not_a_panic() {
+        let payload = encode_request(&InferRequest::new(
+            "m",
+            1,
+            vec![HostTensor::from_f32(&[3], &[1.0, 2.0, 3.0])],
+            10.0,
+        ));
+        for cut in 0..payload.len() {
+            let e = decode_request(&payload[..cut]).unwrap_err();
+            assert!(
+                matches!(e, WireError::Truncated { .. } | WireError::BadPayload(_)),
+                "cut {cut}: {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_and_bad_headers_rejected() {
+        let mut h = encode_header(FrameKind::Request, 0, 1000);
+        assert!(matches!(parse_header(&h, 999), Err(WireError::Oversized { .. })));
+        h[0] = b'X';
+        assert!(matches!(parse_header(&h, 1 << 20), Err(WireError::BadMagic(_))));
+        let mut h = encode_header(FrameKind::Request, 0, 0);
+        h[4] = 9;
+        assert!(matches!(parse_header(&h, 1 << 20), Err(WireError::BadVersion(9))));
+        let mut h = encode_header(FrameKind::Request, 0, 0);
+        h[5] = 7;
+        assert!(matches!(parse_header(&h, 1 << 20), Err(WireError::BadFrameKind(7))));
+    }
+
+    #[test]
+    fn frame_stream_round_trips_and_eof_is_clean() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Request, 5, b"abc").unwrap();
+        write_frame(&mut buf, FrameKind::Response, 6, b"").unwrap();
+        let mut r = buf.as_slice();
+        let f1 = read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!((f1.kind, f1.corr, f1.payload.as_slice()), (FrameKind::Request, 5, &b"abc"[..]));
+        let f2 = read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!((f2.kind, f2.corr, f2.payload.len()), (FrameKind::Response, 6, 0));
+        assert!(read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().is_none());
+    }
+
+    #[test]
+    fn long_strings_clamp_on_char_boundaries() {
+        let msg = "é".repeat(40_000); // 80k bytes of 2-byte chars
+        let mut r = resp_ok();
+        r.outcome = Err(InferError::ExecFailed(msg));
+        let back = decode_response(&encode_response(&r)).unwrap();
+        match back.outcome.unwrap_err() {
+            InferError::ExecFailed(s) => {
+                assert!(s.len() <= u16::MAX as usize);
+                assert!(s.chars().all(|ch| ch == 'é'));
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+}

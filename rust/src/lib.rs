@@ -7,8 +7,13 @@
 //! The crate is organized as the paper's system is: a model-generic
 //! serving frontend ([`coordinator`]) — a [`coordinator::ServingFrontend`]
 //! that dispatches heterogeneous request streams to per-model dynamic
-//! batchers, where each family (recommendation, CV, NMT) plugs in via the
-//! [`coordinator::ModelService`] trait ([`models::serving`]) — running
+//! batchers with §2.3 admission control, where each family
+//! (recommendation, CV, NMT) plugs in via the
+//! [`coordinator::ModelService`] trait ([`models::serving`]), reachable
+//! over the network through a versioned wire protocol
+//! ([`coordinator::wire`]), a TCP ingress
+//! ([`coordinator::ServingServer`]) and a pipelined client
+//! ([`coordinator::DcClient`], driven by `dcinfer loadgen`) — running
 //! AOT-compiled model artifacts through a backend-pluggable [`runtime`]
 //! (XLA/PJRT, or the pure-Rust FBGEMM-path interpreter at
 //! fp32/fp16/i8acc32/i8acc16 — [`runtime::ExecBackend`]),

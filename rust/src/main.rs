@@ -11,8 +11,11 @@
 //! dcinfer disagg                §4 tier bandwidth
 //! dcinfer serve [--requests N] [--executors E] [--qps Q] [--models recsys,nmt,cv]
 //!               [--backend pjrt|native] [--precision fp32|fp16|i8acc32|i8acc16]
-//!               [--threads T]
+//!               [--threads T] [--max-queue D]
+//!               [--listen ADDR] [--duration S]
 //!               [--sparse-shards N] [--sparse-cache ROWS] [--sparse-replication R]
+//! dcinfer loadgen --connect ADDR [--qps Q] [--requests N]
+//!                 [--mix recsys:8,cv:1,nmt:1] [--deadline-ms D] [--seed S]
 //! ```
 //!
 //! `--sparse-shards` dis-aggregates the embedding tables of native-backend
@@ -23,16 +26,34 @@
 //! backend (0 = all cores): the §3.1 cores-per-op vs executors trade —
 //! more `--executors` maximizes throughput, more `--threads` cuts
 //! per-batch latency at small batch.
+//!
+//! `serve --listen ADDR` swaps the self-driving synthetic loop for the
+//! network serving plane: a TCP server speaking the versioned wire
+//! protocol, with §2.3 admission control (`--max-queue` bounds each
+//! lane's depth; over it, requests are shed as `Overloaded` instead of
+//! queueing past their deadline). `loadgen` is the matching open-loop
+//! client: Poisson arrivals at `--qps` across a weighted `--mix` of
+//! model families, reporting p50/p99/p999 latency, goodput (answered
+//! within deadline) and the shed rate.
+//!
+//! Without `artifacts/manifest.json` both subcommands fall back to the
+//! self-synthesized fixture (native backend), so a loopback
+//! serve/loadgen pair runs out of the box.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use dcinfer::coordinator::{disagg_bandwidth, FrontendConfig, ModelService, ServingFrontend};
+use dcinfer::coordinator::{
+    disagg_bandwidth, ClientResponse, DcClient, FrontendConfig, InferError, ModelService,
+    ServerConfig, ServingFrontend, ServingServer,
+};
 use dcinfer::models::{CvService, NmtService, RecSysService};
 use dcinfer::runtime::Manifest;
+use dcinfer::util::stats::Samples;
 use dcinfer::fleet::{demand_series, simulate_fleet, FleetConfig};
 use dcinfer::graph::{mine_frequent_subgraphs, rank_opportunities, Net};
 use dcinfer::models::{representative_zoo, ModelDesc};
@@ -75,9 +96,12 @@ fn main() -> Result<()> {
         "disagg" => cmd_disagg(),
         "codesign" => cmd_codesign(),
         "serve" => cmd_serve(&flags),
+        "loadgen" => cmd_loadgen(&flags),
         _ => {
             println!("dcinfer — data-center DL inference characterization & serving");
-            println!("subcommands: characterize demand roofline fleet shapes mine disagg codesign serve");
+            println!(
+                "subcommands: characterize demand roofline fleet shapes mine disagg codesign serve loadgen"
+            );
             Ok(())
         }
     }
@@ -267,14 +291,52 @@ fn cmd_codesign() -> Result<()> {
     Ok(())
 }
 
-/// Run the serving frontend under synthetic (optionally mixed-model) load.
+/// Artifacts dir for the serving subcommands: `artifacts/` when built
+/// (`make artifacts`), else a self-synthesized fixture in a temp dir so
+/// `serve`/`loadgen` run out of the box. Returns `(dir, is_fixture)`.
+fn artifacts_or_fixture() -> Result<(PathBuf, bool)> {
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        return Ok((dir, false));
+    }
+    let tmp = dcinfer::runtime::synthetic_artifacts_dir("cli")?;
+    println!(
+        "(no artifacts/manifest.json; using the self-synthesized fixture at {} —\n run `make artifacts` for the real model families)\n",
+        tmp.display()
+    );
+    Ok((tmp, true))
+}
+
+/// Build one `ModelService` per comma-separated family name.
+fn services_for(manifest: &Manifest, models: &str) -> Result<Vec<Arc<dyn ModelService>>> {
+    let mut services: Vec<Arc<dyn ModelService>> = Vec::new();
+    for name in models.split(',').filter(|s| !s.is_empty()) {
+        let svc: Arc<dyn ModelService> = match name {
+            "recsys" => Arc::new(RecSysService::from_manifest(manifest)?),
+            "cv" => Arc::new(CvService::from_manifest(manifest)?),
+            "nmt" => Arc::new(NmtService::from_manifest(manifest)?),
+            other => anyhow::bail!("unknown model {other} (expected recsys, cv, nmt)"),
+        };
+        services.push(svc);
+    }
+    Ok(services)
+}
+
+/// Run the serving frontend: self-driving synthetic load by default, or
+/// the network serving plane with `--listen ADDR`.
 fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let n: u64 = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(500);
     let executors = flags.get("executors").and_then(|v| v.parse().ok()).unwrap_or(2);
     let qps: f64 = flags.get("qps").and_then(|v| v.parse().ok()).unwrap_or(2000.0);
     let models = flags.get("models").cloned().unwrap_or_else(|| "recsys".to_string());
-    // `--precision` alone implies the native backend (pjrt is fp32-only)
+    let (art_dir, fixture) = artifacts_or_fixture()?;
+    // `--precision` alone implies the native backend (pjrt is fp32-only);
+    // the fixture carries native op programs but no compiled HLO, so it
+    // defaults to native too
     let mut backend = match (flags.get("backend"), flags.get("precision")) {
+        (None, None) if fixture => {
+            dcinfer::runtime::BackendSpec::native(dcinfer::runtime::Precision::Fp32)
+        }
         (None, None) => dcinfer::runtime::BackendSpec::default(),
         (b, p) => dcinfer::runtime::BackendSpec::from_cli(
             b.map(|s| s.as_str()).unwrap_or("native"),
@@ -316,8 +378,12 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             })
         }
     };
+    let mode = match flags.get("listen") {
+        Some(addr) => format!("listening on {addr}"),
+        None => format!("{n} requests @ {qps} offered qps"),
+    };
     println!(
-        "== serving frontend: {n} requests @ {qps} offered qps, {executors} executors, models [{models}], backend {} ==\n",
+        "== serving frontend: {mode}, {executors} executors, models [{models}], backend {} ==\n",
         backend.label()
     );
     if let Some(st) = &sparse_tier {
@@ -329,41 +395,34 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
 
     // build one service per requested family; each knows its artifact
     // prefix and how to synthesize production-like requests
-    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
-    let mut services: Vec<Arc<dyn ModelService>> = Vec::new();
-    for name in models.split(',').filter(|s| !s.is_empty()) {
-        let svc: Arc<dyn ModelService> = match name {
-            "recsys" => Arc::new(RecSysService::from_manifest(&manifest)?),
-            "cv" => Arc::new(CvService::from_manifest(&manifest)?),
-            "nmt" => Arc::new(NmtService::from_manifest(&manifest)?),
-            other => anyhow::bail!("unknown model {other} (expected recsys, cv, nmt)"),
-        };
-        services.push(svc);
-    }
+    let manifest = Manifest::load(&art_dir)?;
+    let services = services_for(&manifest, &models)?;
 
-    let frontend = ServingFrontend::start(
-        FrontendConfig { executors, backend, sparse_tier, ..Default::default() },
-        services,
-    )?;
-    let lanes: Vec<Arc<dyn ModelService>> =
-        frontend.models().iter().map(|m| frontend.service(m).unwrap().clone()).collect();
-    let mut rng = Pcg32::seeded(42);
-    let gap = std::time::Duration::from_secs_f64(1.0 / qps);
-    let mut receivers = Vec::with_capacity(n as usize);
-    let t0 = Instant::now();
-    for i in 0..n {
-        let mut req = lanes[i as usize % lanes.len()].synth_request(i, &mut rng, 0.0);
-        req.arrival = Instant::now();
-        receivers.push(frontend.submit(req)?);
-        std::thread::sleep(gap);
+    let mut cfg = FrontendConfig {
+        artifacts_dir: art_dir.clone(),
+        executors,
+        backend,
+        sparse_tier,
+        ..Default::default()
+    };
+    if let Some(mq) = flags.get("max-queue") {
+        cfg.max_queue_depth =
+            mq.parse().map_err(|_| anyhow::anyhow!("invalid --max-queue value {mq:?}"))?;
     }
-    let mut failed = 0u64;
-    for rx in receivers {
-        if !rx.recv()?.is_ok() {
-            failed += 1;
+    let frontend = Arc::new(ServingFrontend::start(cfg, services)?);
+
+    let (wall, submitted, failed) = match flags.get("listen") {
+        Some(addr) => {
+            let duration: f64 = match flags.get("duration") {
+                None => 0.0,
+                Some(v) => {
+                    v.parse().map_err(|_| anyhow::anyhow!("invalid --duration value {v:?}"))?
+                }
+            };
+            serve_listen(&frontend, addr, duration)?
         }
-    }
-    let wall = t0.elapsed().as_secs_f64();
+        None => serve_selfdrive(&frontend, n, qps)?,
+    };
     for (model, snap) in frontend.snapshot_all() {
         println!("\n--- {model} ---");
         snap.print();
@@ -391,7 +450,272 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             );
         }
     }
-    println!("\nwall time {wall:.2}s, achieved {:.0} req/s end-to-end, {failed} failed", n as f64 / wall);
+    println!(
+        "\nwall time {wall:.2}s, achieved {:.0} req/s end-to-end, {failed} failed",
+        submitted as f64 / wall.max(1e-9)
+    );
     frontend.shutdown();
+    if fixture {
+        let _ = std::fs::remove_dir_all(&art_dir);
+    }
+    Ok(())
+}
+
+/// The self-driving synthetic loop: one process plays both client and
+/// server. Sheds (admission control under `--max-queue`) are counted,
+/// not fatal — that's the load-shedding contract.
+fn serve_selfdrive(
+    frontend: &Arc<ServingFrontend>,
+    n: u64,
+    qps: f64,
+) -> Result<(f64, u64, u64)> {
+    let lanes: Vec<Arc<dyn ModelService>> =
+        frontend.models().iter().map(|m| frontend.service(m).unwrap().clone()).collect();
+    let mut rng = Pcg32::seeded(42);
+    let gap = Duration::from_secs_f64(1.0 / qps);
+    let mut receivers = Vec::with_capacity(n as usize);
+    let mut shed = 0u64;
+    let t0 = Instant::now();
+    for i in 0..n {
+        let mut req = lanes[i as usize % lanes.len()].synth_request(i, &mut rng, 0.0);
+        req.arrival = Instant::now();
+        match frontend.submit(req) {
+            Ok(rx) => receivers.push(rx),
+            Err(e) => match e.downcast_ref::<InferError>() {
+                Some(InferError::Overloaded(_)) => shed += 1,
+                _ => return Err(e),
+            },
+        }
+        std::thread::sleep(gap);
+    }
+    let mut failed = 0u64;
+    for rx in receivers {
+        if !rx.recv()?.is_ok() {
+            failed += 1;
+        }
+    }
+    if shed > 0 {
+        println!("{shed} requests shed by admission control");
+    }
+    Ok((t0.elapsed().as_secs_f64(), n, failed))
+}
+
+/// The network mode: a wire-protocol TCP server over the frontend,
+/// reporting per-model serving stats every few seconds until
+/// `duration_s` elapses (0 = until killed), then draining gracefully.
+fn serve_listen(
+    frontend: &Arc<ServingFrontend>,
+    addr: &str,
+    duration_s: f64,
+) -> Result<(f64, u64, u64)> {
+    let server = ServingServer::bind(frontend.clone(), addr, ServerConfig::default())?;
+    println!(
+        "listening on {} ({})",
+        server.local_addr(),
+        if duration_s > 0.0 { format!("for {duration_s:.0}s") } else { "until killed".to_string() }
+    );
+    let t0 = Instant::now();
+    let tick = Duration::from_secs(5);
+    loop {
+        let elapsed = t0.elapsed().as_secs_f64();
+        if duration_s > 0.0 {
+            let remaining = duration_s - elapsed;
+            if remaining <= 0.0 {
+                break;
+            }
+            std::thread::sleep(tick.min(Duration::from_secs_f64(remaining)));
+        } else {
+            std::thread::sleep(tick);
+        }
+        for (model, snap) in frontend.snapshot_all() {
+            println!(
+                "[{:>5.0}s] {model}: served {} shed {} failed {} depth {} p99 {:.1} ms",
+                t0.elapsed().as_secs_f64(),
+                snap.served,
+                snap.shed,
+                snap.failed,
+                snap.queue_depth,
+                snap.total_p99_us / 1e3
+            );
+        }
+    }
+    println!("\ndraining {} connections...", server.connections_accepted());
+    server.shutdown();
+    let wall = t0.elapsed().as_secs_f64();
+    let (mut served, mut failed) = (0u64, 0u64);
+    for (_, snap) in frontend.snapshot_all() {
+        served += snap.served;
+        failed += snap.failed;
+    }
+    Ok((wall, served + failed, failed))
+}
+
+/// Connect, retrying while the server is still coming up (a loadgen
+/// racing `serve --listen` startup — e.g. the CI loopback smoke —
+/// should wait, not fail on the first refused connection).
+fn connect_with_retry(addr: &str, budget: Duration) -> Result<DcClient> {
+    let t0 = Instant::now();
+    loop {
+        match DcClient::connect(addr) {
+            Ok(c) => return Ok(c),
+            Err(e) if t0.elapsed() < budget => {
+                println!("waiting for {addr} ({e:#})");
+                std::thread::sleep(Duration::from_millis(500));
+            }
+            Err(e) => {
+                return Err(e.context(format!(
+                    "connecting to {addr} (is `dcinfer serve --listen` up?)"
+                )))
+            }
+        }
+    }
+}
+
+/// Open-loop load generator against a remote `serve --listen`: Poisson
+/// arrivals at `--qps` over a weighted `--mix` of model families,
+/// reporting latency percentiles, goodput and the shed rate.
+fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
+    let addr = flags.get("connect").context("--connect ADDR is required")?;
+    let qps: f64 = flags.get("qps").and_then(|v| v.parse().ok()).unwrap_or(1000.0);
+    anyhow::ensure!(qps > 0.0, "--qps must be positive");
+    let n: u64 = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let mix = flags.get("mix").cloned().unwrap_or_else(|| "recsys:1".to_string());
+    let seed: u64 = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42);
+    let deadline_override: Option<f64> = match flags.get("deadline-ms") {
+        None => None,
+        Some(v) => Some(
+            v.parse().map_err(|_| anyhow::anyhow!("invalid --deadline-ms value {v:?}"))?,
+        ),
+    };
+
+    // request synthesis needs the families' dimensions — they must
+    // describe the same artifact set the server loaded
+    let (art_dir, fixture) = artifacts_or_fixture()?;
+    let manifest = Manifest::load(&art_dir)?;
+    let mut arms: Vec<(Arc<dyn ModelService>, f64)> = Vec::new();
+    for part in mix.split(',').filter(|s| !s.is_empty()) {
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => {
+                let w: f64 = w
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("invalid mix weight in {part:?}"))?;
+                (n, w)
+            }
+            None => (part, 1.0),
+        };
+        anyhow::ensure!(weight > 0.0, "mix weight in {part:?} must be positive");
+        anyhow::ensure!(!name.is_empty(), "empty model name in mix entry {part:?}");
+        let svc = services_for(&manifest, name)?.remove(0);
+        anyhow::ensure!(
+            !arms.iter().any(|(s, _)| s.model_id() == svc.model_id()),
+            "duplicate mix entry for {name}"
+        );
+        arms.push((svc, weight));
+    }
+    anyhow::ensure!(!arms.is_empty(), "--mix selected no models");
+    let weights: Vec<f64> = arms.iter().map(|(_, w)| *w).collect();
+
+    let client = connect_with_retry(addr, Duration::from_secs(30))?;
+    println!(
+        "== loadgen: {n} requests @ {qps} qps (open-loop Poisson) against {addr}, mix [{mix}] ==\n"
+    );
+
+    // open loop: the arrival schedule never waits on responses — late
+    // responses pile up in flight exactly like real overload
+    let mut rng = Pcg32::seeded(seed);
+    let mut pending: Vec<(String, std::sync::mpsc::Receiver<ClientResponse>)> =
+        Vec::with_capacity(n as usize);
+    let mut send_errors = 0u64;
+    let t0 = Instant::now();
+    let mut next_at = 0.0f64;
+    for i in 0..n {
+        next_at += rng.exponential(qps);
+        let now = t0.elapsed().as_secs_f64();
+        if next_at > now {
+            std::thread::sleep(Duration::from_secs_f64(next_at - now));
+        }
+        let svc = &arms[rng.weighted_choice(&weights)].0;
+        let deadline =
+            deadline_override.unwrap_or_else(|| svc.deadline_class().default_deadline_ms());
+        let req = svc.synth_request(i, &mut rng, deadline);
+        match client.submit(&req) {
+            Ok(rx) => pending.push((req.model.clone(), rx)),
+            Err(_) => send_errors += 1,
+        }
+    }
+    let send_wall = t0.elapsed().as_secs_f64();
+
+    #[derive(Default)]
+    struct Agg {
+        sent: u64,
+        ok: u64,
+        shed: u64,
+        errs: u64,
+        good: u64,
+        rtt_ms: Samples,
+    }
+    let mut per_model: BTreeMap<String, Agg> = BTreeMap::new();
+    for (model, rx) in pending {
+        let agg = per_model.entry(model).or_default();
+        agg.sent += 1;
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(cr) => {
+                if cr.shed() {
+                    agg.shed += 1;
+                } else if cr.resp.is_ok() {
+                    agg.ok += 1;
+                    agg.rtt_ms.push(cr.rtt_us / 1e3);
+                    if cr.good() {
+                        agg.good += 1;
+                    }
+                } else {
+                    agg.errs += 1;
+                }
+            }
+            Err(_) => agg.errs += 1,
+        }
+    }
+    client.close();
+
+    let mut table = dcinfer::util::bench::Table::new(&[
+        "model", "sent", "ok", "shed", "err", "goodput", "p50 ms", "p99 ms", "p999 ms",
+    ]);
+    let mut tot = Agg::default();
+    for (model, agg) in per_model.iter_mut() {
+        table.row(&[
+            model.clone(),
+            agg.sent.to_string(),
+            agg.ok.to_string(),
+            agg.shed.to_string(),
+            agg.errs.to_string(),
+            format!("{:.1}%", agg.good as f64 / agg.sent.max(1) as f64 * 100.0),
+            format!("{:.2}", agg.rtt_ms.p50()),
+            format!("{:.2}", agg.rtt_ms.p99()),
+            format!("{:.2}", agg.rtt_ms.p999()),
+        ]);
+        tot.sent += agg.sent;
+        tot.ok += agg.ok;
+        tot.shed += agg.shed;
+        tot.errs += agg.errs;
+        tot.good += agg.good;
+    }
+    table.print();
+    println!(
+        "\noffered {qps:.0} qps, achieved send rate {:.0} qps over {send_wall:.2}s",
+        n as f64 / send_wall.max(1e-9)
+    );
+    println!(
+        "overall: {}/{} ok, goodput {:.1}%, shed rate {:.1}%, {} errors, {} send failures",
+        tot.ok,
+        tot.sent,
+        tot.good as f64 / tot.sent.max(1) as f64 * 100.0,
+        tot.shed as f64 / tot.sent.max(1) as f64 * 100.0,
+        tot.errs,
+        send_errors
+    );
+    if fixture {
+        let _ = std::fs::remove_dir_all(&art_dir);
+    }
+    anyhow::ensure!(tot.ok > 0, "no successful responses — is the server serving this mix?");
     Ok(())
 }

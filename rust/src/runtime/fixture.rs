@@ -1,6 +1,6 @@
-//! Self-synthesized artifacts fixture: a tiny recsys-lite + cv-lite
-//! manifest with native op programs and DCIW weights, written from pure
-//! Rust — no Python/JAX, no `make artifacts`, no PJRT.
+//! Self-synthesized artifacts fixture: a tiny recsys-lite + cv-lite +
+//! gru-lite manifest with native op programs and DCIW weights, written
+//! from pure Rust — no Python/JAX, no `make artifacts`, no PJRT.
 //!
 //! The backend-parity tests and the perf benches (`ablation_alloc`,
 //! `e2e_serving` when real artifacts are absent) share this fixture so
@@ -41,10 +41,22 @@ const CV_PROG: &str = r#"[
   {"op": "fc", "out": "logits", "in": "f", "w": "fc_w", "b": "fc_b", "act": "none"}
 ]"#;
 
+// gru-lite decode step: h_new = tanh(Wx·x + Wh·h); logits = Wo·h_new —
+// the seq2seq inner loop's shape (two state tensors in, vocab logits +
+// new state out), small enough to stay fixture-fast
+const GRU_PROG: &str = r#"[
+  {"op": "fc", "out": "hx", "in": "x", "w": "gx_w", "b": "gx_b", "act": "none"},
+  {"op": "fc", "out": "hh", "in": "h", "w": "gh_w", "act": "none"},
+  {"op": "binary", "fn": "add", "out": "pre", "a": "hx", "b": "hh"},
+  {"op": "unary", "fn": "tanh", "out": "h_new", "in": "pre"},
+  {"op": "fc", "out": "logits", "in": "h_new", "w": "out_w", "b": "out_b", "act": "none"}
+]"#;
+
 /// Write the fixture into `dir`: recsys-lite (dense 8, 2 tables of
-/// 64x8, pool 4; batch variants 1 and 4) and cv-lite (1x8x8 -> 4
-/// classes; batch variants 1 and 2), with model configs the
-/// `RecSysService`/`CvService` constructors understand.
+/// 64x8, pool 4; batch variants 1 and 4), cv-lite (1x8x8 -> 4
+/// classes; batch variants 1 and 2) and gru-lite (hidden 8, vocab 16
+/// decode step; batch variants 1 and 4), with model configs the
+/// `RecSysService`/`CvService`/`NmtService` constructors understand.
 pub fn write_synthetic_artifacts(dir: &Path) -> Result<()> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating fixture dir {}", dir.display()))?;
@@ -72,6 +84,14 @@ pub fn write_synthetic_artifacts(dir: &Path) -> Result<()> {
         tensor(&mut rng, "fc_b", &[4], 0.1),
     ];
     write_weights_file(&dir.join("cv.weights.bin"), &cv)?;
+    let gru = vec![
+        tensor(&mut rng, "gx_w", &[8, 8], 0.3),
+        tensor(&mut rng, "gx_b", &[8], 0.1),
+        tensor(&mut rng, "gh_w", &[8, 8], 0.3),
+        tensor(&mut rng, "out_w", &[16, 8], 0.2),
+        tensor(&mut rng, "out_b", &[16], 0.1),
+    ];
+    write_weights_file(&dir.join("gru.weights.bin"), &gru)?;
 
     let mut artifacts = Vec::new();
     for b in [1usize, 4] {
@@ -101,12 +121,31 @@ pub fn write_synthetic_artifacts(dir: &Path) -> Result<()> {
             }}"#
         ));
     }
+    for b in [1usize, 4] {
+        artifacts.push(format!(
+            r#""gru_step_b{b}": {{
+              "hlo": "gru_b{b}.hlo.txt", "model": "gru",
+              "weights": "gru.weights.bin", "weight_params": [],
+              "precision": "fp32", "program": {GRU_PROG},
+              "inputs": [
+                {{"name": "x", "dtype": "f32", "shape": [{b}, 8]}},
+                {{"name": "h", "dtype": "f32", "shape": [{b}, 8]}}
+              ],
+              "outputs": [
+                {{"name": "logits", "dtype": "f32", "shape": [{b}, 16]}},
+                {{"name": "h_new", "dtype": "f32", "shape": [{b}, 8]}}
+              ],
+              "batch": {b}
+            }}"#
+        ));
+    }
     let manifest = format!(
         r#"{{
           "version": 1,
           "models": {{
             "recsys": {{"dense_dim": 8, "emb_dim": 8, "n_tables": 2, "pool": 4, "rows_per_table": 64}},
-            "cv": {{"in_hw": 8, "channels": 1, "classes": 4}}
+            "cv": {{"in_hw": 8, "channels": 1, "classes": 4}},
+            "gru": {{"hidden": 8, "vocab": 16}}
           }},
           "artifacts": {{ {} }}
         }}"#,
@@ -152,6 +191,29 @@ mod tests {
             .unwrap();
         let p = out[0].as_f32().unwrap()[0];
         assert!(p > 0.0 && p < 1.0, "prob {p}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gru_lite_decode_step_runs_and_matches_hand_math() {
+        let dir = synthetic_artifacts_dir("selftest_gru").unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let art = NativeBackend::new(Precision::Fp32).load(&manifest, "gru_step_b1").unwrap();
+        let mut rng = Pcg32::seeded(5);
+        let mut x = vec![0f32; 8];
+        let mut h = vec![0f32; 8];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        rng.fill_normal(&mut h, 0.0, 0.5);
+        let out = art
+            .run(&[HostTensor::from_f32(&[1, 8], &x), HostTensor::from_f32(&[1, 8], &h)])
+            .unwrap();
+        assert_eq!(out[0].shape, vec![1, 16], "vocab logits");
+        assert_eq!(out[1].shape, vec![1, 8], "new decoder state");
+        // the state output is tanh-bounded; the logits are not constant
+        let h_new = out[1].as_f32().unwrap();
+        assert!(h_new.iter().all(|v| v.abs() <= 1.0));
+        let logits = out[0].as_f32().unwrap();
+        assert!(logits.iter().any(|v| v.abs() > 1e-6));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -81,6 +81,10 @@ impl Samples {
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
     }
+
+    pub fn p999(&mut self) -> f64 {
+        self.percentile(99.9)
+    }
 }
 
 /// Running scalar statistics without sample storage (Welford).
@@ -202,6 +206,7 @@ mod tests {
         assert_eq!(s.percentile(0.0), 1.0);
         assert_eq!(s.percentile(100.0), 5.0);
         assert!((s.percentile(25.0) - 2.0).abs() < 1e-9);
+        assert!(s.p999() >= s.p99());
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! Wire-format seal: property-style round trips over every dtype and
+//! odd shapes, and rejection (typed errors, never panics) of
+//! truncated, oversized, bad-version and garbage frames — the decode
+//! surface a network server exposes to arbitrary peers.
+
+use dcinfer::coordinator::wire::{self, FrameKind, WireError};
+use dcinfer::coordinator::{InferError, InferRequest, InferResponse};
+use dcinfer::runtime::{DType, HostTensor};
+use dcinfer::util::rng::Pcg32;
+
+fn random_tensor(rng: &mut Pcg32, dtype: DType, shape: &[usize]) -> HostTensor {
+    let count: usize = shape.iter().product();
+    match dtype {
+        DType::F32 => {
+            let mut vals = vec![0f32; count];
+            rng.fill_normal(&mut vals, 0.0, 2.0);
+            HostTensor::from_f32(shape, &vals)
+        }
+        DType::I32 => {
+            let vals: Vec<i32> = (0..count).map(|_| rng.next_u32() as i32).collect();
+            HostTensor::from_i32(shape, &vals)
+        }
+        DType::I8 => {
+            let vals: Vec<i8> = (0..count).map(|_| rng.next_u32() as i8).collect();
+            HostTensor::from_i8(shape, &vals)
+        }
+    }
+}
+
+fn assert_tensors_eq(a: &HostTensor, b: &HostTensor) {
+    assert_eq!(a.dtype, b.dtype);
+    assert_eq!(a.shape, b.shape);
+    assert_eq!(a.data, b.data);
+}
+
+#[test]
+fn requests_round_trip_over_all_dtypes_and_odd_shapes() {
+    let mut rng = Pcg32::seeded(11);
+    // rank 0 through rank 4, unit dims, zero dims, non-round sizes
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![],
+        vec![1],
+        vec![7],
+        vec![3, 1, 7],
+        vec![2, 0, 4], // zero elements, still a legal tensor
+        vec![1, 1, 1, 1],
+        vec![5, 3],
+    ];
+    for dtype in [DType::F32, DType::I8, DType::I32] {
+        for shape in &shapes {
+            for deadline in [0.25f64, 100.0, 10_000.0] {
+                let req = InferRequest::new(
+                    "some_model",
+                    rng.next_u64(),
+                    vec![
+                        random_tensor(&mut rng, dtype, shape),
+                        random_tensor(&mut rng, DType::F32, &[2, 3]),
+                    ],
+                    deadline,
+                );
+                let back = wire::decode_request(&wire::encode_request(&req)).unwrap();
+                assert_eq!(back.id, req.id);
+                assert_eq!(back.model, req.model);
+                assert_eq!(back.deadline_ms, req.deadline_ms);
+                assert_eq!(back.inputs.len(), 2);
+                for (a, b) in req.inputs.iter().zip(&back.inputs) {
+                    assert_tensors_eq(a, b);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn requests_with_no_inputs_and_empty_model_round_trip() {
+    let req = InferRequest::new("", 0, vec![], 1.0);
+    let back = wire::decode_request(&wire::encode_request(&req)).unwrap();
+    assert_eq!(back.model, "");
+    assert!(back.inputs.is_empty());
+}
+
+#[test]
+fn responses_round_trip_ok_and_all_error_variants() {
+    let mut rng = Pcg32::seeded(23);
+    let ok = InferResponse {
+        id: 99,
+        model: "nmt".into(),
+        outcome: Ok(vec![
+            random_tensor(&mut rng, DType::F32, &[16]),
+            random_tensor(&mut rng, DType::F32, &[8]),
+        ]),
+        queue_us: 321.5,
+        exec_us: 1234.25,
+        batch_size: 4,
+        variant: "gru_step_b4".into(),
+        backend: "native/fp32".into(),
+    };
+    let back = wire::decode_response(&wire::encode_response(&ok)).unwrap();
+    assert_eq!(back.id, 99);
+    assert_eq!(back.model, "nmt");
+    assert_eq!(back.queue_us, 321.5);
+    assert_eq!(back.exec_us, 1234.25);
+    assert_eq!(back.batch_size, 4);
+    assert_eq!(back.variant, "gru_step_b4");
+    assert_eq!(back.backend, "native/fp32");
+    let (want, got) = (ok.outcome.as_ref().unwrap(), back.outcome.as_ref().unwrap());
+    assert_eq!(want.len(), got.len());
+    for (a, b) in want.iter().zip(got) {
+        assert_tensors_eq(a, b);
+    }
+
+    for err in [
+        InferError::UnknownModel("ghost".into()),
+        InferError::BadRequest("wrong shape".into()),
+        InferError::ExecFailed("device fell over".into()),
+        InferError::Shutdown,
+        InferError::Overloaded("queue depth 128 at bound 128".into()),
+    ] {
+        let mut r = ok.clone();
+        r.outcome = Err(err.clone());
+        let back = wire::decode_response(&wire::encode_response(&r)).unwrap();
+        assert_eq!(back.outcome.unwrap_err(), err);
+    }
+}
+
+#[test]
+fn every_truncation_of_a_request_payload_is_a_typed_error() {
+    let mut rng = Pcg32::seeded(37);
+    let req = InferRequest::new(
+        "recsys",
+        7,
+        vec![
+            random_tensor(&mut rng, DType::F32, &[8]),
+            random_tensor(&mut rng, DType::I32, &[2, 4]),
+        ],
+        50.0,
+    );
+    let payload = wire::encode_request(&req);
+    for cut in 0..payload.len() {
+        let err = wire::decode_request(&payload[..cut])
+            .expect_err("every strict prefix must be rejected");
+        assert!(
+            matches!(err, WireError::Truncated { .. } | WireError::BadPayload(_)),
+            "cut {cut}: unexpected {err}"
+        );
+    }
+}
+
+#[test]
+fn every_truncation_of_a_response_payload_is_a_typed_error() {
+    let mut rng = Pcg32::seeded(41);
+    let resp = InferResponse {
+        id: 1,
+        model: "cv".into(),
+        outcome: Ok(vec![random_tensor(&mut rng, DType::F32, &[4])]),
+        queue_us: 1.0,
+        exec_us: 2.0,
+        batch_size: 2,
+        variant: "cv_tiny_b2".into(),
+        backend: "native/fp32".into(),
+    };
+    let payload = wire::encode_response(&resp);
+    for cut in 0..payload.len() {
+        assert!(
+            wire::decode_response(&payload[..cut]).is_err(),
+            "cut {cut} decoded"
+        );
+    }
+}
+
+#[test]
+fn trailing_bytes_are_rejected() {
+    let req = InferRequest::new("m", 1, vec![], 10.0);
+    let mut payload = wire::encode_request(&req);
+    payload.push(0);
+    let err = wire::decode_request(&payload).unwrap_err();
+    assert!(matches!(err, WireError::BadPayload(_)), "{err}");
+}
+
+#[test]
+fn tensor_length_lies_are_rejected() {
+    let req = InferRequest::new(
+        "m",
+        1,
+        vec![HostTensor::from_f32(&[2], &[1.0, 2.0])],
+        10.0,
+    );
+    let mut payload = wire::encode_request(&req);
+    // the tensor sits after id(8) + deadline(8) + str16("m")(3) +
+    // n_inputs(2); its layout is dtype(1) ndim(1) dim(4) data_len(4)
+    let tensor_at = 8 + 8 + 3 + 2;
+    let data_len_at = tensor_at + 1 + 1 + 4;
+    // claim 12 bytes for a [2] f32 tensor (8 expected)
+    payload[data_len_at..data_len_at + 4].copy_from_slice(&12u32.to_le_bytes());
+    let err = wire::decode_request(&payload).unwrap_err();
+    assert!(matches!(err, WireError::BadPayload(_)), "{err}");
+
+    // and an unknown dtype code
+    let mut payload = wire::encode_request(&req);
+    payload[tensor_at] = 200;
+    let err = wire::decode_request(&payload).unwrap_err();
+    assert!(matches!(err, WireError::BadPayload(_)), "{err}");
+}
+
+#[test]
+fn non_finite_deadlines_are_rejected() {
+    let mut req = InferRequest::new("m", 1, vec![], 10.0);
+    req.deadline_ms = f64::NAN;
+    assert!(wire::decode_request(&wire::encode_request(&req)).is_err());
+    req.deadline_ms = f64::INFINITY;
+    assert!(wire::decode_request(&wire::encode_request(&req)).is_err());
+}
+
+#[test]
+fn framed_stream_reads_back_and_rejects_corruption() {
+    let req = InferRequest::new("m", 5, vec![HostTensor::from_i8(&[3], &[1, 2, 3])], 20.0);
+    let payload = wire::encode_request(&req);
+    let mut buf = Vec::new();
+    wire::write_frame(&mut buf, FrameKind::Request, 0xDEAD_BEEF, &payload).unwrap();
+
+    // clean round trip
+    let frame = wire::read_frame(&mut buf.as_slice(), wire::DEFAULT_MAX_FRAME).unwrap().unwrap();
+    assert_eq!(frame.kind, FrameKind::Request);
+    assert_eq!(frame.corr, 0xDEAD_BEEF);
+    assert_eq!(wire::decode_request(&frame.payload).unwrap().id, 5);
+
+    // truncated at every point inside the frame: typed error, no panic
+    for cut in 1..buf.len() {
+        let err = wire::read_frame(&mut &buf[..cut], wire::DEFAULT_MAX_FRAME)
+            .expect_err("truncated frame accepted");
+        assert!(
+            matches!(err, WireError::Truncated { .. }),
+            "cut {cut}: unexpected {err}"
+        );
+    }
+    // EOF exactly between frames is a clean close
+    assert!(wire::read_frame(&mut &buf[..0], wire::DEFAULT_MAX_FRAME).unwrap().is_none());
+
+    // corrupt magic / version / kind
+    let mut bad = buf.clone();
+    bad[0] = b'x';
+    assert!(matches!(
+        wire::read_frame(&mut bad.as_slice(), wire::DEFAULT_MAX_FRAME),
+        Err(WireError::BadMagic(_))
+    ));
+    let mut bad = buf.clone();
+    bad[4] = 42;
+    assert!(matches!(
+        wire::read_frame(&mut bad.as_slice(), wire::DEFAULT_MAX_FRAME),
+        Err(WireError::BadVersion(42))
+    ));
+    let mut bad = buf.clone();
+    bad[5] = 9;
+    assert!(matches!(
+        wire::read_frame(&mut bad.as_slice(), wire::DEFAULT_MAX_FRAME),
+        Err(WireError::BadFrameKind(9))
+    ));
+}
+
+#[test]
+fn oversized_frames_are_rejected_before_allocation() {
+    let payload = vec![0u8; 1024];
+    let mut buf = Vec::new();
+    wire::write_frame(&mut buf, FrameKind::Response, 1, &payload).unwrap();
+    // a receiver with a 512-byte bound refuses the 1 KiB frame
+    let err = wire::read_frame(&mut buf.as_slice(), 512).unwrap_err();
+    assert!(matches!(err, WireError::Oversized { len: 1024, max: 512 }), "{err}");
+    // garbage lengths never cause a giant allocation: craft a header
+    // claiming u32::MAX bytes
+    let mut header = buf[..wire::HEADER_LEN].to_vec();
+    header[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    let err = wire::read_frame(&mut header.as_slice(), wire::DEFAULT_MAX_FRAME).unwrap_err();
+    assert!(matches!(err, WireError::Oversized { .. }), "{err}");
+}
