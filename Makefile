@@ -26,6 +26,7 @@ perf:
 	cd rust && cargo bench --bench ablation_alloc
 	cd rust && cargo bench --bench e2e_serving
 	cd rust && cargo bench --bench e2e_wire
+	cd rust && cargo bench --bench e2e_cluster
 
 test:
 	cd python && python -m pytest tests/ -q

@@ -1,0 +1,264 @@
+//! Cluster-plane bench: two in-process `ServingServer` replicas behind
+//! a `ClusterRouter`, their sparse tier dis-aggregated onto two TCP
+//! [`ShardServer`] processes-worth of listeners — recsys traffic at
+//! increasing offered QPS through the extra router hop.
+//!
+//! Beyond client-observed latency, this bench *measures* the §4
+//! dis-aggregation boundary: the shard servers count the frame bytes
+//! crossing their sockets, and each run reports measured
+//! bytes/inference next to the analytic estimate
+//! ([`DisaggReport::per_inference_bytes`]) — the number the paper
+//! derives when it asks how much network a dis-aggregated sparse tier
+//! needs. The hot-row cache is disabled here so every pooled id
+//! actually crosses the wire and the comparison is apples-to-apples.
+//!
+//! Runs on the self-synthesized fixture (both feature configurations);
+//! `-- --smoke` runs the tiny CI-friendly sweep. Emits
+//! `BENCH_cluster.json` at the repo root.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dcinfer::cluster::{ClusterRouter, RouterConfig, ShardServer, ShardServerConfig};
+use dcinfer::coordinator::{
+    disagg_bandwidth, ClientResponse, DcClient, FrontendConfig, ModelService, ServerConfig,
+    ServingFrontend, ServingServer,
+};
+use dcinfer::embedding::SparseTierConfig;
+use dcinfer::models::{recsys, RecSysService, RecsysScale};
+use dcinfer::perfmodel::DeviceSpec;
+use dcinfer::runtime::{synthetic_artifacts_dir, BackendSpec, Manifest, Precision};
+use dcinfer::util::bench::{write_bench_json, Table};
+use dcinfer::util::rng::Pcg32;
+use dcinfer::util::stats::Samples;
+
+struct RunStats {
+    sent: u64,
+    ok: u64,
+    errs: u64,
+    rtt_ms: Samples,
+    by_replica: BTreeMap<String, u64>,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    let dir = synthetic_artifacts_dir("e2e_cluster").expect("fixture");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let svc = RecSysService::from_manifest(&manifest).expect("recsys config");
+
+    // the shard fleet: two TCP listeners, same wire the real
+    // `dcinfer shard-serve` processes speak
+    let shards: Vec<ShardServer> = (0..2)
+        .map(|_| {
+            ShardServer::bind("127.0.0.1:0", ShardServerConfig::default()).expect("shard bind")
+        })
+        .collect();
+    let shard_addrs: Vec<String> = shards.iter().map(|s| s.local_addr().to_string()).collect();
+
+    // two serving replicas, both pooling embeddings over the shard
+    // fleet; cache disabled so the boundary bytes are the full story
+    let mut frontends = Vec::new();
+    let mut servers = Vec::new();
+    for r in 0..2 {
+        let services: Vec<Arc<dyn ModelService>> = vec![Arc::new(svc.clone())];
+        let frontend = Arc::new(
+            ServingFrontend::start(
+                FrontendConfig {
+                    artifacts_dir: dir.clone(),
+                    executors: 1,
+                    backend: BackendSpec::native(Precision::Fp32),
+                    sparse_tier: Some(SparseTierConfig {
+                        shards: 2,
+                        replication: 1,
+                        cache_capacity_rows: 0,
+                        remote_shards: shard_addrs.clone(),
+                        ..Default::default()
+                    }),
+                    ..Default::default()
+                },
+                services,
+            )
+            .expect("frontend start"),
+        );
+        let server = ServingServer::bind(
+            frontend.clone(),
+            "127.0.0.1:0",
+            ServerConfig { replica_label: format!("replica-{r}"), ..Default::default() },
+        )
+        .expect("server bind");
+        frontends.push(frontend);
+        servers.push(server);
+    }
+    let replica_addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+    let router = ClusterRouter::bind("127.0.0.1:0", &replica_addrs, RouterConfig::default())
+        .expect("router bind");
+    let addr = router.local_addr();
+    println!(
+        "== E2E cluster plane: router {addr}, 2 replicas x 1 executor, 2 remote shards ==\n"
+    );
+
+    // warmup flushes one-time table registration to the shards so the
+    // per-run byte deltas below are pure lookup traffic
+    let _ = run_load(addr, &svc, 400.0, 50, 3);
+
+    // §4 analytic boundary for this model at batch 1: what one
+    // inference ships across a dis-aggregated tier
+    let report = disagg_bandwidth(&recsys(RecsysScale::Servable, 1), &DeviceSpec::fig3(32.0, 10.0));
+    let (ana_in, ana_out) = report.per_inference_bytes();
+    // the shard boundary carries only the sparse half of that ingress:
+    // the pooled ids (the dense activations stay on the replica)
+    let ids_bytes = (svc.n_tables * svc.pool * 4) as f64;
+    println!(
+        "analytic §4 boundary/inference: {ana_in:.0} B in ({ids_bytes:.0} B of it embedding \
+         ids), {ana_out:.0} B out\n"
+    );
+
+    let sweep: &[f64] = if smoke { &[400.0] } else { &[500.0, 2000.0] };
+    let mut table = Table::new(&[
+        "offered qps", "sent", "ok", "err", "p50 ms", "p99 ms", "shard in B/inf",
+        "shard out B/inf",
+    ]);
+    let mut json_rows = Vec::new();
+    for (i, &qps) in sweep.iter().enumerate() {
+        let n = if smoke { 200 } else { (qps * 0.5).max(400.0) as u64 };
+        let before = shard_stats_sum(&shards);
+        let mut s = run_load(addr, &svc, qps, n, 17 + i as u64);
+        let after = shard_stats_sum(&shards);
+        assert_eq!(s.errs, 0, "healthy fleet produced errors");
+        assert!(s.ok > 0);
+        if !smoke {
+            assert!(
+                s.by_replica.len() >= 2,
+                "consistent hashing should spread load: {:?}",
+                s.by_replica
+            );
+        }
+        let in_per = (after.0 - before.0) as f64 / s.ok as f64;
+        let out_per = (after.1 - before.1) as f64 / s.ok as f64;
+        // every pooled id crossed the boundary (cache off), and the
+        // framing/table-name overhead stays small
+        assert!(
+            in_per >= ids_bytes && in_per <= 3.0 * ids_bytes + 1024.0,
+            "measured shard ingress {in_per:.0} B/inf vs {ids_bytes:.0} B of ids"
+        );
+        table.row(&[
+            format!("{qps:.0}"),
+            s.sent.to_string(),
+            s.ok.to_string(),
+            s.errs.to_string(),
+            format!("{:.2}", s.rtt_ms.p50()),
+            format!("{:.2}", s.rtt_ms.p99()),
+            format!("{in_per:.0}"),
+            format!("{out_per:.0}"),
+        ]);
+        json_rows.push(format!(
+            "    {{\"offered_qps\": {qps:.0}, \"sent\": {}, \"ok\": {}, \"errors\": {}, \
+             \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"shard_ingress_b_per_inf\": {in_per:.1}, \
+             \"shard_egress_b_per_inf\": {out_per:.1}, \"analytic_ids_b_per_inf\": \
+             {ids_bytes:.1}}}",
+            s.sent,
+            s.ok,
+            s.errs,
+            s.rtt_ms.p50(),
+            s.rtt_ms.p99()
+        ));
+    }
+    table.print();
+    println!(
+        "\n(measured shard-boundary traffic brackets the §4 analytic ids estimate; the gap \
+         is frame headers + table names)"
+    );
+
+    println!("\n--- fleet (router view) ---");
+    let mut fleet = Table::new(&["replica", "healthy", "sent", "done", "failed", "p99 ms"]);
+    for r in router.stats() {
+        fleet.row(&[
+            r.addr.clone(),
+            r.healthy.to_string(),
+            r.sent.to_string(),
+            r.completed.to_string(),
+            r.failed.to_string(),
+            format!("{:.2}", r.p99_ms),
+        ]);
+    }
+    fleet.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"cluster\",\n  \"replicas\": 2,\n  \"shard_servers\": 2,\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    let path = write_bench_json("BENCH_cluster.json", &json);
+    println!("\nwrote {} ({} rows)", path.display(), json_rows.len());
+
+    router.shutdown();
+    for s in &servers {
+        s.shutdown();
+    }
+    for f in &frontends {
+        f.shutdown();
+    }
+    for s in &shards {
+        s.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn shard_stats_sum(shards: &[ShardServer]) -> (u64, u64) {
+    shards.iter().fold((0, 0), |(i, e), s| {
+        let st = s.stats();
+        (i + st.ingress_bytes, e + st.egress_bytes)
+    })
+}
+
+/// Open-loop Poisson recsys load through the router; generous
+/// deadlines — this bench measures bytes and latency, not shedding.
+fn run_load(
+    addr: std::net::SocketAddr,
+    svc: &RecSysService,
+    qps: f64,
+    n: u64,
+    seed: u64,
+) -> RunStats {
+    let client = DcClient::connect(addr).expect("connect");
+    let mut rng = Pcg32::seeded(seed);
+    let mut pending: Vec<std::sync::mpsc::Receiver<ClientResponse>> =
+        Vec::with_capacity(n as usize);
+    let t0 = Instant::now();
+    let mut next_at = 0.0f64;
+    for i in 0..n {
+        next_at += rng.exponential(qps);
+        let now = t0.elapsed().as_secs_f64();
+        if next_at > now {
+            std::thread::sleep(Duration::from_secs_f64(next_at - now));
+        }
+        let req = svc.synth_request(seed * 1_000_000 + i, &mut rng, 10_000.0);
+        match client.submit(&req) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => panic!("send failed: {e:#}"),
+        }
+    }
+    let mut stats = RunStats {
+        sent: n,
+        ok: 0,
+        errs: 0,
+        rtt_ms: Samples::new(),
+        by_replica: BTreeMap::new(),
+    };
+    for rx in pending {
+        match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(cr) if cr.resp.is_ok() => {
+                stats.ok += 1;
+                stats.rtt_ms.push(cr.rtt_us / 1e3);
+                if !cr.resp.replica.is_empty() {
+                    *stats.by_replica.entry(cr.resp.replica.clone()).or_insert(0) += 1;
+                }
+            }
+            _ => stats.errs += 1,
+        }
+    }
+    client.close();
+    stats
+}

@@ -1,0 +1,39 @@
+//! Cluster plane (§4 "Service Dis-aggregation" at fleet scale): the
+//! serving tier as *many processes* instead of one.
+//!
+//! The single-process stack ([`crate::coordinator`]) already has every
+//! seam this layer needs — a versioned wire protocol, a TCP ingress, a
+//! pipelined client, admission control, and a sparse tier whose
+//! numerics are placement-invariant. This module composes those seams
+//! into a fleet:
+//!
+//! - [`shard_server`]: `dcinfer shard-serve` — a standalone TCP process
+//!   hosting an [`crate::embedding::ShardStore`] (row-range slices of
+//!   embedding tables), plus [`shard_server::RemoteShard`], the
+//!   pipelined client that slots behind
+//!   [`crate::embedding::SparseTierConfig::remote_shards`]. Pooled
+//!   partial sums cross this boundary as f64 bit patterns, so a lookup
+//!   answered by a remote shard process is bit-identical to one
+//!   answered by an in-process thread.
+//! - [`router`]: [`ClusterRouter`] — a frame-level proxy spreading
+//!   [`crate::coordinator::DcClient`] traffic across N serving-server
+//!   replicas with consistent-hash placement, periodic ping/pong health
+//!   probes, per-replica inflight/latency accounting, and
+//!   retry-once-on-an-alternate-replica failover within the request's
+//!   deadline.
+//! - [`procs`]: child-process plumbing for the loopback mini-fleet
+//!   (`dcinfer cluster` and `tests/cluster.rs` spawn real `dcinfer`
+//!   processes and parse their advertised addresses).
+//!
+//! The paper's claim this plane reproduces: dis-aggregation only works
+//! if crossing a process boundary changes *where* work runs, never
+//! *what* it computes — goodput under failures comes from replication
+//! and routing, with zero wrong answers.
+
+pub mod procs;
+pub mod router;
+pub mod shard_server;
+
+pub use procs::ChildProc;
+pub use router::{ClusterRouter, ReplicaStats, RouterConfig};
+pub use shard_server::{RemoteShard, ShardServer, ShardServerConfig, ShardServerStats};

@@ -1,0 +1,137 @@
+//! Child-process plumbing for the loopback mini-fleet.
+//!
+//! `dcinfer cluster` and `tests/cluster.rs` build a fleet out of real
+//! processes — `dcinfer shard-serve` and `dcinfer serve --listen` —
+//! because the failure the cluster plane exists to survive is a
+//! *process* dying, and killing a thread is not the same experiment.
+//!
+//! [`ChildProc::spawn`] starts the child with stdout piped, waits for
+//! its machine-readable `listening on ADDR` line (every serving
+//! subcommand prints one; binding `:0` makes the child pick the port
+//! and this is how the parent learns it), then keeps draining stdout
+//! on a named thread so the child can never block on a full pipe. The
+//! drained lines are re-printed under a `[label]` prefix — the
+//! mini-fleet's interleaved console.
+
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+/// How long a child gets to come up and advertise its address.
+const STARTUP_BUDGET: Duration = Duration::from_secs(60);
+
+/// A spawned fleet member: the process, its advertised listen address,
+/// and the thread relaying its stdout.
+pub struct ChildProc {
+    /// what the child printed after `listening on `
+    pub addr: String,
+    label: String,
+    child: Child,
+    drain: Option<JoinHandle<()>>,
+}
+
+impl ChildProc {
+    /// Spawn `bin args...`, wait (bounded) for its `listening on ADDR`
+    /// line, and return the running child. `label` prefixes the
+    /// child's relayed output and error messages.
+    pub fn spawn(bin: &Path, args: &[&str], label: &str) -> Result<ChildProc> {
+        let mut child = Command::new(bin)
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning {label} ({})", bin.display()))?;
+        let stdout = child
+            .stdout
+            .take()
+            .ok_or_else(|| anyhow!("{label}: no stdout pipe despite Stdio::piped"))?;
+
+        // read lines on a thread so the startup wait can time out
+        // instead of hanging on a wedged child
+        let (tx, rx) = channel::<String>();
+        let relay_label = label.to_string();
+        let drain = std::thread::Builder::new()
+            .name(format!("dcproc-{label}"))
+            .spawn(move || {
+                let mut r = BufReader::new(stdout);
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match r.read_line(&mut line) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {
+                            let trimmed = line.trim_end();
+                            println!("[{relay_label}] {trimmed}");
+                            // receiver gone after startup: keep draining
+                            let _ = tx.send(trimmed.to_string());
+                        }
+                    }
+                }
+            })
+            .with_context(|| format!("spawning stdout relay for {label}"))?;
+
+        let t0 = Instant::now();
+        let addr = loop {
+            let left = STARTUP_BUDGET.saturating_sub(t0.elapsed());
+            match rx.recv_timeout(left.max(Duration::from_millis(1))) {
+                Ok(line) => {
+                    if let Some(rest) = line.strip_prefix("listening on ") {
+                        let addr =
+                            rest.split_whitespace().next().unwrap_or_default().to_string();
+                        if !addr.is_empty() {
+                            break addr;
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    let _ = drain.join();
+                    return Err(anyhow!(
+                        "{label}: no `listening on` line within {STARTUP_BUDGET:?}"
+                    ));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    let _ = child.wait();
+                    let _ = drain.join();
+                    return Err(anyhow!("{label}: exited before advertising an address"));
+                }
+            }
+        };
+        Ok(ChildProc { addr, label: label.to_string(), child, drain: Some(drain) })
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn pid(&self) -> u32 {
+        self.child.id()
+    }
+
+    /// Is the process still running? (Non-blocking.)
+    pub fn alive(&mut self) -> bool {
+        matches!(self.child.try_wait(), Ok(None))
+    }
+
+    /// Kill the process hard and reap it — the mid-load failure
+    /// injection `tests/cluster.rs` uses. Idempotent.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        if let Some(h) = self.drain.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChildProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}

@@ -1,0 +1,793 @@
+//! [`ClusterRouter`]: the fleet's front door — a frame-level proxy
+//! spreading [`crate::coordinator::DcClient`] traffic across N
+//! [`crate::coordinator::ServingServer`] replicas.
+//!
+//! The router never decodes tensors: it peeks the `(id, deadline)` head
+//! of each request payload ([`wire::peek_request_deadline`]) and
+//! forwards the payload bytes verbatim with a router-assigned
+//! correlation id, so adding the router between client and replica
+//! cannot change a single response byte — the zero-wrong-answers
+//! property `tests/cluster.rs` asserts under failures.
+//!
+//! Policy:
+//!
+//! - **Placement** is consistent-hash: each replica owns `vnodes`
+//!   points on a ring, a request walks the ring from
+//!   `splitmix64(request id)` — so request→replica assignment is stable
+//!   across router restarts and mostly stable when a replica leaves
+//!   (only its arc of the ring moves, the §4 pooling benefit of
+//!   keeping a model's traffic on few replicas).
+//! - **Health** is active: a prober thread pings every replica each
+//!   `probe_interval`; a replica is routable only while its connection
+//!   is up and its last pong is fresher than `probe_timeout`. Dead
+//!   replicas are reconnected by the same thread — recovery needs no
+//!   operator action.
+//! - **Failover** is retry-once-on-an-alternate-replica: when a
+//!   replica dies with requests in flight, each is re-sent to the next
+//!   healthy replica in its ring order, once, if its deadline has not
+//!   already passed; otherwise (or on second death) the client gets a
+//!   typed [`InferError::Shutdown`] — never silence. An inference is
+//!   idempotent, which is what makes resend-on-death safe.
+//! - **Accounting** is per replica: inflight, sent/completed/failed
+//!   and client-observed latency quantiles ([`ReplicaStats`]), the
+//!   fleet view `dcinfer cluster` prints.
+//!
+//! [`ClusterRouter::shutdown`] is a graceful drain: stop accepting,
+//! half-close client read sides, wait (bounded) for in-flight
+//! responses, synthesize `Shutdown` for stragglers, then tear down.
+
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Write as _};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::request::{InferError, InferResponse};
+use crate::coordinator::wire::{self, FrameKind};
+use crate::util::stats::Samples;
+
+/// Router knobs.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// reject frames whose declared payload exceeds this
+    pub max_frame_bytes: u32,
+    /// accept-loop poll interval while idle
+    pub poll: Duration,
+    /// how often the prober pings replicas / retries dead connections
+    pub probe_interval: Duration,
+    /// a replica whose last pong is older than this is unroutable
+    pub probe_timeout: Duration,
+    /// ring points per replica (more = smoother spread)
+    pub vnodes: usize,
+    /// how long shutdown waits for in-flight responses before
+    /// synthesizing errors for the stragglers
+    pub drain_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            max_frame_bytes: wire::DEFAULT_MAX_FRAME,
+            poll: Duration::from_millis(20),
+            probe_interval: Duration::from_millis(150),
+            probe_timeout: Duration::from_secs(1),
+            vnodes: 64,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Point-in-time view of one replica, as the router sees it.
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub addr: String,
+    pub healthy: bool,
+    /// requests forwarded and not yet answered
+    pub inflight: u64,
+    pub sent: u64,
+    pub completed: u64,
+    /// forwards lost to a dead connection (before any failover resend)
+    pub failed: u64,
+    /// router-observed response latency (submit to response frame), ms
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Ping correlation ids live in the top-bit namespace so a log line
+/// can never confuse a probe with a routed request.
+const PROBE_CORR_BIT: u64 = 1 << 63;
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The consistent-hash ring: `vnodes` points per replica, sorted by
+/// hash. Deterministic, so every router instance agrees.
+fn build_ring(n_replicas: usize, vnodes: usize) -> Vec<(u64, usize)> {
+    let mut ring = Vec::with_capacity(n_replicas * vnodes);
+    for idx in 0..n_replicas {
+        for v in 0..vnodes {
+            ring.push((splitmix64(((idx as u64) << 32) | v as u64), idx));
+        }
+    }
+    ring.sort_unstable();
+    ring
+}
+
+/// Walk the ring clockwise from `splitmix64(user_id)` and return the
+/// first replica `accept` takes. Distinct replicas are visited in ring
+/// order — the failover sequence.
+fn walk_ring(
+    ring: &[(u64, usize)],
+    user_id: u64,
+    accept: impl Fn(usize) -> bool,
+) -> Option<usize> {
+    let h = splitmix64(user_id);
+    let start = ring.partition_point(|&(hash, _)| hash < h);
+    let n = ring.len();
+    for i in 0..n {
+        let (_, idx) = ring[(start + i) % n];
+        if accept(idx) {
+            return Some(idx);
+        }
+    }
+    None
+}
+
+struct ReplicaConn {
+    stream: TcpStream,
+    writer: BufWriter<TcpStream>,
+}
+
+struct Replica {
+    addr: String,
+    conn: Mutex<Option<ReplicaConn>>,
+    healthy: AtomicBool,
+    inflight: AtomicU64,
+    sent: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    last_pong: Mutex<Option<Instant>>,
+    lat_ms: Mutex<Samples>,
+}
+
+/// One routed request awaiting its response (keyed by router corr).
+struct Route {
+    client: u64,
+    client_corr: u64,
+    user_id: u64,
+    deadline_ms: f64,
+    /// the encoded request, kept for the one failover resend
+    payload: Vec<u8>,
+    /// when the client's frame arrived (deadline + latency reference)
+    arrived: Instant,
+    /// replicas already attempted, current holder last
+    tried: Vec<usize>,
+}
+
+impl Route {
+    fn replica(&self) -> usize {
+        *self.tried.last().expect("a dispatched route has a holder")
+    }
+
+    fn within_deadline(&self) -> bool {
+        self.deadline_ms <= 0.0
+            || self.arrived.elapsed().as_secs_f64() * 1e3 < self.deadline_ms
+    }
+}
+
+/// One send-slot toward a client's writer thread: `(client corr,
+/// encoded response payload)`.
+type ClientSend = (u64, Vec<u8>);
+
+struct Core {
+    cfg: RouterConfig,
+    replicas: Vec<Replica>,
+    ring: Vec<(u64, usize)>,
+    pending: Mutex<HashMap<u64, Route>>,
+    clients: Mutex<HashMap<u64, Sender<ClientSend>>>,
+    next_corr: AtomicU64,
+    next_probe: AtomicU64,
+    stop: AtomicBool,
+    replica_readers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+struct ClientHandles {
+    stream: TcpStream,
+    reader: JoinHandle<()>,
+    writer: JoinHandle<()>,
+}
+
+/// A running router over a fixed replica set.
+pub struct ClusterRouter {
+    core: Arc<Core>,
+    local: SocketAddr,
+    accept: Mutex<Option<JoinHandle<()>>>,
+    prober: Mutex<Option<JoinHandle<()>>>,
+    clients: Arc<Mutex<Vec<ClientHandles>>>,
+}
+
+impl ClusterRouter {
+    /// Bind `addr` and start routing to `replica_addrs` (serving-server
+    /// listen addresses). Unreachable replicas are not an error — the
+    /// prober keeps retrying them; routing needs at least one healthy
+    /// replica at request time, not at bind time.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        replica_addrs: &[String],
+        cfg: RouterConfig,
+    ) -> Result<ClusterRouter> {
+        ensure!(!replica_addrs.is_empty(), "router needs at least one replica");
+        ensure!(cfg.vnodes >= 1, "router needs at least one vnode per replica");
+        let listener = TcpListener::bind(addr).context("binding router listener")?;
+        listener.set_nonblocking(true).context("setting router listener non-blocking")?;
+        let local = listener.local_addr().context("resolving router address")?;
+        let replicas = replica_addrs
+            .iter()
+            .map(|a| Replica {
+                addr: a.clone(),
+                conn: Mutex::new(None),
+                healthy: AtomicBool::new(false),
+                inflight: AtomicU64::new(0),
+                sent: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+                failed: AtomicU64::new(0),
+                last_pong: Mutex::new(None),
+                lat_ms: Mutex::new(Samples::new()),
+            })
+            .collect();
+        let core = Arc::new(Core {
+            ring: build_ring(replica_addrs.len(), cfg.vnodes),
+            cfg,
+            replicas,
+            pending: Mutex::new(HashMap::new()),
+            clients: Mutex::new(HashMap::new()),
+            next_corr: AtomicU64::new(1),
+            next_probe: AtomicU64::new(PROBE_CORR_BIT),
+            stop: AtomicBool::new(false),
+            replica_readers: Mutex::new(Vec::new()),
+        });
+        // eager first connect; failures are the prober's problem
+        for idx in 0..core.replicas.len() {
+            connect_replica(&core, idx);
+        }
+        let clients: Arc<Mutex<Vec<ClientHandles>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (core, clients) = (core.clone(), clients.clone());
+            std::thread::Builder::new()
+                .name("dcrouter-accept".into())
+                .spawn(move || accept_loop(listener, core, clients))
+                .context("spawning router accept loop")?
+        };
+        let prober = {
+            let core = core.clone();
+            std::thread::Builder::new()
+                .name("dcrouter-probe".into())
+                .spawn(move || prober_loop(core))
+                .context("spawning router prober")?
+        };
+        Ok(ClusterRouter {
+            core,
+            local,
+            accept: Mutex::new(Some(accept)),
+            prober: Mutex::new(Some(prober)),
+            clients,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the ephemeral port picked).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Replicas currently routable.
+    pub fn healthy_replicas(&self) -> usize {
+        self.core.replicas.iter().filter(|r| r.healthy.load(Ordering::SeqCst)).count()
+    }
+
+    /// Requests forwarded and not yet answered, fleet-wide.
+    pub fn in_flight(&self) -> usize {
+        self.core.pending.lock().unwrap().len()
+    }
+
+    /// Per-replica accounting.
+    pub fn stats(&self) -> Vec<ReplicaStats> {
+        self.core
+            .replicas
+            .iter()
+            .map(|r| {
+                let mut lat = r.lat_ms.lock().unwrap();
+                ReplicaStats {
+                    addr: r.addr.clone(),
+                    healthy: r.healthy.load(Ordering::SeqCst),
+                    inflight: r.inflight.load(Ordering::SeqCst),
+                    sent: r.sent.load(Ordering::SeqCst),
+                    completed: r.completed.load(Ordering::SeqCst),
+                    failed: r.failed.load(Ordering::SeqCst),
+                    p50_ms: lat.p50(),
+                    p99_ms: lat.p99(),
+                }
+            })
+            .collect()
+    }
+
+    /// Graceful drain: stop accepting, half-close client read sides
+    /// (clients observe EOF after their last response), wait bounded
+    /// for in-flight responses, synthesize [`InferError::Shutdown`] for
+    /// stragglers, then tear everything down. Idempotent.
+    pub fn shutdown(&self) {
+        self.core.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let clients = std::mem::take(&mut *self.clients.lock().unwrap());
+        for c in &clients {
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        // bounded drain of in-flight requests
+        let t0 = Instant::now();
+        while t0.elapsed() < self.core.cfg.drain_timeout {
+            if self.core.pending.lock().unwrap().is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // stragglers get a typed error, never silence
+        let leftovers: Vec<Route> = {
+            let mut g = self.core.pending.lock().unwrap();
+            g.drain().map(|(_, r)| r).collect()
+        };
+        for route in leftovers {
+            let rep = &self.core.replicas[route.replica()];
+            rep.inflight.fetch_sub(1, Ordering::SeqCst);
+            rep.failed.fetch_add(1, Ordering::SeqCst);
+            synthesize(&self.core, &route, InferError::Shutdown);
+        }
+        if let Some(h) = self.prober.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        for rep in &self.core.replicas {
+            if let Some(c) = rep.conn.lock().unwrap().take() {
+                let _ = c.stream.shutdown(Shutdown::Both);
+            }
+            rep.healthy.store(false, Ordering::SeqCst);
+        }
+        for h in std::mem::take(&mut *self.core.replica_readers.lock().unwrap()) {
+            let _ = h.join();
+        }
+        // dropping the senders lets each client writer drain and exit
+        self.core.clients.lock().unwrap().clear();
+        for c in clients {
+            let _ = c.reader.join();
+            let _ = c.writer.join();
+        }
+    }
+}
+
+impl Drop for ClusterRouter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// replica side
+// ---------------------------------------------------------------------------
+
+/// (Re)connect replica `idx` if down. Fresh connections are routable
+/// immediately (the pong grace starts now) — a recovered replica takes
+/// traffic without waiting a probe round-trip.
+fn connect_replica(core: &Arc<Core>, idx: usize) -> bool {
+    let rep = &core.replicas[idx];
+    if rep.conn.lock().unwrap().is_some() {
+        return true;
+    }
+    let Ok(stream) = TcpStream::connect(&rep.addr) else { return false };
+    let _ = stream.set_nodelay(true);
+    let (Ok(read_half), Ok(write_half)) = (stream.try_clone(), stream.try_clone()) else {
+        return false;
+    };
+    *rep.conn.lock().unwrap() =
+        Some(ReplicaConn { stream, writer: BufWriter::new(write_half) });
+    let reader = {
+        let core = core.clone();
+        std::thread::Builder::new()
+            .name("dcrouter-replica-read".into())
+            .spawn(move || replica_reader(core, idx, read_half))
+    };
+    match reader {
+        Ok(h) => {
+            core.replica_readers.lock().unwrap().push(h);
+            *rep.last_pong.lock().unwrap() = Some(Instant::now());
+            rep.healthy.store(true, Ordering::SeqCst);
+            true
+        }
+        Err(_) => {
+            if let Some(c) = rep.conn.lock().unwrap().take() {
+                let _ = c.stream.shutdown(Shutdown::Both);
+            }
+            false
+        }
+    }
+}
+
+/// Forward one frame to replica `idx`. On a write failure the
+/// connection is torn down (the replica's reader observes the close
+/// and runs the death path) and `false` comes back so the caller can
+/// try an alternate.
+fn try_send(core: &Arc<Core>, idx: usize, corr: u64, payload: &[u8]) -> bool {
+    let rep = &core.replicas[idx];
+    let mut g = rep.conn.lock().unwrap();
+    let Some(c) = g.as_mut() else { return false };
+    let ok = wire::write_frame(&mut c.writer, FrameKind::Request, corr, payload)
+        .and_then(|_| c.writer.flush())
+        .is_ok();
+    if !ok {
+        if let Some(c) = g.take() {
+            let _ = c.stream.shutdown(Shutdown::Both);
+        }
+        rep.healthy.store(false, Ordering::SeqCst);
+    }
+    ok
+}
+
+fn replica_reader(core: Arc<Core>, idx: usize, stream: TcpStream) {
+    let rep = &core.replicas[idx];
+    let mut r = BufReader::new(stream);
+    loop {
+        match wire::read_frame(&mut r, core.cfg.max_frame_bytes) {
+            Ok(Some(f)) if f.kind == FrameKind::Response => {
+                let route = core.pending.lock().unwrap().remove(&f.corr);
+                // unmatched corr: a response for a request we already
+                // failed over or timed out — drop it (the client got
+                // its answer elsewhere)
+                let Some(route) = route else { continue };
+                rep.inflight.fetch_sub(1, Ordering::SeqCst);
+                rep.completed.fetch_add(1, Ordering::SeqCst);
+                rep.lat_ms
+                    .lock()
+                    .unwrap()
+                    .push(route.arrived.elapsed().as_secs_f64() * 1e3);
+                respond(&core, route.client, route.client_corr, f.payload);
+            }
+            Ok(Some(f)) if f.kind == FrameKind::Pong => {
+                *rep.last_pong.lock().unwrap() = Some(Instant::now());
+                rep.healthy.store(true, Ordering::SeqCst);
+            }
+            Ok(Some(_)) => {
+                eprintln!("router: unexpected frame kind from replica {}, closing", rep.addr);
+                break;
+            }
+            Ok(None) => break, // replica closed cleanly
+            Err(e) => {
+                eprintln!("router: replica {} read failed: {e}", rep.addr);
+                break;
+            }
+        }
+    }
+    replica_died(&core, idx);
+}
+
+/// A replica's connection is gone: mark it unroutable, then give every
+/// request it held one failover resend (alternate replica, same
+/// payload) if the deadline still allows — otherwise a typed error.
+fn replica_died(core: &Arc<Core>, idx: usize) {
+    let rep = &core.replicas[idx];
+    rep.healthy.store(false, Ordering::SeqCst);
+    if let Some(c) = rep.conn.lock().unwrap().take() {
+        let _ = c.stream.shutdown(Shutdown::Both);
+    }
+    let orphans: Vec<Route> = {
+        let mut g = core.pending.lock().unwrap();
+        let corrs: Vec<u64> =
+            g.iter().filter(|(_, r)| r.replica() == idx).map(|(&c, _)| c).collect();
+        corrs.into_iter().filter_map(|c| g.remove(&c)).collect()
+    };
+    let stopping = core.stop.load(Ordering::SeqCst);
+    for route in orphans {
+        rep.inflight.fetch_sub(1, Ordering::SeqCst);
+        rep.failed.fetch_add(1, Ordering::SeqCst);
+        if !stopping && route.tried.len() < 2 && route.within_deadline() {
+            dispatch(core, route);
+        } else {
+            synthesize(core, &route, InferError::Shutdown);
+        }
+    }
+}
+
+fn prober_loop(core: Arc<Core>) {
+    while !core.stop.load(Ordering::SeqCst) {
+        for idx in 0..core.replicas.len() {
+            let rep = &core.replicas[idx];
+            if rep.conn.lock().unwrap().is_none() {
+                connect_replica(&core, idx);
+                continue;
+            }
+            // routability decays when pongs stop coming back
+            let fresh = rep
+                .last_pong
+                .lock()
+                .unwrap()
+                .map(|t| t.elapsed() <= core.cfg.probe_timeout)
+                .unwrap_or(false);
+            if !fresh {
+                rep.healthy.store(false, Ordering::SeqCst);
+            }
+            let corr = core.next_probe.fetch_add(1, Ordering::Relaxed);
+            let sent = {
+                let mut g = rep.conn.lock().unwrap();
+                match g.as_mut() {
+                    Some(c) => wire::write_frame(&mut c.writer, FrameKind::Ping, corr, &[])
+                        .and_then(|_| c.writer.flush())
+                        .is_ok(),
+                    None => true, // raced with a death path; next round reconnects
+                }
+            };
+            if !sent {
+                replica_died(&core, idx);
+            }
+        }
+        std::thread::sleep(core.cfg.probe_interval);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client side
+// ---------------------------------------------------------------------------
+
+fn accept_loop(
+    listener: TcpListener,
+    core: Arc<Core>,
+    clients: Arc<Mutex<Vec<ClientHandles>>>,
+) {
+    let mut next_client: u64 = 1;
+    while !core.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let id = next_client;
+                next_client += 1;
+                match spawn_client(stream, &core, id) {
+                    Ok(handles) => {
+                        let mut g = clients.lock().unwrap();
+                        g.retain(|c| !(c.reader.is_finished() && c.writer.is_finished()));
+                        g.push(handles);
+                    }
+                    Err(e) => eprintln!("router: client setup failed: {e:#}"),
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(core.cfg.poll)
+            }
+            Err(e) => {
+                eprintln!("router: accept failed: {e}");
+                std::thread::sleep(core.cfg.poll);
+            }
+        }
+    }
+}
+
+fn spawn_client(stream: TcpStream, core: &Arc<Core>, id: u64) -> Result<ClientHandles> {
+    stream.set_nonblocking(false).context("setting client connection blocking")?;
+    let _ = stream.set_nodelay(true);
+    let read_half = stream.try_clone().context("cloning client connection for reads")?;
+    let write_half = stream.try_clone().context("cloning client connection for writes")?;
+    let (tx, rx) = channel::<ClientSend>();
+    core.clients.lock().unwrap().insert(id, tx);
+    let reader = {
+        let core = core.clone();
+        std::thread::Builder::new()
+            .name("dcrouter-client-read".into())
+            .spawn(move || client_reader(core, id, read_half))
+            .context("spawning router client reader")?
+    };
+    let writer = std::thread::Builder::new()
+        .name("dcrouter-client-write".into())
+        .spawn(move || client_writer(write_half, rx))
+        .context("spawning router client writer")?;
+    Ok(ClientHandles { stream, reader, writer })
+}
+
+fn client_reader(core: Arc<Core>, id: u64, stream: TcpStream) {
+    let mut r = BufReader::new(stream);
+    loop {
+        let frame = match wire::read_frame(&mut r, core.cfg.max_frame_bytes) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // client closed cleanly
+            Err(e) => {
+                eprintln!("router: closing client connection: {e}");
+                break;
+            }
+        };
+        if frame.kind != FrameKind::Request {
+            eprintln!("router: unexpected frame kind from client, closing");
+            break;
+        }
+        match wire::peek_request_deadline(&frame.payload) {
+            Ok((user_id, deadline_ms)) => dispatch(
+                &core,
+                Route {
+                    client: id,
+                    client_corr: frame.corr,
+                    user_id,
+                    deadline_ms,
+                    payload: frame.payload,
+                    arrived: Instant::now(),
+                    tried: Vec::new(),
+                },
+            ),
+            Err(e) => {
+                // undecodable head: answer on the same corr, keep the
+                // connection — the single-server ingress does the same
+                let resp = error_response(0, InferError::BadRequest(format!(
+                    "undecodable request head: {e}"
+                )));
+                respond(&core, id, frame.corr, wire::encode_response(&resp));
+            }
+        }
+    }
+    core.clients.lock().unwrap().remove(&id);
+}
+
+fn client_writer(stream: TcpStream, rx: Receiver<ClientSend>) {
+    let closer = stream.try_clone().ok();
+    let mut w = BufWriter::new(stream);
+    'stream: while let Ok(first) = rx.recv() {
+        let mut next = Some(first);
+        // drain everything already queued before paying for a flush
+        while let Some((corr, payload)) = next.take() {
+            if wire::write_frame(&mut w, FrameKind::Response, corr, &payload).is_err() {
+                break 'stream;
+            }
+            match rx.try_recv() {
+                Ok(item) => next = Some(item),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {}
+            }
+        }
+        if w.flush().is_err() {
+            break 'stream;
+        }
+    }
+    let _ = w.flush();
+    drop(w);
+    if let Some(s) = closer {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// routing
+// ---------------------------------------------------------------------------
+
+/// Place `route` on the first untried healthy replica in its ring
+/// order and forward it. Walks alternates on send failure; after two
+/// total attempts (retry-once) or with no routable replica left, the
+/// client gets a typed error.
+fn dispatch(core: &Arc<Core>, mut route: Route) {
+    loop {
+        if route.tried.len() >= 2 {
+            synthesize(core, &route, InferError::Shutdown);
+            return;
+        }
+        let pick = walk_ring(&core.ring, route.user_id, |idx| {
+            !route.tried.contains(&idx) && core.replicas[idx].healthy.load(Ordering::SeqCst)
+        });
+        let Some(idx) = pick else {
+            synthesize(
+                core,
+                &route,
+                InferError::ExecFailed("no healthy serving replica".into()),
+            );
+            return;
+        };
+        route.tried.push(idx);
+        let corr = core.next_corr.fetch_add(1, Ordering::Relaxed);
+        let rep = &core.replicas[idx];
+        rep.inflight.fetch_add(1, Ordering::SeqCst);
+        rep.sent.fetch_add(1, Ordering::SeqCst);
+        // insert before sending so a fast response can never race past
+        // its pending entry; the clone keeps the send outside the lock
+        let payload = route.payload.clone();
+        core.pending.lock().unwrap().insert(corr, route);
+        if try_send(core, idx, corr, &payload) {
+            return;
+        }
+        // the send failed: reclaim the route and try an alternate
+        let Some(reclaimed) = core.pending.lock().unwrap().remove(&corr) else {
+            // the death path beat us to it and already handled the route
+            return;
+        };
+        rep.inflight.fetch_sub(1, Ordering::SeqCst);
+        rep.failed.fetch_add(1, Ordering::SeqCst);
+        route = reclaimed;
+    }
+}
+
+/// Forward an encoded response payload to a client's writer thread.
+/// A vanished client (disconnected mid-flight) is not an error.
+fn respond(core: &Arc<Core>, client: u64, client_corr: u64, payload: Vec<u8>) {
+    let tx = core.clients.lock().unwrap().get(&client).cloned();
+    if let Some(tx) = tx {
+        let _ = tx.send((client_corr, payload));
+    }
+}
+
+fn error_response(user_id: u64, err: InferError) -> InferResponse {
+    InferResponse {
+        id: user_id,
+        model: String::new(),
+        outcome: Err(err),
+        queue_us: 0.0,
+        exec_us: 0.0,
+        batch_size: 0,
+        variant: String::new(),
+        backend: String::new(),
+        replica: String::new(),
+    }
+}
+
+/// Answer a route the fleet could not serve with a typed error — the
+/// router never leaves a client waiting on silence.
+fn synthesize(core: &Arc<Core>, route: &Route, err: InferError) {
+    let resp = error_response(route.user_id, err);
+    respond(core, route.client, route.client_corr, wire::encode_response(&resp));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic_and_spreads() {
+        assert_eq!(splitmix64(42), splitmix64(42));
+        assert_ne!(splitmix64(1), splitmix64(2));
+        // crude avalanche check: consecutive inputs land far apart
+        let a = splitmix64(100) >> 32;
+        let b = splitmix64(101) >> 32;
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ring_covers_every_replica_and_walk_is_stable() {
+        let ring = build_ring(3, 64);
+        assert_eq!(ring.len(), 3 * 64);
+        for idx in 0..3 {
+            assert!(ring.iter().any(|&(_, i)| i == idx), "replica {idx} missing from ring");
+        }
+        // same id, same pick
+        let a = walk_ring(&ring, 12345, |_| true).unwrap();
+        let b = walk_ring(&ring, 12345, |_| true).unwrap();
+        assert_eq!(a, b);
+        // excluding the owner falls through to another replica
+        let c = walk_ring(&ring, 12345, |i| i != a).unwrap();
+        assert_ne!(c, a);
+        // excluding everything yields nothing
+        assert!(walk_ring(&ring, 12345, |_| false).is_none());
+    }
+
+    #[test]
+    fn ring_spreads_request_ids_across_replicas() {
+        let ring = build_ring(3, 64);
+        let mut counts = [0usize; 3];
+        for id in 0..3000u64 {
+            counts[walk_ring(&ring, id, |_| true).unwrap()] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 300, "replica {i} got only {c}/3000 requests");
+        }
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = RouterConfig::default();
+        assert!(cfg.probe_timeout > cfg.probe_interval);
+        assert!(cfg.vnodes >= 1);
+    }
+}

@@ -1,0 +1,679 @@
+//! The networked embedding shard: a [`ShardServer`] hosts one
+//! [`ShardStore`] behind a `TcpListener` speaking
+//! [`FrameKind::ShardRequest`]/[`FrameKind::ShardResponse`] frames
+//! (`dcinfer shard-serve` wraps it as a standalone process), and
+//! [`RemoteShard`] is the pipelined client that slots behind
+//! [`crate::embedding::SparseTierConfig::remote_shards`] — the same
+//! [`ShardTransport`] seam the in-process shard threads implement, so
+//! the routing client cannot tell placement apart (and, per the tier's
+//! numerics contract, neither can the model: partial sums cross this
+//! wire as f64 bit patterns).
+//!
+//! Server threading is deliberately simpler than the serving ingress:
+//! shard math is synchronous and small, so each connection gets **one**
+//! thread running read → apply → write in order. Pipelining still
+//! happens across connections (each serving replica holds its own),
+//! and within a connection the kernel socket buffer queues frames.
+//!
+//! Failure semantics, matching the tier's failover contract:
+//!
+//! - an undecodable shard request in an intact frame is answered with
+//!   [`ShardLookupResponse::Error`] on the same correlation id;
+//! - a broken frame stream closes that connection only, never the
+//!   process;
+//! - a [`RemoteShard`] whose connection dies resolves every in-flight
+//!   op as disconnected (the tier fails over to a replica shard) and
+//!   stays dead — traffic pins to surviving replicas; reviving a shard
+//!   process means restarting its clients' tier, which re-registers
+//!   tables idempotently.
+//!
+//! The server counts boundary bytes (shard-op frames in, responses
+//! out) — the measured counterpart of
+//! [`crate::coordinator::disagg`]'s analytic §4 bandwidth model, which
+//! the `e2e_cluster` bench compares against.
+
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Write as _};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::wire::{self, FrameKind, ShardLookupRequest, ShardLookupResponse};
+use crate::embedding::{ShardStore, ShardTransport};
+
+/// Transport knobs for the shard server.
+#[derive(Debug, Clone)]
+pub struct ShardServerConfig {
+    /// reject frames whose declared payload exceeds this
+    pub max_frame_bytes: u32,
+    /// accept-loop poll interval while idle
+    pub poll: Duration,
+}
+
+impl Default for ShardServerConfig {
+    fn default() -> Self {
+        ShardServerConfig {
+            max_frame_bytes: wire::DEFAULT_MAX_FRAME,
+            poll: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Boundary-traffic counters of one shard server (frame bytes of
+/// shard ops in, responses out — health probes excluded).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardServerStats {
+    /// shard ops applied (register + pool + fetch)
+    pub ops: u64,
+    pub ingress_bytes: u64,
+    pub egress_bytes: u64,
+}
+
+#[derive(Default)]
+struct AtomicStats {
+    ops: AtomicU64,
+    ingress_bytes: AtomicU64,
+    egress_bytes: AtomicU64,
+}
+
+struct ConnHandle {
+    stream: TcpStream,
+    thread: JoinHandle<()>,
+}
+
+/// A running TCP shard server over one [`ShardStore`].
+pub struct ShardServer {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+    conns: Arc<Mutex<Vec<ConnHandle>>>,
+    store: Arc<Mutex<ShardStore>>,
+    stats: Arc<AtomicStats>,
+}
+
+impl ShardServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start serving an empty
+    /// store — tables arrive over the wire as serving replicas
+    /// register their artifacts.
+    pub fn bind(addr: impl ToSocketAddrs, cfg: ShardServerConfig) -> Result<ShardServer> {
+        let listener = TcpListener::bind(addr).context("binding shard listener")?;
+        listener.set_nonblocking(true).context("setting shard listener non-blocking")?;
+        let local = listener.local_addr().context("resolving shard listener address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<ConnHandle>>> = Arc::new(Mutex::new(Vec::new()));
+        let store = Arc::new(Mutex::new(ShardStore::new()));
+        let stats = Arc::new(AtomicStats::default());
+        let accept = {
+            let (stop, conns) = (stop.clone(), conns.clone());
+            let (store, stats) = (store.clone(), stats.clone());
+            std::thread::Builder::new()
+                .name("dcshard-accept".into())
+                .spawn(move || accept_loop(listener, stop, conns, store, stats, cfg))
+                .context("spawning shard accept loop")?
+        };
+        Ok(ShardServer {
+            local,
+            stop,
+            accept: Mutex::new(Some(accept)),
+            conns,
+            store,
+            stats,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the ephemeral port picked).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Distinct table slices currently registered.
+    pub fn table_count(&self) -> usize {
+        self.store.lock().unwrap().table_count()
+    }
+
+    /// Point-in-time boundary-traffic counters.
+    pub fn stats(&self) -> ShardServerStats {
+        ShardServerStats {
+            ops: self.stats.ops.load(Ordering::Relaxed),
+            ingress_bytes: self.stats.ingress_bytes.load(Ordering::Relaxed),
+            egress_bytes: self.stats.egress_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Graceful drain: stop accepting, half-close every connection's
+    /// read side, let queued responses flush, join. Idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in &conns {
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        for c in conns {
+            let _ = c.thread.join();
+        }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<ConnHandle>>>,
+    store: Arc<Mutex<ShardStore>>,
+    stats: Arc<AtomicStats>,
+    cfg: ShardServerConfig,
+) {
+    let max_frame = cfg.max_frame_bytes;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let (store, stats) = (store.clone(), stats.clone());
+                let spawned = stream.try_clone().map_err(anyhow::Error::new).and_then(|s| {
+                    std::thread::Builder::new()
+                        .name("dcshard-conn".into())
+                        .spawn(move || conn_loop(s, store, stats, max_frame))
+                        .map_err(anyhow::Error::new)
+                });
+                match spawned {
+                    Ok(thread) => {
+                        let mut g = conns.lock().unwrap();
+                        g.retain(|c| !c.thread.is_finished());
+                        g.push(ConnHandle { stream, thread });
+                    }
+                    Err(e) => eprintln!("shard server: connection setup failed: {e:#}"),
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => std::thread::sleep(cfg.poll),
+            Err(e) => {
+                eprintln!("shard server: accept failed: {e}");
+                std::thread::sleep(cfg.poll);
+            }
+        }
+    }
+}
+
+/// One connection: read → apply → write, in order. Shard math runs
+/// under the store lock (registration writes, lookups read — the lock
+/// is the only synchronization across connections).
+fn conn_loop(
+    stream: TcpStream,
+    store: Arc<Mutex<ShardStore>>,
+    stats: Arc<AtomicStats>,
+    max_frame: u32,
+) {
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    // the accept loop's registry holds another clone of this socket, so
+    // dropping the BufWriter alone would leave the connection
+    // half-alive; close it explicitly on exit
+    let closer = stream.try_clone().ok();
+    let mut r = BufReader::new(read_half);
+    let mut w = BufWriter::new(stream);
+    loop {
+        let frame = match wire::read_frame(&mut r, max_frame) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // peer closed cleanly
+            Err(e) => {
+                eprintln!("shard server: closing connection: {e}");
+                break;
+            }
+        };
+        match frame.kind {
+            FrameKind::Ping => {
+                if wire::write_frame(&mut w, FrameKind::Pong, frame.corr, &[])
+                    .and_then(|_| w.flush())
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            FrameKind::ShardRequest => {
+                stats
+                    .ingress_bytes
+                    .fetch_add((wire::HEADER_LEN + frame.payload.len()) as u64, Ordering::Relaxed);
+                let resp = match wire::decode_shard_request(&frame.payload) {
+                    Ok(req) => {
+                        stats.ops.fetch_add(1, Ordering::Relaxed);
+                        apply(&store, req)
+                    }
+                    Err(e) => {
+                        ShardLookupResponse::Error(format!("undecodable shard request: {e}"))
+                    }
+                };
+                let payload = wire::encode_shard_response(&resp);
+                stats
+                    .egress_bytes
+                    .fetch_add((wire::HEADER_LEN + payload.len()) as u64, Ordering::Relaxed);
+                if wire::write_frame(&mut w, FrameKind::ShardResponse, frame.corr, &payload)
+                    .and_then(|_| w.flush())
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            _ => {
+                eprintln!("shard server: unexpected frame kind from client, closing");
+                break;
+            }
+        }
+    }
+    let _ = w.flush();
+    drop(w);
+    if let Some(s) = closer {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}
+
+fn apply(store: &Mutex<ShardStore>, req: ShardLookupRequest) -> ShardLookupResponse {
+    let outcome = match req {
+        ShardLookupRequest::Register { key, quantized, lo, dim, data } => store
+            .lock()
+            .unwrap()
+            .register(&key, quantized, lo, dim as usize, data)
+            .map(|()| ShardLookupResponse::Registered),
+        ShardLookupRequest::Pool { key, quantized, lengths, indices } => store
+            .lock()
+            .unwrap()
+            .pool(&key, quantized, &lengths, &indices)
+            .map(ShardLookupResponse::Pooled),
+        ShardLookupRequest::Fetch { key, quantized, rows } => {
+            store.lock().unwrap().fetch(&key, quantized, &rows).map(ShardLookupResponse::Rows)
+        }
+    };
+    outcome.unwrap_or_else(|e| ShardLookupResponse::Error(format!("{e:#}")))
+}
+
+// ---------------------------------------------------------------------------
+// RemoteShard: the client side, a ShardTransport over TCP
+// ---------------------------------------------------------------------------
+
+enum PendingOp {
+    Register(Sender<Result<()>>),
+    Pool(Sender<Result<Vec<f64>>>),
+    Fetch(Sender<Result<Vec<f32>>>),
+}
+
+/// In-flight ops by correlation id. `None` once the reader has exited:
+/// the take-on-exit and the insert-on-dispatch share this lock, so no
+/// op can be inserted after the drain and hang forever.
+type PendingMap = Arc<Mutex<Option<HashMap<u64, PendingOp>>>>;
+
+/// A pipelined connection to one `dcinfer shard-serve` process,
+/// implementing [`ShardTransport`] — the slot-in replacement for an
+/// in-process shard thread. Any number of ops may be in flight; a
+/// background reader resolves them by correlation id. A dead
+/// connection resolves every waiter as disconnected (the tier's
+/// failover signal) and stays dead.
+pub struct RemoteShard {
+    addr: String,
+    stream: TcpStream,
+    writer: Mutex<Option<BufWriter<TcpStream>>>,
+    pending: PendingMap,
+    next_corr: AtomicU64,
+    reader: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl RemoteShard {
+    /// Connect eagerly — a shard address that cannot be reached at tier
+    /// start is a configuration error, not a failover case.
+    pub fn connect(addr: &str) -> Result<RemoteShard> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to shard server {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let pending: PendingMap = Arc::new(Mutex::new(Some(HashMap::new())));
+        let reader = {
+            let read_half = stream.try_clone().context("cloning shard connection for reads")?;
+            let pending = pending.clone();
+            let addr = addr.to_string();
+            std::thread::Builder::new()
+                .name("dcshard-client-read".into())
+                .spawn(move || reader_loop(read_half, pending, addr))
+                .context("spawning shard client reader")?
+        };
+        let write_half = stream.try_clone().context("cloning shard connection for writes")?;
+        Ok(RemoteShard {
+            addr: addr.to_string(),
+            stream,
+            writer: Mutex::new(Some(BufWriter::new(write_half))),
+            pending,
+            next_corr: AtomicU64::new(1),
+            reader: Mutex::new(Some(reader)),
+        })
+    }
+
+    /// Fire one op. Every failure path drops the response sender, so
+    /// the caller's receiver disconnects — the tier's failover signal.
+    fn dispatch(&self, req: &ShardLookupRequest, op: PendingOp) {
+        let corr = self.next_corr.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut g = self.pending.lock().unwrap();
+            match g.as_mut() {
+                Some(map) => {
+                    map.insert(corr, op);
+                }
+                // reader already exited: connection dead, op dropped
+                None => return,
+            }
+        }
+        let payload = wire::encode_shard_request(req);
+        let mut wg = self.writer.lock().unwrap();
+        let sent = match wg.as_mut() {
+            Some(w) => wire::write_frame(w, FrameKind::ShardRequest, corr, &payload)
+                .and_then(|_| w.flush())
+                .is_ok(),
+            None => false,
+        };
+        if !sent {
+            // the connection is dead and stays dead: drop the writer so
+            // later ops fail fast, and resolve this op as disconnected
+            *wg = None;
+            if let Some(map) = self.pending.lock().unwrap().as_mut() {
+                map.remove(&corr);
+            }
+        }
+    }
+}
+
+impl ShardTransport for RemoteShard {
+    fn label(&self) -> String {
+        self.addr.clone()
+    }
+
+    fn register(
+        &self,
+        key: &str,
+        quantized: bool,
+        lo: u32,
+        dim: usize,
+        data: &[f32],
+    ) -> Receiver<Result<()>> {
+        let (tx, rx) = channel();
+        let req = ShardLookupRequest::Register {
+            key: key.to_string(),
+            quantized,
+            lo,
+            dim: dim as u32,
+            data: data.to_vec(),
+        };
+        self.dispatch(&req, PendingOp::Register(tx));
+        rx
+    }
+
+    fn pool(
+        &self,
+        key: &str,
+        quantized: bool,
+        lengths: &[u32],
+        indices: &[u32],
+    ) -> Receiver<Result<Vec<f64>>> {
+        let (tx, rx) = channel();
+        let req = ShardLookupRequest::Pool {
+            key: key.to_string(),
+            quantized,
+            lengths: lengths.to_vec(),
+            indices: indices.to_vec(),
+        };
+        self.dispatch(&req, PendingOp::Pool(tx));
+        rx
+    }
+
+    fn fetch(&self, key: &str, quantized: bool, rows: &[u32]) -> Receiver<Result<Vec<f32>>> {
+        let (tx, rx) = channel();
+        let req = ShardLookupRequest::Fetch {
+            key: key.to_string(),
+            quantized,
+            rows: rows.to_vec(),
+        };
+        self.dispatch(&req, PendingOp::Fetch(tx));
+        rx
+    }
+}
+
+impl Drop for RemoteShard {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn resolve(op: PendingOp, resp: ShardLookupResponse, addr: &str) {
+    match (op, resp) {
+        (PendingOp::Register(tx), ShardLookupResponse::Registered) => {
+            let _ = tx.send(Ok(()));
+        }
+        (PendingOp::Pool(tx), ShardLookupResponse::Pooled(v)) => {
+            let _ = tx.send(Ok(v));
+        }
+        (PendingOp::Fetch(tx), ShardLookupResponse::Rows(v)) => {
+            let _ = tx.send(Ok(v));
+        }
+        (PendingOp::Register(tx), ShardLookupResponse::Error(e)) => {
+            let _ = tx.send(Err(anyhow!("shard {addr}: {e}")));
+        }
+        (PendingOp::Pool(tx), ShardLookupResponse::Error(e)) => {
+            let _ = tx.send(Err(anyhow!("shard {addr}: {e}")));
+        }
+        (PendingOp::Fetch(tx), ShardLookupResponse::Error(e)) => {
+            let _ = tx.send(Err(anyhow!("shard {addr}: {e}")));
+        }
+        (op, other) => {
+            let msg = anyhow!("shard {addr} answered the wrong op type ({other:?})");
+            match op {
+                PendingOp::Register(tx) => {
+                    let _ = tx.send(Err(msg));
+                }
+                PendingOp::Pool(tx) => {
+                    let _ = tx.send(Err(msg));
+                }
+                PendingOp::Fetch(tx) => {
+                    let _ = tx.send(Err(msg));
+                }
+            }
+        }
+    }
+}
+
+fn reader_loop(stream: TcpStream, pending: PendingMap, addr: String) {
+    let mut r = BufReader::new(stream);
+    loop {
+        match wire::read_frame(&mut r, wire::DEFAULT_MAX_FRAME) {
+            Ok(Some(f)) if f.kind == FrameKind::ShardResponse => {
+                let op = pending.lock().unwrap().as_mut().and_then(|m| m.remove(&f.corr));
+                // unmatched corr: an op we stopped waiting for
+                let Some(op) = op else { continue };
+                match wire::decode_shard_response(&f.payload) {
+                    Ok(resp) => resolve(op, resp, &addr),
+                    Err(e) => {
+                        eprintln!("shard client {addr}: undecodable response, closing: {e}");
+                        break;
+                    }
+                }
+            }
+            Ok(Some(_)) => {
+                eprintln!("shard client {addr}: unexpected frame kind, closing");
+                break;
+            }
+            Ok(None) => break, // shard closed cleanly
+            Err(e) => {
+                eprintln!("shard client {addr}: connection read failed: {e}");
+                break;
+            }
+        }
+    }
+    // take the map so (a) every in-flight op resolves as disconnected
+    // and (b) no later dispatch can insert an op nobody will answer
+    let _ = pending.lock().unwrap().take();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{
+        EmbeddingShardService, EmbeddingTable, LookupBatch, SparseTierConfig,
+    };
+    use crate::util::rng::Pcg32;
+    use std::sync::Arc;
+
+    fn servers(n: usize) -> Vec<ShardServer> {
+        (0..n)
+            .map(|_| ShardServer::bind("127.0.0.1:0", ShardServerConfig::default()).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn remote_tier_is_bit_identical_to_local_and_monolithic() {
+        let table = EmbeddingTable::random(90, 8, 17);
+        let mut rng = Pcg32::seeded(3);
+        let batch = table.synth_batch(5, 6, 1.1, &mut rng);
+        let mut want = vec![0f32; 5 * 8];
+        table.sparse_lengths_sum_exact(&batch, &mut want);
+
+        let servers = servers(3);
+        let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+        let svc = EmbeddingShardService::start(SparseTierConfig {
+            shards: 3,
+            replication: 1,
+            cache_capacity_rows: 16,
+            admit_after: 1,
+            remote_shards: addrs,
+        })
+        .unwrap();
+        let id = svc.register_table("net/emb", &table, false).unwrap();
+        assert!(servers.iter().all(|s| s.table_count() == 1));
+        for pass in 0..2 {
+            let mut got = vec![0f32; 5 * 8];
+            svc.lookup(id, &batch, &mut got).unwrap();
+            assert_eq!(got, want, "pass {pass}");
+        }
+        // boundary traffic showed up on the server side
+        let total: u64 = servers.iter().map(|s| s.stats().ingress_bytes).sum();
+        assert!(total > 0, "shard servers saw no ingress");
+        for s in servers {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn killed_shard_process_fails_over_to_its_replica() {
+        let table = EmbeddingTable::random(60, 4, 5);
+        let mut rng = Pcg32::seeded(9);
+        let batch = table.synth_batch(4, 5, 1.1, &mut rng);
+        let mut want = vec![0f32; 4 * 4];
+        table.sparse_lengths_sum_exact(&batch, &mut want);
+
+        // 2 ranges x 2 replicas, all remote
+        let servers = servers(4);
+        let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+        let svc = EmbeddingShardService::start(SparseTierConfig {
+            shards: 4,
+            replication: 2,
+            cache_capacity_rows: 0,
+            admit_after: 1,
+            remote_shards: addrs,
+        })
+        .unwrap();
+        let id = svc.register_table("net/emb", &table, false).unwrap();
+        let mut got = vec![0f32; 4 * 4];
+        svc.lookup(id, &batch, &mut got).unwrap();
+        assert_eq!(got, want, "healthy fleet");
+
+        // kill replica 0 of range 0 (transport slot 0)
+        servers[0].shutdown();
+        for pass in 0..4 {
+            let mut got = vec![0f32; 4 * 4];
+            svc.lookup(id, &batch, &mut got).unwrap();
+            assert_eq!(got, want, "after kill, pass {pass}");
+        }
+        assert!(svc.snapshot().failovers > 0, "failover path exercised");
+    }
+
+    #[test]
+    fn shard_errors_come_back_typed_not_as_closed_connections() {
+        let server = ShardServer::bind("127.0.0.1:0", ShardServerConfig::default()).unwrap();
+        let remote = RemoteShard::connect(&server.local_addr().to_string()).unwrap();
+        // pooling an unregistered table: typed error on the same corr
+        let err = remote
+            .pool("ghost", false, &[1], &[0])
+            .recv()
+            .expect("connection must stay open")
+            .expect_err("unknown table must error");
+        assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+        // the connection is still usable afterwards
+        remote
+            .register("t", false, 0, 2, &[1.0, 2.0, 3.0, 4.0])
+            .recv()
+            .expect("connection alive")
+            .expect("register ok");
+        let partial = remote.pool("t", false, &[2], &[0, 1]).recv().unwrap().unwrap();
+        assert_eq!(partial, vec![4.0, 6.0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn register_is_idempotent_across_replicas_and_geometry_checked() {
+        let server = ShardServer::bind("127.0.0.1:0", ShardServerConfig::default()).unwrap();
+        let addr = server.local_addr().to_string();
+        // two clients (as two serving replicas would be)
+        let a = RemoteShard::connect(&addr).unwrap();
+        let b = RemoteShard::connect(&addr).unwrap();
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        a.register("shared", false, 4, 2, &data).recv().unwrap().unwrap();
+        b.register("shared", false, 4, 2, &data).recv().unwrap().unwrap();
+        assert_eq!(server.table_count(), 1, "one copy despite two registrants");
+        let err = b
+            .register("shared", false, 0, 2, &data)
+            .recv()
+            .unwrap()
+            .expect_err("geometry drift refused");
+        assert!(format!("{err:#}").contains("geometry"), "{err:#}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn dead_connection_disconnects_pending_ops_and_stays_dead() {
+        let server = ShardServer::bind("127.0.0.1:0", ShardServerConfig::default()).unwrap();
+        let remote = Arc::new(RemoteShard::connect(&server.local_addr().to_string()).unwrap());
+        server.shutdown();
+        // ops against the dead server disconnect rather than hang
+        let rx = remote.pool("t", false, &[1], &[0]);
+        assert!(rx.recv().is_err(), "dead shard must disconnect the waiter");
+        let rx = remote.fetch("t", false, &[0]);
+        assert!(rx.recv().is_err(), "stays dead");
+    }
+
+    #[test]
+    fn ping_is_answered_and_non_shard_kinds_close_the_connection() {
+        use std::io::BufRead as _;
+        let server = ShardServer::bind("127.0.0.1:0", ShardServerConfig::default()).unwrap();
+        let stream = TcpStream::connect(server.local_addr()).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        wire::write_frame(&mut w, FrameKind::Ping, 77, &[]).unwrap();
+        let pong = wire::read_frame(&mut r, wire::DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!(pong.kind, FrameKind::Pong);
+        assert_eq!(pong.corr, 77);
+        // a serving-plane Request frame is not this server's protocol
+        wire::write_frame(&mut w, FrameKind::Request, 1, &[]).unwrap();
+        // the server closes: read returns EOF (clean close)
+        assert!(r.fill_buf().map(|b| b.is_empty()).unwrap_or(true));
+        server.shutdown();
+    }
+}

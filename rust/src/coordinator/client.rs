@@ -213,6 +213,7 @@ fn reader_loop(stream: TcpStream, pending: Arc<Mutex<HashMap<u64, PendingEntry>>
                 batch_size: 0,
                 variant: String::new(),
                 backend: String::new(),
+                replica: String::new(),
             },
         });
     }

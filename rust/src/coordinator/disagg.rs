@@ -26,6 +26,15 @@ impl DisaggReport {
     pub fn total_gbps(&self) -> f64 {
         (self.ingress_bytes_s + self.egress_bytes_s) / 1e9
     }
+
+    /// Analytic per-inference boundary traffic `(ingress, egress)` in
+    /// bytes — the rate-independent cost of one request crossing the
+    /// tier. `benches/e2e_cluster` compares this §4 estimate against
+    /// the bytes a real shard server counted on its socket.
+    pub fn per_inference_bytes(&self) -> (f64, f64) {
+        let per_s = self.inferences_per_s.max(1e-30);
+        (self.ingress_bytes_s / per_s, self.egress_bytes_s / per_s)
+    }
 }
 
 /// Per-inference wire sizes: the model input (first layer activations

@@ -622,6 +622,7 @@ impl LaneWorker {
                             batch_size: n,
                             variant: name.clone(),
                             backend: backend.clone(),
+                            replica: String::new(),
                         });
                     }
                 }
@@ -640,6 +641,7 @@ impl LaneWorker {
                             batch_size: n,
                             variant: name.clone(),
                             backend: fallback_label.clone(),
+                            replica: String::new(),
                         });
                     }
                 }
@@ -669,6 +671,7 @@ impl LaneWorker {
                 batch_size: requests.len(),
                 variant: variant_name.to_string(),
                 backend: self.backend_label.clone(),
+                replica: String::new(),
             });
         }
     }

@@ -87,6 +87,12 @@ pub struct InferResponse {
     pub variant: String,
     /// which backend/precision executed it (e.g. `"native/i8acc16"`)
     pub backend: String,
+    /// which serving replica answered, when the response crossed the
+    /// network (stamped by [`super::server::ServingServer`] from
+    /// [`super::server::ServerConfig::replica_label`]; empty for
+    /// in-process submissions) — this is what lets `dcinfer loadgen`
+    /// attribute responses per replica and observe cluster failover
+    pub replica: String,
 }
 
 impl InferResponse {
@@ -134,6 +140,7 @@ mod tests {
             batch_size: 4,
             variant: "m_b4".into(),
             backend: "native/fp32".into(),
+            replica: String::new(),
         };
         assert_eq!(resp.scalar_f32(), Some(0.25));
         assert!((resp.total_us() - 100.0).abs() < 1e-12);
@@ -150,6 +157,7 @@ mod tests {
             batch_size: 0,
             variant: String::new(),
             backend: String::new(),
+            replica: String::new(),
         };
         assert!(!resp.is_ok());
         assert_eq!(resp.scalar_f32(), None);

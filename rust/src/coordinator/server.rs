@@ -17,6 +17,8 @@
 //!   rejections) funnels through one channel into the writer, so the
 //!   channel's disconnect doubles as the drain barrier: the writer
 //!   exits only after the last in-flight response is on the wire.
+//!   `Ping` frames ride the same channel and come back as `Pong` —
+//!   the health probe a [`crate::cluster::ClusterRouter`] uses.
 //!
 //! Malformed frames never panic the server: an undecodable payload in
 //! an intact frame is answered with a `BadRequest` response on the same
@@ -52,11 +54,19 @@ pub struct ServerConfig {
     pub max_frame_bytes: u32,
     /// accept-loop poll interval while idle
     pub poll: Duration,
+    /// stamped into every response's `replica` field so clients (and
+    /// `dcinfer loadgen`) can attribute answers per replica when this
+    /// server is one of a fleet; empty = leave responses unstamped
+    pub replica_label: String,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_frame_bytes: wire::DEFAULT_MAX_FRAME, poll: Duration::from_millis(20) }
+        ServerConfig {
+            max_frame_bytes: wire::DEFAULT_MAX_FRAME,
+            poll: Duration::from_millis(20),
+            replica_label: String::new(),
+        }
     }
 }
 
@@ -64,6 +74,7 @@ struct ConnHandles {
     stream: TcpStream,
     reader: JoinHandle<()>,
     writer: JoinHandle<()>,
+    pump: JoinHandle<()>,
 }
 
 /// A running TCP ingress over a shared [`ServingFrontend`].
@@ -139,6 +150,7 @@ impl ServingServer {
         for c in conns {
             let _ = c.reader.join();
             let _ = c.writer.join();
+            let _ = c.pump.join();
         }
     }
 }
@@ -161,12 +173,16 @@ fn accept_loop(
         match listener.accept() {
             Ok((stream, _peer)) => {
                 accepted.fetch_add(1, Ordering::SeqCst);
-                match spawn_conn(stream, &frontend, cfg.max_frame_bytes) {
+                match spawn_conn(stream, &frontend, &cfg) {
                     Ok(conn) => {
                         let mut g = conns.lock().unwrap();
                         // reap finished connections so a long-lived
                         // server doesn't accumulate handles
-                        g.retain(|c| !(c.reader.is_finished() && c.writer.is_finished()));
+                        g.retain(|c| {
+                            !(c.reader.is_finished()
+                                && c.writer.is_finished()
+                                && c.pump.is_finished())
+                        });
                         g.push(conn);
                     }
                     Err(e) => eprintln!("serving server: connection setup failed: {e:#}"),
@@ -181,10 +197,17 @@ fn accept_loop(
     }
 }
 
+/// What travels to a connection's writer thread: a response to encode,
+/// or a health-probe pong to echo (corr only, no payload).
+enum Outbound {
+    Resp(InferResponse),
+    Pong(u64),
+}
+
 fn spawn_conn(
     stream: TcpStream,
     frontend: &Arc<ServingFrontend>,
-    max_frame: u32,
+    cfg: &ServerConfig,
 ) -> Result<ConnHandles> {
     // a listener in non-blocking mode can hand out non-blocking streams
     // on some platforms; the connection threads want blocking i/o
@@ -194,22 +217,44 @@ fn spawn_conn(
     let _ = stream.set_nodelay(true);
     let read_half = stream.try_clone().context("cloning connection for reads")?;
     let write_half = stream.try_clone().context("cloning connection for writes")?;
-    let (done_tx, done_rx) = channel::<InferResponse>();
+    let (done_tx, done_rx) = channel::<Outbound>();
+    // the frontend's completion path is typed `Sender<InferResponse>`;
+    // a pump thread wraps those into `Outbound` so the writer keeps a
+    // single inbox. The drain barrier survives: the pump exits only
+    // after the last lane-held sender clone is gone, and the writer
+    // only after both the reader's and the pump's `Outbound` senders
+    // are gone.
+    let (resp_tx, resp_rx) = channel::<InferResponse>();
+    let pump = {
+        let done = done_tx.clone();
+        std::thread::Builder::new()
+            .name("dcserve-pump".into())
+            .spawn(move || {
+                while let Ok(resp) = resp_rx.recv() {
+                    if done.send(Outbound::Resp(resp)).is_err() {
+                        break; // writer gone; nothing left to deliver to
+                    }
+                }
+            })
+            .context("spawning connection response pump")?
+    };
     // corr -> the client's original request id (responses travel with
     // the corr in `id` until the writer restores the user id)
     let ids: Arc<Mutex<HashMap<u64, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    let max_frame = cfg.max_frame_bytes;
     let reader = {
         let (frontend, ids) = (frontend.clone(), ids.clone());
         std::thread::Builder::new()
             .name("dcserve-read".into())
-            .spawn(move || conn_reader(read_half, frontend, done_tx, ids, max_frame))
+            .spawn(move || conn_reader(read_half, frontend, done_tx, resp_tx, ids, max_frame))
             .context("spawning connection reader")?
     };
+    let label = cfg.replica_label.clone();
     let writer = std::thread::Builder::new()
         .name("dcserve-write".into())
-        .spawn(move || conn_writer(write_half, done_rx, ids))
+        .spawn(move || conn_writer(write_half, done_rx, ids, label))
         .context("spawning connection writer")?;
-    Ok(ConnHandles { stream, reader, writer })
+    Ok(ConnHandles { stream, reader, writer, pump })
 }
 
 /// An immediately-synthesized response (admission shed, unknown model,
@@ -225,13 +270,15 @@ fn synth_response(corr: u64, model: &str, err: InferError) -> InferResponse {
         batch_size: 0,
         variant: String::new(),
         backend: String::new(),
+        replica: String::new(),
     }
 }
 
 fn conn_reader(
     stream: TcpStream,
     frontend: Arc<ServingFrontend>,
-    done: Sender<InferResponse>,
+    done: Sender<Outbound>,
+    resp_tx: Sender<InferResponse>,
     ids: Arc<Mutex<HashMap<u64, u64>>>,
     max_frame: u32,
 ) {
@@ -252,6 +299,14 @@ fn conn_reader(
                 break;
             }
         };
+        if frame.kind == FrameKind::Ping {
+            // health probe (e.g. a ClusterRouter's prober): echo the
+            // corr back out-of-band with the response stream
+            if done.send(Outbound::Pong(frame.corr)).is_err() {
+                break;
+            }
+            continue;
+        }
         if frame.kind != FrameKind::Request {
             eprintln!("serving server: unexpected frame kind from client, closing");
             break;
@@ -276,10 +331,10 @@ fn conn_reader(
                 // the queueing-delay reference point for this request
                 req.id = corr;
                 let model = req.model.clone();
-                if let Err(e) = frontend.submit_with(req, done.clone()) {
+                if let Err(e) = frontend.submit_with(req, resp_tx.clone()) {
                     // shed / rejected synchronously: answer on the same
                     // response path, out-of-order with everything else
-                    let _ = done.send(synth_response(corr, &model, e));
+                    let _ = done.send(Outbound::Resp(synth_response(corr, &model, e)));
                 }
             }
             Err(e) => {
@@ -293,7 +348,7 @@ fn conn_reader(
                 g.insert(corr, 0);
                 drop(g);
                 let err = InferError::BadRequest(format!("undecodable request: {e}"));
-                let _ = done.send(synth_response(corr, "", err));
+                let _ = done.send(Outbound::Resp(synth_response(corr, "", err)));
             }
         }
     }
@@ -303,8 +358,9 @@ fn conn_reader(
 
 fn conn_writer(
     stream: TcpStream,
-    done: Receiver<InferResponse>,
+    done: Receiver<Outbound>,
     ids: Arc<Mutex<HashMap<u64, u64>>>,
+    replica_label: String,
 ) {
     // the registry holds another clone of this socket, so dropping the
     // BufWriter alone would leave the connection half-alive; close it
@@ -314,11 +370,20 @@ fn conn_writer(
     'stream: while let Ok(first) = done.recv() {
         let mut next = Some(first);
         // drain everything already queued before paying for a flush
-        while let Some(mut resp) = next.take() {
-            let corr = resp.id;
-            resp.id = ids.lock().unwrap().remove(&corr).unwrap_or(0);
-            let payload = wire::encode_response(&resp);
-            if wire::write_frame(&mut w, FrameKind::Response, corr, &payload).is_err() {
+        while let Some(out) = next.take() {
+            let wrote = match out {
+                Outbound::Resp(mut resp) => {
+                    let corr = resp.id;
+                    resp.id = ids.lock().unwrap().remove(&corr).unwrap_or(0);
+                    if !replica_label.is_empty() {
+                        resp.replica = replica_label.clone();
+                    }
+                    let payload = wire::encode_response(&resp);
+                    wire::write_frame(&mut w, FrameKind::Response, corr, &payload)
+                }
+                Outbound::Pong(corr) => wire::write_frame(&mut w, FrameKind::Pong, corr, &[]),
+            };
+            if wrote.is_err() {
                 break 'stream; // client gone; lane sends just no-op now
             }
             match done.try_recv() {

@@ -9,8 +9,9 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic "DCWF"
-//! 4       1     version (1)
-//! 5       1     kind: 1 = request, 2 = response
+//! 4       1     version (2)
+//! 5       1     kind: 1 = request, 2 = response, 3 = shard request,
+//!               4 = shard response, 5 = ping, 6 = pong
 //! 6       2     reserved (0)
 //! 8       4     payload length (u32 LE)
 //! 12      8     correlation id (u64 LE)
@@ -24,12 +25,19 @@
 //!
 //! Request payload: `id u64 · deadline_ms f64 · model str16 ·
 //! n_inputs u16 · tensor*`. Response payload: `id u64 · model str16 ·
-//! variant str16 · backend str16 · queue_us f64 · exec_us f64 ·
-//! batch_size u32 · tag u8` then, for `tag 0` (ok), `n_outputs u16 ·
-//! tensor*`, or for `tag 1` (error), `code u8 · message str16`. A
-//! `str16` is a u16 byte length plus UTF-8 bytes; a tensor is
-//! `dtype u8 · ndim u8 · dim u32 * ndim · data_len u32 · data`
-//! covering every [`DType`] the artifacts use (f32, i8, i32).
+//! variant str16 · backend str16 · replica str16 · queue_us f64 ·
+//! exec_us f64 · batch_size u32 · tag u8` then, for `tag 0` (ok),
+//! `n_outputs u16 · tensor*`, or for `tag 1` (error), `code u8 ·
+//! message str16`. A `str16` is a u16 byte length plus UTF-8 bytes; a
+//! tensor is `dtype u8 · ndim u8 · dim u32 * ndim · data_len u32 ·
+//! data` covering every [`DType`] the artifacts use (f32, i8, i32).
+//!
+//! Version 2 (the cluster plane) added the `replica` response field,
+//! the shard-lookup frames (kinds 3/4 — [`ShardLookupRequest`] /
+//! [`ShardLookupResponse`], carrying pooled **f64** partial sums so
+//! the sparse tier's placement-invariance contract survives the
+//! network bit-identically), and the ping/pong health-check frames
+//! (kinds 5/6, empty payloads, correlation id echoed).
 //!
 //! Decoding is total: malformed, truncated and oversized frames come
 //! back as a typed [`WireError`], never a panic, and a frame's declared
@@ -62,7 +70,7 @@ use super::request::{InferError, InferRequest, InferResponse};
 /// First four bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"DCWF";
 /// Protocol version this build speaks.
-pub const VERSION: u8 = 1;
+pub const VERSION: u8 = 2;
 /// Fixed frame-header size in bytes.
 pub const HEADER_LEN: usize = 20;
 /// Default bound on a frame's payload length (64 MiB) — far above any
@@ -75,6 +83,14 @@ pub const DEFAULT_MAX_FRAME: u32 = 64 * 1024 * 1024;
 pub enum FrameKind {
     Request,
     Response,
+    /// a shard-lookup op toward an embedding shard server (kind 3)
+    ShardRequest,
+    /// a shard server's answer (kind 4)
+    ShardResponse,
+    /// health-check probe: empty payload, corr echoed on the pong
+    Ping,
+    /// health-check answer
+    Pong,
 }
 
 impl FrameKind {
@@ -82,6 +98,10 @@ impl FrameKind {
         match self {
             FrameKind::Request => 1,
             FrameKind::Response => 2,
+            FrameKind::ShardRequest => 3,
+            FrameKind::ShardResponse => 4,
+            FrameKind::Ping => 5,
+            FrameKind::Pong => 6,
         }
     }
 
@@ -89,6 +109,10 @@ impl FrameKind {
         match c {
             1 => Ok(FrameKind::Request),
             2 => Ok(FrameKind::Response),
+            3 => Ok(FrameKind::ShardRequest),
+            4 => Ok(FrameKind::ShardResponse),
+            5 => Ok(FrameKind::Ping),
+            6 => Ok(FrameKind::Pong),
             other => Err(WireError::BadFrameKind(other)),
         }
     }
@@ -422,6 +446,7 @@ pub fn encode_response(resp: &InferResponse) -> Vec<u8> {
     put_str16(&mut out, &resp.model);
     put_str16(&mut out, &resp.variant);
     put_str16(&mut out, &resp.backend);
+    put_str16(&mut out, &resp.replica);
     out.extend_from_slice(&resp.queue_us.to_bits().to_le_bytes());
     out.extend_from_slice(&resp.exec_us.to_bits().to_le_bytes());
     out.extend_from_slice(&(resp.batch_size as u32).to_le_bytes());
@@ -450,6 +475,7 @@ pub fn decode_response(payload: &[u8]) -> Result<InferResponse, WireError> {
     let model = c.str16()?;
     let variant = c.str16()?;
     let backend = c.str16()?;
+    let replica = c.str16()?;
     let queue_us = c.f64()?;
     let exec_us = c.f64()?;
     let batch_size = c.u32()? as usize;
@@ -470,7 +496,243 @@ pub fn decode_response(payload: &[u8]) -> Result<InferResponse, WireError> {
         other => return Err(WireError::BadPayload(format!("unknown outcome tag {other}"))),
     };
     c.done()?;
-    Ok(InferResponse { id, model, outcome, queue_us, exec_us, batch_size, variant, backend })
+    Ok(InferResponse {
+        id,
+        model,
+        outcome,
+        queue_us,
+        exec_us,
+        batch_size,
+        variant,
+        backend,
+        replica,
+    })
+}
+
+/// Read just the `(id, deadline_ms)` head of a request payload without
+/// copying its tensors — what a [`crate::cluster::ClusterRouter`] needs
+/// to judge retry-within-deadline while forwarding payloads verbatim.
+pub fn peek_request_deadline(payload: &[u8]) -> Result<(u64, f64), WireError> {
+    let mut c = Cur { buf: payload, pos: 0 };
+    let id = c.u64()?;
+    let deadline_ms = c.f64()?;
+    if !deadline_ms.is_finite() {
+        return Err(WireError::BadPayload("non-finite deadline".into()));
+    }
+    Ok((id, deadline_ms))
+}
+
+// ---------------------------------------------------------------------------
+// shard-lookup codecs (the cluster plane's sparse-tier boundary)
+// ---------------------------------------------------------------------------
+
+/// One op toward an embedding shard server (carried in a
+/// [`FrameKind::ShardRequest`] frame). Tables are identified by their
+/// registration key + precision flag — string-keyed so independent
+/// serving replicas registering the same artifact set agree on
+/// identity without coordinating numeric ids.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardLookupRequest {
+    /// Install one contiguous row slice `[lo, lo + rows)` of a table
+    /// (rows inferred from `data.len() / dim`). Idempotent per
+    /// `(key, quantized)`: re-registration by another replica must
+    /// match the slice geometry and is otherwise a no-op.
+    Register { key: String, quantized: bool, lo: u32, dim: u32, data: Vec<f32> },
+    /// Pooled partial sums over this shard's slice: `lengths[bag]`
+    /// global row ids from `indices` accumulate into bag `bag`.
+    Pool { key: String, quantized: bool, lengths: Vec<u32>, indices: Vec<u32> },
+    /// Full (dequantized) rows for hot-row-cache admission.
+    Fetch { key: String, quantized: bool, rows: Vec<u32> },
+}
+
+/// A shard server's answer (carried in a [`FrameKind::ShardResponse`]
+/// frame, corr echoed from the request).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardLookupResponse {
+    Registered,
+    /// Pooled partial sums in **f64**: the tier's one-final-rounding
+    /// placement-invariance contract holds bit-identically whether the
+    /// partials crossed a channel or this wire.
+    Pooled(Vec<f64>),
+    Rows(Vec<f32>),
+    Error(String),
+}
+
+fn put_u32s(out: &mut Vec<u8>, v: &[u32]) {
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn take_u32s(c: &mut Cur, what: &str) -> Result<Vec<u32>, WireError> {
+    let n = c.u32()? as usize;
+    // bound-check before allocation: the bytes must actually be here
+    let raw = c.take(n.checked_mul(4).ok_or_else(|| {
+        WireError::BadPayload(format!("{what} length overflows"))
+    })?)?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes(b.try_into().expect("4-byte chunk")))
+        .collect())
+}
+
+fn put_table_id(out: &mut Vec<u8>, key: &str, quantized: bool) {
+    put_str16(out, key);
+    out.push(quantized as u8);
+}
+
+fn take_table_id(c: &mut Cur) -> Result<(String, bool), WireError> {
+    let key = c.str16()?;
+    let quantized = match c.u8()? {
+        0 => false,
+        1 => true,
+        other => return Err(WireError::BadPayload(format!("bad quantized flag {other}"))),
+    };
+    Ok((key, quantized))
+}
+
+/// Encode a shard-lookup request payload (frame it as
+/// [`FrameKind::ShardRequest`]).
+pub fn encode_shard_request(req: &ShardLookupRequest) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    match req {
+        ShardLookupRequest::Register { key, quantized, lo, dim, data } => {
+            out.push(0);
+            put_table_id(&mut out, key, *quantized);
+            out.extend_from_slice(&lo.to_le_bytes());
+            out.extend_from_slice(&dim.to_le_bytes());
+            out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            out.reserve(data.len() * 4);
+            for &x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        ShardLookupRequest::Pool { key, quantized, lengths, indices } => {
+            out.push(1);
+            put_table_id(&mut out, key, *quantized);
+            put_u32s(&mut out, lengths);
+            put_u32s(&mut out, indices);
+        }
+        ShardLookupRequest::Fetch { key, quantized, rows } => {
+            out.push(2);
+            put_table_id(&mut out, key, *quantized);
+            put_u32s(&mut out, rows);
+        }
+    }
+    out
+}
+
+/// Decode a shard-lookup request payload.
+pub fn decode_shard_request(payload: &[u8]) -> Result<ShardLookupRequest, WireError> {
+    let mut c = Cur { buf: payload, pos: 0 };
+    let req = match c.u8()? {
+        0 => {
+            let (key, quantized) = take_table_id(&mut c)?;
+            let lo = c.u32()?;
+            let dim = c.u32()?;
+            let n = c.u32()? as usize;
+            let raw = c.take(n.checked_mul(4).ok_or_else(|| {
+                WireError::BadPayload("register data length overflows".into())
+            })?)?;
+            if dim == 0 || n % dim as usize != 0 {
+                return Err(WireError::BadPayload(format!(
+                    "register carries {n} elements, not a multiple of dim {dim}"
+                )));
+            }
+            let data = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().expect("4-byte chunk")))
+                .collect();
+            ShardLookupRequest::Register { key, quantized, lo, dim, data }
+        }
+        1 => {
+            let (key, quantized) = take_table_id(&mut c)?;
+            let lengths = take_u32s(&mut c, "lengths")?;
+            let indices = take_u32s(&mut c, "indices")?;
+            let total: u64 = lengths.iter().map(|&l| l as u64).sum();
+            if total != indices.len() as u64 {
+                return Err(WireError::BadPayload(format!(
+                    "pool lengths cover {total} indices, payload carries {}",
+                    indices.len()
+                )));
+            }
+            ShardLookupRequest::Pool { key, quantized, lengths, indices }
+        }
+        2 => {
+            let (key, quantized) = take_table_id(&mut c)?;
+            let rows = take_u32s(&mut c, "rows")?;
+            ShardLookupRequest::Fetch { key, quantized, rows }
+        }
+        other => return Err(WireError::BadPayload(format!("unknown shard op {other}"))),
+    };
+    c.done()?;
+    Ok(req)
+}
+
+/// Encode a shard-lookup response payload (frame it as
+/// [`FrameKind::ShardResponse`]).
+pub fn encode_shard_response(resp: &ShardLookupResponse) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32);
+    match resp {
+        ShardLookupResponse::Registered => out.push(0),
+        ShardLookupResponse::Pooled(partials) => {
+            out.push(1);
+            out.extend_from_slice(&(partials.len() as u32).to_le_bytes());
+            out.reserve(partials.len() * 8);
+            for &p in partials {
+                out.extend_from_slice(&p.to_bits().to_le_bytes());
+            }
+        }
+        ShardLookupResponse::Rows(rows) => {
+            out.push(2);
+            out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+            out.reserve(rows.len() * 4);
+            for &r in rows {
+                out.extend_from_slice(&r.to_le_bytes());
+            }
+        }
+        ShardLookupResponse::Error(msg) => {
+            out.push(3);
+            put_str16(&mut out, msg);
+        }
+    }
+    out
+}
+
+/// Decode a shard-lookup response payload.
+pub fn decode_shard_response(payload: &[u8]) -> Result<ShardLookupResponse, WireError> {
+    let mut c = Cur { buf: payload, pos: 0 };
+    let resp = match c.u8()? {
+        0 => ShardLookupResponse::Registered,
+        1 => {
+            let n = c.u32()? as usize;
+            let raw = c.take(n.checked_mul(8).ok_or_else(|| {
+                WireError::BadPayload("partials length overflows".into())
+            })?)?;
+            ShardLookupResponse::Pooled(
+                raw.chunks_exact(8)
+                    .map(|b| b.try_into().expect("8-byte chunk"))
+                    .map(|b| f64::from_bits(u64::from_le_bytes(b)))
+                    .collect(),
+            )
+        }
+        2 => {
+            let n = c.u32()? as usize;
+            let raw = c.take(n.checked_mul(4).ok_or_else(|| {
+                WireError::BadPayload("rows length overflows".into())
+            })?)?;
+            ShardLookupResponse::Rows(
+                raw.chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().expect("4-byte chunk")))
+                    .collect(),
+            )
+        }
+        3 => ShardLookupResponse::Error(c.str16()?),
+        other => return Err(WireError::BadPayload(format!("unknown shard outcome {other}"))),
+    };
+    c.done()?;
+    Ok(resp)
 }
 
 #[cfg(test)]
@@ -487,6 +749,7 @@ mod tests {
             batch_size: 16,
             variant: "recsys_fp32_b16".into(),
             backend: "native/fp32".into(),
+            replica: "replica-1".into(),
         }
     }
 
@@ -530,8 +793,93 @@ mod tests {
         assert_eq!(back.id, 3);
         assert_eq!(back.variant, r.variant);
         assert_eq!(back.backend, r.backend);
+        assert_eq!(back.replica, "replica-1");
         assert_eq!(back.batch_size, 16);
         assert_eq!(back.outcome.unwrap()[0].data, r.outcome.unwrap()[0].data);
+    }
+
+    #[test]
+    fn shard_request_payloads_round_trip() {
+        for req in [
+            ShardLookupRequest::Register {
+                key: "recsys/emb_0".into(),
+                quantized: false,
+                lo: 250,
+                dim: 4,
+                data: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE, 3.0, 4.0, 5.0, 6.0],
+            },
+            ShardLookupRequest::Pool {
+                key: "recsys/emb_1".into(),
+                quantized: true,
+                lengths: vec![2, 0, 1],
+                indices: vec![7, 300, 9],
+            },
+            ShardLookupRequest::Fetch {
+                key: "m/emb".into(),
+                quantized: false,
+                rows: vec![0, u32::MAX],
+            },
+        ] {
+            let back = decode_shard_request(&encode_shard_request(&req)).unwrap();
+            assert_eq!(back, req);
+        }
+    }
+
+    #[test]
+    fn shard_response_payloads_round_trip() {
+        for resp in [
+            ShardLookupResponse::Registered,
+            // f64 bit patterns must survive exactly — the
+            // placement-invariance contract over the wire
+            ShardLookupResponse::Pooled(vec![0.1 + 0.2, -0.0, f64::MIN_POSITIVE, 1e300]),
+            ShardLookupResponse::Rows(vec![1.5, -2.25]),
+            ShardLookupResponse::Error("row 7 is not on this shard".into()),
+        ] {
+            let back = decode_shard_response(&encode_shard_response(&resp)).unwrap();
+            assert_eq!(back, resp);
+        }
+    }
+
+    #[test]
+    fn shard_payload_lies_are_typed_errors() {
+        // lengths that don't cover the indices
+        let bad = encode_shard_request(&ShardLookupRequest::Pool {
+            key: "t".into(),
+            quantized: false,
+            lengths: vec![3],
+            indices: vec![1, 2],
+        });
+        assert!(matches!(decode_shard_request(&bad), Err(WireError::BadPayload(_))));
+        // unknown op / outcome tags
+        assert!(matches!(decode_shard_request(&[9]), Err(WireError::BadPayload(_))));
+        assert!(matches!(decode_shard_response(&[9]), Err(WireError::BadPayload(_))));
+        // every truncation of a valid pool request is typed, not a panic
+        let good = encode_shard_request(&ShardLookupRequest::Pool {
+            key: "t/emb".into(),
+            quantized: true,
+            lengths: vec![1, 1],
+            indices: vec![4, 5],
+        });
+        for cut in 0..good.len() {
+            let e = decode_shard_request(&good[..cut]).unwrap_err();
+            assert!(
+                matches!(e, WireError::Truncated { .. } | WireError::BadPayload(_)),
+                "cut {cut}: {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn peek_reads_deadline_without_tensors() {
+        let req = InferRequest::new(
+            "m",
+            12,
+            vec![HostTensor::from_f32(&[2], &[1.0, 2.0])],
+            44.5,
+        );
+        let payload = encode_request(&req);
+        assert_eq!(peek_request_deadline(&payload).unwrap(), (12, 44.5));
+        assert!(peek_request_deadline(&payload[..4]).is_err());
     }
 
     #[test]

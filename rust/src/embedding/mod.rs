@@ -20,7 +20,10 @@ pub mod table;
 
 pub use cache::HotRowCache;
 pub use quantized::QuantizedTable;
-pub use shard::{EmbeddingShardService, ShardPlan, SparseTierConfig, SparseTierSnapshot};
+pub use shard::{
+    EmbeddingShardService, ShardPlan, ShardStore, ShardTransport, SparseTierConfig,
+    SparseTierSnapshot,
+};
 pub use table::EmbeddingTable;
 
 /// A batch of pooled lookups: `indices[bag]` are the rows summed into

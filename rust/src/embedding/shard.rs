@@ -15,11 +15,22 @@
 //! - [`ShardPlan`]: contiguous row ranges per shard (the same even
 //!   split the AOT compiler records in the manifest's per-table
 //!   `sparse_shards` metadata).
-//! - [`EmbeddingShardService`]: N in-process shard servers (one thread
-//!   each, the [`crate::runtime::Executor`] shape), each owning its row
-//!   slice at fp32 or int8 row-wise quantized precision, plus the
-//!   routing client. Tables register once and are shared by every
-//!   executor of a [`crate::coordinator::ServingFrontend`].
+//! - [`ShardStore`]: the storage + pooling math one shard owns — a
+//!   string-keyed map of table slices at fp32 or int8 row-wise
+//!   quantized precision. Shared verbatim by the in-process shard
+//!   threads here and by [`crate::cluster::shard_server::ShardServer`],
+//!   the standalone TCP shard process.
+//! - [`ShardTransport`]: how the routing client reaches a shard. The
+//!   default is [`SparseTierConfig::remote_shards`] empty — one local
+//!   thread per shard (the [`crate::runtime::Executor`] shape). With
+//!   `remote_shards` set, each slot is a TCP connection to a
+//!   `dcinfer shard-serve` process instead; the lookup path is
+//!   identical either way.
+//! - [`EmbeddingShardService`]: the routing client. Tables register
+//!   once and are shared by every executor of a
+//!   [`crate::coordinator::ServingFrontend`]; pooled lookups fan out
+//!   per row range, fail over to replica shards on a dead or erroring
+//!   transport, and reduce in f64.
 //! - [`super::cache::HotRowCache`]: a bounded dequantized-row cache in
 //!   front of the shards with frequency-gated admission, absorbing the
 //!   zipf head of the id distribution.
@@ -30,11 +41,12 @@
 //! for embedding rows of comparable magnitude (the trained-table case:
 //! the f64 mantissa's 29 extra bits dominate any reordering error of a
 //! bag's worth of same-scale f32 values) the result does not depend on
-//! shard count, replication, or cache state — resharding a tier does
-//! not change model outputs. Pathological inputs mixing ~1e8 and ~1e-3
-//! magnitudes in one bag can still flip the last ulp between
-//! orderings; the guarantee is about realistic tables, not adversarial
-//! ones. The monolithic reference for this contract is
+//! shard count, replication, cache state, or *placement* — local
+//! threads and remote shard processes return bit-identical outputs
+//! (partials cross the wire as f64 bit patterns). Pathological inputs
+//! mixing ~1e8 and ~1e-3 magnitudes in one bag can still flip the last
+//! ulp between orderings; the guarantee is about realistic tables, not
+//! adversarial ones. The monolithic reference for this contract is
 //! [`super::EmbeddingTable::sparse_lengths_sum_exact`], and the
 //! `sparse_tier` integration tests (deterministic seeds, N(0,1/√dim)
 //! tables) hold every (shards, replication, cache) configuration to
@@ -59,7 +71,7 @@ use super::LookupBatch;
 /// [`crate::coordinator::FrontendConfig::sparse_tier`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SparseTierConfig {
-    /// total in-process shard servers
+    /// total shard servers (threads, or remote processes)
     pub shards: usize,
     /// shards holding a copy of each row range (must divide `shards`)
     pub replication: usize,
@@ -67,11 +79,21 @@ pub struct SparseTierConfig {
     pub cache_capacity_rows: usize,
     /// misses before a row is fetched and cached (admission filter)
     pub admit_after: u8,
+    /// empty (the default): in-process shard threads. Otherwise exactly
+    /// `shards` addresses of `dcinfer shard-serve` processes; slot
+    /// `g + k * ranges()` is replica `k` of row range `g`.
+    pub remote_shards: Vec<String>,
 }
 
 impl Default for SparseTierConfig {
     fn default() -> Self {
-        SparseTierConfig { shards: 4, replication: 1, cache_capacity_rows: 4096, admit_after: 2 }
+        SparseTierConfig {
+            shards: 4,
+            replication: 1,
+            cache_capacity_rows: 4096,
+            admit_after: 2,
+            remote_shards: Vec::new(),
+        }
     }
 }
 
@@ -85,6 +107,12 @@ impl SparseTierConfig {
             "shards ({}) must be a multiple of replication ({})",
             self.shards,
             self.replication
+        );
+        ensure!(
+            self.remote_shards.is_empty() || self.remote_shards.len() == self.shards,
+            "remote_shards lists {} addresses for {} shards",
+            self.remote_shards.len(),
+            self.shards
         );
         Ok(())
     }
@@ -159,28 +187,323 @@ impl LocalTable {
     }
 }
 
-enum ShardMsg {
-    Register {
-        table: usize,
+// ---------------------------------------------------------------------------
+// ShardStore: what one shard owns, independent of how it is reached
+// ---------------------------------------------------------------------------
+
+/// The storage and pooling math of one shard: table slices keyed by
+/// `(artifact key, quantized)` — the same identity the wire protocol
+/// carries, so independent processes agree on table names without
+/// coordinating numeric ids. Used by the in-process shard threads and
+/// by the standalone `dcinfer shard-serve` TCP process.
+#[derive(Default)]
+pub struct ShardStore {
+    tables: HashMap<(String, bool), LocalTable>,
+}
+
+impl ShardStore {
+    pub fn new() -> ShardStore {
+        ShardStore::default()
+    }
+
+    /// Install a slice (`data` is `rows x dim` row-major, rows starting
+    /// at global row `lo`). Idempotent: re-registering the same key
+    /// with identical geometry is a no-op (concurrent executors and
+    /// replica re-sends share one copy); a geometry mismatch is an
+    /// error, never a silent overwrite.
+    pub fn register(
+        &mut self,
+        key: &str,
+        quantized: bool,
         lo: u32,
         dim: usize,
         data: Vec<f32>,
+    ) -> Result<()> {
+        ensure!(dim > 0, "table {key}: dim must be positive");
+        ensure!(
+            data.len() % dim == 0,
+            "table {key}: {} values is not a whole number of dim-{dim} rows",
+            data.len()
+        );
+        let rows = data.len() / dim;
+        if let Some(existing) = self.tables.get(&(key.to_string(), quantized)) {
+            let (elo, erows, edim) = existing.dims();
+            ensure!(
+                elo == lo as usize && erows == rows && edim == dim,
+                "table {key} re-registered with different geometry \
+                 (have lo={elo} rows={erows} dim={edim}, got lo={lo} rows={rows} dim={dim})"
+            );
+            return Ok(());
+        }
+        let t = EmbeddingTable::new(rows, dim, data);
+        let local = if quantized {
+            LocalTable::Quant { lo, table: QuantizedTable::from_f32(&t) }
+        } else {
+            LocalTable::F32 { lo, table: t }
+        };
+        self.tables.insert((key.to_string(), quantized), local);
+        Ok(())
+    }
+
+    fn table(&self, key: &str, quantized: bool) -> Result<&LocalTable> {
+        self.tables
+            .get(&(key.to_string(), quantized))
+            .with_context(|| format!("shard holds no slice of table {key} (quantized={quantized})"))
+    }
+
+    /// Pooled partial sums over this shard's slice, f64-accumulated.
+    /// Indices are global row ids; `lengths` has one entry per bag.
+    pub fn pool(
+        &self,
+        key: &str,
         quantized: bool,
-        resp: Sender<()>,
+        lengths: &[u32],
+        indices: &[u32],
+    ) -> Result<Vec<f64>> {
+        let t = self.table(key, quantized)?;
+        let (lo, rows, dim) = t.dims();
+        let mut partial = vec![0f64; lengths.len() * dim];
+        let mut cursor = 0usize;
+        for (bag, &len) in lengths.iter().enumerate() {
+            let dst = &mut partial[bag * dim..(bag + 1) * dim];
+            for _ in 0..len {
+                let g = indices[cursor] as usize;
+                cursor += 1;
+                ensure!(
+                    g >= lo && g - lo < rows,
+                    "row {g} is not on this shard (slice {lo}..{})",
+                    lo + rows
+                );
+                match t {
+                    LocalTable::F32 { table, .. } => {
+                        for (d, v) in dst.iter_mut().zip(table.row(g - lo)) {
+                            *d += *v as f64;
+                        }
+                    }
+                    LocalTable::Quant { table, .. } => {
+                        let (qrow, scale, bias) = table.row(g - lo);
+                        let off = 128.0 * scale + bias;
+                        for (d, &q) in dst.iter_mut().zip(qrow) {
+                            *d += (q as f32 * scale + off) as f64;
+                        }
+                    }
+                }
+            }
+        }
+        ensure!(
+            cursor == indices.len(),
+            "sub-batch lengths cover {cursor} of {} indices",
+            indices.len()
+        );
+        Ok(partial)
+    }
+
+    /// Full (dequantized) rows for cache admission, in request order.
+    pub fn fetch(&self, key: &str, quantized: bool, wanted: &[u32]) -> Result<Vec<f32>> {
+        let t = self.table(key, quantized)?;
+        let (lo, rows, dim) = t.dims();
+        let mut out = Vec::with_capacity(wanted.len() * dim);
+        for &gr in wanted {
+            let g = gr as usize;
+            ensure!(
+                g >= lo && g - lo < rows,
+                "row {g} is not on this shard (slice {lo}..{})",
+                lo + rows
+            );
+            match t {
+                LocalTable::F32 { table, .. } => out.extend_from_slice(table.row(g - lo)),
+                LocalTable::Quant { table, .. } => {
+                    let (qrow, scale, bias) = table.row(g - lo);
+                    let off = 128.0 * scale + bias;
+                    out.extend(qrow.iter().map(|&q| q as f32 * scale + off));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Distinct `(key, quantized)` slices registered.
+    pub fn table_count(&self) -> usize {
+        self.tables.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ShardTransport: how the routing client reaches one shard
+// ---------------------------------------------------------------------------
+
+/// One shard as the routing client sees it. Each method fires one
+/// operation and returns a receiver so the client can fan out to every
+/// range before collecting any partial; a transport whose backing shard
+/// is gone simply drops the response sender — the caller observes the
+/// receiver disconnect and fails over to a replica. Implementations:
+/// the in-process [`LocalShard`] thread here, and
+/// [`crate::cluster::shard_server::RemoteShard`] over TCP.
+pub trait ShardTransport: Send + Sync {
+    /// Diagnostic label (`local-3`, `127.0.0.1:7101`).
+    fn label(&self) -> String;
+
+    /// Install a table slice (see [`ShardStore::register`]).
+    fn register(
+        &self,
+        key: &str,
+        quantized: bool,
+        lo: u32,
+        dim: usize,
+        data: &[f32],
+    ) -> Receiver<Result<()>>;
+
+    /// Pooled partial sums over the shard's slice.
+    fn pool(
+        &self,
+        key: &str,
+        quantized: bool,
+        lengths: &[u32],
+        indices: &[u32],
+    ) -> Receiver<Result<Vec<f64>>>;
+
+    /// Full rows for cache admission.
+    fn fetch(&self, key: &str, quantized: bool, rows: &[u32]) -> Receiver<Result<Vec<f32>>>;
+}
+
+enum ShardMsg {
+    Register {
+        key: String,
+        quantized: bool,
+        lo: u32,
+        dim: usize,
+        data: Vec<f32>,
+        resp: Sender<Result<()>>,
     },
     Pool {
-        table: usize,
-        indices: Vec<u32>,
+        key: String,
+        quantized: bool,
         lengths: Vec<u32>,
+        indices: Vec<u32>,
         resp: Sender<Result<Vec<f64>>>,
     },
     Fetch {
-        table: usize,
+        key: String,
+        quantized: bool,
         rows: Vec<u32>,
         resp: Sender<Result<Vec<f32>>>,
     },
     Shutdown,
 }
+
+/// The default transport: one in-process thread owning a
+/// [`ShardStore`], reached over a channel. Dropping the handle shuts
+/// the thread down.
+pub struct LocalShard {
+    id: usize,
+    tx: Mutex<Sender<ShardMsg>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl LocalShard {
+    /// Spawn the shard thread.
+    pub fn spawn(id: usize) -> Result<LocalShard> {
+        let (tx, rx) = channel::<ShardMsg>();
+        let handle = std::thread::Builder::new()
+            .name(format!("emb-shard-{id}"))
+            .spawn(move || shard_main(rx))
+            .context("spawning embedding shard thread")?;
+        Ok(LocalShard { id, tx: Mutex::new(tx), handle: Mutex::new(Some(handle)) })
+    }
+
+    fn send(&self, msg: ShardMsg) {
+        // a failed send means the shard thread is gone; the response
+        // sender inside `msg` is dropped with it and the caller's
+        // receiver disconnects — exactly the failover signal
+        let _ = self.tx.lock().unwrap().send(msg);
+    }
+}
+
+impl ShardTransport for LocalShard {
+    fn label(&self) -> String {
+        format!("local-{}", self.id)
+    }
+
+    fn register(
+        &self,
+        key: &str,
+        quantized: bool,
+        lo: u32,
+        dim: usize,
+        data: &[f32],
+    ) -> Receiver<Result<()>> {
+        let (resp, rx) = channel();
+        self.send(ShardMsg::Register {
+            key: key.to_string(),
+            quantized,
+            lo,
+            dim,
+            data: data.to_vec(),
+            resp,
+        });
+        rx
+    }
+
+    fn pool(
+        &self,
+        key: &str,
+        quantized: bool,
+        lengths: &[u32],
+        indices: &[u32],
+    ) -> Receiver<Result<Vec<f64>>> {
+        let (resp, rx) = channel();
+        self.send(ShardMsg::Pool {
+            key: key.to_string(),
+            quantized,
+            lengths: lengths.to_vec(),
+            indices: indices.to_vec(),
+            resp,
+        });
+        rx
+    }
+
+    fn fetch(&self, key: &str, quantized: bool, rows: &[u32]) -> Receiver<Result<Vec<f32>>> {
+        let (resp, rx) = channel();
+        self.send(ShardMsg::Fetch {
+            key: key.to_string(),
+            quantized,
+            rows: rows.to_vec(),
+            resp,
+        });
+        rx
+    }
+}
+
+impl Drop for LocalShard {
+    fn drop(&mut self) {
+        self.send(ShardMsg::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn shard_main(rx: Receiver<ShardMsg>) {
+    let mut store = ShardStore::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Register { key, quantized, lo, dim, data, resp } => {
+                let _ = resp.send(store.register(&key, quantized, lo, dim, data));
+            }
+            ShardMsg::Pool { key, quantized, lengths, indices, resp } => {
+                let _ = resp.send(store.pool(&key, quantized, &lengths, &indices));
+            }
+            ShardMsg::Fetch { key, quantized, rows, resp } => {
+                let _ = resp.send(store.fetch(&key, quantized, &rows));
+            }
+            ShardMsg::Shutdown => break,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The routing client
+// ---------------------------------------------------------------------------
 
 struct TableEntry {
     key: String,
@@ -203,6 +526,7 @@ struct TierCounters {
     ingress_bytes: AtomicU64,
     egress_bytes: AtomicU64,
     row_fetch_bytes: AtomicU64,
+    failovers: AtomicU64,
 }
 
 /// Per-table tier statistics (cache counters plus identity).
@@ -247,6 +571,8 @@ pub struct SparseTierSnapshot {
     pub egress_bytes: u64,
     /// bytes of full rows fetched for cache admission
     pub row_fetch_bytes: u64,
+    /// operations re-sent to a replica after a shard died or erred
+    pub failovers: u64,
     pub tables: Vec<TableTierStats>,
 }
 
@@ -267,14 +593,13 @@ impl SparseTierSnapshot {
     }
 }
 
-/// The dis-aggregated sparse tier: shard servers + routing client +
+/// The dis-aggregated sparse tier: shard transports + routing client +
 /// hot-row cache. Shared (`Arc`) by every executor of a frontend; all
 /// methods take `&self`.
 pub struct EmbeddingShardService {
     cfg: SparseTierConfig,
     n_ranges: usize,
-    shards: Vec<Mutex<Sender<ShardMsg>>>,
-    handles: Vec<JoinHandle<()>>,
+    transports: Vec<Arc<dyn ShardTransport>>,
     registry: Mutex<Registry>,
     cache: Mutex<HotRowCache>,
     counters: TierCounters,
@@ -287,32 +612,50 @@ impl std::fmt::Debug for EmbeddingShardService {
             .field("shards", &self.cfg.shards)
             .field("replication", &self.cfg.replication)
             .field("cache_capacity_rows", &self.cfg.cache_capacity_rows)
+            .field("remote", &!self.cfg.remote_shards.is_empty())
             .finish_non_exhaustive()
     }
 }
 
 impl EmbeddingShardService {
-    /// Spawn the shard server threads and return the shared handle.
+    /// Start the tier: in-process shard threads by default, or (with
+    /// [`SparseTierConfig::remote_shards`] set) TCP connections to
+    /// standalone `dcinfer shard-serve` processes.
     pub fn start(cfg: SparseTierConfig) -> Result<Arc<EmbeddingShardService>> {
         cfg.validate()?;
-        let n_ranges = cfg.ranges();
-        let mut shards = Vec::with_capacity(cfg.shards);
-        let mut handles = Vec::with_capacity(cfg.shards);
-        for id in 0..cfg.shards {
-            let (tx, rx) = channel::<ShardMsg>();
-            let handle = std::thread::Builder::new()
-                .name(format!("emb-shard-{id}"))
-                .spawn(move || shard_main(rx))
-                .context("spawning embedding shard thread")?;
-            shards.push(Mutex::new(tx));
-            handles.push(handle);
+        let mut transports: Vec<Arc<dyn ShardTransport>> = Vec::with_capacity(cfg.shards);
+        if cfg.remote_shards.is_empty() {
+            for id in 0..cfg.shards {
+                transports.push(Arc::new(LocalShard::spawn(id)?));
+            }
+        } else {
+            for addr in &cfg.remote_shards {
+                let shard = crate::cluster::shard_server::RemoteShard::connect(addr)
+                    .with_context(|| format!("connecting to remote shard {addr}"))?;
+                transports.push(Arc::new(shard));
+            }
         }
+        Self::start_with(cfg, transports)
+    }
+
+    /// Start over explicit transports (the testable seam; `start`
+    /// builds the standard local/remote sets).
+    fn start_with(
+        cfg: SparseTierConfig,
+        transports: Vec<Arc<dyn ShardTransport>>,
+    ) -> Result<Arc<EmbeddingShardService>> {
+        cfg.validate()?;
+        ensure!(
+            transports.len() == cfg.shards,
+            "{} transports for {} shards",
+            transports.len(),
+            cfg.shards
+        );
         let cache = Mutex::new(HotRowCache::new(cfg.cache_capacity_rows, cfg.admit_after));
         Ok(Arc::new(EmbeddingShardService {
-            n_ranges,
+            n_ranges: cfg.ranges(),
             cfg,
-            shards,
-            handles,
+            transports,
             registry: Mutex::new(Registry::default()),
             cache,
             counters: TierCounters::default(),
@@ -324,24 +667,58 @@ impl EmbeddingShardService {
         &self.cfg
     }
 
-    fn send(&self, shard: usize, msg: ShardMsg) -> Result<()> {
-        self.shards[shard]
-            .lock()
-            .unwrap()
-            .send(msg)
-            .map_err(|_| anyhow!("embedding shard {shard} is gone"))
+    /// The transports holding replicas of range `g`, starting from a
+    /// round-robin pick so load spreads, then the alternates in order —
+    /// the failover sequence for one operation.
+    fn replica_order(&self, g: usize) -> Vec<usize> {
+        let k0 = self.replica_rr.fetch_add(1, Ordering::Relaxed) % self.cfg.replication;
+        (0..self.cfg.replication)
+            .map(|i| g + ((k0 + i) % self.cfg.replication) * self.n_ranges)
+            .collect()
     }
 
-    fn pick_replica(&self, range: usize) -> usize {
-        let k = self.replica_rr.fetch_add(1, Ordering::Relaxed) % self.cfg.replication;
-        range + k * self.n_ranges
+    /// Collect one fanned-out operation, failing over through `order`
+    /// (replica transport indices; `order[0]` already holds `rx`). A
+    /// disconnected receiver (dead shard) and an `Err` answer (e.g. a
+    /// restarted remote shard that lost its slices) both advance to the
+    /// next replica; the error surfaces only when every replica has
+    /// failed.
+    fn recv_with_failover<T>(
+        &self,
+        what: &str,
+        order: &[usize],
+        rx: Receiver<Result<T>>,
+        resend: impl Fn(&dyn ShardTransport) -> Receiver<Result<T>>,
+    ) -> Result<T> {
+        let mut rx = rx;
+        let mut tried = 1;
+        loop {
+            let err = match rx.recv() {
+                Ok(Ok(v)) => return Ok(v),
+                Ok(Err(e)) => e,
+                Err(_) => {
+                    let label = self.transports[order[tried - 1]].label();
+                    anyhow!("embedding shard {label} dropped a {what}")
+                }
+            };
+            if tried >= order.len() {
+                return Err(err)
+                    .with_context(|| format!("{what} failed on all {} replica(s)", order.len()));
+            }
+            self.counters.failovers.fetch_add(1, Ordering::Relaxed);
+            rx = resend(&*self.transports[order[tried]]);
+            tried += 1;
+        }
     }
 
     /// Partition `table` row-wise across the shards (each range sliced
     /// to `replication` shards; int8 slices are row-quantized shard-side
     /// in parallel). Registration is idempotent per `(key, quantized)`:
     /// concurrent executors loading the same artifact share one copy.
-    /// Blocks until every shard has acknowledged its slice.
+    /// Blocks until every shard has acknowledged its slice —
+    /// registration is strict (no failover): a replica that cannot hold
+    /// its slice would silently thin the redundancy the config asked
+    /// for.
     pub fn register_table(
         &self,
         key: &str,
@@ -356,33 +733,24 @@ impl EmbeddingShardService {
         }
         let id = reg.tables.len();
         let plan = ShardPlan::even(table.rows, self.n_ranges);
-        let (ack_tx, ack_rx) = channel();
-        let mut sent = 0usize;
+        let mut pending: Vec<(usize, Receiver<Result<()>>)> = Vec::new();
         for (g, &(lo, hi)) in plan.ranges.iter().enumerate() {
             let mut data = Vec::with_capacity((hi - lo) * table.dim);
             for r in lo..hi {
                 data.extend_from_slice(table.row(r));
             }
             for k in 0..self.cfg.replication {
-                self.send(
-                    g + k * self.n_ranges,
-                    ShardMsg::Register {
-                        table: id,
-                        lo: lo as u32,
-                        dim: table.dim,
-                        data: data.clone(),
-                        quantized,
-                        resp: ack_tx.clone(),
-                    },
-                )?;
-                sent += 1;
+                let shard = g + k * self.n_ranges;
+                let rx =
+                    self.transports[shard].register(key, quantized, lo as u32, table.dim, &data);
+                pending.push((shard, rx));
             }
         }
-        drop(ack_tx);
-        for _ in 0..sent {
-            ack_rx
-                .recv()
-                .map_err(|_| anyhow!("embedding shard died while registering {key}"))?;
+        for (shard, rx) in pending {
+            let label = self.transports[shard].label();
+            rx.recv()
+                .map_err(|_| anyhow!("embedding shard {label} died while registering {key}"))?
+                .with_context(|| format!("registering {key} on shard {label}"))?;
         }
         let cache_id = self.cache.lock().unwrap().register_table();
         debug_assert_eq!(cache_id as usize, id);
@@ -405,17 +773,19 @@ impl EmbeddingShardService {
 
     /// SparseLengthsSum through the tier: cache hits accumulate
     /// client-side, misses are split per row range and pooled on the
-    /// owning shards in parallel, partials reduce into `out`
-    /// (`[bags x dim]`). All accumulation is f64 with one final
-    /// rounding — see the module docs' placement-invariance contract.
+    /// owning shards in parallel (all sends before any receive), dead
+    /// or erroring shards fail over to their replicas, partials reduce
+    /// into `out` (`[bags x dim]`). All accumulation is f64 with one
+    /// final rounding — see the module docs' placement-invariance
+    /// contract.
     pub fn lookup(&self, id: usize, batch: &LookupBatch, out: &mut [f32]) -> Result<()> {
-        let (rows, dim, rows_per_range) = {
+        let (key, quantized, rows, dim, rows_per_range) = {
             let reg = self.registry.lock().unwrap();
             let t = reg
                 .tables
                 .get(id)
                 .with_context(|| format!("sparse tier: unknown table id {id}"))?;
-            (t.rows, t.dim, t.rows_per_range)
+            (t.key.clone(), t.quantized, t.rows, t.dim, t.rows_per_range)
         };
         let bags = batch.bags();
         ensure!(out.len() == bags * dim, "output len {} != bags {bags} x dim {dim}", out.len());
@@ -469,34 +839,45 @@ impl EmbeddingShardService {
         }
 
         // fan out: every non-empty range goes to one replica; all sends
-        // happen before any receive so the shards pool in parallel
-        let mut pending: Vec<(usize, Receiver<Result<Vec<f64>>>)> = Vec::new();
+        // happen before any receive so the shards pool in parallel. The
+        // sub-batch is kept for the (rare) serial re-send to an
+        // alternate replica.
+        struct PendingPool {
+            order: Vec<usize>,
+            lengths: Vec<u32>,
+            indices: Vec<u32>,
+            rx: Receiver<Result<Vec<f64>>>,
+        }
+        let mut pending: Vec<PendingPool> = Vec::new();
         for (g, indices) in sub_idx.into_iter().enumerate() {
             if indices.is_empty() {
                 continue;
             }
-            let shard = self.pick_replica(g);
             let lengths = std::mem::take(&mut sub_len[g]);
+            let order = self.replica_order(g);
             self.counters
                 .ingress_bytes
                 .fetch_add((indices.len() * 4 + lengths.len() * 4) as u64, Ordering::Relaxed);
-            let (tx, rx) = channel();
-            self.send(shard, ShardMsg::Pool { table: id, indices, lengths, resp: tx })?;
-            pending.push((shard, rx));
+            let rx = self.transports[order[0]].pool(&key, quantized, &lengths, &indices);
+            pending.push(PendingPool { order, lengths, indices, rx });
         }
-        for (shard, rx) in pending {
-            let partial = rx
-                .recv()
-                .map_err(|_| anyhow!("embedding shard {shard} dropped a pooled lookup"))??;
+        for p in pending {
+            let partial = self.recv_with_failover("pooled lookup", &p.order, p.rx, |t| {
+                self.counters.ingress_bytes.fetch_add(
+                    (p.indices.len() * 4 + p.lengths.len() * 4) as u64,
+                    Ordering::Relaxed,
+                );
+                t.pool(&key, quantized, &p.lengths, &p.indices)
+            })?;
             ensure!(
                 partial.len() == acc.len(),
-                "shard {shard} returned {} partial elements, want {}",
+                "shard returned {} partial elements, want {}",
                 partial.len(),
                 acc.len()
             );
             self.counters.egress_bytes.fetch_add((partial.len() * 8) as u64, Ordering::Relaxed);
-            for (a, p) in acc.iter_mut().zip(&partial) {
-                *a += *p;
+            for (a, pv) in acc.iter_mut().zip(&partial) {
+                *a += *pv;
             }
         }
 
@@ -509,25 +890,30 @@ impl EmbeddingShardService {
             for &r in &admit {
                 per_range[(r as usize / rows_per_range).min(self.n_ranges - 1)].push(r);
             }
-            let mut fetches: Vec<(Vec<u32>, Receiver<Result<Vec<f32>>>)> = Vec::new();
+            struct PendingFetch {
+                order: Vec<usize>,
+                wanted: Vec<u32>,
+                rx: Receiver<Result<Vec<f32>>>,
+            }
+            let mut fetches: Vec<PendingFetch> = Vec::new();
             for (g, wanted) in per_range.into_iter().enumerate() {
                 if wanted.is_empty() {
                     continue;
                 }
-                let shard = self.pick_replica(g);
-                let (tx, rx) = channel();
-                self.send(shard, ShardMsg::Fetch { table: id, rows: wanted.clone(), resp: tx })?;
-                fetches.push((wanted, rx));
+                let order = self.replica_order(g);
+                let rx = self.transports[order[0]].fetch(&key, quantized, &wanted);
+                fetches.push(PendingFetch { order, wanted, rx });
             }
             let mut cache = self.cache.lock().unwrap();
-            for (wanted, rx) in fetches {
-                let data =
-                    rx.recv().map_err(|_| anyhow!("embedding shard dropped a row fetch"))??;
-                ensure!(data.len() == wanted.len() * dim, "row fetch returned a short payload");
+            for f in fetches {
+                let data = self.recv_with_failover("row fetch", &f.order, f.rx, |t| {
+                    t.fetch(&key, quantized, &f.wanted)
+                })?;
+                ensure!(data.len() == f.wanted.len() * dim, "row fetch returned a short payload");
                 self.counters
                     .row_fetch_bytes
                     .fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
-                for (i, &r) in wanted.iter().enumerate() {
+                for (i, &r) in f.wanted.iter().enumerate() {
                     cache.insert(id as u32, r, &data[i * dim..(i + 1) * dim]);
                 }
             }
@@ -572,138 +958,17 @@ impl EmbeddingShardService {
             ingress_bytes: self.counters.ingress_bytes.load(Ordering::Relaxed),
             egress_bytes: self.counters.egress_bytes.load(Ordering::Relaxed),
             row_fetch_bytes: self.counters.row_fetch_bytes.load(Ordering::Relaxed),
+            failovers: self.counters.failovers.load(Ordering::Relaxed),
             tables,
         }
     }
-}
-
-impl Drop for EmbeddingShardService {
-    fn drop(&mut self) {
-        for s in &self.shards {
-            if let Ok(tx) = s.lock() {
-                let _ = tx.send(ShardMsg::Shutdown);
-            }
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Shard server thread
-// ---------------------------------------------------------------------------
-
-fn shard_main(rx: Receiver<ShardMsg>) {
-    let mut tables: Vec<Option<LocalTable>> = Vec::new();
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            ShardMsg::Register { table, lo, dim, data, quantized, resp } => {
-                let rows = data.len() / dim;
-                let t = EmbeddingTable::new(rows, dim, data);
-                let local = if quantized {
-                    LocalTable::Quant { lo, table: QuantizedTable::from_f32(&t) }
-                } else {
-                    LocalTable::F32 { lo, table: t }
-                };
-                if tables.len() <= table {
-                    tables.resize_with(table + 1, || None);
-                }
-                tables[table] = Some(local);
-                let _ = resp.send(());
-            }
-            ShardMsg::Pool { table, indices, lengths, resp } => {
-                let _ = resp.send(shard_pool(&tables, table, &indices, &lengths));
-            }
-            ShardMsg::Fetch { table, rows, resp } => {
-                let _ = resp.send(shard_fetch(&tables, table, &rows));
-            }
-            ShardMsg::Shutdown => break,
-        }
-    }
-}
-
-fn local_table(tables: &[Option<LocalTable>], id: usize) -> Result<&LocalTable> {
-    tables
-        .get(id)
-        .and_then(|t| t.as_ref())
-        .with_context(|| format!("shard holds no slice of table {id}"))
-}
-
-/// Pooled partial sums over this shard's slice, f64-accumulated.
-/// Indices are global row ids; `lengths` has one entry per bag.
-fn shard_pool(
-    tables: &[Option<LocalTable>],
-    id: usize,
-    indices: &[u32],
-    lengths: &[u32],
-) -> Result<Vec<f64>> {
-    let t = local_table(tables, id)?;
-    let (lo, rows, dim) = t.dims();
-    let mut partial = vec![0f64; lengths.len() * dim];
-    let mut cursor = 0usize;
-    for (bag, &len) in lengths.iter().enumerate() {
-        let dst = &mut partial[bag * dim..(bag + 1) * dim];
-        for _ in 0..len {
-            let g = indices[cursor] as usize;
-            cursor += 1;
-            ensure!(
-                g >= lo && g - lo < rows,
-                "row {g} is not on this shard (slice {lo}..{})",
-                lo + rows
-            );
-            match t {
-                LocalTable::F32 { table, .. } => {
-                    for (d, v) in dst.iter_mut().zip(table.row(g - lo)) {
-                        *d += *v as f64;
-                    }
-                }
-                LocalTable::Quant { table, .. } => {
-                    let (qrow, scale, bias) = table.row(g - lo);
-                    let off = 128.0 * scale + bias;
-                    for (d, &q) in dst.iter_mut().zip(qrow) {
-                        *d += (q as f32 * scale + off) as f64;
-                    }
-                }
-            }
-        }
-    }
-    ensure!(
-        cursor == indices.len(),
-        "sub-batch lengths cover {cursor} of {} indices",
-        indices.len()
-    );
-    Ok(partial)
-}
-
-/// Full (dequantized) rows for cache admission, in request order.
-fn shard_fetch(tables: &[Option<LocalTable>], id: usize, wanted: &[u32]) -> Result<Vec<f32>> {
-    let t = local_table(tables, id)?;
-    let (lo, rows, dim) = t.dims();
-    let mut out = Vec::with_capacity(wanted.len() * dim);
-    for &gr in wanted {
-        let g = gr as usize;
-        ensure!(
-            g >= lo && g - lo < rows,
-            "row {g} is not on this shard (slice {lo}..{})",
-            lo + rows
-        );
-        match t {
-            LocalTable::F32 { table, .. } => out.extend_from_slice(table.row(g - lo)),
-            LocalTable::Quant { table, .. } => {
-                let (qrow, scale, bias) = table.row(g - lo);
-                let off = 128.0 * scale + bias;
-                out.extend(qrow.iter().map(|&q| q as f32 * scale + off));
-            }
-        }
-    }
-    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::rng::Pcg32;
+    use std::sync::atomic::AtomicBool;
 
     #[test]
     fn plan_even_split_tiles_rows() {
@@ -745,6 +1010,32 @@ mod tests {
         let ok = SparseTierConfig { shards: 6, replication: 3, ..Default::default() };
         assert!(ok.validate().is_ok());
         assert_eq!(ok.ranges(), 2);
+        // remote address list must match the shard count exactly
+        let remote = SparseTierConfig {
+            shards: 2,
+            remote_shards: vec!["127.0.0.1:1".into()],
+            ..Default::default()
+        };
+        assert!(remote.validate().is_err());
+    }
+
+    #[test]
+    fn shard_store_register_is_idempotent_and_geometry_checked() {
+        let mut store = ShardStore::new();
+        let data: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        store.register("t/emb", false, 4, 3, data.clone()).unwrap();
+        // same geometry again: fine (replica re-send after reconnect)
+        store.register("t/emb", false, 4, 3, data.clone()).unwrap();
+        assert_eq!(store.table_count(), 1);
+        // same key, different slice: refused
+        assert!(store.register("t/emb", false, 0, 3, data.clone()).is_err());
+        assert!(store.register("t/emb", false, 4, 4, data.clone()).is_err());
+        // different precision is a distinct slice
+        store.register("t/emb", true, 4, 3, data).unwrap();
+        assert_eq!(store.table_count(), 2);
+        // bad geometry up front
+        assert!(store.register("u", false, 0, 0, vec![1.0]).is_err());
+        assert!(store.register("u", false, 0, 3, vec![1.0, 2.0]).is_err());
     }
 
     fn tier(shards: usize, replication: usize, cache: usize) -> Arc<EmbeddingShardService> {
@@ -753,6 +1044,7 @@ mod tests {
             replication,
             cache_capacity_rows: cache,
             admit_after: 1,
+            remote_shards: Vec::new(),
         })
         .unwrap()
     }
@@ -775,6 +1067,7 @@ mod tests {
         assert_eq!(snap.lookups, 1);
         assert_eq!(snap.indices, 30);
         assert!(snap.ingress_bytes > 0 && snap.egress_bytes > 0);
+        assert_eq!(snap.failovers, 0);
     }
 
     #[test]
@@ -816,5 +1109,101 @@ mod tests {
         let ok = LookupBatch::fixed(vec![0, 1], 2);
         assert!(svc.lookup(id, &ok, &mut [0f32; 1]).is_err(), "short output");
         assert!(svc.lookup(7, &ok, &mut out).is_err(), "unknown table");
+    }
+
+    /// A transport that drops every pool/fetch until revived — the
+    /// dead-shard shape the failover path exists for.
+    struct FlakyShard {
+        inner: LocalShard,
+        dead: AtomicBool,
+    }
+
+    impl ShardTransport for FlakyShard {
+        fn label(&self) -> String {
+            format!("flaky-{}", self.inner.label())
+        }
+        fn register(
+            &self,
+            key: &str,
+            quantized: bool,
+            lo: u32,
+            dim: usize,
+            data: &[f32],
+        ) -> Receiver<Result<()>> {
+            self.inner.register(key, quantized, lo, dim, data)
+        }
+        fn pool(
+            &self,
+            key: &str,
+            quantized: bool,
+            lengths: &[u32],
+            indices: &[u32],
+        ) -> Receiver<Result<Vec<f64>>> {
+            if self.dead.load(Ordering::SeqCst) {
+                let (_tx, rx) = channel();
+                return rx; // sender dropped: receiver disconnects
+            }
+            self.inner.pool(key, quantized, lengths, indices)
+        }
+        fn fetch(&self, key: &str, quantized: bool, rows: &[u32]) -> Receiver<Result<Vec<f32>>> {
+            if self.dead.load(Ordering::SeqCst) {
+                let (_tx, rx) = channel();
+                return rx;
+            }
+            self.inner.fetch(key, quantized, rows)
+        }
+    }
+
+    #[test]
+    fn dead_shard_fails_over_to_replica_bit_identically() {
+        let table = EmbeddingTable::random(48, 4, 21);
+        let mut rng = Pcg32::seeded(31);
+        let batch = table.synth_batch(5, 6, 1.1, &mut rng);
+        let mut want = vec![0f32; 5 * 4];
+        table.sparse_lengths_sum_exact(&batch, &mut want);
+
+        // 2 ranges x 2 replicas; both replicas of range 0 are flaky but
+        // start alive
+        let cfg = SparseTierConfig {
+            shards: 4,
+            replication: 2,
+            cache_capacity_rows: 0,
+            admit_after: 1,
+            remote_shards: Vec::new(),
+        };
+        let flaky: Vec<Arc<FlakyShard>> = (0..4)
+            .map(|id| {
+                Arc::new(FlakyShard {
+                    inner: LocalShard::spawn(id).unwrap(),
+                    dead: AtomicBool::new(false),
+                })
+            })
+            .collect();
+        let transports: Vec<Arc<dyn ShardTransport>> =
+            flaky.iter().map(|f| f.clone() as Arc<dyn ShardTransport>).collect();
+        let svc = EmbeddingShardService::start_with(cfg, transports).unwrap();
+        let id = svc.register_table("t/emb", &table, false).unwrap();
+
+        let mut got = vec![0f32; 5 * 4];
+        svc.lookup(id, &batch, &mut got).unwrap();
+        assert_eq!(got, want, "healthy tier");
+        assert_eq!(svc.snapshot().failovers, 0);
+
+        // kill one replica of range 0: lookups keep succeeding,
+        // bit-identically, with failovers counted
+        flaky[0].dead.store(true, Ordering::SeqCst);
+        for _ in 0..4 {
+            let mut got = vec![0f32; 5 * 4];
+            svc.lookup(id, &batch, &mut got).unwrap();
+            assert_eq!(got, want, "one dead replica");
+        }
+        assert!(svc.snapshot().failovers > 0, "the dead replica was retried");
+
+        // kill both replicas of range 0: now the lookup must fail with
+        // a typed error, not hang
+        flaky[2].dead.store(true, Ordering::SeqCst);
+        let mut got = vec![0f32; 5 * 4];
+        let err = svc.lookup(id, &batch, &mut got).unwrap_err();
+        assert!(format!("{err:#}").contains("failed on all"), "{err:#}");
     }
 }

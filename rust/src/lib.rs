@@ -59,7 +59,15 @@
 //!
 //! See `README.md` for the quickstart and `DESIGN.md` for the paper→code
 //! substitution map and layering.
+//!
+//! [`cluster`] promotes the serving plane from one process to a fleet:
+//! standalone TCP embedding-shard servers (`dcinfer shard-serve`), a
+//! replicated set of serving servers, and a [`cluster::ClusterRouter`]
+//! with consistent-hash placement, health probes and
+//! retry-once-on-alternate-replica failover (`dcinfer cluster` spawns a
+//! loopback mini-fleet).
 
+pub mod cluster;
 pub mod coordinator;
 pub mod embedding;
 pub mod fleet;

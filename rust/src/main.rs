@@ -12,11 +12,27 @@
 //! dcinfer serve [--requests N] [--executors E] [--qps Q] [--models recsys,nmt,cv]
 //!               [--backend pjrt|native] [--precision fp32|fp16|i8acc32|i8acc16]
 //!               [--threads T] [--max-queue D]
-//!               [--listen ADDR] [--duration S]
+//!               [--listen ADDR] [--duration S] [--replica-label L] [--artifacts DIR]
 //!               [--sparse-shards N] [--sparse-cache ROWS] [--sparse-replication R]
+//!               [--remote-shards ADDR,ADDR,...]
 //! dcinfer loadgen --connect ADDR [--qps Q] [--requests N]
 //!                 [--mix recsys:8,cv:1,nmt:1] [--deadline-ms D] [--seed S]
+//!                 [--artifacts DIR]
+//! dcinfer shard-serve [--listen ADDR]
+//! dcinfer cluster [--replicas N] [--shard-procs M] [--sparse-replication R]
+//!                 [--requests N] [--qps Q] [--mix ...] [--seed S]
+//!                 [--backend B] [--precision P] [--artifacts DIR]
 //! ```
+//!
+//! `shard-serve` runs one standalone embedding-shard server (§4
+//! dis-aggregation as a real process): an empty `ShardStore` behind the
+//! wire protocol's shard frames, populated by its serving-tier clients.
+//! `serve --remote-shards` points a frontend's sparse tier at such
+//! processes instead of in-process shard threads — same numerics, bit
+//! for bit. `cluster` spawns a loopback mini-fleet (M shard processes,
+//! N serving replicas wired to them, one `ClusterRouter` in front),
+//! drives loadgen through the router and prints the per-replica fleet
+//! view.
 //!
 //! `--sparse-shards` dis-aggregates the embedding tables of native-backend
 //! lanes across an in-process sharded sparse tier with a hot-row cache
@@ -47,6 +63,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use dcinfer::cluster::{ChildProc, ClusterRouter, RouterConfig, ShardServer, ShardServerConfig};
 use dcinfer::coordinator::{
     disagg_bandwidth, ClientResponse, DcClient, FrontendConfig, InferError, ModelService,
     ServerConfig, ServingFrontend, ServingServer,
@@ -97,10 +114,13 @@ fn main() -> Result<()> {
         "codesign" => cmd_codesign(),
         "serve" => cmd_serve(&flags),
         "loadgen" => cmd_loadgen(&flags),
+        "shard-serve" => cmd_shard_serve(&flags),
+        "cluster" => cmd_cluster(&flags),
         _ => {
             println!("dcinfer — data-center DL inference characterization & serving");
             println!(
-                "subcommands: characterize demand roofline fleet shapes mine disagg codesign serve loadgen"
+                "subcommands: characterize demand roofline fleet shapes mine disagg codesign \
+                 serve loadgen shard-serve cluster"
             );
             Ok(())
         }
@@ -291,10 +311,23 @@ fn cmd_codesign() -> Result<()> {
     Ok(())
 }
 
-/// Artifacts dir for the serving subcommands: `artifacts/` when built
-/// (`make artifacts`), else a self-synthesized fixture in a temp dir so
-/// `serve`/`loadgen` run out of the box. Returns `(dir, is_fixture)`.
-fn artifacts_or_fixture() -> Result<(PathBuf, bool)> {
+/// Artifacts dir for the serving subcommands: `--artifacts DIR` when
+/// given (how mini-fleet members share one fixture), else `artifacts/`
+/// when built (`make artifacts`), else a self-synthesized fixture in a
+/// temp dir so `serve`/`loadgen` run out of the box. Returns
+/// `(dir, is_fixture)` — the fixture (only) is deleted on exit, and an
+/// explicit `--artifacts` dir is never treated as a fixture: its owner
+/// cleans it up.
+fn artifacts_or_fixture(flags: &BTreeMap<String, String>) -> Result<(PathBuf, bool)> {
+    if let Some(dir) = flags.get("artifacts") {
+        let dir = PathBuf::from(dir);
+        anyhow::ensure!(
+            dir.join("manifest.json").exists(),
+            "--artifacts {}: no manifest.json there",
+            dir.display()
+        );
+        return Ok((dir, false));
+    }
     let dir = PathBuf::from("artifacts");
     if dir.join("manifest.json").exists() {
         return Ok((dir, false));
@@ -329,7 +362,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let executors = flags.get("executors").and_then(|v| v.parse().ok()).unwrap_or(2);
     let qps: f64 = flags.get("qps").and_then(|v| v.parse().ok()).unwrap_or(2000.0);
     let models = flags.get("models").cloned().unwrap_or_else(|| "recsys".to_string());
-    let (art_dir, fixture) = artifacts_or_fixture()?;
+    let (art_dir, fixture) = artifacts_or_fixture(flags)?;
     // `--precision` alone implies the native backend (pjrt is fp32-only);
     // the fixture carries native op programs but no compiled HLO, so it
     // defaults to native too
@@ -360,7 +393,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     };
     let sparse_tier = match flags.get("sparse-shards") {
         None => {
-            for key in ["sparse-cache", "sparse-replication"] {
+            for key in ["sparse-cache", "sparse-replication", "remote-shards"] {
                 anyhow::ensure!(
                     !flags.contains_key(key),
                     "--{key} requires --sparse-shards"
@@ -370,10 +403,23 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
         }
         Some(_) => {
             let default = dcinfer::embedding::SparseTierConfig::default();
+            // `--remote-shards a:p,b:p,...` swaps in-process shard
+            // threads for standalone `dcinfer shard-serve` processes,
+            // one address per shard slot
+            let remote_shards: Vec<String> = flags
+                .get("remote-shards")
+                .map(|v| {
+                    v.split(',')
+                        .filter(|s| !s.is_empty())
+                        .map(|s| s.to_string())
+                        .collect()
+                })
+                .unwrap_or_default();
             Some(dcinfer::embedding::SparseTierConfig {
                 shards: sparse_usize("sparse-shards", 0)?,
                 replication: sparse_usize("sparse-replication", default.replication)?,
                 cache_capacity_rows: sparse_usize("sparse-cache", default.cache_capacity_rows)?,
+                remote_shards,
                 ..default
             })
         }
@@ -387,8 +433,13 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
         backend.label()
     );
     if let Some(st) = &sparse_tier {
+        let placement = if st.remote_shards.is_empty() {
+            "in-process".to_string()
+        } else {
+            format!("{} remote shard processes", st.remote_shards.len())
+        };
         println!(
-            "sparse tier: {} shards, replication {}, hot-row cache {} rows\n",
+            "sparse tier: {} shards ({placement}), replication {}, hot-row cache {} rows\n",
             st.shards, st.replication, st.cache_capacity_rows
         );
     }
@@ -419,7 +470,8 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
                     v.parse().map_err(|_| anyhow::anyhow!("invalid --duration value {v:?}"))?
                 }
             };
-            serve_listen(&frontend, addr, duration)?
+            let label = flags.get("replica-label").cloned().unwrap_or_default();
+            serve_listen(&frontend, addr, duration, label)?
         }
         None => serve_selfdrive(&frontend, n, qps)?,
     };
@@ -507,8 +559,10 @@ fn serve_listen(
     frontend: &Arc<ServingFrontend>,
     addr: &str,
     duration_s: f64,
+    replica_label: String,
 ) -> Result<(f64, u64, u64)> {
-    let server = ServingServer::bind(frontend.clone(), addr, ServerConfig::default())?;
+    let cfg = ServerConfig { replica_label, ..Default::default() };
+    let server = ServingServer::bind(frontend.clone(), addr, cfg)?;
     println!(
         "listening on {} ({})",
         server.local_addr(),
@@ -590,7 +644,7 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
 
     // request synthesis needs the families' dimensions — they must
     // describe the same artifact set the server loaded
-    let (art_dir, fixture) = artifacts_or_fixture()?;
+    let (art_dir, fixture) = artifacts_or_fixture(flags)?;
     let manifest = Manifest::load(&art_dir)?;
     let mut arms: Vec<(Arc<dyn ModelService>, f64)> = Vec::new();
     for part in mix.split(',').filter(|s| !s.is_empty()) {
@@ -655,11 +709,19 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
         rtt_ms: Samples,
     }
     let mut per_model: BTreeMap<String, Agg> = BTreeMap::new();
+    // responses-by-replica: populated when servers stamp
+    // `--replica-label` into their responses (a fleet behind a
+    // ClusterRouter) — the view that makes failover visible from the
+    // client side
+    let mut per_replica: BTreeMap<String, u64> = BTreeMap::new();
     for (model, rx) in pending {
         let agg = per_model.entry(model).or_default();
         agg.sent += 1;
         match rx.recv_timeout(Duration::from_secs(60)) {
             Ok(cr) => {
+                if !cr.resp.replica.is_empty() {
+                    *per_replica.entry(cr.resp.replica.clone()).or_default() += 1;
+                }
                 if cr.shed() {
                     agg.shed += 1;
                 } else if cr.resp.is_ok() {
@@ -713,9 +775,179 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
         tot.errs,
         send_errors
     );
+    if !per_replica.is_empty() {
+        let answered: u64 = per_replica.values().sum();
+        println!("\nresponses by serving replica:");
+        for (replica, count) in &per_replica {
+            println!(
+                "  {replica}: {count} ({:.1}%)",
+                *count as f64 / answered.max(1) as f64 * 100.0
+            );
+        }
+    }
     if fixture {
         let _ = std::fs::remove_dir_all(&art_dir);
     }
     anyhow::ensure!(tot.ok > 0, "no successful responses — is the server serving this mix?");
     Ok(())
+}
+
+/// One standalone embedding-shard server (§4 dis-aggregation as a real
+/// process): an empty `ShardStore` behind the wire protocol's shard
+/// frames, populated by whichever serving replicas register tables into
+/// it. Runs until killed — fleet members are processes precisely so a
+/// `kill` is a meaningful failure experiment.
+fn cmd_shard_serve(flags: &BTreeMap<String, String>) -> Result<()> {
+    let addr = flags.get("listen").map(|s| s.as_str()).unwrap_or("127.0.0.1:0");
+    let server = ShardServer::bind(addr, ShardServerConfig::default())?;
+    // machine-readable: `ChildProc::spawn` parses this line to learn
+    // the ephemeral port when launched with `--listen 127.0.0.1:0`
+    println!("listening on {} (embedding shard server, until killed)", server.local_addr());
+    let mut last_ops = 0u64;
+    loop {
+        std::thread::sleep(Duration::from_secs(5));
+        let s = server.stats();
+        if s.ops != last_ops {
+            println!(
+                "{} tables, {} ops, {:.2} MB in / {:.2} MB out across the boundary",
+                server.table_count(),
+                s.ops,
+                s.ingress_bytes as f64 / 1e6,
+                s.egress_bytes as f64 / 1e6
+            );
+            last_ops = s.ops;
+        }
+    }
+}
+
+/// The loopback mini-fleet: M `shard-serve` processes, N `serve
+/// --listen` replicas wired to them over `--remote-shards`, one
+/// `ClusterRouter` in front, loadgen driven through the router, and
+/// the per-replica fleet view printed at the end.
+fn cmd_cluster(flags: &BTreeMap<String, String>) -> Result<()> {
+    let replicas: usize = flags.get("replicas").and_then(|v| v.parse().ok()).unwrap_or(2);
+    let shard_procs: usize =
+        flags.get("shard-procs").and_then(|v| v.parse().ok()).unwrap_or(2);
+    anyhow::ensure!(replicas >= 1, "--replicas must be at least 1");
+    let replication: usize = flags
+        .get("sparse-replication")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if shard_procs >= 2 { 2 } else { 1 });
+    if shard_procs > 0 {
+        anyhow::ensure!(
+            replication >= 1 && shard_procs % replication == 0,
+            "--shard-procs ({shard_procs}) must be a multiple of \
+             --sparse-replication ({replication})"
+        );
+    }
+    let n: u64 = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(400);
+    let qps: f64 = flags.get("qps").and_then(|v| v.parse().ok()).unwrap_or(800.0);
+    let mix = flags.get("mix").cloned().unwrap_or_else(|| "recsys:1".to_string());
+    let seed: u64 = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42);
+    // the serving replicas must load every family the mix exercises
+    let models: String = mix
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|p| p.split_once(':').map(|(name, _)| name).unwrap_or(p))
+        .collect::<Vec<_>>()
+        .join(",");
+
+    let bin = std::env::current_exe().context("resolving the dcinfer binary path")?;
+    // every fleet member must load the *same* artifact set — share one
+    // dir via --artifacts instead of letting each child synthesize
+    let (art_dir, fixture) = artifacts_or_fixture(flags)?;
+    let art = art_dir.to_string_lossy().to_string();
+
+    println!(
+        "== cluster: {replicas} serving replicas, {shard_procs} shard processes \
+         (x{replication} replication), mix [{mix}] ==\n"
+    );
+
+    let mut shard_children: Vec<ChildProc> = Vec::new();
+    for s in 0..shard_procs {
+        shard_children.push(ChildProc::spawn(
+            &bin,
+            &["shard-serve", "--listen", "127.0.0.1:0"],
+            &format!("shard-{s}"),
+        )?);
+    }
+    let shard_addrs =
+        shard_children.iter().map(|c| c.addr.clone()).collect::<Vec<_>>().join(",");
+
+    // the sparse tier dis-aggregates *native* lanes (pjrt executes HLO
+    // with tables baked in), so the fleet defaults to the native
+    // backend; `--backend`/`--precision` still pass through
+    let backend = flags.get("backend").cloned().unwrap_or_else(|| "native".to_string());
+    let mut serve_children: Vec<ChildProc> = Vec::new();
+    for r in 0..replicas {
+        let label = format!("replica-{r}");
+        let shards_s = shard_procs.to_string();
+        let repl_s = replication.to_string();
+        let mut args = vec![
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--models",
+            &models,
+            "--artifacts",
+            &art,
+            "--backend",
+            &backend,
+            "--replica-label",
+            &label,
+        ];
+        if let Some(p) = flags.get("precision") {
+            args.extend_from_slice(&["--precision", p.as_str()]);
+        }
+        if shard_procs > 0 {
+            args.extend_from_slice(&[
+                "--sparse-shards",
+                &shards_s,
+                "--sparse-replication",
+                &repl_s,
+                "--remote-shards",
+                &shard_addrs,
+            ]);
+        }
+        serve_children.push(ChildProc::spawn(&bin, &args, &label)?);
+    }
+
+    let replica_addrs: Vec<String> = serve_children.iter().map(|c| c.addr.clone()).collect();
+    let router = ClusterRouter::bind("127.0.0.1:0", &replica_addrs, RouterConfig::default())?;
+    println!("listening on {} (cluster router over {replicas} replicas)\n", router.local_addr());
+
+    let mut lg: BTreeMap<String, String> = BTreeMap::new();
+    lg.insert("connect".into(), router.local_addr().to_string());
+    lg.insert("qps".into(), qps.to_string());
+    lg.insert("requests".into(), n.to_string());
+    lg.insert("mix".into(), mix.clone());
+    lg.insert("seed".into(), seed.to_string());
+    lg.insert("artifacts".into(), art.clone());
+    let lg_result = cmd_loadgen(&lg);
+
+    println!("\n--- fleet (router view) ---");
+    let mut table = dcinfer::util::bench::Table::new(&[
+        "replica", "healthy", "sent", "done", "failed", "inflight", "p50 ms", "p99 ms",
+    ]);
+    for (i, s) in router.stats().iter().enumerate() {
+        table.row(&[
+            format!("replica-{i} ({})", s.addr),
+            s.healthy.to_string(),
+            s.sent.to_string(),
+            s.completed.to_string(),
+            s.failed.to_string(),
+            s.inflight.to_string(),
+            format!("{:.2}", s.p50_ms),
+            format!("{:.2}", s.p99_ms),
+        ]);
+    }
+    table.print();
+
+    router.shutdown();
+    drop(serve_children);
+    drop(shard_children);
+    if fixture {
+        let _ = std::fs::remove_dir_all(&art_dir);
+    }
+    lg_result
 }

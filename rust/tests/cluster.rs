@@ -1,0 +1,308 @@
+//! Cluster-plane integration: a loopback mini-fleet of *real
+//! processes* — `dcinfer shard-serve` shard servers and `dcinfer serve
+//! --listen` replicas spawned via `CARGO_BIN_EXE_dcinfer` — behind an
+//! in-process `ClusterRouter`, with failures injected by killing
+//! processes mid-load.
+//!
+//! The acceptance property: a killed serving replica and a killed
+//! shard process each cost at most a few typed errors, never a wrong
+//! answer — every successful response stays bit-identical to an
+//! in-process monolithic frontend on the same deterministic fixture,
+//! and goodput recovers on the survivors.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dcinfer::cluster::{ChildProc, ClusterRouter, RouterConfig};
+use dcinfer::coordinator::{
+    ClientResponse, DcClient, FrontendConfig, InferError, InferRequest, ModelService,
+    ServingFrontend,
+};
+use dcinfer::models::RecSysService;
+use dcinfer::runtime::{synthetic_artifacts_dir, BackendSpec, HostTensor, Manifest, Precision};
+use dcinfer::util::rng::Pcg32;
+
+// a mini-fleet is several processes worth of executor threads;
+// serialize the tests so timing-sensitive behaviour stays stable
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_dcinfer"))
+}
+
+fn assert_bit_identical(got: &[HostTensor], want: &[HostTensor], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: output count");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.dtype, w.dtype, "{what}: dtype");
+        assert_eq!(g.shape, w.shape, "{what}: shape");
+        assert_eq!(g.data, w.data, "{what}: bytes differ — a wrong answer, not an error");
+    }
+}
+
+/// The placement-invariance oracle: the same fixture served by one
+/// in-process frontend with no sparse tier at all.
+struct Reference {
+    frontend: Arc<ServingFrontend>,
+}
+
+impl Reference {
+    fn start(dir: &PathBuf, recsys: &RecSysService) -> Reference {
+        let services: Vec<Arc<dyn ModelService>> = vec![Arc::new(recsys.clone())];
+        let frontend = Arc::new(
+            ServingFrontend::start(
+                FrontendConfig {
+                    artifacts_dir: dir.clone(),
+                    executors: 1,
+                    backend: BackendSpec::native(Precision::Fp32),
+                    ..Default::default()
+                },
+                services,
+            )
+            .expect("reference frontend start"),
+        );
+        Reference { frontend }
+    }
+
+    fn expected(&self, req: &InferRequest) -> Vec<HostTensor> {
+        let mut r = req.clone();
+        r.arrival = Instant::now();
+        let rx = self.frontend.submit(r).expect("reference submit");
+        rx.recv_timeout(Duration::from_secs(60))
+            .expect("reference response")
+            .outcome
+            .expect("reference serves every request")
+    }
+}
+
+#[test]
+fn fleet_survives_replica_and_shard_kills_with_zero_wrong_answers() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = synthetic_artifacts_dir("cluster_kill").expect("fixture");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let recsys = RecSysService::from_manifest(&manifest).expect("recsys config");
+    let reference = Reference::start(&dir, &recsys);
+
+    // 2 shard processes at replication 2: one row range, two replicas —
+    // killing either shard leaves every row reachable
+    let mut shards: Vec<ChildProc> = (0..2)
+        .map(|s| {
+            ChildProc::spawn(
+                &bin(),
+                &["shard-serve", "--listen", "127.0.0.1:0"],
+                &format!("shard-{s}"),
+            )
+            .expect("spawn shard server")
+        })
+        .collect();
+    let shard_addrs = shards.iter().map(|c| c.addr.clone()).collect::<Vec<_>>().join(",");
+
+    // 2 serving replicas, both wired to the same remote shard fleet
+    let art = dir.to_string_lossy().to_string();
+    let mut replicas: Vec<ChildProc> = (0..2)
+        .map(|r| {
+            let label = format!("replica-{r}");
+            ChildProc::spawn(
+                &bin(),
+                &[
+                    "serve",
+                    "--listen",
+                    "127.0.0.1:0",
+                    "--models",
+                    "recsys",
+                    "--artifacts",
+                    &art,
+                    "--backend",
+                    "native",
+                    "--replica-label",
+                    &label,
+                    "--sparse-shards",
+                    "2",
+                    "--sparse-replication",
+                    "2",
+                    "--remote-shards",
+                    &shard_addrs,
+                ],
+                &label,
+            )
+            .expect("spawn serving replica")
+        })
+        .collect();
+    let replica_addrs: Vec<String> = replicas.iter().map(|c| c.addr.clone()).collect();
+
+    let router =
+        ClusterRouter::bind("127.0.0.1:0", &replica_addrs, RouterConfig::default())
+            .expect("router bind");
+    let client = DcClient::connect(router.local_addr()).expect("connect through router");
+    let mut rng = Pcg32::seeded(777);
+
+    // paced submissions: mid-load kills land between frames, not only
+    // between phases
+    let send = |client: &DcClient,
+                    rng: &mut Pcg32,
+                    lo: u64,
+                    n: u64|
+     -> Vec<(InferRequest, Receiver<ClientResponse>)> {
+        (lo..lo + n)
+            .map(|i| {
+                let req = recsys.synth_request(i, rng, 10_000.0);
+                let rx = client.submit(&req).expect("submit through router");
+                std::thread::sleep(Duration::from_millis(2));
+                (req, rx)
+            })
+            .collect()
+    };
+
+    // --- phase A: healthy fleet — everything ok, bit-identical -----------
+    let phase_a = send(&client, &mut rng, 0, 40);
+    let mut replicas_seen: BTreeSet<String> = BTreeSet::new();
+    for (req, rx) in phase_a {
+        let cr = rx.recv_timeout(Duration::from_secs(60)).expect("healthy fleet answers");
+        let outs = cr.resp.outcome.as_ref().expect("healthy fleet serves everything");
+        assert_bit_identical(outs, &reference.expected(&req), "phase A");
+        assert!(
+            !cr.resp.replica.is_empty(),
+            "fleet responses carry the replica label for attribution"
+        );
+        replicas_seen.insert(cr.resp.replica.clone());
+    }
+    assert!(!replicas_seen.is_empty());
+    assert_eq!(router.healthy_replicas(), 2);
+
+    // --- phase B: kill replica-0 mid-load --------------------------------
+    let b1 = send(&client, &mut rng, 1_000, 15);
+    replicas[0].kill();
+    let b2 = send(&client, &mut rng, 2_000, 45);
+    let (mut ok_b, mut err_b) = (0u64, 0u64);
+    for (req, rx) in b1 {
+        let cr = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("every request answered across a replica kill");
+        match &cr.resp.outcome {
+            Ok(outs) => {
+                assert_bit_identical(outs, &reference.expected(&req), "phase B (pre-kill)");
+                ok_b += 1;
+            }
+            Err(InferError::Shutdown) | Err(InferError::ExecFailed(_)) => err_b += 1,
+            Err(other) => panic!("unexpected error after replica kill: {other:?}"),
+        }
+    }
+    for (req, rx) in b2 {
+        let cr = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("every request answered across a replica kill");
+        match &cr.resp.outcome {
+            Ok(outs) => {
+                assert_bit_identical(outs, &reference.expected(&req), "phase B (post-kill)");
+                assert_eq!(
+                    cr.resp.replica, "replica-1",
+                    "only the survivor can answer after the kill"
+                );
+                ok_b += 1;
+            }
+            Err(InferError::Shutdown) | Err(InferError::ExecFailed(_)) => err_b += 1,
+            Err(other) => panic!("unexpected error after replica kill: {other:?}"),
+        }
+    }
+    assert!(ok_b >= 45, "goodput must recover after a replica kill ({ok_b} ok, {err_b} errors)");
+    // the router notices the death
+    let t0 = Instant::now();
+    while router.healthy_replicas() != 1 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert_eq!(router.healthy_replicas(), 1, "the killed replica must read as unhealthy");
+
+    // --- phase C: kill shard-0 mid-load ----------------------------------
+    // the surviving replica's sparse tier fails over to the shard's
+    // replica process; failover is inside the lookup path, so requests
+    // keep succeeding — and stay bit-identical
+    let c1 = send(&client, &mut rng, 3_000, 15);
+    shards[0].kill();
+    let c2 = send(&client, &mut rng, 4_000, 45);
+    let (mut ok_c, mut err_c) = (0u64, 0u64);
+    for (req, rx) in c1.into_iter().chain(c2) {
+        let cr = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("every request answered across a shard kill");
+        match &cr.resp.outcome {
+            Ok(outs) => {
+                assert_bit_identical(outs, &reference.expected(&req), "phase C");
+                assert_eq!(cr.resp.replica, "replica-1");
+                ok_c += 1;
+            }
+            Err(InferError::Shutdown) | Err(InferError::ExecFailed(_)) => err_c += 1,
+            Err(other) => panic!("unexpected error after shard kill: {other:?}"),
+        }
+    }
+    assert!(
+        ok_c >= 58,
+        "shard failover should be transparent to the serving path ({ok_c} ok, {err_c} errors)"
+    );
+
+    // --- drain ------------------------------------------------------------
+    assert_eq!(client.in_flight(), 0);
+    client.close();
+    router.shutdown();
+    drop(replicas);
+    drop(shards);
+    reference.frontend.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn router_drain_loses_no_inflight_responses() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = synthetic_artifacts_dir("cluster_drain").expect("fixture");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let recsys = RecSysService::from_manifest(&manifest).expect("recsys config");
+    let art = dir.to_string_lossy().to_string();
+
+    // one monolithic replica (no shard fleet) is enough to exercise the
+    // router's drain barrier
+    let replica = ChildProc::spawn(
+        &bin(),
+        &[
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--models",
+            "recsys",
+            "--artifacts",
+            &art,
+            "--backend",
+            "native",
+            "--replica-label",
+            "replica-0",
+        ],
+        "replica-0",
+    )
+    .expect("spawn serving replica");
+    let router = ClusterRouter::bind(
+        "127.0.0.1:0",
+        &[replica.addr.clone()],
+        RouterConfig::default(),
+    )
+    .expect("router bind");
+    let client = DcClient::connect(router.local_addr()).expect("connect through router");
+    let mut rng = Pcg32::seeded(4242);
+
+    let receivers: Vec<_> = (0..30u64)
+        .map(|i| client.submit(&recsys.synth_request(i, &mut rng, 10_000.0)).unwrap())
+        .collect();
+    // let the burst reach the replica, then drain mid-flight
+    std::thread::sleep(Duration::from_millis(300));
+    router.shutdown();
+
+    // every in-flight request still gets its real response through the
+    // drain — the router forwards them before closing client sockets
+    for rx in receivers {
+        let cr = rx.recv_timeout(Duration::from_secs(60)).expect("no lost responses");
+        assert!(cr.resp.is_ok(), "in-flight request lost in drain: {:?}", cr.resp.outcome);
+        assert_eq!(cr.resp.replica, "replica-0");
+    }
+    client.close();
+    drop(replica);
+    let _ = std::fs::remove_dir_all(&dir);
+}

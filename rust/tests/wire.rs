@@ -94,6 +94,7 @@ fn responses_round_trip_ok_and_all_error_variants() {
         batch_size: 4,
         variant: "gru_step_b4".into(),
         backend: "native/fp32".into(),
+        replica: "replica-2".into(),
     };
     let back = wire::decode_response(&wire::encode_response(&ok)).unwrap();
     assert_eq!(back.id, 99);
@@ -103,6 +104,7 @@ fn responses_round_trip_ok_and_all_error_variants() {
     assert_eq!(back.batch_size, 4);
     assert_eq!(back.variant, "gru_step_b4");
     assert_eq!(back.backend, "native/fp32");
+    assert_eq!(back.replica, "replica-2");
     let (want, got) = (ok.outcome.as_ref().unwrap(), back.outcome.as_ref().unwrap());
     assert_eq!(want.len(), got.len());
     for (a, b) in want.iter().zip(got) {
@@ -158,6 +160,7 @@ fn every_truncation_of_a_response_payload_is_a_typed_error() {
         batch_size: 2,
         variant: "cv_tiny_b2".into(),
         backend: "native/fp32".into(),
+        replica: "r0".into(),
     };
     let payload = wire::encode_response(&resp);
     for cut in 0..payload.len() {
@@ -255,6 +258,84 @@ fn framed_stream_reads_back_and_rejects_corruption() {
         wire::read_frame(&mut bad.as_slice(), wire::DEFAULT_MAX_FRAME),
         Err(WireError::BadFrameKind(9))
     ));
+}
+
+/// Version skew against a *live* server: a peer speaking a future
+/// protocol version (or an unknown frame kind) gets its connection
+/// closed with a typed [`WireError`] server-side — and nothing else.
+/// Other connections, including ones opened afterwards, are
+/// untouched; the process never panics.
+#[test]
+fn version_skew_closes_only_the_offending_connection() {
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use dcinfer::coordinator::{
+        DcClient, FrontendConfig, ModelService, ServerConfig, ServingFrontend, ServingServer,
+    };
+    use dcinfer::models::RecSysService;
+    use dcinfer::runtime::{synthetic_artifacts_dir, BackendSpec, Manifest, Precision};
+
+    let dir = synthetic_artifacts_dir("wire_skew").expect("fixture");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let recsys = RecSysService::from_manifest(&manifest).expect("recsys config");
+    let services: Vec<Arc<dyn ModelService>> = vec![Arc::new(recsys.clone())];
+    let frontend = Arc::new(
+        ServingFrontend::start(
+            FrontendConfig {
+                artifacts_dir: dir.clone(),
+                executors: 1,
+                backend: BackendSpec::native(Precision::Fp32),
+                ..Default::default()
+            },
+            services,
+        )
+        .expect("frontend start"),
+    );
+    let server = ServingServer::bind(frontend.clone(), "127.0.0.1:0", ServerConfig::default())
+        .expect("server bind");
+    let addr = server.local_addr();
+
+    // a well-behaved client, connected for the whole test
+    let client = DcClient::connect(addr).expect("connect");
+    let mut rng = Pcg32::seeded(6000);
+    let cr = client.call(&recsys.synth_request(1, &mut rng, 500.0)).unwrap();
+    assert!(cr.resp.is_ok(), "{:?}", cr.resp.outcome);
+
+    // an otherwise perfectly valid frame, then skewed one field at a
+    // time: header byte 4 is the version, byte 5 the frame kind
+    let payload = wire::encode_request(&recsys.synth_request(2, &mut rng, 500.0));
+    let mut good = Vec::new();
+    wire::write_frame(&mut good, FrameKind::Request, 7, &payload).unwrap();
+
+    for (at, val, what) in [(4usize, 3u8, "future version"), (5, 77, "unknown frame kind")] {
+        let mut skewed = good.clone();
+        skewed[at] = val;
+        let mut raw = TcpStream::connect(addr).expect("raw connect");
+        raw.write_all(&skewed).expect("write skewed frame");
+        raw.flush().unwrap();
+        // the server says nothing on an unspeakable frame — it just
+        // closes this one connection
+        raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut buf = [0u8; 16];
+        match raw.read(&mut buf) {
+            Ok(0) => {}
+            Err(e) if e.kind() != std::io::ErrorKind::WouldBlock
+                && e.kind() != std::io::ErrorKind::TimedOut => {}
+            Ok(k) => panic!("server answered {k} bytes to a {what} frame"),
+            Err(e) => panic!("server kept a {what} connection open: {e}"),
+        }
+    }
+
+    // the pre-existing client and the server are both unharmed
+    let cr = client.call(&recsys.synth_request(3, &mut rng, 500.0)).unwrap();
+    assert!(cr.resp.is_ok(), "{:?}", cr.resp.outcome);
+    client.close();
+    server.shutdown();
+    frontend.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
