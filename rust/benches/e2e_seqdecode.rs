@@ -1,0 +1,305 @@
+//! Sequence-decode bench: client-owned decode loops (one `gru_step`
+//! request per token over the request plane — the pre-sequence-plane
+//! architecture) vs the server-owned continuous-batching engine
+//! (`SeqSubmit` + streamed tokens), same mixed-length workload, same
+//! loopback server. Reports tokens/sec, time-to-first-token and
+//! per-token latency for both arms and emits `BENCH_seqdecode.json`
+//! at the repo root.
+//!
+//! Both arms evaluate the identical greedy decode semantics
+//! (`SeqDecodeSpec`), so beyond the timing the bench asserts the
+//! continuous engine's token streams are bit-identical to the
+//! client-owned loops' — the semantics-preserving seal under load.
+//!
+//! Runs entirely on the self-synthesized fixture (native backend), so
+//! it works in both feature configurations with no `make artifacts`.
+//! `-- --smoke` runs a tiny CI-friendly pass.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dcinfer::coordinator::{
+    DcClient, FrontendConfig, ModelService, SeqClientEvent, SeqConfig, SeqEngine, ServerConfig,
+    ServingFrontend, ServingServer,
+};
+use dcinfer::models::{LengthDistribution, NmtService, SeqDecodeSpec};
+use dcinfer::runtime::{synthetic_artifacts_dir, BackendSpec, Manifest, Precision};
+use dcinfer::util::bench::{write_bench_json, Table};
+use dcinfer::util::rng::Pcg32;
+use dcinfer::util::stats::Samples;
+
+const SEED: u64 = 0x5e9;
+
+struct ArmStats {
+    sequences: u64,
+    tokens: u64,
+    wall_s: f64,
+    ttft_ms: Samples,
+    per_token_ms: Samples,
+}
+
+impl ArmStats {
+    fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n_seqs, dist, cap) = if smoke {
+        (24u64, LengthDistribution::Geometric { mean: 8.0 }, 32u32)
+    } else {
+        (192u64, LengthDistribution::Geometric { mean: 16.0 }, 128u32)
+    };
+
+    let dir = synthetic_artifacts_dir("e2e_seqdecode").expect("fixture");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let nmt = NmtService::from_manifest(&manifest).expect("nmt config");
+    let services: Vec<Arc<dyn ModelService>> = vec![Arc::new(nmt.clone())];
+    let frontend = Arc::new(
+        ServingFrontend::start(
+            FrontendConfig {
+                artifacts_dir: dir.clone(),
+                executors: 1,
+                max_wait_us: 500.0,
+                backend: BackendSpec::native(Precision::Fp32),
+                ..Default::default()
+            },
+            services,
+        )
+        .expect("frontend start"),
+    );
+    let engine = Arc::new(
+        SeqEngine::start(
+            SeqConfig {
+                artifacts_dir: dir.clone(),
+                backend: BackendSpec::native(Precision::Fp32),
+                max_sessions: n_seqs as usize + 1,
+                ..Default::default()
+            },
+            nmt.clone(),
+        )
+        .expect("engine start"),
+    );
+    let server = ServingServer::bind_with_seq(
+        frontend.clone(),
+        Some(engine.clone()),
+        "127.0.0.1:0",
+        ServerConfig::default(),
+    )
+    .expect("server bind");
+    let addr = server.local_addr();
+
+    // one length draw shared by both arms: identical workloads
+    let mut rng = Pcg32::seeded(SEED);
+    let max_lens: Vec<u32> = (0..n_seqs).map(|_| dist.sample(&mut rng, cap)).collect();
+    println!(
+        "== sequence decode: {n_seqs} sequences, lengths geom (cap {cap}), loopback {addr} ==\n"
+    );
+
+    let (baseline, base_tokens) = run_baseline(addr, &nmt, &max_lens);
+    let (continuous, cont_tokens) = run_continuous(addr, &nmt, &max_lens);
+
+    // the semantics seal: identical token streams, sequence by sequence
+    assert_eq!(base_tokens.len(), cont_tokens.len());
+    for (id, want) in &base_tokens {
+        assert_eq!(
+            cont_tokens.get(id),
+            Some(want),
+            "sequence {id}: continuous batching changed the decode"
+        );
+    }
+
+    let snap = engine.snapshot();
+    println!(
+        "engine: {:.2} tokens/iteration, batch fill {:.0}%, step cost {:.0} us\n",
+        snap.tokens_per_iteration(),
+        snap.mean_fill() * 100.0,
+        snap.step_cost_us
+    );
+    let ratio = continuous.tokens_per_s() / baseline.tokens_per_s().max(1e-9);
+
+    let mut table = Table::new(&[
+        "arm", "seqs", "tokens", "wall s", "tok/s", "ttft p50 ms", "ttft p99 ms", "tok p99 ms",
+    ]);
+    let mut json_rows = Vec::new();
+    for (label, mut s) in [("per-step requests", baseline), ("continuous batching", continuous)]
+    {
+        table.row(&[
+            label.to_string(),
+            s.sequences.to_string(),
+            s.tokens.to_string(),
+            format!("{:.2}", s.wall_s),
+            format!("{:.0}", s.tokens_per_s()),
+            format!("{:.2}", s.ttft_ms.p50()),
+            format!("{:.2}", s.ttft_ms.p99()),
+            format!("{:.3}", s.per_token_ms.p99()),
+        ]);
+        json_rows.push(format!(
+            "    {{\"arm\": \"{label}\", \"sequences\": {}, \"tokens\": {}, \"wall_s\": {:.4}, \"tokens_per_s\": {:.1}, \"ttft_p50_ms\": {:.3}, \"ttft_p99_ms\": {:.3}, \"per_token_p99_ms\": {:.4}}}",
+            s.sequences,
+            s.tokens,
+            s.wall_s,
+            s.tokens_per_s(),
+            s.ttft_ms.p50(),
+            s.ttft_ms.p99(),
+            s.per_token_ms.p99()
+        ));
+    }
+    table.print();
+    println!("\ncontinuous batching speedup: {ratio:.2}x tokens/sec over per-step requests");
+    if !smoke {
+        assert!(
+            ratio > 1.0,
+            "continuous batching must out-decode client-owned per-step loops ({ratio:.2}x)"
+        );
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"seqdecode\",\n  \"sequences\": {n_seqs}, \"length_cap\": {cap}, \"speedup_tokens_per_s\": {ratio:.3},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    let path = write_bench_json("BENCH_seqdecode.json", &json);
+    println!("wrote {} ({} rows)", path.display(), json_rows.len());
+
+    server.shutdown();
+    engine.shutdown();
+    frontend.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The pre-sequence-plane architecture: the client owns every decode
+/// loop and submits one `gru_step` request per token; concurrent
+/// sequences advance in lockstep waves (each wave's requests are
+/// pipelined, then awaited). Every token pays a full wire round trip
+/// plus the lane's batching wait.
+fn run_baseline(
+    addr: std::net::SocketAddr,
+    nmt: &NmtService,
+    max_lens: &[u32],
+) -> (ArmStats, BTreeMap<u64, Vec<u32>>) {
+    let client = DcClient::connect(addr).expect("connect");
+    let spec = nmt.decode_spec();
+
+    struct Live {
+        id: u64,
+        x: Vec<f32>,
+        h: Vec<f32>,
+        max_len: u32,
+        tokens: Vec<u32>,
+    }
+    let mut live: Vec<Live> = max_lens
+        .iter()
+        .enumerate()
+        .map(|(i, &ml)| {
+            let (x0, h0) = nmt.synth_seq_state(i as u64, SEED);
+            Live { id: i as u64, x: x0, h: h0, max_len: ml, tokens: Vec::new() }
+        })
+        .collect();
+
+    let mut stats = ArmStats {
+        sequences: max_lens.len() as u64,
+        tokens: 0,
+        wall_s: 0.0,
+        ttft_ms: Samples::new(),
+        per_token_ms: Samples::new(),
+    };
+    let mut streams = BTreeMap::new();
+    let t0 = Instant::now();
+    while !live.is_empty() {
+        let rxs: Vec<_> = live
+            .iter()
+            .map(|s| {
+                let req = nmt
+                    .request(s.id, s.x.clone(), s.h.clone(), 0.0)
+                    .expect("step request dims");
+                client.submit(&req).expect("submit step")
+            })
+            .collect();
+        let mut finished = Vec::new();
+        for (s, rx) in live.iter_mut().zip(rxs) {
+            let cr = rx.recv_timeout(Duration::from_secs(120)).expect("step answered");
+            let outputs = cr.resp.outcome.as_ref().expect("step served");
+            let token = SeqDecodeSpec::argmax(&outputs[0].as_f32().expect("logits"));
+            if s.tokens.is_empty() {
+                stats.ttft_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            stats.per_token_ms.push(cr.rtt_us / 1e3);
+            stats.tokens += 1;
+            s.tokens.push(token);
+            if token == spec.eos || s.tokens.len() as u32 >= s.max_len {
+                finished.push(s.id);
+            } else {
+                s.h = outputs[1].as_f32().expect("h_new");
+                s.x = spec.token_embedding(token);
+            }
+        }
+        live.retain_mut(|s| {
+            if finished.contains(&s.id) {
+                streams.insert(s.id, std::mem::take(&mut s.tokens));
+                false
+            } else {
+                true
+            }
+        });
+    }
+    stats.wall_s = t0.elapsed().as_secs_f64();
+    client.close();
+    (stats, streams)
+}
+
+/// The sequence plane: one `SeqSubmit` per sequence, the server owns
+/// the loop, tokens stream back as they decode.
+fn run_continuous(
+    addr: std::net::SocketAddr,
+    nmt: &NmtService,
+    max_lens: &[u32],
+) -> (ArmStats, BTreeMap<u64, Vec<u32>>) {
+    let client = DcClient::connect(addr).expect("connect");
+    let t0 = Instant::now();
+    let streams: Vec<_> = max_lens
+        .iter()
+        .enumerate()
+        .map(|(i, &ml)| {
+            let req = nmt.synth_seq_request(i as u64, SEED, ml, 0.0);
+            (i as u64, client.submit_seq(&req).expect("submit seq"))
+        })
+        .collect();
+
+    let mut stats = ArmStats {
+        sequences: max_lens.len() as u64,
+        tokens: 0,
+        wall_s: 0.0,
+        ttft_ms: Samples::new(),
+        per_token_ms: Samples::new(),
+    };
+    let mut decoded = BTreeMap::new();
+    for (id, stream) in streams {
+        let mut tokens = Vec::new();
+        let mut prev_rtt = 0.0f64;
+        loop {
+            match stream.recv() {
+                Some(SeqClientEvent::Token { step, token, rtt_us }) => {
+                    if step <= 1 {
+                        stats.ttft_ms.push(rtt_us / 1e3);
+                    } else {
+                        stats.per_token_ms.push((rtt_us - prev_rtt) / 1e3);
+                    }
+                    prev_rtt = rtt_us;
+                    tokens.push(token);
+                    stats.tokens += 1;
+                }
+                Some(SeqClientEvent::Done { done, .. }) => {
+                    assert!(done.outcome.is_ok(), "sequence {id}: {:?}", done.outcome);
+                    break;
+                }
+                None => panic!("sequence {id}: stream closed without Done"),
+            }
+        }
+        decoded.insert(id, tokens);
+    }
+    stats.wall_s = t0.elapsed().as_secs_f64();
+    client.close();
+    (stats, decoded)
+}

@@ -128,6 +128,92 @@ impl DynamicBatcher {
     }
 }
 
+/// Step-level continuous batcher: the slot table the sequence plane
+/// ([`super::seqserve`]) re-forms its batch from on *every* decode
+/// iteration. Unlike [`DynamicBatcher`] — which forms a batch once and
+/// retires it whole — occupants here persist across iterations: new
+/// sequences join whenever a slot is free (mid-flight, between any two
+/// steps), finished ones are retired immediately and free their slot,
+/// and each iteration runs the smallest artifact variant covering the
+/// *current* occupancy. That re-forming rule is what keeps the GEMM
+/// batch full under mixed sequence lengths instead of padding every
+/// sequence to the slowest one.
+#[derive(Debug)]
+pub struct StepBatcher<T> {
+    policy: BatchPolicy,
+    active: Vec<T>,
+}
+
+impl<T> StepBatcher<T> {
+    pub fn new(policy: BatchPolicy) -> StepBatcher<T> {
+        StepBatcher { active: Vec::with_capacity(policy.max_batch()), policy }
+    }
+
+    /// Slots in the table (the largest artifact variant).
+    pub fn capacity(&self) -> usize {
+        self.policy.max_batch()
+    }
+
+    pub fn len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    pub fn has_room(&self) -> bool {
+        self.active.len() < self.capacity()
+    }
+
+    /// Admit one session into a free slot; hands the session back when
+    /// the table is full (the caller keeps it queued).
+    pub fn admit(&mut self, session: T) -> Result<(), T> {
+        if self.has_room() {
+            self.active.push(session);
+            Ok(())
+        } else {
+            Err(session)
+        }
+    }
+
+    /// The artifact variant for this iteration: smallest covering the
+    /// current occupancy.
+    pub fn variant(&self) -> usize {
+        self.policy.variant_for(self.active.len().max(1))
+    }
+
+    /// Current occupants, in admission order (stable across
+    /// iterations until [`Self::retire`] removes someone).
+    pub fn occupants(&self) -> &[T] {
+        &self.active
+    }
+
+    pub fn occupants_mut(&mut self) -> &mut [T] {
+        &mut self.active
+    }
+
+    /// Retire every session `finished` rejects, preserving the order of
+    /// the survivors, and return the retired sessions.
+    pub fn retire(&mut self, mut finished: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if finished(&self.active[i]) {
+                out.push(self.active.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Drain every occupant (engine shutdown).
+    pub fn drain(&mut self) -> Vec<T> {
+        std::mem::take(&mut self.active)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +274,36 @@ mod tests {
         b.push(req(1, 10.0)); // 10 ms deadline, 9.5 ms reserved
         std::thread::sleep(Duration::from_micros(700));
         assert!(b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn step_batcher_reforms_as_sessions_join_and_leave() {
+        let policy =
+            BatchPolicy { variants: vec![1, 4, 8], max_wait_us: 0.0, exec_reserve_us: 0.0 };
+        let mut b: StepBatcher<u64> = StepBatcher::new(policy);
+        assert_eq!(b.capacity(), 8);
+        assert!(b.is_empty());
+        assert_eq!(b.variant(), 1, "an empty table still picks the smallest variant");
+        for id in 0..8 {
+            b.admit(id).unwrap();
+        }
+        assert!(!b.has_room());
+        assert_eq!(b.admit(99).unwrap_err(), 99, "a full table hands the session back");
+        assert_eq!(b.variant(), 8);
+        // three sequences finish: their slots free immediately and the
+        // next iteration runs the smaller covering variant
+        let gone = b.retire(|&id| id % 3 == 0);
+        assert_eq!(gone, vec![0, 3, 6]);
+        assert_eq!(b.occupants(), &[1, 2, 4, 5, 7], "survivors keep admission order");
+        assert_eq!(b.variant(), 8);
+        let _ = b.retire(|&id| id > 2);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.variant(), 4);
+        // a new sequence joins mid-flight into the freed slot
+        b.admit(50).unwrap();
+        assert_eq!(b.occupants(), &[1, 2, 50]);
+        assert_eq!(b.drain(), vec![1, 2, 50]);
+        assert!(b.is_empty());
     }
 
     #[test]

@@ -14,6 +14,13 @@
 //! (served, or a typed [`InferError`] such as an admission-control
 //! shed), or with [`InferError::Shutdown`] if the connection dies
 //! first — a waiting caller never hangs.
+//!
+//! Sequence streams ride the same connection: [`DcClient::submit_seq`]
+//! sends one `SeqSubmit` frame and returns a [`SeqStream`]; the reader
+//! demuxes each `SeqToken` frame to it as the server decodes, and the
+//! stream ends with exactly one [`SeqClientEvent::Done`] — carrying the
+//! server's [`SeqDone`] (finish reason or typed error), or
+//! [`InferError::Shutdown`] if the connection dies mid-sequence.
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write as _};
@@ -26,7 +33,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::request::{InferError, InferRequest, InferResponse};
+use super::request::{InferError, InferRequest, InferResponse, SeqDone, SeqRequest};
 use super::wire::{self, FrameKind};
 
 /// A response as the client observed it: the server's answer plus the
@@ -58,6 +65,44 @@ impl ClientResponse {
     }
 }
 
+/// One event of a sequence stream as the client observed it. `rtt_us`
+/// is measured from the `SeqSubmit` write, so the first token's value
+/// is the time-to-first-token and differences between consecutive
+/// tokens are inter-token gaps.
+#[derive(Debug, Clone)]
+pub enum SeqClientEvent {
+    Token { step: u32, token: u32, rtt_us: f64 },
+    Done { done: SeqDone, rtt_us: f64 },
+}
+
+/// The receiving end of one submitted sequence: tokens as the server
+/// decodes them, then exactly one [`SeqClientEvent::Done`].
+pub struct SeqStream {
+    rx: Receiver<SeqClientEvent>,
+}
+
+impl SeqStream {
+    /// Block for the next event; `None` only if the stream was torn
+    /// down without a terminal event (cannot happen through this
+    /// client's demux — connection death synthesizes a `Done`).
+    pub fn recv(&self) -> Option<SeqClientEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain the whole stream: the decoded tokens and the terminal
+    /// event. Blocks until the sequence finishes.
+    pub fn collect(self) -> (Vec<u32>, SeqDone) {
+        let mut tokens = Vec::new();
+        while let Ok(ev) = self.rx.recv() {
+            match ev {
+                SeqClientEvent::Token { token, .. } => tokens.push(token),
+                SeqClientEvent::Done { done, .. } => return (tokens, done),
+            }
+        }
+        (tokens, SeqDone { steps: 0, outcome: Err(InferError::Shutdown) })
+    }
+}
+
 struct PendingEntry {
     sent: Instant,
     user_id: u64,
@@ -66,11 +111,17 @@ struct PendingEntry {
     tx: Sender<ClientResponse>,
 }
 
+struct SeqPendingEntry {
+    sent: Instant,
+    tx: Sender<SeqClientEvent>,
+}
+
 /// A pipelined connection to a serving server.
 pub struct DcClient {
     stream: TcpStream,
     writer: Mutex<BufWriter<TcpStream>>,
     pending: Arc<Mutex<HashMap<u64, PendingEntry>>>,
+    seq_pending: Arc<Mutex<HashMap<u64, SeqPendingEntry>>>,
     next_corr: AtomicU64,
     reader: Mutex<Option<JoinHandle<()>>>,
 }
@@ -81,12 +132,14 @@ impl DcClient {
         let stream = TcpStream::connect(addr).context("connecting to serving server")?;
         let _ = stream.set_nodelay(true);
         let pending: Arc<Mutex<HashMap<u64, PendingEntry>>> = Arc::new(Mutex::new(HashMap::new()));
+        let seq_pending: Arc<Mutex<HashMap<u64, SeqPendingEntry>>> =
+            Arc::new(Mutex::new(HashMap::new()));
         let reader = {
             let read_half = stream.try_clone().context("cloning connection for reads")?;
-            let pending = pending.clone();
+            let (pending, seq_pending) = (pending.clone(), seq_pending.clone());
             std::thread::Builder::new()
                 .name("dcclient-read".into())
-                .spawn(move || reader_loop(read_half, pending))
+                .spawn(move || reader_loop(read_half, pending, seq_pending))
                 .context("spawning client reader")?
         };
         let write_half = stream.try_clone().context("cloning connection for writes")?;
@@ -94,6 +147,7 @@ impl DcClient {
             stream,
             writer: Mutex::new(BufWriter::new(write_half)),
             pending,
+            seq_pending,
             next_corr: AtomicU64::new(1),
             reader: Mutex::new(Some(reader)),
         })
@@ -134,9 +188,38 @@ impl DcClient {
         rx.recv().context("connection closed before the response arrived")
     }
 
+    /// Submit one whole sequence to the server's decode loop: the
+    /// returned [`SeqStream`] yields tokens as the server decodes them
+    /// and ends with exactly one [`SeqClientEvent::Done`]. Any number
+    /// of sequences (and ordinary requests) may be in flight at once.
+    pub fn submit_seq(&self, req: &SeqRequest) -> Result<SeqStream> {
+        let corr = self.next_corr.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.seq_pending
+            .lock()
+            .unwrap()
+            .insert(corr, SeqPendingEntry { sent: Instant::now(), tx });
+        let payload = wire::encode_seq_submit(req);
+        let sent = {
+            let mut w = self.writer.lock().unwrap();
+            wire::write_frame(&mut *w, FrameKind::SeqSubmit, corr, &payload)
+                .and_then(|_| w.flush())
+        };
+        if let Err(e) = sent {
+            self.seq_pending.lock().unwrap().remove(&corr);
+            return Err(anyhow::Error::new(e).context("sending sequence submit frame"));
+        }
+        Ok(SeqStream { rx })
+    }
+
     /// Requests currently awaiting a response.
     pub fn in_flight(&self) -> usize {
         self.pending.lock().unwrap().len()
+    }
+
+    /// Sequences currently streaming (submitted, no terminal event yet).
+    pub fn seq_in_flight(&self) -> usize {
+        self.seq_pending.lock().unwrap().len()
     }
 
     /// Graceful close: half-close the write side (the server observes
@@ -161,7 +244,11 @@ impl Drop for DcClient {
     }
 }
 
-fn reader_loop(stream: TcpStream, pending: Arc<Mutex<HashMap<u64, PendingEntry>>>) {
+fn reader_loop(
+    stream: TcpStream,
+    pending: Arc<Mutex<HashMap<u64, PendingEntry>>>,
+    seq_pending: Arc<Mutex<HashMap<u64, SeqPendingEntry>>>,
+) {
     let mut r = BufReader::new(stream);
     loop {
         match wire::read_frame(&mut r, wire::DEFAULT_MAX_FRAME) {
@@ -180,6 +267,40 @@ fn reader_loop(stream: TcpStream, pending: Arc<Mutex<HashMap<u64, PendingEntry>>
                     }
                     Err(e) => {
                         eprintln!("dcclient: undecodable response, closing: {e}");
+                        break;
+                    }
+                }
+            }
+            Ok(Some(f)) if f.kind == FrameKind::SeqToken => {
+                match wire::decode_seq_token(&f.payload) {
+                    Ok((step, token)) => {
+                        // mid-stream event: look up without removing
+                        if let Some(p) = seq_pending.lock().unwrap().get(&f.corr) {
+                            let _ = p.tx.send(SeqClientEvent::Token {
+                                step,
+                                token,
+                                rtt_us: p.sent.elapsed().as_secs_f64() * 1e6,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("dcclient: undecodable token frame, closing: {e}");
+                        break;
+                    }
+                }
+            }
+            Ok(Some(f)) if f.kind == FrameKind::SeqDone => {
+                match wire::decode_seq_done(&f.payload) {
+                    Ok(done) => {
+                        if let Some(p) = seq_pending.lock().unwrap().remove(&f.corr) {
+                            let _ = p.tx.send(SeqClientEvent::Done {
+                                done,
+                                rtt_us: p.sent.elapsed().as_secs_f64() * 1e6,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("dcclient: undecodable done frame, closing: {e}");
                         break;
                     }
                 }
@@ -215,6 +336,15 @@ fn reader_loop(stream: TcpStream, pending: Arc<Mutex<HashMap<u64, PendingEntry>>
                 backend: String::new(),
                 replica: String::new(),
             },
+        });
+    }
+    // same for half-open sequence streams: one terminal event each
+    let seq_orphans: Vec<SeqPendingEntry> =
+        seq_pending.lock().unwrap().drain().map(|(_, p)| p).collect();
+    for p in seq_orphans {
+        let _ = p.tx.send(SeqClientEvent::Done {
+            done: SeqDone { steps: 0, outcome: Err(InferError::Shutdown) },
+            rtt_us: p.sent.elapsed().as_secs_f64() * 1e6,
         });
     }
 }

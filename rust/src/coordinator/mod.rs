@@ -32,6 +32,12 @@
 //! - [`client`]: [`DcClient`] — the pipelined caller side, demuxing
 //!   responses to per-request receivers; the open-loop load generator
 //!   (`dcinfer loadgen`) and any upstream ranking tier drive this.
+//! - [`seqserve`]: the sequence plane ([`SeqEngine`], §2.1.3) — the
+//!   server owns whole seq2seq decode loops: one `SeqSubmit` per
+//!   sequence, a session table with step-level continuous batching
+//!   (sequences join mid-flight, exit on EOS/max-len), streamed
+//!   `SeqToken`/`SeqDone` frames, and length-aware admission
+//!   (estimated steps x measured step cost against the deadline).
 //! - [`disagg`]: the §4 bandwidth model for the tier boundary.
 //! - sparse tier: with [`FrontendConfig::sparse_tier`] set, native
 //!   lanes dis-aggregate their embedding tables across one shared
@@ -50,17 +56,19 @@ pub mod frontend;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod seqserve;
 pub mod server;
 pub mod service;
 pub mod wire;
 
-pub use batcher::{BatchPolicy, DynamicBatcher, FormedBatch};
-pub use client::{ClientResponse, DcClient};
+pub use batcher::{BatchPolicy, DynamicBatcher, FormedBatch, StepBatcher};
+pub use client::{ClientResponse, DcClient, SeqClientEvent, SeqStream};
 pub use disagg::{disagg_bandwidth, DisaggReport};
 pub use frontend::{AdmissionPolicy, FrontendConfig, ServingFrontend};
 pub use metrics::{MetricsSnapshot, ServeMetrics};
-pub use request::{InferError, InferRequest, InferResponse};
+pub use request::{InferError, InferRequest, InferResponse, SeqDone, SeqFinish, SeqRequest};
 pub use router::{RoutePolicy, Router};
+pub use seqserve::{reference_decode, SeqConfig, SeqEngine, SeqEvent, SeqSnapshot, SeqUpdate};
 pub use server::{ServerConfig, ServingServer};
 pub use service::{scatter_rows, stack_rows, DeadlineClass, ModelService};
 pub use wire::{FrameKind, WireError};

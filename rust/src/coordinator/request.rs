@@ -37,6 +37,66 @@ impl InferRequest {
     }
 }
 
+/// One whole-sequence decode request crossing into the sequence plane
+/// ([`super::seqserve::SeqEngine`]): the server owns the decode loop,
+/// so the client submits the *initial* state once (embedded start token
+/// `x0` and decoder state `h0`, in the model's manifest order) plus a
+/// length cap, and tokens stream back per step.
+#[derive(Debug, Clone)]
+pub struct SeqRequest {
+    pub id: u64,
+    /// routing key, matches a registered service's `model_id()`
+    pub model: String,
+    /// initial decoder inputs (for `gru_step`: `x0 [hidden]`, `h0 [hidden]`)
+    pub inputs: Vec<HostTensor>,
+    /// hard cap on decoded steps (EOS may end the sequence earlier)
+    pub max_len: u32,
+    pub arrival: Instant,
+    /// latency budget for the *whole* sequence (ms); <= 0 means no
+    /// client-side deadline (length-aware admission then only bounds
+    /// occupancy)
+    pub deadline_ms: f64,
+}
+
+impl SeqRequest {
+    pub fn new(
+        model: &str,
+        id: u64,
+        inputs: Vec<HostTensor>,
+        max_len: u32,
+        deadline_ms: f64,
+    ) -> SeqRequest {
+        SeqRequest {
+            id,
+            model: model.to_string(),
+            inputs,
+            max_len,
+            arrival: Instant::now(),
+            deadline_ms,
+        }
+    }
+}
+
+/// Why a sequence ended (the non-error half of [`SeqDone`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqFinish {
+    /// the model emitted the EOS token
+    Eos,
+    /// the request's `max_len` cap was reached
+    MaxLen,
+}
+
+/// Terminal event of a sequence stream: how many tokens were emitted
+/// and why the stream ended — normally ([`SeqFinish`]) or with a typed
+/// [`InferError`] (admission shed, validation failure, engine
+/// shutdown). Exactly one `SeqDone` ends every accepted stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeqDone {
+    /// tokens emitted before the stream ended
+    pub steps: u32,
+    pub outcome: Result<SeqFinish, InferError>,
+}
+
 /// Why a request failed (delivered through [`InferResponse::outcome`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum InferError {

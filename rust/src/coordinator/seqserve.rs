@@ -1,0 +1,725 @@
+//! The sequence-serving plane: a server-owned decode loop with
+//! step-level **continuous batching** (§2.1.3: seq2seq decode is
+//! latency-bound by the sequential loop, and real traffic mixes
+//! sequence lengths).
+//!
+//! The batch-inference plane runs one `gru_step` per network submit —
+//! the *client* owns the decode loop, so every step pays a full wire
+//! round trip and batches never re-form across sequences. Here the
+//! client submits one [`SeqRequest`] (initial embedded token + decoder
+//! state + length cap + whole-sequence deadline) and a single
+//! [`SeqEngine`] thread owns every decode loop:
+//!
+//! - **Session table.** Each accepted request becomes a session
+//!   (hidden tensor, step count, event sender) in a
+//!   [`StepBatcher`] slot, or waits in a bounded pending queue when
+//!   the table is full.
+//! - **Step-level re-forming.** Every iteration the engine re-forms
+//!   the active batch from the current occupants: new sessions join
+//!   mid-flight into freed slots, finished sessions (EOS or max-len)
+//!   exit immediately, and the iteration runs the smallest artifact
+//!   variant covering the occupancy — the GEMM batch stays full under
+//!   mixed lengths instead of padding to the slowest sequence.
+//! - **Streaming.** Each step's token is sent to the session's event
+//!   channel as it is decoded ([`SeqEvent::Token`]); the stream ends
+//!   with exactly one [`SeqEvent::Done`]. The network server forwards
+//!   these as `SeqToken`/`SeqDone` frames on the submit's correlation
+//!   id.
+//! - **Length-aware admission.** On top of the occupancy bound, a
+//!   submit with a deadline is shed ([`InferError::Overloaded`]) when
+//!   `max_len x step_cost + reserve` exceeds the budget, where
+//!   `step_cost` is an EWMA of measured per-iteration wall time — the
+//!   §2.3 shedding rule extended with what the sequence plane knows:
+//!   remaining work is proportional to remaining steps.
+//!
+//! Decode semantics (greedy argmax, deterministic token embedding, EOS)
+//! come from [`SeqDecodeSpec`]; [`reference_decode`] runs the identical
+//! loop one sequence at a time at batch variant 1. The fp32 native
+//! GEMM computes each output row as an independent k-ascending
+//! reduction, so a row's result never depends on its batch neighbors —
+//! which makes the engine's streams **bit-identical** to the reference
+//! (sealed by `tests/seq_serving.rs`).
+//!
+//! Like the executors, the engine's backend is constructed *inside*
+//! its thread from a `Send` [`BackendSpec`] (backends hold raw
+//! pointers and are not `Send`); [`SeqEngine::start`] hands the config
+//! over and waits for the load handshake. Shutdown is a drain: no new
+//! submits, every accepted session decodes to completion.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::models::nmt::SeqDecodeSpec;
+use crate::models::NmtService;
+use crate::runtime::{
+    make_backend, BackendSpec, DType, HostTensor, LoadedArtifact, Manifest,
+};
+
+use super::batcher::{BatchPolicy, StepBatcher};
+use super::request::{InferError, SeqDone, SeqFinish, SeqRequest};
+
+/// Sequence-plane knobs.
+#[derive(Debug, Clone)]
+pub struct SeqConfig {
+    pub artifacts_dir: PathBuf,
+    /// backend the decode loop executes on
+    pub backend: BackendSpec,
+    /// bound on live sessions (active slots + pending queue); submits
+    /// beyond it are shed with [`InferError::Overloaded`]
+    pub max_sessions: usize,
+    /// reserve added to every length estimate (queueing + return, us)
+    pub exec_reserve_us: f64,
+    /// seed for the per-iteration cost EWMA before anything has run (us)
+    pub init_step_cost_us: f64,
+    /// hard cap applied to every request's `max_len`
+    pub max_len_cap: u32,
+    /// idle wait between polls for new sessions
+    pub poll: Duration,
+    /// EOS override for tests; `None` uses the service's manifest value
+    pub eos_override: Option<u32>,
+}
+
+impl Default for SeqConfig {
+    fn default() -> Self {
+        SeqConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            backend: BackendSpec::default(),
+            max_sessions: 64,
+            exec_reserve_us: 5_000.0,
+            init_step_cost_us: 50.0,
+            max_len_cap: 512,
+            poll: Duration::from_millis(2),
+            eos_override: None,
+        }
+    }
+}
+
+/// One event of a sequence stream, engine side.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SeqEvent {
+    /// one decoded step (`step` counts from 1)
+    Token { step: u32, token: u32 },
+    /// terminal event; the session's sender is dropped right after
+    Done(SeqDone),
+}
+
+/// What the engine sends to a submitter's event channel: the event plus
+/// the correlation id the transport demuxes by (many sessions of one
+/// connection funnel into a single channel).
+#[derive(Debug, Clone)]
+pub struct SeqUpdate {
+    pub corr: u64,
+    pub event: SeqEvent,
+}
+
+/// Counters the engine exposes; see [`SeqEngine::snapshot`].
+#[derive(Debug, Clone, Default)]
+pub struct SeqSnapshot {
+    pub submitted: u64,
+    pub shed: u64,
+    pub done_eos: u64,
+    pub done_maxlen: u64,
+    /// tokens streamed across all sessions
+    pub tokens: u64,
+    /// decode iterations (batched steps) executed
+    pub iterations: u64,
+    /// sum of artifact rows across iterations (tokens / rows = fill)
+    pub rows: u64,
+    /// live sessions right now (active + pending)
+    pub live: usize,
+    /// current per-iteration cost EWMA (us)
+    pub step_cost_us: f64,
+}
+
+impl SeqSnapshot {
+    /// Mean fraction of executed GEMM rows that carried a real
+    /// sequence (1.0 = no padding ever ran).
+    pub fn mean_fill(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.rows as f64
+        }
+    }
+
+    /// Decoded tokens per executed iteration — the continuous-batching
+    /// payoff in one number (1.0 = serial decode).
+    pub fn tokens_per_iteration(&self) -> f64 {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.iterations as f64
+        }
+    }
+}
+
+/// Per-request decoder state while the sequence is live.
+struct Session {
+    corr: u64,
+    x: Vec<f32>,
+    h: Vec<f32>,
+    step: u32,
+    max_len: u32,
+    /// set by the scatter pass when this step ended the sequence; the
+    /// retire pass frees the slot in the same iteration
+    done: Option<SeqFinish>,
+    tx: Sender<SeqUpdate>,
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    shed: AtomicU64,
+    done_eos: AtomicU64,
+    done_maxlen: AtomicU64,
+    tokens: AtomicU64,
+    iterations: AtomicU64,
+    rows: AtomicU64,
+}
+
+struct QueueState {
+    pending: VecDeque<Session>,
+    /// pending + active — the admission occupancy bound
+    live: usize,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    stop: AtomicBool,
+    /// f64 bits of the per-iteration cost EWMA (us)
+    step_cost_us: AtomicU64,
+    counters: Counters,
+}
+
+impl Shared {
+    fn step_cost(&self) -> f64 {
+        f64::from_bits(self.step_cost_us.load(Ordering::Relaxed))
+    }
+}
+
+/// A running sequence-serving engine over one `gru_step` artifact
+/// family.
+pub struct SeqEngine {
+    shared: Arc<Shared>,
+    service: NmtService,
+    spec: SeqDecodeSpec,
+    max_sessions: usize,
+    exec_reserve_us: f64,
+    max_len_cap: u32,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl SeqEngine {
+    /// Load the service's artifact variants on a dedicated decode
+    /// thread and start the loop. Fails fast (before returning) if the
+    /// backend or artifacts cannot load.
+    pub fn start(cfg: SeqConfig, service: NmtService) -> Result<SeqEngine> {
+        anyhow::ensure!(cfg.max_sessions >= 1, "max_sessions must be >= 1");
+        anyhow::ensure!(cfg.max_len_cap >= 1, "max_len_cap must be >= 1");
+        anyhow::ensure!(
+            cfg.init_step_cost_us > 0.0 && cfg.init_step_cost_us.is_finite(),
+            "init_step_cost_us must be positive"
+        );
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let variants = manifest.variants_for_prefix(NmtService::PREFIX);
+        anyhow::ensure!(
+            !variants.is_empty(),
+            "no artifacts match prefix {} (sequence plane)",
+            NmtService::PREFIX
+        );
+        let policy = BatchPolicy {
+            variants: variants.iter().map(|(b, _)| *b).collect(),
+            max_wait_us: 0.0,
+            exec_reserve_us: cfg.exec_reserve_us,
+        };
+        let mut spec = service.decode_spec();
+        if let Some(eos) = cfg.eos_override {
+            spec.eos = eos;
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState { pending: VecDeque::new(), live: 0 }),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            step_cost_us: AtomicU64::new(cfg.init_step_cost_us.to_bits()),
+            counters: Counters::default(),
+        });
+        // backend construction must happen on the decode thread (not
+        // Send); the handshake channel reports load success or failure
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let worker = {
+            let shared = shared.clone();
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("dcseq-decode".into())
+                .spawn(move || {
+                    let loaded = (|| -> Result<Vec<(usize, Box<dyn LoadedArtifact>)>> {
+                        let backend = make_backend(&cfg.backend)?;
+                        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+                        variants
+                            .iter()
+                            .map(|(b, name)| {
+                                Ok((*b, backend.load(&manifest, name).with_context(|| {
+                                    format!("loading sequence artifact {name}")
+                                })?))
+                            })
+                            .collect()
+                    })();
+                    match loaded {
+                        Ok(artifacts) => {
+                            let _ = ready_tx.send(Ok(()));
+                            decode_loop(&shared, &cfg, &spec, artifacts, policy);
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                        }
+                    }
+                })
+                .context("spawning sequence decode thread")?
+        };
+        ready_rx
+            .recv()
+            .context("sequence decode thread died during load")?
+            .context("sequence engine load")?;
+        Ok(SeqEngine {
+            shared,
+            spec,
+            service,
+            max_sessions: cfg.max_sessions,
+            exec_reserve_us: cfg.exec_reserve_us,
+            max_len_cap: cfg.max_len_cap,
+            worker: Mutex::new(Some(worker)),
+        })
+    }
+
+    /// The decode semantics the loop follows (after any EOS override).
+    pub fn decode_spec(&self) -> SeqDecodeSpec {
+        self.spec
+    }
+
+    /// Validate and admit one sequence. On success the submitter's
+    /// channel receives one [`SeqEvent::Token`] per decoded step and a
+    /// terminal [`SeqEvent::Done`], all tagged `corr`. Admission errors
+    /// come back synchronously (nothing is sent on `tx`): the typed
+    /// shed/validation error for the transport to answer with.
+    pub fn submit(
+        &self,
+        req: SeqRequest,
+        corr: u64,
+        tx: Sender<SeqUpdate>,
+    ) -> Result<(), InferError> {
+        if req.model != NmtService::MODEL_ID {
+            return Err(InferError::UnknownModel(req.model));
+        }
+        let hidden = self.service.hidden;
+        if req.inputs.len() != 2 {
+            return Err(InferError::BadRequest(format!(
+                "expected 2 inputs (x0, h0), got {}",
+                req.inputs.len()
+            )));
+        }
+        for (j, t) in req.inputs.iter().enumerate() {
+            if t.dtype != DType::F32 || t.shape != [hidden] {
+                return Err(InferError::BadRequest(format!(
+                    "input {j}: got {:?}{:?}, want F32[{hidden}]",
+                    t.dtype, t.shape
+                )));
+            }
+        }
+        if req.max_len == 0 {
+            return Err(InferError::BadRequest("max_len must be >= 1".into()));
+        }
+        let max_len = req.max_len.min(self.max_len_cap);
+        // length-aware admission: estimated decode time at the cap
+        // against the whole-sequence budget (deadline <= 0 = no budget)
+        if req.deadline_ms > 0.0 {
+            let est_us = f64::from(max_len) * self.shared.step_cost() + self.exec_reserve_us;
+            if est_us > req.deadline_ms * 1e3 {
+                self.shared.counters.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(InferError::Overloaded(format!(
+                    "deadline {} ms is infeasible for {} steps: ~{:.0} us estimated \
+                     ({:.1} us/step + {:.0} us reserve)",
+                    req.deadline_ms,
+                    max_len,
+                    est_us,
+                    self.shared.step_cost(),
+                    self.exec_reserve_us
+                )));
+            }
+        }
+        let x = req.inputs[0].as_f32().map_err(|e| InferError::BadRequest(format!("{e:#}")))?;
+        let h = req.inputs[1].as_f32().map_err(|e| InferError::BadRequest(format!("{e:#}")))?;
+        {
+            // the stop check lives under the queue lock: the decode
+            // thread's exit check runs under the same lock, so a push
+            // that observes stop=false is always drained
+            let mut st = self.shared.state.lock().unwrap();
+            if self.shared.stop.load(Ordering::SeqCst) {
+                return Err(InferError::Shutdown);
+            }
+            if st.live >= self.max_sessions {
+                self.shared.counters.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(InferError::Overloaded(format!(
+                    "session table at bound {} ({} live)",
+                    self.max_sessions, st.live
+                )));
+            }
+            st.live += 1;
+            st.pending.push_back(Session { corr, x, h, step: 0, max_len, done: None, tx });
+        }
+        self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+
+    /// Live sessions right now (active + pending).
+    pub fn live(&self) -> usize {
+        self.shared.state.lock().unwrap().live
+    }
+
+    /// Counter snapshot.
+    pub fn snapshot(&self) -> SeqSnapshot {
+        let c = &self.shared.counters;
+        SeqSnapshot {
+            submitted: c.submitted.load(Ordering::Relaxed),
+            shed: c.shed.load(Ordering::Relaxed),
+            done_eos: c.done_eos.load(Ordering::Relaxed),
+            done_maxlen: c.done_maxlen.load(Ordering::Relaxed),
+            tokens: c.tokens.load(Ordering::Relaxed),
+            iterations: c.iterations.load(Ordering::Relaxed),
+            rows: c.rows.load(Ordering::Relaxed),
+            live: self.live(),
+            step_cost_us: self.shared.step_cost(),
+        }
+    }
+
+    /// Graceful drain: refuse new submits, decode every accepted
+    /// session to completion, then join the decode thread. Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SeqEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The engine thread: admit -> form -> run -> scatter -> retire, every
+/// iteration, until stopped *and* drained.
+fn decode_loop(
+    shared: &Shared,
+    cfg: &SeqConfig,
+    spec: &SeqDecodeSpec,
+    artifacts: Vec<(usize, Box<dyn LoadedArtifact>)>,
+    policy: BatchPolicy,
+) {
+    let hidden = spec.hidden;
+    let vocab = spec.vocab;
+    let mut batcher: StepBatcher<Session> = StepBatcher::new(policy);
+    let mut xbuf: Vec<f32> = Vec::new();
+    let mut hbuf: Vec<f32> = Vec::new();
+    loop {
+        // admit pending sessions into freed slots (mid-flight joins)
+        {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                while batcher.has_room() {
+                    match st.pending.pop_front() {
+                        Some(s) => {
+                            if let Err(s) = batcher.admit(s) {
+                                st.pending.push_front(s);
+                                break;
+                            }
+                        }
+                        None => break,
+                    }
+                }
+                if !batcher.is_empty() {
+                    break;
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    debug_assert_eq!(st.live, 0, "drained with live sessions");
+                    return;
+                }
+                let (g, _timeout) = shared.cv.wait_timeout(st, cfg.poll).unwrap();
+                st = g;
+            }
+        }
+
+        // form this iteration's batch: smallest covering variant,
+        // zero-padded tail rows (row independence keeps them inert)
+        let n = batcher.len();
+        let variant = batcher.variant();
+        let (_, artifact) = artifacts
+            .iter()
+            .find(|(b, _)| *b == variant)
+            .expect("policy variants mirror loaded artifacts");
+        xbuf.clear();
+        xbuf.resize(variant * hidden, 0.0);
+        hbuf.clear();
+        hbuf.resize(variant * hidden, 0.0);
+        for (i, s) in batcher.occupants().iter().enumerate() {
+            xbuf[i * hidden..(i + 1) * hidden].copy_from_slice(&s.x);
+            hbuf[i * hidden..(i + 1) * hidden].copy_from_slice(&s.h);
+        }
+        let started = Instant::now();
+        let out = artifact.run(&[
+            HostTensor::from_f32(&[variant, hidden], &xbuf),
+            HostTensor::from_f32(&[variant, hidden], &hbuf),
+        ]);
+        let elapsed_us = started.elapsed().as_secs_f64() * 1e6;
+        // EWMA of per-iteration wall time: what one more step of any
+        // session costs, the admission estimator's step price
+        let old = shared.step_cost();
+        shared
+            .step_cost_us
+            .store((0.9 * old + 0.1 * elapsed_us).to_bits(), Ordering::Relaxed);
+        shared.counters.iterations.fetch_add(1, Ordering::Relaxed);
+        shared.counters.rows.fetch_add(variant as u64, Ordering::Relaxed);
+        shared.counters.tokens.fetch_add(n as u64, Ordering::Relaxed);
+
+        let (logits, h_new) = match (|| -> Result<(Vec<f32>, Vec<f32>)> {
+            let out = out?;
+            anyhow::ensure!(out.len() == 2, "gru_step must return (logits, h_new)");
+            Ok((out[0].as_f32()?, out[1].as_f32()?))
+        })() {
+            Ok(pair) => pair,
+            Err(e) => {
+                // the whole iteration failed: every occupant observes
+                // the error (same contract as a failed batch in the
+                // batch-inference plane)
+                let err = InferError::ExecFailed(format!("{e:#}"));
+                let failed = batcher.drain();
+                let mut st = shared.state.lock().unwrap();
+                st.live -= failed.len();
+                drop(st);
+                for s in failed {
+                    finish(s, Err(err.clone()));
+                }
+                continue;
+            }
+        };
+
+        // scatter rows, stream tokens, mark finished sessions
+        for (i, s) in batcher.occupants_mut().iter_mut().enumerate() {
+            let token = SeqDecodeSpec::argmax(&logits[i * vocab..(i + 1) * vocab]);
+            s.step += 1;
+            let _ = s
+                .tx
+                .send(SeqUpdate { corr: s.corr, event: SeqEvent::Token { step: s.step, token } });
+            if token == spec.eos {
+                s.done = Some(SeqFinish::Eos);
+            } else if s.step >= s.max_len {
+                s.done = Some(SeqFinish::MaxLen);
+            } else {
+                s.h.copy_from_slice(&h_new[i * hidden..(i + 1) * hidden]);
+                s.x = spec.token_embedding(token);
+            }
+        }
+        // retire finished sessions: their slots are free for the next
+        // iteration's mid-flight joins
+        let retired = batcher.retire(|s| s.done.is_some());
+        if !retired.is_empty() {
+            let mut st = shared.state.lock().unwrap();
+            st.live -= retired.len();
+            drop(st);
+            for s in retired {
+                let why = s.done.expect("retired sessions are marked done");
+                match why {
+                    SeqFinish::Eos => shared.counters.done_eos.fetch_add(1, Ordering::Relaxed),
+                    SeqFinish::MaxLen => {
+                        shared.counters.done_maxlen.fetch_add(1, Ordering::Relaxed)
+                    }
+                };
+                finish(s, Ok(why));
+            }
+        }
+    }
+}
+
+/// Send the terminal event and drop the session (its sender with it) —
+/// the transport's drain barrier observes the drop.
+fn finish(s: Session, outcome: Result<SeqFinish, InferError>) {
+    let _ = s.tx.send(SeqUpdate {
+        corr: s.corr,
+        event: SeqEvent::Done(SeqDone { steps: s.step, outcome }),
+    });
+}
+
+/// The single-sequence reference: run the identical greedy loop at
+/// batch variant 1 (one artifact row per step, no batch neighbors).
+/// Returns the token stream and why it ended — the oracle the
+/// continuous-batching engine must match bit-for-bit.
+pub fn reference_decode(
+    artifact: &dyn LoadedArtifact,
+    spec: &SeqDecodeSpec,
+    x0: &[f32],
+    h0: &[f32],
+    max_len: u32,
+) -> Result<(Vec<u32>, SeqFinish)> {
+    anyhow::ensure!(x0.len() == spec.hidden && h0.len() == spec.hidden, "state width mismatch");
+    anyhow::ensure!(max_len >= 1, "max_len must be >= 1");
+    let mut x = x0.to_vec();
+    let mut h = h0.to_vec();
+    let mut tokens = Vec::new();
+    loop {
+        let out = artifact.run(&[
+            HostTensor::from_f32(&[1, spec.hidden], &x),
+            HostTensor::from_f32(&[1, spec.hidden], &h),
+        ])?;
+        anyhow::ensure!(out.len() == 2, "gru_step must return (logits, h_new)");
+        let token = SeqDecodeSpec::argmax(&out[0].as_f32()?);
+        tokens.push(token);
+        if token == spec.eos {
+            return Ok((tokens, SeqFinish::Eos));
+        }
+        if tokens.len() as u32 >= max_len {
+            return Ok((tokens, SeqFinish::MaxLen));
+        }
+        h = out[1].as_f32()?;
+        x = spec.token_embedding(token);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{synthetic_artifacts_dir, Precision};
+    use std::sync::mpsc::channel;
+
+    fn engine_over_fixture(tag: &str, cfg: SeqConfig) -> (SeqEngine, NmtService, PathBuf) {
+        let dir = synthetic_artifacts_dir(tag).expect("fixture");
+        let manifest = Manifest::load(&dir).expect("manifest");
+        let service = NmtService::from_manifest(&manifest).expect("nmt config");
+        let cfg = SeqConfig {
+            artifacts_dir: dir.clone(),
+            backend: BackendSpec::native(Precision::Fp32),
+            ..cfg
+        };
+        let engine = SeqEngine::start(cfg, service.clone()).expect("engine start");
+        (engine, service, dir)
+    }
+
+    #[test]
+    fn engine_streams_tokens_and_one_done_per_session() {
+        let (engine, service, dir) = engine_over_fixture("seq_basic", SeqConfig::default());
+        let (tx, rx) = channel();
+        let req = service.synth_seq_request(1, 0xfeed, 6, 0.0);
+        engine.submit(req, 41, tx).expect("admitted");
+        let mut tokens = 0;
+        let mut done = None;
+        while let Ok(up) = rx.recv_timeout(Duration::from_secs(10)) {
+            assert_eq!(up.corr, 41);
+            match up.event {
+                SeqEvent::Token { step, .. } => {
+                    tokens += 1;
+                    assert_eq!(step, tokens);
+                }
+                SeqEvent::Done(d) => {
+                    done = Some(d);
+                    break;
+                }
+            }
+        }
+        let done = done.expect("stream must end with Done");
+        assert_eq!(done.steps, tokens);
+        assert!(done.steps >= 1 && done.steps <= 6);
+        match done.outcome.unwrap() {
+            SeqFinish::MaxLen => assert_eq!(done.steps, 6),
+            SeqFinish::Eos => assert!(done.steps <= 6),
+        }
+        assert_eq!(engine.live(), 0, "finished sessions free their slots");
+        let snap = engine.snapshot();
+        assert_eq!(snap.submitted, 1);
+        assert_eq!(snap.tokens, u64::from(done.steps));
+        engine.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn submit_validation_and_admission_are_typed() {
+        let (engine, service, dir) = engine_over_fixture(
+            "seq_admission",
+            SeqConfig {
+                // absurd seeded step cost: any deadlined request is
+                // length-infeasible until something actually runs
+                init_step_cost_us: 1e7,
+                ..SeqConfig::default()
+            },
+        );
+        let (tx, _rx) = channel();
+        // wrong model
+        let mut req = service.synth_seq_request(1, 1, 4, 0.0);
+        req.model = "cv".into();
+        assert!(matches!(
+            engine.submit(req, 1, tx.clone()),
+            Err(InferError::UnknownModel(_))
+        ));
+        // wrong input shape
+        let mut req = service.synth_seq_request(2, 1, 4, 0.0);
+        req.inputs.truncate(1);
+        assert!(matches!(engine.submit(req, 2, tx.clone()), Err(InferError::BadRequest(_))));
+        // length-aware shed: 4 steps x 10s/step against a 100 ms budget
+        let req = service.synth_seq_request(3, 1, 4, 100.0);
+        let e = engine.submit(req, 3, tx.clone()).unwrap_err();
+        assert!(matches!(e, InferError::Overloaded(_)), "{e}");
+        assert!(e.to_string().contains("infeasible"), "{e}");
+        // no deadline -> no length judgment: admitted and decoded
+        let (tx2, rx2) = channel();
+        let req = service.synth_seq_request(4, 1, 2, 0.0);
+        engine.submit(req, 4, tx2).expect("deadline-free submit admitted");
+        let mut saw_done = false;
+        while let Ok(up) = rx2.recv_timeout(Duration::from_secs(10)) {
+            if matches!(up.event, SeqEvent::Done(_)) {
+                saw_done = true;
+                break;
+            }
+        }
+        assert!(saw_done);
+        assert_eq!(engine.snapshot().shed, 1);
+        engine.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shutdown_drains_accepted_sessions_then_refuses() {
+        let (engine, service, dir) = engine_over_fixture("seq_drain", SeqConfig::default());
+        let mut streams = Vec::new();
+        for id in 0..6u64 {
+            let (tx, rx) = channel();
+            let req = service.synth_seq_request(id, 7, 20, 0.0);
+            engine.submit(req, id, tx).expect("admitted");
+            streams.push(rx);
+        }
+        engine.shutdown();
+        // every accepted stream completed (drain, not abort)
+        for rx in streams {
+            let mut done = false;
+            while let Ok(up) = rx.try_recv() {
+                if let SeqEvent::Done(d) = up.event {
+                    assert!(d.outcome.is_ok(), "{:?}", d.outcome);
+                    done = true;
+                }
+            }
+            assert!(done, "accepted stream lost its Done");
+        }
+        // post-shutdown submits are refused
+        let (tx, _rx) = channel();
+        let req = service.synth_seq_request(99, 7, 4, 0.0);
+        assert!(matches!(engine.submit(req, 99, tx), Err(InferError::Shutdown)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -19,6 +19,13 @@
 //!   exits only after the last in-flight response is on the wire.
 //!   `Ping` frames ride the same channel and come back as `Pong` —
 //!   the health probe a [`crate::cluster::ClusterRouter`] uses.
+//! - with a [`SeqEngine`] attached ([`ServingServer::bind_with_seq`]),
+//!   `SeqSubmit` frames route into the sequence plane: the engine's
+//!   per-step [`SeqUpdate`]s pump into the same writer inbox and go out
+//!   as `SeqToken`/`SeqDone` frames on the submit's correlation id,
+//!   interleaved with ordinary responses. A refused submit (shed,
+//!   validation, no engine) answers with an error-carrying `SeqDone` on
+//!   the same corr — one terminal frame per submit, always.
 //!
 //! Malformed frames never panic the server: an undecodable payload in
 //! an intact frame is answered with a `BadRequest` response on the same
@@ -43,7 +50,8 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::frontend::ServingFrontend;
-use super::request::{InferError, InferResponse};
+use super::request::{InferError, InferResponse, SeqDone};
+use super::seqserve::{SeqEngine, SeqEvent, SeqUpdate};
 use super::wire::{self, FrameKind, WireError};
 
 /// Transport knobs (the serving policy itself — batching, admission —
@@ -75,6 +83,7 @@ struct ConnHandles {
     reader: JoinHandle<()>,
     writer: JoinHandle<()>,
     pump: JoinHandle<()>,
+    seq_pump: JoinHandle<()>,
 }
 
 /// A running TCP ingress over a shared [`ServingFrontend`].
@@ -89,9 +98,23 @@ pub struct ServingServer {
 
 impl ServingServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
-    /// start accepting connections against `frontend`.
+    /// start accepting connections against `frontend`. `SeqSubmit`
+    /// frames are refused (no sequence plane); use
+    /// [`Self::bind_with_seq`] to serve them.
     pub fn bind(
         frontend: Arc<ServingFrontend>,
+        addr: impl ToSocketAddrs,
+        cfg: ServerConfig,
+    ) -> Result<ServingServer> {
+        Self::bind_with_seq(frontend, None, addr, cfg)
+    }
+
+    /// [`Self::bind`] plus an optional sequence plane: when `seq` is
+    /// set, `SeqSubmit` frames feed the engine and its token streams
+    /// flow back over this server's connections.
+    pub fn bind_with_seq(
+        frontend: Arc<ServingFrontend>,
+        seq: Option<Arc<SeqEngine>>,
         addr: impl ToSocketAddrs,
         cfg: ServerConfig,
     ) -> Result<ServingServer> {
@@ -106,7 +129,7 @@ impl ServingServer {
             let frontend = frontend.clone();
             std::thread::Builder::new()
                 .name("dcserve-accept".into())
-                .spawn(move || accept_loop(listener, frontend, stop, conns, accepted, cfg))
+                .spawn(move || accept_loop(listener, frontend, seq, stop, conns, accepted, cfg))
                 .context("spawning accept loop")?
         };
         Ok(ServingServer {
@@ -151,6 +174,7 @@ impl ServingServer {
             let _ = c.reader.join();
             let _ = c.writer.join();
             let _ = c.pump.join();
+            let _ = c.seq_pump.join();
         }
     }
 }
@@ -164,6 +188,7 @@ impl Drop for ServingServer {
 fn accept_loop(
     listener: TcpListener,
     frontend: Arc<ServingFrontend>,
+    seq: Option<Arc<SeqEngine>>,
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<ConnHandles>>>,
     accepted: Arc<AtomicU64>,
@@ -173,7 +198,7 @@ fn accept_loop(
         match listener.accept() {
             Ok((stream, _peer)) => {
                 accepted.fetch_add(1, Ordering::SeqCst);
-                match spawn_conn(stream, &frontend, &cfg) {
+                match spawn_conn(stream, &frontend, seq.clone(), &cfg) {
                     Ok(conn) => {
                         let mut g = conns.lock().unwrap();
                         // reap finished connections so a long-lived
@@ -181,7 +206,8 @@ fn accept_loop(
                         g.retain(|c| {
                             !(c.reader.is_finished()
                                 && c.writer.is_finished()
-                                && c.pump.is_finished())
+                                && c.pump.is_finished()
+                                && c.seq_pump.is_finished())
                         });
                         g.push(conn);
                     }
@@ -198,15 +224,18 @@ fn accept_loop(
 }
 
 /// What travels to a connection's writer thread: a response to encode,
-/// or a health-probe pong to echo (corr only, no payload).
+/// a health-probe pong to echo (corr only, no payload), or a
+/// sequence-stream event to frame as `SeqToken`/`SeqDone`.
 enum Outbound {
     Resp(InferResponse),
     Pong(u64),
+    Seq(SeqUpdate),
 }
 
 fn spawn_conn(
     stream: TcpStream,
     frontend: &Arc<ServingFrontend>,
+    seq: Option<Arc<SeqEngine>>,
     cfg: &ServerConfig,
 ) -> Result<ConnHandles> {
     // a listener in non-blocking mode can hand out non-blocking streams
@@ -238,15 +267,35 @@ fn spawn_conn(
             })
             .context("spawning connection response pump")?
     };
+    // the sequence plane's update path is typed `Sender<SeqUpdate>`;
+    // its own pump wraps those into `Outbound`. The engine's sessions
+    // hold clones of `sequpd_tx` until their terminal event is sent, so
+    // this pump — and with it the writer — outlives every accepted
+    // sequence: the drain barrier extends to token streams.
+    let (sequpd_tx, sequpd_rx) = channel::<SeqUpdate>();
+    let seq_pump = {
+        let done = done_tx.clone();
+        std::thread::Builder::new()
+            .name("dcserve-seqpump".into())
+            .spawn(move || {
+                while let Ok(up) = sequpd_rx.recv() {
+                    if done.send(Outbound::Seq(up)).is_err() {
+                        break; // writer gone; nothing left to deliver to
+                    }
+                }
+            })
+            .context("spawning connection sequence pump")?
+    };
     // corr -> the client's original request id (responses travel with
     // the corr in `id` until the writer restores the user id)
     let ids: Arc<Mutex<HashMap<u64, u64>>> = Arc::new(Mutex::new(HashMap::new()));
     let max_frame = cfg.max_frame_bytes;
     let reader = {
         let (frontend, ids) = (frontend.clone(), ids.clone());
+        let ctx = ReaderCtx { frontend, seq, done: done_tx, resp_tx, sequpd_tx, ids, max_frame };
         std::thread::Builder::new()
             .name("dcserve-read".into())
-            .spawn(move || conn_reader(read_half, frontend, done_tx, resp_tx, ids, max_frame))
+            .spawn(move || conn_reader(read_half, ctx))
             .context("spawning connection reader")?
     };
     let label = cfg.replica_label.clone();
@@ -254,7 +303,7 @@ fn spawn_conn(
         .name("dcserve-write".into())
         .spawn(move || conn_writer(write_half, done_rx, ids, label))
         .context("spawning connection writer")?;
-    Ok(ConnHandles { stream, reader, writer, pump })
+    Ok(ConnHandles { stream, reader, writer, pump, seq_pump })
 }
 
 /// An immediately-synthesized response (admission shed, unknown model,
@@ -274,14 +323,20 @@ fn synth_response(corr: u64, model: &str, err: InferError) -> InferResponse {
     }
 }
 
-fn conn_reader(
-    stream: TcpStream,
+/// Everything one connection's reader thread submits into and answers
+/// through.
+struct ReaderCtx {
     frontend: Arc<ServingFrontend>,
+    seq: Option<Arc<SeqEngine>>,
     done: Sender<Outbound>,
     resp_tx: Sender<InferResponse>,
+    sequpd_tx: Sender<SeqUpdate>,
     ids: Arc<Mutex<HashMap<u64, u64>>>,
     max_frame: u32,
-) {
+}
+
+fn conn_reader(stream: TcpStream, ctx: ReaderCtx) {
+    let ReaderCtx { frontend, seq, done, resp_tx, sequpd_tx, ids, max_frame } = ctx;
     let mut r = BufReader::new(stream);
     loop {
         let frame = match wire::read_frame(&mut r, max_frame) {
@@ -304,6 +359,37 @@ fn conn_reader(
             // corr back out-of-band with the response stream
             if done.send(Outbound::Pong(frame.corr)).is_err() {
                 break;
+            }
+            continue;
+        }
+        if frame.kind == FrameKind::SeqSubmit {
+            // sequence plane: the engine streams SeqToken/SeqDone on
+            // this corr via `sequpd_tx`; a refusal answers with an
+            // error-carrying SeqDone on the same path so the client's
+            // demux sees exactly one terminal frame either way
+            let corr = frame.corr;
+            let refuse = |e: InferError| SeqUpdate {
+                corr,
+                event: SeqEvent::Done(SeqDone { steps: 0, outcome: Err(e) }),
+            };
+            match wire::decode_seq_submit(&frame.payload) {
+                Ok(req) => match &seq {
+                    Some(engine) => {
+                        if let Err(e) = engine.submit(req, corr, sequpd_tx.clone()) {
+                            let _ = sequpd_tx.send(refuse(e));
+                        }
+                    }
+                    None => {
+                        let _ = sequpd_tx.send(refuse(InferError::BadRequest(
+                            "sequence plane not enabled on this server".into(),
+                        )));
+                    }
+                },
+                Err(e) => {
+                    let _ = sequpd_tx.send(refuse(InferError::BadRequest(format!(
+                        "undecodable sequence submit: {e}"
+                    ))));
+                }
             }
             continue;
         }
@@ -382,6 +468,16 @@ fn conn_writer(
                     wire::write_frame(&mut w, FrameKind::Response, corr, &payload)
                 }
                 Outbound::Pong(corr) => wire::write_frame(&mut w, FrameKind::Pong, corr, &[]),
+                Outbound::Seq(up) => match up.event {
+                    SeqEvent::Token { step, token } => {
+                        let payload = wire::encode_seq_token(step, token);
+                        wire::write_frame(&mut w, FrameKind::SeqToken, up.corr, &payload)
+                    }
+                    SeqEvent::Done(d) => {
+                        let payload = wire::encode_seq_done(&d);
+                        wire::write_frame(&mut w, FrameKind::SeqDone, up.corr, &payload)
+                    }
+                },
             };
             if wrote.is_err() {
                 break 'stream; // client gone; lane sends just no-op now

@@ -11,7 +11,8 @@
 //! 0       4     magic "DCWF"
 //! 4       1     version (2)
 //! 5       1     kind: 1 = request, 2 = response, 3 = shard request,
-//!               4 = shard response, 5 = ping, 6 = pong
+//!               4 = shard response, 5 = ping, 6 = pong,
+//!               7 = seq submit, 8 = seq token, 9 = seq done
 //! 6       2     reserved (0)
 //! 8       4     payload length (u32 LE)
 //! 12      8     correlation id (u64 LE)
@@ -39,6 +40,19 @@
 //! network bit-identically), and the ping/pong health-check frames
 //! (kinds 5/6, empty payloads, correlation id echoed).
 //!
+//! The sequence plane adds the streaming frames (kinds 7/8/9), still
+//! version 2 — a client submits one decode with `SeqSubmit` and the
+//! server streams back one `SeqToken` frame per decode step plus
+//! exactly one terminal `SeqDone`, all echoing the submit's
+//! correlation id (many interleaved sequence streams and ordinary
+//! request/response pairs share one connection via the same corr
+//! demux). Payload grammars: `SeqSubmit` is `id u64 · deadline_ms f64
+//! · max_len u32 · model str16 · n_inputs u16 · tensor*`; `SeqToken`
+//! is `step u32 · token u32`; `SeqDone` is `steps u32 · tag u8` then,
+//! for `tag 0` (finished), `reason u8` (0 = EOS, 1 = max-len), or for
+//! `tag 1` (failed), `code u8 · message str16` using the response
+//! error codes.
+//!
 //! Decoding is total: malformed, truncated and oversized frames come
 //! back as a typed [`WireError`], never a panic, and a frame's declared
 //! length is checked against a caller-supplied bound before any
@@ -65,7 +79,7 @@ use std::time::Instant;
 
 use crate::runtime::{DType, HostTensor};
 
-use super::request::{InferError, InferRequest, InferResponse};
+use super::request::{InferError, InferRequest, InferResponse, SeqDone, SeqFinish, SeqRequest};
 
 /// First four bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"DCWF";
@@ -91,6 +105,14 @@ pub enum FrameKind {
     Ping,
     /// health-check answer
     Pong,
+    /// one whole-sequence decode submission (kind 7): the server owns
+    /// the decode loop from here
+    SeqSubmit,
+    /// one streamed decode step (kind 8), corr echoed from the submit
+    SeqToken,
+    /// terminal frame of a sequence stream (kind 9): finish reason or
+    /// typed error
+    SeqDone,
 }
 
 impl FrameKind {
@@ -102,6 +124,9 @@ impl FrameKind {
             FrameKind::ShardResponse => 4,
             FrameKind::Ping => 5,
             FrameKind::Pong => 6,
+            FrameKind::SeqSubmit => 7,
+            FrameKind::SeqToken => 8,
+            FrameKind::SeqDone => 9,
         }
     }
 
@@ -113,6 +138,9 @@ impl FrameKind {
             4 => Ok(FrameKind::ShardResponse),
             5 => Ok(FrameKind::Ping),
             6 => Ok(FrameKind::Pong),
+            7 => Ok(FrameKind::SeqSubmit),
+            8 => Ok(FrameKind::SeqToken),
+            9 => Ok(FrameKind::SeqDone),
             other => Err(WireError::BadFrameKind(other)),
         }
     }
@@ -523,6 +551,111 @@ pub fn peek_request_deadline(payload: &[u8]) -> Result<(u64, f64), WireError> {
 }
 
 // ---------------------------------------------------------------------------
+// sequence-stream codecs (the continuous-batching plane's boundary)
+// ---------------------------------------------------------------------------
+
+/// Encode a sequence submission payload (frame it as
+/// [`FrameKind::SeqSubmit`]).
+pub fn encode_seq_submit(req: &SeqRequest) -> Vec<u8> {
+    let body: usize = req.inputs.iter().map(|t| t.data.len() + 32).sum();
+    let mut out = Vec::with_capacity(body + req.model.len() + 32);
+    out.extend_from_slice(&req.id.to_le_bytes());
+    out.extend_from_slice(&req.deadline_ms.to_bits().to_le_bytes());
+    out.extend_from_slice(&req.max_len.to_le_bytes());
+    put_str16(&mut out, &req.model);
+    out.extend_from_slice(&(req.inputs.len() as u16).to_le_bytes());
+    for t in &req.inputs {
+        put_tensor(&mut out, t);
+    }
+    out
+}
+
+/// Decode a sequence submission payload. As with [`decode_request`],
+/// the arrival instant is stamped at decode time.
+pub fn decode_seq_submit(payload: &[u8]) -> Result<SeqRequest, WireError> {
+    let mut c = Cur { buf: payload, pos: 0 };
+    let id = c.u64()?;
+    let deadline_ms = c.f64()?;
+    if !deadline_ms.is_finite() {
+        return Err(WireError::BadPayload("non-finite deadline".into()));
+    }
+    let max_len = c.u32()?;
+    if max_len == 0 {
+        return Err(WireError::BadPayload("max_len must be >= 1".into()));
+    }
+    let model = c.str16()?;
+    let n = c.u16()? as usize;
+    let mut inputs = Vec::with_capacity(n.min(64));
+    for _ in 0..n {
+        inputs.push(take_tensor(&mut c)?);
+    }
+    c.done()?;
+    Ok(SeqRequest { id, model, inputs, max_len, arrival: Instant::now(), deadline_ms })
+}
+
+/// Encode one streamed decode step (frame it as [`FrameKind::SeqToken`]
+/// with the submit's corr).
+pub fn encode_seq_token(step: u32, token: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8);
+    out.extend_from_slice(&step.to_le_bytes());
+    out.extend_from_slice(&token.to_le_bytes());
+    out
+}
+
+/// Decode a [`FrameKind::SeqToken`] payload into `(step, token)`.
+pub fn decode_seq_token(payload: &[u8]) -> Result<(u32, u32), WireError> {
+    let mut c = Cur { buf: payload, pos: 0 };
+    let step = c.u32()?;
+    let token = c.u32()?;
+    c.done()?;
+    Ok((step, token))
+}
+
+/// Encode the terminal frame of a sequence stream (frame it as
+/// [`FrameKind::SeqDone`]).
+pub fn encode_seq_done(done: &SeqDone) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    out.extend_from_slice(&done.steps.to_le_bytes());
+    match &done.outcome {
+        Ok(finish) => {
+            out.push(0);
+            out.push(match finish {
+                SeqFinish::Eos => 0,
+                SeqFinish::MaxLen => 1,
+            });
+        }
+        Err(e) => {
+            out.push(1);
+            let (code, msg) = error_parts(e);
+            out.push(code);
+            put_str16(&mut out, msg);
+        }
+    }
+    out
+}
+
+/// Decode a [`FrameKind::SeqDone`] payload.
+pub fn decode_seq_done(payload: &[u8]) -> Result<SeqDone, WireError> {
+    let mut c = Cur { buf: payload, pos: 0 };
+    let steps = c.u32()?;
+    let outcome = match c.u8()? {
+        0 => match c.u8()? {
+            0 => Ok(SeqFinish::Eos),
+            1 => Ok(SeqFinish::MaxLen),
+            other => return Err(WireError::BadPayload(format!("unknown finish reason {other}"))),
+        },
+        1 => {
+            let code = c.u8()?;
+            let msg = c.str16()?;
+            Err(error_from(code, msg)?)
+        }
+        other => return Err(WireError::BadPayload(format!("unknown seq-done tag {other}"))),
+    };
+    c.done()?;
+    Ok(SeqDone { steps, outcome })
+}
+
+// ---------------------------------------------------------------------------
 // shard-lookup codecs (the cluster plane's sparse-tier boundary)
 // ---------------------------------------------------------------------------
 
@@ -925,8 +1058,61 @@ mod tests {
         h[4] = 9;
         assert!(matches!(parse_header(&h, 1 << 20), Err(WireError::BadVersion(9))));
         let mut h = encode_header(FrameKind::Request, 0, 0);
-        h[5] = 7;
-        assert!(matches!(parse_header(&h, 1 << 20), Err(WireError::BadFrameKind(7))));
+        h[5] = 99; // first unassigned kind code (1-9 are all spoken for)
+        assert!(matches!(parse_header(&h, 1 << 20), Err(WireError::BadFrameKind(99))));
+    }
+
+    #[test]
+    fn seq_frame_kinds_round_trip_through_headers() {
+        for kind in [FrameKind::SeqSubmit, FrameKind::SeqToken, FrameKind::SeqDone] {
+            let h = encode_header(kind, 12, 0);
+            let (back, corr, _) = parse_header(&h, DEFAULT_MAX_FRAME).unwrap();
+            assert_eq!(back, kind);
+            assert_eq!(corr, 12);
+        }
+    }
+
+    #[test]
+    fn seq_submit_round_trips_and_rejects_zero_max_len() {
+        let req = SeqRequest::new(
+            "nmt",
+            31,
+            vec![
+                HostTensor::from_f32(&[8], &[0.5; 8]),
+                HostTensor::from_f32(&[8], &[-0.25; 8]),
+            ],
+            40,
+            250.0,
+        );
+        let back = decode_seq_submit(&encode_seq_submit(&req)).unwrap();
+        assert_eq!(back.id, 31);
+        assert_eq!(back.model, "nmt");
+        assert_eq!(back.max_len, 40);
+        assert_eq!(back.deadline_ms, 250.0);
+        assert_eq!(back.inputs.len(), 2);
+        assert_eq!(back.inputs[0].data, req.inputs[0].data);
+
+        let mut zeroed = req.clone();
+        zeroed.max_len = 0;
+        let e = decode_seq_submit(&encode_seq_submit(&zeroed)).unwrap_err();
+        assert!(matches!(e, WireError::BadPayload(_)), "{e}");
+    }
+
+    #[test]
+    fn seq_token_and_done_round_trip() {
+        assert_eq!(decode_seq_token(&encode_seq_token(7, 15)).unwrap(), (7, 15));
+        for done in [
+            SeqDone { steps: 12, outcome: Ok(SeqFinish::Eos) },
+            SeqDone { steps: 64, outcome: Ok(SeqFinish::MaxLen) },
+            SeqDone { steps: 0, outcome: Err(InferError::Overloaded("table full".into())) },
+            SeqDone { steps: 3, outcome: Err(InferError::Shutdown) },
+        ] {
+            let back = decode_seq_done(&encode_seq_done(&done)).unwrap();
+            assert_eq!(back, done);
+        }
+        // unknown finish reason / tag
+        assert!(decode_seq_done(&[1, 0, 0, 0, 0, 7]).is_err());
+        assert!(decode_seq_done(&[1, 0, 0, 0, 9]).is_err());
     }
 
     #[test]

@@ -14,10 +14,11 @@
 //!               [--threads T] [--max-queue D]
 //!               [--listen ADDR] [--duration S] [--replica-label L] [--artifacts DIR]
 //!               [--sparse-shards N] [--sparse-cache ROWS] [--sparse-replication R]
-//!               [--remote-shards ADDR,ADDR,...]
+//!               [--remote-shards ADDR,ADDR,...] [--seq-sessions N]
 //! dcinfer loadgen --connect ADDR [--qps Q] [--requests N]
 //!                 [--mix recsys:8,cv:1,nmt:1] [--deadline-ms D] [--seed S]
 //!                 [--artifacts DIR]
+//!                 [--seq geom:MEAN|uniform:LO,HI] [--max-len N]
 //! dcinfer shard-serve [--listen ADDR]
 //! dcinfer cluster [--replicas N] [--shard-procs M] [--sparse-replication R]
 //!                 [--requests N] [--qps Q] [--mix ...] [--seed S]
@@ -52,6 +53,15 @@
 //! model families, reporting p50/p99/p999 latency, goodput (answered
 //! within deadline) and the shed rate.
 //!
+//! When `serve --listen` loads the `nmt` family it also brings up the
+//! sequence plane (§2.1.3): a server-owned decode loop with step-level
+//! continuous batching. `loadgen --seq geom:12` drives it — one
+//! `SeqSubmit` per sequence, output lengths drawn from the given
+//! distribution, tokens streamed back as they decode — and reports
+//! tokens/sec, time-to-first-token, inter-token and per-token latency.
+//! `--seq-sessions` bounds the server's session table (over it,
+//! submits shed as `Overloaded`, same §2.3 contract as `--max-queue`).
+//!
 //! Without `artifacts/manifest.json` both subcommands fall back to the
 //! self-synthesized fixture (native backend), so a loopback
 //! serve/loadgen pair runs out of the box.
@@ -66,9 +76,10 @@ use anyhow::{Context, Result};
 use dcinfer::cluster::{ChildProc, ClusterRouter, RouterConfig, ShardServer, ShardServerConfig};
 use dcinfer::coordinator::{
     disagg_bandwidth, ClientResponse, DcClient, FrontendConfig, InferError, ModelService,
-    ServerConfig, ServingFrontend, ServingServer,
+    SeqClientEvent, SeqConfig, SeqEngine, SeqFinish, ServerConfig, ServingFrontend,
+    ServingServer,
 };
-use dcinfer::models::{CvService, NmtService, RecSysService};
+use dcinfer::models::{CvService, LengthDistribution, NmtService, RecSysService};
 use dcinfer::runtime::Manifest;
 use dcinfer::util::stats::Samples;
 use dcinfer::fleet::{demand_series, simulate_fleet, FleetConfig};
@@ -471,7 +482,26 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
                 }
             };
             let label = flags.get("replica-label").cloned().unwrap_or_default();
-            serve_listen(&frontend, addr, duration, label)?
+            // the sequence plane rides along whenever the nmt family is
+            // served: whole decode loops submitted as one frame, run
+            // under step-level continuous batching
+            let seq = if frontend.service(NmtService::MODEL_ID).is_some() {
+                let mut seq_cfg = SeqConfig {
+                    artifacts_dir: art_dir.clone(),
+                    backend,
+                    ..Default::default()
+                };
+                if let Some(v) = flags.get("seq-sessions") {
+                    seq_cfg.max_sessions = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("invalid --seq-sessions value {v:?}"))?;
+                }
+                let svc = NmtService::from_manifest(&manifest)?;
+                Some(Arc::new(SeqEngine::start(seq_cfg, svc)?))
+            } else {
+                None
+            };
+            serve_listen(&frontend, seq, addr, duration, label)?
         }
         None => serve_selfdrive(&frontend, n, qps)?,
     };
@@ -555,14 +585,17 @@ fn serve_selfdrive(
 /// The network mode: a wire-protocol TCP server over the frontend,
 /// reporting per-model serving stats every few seconds until
 /// `duration_s` elapses (0 = until killed), then draining gracefully.
+/// With `seq` set the server also accepts `SeqSubmit` frames and the
+/// engine's decode stats print alongside the per-model metrics.
 fn serve_listen(
     frontend: &Arc<ServingFrontend>,
+    seq: Option<Arc<SeqEngine>>,
     addr: &str,
     duration_s: f64,
     replica_label: String,
 ) -> Result<(f64, u64, u64)> {
     let cfg = ServerConfig { replica_label, ..Default::default() };
-    let server = ServingServer::bind(frontend.clone(), addr, cfg)?;
+    let server = ServingServer::bind_with_seq(frontend.clone(), seq.clone(), addr, cfg)?;
     println!(
         "listening on {} ({})",
         server.local_addr(),
@@ -592,9 +625,42 @@ fn serve_listen(
                 snap.total_p99_us / 1e3
             );
         }
+        if let Some(engine) = &seq {
+            let s = engine.snapshot();
+            println!(
+                "[{:>5.0}s] seq: {} live, {} tokens over {} iterations (fill {:.0}%), \
+                 {} shed, step cost {:.0} us",
+                t0.elapsed().as_secs_f64(),
+                s.live,
+                s.tokens,
+                s.iterations,
+                s.mean_fill() * 100.0,
+                s.shed,
+                s.step_cost_us
+            );
+        }
     }
     println!("\ndraining {} connections...", server.connections_accepted());
     server.shutdown();
+    if let Some(engine) = &seq {
+        // after the connection drain every accepted sequence has
+        // streamed its Done, so this is the final decode-loop tally
+        engine.shutdown();
+        let s = engine.snapshot();
+        println!("\n--- sequence plane ---");
+        println!(
+            "{} submitted ({} shed), {} finished on EOS + {} at max-len, {} tokens",
+            s.submitted, s.shed, s.done_eos, s.done_maxlen, s.tokens
+        );
+        println!(
+            "{} decode iterations, {:.2} tokens/iteration, batch fill {:.0}%, \
+             per-iteration cost {:.0} us",
+            s.iterations,
+            s.tokens_per_iteration(),
+            s.mean_fill() * 100.0,
+            s.step_cost_us
+        );
+    }
     let wall = t0.elapsed().as_secs_f64();
     let (mut served, mut failed) = (0u64, 0u64);
     for (_, snap) in frontend.snapshot_all() {
@@ -627,8 +693,13 @@ fn connect_with_retry(addr: &str, budget: Duration) -> Result<DcClient> {
 
 /// Open-loop load generator against a remote `serve --listen`: Poisson
 /// arrivals at `--qps` over a weighted `--mix` of model families,
-/// reporting latency percentiles, goodput and the shed rate.
+/// reporting latency percentiles, goodput and the shed rate. With
+/// `--seq DIST` it drives the sequence plane instead (see
+/// [`loadgen_seq`]).
 fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
+    if let Some(dist) = flags.get("seq") {
+        return loadgen_seq(flags, dist);
+    }
     let addr = flags.get("connect").context("--connect ADDR is required")?;
     let qps: f64 = flags.get("qps").and_then(|v| v.parse().ok()).unwrap_or(1000.0);
     anyhow::ensure!(qps > 0.0, "--qps must be positive");
@@ -714,6 +785,7 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
     // ClusterRouter) — the view that makes failover visible from the
     // client side
     let mut per_replica: BTreeMap<String, u64> = BTreeMap::new();
+    let mut all_rtt = Samples::new();
     for (model, rx) in pending {
         let agg = per_model.entry(model).or_default();
         agg.sent += 1;
@@ -727,6 +799,7 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
                 } else if cr.resp.is_ok() {
                     agg.ok += 1;
                     agg.rtt_ms.push(cr.rtt_us / 1e3);
+                    all_rtt.push(cr.rtt_us / 1e3);
                     if cr.good() {
                         agg.good += 1;
                     }
@@ -743,7 +816,16 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
         "model", "sent", "ok", "shed", "err", "goodput", "p50 ms", "p99 ms", "p999 ms",
     ]);
     let mut tot = Agg::default();
+    // which arm drives the overall tail: the model whose own p99 is
+    // largest (ties to the first); printed under the table so mixed-
+    // workload runs attribute their aggregate p99 at a glance
+    let mut tail_driver: Option<(String, f64)> = None;
     for (model, agg) in per_model.iter_mut() {
+        let p99 = agg.rtt_ms.p99();
+        let worst = tail_driver.as_ref().map(|(_, w)| *w);
+        if agg.ok > 0 && worst.unwrap_or(f64::NEG_INFINITY) < p99 {
+            tail_driver = Some((model.clone(), p99));
+        }
         table.row(&[
             model.clone(),
             agg.sent.to_string(),
@@ -752,7 +834,7 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
             agg.errs.to_string(),
             format!("{:.1}%", agg.good as f64 / agg.sent.max(1) as f64 * 100.0),
             format!("{:.2}", agg.rtt_ms.p50()),
-            format!("{:.2}", agg.rtt_ms.p99()),
+            format!("{:.2}", p99),
             format!("{:.2}", agg.rtt_ms.p999()),
         ]);
         tot.sent += agg.sent;
@@ -761,7 +843,25 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
         tot.errs += agg.errs;
         tot.good += agg.good;
     }
+    if per_model.len() > 1 {
+        table.row(&[
+            "(all)".to_string(),
+            tot.sent.to_string(),
+            tot.ok.to_string(),
+            tot.shed.to_string(),
+            tot.errs.to_string(),
+            format!("{:.1}%", tot.good as f64 / tot.sent.max(1) as f64 * 100.0),
+            format!("{:.2}", all_rtt.p50()),
+            format!("{:.2}", all_rtt.p99()),
+            format!("{:.2}", all_rtt.p999()),
+        ]);
+    }
     table.print();
+    if per_model.len() > 1 {
+        if let Some((model, p99)) = &tail_driver {
+            println!("\ntail driver: {model} (p99 {p99:.2} ms)");
+        }
+    }
     println!(
         "\noffered {qps:.0} qps, achieved send rate {:.0} qps over {send_wall:.2}s",
         n as f64 / send_wall.max(1e-9)
@@ -789,6 +889,157 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
         let _ = std::fs::remove_dir_all(&art_dir);
     }
     anyhow::ensure!(tot.ok > 0, "no successful responses — is the server serving this mix?");
+    Ok(())
+}
+
+/// The sequence-plane load generator (`loadgen --seq DIST`): one
+/// `SeqSubmit` per sequence, open-loop Poisson arrivals at `--qps`
+/// sequences/second, output lengths drawn from `DIST` — the
+/// mixed-length regime continuous batching exists for (short
+/// sequences exit on EOS and free their slot mid-flight). Reports
+/// tokens/sec plus the streaming latency set: time-to-first-token,
+/// inter-token gap, per-token and whole-sequence percentiles.
+fn loadgen_seq(flags: &BTreeMap<String, String>, dist: &str) -> Result<()> {
+    let addr = flags.get("connect").context("--connect ADDR is required")?;
+    let length_dist = LengthDistribution::parse(dist).context("--seq")?;
+    let qps: f64 = flags.get("qps").and_then(|v| v.parse().ok()).unwrap_or(200.0);
+    anyhow::ensure!(qps > 0.0, "--qps must be positive");
+    let n: u64 = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(200);
+    anyhow::ensure!(n > 0, "--requests must be positive");
+    let seed: u64 = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42);
+    let max_len: u32 = match flags.get("max-len") {
+        None => 64,
+        Some(v) => {
+            v.parse().map_err(|_| anyhow::anyhow!("invalid --max-len value {v:?}"))?
+        }
+    };
+    anyhow::ensure!(max_len >= 1, "--max-len must be >= 1");
+    // a sequence deadline covers the whole decode loop (it gates the
+    // server's length-aware admission); 0 = none, nothing is shed
+    let deadline_ms: f64 = match flags.get("deadline-ms") {
+        None => 0.0,
+        Some(v) => {
+            v.parse().map_err(|_| anyhow::anyhow!("invalid --deadline-ms value {v:?}"))?
+        }
+    };
+
+    let (art_dir, fixture) = artifacts_or_fixture(flags)?;
+    let manifest = Manifest::load(&art_dir)?;
+    let svc = NmtService::from_manifest(&manifest)?;
+    let client = connect_with_retry(addr, Duration::from_secs(30))?;
+    println!(
+        "== loadgen --seq: {n} sequences @ {qps} seq/s against {addr}, \
+         lengths {dist} (mean {:.1}, cap {max_len}) ==\n",
+        length_dist.mean()
+    );
+
+    let mut rng = Pcg32::seeded(seed);
+    let mut pending = Vec::with_capacity(n as usize);
+    let mut send_errors = 0u64;
+    let t0 = Instant::now();
+    let mut next_at = 0.0f64;
+    for i in 0..n {
+        next_at += rng.exponential(qps);
+        let now = t0.elapsed().as_secs_f64();
+        if next_at > now {
+            std::thread::sleep(Duration::from_secs_f64(next_at - now));
+        }
+        let len = length_dist.sample(&mut rng, max_len);
+        let (x0, h0) = svc.synth_seq_state(i, seed);
+        let req = svc.seq_request(i, x0, h0, len, deadline_ms)?;
+        match client.submit_seq(&req) {
+            Ok(stream) => pending.push(stream),
+            Err(_) => send_errors += 1,
+        }
+    }
+    let send_wall = t0.elapsed().as_secs_f64();
+
+    // drain the streams; every token's rtt was stamped by the client's
+    // reader thread at receipt, so sequential draining here does not
+    // skew the latency samples
+    let mut ttft = Samples::new();
+    let mut gap = Samples::new();
+    let mut per_tok = Samples::new();
+    let mut seq_ms = Samples::new();
+    let (mut eos, mut maxlen, mut shed, mut errs, mut good) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    let mut tokens = 0u64;
+    for stream in pending {
+        let mut prev_rtt = 0.0f64;
+        let mut finished = false;
+        while let Some(ev) = stream.recv() {
+            match ev {
+                SeqClientEvent::Token { step, rtt_us, .. } => {
+                    tokens += 1;
+                    if step <= 1 {
+                        ttft.push(rtt_us / 1e3);
+                    } else {
+                        gap.push((rtt_us - prev_rtt) / 1e3);
+                    }
+                    prev_rtt = rtt_us;
+                }
+                SeqClientEvent::Done { done, rtt_us } => {
+                    finished = true;
+                    match done.outcome {
+                        Ok(fin) => {
+                            match fin {
+                                SeqFinish::Eos => eos += 1,
+                                SeqFinish::MaxLen => maxlen += 1,
+                            }
+                            if done.steps > 0 {
+                                per_tok.push(rtt_us / 1e3 / f64::from(done.steps));
+                            }
+                            seq_ms.push(rtt_us / 1e3);
+                            if deadline_ms <= 0.0 || rtt_us / 1e3 <= deadline_ms {
+                                good += 1;
+                            }
+                        }
+                        Err(InferError::Overloaded(_)) => shed += 1,
+                        Err(_) => errs += 1,
+                    }
+                }
+            }
+        }
+        if !finished {
+            // stream closed without a terminal frame (connection died)
+            errs += 1;
+        }
+    }
+    client.close();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let sent = n - send_errors;
+    println!(
+        "sequences: {sent} sent, {eos} finished on EOS, {maxlen} at max-len, \
+         {shed} shed, {errs} errors, {send_errors} send failures"
+    );
+    println!(
+        "goodput {:.1}% (completed{}), achieved send rate {:.0} seq/s over {send_wall:.2}s",
+        good as f64 / sent.max(1) as f64 * 100.0,
+        if deadline_ms > 0.0 { " within deadline" } else { "" },
+        sent as f64 / send_wall.max(1e-9)
+    );
+    println!(
+        "{tokens} tokens in {wall:.2}s -> {:.0} tokens/sec",
+        tokens as f64 / wall.max(1e-9)
+    );
+    println!(
+        "TTFT p50/p99 {:.2}/{:.2} ms, inter-token p50/p99 {:.2}/{:.2} ms, \
+         per-token p99 {:.3} ms, sequence p50/p99 {:.2}/{:.2} ms",
+        ttft.p50(),
+        ttft.p99(),
+        gap.p50(),
+        gap.p99(),
+        per_tok.p99(),
+        seq_ms.p50(),
+        seq_ms.p99()
+    );
+    if fixture {
+        let _ = std::fs::remove_dir_all(&art_dir);
+    }
+    anyhow::ensure!(
+        eos + maxlen > 0,
+        "no sequences completed — is the sequence plane up (serve --listen with nmt in --models)?"
+    );
     Ok(())
 }
 

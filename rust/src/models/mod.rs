@@ -24,7 +24,7 @@ pub mod serving;
 pub mod zoo;
 
 pub use cv::{faster_rcnn_shuffle, resnet50, resnext101, resnext3d_101};
-pub use nmt::{seq2seq_default, seq2seq_gru, seq2seq_lstm};
+pub use nmt::{seq2seq_default, seq2seq_gru, seq2seq_lstm, LengthDistribution, SeqDecodeSpec};
 pub use rec::{recsys, RecsysScale};
 pub use serving::{CvService, NmtService, RecSysService};
 pub use zoo::{representative_zoo, zoo_entry, ZooEntry};

@@ -5,8 +5,129 @@
 //! Inference decodes autoregressively with beam search, so the decoder
 //! GRU runs `out_len * beam`-row GEMMs — the canonical small-batch,
 //! bandwidth-bound workload of §2.2.
+//!
+//! Besides the roofline descriptors, this module owns the *decode
+//! semantics* the sequence-serving plane executes: [`SeqDecodeSpec`]
+//! (greedy argmax over the logits head, a deterministic token
+//! embedding, EOS detection) and [`LengthDistribution`] (the
+//! geometric/uniform output-length mixes `dcinfer loadgen --seq`
+//! drives). Both the server's continuous-batching loop
+//! ([`crate::coordinator::seqserve`]) and the single-sequence
+//! reference decode evaluate exactly these functions, which is what
+//! makes the bit-identical contract testable.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::rng::Pcg32;
 
 use super::{elementwise, embedding, fc, softmax, Category, LatencyClass, Layer, ModelDesc};
+
+/// The greedy decode-loop semantics for a `gru_step` artifact family:
+/// every step runs `(x, h) -> (logits, h_new)`, the next token is the
+/// argmax of the logits row, and the next `x` is a deterministic
+/// embedding of that token. Shared verbatim by the server-owned decode
+/// loop and the single-sequence reference, so a sequence decoded inside
+/// any batch composition produces the same token stream as one decoded
+/// alone (the fp32 native GEMM computes each output row as an
+/// independent k-ascending chain — batch neighbors never perturb it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeqDecodeSpec {
+    /// decoder state width (== the embedded-token width)
+    pub hidden: usize,
+    /// logits-head width
+    pub vocab: usize,
+    /// token id that terminates a sequence early
+    pub eos: u32,
+}
+
+impl SeqDecodeSpec {
+    /// Deterministic per-token embedding: the same token id always maps
+    /// to the same N(0,1) vector (seeded by the id), on every replica —
+    /// a fixture-sized stand-in for a real embedding table that keeps
+    /// the decode loop closed without shipping vocab × hidden weights.
+    pub fn token_embedding(&self, token: u32) -> Vec<f32> {
+        let mut rng = Pcg32::new(0x5eed_70c0 ^ u64::from(token), u64::from(token).wrapping_add(1));
+        let mut x = vec![0f32; self.hidden];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        x
+    }
+
+    /// Greedy head: index of the first maximal logit (ties break to the
+    /// lowest index, NaNs never win).
+    pub fn argmax(logits: &[f32]) -> u32 {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > best_v {
+                best = i;
+                best_v = v;
+            }
+        }
+        best as u32
+    }
+}
+
+/// Output-length distribution for sequence load generation — the
+/// mixed-length regime where continuous batching pays off (short
+/// sequences exit early and free their slot instead of padding to the
+/// longest neighbor).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LengthDistribution {
+    /// Geometric with the given mean: the memoryless "every step might
+    /// be the last" model of EOS emission.
+    Geometric { mean: f64 },
+    /// Uniform over `[lo, hi]` inclusive.
+    Uniform { lo: u32, hi: u32 },
+}
+
+impl LengthDistribution {
+    /// Parse the CLI forms `geom:MEAN` and `uniform:LO,HI`.
+    pub fn parse(s: &str) -> Result<LengthDistribution> {
+        let (kind, args) = s.split_once(':').context("expected geom:MEAN or uniform:LO,HI")?;
+        match kind {
+            "geom" | "geometric" => {
+                let mean: f64 = args.parse().with_context(|| format!("bad mean {args:?}"))?;
+                ensure!(mean >= 1.0 && mean.is_finite(), "geometric mean must be >= 1");
+                Ok(LengthDistribution::Geometric { mean })
+            }
+            "uniform" => {
+                let (lo, hi) = args.split_once(',').context("uniform wants LO,HI")?;
+                let lo: u32 = lo.parse().with_context(|| format!("bad lo {lo:?}"))?;
+                let hi: u32 = hi.parse().with_context(|| format!("bad hi {hi:?}"))?;
+                ensure!(lo >= 1 && lo <= hi, "uniform wants 1 <= lo <= hi");
+                Ok(LengthDistribution::Uniform { lo, hi })
+            }
+            other => bail!("unknown length distribution {other:?} (geom:MEAN | uniform:LO,HI)"),
+        }
+    }
+
+    /// Draw one output length, clamped to `[1, cap]`.
+    pub fn sample(&self, rng: &mut Pcg32, cap: u32) -> u32 {
+        let len = match *self {
+            LengthDistribution::Geometric { mean } => {
+                // inverse-CDF: L = 1 + floor(ln U / ln(1-p)), p = 1/mean
+                let p = 1.0 / mean;
+                if p >= 1.0 {
+                    1
+                } else {
+                    // 1 - uniform() is in (0, 1]; ln(1) = 0 gives L = 1
+                    let u = 1.0 - rng.uniform();
+                    1 + (u.ln() / (1.0 - p).ln()) as u32
+                }
+            }
+            LengthDistribution::Uniform { lo, hi } => lo + rng.below(hi - lo + 1),
+        };
+        len.clamp(1, cap.max(1))
+    }
+
+    /// Expected length (before the cap).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LengthDistribution::Geometric { mean } => mean,
+            LengthDistribution::Uniform { lo, hi } => (lo as f64 + hi as f64) / 2.0,
+        }
+    }
+}
 
 /// One GRU cell step as three gate GEMMs (W and U fused per gate pair).
 fn gru_cell(layers: &mut Vec<Layer>, prefix: &str, rows: u64, hidden: u64) {
@@ -204,6 +325,47 @@ mod tests {
         {
             let i = l.ops_per_weight();
             assert!((2.0..=20.0).contains(&i), "{} intensity {i}", l.name);
+        }
+    }
+
+    #[test]
+    fn token_embedding_is_deterministic_and_token_keyed() {
+        let spec = SeqDecodeSpec { hidden: 8, vocab: 16, eos: 0 };
+        let a = spec.token_embedding(3);
+        assert_eq!(a.len(), 8);
+        assert_eq!(a, spec.token_embedding(3), "same token, same vector, always");
+        assert_ne!(a, spec.token_embedding(4), "distinct tokens embed differently");
+    }
+
+    #[test]
+    fn argmax_breaks_ties_low_and_ignores_nan() {
+        assert_eq!(SeqDecodeSpec::argmax(&[0.0, 2.0, 2.0, 1.0]), 1);
+        assert_eq!(SeqDecodeSpec::argmax(&[f32::NAN, -1.0, 3.0]), 2);
+        assert_eq!(SeqDecodeSpec::argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn length_distributions_parse_sample_and_reject_garbage() {
+        use crate::util::rng::Pcg32;
+        let g = LengthDistribution::parse("geom:12").unwrap();
+        assert_eq!(g, LengthDistribution::Geometric { mean: 12.0 });
+        let u = LengthDistribution::parse("uniform:4,24").unwrap();
+        assert_eq!(u, LengthDistribution::Uniform { lo: 4, hi: 24 });
+        for bad in ["", "geom", "geom:0.5", "uniform:9,3", "uniform:0,3", "pareto:2"] {
+            assert!(LengthDistribution::parse(bad).is_err(), "{bad:?} parsed");
+        }
+        let mut rng = Pcg32::seeded(9);
+        let mut sum = 0u64;
+        for _ in 0..4000 {
+            let l = g.sample(&mut rng, 1000);
+            assert!((1..=1000).contains(&l));
+            sum += u64::from(l);
+        }
+        let mean = sum as f64 / 4000.0;
+        assert!((mean - 12.0).abs() < 1.5, "geometric mean drifted: {mean}");
+        for _ in 0..200 {
+            let l = u.sample(&mut rng, 16);
+            assert!((4..=16).contains(&l), "cap applies: {l}");
         }
     }
 

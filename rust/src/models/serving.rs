@@ -16,8 +16,9 @@
 
 use anyhow::{ensure, Context, Result};
 
-use crate::coordinator::request::InferRequest;
+use crate::coordinator::request::{InferRequest, SeqRequest};
 use crate::coordinator::service::{DeadlineClass, ModelService};
+use crate::models::nmt::SeqDecodeSpec;
 use crate::runtime::{DType, HostTensor, Manifest};
 use crate::util::rng::Pcg32;
 
@@ -208,10 +209,17 @@ impl ModelService for CvService {
 /// Serves the seq2seq GRU decode-step artifacts: per-request embedded
 /// token `x [hidden]` and decoder state `h [hidden]` -> vocab logits
 /// `[vocab]` and new state `[hidden]` (the beam-search inner loop).
+///
+/// The per-step request path above is what the batch-inference plane
+/// serves; the sequence plane ([`crate::coordinator::seqserve`]) runs
+/// whole decodes server-side against the same artifacts, following
+/// [`SeqDecodeSpec`] (from [`NmtService::decode_spec`]).
 #[derive(Debug, Clone)]
 pub struct NmtService {
     pub hidden: usize,
     pub vocab: usize,
+    /// token id that ends a sequence early (manifest `eos`, default 0)
+    pub eos: u32,
 }
 
 impl NmtService {
@@ -225,7 +233,63 @@ impl NmtService {
         Ok(NmtService {
             hidden: cfg.get("hidden").as_usize().context("hidden")?,
             vocab: cfg.get("vocab").as_usize().context("vocab")?,
+            // optional so pre-seq-plane manifests keep loading
+            eos: cfg.get("eos").as_usize().map(|e| e as u32).unwrap_or(0),
         })
+    }
+
+    /// The greedy decode semantics of this family's artifacts.
+    pub fn decode_spec(&self) -> SeqDecodeSpec {
+        SeqDecodeSpec { hidden: self.hidden, vocab: self.vocab, eos: self.eos }
+    }
+
+    /// Build a whole-sequence request from an initial embedded token
+    /// and decoder state (the sequence plane's submit unit).
+    pub fn seq_request(
+        &self,
+        id: u64,
+        x0: Vec<f32>,
+        h0: Vec<f32>,
+        max_len: u32,
+        deadline_ms: f64,
+    ) -> Result<SeqRequest> {
+        ensure!(x0.len() == self.hidden, "x0 len {} != {}", x0.len(), self.hidden);
+        ensure!(h0.len() == self.hidden, "h0 len {} != {}", h0.len(), self.hidden);
+        ensure!(max_len >= 1, "max_len must be >= 1");
+        Ok(SeqRequest::new(
+            Self::MODEL_ID,
+            id,
+            vec![
+                HostTensor::from_f32(&[self.hidden], &x0),
+                HostTensor::from_f32(&[self.hidden], &h0),
+            ],
+            max_len,
+            deadline_ms,
+        ))
+    }
+
+    /// Synthetic sequence request with a reproducible per-id state
+    /// (seeded by `seed ^ id`), so a loadgen client and a reference
+    /// decoder can regenerate the identical initial state.
+    pub fn synth_seq_request(
+        &self,
+        id: u64,
+        seed: u64,
+        max_len: u32,
+        deadline_ms: f64,
+    ) -> SeqRequest {
+        let (x0, h0) = self.synth_seq_state(id, seed);
+        self.seq_request(id, x0, h0, max_len, deadline_ms).expect("synth dims match config")
+    }
+
+    /// The `(x0, h0)` pair [`Self::synth_seq_request`] embeds.
+    pub fn synth_seq_state(&self, id: u64, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::new(seed ^ id, id.wrapping_add(77));
+        let mut x0 = vec![0f32; self.hidden];
+        let mut h0 = vec![0f32; self.hidden];
+        rng.fill_normal(&mut x0, 0.0, 1.0);
+        rng.fill_normal(&mut h0, 0.0, 0.5);
+        (x0, h0)
     }
 
     pub fn request(&self, id: u64, x: Vec<f32>, h: Vec<f32>, deadline_ms: f64) -> Result<InferRequest> {
@@ -362,6 +426,34 @@ mod tests {
         let logits = vec![HostTensor::from_f32(&[2, 3], &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0])];
         let rows = svc.scatter(&logits, 2).unwrap();
         assert_eq!(rows[1][0].as_f32().unwrap(), vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn nmt_seq_requests_validate_and_eos_defaults() {
+        // manifest without `eos` (pre-sequence-plane): defaults to 0
+        let svc = NmtService::from_manifest(&manifest()).unwrap();
+        assert_eq!(svc.eos, 0);
+        assert_eq!(svc.decode_spec(), SeqDecodeSpec { hidden: 8, vocab: 16, eos: 0 });
+        let m = Manifest::parse(
+            Path::new("."),
+            r#"{"version": 1, "models": {"gru": {"hidden": 8, "vocab": 16, "eos": 3}}, "artifacts": {}}"#,
+        )
+        .unwrap();
+        assert_eq!(NmtService::from_manifest(&m).unwrap().eos, 3);
+        // seq_request validates dimensions and the length cap
+        assert!(svc.seq_request(1, vec![0.0; 7], vec![0.0; 8], 4, 0.0).is_err());
+        assert!(svc.seq_request(1, vec![0.0; 8], vec![0.0; 9], 4, 0.0).is_err());
+        assert!(svc.seq_request(1, vec![0.0; 8], vec![0.0; 8], 0, 0.0).is_err());
+        let req = svc.seq_request(1, vec![0.0; 8], vec![0.0; 8], 4, 25.0).unwrap();
+        assert_eq!(req.model, "nmt");
+        assert_eq!(req.max_len, 4);
+        assert_eq!(req.inputs.len(), 2);
+        // synth state is reproducible per (seed, id) and id-keyed
+        let (x0, h0) = svc.synth_seq_state(9, 0xabc);
+        let (x1, h1) = svc.synth_seq_state(9, 0xabc);
+        assert_eq!((x0.clone(), h0.clone()), (x1, h1));
+        let (x2, _) = svc.synth_seq_state(10, 0xabc);
+        assert_ne!(x0, x2);
     }
 
     #[test]

@@ -55,8 +55,10 @@ const GRU_PROG: &str = r#"[
 /// Write the fixture into `dir`: recsys-lite (dense 8, 2 tables of
 /// 64x8, pool 4; batch variants 1 and 4), cv-lite (1x8x8 -> 4
 /// classes; batch variants 1 and 2) and gru-lite (hidden 8, vocab 16
-/// decode step; batch variants 1 and 4), with model configs the
-/// `RecSysService`/`CvService`/`NmtService` constructors understand.
+/// decode step with EOS token 0; batch variants 1, 4 and 8 — the extra
+/// b8 gives the sequence plane's continuous batcher a wider table),
+/// with model configs the `RecSysService`/`CvService`/`NmtService`
+/// constructors understand.
 pub fn write_synthetic_artifacts(dir: &Path) -> Result<()> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating fixture dir {}", dir.display()))?;
@@ -121,7 +123,7 @@ pub fn write_synthetic_artifacts(dir: &Path) -> Result<()> {
             }}"#
         ));
     }
-    for b in [1usize, 4] {
+    for b in [1usize, 4, 8] {
         artifacts.push(format!(
             r#""gru_step_b{b}": {{
               "hlo": "gru_b{b}.hlo.txt", "model": "gru",
@@ -145,7 +147,7 @@ pub fn write_synthetic_artifacts(dir: &Path) -> Result<()> {
           "models": {{
             "recsys": {{"dense_dim": 8, "emb_dim": 8, "n_tables": 2, "pool": 4, "rows_per_table": 64}},
             "cv": {{"in_hw": 8, "channels": 1, "classes": 4}},
-            "gru": {{"hidden": 8, "vocab": 16}}
+            "gru": {{"hidden": 8, "vocab": 16, "eos": 0}}
           }},
           "artifacts": {{ {} }}
         }}"#,

@@ -1,0 +1,284 @@
+//! Loopback integration of the sequence-serving plane: `SeqEngine`
+//! behind a `ServingServer`, driven by `DcClient::submit_seq` over an
+//! ephemeral 127.0.0.1 port on the self-synthesized fixture.
+//!
+//! The load-bearing seal is bit-exactness: a sequence decoded inside
+//! the engine's continuously re-formed batches — neighbors joining
+//! mid-flight, exiting on EOS, padding rows coming and going — must
+//! stream exactly the token-by-token output of the single-sequence
+//! reference decode. Also covered: typed refusal when the server has
+//! no sequence plane, session-table sheds surfacing as `Overloaded`
+//! on the client, and graceful shutdown losing no terminal frames.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dcinfer::coordinator::{
+    reference_decode, DcClient, FrontendConfig, InferError, ModelService, SeqClientEvent,
+    SeqConfig, SeqEngine, SeqFinish, ServerConfig, ServingFrontend, ServingServer,
+};
+use dcinfer::models::NmtService;
+use dcinfer::runtime::{
+    synthetic_artifacts_dir, BackendSpec, ExecBackend, Manifest, NativeBackend, Precision,
+};
+
+// loopback serving saturates the machine with executor + connection
+// threads; serialize so timing-sensitive behaviour stays stable
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+struct Rig {
+    dir: PathBuf,
+    frontend: Arc<ServingFrontend>,
+    engine: Arc<SeqEngine>,
+    server: ServingServer,
+    nmt: NmtService,
+}
+
+impl Rig {
+    /// Fixture + one-lane frontend + sequence engine + server, all on
+    /// the native fp32 backend.
+    fn start(tag: &str, seq_cfg: SeqConfig) -> Rig {
+        let dir = synthetic_artifacts_dir(tag).expect("fixture");
+        let manifest = Manifest::load(&dir).expect("manifest");
+        let nmt = NmtService::from_manifest(&manifest).expect("nmt config");
+        let services: Vec<Arc<dyn ModelService>> = vec![Arc::new(nmt.clone())];
+        let frontend = Arc::new(
+            ServingFrontend::start(
+                FrontendConfig {
+                    artifacts_dir: dir.clone(),
+                    executors: 1,
+                    max_wait_us: 500.0,
+                    backend: BackendSpec::native(Precision::Fp32),
+                    ..Default::default()
+                },
+                services,
+            )
+            .expect("frontend start"),
+        );
+        let engine = Arc::new(
+            SeqEngine::start(
+                SeqConfig {
+                    artifacts_dir: dir.clone(),
+                    backend: BackendSpec::native(Precision::Fp32),
+                    ..seq_cfg
+                },
+                nmt.clone(),
+            )
+            .expect("engine start"),
+        );
+        let server = ServingServer::bind_with_seq(
+            frontend.clone(),
+            Some(engine.clone()),
+            "127.0.0.1:0",
+            ServerConfig::default(),
+        )
+        .expect("server bind");
+        Rig { dir, frontend, engine, server, nmt }
+    }
+
+    fn finish(self) {
+        self.server.shutdown();
+        self.engine.shutdown();
+        self.frontend.shutdown();
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Drain one stream, checking step numbering as it goes.
+fn drain(stream: dcinfer::coordinator::SeqStream) -> (Vec<u32>, dcinfer::coordinator::SeqDone) {
+    let mut tokens = Vec::new();
+    loop {
+        match stream.recv() {
+            Some(SeqClientEvent::Token { step, token, rtt_us }) => {
+                assert_eq!(step as usize, tokens.len() + 1, "steps count from 1, in order");
+                assert!(rtt_us > 0.0);
+                tokens.push(token);
+            }
+            Some(SeqClientEvent::Done { done, .. }) => return (tokens, done),
+            None => panic!("stream closed without a terminal SeqDone"),
+        }
+    }
+}
+
+/// The tentpole seal: sequences of very different lengths, submitted
+/// in two waves so the second wave joins batches already mid-flight,
+/// each stream token-for-token identical to the single-sequence
+/// reference decode of the same initial state.
+#[test]
+fn streamed_tokens_match_the_single_sequence_reference() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let rig = Rig::start("seqint_exact", SeqConfig::default());
+    let client = DcClient::connect(rig.server.local_addr()).expect("connect");
+    let seed = 0xbeef;
+
+    // mixed max_lens: some exit almost immediately (their slot frees
+    // and the batch re-forms), some run long
+    let max_lens: [u32; 8] = [40, 2, 30, 1, 25, 3, 35, 4];
+    let mut streams = Vec::new();
+    for (i, &ml) in max_lens.iter().enumerate().take(4) {
+        let req = rig.nmt.synth_seq_request(i as u64, seed, ml, 0.0);
+        streams.push((i as u64, ml, client.submit_seq(&req).expect("submit")));
+    }
+    // second wave lands while the first is decoding: the mid-flight join
+    std::thread::sleep(Duration::from_millis(3));
+    for (i, &ml) in max_lens.iter().enumerate().skip(4) {
+        let req = rig.nmt.synth_seq_request(i as u64, seed, ml, 0.0);
+        streams.push((i as u64, ml, client.submit_seq(&req).expect("submit")));
+    }
+
+    // the oracle: the same decode semantics at batch 1, no neighbors
+    let manifest = Manifest::load(&rig.dir).expect("manifest");
+    let artifact = NativeBackend::new(Precision::Fp32)
+        .load(&manifest, "gru_step_b1")
+        .expect("b1 artifact");
+    let spec = rig.nmt.decode_spec();
+
+    for (id, max_len, stream) in streams {
+        let (tokens, done) = drain(stream);
+        let (x0, h0) = rig.nmt.synth_seq_state(id, seed);
+        let (want_tokens, want_finish) =
+            reference_decode(artifact.as_ref(), &spec, &x0, &h0, max_len).expect("reference");
+        assert_eq!(tokens, want_tokens, "sequence {id}: batched decode diverged");
+        assert_eq!(done.outcome, Ok(want_finish), "sequence {id}");
+        assert_eq!(done.steps as usize, tokens.len(), "sequence {id}");
+    }
+
+    let snap = rig.engine.snapshot();
+    assert_eq!(snap.submitted, max_lens.len() as u64);
+    assert_eq!(snap.done_eos + snap.done_maxlen, max_lens.len() as u64);
+    assert_eq!(snap.live, 0, "every slot freed");
+    assert!(snap.mean_fill() > 0.0);
+    assert_eq!(client.seq_in_flight(), 0);
+    client.close();
+    rig.finish();
+}
+
+/// A server bound without a sequence plane answers `SeqSubmit` with a
+/// typed `BadRequest` terminal frame — same connection, no tokens.
+#[test]
+fn server_without_sequence_plane_refuses_typed() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = synthetic_artifacts_dir("seqint_noplane").expect("fixture");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let nmt = NmtService::from_manifest(&manifest).expect("nmt config");
+    let services: Vec<Arc<dyn ModelService>> = vec![Arc::new(nmt.clone())];
+    let frontend = Arc::new(
+        ServingFrontend::start(
+            FrontendConfig {
+                artifacts_dir: dir.clone(),
+                executors: 1,
+                backend: BackendSpec::native(Precision::Fp32),
+                ..Default::default()
+            },
+            services,
+        )
+        .expect("frontend start"),
+    );
+    let server = ServingServer::bind(frontend.clone(), "127.0.0.1:0", ServerConfig::default())
+        .expect("server bind");
+    let client = DcClient::connect(server.local_addr()).expect("connect");
+
+    let stream = client.submit_seq(&nmt.synth_seq_request(1, 1, 4, 0.0)).expect("submit");
+    let (tokens, done) = stream.collect();
+    assert!(tokens.is_empty(), "no tokens from a refused submit");
+    assert_eq!(done.steps, 0);
+    match done.outcome {
+        Err(InferError::BadRequest(msg)) => {
+            assert!(msg.contains("sequence plane"), "{msg}")
+        }
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+
+    // the regular request plane on the same connection is unharmed
+    let mut rng = dcinfer::util::rng::Pcg32::seeded(70);
+    let cr = client.call(&nmt.synth_request(2, &mut rng, 500.0)).expect("call");
+    assert!(cr.resp.is_ok(), "{:?}", cr.resp.outcome);
+    client.close();
+    server.shutdown();
+    frontend.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// With a session table of 1 and an EOS the decoder can never emit
+/// (every sequence runs to max-len), a burst behind one long sequence
+/// sheds as `Overloaded` — streamed, not dropped.
+#[test]
+fn session_table_bound_sheds_overloaded() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let rig = Rig::start(
+        "seqint_bound",
+        SeqConfig {
+            max_sessions: 1,
+            max_len_cap: 100_000,
+            // vocab is 16, so token 16 never appears: no early EOS exit
+            eos_override: Some(16),
+            ..SeqConfig::default()
+        },
+    );
+    let client = DcClient::connect(rig.server.local_addr()).expect("connect");
+
+    // the occupant: long enough to still be decoding through the burst
+    let occupant = client
+        .submit_seq(&rig.nmt.synth_seq_request(0, 5, 10_000, 0.0))
+        .expect("submit occupant");
+    let burst: Vec<_> = (1..=4u64)
+        .map(|id| {
+            client.submit_seq(&rig.nmt.synth_seq_request(id, 5, 4, 0.0)).expect("submit burst")
+        })
+        .collect();
+
+    let mut shed = 0;
+    let mut served = 0;
+    for stream in burst {
+        let (_, done) = stream.collect();
+        match done.outcome {
+            Err(InferError::Overloaded(msg)) => {
+                assert!(msg.contains("session table"), "{msg}");
+                assert_eq!(done.steps, 0);
+                shed += 1;
+            }
+            Ok(_) => served += 1,
+            other => panic!("expected Overloaded or served, got {other:?}"),
+        }
+    }
+    assert_eq!(shed + served, 4);
+    assert!(shed >= 1, "a burst against a 1-session table must shed");
+    let (tokens, done) = occupant.collect();
+    assert_eq!(done.outcome, Ok(SeqFinish::MaxLen), "the occupant runs to its max-len");
+    assert_eq!(tokens.len(), 10_000);
+    assert_eq!(rig.engine.snapshot().shed, shed);
+    client.close();
+    rig.finish();
+}
+
+/// Server shutdown mid-decode drains: every accepted sequence still
+/// streams its tokens and terminal frame before the connection closes.
+#[test]
+fn graceful_shutdown_streams_every_done() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let rig = Rig::start(
+        "seqint_drain",
+        SeqConfig {
+            // run to max-len so sequences are genuinely mid-flight when
+            // the drain starts
+            eos_override: Some(16),
+            ..SeqConfig::default()
+        },
+    );
+    let client = DcClient::connect(rig.server.local_addr()).expect("connect");
+
+    let streams: Vec<_> = (0..6u64)
+        .map(|id| {
+            client.submit_seq(&rig.nmt.synth_seq_request(id, 9, 200, 0.0)).expect("submit")
+        })
+        .collect();
+    rig.server.shutdown();
+    for (id, stream) in streams.into_iter().enumerate() {
+        let (tokens, done) = stream.collect();
+        assert_eq!(done.outcome, Ok(SeqFinish::MaxLen), "sequence {id} lost to the drain");
+        assert_eq!(tokens.len(), 200, "sequence {id}");
+    }
+    client.close();
+    rig.finish();
+}

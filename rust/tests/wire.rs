@@ -4,7 +4,9 @@
 //! surface a network server exposes to arbitrary peers.
 
 use dcinfer::coordinator::wire::{self, FrameKind, WireError};
-use dcinfer::coordinator::{InferError, InferRequest, InferResponse};
+use dcinfer::coordinator::{
+    InferError, InferRequest, InferResponse, SeqDone, SeqFinish, SeqRequest,
+};
 use dcinfer::runtime::{DType, HostTensor};
 use dcinfer::util::rng::Pcg32;
 
@@ -253,10 +255,10 @@ fn framed_stream_reads_back_and_rejects_corruption() {
         Err(WireError::BadVersion(42))
     ));
     let mut bad = buf.clone();
-    bad[5] = 9;
+    bad[5] = 99; // first unassigned kind (1-9 are request/response/shard/ping/seq)
     assert!(matches!(
         wire::read_frame(&mut bad.as_slice(), wire::DEFAULT_MAX_FRAME),
-        Err(WireError::BadFrameKind(9))
+        Err(WireError::BadFrameKind(99))
     ));
 }
 
@@ -336,6 +338,132 @@ fn version_skew_closes_only_the_offending_connection() {
     server.shutdown();
     frontend.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The whole streamed conversation of one sequence — submit, tokens,
+/// done — written as frames into one buffer and read back: kinds,
+/// correlation ids and payloads all survive, in order.
+#[test]
+fn seq_conversation_round_trips_through_a_framed_stream() {
+    let mut rng = Pcg32::seeded(53);
+    let req = SeqRequest::new(
+        "nmt",
+        41,
+        vec![
+            random_tensor(&mut rng, DType::F32, &[8]),
+            random_tensor(&mut rng, DType::F32, &[8]),
+        ],
+        12,
+        250.0,
+    );
+    let corr = 0xABCD_0001u64;
+    let mut buf = Vec::new();
+    wire::write_frame(&mut buf, FrameKind::SeqSubmit, corr, &wire::encode_seq_submit(&req))
+        .unwrap();
+    for (step, token) in [(1u32, 7u32), (2, 9), (3, 0)] {
+        wire::write_frame(&mut buf, FrameKind::SeqToken, corr, &wire::encode_seq_token(step, token))
+            .unwrap();
+    }
+    let done = SeqDone { steps: 3, outcome: Ok(SeqFinish::Eos) };
+    wire::write_frame(&mut buf, FrameKind::SeqDone, corr, &wire::encode_seq_done(&done)).unwrap();
+
+    let mut rd = buf.as_slice();
+    let f = wire::read_frame(&mut rd, wire::DEFAULT_MAX_FRAME).unwrap().unwrap();
+    assert_eq!((f.kind, f.corr), (FrameKind::SeqSubmit, corr));
+    let back = wire::decode_seq_submit(&f.payload).unwrap();
+    assert_eq!((back.id, back.max_len, back.deadline_ms), (41, 12, 250.0));
+    assert_eq!(back.model, "nmt");
+    assert_eq!(back.inputs.len(), 2);
+    for (a, b) in req.inputs.iter().zip(&back.inputs) {
+        assert_tensors_eq(a, b);
+    }
+    for want in [(1u32, 7u32), (2, 9), (3, 0)] {
+        let f = wire::read_frame(&mut rd, wire::DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!((f.kind, f.corr), (FrameKind::SeqToken, corr));
+        assert_eq!(wire::decode_seq_token(&f.payload).unwrap(), want);
+    }
+    let f = wire::read_frame(&mut rd, wire::DEFAULT_MAX_FRAME).unwrap().unwrap();
+    assert_eq!(f.kind, FrameKind::SeqDone);
+    let back = wire::decode_seq_done(&f.payload).unwrap();
+    assert_eq!(back.steps, 3);
+    assert_eq!(back.outcome, Ok(SeqFinish::Eos));
+    // and the stream ends cleanly
+    assert!(wire::read_frame(&mut rd, wire::DEFAULT_MAX_FRAME).unwrap().is_none());
+}
+
+/// Every strict prefix of every seq payload is a typed error, and the
+/// error half of `SeqDone` round-trips for each `InferError` variant.
+#[test]
+fn seq_payload_truncations_and_error_outcomes_are_typed() {
+    let mut rng = Pcg32::seeded(59);
+    let req = SeqRequest::new(
+        "nmt",
+        5,
+        vec![random_tensor(&mut rng, DType::F32, &[4])],
+        8,
+        0.0,
+    );
+    let payloads = [
+        wire::encode_seq_submit(&req),
+        wire::encode_seq_token(3, 11),
+        wire::encode_seq_done(&SeqDone { steps: 2, outcome: Ok(SeqFinish::MaxLen) }),
+        wire::encode_seq_done(&SeqDone {
+            steps: 0,
+            outcome: Err(InferError::Overloaded("table full".into())),
+        }),
+    ];
+    for (which, payload) in payloads.iter().enumerate() {
+        for cut in 0..payload.len() {
+            let err = match which {
+                0 => wire::decode_seq_submit(&payload[..cut]).map(|_| ()).unwrap_err(),
+                1 => wire::decode_seq_token(&payload[..cut]).map(|_| ()).unwrap_err(),
+                _ => wire::decode_seq_done(&payload[..cut]).map(|_| ()).unwrap_err(),
+            };
+            assert!(
+                matches!(err, WireError::Truncated { .. } | WireError::BadPayload(_)),
+                "payload {which} cut {cut}: unexpected {err}"
+            );
+        }
+    }
+
+    for err in [
+        InferError::UnknownModel("ghost".into()),
+        InferError::BadRequest("short state".into()),
+        InferError::ExecFailed("backend".into()),
+        InferError::Shutdown,
+        InferError::Overloaded("bound".into()),
+    ] {
+        let done = SeqDone { steps: 4, outcome: Err(err.clone()) };
+        let back = wire::decode_seq_done(&wire::encode_seq_done(&done)).unwrap();
+        assert_eq!(back.steps, 4);
+        assert_eq!(back.outcome.unwrap_err(), err);
+    }
+}
+
+/// A submit whose tensor header lies about its data length (and one
+/// with a zero `max_len`) must be refused, never mis-sliced.
+#[test]
+fn seq_submit_length_lies_and_zero_max_len_are_rejected() {
+    let req = SeqRequest::new(
+        "m",
+        1,
+        vec![HostTensor::from_f32(&[2], &[1.0, 2.0])],
+        6,
+        10.0,
+    );
+    let mut payload = wire::encode_seq_submit(&req);
+    // layout: id(8) deadline(8) max_len(4) str16("m")(3) n_inputs(2),
+    // then the tensor as dtype(1) ndim(1) dim(4) data_len(4) data
+    let tensor_at = 8 + 8 + 4 + 3 + 2;
+    let data_len_at = tensor_at + 1 + 1 + 4;
+    payload[data_len_at..data_len_at + 4].copy_from_slice(&12u32.to_le_bytes());
+    let err = wire::decode_seq_submit(&payload).unwrap_err();
+    assert!(matches!(err, WireError::BadPayload(_)), "{err}");
+
+    let mut zero = req;
+    zero.max_len = 0;
+    let err = wire::decode_seq_submit(&wire::encode_seq_submit(&zero)).unwrap_err();
+    assert!(matches!(err, WireError::BadPayload(_)), "{err}");
 }
 
 #[test]
