@@ -19,9 +19,9 @@ artifacts-fast:
 
 # Perf trajectory: runs the perf benches and writes
 # BENCH_fig6_gemm.json / BENCH_alloc.json / BENCH_backend_parity.json /
-# BENCH_wire.json / BENCH_cluster.json / BENCH_seqdecode.json to the
-# repo root. Works without `make artifacts` (the benches fall back to
-# a self-synthesized fixture).
+# BENCH_wire.json / BENCH_cluster.json / BENCH_seqdecode.json /
+# BENCH_compiled.json to the repo root. Works without `make artifacts`
+# (the benches fall back to a self-synthesized fixture).
 perf:
 	cd rust && cargo bench --bench fig6_gemm
 	cd rust && cargo bench --bench ablation_alloc
@@ -29,6 +29,7 @@ perf:
 	cd rust && cargo bench --bench e2e_wire
 	cd rust && cargo bench --bench e2e_cluster
 	cd rust && cargo bench --bench e2e_seqdecode
+	cd rust && cargo bench --bench e2e_compiled
 
 test:
 	cd python && python -m pytest tests/ -q

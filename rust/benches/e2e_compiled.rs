@@ -1,0 +1,164 @@
+//! Interpreter vs compiled-plan end-to-end latency per model family.
+//!
+//! Loads each fixture family (`recsys`, `cv`, `gru`) on the native
+//! backend, checks the plan compiler actually fused at least one
+//! epilogue chain per family, seals bit-identity between the two
+//! execution modes on the measured inputs, then times full artifact
+//! executions through `run_interpreted` (per-op dispatch, separate
+//! elementwise passes) and `run_compiled` (flat step table, folded
+//! epilogues). Reports p50/p99 per family and emits
+//! `BENCH_compiled.json` at the repo root.
+//!
+//! Runs entirely on the self-synthesized fixture, so it works in both
+//! feature configurations with no `make artifacts`. `-- --smoke` runs
+//! a tiny CI-friendly pass (no speedup assertion — the fixture models
+//! are microseconds-scale and CI machines are noisy).
+
+use std::time::Instant;
+
+use dcinfer::runtime::{synthetic_artifacts_dir, Manifest, NativeBackend, Precision};
+use dcinfer::util::bench::{write_bench_json, Table};
+use dcinfer::util::stats::Samples;
+
+const SEED: u64 = 0xC0DE;
+
+struct FamilyResult {
+    artifact: String,
+    fused_chains: usize,
+    folded_ops: usize,
+    interp_p50_ns: f64,
+    interp_p99_ns: f64,
+    compiled_p50_ns: f64,
+    compiled_p99_ns: f64,
+}
+
+impl FamilyResult {
+    fn speedup_p50(&self) -> f64 {
+        self.interp_p50_ns / self.compiled_p50_ns.max(1e-9)
+    }
+}
+
+fn bits(ts: &[dcinfer::runtime::HostTensor]) -> Vec<Vec<u32>> {
+    ts.iter().map(|t| t.as_f32().unwrap().iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 40usize } else { 400 };
+
+    let dir = synthetic_artifacts_dir("e2e_compiled").expect("fixture");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let backend = NativeBackend::new(Precision::Fp32);
+
+    let mut results: Vec<FamilyResult> = Vec::new();
+    for (fi, name) in ["recsys_fp32_b4", "cv_tiny_b2", "gru_step_b8"].iter().enumerate() {
+        let art = backend.load_native(&manifest, name).expect("load artifact");
+        let rep = art.fusion_report().clone();
+        println!("{}", rep.summary());
+        assert!(
+            !rep.chains.is_empty(),
+            "{name}: the plan compiler fused nothing — fixture drifted?"
+        );
+
+        let inputs = art.synth_inputs(SEED + fi as u64);
+        // the numerics seal on the exact tensors we time
+        let compiled_out = art.run_compiled(&inputs).expect("compiled run");
+        let interp_out = art.run_interpreted(&inputs).expect("interpreted run");
+        assert_eq!(
+            bits(&compiled_out),
+            bits(&interp_out),
+            "{name}: compiled plan diverged from the interpreter"
+        );
+
+        let mut interp = Samples::new();
+        let mut compiled = Samples::new();
+        for _ in 0..iters {
+            let t = Instant::now();
+            let out = art.run_interpreted(&inputs).expect("interpreted run");
+            interp.push(t.elapsed().as_nanos() as f64);
+            std::hint::black_box(out);
+
+            let t = Instant::now();
+            let out = art.run_compiled(&inputs).expect("compiled run");
+            compiled.push(t.elapsed().as_nanos() as f64);
+            std::hint::black_box(out);
+        }
+        results.push(FamilyResult {
+            artifact: name.to_string(),
+            fused_chains: rep.chains.len(),
+            folded_ops: rep.chains.iter().map(|c| c.folded).sum::<usize>()
+                + rep.folded_activations,
+            interp_p50_ns: interp.p50(),
+            interp_p99_ns: interp.p99(),
+            compiled_p50_ns: compiled.p50(),
+            compiled_p99_ns: compiled.p99(),
+        });
+    }
+
+    let mut table = Table::new(&[
+        "artifact",
+        "chains",
+        "folded",
+        "interp p50",
+        "interp p99",
+        "compiled p50",
+        "compiled p99",
+        "speedup",
+    ]);
+    for r in &results {
+        table.row(&[
+            r.artifact.clone(),
+            r.fused_chains.to_string(),
+            r.folded_ops.to_string(),
+            format!("{:.0} ns", r.interp_p50_ns),
+            format!("{:.0} ns", r.interp_p99_ns),
+            format!("{:.0} ns", r.compiled_p50_ns),
+            format!("{:.0} ns", r.compiled_p99_ns),
+            format!("x{:.3}", r.speedup_p50()),
+        ]);
+    }
+    table.print();
+
+    let geomean = results
+        .iter()
+        .map(|r| r.speedup_p50().ln())
+        .sum::<f64>()
+        .exp()
+        .powf(1.0 / results.len() as f64);
+    println!("geomean speedup (p50): x{geomean:.3}");
+    if !smoke {
+        assert!(
+            geomean > 1.0,
+            "compiled plans must not be slower than the interpreter (geomean x{geomean:.3})"
+        );
+    }
+
+    let mut fam_json = String::new();
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            fam_json.push_str(",\n");
+        }
+        fam_json.push_str(&format!(
+            "    {{\"artifact\": \"{}\", \"fused_chains\": {}, \"folded_ops\": {}, \
+             \"interp_p50_ns\": {:.0}, \"interp_p99_ns\": {:.0}, \
+             \"compiled_p50_ns\": {:.0}, \"compiled_p99_ns\": {:.0}, \
+             \"speedup_p50\": {:.4}}}",
+            r.artifact,
+            r.fused_chains,
+            r.folded_ops,
+            r.interp_p50_ns,
+            r.interp_p99_ns,
+            r.compiled_p50_ns,
+            r.compiled_p99_ns,
+            r.speedup_p50()
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"e2e_compiled\",\n  \"smoke\": {smoke},\n  \"iters\": {iters},\n  \
+         \"families\": [\n{fam_json}\n  ],\n  \"geomean_speedup_p50\": {geomean:.4}\n}}\n"
+    );
+    let path = write_bench_json("BENCH_compiled.json", &json);
+    println!("wrote {}", path.display());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,14 +1,20 @@
 //! §3.3 regeneration: frequent-subgraph mining over fleet nets +
 //! roofline fusion ranking; verifies the paper's claims that tensor
 //! manipulation is a double-digit share of fleet time and that fusing
-//! the top opportunities recovers >10% of run time.
+//! the top opportunities recovers >10% of run time. Since PR 8 the
+//! same pass also runs for real: the tail of the bench loads the
+//! fixture artifacts and prints what the plan compiler actually fused
+//! into GEMM epilogues per model family. `-- --smoke` keeps the
+//! mining pass CI-sized.
 
 use dcinfer::graph::{mine_frequent_subgraphs, rank_opportunities, Net};
 use dcinfer::models::representative_zoo;
 use dcinfer::perfmodel::DeviceSpec;
+use dcinfer::runtime::{synthetic_artifacts_dir, Manifest, NativeBackend, Precision};
 use dcinfer::util::bench::bench;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     println!("== §3.3: whole-graph fusion mining ==\n");
     let zoo = representative_zoo();
     let dev = DeviceSpec::xeon_fp32();
@@ -62,8 +68,24 @@ fn main() {
     assert!(manip_pct > 10.0, "fusion saving {manip_pct:.1}% <= 10%");
     println!("paper claim (~17% tensor-manip time; >10% savings from fusion) reproduced");
 
-    let m = bench("mine zoo nets", || {
-        let _ = mine_frequent_subgraphs(&nets, 3, 1.0);
-    });
-    dcinfer::util::bench::report(&m);
+    // the mining pass applied for real: what the plan compiler folded
+    // into GEMM epilogues when loading the fixture artifacts
+    println!("\n== mined chains compiled into execution plans ==\n");
+    let dir = synthetic_artifacts_dir("fusion_mining").expect("fixture");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let backend = NativeBackend::new(Precision::Fp32);
+    for name in ["recsys_fp32_b1", "cv_tiny_b1", "gru_step_b1"] {
+        let art = backend.load_native(&manifest, name).expect("load artifact");
+        let rep = art.fusion_report();
+        println!("{}", rep.summary());
+        assert!(!rep.chains.is_empty(), "{name}: no chain fused");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if !smoke {
+        let m = bench("mine zoo nets", || {
+            let _ = mine_frequent_subgraphs(&nets, 3, 1.0);
+        });
+        dcinfer::util::bench::report(&m);
+    }
 }

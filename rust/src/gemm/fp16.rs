@@ -16,7 +16,7 @@ use super::kernel::{
     mc_rows, nc_panels, partition, sanitize_isa, GemmCtx, Isa, Partition, SharedMut, MR,
 };
 use super::parallel;
-use super::pipeline::OutputPipeline;
+use super::pipeline::{Epilogue, OutputPipeline};
 
 /// B packed as f16 panels.
 #[derive(Debug, Clone)]
@@ -84,7 +84,7 @@ unsafe fn micro_f16<const MB: usize>(
     k: usize,
     r0: usize,
     panel: &[u16],
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
     n: usize,
     n0: usize,
@@ -106,9 +106,10 @@ unsafe fn micro_f16<const MB: usize>(
         }
     }
     for (im, accr) in acc.iter().enumerate() {
-        let crow = c.add((r0 + im) * n + n0);
+        let lin0 = (r0 + im) * n + n0;
+        let crow = c.add(lin0);
         for r in 0..nb {
-            *crow.add(r) = pipe.apply_f32(accr[r], n0 + r);
+            *crow.add(r) = ep.apply_f32(accr[r], n0 + r, lin0 + r);
         }
     }
 }
@@ -126,7 +127,7 @@ unsafe fn blocks_f16(
     b: &PackedBF16,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
     let (n, k) = (b.n, b.k);
@@ -145,10 +146,10 @@ unsafe fn blocks_f16(
                 let mut r = rb;
                 while r < re {
                     match re - r {
-                        1 => micro_f16::<1>(a, k, r, panel, pipe, c, n, n0, nb),
-                        2 => micro_f16::<2>(a, k, r, panel, pipe, c, n, n0, nb),
-                        3 => micro_f16::<3>(a, k, r, panel, pipe, c, n, n0, nb),
-                        _ => micro_f16::<4>(a, k, r, panel, pipe, c, n, n0, nb),
+                        1 => micro_f16::<1>(a, k, r, panel, ep, c, n, n0, nb),
+                        2 => micro_f16::<2>(a, k, r, panel, ep, c, n, n0, nb),
+                        3 => micro_f16::<3>(a, k, r, panel, ep, c, n, n0, nb),
+                        _ => micro_f16::<4>(a, k, r, panel, ep, c, n, n0, nb),
                     }
                     r += MR;
                 }
@@ -169,10 +170,10 @@ unsafe fn blocks_f16_avx2(
     b: &PackedBF16,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
-    blocks_f16(a, m0, m1, b, p0, p1, pipe, c)
+    blocks_f16(a, m0, m1, b, p0, p1, ep, c)
 }
 
 /// ISA-dispatched range execution.
@@ -189,13 +190,13 @@ unsafe fn run_f16(
     b: &PackedBF16,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
     match isa {
         #[cfg(target_arch = "x86_64")]
-        Isa::Avx2 => blocks_f16_avx2(a, m0, m1, b, p0, p1, pipe, c),
-        _ => blocks_f16(a, m0, m1, b, p0, p1, pipe, c),
+        Isa::Avx2 => blocks_f16_avx2(a, m0, m1, b, p0, p1, ep, c),
+        _ => blocks_f16(a, m0, m1, b, p0, p1, ep, c),
     }
 }
 
@@ -213,6 +214,19 @@ pub fn gemm_f16_ctx(
     pipe: &OutputPipeline,
     c: &mut [f32],
 ) {
+    gemm_f16_ep(ctx, a, m, b, &Epilogue::bare(pipe), c)
+}
+
+/// [`gemm_f16_ctx`] with a folded elementwise tail applied at
+/// write-out (compiled-plan epilogue fusion).
+pub fn gemm_f16_ep(
+    ctx: &GemmCtx,
+    a: &[f32],
+    m: usize,
+    b: &PackedBF16,
+    ep: &Epilogue<'_>,
+    c: &mut [f32],
+) {
     let (n, k) = (b.n, b.k);
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
@@ -220,19 +234,19 @@ pub fn gemm_f16_ctx(
     let cp = SharedMut(c.as_mut_ptr());
     let isa = sanitize_isa(ctx.isa);
     match partition(ctx, m, n, k, n_panels) {
-        Partition::Serial => unsafe { run_f16(isa, a, 0, m, b, 0, n_panels, pipe, cp.0) },
+        Partition::Serial => unsafe { run_f16(isa, a, 0, m, b, 0, n_panels, ep, cp.0) },
         Partition::Rows { chunks, rows_per } => parallel::run(chunks, &|i| {
             let (r0, r1) = (i * rows_per, ((i + 1) * rows_per).min(m));
             if r0 < r1 {
                 // SAFETY: chunks write disjoint row ranges of c
-                unsafe { run_f16(isa, a, r0, r1, b, 0, n_panels, pipe, cp.0) }
+                unsafe { run_f16(isa, a, r0, r1, b, 0, n_panels, ep, cp.0) }
             }
         }),
         Partition::Panels { chunks, panels_per } => parallel::run(chunks, &|i| {
             let (p0, p1) = (i * panels_per, ((i + 1) * panels_per).min(n_panels));
             if p0 < p1 {
                 // SAFETY: chunks write disjoint column ranges of c
-                unsafe { run_f16(isa, a, 0, m, b, p0, p1, pipe, cp.0) }
+                unsafe { run_f16(isa, a, 0, m, b, p0, p1, ep, cp.0) }
             }
         }),
     }

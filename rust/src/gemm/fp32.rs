@@ -18,7 +18,7 @@ use super::kernel::{
     mc_rows, nc_panels, partition, sanitize_isa, GemmCtx, Isa, Partition, SharedMut, MR,
 };
 use super::parallel;
-use super::pipeline::OutputPipeline;
+use super::pipeline::{Epilogue, OutputPipeline};
 
 /// Panel width (output channels per panel). 16 f32 lanes = 2 AVX2 regs.
 pub const NR: usize = 16;
@@ -71,7 +71,7 @@ unsafe fn micro_f32<const MB: usize>(
     k: usize,
     r0: usize,
     panel: &[f32],
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
     n: usize,
     n0: usize,
@@ -90,9 +90,10 @@ unsafe fn micro_f32<const MB: usize>(
         }
     }
     for (im, accr) in acc.iter().enumerate() {
-        let crow = c.add((r0 + im) * n + n0);
+        let lin0 = (r0 + im) * n + n0;
+        let crow = c.add(lin0);
         for r in 0..nb {
-            *crow.add(r) = pipe.apply_f32(accr[r], n0 + r);
+            *crow.add(r) = ep.apply_f32(accr[r], n0 + r, lin0 + r);
         }
     }
 }
@@ -110,7 +111,7 @@ unsafe fn blocks_f32(
     b: &PackedBF32,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
     let (n, k) = (b.n, b.k);
@@ -129,10 +130,10 @@ unsafe fn blocks_f32(
                 let mut r = rb;
                 while r < re {
                     match re - r {
-                        1 => micro_f32::<1>(a, k, r, panel, pipe, c, n, n0, nb),
-                        2 => micro_f32::<2>(a, k, r, panel, pipe, c, n, n0, nb),
-                        3 => micro_f32::<3>(a, k, r, panel, pipe, c, n, n0, nb),
-                        _ => micro_f32::<4>(a, k, r, panel, pipe, c, n, n0, nb),
+                        1 => micro_f32::<1>(a, k, r, panel, ep, c, n, n0, nb),
+                        2 => micro_f32::<2>(a, k, r, panel, ep, c, n, n0, nb),
+                        3 => micro_f32::<3>(a, k, r, panel, ep, c, n, n0, nb),
+                        _ => micro_f32::<4>(a, k, r, panel, ep, c, n, n0, nb),
                     }
                     r += MR;
                 }
@@ -153,10 +154,10 @@ unsafe fn blocks_f32_avx2(
     b: &PackedBF32,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
-    blocks_f32(a, m0, m1, b, p0, p1, pipe, c)
+    blocks_f32(a, m0, m1, b, p0, p1, ep, c)
 }
 
 /// ISA-dispatched range execution (rows `m0..m1`, panels `p0..p1`).
@@ -173,13 +174,13 @@ unsafe fn run_f32(
     b: &PackedBF32,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
     match isa {
         #[cfg(target_arch = "x86_64")]
-        Isa::Avx2 => blocks_f32_avx2(a, m0, m1, b, p0, p1, pipe, c),
-        _ => blocks_f32(a, m0, m1, b, p0, p1, pipe, c),
+        Isa::Avx2 => blocks_f32_avx2(a, m0, m1, b, p0, p1, ep, c),
+        _ => blocks_f32(a, m0, m1, b, p0, p1, ep, c),
     }
 }
 
@@ -198,6 +199,19 @@ pub fn gemm_f32_ctx(
     pipe: &OutputPipeline,
     c: &mut [f32],
 ) {
+    gemm_f32_ep(ctx, a, m, b, &Epilogue::bare(pipe), c)
+}
+
+/// [`gemm_f32_ctx`] with a folded elementwise tail applied at
+/// write-out (compiled-plan epilogue fusion).
+pub fn gemm_f32_ep(
+    ctx: &GemmCtx,
+    a: &[f32],
+    m: usize,
+    b: &PackedBF32,
+    ep: &Epilogue<'_>,
+    c: &mut [f32],
+) {
     let (n, k) = (b.n, b.k);
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
@@ -205,19 +219,19 @@ pub fn gemm_f32_ctx(
     let cp = SharedMut(c.as_mut_ptr());
     let isa = sanitize_isa(ctx.isa);
     match partition(ctx, m, n, k, n_panels) {
-        Partition::Serial => unsafe { run_f32(isa, a, 0, m, b, 0, n_panels, pipe, cp.0) },
+        Partition::Serial => unsafe { run_f32(isa, a, 0, m, b, 0, n_panels, ep, cp.0) },
         Partition::Rows { chunks, rows_per } => parallel::run(chunks, &|i| {
             let (r0, r1) = (i * rows_per, ((i + 1) * rows_per).min(m));
             if r0 < r1 {
                 // SAFETY: chunks write disjoint row ranges of c
-                unsafe { run_f32(isa, a, r0, r1, b, 0, n_panels, pipe, cp.0) }
+                unsafe { run_f32(isa, a, r0, r1, b, 0, n_panels, ep, cp.0) }
             }
         }),
         Partition::Panels { chunks, panels_per } => parallel::run(chunks, &|i| {
             let (p0, p1) = (i * panels_per, ((i + 1) * panels_per).min(n_panels));
             if p0 < p1 {
                 // SAFETY: chunks write disjoint column ranges of c
-                unsafe { run_f32(isa, a, 0, m, b, p0, p1, pipe, cp.0) }
+                unsafe { run_f32(isa, a, 0, m, b, p0, p1, ep, cp.0) }
             }
         }),
     }
@@ -298,6 +312,38 @@ mod tests {
                 let want = (plain[i * n + j] + j as f32).max(0.0);
                 assert!((c[i * n + j] - want).abs() < 1e-4);
             }
+        }
+    }
+
+    #[test]
+    fn folded_tail_matches_separate_passes_bitwise() {
+        use super::super::pipeline::TailOp;
+        let mut rng = Pcg32::seeded(77);
+        let (m, n, k) = (5, 21, 33);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, n * k);
+        let operand = rand_mat(&mut rng, m * n);
+        let packed = PackedBF32::pack(&b, n, k);
+        let pipe = OutputPipeline::identity(n, false);
+
+        // unfused oracle: gemm, then add, then tanh, as separate passes
+        let mut want = vec![0f32; m * n];
+        gemm_f32(&a, m, &packed, &pipe, &mut want);
+        for (w, &o) in want.iter_mut().zip(operand.iter()) {
+            *w += o;
+        }
+        for w in want.iter_mut() {
+            *w = w.tanh();
+        }
+
+        let tail = [TailOp::Add { operand: &operand, swapped: false }, TailOp::Tanh];
+        let ep = Epilogue { pipe: &pipe, tail: &tail };
+        for ctx in [GemmCtx::scalar(), GemmCtx::auto(), GemmCtx::threaded(3)] {
+            let mut c = vec![0f32; m * n];
+            gemm_f32_ep(&ctx, &a, m, &packed, &ep, &mut c);
+            let cb: Vec<u32> = c.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(cb, wb, "fused epilogue diverged under {ctx:?}");
         }
     }
 

@@ -19,7 +19,7 @@ use super::kernel::{
 };
 use super::outlier::{split_outliers, OutlierCsr};
 use super::parallel;
-use super::pipeline::OutputPipeline;
+use super::pipeline::{Epilogue, OutputPipeline};
 
 /// acc16 panel width: 32 i16 lanes fill one 512-bit register, which is
 /// exactly where the path's 2x-lanes-over-i32 advantage lives.
@@ -94,7 +94,7 @@ unsafe fn micro_acc16<const MB: usize>(
     r0: usize,
     panel: &[i8],
     outliers: &OutlierCsr,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
     n: usize,
     n0: usize,
@@ -145,11 +145,12 @@ unsafe fn micro_acc16<const MB: usize>(
     }
     // sparse outlier residual, fused per tile (exact i32)
     outliers.acc_tile::<MB, NR16>(a, r0, n0, nb, &mut acc);
-    // fused output pipeline
+    // fused output pipeline + folded elementwise tail
     for (im, accr) in acc.iter().enumerate() {
-        let crow = c.add((r0 + im) * n + n0);
+        let lin0 = (r0 + im) * n + n0;
+        let crow = c.add(lin0);
         for r in 0..nb {
-            *crow.add(r) = pipe.apply_i32(accr[r], n0 + r);
+            *crow.add(r) = ep.apply_i32(accr[r], n0 + r, lin0 + r);
         }
     }
 }
@@ -167,7 +168,7 @@ unsafe fn blocks_acc16(
     b: &PackedBI8Acc16,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
     let (n, k) = (b.n, b.k);
@@ -186,10 +187,10 @@ unsafe fn blocks_acc16(
                 let mut r = rb;
                 while r < re {
                     match re - r {
-                        1 => micro_acc16::<1>(a, k, r, panel, &b.outliers, pipe, c, n, n0, nb),
-                        2 => micro_acc16::<2>(a, k, r, panel, &b.outliers, pipe, c, n, n0, nb),
-                        3 => micro_acc16::<3>(a, k, r, panel, &b.outliers, pipe, c, n, n0, nb),
-                        _ => micro_acc16::<4>(a, k, r, panel, &b.outliers, pipe, c, n, n0, nb),
+                        1 => micro_acc16::<1>(a, k, r, panel, &b.outliers, ep, c, n, n0, nb),
+                        2 => micro_acc16::<2>(a, k, r, panel, &b.outliers, ep, c, n, n0, nb),
+                        3 => micro_acc16::<3>(a, k, r, panel, &b.outliers, ep, c, n, n0, nb),
+                        _ => micro_acc16::<4>(a, k, r, panel, &b.outliers, ep, c, n, n0, nb),
                     }
                     r += MR;
                 }
@@ -210,10 +211,10 @@ unsafe fn blocks_acc16_avx2(
     b: &PackedBI8Acc16,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
-    blocks_acc16(a, m0, m1, b, p0, p1, pipe, c)
+    blocks_acc16(a, m0, m1, b, p0, p1, ep, c)
 }
 
 /// ISA-dispatched range execution.
@@ -230,13 +231,13 @@ unsafe fn run_acc16(
     b: &PackedBI8Acc16,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
     match isa {
         #[cfg(target_arch = "x86_64")]
-        Isa::Avx2 => blocks_acc16_avx2(a, m0, m1, b, p0, p1, pipe, c),
-        _ => blocks_acc16(a, m0, m1, b, p0, p1, pipe, c),
+        Isa::Avx2 => blocks_acc16_avx2(a, m0, m1, b, p0, p1, ep, c),
+        _ => blocks_acc16(a, m0, m1, b, p0, p1, ep, c),
     }
 }
 
@@ -261,6 +262,19 @@ pub fn gemm_i8_acc16_ctx(
     pipe: &OutputPipeline,
     c: &mut [f32],
 ) {
+    gemm_i8_acc16_ep(ctx, a, m, b, &Epilogue::bare(pipe), c)
+}
+
+/// [`gemm_i8_acc16_ctx`] with a folded elementwise tail applied at
+/// write-out (compiled-plan epilogue fusion).
+pub fn gemm_i8_acc16_ep(
+    ctx: &GemmCtx,
+    a: &[i8],
+    m: usize,
+    b: &PackedBI8Acc16,
+    ep: &Epilogue<'_>,
+    c: &mut [f32],
+) {
     let (n, k) = (b.n, b.k);
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
@@ -268,19 +282,19 @@ pub fn gemm_i8_acc16_ctx(
     let cp = SharedMut(c.as_mut_ptr());
     let isa = sanitize_isa(ctx.isa);
     match partition(ctx, m, n, k, n_panels) {
-        Partition::Serial => unsafe { run_acc16(isa, a, 0, m, b, 0, n_panels, pipe, cp.0) },
+        Partition::Serial => unsafe { run_acc16(isa, a, 0, m, b, 0, n_panels, ep, cp.0) },
         Partition::Rows { chunks, rows_per } => parallel::run(chunks, &|i| {
             let (r0, r1) = (i * rows_per, ((i + 1) * rows_per).min(m));
             if r0 < r1 {
                 // SAFETY: chunks write disjoint row ranges of c
-                unsafe { run_acc16(isa, a, r0, r1, b, 0, n_panels, pipe, cp.0) }
+                unsafe { run_acc16(isa, a, r0, r1, b, 0, n_panels, ep, cp.0) }
             }
         }),
         Partition::Panels { chunks, panels_per } => parallel::run(chunks, &|i| {
             let (p0, p1) = (i * panels_per, ((i + 1) * panels_per).min(n_panels));
             if p0 < p1 {
                 // SAFETY: chunks write disjoint column ranges of c
-                unsafe { run_acc16(isa, a, 0, m, b, p0, p1, pipe, cp.0) }
+                unsafe { run_acc16(isa, a, 0, m, b, p0, p1, ep, cp.0) }
             }
         }),
     }

@@ -16,7 +16,7 @@ use super::kernel::{
     mc_rows, nc_panels, partition, sanitize_isa, GemmCtx, Isa, Partition, SharedMut, MR,
 };
 use super::parallel;
-use super::pipeline::OutputPipeline;
+use super::pipeline::{Epilogue, OutputPipeline};
 
 /// int8-path panel width: 16 output channels keeps the MRx NR8 i32
 /// accumulator tile within the 16 ymm registers (32 spilled badly).
@@ -78,7 +78,7 @@ unsafe fn micro_i8<const MB: usize>(
     k: usize,
     r0: usize,
     panel: &[i8],
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
     n: usize,
     n0: usize,
@@ -97,9 +97,10 @@ unsafe fn micro_i8<const MB: usize>(
         }
     }
     for (im, accr) in acc.iter().enumerate() {
-        let crow = c.add((r0 + im) * n + n0);
+        let lin0 = (r0 + im) * n + n0;
+        let crow = c.add(lin0);
         for r in 0..nb {
-            *crow.add(r) = pipe.apply_i32(accr[r], n0 + r);
+            *crow.add(r) = ep.apply_i32(accr[r], n0 + r, lin0 + r);
         }
     }
 }
@@ -117,7 +118,7 @@ unsafe fn blocks_i8(
     b: &PackedBI8,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
     let (n, k) = (b.n, b.k);
@@ -136,10 +137,10 @@ unsafe fn blocks_i8(
                 let mut r = rb;
                 while r < re {
                     match re - r {
-                        1 => micro_i8::<1>(a, k, r, panel, pipe, c, n, n0, nb),
-                        2 => micro_i8::<2>(a, k, r, panel, pipe, c, n, n0, nb),
-                        3 => micro_i8::<3>(a, k, r, panel, pipe, c, n, n0, nb),
-                        _ => micro_i8::<4>(a, k, r, panel, pipe, c, n, n0, nb),
+                        1 => micro_i8::<1>(a, k, r, panel, ep, c, n, n0, nb),
+                        2 => micro_i8::<2>(a, k, r, panel, ep, c, n, n0, nb),
+                        3 => micro_i8::<3>(a, k, r, panel, ep, c, n, n0, nb),
+                        _ => micro_i8::<4>(a, k, r, panel, ep, c, n, n0, nb),
                     }
                     r += MR;
                 }
@@ -160,10 +161,10 @@ unsafe fn blocks_i8_avx2(
     b: &PackedBI8,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
-    blocks_i8(a, m0, m1, b, p0, p1, pipe, c)
+    blocks_i8(a, m0, m1, b, p0, p1, ep, c)
 }
 
 /// ISA-dispatched range execution.
@@ -180,13 +181,13 @@ unsafe fn run_i8(
     b: &PackedBI8,
     p0: usize,
     p1: usize,
-    pipe: &OutputPipeline,
+    ep: &Epilogue,
     c: *mut f32,
 ) {
     match isa {
         #[cfg(target_arch = "x86_64")]
-        Isa::Avx2 => blocks_i8_avx2(a, m0, m1, b, p0, p1, pipe, c),
-        _ => blocks_i8(a, m0, m1, b, p0, p1, pipe, c),
+        Isa::Avx2 => blocks_i8_avx2(a, m0, m1, b, p0, p1, ep, c),
+        _ => blocks_i8(a, m0, m1, b, p0, p1, ep, c),
     }
 }
 
@@ -204,6 +205,19 @@ pub fn gemm_i8_acc32_ctx(
     pipe: &OutputPipeline,
     c: &mut [f32],
 ) {
+    gemm_i8_acc32_ep(ctx, a, m, b, &Epilogue::bare(pipe), c)
+}
+
+/// [`gemm_i8_acc32_ctx`] with a folded elementwise tail applied at
+/// write-out (compiled-plan epilogue fusion).
+pub fn gemm_i8_acc32_ep(
+    ctx: &GemmCtx,
+    a: &[i8],
+    m: usize,
+    b: &PackedBI8,
+    ep: &Epilogue<'_>,
+    c: &mut [f32],
+) {
     let (n, k) = (b.n, b.k);
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
@@ -211,19 +225,19 @@ pub fn gemm_i8_acc32_ctx(
     let cp = SharedMut(c.as_mut_ptr());
     let isa = sanitize_isa(ctx.isa);
     match partition(ctx, m, n, k, n_panels) {
-        Partition::Serial => unsafe { run_i8(isa, a, 0, m, b, 0, n_panels, pipe, cp.0) },
+        Partition::Serial => unsafe { run_i8(isa, a, 0, m, b, 0, n_panels, ep, cp.0) },
         Partition::Rows { chunks, rows_per } => parallel::run(chunks, &|i| {
             let (r0, r1) = (i * rows_per, ((i + 1) * rows_per).min(m));
             if r0 < r1 {
                 // SAFETY: chunks write disjoint row ranges of c
-                unsafe { run_i8(isa, a, r0, r1, b, 0, n_panels, pipe, cp.0) }
+                unsafe { run_i8(isa, a, r0, r1, b, 0, n_panels, ep, cp.0) }
             }
         }),
         Partition::Panels { chunks, panels_per } => parallel::run(chunks, &|i| {
             let (p0, p1) = (i * panels_per, ((i + 1) * panels_per).min(n_panels));
             if p0 < p1 {
                 // SAFETY: chunks write disjoint column ranges of c
-                unsafe { run_i8(isa, a, 0, m, b, p0, p1, pipe, cp.0) }
+                unsafe { run_i8(isa, a, 0, m, b, p0, p1, ep, cp.0) }
             }
         }),
     }

@@ -40,7 +40,7 @@ pub use i8acc16::PackedBI8Acc16;
 pub use i8acc32::PackedBI8;
 pub use kernel::{detect_isa, GemmCtx, Isa};
 pub use outlier::{split_outliers, OutlierCsr};
-pub use pipeline::OutputPipeline;
+pub use pipeline::{Epilogue, OutputPipeline, TailOp};
 
 /// Arithmetic intensity of an (M, N, K) GEMM as Fig 6 defines it:
 /// `2MNK / (NK + MK)` — output traffic excluded.

@@ -75,6 +75,110 @@ impl OutputPipeline {
     }
 }
 
+/// One elementwise op folded into the kernel write-out, applied after
+/// the [`OutputPipeline`] in original program order. Binary operands
+/// are whole pre-computed tensors indexed by the *linear* output index,
+/// so folding never changes which element meets which.
+#[derive(Debug, Clone, Copy)]
+pub enum TailOp<'a> {
+    /// `max(v, 0)`
+    Relu,
+    /// logistic `1 / (1 + e^-v)`
+    Sigmoid,
+    /// hyperbolic tangent
+    Tanh,
+    /// `1 - v` (GRU update-gate complement)
+    OneMinus,
+    /// `v + operand[idx]`; `swapped` preserves the original operand
+    /// order (`operand[idx] + v`) so NaN propagation is unchanged
+    Add {
+        /// the other operand, one value per linear output element
+        operand: &'a [f32],
+        /// true when the chained value was the *right* operand
+        swapped: bool,
+    },
+    /// `v * operand[idx]`; `swapped` as for [`TailOp::Add`]
+    Mul {
+        /// the other operand, one value per linear output element
+        operand: &'a [f32],
+        /// true when the chained value was the *right* operand
+        swapped: bool,
+    },
+}
+
+impl TailOp<'_> {
+    /// Apply to one value at linear output index `idx`. The math is
+    /// verbatim the interpreter's `UnaryFn::apply` / binary loops, so
+    /// fused and unfused execution are bit-identical.
+    #[inline(always)]
+    pub fn apply(&self, v: f32, idx: usize) -> f32 {
+        match *self {
+            TailOp::Relu => v.max(0.0),
+            TailOp::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+            TailOp::Tanh => v.tanh(),
+            TailOp::OneMinus => 1.0 - v,
+            TailOp::Add { operand, swapped } => {
+                if swapped {
+                    operand[idx] + v
+                } else {
+                    v + operand[idx]
+                }
+            }
+            TailOp::Mul { operand, swapped } => {
+                if swapped {
+                    operand[idx] * v
+                } else {
+                    v * operand[idx]
+                }
+            }
+        }
+    }
+}
+
+/// The full write-out transformation a kernel applies per accumulator:
+/// the quantization [`OutputPipeline`] followed by a (possibly empty)
+/// chain of folded [`TailOp`]s. Kernels thread this through the
+/// micro-kernel so a fused `fc -> unary -> binary` chain runs as one
+/// pass with no intermediate materialization.
+#[derive(Debug, Clone, Copy)]
+pub struct Epilogue<'a> {
+    /// zero-point / rescale / bias / relu stage
+    pub pipe: &'a OutputPipeline,
+    /// folded elementwise tail, applied in original program order
+    pub tail: &'a [TailOp<'a>],
+}
+
+impl<'a> Epilogue<'a> {
+    /// An epilogue that is exactly the pipeline (empty tail).
+    #[inline]
+    pub fn bare(pipe: &'a OutputPipeline) -> Self {
+        Epilogue { pipe, tail: &[] }
+    }
+
+    /// Apply the tail after the pipeline has produced `v`.
+    #[inline(always)]
+    fn finish(&self, mut v: f32, idx: usize) -> f32 {
+        for op in self.tail {
+            v = op.apply(v, idx);
+        }
+        v
+    }
+
+    /// Pipeline + tail for one fp32 accumulator at output channel `n`
+    /// and linear output index `idx`.
+    #[inline(always)]
+    pub fn apply_f32(&self, acc: f32, n: usize, idx: usize) -> f32 {
+        self.finish(self.pipe.apply_f32(acc, n), idx)
+    }
+
+    /// Pipeline + tail for one int32 accumulator at output channel `n`
+    /// and linear output index `idx`.
+    #[inline(always)]
+    pub fn apply_i32(&self, acc: i32, n: usize, idx: usize) -> f32 {
+        self.finish(self.pipe.apply_i32(acc, n), idx)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +217,48 @@ mod tests {
         let rs: Arc<[i32]> = vec![1, 2, 3].into();
         let p = OutputPipeline::per_tensor(3, 0, 1.0, rs.clone(), false);
         assert!(Arc::ptr_eq(&p.b_rowsum, &rs));
+    }
+
+    #[test]
+    fn bare_epilogue_is_the_pipeline() {
+        let p = OutputPipeline::per_tensor(2, 0, 2.0, vec![0, 0], false);
+        let ep = Epilogue::bare(&p);
+        assert_eq!(ep.apply_i32(3, 1, 7), p.apply_i32(3, 1));
+        assert_eq!(ep.apply_f32(1.5, 0, 0), p.apply_f32(1.5, 0));
+    }
+
+    #[test]
+    fn tail_applies_in_program_order() {
+        let p = OutputPipeline::identity(1, false);
+        let operand = [10.0f32, 20.0];
+        // (v + operand) then tanh — order matters, must not commute
+        let tail = [TailOp::Add { operand: &operand, swapped: false }, TailOp::Tanh];
+        let ep = Epilogue { pipe: &p, tail: &tail };
+        assert_eq!(ep.apply_f32(-9.5, 0, 0), ((-9.5f32) + 10.0).tanh());
+        assert_eq!(ep.apply_f32(0.25, 0, 1), (0.25f32 + 20.0).tanh());
+    }
+
+    #[test]
+    fn swapped_preserves_operand_order() {
+        let operand = [f32::NAN];
+        let v = f32::from_bits(0x7fc0_0001); // a NaN with a distinct payload
+        let fwd = TailOp::Add { operand: &operand, swapped: false }.apply(v, 0);
+        let rev = TailOp::Add { operand: &operand, swapped: true }.apply(v, 0);
+        // both are NaN; the point is the expression shape matches the
+        // interpreter's `a[i] + b[i]` exactly for either operand role
+        assert!(fwd.is_nan() && rev.is_nan());
+        assert_eq!(
+            TailOp::Mul { operand: &[3.0], swapped: true }.apply(0.5, 0),
+            3.0f32 * 0.5
+        );
+    }
+
+    #[test]
+    fn tail_math_matches_interpreter_formulas() {
+        assert_eq!(TailOp::Relu.apply(-2.0, 0), 0.0);
+        assert_eq!(TailOp::Relu.apply(2.0, 0), 2.0);
+        assert_eq!(TailOp::Sigmoid.apply(0.3, 0), 1.0 / (1.0 + (-0.3f32).exp()));
+        assert_eq!(TailOp::Tanh.apply(0.3, 0), 0.3f32.tanh());
+        assert_eq!(TailOp::OneMinus.apply(0.3, 0), 1.0 - 0.3f32);
     }
 }

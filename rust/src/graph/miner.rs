@@ -10,7 +10,7 @@
 //! those above a support threshold. Non-data-parallel ops (the paper's
 //! filter rule) break segments.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::models::OpClass;
 
@@ -121,6 +121,145 @@ pub fn mine_frequent_subgraphs(
     out
 }
 
+/// Epilogue role one op of an artifact op program can play in a fused
+/// chain ([`mine_program_chains`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChainKind {
+    /// GEMM producer whose written tensor *is* the kernel output layout
+    /// (fc): hosts unary and binary tails.
+    Gemm,
+    /// GEMM producer whose kernel output is permuted on write-out
+    /// (conv2d's NCHW scatter): hosts unary tails only — a binary
+    /// operand's indexing would need remapping through the scatter.
+    GemmScattered,
+    /// Elementwise unary: can join any chain.
+    Unary,
+    /// Elementwise binary: can join a [`ChainKind::Gemm`] chain when
+    /// exactly one operand is the chain value.
+    Binary,
+    /// Anything that can neither host nor join a chain.
+    Opaque,
+}
+
+/// One op of an artifact op program, reduced to the view the chain
+/// miner needs: its epilogue role, the value it writes, and the values
+/// it reads.
+#[derive(Debug, Clone)]
+pub struct ProgramOp {
+    /// Epilogue role of this op.
+    pub kind: ChainKind,
+    /// Name of the value this op writes (must be program-unique).
+    pub out: String,
+    /// Names of the values this op reads, in operand order.
+    pub reads: Vec<String>,
+}
+
+/// A mined fusable chain: the producer op index plus the member op
+/// indices (in program order) whose work folds into the producer's
+/// epilogue. Members are always `producer+1, producer+2, ...` — the
+/// consecutive-consumer rule below.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MinedChain {
+    /// Index of the GEMM op hosting the epilogue.
+    pub producer: usize,
+    /// Indices of the folded trailing elementwise ops.
+    pub members: Vec<usize>,
+}
+
+/// Mine fusable epilogue chains from an op program — the §3.3
+/// fusion-discovery pass retargeted from fleet-logged NetDefs onto the
+/// programs artifacts actually ship.
+///
+/// Mining is name-level (SSA values), deliberately not slot-level: the
+/// interpreter's in-place-unary canonicalization merges arena slots, so
+/// slot identity cannot distinguish a chain intermediate from the
+/// chain's final output. Rules, all conservative:
+///
+/// - every `out` name must be program-unique, else nothing is mined;
+/// - a chain grows from a `Gemm`/`GemmScattered` producer through
+///   immediately-following `Unary`/`Binary` ops only (any other op in
+///   between ends the chain);
+/// - the current chain value must have *exactly one* reader — the next
+///   op — and must not be an artifact output (the final chain value
+///   may be; a binary reading the chain value twice counts as two
+///   readers and refuses);
+/// - a binary joins only a `Gemm` chain, and only when its other
+///   operand is not itself a chain value;
+/// - at most `max_tail` members fold; later consumers read the
+///   materialized final value as ordinary plan steps.
+pub fn mine_program_chains(
+    ops: &[ProgramOp],
+    outputs: &[String],
+    max_tail: usize,
+) -> Vec<MinedChain> {
+    let mut names: HashSet<&str> = HashSet::new();
+    for op in ops {
+        if !names.insert(&op.out) {
+            return Vec::new(); // duplicate writer: name-level mining unsound
+        }
+    }
+    let mut readers: HashMap<&str, Vec<usize>> = HashMap::new();
+    for (i, op) in ops.iter().enumerate() {
+        for r in &op.reads {
+            readers.entry(r).or_default().push(i);
+        }
+    }
+    let output_set: HashSet<&str> = outputs.iter().map(|s| s.as_str()).collect();
+
+    let mut chains = Vec::new();
+    for (i, producer) in ops.iter().enumerate() {
+        if !matches!(producer.kind, ChainKind::Gemm | ChainKind::GemmScattered) {
+            continue;
+        }
+        let mut chain_value: &str = &producer.out;
+        let mut chain_names: HashSet<&str> = HashSet::from([chain_value]);
+        let mut members: Vec<usize> = Vec::new();
+        loop {
+            if members.len() >= max_tail {
+                break;
+            }
+            let next = i + members.len() + 1;
+            if next >= ops.len() {
+                break;
+            }
+            // folding `next` turns the current chain value into an
+            // elided intermediate: it must have no other reader and
+            // must not be an artifact output
+            match readers.get(chain_value) {
+                Some(rs) if rs.len() == 1 && rs[0] == next => {}
+                _ => break,
+            }
+            if output_set.contains(chain_value) {
+                break;
+            }
+            let cand = &ops[next];
+            match cand.kind {
+                ChainKind::Unary => {}
+                ChainKind::Binary if producer.kind == ChainKind::Gemm => {
+                    let other: Vec<&str> = cand
+                        .reads
+                        .iter()
+                        .map(|s| s.as_str())
+                        .filter(|s| *s != chain_value)
+                        .collect();
+                    // exactly one non-chain operand, predating the chain
+                    if other.len() != 1 || chain_names.contains(other[0]) {
+                        break;
+                    }
+                }
+                _ => break,
+            }
+            members.push(next);
+            chain_value = &cand.out;
+            chain_names.insert(chain_value);
+        }
+        if !members.is_empty() {
+            chains.push(MinedChain { producer: i, members });
+        }
+    }
+    chains
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,5 +311,106 @@ mod tests {
         for s in &mined {
             assert!(s.avg_intermediate_bytes > 0.0, "{}", s.signature);
         }
+    }
+
+    fn op(kind: ChainKind, out: &str, reads: &[&str]) -> ProgramOp {
+        ProgramOp {
+            kind,
+            out: out.to_string(),
+            reads: reads.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    fn outs(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn gru_shaped_program_mines_one_add_tanh_chain() {
+        // fc hx; fc hh; add pre = hx + hh; tanh hn; fc y
+        let ops = [
+            op(ChainKind::Gemm, "hx", &["x"]),
+            op(ChainKind::Gemm, "hh", &["h"]),
+            op(ChainKind::Binary, "pre", &["hx", "hh"]),
+            op(ChainKind::Unary, "hn", &["pre"]),
+            op(ChainKind::Gemm, "y", &["hn"]),
+        ];
+        let chains = mine_program_chains(&ops, &outs(&["y", "hn"]), 3);
+        // hx's consumer (op 2) is not consecutive to op 0, so only the
+        // hh producer hosts a chain; hn is an output but is the *final*
+        // chain value, which is allowed
+        assert_eq!(chains, vec![MinedChain { producer: 1, members: vec![2, 3] }]);
+    }
+
+    #[test]
+    fn trailing_unary_on_final_output_fuses() {
+        let ops = [
+            op(ChainKind::Opaque, "e", &["ids"]),
+            op(ChainKind::Gemm, "t", &["e"]),
+            op(ChainKind::Unary, "p", &["t"]),
+        ];
+        let chains = mine_program_chains(&ops, &outs(&["p"]), 3);
+        assert_eq!(chains, vec![MinedChain { producer: 1, members: vec![2] }]);
+    }
+
+    #[test]
+    fn multi_consumer_chain_value_refuses_fusion() {
+        // t feeds both the sigmoid and the mul: folding would leave the
+        // mul reading a never-materialized tensor
+        let ops = [
+            op(ChainKind::Gemm, "t", &["x"]),
+            op(ChainKind::Unary, "s", &["t"]),
+            op(ChainKind::Binary, "y", &["s", "t"]),
+        ];
+        assert!(mine_program_chains(&ops, &outs(&["y"]), 3).is_empty());
+    }
+
+    #[test]
+    fn chain_intermediate_that_is_an_artifact_output_refuses_fusion() {
+        let ops = [op(ChainKind::Gemm, "t", &["x"]), op(ChainKind::Unary, "y", &["t"])];
+        assert!(mine_program_chains(&ops, &outs(&["t", "y"]), 3).is_empty());
+    }
+
+    #[test]
+    fn scattered_producer_folds_unary_but_not_binary() {
+        let conv_unary =
+            [op(ChainKind::GemmScattered, "c", &["x"]), op(ChainKind::Unary, "y", &["c"])];
+        assert_eq!(
+            mine_program_chains(&conv_unary, &outs(&["y"]), 3),
+            vec![MinedChain { producer: 0, members: vec![1] }]
+        );
+        let conv_binary =
+            [op(ChainKind::GemmScattered, "c", &["x"]), op(ChainKind::Binary, "y", &["c", "z"])];
+        assert!(mine_program_chains(&conv_binary, &outs(&["y"]), 3).is_empty());
+    }
+
+    #[test]
+    fn binary_reading_chain_value_twice_refuses_fusion() {
+        let ops = [op(ChainKind::Gemm, "t", &["x"]), op(ChainKind::Binary, "y", &["t", "t"])];
+        assert!(mine_program_chains(&ops, &outs(&["y"]), 3).is_empty());
+    }
+
+    #[test]
+    fn tail_length_is_capped() {
+        let ops = [
+            op(ChainKind::Gemm, "t0", &["x"]),
+            op(ChainKind::Unary, "t1", &["t0"]),
+            op(ChainKind::Unary, "t2", &["t1"]),
+            op(ChainKind::Unary, "t3", &["t2"]),
+            op(ChainKind::Unary, "t4", &["t3"]),
+        ];
+        let chains = mine_program_chains(&ops, &outs(&["t4"]), 3);
+        // t4's unary is left to run as a plain step on the materialized t3
+        assert_eq!(chains, vec![MinedChain { producer: 0, members: vec![1, 2, 3] }]);
+    }
+
+    #[test]
+    fn duplicate_out_names_disable_mining_entirely() {
+        let ops = [
+            op(ChainKind::Gemm, "t", &["x"]),
+            op(ChainKind::Unary, "y", &["t"]),
+            op(ChainKind::Gemm, "t", &["y"]),
+        ];
+        assert!(mine_program_chains(&ops, &outs(&["t"]), 3).is_empty());
     }
 }

@@ -7,11 +7,18 @@
 //! -> filter by fusability rules (data-parallel ops only) -> score by
 //! roofline speedup (intermediate tensors stop hitting memory) ->
 //! return the top-k opportunities.
+//!
+//! Since PR 8 this pass is no longer advisory: the same miner, pointed
+//! at real artifact op programs ([`miner::mine_program_chains`]), feeds
+//! the plan compiler ([`crate::runtime::CompiledPlan`]), which folds the
+//! mined chains into GEMM epilogues at artifact load time.
 
 pub mod fusion;
 pub mod miner;
 pub mod netdef;
 
 pub use fusion::{fusion_speedup, rank_opportunities, FusionOpportunity};
-pub use miner::{mine_frequent_subgraphs, MinedSubgraph};
+pub use miner::{
+    mine_frequent_subgraphs, mine_program_chains, ChainKind, MinedChain, MinedSubgraph, ProgramOp,
+};
 pub use netdef::{Net, Node};

@@ -34,11 +34,14 @@ const RECSYS_PROG: &str = r#"[
   {"op": "unary", "fn": "sigmoid", "out": "prob", "in": "top1"}
 ]"#;
 
+// the trailing tanh gives the cv family a fusable fc->unary chain, so
+// every fixture family exercises at least one folded epilogue
 const CV_PROG: &str = r#"[
   {"op": "conv2d", "out": "c1", "in": "image", "w": "conv1", "b": "b1", "act": "relu", "stride": 2, "pad": [0, 1]},
   {"op": "conv2d", "out": "c2", "in": "c1", "w": "conv2", "b": "b2", "act": "relu", "stride": 2, "pad": [0, 1]},
   {"op": "flatten", "out": "f", "in": "c2"},
-  {"op": "fc", "out": "logits", "in": "f", "w": "fc_w", "b": "fc_b", "act": "none"}
+  {"op": "fc", "out": "raw", "in": "f", "w": "fc_w", "b": "fc_b", "act": "none"},
+  {"op": "unary", "fn": "tanh", "out": "logits", "in": "raw"}
 ]"#;
 
 // gru-lite decode step: h_new = tanh(Wx·x + Wh·h); logits = Wo·h_new —

@@ -25,7 +25,10 @@
 //!   [`crate::gemm`] reduced-precision kernels and pooled lookups to
 //!   [`crate::embedding`] — §3.2's FBGEMM path in the serving tier, at
 //!   any [`Precision`]. `cargo build --no-default-features` yields a
-//!   pure-Rust binary with only this backend.
+//!   pure-Rust binary with only this backend. At load time the op
+//!   program is lowered into a fused [`plan::CompiledPlan`] (epilogue
+//!   folding + pre-resolved dispatch); the interpreter survives as the
+//!   numerics oracle behind `DCINFER_EXEC=interpret`.
 //!
 //! Backends hold raw pointers (PJRT) and are not `Send`, so
 //! [`executor`] wraps each one in a dedicated thread per (virtual)
@@ -40,6 +43,7 @@ pub mod executor;
 pub mod fixture;
 pub mod manifest;
 pub mod native;
+pub mod plan;
 pub mod precision;
 pub mod tensor;
 pub mod weights;
@@ -54,7 +58,8 @@ pub use engine::{Engine, LoadedModel};
 pub use executor::{Executor, ExecutorPool};
 pub use fixture::{synthetic_artifacts_dir, write_synthetic_artifacts};
 pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
-pub use native::{FcLayer, NativeArtifact, NativeBackend};
+pub use native::{build_native_artifact, FcLayer, NativeArtifact, NativeBackend};
+pub use plan::{CompiledPlan, FusedChain, FusionReport, MAX_TAIL};
 pub use precision::Precision;
 pub use tensor::{DType, HostTensor};
 pub use weights::{read_weights_file, write_weights_file, NamedTensor};

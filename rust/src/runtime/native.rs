@@ -46,9 +46,8 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::embedding::shard::{EmbeddingShardService, ShardPlan};
 use crate::embedding::{EmbeddingTable, LookupBatch, QuantizedTable};
 use crate::gemm::{
-    fp16::gemm_f16_ctx, fp32::gemm_f32_ctx, i8acc16::gemm_i8_acc16_ctx,
-    i8acc32::gemm_i8_acc32_ctx, GemmCtx, OutputPipeline, PackedBF16, PackedBF32, PackedBI8,
-    PackedBI8Acc16,
+    fp16::gemm_f16_ep, fp32::gemm_f32_ep, i8acc16::gemm_i8_acc16_ep, i8acc32::gemm_i8_acc32_ep,
+    Epilogue, GemmCtx, OutputPipeline, PackedBF16, PackedBF32, PackedBI8, PackedBI8Acc16, TailOp,
 };
 use crate::quant::qparams::quantize_per_channel;
 use crate::quant::{Calibrator, QParams};
@@ -57,6 +56,7 @@ use crate::util::rng::Pcg32;
 
 use super::backend::{check_inputs, ExecBackend, LoadedArtifact};
 use super::manifest::{ArtifactMeta, Manifest};
+use super::plan::{CompiledPlan, FusionReport};
 use super::precision::Precision;
 use super::tensor::{DType, HostTensor};
 use super::weights::{read_weights_file, NamedTensor};
@@ -224,20 +224,31 @@ impl FcLayer {
     /// fp32 activations with the layer's calibrated qparams first (into
     /// a reused thread-local scratch — no steady-state allocation).
     pub fn forward(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        self.forward_ep(x, m, &[], out)
+    }
+
+    /// [`FcLayer::forward`] with a folded elementwise tail applied at
+    /// kernel write-out (compiled-plan epilogue fusion): every output
+    /// element passes through the output pipeline and then each
+    /// [`TailOp`] in order before it is stored, so an
+    /// `fc -> unary -> binary` chain executes as one kernel pass with
+    /// no intermediate materialization.
+    pub fn forward_ep(&self, x: &[f32], m: usize, tail: &[TailOp<'_>], out: &mut [f32]) {
         assert_eq!(x.len(), m * self.k);
         assert_eq!(out.len(), m * self.n);
+        let ep = Epilogue { pipe: &self.pipe, tail };
         match &self.kernel {
-            FcKernel::F32(p) => gemm_f32_ctx(&self.ctx, x, m, p, &self.pipe, out),
-            FcKernel::F16(p) => gemm_f16_ctx(&self.ctx, x, m, p, &self.pipe, out),
+            FcKernel::F32(p) => gemm_f32_ep(&self.ctx, x, m, p, &ep, out),
+            FcKernel::F16(p) => gemm_f16_ep(&self.ctx, x, m, p, &ep, out),
             FcKernel::I8 { packed, x_qp } => QUANT_SCRATCH.with(|buf| {
                 let mut xq = buf.borrow_mut();
                 x_qp.quantize_into(x, &mut xq);
-                gemm_i8_acc32_ctx(&self.ctx, &xq, m, packed, &self.pipe, out);
+                gemm_i8_acc32_ep(&self.ctx, &xq, m, packed, &ep, out);
             }),
             FcKernel::I8Acc16 { packed, x_qp } => QUANT_SCRATCH.with(|buf| {
                 let mut xq = buf.borrow_mut();
                 x_qp.quantize_into(x, &mut xq);
-                gemm_i8_acc16_ctx(&self.ctx, &xq, m, packed, &self.pipe, out);
+                gemm_i8_acc16_ep(&self.ctx, &xq, m, packed, &ep, out);
             }),
         }
     }
@@ -279,8 +290,10 @@ impl Activation {
     }
 }
 
+/// Elementwise unary op the interpreter (and the compiled-plan tail
+/// lowering) dispatches on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum UnaryFn {
+pub(crate) enum UnaryFn {
     Relu,
     Sigmoid,
     Tanh,
@@ -308,8 +321,9 @@ impl UnaryFn {
     }
 }
 
+/// Elementwise binary op (same dispatch story as [`UnaryFn`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum BinaryFn {
+pub(crate) enum BinaryFn {
     Add,
     Mul,
 }
@@ -326,7 +340,7 @@ impl BinaryFn {
 
 /// One parsed program op (the manifest's JSON form).
 #[derive(Debug, Clone)]
-enum OpSpec {
+pub(crate) enum OpSpec {
     Fc { out: String, input: String, w: String, b: Option<String>, act: Activation },
     Conv2d {
         out: String,
@@ -460,9 +474,9 @@ impl PoolTable {
 /// One planned f32 register. `parent` makes the slot a view of another
 /// (flatten aliases, in-place unary); buffer ownership follows the
 /// parent chain to the canonical slot.
-struct Slot {
-    len: usize,
-    parent: Option<usize>,
+pub(crate) struct Slot {
+    pub(crate) len: usize,
+    pub(crate) parent: Option<usize>,
 }
 
 /// Where each artifact input lands in the arena.
@@ -473,8 +487,8 @@ enum InputDst {
 
 /// Build-time resolution of register names to dense arena slots, with
 /// every buffer size precomputed from the artifact's fixed shapes.
-struct Plan {
-    slots: Vec<Slot>,
+pub(crate) struct Plan {
+    pub(crate) slots: Vec<Slot>,
     /// i32 index inputs (no op produces integers)
     int_lens: Vec<usize>,
     input_dst: Vec<InputDst>,
@@ -486,7 +500,7 @@ struct Plan {
 }
 
 impl Plan {
-    fn canon(&self, mut s: usize) -> usize {
+    pub(crate) fn canon(&self, mut s: usize) -> usize {
         while let Some(p) = self.slots[s].parent {
             s = p;
         }
@@ -495,7 +509,7 @@ impl Plan {
 }
 
 /// im2col geometry, fixed at build time.
-struct ConvGeom {
+pub(crate) struct ConvGeom {
     b: usize,
     c: usize,
     h: usize,
@@ -506,11 +520,11 @@ struct ConvGeom {
     plo: usize,
     ho: usize,
     wo: usize,
-    rows: usize,
+    pub(crate) rows: usize,
 }
 
 /// Compiled op: packed weights + canonical arena slot indices.
-enum CompiledOp {
+pub(crate) enum CompiledOp {
     Fc {
         out: usize,
         input: usize,
@@ -551,15 +565,15 @@ enum CompiledOp {
 /// per canonical slot plus per-embed-op lookup batches. All sizes are
 /// fixed at build time, so steady-state execution never allocates.
 pub struct ExecArena {
-    bufs: Vec<Vec<f32>>,
+    pub(crate) bufs: Vec<Vec<f32>>,
     int_bufs: Vec<Vec<i32>>,
     lookups: Vec<LookupBatch>,
 }
 
-struct CompiledProgram {
-    ops: Vec<CompiledOp>,
+pub(crate) struct CompiledProgram {
+    pub(crate) ops: Vec<CompiledOp>,
     tables: Vec<PoolTable>,
-    plan: Plan,
+    pub(crate) plan: Plan,
 }
 
 fn weight<'a>(
@@ -1008,15 +1022,9 @@ impl CompiledProgram {
         arena: &mut ExecArena,
         mut observers: Option<&mut HashMap<usize, Calibrator>>,
     ) -> Result<()> {
-        check_inputs(meta, inputs)?;
-        for (t, dst) in inputs.iter().zip(&self.plan.input_dst) {
-            match *dst {
-                InputDst::F32(s) => t.copy_f32_into(&mut arena.bufs[s])?,
-                InputDst::I32(s) => t.copy_i32_into(&mut arena.int_bufs[s])?,
-            }
-        }
+        self.decode_inputs(meta, inputs, arena)?;
 
-        for op in &self.ops {
+        for (i, op) in self.ops.iter().enumerate() {
             match op {
                 CompiledOp::Fc { out, input, m, layer, post, spec_idx } => {
                     debug_assert_ne!(out, input);
@@ -1056,99 +1064,143 @@ impl CompiledProgram {
                     arena.bufs[*gbuf] = gb;
                     arena.bufs[*out] = o;
                 }
-                CompiledOp::EmbedPool { out, indices, table, slice, nt, bags, pool, rows, lb } => {
-                    // fill + validate the reusable lookup batch before
-                    // touching the output buffer, so failed batches
-                    // leave the arena intact
-                    {
-                        let idx = &arena.int_bufs[*indices];
-                        let lbatch = &mut arena.lookups[*lb];
-                        lbatch.indices.clear();
-                        match slice {
-                            Some(t) => {
-                                for bi in 0..*bags {
-                                    let base = (bi * nt + t) * pool;
-                                    for &v in &idx[base..base + pool] {
-                                        ensure!(
-                                            v >= 0 && (v as usize) < *rows,
-                                            "embedding index {v} out of range 0..{rows}"
-                                        );
-                                        lbatch.indices.push(v as u32);
-                                    }
-                                }
-                            }
-                            None => {
-                                for &v in idx.iter() {
-                                    ensure!(
-                                        v >= 0 && (v as usize) < *rows,
-                                        "embedding index {v} out of range 0..{rows}"
-                                    );
-                                    lbatch.indices.push(v as u32);
-                                }
-                            }
-                        }
-                    }
-                    let mut o = mem::take(&mut arena.bufs[*out]);
-                    let res = self.tables[*table].pool(&arena.lookups[*lb], &mut o);
-                    arena.bufs[*out] = o;
-                    res?;
-                }
-                CompiledOp::Concat { out, inputs, b, widths } => {
-                    let mut o = mem::take(&mut arena.bufs[*out]);
-                    {
-                        let total: usize = widths.iter().sum();
-                        for bi in 0..*b {
-                            let mut off = 0usize;
-                            for (s, w) in inputs.iter().zip(widths) {
-                                let src = &arena.bufs[*s];
-                                o[bi * total + off..bi * total + off + w]
-                                    .copy_from_slice(&src[bi * w..(bi + 1) * w]);
-                                off += w;
-                            }
-                        }
-                    }
-                    arena.bufs[*out] = o;
-                }
-                CompiledOp::Unary { out, input, f, in_place } => {
-                    if *in_place {
-                        // out aliases input's buffer (final reader)
-                        f.apply(&mut arena.bufs[*out]);
-                    } else {
-                        let mut o = mem::take(&mut arena.bufs[*out]);
-                        o.copy_from_slice(&arena.bufs[*input]);
-                        f.apply(&mut o);
-                        arena.bufs[*out] = o;
-                    }
-                }
-                CompiledOp::Binary { out, a, b, f } => {
-                    let mut o = mem::take(&mut arena.bufs[*out]);
-                    {
-                        let xa = &arena.bufs[*a];
-                        let xb = &arena.bufs[*b];
-                        match f {
-                            BinaryFn::Add => {
-                                for ((dst, x), y) in o.iter_mut().zip(xa.iter()).zip(xb.iter()) {
-                                    *dst = x + y;
-                                }
-                            }
-                            BinaryFn::Mul => {
-                                for ((dst, x), y) in o.iter_mut().zip(xa.iter()).zip(xb.iter()) {
-                                    *dst = x * y;
-                                }
-                            }
-                        }
-                    }
-                    arena.bufs[*out] = o;
-                }
+                CompiledOp::EmbedPool { .. } => self.exec_embed_at(i, arena)?,
+                CompiledOp::Concat { .. } => self.exec_concat_at(i, arena),
+                CompiledOp::Unary { .. } => self.exec_unary_at(i, arena),
+                CompiledOp::Binary { .. } => self.exec_binary_at(i, arena),
             }
         }
         Ok(())
+    }
+
+    /// Decode the artifact inputs into their arena slots (shared by the
+    /// interpreter and the compiled plan).
+    pub(crate) fn decode_inputs(
+        &self,
+        meta: &ArtifactMeta,
+        inputs: &[HostTensor],
+        arena: &mut ExecArena,
+    ) -> Result<()> {
+        check_inputs(meta, inputs)?;
+        for (t, dst) in inputs.iter().zip(&self.plan.input_dst) {
+            match *dst {
+                InputDst::F32(s) => t.copy_f32_into(&mut arena.bufs[s])?,
+                InputDst::I32(s) => t.copy_i32_into(&mut arena.int_bufs[s])?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute the `embed_pool` op at index `i` (shared by the
+    /// interpreter loop and the compiled plan's step table).
+    pub(crate) fn exec_embed_at(&self, i: usize, arena: &mut ExecArena) -> Result<()> {
+        let CompiledOp::EmbedPool { out, indices, table, slice, nt, bags, pool, rows, lb } =
+            &self.ops[i]
+        else {
+            unreachable!("exec_embed_at bound to a non-embed op");
+        };
+        // fill + validate the reusable lookup batch before touching the
+        // output buffer, so failed batches leave the arena intact
+        {
+            let idx = &arena.int_bufs[*indices];
+            let lbatch = &mut arena.lookups[*lb];
+            lbatch.indices.clear();
+            match slice {
+                Some(t) => {
+                    for bi in 0..*bags {
+                        let base = (bi * nt + t) * pool;
+                        for &v in &idx[base..base + pool] {
+                            ensure!(
+                                v >= 0 && (v as usize) < *rows,
+                                "embedding index {v} out of range 0..{rows}"
+                            );
+                            lbatch.indices.push(v as u32);
+                        }
+                    }
+                }
+                None => {
+                    for &v in idx.iter() {
+                        ensure!(
+                            v >= 0 && (v as usize) < *rows,
+                            "embedding index {v} out of range 0..{rows}"
+                        );
+                        lbatch.indices.push(v as u32);
+                    }
+                }
+            }
+        }
+        let mut o = mem::take(&mut arena.bufs[*out]);
+        let res = self.tables[*table].pool(&arena.lookups[*lb], &mut o);
+        arena.bufs[*out] = o;
+        res
+    }
+
+    /// Execute the `concat` op at index `i`.
+    pub(crate) fn exec_concat_at(&self, i: usize, arena: &mut ExecArena) {
+        let CompiledOp::Concat { out, inputs, b, widths } = &self.ops[i] else {
+            unreachable!("exec_concat_at bound to a non-concat op");
+        };
+        let mut o = mem::take(&mut arena.bufs[*out]);
+        {
+            let total: usize = widths.iter().sum();
+            for bi in 0..*b {
+                let mut off = 0usize;
+                for (s, w) in inputs.iter().zip(widths) {
+                    let src = &arena.bufs[*s];
+                    o[bi * total + off..bi * total + off + w]
+                        .copy_from_slice(&src[bi * w..(bi + 1) * w]);
+                    off += w;
+                }
+            }
+        }
+        arena.bufs[*out] = o;
+    }
+
+    /// Execute the `unary` op at index `i`.
+    pub(crate) fn exec_unary_at(&self, i: usize, arena: &mut ExecArena) {
+        let CompiledOp::Unary { out, input, f, in_place } = &self.ops[i] else {
+            unreachable!("exec_unary_at bound to a non-unary op");
+        };
+        if *in_place {
+            // out aliases input's buffer (final reader)
+            f.apply(&mut arena.bufs[*out]);
+        } else {
+            let mut o = mem::take(&mut arena.bufs[*out]);
+            o.copy_from_slice(&arena.bufs[*input]);
+            f.apply(&mut o);
+            arena.bufs[*out] = o;
+        }
+    }
+
+    /// Execute the `binary` op at index `i`.
+    pub(crate) fn exec_binary_at(&self, i: usize, arena: &mut ExecArena) {
+        let CompiledOp::Binary { out, a, b, f } = &self.ops[i] else {
+            unreachable!("exec_binary_at bound to a non-binary op");
+        };
+        let mut o = mem::take(&mut arena.bufs[*out]);
+        {
+            let xa = &arena.bufs[*a];
+            let xb = &arena.bufs[*b];
+            match f {
+                BinaryFn::Add => {
+                    for ((dst, x), y) in o.iter_mut().zip(xa.iter()).zip(xb.iter()) {
+                        *dst = x + y;
+                    }
+                }
+                BinaryFn::Mul => {
+                    for ((dst, x), y) in o.iter_mut().zip(xa.iter()).zip(xb.iter()) {
+                        *dst = x * y;
+                    }
+                }
+            }
+        }
+        arena.bufs[*out] = o;
     }
 }
 
 /// im2col into the preallocated scratch (padding stays zero — see the
 /// call site).
-fn im2col(x: &[f32], g: &ConvGeom, k_per_row: usize, col: &mut [f32]) {
+pub(crate) fn im2col(x: &[f32], g: &ConvGeom, k_per_row: usize, col: &mut [f32]) {
     for bi in 0..g.b {
         for y in 0..g.ho {
             for xx in 0..g.wo {
@@ -1173,7 +1225,7 @@ fn im2col(x: &[f32], g: &ConvGeom, k_per_row: usize, col: &mut [f32]) {
 }
 
 /// `[B*ho*wo, co]` GEMM output back to NCHW.
-fn nchw_scatter(gemm_out: &[f32], g: &ConvGeom, n: usize, out: &mut [f32]) {
+pub(crate) fn nchw_scatter(gemm_out: &[f32], g: &ConvGeom, n: usize, out: &mut [f32]) {
     for bi in 0..g.b {
         for y in 0..g.ho {
             for xx in 0..g.wo {
@@ -1424,8 +1476,39 @@ pub(crate) fn build_artifact(
             )?
         }
     };
+    let plan = CompiledPlan::compile(&spec, &program, &meta);
     let arena = Mutex::new(program.new_arena());
-    Ok(NativeArtifact { meta, program, arena, load_ms: t0.elapsed().as_secs_f64() * 1e3 })
+    Ok(NativeArtifact {
+        meta,
+        program,
+        plan,
+        interpret: exec_interpret(),
+        index_bounds,
+        arena,
+        load_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Build a native artifact directly from in-memory parts — the
+/// differential-fuzzing / test entry: no manifest directory, no sparse
+/// tier. Int8 precisions still calibrate through an internal fp32
+/// build, exactly as [`NativeBackend::load`] does.
+pub fn build_native_artifact(
+    meta: ArtifactMeta,
+    named: &[NamedTensor],
+    precision: Precision,
+    threads: usize,
+) -> Result<NativeArtifact> {
+    build_artifact(meta, named, precision, None, threads)
+}
+
+/// `DCINFER_EXEC=interpret` escape hatch, checked once per artifact
+/// load: route execution through the op-by-op interpreter instead of
+/// the compiled plan. The interpreter is the differential-fuzzing
+/// oracle ([`NativeArtifact::run_interpreted`]); this flag flips whole
+/// serving planes onto it without touching code.
+fn exec_interpret() -> bool {
+    std::env::var("DCINFER_EXEC").map(|v| v == "interpret").unwrap_or(false)
 }
 
 /// A compiled-and-packed native artifact with its persistent execution
@@ -1434,6 +1517,13 @@ pub(crate) fn build_artifact(
 pub struct NativeArtifact {
     meta: ArtifactMeta,
     program: CompiledProgram,
+    /// Fused execution plan compiled at load time (the default path).
+    plan: CompiledPlan,
+    /// `DCINFER_EXEC=interpret` at load time: dispatch through the
+    /// op-by-op interpreter instead of the plan.
+    interpret: bool,
+    /// Smallest table each i32 input feeds (for input synthesis).
+    index_bounds: HashMap<String, usize>,
     arena: Mutex<ExecArena>,
     load_ms: f64,
 }
@@ -1451,10 +1541,15 @@ impl NativeArtifact {
     /// Execute into the persistent arena without materializing output
     /// tensors: the zero-steady-state-allocation hot path that
     /// [`LoadedArtifact::run`] wraps. `ablation_alloc` measures this
-    /// entry point with a counting allocator.
+    /// entry point with a counting allocator. Runs the compiled plan
+    /// unless the artifact was loaded under `DCINFER_EXEC=interpret`.
     pub fn execute_steady(&self, inputs: &[HostTensor]) -> Result<()> {
         let mut arena = self.lock_arena();
-        self.program.execute_in(&self.meta, inputs, &mut arena, None)
+        if self.interpret {
+            self.program.execute_in(&self.meta, inputs, &mut arena, None)
+        } else {
+            self.plan.execute(&self.program, &self.meta, inputs, &mut arena)
+        }
     }
 
     /// Execute with a freshly allocated arena, discarded afterwards —
@@ -1465,6 +1560,44 @@ impl NativeArtifact {
         let mut arena = self.program.new_arena();
         self.program.execute_in(&self.meta, inputs, &mut arena, None)
     }
+
+    /// What the plan compiler fused at load time (per-chain signatures
+    /// and roofline estimates) — the §3.3 mining pass reported against
+    /// this artifact's op program.
+    pub fn fusion_report(&self) -> &FusionReport {
+        self.plan.report()
+    }
+
+    /// Run through the compiled plan explicitly, regardless of the
+    /// `DCINFER_EXEC` mode the artifact was loaded under.
+    pub fn run_compiled(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let mut arena = self.lock_arena();
+        self.plan.execute(&self.program, &self.meta, inputs, &mut arena)?;
+        Ok(self.materialize(&arena))
+    }
+
+    /// Run through the op-by-op interpreter explicitly — the
+    /// differential-fuzzing oracle the compiled plan is sealed against.
+    pub fn run_interpreted(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let mut arena = self.lock_arena();
+        self.program.execute_in(&self.meta, inputs, &mut arena, None)?;
+        Ok(self.materialize(&arena))
+    }
+
+    /// Deterministic synthetic inputs matching the artifact's input
+    /// metas (i32 index inputs draw below the smallest table they
+    /// feed) — what calibration uses, exposed for benches and fuzzers.
+    pub fn synth_inputs(&self, seed: u64) -> Vec<HostTensor> {
+        synth_calibration_inputs(&self.meta, &self.index_bounds, seed)
+    }
+
+    fn materialize(&self, arena: &ExecArena) -> Vec<HostTensor> {
+        let mut outs = Vec::with_capacity(self.meta.outputs.len());
+        for (om, src) in self.meta.outputs.iter().zip(&self.program.plan.output_src) {
+            outs.push(HostTensor::from_f32(&om.shape, &arena.bufs[*src]));
+        }
+        outs
+    }
 }
 
 impl LoadedArtifact for NativeArtifact {
@@ -1474,12 +1607,12 @@ impl LoadedArtifact for NativeArtifact {
 
     fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let mut arena = self.lock_arena();
-        self.program.execute_in(&self.meta, inputs, &mut arena, None)?;
-        let mut outs = Vec::with_capacity(self.meta.outputs.len());
-        for (om, src) in self.meta.outputs.iter().zip(&self.program.plan.output_src) {
-            outs.push(HostTensor::from_f32(&om.shape, &arena.bufs[*src]));
+        if self.interpret {
+            self.program.execute_in(&self.meta, inputs, &mut arena, None)?;
+        } else {
+            self.plan.execute(&self.program, &self.meta, inputs, &mut arena)?;
         }
-        Ok(outs)
+        Ok(self.materialize(&arena))
     }
 
     fn load_ms(&self) -> f64 {

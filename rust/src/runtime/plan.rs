@@ -1,0 +1,711 @@
+//! Compiled execution plans: the op program lowered, at artifact load
+//! time, into a flat step table with fused GEMM epilogues (§3.2.3 /
+//! §3.3).
+//!
+//! The interpreter ([`super::native`]) walks the compiled op list and
+//! re-dispatches every op per batch; trailing elementwise ops
+//! (`relu`/`sigmoid`/`tanh`/`one_minus`, `add`/`mul`) each make a full
+//! extra pass over the producer's output buffer. The plan compiler
+//! removes both costs:
+//!
+//! - **Epilogue folding.** Chains mined from the op program
+//!   ([`crate::graph::miner::mine_program_chains`] — the §3.3
+//!   fusion-discovery pass, retargeted from the seed-era NetDef path
+//!   onto real artifact programs) are folded into the producer's GEMM
+//!   [`crate::gemm::Epilogue`]: each output element runs the whole
+//!   `fc -> unary -> binary` tail at kernel write-out, and the chain's
+//!   intermediate buffers are never materialized.
+//! - **Pre-resolved dispatch.** Every surviving op becomes one
+//!   `PlanStep`: a direct function pointer plus slot indices resolved
+//!   at compile time. Batch execution is a linear walk of the step
+//!   table — no name lookups, no per-op precision/ISA decisions.
+//!
+//! **Numerics contract.** Folding must be bit-identical to the
+//! interpreter at fp32/fp16: a folded tail applies exactly the same
+//! scalar functions, in the same op order, to exactly the same
+//! pipeline output value each element saw before — and GEMM
+//! accumulation order (k-ascending) is untouched, so fusion never
+//! changes summation order. Binary operand order is preserved through
+//! [`TailOp`]'s `swapped` flag (float add/mul are commutative except
+//! for NaN payload propagation, which we keep identical anyway). The
+//! differential fuzzer (`tests/plan_differential.rs`) seals this
+//! contract against the interpreter oracle, reachable at serving scope
+//! via the `DCINFER_EXEC=interpret` escape hatch.
+//!
+//! Fusion refusal rules (conservative, enforced at mine + lower time):
+//! chain members must immediately follow their producer; every chain
+//! intermediate must have exactly one consumer and must not be an
+//! artifact output; a binary folds only when exactly one operand is
+//! the chain value and the other predates the producer; conv chains
+//! fold unaries only (the NCHW scatter would remap a binary operand's
+//! indexing); tails are capped at [`MAX_TAIL`] ops.
+
+use std::collections::{HashMap, HashSet};
+use std::mem;
+
+use anyhow::Result;
+
+use crate::gemm::TailOp;
+use crate::graph::fusion::fusion_speedup;
+use crate::graph::miner::{mine_program_chains, ChainKind, MinedSubgraph, ProgramOp};
+use crate::graph::netdef::{Net, Node};
+use crate::models::OpClass;
+use crate::perfmodel::DeviceSpec;
+
+use super::manifest::ArtifactMeta;
+use super::native::{
+    im2col, nchw_scatter, BinaryFn, CompiledOp, CompiledProgram, ExecArena, OpSpec, UnaryFn,
+};
+use super::tensor::HostTensor;
+
+/// Epilogue tail capacity: the producer's own folded activation plus up
+/// to `MAX_TAIL - 1` mined chain members, applied from a fixed-size
+/// stack array so plan execution stays allocation-free.
+pub const MAX_TAIL: usize = 4;
+
+/// One folded tail op with its operands resolved to arena slots; bound
+/// to borrowed buffers ([`TailOp`]) at execution time.
+#[derive(Debug, Clone)]
+pub(crate) enum TailSpec {
+    /// Elementwise unary folded into the epilogue.
+    Unary(UnaryFn),
+    /// Elementwise binary: `operand` is the canonical arena slot of the
+    /// non-chain side; `swapped` records that the chain value was the
+    /// *right* operand, preserving the interpreter's operand order.
+    Binary { f: BinaryFn, operand: usize, swapped: bool },
+}
+
+impl TailSpec {
+    /// Bind to the arena's buffers for one batch.
+    #[inline(always)]
+    fn bind<'a>(&self, bufs: &'a [Vec<f32>]) -> TailOp<'a> {
+        match self {
+            TailSpec::Unary(f) => unary_tail(*f),
+            TailSpec::Binary { f, operand, swapped } => {
+                let xs = bufs[*operand].as_slice();
+                match f {
+                    BinaryFn::Add => TailOp::Add { operand: xs, swapped: *swapped },
+                    BinaryFn::Mul => TailOp::Mul { operand: xs, swapped: *swapped },
+                }
+            }
+        }
+    }
+}
+
+fn unary_tail(f: UnaryFn) -> TailOp<'static> {
+    match f {
+        UnaryFn::Relu => TailOp::Relu,
+        UnaryFn::Sigmoid => TailOp::Sigmoid,
+        UnaryFn::Tanh => TailOp::Tanh,
+        UnaryFn::OneMinus => TailOp::OneMinus,
+    }
+}
+
+/// Pre-resolved arguments of one plan step.
+#[derive(Debug, Clone)]
+pub(crate) enum StepArgs {
+    /// fc producer; `out` is the canonical slot the (possibly fused)
+    /// chain writes and `tail` is empty for unfused layers.
+    Fc { op: usize, out: usize, tail: Vec<TailSpec> },
+    /// conv2d producer (unary-only tails; applied pre-scatter).
+    Conv { op: usize, out: usize, tail: Vec<TailSpec> },
+    /// Pass-through op executed via the shared interpreter body.
+    Op { op: usize },
+}
+
+type StepFn = fn(&StepArgs, &CompiledProgram, &mut ExecArena) -> Result<()>;
+
+/// One step of a compiled plan: a direct function pointer plus its
+/// pre-resolved arguments. Dispatch is `(step.run)(..)` — no op-kind
+/// match, no name resolution, no per-batch decisions.
+pub(crate) struct PlanStep {
+    run: StepFn,
+    args: StepArgs,
+}
+
+/// One fused chain in a [`FusionReport`].
+#[derive(Debug, Clone)]
+pub struct FusedChain {
+    /// NetDef-style bucket signature, e.g. `FC>Elementwise>Elementwise`.
+    pub signature: String,
+    /// Chain members folded into the producer's epilogue.
+    pub folded: usize,
+    /// Roofline speedup estimate ([`crate::graph::fusion`]) for this
+    /// chain on the serving CPU — the §3.3 ranking model applied to a
+    /// chain we actually fused.
+    pub est_speedup: f64,
+}
+
+/// What the plan compiler did to one artifact's op program.
+#[derive(Debug, Clone)]
+pub struct FusionReport {
+    /// Artifact the plan was compiled for.
+    pub artifact: String,
+    /// Compiled ops before folding (what the interpreter executes).
+    pub interp_ops: usize,
+    /// Steps in the compiled plan (after folding).
+    pub plan_steps: usize,
+    /// fc/conv activations (sigmoid/tanh) folded from a separate
+    /// interpreter pass into the GEMM epilogue.
+    pub folded_activations: usize,
+    /// Mined chains folded into producer epilogues.
+    pub chains: Vec<FusedChain>,
+}
+
+impl FusionReport {
+    /// One-line human summary for benches and logs.
+    pub fn summary(&self) -> String {
+        if self.chains.is_empty() {
+            return format!(
+                "{}: {} ops -> {} steps, no fused chains",
+                self.artifact, self.interp_ops, self.plan_steps
+            );
+        }
+        let parts: Vec<String> = self
+            .chains
+            .iter()
+            .map(|c| format!("{} (+{} ops, est x{:.2})", c.signature, c.folded, c.est_speedup))
+            .collect();
+        format!(
+            "{}: {} ops -> {} steps; fused {}",
+            self.artifact,
+            self.interp_ops,
+            self.plan_steps,
+            parts.join(", ")
+        )
+    }
+}
+
+/// A compiled execution plan: the op program with fusable chains folded
+/// into GEMM epilogues and all dispatch pre-resolved into a flat step
+/// table. Compiled once per artifact load; executed per batch with
+/// zero heap allocations and zero per-op decisions.
+pub struct CompiledPlan {
+    steps: Vec<PlanStep>,
+    report: FusionReport,
+}
+
+/// Internal: one lowered (validated) chain.
+struct Lowered {
+    /// Compiled-op index of the producer.
+    producer: usize,
+    /// Canonical slot the fused step writes (the chain's final output).
+    out: usize,
+    tail: Vec<TailSpec>,
+    /// Compiled-op indices of the folded members, in chain order.
+    members: Vec<usize>,
+}
+
+impl CompiledPlan {
+    /// Lower `prog` into a step table, folding every chain
+    /// [`mine_program_chains`] finds in `spec` that survives slot-level
+    /// validation. Never fails: any chain that cannot be proven safe is
+    /// simply left unfused.
+    pub(crate) fn compile(
+        spec: &[OpSpec],
+        prog: &CompiledProgram,
+        meta: &ArtifactMeta,
+    ) -> CompiledPlan {
+        // spec index -> compiled-op index (flatten compiles away)
+        let mut op_of: Vec<Option<usize>> = Vec::with_capacity(spec.len());
+        let mut next = 0usize;
+        for s in spec {
+            if matches!(s, OpSpec::Flatten { .. }) {
+                op_of.push(None);
+            } else {
+                op_of.push(Some(next));
+                next += 1;
+            }
+        }
+        let aligned = next == prog.ops.len();
+        debug_assert!(aligned, "spec/compiled op count drift");
+
+        let mined = if aligned {
+            let view = program_view(spec);
+            let outputs: Vec<String> = meta.outputs.iter().map(|o| o.name.clone()).collect();
+            mine_program_chains(&view, &outputs, MAX_TAIL - 1)
+        } else {
+            Vec::new()
+        };
+
+        // --- lower mined chains to slot-level tails -------------------
+        let mut lowered: Vec<Lowered> = Vec::new();
+        'chains: for ch in &mined {
+            let Some(pidx) = op_of[ch.producer] else { continue };
+            let mut chain_slot = match &prog.ops[pidx] {
+                CompiledOp::Fc { out, .. } | CompiledOp::Conv2d { out, .. } => *out,
+                _ => continue,
+            };
+            let mut tail = Vec::with_capacity(ch.members.len());
+            let mut members = Vec::with_capacity(ch.members.len());
+            for &ms in &ch.members {
+                let Some(mi) = op_of[ms] else { continue 'chains };
+                match &prog.ops[mi] {
+                    CompiledOp::Unary { out, f, .. } => {
+                        tail.push(TailSpec::Unary(*f));
+                        chain_slot = *out; // == chain_slot when in place
+                    }
+                    CompiledOp::Binary { out, a, b, f } => {
+                        // exactly one operand must be the chain value
+                        let (operand, swapped) = if *a == chain_slot && *b != chain_slot {
+                            (*b, false)
+                        } else if *b == chain_slot && *a != chain_slot {
+                            (*a, true)
+                        } else {
+                            continue 'chains; // slot-level ambiguity: refuse
+                        };
+                        tail.push(TailSpec::Binary { f: *f, operand, swapped });
+                        chain_slot = *out;
+                    }
+                    _ => continue 'chains,
+                }
+                members.push(mi);
+            }
+            if !members.is_empty() {
+                lowered.push(Lowered { producer: pidx, out: chain_slot, tail, members });
+            }
+        }
+
+        // --- emit the step table --------------------------------------
+        let fused_at: HashMap<usize, usize> =
+            lowered.iter().enumerate().map(|(ci, l)| (l.producer, ci)).collect();
+        let member_of: HashSet<usize> =
+            lowered.iter().flat_map(|l| l.members.iter().copied()).collect();
+        let mut steps: Vec<PlanStep> = Vec::new();
+        let mut folded_activations = 0usize;
+        for (i, op) in prog.ops.iter().enumerate() {
+            if member_of.contains(&i) {
+                continue;
+            }
+            let (fused_out, tail) = match fused_at.get(&i) {
+                Some(&ci) => (Some(lowered[ci].out), lowered[ci].tail.clone()),
+                None => (None, Vec::new()),
+            };
+            let step = match op {
+                CompiledOp::Fc { out, post, .. } => {
+                    folded_activations += post.is_some() as usize;
+                    PlanStep {
+                        run: run_fc,
+                        args: StepArgs::Fc { op: i, out: fused_out.unwrap_or(*out), tail },
+                    }
+                }
+                CompiledOp::Conv2d { out, post, .. } => {
+                    folded_activations += post.is_some() as usize;
+                    PlanStep {
+                        run: run_conv,
+                        args: StepArgs::Conv { op: i, out: fused_out.unwrap_or(*out), tail },
+                    }
+                }
+                CompiledOp::EmbedPool { .. } => {
+                    PlanStep { run: run_embed, args: StepArgs::Op { op: i } }
+                }
+                CompiledOp::Concat { .. } => {
+                    PlanStep { run: run_concat, args: StepArgs::Op { op: i } }
+                }
+                CompiledOp::Unary { .. } => {
+                    PlanStep { run: run_unary, args: StepArgs::Op { op: i } }
+                }
+                CompiledOp::Binary { .. } => {
+                    PlanStep { run: run_binary, args: StepArgs::Op { op: i } }
+                }
+            };
+            steps.push(step);
+        }
+
+        let chains = lowered.iter().map(|l| chain_report(l, prog, meta)).collect();
+        let report = FusionReport {
+            artifact: meta.name.clone(),
+            interp_ops: prog.ops.len(),
+            plan_steps: steps.len(),
+            folded_activations,
+            chains,
+        };
+        CompiledPlan { steps, report }
+    }
+
+    /// Execute one batch through the step table into `arena`. Zero heap
+    /// allocations once the arena is warm — tails bind to borrowed
+    /// buffers through a fixed-size stack array.
+    pub(crate) fn execute(
+        &self,
+        prog: &CompiledProgram,
+        meta: &ArtifactMeta,
+        inputs: &[HostTensor],
+        arena: &mut ExecArena,
+    ) -> Result<()> {
+        prog.decode_inputs(meta, inputs, arena)?;
+        for step in &self.steps {
+            (step.run)(&step.args, prog, arena)?;
+        }
+        Ok(())
+    }
+
+    /// What the compiler fused (and an estimate of what it bought).
+    pub fn report(&self) -> &FusionReport {
+        &self.report
+    }
+}
+
+/// Reduce the parsed spec to the miner's program view: who writes what,
+/// who reads what, and which ops can host or join an epilogue chain.
+fn program_view(spec: &[OpSpec]) -> Vec<ProgramOp> {
+    spec.iter()
+        .map(|op| match op {
+            OpSpec::Fc { out, input, .. } => ProgramOp {
+                kind: ChainKind::Gemm,
+                out: out.clone(),
+                reads: vec![input.clone()],
+            },
+            OpSpec::Conv2d { out, input, .. } => ProgramOp {
+                kind: ChainKind::GemmScattered,
+                out: out.clone(),
+                reads: vec![input.clone()],
+            },
+            // indices are i32 side inputs, not foldable f32 values
+            OpSpec::EmbedPool { out, .. } => {
+                ProgramOp { kind: ChainKind::Opaque, out: out.clone(), reads: Vec::new() }
+            }
+            OpSpec::Concat { out, inputs } => {
+                ProgramOp { kind: ChainKind::Opaque, out: out.clone(), reads: inputs.clone() }
+            }
+            OpSpec::Unary { out, input, .. } => ProgramOp {
+                kind: ChainKind::Unary,
+                out: out.clone(),
+                reads: vec![input.clone()],
+            },
+            OpSpec::Binary { out, a, b, .. } => ProgramOp {
+                kind: ChainKind::Binary,
+                out: out.clone(),
+                reads: vec![a.clone(), b.clone()],
+            },
+            OpSpec::Flatten { out, input } => ProgramOp {
+                kind: ChainKind::Opaque,
+                out: out.clone(),
+                reads: vec![input.clone()],
+            },
+        })
+        .collect()
+}
+
+/// Build the per-chain report entry: a NetDef signature plus the §3.3
+/// roofline speedup estimate, via the revived [`crate::graph`] pass.
+fn chain_report(l: &Lowered, prog: &CompiledProgram, meta: &ArtifactMeta) -> FusedChain {
+    let slot_bytes = |s: usize| (prog.plan.slots[s].len * 4) as u64;
+    let (mut nodes, mut classes): (Vec<Node>, Vec<OpClass>) = (Vec::new(), Vec::new());
+    let push = |nodes: &mut Vec<Node>, classes: &mut Vec<OpClass>, cls, flops, bin, bout| {
+        let i = nodes.len();
+        nodes.push(Node {
+            op: cls,
+            name: format!("n{i}"),
+            flops,
+            bytes_in: bin,
+            bytes_out: bout,
+            inputs: if i == 0 { vec![] } else { vec![i - 1] },
+        });
+        classes.push(cls);
+    };
+    match &prog.ops[l.producer] {
+        CompiledOp::Fc { out, input, m, layer, .. } => {
+            let wb = weight_bytes_per_elem(meta.precision);
+            let flops = (2 * m * layer.n * layer.k) as u64;
+            let bin = slot_bytes(*input) + (layer.n * layer.k) as u64 * wb;
+            push(&mut nodes, &mut classes, OpClass::Fc, flops, bin, slot_bytes(*out));
+        }
+        CompiledOp::Conv2d { out, input, layer, geom, .. } => {
+            let wb = weight_bytes_per_elem(meta.precision);
+            let flops = (2 * geom.rows * layer.n * layer.k) as u64;
+            let bin = slot_bytes(*input) + (layer.n * layer.k) as u64 * wb;
+            push(&mut nodes, &mut classes, OpClass::Conv, flops, bin, slot_bytes(*out));
+        }
+        _ => {}
+    }
+    let mut extra_operand_bytes = 0u64;
+    for &mi in &l.members {
+        match &prog.ops[mi] {
+            CompiledOp::Unary { out, .. } => {
+                let b = slot_bytes(*out);
+                push(&mut nodes, &mut classes, OpClass::Elementwise, b / 4, b, b);
+            }
+            CompiledOp::Binary { out, a, b, .. } => {
+                let bo = slot_bytes(*out);
+                let operand = slot_bytes(*a).min(slot_bytes(*b));
+                extra_operand_bytes += operand;
+                push(&mut nodes, &mut classes, OpClass::Elementwise, bo / 4, 2 * bo, bo);
+            }
+            _ => {}
+        }
+    }
+    let net = Net { name: meta.name.clone(), nodes };
+    let idx: Vec<usize> = (0..net.nodes.len()).collect();
+    let signature = net.chain_signature(&idx);
+    let intermediate: u64 =
+        net.nodes[..net.nodes.len().saturating_sub(1)].iter().map(|n| n.bytes_out).sum();
+    let sub = MinedSubgraph {
+        signature: signature.clone(),
+        ops: classes,
+        frequency: 1.0,
+        avg_flops: net.nodes.iter().map(|n| n.flops).sum::<u64>() as f64,
+        avg_bytes_in: (net.nodes[0].bytes_in + extra_operand_bytes) as f64,
+        avg_bytes_out: net.nodes.last().map(|n| n.bytes_out).unwrap_or(0) as f64,
+        avg_intermediate_bytes: intermediate as f64,
+    };
+    let (t_unfused, t_fused) = fusion_speedup(&sub, &DeviceSpec::xeon_fp32());
+    FusedChain {
+        signature,
+        folded: l.members.len(),
+        est_speedup: t_unfused / t_fused.max(1e-30),
+    }
+}
+
+fn weight_bytes_per_elem(p: crate::runtime::Precision) -> u64 {
+    match p {
+        crate::runtime::Precision::Fp32 => 4,
+        crate::runtime::Precision::Fp16 => 2,
+        _ => 1,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Step executors (direct function pointers in the step table)
+// ---------------------------------------------------------------------------
+
+fn run_fc(args: &StepArgs, prog: &CompiledProgram, arena: &mut ExecArena) -> Result<()> {
+    let StepArgs::Fc { op, out, tail } = args else {
+        unreachable!("run_fc bound to non-fc args");
+    };
+    let CompiledOp::Fc { input, m, layer, post, .. } = &prog.ops[*op] else {
+        unreachable!("fc step bound to non-fc op");
+    };
+    debug_assert_ne!(out, input, "fused fc output must not alias its input");
+    let mut o = mem::take(&mut arena.bufs[*out]);
+    {
+        let x = &arena.bufs[*input];
+        let mut ops = [TailOp::Relu; MAX_TAIL];
+        let mut nt = 0usize;
+        if let Some(f) = post {
+            ops[nt] = unary_tail(*f);
+            nt += 1;
+        }
+        for t in tail {
+            ops[nt] = t.bind(&arena.bufs);
+            nt += 1;
+        }
+        layer.forward_ep(x, *m, &ops[..nt], &mut o);
+    }
+    arena.bufs[*out] = o;
+    Ok(())
+}
+
+fn run_conv(args: &StepArgs, prog: &CompiledProgram, arena: &mut ExecArena) -> Result<()> {
+    let StepArgs::Conv { op, out, tail } = args else {
+        unreachable!("run_conv bound to non-conv args");
+    };
+    let CompiledOp::Conv2d { input, layer, post, geom, col, gbuf, .. } = &prog.ops[*op] else {
+        unreachable!("conv step bound to non-conv op");
+    };
+    let mut colb = mem::take(&mut arena.bufs[*col]);
+    let mut gb = mem::take(&mut arena.bufs[*gbuf]);
+    let mut o = mem::take(&mut arena.bufs[*out]);
+    {
+        let x = &arena.bufs[*input];
+        im2col(x, geom, layer.k, &mut colb);
+        // unary-only tails commute elementwise with the NCHW scatter,
+        // so the fold applies in gemm (pre-scatter) order — exactly
+        // where the interpreter applies `post`
+        let mut ops = [TailOp::Relu; MAX_TAIL];
+        let mut nt = 0usize;
+        if let Some(f) = post {
+            ops[nt] = unary_tail(*f);
+            nt += 1;
+        }
+        for t in tail {
+            ops[nt] = t.bind(&arena.bufs);
+            nt += 1;
+        }
+        layer.forward_ep(&colb, geom.rows, &ops[..nt], &mut gb);
+        nchw_scatter(&gb, geom, layer.n, &mut o);
+    }
+    arena.bufs[*col] = colb;
+    arena.bufs[*gbuf] = gb;
+    arena.bufs[*out] = o;
+    Ok(())
+}
+
+fn run_embed(args: &StepArgs, prog: &CompiledProgram, arena: &mut ExecArena) -> Result<()> {
+    let StepArgs::Op { op } = args else {
+        unreachable!("run_embed bound to producer args");
+    };
+    prog.exec_embed_at(*op, arena)
+}
+
+fn run_concat(args: &StepArgs, prog: &CompiledProgram, arena: &mut ExecArena) -> Result<()> {
+    let StepArgs::Op { op } = args else {
+        unreachable!("run_concat bound to producer args");
+    };
+    prog.exec_concat_at(*op, arena);
+    Ok(())
+}
+
+fn run_unary(args: &StepArgs, prog: &CompiledProgram, arena: &mut ExecArena) -> Result<()> {
+    let StepArgs::Op { op } = args else {
+        unreachable!("run_unary bound to producer args");
+    };
+    prog.exec_unary_at(*op, arena);
+    Ok(())
+}
+
+fn run_binary(args: &StepArgs, prog: &CompiledProgram, arena: &mut ExecArena) -> Result<()> {
+    let StepArgs::Op { op } = args else {
+        unreachable!("run_binary bound to producer args");
+    };
+    prog.exec_binary_at(*op, arena);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::runtime::manifest::TensorMeta;
+    use crate::runtime::native::build_native_artifact;
+    use crate::runtime::weights::NamedTensor;
+    use crate::runtime::{ArtifactMeta, HostTensor, Precision};
+    use crate::util::json::Json;
+    use crate::util::rng::Pcg32;
+
+    fn named(name: &str, shape: &[usize], rng: &mut Pcg32) -> NamedTensor {
+        let mut data = vec![0f32; shape.iter().product()];
+        rng.fill_normal(&mut data, 0.0, 0.5);
+        NamedTensor { name: name.to_string(), tensor: HostTensor::from_f32(shape, &data) }
+    }
+
+    fn meta_with(
+        inputs: Vec<TensorMeta>,
+        outputs: Vec<TensorMeta>,
+        batch: usize,
+        program: &str,
+    ) -> ArtifactMeta {
+        ArtifactMeta {
+            name: "plan_t".into(),
+            hlo: "plan_t.hlo.txt".into(),
+            model: None,
+            weights: None,
+            weight_params: vec![],
+            inputs,
+            outputs,
+            batch,
+            precision: Precision::Fp32,
+            program: Json::parse(program).unwrap(),
+        }
+    }
+
+    fn tm(name: &str, shape: &[usize]) -> TensorMeta {
+        TensorMeta { name: name.into(), dtype: crate::runtime::DType::F32, shape: shape.to_vec() }
+    }
+
+    fn bits(ts: &[HostTensor]) -> Vec<Vec<u32>> {
+        ts.iter()
+            .map(|t| t.as_f32().unwrap().iter().map(|v| v.to_bits()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn gru_style_chain_folds_and_matches_interpreter_bitwise() {
+        let mut rng = Pcg32::seeded(71);
+        let weights = vec![
+            named("wx", &[6, 4], &mut rng),
+            named("bx", &[6], &mut rng),
+            named("wh", &[6, 4], &mut rng),
+            named("wo", &[3, 6], &mut rng),
+        ];
+        let prog = r#"[
+            {"op": "fc", "out": "hx", "in": "x", "w": "wx", "b": "bx", "act": "none"},
+            {"op": "fc", "out": "hh", "in": "h", "w": "wh", "act": "none"},
+            {"op": "binary", "fn": "add", "out": "pre", "a": "hx", "b": "hh"},
+            {"op": "unary", "fn": "tanh", "out": "hn", "in": "pre"},
+            {"op": "fc", "out": "y", "in": "hn", "w": "wo", "act": "none"}
+        ]"#;
+        let meta = meta_with(
+            vec![tm("x", &[2, 4]), tm("h", &[2, 4])],
+            vec![tm("y", &[2, 3]), tm("hn", &[2, 6])],
+            2,
+            prog,
+        );
+        let art = build_native_artifact(meta, &weights, Precision::Fp32, 1).unwrap();
+        let rep = art.fusion_report();
+        assert_eq!(rep.chains.len(), 1, "{}", rep.summary());
+        assert_eq!(rep.chains[0].signature, "FC>Elementwise>Elementwise");
+        assert_eq!(rep.chains[0].folded, 2);
+        assert_eq!(rep.plan_steps, rep.interp_ops - 2);
+        let inputs = art.synth_inputs(11);
+        let a = art.run_compiled(&inputs).unwrap();
+        let b = art.run_interpreted(&inputs).unwrap();
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn chain_value_consumed_twice_refuses_fusion_but_still_matches() {
+        let mut rng = Pcg32::seeded(72);
+        let weights = vec![named("w", &[4, 4], &mut rng)];
+        // t is read by both the unary and the binary: no sole consumer,
+        // so nothing folds — and both engines still agree bitwise.
+        let prog = r#"[
+            {"op": "fc", "out": "t", "in": "x", "w": "w", "act": "none"},
+            {"op": "unary", "fn": "sigmoid", "out": "s", "in": "t"},
+            {"op": "binary", "fn": "mul", "out": "y", "a": "s", "b": "t"}
+        ]"#;
+        let meta =
+            meta_with(vec![tm("x", &[1, 4])], vec![tm("y", &[1, 4])], 1, prog);
+        let art = build_native_artifact(meta, &weights, Precision::Fp32, 1).unwrap();
+        assert!(art.fusion_report().chains.is_empty(), "{}", art.fusion_report().summary());
+        let inputs = art.synth_inputs(5);
+        assert_eq!(
+            bits(&art.run_compiled(&inputs).unwrap()),
+            bits(&art.run_interpreted(&inputs).unwrap())
+        );
+    }
+
+    #[test]
+    fn conv_folds_trailing_unary_and_matches_interpreter_bitwise() {
+        let mut rng = Pcg32::seeded(73);
+        let weights = vec![named("cw", &[2, 1, 3, 3], &mut rng), named("cb", &[2], &mut rng)];
+        let prog = r#"[
+            {"op": "conv2d", "out": "c", "in": "img", "w": "cw", "b": "cb", "act": "relu",
+             "stride": 1, "pad": [1, 1]},
+            {"op": "unary", "fn": "tanh", "out": "y", "in": "c"}
+        ]"#;
+        let meta = meta_with(
+            vec![tm("img", &[1, 1, 5, 5])],
+            vec![tm("y", &[1, 2, 5, 5])],
+            1,
+            prog,
+        );
+        let art = build_native_artifact(meta, &weights, Precision::Fp32, 1).unwrap();
+        let rep = art.fusion_report();
+        assert_eq!(rep.chains.len(), 1, "{}", rep.summary());
+        assert_eq!(rep.chains[0].signature, "Conv>Elementwise");
+        let inputs = art.synth_inputs(7);
+        assert_eq!(
+            bits(&art.run_compiled(&inputs).unwrap()),
+            bits(&art.run_interpreted(&inputs).unwrap())
+        );
+    }
+
+    #[test]
+    fn folded_activation_counts_and_speedup_estimates_are_sane() {
+        let mut rng = Pcg32::seeded(74);
+        let weights = vec![named("w", &[4, 4], &mut rng), named("w2", &[2, 4], &mut rng)];
+        let prog = r#"[
+            {"op": "fc", "out": "t", "in": "x", "w": "w", "act": "sigmoid"},
+            {"op": "fc", "out": "y", "in": "t", "w": "w2", "act": "none"},
+            {"op": "unary", "fn": "relu", "out": "z", "in": "y"}
+        ]"#;
+        let meta =
+            meta_with(vec![tm("x", &[1, 4])], vec![tm("z", &[1, 2])], 1, prog);
+        let art = build_native_artifact(meta, &weights, Precision::Fp32, 1).unwrap();
+        let rep = art.fusion_report();
+        assert_eq!(rep.folded_activations, 1);
+        assert_eq!(rep.chains.len(), 1);
+        // memory-bound tiny chain: the roofline estimate must be >= 1
+        assert!(rep.chains[0].est_speedup >= 1.0, "{}", rep.chains[0].est_speedup);
+        assert!(rep.summary().contains("fused"));
+    }
+}

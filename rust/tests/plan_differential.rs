@@ -1,0 +1,355 @@
+//! Differential fuzzing: compiled plans vs the interpreter oracle.
+//!
+//! Generates ~2k random valid op programs — random shapes including
+//! degenerate dims (width 1, M=1, K=1), random unary/binary chains,
+//! dead inputs, aliasing `flatten`, occasional conv prologues and
+//! embedding lookups — builds each as a native artifact at one of the
+//! four precisions, and asserts the compiled plan's outputs are
+//! bit-identical to the interpreter's (fp32/fp16), falling back to the
+//! precision's SQNR bound for the int8 paths. This is the seal on the
+//! epilogue-folding numerics contract: fusion must not change what any
+//! element sees.
+
+use std::collections::HashMap;
+
+use dcinfer::quant::sqnr_db;
+use dcinfer::runtime::{
+    build_native_artifact, ArtifactMeta, DType, HostTensor, NamedTensor, Precision, TensorMeta,
+};
+use dcinfer::util::json::Json;
+use dcinfer::util::rng::Pcg32;
+
+const CASES: usize = 2048;
+
+/// One generated case: everything `build_native_artifact` needs.
+struct Case {
+    meta: ArtifactMeta,
+    weights: Vec<NamedTensor>,
+}
+
+/// A dense `[m, width]` f32 value available to later ops.
+#[derive(Clone)]
+struct Val {
+    name: String,
+    width: usize,
+}
+
+struct Gen<'a> {
+    rng: &'a mut Pcg32,
+    m: usize,
+    vals: Vec<Val>,
+    ops: Vec<String>,
+    weights: Vec<NamedTensor>,
+    inputs: Vec<TensorMeta>,
+    /// shape of every op-produced value (legal artifact outputs)
+    produced: Vec<(String, Vec<usize>)>,
+    next_id: usize,
+}
+
+impl Gen<'_> {
+    fn fresh(&mut self, prefix: &str) -> String {
+        self.next_id += 1;
+        format!("{prefix}{}", self.next_id)
+    }
+
+    fn weight(&mut self, prefix: &str, shape: &[usize], std: f32) -> String {
+        let name = self.fresh(prefix);
+        let count: usize = shape.iter().product();
+        let mut data = vec![0f32; count];
+        self.rng.fill_normal(&mut data, 0.0, std);
+        self.weights.push(NamedTensor {
+            name: name.clone(),
+            tensor: HostTensor::from_f32(shape, &data),
+        });
+        name
+    }
+
+    fn pick_val(&mut self) -> Val {
+        self.vals[self.rng.below(self.vals.len() as u32) as usize].clone()
+    }
+
+    fn pick_width(&mut self) -> usize {
+        [1usize, 2, 3, 4, 5, 8][self.rng.below(6) as usize]
+    }
+
+    fn act(&mut self) -> &'static str {
+        ["none", "relu", "sigmoid", "tanh"][self.rng.below(4) as usize]
+    }
+
+    fn unary_fn(&mut self) -> &'static str {
+        ["relu", "sigmoid", "tanh", "one_minus"][self.rng.below(4) as usize]
+    }
+
+    fn push_dense(&mut self, name: String, width: usize) {
+        self.produced.push((name.clone(), vec![self.m, width]));
+        self.vals.push(Val { name, width });
+    }
+
+    fn emit_fc(&mut self, input: &Val, n: usize) -> String {
+        let out = self.fresh("v");
+        let w = self.weight("w", &[n, input.width], 0.4);
+        let bias = if self.rng.below(2) == 0 {
+            let b = self.weight("b", &[n], 0.1);
+            format!(r#", "b": "{b}""#)
+        } else {
+            String::new()
+        };
+        let act = self.act();
+        self.ops.push(format!(
+            r#"{{"op": "fc", "out": "{out}", "in": "{}", "w": "{w}"{bias}, "act": "{act}"}}"#,
+            input.name
+        ));
+        self.push_dense(out.clone(), n);
+        out
+    }
+
+    fn emit_unary(&mut self, input: &Val) -> String {
+        let out = self.fresh("v");
+        let f = self.unary_fn();
+        self.ops.push(format!(
+            r#"{{"op": "unary", "fn": "{f}", "out": "{out}", "in": "{}"}}"#,
+            input.name
+        ));
+        self.push_dense(out.clone(), input.width);
+        out
+    }
+
+    fn emit_binary(&mut self, a: &Val, b: &Val) -> String {
+        assert_eq!(a.width, b.width);
+        let out = self.fresh("v");
+        let f = ["add", "mul"][self.rng.below(2) as usize];
+        self.ops.push(format!(
+            r#"{{"op": "binary", "fn": "{f}", "out": "{out}", "a": "{}", "b": "{}"}}"#,
+            a.name, b.name
+        ));
+        self.push_dense(out.clone(), a.width);
+        out
+    }
+
+    /// Pick a partner with the same width (may be the same value — the
+    /// both-operands-are-the-chain-value refusal case).
+    fn width_partner(&mut self, a: &Val) -> Val {
+        let mates: Vec<Val> =
+            self.vals.iter().filter(|v| v.width == a.width).cloned().collect();
+        mates[self.rng.below(mates.len() as u32) as usize].clone()
+    }
+}
+
+fn gen_case(rng: &mut Pcg32, idx: usize) -> Case {
+    let m = [1usize, 2, 3, 5][rng.below(4) as usize];
+    let mut g = Gen {
+        rng,
+        m,
+        vals: Vec::new(),
+        ops: Vec::new(),
+        weights: Vec::new(),
+        inputs: Vec::new(),
+        produced: Vec::new(),
+        next_id: 0,
+    };
+
+    // dense inputs (never artifact outputs)
+    for j in 0..1 + g.rng.below(2) {
+        let w = g.pick_width();
+        let name = format!("in{j}");
+        g.inputs.push(TensorMeta { name: name.clone(), dtype: DType::F32, shape: vec![m, w] });
+        g.vals.push(Val { name, width: w });
+    }
+    // dead input: decoded into its slot, read by nothing
+    if g.rng.below(5) == 0 {
+        let w = g.pick_width();
+        g.inputs.push(TensorMeta { name: "dead".into(), dtype: DType::F32, shape: vec![m, w] });
+    }
+
+    // conv prologue: conv [-> unary] -> flatten, rejoining the dense world
+    if g.rng.below(4) == 0 {
+        g.inputs.push(TensorMeta {
+            name: "image".into(),
+            dtype: DType::F32,
+            shape: vec![m, 1, 4, 4],
+        });
+        let co = 1 + g.rng.below(3) as usize;
+        let kh = 2 + g.rng.below(2) as usize;
+        let stride = 1 + g.rng.below(2) as usize;
+        let phi = g.rng.below(2) as usize;
+        let ho = (4 + phi - kh) / stride + 1;
+        let w = g.weight("cw", &[co, 1, kh, kh], 0.3);
+        let act = g.act();
+        let cout = g.fresh("c");
+        g.ops.push(format!(
+            r#"{{"op": "conv2d", "out": "{cout}", "in": "image", "w": "{w}", "act": "{act}", "stride": {stride}, "pad": [0, {phi}]}}"#
+        ));
+        g.produced.push((cout.clone(), vec![m, co, ho, ho]));
+        let mut flat_src = cout;
+        if g.rng.below(2) == 0 {
+            let u = g.fresh("cu");
+            let f = g.unary_fn();
+            g.ops.push(format!(
+                r#"{{"op": "unary", "fn": "{f}", "out": "{u}", "in": "{flat_src}"}}"#
+            ));
+            g.produced.push((u.clone(), vec![m, co, ho, ho]));
+            flat_src = u;
+        }
+        let fout = g.fresh("cf");
+        g.ops
+            .push(format!(r#"{{"op": "flatten", "out": "{fout}", "in": "{flat_src}"}}"#));
+        g.push_dense(fout, co * ho * ho);
+    }
+
+    // embedding lookup feeding the dense world
+    if g.rng.below(5) == 0 {
+        let rows = [5usize, 17][g.rng.below(2) as usize];
+        let dim = [2usize, 4][g.rng.below(2) as usize];
+        let pool = 3usize;
+        g.inputs.push(TensorMeta { name: "idx".into(), dtype: DType::I32, shape: vec![m, pool] });
+        let tbl = g.weight("tbl", &[rows, dim], 0.5);
+        let out = g.fresh("e");
+        g.ops.push(format!(
+            r#"{{"op": "embed_pool", "out": "{out}", "indices": "idx", "table": "{tbl}"}}"#
+        ));
+        g.push_dense(out, dim);
+    }
+
+    // random dense op soup
+    let n_ops = 1 + g.rng.below(5);
+    for _ in 0..n_ops {
+        let r = g.rng.below(100);
+        if r < 35 {
+            let x = g.pick_val();
+            let n = g.pick_width();
+            g.emit_fc(&x, n);
+        } else if r < 55 {
+            let x = g.pick_val();
+            g.emit_unary(&x);
+        } else if r < 70 {
+            let a = g.pick_val();
+            let b = g.width_partner(&a);
+            g.emit_binary(&a, &b);
+        } else if r < 80 {
+            let x = g.pick_val();
+            let out = g.fresh("fl");
+            g.ops.push(format!(r#"{{"op": "flatten", "out": "{out}", "in": "{}"}}"#, x.name));
+            g.push_dense(out, x.width);
+        } else {
+            // deliberate fusable chain: fc -> unary [-> binary]
+            let x = g.pick_val();
+            // pick n matching an existing width so a binary partner exists
+            let n = g.pick_val().width;
+            let fc = g.emit_fc(&x, n);
+            let fc_val = Val { name: fc, width: n };
+            let u = g.emit_unary(&fc_val);
+            if g.rng.below(2) == 0 {
+                let u_val = Val { name: u, width: n };
+                let partner = g.width_partner(&u_val);
+                g.emit_binary(&u_val, &partner);
+            }
+        }
+    }
+
+    // outputs: the last produced value, plus sometimes an earlier one
+    // (which may be a chain intermediate — the refusal paths must also
+    // stay bit-identical)
+    let shape_of: HashMap<&str, &Vec<usize>> =
+        g.produced.iter().map(|(n, s)| (n.as_str(), s)).collect();
+    let last = g.produced.last().unwrap().0.clone();
+    let mut out_names = vec![last];
+    if g.rng.below(3) == 0 && g.produced.len() > 1 {
+        let extra = g.produced[g.rng.below(g.produced.len() as u32) as usize].0.clone();
+        if extra != out_names[0] {
+            out_names.push(extra);
+        }
+    }
+    let outputs: Vec<TensorMeta> = out_names
+        .iter()
+        .map(|n| TensorMeta {
+            name: n.clone(),
+            dtype: DType::F32,
+            shape: shape_of[n.as_str()].clone(),
+        })
+        .collect();
+
+    let mut prog = String::from("[");
+    for (i, op) in g.ops.iter().enumerate() {
+        if i > 0 {
+            prog.push(',');
+        }
+        prog.push_str(op);
+    }
+    prog.push(']');
+
+    let meta = ArtifactMeta {
+        name: format!("fuzz_{idx}"),
+        hlo: String::new(),
+        model: None,
+        weights: None,
+        weight_params: vec![],
+        inputs: g.inputs,
+        outputs,
+        batch: m,
+        precision: Precision::Fp32,
+        program: Json::parse(&prog).expect("generated program must parse"),
+    };
+    Case { meta, weights: g.weights }
+}
+
+fn bits(ts: &[HostTensor]) -> Vec<Vec<u32>> {
+    ts.iter().map(|t| t.as_f32().unwrap().iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+#[test]
+fn compiled_plans_match_the_interpreter_on_random_programs() {
+    let precisions =
+        [Precision::Fp32, Precision::Fp16, Precision::I8Acc32, Precision::I8Acc16];
+    let mut rng = Pcg32::seeded(0xD1FF);
+    let mut fused_chains = 0usize;
+    let mut fused_cases = 0usize;
+    for i in 0..CASES {
+        let p = precisions[i % precisions.len()];
+        let case = gen_case(&mut rng, i);
+        let art = build_native_artifact(case.meta, &case.weights, p, 1)
+            .unwrap_or_else(|e| panic!("case {i}: build failed: {e:#}"));
+        let rep = art.fusion_report();
+        fused_chains += rep.chains.len();
+        fused_cases += (!rep.chains.is_empty()) as usize;
+        assert!(
+            rep.plan_steps + 3 * rep.chains.len() >= rep.interp_ops,
+            "case {i}: steps {} chains {} ops {}",
+            rep.plan_steps,
+            rep.chains.len(),
+            rep.interp_ops
+        );
+
+        let inputs = art.synth_inputs(0xF00D + i as u64);
+        let c1 = art.run_compiled(&inputs).unwrap_or_else(|e| panic!("case {i}: {e:#}"));
+        let oracle = art.run_interpreted(&inputs).unwrap();
+        // a second compiled run must not depend on stale arena state
+        // (fused chains leave elided intermediate slots untouched)
+        let c2 = art.run_compiled(&inputs).unwrap();
+        assert_eq!(bits(&c1), bits(&c2), "case {i}: compiled runs disagree across arena reuse");
+
+        for (o, (cv, iv)) in c1.iter().zip(oracle.iter()).enumerate() {
+            let (cv, iv) = (cv.as_f32().unwrap(), iv.as_f32().unwrap());
+            let identical =
+                cv.iter().zip(iv.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+            if identical {
+                continue;
+            }
+            // int8 paths may requantize differently batch-to-batch;
+            // hold them to the precision's accuracy contract instead
+            assert!(
+                matches!(p, Precision::I8Acc32 | Precision::I8Acc16),
+                "case {i} output {o}: {p} must be bit-identical"
+            );
+            let db = sqnr_db(&iv, &cv);
+            assert!(
+                db >= p.min_sqnr_db(),
+                "case {i} output {o}: {p} sqnr {db:.1} dB below bound"
+            );
+        }
+    }
+    // the corpus must actually exercise folding, not just refusal paths
+    assert!(
+        fused_chains > 50,
+        "only {fused_chains} fused chains across {CASES} cases ({fused_cases} cases)"
+    );
+}

@@ -252,6 +252,92 @@ fn session_table_bound_sheds_overloaded() {
     rig.finish();
 }
 
+/// Seed shared by both executions of the compiled-vs-interpreted
+/// scenario, so the two rigs decode exactly the same sequences.
+const PLAN_SEED: u64 = 0x91a7;
+
+/// Decode a fixed scenario — two waves so the second joins batches
+/// mid-flight, a max_len=1 session, and an EOS forced on sequence 0's
+/// very first step — and return every stream's tokens and outcome.
+/// `interpret` flips the whole rig onto the interpreter oracle via
+/// `DCINFER_EXEC=interpret` (read at artifact load).
+fn decode_scenario(
+    tag: &str,
+    eos: u32,
+    interpret: bool,
+) -> Vec<(Vec<u32>, Result<SeqFinish, InferError>)> {
+    if interpret {
+        std::env::set_var("DCINFER_EXEC", "interpret");
+    }
+    let rig = Rig::start(tag, SeqConfig { eos_override: Some(eos), ..SeqConfig::default() });
+    let client = DcClient::connect(rig.server.local_addr()).expect("connect");
+    let seed = PLAN_SEED;
+
+    let max_lens: [u32; 5] = [20, 1, 8, 15, 2];
+    let mut streams = Vec::new();
+    for (i, &ml) in max_lens.iter().enumerate().take(3) {
+        let req = rig.nmt.synth_seq_request(i as u64, seed, ml, 0.0);
+        streams.push(client.submit_seq(&req).expect("submit"));
+    }
+    // second wave joins mid-flight
+    std::thread::sleep(Duration::from_millis(3));
+    for (i, &ml) in max_lens.iter().enumerate().skip(3) {
+        let req = rig.nmt.synth_seq_request(i as u64, seed, ml, 0.0);
+        streams.push(client.submit_seq(&req).expect("submit"));
+    }
+
+    let mut results = Vec::new();
+    for stream in streams {
+        let (tokens, done) = drain(stream);
+        results.push((tokens, done.outcome));
+    }
+    client.close();
+    rig.finish();
+    if interpret {
+        std::env::remove_var("DCINFER_EXEC");
+    }
+    results
+}
+
+/// The compiled plan is the default execution mode of the whole
+/// serving stack; flipping the rig onto the interpreter oracle must
+/// not change one token anywhere — mid-flight joins, a max_len=1
+/// session, and an EOS hit on a sequence's first decode step included.
+#[test]
+fn compiled_and_interpreted_rigs_stream_identical_tokens() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // the fixture's gru family must actually fuse (fc -> add -> tanh),
+    // otherwise this test compares the interpreter with itself
+    let dir = synthetic_artifacts_dir("seqint_planpick").expect("fixture");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let backend = NativeBackend::new(Precision::Fp32);
+    let artifact = backend.load_native(&manifest, "gru_step_b1").expect("b1 artifact");
+    let rep = artifact.fusion_report();
+    assert!(
+        !rep.chains.is_empty(),
+        "gru fixture mined no fused chains: {}",
+        rep.summary()
+    );
+    // pick the EOS so sequence 0 terminates on its very first step
+    let nmt = NmtService::from_manifest(&manifest).expect("nmt config");
+    let spec = nmt.decode_spec();
+    let (x0, h0) = nmt.synth_seq_state(0, PLAN_SEED);
+    let (first_tokens, _) =
+        reference_decode(&artifact, &spec, &x0, &h0, 1).expect("reference");
+    let eos = first_tokens[0];
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let compiled = decode_scenario("seqint_planc", eos, false);
+    let interpreted = decode_scenario("seqint_plani", eos, true);
+    assert_eq!(compiled, interpreted, "execution mode changed a streamed token");
+    assert_eq!(
+        compiled[0].1,
+        Ok(SeqFinish::Eos),
+        "sequence 0 was built to hit EOS on step one"
+    );
+    assert!(compiled[1].0.len() <= 1, "max_len=1 session must stop after one step");
+}
+
 /// Server shutdown mid-decode drains: every accepted sequence still
 /// streams its tokens and terminal frame before the connection closes.
 #[test]
