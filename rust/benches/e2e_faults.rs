@@ -1,0 +1,292 @@
+//! Resilience bench: goodput and tail latency under seeded fault
+//! injection. The same two-replica / two-shard-server fleet as the
+//! cluster bench runs a fixed open-loop recsys load while a
+//! [`dcinfer::faultnet`] plan resets, corrupts, delays or throttles its
+//! transports — plus one scenario where the whole shard fleet goes
+//! down for real and the tier serves degraded.
+//!
+//! The headline number per scenario is **goodput**: the fraction of
+//! requests answered ok (degraded-flagged answers count — they were
+//! served, and they say so). The §6 resilience claim this bench guards:
+//! timeouts + budgeted retries + breakers + degraded mode keep goodput
+//! at or above 90% of fault-free under every injected regime.
+//!
+//! Runs on the self-synthesized fixture (both feature configurations);
+//! `-- --smoke` runs the tiny CI-friendly sweep. Emits
+//! `BENCH_faults.json` at the repo root.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dcinfer::cluster::{ClusterRouter, RouterConfig, ShardServer, ShardServerConfig};
+use dcinfer::coordinator::{
+    ClientResponse, DcClient, FrontendConfig, ModelService, ServerConfig, ServingFrontend,
+    ServingServer,
+};
+use dcinfer::embedding::SparseTierConfig;
+use dcinfer::faultnet;
+use dcinfer::models::RecSysService;
+use dcinfer::runtime::{synthetic_artifacts_dir, BackendSpec, Manifest, Precision};
+use dcinfer::util::bench::{write_bench_json, Table};
+use dcinfer::util::rng::Pcg32;
+use dcinfer::util::stats::Samples;
+
+struct Scenario {
+    name: &'static str,
+    /// `faultnet` plan installed before the fleet comes up (plans only
+    /// attach to connections opened after installation).
+    spec: Option<&'static str>,
+    replication: usize,
+    /// real outage: take every shard server down after registration
+    kill_shards: bool,
+}
+
+const SCENARIOS: &[Scenario] = &[
+    Scenario { name: "baseline", spec: None, replication: 2, kill_shards: false },
+    Scenario {
+        name: "shard-resets",
+        spec: Some("seed=11;reset,peer=rshard,dir=write,after=64,every=24"),
+        replication: 2,
+        kill_shards: false,
+    },
+    Scenario {
+        name: "frame-corruption",
+        spec: Some("seed=7;corrupt,peer=rshard,dir=read,every=97"),
+        replication: 2,
+        kill_shards: false,
+    },
+    Scenario {
+        name: "slow-tier",
+        spec: Some("seed=5;delay,peer=rshard,dir=read,ms=2"),
+        replication: 2,
+        kill_shards: false,
+    },
+    Scenario {
+        name: "throttled-router",
+        spec: Some("seed=3;throttle,peer=router,chunk=256,us=50"),
+        replication: 2,
+        kill_shards: false,
+    },
+    Scenario { name: "shard-outage", spec: None, replication: 1, kill_shards: true },
+];
+
+struct Fleet {
+    svc: RecSysService,
+    shards: Vec<ShardServer>,
+    frontends: Vec<Arc<ServingFrontend>>,
+    servers: Vec<ServingServer>,
+    router: ClusterRouter,
+}
+
+impl Fleet {
+    fn start(dir: &std::path::Path, replication: usize) -> Fleet {
+        let manifest = Manifest::load(dir).expect("manifest");
+        let svc = RecSysService::from_manifest(&manifest).expect("recsys config");
+        let shards: Vec<ShardServer> = (0..2)
+            .map(|_| {
+                ShardServer::bind("127.0.0.1:0", ShardServerConfig::default())
+                    .expect("shard bind")
+            })
+            .collect();
+        let shard_addrs: Vec<String> = shards.iter().map(|s| s.local_addr().to_string()).collect();
+        let mut frontends = Vec::new();
+        let mut servers = Vec::new();
+        for r in 0..2 {
+            let services: Vec<Arc<dyn ModelService>> = vec![Arc::new(svc.clone())];
+            let frontend = Arc::new(
+                ServingFrontend::start(
+                    FrontendConfig {
+                        artifacts_dir: dir.to_path_buf(),
+                        executors: 1,
+                        backend: BackendSpec::native(Precision::Fp32),
+                        sparse_tier: Some(SparseTierConfig {
+                            shards: 2,
+                            replication,
+                            cache_capacity_rows: 0,
+                            remote_shards: shard_addrs.clone(),
+                            ..Default::default()
+                        }),
+                        ..Default::default()
+                    },
+                    services,
+                )
+                .expect("frontend start"),
+            );
+            let server = ServingServer::bind(
+                frontend.clone(),
+                "127.0.0.1:0",
+                ServerConfig { replica_label: format!("replica-{r}"), ..Default::default() },
+            )
+            .expect("server bind");
+            frontends.push(frontend);
+            servers.push(server);
+        }
+        let replica_addrs: Vec<String> =
+            servers.iter().map(|s| s.local_addr().to_string()).collect();
+        let router = ClusterRouter::bind("127.0.0.1:0", &replica_addrs, RouterConfig::default())
+            .expect("router bind");
+        let fleet = Fleet { svc, shards, frontends, servers, router };
+        // warm: flushes one-time table registration to the shards and
+        // settles router health before anything is measured (or killed)
+        let _ = run_load(&fleet, 6, 400.0, 0xEEEE);
+        fleet
+    }
+
+    fn shutdown(&self) {
+        self.router.shutdown();
+        for s in &self.servers {
+            s.shutdown();
+        }
+        for f in &self.frontends {
+            f.shutdown();
+        }
+        for s in &self.shards {
+            s.shutdown();
+        }
+    }
+
+    fn tier_sum(&self, pick: impl Fn(&dcinfer::embedding::SparseTierSnapshot) -> u64) -> u64 {
+        self.frontends
+            .iter()
+            .filter_map(|f| f.sparse_tier())
+            .map(|t| pick(&t.snapshot()))
+            .sum()
+    }
+}
+
+struct RunStats {
+    sent: u64,
+    ok: u64,
+    degraded: u64,
+    errs: u64,
+    rtt_ms: Samples,
+}
+
+fn run_load(fleet: &Fleet, n: u64, qps: f64, seed: u64) -> RunStats {
+    let client = DcClient::connect(fleet.router.local_addr()).expect("connect");
+    let mut rng = Pcg32::seeded(seed);
+    let mut pending: Vec<Option<std::sync::mpsc::Receiver<ClientResponse>>> =
+        Vec::with_capacity(n as usize);
+    let t0 = Instant::now();
+    let mut next_at = 0.0f64;
+    for i in 0..n {
+        next_at += rng.exponential(qps);
+        let now = t0.elapsed().as_secs_f64();
+        if next_at > now {
+            std::thread::sleep(Duration::from_secs_f64(next_at - now));
+        }
+        let req = fleet.svc.synth_request(seed * 1_000_000 + i, &mut rng, 10_000.0);
+        pending.push(client.submit(&req).ok());
+    }
+    let mut stats = RunStats { sent: n, ok: 0, degraded: 0, errs: 0, rtt_ms: Samples::new() };
+    for rx in pending {
+        let cr = rx.and_then(|rx| rx.recv_timeout(Duration::from_secs(60)).ok());
+        match cr {
+            Some(cr) if cr.resp.is_ok() && !cr.shed() => {
+                stats.ok += 1;
+                if cr.resp.degraded {
+                    stats.degraded += 1;
+                }
+                stats.rtt_ms.push(cr.rtt_us / 1e3);
+            }
+            _ => stats.errs += 1,
+        }
+    }
+    client.close();
+    stats
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let dir = synthetic_artifacts_dir("e2e_faults").expect("fixture");
+    let (n, qps) = if smoke { (150u64, 500.0) } else { (600u64, 500.0) };
+
+    println!("== E2E resilience: 2 replicas x 1 executor, 2 remote shards, seeded faults ==\n");
+
+    let mut table = Table::new(&[
+        "scenario", "sent", "ok", "degr", "err", "goodput", "p50 ms", "p99 ms", "failover",
+        "hedge",
+    ]);
+    let mut json_rows = Vec::new();
+    let mut baseline_p99 = 0.0f64;
+    for (i, sc) in SCENARIOS.iter().enumerate() {
+        faultnet::clear();
+        if let Some(spec) = sc.spec {
+            faultnet::install_spec(spec).expect("valid scenario spec");
+        }
+        let fleet = Fleet::start(&dir, sc.replication);
+        if sc.kill_shards {
+            for s in &fleet.shards {
+                s.shutdown();
+            }
+        }
+        let mut s = run_load(&fleet, n, qps, 17 + i as u64);
+        faultnet::clear();
+        let failovers = fleet.tier_sum(|t| t.failovers);
+        let hedges = fleet.tier_sum(|t| t.hedges_fired);
+        let tier_degraded = fleet.tier_sum(|t| t.degraded_lookups);
+        fleet.shutdown();
+
+        let goodput = s.ok as f64 / s.sent as f64;
+        // the resilience guard: every injected regime keeps goodput at
+        // or above 90% of fault-free (the baseline serves everything)
+        match sc.name {
+            "baseline" => {
+                assert_eq!((s.errs, s.degraded), (0, 0), "baseline fleet must be clean");
+                baseline_p99 = s.rtt_ms.p99();
+            }
+            "shard-outage" => {
+                assert!(s.degraded > 0 && tier_degraded > 0, "outage never surfaced degraded");
+            }
+            "shard-resets" => assert!(failovers > 0, "resets never exercised failover"),
+            _ => {}
+        }
+        assert!(
+            goodput >= 0.9,
+            "{}: goodput {:.1}% fell below the 90% resilience floor",
+            sc.name,
+            goodput * 100.0
+        );
+
+        table.row(&[
+            sc.name.to_string(),
+            s.sent.to_string(),
+            s.ok.to_string(),
+            s.degraded.to_string(),
+            s.errs.to_string(),
+            format!("{:.1}%", goodput * 100.0),
+            format!("{:.2}", s.rtt_ms.p50()),
+            format!("{:.2}", s.rtt_ms.p99()),
+            failovers.to_string(),
+            hedges.to_string(),
+        ]);
+        json_rows.push(format!(
+            "    {{\"scenario\": \"{}\", \"spec\": \"{}\", \"sent\": {}, \"ok\": {}, \
+             \"degraded\": {}, \"errors\": {}, \"goodput_pct\": {:.1}, \"p50_ms\": {:.3}, \
+             \"p99_ms\": {:.3}, \"failovers\": {failovers}, \"hedges\": {hedges}}}",
+            sc.name,
+            sc.spec.unwrap_or(if sc.kill_shards { "(all shard servers down)" } else { "" }),
+            s.sent,
+            s.ok,
+            s.degraded,
+            s.errs,
+            goodput * 100.0,
+            s.rtt_ms.p50(),
+            s.rtt_ms.p99()
+        ));
+    }
+    table.print();
+    println!(
+        "\n(goodput counts degraded-flagged answers — served and saying so; the floor under \
+         every fault regime is 90%, baseline p99 was {baseline_p99:.2} ms)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"faults\",\n  \"replicas\": 2,\n  \"shard_servers\": 2,\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    let path = write_bench_json("BENCH_faults.json", &json);
+    println!("\nwrote {} ({} rows)", path.display(), json_rows.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -142,7 +142,7 @@ fn run_tier(
         replication: 1,
         cache_capacity_rows: cache_rows,
         admit_after: 2,
-        remote_shards: Vec::new(),
+        ..Default::default()
     })
     .expect("tier start");
     let ids: Vec<usize> = tables

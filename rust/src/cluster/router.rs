@@ -19,15 +19,22 @@
 //!   keeping a model's traffic on few replicas).
 //! - **Health** is active: a prober thread pings every replica each
 //!   `probe_interval`; a replica is routable only while its connection
-//!   is up and its last pong is fresher than `probe_timeout`. Dead
-//!   replicas are reconnected by the same thread — recovery needs no
-//!   operator action.
-//! - **Failover** is retry-once-on-an-alternate-replica: when a
-//!   replica dies with requests in flight, each is re-sent to the next
-//!   healthy replica in its ring order, once, if its deadline has not
-//!   already passed; otherwise (or on second death) the client gets a
-//!   typed [`InferError::Shutdown`] — never silence. An inference is
-//!   idempotent, which is what makes resend-on-death safe.
+//!   is up and its last pong is fresher than `probe_timeout`. A probe
+//!   outstanding past the policy's `probe_latency_bound` marks the
+//!   replica *Suspect* — alive but too slow to trust with new work
+//!   until a clean (fast) pong comes back. Dead replicas are
+//!   reconnected by the same thread — recovery needs no operator
+//!   action.
+//! - **Failover** is budgeted: when a replica dies with requests in
+//!   flight, each is re-sent to the next healthy replica in its ring
+//!   order — up to the [`ResiliencePolicy`]'s `retry_budget` total
+//!   attempts, with decorrelated-jitter backoff between legs, while its
+//!   deadline still allows; past the budget the client gets a typed
+//!   [`InferError::Shutdown`] — never silence. An inference is
+//!   idempotent, which is what makes resend-on-death safe. A per-replica
+//!   [`CircuitBreaker`] deprioritizes (never outright bans) peers that
+//!   keep failing: an open breaker only loses a replica its place in
+//!   the ring walk while an allowing alternative exists.
 //! - **Accounting** is per replica: inflight, sent/completed/failed
 //!   and client-observed latency quantiles ([`ReplicaStats`]), the
 //!   fleet view `dcinfer cluster` prints.
@@ -49,6 +56,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::request::{InferError, InferResponse};
 use crate::coordinator::wire::{self, FrameKind};
+use crate::faultnet::{self, Backoff, CircuitBreaker, Dir, FaultStream, ResiliencePolicy};
 use crate::util::stats::Samples;
 
 /// Router knobs.
@@ -67,6 +75,9 @@ pub struct RouterConfig {
     /// how long shutdown waits for in-flight responses before
     /// synthesizing errors for the stragglers
     pub drain_timeout: Duration,
+    /// the unified resilience policy: replica-leg socket timeouts,
+    /// retry budget + backoff, breaker thresholds, probe latency bound
+    pub resilience: ResiliencePolicy,
 }
 
 impl Default for RouterConfig {
@@ -78,6 +89,7 @@ impl Default for RouterConfig {
             probe_timeout: Duration::from_secs(1),
             vnodes: 64,
             drain_timeout: Duration::from_secs(5),
+            resilience: ResiliencePolicy::default(),
         }
     }
 }
@@ -87,12 +99,17 @@ impl Default for RouterConfig {
 pub struct ReplicaStats {
     pub addr: String,
     pub healthy: bool,
+    /// answering probes, but slower than the policy's latency bound —
+    /// not trusted with new work until a clean probe
+    pub suspect: bool,
     /// requests forwarded and not yet answered
     pub inflight: u64,
     pub sent: u64,
     pub completed: u64,
     /// forwards lost to a dead connection (before any failover resend)
     pub failed: u64,
+    /// times this replica's circuit breaker opened
+    pub breaker_trips: u64,
     /// router-observed response latency (submit to response frame), ms
     pub p50_ms: f64,
     pub p99_ms: f64,
@@ -144,19 +161,24 @@ fn walk_ring(
 
 struct ReplicaConn {
     stream: TcpStream,
-    writer: BufWriter<TcpStream>,
+    writer: BufWriter<FaultStream>,
 }
 
 struct Replica {
     addr: String,
     conn: Mutex<Option<ReplicaConn>>,
     healthy: AtomicBool,
+    /// probes answered, but past the latency bound (see [`ReplicaStats`])
+    suspect: AtomicBool,
     inflight: AtomicU64,
     sent: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
     last_pong: Mutex<Option<Instant>>,
+    /// when the oldest unanswered probe was sent (None = all answered)
+    probe_sent: Mutex<Option<Instant>>,
     lat_ms: Mutex<Samples>,
+    breaker: CircuitBreaker,
 }
 
 /// One routed request awaiting its response (keyed by router corr).
@@ -236,12 +258,15 @@ impl ClusterRouter {
                 addr: a.clone(),
                 conn: Mutex::new(None),
                 healthy: AtomicBool::new(false),
+                suspect: AtomicBool::new(false),
                 inflight: AtomicU64::new(0),
                 sent: AtomicU64::new(0),
                 completed: AtomicU64::new(0),
                 failed: AtomicU64::new(0),
                 last_pong: Mutex::new(None),
+                probe_sent: Mutex::new(None),
                 lat_ms: Mutex::new(Samples::new()),
+                breaker: cfg.resilience.breaker(),
             })
             .collect();
         let core = Arc::new(Core {
@@ -308,10 +333,12 @@ impl ClusterRouter {
                 ReplicaStats {
                     addr: r.addr.clone(),
                     healthy: r.healthy.load(Ordering::SeqCst),
+                    suspect: r.suspect.load(Ordering::SeqCst),
                     inflight: r.inflight.load(Ordering::SeqCst),
                     sent: r.sent.load(Ordering::SeqCst),
                     completed: r.completed.load(Ordering::SeqCst),
                     failed: r.failed.load(Ordering::SeqCst),
+                    breaker_trips: r.breaker.trips(),
                     p50_ms: lat.p50(),
                     p99_ms: lat.p99(),
                 }
@@ -392,9 +419,15 @@ fn connect_replica(core: &Arc<Core>, idx: usize) -> bool {
     }
     let Ok(stream) = TcpStream::connect(&rep.addr) else { return false };
     let _ = stream.set_nodelay(true);
+    if core.cfg.resilience.apply_io_timeouts(&stream).is_err() {
+        return false;
+    }
     let (Ok(read_half), Ok(write_half)) = (stream.try_clone(), stream.try_clone()) else {
         return false;
     };
+    let peer = format!("router->{}", rep.addr);
+    let read_half = faultnet::wrap(read_half, &peer, Dir::Read);
+    let write_half = faultnet::wrap(write_half, &peer, Dir::Write);
     *rep.conn.lock().unwrap() =
         Some(ReplicaConn { stream, writer: BufWriter::new(write_half) });
     let reader = {
@@ -407,6 +440,8 @@ fn connect_replica(core: &Arc<Core>, idx: usize) -> bool {
         Ok(h) => {
             core.replica_readers.lock().unwrap().push(h);
             *rep.last_pong.lock().unwrap() = Some(Instant::now());
+            *rep.probe_sent.lock().unwrap() = None;
+            rep.suspect.store(false, Ordering::SeqCst);
             rep.healthy.store(true, Ordering::SeqCst);
             true
         }
@@ -439,12 +474,41 @@ fn try_send(core: &Arc<Core>, idx: usize, corr: u64, payload: &[u8]) -> bool {
     ok
 }
 
-fn replica_reader(core: Arc<Core>, idx: usize, stream: TcpStream) {
+fn replica_reader(core: Arc<Core>, idx: usize, stream: FaultStream) {
     let rep = &core.replicas[idx];
     let mut r = BufReader::new(stream);
+    let mut last_frame = Instant::now();
     loop {
-        match wire::read_frame(&mut r, core.cfg.max_frame_bytes) {
-            Ok(Some(f)) if f.kind == FrameKind::Response => {
+        let f = match wire::read_frame(&mut r, core.cfg.max_frame_bytes) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // replica closed cleanly
+            Err(wire::WireError::TimedOut { mid_frame: false }) => {
+                // idle tick: routability is the prober's call; only a
+                // wedged connection — work owed, nothing arriving — is
+                // torn down here (its routes then fail over)
+                faultnet::policy::note_timeout(false);
+                if rep.inflight.load(Ordering::SeqCst) > 0
+                    && last_frame.elapsed() >= core.cfg.resilience.wedge_after
+                {
+                    eprintln!("router: replica {} wedged, closing", rep.addr);
+                    break;
+                }
+                continue;
+            }
+            Err(e @ wire::WireError::TimedOut { mid_frame: true }) => {
+                // bytes were consumed: the stream is no longer aligned
+                faultnet::policy::note_timeout(true);
+                eprintln!("router: replica {} read failed: {e}", rep.addr);
+                break;
+            }
+            Err(e) => {
+                eprintln!("router: replica {} read failed: {e}", rep.addr);
+                break;
+            }
+        };
+        last_frame = Instant::now();
+        match f.kind {
+            FrameKind::Response => {
                 let route = core.pending.lock().unwrap().remove(&f.corr);
                 // unmatched corr: a response for a request we already
                 // failed over or timed out — drop it (the client got
@@ -452,23 +516,31 @@ fn replica_reader(core: Arc<Core>, idx: usize, stream: TcpStream) {
                 let Some(route) = route else { continue };
                 rep.inflight.fetch_sub(1, Ordering::SeqCst);
                 rep.completed.fetch_add(1, Ordering::SeqCst);
+                rep.breaker.record_ok();
                 rep.lat_ms
                     .lock()
                     .unwrap()
                     .push(route.arrived.elapsed().as_secs_f64() * 1e3);
                 respond(&core, route.client, route.client_corr, f.payload);
             }
-            Ok(Some(f)) if f.kind == FrameKind::Pong => {
+            FrameKind::Pong => {
+                // a pong past the latency bound is evidence of a slow
+                // peer, not a healthy one: mark Suspect until a clean
+                // (fast) probe round-trip comes back
+                let clean = {
+                    let mut g = rep.probe_sent.lock().unwrap();
+                    let ok = g
+                        .map(|t| t.elapsed() <= core.cfg.resilience.probe_latency_bound)
+                        .unwrap_or(true);
+                    *g = None;
+                    ok
+                };
                 *rep.last_pong.lock().unwrap() = Some(Instant::now());
                 rep.healthy.store(true, Ordering::SeqCst);
+                rep.suspect.store(!clean, Ordering::SeqCst);
             }
-            Ok(Some(_)) => {
+            _ => {
                 eprintln!("router: unexpected frame kind from replica {}, closing", rep.addr);
-                break;
-            }
-            Ok(None) => break, // replica closed cleanly
-            Err(e) => {
-                eprintln!("router: replica {} read failed: {e}", rep.addr);
                 break;
             }
         }
@@ -476,12 +548,15 @@ fn replica_reader(core: Arc<Core>, idx: usize, stream: TcpStream) {
     replica_died(&core, idx);
 }
 
-/// A replica's connection is gone: mark it unroutable, then give every
-/// request it held one failover resend (alternate replica, same
-/// payload) if the deadline still allows — otherwise a typed error.
+/// A replica's connection is gone: mark it unroutable, record the
+/// failure on its breaker, then re-dispatch every request it held
+/// (alternate replica, same payload) while the retry budget and the
+/// deadline allow — otherwise a typed error.
 fn replica_died(core: &Arc<Core>, idx: usize) {
     let rep = &core.replicas[idx];
     rep.healthy.store(false, Ordering::SeqCst);
+    rep.breaker.record_err();
+    *rep.probe_sent.lock().unwrap() = None;
     if let Some(c) = rep.conn.lock().unwrap().take() {
         let _ = c.stream.shutdown(Shutdown::Both);
     }
@@ -492,10 +567,11 @@ fn replica_died(core: &Arc<Core>, idx: usize) {
         corrs.into_iter().filter_map(|c| g.remove(&c)).collect()
     };
     let stopping = core.stop.load(Ordering::SeqCst);
+    let budget = (core.cfg.resilience.retry_budget as usize).max(1);
     for route in orphans {
         rep.inflight.fetch_sub(1, Ordering::SeqCst);
         rep.failed.fetch_add(1, Ordering::SeqCst);
-        if !stopping && route.tried.len() < 2 && route.within_deadline() {
+        if !stopping && route.tried.len() < budget && route.within_deadline() {
             dispatch(core, route);
         } else {
             synthesize(core, &route, InferError::Shutdown);
@@ -521,13 +597,34 @@ fn prober_loop(core: Arc<Core>) {
             if !fresh {
                 rep.healthy.store(false, Ordering::SeqCst);
             }
+            // a probe outstanding past the latency bound means the
+            // replica is alive but slow: Suspect, no new work routed
+            // to it until a clean probe round-trip clears the mark
+            let overdue = rep
+                .probe_sent
+                .lock()
+                .unwrap()
+                .map(|t| t.elapsed() > core.cfg.resilience.probe_latency_bound)
+                .unwrap_or(false);
+            if overdue {
+                rep.suspect.store(true, Ordering::SeqCst);
+            }
             let corr = core.next_probe.fetch_add(1, Ordering::Relaxed);
             let sent = {
                 let mut g = rep.conn.lock().unwrap();
                 match g.as_mut() {
-                    Some(c) => wire::write_frame(&mut c.writer, FrameKind::Ping, corr, &[])
-                        .and_then(|_| c.writer.flush())
-                        .is_ok(),
+                    Some(c) => {
+                        // keep the *oldest* unanswered probe's send time:
+                        // the latency bound judges worst outstanding age
+                        let mut p = rep.probe_sent.lock().unwrap();
+                        if p.is_none() {
+                            *p = Some(Instant::now());
+                        }
+                        drop(p);
+                        wire::write_frame(&mut c.writer, FrameKind::Ping, corr, &[])
+                            .and_then(|_| c.writer.flush())
+                            .is_ok()
+                    }
                     None => true, // raced with a death path; next round reconnects
                 }
             };
@@ -577,8 +674,20 @@ fn accept_loop(
 fn spawn_client(stream: TcpStream, core: &Arc<Core>, id: u64) -> Result<ClientHandles> {
     stream.set_nonblocking(false).context("setting client connection blocking")?;
     let _ = stream.set_nodelay(true);
-    let read_half = stream.try_clone().context("cloning client connection for reads")?;
-    let write_half = stream.try_clone().context("cloning client connection for writes")?;
+    let peer = match stream.peer_addr() {
+        Ok(a) => format!("router<-{a}"),
+        Err(_) => "router<-?".to_string(),
+    };
+    let read_half = faultnet::wrap(
+        stream.try_clone().context("cloning client connection for reads")?,
+        &peer,
+        Dir::Read,
+    );
+    let write_half = faultnet::wrap(
+        stream.try_clone().context("cloning client connection for writes")?,
+        &peer,
+        Dir::Write,
+    );
     let (tx, rx) = channel::<ClientSend>();
     core.clients.lock().unwrap().insert(id, tx);
     let reader = {
@@ -595,7 +704,7 @@ fn spawn_client(stream: TcpStream, core: &Arc<Core>, id: u64) -> Result<ClientHa
     Ok(ClientHandles { stream, reader, writer })
 }
 
-fn client_reader(core: Arc<Core>, id: u64, stream: TcpStream) {
+fn client_reader(core: Arc<Core>, id: u64, stream: FaultStream) {
     let mut r = BufReader::new(stream);
     loop {
         let frame = match wire::read_frame(&mut r, core.cfg.max_frame_bytes) {
@@ -636,8 +745,8 @@ fn client_reader(core: Arc<Core>, id: u64, stream: TcpStream) {
     core.clients.lock().unwrap().remove(&id);
 }
 
-fn client_writer(stream: TcpStream, rx: Receiver<ClientSend>) {
-    let closer = stream.try_clone().ok();
+fn client_writer(stream: FaultStream, rx: Receiver<ClientSend>) {
+    let closer = stream.get_ref().try_clone().ok();
     let mut w = BufWriter::new(stream);
     'stream: while let Ok(first) = rx.recv() {
         let mut next = Some(first);
@@ -667,17 +776,44 @@ fn client_writer(stream: TcpStream, rx: Receiver<ClientSend>) {
 // ---------------------------------------------------------------------------
 
 /// Place `route` on the first untried healthy replica in its ring
-/// order and forward it. Walks alternates on send failure; after two
-/// total attempts (retry-once) or with no routable replica left, the
-/// client gets a typed error.
+/// order and forward it. Walks alternates on send failure; once the
+/// policy's retry budget is spent, or with no routable replica left,
+/// the client gets a typed error. Retry legs (everything after the
+/// first attempt) pause for a decorrelated-jitter backoff first, and
+/// Suspect or breaker-open replicas are deprioritized: they are picked
+/// only when no trusted alternative remains.
 fn dispatch(core: &Arc<Core>, mut route: Route) {
+    let budget = (core.cfg.resilience.retry_budget as usize).max(1);
+    let mut backoff = Backoff::new(&core.cfg.resilience, splitmix64(route.user_id));
     loop {
-        if route.tried.len() >= 2 {
+        if route.tried.len() >= budget {
             synthesize(core, &route, InferError::Shutdown);
             return;
         }
+        if !route.tried.is_empty() {
+            // a retry leg: budgeted, jittered pause first — and the
+            // deadline re-checked after it
+            faultnet::policy::note_retry();
+            backoff.sleep();
+            if !route.within_deadline() {
+                synthesize(core, &route, InferError::Shutdown);
+                return;
+            }
+        }
         let pick = walk_ring(&core.ring, route.user_id, |idx| {
-            !route.tried.contains(&idx) && core.replicas[idx].healthy.load(Ordering::SeqCst)
+            let rep = &core.replicas[idx];
+            !route.tried.contains(&idx)
+                && rep.healthy.load(Ordering::SeqCst)
+                && !rep.suspect.load(Ordering::SeqCst)
+                && rep.breaker.allow()
+        })
+        .or_else(|| {
+            // last resort: a Suspect or breaker-open replica still
+            // beats answering "no replica" — deprioritized, not banned
+            walk_ring(&core.ring, route.user_id, |idx| {
+                !route.tried.contains(&idx)
+                    && core.replicas[idx].healthy.load(Ordering::SeqCst)
+            })
         });
         let Some(idx) = pick else {
             synthesize(
@@ -700,6 +836,7 @@ fn dispatch(core: &Arc<Core>, mut route: Route) {
             return;
         }
         // the send failed: reclaim the route and try an alternate
+        rep.breaker.record_err();
         let Some(reclaimed) = core.pending.lock().unwrap().remove(&corr) else {
             // the death path beat us to it and already handled the route
             return;
@@ -730,6 +867,7 @@ fn error_response(user_id: u64, err: InferError) -> InferResponse {
         variant: String::new(),
         backend: String::new(),
         replica: String::new(),
+        degraded: false,
     }
 }
 

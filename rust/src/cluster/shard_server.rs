@@ -22,10 +22,11 @@
 //! - a broken frame stream closes that connection only, never the
 //!   process;
 //! - a [`RemoteShard`] whose connection dies resolves every in-flight
-//!   op as disconnected (the tier fails over to a replica shard) and
-//!   stays dead — traffic pins to surviving replicas; reviving a shard
-//!   process means restarting its clients' tier, which re-registers
-//!   tables idempotently.
+//!   op as disconnected (the tier fails over to a replica shard), then
+//!   later dispatches attempt one reconnect per cooldown window — a
+//!   shard that comes back (or a transient reset clearing) takes
+//!   traffic again without restarting the tier, since the server's
+//!   [`ShardStore`] kept its tables.
 //!
 //! The server counts boundary bytes (shard-op frames in, responses
 //! out) — the measured counterpart of
@@ -39,12 +40,13 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::wire::{self, FrameKind, ShardLookupRequest, ShardLookupResponse};
 use crate::embedding::{ShardStore, ShardTransport};
+use crate::faultnet::{self, Dir, FaultStream, ResiliencePolicy};
 
 /// Transport knobs for the shard server.
 #[derive(Debug, Clone)]
@@ -218,13 +220,17 @@ fn conn_loop(
         return;
     }
     let _ = stream.set_nodelay(true);
+    let peer = match stream.peer_addr() {
+        Ok(a) => format!("shard<-{a}"),
+        Err(_) => "shard<-?".to_string(),
+    };
     let Ok(read_half) = stream.try_clone() else { return };
     // the accept loop's registry holds another clone of this socket, so
     // dropping the BufWriter alone would leave the connection
     // half-alive; close it explicitly on exit
     let closer = stream.try_clone().ok();
-    let mut r = BufReader::new(read_half);
-    let mut w = BufWriter::new(stream);
+    let mut r = BufReader::new(faultnet::wrap(read_half, &peer, Dir::Read));
+    let mut w = BufWriter::new(faultnet::wrap(stream, &peer, Dir::Write));
     loop {
         let frame = match wire::read_frame(&mut r, max_frame) {
             Ok(Some(f)) => f,
@@ -314,52 +320,148 @@ enum PendingOp {
 /// op can be inserted after the drain and hang forever.
 type PendingMap = Arc<Mutex<Option<HashMap<u64, PendingOp>>>>;
 
+/// How long a [`RemoteShard`] waits between reconnect attempts after
+/// its connection dies: long enough that a hard-down shard costs one
+/// cheap `connect` failure per window instead of one per op, short
+/// enough that a shard coming back (or a transient fault clearing)
+/// takes traffic again promptly.
+const RECONNECT_COOLDOWN: Duration = Duration::from_millis(200);
+
 /// A pipelined connection to one `dcinfer shard-serve` process,
 /// implementing [`ShardTransport`] — the slot-in replacement for an
 /// in-process shard thread. Any number of ops may be in flight; a
 /// background reader resolves them by correlation id. A dead
 /// connection resolves every waiter as disconnected (the tier's
-/// failover signal) and stays dead.
+/// failover signal); later dispatches attempt one reconnect per
+/// [`RECONNECT_COOLDOWN`], so a shard that comes back takes traffic
+/// again without restarting the tier.
 pub struct RemoteShard {
     addr: String,
-    stream: TcpStream,
-    writer: Mutex<Option<BufWriter<TcpStream>>>,
+    policy: ResiliencePolicy,
+    /// current connection's socket, kept for shutdown on drop/reconnect
+    stream: Mutex<TcpStream>,
+    writer: Mutex<Option<BufWriter<FaultStream>>>,
     pending: PendingMap,
     next_corr: AtomicU64,
     reader: Mutex<Option<JoinHandle<()>>>,
+    /// when the last reconnect was attempted (None = never needed one)
+    last_attempt: Mutex<Option<Instant>>,
 }
 
 impl RemoteShard {
     /// Connect eagerly — a shard address that cannot be reached at tier
     /// start is a configuration error, not a failover case.
     pub fn connect(addr: &str) -> Result<RemoteShard> {
+        Self::connect_with(addr, ResiliencePolicy::default())
+    }
+
+    /// [`Self::connect`] with an explicit resilience policy (socket
+    /// timeouts, wedge bound).
+    pub fn connect_with(addr: &str, policy: ResiliencePolicy) -> Result<RemoteShard> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to shard server {addr}"))?;
         let _ = stream.set_nodelay(true);
+        policy.apply_io_timeouts(&stream).context("applying socket timeouts")?;
+        let peer = format!("rshard->{addr}");
         let pending: PendingMap = Arc::new(Mutex::new(Some(HashMap::new())));
         let reader = {
-            let read_half = stream.try_clone().context("cloning shard connection for reads")?;
+            let read_half = faultnet::wrap(
+                stream.try_clone().context("cloning shard connection for reads")?,
+                &peer,
+                Dir::Read,
+            );
             let pending = pending.clone();
             let addr = addr.to_string();
+            let policy = policy.clone();
             std::thread::Builder::new()
                 .name("dcshard-client-read".into())
-                .spawn(move || reader_loop(read_half, pending, addr))
+                .spawn(move || reader_loop(read_half, pending, addr, policy))
                 .context("spawning shard client reader")?
         };
-        let write_half = stream.try_clone().context("cloning shard connection for writes")?;
+        let write_half = faultnet::wrap(
+            stream.try_clone().context("cloning shard connection for writes")?,
+            &peer,
+            Dir::Write,
+        );
         Ok(RemoteShard {
             addr: addr.to_string(),
-            stream,
+            policy,
+            stream: Mutex::new(stream),
             writer: Mutex::new(Some(BufWriter::new(write_half))),
             pending,
             next_corr: AtomicU64::new(1),
             reader: Mutex::new(Some(reader)),
+            last_attempt: Mutex::new(None),
         })
+    }
+
+    /// True while the connection looks alive (reader running, writer
+    /// usable); otherwise attempt one cooldown-gated reconnect and
+    /// report whether it succeeded.
+    fn ensure_connected(&self) -> bool {
+        let alive = self.pending.lock().unwrap().is_some() && self.writer.lock().unwrap().is_some();
+        if alive {
+            return true;
+        }
+        {
+            let mut g = self.last_attempt.lock().unwrap();
+            if let Some(t) = *g {
+                if t.elapsed() < RECONNECT_COOLDOWN {
+                    return false; // inside the cooldown: fail over instead
+                }
+            }
+            *g = Some(Instant::now());
+        }
+        self.try_reconnect()
+    }
+
+    /// Tear down whatever is left of the old connection and dial a
+    /// fresh one. The old reader is joined *before* the pending map is
+    /// re-armed, so its take-on-exit cannot clobber the new map.
+    fn try_reconnect(&self) -> bool {
+        if let Ok(s) = self.stream.lock().unwrap().try_clone() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        *self.writer.lock().unwrap() = None;
+        let Ok(stream) = TcpStream::connect(&self.addr) else { return false };
+        let _ = stream.set_nodelay(true);
+        if self.policy.apply_io_timeouts(&stream).is_err() {
+            return false;
+        }
+        let peer = format!("rshard->{}", self.addr);
+        let (Ok(read_raw), Ok(write_raw)) = (stream.try_clone(), stream.try_clone()) else {
+            return false;
+        };
+        *self.pending.lock().unwrap() = Some(HashMap::new());
+        let reader = {
+            let read_half = faultnet::wrap(read_raw, &peer, Dir::Read);
+            let pending = self.pending.clone();
+            let addr = self.addr.clone();
+            let policy = self.policy.clone();
+            std::thread::Builder::new()
+                .name("dcshard-client-read".into())
+                .spawn(move || reader_loop(read_half, pending, addr, policy))
+        };
+        let Ok(reader) = reader else {
+            let _ = self.pending.lock().unwrap().take();
+            return false;
+        };
+        *self.reader.lock().unwrap() = Some(reader);
+        *self.writer.lock().unwrap() =
+            Some(BufWriter::new(faultnet::wrap(write_raw, &peer, Dir::Write)));
+        *self.stream.lock().unwrap() = stream;
+        true
     }
 
     /// Fire one op. Every failure path drops the response sender, so
     /// the caller's receiver disconnects — the tier's failover signal.
     fn dispatch(&self, req: &ShardLookupRequest, op: PendingOp) {
+        if !self.ensure_connected() {
+            return; // op dropped: the receiver disconnects immediately
+        }
         let corr = self.next_corr.fetch_add(1, Ordering::Relaxed);
         {
             let mut g = self.pending.lock().unwrap();
@@ -367,7 +469,8 @@ impl RemoteShard {
                 Some(map) => {
                     map.insert(corr, op);
                 }
-                // reader already exited: connection dead, op dropped
+                // reader exited between the liveness check and here:
+                // connection dead, op dropped
                 None => return,
             }
         }
@@ -380,8 +483,8 @@ impl RemoteShard {
             None => false,
         };
         if !sent {
-            // the connection is dead and stays dead: drop the writer so
-            // later ops fail fast, and resolve this op as disconnected
+            // the connection is dead: drop the writer so later ops hit
+            // the reconnect path, and resolve this op as disconnected
             *wg = None;
             if let Some(map) = self.pending.lock().unwrap().as_mut() {
                 map.remove(&corr);
@@ -447,7 +550,7 @@ impl ShardTransport for RemoteShard {
 
 impl Drop for RemoteShard {
     fn drop(&mut self) {
-        let _ = self.stream.shutdown(Shutdown::Both);
+        let _ = self.stream.lock().unwrap().shutdown(Shutdown::Both);
         if let Some(h) = self.reader.lock().unwrap().take() {
             let _ = h.join();
         }
@@ -491,11 +594,38 @@ fn resolve(op: PendingOp, resp: ShardLookupResponse, addr: &str) {
     }
 }
 
-fn reader_loop(stream: TcpStream, pending: PendingMap, addr: String) {
+fn reader_loop(stream: FaultStream, pending: PendingMap, addr: String, policy: ResiliencePolicy) {
     let mut r = BufReader::new(stream);
+    let mut last_frame = Instant::now();
     loop {
-        match wire::read_frame(&mut r, wire::DEFAULT_MAX_FRAME) {
-            Ok(Some(f)) if f.kind == FrameKind::ShardResponse => {
+        let f = match wire::read_frame(&mut r, wire::DEFAULT_MAX_FRAME) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // shard closed cleanly
+            Err(wire::WireError::TimedOut { mid_frame: false }) => {
+                // idle tick: only a wedged peer (ops owed, nothing
+                // arriving) justifies tearing the connection down
+                faultnet::policy::note_timeout(false);
+                let waiting = pending.lock().unwrap().as_ref().is_some_and(|m| !m.is_empty());
+                if waiting && last_frame.elapsed() >= policy.wedge_after {
+                    eprintln!("shard client {addr}: peer wedged, closing");
+                    break;
+                }
+                continue;
+            }
+            Err(e @ wire::WireError::TimedOut { mid_frame: true }) => {
+                // bytes were consumed: the stream is no longer aligned
+                faultnet::policy::note_timeout(true);
+                eprintln!("shard client {addr}: connection read failed: {e}");
+                break;
+            }
+            Err(e) => {
+                eprintln!("shard client {addr}: connection read failed: {e}");
+                break;
+            }
+        };
+        last_frame = Instant::now();
+        match f.kind {
+            FrameKind::ShardResponse => {
                 let op = pending.lock().unwrap().as_mut().and_then(|m| m.remove(&f.corr));
                 // unmatched corr: an op we stopped waiting for
                 let Some(op) = op else { continue };
@@ -507,13 +637,8 @@ fn reader_loop(stream: TcpStream, pending: PendingMap, addr: String) {
                     }
                 }
             }
-            Ok(Some(_)) => {
+            _ => {
                 eprintln!("shard client {addr}: unexpected frame kind, closing");
-                break;
-            }
-            Ok(None) => break, // shard closed cleanly
-            Err(e) => {
-                eprintln!("shard client {addr}: connection read failed: {e}");
                 break;
             }
         }
@@ -554,6 +679,7 @@ mod tests {
             cache_capacity_rows: 16,
             admit_after: 1,
             remote_shards: addrs,
+            ..Default::default()
         })
         .unwrap();
         let id = svc.register_table("net/emb", &table, false).unwrap();
@@ -588,6 +714,7 @@ mod tests {
             cache_capacity_rows: 0,
             admit_after: 1,
             remote_shards: addrs,
+            ..Default::default()
         })
         .unwrap();
         let id = svc.register_table("net/emb", &table, false).unwrap();

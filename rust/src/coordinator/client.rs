@@ -33,6 +33,8 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::faultnet::{self, Dir, FaultStream, ResiliencePolicy};
+
 use super::request::{InferError, InferRequest, InferResponse, SeqDone, SeqRequest};
 use super::wire::{self, FrameKind};
 
@@ -119,7 +121,7 @@ struct SeqPendingEntry {
 /// A pipelined connection to a serving server.
 pub struct DcClient {
     stream: TcpStream,
-    writer: Mutex<BufWriter<TcpStream>>,
+    writer: Mutex<BufWriter<FaultStream>>,
     pending: Arc<Mutex<HashMap<u64, PendingEntry>>>,
     seq_pending: Arc<Mutex<HashMap<u64, SeqPendingEntry>>>,
     next_corr: AtomicU64,
@@ -127,22 +129,47 @@ pub struct DcClient {
 }
 
 impl DcClient {
-    /// Connect to a [`super::server::ServingServer`] at `addr`.
+    /// Connect to a [`super::server::ServingServer`] at `addr` with the
+    /// default [`ResiliencePolicy`].
     pub fn connect(addr: impl ToSocketAddrs) -> Result<DcClient> {
+        Self::connect_with(addr, ResiliencePolicy::default())
+    }
+
+    /// Connect with an explicit resilience policy: both socket timeouts
+    /// are set from it, so neither the demux thread nor a submitting
+    /// caller can block forever on a wedged peer. A read-timeout tick
+    /// with responses outstanding and no frame for `policy.wedge_after`
+    /// tears the connection down (every waiter gets a typed
+    /// [`InferError::Shutdown`]).
+    pub fn connect_with(addr: impl ToSocketAddrs, policy: ResiliencePolicy) -> Result<DcClient> {
         let stream = TcpStream::connect(addr).context("connecting to serving server")?;
         let _ = stream.set_nodelay(true);
+        policy.apply_io_timeouts(&stream).context("applying socket timeouts")?;
+        let peer = match stream.peer_addr() {
+            Ok(a) => format!("client->{a}"),
+            Err(_) => "client->?".to_string(),
+        };
         let pending: Arc<Mutex<HashMap<u64, PendingEntry>>> = Arc::new(Mutex::new(HashMap::new()));
         let seq_pending: Arc<Mutex<HashMap<u64, SeqPendingEntry>>> =
             Arc::new(Mutex::new(HashMap::new()));
         let reader = {
-            let read_half = stream.try_clone().context("cloning connection for reads")?;
+            let read_half = faultnet::wrap(
+                stream.try_clone().context("cloning connection for reads")?,
+                &peer,
+                Dir::Read,
+            );
             let (pending, seq_pending) = (pending.clone(), seq_pending.clone());
+            let policy = policy.clone();
             std::thread::Builder::new()
                 .name("dcclient-read".into())
-                .spawn(move || reader_loop(read_half, pending, seq_pending))
+                .spawn(move || reader_loop(read_half, policy, pending, seq_pending))
                 .context("spawning client reader")?
         };
-        let write_half = stream.try_clone().context("cloning connection for writes")?;
+        let write_half = faultnet::wrap(
+            stream.try_clone().context("cloning connection for writes")?,
+            &peer,
+            Dir::Write,
+        );
         Ok(DcClient {
             stream,
             writer: Mutex::new(BufWriter::new(write_half)),
@@ -245,73 +272,95 @@ impl Drop for DcClient {
 }
 
 fn reader_loop(
-    stream: TcpStream,
+    stream: FaultStream,
+    policy: ResiliencePolicy,
     pending: Arc<Mutex<HashMap<u64, PendingEntry>>>,
     seq_pending: Arc<Mutex<HashMap<u64, SeqPendingEntry>>>,
 ) {
     let mut r = BufReader::new(stream);
+    let mut last_frame = Instant::now();
     loop {
-        match wire::read_frame(&mut r, wire::DEFAULT_MAX_FRAME) {
-            Ok(Some(f)) if f.kind == FrameKind::Response => {
-                match wire::decode_response(&f.payload) {
-                    Ok(resp) => {
-                        // unmatched corr: a response we stopped waiting
-                        // for (submit failed after insert) — drop it
-                        if let Some(p) = pending.lock().unwrap().remove(&f.corr) {
-                            let _ = p.tx.send(ClientResponse {
-                                rtt_us: p.sent.elapsed().as_secs_f64() * 1e6,
-                                deadline_ms: p.deadline_ms,
-                                resp,
-                            });
-                        }
-                    }
-                    Err(e) => {
-                        eprintln!("dcclient: undecodable response, closing: {e}");
-                        break;
-                    }
+        let f = match wire::read_frame(&mut r, wire::DEFAULT_MAX_FRAME) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // server closed cleanly
+            Err(wire::WireError::TimedOut { mid_frame: false }) => {
+                // idle tick: nothing consumed, the stream is still
+                // frame-aligned — only a wedged peer (responses owed,
+                // nothing arriving) justifies tearing down
+                faultnet::policy::note_timeout(false);
+                let waiting = !pending.lock().unwrap().is_empty()
+                    || !seq_pending.lock().unwrap().is_empty();
+                if waiting && last_frame.elapsed() >= policy.wedge_after {
+                    eprintln!(
+                        "dcclient: peer wedged (no frame in {:?} with responses owed), closing",
+                        policy.wedge_after
+                    );
+                    break;
                 }
+                continue;
             }
-            Ok(Some(f)) if f.kind == FrameKind::SeqToken => {
-                match wire::decode_seq_token(&f.payload) {
-                    Ok((step, token)) => {
-                        // mid-stream event: look up without removing
-                        if let Some(p) = seq_pending.lock().unwrap().get(&f.corr) {
-                            let _ = p.tx.send(SeqClientEvent::Token {
-                                step,
-                                token,
-                                rtt_us: p.sent.elapsed().as_secs_f64() * 1e6,
-                            });
-                        }
-                    }
-                    Err(e) => {
-                        eprintln!("dcclient: undecodable token frame, closing: {e}");
-                        break;
-                    }
-                }
-            }
-            Ok(Some(f)) if f.kind == FrameKind::SeqDone => {
-                match wire::decode_seq_done(&f.payload) {
-                    Ok(done) => {
-                        if let Some(p) = seq_pending.lock().unwrap().remove(&f.corr) {
-                            let _ = p.tx.send(SeqClientEvent::Done {
-                                done,
-                                rtt_us: p.sent.elapsed().as_secs_f64() * 1e6,
-                            });
-                        }
-                    }
-                    Err(e) => {
-                        eprintln!("dcclient: undecodable done frame, closing: {e}");
-                        break;
-                    }
-                }
-            }
-            Ok(Some(_)) => {
-                eprintln!("dcclient: unexpected frame kind from server, closing");
+            Err(e @ wire::WireError::TimedOut { mid_frame: true }) => {
+                // bytes were consumed: the stream is no longer aligned
+                faultnet::policy::note_timeout(true);
+                eprintln!("dcclient: connection read failed: {e}");
                 break;
             }
-            Ok(None) => break, // server closed cleanly
             Err(e) => {
                 eprintln!("dcclient: connection read failed: {e}");
+                break;
+            }
+        };
+        last_frame = Instant::now();
+        match f.kind {
+            FrameKind::Response => match wire::decode_response(&f.payload) {
+                Ok(resp) => {
+                    // unmatched corr: a response we stopped waiting
+                    // for (submit failed after insert) — drop it
+                    if let Some(p) = pending.lock().unwrap().remove(&f.corr) {
+                        let _ = p.tx.send(ClientResponse {
+                            rtt_us: p.sent.elapsed().as_secs_f64() * 1e6,
+                            deadline_ms: p.deadline_ms,
+                            resp,
+                        });
+                    }
+                }
+                Err(e) => {
+                    eprintln!("dcclient: undecodable response, closing: {e}");
+                    break;
+                }
+            },
+            FrameKind::SeqToken => match wire::decode_seq_token(&f.payload) {
+                Ok((step, token)) => {
+                    // mid-stream event: look up without removing
+                    if let Some(p) = seq_pending.lock().unwrap().get(&f.corr) {
+                        let _ = p.tx.send(SeqClientEvent::Token {
+                            step,
+                            token,
+                            rtt_us: p.sent.elapsed().as_secs_f64() * 1e6,
+                        });
+                    }
+                }
+                Err(e) => {
+                    eprintln!("dcclient: undecodable token frame, closing: {e}");
+                    break;
+                }
+            },
+            FrameKind::SeqDone => match wire::decode_seq_done(&f.payload) {
+                Ok(done) => {
+                    if let Some(p) = seq_pending.lock().unwrap().remove(&f.corr) {
+                        let _ = p.tx.send(SeqClientEvent::Done {
+                            done,
+                            rtt_us: p.sent.elapsed().as_secs_f64() * 1e6,
+                        });
+                    }
+                }
+                Err(e) => {
+                    eprintln!("dcclient: undecodable done frame, closing: {e}");
+                    break;
+                }
+            },
+            _ => {
+                eprintln!("dcclient: unexpected frame kind from server, closing");
                 break;
             }
         }
@@ -335,6 +384,7 @@ fn reader_loop(
                 variant: String::new(),
                 backend: String::new(),
                 replica: String::new(),
+                degraded: false,
             },
         });
     }

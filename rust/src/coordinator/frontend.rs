@@ -354,6 +354,7 @@ impl ServingFrontend {
                     router,
                     metrics: metrics.clone(),
                     inflight: inflight.clone(),
+                    sparse: sparse.clone(),
                 };
                 std::thread::Builder::new()
                     .name(format!("lane-{}", svc.model_id()))
@@ -526,6 +527,10 @@ struct LaneWorker {
     router: Arc<Router>,
     metrics: Arc<ServeMetrics>,
     inflight: Arc<InFlight>,
+    /// shared sparse tier, sampled around each batch's execution to
+    /// stamp the degraded flag on responses whose sparse contributions
+    /// were served stale/zero (see DESIGN.md "Fault model & resilience")
+    sparse: Option<Arc<EmbeddingShardService>>,
 }
 
 impl LaneWorker {
@@ -592,10 +597,19 @@ impl LaneWorker {
         let metrics = self.metrics.clone();
         let inflight = self.inflight.clone();
         let fallback_label = self.backend_label.clone();
+        let sparse = self.sparse.clone();
         inflight.begin();
         let formed_at = Instant::now();
         std::thread::spawn(move || {
+            // sample the tier's degraded-event counter around execution:
+            // if it moved, some lookup this batch issued was served
+            // stale/zero and every response in the batch is flagged.
+            // Concurrent batches on the same tier may over-flag — the
+            // contract is "degraded implies possibly-inexact", never the
+            // reverse, so erring toward flagging is the safe direction.
+            let degraded_before = sparse.as_ref().map_or(0, |s| s.degraded_events());
             let result = executor.run(&name, inputs);
+            let degraded = sparse.as_ref().map_or(0, |s| s.degraded_events()) > degraded_before;
             router.complete(exec_id, variant);
             let outcome = result.and_then(|resp| {
                 service
@@ -605,6 +619,9 @@ impl LaneWorker {
             match outcome {
                 Ok((rows, exec_us, backend)) => {
                     metrics.record_backend(&backend, n);
+                    if degraded {
+                        metrics.record_degraded(n);
+                    }
                     for ((req, row), tx) in
                         requests.iter().zip(rows.into_iter()).zip(responders.into_iter())
                     {
@@ -623,6 +640,7 @@ impl LaneWorker {
                             variant: name.clone(),
                             backend: backend.clone(),
                             replica: String::new(),
+                            degraded,
                         });
                     }
                 }
@@ -642,6 +660,7 @@ impl LaneWorker {
                             variant: name.clone(),
                             backend: fallback_label.clone(),
                             replica: String::new(),
+                            degraded: false,
                         });
                     }
                 }
@@ -672,6 +691,7 @@ impl LaneWorker {
                 variant: variant_name.to_string(),
                 backend: self.backend_label.clone(),
                 replica: String::new(),
+                degraded: false,
             });
         }
     }

@@ -9,6 +9,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::embedding::shard::{EmbeddingShardService, SparseTierSnapshot};
+use crate::faultnet::{resilience_snapshot, ResilienceSnapshot};
 use crate::util::stats::Samples;
 
 /// Shared metrics sink (one per model lane). When the frontend runs a
@@ -34,6 +35,8 @@ struct Inner {
     served: u64,
     failed: u64,
     shed: u64,
+    /// served with degraded sparse contributions (stale-cache/zero)
+    degraded: u64,
     deadline_misses: u64,
     batches: u64,
     /// `backend/precision` label -> (batches, requests) served by it
@@ -47,6 +50,11 @@ pub struct MetricsSnapshot {
     pub failed: u64,
     /// requests rejected by admission control (`InferError::Overloaded`)
     pub shed: u64,
+    /// requests answered with the `degraded` flag set: well-formed
+    /// outputs whose sparse contributions were served stale/zero while
+    /// their row range was unreachable (counted inside `served`, not in
+    /// addition to it)
+    pub degraded: u64,
     /// requests queued or in flight at snapshot time
     pub queue_depth: u64,
     pub batches: u64,
@@ -66,6 +74,10 @@ pub struct MetricsSnapshot {
     /// sparse-tier counters (hit/miss/eviction per table, boundary
     /// bytes) — shared across lanes, `None` without a sparse tier
     pub sparse: Option<SparseTierSnapshot>,
+    /// process-global resilience counters (timeouts, retries, breaker
+    /// trips, hedges, degraded serves) — shared by every transport in
+    /// the process, not per lane
+    pub resilience: ResilienceSnapshot,
 }
 
 impl Default for ServeMetrics {
@@ -110,6 +122,13 @@ impl ServeMetrics {
     /// the door so queued traffic keeps meeting its deadlines).
     pub fn record_shed(&self, n: usize) {
         self.inner.lock().unwrap().shed += n as u64;
+    }
+
+    /// Record `n` requests answered with the `degraded` flag (their
+    /// sparse contributions were served stale/zero — graceful
+    /// degradation instead of failure).
+    pub fn record_degraded(&self, n: usize) {
+        self.inner.lock().unwrap().degraded += n as u64;
     }
 
     /// One request entered the lane (queued or in flight).
@@ -166,6 +185,7 @@ impl ServeMetrics {
             served: g.served,
             failed: g.failed,
             shed: g.shed,
+            degraded: g.degraded,
             queue_depth: self.depth.load(Ordering::SeqCst),
             batches: g.batches,
             deadline_misses: g.deadline_misses,
@@ -184,6 +204,7 @@ impl ServeMetrics {
                 .map(|(k, &(b, r))| (k.clone(), b, r))
                 .collect(),
             sparse: self.sparse.as_ref().map(|t| t.snapshot()),
+            resilience: resilience_snapshot(),
         }
     }
 }
@@ -191,14 +212,15 @@ impl ServeMetrics {
 impl MetricsSnapshot {
     pub fn print(&self) {
         println!(
-            "served {} requests in {} batches (mean batch {:.1}, fill {:.0}%), {} deadline misses, {} failed, {} shed",
+            "served {} requests in {} batches (mean batch {:.1}, fill {:.0}%), {} deadline misses, {} failed, {} shed, {} degraded",
             self.served,
             self.batches,
             self.mean_batch,
             self.mean_fill * 100.0,
             self.deadline_misses,
             self.failed,
-            self.shed
+            self.shed,
+            self.degraded
         );
         println!(
             "latency us: queue p50/p99 {:.0}/{:.0}  exec p50/p99 {:.0}/{:.0}  total p50/p99 {:.0}/{:.0}",
@@ -210,6 +232,20 @@ impl MetricsSnapshot {
             self.total_p99_us
         );
         println!("throughput: {:.0} req/s (queue depth now {})", self.qps, self.queue_depth);
+        let r = &self.resilience;
+        if r != &ResilienceSnapshot::default() {
+            println!(
+                "resilience: {} retries, {} breaker trips, {}/{} hedges won, \
+                 {} idle + {} wedged timeouts, {} degraded serves (process-global)",
+                r.retries,
+                r.breaker_trips,
+                r.hedges_won,
+                r.hedges_fired,
+                r.timeouts_idle,
+                r.timeouts_wedged,
+                r.degraded
+            );
+        }
         for (label, batches, requests) in &self.by_backend {
             println!("backend {label}: {batches} batches / {requests} requests");
         }

@@ -153,6 +153,13 @@ pub struct InferResponse {
     /// in-process submissions) — this is what lets `dcinfer loadgen`
     /// attribute responses per replica and observe cluster failover
     pub replica: String,
+    /// the sparse tier served stale-cache or zero contributions for an
+    /// unreachable row range while producing this answer (graceful
+    /// degradation — see DESIGN.md "Fault model & resilience"). The
+    /// outputs are well-formed but may differ from the fault-free
+    /// reference; consumers that need exactness must treat this like an
+    /// error, and `loadgen` reports the degraded rate separately.
+    pub degraded: bool,
 }
 
 impl InferResponse {
@@ -201,6 +208,7 @@ mod tests {
             variant: "m_b4".into(),
             backend: "native/fp32".into(),
             replica: String::new(),
+            degraded: false,
         };
         assert_eq!(resp.scalar_f32(), Some(0.25));
         assert!((resp.total_us() - 100.0).abs() < 1e-12);
@@ -218,6 +226,7 @@ mod tests {
             variant: String::new(),
             backend: String::new(),
             replica: String::new(),
+            degraded: false,
         };
         assert!(!resp.is_ok());
         assert_eq!(resp.scalar_f32(), None);

@@ -49,6 +49,8 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::faultnet::{self, Dir, FaultStream};
+
 use super::frontend::ServingFrontend;
 use super::request::{InferError, InferResponse, SeqDone};
 use super::seqserve::{SeqEngine, SeqEvent, SeqUpdate};
@@ -244,8 +246,22 @@ fn spawn_conn(
     // latency over throughput: response frames are small, don't let
     // Nagle hold them hostage
     let _ = stream.set_nodelay(true);
-    let read_half = stream.try_clone().context("cloning connection for reads")?;
-    let write_half = stream.try_clone().context("cloning connection for writes")?;
+    // fault injection hooks in at the socket seam, before buffering, so
+    // an installed plan sees every byte this connection moves
+    let peer = match stream.peer_addr() {
+        Ok(a) => format!("serve<-{a}"),
+        Err(_) => "serve<-?".to_string(),
+    };
+    let read_half = faultnet::wrap(
+        stream.try_clone().context("cloning connection for reads")?,
+        &peer,
+        Dir::Read,
+    );
+    let write_half = faultnet::wrap(
+        stream.try_clone().context("cloning connection for writes")?,
+        &peer,
+        Dir::Write,
+    );
     let (done_tx, done_rx) = channel::<Outbound>();
     // the frontend's completion path is typed `Sender<InferResponse>`;
     // a pump thread wraps those into `Outbound` so the writer keeps a
@@ -320,6 +336,7 @@ fn synth_response(corr: u64, model: &str, err: InferError) -> InferResponse {
         variant: String::new(),
         backend: String::new(),
         replica: String::new(),
+        degraded: false,
     }
 }
 
@@ -335,7 +352,7 @@ struct ReaderCtx {
     max_frame: u32,
 }
 
-fn conn_reader(stream: TcpStream, ctx: ReaderCtx) {
+fn conn_reader(stream: FaultStream, ctx: ReaderCtx) {
     let ReaderCtx { frontend, seq, done, resp_tx, sequpd_tx, ids, max_frame } = ctx;
     let mut r = BufReader::new(stream);
     loop {
@@ -443,7 +460,7 @@ fn conn_reader(stream: TcpStream, ctx: ReaderCtx) {
 }
 
 fn conn_writer(
-    stream: TcpStream,
+    stream: FaultStream,
     done: Receiver<Outbound>,
     ids: Arc<Mutex<HashMap<u64, u64>>>,
     replica_label: String,
@@ -451,7 +468,7 @@ fn conn_writer(
     // the registry holds another clone of this socket, so dropping the
     // BufWriter alone would leave the connection half-alive; close it
     // explicitly once the response stream ends
-    let closer = stream.try_clone().ok();
+    let closer = stream.get_ref().try_clone().ok();
     let mut w = BufWriter::new(stream);
     'stream: while let Ok(first) = done.recv() {
         let mut next = Some(first);

@@ -189,6 +189,16 @@ impl HotRowCache {
         }
     }
 
+    /// Non-mutating probe for degraded-mode serving: the cached row, if
+    /// present, with **no** counter, recency-bit or admission-filter
+    /// updates. Stale reads taken while a row range is unreachable must
+    /// not distort the statistics that steer the cache once the range
+    /// comes back.
+    pub fn peek(&self, table: u32, row: u32) -> Option<&[f32]> {
+        let slot = *self.map.get(&key_of(table, row))?;
+        Some(&self.slots[slot].data)
+    }
+
     /// Rows currently cached.
     pub fn len(&self) -> usize {
         self.slots.len()
@@ -276,6 +286,22 @@ mod tests {
         let mut sink = Vec::new();
         assert_eq!(c.lookup_collect(t, 5, &mut sink), CacheOutcome::Hit);
         assert_eq!(sink, vec![1.0]);
+    }
+
+    #[test]
+    fn peek_reads_without_touching_counters_or_recency() {
+        let mut c = HotRowCache::new(2, 1);
+        let t = c.register_table();
+        c.insert(t, 0, &[0.5]);
+        assert_eq!(c.peek(t, 0), Some(&[0.5f32][..]));
+        assert_eq!(c.peek(t, 9), None);
+        let s = c.counters()[t as usize];
+        assert_eq!((s.hits, s.misses), (0, 0), "peek must not count as a probe");
+        // recency untouched: row 0 never earned its bit, so filling the
+        // second slot and inserting a third row evicts row 0 first
+        c.insert(t, 1, &[1.0]);
+        c.insert(t, 2, &[2.0]);
+        assert_eq!(c.peek(t, 0), None, "peek must not have set the recency bit");
     }
 
     #[test]

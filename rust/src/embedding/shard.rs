@@ -29,8 +29,17 @@
 //! - [`EmbeddingShardService`]: the routing client. Tables register
 //!   once and are shared by every executor of a
 //!   [`crate::coordinator::ServingFrontend`]; pooled lookups fan out
-//!   per row range, fail over to replica shards on a dead or erroring
-//!   transport, and reduce in f64.
+//!   per row range and reduce in f64. Failover consults the unified
+//!   [`crate::faultnet::ResiliencePolicy`]: replicas whose circuit
+//!   breaker is open are deprioritized (never banned — the first is
+//!   still tried when every breaker is open so a total outage can
+//!   recover), a hedged duplicate fires on the next replica once the
+//!   tier's EWMA tail-latency estimate elapses, and when every
+//!   replica of a row range has failed the lookup *degrades* instead
+//!   of erroring: stale hot-row-cache entries (or zero vectors as
+//!   last resort) stand in for the unreachable partials and the
+//!   lookup is counted in [`SparseTierSnapshot::degraded_lookups`] so
+//!   the frontend can stamp the affected responses `degraded`.
 //! - [`super::cache::HotRowCache`]: a bounded dequantized-row cache in
 //!   front of the shards with frequency-gated admission, absorbing the
 //!   zipf head of the id distribution.
@@ -54,12 +63,14 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
+use crate::faultnet::{self, CircuitBreaker, LatencyEstimator, ResiliencePolicy};
 use crate::util::json::Json;
 
 use super::cache::{CacheOutcome, HotRowCache};
@@ -83,6 +94,10 @@ pub struct SparseTierConfig {
     /// `shards` addresses of `dcinfer shard-serve` processes; slot
     /// `g + k * ranges()` is replica `k` of row range `g`.
     pub remote_shards: Vec<String>,
+    /// The unified resilience knobs the routing client consults: the
+    /// per-op deadline (`read_timeout`), breaker thresholds for replica
+    /// deprioritization, and the hedge-delay clamp.
+    pub resilience: ResiliencePolicy,
 }
 
 impl Default for SparseTierConfig {
@@ -93,6 +108,7 @@ impl Default for SparseTierConfig {
             cache_capacity_rows: 4096,
             admit_after: 2,
             remote_shards: Vec::new(),
+            resilience: ResiliencePolicy::default(),
         }
     }
 }
@@ -527,6 +543,11 @@ struct TierCounters {
     egress_bytes: AtomicU64,
     row_fetch_bytes: AtomicU64,
     failovers: AtomicU64,
+    hedges_fired: AtomicU64,
+    hedges_won: AtomicU64,
+    degraded_lookups: AtomicU64,
+    stale_rows: AtomicU64,
+    zero_rows: AtomicU64,
 }
 
 /// Per-table tier statistics (cache counters plus identity).
@@ -573,6 +594,20 @@ pub struct SparseTierSnapshot {
     pub row_fetch_bytes: u64,
     /// operations re-sent to a replica after a shard died or erred
     pub failovers: u64,
+    /// hedged duplicates fired after the tail-latency trigger elapsed
+    pub hedges_fired: u64,
+    /// hedged duplicates whose answer arrived before the primary's
+    pub hedges_won: u64,
+    /// lookups that served any stale/zero contribution because every
+    /// replica of a row range had failed
+    pub degraded_lookups: u64,
+    /// rows served from the hot cache without a freshness check while
+    /// their range was unreachable
+    pub stale_rows: u64,
+    /// rows served as zero vectors (degraded last resort)
+    pub zero_rows: u64,
+    /// closed/half-open -> open transitions across the tier's breakers
+    pub breaker_trips: u64,
     pub tables: Vec<TableTierStats>,
 }
 
@@ -604,6 +639,10 @@ pub struct EmbeddingShardService {
     cache: Mutex<HotRowCache>,
     counters: TierCounters,
     replica_rr: AtomicUsize,
+    /// one circuit breaker per transport slot, from `cfg.resilience`
+    breakers: Vec<CircuitBreaker>,
+    /// tier-wide tail-latency estimate driving the hedge trigger
+    latency: LatencyEstimator,
 }
 
 impl std::fmt::Debug for EmbeddingShardService {
@@ -630,8 +669,11 @@ impl EmbeddingShardService {
             }
         } else {
             for addr in &cfg.remote_shards {
-                let shard = crate::cluster::shard_server::RemoteShard::connect(addr)
-                    .with_context(|| format!("connecting to remote shard {addr}"))?;
+                let shard = crate::cluster::shard_server::RemoteShard::connect_with(
+                    addr,
+                    cfg.resilience.clone(),
+                )
+                .with_context(|| format!("connecting to remote shard {addr}"))?;
                 transports.push(Arc::new(shard));
             }
         }
@@ -652,6 +694,7 @@ impl EmbeddingShardService {
             cfg.shards
         );
         let cache = Mutex::new(HotRowCache::new(cfg.cache_capacity_rows, cfg.admit_after));
+        let breakers = (0..cfg.shards).map(|_| cfg.resilience.breaker()).collect();
         Ok(Arc::new(EmbeddingShardService {
             n_ranges: cfg.ranges(),
             cfg,
@@ -660,6 +703,8 @@ impl EmbeddingShardService {
             cache,
             counters: TierCounters::default(),
             replica_rr: AtomicUsize::new(0),
+            breakers,
+            latency: LatencyEstimator::new(Duration::from_millis(1)),
         }))
     }
 
@@ -669,20 +714,50 @@ impl EmbeddingShardService {
 
     /// The transports holding replicas of range `g`, starting from a
     /// round-robin pick so load spreads, then the alternates in order —
-    /// the failover sequence for one operation.
+    /// the failover sequence for one operation. Replicas whose circuit
+    /// breaker rejects traffic are moved to the back (deprioritized,
+    /// never banned: with every breaker open the original order stands,
+    /// so a total outage still sees trial traffic and can recover).
     fn replica_order(&self, g: usize) -> Vec<usize> {
         let k0 = self.replica_rr.fetch_add(1, Ordering::Relaxed) % self.cfg.replication;
-        (0..self.cfg.replication)
+        let order: Vec<usize> = (0..self.cfg.replication)
             .map(|i| g + ((k0 + i) % self.cfg.replication) * self.n_ranges)
-            .collect()
+            .collect();
+        if order.len() == 1 {
+            return order;
+        }
+        // `allow()` half-opens a cooled breaker, so consult it exactly
+        // once per replica per op (never inside a sort comparator)
+        let allowed: Vec<bool> = order.iter().map(|&s| self.breakers[s].allow()).collect();
+        if allowed.iter().all(|&a| !a) {
+            return order;
+        }
+        let mut out = Vec::with_capacity(order.len());
+        for (i, &s) in order.iter().enumerate() {
+            if allowed[i] {
+                out.push(s);
+            }
+        }
+        for (i, &s) in order.iter().enumerate() {
+            if !allowed[i] {
+                out.push(s);
+            }
+        }
+        out
     }
 
     /// Collect one fanned-out operation, failing over through `order`
-    /// (replica transport indices; `order[0]` already holds `rx`). A
-    /// disconnected receiver (dead shard) and an `Err` answer (e.g. a
-    /// restarted remote shard that lost its slices) both advance to the
-    /// next replica; the error surfaces only when every replica has
-    /// failed.
+    /// (replica transport indices; `order[0]` already holds `rx`).
+    ///
+    /// Three escalations, all governed by
+    /// [`SparseTierConfig::resilience`]: a replica that answers `Err`
+    /// or drops its sender (dead shard, restarted process) advances to
+    /// the next untried replica immediately; a replica that is merely
+    /// *slow* gets one hedged duplicate on the next replica once the
+    /// tier's tail-latency estimate elapses, first answer wins; and the
+    /// whole op gives up at `read_timeout`, leaving the caller to
+    /// degrade or surface the error. Every outcome feeds the per-slot
+    /// circuit breakers.
     fn recv_with_failover<T>(
         &self,
         what: &str,
@@ -690,25 +765,147 @@ impl EmbeddingShardService {
         rx: Receiver<Result<T>>,
         resend: impl Fn(&dyn ShardTransport) -> Receiver<Result<T>>,
     ) -> Result<T> {
-        let mut rx = rx;
-        let mut tried = 1;
-        loop {
-            let err = match rx.recv() {
-                Ok(Ok(v)) => return Ok(v),
-                Ok(Err(e)) => e,
-                Err(_) => {
-                    let label = self.transports[order[tried - 1]].label();
-                    anyhow!("embedding shard {label} dropped a {what}")
-                }
-            };
-            if tried >= order.len() {
-                return Err(err)
-                    .with_context(|| format!("{what} failed on all {} replica(s)", order.len()));
-            }
-            self.counters.failovers.fetch_add(1, Ordering::Relaxed);
-            rx = resend(&*self.transports[order[tried]]);
-            tried += 1;
+        struct InFlight<T> {
+            slot: usize,
+            rx: Receiver<Result<T>>,
+            hedge: bool,
         }
+        let policy = &self.cfg.resilience;
+        let started = Instant::now();
+        let deadline = started + policy.read_timeout;
+        let hedge_at = started + self.latency.hedge_delay(policy);
+        let mut inflight = vec![InFlight { slot: order[0], rx, hedge: false }];
+        let mut next = 1usize;
+        let mut hedged = false;
+        let mut last_err = anyhow!("{what}: no replica answered");
+        loop {
+            if inflight.is_empty() {
+                // every attempt so far failed: advance to the next replica
+                if next >= order.len() {
+                    return Err(last_err).with_context(|| {
+                        format!("{what} failed on all {} replica(s)", order.len())
+                    });
+                }
+                let slot = order[next];
+                next += 1;
+                self.counters.failovers.fetch_add(1, Ordering::Relaxed);
+                faultnet::policy::note_retry();
+                inflight.push(InFlight { slot, rx: resend(&*self.transports[slot]), hedge: false });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                // op deadline: whatever is still in flight is too late
+                for f in &inflight {
+                    self.breakers[f.slot].record_err();
+                }
+                return Err(anyhow!(
+                    "{what} timed out after {:?} with {} attempt(s) in flight",
+                    policy.read_timeout,
+                    inflight.len()
+                ))
+                .with_context(|| format!("{what} failed on all {} replica(s)", order.len()));
+            }
+            if !hedged && now >= hedge_at && next < order.len() {
+                // slow primary: duplicate the op on the next replica
+                hedged = true;
+                let slot = order[next];
+                next += 1;
+                self.counters.hedges_fired.fetch_add(1, Ordering::Relaxed);
+                faultnet::policy::note_hedge_fired();
+                inflight.push(InFlight { slot, rx: resend(&*self.transports[slot]), hedge: true });
+            }
+            let wake = if !hedged && next < order.len() { hedge_at.min(deadline) } else { deadline };
+            let wait = wake
+                .saturating_duration_since(now)
+                .min(Duration::from_millis(5))
+                .max(Duration::from_micros(50));
+            let mut i = 0;
+            while i < inflight.len() {
+                // block (briefly) only on the first attempt; poll the rest
+                let answer: Option<Result<T>> = if i == 0 {
+                    match inflight[0].rx.recv_timeout(wait) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => Some(Err(anyhow!(
+                            "embedding shard {} dropped a {what}",
+                            self.transports[inflight[0].slot].label()
+                        ))),
+                    }
+                } else {
+                    match inflight[i].rx.try_recv() {
+                        Ok(m) => Some(m),
+                        Err(TryRecvError::Empty) => None,
+                        Err(TryRecvError::Disconnected) => Some(Err(anyhow!(
+                            "embedding shard {} dropped a {what}",
+                            self.transports[inflight[i].slot].label()
+                        ))),
+                    }
+                };
+                match answer {
+                    None => i += 1,
+                    Some(Ok(v)) => {
+                        let f = &inflight[i];
+                        self.breakers[f.slot].record_ok();
+                        if f.hedge {
+                            self.counters.hedges_won.fetch_add(1, Ordering::Relaxed);
+                            faultnet::policy::note_hedge_won();
+                        }
+                        self.latency.observe(started.elapsed());
+                        return Ok(v);
+                    }
+                    Some(Err(e)) => {
+                        self.breakers[inflight[i].slot].record_err();
+                        last_err = e;
+                        inflight.swap_remove(i);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Stand-in contributions for a sub-batch whose row range is
+    /// unreachable: any row still in the hot cache is served as-is
+    /// (stale — inserted by an earlier or concurrent lookup, with no
+    /// freshness check), the rest contribute zero. Counted per row so
+    /// operators can see how much degraded output was backed by real
+    /// data.
+    fn serve_degraded(
+        &self,
+        table: u32,
+        dim: usize,
+        lengths: &[u32],
+        indices: &[u32],
+        acc: &mut [f64],
+    ) {
+        let cache = self.cache.lock().unwrap();
+        let (mut stale, mut zeros) = (0u64, 0u64);
+        let mut cursor = 0usize;
+        for (bag, &len) in lengths.iter().enumerate() {
+            let dst = &mut acc[bag * dim..(bag + 1) * dim];
+            for _ in 0..len {
+                let r = indices[cursor];
+                cursor += 1;
+                match cache.peek(table, r) {
+                    Some(row) => {
+                        stale += 1;
+                        for (a, v) in dst.iter_mut().zip(row) {
+                            *a += *v as f64;
+                        }
+                    }
+                    None => zeros += 1,
+                }
+            }
+        }
+        self.counters.stale_rows.fetch_add(stale, Ordering::Relaxed);
+        self.counters.zero_rows.fetch_add(zeros, Ordering::Relaxed);
+    }
+
+    /// Monotonic count of lookups that served any stale/zero (degraded)
+    /// contribution. The frontend samples this around each batch's
+    /// execution to decide whether to stamp the batch's responses
+    /// `degraded`.
+    pub fn degraded_events(&self) -> u64 {
+        self.counters.degraded_lookups.load(Ordering::Relaxed)
     }
 
     /// Partition `table` row-wise across the shards (each range sliced
@@ -861,14 +1058,27 @@ impl EmbeddingShardService {
             let rx = self.transports[order[0]].pool(&key, quantized, &lengths, &indices);
             pending.push(PendingPool { order, lengths, indices, rx });
         }
+        let mut degraded = false;
         for p in pending {
-            let partial = self.recv_with_failover("pooled lookup", &p.order, p.rx, |t| {
+            let res = self.recv_with_failover("pooled lookup", &p.order, p.rx, |t| {
                 self.counters.ingress_bytes.fetch_add(
                     (p.indices.len() * 4 + p.lengths.len() * 4) as u64,
                     Ordering::Relaxed,
                 );
                 t.pool(&key, quantized, &p.lengths, &p.indices)
-            })?;
+            });
+            let partial = match res {
+                Ok(partial) => partial,
+                Err(_) => {
+                    // every replica of this row range is unreachable (or
+                    // the op deadline ran out): degrade — stale cached
+                    // rows where we have them, zeros where we don't —
+                    // rather than fail the whole inference
+                    degraded = true;
+                    self.serve_degraded(id as u32, dim, &p.lengths, &p.indices, &mut acc);
+                    continue;
+                }
+            };
             ensure!(
                 partial.len() == acc.len(),
                 "shard returned {} partial elements, want {}",
@@ -879,6 +1089,10 @@ impl EmbeddingShardService {
             for (a, pv) in acc.iter_mut().zip(&partial) {
                 *a += *pv;
             }
+        }
+        if degraded {
+            self.counters.degraded_lookups.fetch_add(1, Ordering::Relaxed);
+            faultnet::policy::note_degraded(1);
         }
 
         // admission: fetch the rows the frequency filter promoted and
@@ -906,9 +1120,15 @@ impl EmbeddingShardService {
             }
             let mut cache = self.cache.lock().unwrap();
             for f in fetches {
-                let data = self.recv_with_failover("row fetch", &f.order, f.rx, |t| {
+                let data = match self.recv_with_failover("row fetch", &f.order, f.rx, |t| {
                     t.fetch(&key, quantized, &f.wanted)
-                })?;
+                }) {
+                    Ok(data) => data,
+                    // cache fill is best-effort: a range with every
+                    // replica down just stays uncached (the pooled path
+                    // already failed over or degraded)
+                    Err(_) => continue,
+                };
                 ensure!(data.len() == f.wanted.len() * dim, "row fetch returned a short payload");
                 self.counters
                     .row_fetch_bytes
@@ -959,6 +1179,12 @@ impl EmbeddingShardService {
             egress_bytes: self.counters.egress_bytes.load(Ordering::Relaxed),
             row_fetch_bytes: self.counters.row_fetch_bytes.load(Ordering::Relaxed),
             failovers: self.counters.failovers.load(Ordering::Relaxed),
+            hedges_fired: self.counters.hedges_fired.load(Ordering::Relaxed),
+            hedges_won: self.counters.hedges_won.load(Ordering::Relaxed),
+            degraded_lookups: self.counters.degraded_lookups.load(Ordering::Relaxed),
+            stale_rows: self.counters.stale_rows.load(Ordering::Relaxed),
+            zero_rows: self.counters.zero_rows.load(Ordering::Relaxed),
+            breaker_trips: self.breakers.iter().map(|b| b.trips()).sum(),
             tables,
         }
     }
@@ -1044,7 +1270,7 @@ mod tests {
             replication,
             cache_capacity_rows: cache,
             admit_after: 1,
-            remote_shards: Vec::new(),
+            ..Default::default()
         })
         .unwrap()
     }
@@ -1155,7 +1381,7 @@ mod tests {
     }
 
     #[test]
-    fn dead_shard_fails_over_to_replica_bit_identically() {
+    fn dead_shard_fails_over_then_full_outage_degrades() {
         let table = EmbeddingTable::random(48, 4, 21);
         let mut rng = Pcg32::seeded(31);
         let batch = table.synth_batch(5, 6, 1.1, &mut rng);
@@ -1169,7 +1395,7 @@ mod tests {
             replication: 2,
             cache_capacity_rows: 0,
             admit_after: 1,
-            remote_shards: Vec::new(),
+            ..Default::default()
         };
         let flaky: Vec<Arc<FlakyShard>> = (0..4)
             .map(|id| {
@@ -1188,22 +1414,144 @@ mod tests {
         svc.lookup(id, &batch, &mut got).unwrap();
         assert_eq!(got, want, "healthy tier");
         assert_eq!(svc.snapshot().failovers, 0);
+        assert_eq!(svc.degraded_events(), 0);
 
         // kill one replica of range 0: lookups keep succeeding,
-        // bit-identically, with failovers counted
+        // bit-identically, with failovers counted — never degraded
         flaky[0].dead.store(true, Ordering::SeqCst);
         for _ in 0..4 {
             let mut got = vec![0f32; 5 * 4];
             svc.lookup(id, &batch, &mut got).unwrap();
             assert_eq!(got, want, "one dead replica");
         }
-        assert!(svc.snapshot().failovers > 0, "the dead replica was retried");
+        let snap = svc.snapshot();
+        assert!(snap.failovers > 0, "the dead replica was retried");
+        assert_eq!(snap.degraded_lookups, 0);
 
-        // kill both replicas of range 0: now the lookup must fail with
-        // a typed error, not hang
+        // kill both replicas of range 0: the lookup still answers — a
+        // well-formed output whose range-0 contributions degrade to
+        // zero (no cache in this config) — and is counted degraded
         flaky[2].dead.store(true, Ordering::SeqCst);
         let mut got = vec![0f32; 5 * 4];
-        let err = svc.lookup(id, &batch, &mut got).unwrap_err();
-        assert!(format!("{err:#}").contains("failed on all"), "{err:#}");
+        svc.lookup(id, &batch, &mut got).unwrap();
+        assert!(got.iter().all(|v| v.is_finite()), "degraded output must be well-formed");
+        let snap = svc.snapshot();
+        assert!(snap.degraded_lookups >= 1, "a full-range outage must be flagged");
+        assert!(snap.zero_rows > 0, "a cacheless outage serves zero rows");
+        assert_eq!(svc.degraded_events(), snap.degraded_lookups);
+
+        // revive range 0: the very next lookup is exact again (an open
+        // breaker only deprioritizes, and replica 2 never tripped)
+        flaky[0].dead.store(false, Ordering::SeqCst);
+        flaky[2].dead.store(false, Ordering::SeqCst);
+        let before = svc.degraded_events();
+        let mut got = vec![0f32; 5 * 4];
+        svc.lookup(id, &batch, &mut got).unwrap();
+        assert_eq!(got, want, "revived tier is exact again");
+        assert_eq!(svc.degraded_events(), before, "no new degraded lookups after revival");
+    }
+
+    /// A transport whose pool answers arrive only after a fixed delay —
+    /// the slow-but-alive replica shape the hedge exists for.
+    struct SlowShard {
+        inner: Arc<LocalShard>,
+        delay: Duration,
+    }
+
+    impl ShardTransport for SlowShard {
+        fn label(&self) -> String {
+            format!("slow-{}", self.inner.label())
+        }
+        fn register(
+            &self,
+            key: &str,
+            quantized: bool,
+            lo: u32,
+            dim: usize,
+            data: &[f32],
+        ) -> Receiver<Result<()>> {
+            self.inner.register(key, quantized, lo, dim, data)
+        }
+        fn pool(
+            &self,
+            key: &str,
+            quantized: bool,
+            lengths: &[u32],
+            indices: &[u32],
+        ) -> Receiver<Result<Vec<f64>>> {
+            let rx = self.inner.pool(key, quantized, lengths, indices);
+            let delay = self.delay;
+            let (tx, out) = channel();
+            std::thread::spawn(move || {
+                std::thread::sleep(delay);
+                if let Ok(r) = rx.recv() {
+                    let _ = tx.send(r);
+                }
+            });
+            out
+        }
+        fn fetch(&self, key: &str, quantized: bool, rows: &[u32]) -> Receiver<Result<Vec<f32>>> {
+            self.inner.fetch(key, quantized, rows)
+        }
+    }
+
+    #[test]
+    fn slow_replica_is_hedged_and_the_fast_one_wins() {
+        let table = EmbeddingTable::random(32, 4, 7);
+        let mut rng = Pcg32::seeded(3);
+        let batch = table.synth_batch(4, 6, 1.1, &mut rng);
+        let mut want = vec![0f32; 4 * 4];
+        table.sparse_lengths_sum_exact(&batch, &mut want);
+
+        // 1 range x 2 replicas: slot 0 answers pools only after 80ms —
+        // far past the hedge trigger (~hedge_min) — slot 1 is fast
+        let cfg = SparseTierConfig {
+            shards: 2,
+            replication: 2,
+            cache_capacity_rows: 0,
+            admit_after: 1,
+            ..Default::default()
+        };
+        let locals: Vec<Arc<LocalShard>> =
+            (0..2).map(|id| Arc::new(LocalShard::spawn(id).unwrap())).collect();
+        let transports: Vec<Arc<dyn ShardTransport>> = vec![
+            Arc::new(SlowShard { inner: locals[0].clone(), delay: Duration::from_millis(80) }),
+            locals[1].clone(),
+        ];
+        let svc = EmbeddingShardService::start_with(cfg, transports).unwrap();
+        let id = svc.register_table("t/emb", &table, false).unwrap();
+
+        // round-robin guarantees some ops start on the slow replica
+        for _ in 0..4 {
+            let mut got = vec![0f32; 4 * 4];
+            svc.lookup(id, &batch, &mut got).unwrap();
+            assert_eq!(got, want, "hedged answers must stay bit-identical");
+        }
+        let snap = svc.snapshot();
+        assert!(snap.hedges_fired > 0, "a slow primary must trigger a hedge");
+        assert!(snap.hedges_won > 0, "the fast replica's answer must win");
+        assert_eq!(snap.degraded_lookups, 0, "hedging is not degradation");
+    }
+
+    #[test]
+    fn degraded_serving_prefers_stale_cached_rows_over_zeros() {
+        let table = EmbeddingTable::random(16, 4, 5);
+        let svc = tier(2, 1, 8);
+        let id = svc.register_table("t/emb", &table, false).unwrap();
+        // plant rows 1 and 3 in the hot cache, as an earlier lookup's
+        // admission would have
+        {
+            let mut cache = svc.cache.lock().unwrap();
+            cache.insert(id as u32, 1, table.row(1));
+            cache.insert(id as u32, 3, table.row(3));
+        }
+        // one bag of rows [1, 2, 3]: 1 and 3 come back stale, 2 is zero
+        let mut acc = vec![0f64; 4];
+        svc.serve_degraded(id as u32, 4, &[3], &[1, 2, 3], &mut acc);
+        let want: Vec<f64> =
+            (0..4).map(|d| table.row(1)[d] as f64 + table.row(3)[d] as f64).collect();
+        assert_eq!(acc, want);
+        let snap = svc.snapshot();
+        assert_eq!((snap.stale_rows, snap.zero_rows), (2, 1));
     }
 }

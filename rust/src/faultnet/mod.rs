@@ -1,0 +1,34 @@
+//! Deterministic fault injection + the unified resilience policy.
+//!
+//! The paper's fleet treats slow and dead peers as the steady state, not
+//! the exception; this module gives the crate a real fault model. It has
+//! two halves:
+//!
+//! 1. **Fault injection** ([`plan`], [`stream`]): a seeded, parseable
+//!    [`FaultPlan`] (`DCINFER_FAULTS` env var or `--faults` CLI flag)
+//!    drives a [`FaultStream`] Read/Write wrapper that every transport in
+//!    the crate — serving server/client, cluster router, shard
+//!    server/client — threads its socket halves through. Faults (delay,
+//!    drop, reset, partial write, bit corruption, throttle) are keyed per
+//!    peer label, connection index, direction and op count, so one seed
+//!    replays one schedule.
+//! 2. **Resilience** ([`policy`]): the single [`ResiliencePolicy`] behind
+//!    every socket timeout, budgeted [`Backoff`] retry, per-peer
+//!    [`CircuitBreaker`], hedged lookup ([`LatencyEstimator`]) and the
+//!    degraded-serving contract (see DESIGN.md "Fault model &
+//!    resilience"), with process-global [`ResilienceSnapshot`] counters.
+//!
+//! The standing invariant the chaos suite (`tests/chaos.rs`) enforces:
+//! under any fault plan, every response is bit-identical to the fault-free
+//! reference, a typed error, or flagged degraded — never silently wrong.
+
+pub mod plan;
+pub mod policy;
+pub mod stream;
+
+pub use plan::{Dir, FaultKind, FaultPlan, Rule};
+pub use policy::{
+    resilience_snapshot, Backoff, BreakerState, CircuitBreaker, LatencyEstimator,
+    ResiliencePolicy, ResilienceSnapshot,
+};
+pub use stream::{active, clear, install, install_from_env, install_spec, wrap, FaultStream};

@@ -1,0 +1,301 @@
+//! Parseable, seeded fault plans.
+//!
+//! A [`FaultPlan`] is the declarative half of the fault-injection layer:
+//! a seed plus a list of [`Rule`]s, each naming a fault kind, the peers
+//! and direction it applies to, and a per-operation schedule. Plans are
+//! written as one-line specs (the `DCINFER_FAULTS` env var or the
+//! `--faults` CLI flag) so the same fault schedule can be replayed from a
+//! test, a bench, or a shell:
+//!
+//! ```text
+//! spec    := clause (';' clause)*
+//! clause  := 'seed=N' | rule
+//! rule    := kind (',' key '=' value)*
+//! kind    := delay | drop | reset | partial | corrupt | throttle
+//! keys    := peer=SUBSTR      match connections whose label contains SUBSTR
+//!            dir=read|write|both            (default both)
+//!            every=N          fire on every Nth matching op (default: all)
+//!            after=N          only fire on ops strictly after the Nth
+//!            until=N          only fire on ops up to and including the Nth
+//!            for_ms=N         only fire within N ms of plan installation
+//!            prob=P           fire with probability P in [0,1] (seeded)
+//!            us=N / ms=N      delay amount (delay, throttle)
+//!            chunk=N          max bytes per op (throttle, default 256)
+//! ```
+//!
+//! Example: `seed=7;delay,peer=rshard,dir=read,us=500,every=3;reset,peer=router,prob=0.01`
+//!
+//! Scheduling is **deterministic**: whether a rule fires on op `k` of a
+//! connection is a pure function of `(plan seed, peer label, connection
+//! index, direction, rule index, k)` — no shared RNG state, so thread
+//! interleaving cannot perturb the schedule (see [`Rule::fires`]).
+//! `for_ms` is the one deliberate exception: it gates on wall-clock time
+//! since installation to model bounded fault *windows*.
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// The direction of one wrapped stream half.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    Read,
+    Write,
+}
+
+/// Which direction(s) a rule applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DirFilter {
+    Read,
+    Write,
+    Both,
+}
+
+impl DirFilter {
+    /// Whether this filter covers `dir`.
+    pub fn matches(self, dir: Dir) -> bool {
+        match self {
+            DirFilter::Both => true,
+            DirFilter::Read => dir == Dir::Read,
+            DirFilter::Write => dir == Dir::Write,
+        }
+    }
+}
+
+/// The fault taxonomy (see DESIGN.md "Fault model & resilience").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Sleep before the op completes (slow peer / network latency).
+    Delay { us: u64 },
+    /// Writes: claim success, send nothing. Reads: swallow wire bytes.
+    Drop,
+    /// Shut the socket down; this and all later ops fail `ConnectionReset`.
+    Reset,
+    /// Write roughly half the buffer, then break the connection.
+    Partial,
+    /// Flip one (deterministically chosen) bit in the transferred bytes.
+    Corrupt,
+    /// Cap each op at `chunk` bytes and sleep `us` per op (slow peer).
+    Throttle { chunk: usize, us: u64 },
+}
+
+/// One fault rule: a kind, a peer/direction selector, and a schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rule {
+    pub kind: FaultKind,
+    /// Substring matched against the connection's peer label ("" = all).
+    pub peer: String,
+    pub dir: DirFilter,
+    /// Fire on every Nth matching op (0 or 1 = every op).
+    pub every: u64,
+    /// Only ops strictly after this count can fire (0 = from the start).
+    pub after: u64,
+    /// Only ops up to and including this count can fire (0 = no bound).
+    pub until: u64,
+    /// Probability of firing once the selectors above match.
+    pub prob: f64,
+    /// Wall-clock fault window in ms since plan install (0 = unbounded).
+    pub for_ms: u64,
+}
+
+impl Rule {
+    /// Whether this rule fires on 1-based op `op` of a connection whose
+    /// mixed identity is `salt`. Pure function — same inputs, same answer.
+    pub fn fires(&self, salt: u64, op: u64) -> bool {
+        if op <= self.after {
+            return false;
+        }
+        if self.until != 0 && op > self.until {
+            return false;
+        }
+        if self.every > 1 && (op - self.after) % self.every != 0 {
+            return false;
+        }
+        if self.prob < 1.0 {
+            let frac = (mix2(salt, op) >> 11) as f64 / (1u64 << 53) as f64;
+            if frac >= self.prob {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// A parsed fault plan: a seed plus the rule list, in spec order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<Rule>,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (grammar in the module docs). Empty clauses are
+    /// ignored, so trailing `;` is fine; an all-empty spec is a no-op plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(v) = clause.strip_prefix("seed=") {
+                plan.seed = v
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad seed clause {clause:?} in fault spec"))?;
+                continue;
+            }
+            plan.rules.push(parse_rule(clause)?);
+        }
+        Ok(plan)
+    }
+}
+
+fn parse_u64(key: &str, val: &str) -> Result<u64> {
+    val.parse()
+        .with_context(|| format!("bad {key}={val:?} in fault rule (want an integer)"))
+}
+
+fn parse_rule(clause: &str) -> Result<Rule> {
+    let mut parts = clause.split(',');
+    let kind_tok = parts.next().unwrap_or("").trim();
+    let mut peer = String::new();
+    let mut dir = DirFilter::Both;
+    let (mut every, mut after, mut until, mut for_ms) = (0u64, 0u64, 0u64, 0u64);
+    let mut prob = 1.0f64;
+    let (mut us, mut ms, mut chunk) = (0u64, 0u64, None::<usize>);
+    for part in parts {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (key, val) = part
+            .split_once('=')
+            .with_context(|| format!("expected key=value in fault rule, got {part:?}"))?;
+        let (key, val) = (key.trim(), val.trim());
+        match key {
+            "peer" => peer = val.to_string(),
+            "dir" => {
+                dir = match val {
+                    "read" => DirFilter::Read,
+                    "write" => DirFilter::Write,
+                    "both" => DirFilter::Both,
+                    other => bail!("bad dir={other:?} in fault rule (want read|write|both)"),
+                }
+            }
+            "every" => every = parse_u64(key, val)?,
+            "after" => after = parse_u64(key, val)?,
+            "until" => until = parse_u64(key, val)?,
+            "for_ms" => for_ms = parse_u64(key, val)?,
+            "us" => us = parse_u64(key, val)?,
+            "ms" => ms = parse_u64(key, val)?,
+            "chunk" => chunk = Some(parse_u64(key, val)? as usize),
+            "prob" => {
+                prob = val
+                    .parse()
+                    .with_context(|| format!("bad prob={val:?} in fault rule"))?;
+                ensure!((0.0..=1.0).contains(&prob), "prob must be in [0,1], got {prob}");
+            }
+            other => bail!("unknown key {other:?} in fault rule {clause:?}"),
+        }
+    }
+    let delay_us = us + ms * 1000;
+    let kind = match kind_tok {
+        "delay" => {
+            ensure!(delay_us > 0, "delay rule needs us= or ms=: {clause:?}");
+            FaultKind::Delay { us: delay_us }
+        }
+        "drop" => FaultKind::Drop,
+        "reset" => FaultKind::Reset,
+        "partial" => FaultKind::Partial,
+        "corrupt" => FaultKind::Corrupt,
+        "throttle" => FaultKind::Throttle {
+            chunk: chunk.unwrap_or(256).max(1),
+            us: delay_us.max(1),
+        },
+        other => bail!(
+            "unknown fault kind {other:?} in {clause:?} \
+             (want delay|drop|reset|partial|corrupt|throttle)"
+        ),
+    };
+    Ok(Rule { kind, peer, dir, every, after, until, prob, for_ms })
+}
+
+/// splitmix64-style mixer: hashes two words into one, well distributed.
+pub(crate) fn mix2(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over a label string (peer-label component of the fault salt).
+pub(crate) fn hash_str(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let plan = FaultPlan::parse(
+            "seed=7; delay,peer=rshard,dir=read,us=500,every=3 ; \
+             reset,peer=router,prob=0.25,after=10,until=90 ; \
+             throttle,chunk=64,ms=2 ; corrupt,for_ms=1500 ;",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.rules.len(), 4);
+        assert_eq!(plan.rules[0].kind, FaultKind::Delay { us: 500 });
+        assert_eq!(plan.rules[0].peer, "rshard");
+        assert_eq!(plan.rules[0].dir, DirFilter::Read);
+        assert_eq!(plan.rules[0].every, 3);
+        assert_eq!(plan.rules[1].kind, FaultKind::Reset);
+        assert_eq!(plan.rules[1].prob, 0.25);
+        assert_eq!(plan.rules[1].after, 10);
+        assert_eq!(plan.rules[1].until, 90);
+        assert_eq!(plan.rules[2].kind, FaultKind::Throttle { chunk: 64, us: 2000 });
+        assert_eq!(plan.rules[3].kind, FaultKind::Corrupt);
+        assert_eq!(plan.rules[3].for_ms, 1500);
+        assert_eq!(plan.rules[3].dir, DirFilter::Both);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("warp,peer=x").is_err());
+        assert!(FaultPlan::parse("delay").is_err()); // needs us=/ms=
+        assert!(FaultPlan::parse("drop,dir=sideways").is_err());
+        assert!(FaultPlan::parse("drop,prob=1.5").is_err());
+        assert!(FaultPlan::parse("drop,frequency=2").is_err());
+        assert!(FaultPlan::parse("seed=banana").is_err());
+        assert!(FaultPlan::parse("").unwrap().rules.is_empty());
+    }
+
+    #[test]
+    fn schedule_selectors_compose() {
+        let r = FaultPlan::parse("drop,every=5,after=10,until=30")
+            .unwrap()
+            .rules
+            .remove(0);
+        let fired: Vec<u64> = (1..=50).filter(|&op| r.fires(42, op)).collect();
+        assert_eq!(fired, vec![15, 20, 25, 30]);
+    }
+
+    #[test]
+    fn probabilistic_firing_is_deterministic_and_seed_sensitive() {
+        let r = FaultPlan::parse("drop,prob=0.3").unwrap().rules.remove(0);
+        let pattern = |salt: u64| -> Vec<bool> { (1..=2000).map(|op| r.fires(salt, op)).collect() };
+        // Same salt twice: bit-identical schedule.
+        assert_eq!(pattern(1), pattern(1));
+        // Different salt (different seed/peer/conn): different schedule.
+        assert_ne!(pattern(1), pattern(2));
+        // Fires at roughly the requested rate.
+        let hits = pattern(1).iter().filter(|&&b| b).count();
+        assert!((400..=800).contains(&hits), "prob=0.3 fired {hits}/2000");
+    }
+}

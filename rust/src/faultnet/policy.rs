@@ -1,0 +1,428 @@
+//! The unified resilience policy: one knob set for every transport.
+//!
+//! PRs 5–7 grew timeouts, retry-once failover and health probes as
+//! scattered one-off mechanisms. This module replaces them with a single
+//! [`ResiliencePolicy`] consulted by the client demux, the router's proxy
+//! legs and prober, and the sparse tier's replica failover, plus the
+//! building blocks they share:
+//!
+//! - [`Backoff`] — budgeted retries with decorrelated-jitter sleeps,
+//! - [`CircuitBreaker`] — per-peer closed → open → half-open gating,
+//! - [`LatencyEstimator`] — an asymmetric-EWMA tail estimate that decides
+//!   when to fire a hedged request,
+//! - process-global [`ResilienceSnapshot`] counters (timeout classes,
+//!   retries, breaker trips, hedges, degraded responses) exported through
+//!   `MetricsSnapshot`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Pcg32;
+
+/// Every resilience knob in one place. All durations must be non-zero
+/// (zero would disable the corresponding socket timeout).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResiliencePolicy {
+    /// Socket read timeout on every blocking demux/proxy/lookup read.
+    /// Expiry with no frame bytes buffered is an *idle tick* (harmless);
+    /// expiry mid-frame means a wedged peer and closes the connection.
+    pub read_timeout: Duration,
+    /// Socket write timeout on every transport write.
+    pub write_timeout: Duration,
+    /// A connection with responses outstanding and no frame for this long
+    /// is declared wedged and torn down (pending work gets typed errors).
+    pub wedge_after: Duration,
+    /// Max attempts per logical op (1 = no retry). Replaces retry-once.
+    pub retry_budget: u32,
+    /// Decorrelated-jitter backoff: first sleep ~`backoff_base`, growing
+    /// up to `backoff_cap`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Consecutive failures that trip a peer's breaker open.
+    pub breaker_threshold: u32,
+    /// How long an open breaker rejects before probing half-open.
+    pub breaker_cooldown: Duration,
+    /// A health probe slower than this marks the replica `Suspect`.
+    pub probe_latency_bound: Duration,
+    /// Clamp bounds for the hedged-lookup trigger delay.
+    pub hedge_min: Duration,
+    pub hedge_cap: Duration,
+}
+
+impl Default for ResiliencePolicy {
+    fn default() -> Self {
+        ResiliencePolicy {
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(10),
+            wedge_after: Duration::from_secs(60),
+            retry_budget: 3,
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(100),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(500),
+            probe_latency_bound: Duration::from_millis(250),
+            hedge_min: Duration::from_millis(2),
+            hedge_cap: Duration::from_millis(500),
+        }
+    }
+}
+
+impl ResiliencePolicy {
+    /// Set both socket timeouts on `stream`.
+    pub fn apply_io_timeouts(&self, stream: &std::net::TcpStream) -> std::io::Result<()> {
+        stream.set_read_timeout(Some(self.read_timeout))?;
+        stream.set_write_timeout(Some(self.write_timeout))
+    }
+
+    /// A fresh breaker configured from this policy.
+    pub fn breaker(&self) -> CircuitBreaker {
+        CircuitBreaker::new(self.breaker_threshold, self.breaker_cooldown)
+    }
+}
+
+/// Budgeted decorrelated-jitter backoff (Brooker, "Exponential Backoff
+/// and Jitter"): each sleep is `min(cap, uniform(base, 3 * previous))`,
+/// seeded so schedules are reproducible.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    prev: Duration,
+    rng: Pcg32,
+}
+
+impl Backoff {
+    pub fn new(policy: &ResiliencePolicy, seed: u64) -> Backoff {
+        Backoff {
+            base: policy.backoff_base,
+            cap: policy.backoff_cap,
+            prev: policy.backoff_base,
+            rng: Pcg32::new(seed, 0xb0ff),
+        }
+    }
+
+    /// The next sleep in the schedule (also advances it).
+    pub fn next_delay(&mut self) -> Duration {
+        let lo = self.base.as_secs_f64();
+        let hi = (self.prev.as_secs_f64() * 3.0).max(lo);
+        let chosen = lo + (hi - lo) * self.rng.uniform();
+        let d = Duration::from_secs_f64(chosen).min(self.cap);
+        self.prev = d.max(self.base);
+        d
+    }
+
+    /// Sleep for the next delay in the schedule.
+    pub fn sleep(&mut self) {
+        std::thread::sleep(self.next_delay());
+    }
+}
+
+/// Breaker states: `Closed` (healthy), `Open` (rejecting), `HalfOpen`
+/// (cooldown elapsed; trial traffic allowed — one success closes, one
+/// failure re-opens).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// A per-peer circuit breaker. `breaker_threshold` consecutive failures
+/// trip it open; after `breaker_cooldown` it half-opens and lets trial
+/// traffic through. Callers treat a non-allowing peer as *deprioritized*,
+/// not banned: when every peer's breaker is open, the first is tried
+/// anyway (last resort) so a total outage can still recover.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown: Duration,
+    inner: Mutex<BreakerInner>,
+    trips: AtomicU64,
+}
+
+#[derive(Debug)]
+struct BreakerInner {
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at: Option<Instant>,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32, cooldown: Duration) -> CircuitBreaker {
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            cooldown,
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at: None,
+            }),
+            trips: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether an attempt may be sent to this peer right now. An open
+    /// breaker whose cooldown has elapsed transitions to half-open and
+    /// allows the call.
+    pub fn allow(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                let cooled = g.opened_at.map_or(true, |t| t.elapsed() >= self.cooldown);
+                if cooled {
+                    g.state = BreakerState::HalfOpen;
+                }
+                cooled
+            }
+        }
+    }
+
+    pub fn record_ok(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.state = BreakerState::Closed;
+        g.consecutive_failures = 0;
+        g.opened_at = None;
+    }
+
+    pub fn record_err(&self) {
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            BreakerState::Closed => {
+                g.consecutive_failures += 1;
+                if g.consecutive_failures >= self.threshold {
+                    self.trip(&mut g);
+                }
+            }
+            BreakerState::HalfOpen => self.trip(&mut g),
+            BreakerState::Open => {}
+        }
+    }
+
+    fn trip(&self, g: &mut BreakerInner) {
+        g.state = BreakerState::Open;
+        g.opened_at = Some(Instant::now());
+        self.trips.fetch_add(1, Ordering::Relaxed);
+        BREAKER_TRIPS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().unwrap().state
+    }
+
+    /// How many times this breaker has flipped closed/half-open -> open.
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free asymmetric-EWMA tail-latency estimator: rises fast on slow
+/// samples (gain 0.25) and decays slowly on fast ones (gain 0.02), so the
+/// estimate tracks an upper quantile of the distribution — the fire-time
+/// for hedged lookups — without keeping a histogram.
+#[derive(Debug)]
+pub struct LatencyEstimator {
+    /// f64 microseconds, stored as bits for atomic CAS.
+    est_us: AtomicU64,
+}
+
+impl LatencyEstimator {
+    pub fn new(initial: Duration) -> LatencyEstimator {
+        LatencyEstimator {
+            est_us: AtomicU64::new((initial.as_secs_f64() * 1e6).to_bits()),
+        }
+    }
+
+    pub fn observe(&self, sample: Duration) {
+        let x = sample.as_secs_f64() * 1e6;
+        let mut cur = self.est_us.load(Ordering::Relaxed);
+        loop {
+            let est = f64::from_bits(cur);
+            let next = if x > est { est + 0.25 * (x - est) } else { est + 0.02 * (x - est) };
+            match self.est_us.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(v) => cur = v,
+            }
+        }
+    }
+
+    pub fn estimate(&self) -> Duration {
+        let us = f64::from_bits(self.est_us.load(Ordering::Relaxed)).max(0.0);
+        Duration::from_secs_f64(us / 1e6)
+    }
+
+    /// The hedged-lookup trigger delay: the tail estimate clamped into
+    /// `[hedge_min, hedge_cap]`.
+    pub fn hedge_delay(&self, policy: &ResiliencePolicy) -> Duration {
+        self.estimate().clamp(policy.hedge_min, policy.hedge_cap)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global resilience counters (monotonic; snapshot deltas in tests).
+
+static TIMEOUTS_IDLE: AtomicU64 = AtomicU64::new(0);
+static TIMEOUTS_WEDGED: AtomicU64 = AtomicU64::new(0);
+static RETRIES: AtomicU64 = AtomicU64::new(0);
+static BREAKER_TRIPS: AtomicU64 = AtomicU64::new(0);
+static HEDGES_FIRED: AtomicU64 = AtomicU64::new(0);
+static HEDGES_WON: AtomicU64 = AtomicU64::new(0);
+static DEGRADED: AtomicU64 = AtomicU64::new(0);
+
+/// Count a socket-read timeout: `mid_frame = false` is an idle tick,
+/// `true` means a peer wedged mid-frame and the connection was torn down.
+pub fn note_timeout(mid_frame: bool) {
+    let c = if mid_frame { &TIMEOUTS_WEDGED } else { &TIMEOUTS_IDLE };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count one retry (re-dispatch of a logical op after a failure).
+pub fn note_retry() {
+    RETRIES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count a hedged request being fired.
+pub fn note_hedge_fired() {
+    HEDGES_FIRED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count a hedged request winning (answering before the primary).
+pub fn note_hedge_won() {
+    HEDGES_WON.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count `n` responses served degraded (stale/zero sparse contributions).
+pub fn note_degraded(n: u64) {
+    DEGRADED.fetch_add(n, Ordering::Relaxed);
+}
+
+/// A point-in-time copy of the process-global resilience counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResilienceSnapshot {
+    /// Read timeouts that expired with no frame in progress (benign).
+    pub timeouts_idle: u64,
+    /// Read timeouts that cut a frame mid-flight (connection torn down).
+    pub timeouts_wedged: u64,
+    /// Logical-op re-dispatches after a failure.
+    pub retries: u64,
+    /// Closed/half-open -> open breaker transitions, all breakers.
+    pub breaker_trips: u64,
+    /// Hedged requests fired / won.
+    pub hedges_fired: u64,
+    pub hedges_won: u64,
+    /// Responses served with the degraded flag set.
+    pub degraded: u64,
+}
+
+/// Snapshot the process-global resilience counters.
+pub fn resilience_snapshot() -> ResilienceSnapshot {
+    ResilienceSnapshot {
+        timeouts_idle: TIMEOUTS_IDLE.load(Ordering::Relaxed),
+        timeouts_wedged: TIMEOUTS_WEDGED.load(Ordering::Relaxed),
+        retries: RETRIES.load(Ordering::Relaxed),
+        breaker_trips: BREAKER_TRIPS.load(Ordering::Relaxed),
+        hedges_fired: HEDGES_FIRED.load(Ordering::Relaxed),
+        hedges_won: HEDGES_WON.load(Ordering::Relaxed),
+        degraded: DEGRADED.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breaker_walks_closed_open_halfopen_and_back() {
+        let b = CircuitBreaker::new(3, Duration::from_millis(20));
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_err();
+        b.record_err();
+        assert!(b.allow(), "below threshold stays closed");
+        b.record_err();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+        assert!(!b.allow(), "open rejects inside the cooldown");
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.allow(), "cooldown elapsed: half-open trial allowed");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_err();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 2);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.allow());
+        b.record_ok();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow());
+        // Closing resets the consecutive-failure count.
+        b.record_err();
+        b.record_err();
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn backoff_stays_within_base_and_cap_and_is_seed_deterministic() {
+        let policy = ResiliencePolicy {
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(50),
+            ..ResiliencePolicy::default()
+        };
+        let mut a = Backoff::new(&policy, 42);
+        let mut b = Backoff::new(&policy, 42);
+        let mut prev_cap = policy.backoff_base;
+        for _ in 0..64 {
+            let d = a.next_delay();
+            assert_eq!(d, b.next_delay(), "same seed, same schedule");
+            assert!(d >= policy.backoff_base, "delay {d:?} under base");
+            assert!(d <= policy.backoff_cap, "delay {d:?} over cap");
+            // Decorrelated growth: bounded by 3x the previous delay.
+            let bound = policy.backoff_cap.min(prev_cap * 3);
+            assert!(d <= bound, "delay {d:?} jumped past 3x prev {prev_cap:?}");
+            prev_cap = d.max(policy.backoff_base);
+        }
+    }
+
+    #[test]
+    fn latency_estimator_rises_fast_and_decays_slow() {
+        let est = LatencyEstimator::new(Duration::from_millis(1));
+        for _ in 0..30 {
+            est.observe(Duration::from_millis(100));
+        }
+        let high = est.estimate();
+        assert!(high > Duration::from_millis(90), "rose to {high:?}");
+        for _ in 0..5 {
+            est.observe(Duration::from_millis(1));
+        }
+        let after = est.estimate();
+        assert!(
+            after > Duration::from_millis(50),
+            "few fast samples should barely dent the tail estimate, got {after:?}"
+        );
+        let policy = ResiliencePolicy::default();
+        let d = est.hedge_delay(&policy);
+        assert!(d >= policy.hedge_min && d <= policy.hedge_cap);
+    }
+
+    #[test]
+    fn global_counters_accumulate_into_snapshot() {
+        let before = resilience_snapshot();
+        note_timeout(false);
+        note_timeout(true);
+        note_retry();
+        note_hedge_fired();
+        note_hedge_won();
+        note_degraded(3);
+        let after = resilience_snapshot();
+        assert!(after.timeouts_idle >= before.timeouts_idle + 1);
+        assert!(after.timeouts_wedged >= before.timeouts_wedged + 1);
+        assert!(after.retries >= before.retries + 1);
+        assert!(after.hedges_fired >= before.hedges_fired + 1);
+        assert!(after.hedges_won >= before.hedges_won + 1);
+        assert!(after.degraded >= before.degraded + 3);
+    }
+}

@@ -1,0 +1,384 @@
+//! [`FaultStream`]: a fault-injecting Read/Write wrapper over `TcpStream`.
+//!
+//! Every transport in the crate funnels its `try_clone()`d stream halves
+//! through [`wrap`] before buffering them, tagging each with a **peer
+//! label** (`client->ADDR`, `serve<-PEER`, `router->ADDR`, `router<-PEER`,
+//! `shard<-PEER`, `rshard->ADDR`). When no plan is installed — the normal
+//! case — the wrapper is a transparent pass-through with no allocation and
+//! no extra branches beyond one `Option` check per op.
+//!
+//! With a plan installed (see [`install_spec`] / `DCINFER_FAULTS`), each
+//! matching rule is evaluated per read/write op against a deterministic
+//! salt mixed from `(plan seed, peer label, per-peer connection index,
+//! direction)`, so a given seed reproduces the same fault schedule run
+//! over run regardless of thread interleaving.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::plan::{hash_str, mix2, Dir, FaultKind, FaultPlan, Rule};
+
+/// Process-global injector slot (one plan at a time; tests serialize).
+static INJECTOR: Mutex<Option<Arc<Injector>>> = Mutex::new(None);
+
+#[derive(Debug)]
+struct Injector {
+    plan: FaultPlan,
+    installed: Instant,
+    /// Per-(peer label, direction) connection counter, so the Nth
+    /// connection to a peer gets the same fault schedule every run.
+    conn_seq: Mutex<HashMap<(String, Dir), u64>>,
+}
+
+/// Install `plan` as the process-global fault plan. Streams wrapped from
+/// now on observe it; already-wrapped streams keep their old schedule.
+pub fn install(plan: FaultPlan) {
+    let inj = Injector {
+        plan,
+        installed: Instant::now(),
+        conn_seq: Mutex::new(HashMap::new()),
+    };
+    *INJECTOR.lock().unwrap() = Some(Arc::new(inj));
+}
+
+/// Parse and install a fault spec (grammar: [`super::plan`]).
+pub fn install_spec(spec: &str) -> Result<()> {
+    install(FaultPlan::parse(spec)?);
+    Ok(())
+}
+
+/// Install from the `DCINFER_FAULTS` env var if set and non-empty.
+/// Returns whether a plan was installed.
+pub fn install_from_env() -> Result<bool> {
+    match std::env::var("DCINFER_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            install_spec(&spec)?;
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// Remove the installed plan; newly wrapped streams become pass-through.
+pub fn clear() {
+    *INJECTOR.lock().unwrap() = None;
+}
+
+/// Whether a fault plan is currently installed.
+pub fn active() -> bool {
+    INJECTOR.lock().unwrap().is_some()
+}
+
+/// Wrap one direction of `stream` (one `try_clone()`d half) under the
+/// peer label `peer`. Pass-through when no plan is installed or no rule
+/// selects this peer + direction.
+pub fn wrap(stream: TcpStream, peer: &str, dir: Dir) -> FaultStream {
+    let inj = INJECTOR.lock().unwrap().clone();
+    let Some(inj) = inj else {
+        return FaultStream { inner: stream, faults: None };
+    };
+    let rules: Vec<(u64, Rule)> = inj
+        .plan
+        .rules
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.dir.matches(dir) && (r.peer.is_empty() || peer.contains(&r.peer)))
+        .map(|(i, r)| (i as u64, r.clone()))
+        .collect();
+    if rules.is_empty() {
+        return FaultStream { inner: stream, faults: None };
+    }
+    let conn = {
+        let mut seq = inj.conn_seq.lock().unwrap();
+        let c = seq.entry((peer.to_string(), dir)).or_insert(0);
+        let v = *c;
+        *c += 1;
+        v
+    };
+    let dir_salt = match dir {
+        Dir::Read => 0x52,
+        Dir::Write => 0x57,
+    };
+    let salt = mix2(mix2(mix2(inj.plan.seed, hash_str(peer)), conn), dir_salt);
+    let faults = ConnFaults { rules, salt, ops: 0, broken: None, installed: inj.installed };
+    FaultStream { inner: stream, faults: Some(Box::new(faults)) }
+}
+
+#[derive(Debug)]
+struct ConnFaults {
+    /// (rule index in the plan, rule), pre-filtered for this peer + dir.
+    rules: Vec<(u64, Rule)>,
+    salt: u64,
+    ops: u64,
+    /// Sticky failure: once a reset/partial fired, every later op fails.
+    broken: Option<io::ErrorKind>,
+    installed: Instant,
+}
+
+/// What the matching rules decided for one op.
+#[derive(Default)]
+struct Decision {
+    delay_us: u64,
+    drop: bool,
+    reset: bool,
+    partial: bool,
+    /// Corruption hash: picks the flipped byte and bit deterministically.
+    corrupt: Option<u64>,
+    chunk: Option<usize>,
+}
+
+impl ConnFaults {
+    fn decide(&mut self) -> Decision {
+        self.ops += 1;
+        let op = self.ops;
+        let mut d = Decision::default();
+        for (idx, rule) in &self.rules {
+            if rule.for_ms != 0
+                && self.installed.elapsed() >= Duration::from_millis(rule.for_ms)
+            {
+                continue;
+            }
+            let salt = mix2(self.salt, idx.wrapping_add(0xa5a5));
+            if !rule.fires(salt, op) {
+                continue;
+            }
+            match rule.kind {
+                FaultKind::Delay { us } => d.delay_us += us,
+                FaultKind::Drop => d.drop = true,
+                FaultKind::Reset => d.reset = true,
+                FaultKind::Partial => d.partial = true,
+                FaultKind::Corrupt => d.corrupt = Some(mix2(salt, op ^ 0xc0c0)),
+                FaultKind::Throttle { chunk, us } => {
+                    d.delay_us += us;
+                    d.chunk = Some(d.chunk.map_or(chunk, |c| c.min(chunk)));
+                }
+            }
+        }
+        d
+    }
+}
+
+fn injected_err(kind: io::ErrorKind) -> io::Error {
+    io::Error::new(kind, "faultnet: injected connection failure")
+}
+
+/// A fault-injecting wrapper over one direction of a [`TcpStream`].
+///
+/// Construct via [`wrap`] (consults the installed plan) or
+/// [`FaultStream::passthrough`]. Implements [`Read`] and [`Write`];
+/// callers layer their usual `BufReader`/`BufWriter` on top.
+#[derive(Debug)]
+pub struct FaultStream {
+    inner: TcpStream,
+    faults: Option<Box<ConnFaults>>,
+}
+
+impl FaultStream {
+    /// Wrap without consulting the global plan — always a pass-through.
+    pub fn passthrough(inner: TcpStream) -> FaultStream {
+        FaultStream { inner, faults: None }
+    }
+
+    /// The underlying socket, for `set_read_timeout`/`shutdown`/addresses.
+    pub fn get_ref(&self) -> &TcpStream {
+        &self.inner
+    }
+}
+
+impl Read for FaultStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let Some(f) = self.faults.as_deref_mut() else {
+            return self.inner.read(buf);
+        };
+        if let Some(kind) = f.broken {
+            return Err(injected_err(kind));
+        }
+        if buf.is_empty() {
+            return self.inner.read(buf);
+        }
+        let d = f.decide();
+        if d.delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(d.delay_us));
+        }
+        if d.reset {
+            f.broken = Some(io::ErrorKind::ConnectionReset);
+            let _ = self.inner.shutdown(Shutdown::Both);
+            return Err(injected_err(io::ErrorKind::ConnectionReset));
+        }
+        let cap = d.chunk.map_or(buf.len(), |c| c.clamp(1, buf.len()));
+        if d.drop {
+            // Swallow up to `cap` wire bytes: the peer's framing misaligns,
+            // which downstream surfaces as a typed decode error — never a
+            // silently wrong payload.
+            let mut bin = [0u8; 512];
+            let take = cap.min(bin.len());
+            let n = self.inner.read(&mut bin[..take])?;
+            if n == 0 {
+                return Ok(0);
+            }
+        }
+        let n = self.inner.read(&mut buf[..cap])?;
+        if n > 0 {
+            if let Some(h) = d.corrupt {
+                buf[(h as usize) % n] ^= 1u8 << ((h >> 32) & 7) as u32;
+            }
+        }
+        Ok(n)
+    }
+}
+
+impl Write for FaultStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let Some(f) = self.faults.as_deref_mut() else {
+            return self.inner.write(buf);
+        };
+        if let Some(kind) = f.broken {
+            return Err(injected_err(kind));
+        }
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        let d = f.decide();
+        if d.delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(d.delay_us));
+        }
+        if d.reset {
+            f.broken = Some(io::ErrorKind::ConnectionReset);
+            let _ = self.inner.shutdown(Shutdown::Both);
+            return Err(injected_err(io::ErrorKind::ConnectionReset));
+        }
+        if d.drop {
+            // Claim success without touching the wire; the peer's next read
+            // misframes (typed error) or times out.
+            return Ok(buf.len());
+        }
+        let cap = d.chunk.map_or(buf.len(), |c| c.clamp(1, buf.len()));
+        if d.partial {
+            let written = self.inner.write(&buf[..(cap / 2).max(1)])?;
+            f.broken = Some(io::ErrorKind::BrokenPipe);
+            let _ = self.inner.shutdown(Shutdown::Write);
+            return Ok(written);
+        }
+        if let Some(h) = d.corrupt {
+            let mut scratch = buf[..cap].to_vec();
+            let pos = (h as usize) % scratch.len();
+            scratch[pos] ^= 1u8 << ((h >> 32) & 7) as u32;
+            return self.inner.write(&scratch);
+        }
+        self.inner.write(&buf[..cap])
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        if let Some(f) = self.faults.as_deref() {
+            if let Some(kind) = f.broken {
+                return Err(injected_err(kind));
+            }
+        }
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// The injector is process-global; serialize tests that install plans.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn passthrough_when_no_plan_or_no_matching_peer() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        clear();
+        let (a, b) = pair();
+        let mut w = wrap(a, "faultnet-ut->x", Dir::Write);
+        assert!(w.faults.is_none());
+        install_spec("reset,peer=some-other-peer").unwrap();
+        let mut r = wrap(b, "faultnet-ut<-y", Dir::Read);
+        assert!(r.faults.is_none());
+        clear();
+        w.write_all(b"hello").unwrap();
+        let mut got = [0u8; 5];
+        r.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"hello");
+    }
+
+    #[test]
+    fn write_drop_swallows_bytes_and_reset_breaks_connection() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        // Op 1 drops; op 2 passes; op 3 resets.
+        install_spec("seed=1;drop,peer=faultnet-ut2,until=1;reset,peer=faultnet-ut2,after=2")
+            .unwrap();
+        let (a, b) = pair();
+        let mut w = wrap(a, "faultnet-ut2->x", Dir::Write);
+        clear();
+        w.write_all(b"lost!").unwrap(); // dropped: claims success
+        w.write_all(b"seen").unwrap(); // actually sent
+        let err = w.write_all(b"boom").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        // Sticky: later ops fail without touching the wire.
+        assert_eq!(w.write(b"x").unwrap_err().kind(), io::ErrorKind::ConnectionReset);
+        let mut r = FaultStream::passthrough(b);
+        let mut got = Vec::new();
+        r.read_to_end(&mut got).unwrap();
+        assert_eq!(&got, b"seen");
+    }
+
+    #[test]
+    fn corruption_flips_exactly_one_bit_deterministically() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        install_spec("seed=9;corrupt,peer=faultnet-ut3,dir=write").unwrap();
+        let payload = b"abcdefgh";
+        let mut rounds = Vec::new();
+        for _ in 0..2 {
+            // Fresh injector per round so the conn index restarts at 0.
+            install_spec("seed=9;corrupt,peer=faultnet-ut3,dir=write").unwrap();
+            let (a, b) = pair();
+            let mut w = wrap(a, "faultnet-ut3->x", Dir::Write);
+            clear();
+            w.write_all(payload).unwrap();
+            drop(w);
+            let mut got = Vec::new();
+            FaultStream::passthrough(b).read_to_end(&mut got).unwrap();
+            rounds.push(got);
+        }
+        assert_eq!(rounds[0].len(), payload.len());
+        let diff: Vec<usize> =
+            (0..payload.len()).filter(|&i| rounds[0][i] != payload[i]).collect();
+        assert_eq!(diff.len(), 1, "exactly one corrupted byte");
+        assert_eq!(
+            (rounds[0][diff[0]] ^ payload[diff[0]]).count_ones(),
+            1,
+            "exactly one flipped bit"
+        );
+        // Same seed, same peer, same conn index -> identical corruption.
+        assert_eq!(rounds[0], rounds[1]);
+    }
+
+    #[test]
+    fn throttle_caps_op_size() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        install_spec("throttle,peer=faultnet-ut4,chunk=3,us=1").unwrap();
+        let (a, b) = pair();
+        let mut w = wrap(a, "faultnet-ut4->x", Dir::Write);
+        clear();
+        assert_eq!(w.write(b"0123456789").unwrap(), 3);
+        drop(w);
+        let mut got = Vec::new();
+        FaultStream::passthrough(b).read_to_end(&mut got).unwrap();
+        assert_eq!(&got, b"012");
+    }
+}

@@ -64,12 +64,21 @@
 //! standalone TCP embedding-shard servers (`dcinfer shard-serve`), a
 //! replicated set of serving servers, and a [`cluster::ClusterRouter`]
 //! with consistent-hash placement, health probes and
-//! retry-once-on-alternate-replica failover (`dcinfer cluster` spawns a
-//! loopback mini-fleet).
+//! budgeted replica failover (`dcinfer cluster` spawns a loopback
+//! mini-fleet).
+//!
+//! [`faultnet`] makes partial failure a first-class, testable input:
+//! a seeded deterministic fault-injection layer (`DCINFER_FAULTS` /
+//! `--faults`) wraps every socket in the crate, and one
+//! [`faultnet::ResiliencePolicy`] unifies socket timeouts, budgeted
+//! jittered retries, per-peer circuit breakers, hedged shard lookups and
+//! degraded-mode serving (stale-cache/zero sparse contributions flagged
+//! `degraded` end-to-end instead of failing the request).
 
 pub mod cluster;
 pub mod coordinator;
 pub mod embedding;
+pub mod faultnet;
 pub mod fleet;
 pub mod gemm;
 pub mod graph;

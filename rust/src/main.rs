@@ -14,15 +14,15 @@
 //!               [--threads T] [--max-queue D]
 //!               [--listen ADDR] [--duration S] [--replica-label L] [--artifacts DIR]
 //!               [--sparse-shards N] [--sparse-cache ROWS] [--sparse-replication R]
-//!               [--remote-shards ADDR,ADDR,...] [--seq-sessions N]
+//!               [--remote-shards ADDR,ADDR,...] [--seq-sessions N] [--faults SPEC]
 //! dcinfer loadgen --connect ADDR [--qps Q] [--requests N]
 //!                 [--mix recsys:8,cv:1,nmt:1] [--deadline-ms D] [--seed S]
-//!                 [--artifacts DIR]
+//!                 [--artifacts DIR] [--faults SPEC]
 //!                 [--seq geom:MEAN|uniform:LO,HI] [--max-len N]
-//! dcinfer shard-serve [--listen ADDR]
+//! dcinfer shard-serve [--listen ADDR] [--faults SPEC]
 //! dcinfer cluster [--replicas N] [--shard-procs M] [--sparse-replication R]
 //!                 [--requests N] [--qps Q] [--mix ...] [--seed S]
-//!                 [--backend B] [--precision P] [--artifacts DIR]
+//!                 [--backend B] [--precision P] [--artifacts DIR] [--faults SPEC]
 //! ```
 //!
 //! `shard-serve` runs one standalone embedding-shard server (§4
@@ -61,6 +61,14 @@
 //! tokens/sec, time-to-first-token, inter-token and per-token latency.
 //! `--seq-sessions` bounds the server's session table (over it,
 //! submits shed as `Overloaded`, same §2.3 contract as `--max-queue`).
+//!
+//! `--faults SPEC` (or the `DCINFER_FAULTS` env var) installs a
+//! deterministic fault-injection plan on every transport this process
+//! opens — delays, drops, resets, partial writes, corruption and
+//! throttling, keyed by peer label and connection index so the same
+//! seed replays bit-identically (see [`dcinfer::faultnet`]). `cluster`
+//! forwards the spec to every child it spawns, so one flag
+//! chaos-tests the whole mini-fleet.
 //!
 //! Without `artifacts/manifest.json` both subcommands fall back to the
 //! self-synthesized fixture (native backend), so a loopback
@@ -109,10 +117,24 @@ fn zoo_models() -> Vec<ModelDesc> {
     representative_zoo().into_iter().map(|e| e.desc).collect()
 }
 
+/// `--faults SPEC` installs a deterministic fault-injection plan for
+/// every transport this process opens (`DCINFER_FAULTS` is the env
+/// equivalent, picked up in `main`).
+fn install_faults_flag(flags: &BTreeMap<String, String>) -> Result<()> {
+    if let Some(spec) = flags.get("faults") {
+        dcinfer::faultnet::install_spec(spec).with_context(|| format!("--faults {spec:?}"))?;
+        println!("fault injection active: {spec}\n");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     let flags = parse_flags(&args[args.len().min(1)..]);
+    if dcinfer::faultnet::install_from_env()? {
+        println!("fault injection active: DCINFER_FAULTS\n");
+    }
 
     match cmd {
         "characterize" => cmd_characterize(),
@@ -369,6 +391,7 @@ fn services_for(manifest: &Manifest, models: &str) -> Result<Vec<Arc<dyn ModelSe
 /// Run the serving frontend: self-driving synthetic load by default, or
 /// the network serving plane with `--listen ADDR`.
 fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
+    install_faults_flag(flags)?;
     let n: u64 = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(500);
     let executors = flags.get("executors").and_then(|v| v.parse().ok()).unwrap_or(2);
     let qps: f64 = flags.get("qps").and_then(|v| v.parse().ok()).unwrap_or(2000.0);
@@ -697,6 +720,7 @@ fn connect_with_retry(addr: &str, budget: Duration) -> Result<DcClient> {
 /// `--seq DIST` it drives the sequence plane instead (see
 /// [`loadgen_seq`]).
 fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
+    install_faults_flag(flags)?;
     if let Some(dist) = flags.get("seq") {
         return loadgen_seq(flags, dist);
     }
@@ -777,6 +801,9 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
         shed: u64,
         errs: u64,
         good: u64,
+        /// ok responses carrying the degraded flag (stale/zero sparse
+        /// contributions served while a row range was unreachable)
+        degraded: u64,
         rtt_ms: Samples,
     }
     let mut per_model: BTreeMap<String, Agg> = BTreeMap::new();
@@ -798,6 +825,9 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
                     agg.shed += 1;
                 } else if cr.resp.is_ok() {
                     agg.ok += 1;
+                    if cr.resp.degraded {
+                        agg.degraded += 1;
+                    }
                     agg.rtt_ms.push(cr.rtt_us / 1e3);
                     all_rtt.push(cr.rtt_us / 1e3);
                     if cr.good() {
@@ -813,7 +843,7 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
     client.close();
 
     let mut table = dcinfer::util::bench::Table::new(&[
-        "model", "sent", "ok", "shed", "err", "goodput", "p50 ms", "p99 ms", "p999 ms",
+        "model", "sent", "ok", "shed", "err", "degr", "goodput", "p50 ms", "p99 ms", "p999 ms",
     ]);
     let mut tot = Agg::default();
     // which arm drives the overall tail: the model whose own p99 is
@@ -832,6 +862,7 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
             agg.ok.to_string(),
             agg.shed.to_string(),
             agg.errs.to_string(),
+            agg.degraded.to_string(),
             format!("{:.1}%", agg.good as f64 / agg.sent.max(1) as f64 * 100.0),
             format!("{:.2}", agg.rtt_ms.p50()),
             format!("{:.2}", p99),
@@ -842,6 +873,7 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
         tot.shed += agg.shed;
         tot.errs += agg.errs;
         tot.good += agg.good;
+        tot.degraded += agg.degraded;
     }
     if per_model.len() > 1 {
         table.row(&[
@@ -850,6 +882,7 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
             tot.ok.to_string(),
             tot.shed.to_string(),
             tot.errs.to_string(),
+            tot.degraded.to_string(),
             format!("{:.1}%", tot.good as f64 / tot.sent.max(1) as f64 * 100.0),
             format!("{:.2}", all_rtt.p50()),
             format!("{:.2}", all_rtt.p99()),
@@ -867,12 +900,14 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
         n as f64 / send_wall.max(1e-9)
     );
     println!(
-        "overall: {}/{} ok, goodput {:.1}%, shed rate {:.1}%, {} errors, {} send failures",
+        "overall: {}/{} ok, goodput {:.1}%, shed rate {:.1}%, {} errors, {} degraded, \
+         {} send failures",
         tot.ok,
         tot.sent,
         tot.good as f64 / tot.sent.max(1) as f64 * 100.0,
         tot.shed as f64 / tot.sent.max(1) as f64 * 100.0,
         tot.errs,
+        tot.degraded,
         send_errors
     );
     if !per_replica.is_empty() {
@@ -1049,6 +1084,7 @@ fn loadgen_seq(flags: &BTreeMap<String, String>, dist: &str) -> Result<()> {
 /// it. Runs until killed — fleet members are processes precisely so a
 /// `kill` is a meaningful failure experiment.
 fn cmd_shard_serve(flags: &BTreeMap<String, String>) -> Result<()> {
+    install_faults_flag(flags)?;
     let addr = flags.get("listen").map(|s| s.as_str()).unwrap_or("127.0.0.1:0");
     let server = ShardServer::bind(addr, ShardServerConfig::default())?;
     // machine-readable: `ChildProc::spawn` parses this line to learn
@@ -1076,6 +1112,7 @@ fn cmd_shard_serve(flags: &BTreeMap<String, String>) -> Result<()> {
 /// `ClusterRouter` in front, loadgen driven through the router, and
 /// the per-replica fleet view printed at the end.
 fn cmd_cluster(flags: &BTreeMap<String, String>) -> Result<()> {
+    install_faults_flag(flags)?;
     let replicas: usize = flags.get("replicas").and_then(|v| v.parse().ok()).unwrap_or(2);
     let shard_procs: usize =
         flags.get("shard-procs").and_then(|v| v.parse().ok()).unwrap_or(2);
@@ -1114,13 +1151,16 @@ fn cmd_cluster(flags: &BTreeMap<String, String>) -> Result<()> {
          (x{replication} replication), mix [{mix}] ==\n"
     );
 
+    // the same fault spec goes to every child: each process's streams
+    // match it by peer label, so one flag chaos-tests the whole fleet
+    let faults = flags.get("faults").cloned();
     let mut shard_children: Vec<ChildProc> = Vec::new();
     for s in 0..shard_procs {
-        shard_children.push(ChildProc::spawn(
-            &bin,
-            &["shard-serve", "--listen", "127.0.0.1:0"],
-            &format!("shard-{s}"),
-        )?);
+        let mut sargs = vec!["shard-serve", "--listen", "127.0.0.1:0"];
+        if let Some(f) = &faults {
+            sargs.extend_from_slice(&["--faults", f.as_str()]);
+        }
+        shard_children.push(ChildProc::spawn(&bin, &sargs, &format!("shard-{s}"))?);
     }
     let shard_addrs =
         shard_children.iter().map(|c| c.addr.clone()).collect::<Vec<_>>().join(",");
@@ -1160,6 +1200,9 @@ fn cmd_cluster(flags: &BTreeMap<String, String>) -> Result<()> {
                 &shard_addrs,
             ]);
         }
+        if let Some(f) = &faults {
+            args.extend_from_slice(&["--faults", f.as_str()]);
+        }
         serve_children.push(ChildProc::spawn(&bin, &args, &label)?);
     }
 
@@ -1178,15 +1221,23 @@ fn cmd_cluster(flags: &BTreeMap<String, String>) -> Result<()> {
 
     println!("\n--- fleet (router view) ---");
     let mut table = dcinfer::util::bench::Table::new(&[
-        "replica", "healthy", "sent", "done", "failed", "inflight", "p50 ms", "p99 ms",
+        "replica", "state", "sent", "done", "failed", "trips", "inflight", "p50 ms", "p99 ms",
     ]);
     for (i, s) in router.stats().iter().enumerate() {
+        let state = if !s.healthy {
+            "down"
+        } else if s.suspect {
+            "suspect"
+        } else {
+            "healthy"
+        };
         table.row(&[
             format!("replica-{i} ({})", s.addr),
-            s.healthy.to_string(),
+            state.to_string(),
             s.sent.to_string(),
             s.completed.to_string(),
             s.failed.to_string(),
+            s.breaker_trips.to_string(),
             s.inflight.to_string(),
             format!("{:.2}", s.p50_ms),
             format!("{:.2}", s.p99_ms),

@@ -1,0 +1,470 @@
+//! Chaos suite: seeded fault-injection scenarios over an in-process
+//! mini-fleet (two `ShardServer`s, two serving replicas, one
+//! `ClusterRouter`), asserting the resilience contract end to end.
+//!
+//! The invariant every scenario checks: under injected faults, each
+//! response is **bit-identical** to the fault-free reference, **or** a
+//! typed error, **or** flagged `degraded` — never silently wrong.
+//! Fault schedules come from [`dcinfer::faultnet`] plans, so whether a
+//! given op faults is a pure function of the plan seed; thread
+//! interleaving can shift *which* requests are affected, which is why
+//! the assertions are invariant-shaped rather than per-request.
+//!
+//! Plans only attach to connections opened **after** installation, so
+//! every scenario installs its plan before the fleet under test comes
+//! up and scopes rules by peer label + `after=` so the one-time table
+//! registration (a handful of ops per shard connection) passes clean.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dcinfer::cluster::{ClusterRouter, RouterConfig, ShardServer, ShardServerConfig};
+use dcinfer::coordinator::{
+    ClientResponse, DcClient, FrontendConfig, ModelService, ServerConfig, ServingFrontend,
+    ServingServer,
+};
+use dcinfer::embedding::SparseTierConfig;
+use dcinfer::faultnet;
+use dcinfer::models::RecSysService;
+use dcinfer::runtime::{synthetic_artifacts_dir, BackendSpec, Manifest, Precision};
+use dcinfer::util::rng::Pcg32;
+
+/// The fault injector is process-global; every chaos test serializes.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Output tensors of one response, as (shape, raw bytes) for exact
+/// bit-level comparison.
+type Tensors = Vec<(Vec<usize>, Vec<u8>)>;
+
+/// What the client observed for one request.
+struct Shot {
+    ok: bool,
+    degraded: bool,
+    replica: String,
+    outputs: Option<Tensors>,
+}
+
+struct Fleet {
+    svc: RecSysService,
+    shards: Vec<ShardServer>,
+    frontends: Vec<Arc<ServingFrontend>>,
+    servers: Vec<ServingServer>,
+    router: ClusterRouter,
+}
+
+impl Fleet {
+    /// Two shard servers, two serving replicas over them, one router.
+    /// `pre_router` runs after the replicas are bound but before the
+    /// router connects to them — the hook scenarios use to install
+    /// plans that target a specific `router->ADDR` peer label.
+    fn start(dir: &Path, replication: usize, pre_router: impl FnOnce(&[String])) -> Fleet {
+        let manifest = Manifest::load(dir).expect("manifest");
+        let svc = RecSysService::from_manifest(&manifest).expect("recsys config");
+        let shards: Vec<ShardServer> = (0..2)
+            .map(|_| {
+                ShardServer::bind("127.0.0.1:0", ShardServerConfig::default())
+                    .expect("shard bind")
+            })
+            .collect();
+        let shard_addrs: Vec<String> = shards.iter().map(|s| s.local_addr().to_string()).collect();
+        let mut frontends = Vec::new();
+        let mut servers = Vec::new();
+        for r in 0..2 {
+            let services: Vec<Arc<dyn ModelService>> = vec![Arc::new(svc.clone())];
+            let frontend = Arc::new(
+                ServingFrontend::start(
+                    FrontendConfig {
+                        artifacts_dir: dir.to_path_buf(),
+                        executors: 1,
+                        backend: BackendSpec::native(Precision::Fp32),
+                        sparse_tier: Some(SparseTierConfig {
+                            shards: 2,
+                            replication,
+                            // cache off: degraded serving falls back to
+                            // zero rows, and exact runs never diverge
+                            // through cache state
+                            cache_capacity_rows: 0,
+                            remote_shards: shard_addrs.clone(),
+                            ..Default::default()
+                        }),
+                        ..Default::default()
+                    },
+                    services,
+                )
+                .expect("frontend start"),
+            );
+            let server = ServingServer::bind(
+                frontend.clone(),
+                "127.0.0.1:0",
+                ServerConfig { replica_label: format!("replica-{r}"), ..Default::default() },
+            )
+            .expect("server bind");
+            frontends.push(frontend);
+            servers.push(server);
+        }
+        let replica_addrs: Vec<String> =
+            servers.iter().map(|s| s.local_addr().to_string()).collect();
+        pre_router(&replica_addrs);
+        let router = ClusterRouter::bind("127.0.0.1:0", &replica_addrs, RouterConfig::default())
+            .expect("router bind");
+        let fleet = Fleet { svc, shards, frontends, servers, router };
+        // warm: flushes one-time table registration to the shards and
+        // settles router health, so measured shots see a steady fleet
+        let _ = run_load(&fleet, 6, 400.0, 0xEEEE);
+        fleet
+    }
+
+    fn shutdown(&self) {
+        self.router.shutdown();
+        for s in &self.servers {
+            s.shutdown();
+        }
+        for f in &self.frontends {
+            f.shutdown();
+        }
+        for s in &self.shards {
+            s.shutdown();
+        }
+    }
+
+    /// Tier failovers summed across both replicas' sparse tiers.
+    fn tier_failovers(&self) -> u64 {
+        self.frontends
+            .iter()
+            .filter_map(|f| f.sparse_tier())
+            .map(|t| t.snapshot().failovers)
+            .sum()
+    }
+
+    /// Degraded lookups summed across both replicas' sparse tiers.
+    fn tier_degraded(&self) -> u64 {
+        self.frontends
+            .iter()
+            .filter_map(|f| f.sparse_tier())
+            .map(|t| t.snapshot().degraded_lookups)
+            .sum()
+    }
+}
+
+/// Open-loop recsys load through the router. `(n, qps, seed)` fully
+/// determine the request stream, so a reference run and a fault run
+/// with the same triple submit bit-identical requests.
+fn run_load(fleet: &Fleet, n: u64, qps: f64, seed: u64) -> Vec<Shot> {
+    let client = DcClient::connect(fleet.router.local_addr()).expect("connect");
+    let mut rng = Pcg32::seeded(seed);
+    let mut pending = Vec::with_capacity(n as usize);
+    let t0 = Instant::now();
+    let mut next_at = 0.0f64;
+    for i in 0..n {
+        next_at += rng.exponential(qps);
+        let now = t0.elapsed().as_secs_f64();
+        if next_at > now {
+            std::thread::sleep(Duration::from_secs_f64(next_at - now));
+        }
+        let req = fleet.svc.synth_request(seed * 1_000_000 + i, &mut rng, 10_000.0);
+        pending.push(client.submit(&req).ok());
+    }
+    let shots = pending
+        .into_iter()
+        .map(|rx| {
+            let failed = Shot { ok: false, degraded: false, replica: String::new(), outputs: None };
+            let Some(rx) = rx else { return failed };
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(cr) => shot_of(cr),
+                Err(_) => failed,
+            }
+        })
+        .collect();
+    client.close();
+    shots
+}
+
+fn shot_of(cr: ClientResponse) -> Shot {
+    match &cr.resp.outcome {
+        Ok(tensors) if !cr.shed() => Shot {
+            ok: true,
+            degraded: cr.resp.degraded,
+            replica: cr.resp.replica.clone(),
+            outputs: Some(tensors.iter().map(|t| (t.shape.clone(), t.data.clone())).collect()),
+        },
+        _ => Shot { ok: false, degraded: false, replica: cr.resp.replica.clone(), outputs: None },
+    }
+}
+
+/// The fault-free reference: same fleet shape, no plan installed.
+/// Every reference request must be served clean — if this fails the
+/// scenario's comparison would be meaningless.
+fn reference_shots(dir: &Path, replication: usize, n: u64, qps: f64, seed: u64) -> Vec<Shot> {
+    faultnet::clear();
+    let fleet = Fleet::start(dir, replication, |_| {});
+    let shots = run_load(&fleet, n, qps, seed);
+    fleet.shutdown();
+    for (i, s) in shots.iter().enumerate() {
+        assert!(s.ok && !s.degraded, "fault-free reference request {i} was not served clean");
+    }
+    shots
+}
+
+/// The chaos invariant: each observed response is bit-identical to the
+/// reference, a typed error, or flagged degraded. Returns
+/// `(exact, degraded, errors)` for scenario-specific rate assertions.
+fn assert_faithful(reference: &[Shot], observed: &[Shot]) -> (u64, u64, u64) {
+    assert_eq!(reference.len(), observed.len());
+    let (mut exact, mut degraded, mut errors) = (0u64, 0u64, 0u64);
+    for (i, (r, o)) in reference.iter().zip(observed).enumerate() {
+        if !o.ok {
+            errors += 1;
+            continue;
+        }
+        if o.degraded {
+            degraded += 1;
+            continue;
+        }
+        assert_eq!(
+            o.outputs, r.outputs,
+            "request {i}: an ok, non-degraded response under faults must be \
+             bit-identical to the fault-free reference"
+        );
+        exact += 1;
+    }
+    (exact, degraded, errors)
+}
+
+/// Scenario 1: connections to the remote shards reset mid-lookup.
+/// Replication 2 means every row range has a second replica, so the
+/// tier fails over and answers stay exact; goodput holds.
+#[test]
+fn resets_mid_lookup_fail_over_bit_identically() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = synthetic_artifacts_dir("chaos_reset").expect("fixture");
+    let (n, qps, seed) = (200u64, 500.0, 0xA11CE);
+    let reference = reference_shots(&dir, 2, n, qps, seed);
+
+    // after=64 lets per-connection registration traffic through; every
+    // reconnect restarts the op count, so resets recur all run long
+    faultnet::install_spec("seed=11;reset,peer=rshard,dir=write,after=64,every=24").unwrap();
+    let fleet = Fleet::start(&dir, 2, |_| {});
+    let shots = run_load(&fleet, n, qps, seed);
+    faultnet::clear();
+    let failovers = fleet.tier_failovers();
+    fleet.shutdown();
+
+    let (exact, degraded, errors) = assert_faithful(&reference, &shots);
+    assert!(failovers > 0, "resets never exercised shard failover");
+    assert!(
+        exact + degraded >= n * 9 / 10,
+        "goodput collapsed under shard resets: {exact} exact + {degraded} degraded \
+         + {errors} errors / {n}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Scenario 2: shard response frames arrive with a flipped bit. The
+/// frame checksum must catch every corruption — a corrupted frame may
+/// cost a failover, never a silently wrong answer.
+#[test]
+fn corrupted_shard_frames_surface_as_typed_errors_never_wrong_bits() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = synthetic_artifacts_dir("chaos_corrupt").expect("fixture");
+    let (n, qps, seed) = (200u64, 500.0, 0xBEEF);
+    let reference = reference_shots(&dir, 2, n, qps, seed);
+
+    faultnet::install_spec("seed=7;corrupt,peer=rshard,dir=read,every=97").unwrap();
+    let fleet = Fleet::start(&dir, 2, |_| {});
+    let shots = run_load(&fleet, n, qps, seed);
+    faultnet::clear();
+    fleet.shutdown();
+
+    let (exact, degraded, errors) = assert_faithful(&reference, &shots);
+    assert!(exact > 0);
+    assert!(
+        exact + degraded >= n * 9 / 10,
+        "goodput collapsed under frame corruption: {exact} exact + {degraded} degraded \
+         + {errors} errors / {n}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Scenario 3: one serving replica turns slow (every read on the
+/// router's leg to it is delayed past the probe latency bound). The
+/// router must classify it Suspect/unroutable and steer traffic to the
+/// healthy replica; once the fault window closes, the replica recovers
+/// and serves exact answers again.
+#[test]
+fn slow_replica_is_suspected_rerouted_and_recovers() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = synthetic_artifacts_dir("chaos_slow").expect("fixture");
+    let (n, qps, seed) = (120u64, 400.0, 0x510);
+    let reference = reference_shots(&dir, 2, n, qps, seed);
+
+    let mut installed = Instant::now();
+    let fleet = Fleet::start(&dir, 2, |replica_addrs| {
+        // delay only the router's leg to replica 0, reads, for a 4 s
+        // window from installation — well past the 250 ms probe bound
+        let spec =
+            format!("seed=3;delay,peer=router->{},dir=read,ms=300,for_ms=4000", replica_addrs[0]);
+        faultnet::install_spec(&spec).unwrap();
+        installed = Instant::now();
+    });
+
+    let saw_suspect = AtomicBool::new(false);
+    let shots = std::thread::scope(|s| {
+        s.spawn(|| {
+            for _ in 0..80 {
+                let stats = fleet.router.stats();
+                if stats.iter().any(|r| r.suspect || !r.healthy) {
+                    saw_suspect.store(true, Ordering::SeqCst);
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        });
+        run_load(&fleet, n, qps, seed)
+    });
+    assert!(
+        saw_suspect.load(Ordering::SeqCst),
+        "a replica answering probes 300 ms late was never marked suspect/unroutable"
+    );
+    // responses during the window: rerouted (exact), late (exact), or
+    // casualties of a recycled replica connection (typed errors)
+    let (_, _, window_errors) = assert_faithful(&reference, &shots);
+    assert!(
+        window_errors <= n / 4,
+        "rerouting around a slow replica lost too much: {window_errors} errors / {n}"
+    );
+
+    // let the window close and the prober take a clean lap
+    let settle = installed + Duration::from_millis(4000 + 1000);
+    if let Some(wait) = settle.checked_duration_since(Instant::now()) {
+        std::thread::sleep(wait);
+    }
+    for r in fleet.router.stats() {
+        assert!(r.healthy && !r.suspect, "replica {} did not recover: {r:?}", r.addr);
+    }
+    faultnet::clear();
+    let shots2 = run_load(&fleet, n, qps, seed);
+    let (exact2, degraded2, errors2) = assert_faithful(&reference, &shots2);
+    assert_eq!(
+        (exact2, degraded2, errors2),
+        (n, 0, 0),
+        "post-recovery load must be entirely exact"
+    );
+    assert!(
+        shots2.iter().any(|s| s.replica == "replica-0"),
+        "the recovered replica never served again"
+    );
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Scenario 4: a full row-range outage — every shard server goes down,
+/// so no replica of any range is reachable. The tier serves degraded
+/// (zero-row contributions, flagged) instead of failing, and goodput
+/// stays within 90% of fault-free.
+#[test]
+fn full_range_outage_serves_degraded_and_keeps_goodput() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultnet::clear();
+    let dir = synthetic_artifacts_dir("chaos_outage").expect("fixture");
+    let (n, qps, seed) = (160u64, 500.0, 0xDEAD);
+    let reference = reference_shots(&dir, 1, n, qps, seed);
+
+    let fleet = Fleet::start(&dir, 1, |_| {});
+    // registration flushed by the warm load inside start; now take the
+    // whole shard fleet down
+    for s in &fleet.shards {
+        s.shutdown();
+    }
+    let shots = run_load(&fleet, n, qps, seed);
+    let tier_degraded = fleet.tier_degraded();
+    fleet.shutdown();
+
+    let (exact, degraded, errors) = assert_faithful(&reference, &shots);
+    assert!(degraded > 0, "a full outage must surface flagged degraded responses");
+    assert!(tier_degraded > 0, "the tier never counted a degraded lookup");
+    // acceptance: goodput under the outage >= 90% of fault-free (the
+    // reference served all n) — degraded answers are served answers
+    assert!(
+        exact + degraded >= n * 9 / 10,
+        "degraded serving did not hold goodput: {exact} exact + {degraded} degraded \
+         + {errors} errors / {n}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Scenario 5: a flapping shard peer — connections die and come back
+/// every few dozen ops, both directions. Failover plus breaker
+/// deprioritization keep the answers exact-or-flagged and goodput up.
+#[test]
+fn flapping_shard_peer_churns_without_silent_corruption() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = synthetic_artifacts_dir("chaos_flap").expect("fixture");
+    let (n, qps, seed) = (200u64, 500.0, 0xF1AB);
+    let reference = reference_shots(&dir, 2, n, qps, seed);
+
+    faultnet::install_spec("seed=13;reset,peer=rshard,after=64,every=25").unwrap();
+    let fleet = Fleet::start(&dir, 2, |_| {});
+    let shots = run_load(&fleet, n, qps, seed);
+    faultnet::clear();
+    let failovers = fleet.tier_failovers();
+    fleet.shutdown();
+
+    let (exact, degraded, errors) = assert_faithful(&reference, &shots);
+    assert!(failovers > 0, "a flapping peer never exercised failover");
+    assert!(
+        exact + degraded >= n * 9 / 10,
+        "goodput collapsed under a flapping peer: {exact} exact + {degraded} degraded \
+         + {errors} errors / {n}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Scenario 6: every router link is throttled to a 256-byte trickle.
+/// Pure slowness must not cost correctness: every response exact, no
+/// errors, no degradation.
+#[test]
+fn throttled_router_links_stay_bit_exact() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = synthetic_artifacts_dir("chaos_throttle").expect("fixture");
+    let (n, qps, seed) = (140u64, 400.0, 0x7407);
+    let reference = reference_shots(&dir, 2, n, qps, seed);
+
+    faultnet::install_spec("seed=3;throttle,peer=router,chunk=256,us=50").unwrap();
+    let fleet = Fleet::start(&dir, 2, |_| {});
+    let shots = run_load(&fleet, n, qps, seed);
+    faultnet::clear();
+    fleet.shutdown();
+
+    let (exact, degraded, errors) = assert_faithful(&reference, &shots);
+    assert_eq!(
+        (exact, degraded, errors),
+        (n, 0, 0),
+        "throttling is not allowed to cost correctness"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Scenario 7: the client's own uplink breaks mid-frame (partial write
+/// then a broken pipe). The server side misframes and drops the
+/// connection; everything in flight surfaces as a typed error, and
+/// everything served before the break is exact.
+#[test]
+fn partial_client_writes_surface_typed_errors() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = synthetic_artifacts_dir("chaos_partial").expect("fixture");
+    let (n, qps, seed) = (120u64, 400.0, 0xBAD5EED);
+    let reference = reference_shots(&dir, 2, n, qps, seed);
+
+    faultnet::install_spec("seed=21;partial,peer=client->,dir=write,after=12,every=31").unwrap();
+    let fleet = Fleet::start(&dir, 2, |_| {});
+    let shots = run_load(&fleet, n, qps, seed);
+    faultnet::clear();
+    fleet.shutdown();
+
+    let (exact, degraded, errors) = assert_faithful(&reference, &shots);
+    assert!(exact > 0, "nothing was served before the uplink broke");
+    assert!(errors > 0, "the mid-frame break never surfaced");
+    assert_eq!(degraded, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

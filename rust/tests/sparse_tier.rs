@@ -75,7 +75,7 @@ fn prop_fp32_sharded_cached_matches_monolithic_bit_exactly() {
                 replication,
                 cache_capacity_rows: cache,
                 admit_after: 1,
-                remote_shards: Vec::new(),
+                ..Default::default()
             })
             .unwrap();
             let id = svc.register_table("prop/emb", &table, false).unwrap();
@@ -111,7 +111,7 @@ fn prop_int8_sharded_within_quant_tolerance_and_placement_invariant() {
             replication: 1,
             cache_capacity_rows: 0,
             admit_after: 1,
-            remote_shards: Vec::new(),
+            ..Default::default()
         })
         .unwrap();
         let id = mono.register_table("q/emb", &table, true).unwrap();
@@ -130,7 +130,7 @@ fn prop_int8_sharded_within_quant_tolerance_and_placement_invariant() {
             replication: 2,
             cache_capacity_rows: 64,
             admit_after: 1,
-            remote_shards: Vec::new(),
+            ..Default::default()
         })
         .unwrap();
         let id = svc.register_table("q/emb", &table, true).unwrap();
@@ -157,7 +157,7 @@ fn cross_shard_and_empty_bags_explicit() {
         replication: 1,
         cache_capacity_rows: 4,
         admit_after: 1,
-        remote_shards: Vec::new(),
+        ..Default::default()
     })
     .unwrap();
     let id = svc.register_table("x/emb", &table, false).unwrap();
@@ -182,7 +182,7 @@ fn cache_counters_are_consistent_and_zipf_traffic_hits() {
         replication: 1,
         cache_capacity_rows: 1024,
         admit_after: 2,
-        remote_shards: Vec::new(),
+        ..Default::default()
     })
     .unwrap();
     let id = svc.register_table("zipf/emb", &table, false).unwrap();
@@ -210,7 +210,7 @@ fn cache_counters_are_consistent_and_zipf_traffic_hits() {
         replication: 1,
         cache_capacity_rows: 0,
         admit_after: 2,
-        remote_shards: Vec::new(),
+        ..Default::default()
     })
     .unwrap();
     let id2 = cold.register_table("zipf/emb", &table, false).unwrap();
@@ -331,7 +331,7 @@ fn native_backend_embed_pool_fetches_through_the_tier() {
         replication: 1,
         cache_capacity_rows: 32,
         admit_after: 1,
-        remote_shards: Vec::new(),
+        ..Default::default()
     })
     .unwrap();
     let sharded = NativeBackend::with_sparse_tier(Precision::Fp32, tier.clone())
@@ -393,7 +393,7 @@ fn frontend_serves_through_sparse_tier_with_metrics() {
                 replication: 1,
                 cache_capacity_rows: 64,
                 admit_after: 1,
-                remote_shards: Vec::new(),
+                ..Default::default()
             }),
             ..Default::default()
         },

@@ -97,10 +97,12 @@ fn responses_round_trip_ok_and_all_error_variants() {
         variant: "gru_step_b4".into(),
         backend: "native/fp32".into(),
         replica: "replica-2".into(),
+        degraded: true,
     };
     let back = wire::decode_response(&wire::encode_response(&ok)).unwrap();
     assert_eq!(back.id, 99);
     assert_eq!(back.model, "nmt");
+    assert!(back.degraded, "degraded flag must survive the round trip");
     assert_eq!(back.queue_us, 321.5);
     assert_eq!(back.exec_us, 1234.25);
     assert_eq!(back.batch_size, 4);
@@ -163,6 +165,7 @@ fn every_truncation_of_a_response_payload_is_a_typed_error() {
         variant: "cv_tiny_b2".into(),
         backend: "native/fp32".into(),
         replica: "r0".into(),
+        degraded: false,
     };
     let payload = wire::encode_response(&resp);
     for cut in 0..payload.len() {
@@ -312,7 +315,7 @@ fn version_skew_closes_only_the_offending_connection() {
     let mut good = Vec::new();
     wire::write_frame(&mut good, FrameKind::Request, 7, &payload).unwrap();
 
-    for (at, val, what) in [(4usize, 3u8, "future version"), (5, 77, "unknown frame kind")] {
+    for (at, val, what) in [(4usize, 9u8, "future version"), (5, 77, "unknown frame kind")] {
         let mut skewed = good.clone();
         skewed[at] = val;
         let mut raw = TcpStream::connect(addr).expect("raw connect");
