@@ -20,9 +20,9 @@ artifacts-fast:
 # Perf trajectory: runs the perf benches and writes
 # BENCH_fig6_gemm.json / BENCH_alloc.json / BENCH_backend_parity.json /
 # BENCH_wire.json / BENCH_cluster.json / BENCH_seqdecode.json /
-# BENCH_compiled.json / BENCH_faults.json to the repo root. Works
-# without `make artifacts` (the benches fall back to a self-synthesized
-# fixture).
+# BENCH_compiled.json / BENCH_faults.json / BENCH_autoscale.json to the
+# repo root. Works without `make artifacts` (the benches fall back to a
+# self-synthesized fixture).
 perf:
 	cd rust && cargo bench --bench fig6_gemm
 	cd rust && cargo bench --bench ablation_alloc
@@ -32,6 +32,7 @@ perf:
 	cd rust && cargo bench --bench e2e_seqdecode
 	cd rust && cargo bench --bench e2e_compiled
 	cd rust && cargo bench --bench e2e_faults
+	cd rust && cargo bench --bench e2e_autoscale
 
 test:
 	cd python && python -m pytest tests/ -q

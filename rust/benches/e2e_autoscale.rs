@@ -1,0 +1,264 @@
+//! Autoscale bench: SLO attainment, shed rate and tail latency through
+//! a simulated diurnal peak (Fig 1 / §2.3), with the
+//! [`dcinfer::autoscale`] controller resizing the live executor pool
+//! against two static references — capacity pinned at the trough
+//! provisioning (min) and at the peak provisioning (max).
+//!
+//! One loopback serving server is driven over the wire by a thinned
+//! inhomogeneous Poisson load (the `loadgen --demand diurnal` path)
+//! with Zipf-skewed embedding ids. The day is compressed to seconds;
+//! the peak lands mid-run. Per mode the table reports offered/served/
+//! shed counts, SLO attainment (answers inside the interactive
+//! deadline), p50/p99 RTT through the whole episode, and the scale
+//! events the controller applied.
+//!
+//! Runs on the self-synthesized fixture (both feature configurations);
+//! `-- --smoke` runs the tiny CI-friendly sweep. Emits
+//! `BENCH_autoscale.json` at the repo root.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dcinfer::autoscale::{format_events, AutoscaleController, ScalePolicy};
+use dcinfer::coordinator::{
+    ClientResponse, DcClient, FrontendConfig, IndexSkew, ModelService, ServerConfig,
+    ServingFrontend, ServingServer,
+};
+use dcinfer::fleet::DemandCurve;
+use dcinfer::models::RecSysService;
+use dcinfer::runtime::{synthetic_artifacts_dir, BackendSpec, Manifest, Precision};
+use dcinfer::util::bench::{write_bench_json, Table};
+use dcinfer::util::rng::Pcg32;
+use dcinfer::util::stats::Samples;
+
+const DEADLINE_MS: f64 = 100.0;
+
+struct Mode {
+    name: &'static str,
+    /// executors at start; the controller (if any) moves within
+    /// `[min, max]`
+    start: usize,
+    controller: bool,
+}
+
+struct RunStats {
+    sent: u64,
+    ok: u64,
+    in_slo: u64,
+    shed: u64,
+    errs: u64,
+    peak_sent: u64,
+    peak_shed: u64,
+    rtt_ms: Samples,
+    events: Vec<String>,
+    cap_end: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_mode(
+    dir: &std::path::Path,
+    mode: &Mode,
+    min_cap: usize,
+    max_cap: usize,
+    requests: u64,
+    peak_qps: f64,
+    period: f64,
+    interval: Duration,
+) -> RunStats {
+    let manifest = Manifest::load(dir).expect("manifest");
+    let svc = RecSysService::from_manifest(&manifest).expect("recsys config");
+    let services: Vec<Arc<dyn ModelService>> = vec![Arc::new(svc.clone())];
+    let frontend = Arc::new(
+        ServingFrontend::start(
+            FrontendConfig {
+                artifacts_dir: dir.to_path_buf(),
+                executors: mode.start,
+                max_queue_depth: 256,
+                backend: BackendSpec::native(Precision::Fp32),
+                ..Default::default()
+            },
+            services,
+        )
+        .expect("frontend start"),
+    );
+    let server = ServingServer::bind(frontend.clone(), "127.0.0.1:0", ServerConfig::default())
+        .expect("server bind");
+    let controller = if mode.controller {
+        let policy = ScalePolicy {
+            min_capacity: min_cap,
+            max_capacity: max_cap,
+            ..ScalePolicy::default()
+        };
+        Some(AutoscaleController::spawn(frontend.clone(), policy, interval).expect("controller"))
+    } else {
+        None
+    };
+
+    let demand = DemandCurve::parse("diurnal:peak=1.0,trough=0.15,peak_hour=12").unwrap();
+    let envelope = demand.max();
+    let client = DcClient::connect(server.local_addr()).expect("connect");
+    let mut rng = Pcg32::seeded(4242);
+    let mut pending: Vec<(f64, Option<std::sync::mpsc::Receiver<ClientResponse>>)> =
+        Vec::with_capacity(requests as usize);
+    let peak_window = (period / 3.0)..(2.0 * period / 3.0);
+    let t0 = Instant::now();
+    let mut next_at = 0.0f64;
+    let mut sent = 0u64;
+    for i in 0..requests {
+        next_at += rng.exponential(peak_qps * envelope);
+        // thinning: accept this candidate with the curve's probability
+        let phase = next_at / period;
+        if rng.uniform() >= demand.multiplier(phase) / envelope {
+            continue;
+        }
+        let now = t0.elapsed().as_secs_f64();
+        if next_at > now {
+            std::thread::sleep(Duration::from_secs_f64(next_at - now));
+        }
+        let req = svc.synth_request_skewed(i, &mut rng, DEADLINE_MS, IndexSkew::Zipf(1.0));
+        pending.push((next_at, client.submit(&req).ok()));
+        sent += 1;
+    }
+    let mut s = RunStats {
+        sent,
+        ok: 0,
+        in_slo: 0,
+        shed: 0,
+        errs: 0,
+        peak_sent: 0,
+        peak_shed: 0,
+        rtt_ms: Samples::new(),
+        events: Vec::new(),
+        cap_end: 0,
+    };
+    for (at, rx) in pending {
+        let in_peak = peak_window.contains(&at);
+        if in_peak {
+            s.peak_sent += 1;
+        }
+        let cr = rx.and_then(|rx| rx.recv_timeout(Duration::from_secs(60)).ok());
+        match cr {
+            Some(cr) if cr.shed() => {
+                s.shed += 1;
+                if in_peak {
+                    s.peak_shed += 1;
+                }
+            }
+            Some(cr) if cr.resp.is_ok() => {
+                s.ok += 1;
+                let rtt = cr.rtt_us / 1e3;
+                if rtt <= DEADLINE_MS {
+                    s.in_slo += 1;
+                }
+                s.rtt_ms.push(rtt);
+            }
+            _ => s.errs += 1,
+        }
+    }
+    client.close();
+    s.cap_end = frontend.executor_capacity();
+    if let Some(ctl) = controller {
+        s.events = format_events(&ctl.stop());
+    }
+    server.shutdown();
+    frontend.shutdown();
+    s
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let dir = synthetic_artifacts_dir("e2e_autoscale").expect("fixture");
+    let (requests, peak_qps, period, interval_ms) =
+        if smoke { (600u64, 700.0, 5.0, 150u64) } else { (4000u64, 1200.0, 16.0, 400u64) };
+    let (min_cap, max_cap) = (1usize, 4usize);
+
+    println!(
+        "== E2E autoscale: diurnal peak over {period:.0}s, peak {peak_qps:.0} qps, \
+         zipf:1.0 ids, executors {min_cap}..{max_cap} =="
+    );
+    println!("   (SLO = answered inside the {DEADLINE_MS:.0} ms interactive deadline)\n");
+
+    let modes = [
+        Mode { name: "static-min", start: min_cap, controller: false },
+        Mode { name: "autoscale", start: min_cap, controller: true },
+        Mode { name: "static-max", start: max_cap, controller: false },
+    ];
+    let mut table = Table::new(&[
+        "mode", "sent", "ok", "shed", "err", "slo", "peak shed", "p50 ms", "p99 ms", "events",
+        "cap end",
+    ]);
+    let mut json_rows = Vec::new();
+    for mode in &modes {
+        let mut s = run_mode(
+            &dir,
+            mode,
+            min_cap,
+            max_cap,
+            requests,
+            peak_qps,
+            period,
+            Duration::from_millis(interval_ms),
+        );
+        assert!(s.ok > 0, "{}: nothing served", mode.name);
+        assert_eq!(s.ok + s.shed + s.errs, s.sent);
+        let slo = s.in_slo as f64 / s.sent as f64;
+        let shed_rate = s.shed as f64 / s.sent as f64;
+        let peak_shed_rate =
+            if s.peak_sent > 0 { s.peak_shed as f64 / s.peak_sent as f64 } else { 0.0 };
+        table.row(&[
+            mode.name.to_string(),
+            s.sent.to_string(),
+            s.ok.to_string(),
+            s.shed.to_string(),
+            s.errs.to_string(),
+            format!("{:.1}%", slo * 100.0),
+            format!("{:.1}%", peak_shed_rate * 100.0),
+            format!("{:.2}", s.rtt_ms.p50()),
+            format!("{:.2}", s.rtt_ms.p99()),
+            s.events.len().to_string(),
+            s.cap_end.to_string(),
+        ]);
+        json_rows.push(format!(
+            "    {{\"mode\": \"{}\", \"sent\": {}, \"ok\": {}, \"shed\": {}, \"errors\": {}, \
+             \"slo_pct\": {:.1}, \"shed_pct\": {:.1}, \"peak_shed_pct\": {:.1}, \
+             \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"scale_events\": {}, \"cap_end\": {}}}",
+            mode.name,
+            s.sent,
+            s.ok,
+            s.shed,
+            s.errs,
+            slo * 100.0,
+            shed_rate * 100.0,
+            peak_shed_rate * 100.0,
+            s.rtt_ms.p50(),
+            s.rtt_ms.p99(),
+            s.events.len(),
+            s.cap_end
+        ));
+        if !s.events.is_empty() {
+            println!("{} scale events:", mode.name);
+            for e in &s.events {
+                println!("  {e}");
+            }
+            println!();
+        }
+    }
+    table.print();
+    println!(
+        "\n(static-min is trough provisioning through the peak; static-max is peak provisioning \
+         through the trough; autoscale should approach static-max SLO at closer to static-min \
+         capacity-time)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"autoscale\",\n  \"requests\": {requests},\n  \
+         \"peak_qps\": {peak_qps},\n  \"period_s\": {period},\n  \
+         \"demand\": \"diurnal:peak=1.0,trough=0.15,peak_hour=12\",\n  \"skew\": \"zipf:1.0\",\n  \
+         \"deadline_ms\": {DEADLINE_MS},\n  \"executors_min\": {min_cap},\n  \
+         \"executors_max\": {max_cap},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    let path = write_bench_json("BENCH_autoscale.json", &json);
+    println!("\nwrote {} ({} rows)", path.display(), json_rows.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}

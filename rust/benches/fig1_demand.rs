@@ -1,7 +1,8 @@
 //! Fig 1 regeneration: server demand for DL inference over time, by
-//! service class.
+//! service class — plus the within-day diurnal modulation the serving
+//! planes replay (`loadgen --demand diurnal`, `dcinfer autoscale`).
 
-use dcinfer::fleet::{demand_series, demand::default_services};
+use dcinfer::fleet::{demand::default_services, demand_series, DemandCurve};
 
 fn main() {
     println!("== Fig 1: server demand for DL inference across data centers ==\n");
@@ -23,4 +24,22 @@ fn main() {
     assert!((2.2..4.5).contains(&growth), "Fig-1 growth shape");
     assert!(series.iter().all(|p| p.per_service[0] / p.total > 0.5));
     println!("paper-shape checks passed (≈3x growth, recommendation-dominated)");
+
+    // within one day: the diurnal curve every demand replayer shares
+    // (loadgen --demand, the autoscale bench/CLI, the fleet simulator)
+    let curve = DemandCurve::parse("diurnal:peak=1.0,trough=0.45,peak_hour=20").unwrap();
+    println!("\nwithin-day modulation (x peak rate), the §2.3 diurnal cycle:");
+    print!("  hour ");
+    for h in (0..24).step_by(3) {
+        print!("{h:>6}");
+    }
+    print!("\n  mult ");
+    for h in (0..24).step_by(3) {
+        print!("{:>6.2}", curve.multiplier(h as f64 / 24.0));
+    }
+    println!();
+    let peak = curve.max();
+    let trough = (0..240).map(|i| curve.multiplier(i as f64 / 240.0)).fold(f64::INFINITY, f64::min);
+    println!("  peak/trough: {:.2}x (paper: ~2x)", peak / trough);
+    assert!((1.8..2.6).contains(&(peak / trough)), "diurnal peak-to-trough shape");
 }

@@ -2,7 +2,7 @@
 //! fleet, plus the §3.1 roofline-accuracy ledger and the throughput of
 //! the telemetry pipeline itself.
 
-use dcinfer::fleet::{simulate_fleet, FleetConfig};
+use dcinfer::fleet::{simulate_fleet, DemandCurve, FleetConfig};
 use dcinfer::models::representative_zoo;
 use dcinfer::perfmodel::DeviceSpec;
 use dcinfer::report;
@@ -28,6 +28,22 @@ fn main() {
     for (bucket, ineff) in agent.inefficiency_by_bucket() {
         println!("  {bucket:<12} {ineff:.2}x");
     }
+
+    // the same fleet under the shared diurnal curve (§2.3): arrival
+    // thinning moves *when* work lands, not what the work is, so the
+    // operator mix must hold through the day
+    let curve = DemandCurve::parse("diurnal:peak=1.0,trough=0.45,peak_hour=20").unwrap();
+    let diurnal = simulate_fleet(
+        &zoo,
+        &dev,
+        &FleetConfig { requests: 4000, demand: curve, ..Default::default() },
+    );
+    let bd = diurnal.breakdown();
+    println!("\nsame fleet, diurnal demand replay: FC share {:.1}%", bd.share("FC") * 100.0);
+    assert!(
+        (bd.share("FC") - b.share("FC")).abs() < 0.1,
+        "demand thinning must not move the operator mix"
+    );
 
     let m = bench("simulate 200 requests", || {
         let _ = simulate_fleet(&zoo, &dev, &FleetConfig { requests: 200, ..Default::default() });

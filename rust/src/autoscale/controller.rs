@@ -1,0 +1,291 @@
+//! The control loop: poll a [`Scalable`] target, diff its cumulative
+//! counters into per-tick [`TickSignals`], ask the [`ScalePolicy`] for
+//! a verdict, apply it, and log every tick's [`ScaleDecision`].
+//!
+//! The controller never touches the request path — it reads the same
+//! [`crate::coordinator::MetricsSnapshot`] counters the operator sees
+//! and calls the same resize entry points an operator could call by
+//! hand. Capacity changes are therefore observationally safe by
+//! construction: a resize drains in-flight work (executor shutdown
+//! queues behind dispatched batches; a retired replica keeps its
+//! connection until its last response lands), so a scaled fleet returns
+//! bit-identical responses or typed errors, never silence or garbage.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::ServingFrontend;
+
+use super::policy::{PolicyState, ScaleAction, ScaleDecision, ScalePolicy, TickSignals};
+
+/// Cumulative counters a scalable target exposes. The controller keeps
+/// the previous observation and diffs, so targets report lifetime
+/// totals (exactly what [`crate::coordinator::MetricsSnapshot`] holds)
+/// rather than maintaining per-window state for the controller's sake.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Observation {
+    pub served: u64,
+    pub shed: u64,
+    pub failed: u64,
+    /// gauge: requests queued or in flight right now
+    pub queue_depth: u64,
+    /// worst-lane total p99 in ms (cumulative window)
+    pub p99_ms: f64,
+    /// tightest registered deadline in ms (0 = unknown)
+    pub deadline_ms: f64,
+}
+
+/// Anything whose capacity the controller can steer: the single-process
+/// serving frontend (executor count), or a fleet adapter that maps
+/// capacity to replica count.
+pub trait Scalable: Send + Sync {
+    /// Live capacity units.
+    fn capacity(&self) -> usize;
+    /// Resize to `target` units; returns the applied value (targets may
+    /// clamp). Must not drop in-flight work.
+    fn scale_to(&self, target: usize) -> Result<usize>;
+    /// Lifetime counters + gauges (see [`Observation`]).
+    fn observe(&self) -> Observation;
+}
+
+/// The serving frontend scales by executor count: every backend group's
+/// pool resizes in lockstep, pressure is summed over lanes, and the p99
+/// / deadline pair comes from the worst lane against the tightest
+/// registered deadline class.
+impl Scalable for ServingFrontend {
+    fn capacity(&self) -> usize {
+        self.executor_capacity()
+    }
+
+    fn scale_to(&self, target: usize) -> Result<usize> {
+        self.resize_executors(target)
+    }
+
+    fn observe(&self) -> Observation {
+        let mut o = Observation::default();
+        let mut deadline = f64::INFINITY;
+        for (model, snap) in self.snapshot_all() {
+            o.served += snap.served;
+            o.shed += snap.shed;
+            o.failed += snap.failed;
+            o.queue_depth += snap.queue_depth;
+            o.p99_ms = o.p99_ms.max(snap.total_p99_us / 1e3);
+            if let Some(svc) = self.service(&model) {
+                deadline = deadline.min(svc.deadline_class().default_deadline_ms());
+            }
+        }
+        o.deadline_ms = if deadline.is_finite() { deadline } else { 0.0 };
+        o
+    }
+}
+
+/// A running controller thread; [`AutoscaleController::stop`] joins it
+/// and returns the full per-tick decision log.
+pub struct AutoscaleController {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<Vec<ScaleDecision>>>,
+}
+
+impl AutoscaleController {
+    /// Start polling `target` every `interval`. The first tick fires
+    /// one interval in, so its counter deltas cover a full window.
+    pub fn spawn<T: Scalable + 'static>(
+        target: Arc<T>,
+        policy: ScalePolicy,
+        interval: Duration,
+    ) -> Result<AutoscaleController> {
+        policy.validate()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("dcautoscale".into())
+                .spawn(move || controller_loop(&*target, &policy, interval, &stop))
+                .context("spawning autoscale controller thread")?
+        };
+        Ok(AutoscaleController { stop, handle: Some(handle) })
+    }
+
+    /// Stop the loop and return the decision log (one entry per tick).
+    pub fn stop(mut self) -> Vec<ScaleDecision> {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+impl Drop for AutoscaleController {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Sleep `total` in small slices so a stop request lands fast even
+/// under second-scale polling intervals.
+fn sleep_until_stop(total: Duration, stop: &AtomicBool) {
+    let t0 = Instant::now();
+    while t0.elapsed() < total && !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(5).min(total));
+    }
+}
+
+fn controller_loop(
+    target: &dyn Scalable,
+    policy: &ScalePolicy,
+    interval: Duration,
+    stop: &AtomicBool,
+) -> Vec<ScaleDecision> {
+    let mut state = PolicyState::default();
+    let mut prev = target.observe();
+    let mut log = Vec::new();
+    loop {
+        sleep_until_stop(interval, stop);
+        if stop.load(Ordering::SeqCst) {
+            return log;
+        }
+        let now = target.observe();
+        let signals = TickSignals {
+            served: now.served.saturating_sub(prev.served),
+            shed: now.shed.saturating_sub(prev.shed),
+            failed: now.failed.saturating_sub(prev.failed),
+            queue_depth: now.queue_depth,
+            p99_ms: now.p99_ms,
+            deadline_ms: now.deadline_ms,
+            capacity: target.capacity(),
+        };
+        prev = now;
+        let mut decision = policy.decide(&mut state, signals);
+        if decision.action != ScaleAction::Hold {
+            match target.scale_to(decision.to) {
+                Ok(applied) => decision.to = applied,
+                Err(e) => {
+                    // a failed resize is logged, not fatal: the policy
+                    // re-fires next tick if the pressure persists
+                    decision.reason = format!("{} (resize failed: {e:#})", decision.reason);
+                    decision.to = decision.from;
+                    decision.action = ScaleAction::Hold;
+                }
+            }
+        }
+        log.push(decision);
+    }
+}
+
+/// Render the non-Hold entries of a decision log as a compact trace
+/// (the `dcinfer autoscale` per-event output).
+pub fn format_events(log: &[ScaleDecision]) -> Vec<String> {
+    log.iter()
+        .filter(|d| d.action != ScaleAction::Hold)
+        .map(|d| {
+            format!(
+                "tick {:>3}  {}  {} -> {}  [{}]",
+                d.tick,
+                match d.action {
+                    ScaleAction::Up => "up  ",
+                    ScaleAction::Down => "down",
+                    ScaleAction::Hold => "hold",
+                },
+                d.from,
+                d.to,
+                d.reason
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::AtomicUsize;
+
+    use super::*;
+
+    /// A fake tier that sheds whenever capacity is below what the
+    /// "load" needs, and serves cleanly otherwise.
+    struct FakeTier {
+        needed: AtomicUsize,
+        capacity: AtomicUsize,
+        served: AtomicU64,
+        shed: AtomicU64,
+    }
+
+    impl Scalable for FakeTier {
+        fn capacity(&self) -> usize {
+            self.capacity.load(Ordering::SeqCst)
+        }
+
+        fn scale_to(&self, target: usize) -> Result<usize> {
+            self.capacity.store(target, Ordering::SeqCst);
+            Ok(target)
+        }
+
+        fn observe(&self) -> Observation {
+            // each observation window "offers" 100 requests
+            if self.capacity() < self.needed.load(Ordering::SeqCst) {
+                self.shed.fetch_add(50, Ordering::SeqCst);
+                self.served.fetch_add(50, Ordering::SeqCst);
+            } else {
+                self.served.fetch_add(100, Ordering::SeqCst);
+            }
+            Observation {
+                served: self.served.load(Ordering::SeqCst),
+                shed: self.shed.load(Ordering::SeqCst),
+                failed: 0,
+                queue_depth: 0,
+                p99_ms: 5.0,
+                deadline_ms: 100.0,
+            }
+        }
+    }
+
+    #[test]
+    fn controller_scales_up_under_pressure_and_back_down_when_calm() {
+        let tier = Arc::new(FakeTier {
+            needed: AtomicUsize::new(4),
+            capacity: AtomicUsize::new(1),
+            served: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        });
+        let policy = ScalePolicy {
+            min_capacity: 1,
+            max_capacity: 6,
+            quiet_ticks_down: 2,
+            cooldown_ticks: 1,
+            step_up: 2,
+            step_down: 1,
+            ..ScalePolicy::default()
+        };
+        let ctl =
+            AutoscaleController::spawn(tier.clone(), policy, Duration::from_millis(20)).unwrap();
+        // peak: the tier sheds until capacity reaches 4
+        let t0 = Instant::now();
+        while tier.capacity() < 4 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(tier.capacity() >= 4, "controller never scaled up to demand");
+        // trough: demand drops, the controller should walk back to min
+        tier.needed.store(1, Ordering::SeqCst);
+        let t0 = Instant::now();
+        while tier.capacity() > 1 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(tier.capacity(), 1, "controller never reclaimed idle capacity");
+        let log = ctl.stop();
+        let ups = log.iter().filter(|d| d.action == ScaleAction::Up).count();
+        let downs = log.iter().filter(|d| d.action == ScaleAction::Down).count();
+        assert!(ups >= 2 && downs >= 3, "{ups} ups / {downs} downs: {log:#?}");
+        // cooldown: applied scale events are never back-to-back ticks
+        let events: Vec<u64> =
+            log.iter().filter(|d| d.action != ScaleAction::Hold).map(|d| d.tick).collect();
+        for w in events.windows(2) {
+            assert!(w[1] > w[0] + 1, "scale events on adjacent ticks {w:?} violate cooldown");
+        }
+        assert!(!format_events(&log).is_empty());
+    }
+}

@@ -1,0 +1,40 @@
+//! Autoscale plane: a closed control loop over the live serving tier.
+//!
+//! The paper's capacity story (§2.3, Fig 1) is that inference demand is
+//! strongly diurnal — the fleet sees a daily peak roughly 2x its trough
+//! — yet latency SLAs are set by the peak. Static provisioning
+//! therefore wastes the trough; the operational answer is elastic
+//! capacity: watch the serving metrics the tier already exports, grow
+//! the tier ahead of the peak, and reclaim it after.
+//!
+//! This module is that loop, deliberately split in three:
+//!
+//! - [`policy`]: the decision, pure and unit-testable. Per-tick
+//!   [`TickSignals`] (shed fraction, queue depth, p99 against the
+//!   deadline class) go in; a [`ScaleDecision`] comes out. Scale-up
+//!   fires on any single pressure signal, scale-down needs a streak of
+//!   calm ticks, and both respect a cooldown — hysteresis, so the
+//!   controller cannot oscillate against its own resize transient.
+//! - [`controller`]: the loop. Polls a [`Scalable`] target on an
+//!   interval, diffs cumulative [`crate::coordinator::MetricsSnapshot`]
+//!   counters into per-tick deltas, applies verdicts, and keeps the
+//!   full decision log ([`AutoscaleController::stop`] returns it).
+//! - The targets themselves live where the capacity lives:
+//!   [`crate::coordinator::ServingFrontend::resize_executors`] grows or
+//!   shrinks every backend group's executor pool without dropping
+//!   in-flight batches, and
+//!   [`crate::cluster::ClusterRouter::add_replica`] /
+//!   [`remove_replica`](crate::cluster::ClusterRouter::remove_replica)
+//!   resize the fleet ring with drain semantics. The frontend
+//!   implements [`Scalable`] directly; fleets adapt via the same trait.
+//!
+//! Scaling never touches numerics: capacity changes move *where* work
+//! runs, so every response stays bit-identical to a fixed-capacity
+//! run's, or is a typed error — the invariant `tests/autoscale.rs`
+//! asserts through a simulated diurnal peak.
+
+pub mod controller;
+pub mod policy;
+
+pub use controller::{format_events, AutoscaleController, Observation, Scalable};
+pub use policy::{PolicyState, ScaleAction, ScaleDecision, ScalePolicy, TickSignals};

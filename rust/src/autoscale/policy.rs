@@ -1,0 +1,346 @@
+//! The scaling decision, isolated from the control loop: given what one
+//! polling interval looked like, should capacity grow, shrink, or hold?
+//!
+//! The policy is deliberately boring — thresholds with hysteresis and a
+//! cooldown — because the serving plane underneath already absorbs the
+//! hard cases (admission control sheds what capacity cannot carry, and
+//! resize drains in-flight work instead of dropping it). What the policy
+//! must get right is *stability*: scale-up triggers on any single sign
+//! of pressure (shed, queue growth, p99 against the deadline), while
+//! scale-down demands several consecutive quiet ticks and both
+//! directions respect a cooldown after every applied change, so the
+//! controller cannot oscillate against its own transient.
+
+/// What the controller saw during one polling interval. Counter fields
+/// (`served`/`shed`/`failed`) are per-tick deltas; `queue_depth` and
+/// `capacity` are gauges read at poll time; `p99_ms` is the worst
+/// lane's cumulative-window p99 (a slow, trailing signal — the fast
+/// signals are shed and queue depth).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TickSignals {
+    /// requests answered this tick
+    pub served: u64,
+    /// requests rejected by admission control this tick
+    pub shed: u64,
+    /// requests answered with an error this tick
+    pub failed: u64,
+    /// requests queued or in flight at poll time
+    pub queue_depth: u64,
+    /// worst-lane total p99 in ms (cumulative window)
+    pub p99_ms: f64,
+    /// tightest registered deadline in ms (0 = unknown: the p99 signal
+    /// is then ignored and only shed/queue drive the decision)
+    pub deadline_ms: f64,
+    /// live capacity units (executors or replicas) at poll time
+    pub capacity: usize,
+}
+
+impl TickSignals {
+    /// Fraction of this tick's offered work rejected at the door.
+    pub fn shed_frac(&self) -> f64 {
+        let offered = self.served + self.shed;
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / offered as f64
+        }
+    }
+}
+
+/// The verdict of one tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    Up,
+    Down,
+    Hold,
+}
+
+/// One line of the controller's decision log: what it saw, what it did,
+/// and why — enough to replay a scaling episode from the log alone.
+#[derive(Debug, Clone)]
+pub struct ScaleDecision {
+    /// controller tick number (1-based)
+    pub tick: u64,
+    pub action: ScaleAction,
+    /// capacity before the decision
+    pub from: usize,
+    /// capacity after (equals `from` on Hold)
+    pub to: usize,
+    pub reason: String,
+    pub signals: TickSignals,
+}
+
+/// Threshold/hysteresis/cooldown knobs. Scale-up needs one pressure
+/// signal; scale-down needs `quiet_ticks_down` consecutive calm ticks;
+/// any applied change starts a `cooldown_ticks` freeze.
+#[derive(Debug, Clone)]
+pub struct ScalePolicy {
+    /// capacity floor (never scale below)
+    pub min_capacity: usize,
+    /// capacity ceiling (never scale above)
+    pub max_capacity: usize,
+    /// scale up when the tick's shed fraction reaches this
+    pub shed_frac_up: f64,
+    /// scale up when queue depth at poll time reaches this
+    pub queue_depth_up: u64,
+    /// scale up when p99 exceeds this fraction of the deadline
+    pub p99_frac_up: f64,
+    /// a calm tick needs queue depth at or below this
+    pub queue_depth_down: u64,
+    /// a calm tick needs p99 at or below this fraction of the deadline
+    pub p99_frac_down: f64,
+    /// consecutive calm ticks required before scaling down
+    pub quiet_ticks_down: u32,
+    /// ticks frozen after any applied scale event (both directions)
+    pub cooldown_ticks: u32,
+    /// capacity units added per scale-up (reacting fast to overload)
+    pub step_up: usize,
+    /// capacity units removed per scale-down (reclaiming cautiously)
+    pub step_down: usize,
+}
+
+impl Default for ScalePolicy {
+    fn default() -> Self {
+        ScalePolicy {
+            min_capacity: 1,
+            max_capacity: 8,
+            shed_frac_up: 0.01,
+            queue_depth_up: 64,
+            p99_frac_up: 0.9,
+            queue_depth_down: 8,
+            p99_frac_down: 0.5,
+            quiet_ticks_down: 3,
+            cooldown_ticks: 2,
+            step_up: 2,
+            step_down: 1,
+        }
+    }
+}
+
+/// Carry-over between ticks: the calm streak and the cooldown timer.
+#[derive(Debug, Default)]
+pub struct PolicyState {
+    tick: u64,
+    quiet: u32,
+    cooldown: u32,
+}
+
+impl ScalePolicy {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.min_capacity >= 1, "min_capacity must be at least 1");
+        anyhow::ensure!(
+            self.max_capacity >= self.min_capacity,
+            "max_capacity {} below min_capacity {}",
+            self.max_capacity,
+            self.min_capacity
+        );
+        anyhow::ensure!(self.step_up >= 1 && self.step_down >= 1, "steps must be at least 1");
+        anyhow::ensure!(
+            self.shed_frac_up >= 0.0 && self.p99_frac_up > self.p99_frac_down,
+            "up thresholds must sit above down thresholds"
+        );
+        Ok(())
+    }
+
+    /// Judge one tick. Pure apart from `state` (the calm streak and
+    /// cooldown timer), so scaling episodes replay deterministically
+    /// from a signal log.
+    pub fn decide(&self, state: &mut PolicyState, signals: TickSignals) -> ScaleDecision {
+        state.tick += 1;
+        let cap = signals.capacity;
+        let hold = |reason: String| ScaleDecision {
+            tick: state.tick,
+            action: ScaleAction::Hold,
+            from: cap,
+            to: cap,
+            reason,
+            signals,
+        };
+
+        let shed_frac = signals.shed_frac();
+        let p99_frac = if signals.deadline_ms > 0.0 {
+            signals.p99_ms / signals.deadline_ms
+        } else {
+            0.0
+        };
+        let mut pressure: Vec<String> = Vec::new();
+        if shed_frac >= self.shed_frac_up {
+            pressure.push(format!(
+                "shed {:.1}% >= {:.1}%",
+                shed_frac * 100.0,
+                self.shed_frac_up * 100.0
+            ));
+        }
+        if signals.queue_depth >= self.queue_depth_up {
+            pressure.push(format!("queue {} >= {}", signals.queue_depth, self.queue_depth_up));
+        }
+        if signals.deadline_ms > 0.0 && p99_frac >= self.p99_frac_up {
+            pressure.push(format!(
+                "p99 {:.1}ms at {:.0}% of {:.0}ms deadline",
+                signals.p99_ms,
+                p99_frac * 100.0,
+                signals.deadline_ms
+            ));
+        }
+        let calm = signals.shed == 0
+            && signals.queue_depth <= self.queue_depth_down
+            && (signals.deadline_ms <= 0.0 || p99_frac <= self.p99_frac_down);
+
+        // the calm streak advances even during cooldown, so a long
+        // trough pays the down-hysteresis only once
+        if !pressure.is_empty() {
+            state.quiet = 0;
+        } else if calm {
+            state.quiet = state.quiet.saturating_add(1);
+        } else {
+            state.quiet = 0;
+        }
+
+        if state.cooldown > 0 {
+            state.cooldown -= 1;
+            return hold(format!("cooldown ({} ticks left)", state.cooldown));
+        }
+
+        if !pressure.is_empty() {
+            if cap >= self.max_capacity {
+                return hold(format!("{} but at max capacity {}", pressure.join(", "), cap));
+            }
+            state.cooldown = self.cooldown_ticks;
+            state.quiet = 0;
+            let to = (cap + self.step_up).min(self.max_capacity);
+            return ScaleDecision {
+                tick: state.tick,
+                action: ScaleAction::Up,
+                from: cap,
+                to,
+                reason: pressure.join(", "),
+                signals,
+            };
+        }
+
+        if state.quiet >= self.quiet_ticks_down {
+            if cap <= self.min_capacity {
+                return hold(format!("calm x{} but at min capacity {}", state.quiet, cap));
+            }
+            state.cooldown = self.cooldown_ticks;
+            let streak = state.quiet;
+            state.quiet = 0;
+            let to = cap.saturating_sub(self.step_down).max(self.min_capacity);
+            return ScaleDecision {
+                tick: state.tick,
+                action: ScaleAction::Down,
+                from: cap,
+                to,
+                reason: format!("calm for {streak} ticks"),
+                signals,
+            };
+        }
+
+        hold(if calm {
+            format!("calm x{} (need {})", state.quiet, self.quiet_ticks_down)
+        } else {
+            "steady".to_string()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(shed: u64, queue: u64, cap: usize) -> TickSignals {
+        TickSignals {
+            served: 100,
+            shed,
+            failed: 0,
+            queue_depth: queue,
+            p99_ms: 10.0,
+            deadline_ms: 100.0,
+            capacity: cap,
+        }
+    }
+
+    #[test]
+    fn shed_triggers_scale_up_and_cooldown_freezes() {
+        let p = ScalePolicy::default();
+        p.validate().unwrap();
+        let mut st = PolicyState::default();
+        let d = p.decide(&mut st, sig(50, 0, 2));
+        assert_eq!(d.action, ScaleAction::Up);
+        assert_eq!((d.from, d.to), (2, 4));
+        // still shedding, but frozen: the first resize must be given
+        // time to land before the signals are trusted again
+        for _ in 0..p.cooldown_ticks {
+            assert_eq!(p.decide(&mut st, sig(50, 0, 4)).action, ScaleAction::Hold);
+        }
+        assert_eq!(p.decide(&mut st, sig(50, 0, 4)).action, ScaleAction::Up);
+    }
+
+    #[test]
+    fn queue_depth_and_p99_also_trigger() {
+        let p = ScalePolicy::default();
+        let mut st = PolicyState::default();
+        assert_eq!(p.decide(&mut st, sig(0, 100, 1)).action, ScaleAction::Up);
+        let mut st = PolicyState::default();
+        let mut s = sig(0, 0, 1);
+        s.p99_ms = 95.0; // 95% of the 100 ms deadline
+        assert_eq!(p.decide(&mut st, s).action, ScaleAction::Up);
+    }
+
+    #[test]
+    fn scale_down_needs_a_quiet_streak() {
+        let p = ScalePolicy { cooldown_ticks: 0, ..ScalePolicy::default() };
+        let mut st = PolicyState::default();
+        for _ in 0..p.quiet_ticks_down - 1 {
+            assert_eq!(p.decide(&mut st, sig(0, 0, 4)).action, ScaleAction::Hold);
+        }
+        let d = p.decide(&mut st, sig(0, 0, 4));
+        assert_eq!(d.action, ScaleAction::Down);
+        assert_eq!((d.from, d.to), (4, 3));
+        // one busy (not calm, not pressured) tick resets the streak
+        let mut st = PolicyState::default();
+        p.decide(&mut st, sig(0, 0, 4));
+        p.decide(&mut st, sig(0, 32, 4)); // queue between down and up thresholds
+        for _ in 0..p.quiet_ticks_down - 1 {
+            assert_eq!(p.decide(&mut st, sig(0, 0, 4)).action, ScaleAction::Hold);
+        }
+        assert_eq!(p.decide(&mut st, sig(0, 0, 4)).action, ScaleAction::Down);
+    }
+
+    #[test]
+    fn clamped_at_both_bounds() {
+        let p = ScalePolicy { cooldown_ticks: 0, ..ScalePolicy::default() };
+        let mut st = PolicyState::default();
+        assert_eq!(p.decide(&mut st, sig(50, 0, p.max_capacity)).action, ScaleAction::Hold);
+        let mut st = PolicyState::default();
+        for _ in 0..p.quiet_ticks_down + 2 {
+            let d = p.decide(&mut st, sig(0, 0, p.min_capacity));
+            assert_eq!(d.action, ScaleAction::Hold, "{}", d.reason);
+        }
+        // step_up overshooting the ceiling is clamped
+        let mut st = PolicyState::default();
+        let d = p.decide(&mut st, sig(50, 0, p.max_capacity - 1));
+        assert_eq!((d.action, d.to), (ScaleAction::Up, p.max_capacity));
+    }
+
+    #[test]
+    fn unknown_deadline_disables_the_p99_signal() {
+        let p = ScalePolicy::default();
+        let mut st = PolicyState::default();
+        let mut s = sig(0, 0, 2);
+        s.deadline_ms = 0.0;
+        s.p99_ms = 1e9;
+        assert_eq!(p.decide(&mut st, s).action, ScaleAction::Hold);
+    }
+
+    #[test]
+    fn bad_policies_rejected() {
+        assert!(ScalePolicy { min_capacity: 0, ..ScalePolicy::default() }.validate().is_err());
+        assert!(
+            ScalePolicy { max_capacity: 1, min_capacity: 2, ..ScalePolicy::default() }
+                .validate()
+                .is_err()
+        );
+        assert!(ScalePolicy { step_up: 0, ..ScalePolicy::default() }.validate().is_err());
+    }
+}

@@ -48,7 +48,7 @@ use std::io::{self, BufReader, BufWriter, Write as _};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -98,6 +98,9 @@ impl Default for RouterConfig {
 #[derive(Debug, Clone)]
 pub struct ReplicaStats {
     pub addr: String,
+    /// removed from the ring by [`ClusterRouter::remove_replica`];
+    /// slots are append-only so accounting survives scale cycles
+    pub retired: bool,
     pub healthy: bool,
     /// answering probes, but slower than the policy's latency bound —
     /// not trusted with new work until a clean probe
@@ -126,17 +129,26 @@ fn splitmix64(x: u64) -> u64 {
     z ^ (z >> 31)
 }
 
-/// The consistent-hash ring: `vnodes` points per replica, sorted by
-/// hash. Deterministic, so every router instance agrees.
-fn build_ring(n_replicas: usize, vnodes: usize) -> Vec<(u64, usize)> {
-    let mut ring = Vec::with_capacity(n_replicas * vnodes);
-    for idx in 0..n_replicas {
+/// The consistent-hash ring over the given replica slots: `vnodes`
+/// points per replica, sorted by hash. Vnode hashes depend only on the
+/// slot index, so a replica that leaves and later rejoins the ring
+/// reclaims exactly its old arc — placement stays maximally stable
+/// across scale cycles.
+fn build_ring_for(indices: &[usize], vnodes: usize) -> Vec<(u64, usize)> {
+    let mut ring = Vec::with_capacity(indices.len() * vnodes);
+    for &idx in indices {
         for v in 0..vnodes {
             ring.push((splitmix64(((idx as u64) << 32) | v as u64), idx));
         }
     }
     ring.sort_unstable();
     ring
+}
+
+/// [`build_ring_for`] over slots `0..n_replicas` (the bind-time ring).
+fn build_ring(n_replicas: usize, vnodes: usize) -> Vec<(u64, usize)> {
+    let indices: Vec<usize> = (0..n_replicas).collect();
+    build_ring_for(&indices, vnodes)
 }
 
 /// Walk the ring clockwise from `splitmix64(user_id)` and return the
@@ -167,6 +179,11 @@ struct ReplicaConn {
 struct Replica {
     addr: String,
     conn: Mutex<Option<ReplicaConn>>,
+    /// out of the ring: takes no new work, drains what it holds, and
+    /// the prober closes its connection once inflight hits zero.
+    /// Slots are never removed from the vec, so indexes held by reader
+    /// threads and pending routes stay valid across scale cycles.
+    retired: AtomicBool,
     healthy: AtomicBool,
     /// probes answered, but past the latency bound (see [`ReplicaStats`])
     suspect: AtomicBool,
@@ -212,14 +229,36 @@ type ClientSend = (u64, Vec<u8>);
 
 struct Core {
     cfg: RouterConfig,
-    replicas: Vec<Replica>,
-    ring: Vec<(u64, usize)>,
+    /// append-only replica slots (retired slots stay, flagged), behind
+    /// a read-mostly lock so add/remove can happen under live traffic
+    replicas: RwLock<Vec<Arc<Replica>>>,
+    /// the ring over non-retired slots; rebuilt on add/remove
+    ring: RwLock<Vec<(u64, usize)>>,
     pending: Mutex<HashMap<u64, Route>>,
     clients: Mutex<HashMap<u64, Sender<ClientSend>>>,
     next_corr: AtomicU64,
     next_probe: AtomicU64,
     stop: AtomicBool,
     replica_readers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Clone out the `idx` slot (short read-lock hold; slots are
+/// append-only so any index a thread captured stays valid).
+fn replica_at(core: &Core, idx: usize) -> Arc<Replica> {
+    core.replicas.read().unwrap()[idx].clone()
+}
+
+/// Rebuild the ring over the non-retired slots.
+fn rebuild_ring(core: &Core) {
+    let active: Vec<usize> = {
+        let reps = core.replicas.read().unwrap();
+        reps.iter()
+            .enumerate()
+            .filter(|(_, r)| !r.retired.load(Ordering::SeqCst))
+            .map(|(i, _)| i)
+            .collect()
+    };
+    *core.ring.write().unwrap() = build_ring_for(&active, core.cfg.vnodes);
 }
 
 struct ClientHandles {
@@ -252,27 +291,13 @@ impl ClusterRouter {
         let listener = TcpListener::bind(addr).context("binding router listener")?;
         listener.set_nonblocking(true).context("setting router listener non-blocking")?;
         let local = listener.local_addr().context("resolving router address")?;
-        let replicas = replica_addrs
-            .iter()
-            .map(|a| Replica {
-                addr: a.clone(),
-                conn: Mutex::new(None),
-                healthy: AtomicBool::new(false),
-                suspect: AtomicBool::new(false),
-                inflight: AtomicU64::new(0),
-                sent: AtomicU64::new(0),
-                completed: AtomicU64::new(0),
-                failed: AtomicU64::new(0),
-                last_pong: Mutex::new(None),
-                probe_sent: Mutex::new(None),
-                lat_ms: Mutex::new(Samples::new()),
-                breaker: cfg.resilience.breaker(),
-            })
-            .collect();
+        let replicas: Vec<Arc<Replica>> =
+            replica_addrs.iter().map(|a| Arc::new(make_replica(a, &cfg))).collect();
+        let n_replicas = replicas.len();
         let core = Arc::new(Core {
-            ring: build_ring(replica_addrs.len(), cfg.vnodes),
+            ring: RwLock::new(build_ring(n_replicas, cfg.vnodes)),
             cfg,
-            replicas,
+            replicas: RwLock::new(replicas),
             pending: Mutex::new(HashMap::new()),
             clients: Mutex::new(HashMap::new()),
             next_corr: AtomicU64::new(1),
@@ -281,7 +306,7 @@ impl ClusterRouter {
             replica_readers: Mutex::new(Vec::new()),
         });
         // eager first connect; failures are the prober's problem
-        for idx in 0..core.replicas.len() {
+        for idx in 0..n_replicas {
             connect_replica(&core, idx);
         }
         let clients: Arc<Mutex<Vec<ClientHandles>>> = Arc::new(Mutex::new(Vec::new()));
@@ -313,9 +338,26 @@ impl ClusterRouter {
         self.local
     }
 
-    /// Replicas currently routable.
+    /// Replicas currently routable (healthy and not retired).
     pub fn healthy_replicas(&self) -> usize {
-        self.core.replicas.iter().filter(|r| r.healthy.load(Ordering::SeqCst)).count()
+        self.core
+            .replicas
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|r| r.healthy.load(Ordering::SeqCst) && !r.retired.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Replicas in the ring (not retired), healthy or not.
+    pub fn active_replicas(&self) -> usize {
+        self.core
+            .replicas
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|r| !r.retired.load(Ordering::SeqCst))
+            .count()
     }
 
     /// Requests forwarded and not yet answered, fleet-wide.
@@ -323,15 +365,70 @@ impl ClusterRouter {
         self.core.pending.lock().unwrap().len()
     }
 
-    /// Per-replica accounting.
+    /// Add a serving replica to the live ring. If `addr` names a
+    /// retired slot, that slot rejoins — reclaiming exactly its old
+    /// ring arc (and its accumulated accounting) — otherwise a new slot
+    /// is appended. The connection comes up eagerly; an unreachable
+    /// replica still joins and the prober keeps retrying it.
+    pub fn add_replica(&self, addr: &str) -> Result<()> {
+        let idx = {
+            let mut reps = self.core.replicas.write().unwrap();
+            ensure!(
+                !reps
+                    .iter()
+                    .any(|r| r.addr == addr && !r.retired.load(Ordering::SeqCst)),
+                "replica {addr} is already in the ring"
+            );
+            match reps.iter().position(|r| r.addr == addr) {
+                Some(i) => {
+                    reps[i].retired.store(false, Ordering::SeqCst);
+                    i
+                }
+                None => {
+                    reps.push(Arc::new(make_replica(addr, &self.core.cfg)));
+                    reps.len() - 1
+                }
+            }
+        };
+        rebuild_ring(&self.core);
+        connect_replica(&self.core, idx);
+        Ok(())
+    }
+
+    /// Retire the replica at `addr`: it leaves the ring immediately (no
+    /// new work routes to it), requests it already holds drain through
+    /// its still-open connection, and the prober closes that connection
+    /// once the last one answers. The last active replica cannot be
+    /// removed — a router with an empty ring could only synthesize
+    /// errors.
+    pub fn remove_replica(&self, addr: &str) -> Result<()> {
+        {
+            let reps = self.core.replicas.read().unwrap();
+            let slot = reps
+                .iter()
+                .find(|r| r.addr == addr && !r.retired.load(Ordering::SeqCst))
+                .with_context(|| format!("replica {addr} is not in the ring"))?;
+            let active =
+                reps.iter().filter(|r| !r.retired.load(Ordering::SeqCst)).count();
+            ensure!(active > 1, "cannot retire the last active replica ({addr})");
+            slot.retired.store(true, Ordering::SeqCst);
+        }
+        rebuild_ring(&self.core);
+        Ok(())
+    }
+
+    /// Per-replica accounting (retired slots included, flagged).
     pub fn stats(&self) -> Vec<ReplicaStats> {
         self.core
             .replicas
+            .read()
+            .unwrap()
             .iter()
             .map(|r| {
                 let mut lat = r.lat_ms.lock().unwrap();
                 ReplicaStats {
                     addr: r.addr.clone(),
+                    retired: r.retired.load(Ordering::SeqCst),
                     healthy: r.healthy.load(Ordering::SeqCst),
                     suspect: r.suspect.load(Ordering::SeqCst),
                     inflight: r.inflight.load(Ordering::SeqCst),
@@ -373,7 +470,7 @@ impl ClusterRouter {
             g.drain().map(|(_, r)| r).collect()
         };
         for route in leftovers {
-            let rep = &self.core.replicas[route.replica()];
+            let rep = replica_at(&self.core, route.replica());
             rep.inflight.fetch_sub(1, Ordering::SeqCst);
             rep.failed.fetch_add(1, Ordering::SeqCst);
             synthesize(&self.core, &route, InferError::Shutdown);
@@ -381,7 +478,7 @@ impl ClusterRouter {
         if let Some(h) = self.prober.lock().unwrap().take() {
             let _ = h.join();
         }
-        for rep in &self.core.replicas {
+        for rep in self.core.replicas.read().unwrap().iter() {
             if let Some(c) = rep.conn.lock().unwrap().take() {
                 let _ = c.stream.shutdown(Shutdown::Both);
             }
@@ -409,11 +506,30 @@ impl Drop for ClusterRouter {
 // replica side
 // ---------------------------------------------------------------------------
 
+/// A fresh, unconnected replica slot.
+fn make_replica(addr: &str, cfg: &RouterConfig) -> Replica {
+    Replica {
+        addr: addr.to_string(),
+        conn: Mutex::new(None),
+        retired: AtomicBool::new(false),
+        healthy: AtomicBool::new(false),
+        suspect: AtomicBool::new(false),
+        inflight: AtomicU64::new(0),
+        sent: AtomicU64::new(0),
+        completed: AtomicU64::new(0),
+        failed: AtomicU64::new(0),
+        last_pong: Mutex::new(None),
+        probe_sent: Mutex::new(None),
+        lat_ms: Mutex::new(Samples::new()),
+        breaker: cfg.resilience.breaker(),
+    }
+}
+
 /// (Re)connect replica `idx` if down. Fresh connections are routable
 /// immediately (the pong grace starts now) — a recovered replica takes
 /// traffic without waiting a probe round-trip.
 fn connect_replica(core: &Arc<Core>, idx: usize) -> bool {
-    let rep = &core.replicas[idx];
+    let rep = replica_at(core, idx);
     if rep.conn.lock().unwrap().is_some() {
         return true;
     }
@@ -459,7 +575,7 @@ fn connect_replica(core: &Arc<Core>, idx: usize) -> bool {
 /// and runs the death path) and `false` comes back so the caller can
 /// try an alternate.
 fn try_send(core: &Arc<Core>, idx: usize, corr: u64, payload: &[u8]) -> bool {
-    let rep = &core.replicas[idx];
+    let rep = replica_at(core, idx);
     let mut g = rep.conn.lock().unwrap();
     let Some(c) = g.as_mut() else { return false };
     let ok = wire::write_frame(&mut c.writer, FrameKind::Request, corr, payload)
@@ -475,7 +591,7 @@ fn try_send(core: &Arc<Core>, idx: usize, corr: u64, payload: &[u8]) -> bool {
 }
 
 fn replica_reader(core: Arc<Core>, idx: usize, stream: FaultStream) {
-    let rep = &core.replicas[idx];
+    let rep = replica_at(&core, idx);
     let mut r = BufReader::new(stream);
     let mut last_frame = Instant::now();
     loop {
@@ -553,7 +669,7 @@ fn replica_reader(core: Arc<Core>, idx: usize, stream: FaultStream) {
 /// (alternate replica, same payload) while the retry budget and the
 /// deadline allow — otherwise a typed error.
 fn replica_died(core: &Arc<Core>, idx: usize) {
-    let rep = &core.replicas[idx];
+    let rep = replica_at(core, idx);
     rep.healthy.store(false, Ordering::SeqCst);
     rep.breaker.record_err();
     *rep.probe_sent.lock().unwrap() = None;
@@ -581,8 +697,22 @@ fn replica_died(core: &Arc<Core>, idx: usize) {
 
 fn prober_loop(core: Arc<Core>) {
     while !core.stop.load(Ordering::SeqCst) {
-        for idx in 0..core.replicas.len() {
-            let rep = &core.replicas[idx];
+        let n = core.replicas.read().unwrap().len();
+        for idx in 0..n {
+            let rep = replica_at(&core, idx);
+            if rep.retired.load(Ordering::SeqCst) {
+                // retired slot: no probes, no reconnects. Once the
+                // requests it still held have drained, close the
+                // connection — that is the remove-replica drain
+                // completing.
+                if rep.inflight.load(Ordering::SeqCst) == 0 {
+                    if let Some(c) = rep.conn.lock().unwrap().take() {
+                        let _ = c.stream.shutdown(Shutdown::Both);
+                    }
+                    rep.healthy.store(false, Ordering::SeqCst);
+                }
+                continue;
+            }
             if rep.conn.lock().unwrap().is_none() {
                 connect_replica(&core, idx);
                 continue;
@@ -800,32 +930,46 @@ fn dispatch(core: &Arc<Core>, mut route: Route) {
                 return;
             }
         }
-        let pick = walk_ring(&core.ring, route.user_id, |idx| {
-            let rep = &core.replicas[idx];
-            !route.tried.contains(&idx)
-                && rep.healthy.load(Ordering::SeqCst)
-                && !rep.suspect.load(Ordering::SeqCst)
-                && rep.breaker.allow()
-        })
-        .or_else(|| {
-            // last resort: a Suspect or breaker-open replica still
-            // beats answering "no replica" — deprioritized, not banned
-            walk_ring(&core.ring, route.user_id, |idx| {
+        let rep = {
+            let reps = core.replicas.read().unwrap();
+            let ring = core.ring.read().unwrap();
+            let pick = walk_ring(&ring, route.user_id, |idx| {
+                let rep = &reps[idx];
                 !route.tried.contains(&idx)
-                    && core.replicas[idx].healthy.load(Ordering::SeqCst)
+                    && !rep.retired.load(Ordering::SeqCst)
+                    && rep.healthy.load(Ordering::SeqCst)
+                    && !rep.suspect.load(Ordering::SeqCst)
+                    && rep.breaker.allow()
             })
-        });
-        let Some(idx) = pick else {
-            synthesize(
-                core,
-                &route,
-                InferError::ExecFailed("no healthy serving replica".into()),
-            );
-            return;
+            .or_else(|| {
+                // last resort: a Suspect or breaker-open replica still
+                // beats answering "no replica" — deprioritized, not banned
+                walk_ring(&ring, route.user_id, |idx| {
+                    let rep = &reps[idx];
+                    !route.tried.contains(&idx)
+                        && !rep.retired.load(Ordering::SeqCst)
+                        && rep.healthy.load(Ordering::SeqCst)
+                })
+            });
+            match pick {
+                Some(idx) => {
+                    route.tried.push(idx);
+                    reps[idx].clone()
+                }
+                None => {
+                    drop(ring);
+                    drop(reps);
+                    synthesize(
+                        core,
+                        &route,
+                        InferError::ExecFailed("no healthy serving replica".into()),
+                    );
+                    return;
+                }
+            }
         };
-        route.tried.push(idx);
+        let idx = route.replica();
         let corr = core.next_corr.fetch_add(1, Ordering::Relaxed);
-        let rep = &core.replicas[idx];
         rep.inflight.fetch_add(1, Ordering::SeqCst);
         rep.sent.fetch_add(1, Ordering::SeqCst);
         // insert before sending so a fast response can never race past
@@ -919,6 +1063,25 @@ mod tests {
         }
         for (i, &c) in counts.iter().enumerate() {
             assert!(c > 300, "replica {i} got only {c}/3000 requests");
+        }
+    }
+
+    #[test]
+    fn retired_slot_keeps_its_arc_on_rejoin() {
+        // full ring, ring with slot 1 retired, ring after slot 1 rejoins
+        let full = build_ring(3, 64);
+        let holed = build_ring_for(&[0, 2], 64);
+        let rejoined = build_ring_for(&[0, 1, 2], 64);
+        assert_eq!(full, rejoined, "rejoining must restore the exact ring");
+        for id in 0..2000u64 {
+            let before = walk_ring(&full, id, |_| true).unwrap();
+            let during = walk_ring(&holed, id, |_| true).unwrap();
+            if before != 1 {
+                // keys not owned by the retired replica must not move
+                assert_eq!(before, during, "id {id} moved while slot 1 was out");
+            } else {
+                assert_ne!(during, 1, "id {id} routed to a retired slot");
+            }
         }
     }
 

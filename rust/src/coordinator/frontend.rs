@@ -62,7 +62,7 @@ use crate::runtime::{BackendSpec, ExecutorPool, Manifest};
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::metrics::{MetricsSnapshot, ServeMetrics};
 use super::request::{InferError, InferRequest, InferResponse};
-use super::router::{RoutePolicy, Router};
+use super::router::{RoutePolicy, Router, MAX_ROUTER_TARGETS};
 use super::service::ModelService;
 
 /// Frontend configuration (model-agnostic knobs only — everything
@@ -238,7 +238,10 @@ pub struct ServingFrontend {
     lanes: BTreeMap<String, Lane>,
     admission: AdmissionPolicy,
     inflight: Arc<InFlight>,
-    executor_pools: Mutex<Vec<Arc<ExecutorPool>>>,
+    /// every backend group's pool with the router addressing it — kept
+    /// paired so [`Self::resize_executors`] can move both in the order
+    /// that never routes to a device that isn't there
+    executor_pools: Mutex<Vec<(Arc<ExecutorPool>, Arc<Router>)>>,
     sparse: Option<Arc<EmbeddingShardService>>,
     /// set once the drain in [`Self::shutdown`] has completed
     drained: Mutex<bool>,
@@ -380,7 +383,7 @@ impl ServingFrontend {
                 exec_reserve_us: cfg.exec_reserve_us,
             },
             inflight,
-            executor_pools: Mutex::new(pools.into_iter().map(|(_, p, _)| p).collect()),
+            executor_pools: Mutex::new(pools.into_iter().map(|(_, p, r)| (p, r)).collect()),
             sparse,
             drained: Mutex::new(false),
         })
@@ -419,6 +422,44 @@ impl ServingFrontend {
     /// The admission policy every submission is checked against.
     pub fn admission(&self) -> AdmissionPolicy {
         self.admission
+    }
+
+    /// Executors currently live in the largest backend group (the
+    /// capacity figure the autoscaler steers; groups resize in
+    /// lockstep, so any group reports the same number between resizes).
+    pub fn executor_capacity(&self) -> usize {
+        self.executor_pools
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(p, _)| p.len())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Resize every backend group's executor pool to `target` live
+    /// executors (clamped to at least 1) without dropping in-flight
+    /// work. Growth spawns-and-warms devices first, then widens the
+    /// router; shrink narrows the router first, so retiring executors
+    /// stop receiving batches, then sends them their shutdown message —
+    /// which queues behind already-dispatched batches, draining them.
+    /// Returns the applied per-group count.
+    pub fn resize_executors(&self, target: usize) -> Result<usize> {
+        let target = target.clamp(1, MAX_ROUTER_TARGETS);
+        // clone the pairs out so serving (and shutdown) never waits on
+        // an artifact load happening under the registry lock
+        let pools: Vec<(Arc<ExecutorPool>, Arc<Router>)> =
+            self.executor_pools.lock().unwrap().clone();
+        for (pool, router) in &pools {
+            if target >= pool.len() {
+                pool.resize(target)?;
+                router.resize(target);
+            } else {
+                router.resize(target);
+                pool.resize(target)?;
+            }
+        }
+        Ok(target)
     }
 
     /// Route a request to its model's lane; returns the response
@@ -502,7 +543,7 @@ impl ServingFrontend {
         if !self.inflight.wait_idle(Duration::from_secs(30)) {
             eprintln!("frontend shutdown: in-flight batches did not drain in 30s");
         }
-        for pool in std::mem::take(&mut *self.executor_pools.lock().unwrap()) {
+        for (pool, _) in std::mem::take(&mut *self.executor_pools.lock().unwrap()) {
             match Arc::try_unwrap(pool) {
                 Ok(pool) => pool.shutdown(),
                 Err(_) => eprintln!("frontend shutdown: executor pool still referenced, leaking"),
@@ -591,7 +632,7 @@ impl LaneWorker {
         };
 
         let exec_id = self.router.dispatch(variant);
-        let executor = self.pool.executors()[exec_id].clone();
+        let executor = self.pool.executor(exec_id);
         let service = self.service.clone();
         let router = self.router.clone();
         let metrics = self.metrics.clone();

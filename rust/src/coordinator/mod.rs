@@ -67,8 +67,8 @@ pub use disagg::{disagg_bandwidth, DisaggReport};
 pub use frontend::{AdmissionPolicy, FrontendConfig, ServingFrontend};
 pub use metrics::{MetricsSnapshot, ServeMetrics};
 pub use request::{InferError, InferRequest, InferResponse, SeqDone, SeqFinish, SeqRequest};
-pub use router::{RoutePolicy, Router};
+pub use router::{RoutePolicy, Router, MAX_ROUTER_TARGETS};
 pub use seqserve::{reference_decode, SeqConfig, SeqEngine, SeqEvent, SeqSnapshot, SeqUpdate};
 pub use server::{ServerConfig, ServingServer};
-pub use service::{scatter_rows, stack_rows, DeadlineClass, ModelService};
+pub use service::{scatter_rows, stack_rows, DeadlineClass, IndexSkew, ModelService};
 pub use wire::{FrameKind, WireError};

@@ -11,11 +11,22 @@ pub enum RoutePolicy {
     LeastLoaded,
 }
 
-/// Tracks per-executor outstanding work and picks targets.
+/// Most executors a single router will ever address. Slots are
+/// preallocated to this capacity so [`Router::resize`] is a single
+/// atomic store — dispatch and completion stay lock-free while the
+/// autoscaler grows or shrinks the live target set underneath them.
+pub const MAX_ROUTER_TARGETS: usize = 256;
+
+/// Tracks per-executor outstanding work and picks targets. The
+/// addressable set is `[0, n())`, adjustable at runtime via
+/// [`Router::resize`]; per-slot load counters persist across shrinks so
+/// completions for batches dispatched to a since-retired slot still
+/// balance their dispatch.
 #[derive(Debug)]
 pub struct Router {
     policy: RoutePolicy,
     next: AtomicUsize,
+    active: AtomicUsize,
     outstanding: Vec<AtomicUsize>,
 }
 
@@ -25,26 +36,43 @@ impl Router {
     /// `% 0` would panic), so it is rejected here instead.
     pub fn new(n_executors: usize, policy: RoutePolicy) -> anyhow::Result<Router> {
         anyhow::ensure!(n_executors > 0, "router needs at least one executor");
+        anyhow::ensure!(
+            n_executors <= MAX_ROUTER_TARGETS,
+            "router capacity is {MAX_ROUTER_TARGETS} executors, asked for {n_executors}"
+        );
         Ok(Router {
             policy,
             next: AtomicUsize::new(0),
-            outstanding: (0..n_executors).map(|_| AtomicUsize::new(0)).collect(),
+            active: AtomicUsize::new(n_executors),
+            outstanding: (0..MAX_ROUTER_TARGETS).map(|_| AtomicUsize::new(0)).collect(),
         })
     }
 
+    /// Live target count (dispatch picks within `[0, n())`).
     pub fn n(&self) -> usize {
-        self.outstanding.len()
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// Set the live target count, clamped to `[1, MAX_ROUTER_TARGETS]`;
+    /// returns the applied value. Callers resize the executor pool
+    /// first when growing (so new slots have a device behind them) and
+    /// the router first when shrinking (so retiring slots stop
+    /// receiving work before their executors drain out).
+    pub fn resize(&self, n_executors: usize) -> usize {
+        let n = n_executors.clamp(1, MAX_ROUTER_TARGETS);
+        self.active.store(n, Ordering::Relaxed);
+        n
     }
 
     /// Pick an executor for a batch and mark the work outstanding.
     pub fn dispatch(&self, work_units: usize) -> usize {
-        debug_assert!(!self.outstanding.is_empty(), "Router::new rejects zero executors");
+        let n = self.n().max(1);
         let id = match self.policy {
-            RoutePolicy::RoundRobin => self.next.fetch_add(1, Ordering::Relaxed) % self.n(),
+            RoutePolicy::RoundRobin => self.next.fetch_add(1, Ordering::Relaxed) % n,
             RoutePolicy::LeastLoaded => {
                 let mut best = 0;
                 let mut best_load = usize::MAX;
-                for (i, o) in self.outstanding.iter().enumerate() {
+                for (i, o) in self.outstanding.iter().take(n).enumerate() {
                     let l = o.load(Ordering::Relaxed);
                     if l < best_load {
                         best_load = l;
@@ -58,7 +86,8 @@ impl Router {
         id
     }
 
-    /// Mark work complete.
+    /// Mark work complete. Valid for any slot ever dispatched to, even
+    /// one retired by a shrink since.
     pub fn complete(&self, executor: usize, work_units: usize) {
         self.outstanding[executor].fetch_sub(work_units, Ordering::Relaxed);
     }
@@ -104,5 +133,34 @@ mod tests {
         assert_eq!(r.load(0), 5);
         r.complete(0, 5);
         assert_eq!(r.load(0), 0);
+    }
+
+    #[test]
+    fn resize_changes_addressable_set() {
+        let r = Router::new(2, RoutePolicy::RoundRobin).unwrap();
+        assert_eq!(r.resize(4), 4);
+        let picks: Vec<usize> = (0..4).map(|_| r.dispatch(1)).collect();
+        assert!(picks.contains(&2) && picks.contains(&3), "{picks:?}");
+        // shrink: new dispatches stay inside [0, 2) ...
+        assert_eq!(r.resize(2), 2);
+        for _ in 0..8 {
+            assert!(r.dispatch(1) < 2);
+        }
+        // ... but completions for retired slots still balance
+        r.complete(3, 1);
+        assert_eq!(r.load(3), 0);
+        // clamped at both ends
+        assert_eq!(r.resize(0), 1);
+        assert_eq!(r.resize(100_000), MAX_ROUTER_TARGETS);
+        assert!(Router::new(MAX_ROUTER_TARGETS + 1, RoutePolicy::RoundRobin).is_err());
+    }
+
+    #[test]
+    fn least_loaded_respects_resize() {
+        let r = Router::new(1, RoutePolicy::LeastLoaded).unwrap();
+        r.dispatch(10);
+        assert_eq!(r.dispatch(1), 0, "only one live slot");
+        r.resize(2);
+        assert_eq!(r.dispatch(1), 1, "new empty slot wins least-loaded");
     }
 }

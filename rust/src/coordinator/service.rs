@@ -54,6 +54,47 @@ impl DeadlineClass {
     }
 }
 
+/// Embedding-id skew regime for synthetic load (§2.2: production id
+/// traffic has a hot Zipf head; uniform is the adversarial cold case).
+/// Families without sparse inputs ignore it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum IndexSkew {
+    /// Every id equally likely — no cacheable hot set.
+    Uniform,
+    /// Zipf with exponent `s` (1.0 is the classic power law; the
+    /// recsys default elsewhere in the crate is 1.05).
+    Zipf(f64),
+}
+
+impl IndexSkew {
+    /// Parse a CLI spec: `uniform`, `zipf` (s = 1.0), or `zipf:S`.
+    pub fn parse(spec: &str) -> Result<IndexSkew> {
+        if spec == "uniform" {
+            return Ok(IndexSkew::Uniform);
+        }
+        if spec == "zipf" {
+            return Ok(IndexSkew::Zipf(1.0));
+        }
+        if let Some(s) = spec.strip_prefix("zipf:") {
+            let s: f64 = match s.parse() {
+                Ok(v) => v,
+                Err(_) => bail!("bad zipf exponent {s:?}"),
+            };
+            ensure!(s.is_finite() && s >= 0.0, "zipf exponent must be finite and >= 0, got {s}");
+            return Ok(IndexSkew::Zipf(s));
+        }
+        bail!("unknown skew spec {spec:?} (want uniform, zipf, zipf:S)")
+    }
+
+    /// Sample one id in `[0, n)` under this regime.
+    pub fn sample(&self, rng: &mut Pcg32, n: u32) -> u32 {
+        match self {
+            IndexSkew::Uniform => rng.below(n),
+            IndexSkew::Zipf(s) => rng.zipf(n, *s),
+        }
+    }
+}
+
 /// What a model family must teach the frontend to be servable.
 ///
 /// Implementations hold whatever per-model config they need (pulled
@@ -77,6 +118,21 @@ pub trait ModelService: Send + Sync {
     /// load tests share this instead of each re-deriving the family's
     /// wire format). `deadline_ms <= 0` means "use the class default".
     fn synth_request(&self, id: u64, rng: &mut Pcg32, deadline_ms: f64) -> InferRequest;
+
+    /// [`Self::synth_request`] with an explicit embedding-id skew
+    /// regime (`loadgen --skew`). The default ignores the skew —
+    /// correct for families without sparse inputs; sparse families
+    /// override to route id sampling through it.
+    fn synth_request_skewed(
+        &self,
+        id: u64,
+        rng: &mut Pcg32,
+        deadline_ms: f64,
+        skew: IndexSkew,
+    ) -> InferRequest {
+        let _ = skew;
+        self.synth_request(id, rng, deadline_ms)
+    }
 
     /// Stack per-request inputs into padded `[variant, ...]` batch
     /// tensors in the artifact's parameter order.
@@ -228,6 +284,31 @@ mod tests {
         assert!(
             DeadlineClass::Interactive.default_deadline_ms()
                 < DeadlineClass::Relaxed.default_deadline_ms()
+        );
+    }
+
+    #[test]
+    fn skew_specs_parse() {
+        assert_eq!(IndexSkew::parse("uniform").unwrap(), IndexSkew::Uniform);
+        assert_eq!(IndexSkew::parse("zipf").unwrap(), IndexSkew::Zipf(1.0));
+        assert_eq!(IndexSkew::parse("zipf:1.2").unwrap(), IndexSkew::Zipf(1.2));
+        assert!(IndexSkew::parse("zipf:x").is_err());
+        assert!(IndexSkew::parse("zipf:-1").is_err());
+        assert!(IndexSkew::parse("pareto").is_err());
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_samples() {
+        let n = 10_000u32;
+        let head = |skew: IndexSkew| {
+            let mut rng = Pcg32::seeded(23);
+            (0..4000).filter(|_| skew.sample(&mut rng, n) < n / 100).count()
+        };
+        let uniform_head = head(IndexSkew::Uniform);
+        let zipf_head = head(IndexSkew::Zipf(1.0));
+        assert!(
+            zipf_head > uniform_head * 5,
+            "zipf head {zipf_head} vs uniform head {uniform_head}"
         );
     }
 }

@@ -1,10 +1,20 @@
-//! Fig-1 demand forecaster: server demand for DL inference across data
-//! centers over time, by service class.
+//! Fig-1 demand model: server demand for DL inference across data
+//! centers, by service class (quarterly growth) and within a day
+//! (diurnal peak/trough).
 //!
 //! The paper's figure shows roughly 3x growth over ~2 years, dominated
 //! by recommendation services with CV/NMT growing underneath. We model
 //! each service class with a compound growth rate and regenerate the
 //! stacked series.
+//!
+//! [`DemandCurve`] is the within-day view: a normalized rate multiplier
+//! over one period (a day, replayed in seconds). It is the single
+//! source of truth for demand replay — `loadgen --demand`, the
+//! `autoscale` loopback driver, and the fig1/fig4 benches all sample
+//! the same curve, so what the benches plot is what the live plane was
+//! driven with.
+
+use anyhow::{bail, Context, Result};
 
 /// One inference service class with a demand growth model.
 #[derive(Debug, Clone)]
@@ -47,6 +57,137 @@ pub fn demand_series(services: &[ServiceClass], quarters: usize) -> Vec<DemandPo
         .collect()
 }
 
+/// Within-day demand shape: a rate multiplier over one period, with
+/// `phase` in `[0, 1)` mapping to time-of-day. Values are relative to
+/// the *peak* for diurnal curves (so `--qps` names the worst case the
+/// fleet must absorb, matching how capacity is provisioned).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum DemandCurve {
+    /// Flat rate — the pre-realism behavior, multiplier 1.0 everywhere.
+    #[default]
+    Constant,
+    /// Cosine day: `trough + (peak-trough) * 0.5 * (1 + cos(2pi*(phase - peak_phase)))`.
+    /// The paper's Fig 1 inset shows roughly 2x peak-to-trough swing.
+    Diurnal { peak: f64, trough: f64, peak_phase: f64 },
+    /// Piecewise-linear replay of sampled rate multipliers, wrapped
+    /// around the period (a day of per-hour samples, say).
+    Trace(Vec<f64>),
+}
+
+impl DemandCurve {
+    /// Parse a CLI spec:
+    ///
+    /// - `constant`
+    /// - `diurnal` (peak 1.0, trough 0.45, peak at phase 20/24)
+    /// - `diurnal:peak=1.0,trough=0.3,peak_hour=20`
+    /// - `trace:FILE` — one multiplier per line, `#` comments allowed
+    pub fn parse(spec: &str) -> Result<DemandCurve> {
+        if spec == "constant" {
+            return Ok(DemandCurve::Constant);
+        }
+        if let Some(path) = spec.strip_prefix("trace:") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading demand trace {path}"))?;
+            let mut points = Vec::new();
+            for (i, line) in text.lines().enumerate() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                let v: f64 = line
+                    .parse()
+                    .with_context(|| format!("{path}:{}: bad multiplier {line:?}", i + 1))?;
+                if !v.is_finite() || v < 0.0 {
+                    bail!("{path}:{}: multiplier must be finite and >= 0, got {v}", i + 1);
+                }
+                points.push(v);
+            }
+            if points.is_empty() {
+                bail!("demand trace {path} has no samples");
+            }
+            if points.iter().all(|&v| v == 0.0) {
+                bail!("demand trace {path} is all zeros");
+            }
+            return Ok(DemandCurve::Trace(points));
+        }
+        if spec == "diurnal" || spec.starts_with("diurnal:") {
+            let (mut peak, mut trough, mut peak_hour) = (1.0f64, 0.45f64, 20.0f64);
+            if let Some(args) = spec.strip_prefix("diurnal:") {
+                for kv in args.split(',').filter(|s| !s.is_empty()) {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .with_context(|| format!("expected key=value in demand spec, got {kv:?}"))?;
+                    let v: f64 =
+                        v.parse().with_context(|| format!("bad value for {k} in demand spec"))?;
+                    match k {
+                        "peak" => peak = v,
+                        "trough" => trough = v,
+                        "peak_hour" => peak_hour = v,
+                        _ => bail!("unknown demand key {k:?} (want peak/trough/peak_hour)"),
+                    }
+                }
+            }
+            if !peak.is_finite() || !trough.is_finite() || peak <= 0.0 || trough < 0.0 || trough > peak {
+                bail!(
+                    "diurnal demand needs 0 <= trough <= peak, peak > 0 \
+                     (got peak={peak}, trough={trough})"
+                );
+            }
+            return Ok(DemandCurve::Diurnal {
+                peak,
+                trough,
+                peak_phase: (peak_hour / 24.0).rem_euclid(1.0),
+            });
+        }
+        bail!("unknown demand spec {spec:?} (want constant, diurnal[:k=v,...], trace:FILE)")
+    }
+
+    /// Rate multiplier at `phase` (fractional part is used, so callers
+    /// can pass `elapsed / period` directly and wrap for free).
+    pub fn multiplier(&self, phase: f64) -> f64 {
+        let phase = phase.rem_euclid(1.0);
+        match self {
+            DemandCurve::Constant => 1.0,
+            DemandCurve::Diurnal { peak, trough, peak_phase } => {
+                let c = (std::f64::consts::TAU * (phase - peak_phase)).cos();
+                trough + (peak - trough) * 0.5 * (1.0 + c)
+            }
+            DemandCurve::Trace(points) => {
+                let n = points.len();
+                if n == 1 {
+                    return points[0];
+                }
+                let x = phase * n as f64;
+                let i = (x as usize).min(n - 1);
+                let frac = x - i as f64;
+                let a = points[i];
+                let b = points[(i + 1) % n];
+                a + (b - a) * frac
+            }
+        }
+    }
+
+    /// Largest multiplier over the period — the thinning envelope for
+    /// inhomogeneous-Poisson arrival generation.
+    pub fn max(&self) -> f64 {
+        match self {
+            DemandCurve::Constant => 1.0,
+            DemandCurve::Diurnal { peak, .. } => *peak,
+            DemandCurve::Trace(points) => points.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+
+    /// Mean multiplier over the period (what a flat run at the same
+    /// request budget would need).
+    pub fn mean(&self) -> f64 {
+        match self {
+            DemandCurve::Constant => 1.0,
+            DemandCurve::Diurnal { peak, trough, .. } => trough + (peak - trough) * 0.5,
+            DemandCurve::Trace(points) => points.iter().sum::<f64>() / points.len() as f64,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,5 +216,52 @@ mod tests {
             assert!(p.per_service[0] > p.per_service[1] + p.per_service[2] - p.total * 0.5);
             assert!(p.per_service[0] / p.total > 0.5);
         }
+    }
+
+    #[test]
+    fn diurnal_peaks_and_troughs_where_told() {
+        let c = DemandCurve::parse("diurnal:peak=1.0,trough=0.3,peak_hour=20").unwrap();
+        let at = |h: f64| c.multiplier(h / 24.0);
+        assert!((at(20.0) - 1.0).abs() < 1e-9, "peak at 20h: {}", at(20.0));
+        assert!((at(8.0) - 0.3).abs() < 1e-9, "trough 12h opposite: {}", at(8.0));
+        assert!(at(14.0) > at(8.0) && at(14.0) < at(20.0));
+        assert!((c.max() - 1.0).abs() < 1e-9);
+        assert!((c.mean() - 0.65).abs() < 1e-9);
+        // wraps: phase 1.25 == phase 0.25
+        assert!((c.multiplier(1.25) - c.multiplier(0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_specs_parse() {
+        assert_eq!(DemandCurve::parse("constant").unwrap(), DemandCurve::Constant);
+        assert_eq!(DemandCurve::Constant.multiplier(0.37), 1.0);
+        let d = DemandCurve::parse("diurnal").unwrap();
+        assert!(matches!(d, DemandCurve::Diurnal { .. }));
+        assert!(DemandCurve::parse("diurnal:trough=2.0").is_err(), "trough > peak");
+        assert!(DemandCurve::parse("sinusoid").is_err());
+        assert!(DemandCurve::parse("diurnal:shape=9").is_err());
+    }
+
+    #[test]
+    fn trace_interpolates_and_wraps() {
+        let dir = std::env::temp_dir().join(format!("dcinfer_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("day.txt");
+        std::fs::write(&path, "# hourly multipliers\n0.5\n1.0\n0.5\n0.0\n").unwrap();
+        let c = DemandCurve::parse(&format!("trace:{}", path.display())).unwrap();
+        assert_eq!(c.multiplier(0.0), 0.5);
+        assert_eq!(c.multiplier(0.25), 1.0);
+        // halfway between samples 1 and 2
+        assert!((c.multiplier(0.375) - 0.75).abs() < 1e-9);
+        // wrap-around: between the last sample (0.0) and the first (0.5)
+        assert!((c.multiplier(0.875) - 0.25).abs() < 1e-9);
+        assert_eq!(c.max(), 1.0);
+        assert!((c.mean() - 0.5).abs() < 1e-9);
+        std::fs::write(&path, "0.0\n0.0\n").unwrap();
+        assert!(
+            DemandCurve::parse(&format!("trace:{}", path.display())).is_err(),
+            "all-zero trace must be rejected"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -11,6 +11,6 @@ pub mod demand;
 pub mod sim;
 pub mod telemetry;
 
-pub use demand::{demand_series, DemandPoint, ServiceClass};
+pub use demand::{demand_series, DemandCurve, DemandPoint, ServiceClass};
 pub use sim::{simulate_fleet, FleetConfig};
 pub use telemetry::{TelemetryAgent, TimeBreakdown};

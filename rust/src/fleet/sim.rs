@@ -13,19 +13,27 @@ use crate::observers::{cost_inference, predict_us, OpRecord};
 use crate::perfmodel::DeviceSpec;
 use crate::util::rng::Pcg32;
 
+use super::demand::DemandCurve;
 use super::telemetry::TelemetryAgent;
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
+    /// Arrival slots over one simulated day. With a non-constant
+    /// [`DemandCurve`] some slots are thinned away, so the executed
+    /// request count tracks the curve's mean/max ratio.
     pub requests: usize,
     pub seed: u64,
     pub elem_bytes: u64,
+    /// Within-day demand shape — the same curve the live loadgen
+    /// replays, so offline Fig-4 runs and the serving plane see one
+    /// source of truth.
+    pub demand: DemandCurve,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
-        FleetConfig { requests: 2_000, seed: 7, elem_bytes: 4 }
+        FleetConfig { requests: 2_000, seed: 7, elem_bytes: 4, demand: DemandCurve::Constant }
     }
 }
 
@@ -73,7 +81,18 @@ pub fn simulate_fleet(zoo: &[ZooEntry], dev: &DeviceSpec, cfg: &FleetConfig) -> 
         .iter()
         .map(|e| e.fleet_weight / expected_request_us(&e.desc, dev, cfg.elem_bytes))
         .collect();
-    for _ in 0..cfg.requests {
+    let envelope = cfg.demand.max();
+    for i in 0..cfg.requests {
+        // inhomogeneous-Poisson thinning: each arrival slot maps to a
+        // time-of-day phase and survives with probability rate/envelope.
+        // Constant demand skips the draw, keeping seed-era runs
+        // bit-identical to before the demand curve existed.
+        if cfg.demand != DemandCurve::Constant {
+            let phase = i as f64 / cfg.requests as f64;
+            if rng.uniform() >= cfg.demand.multiplier(phase) / envelope {
+                continue;
+            }
+        }
         let pick = rng.weighted_choice(&weights);
         let model = &zoo[pick].desc;
         for layer in &model.layers {
@@ -105,7 +124,7 @@ mod tests {
     fn run(requests: usize) -> TelemetryAgent {
         let zoo = representative_zoo();
         let dev = DeviceSpec::xeon_fp32();
-        simulate_fleet(&zoo, &dev, &FleetConfig { requests, seed: 7, elem_bytes: 4 })
+        simulate_fleet(&zoo, &dev, &FleetConfig { requests, ..Default::default() })
     }
 
     #[test]
@@ -142,5 +161,22 @@ mod tests {
         let a = run(100).breakdown();
         let b = run(100).breakdown();
         assert_eq!(a.total_us, b.total_us);
+    }
+
+    #[test]
+    fn diurnal_demand_thins_offpeak_arrivals() {
+        let zoo = representative_zoo();
+        let dev = DeviceSpec::xeon_fp32();
+        let flat = simulate_fleet(&zoo, &dev, &FleetConfig::default()).breakdown();
+        let curve = DemandCurve::parse("diurnal:peak=1.0,trough=0.2,peak_hour=20").unwrap();
+        let mean_over_peak = curve.mean() / curve.max();
+        let cfg = FleetConfig { demand: curve, ..Default::default() };
+        let diurnal = simulate_fleet(&zoo, &dev, &cfg).breakdown();
+        // thinning keeps roughly mean/peak of the arrival slots
+        let kept = diurnal.total_us / flat.total_us;
+        assert!(
+            (kept - mean_over_peak).abs() < 0.15,
+            "kept {kept:.2} vs expected ~{mean_over_peak:.2}"
+        );
     }
 }

@@ -67,6 +67,17 @@
 //! budgeted replica failover (`dcinfer cluster` spawns a loopback
 //! mini-fleet).
 //!
+//! [`autoscale`] closes the capacity loop over that fleet (§2.3, Fig 1:
+//! diurnal demand, peak-set SLAs): a controller polls the serving
+//! metrics, applies a hysteresis/cooldown [`autoscale::ScalePolicy`],
+//! and resizes live capacity —
+//! [`coordinator::ServingFrontend::resize_executors`] (executor pools
+//! grow/shrink without dropping in-flight batches) and
+//! [`cluster::ClusterRouter::add_replica`] / `remove_replica`
+//! (ring rebuild + drain) — while `dcinfer loadgen --demand diurnal
+//! --skew zipf:1.0` replays the paper's demand curve with Zipf-skewed
+//! embedding traffic against it.
+//!
 //! [`faultnet`] makes partial failure a first-class, testable input:
 //! a seeded deterministic fault-injection layer (`DCINFER_FAULTS` /
 //! `--faults`) wraps every socket in the crate, and one
@@ -75,6 +86,7 @@
 //! degraded-mode serving (stale-cache/zero sparse contributions flagged
 //! `degraded` end-to-end instead of failing the request).
 
+pub mod autoscale;
 pub mod cluster;
 pub mod coordinator;
 pub mod embedding;

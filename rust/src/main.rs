@@ -17,12 +17,17 @@
 //!               [--remote-shards ADDR,ADDR,...] [--seq-sessions N] [--faults SPEC]
 //! dcinfer loadgen --connect ADDR [--qps Q] [--requests N]
 //!                 [--mix recsys:8,cv:1,nmt:1] [--deadline-ms D] [--seed S]
+//!                 [--demand diurnal:peak=1,trough=0.45,peak_hour=20|trace:FILE]
+//!                 [--demand-period SECS] [--skew uniform|zipf:S]
 //!                 [--artifacts DIR] [--faults SPEC]
 //!                 [--seq geom:MEAN|uniform:LO,HI] [--max-len N]
 //! dcinfer shard-serve [--listen ADDR] [--faults SPEC]
 //! dcinfer cluster [--replicas N] [--shard-procs M] [--sparse-replication R]
 //!                 [--requests N] [--qps Q] [--mix ...] [--seed S]
 //!                 [--backend B] [--precision P] [--artifacts DIR] [--faults SPEC]
+//! dcinfer autoscale [--requests N] [--peak-qps Q] [--period SECS]
+//!                   [--min-executors A] [--max-executors B] [--interval-ms T]
+//!                   [--models M] [--demand SPEC] [--skew SPEC] [--seed S]
 //! ```
 //!
 //! `shard-serve` runs one standalone embedding-shard server (§4
@@ -70,6 +75,22 @@
 //! forwards the spec to every child it spawns, so one flag
 //! chaos-tests the whole mini-fleet.
 //!
+//! `loadgen --demand` replays the paper's Fig 1 demand shape against a
+//! live server: arrivals stay open-loop Poisson but the instantaneous
+//! rate follows a diurnal curve (or a `trace:FILE` of samples), with
+//! one simulated day compressed into `--demand-period` seconds.
+//! `--skew zipf:S` draws embedding rows from a seeded Zipf instead of
+//! uniformly, so a sparse tier's hot-row cache sees production-like
+//! reuse. Demand-modulated runs also print a per-interval timeline
+//! (offered qps, goodput, shed, p99 per slice of the run).
+//!
+//! `autoscale` closes the loop: a loopback serving tier, the same
+//! demand-replayed loadgen, and an
+//! [`dcinfer::autoscale::AutoscaleController`] polling the serving
+//! metrics on `--interval-ms`, resizing the live executor pool between
+//! `--min-executors` and `--max-executors` through a simulated peak —
+//! printing every scale decision and the SLO/shed summary.
+//!
 //! Without `artifacts/manifest.json` both subcommands fall back to the
 //! self-synthesized fixture (native backend), so a loopback
 //! serve/loadgen pair runs out of the box.
@@ -81,16 +102,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use dcinfer::autoscale::{format_events, AutoscaleController, ScalePolicy};
 use dcinfer::cluster::{ChildProc, ClusterRouter, RouterConfig, ShardServer, ShardServerConfig};
 use dcinfer::coordinator::{
-    disagg_bandwidth, ClientResponse, DcClient, FrontendConfig, InferError, ModelService,
-    SeqClientEvent, SeqConfig, SeqEngine, SeqFinish, ServerConfig, ServingFrontend,
-    ServingServer,
+    disagg_bandwidth, ClientResponse, DcClient, FrontendConfig, IndexSkew, InferError,
+    ModelService, SeqClientEvent, SeqConfig, SeqEngine, SeqFinish, ServerConfig,
+    ServingFrontend, ServingServer,
 };
 use dcinfer::models::{CvService, LengthDistribution, NmtService, RecSysService};
 use dcinfer::runtime::Manifest;
 use dcinfer::util::stats::Samples;
-use dcinfer::fleet::{demand_series, simulate_fleet, FleetConfig};
+use dcinfer::fleet::{demand_series, simulate_fleet, DemandCurve, FleetConfig};
 use dcinfer::graph::{mine_frequent_subgraphs, rank_opportunities, Net};
 use dcinfer::models::{representative_zoo, ModelDesc};
 use dcinfer::perfmodel::roofline::fig3_capacities;
@@ -149,11 +171,12 @@ fn main() -> Result<()> {
         "loadgen" => cmd_loadgen(&flags),
         "shard-serve" => cmd_shard_serve(&flags),
         "cluster" => cmd_cluster(&flags),
+        "autoscale" => cmd_autoscale(&flags),
         _ => {
             println!("dcinfer — data-center DL inference characterization & serving");
             println!(
                 "subcommands: characterize demand roofline fleet shapes mine disagg codesign \
-                 serve loadgen shard-serve cluster"
+                 serve loadgen shard-serve cluster autoscale"
             );
             Ok(())
         }
@@ -736,6 +759,21 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
             v.parse().map_err(|_| anyhow::anyhow!("invalid --deadline-ms value {v:?}"))?,
         ),
     };
+    // `--demand` modulates the open-loop arrival rate along a replayed
+    // day (Fig 1); `--demand-period` compresses that day into wall
+    // seconds. `--skew` redraws embedding indices from a Zipf so the
+    // sparse tier sees production-like hot rows.
+    let demand = match flags.get("demand") {
+        None => DemandCurve::Constant,
+        Some(spec) => DemandCurve::parse(spec).context("--demand")?,
+    };
+    let demand_period: f64 =
+        flags.get("demand-period").and_then(|v| v.parse().ok()).unwrap_or(60.0);
+    anyhow::ensure!(demand_period > 0.0, "--demand-period must be positive");
+    let skew: Option<IndexSkew> = match flags.get("skew") {
+        None => None,
+        Some(spec) => Some(IndexSkew::parse(spec).context("--skew")?),
+    };
 
     // request synthesis needs the families' dimensions — they must
     // describe the same artifact set the server loaded
@@ -765,20 +803,45 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
     let weights: Vec<f64> = arms.iter().map(|(_, w)| *w).collect();
 
     let client = connect_with_retry(addr, Duration::from_secs(30))?;
+    let shape = match (&demand, skew) {
+        (DemandCurve::Constant, None) => String::new(),
+        _ => {
+            let mut parts = Vec::new();
+            if demand != DemandCurve::Constant {
+                parts.push(format!("demand-modulated over {demand_period:.0}s/day"));
+            }
+            if let Some(s) = skew {
+                parts.push(format!("index skew {s:?}"));
+            }
+            format!(", {}", parts.join(", "))
+        }
+    };
     println!(
-        "== loadgen: {n} requests @ {qps} qps (open-loop Poisson) against {addr}, mix [{mix}] ==\n"
+        "== loadgen: {n} arrivals @ {qps} qps (open-loop Poisson{shape}) \
+         against {addr}, mix [{mix}] ==\n"
     );
 
     // open loop: the arrival schedule never waits on responses — late
-    // responses pile up in flight exactly like real overload
+    // responses pile up in flight exactly like real overload. With a
+    // demand curve the process is inhomogeneous Poisson via thinning:
+    // candidates arrive at the envelope rate `qps * demand.max()` and
+    // each survives with probability multiplier(phase)/max, so the
+    // instantaneous rate is qps * multiplier(phase of the replayed day)
+    let envelope = demand.max();
     let mut rng = Pcg32::seeded(seed);
-    let mut pending: Vec<(String, std::sync::mpsc::Receiver<ClientResponse>)> =
+    let mut pending: Vec<(String, f64, std::sync::mpsc::Receiver<ClientResponse>)> =
         Vec::with_capacity(n as usize);
     let mut send_errors = 0u64;
     let t0 = Instant::now();
     let mut next_at = 0.0f64;
     for i in 0..n {
-        next_at += rng.exponential(qps);
+        next_at += rng.exponential(qps * envelope);
+        if demand != DemandCurve::Constant {
+            let phase = next_at / demand_period;
+            if rng.uniform() >= demand.multiplier(phase) / envelope {
+                continue; // thinned: this candidate falls outside the curve
+            }
+        }
         let now = t0.elapsed().as_secs_f64();
         if next_at > now {
             std::thread::sleep(Duration::from_secs_f64(next_at - now));
@@ -786,9 +849,12 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
         let svc = &arms[rng.weighted_choice(&weights)].0;
         let deadline =
             deadline_override.unwrap_or_else(|| svc.deadline_class().default_deadline_ms());
-        let req = svc.synth_request(i, &mut rng, deadline);
+        let req = match skew {
+            None => svc.synth_request(i, &mut rng, deadline),
+            Some(s) => svc.synth_request_skewed(i, &mut rng, deadline, s),
+        };
         match client.submit(&req) {
-            Ok(rx) => pending.push((req.model.clone(), rx)),
+            Ok(rx) => pending.push((req.model.clone(), next_at, rx)),
             Err(_) => send_errors += 1,
         }
     }
@@ -813,9 +879,26 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
     // client side
     let mut per_replica: BTreeMap<String, u64> = BTreeMap::new();
     let mut all_rtt = Samples::new();
-    for (model, rx) in pending {
+    // the per-interval timeline: responses bucketed by *send* time, so
+    // each row reads as "what the server did to traffic offered then"
+    const TIMELINE_BUCKETS: usize = 8;
+    #[derive(Default)]
+    struct Slot {
+        offered: u64,
+        ok: u64,
+        good: u64,
+        shed: u64,
+        errs: u64,
+        rtt_ms: Samples,
+    }
+    let bucket_w = (send_wall / TIMELINE_BUCKETS as f64).max(1e-9);
+    let mut timeline: Vec<Slot> = (0..TIMELINE_BUCKETS).map(|_| Slot::default()).collect();
+    for (model, sent_at, rx) in pending {
         let agg = per_model.entry(model).or_default();
         agg.sent += 1;
+        let slot =
+            &mut timeline[((sent_at / bucket_w) as usize).min(TIMELINE_BUCKETS - 1)];
+        slot.offered += 1;
         match rx.recv_timeout(Duration::from_secs(60)) {
             Ok(cr) => {
                 if !cr.resp.replica.is_empty() {
@@ -823,21 +906,29 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
                 }
                 if cr.shed() {
                     agg.shed += 1;
+                    slot.shed += 1;
                 } else if cr.resp.is_ok() {
                     agg.ok += 1;
+                    slot.ok += 1;
                     if cr.resp.degraded {
                         agg.degraded += 1;
                     }
                     agg.rtt_ms.push(cr.rtt_us / 1e3);
                     all_rtt.push(cr.rtt_us / 1e3);
+                    slot.rtt_ms.push(cr.rtt_us / 1e3);
                     if cr.good() {
                         agg.good += 1;
+                        slot.good += 1;
                     }
                 } else {
                     agg.errs += 1;
+                    slot.errs += 1;
                 }
             }
-            Err(_) => agg.errs += 1,
+            Err(_) => {
+                agg.errs += 1;
+                slot.errs += 1;
+            }
         }
     }
     client.close();
@@ -910,6 +1001,24 @@ fn cmd_loadgen(flags: &BTreeMap<String, String>) -> Result<()> {
         tot.degraded,
         send_errors
     );
+    if tot.sent > 0 {
+        let mut tl = dcinfer::util::bench::Table::new(&[
+            "interval", "offered qps", "ok", "goodput", "shed", "err", "p99 ms",
+        ]);
+        for (i, s) in timeline.iter_mut().enumerate() {
+            tl.row(&[
+                format!("{:>5.1}-{:>5.1}s", i as f64 * bucket_w, (i + 1) as f64 * bucket_w),
+                format!("{:.0}", s.offered as f64 / bucket_w),
+                s.ok.to_string(),
+                format!("{:.1}%", s.good as f64 / s.offered.max(1) as f64 * 100.0),
+                s.shed.to_string(),
+                s.errs.to_string(),
+                format!("{:.2}", s.rtt_ms.p99()),
+            ]);
+        }
+        println!("\n--- timeline ({TIMELINE_BUCKETS} intervals by send time) ---");
+        tl.print();
+    }
     if !per_replica.is_empty() {
         let answered: u64 = per_replica.values().sum();
         println!("\nresponses by serving replica:");
@@ -1224,7 +1333,9 @@ fn cmd_cluster(flags: &BTreeMap<String, String>) -> Result<()> {
         "replica", "state", "sent", "done", "failed", "trips", "inflight", "p50 ms", "p99 ms",
     ]);
     for (i, s) in router.stats().iter().enumerate() {
-        let state = if !s.healthy {
+        let state = if s.retired {
+            "retired"
+        } else if !s.healthy {
             "down"
         } else if s.suspect {
             "suspect"
@@ -1252,4 +1363,180 @@ fn cmd_cluster(flags: &BTreeMap<String, String>) -> Result<()> {
         let _ = std::fs::remove_dir_all(&art_dir);
     }
     lg_result
+}
+
+/// Closed-loop elastic capacity through a simulated peak: a loopback
+/// serving tier starts at `--min-executors`, a demand-replayed loadgen
+/// (one simulated day compressed into `--period` seconds, peaking
+/// mid-run) drives it past what that capacity can carry, and an
+/// [`AutoscaleController`] polling the serving metrics every
+/// `--interval-ms` resizes the live executor pool — up into the peak,
+/// back down after the trough. Prints every scale decision and the
+/// shed/SLO summary.
+fn cmd_autoscale(flags: &BTreeMap<String, String>) -> Result<()> {
+    install_faults_flag(flags)?;
+    let n: u64 = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(4000);
+    let peak_qps: f64 = flags.get("peak-qps").and_then(|v| v.parse().ok()).unwrap_or(1200.0);
+    anyhow::ensure!(peak_qps > 0.0, "--peak-qps must be positive");
+    let period: f64 = flags.get("period").and_then(|v| v.parse().ok()).unwrap_or(16.0);
+    anyhow::ensure!(period > 0.0, "--period must be positive");
+    let min_cap: usize = flags.get("min-executors").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let max_cap: usize = flags.get("max-executors").and_then(|v| v.parse().ok()).unwrap_or(6);
+    let interval_ms: u64 =
+        flags.get("interval-ms").and_then(|v| v.parse().ok()).unwrap_or(400);
+    anyhow::ensure!(interval_ms >= 1, "--interval-ms must be at least 1");
+    let seed: u64 = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42);
+    let models = flags.get("models").cloned().unwrap_or_else(|| "recsys".to_string());
+    // peak_hour=12 puts the crest mid-run: the run starts in the
+    // trough, climbs through the peak, and ends back in the trough —
+    // one full scale-up/scale-down episode per invocation
+    let demand_spec = flags
+        .get("demand")
+        .cloned()
+        .unwrap_or_else(|| "diurnal:peak=1.0,trough=0.15,peak_hour=12".to_string());
+    let demand = DemandCurve::parse(&demand_spec).context("--demand")?;
+    let skew = IndexSkew::parse(flags.get("skew").map(|s| s.as_str()).unwrap_or("zipf:1.0"))
+        .context("--skew")?;
+
+    let (art_dir, fixture) = artifacts_or_fixture(flags)?;
+    let manifest = Manifest::load(&art_dir)?;
+    let services = services_for(&manifest, &models)?;
+    let svcs: Vec<Arc<dyn ModelService>> = services.clone();
+    let backend =
+        dcinfer::runtime::BackendSpec::native(dcinfer::runtime::Precision::Fp32);
+    let frontend = Arc::new(ServingFrontend::start(
+        FrontendConfig {
+            artifacts_dir: art_dir.clone(),
+            executors: min_cap,
+            backend,
+            ..Default::default()
+        },
+        services,
+    )?);
+    let server = ServingServer::bind_with_seq(
+        frontend.clone(),
+        None,
+        "127.0.0.1:0",
+        ServerConfig::default(),
+    )?;
+    println!(
+        "== autoscale: loopback tier on {} at {min_cap} executors (max {max_cap}), \
+         {n} arrivals peaking at {peak_qps:.0} qps over a {period:.0}s day \
+         [{demand_spec}], controller tick {interval_ms} ms ==\n",
+        server.local_addr()
+    );
+
+    let policy = ScalePolicy {
+        min_capacity: min_cap,
+        max_capacity: max_cap,
+        ..ScalePolicy::default()
+    };
+    let controller = AutoscaleController::spawn(
+        frontend.clone(),
+        policy,
+        Duration::from_millis(interval_ms),
+    )?;
+
+    // the same inhomogeneous-Poisson replay loadgen runs, driving the
+    // wire path the controller's metrics watch
+    let client = connect_with_retry(&server.local_addr().to_string(), Duration::from_secs(10))?;
+    let envelope = demand.max();
+    let mut rng = Pcg32::seeded(seed);
+    let mut pending = Vec::with_capacity(n as usize);
+    let t0 = Instant::now();
+    let mut next_at = 0.0f64;
+    let mut send_errors = 0u64;
+    for i in 0..n {
+        next_at += rng.exponential(peak_qps * envelope);
+        let phase = next_at / period;
+        if rng.uniform() >= demand.multiplier(phase) / envelope {
+            continue;
+        }
+        let now = t0.elapsed().as_secs_f64();
+        if next_at > now {
+            std::thread::sleep(Duration::from_secs_f64(next_at - now));
+        }
+        let svc = &svcs[i as usize % svcs.len()];
+        let deadline = svc.deadline_class().default_deadline_ms();
+        let req = svc.synth_request_skewed(i, &mut rng, deadline, skew);
+        match client.submit(&req) {
+            Ok(rx) => pending.push((next_at, rx)),
+            Err(_) => send_errors += 1,
+        }
+    }
+    let send_wall = t0.elapsed().as_secs_f64();
+
+    // the peak window: the middle third of the replayed day
+    let peak_window = (period / 3.0)..(2.0 * period / 3.0);
+    let (mut sent, mut ok, mut good, mut shed, mut errs) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    let (mut peak_sent, mut peak_shed) = (0u64, 0u64);
+    let mut rtt = Samples::new();
+    for (sent_at, rx) in pending {
+        sent += 1;
+        let in_peak = peak_window.contains(&sent_at);
+        if in_peak {
+            peak_sent += 1;
+        }
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(cr) => {
+                if cr.shed() {
+                    shed += 1;
+                    if in_peak {
+                        peak_shed += 1;
+                    }
+                } else if cr.resp.is_ok() {
+                    ok += 1;
+                    rtt.push(cr.rtt_us / 1e3);
+                    if cr.good() {
+                        good += 1;
+                    }
+                } else {
+                    errs += 1;
+                }
+            }
+            Err(_) => errs += 1,
+        }
+    }
+    client.close();
+    let log = controller.stop();
+    server.shutdown();
+
+    let events = format_events(&log);
+    println!("--- scale events ({} over {} ticks) ---", events.len(), log.len());
+    if events.is_empty() {
+        println!("(none — capacity never needed to move)");
+    }
+    for e in &events {
+        println!("{e}");
+    }
+    let peak_capacity =
+        log.iter().map(|d| d.to).chain([min_cap]).max().unwrap_or(min_cap);
+    println!("\n--- summary ---");
+    println!(
+        "{sent} sent over {send_wall:.1}s, {ok} ok, {shed} shed ({:.1}%), {errs} errors, \
+         {send_errors} send failures",
+        shed as f64 / sent.max(1) as f64 * 100.0
+    );
+    println!(
+        "peak window ({:.1}-{:.1}s): {peak_sent} sent, {peak_shed} shed ({:.1}%)",
+        peak_window.start,
+        peak_window.end,
+        peak_shed as f64 / peak_sent.max(1) as f64 * 100.0
+    );
+    println!(
+        "SLO attainment {:.1}% (answered within deadline), p50/p99 {:.2}/{:.2} ms",
+        good as f64 / sent.max(1) as f64 * 100.0,
+        rtt.p50(),
+        rtt.p99()
+    );
+    println!(
+        "capacity: started {min_cap}, peaked {peak_capacity}, ended {}",
+        frontend.executor_capacity()
+    );
+    frontend.shutdown();
+    if fixture {
+        let _ = std::fs::remove_dir_all(&art_dir);
+    }
+    anyhow::ensure!(ok > 0, "no successful responses through the autoscaled tier");
+    Ok(())
 }

@@ -17,7 +17,7 @@
 use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::request::{InferRequest, SeqRequest};
-use crate::coordinator::service::{DeadlineClass, ModelService};
+use crate::coordinator::service::{DeadlineClass, IndexSkew, ModelService};
 use crate::models::nmt::SeqDecodeSpec;
 use crate::runtime::{DType, HostTensor, Manifest};
 use crate::util::rng::Pcg32;
@@ -98,10 +98,23 @@ impl RecSysService {
     /// Synthetic production-like request: N(0,1) dense features and
     /// Zipf-skewed embedding ids (the paper's skewed-access regime).
     pub fn synth_request(&self, id: u64, rng: &mut Pcg32, deadline_ms: f64) -> InferRequest {
+        self.synth_request_skewed(id, rng, deadline_ms, IndexSkew::Zipf(1.05))
+    }
+
+    /// [`Self::synth_request`] under an explicit id-skew regime
+    /// (`loadgen --skew`): uniform for the adversarial cold case, or
+    /// any Zipf exponent for hot-head sweeps.
+    pub fn synth_request_skewed(
+        &self,
+        id: u64,
+        rng: &mut Pcg32,
+        deadline_ms: f64,
+        skew: IndexSkew,
+    ) -> InferRequest {
         let mut dense = vec![0f32; self.dense_dim];
         rng.fill_normal(&mut dense, 0.0, 1.0);
         let indices: Vec<i32> = (0..self.n_tables * self.pool)
-            .map(|_| rng.zipf(self.rows_per_table as u32, 1.05) as i32)
+            .map(|_| skew.sample(rng, self.rows_per_table as u32) as i32)
             .collect();
         self.request(id, dense, indices, deadline_ms).expect("synth dims match config")
     }
@@ -128,6 +141,16 @@ impl ModelService for RecSysService {
 
     fn synth_request(&self, id: u64, rng: &mut Pcg32, deadline_ms: f64) -> InferRequest {
         RecSysService::synth_request(self, id, rng, deadline_ms)
+    }
+
+    fn synth_request_skewed(
+        &self,
+        id: u64,
+        rng: &mut Pcg32,
+        deadline_ms: f64,
+        skew: IndexSkew,
+    ) -> InferRequest {
+        RecSysService::synth_request_skewed(self, id, rng, deadline_ms, skew)
     }
 }
 

@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -181,11 +181,31 @@ fn executor_main(
     }
 }
 
-/// A pool of executor threads (the inference tier).
-pub struct ExecutorPool {
+/// Live executors plus the join handles of every thread the pool ever
+/// spawned (retired executors' handles stay here until
+/// [`ExecutorPool::shutdown`] joins them — their threads are still
+/// draining queued batches when a shrink returns).
+struct PoolInner {
     executors: Vec<Executor>,
     handles: Vec<JoinHandle<()>>,
+    retired: Vec<JoinHandle<()>>,
+}
+
+/// A pool of executor threads (the inference tier), resizable while
+/// serving: [`ExecutorPool::resize`] grows by spawning executors with
+/// the same spec/artifacts, and shrinks by sending retiring executors
+/// their shutdown message — which queues *behind* any batches already
+/// dispatched to them, so in-flight work drains rather than drops.
+pub struct ExecutorPool {
+    inner: Mutex<PoolInner>,
     spec: BackendSpec,
+    /// spawn ingredients, kept so resize can add executors later
+    artifacts_dir: PathBuf,
+    artifact_names: Vec<String>,
+    sparse: Option<Arc<EmbeddingShardService>>,
+    /// monotonic executor-id source: retired ids are never reused, so
+    /// thread names and logs stay unambiguous across resizes
+    next_id: AtomicUsize,
     /// lock-free round-robin cursor (this sits on the hot dispatch path)
     next: AtomicUsize,
 }
@@ -226,15 +246,23 @@ impl ExecutorPool {
             executors.push(e);
             handles.push(h);
         }
-        Ok(ExecutorPool { executors, handles, spec, next: AtomicUsize::new(0) })
+        Ok(ExecutorPool {
+            inner: Mutex::new(PoolInner { executors, handles, retired: Vec::new() }),
+            spec,
+            artifacts_dir,
+            artifact_names,
+            sparse,
+            next_id: AtomicUsize::new(n),
+            next: AtomicUsize::new(0),
+        })
     }
 
     pub fn len(&self) -> usize {
-        self.executors.len()
+        self.inner.lock().unwrap().executors.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.executors.is_empty()
+        self.len() == 0
     }
 
     /// The backend spec every executor in this pool runs.
@@ -242,21 +270,64 @@ impl ExecutorPool {
         self.spec
     }
 
-    /// Round-robin executor selection (atomic fetch-add, no lock).
-    pub fn pick(&self) -> &Executor {
+    /// Round-robin executor selection.
+    pub fn pick(&self) -> Executor {
         let n = self.next.fetch_add(1, Ordering::Relaxed);
-        &self.executors[n % self.executors.len()]
+        let inner = self.inner.lock().unwrap();
+        inner.executors[n % inner.executors.len()].clone()
     }
 
-    pub fn executors(&self) -> &[Executor] {
-        &self.executors
+    /// The executor a router slot resolves to. Slot indexes wrap, so a
+    /// dispatch decision made just before a concurrent shrink still
+    /// lands on a live executor instead of panicking.
+    pub fn executor(&self, slot: usize) -> Executor {
+        let inner = self.inner.lock().unwrap();
+        inner.executors[slot % inner.executors.len()].clone()
+    }
+
+    /// Grow or shrink the live executor set to `target` (clamped to at
+    /// least 1). Growth spawns and warms new executors one at a time
+    /// *outside* the pool lock, so serving never stalls behind artifact
+    /// loading; shrink pops executors off the tail and sends each its
+    /// shutdown message — queued batches on a retiring executor drain
+    /// first because the message sits behind them in its channel.
+    /// Returns the live count.
+    pub fn resize(&self, target: usize) -> Result<usize> {
+        let target = target.max(1);
+        loop {
+            let cur = self.len();
+            if cur < target {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let (e, h) = Executor::spawn_with_sparse(
+                    id,
+                    self.spec,
+                    self.artifacts_dir.clone(),
+                    self.artifact_names.clone(),
+                    self.sparse.clone(),
+                )?;
+                let mut inner = self.inner.lock().unwrap();
+                inner.executors.push(e);
+                inner.handles.push(h);
+            } else if cur > target {
+                let mut inner = self.inner.lock().unwrap();
+                if inner.executors.len() > target {
+                    let e = inner.executors.pop().expect("len > target >= 1");
+                    let h = inner.handles.pop().expect("handles track executors");
+                    e.shutdown();
+                    inner.retired.push(h);
+                }
+            } else {
+                return Ok(cur);
+            }
+        }
     }
 
     pub fn shutdown(self) {
-        for e in &self.executors {
+        let inner = self.inner.into_inner().unwrap();
+        for e in &inner.executors {
             e.shutdown();
         }
-        for h in self.handles {
+        for h in inner.handles.into_iter().chain(inner.retired) {
             let _ = h.join();
         }
     }

@@ -1,0 +1,292 @@
+//! Autoscale seals: through a simulated diurnal peak the controller
+//! must grow the tier, shed must recover, capacity must come back down
+//! after the trough — and none of it may touch numerics.
+//!
+//! The scaling episode is driven synchronously (the test owns the tick
+//! loop: observe → `ScalePolicy::decide` → `resize_executors`) so the
+//! phase structure is deterministic; the threaded loop around the same
+//! pieces is covered by `AutoscaleController`'s own test and the
+//! `dcinfer autoscale` CI smoke. Pressure is manufactured by bursting
+//! far past the admission queue bound, which overloads the tier at any
+//! machine speed.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dcinfer::autoscale::{
+    Observation, PolicyState, ScaleAction, ScaleDecision, ScalePolicy, Scalable, TickSignals,
+};
+use dcinfer::coordinator::{
+    FrontendConfig, IndexSkew, InferError, InferRequest, InferResponse, ServingFrontend,
+};
+use dcinfer::embedding::{cache::CacheOutcome, HotRowCache};
+use dcinfer::models::RecSysService;
+use dcinfer::runtime::{synthetic_artifacts_dir, BackendSpec, Manifest, Precision};
+use dcinfer::util::rng::Pcg32;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn start_frontend(
+    dir: &std::path::Path,
+    executors: usize,
+    max_queue_depth: usize,
+) -> (Arc<ServingFrontend>, RecSysService) {
+    let manifest = Manifest::load(dir).unwrap();
+    let service = RecSysService::from_manifest(&manifest).unwrap();
+    let frontend = ServingFrontend::start(
+        FrontendConfig {
+            artifacts_dir: dir.to_path_buf(),
+            executors,
+            max_wait_us: 500.0,
+            max_queue_depth,
+            backend: BackendSpec::native(Precision::Fp32),
+            ..Default::default()
+        },
+        vec![Arc::new(service.clone())],
+    )
+    .unwrap();
+    (Arc::new(frontend), service)
+}
+
+/// One synchronous controller tick: diff cumulative counters into
+/// per-tick signals, decide, apply. Mirrors `controller_loop` exactly,
+/// minus the thread and the wall clock.
+fn tick(
+    frontend: &Arc<ServingFrontend>,
+    policy: &ScalePolicy,
+    state: &mut PolicyState,
+    prev: &mut Observation,
+    log: &mut Vec<ScaleDecision>,
+) {
+    let now = frontend.observe();
+    let signals = TickSignals {
+        served: now.served.saturating_sub(prev.served),
+        shed: now.shed.saturating_sub(prev.shed),
+        failed: now.failed.saturating_sub(prev.failed),
+        queue_depth: now.queue_depth,
+        p99_ms: now.p99_ms,
+        deadline_ms: now.deadline_ms,
+        capacity: frontend.executor_capacity(),
+    };
+    *prev = now;
+    let mut d = policy.decide(state, signals);
+    if d.action != ScaleAction::Hold {
+        d.to = frontend.resize_executors(d.to).unwrap();
+    }
+    log.push(d);
+}
+
+/// The p99 signal is a cumulative-window trailing indicator: once a
+/// peak congests it, it never comes back down within one run. Disable
+/// it so phase transitions are driven by the fast signals (shed, queue)
+/// the burst structure controls deterministically.
+fn test_policy() -> ScalePolicy {
+    ScalePolicy {
+        min_capacity: 1,
+        max_capacity: 4,
+        shed_frac_up: 0.01,
+        queue_depth_up: 32,
+        p99_frac_up: 1e9,
+        queue_depth_down: 8,
+        p99_frac_down: 1e8,
+        quiet_ticks_down: 2,
+        cooldown_ticks: 1,
+        step_up: 2,
+        step_down: 1,
+    }
+}
+
+fn drain(pending: &mut Vec<std::sync::mpsc::Receiver<InferResponse>>) -> (u64, u64, u64) {
+    let (mut ok, mut shed, mut err) = (0u64, 0u64, 0u64);
+    for rx in pending.drain(..) {
+        let resp = rx.recv_timeout(RECV_TIMEOUT).expect("response never arrived");
+        match &resp.outcome {
+            Ok(_) => ok += 1,
+            Err(InferError::Overloaded(_)) => shed += 1,
+            Err(_) => err += 1,
+        }
+    }
+    (ok, shed, err)
+}
+
+#[test]
+fn controller_scales_up_through_peak_and_back_down_after_trough() {
+    let dir = synthetic_artifacts_dir("autoscale_peak").expect("fixture");
+    let (frontend, service) = start_frontend(&dir, 1, 64);
+    let policy = test_policy();
+    let mut state = PolicyState::default();
+    let mut prev = frontend.observe();
+    let mut log: Vec<ScaleDecision> = Vec::new();
+    let mut rng = Pcg32::seeded(42);
+    let mut id = 0u64;
+    let mut synth = |rng: &mut Pcg32, id: &mut u64| {
+        let mut req = service.synth_request_skewed(*id, rng, 200.0, IndexSkew::Zipf(1.0));
+        req.arrival = Instant::now();
+        *id += 1;
+        req
+    };
+
+    // --- trough: a trickle the single executor absorbs ---------------
+    for _ in 0..3 {
+        let mut pending = Vec::new();
+        for _ in 0..16 {
+            let req = synth(&mut rng, &mut id);
+            pending.push(frontend.submit(req).unwrap());
+            std::thread::sleep(Duration::from_micros(300));
+        }
+        let (_ok, shed, err) = drain(&mut pending);
+        assert_eq!((shed, err), (0, 0), "trough traffic must serve cleanly");
+        tick(&frontend, &policy, &mut state, &mut prev, &mut log);
+    }
+    assert_eq!(frontend.executor_capacity(), 1, "no pressure yet: {log:#?}");
+
+    // --- peak: bursts 3x the queue bound force sheds at any speed ----
+    let (mut peak_sent, mut peak_ok, mut peak_shed) = (0u64, 0u64, 0u64);
+    let mut rounds = 0;
+    while frontend.executor_capacity() < policy.max_capacity && rounds < 12 {
+        let mut pending = Vec::new();
+        for _ in 0..192 {
+            pending.push(frontend.submit(synth(&mut rng, &mut id)).unwrap());
+        }
+        peak_sent += 192;
+        tick(&frontend, &policy, &mut state, &mut prev, &mut log);
+        let (ok, shed, err) = drain(&mut pending);
+        peak_ok += ok;
+        peak_shed += shed;
+        assert_eq!(err, 0, "peak traffic may shed but never hard-fail");
+        rounds += 1;
+    }
+    assert!(
+        frontend.executor_capacity() >= 3,
+        "controller never scaled up under sustained shed: {log:#?}"
+    );
+    assert!(log.iter().any(|d| d.action == ScaleAction::Up), "{log:#?}");
+    assert!(peak_shed > 0, "bursts past the queue bound must shed");
+    assert_eq!(peak_ok + peak_shed, peak_sent);
+
+    // --- sustained peak at scaled capacity: shed recovers ------------
+    // paced inside the queue bound, the grown tier carries the load;
+    // the acceptance bar is < 5% shed over this window
+    let (mut win_sent, mut win_shed) = (0u64, 0u64);
+    for _ in 0..4 {
+        let mut pending = Vec::new();
+        for _ in 0..48 {
+            pending.push(frontend.submit(synth(&mut rng, &mut id)).unwrap());
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        win_sent += 48;
+        let (_ok, shed, err) = drain(&mut pending);
+        win_shed += shed;
+        assert_eq!(err, 0);
+        tick(&frontend, &policy, &mut state, &mut prev, &mut log);
+    }
+    assert!(
+        (win_shed as f64) < 0.05 * win_sent as f64,
+        "shed did not recover after scale-up: {win_shed}/{win_sent}"
+    );
+
+    // --- trough again: the controller walks capacity back to min -----
+    let mut rounds = 0;
+    while frontend.executor_capacity() > 1 && rounds < 30 {
+        let mut pending = Vec::new();
+        for _ in 0..4 {
+            pending.push(frontend.submit(synth(&mut rng, &mut id)).unwrap());
+            std::thread::sleep(Duration::from_micros(300));
+        }
+        let _ = drain(&mut pending);
+        tick(&frontend, &policy, &mut state, &mut prev, &mut log);
+        rounds += 1;
+    }
+    assert_eq!(frontend.executor_capacity(), 1, "idle capacity never reclaimed: {log:#?}");
+    assert!(log.iter().any(|d| d.action == ScaleAction::Down), "{log:#?}");
+
+    // cooldown: applied scale events are never on adjacent ticks
+    let events: Vec<u64> =
+        log.iter().filter(|d| d.action != ScaleAction::Hold).map(|d| d.tick).collect();
+    for w in events.windows(2) {
+        assert!(w[1] > w[0] + 1, "adjacent-tick scale events {w:?} violate cooldown: {log:#?}");
+    }
+
+    frontend.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn responses_stay_bit_identical_to_a_fixed_capacity_reference() {
+    let dir = synthetic_artifacts_dir("autoscale_bits").expect("fixture");
+    // elastic tier starts at 1 executor and is resized mid-load;
+    // reference tier holds 3 executors for the whole run
+    let (elastic, service) = start_frontend(&dir, 1, usize::MAX);
+    let (fixed, _) = start_frontend(&dir, 3, usize::MAX);
+
+    // one request stream, submitted verbatim to both tiers
+    let mut rng = Pcg32::seeded(7);
+    let requests: Vec<InferRequest> = (0..240)
+        .map(|i| service.synth_request_skewed(i, &mut rng, 10_000.0, IndexSkew::Zipf(1.0)))
+        .collect();
+
+    let mut got_e = Vec::new();
+    let mut got_f = Vec::new();
+    for (i, req) in requests.iter().enumerate() {
+        // grow and shrink while work is in flight: a resize must drain,
+        // never drop
+        if i == 60 {
+            assert_eq!(elastic.resize_executors(3).unwrap(), 3);
+        }
+        if i == 180 {
+            assert_eq!(elastic.resize_executors(1).unwrap(), 1);
+        }
+        let mut re = req.clone();
+        re.arrival = Instant::now();
+        let mut rf = req.clone();
+        rf.arrival = Instant::now();
+        got_e.push(elastic.submit(re).unwrap());
+        got_f.push(fixed.submit(rf).unwrap());
+    }
+
+    for (i, (rx_e, rx_f)) in got_e.into_iter().zip(got_f).enumerate() {
+        let e = rx_e.recv_timeout(RECV_TIMEOUT).expect("elastic tier dropped a request");
+        let f = rx_f.recv_timeout(RECV_TIMEOUT).expect("fixed tier dropped a request");
+        assert_eq!(e.id, f.id);
+        let oe = e.outcome.as_ref().expect("elastic response failed");
+        let of = f.outcome.as_ref().expect("fixed response failed");
+        assert_eq!(oe.len(), of.len());
+        for (te, tf) in oe.iter().zip(of) {
+            assert_eq!(te.shape, tf.shape, "request {i}");
+            assert_eq!(te.data, tf.data, "request {i}: resize changed the numerics");
+        }
+    }
+
+    elastic.shutdown();
+    fixed.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn zipf_traffic_heats_the_cache_where_uniform_cannot() {
+    // same cache, same capacity, same row universe — only the id skew
+    // differs. zipf:1.0's head must make a small cache worthwhile while
+    // uniform traffic thrashes it.
+    let rows = 8192u32;
+    let samples = 30_000usize;
+    let row = vec![0f32; 8];
+    let mut rates = Vec::new();
+    for skew in [IndexSkew::Uniform, IndexSkew::Zipf(1.0)] {
+        let mut cache = HotRowCache::new(256, 1);
+        let t = cache.register_table();
+        let mut rng = Pcg32::seeded(99);
+        let mut sink = Vec::new();
+        for _ in 0..samples {
+            sink.clear();
+            let r = skew.sample(&mut rng, rows);
+            if let CacheOutcome::Miss { admit: true } = cache.lookup_collect(t, r, &mut sink) {
+                cache.insert(t, r, &row);
+            }
+        }
+        rates.push(cache.counters()[t as usize].hit_rate());
+    }
+    let (uniform, zipf) = (rates[0], rates[1]);
+    assert!(uniform < 0.10, "uniform over 8k rows cannot hit a 256-row cache: {uniform}");
+    assert!(zipf > 0.25, "zipf:1.0 head should hit a 256-row cache: {zipf}");
+    assert!(zipf > 4.0 * uniform, "zipf must materially beat uniform: {zipf} vs {uniform}");
+}
